@@ -1,0 +1,50 @@
+//! Quickstart: build a lattice, make a random gauge configuration, apply
+//! the even-odd Wilson hopping operator, and time it.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use lqcd::dslash::HoppingEo;
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, LatticeDims, Parity, Tiling};
+use lqcd::util::rng::Rng;
+use lqcd::util::timer::Bench;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // an 8x8x8x16 local lattice with the paper's 4x4 SIMD tiling
+    let dims = LatticeDims::new(8, 8, 8, 16)?;
+    let tiling = Tiling::new(4, 4)?;
+    let geom = Geometry::single_rank(dims, tiling)?;
+    println!("lattice {dims}, tiling {tiling} (VLEN = {})", tiling.vlen());
+
+    // hot-start gauge configuration: independent random SU(3) links
+    let mut rng = Rng::seeded(7);
+    let u = GaugeField::random(&geom, &mut rng);
+    println!("plaquette = {:.6} (hot start: ~0)", u.plaquette());
+
+    // a Gaussian fermion source on the even sites
+    let psi = FermionField::gaussian(&geom, &mut rng);
+    println!("|psi|^2 = {:.3}", psi.norm2());
+
+    // apply the hopping operator H_oe (the paper's kernel)
+    let hop = HoppingEo::new(&geom);
+    let mut out = FermionField::zeros(&geom);
+    hop.apply(&mut out, &u, &psi, Parity::Odd);
+    println!("|H psi|^2 = {:.3}", out.norm2());
+
+    // time it: 1368 flop/site in the QXS convention
+    let flops = lqcd::FLOP_PER_SITE as f64 * dims.half_volume() as f64;
+    let result = Bench::new(2, 5).run(|| {
+        for _ in 0..10 {
+            hop.apply(&mut out, &u, &psi, Parity::Odd);
+        }
+        Some(flops * 10.0)
+    });
+    println!(
+        "hopping: {} per apply, {:.2} GFlops sustained",
+        lqcd::util::timer::fmt_secs(result.stats.median / 10.0),
+        result.gflops().unwrap()
+    );
+    Ok(())
+}

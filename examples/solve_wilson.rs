@@ -1,0 +1,125 @@
+//! End-to-end driver (the EXPERIMENTS.md E2E validation run): solve the
+//! Wilson-fermion linear system D psi = eta on a real small workload with
+//! the **AOT PJRT artifacts on the hot path** — the full three-layer
+//! stack composed:
+//!
+//!   L1 Pallas hopping kernel -> L2 jax even-odd operator -> HLO text
+//!   -> PJRT CPU executable -> L3 Rust BiCGStab driver (this file).
+//!
+//! Flow (paper Eqs. 3-5): Schur rhs -> BiCGStab on M-hat (PJRT) -> odd
+//! reconstruction -> *full-system* residual check with the native
+//! operator, plus a native-solver cross check and a solver-in-XLA run of
+//! the `cg_solve` whole-loop artifact.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example solve_wilson
+//! ```
+
+use lqcd::coordinator::operator::{LinearOperator, NativeMeo};
+use lqcd::dslash::full;
+use lqcd::field::io::fermion_from_canonical;
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, Tiling};
+use lqcd::runtime::{PjrtMeo, Runtime};
+use lqcd::solver::{self, residual};
+use lqcd::util::rng::Rng;
+use lqcd::util::timer::Stopwatch;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let kappa = 0.13f32;
+    let tol = 1e-8;
+
+    println!("== loading AOT artifacts (L1 Pallas + L2 jax -> HLO text) ==");
+    let sw = Stopwatch::start();
+    let rt = Runtime::load(std::path::Path::new("artifacts"))?;
+    println!(
+        "compiled {} artifacts on {} in {:.1}s (lattice {})",
+        rt.manifest.artifacts.len(),
+        rt.platform(),
+        sw.secs(),
+        rt.manifest.dims
+    );
+
+    let dims = rt.manifest.dims;
+    let geom = Geometry::single_rank(dims, Tiling::new(4, 4).unwrap())
+        .or_else(|_| Geometry::single_rank(dims, Tiling::new(2, 2).unwrap()))
+        .map_err(|e| e.to_string())?;
+    let mut rng = Rng::seeded(20230227);
+    println!("\n== workload: random gauge on {dims}, Gaussian source ==");
+    let u = GaugeField::random(&geom, &mut rng);
+    println!("plaquette = {:.6}", u.plaquette());
+    let eta_e = FermionField::gaussian(&geom, &mut rng);
+    let eta_o = FermionField::gaussian(&geom, &mut rng);
+
+    // Schur rhs (Eq. 4): b = eta_e + kappa H_eo eta_o
+    let hop = lqcd::dslash::HoppingEo::new(&geom);
+    let mut b = FermionField::zeros(&geom);
+    full::schur_rhs(&hop, &mut b, &u, &eta_e, &eta_o, kappa);
+
+    println!("\n== solve M-hat x_e = b with BiCGStab, PJRT operator on the hot path ==");
+    let mut op = PjrtMeo::new(&rt, &geom, &u, kappa)?;
+    let mut x_e = FermionField::zeros(&geom);
+    let sw = Stopwatch::start();
+    let stats = solver::bicgstab(&mut op, &mut x_e, &b, tol, 500);
+    let secs = sw.secs();
+    println!(
+        "bicgstab(pjrt): {} iters, converged={}, recursive |r|/|b| = {:.2e}, {:.2}s ({:.2} GFlops)",
+        stats.iterations,
+        stats.converged,
+        stats.rel_residual,
+        secs,
+        stats.flops as f64 / secs / 1e9
+    );
+    for (i, r) in stats.history.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == stats.history.len() {
+            println!("  iter {i:>4}  |r|/|b| = {r:.3e}");
+        }
+    }
+    assert!(stats.converged, "PJRT solve failed to converge");
+
+    // odd reconstruction (Eq. 5) and FULL-system residual with the native
+    // kernels — this crosses the PJRT/native boundary on purpose.
+    let mut x_o = FermionField::zeros(&geom);
+    full::reconstruct_odd(&hop, &mut x_o, &u, &eta_o, &x_e, kappa);
+    let rel = residual::full_system_residual(&hop, &u, &x_e, &x_o, &eta_e, &eta_o, kappa);
+    println!("full-system |D psi - eta| / |eta| = {rel:.3e}");
+    assert!(rel < 1e-5, "full-system residual too large");
+
+    println!("\n== cross-check: same solve with the native Rust operator ==");
+    let mut nop = NativeMeo::new(&geom, u.clone(), kappa);
+    let mut x_native = FermionField::zeros(&geom);
+    let sw = Stopwatch::start();
+    let nstats = solver::bicgstab(&mut nop, &mut x_native, &b, tol, 500);
+    println!(
+        "bicgstab(native): {} iters in {:.2}s ({:.2} GFlops)",
+        nstats.iterations,
+        sw.secs(),
+        nstats.flops as f64 / sw.secs() / 1e9
+    );
+    let mut d = x_native.clone();
+    d.axpy(-1.0, &x_e);
+    println!(
+        "|x_native - x_pjrt| / |x| = {:.3e}",
+        (d.norm2() / x_native.norm2()).sqrt()
+    );
+
+    println!("\n== solver-in-XLA: the whole-CG `cg_solve` artifact ==");
+    let sw = Stopwatch::start();
+    let (x_canon, iters, rr) = op.cg_solve_artifact(&b)?;
+    let mut x_xla = FermionField::zeros(&geom);
+    fermion_from_canonical(&mut x_xla, &x_canon.iter().map(|&v| v as f64).collect::<Vec<_>>())?;
+    println!(
+        "cg_solve artifact: {iters} iters, |r|^2/|b|^2 = {rr:.2e}, {:.2}s",
+        sw.secs()
+    );
+    let mut mx = FermionField::zeros(&geom);
+    nop.apply(&mut mx, &x_xla);
+    mx.axpy(-1.0, &b);
+    println!(
+        "true residual of XLA solution: {:.3e}",
+        (mx.norm2() / b.norm2()).sqrt()
+    );
+
+    println!("\nOK: all three layers agree.");
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Spectroscopy on a free-field configuration: compute the quark
+//! propagator from a point source through the even-odd solver, validate
+//! it against the *analytic* momentum-space free Wilson propagator, and
+//! measure the pion correlator + effective mass.
+//!
+//! This exercises the whole physics pipeline the paper's kernel serves:
+//! 12 Schur-preconditioned solves (Eqs. 4-5), propagator assembly, and a
+//! hadronic observable — with an exact answer to compare against.
+//!
+//! ```sh
+//! cargo run --release --example spectroscopy
+//! ```
+
+use lqcd::algebra::{Complex, Spinor, GAMMA};
+use lqcd::coordinator::operator::NativeMeo;
+use lqcd::dslash::{full, HoppingEo};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{EvenOdd, Geometry, LatticeDims, Parity, SiteCoord, Tiling};
+use lqcd::solver;
+
+const KAPPA: f32 = 0.115; // m = 1/(2k) - 4 ~ 0.348: a fairly heavy quark
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let dims = LatticeDims::new(4, 4, 4, 8)?;
+    let geom = Geometry::single_rank(dims, Tiling::new(2, 2)?).map_err(|e| e.to_string())?;
+    let u = GaugeField::unit(&geom); // free field: U = 1
+    println!("free-field spectroscopy on {dims}, kappa = {KAPPA}");
+    println!("plaquette = {:.6} (must be exactly 1)", u.plaquette());
+
+    // ---- 12 point-source solves: propagator column S(x; 0)_{sc, s0c0} --
+    let hop = HoppingEo::new(&geom);
+    let origin = SiteCoord { t: 0, z: 0, y: 0, ix: 0 }; // even site (0,0,0,0)
+    let mut columns: Vec<(FermionField, FermionField)> = Vec::new();
+    for s0 in 0..4 {
+        for c0 in 0..3 {
+            let eta_e = FermionField::point_source(&geom, origin, s0, c0);
+            let eta_o = FermionField::zeros(&geom);
+            // Schur rhs, even solve, odd reconstruction (Eqs. 4-5)
+            let mut b = FermionField::zeros(&geom);
+            full::schur_rhs(&hop, &mut b, &u, &eta_e, &eta_o, KAPPA);
+            let mut op = NativeMeo::new(&geom, u.clone(), KAPPA);
+            let mut x_e = FermionField::zeros(&geom);
+            let st = solver::bicgstab(&mut op, &mut x_e, &b, 1e-10, 1000);
+            assert!(st.converged, "solve ({s0},{c0}) failed");
+            let mut x_o = FermionField::zeros(&geom);
+            full::reconstruct_odd(&hop, &mut x_o, &u, &eta_o, &x_e, KAPPA);
+            columns.push((x_e, x_o));
+        }
+    }
+    println!("12 propagator columns solved");
+
+    // ---- analytic check: momentum-space free Wilson propagator ---------
+    // D(p) = A(p) + 2 i kappa sum_mu gamma_mu sin p_mu,
+    // A(p) = 1 - 2 kappa sum_mu cos p_mu;  S = D^-1 via (A - i g.b)/(A^2+b^2)
+    let mut max_err = 0.0f64;
+    let test_sites = [
+        (0usize, 0usize, 0usize, 0usize),
+        (1, 0, 0, 0),
+        (0, 1, 2, 3),
+        (2, 2, 2, 4),
+        (3, 1, 0, 6),
+    ];
+    for &(x, y, z, t) in &test_sites {
+        let want = analytic_propagator(dims, KAPPA as f64, [x, y, z, t]);
+        // our propagator at this site, as a 4x4 spin matrix for color 0,0
+        for s0 in 0..4 {
+            let (col_e, col_o) = &columns[s0 * 3];
+            let p = Parity::of_site(x, y, z, t);
+            let phi = EvenOdd::row_parity(y, z, t, p);
+            assert_eq!(phi, x % 2);
+            let sc = SiteCoord { t, z, y, ix: EvenOdd::compact_x(x) };
+            let v: Spinor = match p {
+                Parity::Even => col_e.site(sc),
+                Parity::Odd => col_o.site(sc),
+            };
+            for s in 0..4 {
+                let got = v.s[s][0];
+                let w = want[s][s0];
+                max_err = max_err.max((got - w).abs());
+            }
+        }
+    }
+    println!("max |S_solver - S_analytic| over sampled sites = {max_err:.3e}");
+    assert!(max_err < 5e-4, "propagator disagrees with the analytic result");
+
+    // ---- pion correlator C(t) = sum_x tr S^dag S ------------------------
+    let mut corr = vec![0.0f64; dims.t];
+    for (col_e, col_o) in &columns {
+        for (field, parity) in [(col_e, Parity::Even), (col_o, Parity::Odd)] {
+            for s in field.layout.sites() {
+                let _ = parity;
+                let v = field.site(s);
+                corr[s.t] += v.norm2();
+            }
+        }
+    }
+    println!("\n t    C(t)          m_eff(t)");
+    for t in 0..dims.t {
+        let meff = if t + 1 < dims.t && corr[t + 1] > 0.0 {
+            (corr[t] / corr[t + 1]).ln()
+        } else {
+            f64::NAN
+        };
+        println!("{t:>2}   {:.6e}   {meff:.4}", corr[t]);
+    }
+    // free-field sanity: C is positive and symmetric about NT/2
+    for t in 1..dims.t {
+        assert!(corr[t] > 0.0);
+        let mirror = corr[(dims.t - t) % dims.t];
+        let sym = (corr[t] - mirror).abs() / corr[t].max(mirror);
+        assert!(sym < 1e-3, "C(t) not time-symmetric at t={t}: {sym}");
+    }
+    println!("\nOK: propagator matches the analytic free-field result; C(t) sane.");
+    Ok(())
+}
+
+/// S(x; 0) spin matrix (color-diagonal) from the exact momentum sum.
+fn analytic_propagator(
+    dims: LatticeDims,
+    kappa: f64,
+    x: [usize; 4],
+) -> [[Complex; 4]; 4] {
+    let ext = [dims.x, dims.y, dims.z, dims.t];
+    let vol = dims.volume() as f64;
+    let mut s = [[Complex::ZERO; 4]; 4];
+    let tau = std::f64::consts::TAU;
+    for nx in 0..ext[0] {
+        for ny in 0..ext[1] {
+            for nz in 0..ext[2] {
+                for nt in 0..ext[3] {
+                    let p = [
+                        tau * nx as f64 / ext[0] as f64,
+                        tau * ny as f64 / ext[1] as f64,
+                        tau * nz as f64 / ext[2] as f64,
+                        tau * nt as f64 / ext[3] as f64,
+                    ];
+                    let a = 1.0 - 2.0 * kappa * p.iter().map(|&q| q.cos()).sum::<f64>();
+                    let b: Vec<f64> = p.iter().map(|&q| 2.0 * kappa * q.sin()).collect();
+                    let b2: f64 = b.iter().map(|v| v * v).sum();
+                    let denom = a * a + b2;
+                    // D^-1(p) = (a - i sum gamma_mu b_mu) / denom
+                    let phase = p[0] * x[0] as f64
+                        + p[1] * x[1] as f64
+                        + p[2] * x[2] as f64
+                        + p[3] * x[3] as f64;
+                    let e = Complex::new(phase.cos(), phase.sin());
+                    for i in 0..4 {
+                        for j in 0..4 {
+                            let mut dij = if i == j {
+                                Complex::new(a, 0.0)
+                            } else {
+                                Complex::ZERO
+                            };
+                            for (mu, &bmu) in b.iter().enumerate() {
+                                let g = GAMMA[mu].0[i][j];
+                                // -i * g * b_mu
+                                dij += (g.scale(bmu)).mul_mi();
+                            }
+                            s[i][j] += (e * dij).scale(1.0 / (denom * vol));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    s
+}

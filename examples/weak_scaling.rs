@@ -1,0 +1,70 @@
+//! Weak-scaling study (Fig. 10 shape): real in-process multi-rank runs at
+//! small rank counts plus the TofuD-model projection to 512 nodes.
+//!
+//! ```sh
+//! cargo run --release --example weak_scaling -- [--quick]
+//! ```
+
+use lqcd::comm::decompose::{extract_fermion, extract_gauge};
+use lqcd::comm::run_world;
+use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::harness::{fig10, Opts};
+use lqcd::lattice::{Geometry, LatticeDims, Parity, ProcGrid, Tiling};
+use lqcd::util::rng::Rng;
+use lqcd::util::timer::Stopwatch;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let opts = Opts {
+        iters: if quick { 5 } else { 20 },
+        threads: 1,
+        quick,
+    };
+
+    println!("== part 1: real in-process multi-rank runs (correct halo traffic) ==");
+    println!("(wall-clock on this 1-core host oversubscribes; per-rank work is what matters)\n");
+    let local = LatticeDims::new(8, 8, 4, 4)?;
+    let tiling = Tiling::new(2, 2)?;
+    for grid in [ProcGrid([1, 1, 1, 1]), ProcGrid([1, 1, 2, 1]), ProcGrid([1, 1, 2, 2])] {
+        let nranks = grid.size();
+        let global = LatticeDims::new(
+            local.x * grid.0[0],
+            local.y * grid.0[1],
+            local.z * grid.0[2],
+            local.t * grid.0[3],
+        )?;
+        let ggeom = Geometry::single_rank(global, tiling).map_err(|e| e.to_string())?;
+        let mut rng = Rng::seeded(5);
+        let u_global = GaugeField::random(&ggeom, &mut rng);
+        let psi_global = FermionField::gaussian(&ggeom, &mut rng);
+        let iters = opts.iters;
+
+        let sw = Stopwatch::start();
+        run_world(nranks, |rank, comm| {
+            let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+            let u = extract_gauge(&u_global, &lgeom);
+            let psi = extract_fermion(&psi_global, &ggeom, &lgeom);
+            let dist = DistHopping::new(&lgeom, true, 1, Eo2Schedule::Balanced);
+            let mut team = Team::new(1, BarrierKind::Spin);
+            let prof = Profiler::new(1);
+            let mut out = FermionField::zeros(&lgeom);
+            for _ in 0..iters {
+                dist.hopping(&mut out, &u, &psi, Parity::Odd, comm, &mut team, &prof);
+            }
+        });
+        let secs = sw.secs();
+        let flops =
+            lqcd::FLOP_PER_SITE as f64 * global.half_volume() as f64 * opts.iters as f64;
+        println!(
+            "ranks {nranks} (grid {:?}): global {global}, aggregate {:.2} GFlops",
+            grid.0,
+            flops / secs / 1e9
+        );
+    }
+
+    println!("\n== part 2: TofuD-model projection to 512 nodes (paper Fig. 10) ==\n");
+    let r = fig10::run(opts);
+    println!("{}", r.report);
+    Ok(())
+}

@@ -1,0 +1,200 @@
+"""AOT compile path: lower the L2 graphs to HLO text + manifest + golden data.
+
+Run once at build time (``make artifacts``); the Rust runtime then loads
+``artifacts/*.hlo.txt`` through the PJRT C API and Python never appears on
+the request path again.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids and round-trips cleanly.
+
+Also emits ``artifacts/golden/`` — seeded random fields and reference
+results (computed with the pure-jnp oracle in float64) that pin the Rust
+native kernels to the exact conventions used here.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import fieldio, layouts, model
+from compile.kernels import ref
+
+GOLDEN_KAPPA = 0.13
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def parse_dims(spec: str) -> layouts.LatticeDims:
+    parts = [int(p) for p in spec.lower().split("x")]
+    if len(parts) != 4:
+        raise ValueError(f"dims must be NXxNYxNZxNT, got {spec!r}")
+    return layouts.LatticeDims(x=parts[0], y=parts[1], z=parts[2], t=parts[3])
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "float64": "f64", "int32": "i32"}[np.dtype(dt).name]
+
+
+def lower_all(dims: layouts.LatticeDims, out_dir: pathlib.Path, tol, maxiter):
+    entries = []
+    eps = model.make_entry_points(dims, tol=tol, maxiter=maxiter)
+    for name, (fn, specs) in eps.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        out_list = (
+            list(out_specs) if isinstance(out_specs, (tuple, list)) else [out_specs]
+        )
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [
+                    {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                    for s in specs
+                ],
+                "outputs": [
+                    {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                    for s in out_list
+                ],
+            }
+        )
+        print(f"  lowered {name:16s} -> {fname} ({len(text)} chars)")
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Golden data
+# ---------------------------------------------------------------------------
+
+
+def random_su3(rng: np.random.Generator, shape) -> np.ndarray:
+    """Random SU(3) field of the given site shape (+ trailing 3x3)."""
+    a = rng.normal(size=shape + (3, 3)) + 1j * rng.normal(size=shape + (3, 3))
+    q, r = np.linalg.qr(a)
+    # make the decomposition unique and det = 1
+    d = np.diagonal(r, axis1=-2, axis2=-1)
+    q = q * (d / np.abs(d))[..., None, :]
+    det = np.linalg.det(q)
+    return q / det[..., None, None] ** (1.0 / 3.0)
+
+
+def compact_gauge(u_full: np.ndarray, dims: layouts.LatticeDims) -> np.ndarray:
+    """Lexical gauge (4,T,Z,Y,X,3,3) -> even-odd (4,2,T,Z,Y,XH,3,3)."""
+    out = np.zeros((4, 2) + dims.shape_eo() + (3, 3), dtype=u_full.dtype)
+    for mu in range(4):
+        for p in range(2):
+            out[mu, p] = layouts.compact(u_full[mu], dims, p)
+    return out
+
+
+def write_golden(dims: layouts.LatticeDims, out_dir: pathlib.Path, seed: int = 20230227):
+    gdir = out_dir / "golden"
+    gdir.mkdir(parents=True, exist_ok=True)
+    rng = np.random.default_rng(seed)
+    kappa = GOLDEN_KAPPA
+
+    # inputs are generated in f32 precision, reference math runs in f64/c128
+    u_full = random_su3(rng, (4,) + dims.shape_full()).astype(np.complex64)
+    u_full = u_full.astype(np.complex128)
+    psi_e = (
+        rng.normal(size=dims.shape_eo() + (4, 3))
+        + 1j * rng.normal(size=dims.shape_eo() + (4, 3))
+    ).astype(np.complex64).astype(np.complex128)
+    psi_o = (
+        rng.normal(size=dims.shape_eo() + (4, 3))
+        + 1j * rng.normal(size=dims.shape_eo() + (4, 3))
+    ).astype(np.complex64).astype(np.complex128)
+    psi_full = (
+        rng.normal(size=dims.shape_full() + (4, 3))
+        + 1j * rng.normal(size=dims.shape_full() + (4, 3))
+    ).astype(np.complex64).astype(np.complex128)
+
+    u_eo = compact_gauge(u_full, dims)
+
+    with jax.enable_x64(True):
+        hop_oe = np.asarray(ref.hopping_eo_via_full(u_full, psi_e, dims, p_out=1))
+        hop_eo = np.asarray(ref.hopping_eo_via_full(u_full, psi_o, dims, p_out=0))
+        # M-hat psi_e = psi_e - kappa^2 H_eo H_oe psi_e
+        h_o = ref.hopping_eo_via_full(u_full, psi_e, dims, p_out=1)
+        meo_res = np.asarray(psi_e - kappa * kappa * np.asarray(
+            ref.hopping_eo_via_full(u_full, np.asarray(h_o), dims, p_out=0)
+        ))
+        dslash_full = np.asarray(ref.dslash(jnp.asarray(u_full), jnp.asarray(psi_full), kappa))
+        plaq = float(ref.plaquette(jnp.asarray(u_full)))
+
+    files = {
+        "u_full": fieldio.complex_to_interleaved(u_full),
+        "u_eo": fieldio.complex_to_interleaved(u_eo),
+        "psi_e": fieldio.complex_to_interleaved(psi_e),
+        "psi_o": fieldio.complex_to_interleaved(psi_o),
+        "psi_full": fieldio.complex_to_interleaved(psi_full),
+        "hop_oe": fieldio.complex_to_interleaved(hop_oe),
+        "hop_eo": fieldio.complex_to_interleaved(hop_eo),
+        "meo": fieldio.complex_to_interleaved(meo_res),
+        "dslash_full": fieldio.complex_to_interleaved(dslash_full),
+        "plaq": np.array([plaq], dtype=np.float64),
+    }
+    for name, arr in files.items():
+        fieldio.write_tensor(gdir / f"{name}.bin", arr)
+    print(f"  golden data ({dims.x}x{dims.y}x{dims.z}x{dims.t}, kappa={kappa}) -> {gdir}")
+    return {
+        "dims": [dims.x, dims.y, dims.z, dims.t],
+        "kappa": kappa,
+        "seed": seed,
+        "files": sorted(files),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--dims", default="8x8x8x16", help="artifact lattice NXxNYxNZxNT")
+    ap.add_argument("--golden-dims", default="4x4x4x4")
+    ap.add_argument("--tol", type=float, default=1e-10, help="baked CG tolerance (on |r|^2)")
+    ap.add_argument("--maxiter", type=int, default=1000)
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    dims = parse_dims(args.dims)
+
+    print(f"lowering artifacts for lattice {args.dims} ...")
+    entries = lower_all(dims, out_dir, tol=args.tol, maxiter=args.maxiter)
+
+    golden_meta = None
+    if not args.skip_golden:
+        golden_meta = write_golden(parse_dims(args.golden_dims), out_dir)
+
+    manifest = {
+        "version": 1,
+        "dims": [dims.x, dims.y, dims.z, dims.t],
+        "cg_tol": args.tol,
+        "cg_maxiter": args.maxiter,
+        "artifacts": entries,
+        "golden": golden_meta,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2) + "\n")
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

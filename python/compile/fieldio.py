@@ -1,0 +1,53 @@
+"""Tiny binary tensor format shared with the Rust side (rust/src/field/io.rs).
+
+Layout (little-endian):
+  magic   8 bytes  b"LQCD0001"
+  dtype   u32      0 = f32, 1 = f64
+  ndim    u32
+  dims    u32 * ndim   (row-major / C order)
+  data    dtype * prod(dims)
+
+Used for golden test data (python writes, rust reads) and for field
+checkpoints in the examples.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"LQCD0001"
+_DTYPES = {0: np.float32, 1: np.float64}
+_CODES = {np.dtype(np.float32): 0, np.dtype(np.float64): 1}
+
+
+def write_tensor(path, arr: np.ndarray) -> None:
+    arr = np.ascontiguousarray(arr)
+    code = _CODES[arr.dtype]
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", code, arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}I", *arr.shape))
+        f.write(arr.tobytes())
+
+
+def read_tensor(path) -> np.ndarray:
+    with open(path, "rb") as f:
+        magic = f.read(8)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        code, ndim = struct.unpack("<II", f.read(8))
+        dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim))
+        dtype = _DTYPES[code]
+        data = np.frombuffer(f.read(), dtype=dtype)
+        return data.reshape(dims)
+
+
+def complex_to_interleaved(arr: np.ndarray, dtype=np.float32) -> np.ndarray:
+    """complex array -> trailing-[2] (re, im) float array."""
+    return np.stack([arr.real, arr.imag], axis=-1).astype(dtype)
+
+
+def interleaved_to_complex(arr: np.ndarray) -> np.ndarray:
+    return arr[..., 0] + 1j * arr[..., 1]

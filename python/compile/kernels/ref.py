@@ -1,0 +1,136 @@
+"""Pure-jnp reference oracle for the Wilson fermion matrix (Eq. 1).
+
+Everything here is written for clarity, not speed: explicit 4x4 gamma
+matrices, complex dtypes, ``jnp.roll`` shifts on the *uncompacted* lattice.
+The optimized Pallas kernel (``wilson.py``) and the Rust kernels are tested
+against this module (directly, and through golden data on disk).
+
+Conventions (see DESIGN.md section 8):
+  * DeGrand-Rossi chiral basis for the gamma matrices.
+  * D_W = 1 - kappa * H,    H = sum_mu [(1-g_mu) U_mu(x) delta_{x+mu,y}
+                                       + (1+g_mu) U_mu^dag(x-mu) delta_{x-mu,y}]
+  * canonical field shapes: spinor (T, Z, Y, X, 4, 3) complex,
+    gauge (4, T, Z, Y, X, 3, 3) complex, direction order (x, y, z, t).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# Axis of the canonical (T, Z, Y, X, ...) array moved by direction mu.
+MU_AXIS = {0: 3, 1: 2, 2: 1, 3: 0}
+
+_I = 1j
+
+# DeGrand-Rossi gamma matrices, direction order (x, y, z, t).
+GAMMA = np.array(
+    [
+        # gamma_x
+        [[0, 0, 0, _I], [0, 0, _I, 0], [0, -_I, 0, 0], [-_I, 0, 0, 0]],
+        # gamma_y
+        [[0, 0, 0, -1], [0, 0, 1, 0], [0, 1, 0, 0], [-1, 0, 0, 0]],
+        # gamma_z
+        [[0, 0, _I, 0], [0, 0, 0, -_I], [-_I, 0, 0, 0], [0, _I, 0, 0]],
+        # gamma_t
+        [[0, 0, 1, 0], [0, 0, 0, 1], [1, 0, 0, 0], [0, 1, 0, 0]],
+    ],
+    dtype=np.complex128,
+)
+
+GAMMA5 = np.diag([1, 1, -1, -1]).astype(np.complex128)
+
+IDENTITY4 = np.eye(4, dtype=np.complex128)
+
+
+def gamma_mul(mu: int, psi: jnp.ndarray) -> jnp.ndarray:
+    """Apply gamma_mu to the spinor index: (g psi)_i = g[i,j] psi_j."""
+    g = jnp.asarray(GAMMA[mu], dtype=psi.dtype)
+    return jnp.einsum("ij,...jc->...ic", g, psi)
+
+
+def gamma5_mul(psi: jnp.ndarray) -> jnp.ndarray:
+    g5 = jnp.asarray(GAMMA5, dtype=psi.dtype)
+    return jnp.einsum("ij,...jc->...ic", g5, psi)
+
+
+def link_mul(u_mu: jnp.ndarray, psi: jnp.ndarray) -> jnp.ndarray:
+    """U_mu(x) psi(x): 3x3 color matrix times the color index."""
+    return jnp.einsum("...ab,...ib->...ia", u_mu, psi)
+
+
+def link_dag_mul(u_mu: jnp.ndarray, psi: jnp.ndarray) -> jnp.ndarray:
+    """U_mu(x)^dagger psi(x)."""
+    return jnp.einsum("...ba,...ib->...ia", jnp.conj(u_mu), psi)
+
+
+def shift(field: jnp.ndarray, mu: int, sign: int) -> jnp.ndarray:
+    """Return f(x + sign*mu_hat) as a field of x (periodic)."""
+    return jnp.roll(field, -sign, axis=MU_AXIS[mu])
+
+
+def hopping(u: jnp.ndarray, psi: jnp.ndarray) -> jnp.ndarray:
+    """The full-lattice hopping sum H psi (Eq. 1 without the 1 and -kappa)."""
+    out = jnp.zeros_like(psi)
+    for mu in range(4):
+        # forward: (1 - gamma_mu) U_mu(x) psi(x + mu)
+        fwd = link_mul(u[mu], shift(psi, mu, +1))
+        out = out + fwd - gamma_mul(mu, fwd)
+        # backward: (1 + gamma_mu) U_mu(x-mu)^dag psi(x - mu)
+        bwd = shift(link_dag_mul(u[mu], psi), mu, -1)
+        out = out + bwd + gamma_mul(mu, bwd)
+    return out
+
+
+def dslash(u: jnp.ndarray, psi: jnp.ndarray, kappa: float) -> jnp.ndarray:
+    """Full Wilson matrix D_W psi = psi - kappa * H psi."""
+    return psi - kappa * hopping(u, psi)
+
+
+def plaquette(u: jnp.ndarray) -> jnp.ndarray:
+    """Average plaquette Re tr P_{mu,nu} / 3, averaged over the 6 planes."""
+    total = 0.0
+    for mu in range(4):
+        for nu in range(mu + 1, 4):
+            u_mu = u[mu]
+            u_nu = u[nu]
+            u_nu_xmu = shift(u_nu, mu, +1)
+            u_mu_xnu = shift(u_mu, nu, +1)
+            # P = U_mu(x) U_nu(x+mu) U_mu(x+nu)^dag U_nu(x)^dag
+            p = jnp.einsum(
+                "...ab,...bc,...dc,...ed->...ae",
+                u_mu,
+                u_nu_xmu,
+                jnp.conj(u_mu_xnu),
+                jnp.conj(u_nu),
+            )
+            total = total + jnp.mean(jnp.real(jnp.trace(p, axis1=-2, axis2=-1)))
+    return total / (6.0 * 3.0)
+
+
+# ---------------------------------------------------------------------------
+# Even-odd reference built on the full-lattice oracle.
+# ---------------------------------------------------------------------------
+
+
+def hopping_eo_via_full(u, psi_src, dims, p_out: int):
+    """Reference H_{p_out <- 1-p_out} acting on a *compacted* source.
+
+    Scatters the compacted source onto the full lattice (zeros on the other
+    parity), applies the full hopping, and compacts the result at parity
+    ``p_out``. Used as the oracle for the compacted Pallas/Rust kernels.
+
+    u: full-lattice gauge (4, T, Z, Y, X, 3, 3)
+    psi_src: compacted (T, Z, Y, XH, 4, 3) of parity 1 - p_out
+    """
+    from compile import layouts
+
+    p_in = 1 - p_out
+    src = np.asarray(psi_src)
+    zeros = np.zeros_like(src)
+    full = layouts.scatter(
+        src if p_in == 0 else zeros, src if p_in == 1 else zeros, dims
+    )
+    h = hopping(jnp.asarray(u), jnp.asarray(full))
+    return jnp.asarray(layouts.compact(np.asarray(h), dims, p_out))

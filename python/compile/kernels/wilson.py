@@ -1,0 +1,261 @@
+"""Pallas kernel for the even-odd Wilson hopping term (the paper's kernel).
+
+This is the L1 hot-spot: ``H_{p_out <- p_in}`` applied to an x-*compacted*
+even/odd spinor field, i.e. the ``D_eo`` / ``D_oe`` blocks of Eq. (3).
+
+Faithful to the paper's implementation strategy (Sections 3.2-3.4):
+
+* **Separate real/imaginary arrays** -- A64FX SVE has poor in-vector complex
+  support, so QWS/QXS keep Re and Im in separate SIMD vectors; we keep them
+  in separate arrays (``ur``/``ui``, ``pr``/``pi``).
+* **Spin projection tables** -- (1 -+ gamma_mu) is applied as a 4->2 spinor
+  projection with +-1/+-i coefficients and reconstructed after the SU(3)
+  multiply (Fig. 2), never as a dense 4x4 matrix multiply.
+* **Parity-select x-shift** (Fig. 5) -- on the compacted arrays, the +-x
+  neighbor of a site at compact index ``ix`` lives at ``ix`` or ``ix +- 1``
+  depending on the row parity ``phi = (y+z+t+p) mod 2``; the kernel uses a
+  parity mask + lane roll, the TPU analog of the SVE ``sel`` + ``tbl`` pair.
+  The y-shift is a plain roll (the ``ext`` analog, Fig. 6).
+
+The kernel is lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom-calls); correctness is pinned against ``ref.py`` by pytest.
+
+Hardware adaptation (DESIGN.md section 3): the SVE 16-lane vector maps to the
+trailing lane axes of the arrays; XLA owns the physical packing. The SU(3)
+products are 3x3 complex GEMVs -- VPU work, not MXU work.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Axes of the compacted canonical (T, Z, Y, XH, ...) arrays.
+AX_T, AX_Z, AX_Y, AX_XH = 0, 1, 2, 3
+
+# Complex units used by the projection tables: (re, im).
+ONE = (1.0, 0.0)
+MONE = (-1.0, 0.0)
+I_ = (0.0, 1.0)
+MI = (0.0, -1.0)
+
+# Spin projection / reconstruction tables for (1 - g_mu) [sign=0, forward hop]
+# and (1 + g_mu) [sign=1, backward hop] in the DeGrand-Rossi basis.
+#
+# Entry: (j1, c1, j2, c2, k1, d1, k2, d2) meaning
+#   h1 = psi_0 + c1 * psi_{j1}
+#   h2 = psi_1 + c2 * psi_{j2}
+#   r2 = d1 * h_{k1},  r3 = d2 * h_{k2}           (rows 0,1 of result = h1,h2)
+#
+# These are *derived* from the explicit gamma matrices in ref.py by
+# python/tests/test_kernel.py::test_projection_tables -- do not edit by hand.
+PROJ = {
+    # mu = 0 (x)
+    (0, 0): (3, MI, 2, MI, 1, I_, 0, I_),
+    (0, 1): (3, I_, 2, I_, 1, MI, 0, MI),
+    # mu = 1 (y)
+    (1, 0): (3, ONE, 2, MONE, 1, MONE, 0, ONE),
+    (1, 1): (3, MONE, 2, ONE, 1, ONE, 0, MONE),
+    # mu = 2 (z)
+    (2, 0): (2, MI, 3, I_, 0, I_, 1, MI),
+    (2, 1): (2, I_, 3, MI, 0, MI, 1, I_),
+    # mu = 3 (t)
+    (3, 0): (2, MONE, 3, MONE, 0, MONE, 1, MONE),
+    (3, 1): (2, ONE, 3, ONE, 0, ONE, 1, ONE),
+}
+
+
+def _cmul_const(v, c):
+    """(re, im) * complex constant c, with exact special cases.
+
+    Only +-1 and +-i ever appear in the tables; special-casing keeps the
+    lowered HLO free of multiply-by-zero chains.
+    """
+    vr, vi = v
+    if c == ONE:
+        return vr, vi
+    if c == MONE:
+        return -vr, -vi
+    if c == I_:
+        return -vi, vr
+    if c == MI:
+        return vi, -vr
+    cr, ci = c
+    return cr * vr - ci * vi, cr * vi + ci * vr
+
+
+def _cadd(a, b):
+    return a[0] + b[0], a[1] + b[1]
+
+
+def row_parity_mask(shape_eo: Sequence[int], parity: int, extra_dims: int):
+    """phi(y,z,t;p) = (y+z+t+p) mod 2 as a bool mask, broadcastable.
+
+    Returns shape (T, Z, Y, 1, [1]*extra_dims); True where phi == 1.
+    Built from iota so it stays traceable inside the Pallas kernel.
+    """
+    t_, z_, y_, _ = shape_eo
+    shape = (t_, z_, y_)
+    it = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    iz = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    iy = jax.lax.broadcasted_iota(jnp.int32, shape, 2)
+    phi = (it + iz + iy + parity) % 2
+    return (phi == 1).reshape(shape + (1,) * (1 + extra_dims))
+
+
+def shift_to_neighbor(v, mu: int, sign: int, p_out: int, extra_dims: int):
+    """Return field(x + sign*mu_hat) as a field over parity-``p_out`` sites.
+
+    ``v`` is an (re, im) pair of compacted arrays of parity 1 - p_out with
+    shape (T, Z, Y, XH, ...extra...). Periodic boundaries via roll; the
+    x-direction uses the parity-select trick (Fig. 5):
+
+      +x neighbor:  jx = ix + phi_out       -> sel(phi, roll(-1), id)
+      -x neighbor:  jx = ix - (1 - phi_out) -> sel(phi, id, roll(+1))
+    """
+    vr, vi = v
+    if mu == 0:
+        mask = row_parity_mask(vr.shape[:4], p_out, extra_dims)
+        if sign > 0:
+            rolled = (
+                jnp.roll(vr, -1, axis=AX_XH),
+                jnp.roll(vi, -1, axis=AX_XH),
+            )
+            return (
+                jnp.where(mask, rolled[0], vr),
+                jnp.where(mask, rolled[1], vi),
+            )
+        rolled = (jnp.roll(vr, 1, axis=AX_XH), jnp.roll(vi, 1, axis=AX_XH))
+        return (
+            jnp.where(mask, vr, rolled[0]),
+            jnp.where(mask, vi, rolled[1]),
+        )
+    axis = {1: AX_Y, 2: AX_Z, 3: AX_T}[mu]
+    return jnp.roll(vr, -sign, axis=axis), jnp.roll(vi, -sign, axis=axis)
+
+
+def _project(p, mu: int, sign: int):
+    """4-spinor -> 2-half-spinor projection for (1 -+ g_mu).
+
+    p: (re, im) arrays of shape (T,Z,Y,XH,4,3).
+    Returns (re, im) arrays of shape (T,Z,Y,XH,2,3).
+    """
+    pr, pi = p
+    j1, c1, j2, c2, _, _, _, _ = PROJ[(mu, sign)]
+    h1 = _cadd(
+        (pr[..., 0, :], pi[..., 0, :]),
+        _cmul_const((pr[..., j1, :], pi[..., j1, :]), c1),
+    )
+    h2 = _cadd(
+        (pr[..., 1, :], pi[..., 1, :]),
+        _cmul_const((pr[..., j2, :], pi[..., j2, :]), c2),
+    )
+    hr = jnp.stack([h1[0], h2[0]], axis=-2)
+    hi = jnp.stack([h1[1], h2[1]], axis=-2)
+    return hr, hi
+
+
+def _reconstruct_accum(acc, w, mu: int, sign: int):
+    """Accumulate the reconstructed 4-spinor from the half-spinor ``w``.
+
+    acc: list of 4 (re, im) pairs, each (T,Z,Y,XH,3).
+    w:   (re, im) arrays of shape (T,Z,Y,XH,2,3).
+    """
+    wr, wi = w
+    _, _, _, _, k1, d1, k2, d2 = PROJ[(mu, sign)]
+    h = [(wr[..., 0, :], wi[..., 0, :]), (wr[..., 1, :], wi[..., 1, :])]
+    acc[0] = _cadd(acc[0], h[0])
+    acc[1] = _cadd(acc[1], h[1])
+    acc[2] = _cadd(acc[2], _cmul_const(h[k1], d1))
+    acc[3] = _cadd(acc[3], _cmul_const(h[k2], d2))
+    return acc
+
+
+def _su3_mul(u, h):
+    """w_a = sum_b U[a,b] h[s,b] on split re/im arrays.
+
+    u: (re, im), shape (T,Z,Y,XH,3,3); h: (re, im), shape (T,Z,Y,XH,2,3).
+    """
+    ur, ui = u
+    hr, hi = h
+    wr = jnp.einsum("...ab,...sb->...sa", ur, hr) - jnp.einsum(
+        "...ab,...sb->...sa", ui, hi
+    )
+    wi = jnp.einsum("...ab,...sb->...sa", ur, hi) + jnp.einsum(
+        "...ab,...sb->...sa", ui, hr
+    )
+    return wr, wi
+
+
+def _su3_dag_mul(u, h):
+    """w_a = sum_b conj(U[b,a]) h[s,b] (U-dagger times half-spinor)."""
+    ur, ui = u
+    hr, hi = h
+    wr = jnp.einsum("...ba,...sb->...sa", ur, hr) + jnp.einsum(
+        "...ba,...sb->...sa", ui, hi
+    )
+    wi = jnp.einsum("...ba,...sb->...sa", ur, hi) - jnp.einsum(
+        "...ba,...sb->...sa", ui, hr
+    )
+    return wr, wi
+
+
+def _hopping_kernel(ur_ref, ui_ref, pr_ref, pi_ref, or_ref, oi_ref, *, p_out: int):
+    """Pallas kernel body: out = H_{p_out <- p_in} psi.
+
+    ur/ui: (4, 2, T, Z, Y, XH, 3, 3)  gauge links per direction and parity
+    pr/pi: (T, Z, Y, XH, 4, 3)        source spinor, parity p_in = 1 - p_out
+    or/oi: (T, Z, Y, XH, 4, 3)        result, parity p_out
+    """
+    p_in = 1 - p_out
+    pr = pr_ref[...]
+    pi = pi_ref[...]
+    zero = jnp.zeros(pr.shape[:4] + (3,), pr.dtype)
+    acc = [(zero, zero) for _ in range(4)]
+
+    for mu in range(4):
+        # ---- forward: (1 - g_mu) U_mu^{(p_out)}(x) psi(x + mu) ----------
+        psi_fwd = shift_to_neighbor((pr, pi), mu, +1, p_out, extra_dims=2)
+        h = _project(psi_fwd, mu, 0)
+        u = (ur_ref[mu, p_out], ui_ref[mu, p_out])
+        w = _su3_mul(u, h)
+        acc = _reconstruct_accum(acc, w, mu, 0)
+
+        # ---- backward: (1 + g_mu) U_mu^dag(x - mu) psi(x - mu) ---------
+        # Project and color-multiply on the *source* parity sites, then
+        # shift the half-spinor field backward (projection commutes with
+        # the site shift; multiplying before the shift uses the link
+        # stored at the source site, exactly U_mu(x - mu)).
+        h = _project((pr, pi), mu, 1)
+        u = (ur_ref[mu, p_in], ui_ref[mu, p_in])
+        w = _su3_dag_mul(u, h)
+        w = shift_to_neighbor(w, mu, -1, p_out, extra_dims=2)
+        acc = _reconstruct_accum(acc, w, mu, 1)
+
+    or_ref[...] = jnp.stack([a[0] for a in acc], axis=-2)
+    oi_ref[...] = jnp.stack([a[1] for a in acc], axis=-2)
+
+
+@functools.partial(jax.jit, static_argnames=("p_out",))
+def hopping_eo(ur, ui, pr, pi, p_out: int):
+    """Apply the even-odd hopping block via the Pallas kernel.
+
+    Args:
+      ur, ui: gauge field (4, 2, T, Z, Y, XH, 3, 3) float32
+      pr, pi: spinor (T, Z, Y, XH, 4, 3) float32, parity ``1 - p_out``
+      p_out: parity of the result (0: D_eo-like, 1: D_oe-like)
+
+    Returns (hr, hi) of the same shape as (pr, pi), parity ``p_out``.
+    """
+    out_shape = [
+        jax.ShapeDtypeStruct(pr.shape, pr.dtype),
+        jax.ShapeDtypeStruct(pi.shape, pi.dtype),
+    ]
+    kernel = functools.partial(_hopping_kernel, p_out=p_out)
+    return pl.pallas_call(kernel, out_shape=out_shape, interpret=True)(
+        ur, ui, pr, pi
+    )

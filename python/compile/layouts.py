@@ -1,0 +1,134 @@
+"""Lattice layouts: lexical <-> even-odd compacted index maps.
+
+This mirrors Fig. 3 / Fig. 4 of the paper: sites of one parity are stored
+*compacted in the x-direction* (XH = NX/2 entries per row), and the 2D
+x-y SIMD tiling packs a VLENX x VLENY patch of the compacted x-y plane
+into one SIMD vector of VLEN = VLENX * VLENY lanes.
+
+Within JAX/XLA the physical packing of the trailing axes is chosen by the
+compiler, so the *logical* layout here is the canonical
+``(T, Z, Y, XH, spin, color)`` order; the Rust side owns the explicit
+AoSoA tiling and uses these maps (via golden data) to agree with us.
+
+Conventions (shared with rust/src/lattice/evenodd.rs):
+  * site parity  p(x,y,z,t) = (x + y + z + t) mod 2  (0 = even)
+  * row parity   phi(y,z,t; p) = (y + z + t + p) mod 2
+  * a site of parity ``p`` at compact index ``ix`` has  x = 2*ix + phi
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LatticeDims:
+    """Local lattice extents. ``x`` must be even (even-odd compaction)."""
+
+    x: int
+    y: int
+    z: int
+    t: int
+
+    def __post_init__(self) -> None:
+        for name in ("x", "y", "z", "t"):
+            v = getattr(self, name)
+            if v < 2:
+                raise ValueError(f"N{name.upper()} must be >= 2, got {v}")
+            if v % 2 != 0:
+                # Odd extents make site parity ill-defined under the
+                # periodic wrap (the neighbor across the boundary would
+                # have the *same* parity), so even-odd needs all-even dims.
+                raise ValueError(f"N{name.upper()} must be even for even-odd layout, got {v}")
+
+    @property
+    def xh(self) -> int:
+        """Compacted x extent (NX / NEO)."""
+        return self.x // 2
+
+    @property
+    def volume(self) -> int:
+        return self.x * self.y * self.z * self.t
+
+    @property
+    def half_volume(self) -> int:
+        return self.volume // 2
+
+    def shape_full(self) -> tuple[int, int, int, int]:
+        """Canonical (T, Z, Y, X) array shape of the full lattice."""
+        return (self.t, self.z, self.y, self.x)
+
+    def shape_eo(self) -> tuple[int, int, int, int]:
+        """Canonical (T, Z, Y, XH) array shape of one parity."""
+        return (self.t, self.z, self.y, self.xh)
+
+
+def site_parity(dims: LatticeDims) -> np.ndarray:
+    """Parity (0 even / 1 odd) for every site, shape (T, Z, Y, X)."""
+    t, z, y, x = np.ix_(
+        np.arange(dims.t), np.arange(dims.z), np.arange(dims.y), np.arange(dims.x)
+    )
+    return (x + y + z + t) % 2
+
+
+def row_parity(dims: LatticeDims, parity: int) -> np.ndarray:
+    """phi(y,z,t;p) = (y+z+t+p) mod 2, shape (T, Z, Y).
+
+    A site of parity ``parity`` at compacted index ``ix`` in row (y,z,t)
+    sits at lexical x = 2*ix + phi.
+    """
+    t, z, y = np.ix_(np.arange(dims.t), np.arange(dims.z), np.arange(dims.y))
+    return (y + z + t + parity) % 2
+
+
+def compact(field: np.ndarray, dims: LatticeDims, parity: int) -> np.ndarray:
+    """Extract the ``parity`` sites of a full-lattice field.
+
+    ``field`` has shape (T, Z, Y, X, ...); returns (T, Z, Y, XH, ...),
+    compacted in x as in Fig. 4 (right panel).
+    """
+    if field.shape[:4] != dims.shape_full():
+        raise ValueError(f"field shape {field.shape[:4]} != {dims.shape_full()}")
+    phi = row_parity(dims, parity)  # (T,Z,Y)
+    ix = np.arange(dims.xh)
+    # lexical x for each (t,z,y,ix)
+    xs = 2 * ix[None, None, None, :] + phi[..., None]  # (T,Z,Y,XH)
+    tt, zz, yy = np.ix_(np.arange(dims.t), np.arange(dims.z), np.arange(dims.y))
+    return field[tt[..., None], zz[..., None], yy[..., None], xs]
+
+
+def scatter(even: np.ndarray, odd: np.ndarray, dims: LatticeDims) -> np.ndarray:
+    """Inverse of :func:`compact`: interleave even/odd arrays to full lattice."""
+    inner = even.shape[4:]
+    out = np.zeros(dims.shape_full() + inner, dtype=even.dtype)
+    for parity, arr in ((0, even), (1, odd)):
+        phi = row_parity(dims, parity)
+        ix = np.arange(dims.xh)
+        xs = 2 * ix[None, None, None, :] + phi[..., None]
+        tt, zz, yy = np.ix_(np.arange(dims.t), np.arange(dims.z), np.arange(dims.y))
+        out[tt[..., None], zz[..., None], yy[..., None], xs] = arr
+    return out
+
+
+def check_tiling(dims: LatticeDims, vlenx: int, vleny: int, vlen: int = 16) -> None:
+    """Validate a 2D SIMD tiling choice against the local lattice.
+
+    Mirrors the paper's constraints: VLENX * VLENY = VLEN, VLENX >= 2
+    (even-odd halves x), XH divisible by VLENX, Y divisible by VLENY.
+    Raises ValueError when the combination is unavailable — e.g. the
+    Table 1 dash for 16x1 tiling on the 16^4 lattice.
+    """
+    if vlenx * vleny != vlen:
+        raise ValueError(f"VLENX*VLENY = {vlenx * vleny} != VLEN = {vlen}")
+    if vlenx < 2:
+        raise ValueError("VLENX must be >= 2 (even-odd compaction halves x)")
+    if dims.xh % vlenx != 0:
+        raise ValueError(
+            f"XH = {dims.xh} not divisible by VLENX = {vlenx} (tiling unavailable)"
+        )
+    if dims.y % vleny != 0:
+        raise ValueError(
+            f"NY = {dims.y} not divisible by VLENY = {vleny} (tiling unavailable)"
+        )

@@ -1,0 +1,177 @@
+"""L2: the even-odd preconditioned Wilson operator and solver graphs.
+
+Build-time only. These jax functions call the L1 Pallas kernel
+(``kernels.wilson.hopping_eo``) and are lowered once by ``aot.py`` to HLO
+text that the Rust runtime loads and executes; Python never runs on the
+request path.
+
+Interchange convention with Rust: every complex field crosses the boundary
+as a single float32 array with a trailing ``[2]`` (re, im) axis —
+
+  gauge (even-odd):  (4, 2, T, Z, Y, XH, 3, 3, 2)
+  spinor (one parity): (T, Z, Y, XH, 4, 3, 2)
+
+Operators (paper Eqs. 3-5), with D = 1 - kappa H in block form:
+
+  M-hat psi_e = psi_e - kappa^2 H_eo H_oe psi_e        (Eq. 4 LHS)
+  M-hat^dag    = g5 M-hat g5                           (gamma5-hermiticity)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import wilson
+
+
+def split(field):
+    """Trailing-[2] interleaved array -> (re, im) pair."""
+    return field[..., 0], field[..., 1]
+
+
+def join(re, im):
+    """(re, im) pair -> trailing-[2] interleaved array."""
+    return jnp.stack([re, im], axis=-1)
+
+
+def hopping(u, psi, p_out: int):
+    """H_{p_out <- 1-p_out} on interleaved fields (wraps the L1 kernel)."""
+    ur, ui = split(u)
+    pr, pi = split(psi)
+    hr, hi = wilson.hopping_eo(ur, ui, pr, pi, p_out)
+    return join(hr, hi)
+
+
+def gamma5(psi):
+    """g5 psi in the chiral basis: flip the sign of spin components 2, 3."""
+    sign = jnp.array([1.0, 1.0, -1.0, -1.0], dtype=psi.dtype)
+    return psi * sign[:, None, None]
+
+
+def meo(u, psi_e, kappa):
+    """Even-odd preconditioned operator M-hat psi_e (Eq. 4 LHS)."""
+    h_o = hopping(u, psi_e, p_out=1)
+    h_e = hopping(u, h_o, p_out=0)
+    return psi_e - (kappa * kappa) * h_e
+
+
+def meo_dag(u, psi_e, kappa):
+    """M-hat^dagger psi_e = g5 M-hat g5 psi_e (gamma5-hermiticity)."""
+    return gamma5(meo(u, gamma5(psi_e), kappa))
+
+
+def mdagm(u, psi_e, kappa):
+    """Normal operator M-hat^dag M-hat (hermitian positive definite)."""
+    return meo_dag(u, meo(u, psi_e, kappa), kappa)
+
+
+def _dot_re(a, b):
+    """Re <a, b> for interleaved complex fields (= plain f32 dot)."""
+    return jnp.sum(a.astype(jnp.float64) * b.astype(jnp.float64)).astype(
+        jnp.float32
+    )
+
+
+def cg_solve(u, b, kappa, tol: float, maxiter: int):
+    """Whole-solver graph: CG on M-hat^dag M-hat x = M-hat^dag b.
+
+    This is the "solver in XLA" variant; the Rust coordinator also drives
+    its own CG calling the ``meo``/``mdagm`` artifacts per iteration.
+    Returns (x, iterations, final |r|^2 / |b'|^2).
+    """
+    bp = meo_dag(u, b, kappa)
+    bnorm = _dot_re(bp, bp)
+    limit = tol * tol * bnorm
+
+    def body(state):
+        x, r, p, rr, k = state
+        ap = mdagm(u, p, kappa)
+        alpha = rr / _dot_re(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rr_new = _dot_re(r, r)
+        p = r + (rr_new / rr) * p
+        return x, r, p, rr_new, k + 1
+
+    def cond(state):
+        _, _, _, rr, k = state
+        return jnp.logical_and(rr > limit, k < maxiter)
+
+    x0 = jnp.zeros_like(b)
+    state = (x0, bp, bp, bnorm, jnp.int32(0))
+    x, r, _, rr, k = jax.lax.while_loop(cond, body, state)
+    return x, k, rr / bnorm
+
+
+def dslash_eo_full(u, psi_e, psi_o, kappa):
+    """Full Wilson matrix on an even/odd pair: (D psi)_e, (D psi)_o."""
+    out_e = psi_e - kappa * hopping(u, psi_o, p_out=0)
+    out_o = psi_o - kappa * hopping(u, psi_e, p_out=1)
+    return out_e, out_o
+
+
+def reconstruct_odd(u, b_o, x_e, kappa):
+    """Eq. 5: xi_o = eta_o + kappa H_oe xi_e (D_oo = 1 for Wilson)."""
+    return b_o + kappa * hopping(u, x_e, p_out=1)
+
+
+def plaquette(u_full):
+    """Average plaquette from the *lexical* gauge field.
+
+    u_full: (4, T, Z, Y, X, 3, 3, 2) float32 interleaved.
+    Returns a float32 scalar: <Re tr P> / 3 averaged over the 6 planes.
+    """
+    ur, ui = split(u_full)
+    u = ur + 1j * ui
+    total = jnp.float32(0.0)
+    # Axis moved by direction mu in (4, T, Z, Y, X, 3, 3): x->4, y->3, z->2, t->1
+    ax = {0: 4, 1: 3, 2: 2, 3: 1}
+    for mu in range(4):
+        for nu in range(mu + 1, 4):
+            u_mu, u_nu = u[mu], u[nu]
+            u_nu_xmu = jnp.roll(u_nu, -1, axis=ax[mu] - 1)
+            u_mu_xnu = jnp.roll(u_mu, -1, axis=ax[nu] - 1)
+            p = jnp.einsum(
+                "...ab,...bc,...dc,...ed->...ae",
+                u_mu,
+                u_nu_xmu,
+                jnp.conj(u_mu_xnu),
+                jnp.conj(u_nu),
+            )
+            total = total + jnp.mean(
+                jnp.real(jnp.trace(p, axis1=-2, axis2=-1))
+            ).astype(jnp.float32)
+    return total / jnp.float32(6.0 * 3.0)
+
+
+def make_entry_points(dims, tol: float = 1e-10, maxiter: int = 1000):
+    """The functions lowered to AOT artifacts, keyed by artifact name.
+
+    ``dims`` is a layouts.LatticeDims; shapes are baked per artifact (XLA
+    is shape-specialized). ``kappa`` stays a runtime scalar input.
+    """
+    t, z, y, xh = dims.t, dims.z, dims.y, dims.xh
+    f32 = jnp.float32
+    u_spec = jax.ShapeDtypeStruct((4, 2, t, z, y, xh, 3, 3, 2), f32)
+    psi_spec = jax.ShapeDtypeStruct((t, z, y, xh, 4, 3, 2), f32)
+    ufull_spec = jax.ShapeDtypeStruct((4, t, z, y, 2 * xh, 3, 3, 2), f32)
+    k_spec = jax.ShapeDtypeStruct((), f32)
+
+    return {
+        "hopping_oe": (lambda u, p: hopping(u, p, 1), (u_spec, psi_spec)),
+        "hopping_eo": (lambda u, p: hopping(u, p, 0), (u_spec, psi_spec)),
+        "meo": (meo, (u_spec, psi_spec, k_spec)),
+        "mdagm": (mdagm, (u_spec, psi_spec, k_spec)),
+        "cg_solve": (
+            functools.partial(cg_solve, tol=tol, maxiter=maxiter),
+            (u_spec, psi_spec, k_spec),
+        ),
+        "reconstruct_odd": (
+            reconstruct_odd,
+            (u_spec, psi_spec, psi_spec, k_spec),
+        ),
+        "plaquette": (plaquette, (ufull_spec,)),
+    }

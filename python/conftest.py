@@ -1,0 +1,4 @@
+import sys, pathlib
+sys.path.insert(0, str(pathlib.Path(__file__).parent))
+import jax
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,103 @@
+"""Layout invariants: even-odd compaction maps and tiling constraints."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import fieldio, layouts
+
+EVEN = st.sampled_from([2, 4, 6, 8])
+
+
+@settings(max_examples=20, deadline=None)
+@given(nx=EVEN, ny=EVEN, nz=EVEN, nt=EVEN)
+def test_compact_scatter_roundtrip(nx, ny, nz, nt):
+    """scatter(compact(f,0), compact(f,1)) == f (bijection, Fig. 4)."""
+    dims = layouts.LatticeDims(nx, ny, nz, nt)
+    rng = np.random.default_rng(nx * ny + nz * nt)
+    f = rng.normal(size=dims.shape_full() + (3,))
+    e = layouts.compact(f, dims, 0)
+    o = layouts.compact(f, dims, 1)
+    assert e.shape == dims.shape_eo() + (3,)
+    np.testing.assert_array_equal(layouts.scatter(e, o, dims), f)
+
+
+def test_compact_selects_parity():
+    """Every site landing in the parity-p array really has parity p."""
+    dims = layouts.LatticeDims(4, 4, 2, 2)
+    par = layouts.site_parity(dims).astype(np.float64)
+    for p in range(2):
+        got = layouts.compact(par, dims, p)
+        np.testing.assert_array_equal(got, np.full(dims.shape_eo(), p))
+
+
+def test_row_parity_matches_x_coordinate():
+    """x = 2*ix + phi recovers the lexical x coordinate."""
+    dims = layouts.LatticeDims(8, 4, 2, 2)
+    xcoord = np.broadcast_to(
+        np.arange(dims.x), dims.shape_full()
+    ).astype(np.float64)
+    for p in range(2):
+        compacted = layouts.compact(xcoord, dims, p)
+        phi = layouts.row_parity(dims, p)
+        ix = np.arange(dims.xh)
+        want = 2 * ix[None, None, None, :] + phi[..., None]
+        np.testing.assert_array_equal(compacted, want)
+
+
+def test_odd_extent_rejected():
+    with pytest.raises(ValueError):
+        layouts.LatticeDims(4, 3, 4, 4)
+    with pytest.raises(ValueError):
+        layouts.LatticeDims(5, 4, 4, 4)
+
+
+@pytest.mark.parametrize(
+    "vx,vy,ok",
+    [(16, 1, False), (8, 2, True), (4, 4, True), (2, 8, True)],
+)
+def test_table1_tilings_16x16(vx, vy, ok):
+    """Table 1: the 16x1 tiling is unavailable at NX=16 (XH=8 < 16)."""
+    dims = layouts.LatticeDims(16, 16, 8, 8)
+    if ok:
+        layouts.check_tiling(dims, vx, vy)
+    else:
+        with pytest.raises(ValueError):
+            layouts.check_tiling(dims, vx, vy)
+
+
+@pytest.mark.parametrize("vx,vy", [(16, 1), (8, 2), (4, 4), (2, 8)])
+def test_table1_tilings_64x16(vx, vy):
+    """All four tilings are available on the 64x16x8x4 lattice."""
+    layouts.check_tiling(layouts.LatticeDims(64, 16, 8, 4), vx, vy)
+
+
+def test_tiling_rejects_vlenx_1():
+    with pytest.raises(ValueError):
+        layouts.check_tiling(layouts.LatticeDims(64, 16, 8, 4), 1, 16)
+
+
+def test_fieldio_roundtrip(tmp_path):
+    rng = np.random.default_rng(3)
+    for dtype in (np.float32, np.float64):
+        arr = rng.normal(size=(3, 4, 5)).astype(dtype)
+        p = tmp_path / f"t_{dtype.__name__}.bin"
+        fieldio.write_tensor(p, arr)
+        back = fieldio.read_tensor(p)
+        assert back.dtype == arr.dtype
+        np.testing.assert_array_equal(back, arr)
+
+
+def test_fieldio_complex_roundtrip(tmp_path):
+    rng = np.random.default_rng(4)
+    c = rng.normal(size=(2, 3)) + 1j * rng.normal(size=(2, 3))
+    inter = fieldio.complex_to_interleaved(c, dtype=np.float64)
+    assert inter.shape == (2, 3, 2)
+    np.testing.assert_allclose(fieldio.interleaved_to_complex(inter), c)
+
+
+def test_fieldio_bad_magic(tmp_path):
+    p = tmp_path / "bad.bin"
+    p.write_bytes(b"NOTMAGIC" + b"\0" * 16)
+    with pytest.raises(ValueError):
+        fieldio.read_tensor(p)

@@ -1,0 +1,137 @@
+"""L2 correctness: even-odd preconditioned operator, CG solver, plaquette."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import layouts, model
+from compile.kernels import ref
+from tests.test_kernel import compact_gauge, make_fields, random_su3
+
+DIMS = layouts.LatticeDims(4, 4, 4, 4)
+KAPPA = 0.13
+
+
+def interleave(c):
+    return np.stack([c.real, c.imag], axis=-1).astype(np.float32)
+
+
+def to_complex(a):
+    return np.asarray(a)[..., 0] + 1j * np.asarray(a)[..., 1]
+
+
+@pytest.fixture(scope="module")
+def fields():
+    u, psi_e = make_fields(DIMS, seed=11)
+    _, psi_o = make_fields(DIMS, seed=12)
+    u_eo = interleave(compact_gauge(u, DIMS))
+    return u, u_eo, psi_e, psi_o
+
+
+def test_meo_matches_schur_complement(fields):
+    """M-hat psi_e == psi_e - kappa^2 H_eo H_oe psi_e via the oracle."""
+    u, u_eo, psi_e, _ = fields
+    got = to_complex(model.meo(jnp.asarray(u_eo), jnp.asarray(interleave(psi_e)), KAPPA))
+    h_o = np.asarray(ref.hopping_eo_via_full(u, psi_e, DIMS, p_out=1))
+    h_e = np.asarray(ref.hopping_eo_via_full(u, h_o, DIMS, p_out=0))
+    want = psi_e - KAPPA**2 * h_e
+    np.testing.assert_allclose(got, want, atol=5e-5)
+
+
+def test_gamma5_hermiticity(fields):
+    """<x, M y> == <g5 M g5 x, y> for random x, y (M-hat^dag = g5 M-hat g5)."""
+    _, u_eo, psi_e, psi_o = fields
+    x, y = interleave(psi_e), interleave(psi_o)
+    u_eo = jnp.asarray(u_eo)
+    my = to_complex(model.meo(u_eo, jnp.asarray(y), KAPPA))
+    mdx = to_complex(model.meo_dag(u_eo, jnp.asarray(x), KAPPA))
+    xc, yc = to_complex(x), to_complex(y)
+    lhs = np.vdot(xc, my)
+    rhs = np.vdot(mdx, yc)
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-4)
+
+
+def test_mdagm_hermitian_positive(fields):
+    _, u_eo, psi_e, psi_o = fields
+    u_eo = jnp.asarray(u_eo)
+    x, y = interleave(psi_e), interleave(psi_o)
+    ax = to_complex(model.mdagm(u_eo, jnp.asarray(x), KAPPA))
+    ay = to_complex(model.mdagm(u_eo, jnp.asarray(y), KAPPA))
+    xc, yc = to_complex(x), to_complex(y)
+    np.testing.assert_allclose(np.vdot(xc, ay), np.conj(np.vdot(yc, ax)), rtol=2e-4)
+    assert np.vdot(xc, ax).real > 0
+    assert abs(np.vdot(xc, ax).imag) < 1e-3 * abs(np.vdot(xc, ax).real)
+
+
+def test_cg_solves(fields):
+    """CG returns x with M-hat x == b to the requested tolerance."""
+    _, u_eo, psi_e, _ = fields
+    u_eo = jnp.asarray(u_eo)
+    b = jnp.asarray(interleave(psi_e))
+    x, iters, rr = model.cg_solve(u_eo, b, KAPPA, tol=1e-8, maxiter=500)
+    assert int(iters) < 500
+    mx = to_complex(model.meo(u_eo, x, KAPPA))
+    bc = to_complex(b)
+    resid = np.linalg.norm(mx - bc) / np.linalg.norm(bc)
+    assert resid < 1e-5, f"true residual {resid}"
+
+
+def test_even_odd_solution_solves_full_system(fields):
+    """Schur solve (Eqs. 4+5) reproduces a solution of the full D psi = eta."""
+    u, u_eo, psi_e, psi_o = fields
+    u_eo_j = jnp.asarray(u_eo)
+    b_e, b_o = jnp.asarray(interleave(psi_e)), jnp.asarray(interleave(psi_o))
+    # rhs of Eq. 4: b_e + kappa H_eo b_o   (D_ee = 1)
+    rhs = b_e + KAPPA * model.hopping(u_eo_j, b_o, p_out=0)
+    x_e, _, _ = model.cg_solve(u_eo_j, rhs, KAPPA, tol=1e-8, maxiter=500)
+    x_o = model.reconstruct_odd(u_eo_j, b_o, x_e, KAPPA)
+    # verify on the full lattice against the oracle
+    full_x = layouts.scatter(to_complex(x_e), to_complex(x_o), DIMS)
+    full_b = layouts.scatter(to_complex(b_e), to_complex(b_o), DIMS)
+    dx = np.asarray(ref.dslash(jnp.asarray(u.astype(np.complex128)), jnp.asarray(full_x), KAPPA))
+    resid = np.linalg.norm(dx - full_b) / np.linalg.norm(full_b)
+    assert resid < 1e-5, f"full-system residual {resid}"
+
+
+def test_dslash_eo_full_matches_oracle(fields):
+    u, u_eo, psi_e, psi_o = fields
+    out_e, out_o = model.dslash_eo_full(
+        jnp.asarray(u_eo),
+        jnp.asarray(interleave(psi_e)),
+        jnp.asarray(interleave(psi_o)),
+        KAPPA,
+    )
+    full = layouts.scatter(psi_e, psi_o, DIMS)
+    want = np.asarray(ref.dslash(jnp.asarray(u.astype(np.complex128)), jnp.asarray(full), KAPPA))
+    got = layouts.scatter(to_complex(out_e), to_complex(out_o), DIMS)
+    np.testing.assert_allclose(got, want, atol=5e-5)
+
+
+def test_plaquette_unit_gauge():
+    u = np.zeros((4,) + DIMS.shape_full() + (3, 3, 2), dtype=np.float32)
+    u[..., np.arange(3), np.arange(3), 0] = 1.0
+    got = float(model.plaquette(jnp.asarray(u)))
+    np.testing.assert_allclose(got, 1.0, atol=1e-6)
+
+
+def test_plaquette_random_gauge_matches_ref():
+    rng = np.random.default_rng(21)
+    u = random_su3(rng, (4,) + DIMS.shape_full()).astype(np.complex64)
+    got = float(model.plaquette(jnp.asarray(interleave(u))))
+    want = float(ref.plaquette(jnp.asarray(u)))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_plaquette_gauge_invariance():
+    """Plaquette is invariant under a random gauge transformation."""
+    rng = np.random.default_rng(22)
+    u = random_su3(rng, (4,) + DIMS.shape_full()).astype(np.complex128)
+    g = random_su3(rng, DIMS.shape_full()).astype(np.complex128)
+    ug = np.empty_like(u)
+    for mu in range(4):
+        g_shift = np.roll(g, -1, axis=ref.MU_AXIS[mu])
+        ug[mu] = np.einsum("...ab,...bc,...dc->...ad", g, u[mu], np.conj(g_shift))
+    p0 = float(ref.plaquette(jnp.asarray(u)))
+    p1 = float(ref.plaquette(jnp.asarray(ug)))
+    np.testing.assert_allclose(p1, p0, atol=1e-10)

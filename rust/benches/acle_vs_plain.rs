@@ -1,0 +1,9 @@
+//! Regenerates the §4.2 comparison: tuned SIMD kernel vs the plain
+//! "without ACLE" implementation (~10x on A64FX; id A1).
+
+mod common;
+
+fn main() {
+    let opts = common::opts(10, 1);
+    println!("{}", lqcd::harness::acle::run(opts).report);
+}

@@ -1,0 +1,9 @@
+//! FLIB_BARRIER=HARD ablation: spin vs sleeping barrier in the thread
+//! team (paper §4: ~20% at the smallest lattice; id A2).
+
+mod common;
+
+fn main() {
+    let opts = common::opts(30, 4);
+    println!("{}", lqcd::harness::barrier::run(opts).report);
+}

@@ -1,0 +1,21 @@
+//! Shared bench-option handling: `cargo bench` passes `--bench`; we also
+//! honor LQCD_BENCH_QUICK / LQCD_BENCH_ITERS / LQCD_BENCH_THREADS.
+
+use lqcd::harness::Opts;
+
+pub fn opts(default_iters: usize, default_threads: usize) -> Opts {
+    let quick = std::env::var("LQCD_BENCH_QUICK").is_ok();
+    let iters = std::env::var("LQCD_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if quick { default_iters / 5 + 1 } else { default_iters });
+    let threads = std::env::var("LQCD_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_threads);
+    Opts {
+        iters,
+        threads,
+        quick,
+    }
+}

@@ -1,0 +1,9 @@
+//! Regenerates **Fig. 10**: weak scaling of the even-odd Wilson multiply
+//! to 512 nodes — measured per-rank phases + TofuD model (id F10).
+
+mod common;
+
+fn main() {
+    let opts = common::opts(20, 1);
+    println!("{}", lqcd::harness::fig10::run(opts).report);
+}

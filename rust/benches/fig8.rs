@@ -1,0 +1,9 @@
+//! Regenerates **Fig. 8**: per-thread cycle accounting of the bulk kernel
+//! before (gather/scatter) and after (lane shuffles) tuning (id F8).
+
+mod common;
+
+fn main() {
+    let opts = common::opts(20, 4);
+    println!("{}", lqcd::harness::fig8::run(opts).report);
+}

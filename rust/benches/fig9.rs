@@ -1,0 +1,9 @@
+//! Regenerates **Fig. 9**: EO1/EO2 per-thread accounting, the EO2 load
+//! imbalance, and the balanced-EO2 extension (id F9).
+
+mod common;
+
+fn main() {
+    let opts = common::opts(20, 4);
+    println!("{}", lqcd::harness::fig9::run(opts).report);
+}

@@ -1,0 +1,68 @@
+//! PJRT path benchmark: the AOT `meo` artifact vs the native kernel on
+//! the same fields — operator latency and the interchange overhead.
+//! Requires `make artifacts`.
+
+mod common;
+
+use lqcd::coordinator::operator::{LinearOperator, NativeMeo};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, Tiling};
+use lqcd::runtime::{PjrtMeo, Runtime};
+use lqcd::util::rng::Rng;
+use lqcd::util::tables::Table;
+use lqcd::util::timer::Bench;
+
+fn main() {
+    let opts = common::opts(10, 1);
+    let rt = match Runtime::load(std::path::Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping pjrt_overhead: {e}");
+            return;
+        }
+    };
+    let dims = rt.manifest.dims;
+    let geom = Geometry::single_rank(dims, Tiling::new(4, 4).unwrap())
+        .or_else(|_| Geometry::single_rank(dims, Tiling::new(2, 2).unwrap()))
+        .unwrap();
+    let mut rng = Rng::seeded(31415);
+    let u = GaugeField::random(&geom, &mut rng);
+    let psi = FermionField::gaussian(&geom, &mut rng);
+    let mut out = FermionField::zeros(&geom);
+    let kappa = 0.13f32;
+    let flops = lqcd::dslash::flops::meo_flops(dims.half_volume()) as f64 * opts.iters as f64;
+
+    let bench = Bench::new(1, 3);
+    let mut table = Table::new(
+        &format!("M-hat operator on {dims}: PJRT artifact vs native kernel"),
+        &["operator", "per apply", "GFlops"],
+    );
+
+    let mut pjrt = PjrtMeo::new(&rt, &geom, &u, kappa).unwrap();
+    let r = bench.run(|| {
+        for _ in 0..opts.iters {
+            pjrt.apply(&mut out, &psi);
+        }
+        Some(flops)
+    });
+    table.row(vec![
+        "pjrt (L1 pallas + L2 jax AOT)".into(),
+        lqcd::util::timer::fmt_secs(r.stats.median / opts.iters as f64),
+        format!("{:.2}", r.gflops().unwrap()),
+    ]);
+
+    let mut native = NativeMeo::new(&geom, u, kappa);
+    let r = bench.run(|| {
+        for _ in 0..opts.iters {
+            native.apply(&mut out, &psi);
+        }
+        Some(flops)
+    });
+    table.row(vec![
+        "native (L3 lane kernel)".into(),
+        lqcd::util::timer::fmt_secs(r.stats.median / opts.iters as f64),
+        format!("{:.2}", r.gflops().unwrap()),
+    ]);
+
+    println!("{}", table.render());
+}

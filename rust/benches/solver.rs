@@ -1,0 +1,76 @@
+//! Solver benchmark: CGNR vs BiCGStab on the even-odd preconditioned
+//! system — iterations, operator applications, and sustained GFlops.
+
+mod common;
+
+use lqcd::coordinator::operator::NativeMdagM;
+use lqcd::coordinator::operator::{LinearOperator, NativeMeo};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, LatticeDims, Tiling};
+use lqcd::solver;
+use lqcd::util::rng::Rng;
+use lqcd::util::tables::Table;
+use lqcd::util::timer::Stopwatch;
+
+fn main() {
+    let opts = common::opts(1, 1);
+    let dims = if opts.quick {
+        LatticeDims::new(8, 8, 4, 4).unwrap()
+    } else {
+        LatticeDims::new(8, 8, 8, 16).unwrap()
+    };
+    let geom = Geometry::single_rank(dims, Tiling::new(4, 4).unwrap()).unwrap();
+    let mut rng = Rng::seeded(9001);
+    let u = GaugeField::random(&geom, &mut rng);
+    let b = FermionField::gaussian(&geom, &mut rng);
+    let kappa = 0.13f32;
+    let tol = 1e-8;
+
+    let mut table = Table::new(
+        &format!("Solver comparison on {dims} (kappa = {kappa}, tol = {tol:.0e})"),
+        &["solver", "iterations", "GFlops", "seconds", "true residual"],
+    );
+
+    // BiCGStab on M-hat
+    {
+        let mut op = NativeMeo::new(&geom, u.clone(), kappa);
+        let mut x = FermionField::zeros(&geom);
+        let sw = Stopwatch::start();
+        let stats = solver::bicgstab(&mut op, &mut x, &b, tol, 1000);
+        let secs = sw.secs();
+        let resid = solver::residual::operator_residual(&mut op, &x, &b);
+        table.row(vec![
+            "bicgstab(M)".into(),
+            stats.iterations.to_string(),
+            format!("{:.2}", stats.flops as f64 / secs / 1e9),
+            format!("{secs:.2}"),
+            format!("{resid:.2e}"),
+        ]);
+        assert!(stats.converged);
+    }
+
+    // CGNR on M^dag M
+    {
+        let mut op = NativeMdagM::new(&geom, u, kappa);
+        let mut bp = b.clone();
+        bp.gamma5();
+        let mut mbp = FermionField::zeros(&geom);
+        op.meo().apply(&mut mbp, &bp);
+        mbp.gamma5();
+        let mut x = FermionField::zeros(&geom);
+        let sw = Stopwatch::start();
+        let stats = solver::cg(&mut op, &mut x, &mbp, tol, 1000);
+        let secs = sw.secs();
+        let resid = solver::residual::operator_residual(&mut op, &x, &mbp);
+        table.row(vec![
+            "cgnr(MdagM)".into(),
+            stats.iterations.to_string(),
+            format!("{:.2}", stats.flops as f64 / secs / 1e9),
+            format!("{secs:.2}"),
+            format!("{resid:.2e}"),
+        ]);
+        assert!(stats.converged);
+    }
+
+    println!("{}", table.render());
+}

@@ -1,0 +1,11 @@
+//! Regenerates **Table 1** of the paper: 2D SIMD tiling sweep of the
+//! even-odd Wilson matrix multiplication (see DESIGN.md section 6, id T1).
+
+mod common;
+
+fn main() {
+    let opts = common::opts(20, 1);
+    println!("running Table 1 sweep (iters = {}, threads = {}) ...", opts.iters, opts.threads);
+    let (report, _) = lqcd::harness::table1::run(opts);
+    println!("{report}");
+}

@@ -1,0 +1,166 @@
+//! Minimal complex number type (f64; the vectorized kernels use split
+//! re/im f32 lanes instead and never touch this type).
+
+use std::ops::{Add, AddAssign, Mul, Neg, Sub, SubAssign};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+    pub const ONE: Complex = Complex { re: 1.0, im: 0.0 };
+    pub const I: Complex = Complex { re: 0.0, im: 1.0 };
+
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Complex {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Complex {
+        Complex::new(self.re, -self.im)
+    }
+
+    #[inline]
+    pub fn norm2(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm2().sqrt()
+    }
+
+    #[inline]
+    pub fn scale(self, s: f64) -> Complex {
+        Complex::new(self.re * s, self.im * s)
+    }
+
+    /// self * i
+    #[inline]
+    pub fn mul_i(self) -> Complex {
+        Complex::new(-self.im, self.re)
+    }
+
+    /// self * (-i)
+    #[inline]
+    pub fn mul_mi(self) -> Complex {
+        Complex::new(self.im, -self.re)
+    }
+
+    /// Fused a + b*c.
+    #[inline]
+    pub fn madd(self, b: Complex, c: Complex) -> Complex {
+        Complex::new(
+            self.re + b.re * c.re - b.im * c.im,
+            self.im + b.re * c.im + b.im * c.re,
+        )
+    }
+
+    /// Fused a + conj(b)*c.
+    #[inline]
+    pub fn madd_conj(self, b: Complex, c: Complex) -> Complex {
+        Complex::new(
+            self.re + b.re * c.re + b.im * c.im,
+            self.im + b.re * c.im - b.im * c.re,
+        )
+    }
+}
+
+impl Add for Complex {
+    type Output = Complex;
+    #[inline]
+    fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+}
+
+impl AddAssign for Complex {
+    #[inline]
+    fn add_assign(&mut self, o: Complex) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl Sub for Complex {
+    type Output = Complex;
+    #[inline]
+    fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+impl SubAssign for Complex {
+    #[inline]
+    fn sub_assign(&mut self, o: Complex) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl Mul for Complex {
+    type Output = Complex;
+    #[inline]
+    fn mul(self, o: Complex) -> Complex {
+        Complex::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+
+impl Neg for Complex {
+    type Output = Complex;
+    #[inline]
+    fn neg(self) -> Complex {
+        Complex::new(-self.re, -self.im)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: Complex, b: Complex) -> bool {
+        (a - b).abs() < 1e-12
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Complex::new(1.0, 2.0);
+        let b = Complex::new(3.0, -1.0);
+        assert!(close(a + b, Complex::new(4.0, 1.0)));
+        assert!(close(a - b, Complex::new(-2.0, 3.0)));
+        assert!(close(a * b, Complex::new(5.0, 5.0)));
+        assert!(close(-a, Complex::new(-1.0, -2.0)));
+    }
+
+    #[test]
+    fn i_multiplication() {
+        let a = Complex::new(1.0, 2.0);
+        assert!(close(a.mul_i(), a * Complex::I));
+        assert!(close(a.mul_mi(), a * Complex::new(0.0, -1.0)));
+    }
+
+    #[test]
+    fn fused_ops_match_expanded() {
+        let a = Complex::new(0.5, -0.25);
+        let b = Complex::new(2.0, 1.0);
+        let c = Complex::new(-1.0, 3.0);
+        assert!(close(a.madd(b, c), a + b * c));
+        assert!(close(a.madd_conj(b, c), a + b.conj() * c));
+    }
+
+    #[test]
+    fn conj_and_norm() {
+        let a = Complex::new(3.0, 4.0);
+        assert_eq!(a.conj(), Complex::new(3.0, -4.0));
+        assert_eq!(a.norm2(), 25.0);
+        assert_eq!(a.abs(), 5.0);
+        assert!(close((a * a.conj()).scale(1.0 / a.norm2()), Complex::ONE));
+    }
+}

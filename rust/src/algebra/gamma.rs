@@ -1,0 +1,186 @@
+//! Explicit gamma matrices (DeGrand-Rossi chiral basis), direction order
+//! (x, y, z, t). These mirror `python/compile/kernels/ref.py::GAMMA`
+//! exactly; the projection tables in [`super::project`] are verified
+//! against them in tests, never trusted by hand.
+
+use super::{Complex, Spinor};
+
+const Z: Complex = Complex { re: 0.0, im: 0.0 };
+const ONE: Complex = Complex { re: 1.0, im: 0.0 };
+const MONE: Complex = Complex { re: -1.0, im: 0.0 };
+const I: Complex = Complex { re: 0.0, im: 1.0 };
+const MI: Complex = Complex { re: 0.0, im: -1.0 };
+
+/// The four Euclidean gamma matrices.
+#[derive(Clone, Copy, Debug)]
+pub struct Gamma(pub [[Complex; 4]; 4]);
+
+/// gamma_mu for mu = x, y, z, t.
+pub const GAMMA: [Gamma; 4] = [
+    // gamma_x
+    Gamma([
+        [Z, Z, Z, I],
+        [Z, Z, I, Z],
+        [Z, MI, Z, Z],
+        [MI, Z, Z, Z],
+    ]),
+    // gamma_y
+    Gamma([
+        [Z, Z, Z, MONE],
+        [Z, Z, ONE, Z],
+        [Z, ONE, Z, Z],
+        [MONE, Z, Z, Z],
+    ]),
+    // gamma_z
+    Gamma([
+        [Z, Z, I, Z],
+        [Z, Z, Z, MI],
+        [MI, Z, Z, Z],
+        [Z, I, Z, Z],
+    ]),
+    // gamma_t
+    Gamma([
+        [Z, Z, ONE, Z],
+        [Z, Z, Z, ONE],
+        [ONE, Z, Z, Z],
+        [Z, ONE, Z, Z],
+    ]),
+];
+
+/// gamma_5 = gamma_x gamma_y gamma_z gamma_t = diag(1, 1, -1, -1).
+pub const GAMMA5: Gamma = Gamma([
+    [ONE, Z, Z, Z],
+    [Z, ONE, Z, Z],
+    [Z, Z, MONE, Z],
+    [Z, Z, Z, MONE],
+]);
+
+impl Gamma {
+    /// Apply to the spinor index: (g psi)_i = sum_j g[i][j] psi_j.
+    pub fn mul(&self, psi: &Spinor) -> Spinor {
+        let mut out = Spinor::ZERO;
+        for i in 0..4 {
+            for j in 0..4 {
+                let g = self.0[i][j];
+                if g == Z {
+                    continue;
+                }
+                for c in 0..3 {
+                    out.s[i][c] = out.s[i][c].madd(g, psi.s[j][c]);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn matmul(&self, o: &Gamma) -> Gamma {
+        let mut out = [[Z; 4]; 4];
+        for i in 0..4 {
+            for j in 0..4 {
+                let mut acc = Z;
+                for k in 0..4 {
+                    acc = acc.madd(self.0[i][k], o.0[k][j]);
+                }
+                out[i][j] = acc;
+            }
+        }
+        Gamma(out)
+    }
+
+    pub fn dist(&self, o: &Gamma) -> f64 {
+        let mut s = 0.0;
+        for i in 0..4 {
+            for j in 0..4 {
+                s += (self.0[i][j] - o.0[i][j]).norm2();
+            }
+        }
+        s.sqrt()
+    }
+
+    pub fn identity() -> Gamma {
+        Gamma([
+            [ONE, Z, Z, Z],
+            [Z, ONE, Z, Z],
+            [Z, Z, ONE, Z],
+            [Z, Z, Z, ONE],
+        ])
+    }
+
+    pub fn scaled(&self, a: f64) -> Gamma {
+        let mut out = self.0;
+        for row in out.iter_mut() {
+            for e in row.iter_mut() {
+                *e = e.scale(a);
+            }
+        }
+        Gamma(out)
+    }
+
+    pub fn add(&self, o: &Gamma) -> Gamma {
+        let mut out = self.0;
+        for i in 0..4 {
+            for j in 0..4 {
+                out[i][j] += o.0[i][j];
+            }
+        }
+        Gamma(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gamma_squares_to_one() {
+        for g in &GAMMA {
+            assert!(g.matmul(g).dist(&Gamma::identity()) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn anticommutation() {
+        for (mu, g) in GAMMA.iter().enumerate() {
+            for (nu, h) in GAMMA.iter().enumerate() {
+                let anti = g.matmul(h).add(&h.matmul(g));
+                let want = Gamma::identity().scaled(if mu == nu { 2.0 } else { 0.0 });
+                assert!(anti.dist(&want) < 1e-14, "mu={mu} nu={nu}");
+            }
+        }
+    }
+
+    #[test]
+    fn gamma5_is_product() {
+        let p = GAMMA[0]
+            .matmul(&GAMMA[1])
+            .matmul(&GAMMA[2])
+            .matmul(&GAMMA[3]);
+        assert!(p.dist(&GAMMA5) < 1e-14);
+    }
+
+    #[test]
+    fn hermitian() {
+        for g in &GAMMA {
+            let mut adj = [[Z; 4]; 4];
+            for i in 0..4 {
+                for j in 0..4 {
+                    adj[i][j] = g.0[j][i].conj();
+                }
+            }
+            assert!(g.dist(&Gamma(adj)) < 1e-14);
+        }
+    }
+
+    #[test]
+    fn spinor_gamma5_matches_matrix() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seeded(8);
+        let mut psi = Spinor::ZERO;
+        for i in 0..4 {
+            for c in 0..3 {
+                psi.s[i][c] = Complex::new(rng.gaussian(), rng.gaussian());
+            }
+        }
+        assert!((GAMMA5.mul(&psi).sub(&psi.gamma5())).norm2() < 1e-24);
+    }
+}

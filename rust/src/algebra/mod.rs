@@ -1,0 +1,18 @@
+//! Scalar SU(3) / spinor algebra.
+//!
+//! These types back the plain-scalar dslash (the paper's "without ACLE"
+//! baseline, §4.2), field initialization, observables, and the test
+//! oracles. The vectorized kernels in [`crate::dslash`] work on lane
+//! arrays directly and never allocate these structs in the hot loop.
+
+mod complex;
+mod gamma;
+mod project;
+mod spinor;
+mod su3;
+
+pub use complex::Complex;
+pub use gamma::{Gamma, GAMMA, GAMMA5};
+pub use project::{Coef, ProjEntry, PROJ};
+pub use spinor::{HalfSpinor, Spinor};
+pub use su3::Su3;

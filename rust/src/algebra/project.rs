@@ -1,0 +1,200 @@
+//! Spin projection / reconstruction tables for `(1 -+ gamma_mu)`.
+//!
+//! `(1 -+ gamma_mu)` has rank 2; the kernels apply it as a 4 -> 2 spinor
+//! projection, multiply the link into the half-spinor, and reconstruct
+//! (paper Fig. 2, lines 4-9). These tables are the single source of truth
+//! for the native kernels and are verified against the explicit gamma
+//! matrices in tests. They match `python/compile/kernels/wilson.py::PROJ`.
+
+use super::{Complex, HalfSpinor, Spinor};
+
+/// Coefficient: one of +-1, +-i — stored so kernels can branch to
+/// add/sub/i-mul instead of a general complex multiply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coef {
+    One,
+    MinusOne,
+    I,
+    MinusI,
+}
+
+impl Coef {
+    #[inline]
+    pub fn apply(self, v: Complex) -> Complex {
+        match self {
+            Coef::One => v,
+            Coef::MinusOne => -v,
+            Coef::I => v.mul_i(),
+            Coef::MinusI => v.mul_mi(),
+        }
+    }
+
+    /// As split re/im factors acting on (re, im): returns (new_re, new_im)
+    /// as linear combinations; used by the lane kernels.
+    #[inline]
+    pub fn apply_split(self, re: f32, im: f32) -> (f32, f32) {
+        match self {
+            Coef::One => (re, im),
+            Coef::MinusOne => (-re, -im),
+            Coef::I => (-im, re),
+            Coef::MinusI => (im, -re),
+        }
+    }
+}
+
+/// Projection/reconstruction rule for one (direction, sign):
+///
+/// ```text
+/// h1 = psi_0 + c1 * psi_j1          r_0 = h1
+/// h2 = psi_1 + c2 * psi_j2          r_1 = h2
+///                                   r_2 = d1 * h_k1
+///                                   r_3 = d2 * h_k2
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct ProjEntry {
+    pub j1: usize,
+    pub c1: Coef,
+    pub j2: usize,
+    pub c2: Coef,
+    pub k1: usize,
+    pub d1: Coef,
+    pub k2: usize,
+    pub d2: Coef,
+}
+
+use Coef::{MinusI as MI, MinusOne as MONE, One as ONE, I};
+
+/// `PROJ[mu][sign]`: sign 0 = forward hop `(1 - gamma_mu)`,
+/// sign 1 = backward hop `(1 + gamma_mu)`.
+pub const PROJ: [[ProjEntry; 2]; 4] = [
+    // mu = 0 (x)
+    [
+        ProjEntry { j1: 3, c1: MI, j2: 2, c2: MI, k1: 1, d1: I, k2: 0, d2: I },
+        ProjEntry { j1: 3, c1: I, j2: 2, c2: I, k1: 1, d1: MI, k2: 0, d2: MI },
+    ],
+    // mu = 1 (y)
+    [
+        ProjEntry { j1: 3, c1: ONE, j2: 2, c2: MONE, k1: 1, d1: MONE, k2: 0, d2: ONE },
+        ProjEntry { j1: 3, c1: MONE, j2: 2, c2: ONE, k1: 1, d1: ONE, k2: 0, d2: MONE },
+    ],
+    // mu = 2 (z)
+    [
+        ProjEntry { j1: 2, c1: MI, j2: 3, c2: I, k1: 0, d1: I, k2: 1, d2: MI },
+        ProjEntry { j1: 2, c1: I, j2: 3, c2: MI, k1: 0, d1: MI, k2: 1, d2: I },
+    ],
+    // mu = 3 (t)
+    [
+        ProjEntry { j1: 2, c1: MONE, j2: 3, c2: MONE, k1: 0, d1: MONE, k2: 1, d2: MONE },
+        ProjEntry { j1: 2, c1: ONE, j2: 3, c2: ONE, k1: 0, d1: ONE, k2: 1, d2: ONE },
+    ],
+];
+
+impl ProjEntry {
+    /// Project a full spinor to the half-spinor.
+    #[inline]
+    pub fn project(&self, psi: &Spinor) -> HalfSpinor {
+        let mut h = HalfSpinor::default();
+        for c in 0..3 {
+            h.h[0][c] = psi.s[0][c] + self.c1.apply(psi.s[self.j1][c]);
+            h.h[1][c] = psi.s[1][c] + self.c2.apply(psi.s[self.j2][c]);
+        }
+        h
+    }
+
+    /// Reconstruct the full spinor and accumulate into `acc`.
+    #[inline]
+    pub fn reconstruct_accum(&self, acc: &mut Spinor, w: &HalfSpinor) {
+        for c in 0..3 {
+            acc.s[0][c] += w.h[0][c];
+            acc.s[1][c] += w.h[1][c];
+            acc.s[2][c] += self.d1.apply(w.h[self.k1][c]);
+            acc.s[3][c] += self.d2.apply(w.h[self.k2][c]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gamma::GAMMA;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_spinor(rng: &mut Rng) -> Spinor {
+        let mut s = Spinor::ZERO;
+        for i in 0..4 {
+            for c in 0..3 {
+                s.s[i][c] = Complex::new(rng.gaussian(), rng.gaussian());
+            }
+        }
+        s
+    }
+
+    /// The tables must reproduce (1 -+ gamma_mu) psi exactly — the same
+    /// derivation check as python/tests/test_kernel.py.
+    #[test]
+    fn tables_match_explicit_gammas() {
+        let mut rng = Rng::seeded(31);
+        for mu in 0..4 {
+            for sign in 0..2 {
+                let psi = rand_spinor(&mut rng);
+                let gp = GAMMA[mu].mul(&psi);
+                let s = if sign == 0 { -1.0 } else { 1.0 };
+                let want = psi.add(&gp.scale(s));
+
+                let e = &PROJ[mu][sign];
+                let h = e.project(&psi);
+                let mut got = Spinor::ZERO;
+                e.reconstruct_accum(&mut got, &h);
+                assert!(
+                    got.sub(&want).norm2() < 1e-24,
+                    "mu={mu} sign={sign}"
+                );
+            }
+        }
+    }
+
+    /// (1 - g)(1 + g) = 0: projecting one way then the other annihilates.
+    #[test]
+    fn opposite_projectors_annihilate() {
+        let mut rng = Rng::seeded(32);
+        for mu in 0..4 {
+            let psi = rand_spinor(&mut rng);
+            let h = PROJ[mu][0].project(&psi);
+            let mut r = Spinor::ZERO;
+            PROJ[mu][0].reconstruct_accum(&mut r, &h);
+            // r = (1 - g) psi; then (1 + g) r must vanish
+            let h2 = PROJ[mu][1].project(&r);
+            let mut r2 = Spinor::ZERO;
+            PROJ[mu][1].reconstruct_accum(&mut r2, &h2);
+            assert!(r2.norm2() < 1e-22, "mu={mu}: {}", r2.norm2());
+        }
+    }
+
+    /// (1 -+ g)^2 = 2 (1 -+ g): twice a projector.
+    #[test]
+    fn projector_idempotent_up_to_2() {
+        let mut rng = Rng::seeded(33);
+        for mu in 0..4 {
+            for sign in 0..2 {
+                let psi = rand_spinor(&mut rng);
+                let e = &PROJ[mu][sign];
+                let mut r = Spinor::ZERO;
+                e.reconstruct_accum(&mut r, &e.project(&psi));
+                let mut rr = Spinor::ZERO;
+                e.reconstruct_accum(&mut rr, &e.project(&r));
+                assert!(rr.sub(&r.scale(2.0)).norm2() < 1e-22);
+            }
+        }
+    }
+
+    #[test]
+    fn coef_split_matches_complex() {
+        for coef in [Coef::One, Coef::MinusOne, Coef::I, Coef::MinusI] {
+            let v = Complex::new(0.75, -0.5);
+            let (re, im) = coef.apply_split(v.re as f32, v.im as f32);
+            let want = coef.apply(v);
+            assert!((re as f64 - want.re).abs() < 1e-6);
+            assert!((im as f64 - want.im).abs() < 1e-6);
+        }
+    }
+}

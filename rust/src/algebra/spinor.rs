@@ -1,0 +1,179 @@
+//! 4-component (Dirac) spinors over color, and 2-component half-spinors.
+
+use super::{Complex, Su3};
+
+/// A full spinor: 4 spin x 3 color complex components.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Spinor {
+    pub s: [[Complex; 3]; 4],
+}
+
+/// A projected half-spinor: 2 spin x 3 color complex components.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HalfSpinor {
+    pub h: [[Complex; 3]; 2],
+}
+
+impl Spinor {
+    pub const ZERO: Spinor = Spinor {
+        s: [[Complex { re: 0.0, im: 0.0 }; 3]; 4],
+    };
+
+    pub fn add(&self, o: &Spinor) -> Spinor {
+        let mut out = *self;
+        for i in 0..4 {
+            for c in 0..3 {
+                out.s[i][c] += o.s[i][c];
+            }
+        }
+        out
+    }
+
+    pub fn sub(&self, o: &Spinor) -> Spinor {
+        let mut out = *self;
+        for i in 0..4 {
+            for c in 0..3 {
+                out.s[i][c] -= o.s[i][c];
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, a: f64) -> Spinor {
+        let mut out = *self;
+        for i in 0..4 {
+            for c in 0..3 {
+                out.s[i][c] = out.s[i][c].scale(a);
+            }
+        }
+        out
+    }
+
+    /// axpy: self + a * o
+    pub fn axpy(&self, a: f64, o: &Spinor) -> Spinor {
+        let mut out = *self;
+        for i in 0..4 {
+            for c in 0..3 {
+                out.s[i][c] += o.s[i][c].scale(a);
+            }
+        }
+        out
+    }
+
+    pub fn norm2(&self) -> f64 {
+        let mut n = 0.0;
+        for i in 0..4 {
+            for c in 0..3 {
+                n += self.s[i][c].norm2();
+            }
+        }
+        n
+    }
+
+    /// <self, o> with conjugation on self.
+    pub fn dot(&self, o: &Spinor) -> Complex {
+        let mut acc = Complex::ZERO;
+        for i in 0..4 {
+            for c in 0..3 {
+                acc = acc.madd_conj(self.s[i][c], o.s[i][c]);
+            }
+        }
+        acc
+    }
+
+    /// gamma5 in the chiral basis: negate spin components 2 and 3.
+    pub fn gamma5(&self) -> Spinor {
+        let mut out = *self;
+        for i in 2..4 {
+            for c in 0..3 {
+                out.s[i][c] = -out.s[i][c];
+            }
+        }
+        out
+    }
+}
+
+impl HalfSpinor {
+    /// Multiply each spin row by the link: w_s = U h_s.
+    pub fn link_mul(&self, u: &Su3) -> HalfSpinor {
+        HalfSpinor {
+            h: [u.mul_vec(&self.h[0]), u.mul_vec(&self.h[1])],
+        }
+    }
+
+    /// Multiply each spin row by the adjoint link: w_s = U^dag h_s.
+    pub fn link_adj_mul(&self, u: &Su3) -> HalfSpinor {
+        HalfSpinor {
+            h: [u.adj_mul_vec(&self.h[0]), u.adj_mul_vec(&self.h[1])],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_spinor(rng: &mut Rng) -> Spinor {
+        let mut s = Spinor::ZERO;
+        for i in 0..4 {
+            for c in 0..3 {
+                s.s[i][c] = Complex::new(rng.gaussian(), rng.gaussian());
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn linear_ops() {
+        let mut rng = Rng::seeded(2);
+        let a = rand_spinor(&mut rng);
+        let b = rand_spinor(&mut rng);
+        let got = a.add(&b).sub(&b);
+        for i in 0..4 {
+            for c in 0..3 {
+                assert!((got.s[i][c] - a.s[i][c]).abs() < 1e-12);
+            }
+        }
+        assert!((a.axpy(2.0, &b).sub(&a).sub(&b.scale(2.0))).norm2() < 1e-24);
+    }
+
+    #[test]
+    fn dot_and_norm_agree() {
+        let mut rng = Rng::seeded(3);
+        let a = rand_spinor(&mut rng);
+        assert!((a.dot(&a).re - a.norm2()).abs() < 1e-12);
+        assert!(a.dot(&a).im.abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma5_squares_to_identity() {
+        let mut rng = Rng::seeded(4);
+        let a = rand_spinor(&mut rng);
+        assert!((a.gamma5().gamma5().sub(&a)).norm2() < 1e-24);
+    }
+
+    #[test]
+    fn link_mul_unitary_preserves_norm() {
+        let mut rng = Rng::seeded(5);
+        let u = Su3::random(&mut rng);
+        let h = HalfSpinor {
+            h: [
+                [Complex::new(1.0, 0.0), Complex::new(0.0, 1.0), Complex::new(0.5, 0.5)],
+                [Complex::new(-1.0, 2.0), Complex::ZERO, Complex::new(0.25, 0.0)],
+            ],
+        };
+        let n = |hs: &HalfSpinor| -> f64 {
+            hs.h.iter().flatten().map(|e| e.norm2()).sum()
+        };
+        assert!((n(&h.link_mul(&u)) - n(&h)).abs() < 1e-12);
+        assert!((n(&h.link_adj_mul(&u)) - n(&h)).abs() < 1e-12);
+        // U^dag U h == h
+        let round = h.link_mul(&u).link_adj_mul(&u);
+        for s in 0..2 {
+            for c in 0..3 {
+                assert!((round.h[s][c] - h.h[s][c]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! 3x3 complex (SU(3)) matrices: gauge links.
+
+use super::Complex;
+use crate::util::rng::Rng;
+
+/// A 3x3 complex matrix; gauge links live in SU(3).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Su3 {
+    pub m: [[Complex; 3]; 3],
+}
+
+impl Su3 {
+    pub const IDENTITY: Su3 = {
+        let mut m = [[Complex { re: 0.0, im: 0.0 }; 3]; 3];
+        m[0][0] = Complex { re: 1.0, im: 0.0 };
+        m[1][1] = Complex { re: 1.0, im: 0.0 };
+        m[2][2] = Complex { re: 1.0, im: 0.0 };
+        Su3 { m }
+    };
+
+    /// Hermitian conjugate.
+    pub fn adj(&self) -> Su3 {
+        let mut out = Su3::default();
+        for a in 0..3 {
+            for b in 0..3 {
+                out.m[a][b] = self.m[b][a].conj();
+            }
+        }
+        out
+    }
+
+    /// Matrix product.
+    pub fn mul(&self, o: &Su3) -> Su3 {
+        let mut out = Su3::default();
+        for a in 0..3 {
+            for b in 0..3 {
+                let mut acc = Complex::ZERO;
+                for c in 0..3 {
+                    acc = acc.madd(self.m[a][c], o.m[c][b]);
+                }
+                out.m[a][b] = acc;
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product w_a = sum_b U[a][b] v_b.
+    pub fn mul_vec(&self, v: &[Complex; 3]) -> [Complex; 3] {
+        let mut out = [Complex::ZERO; 3];
+        for a in 0..3 {
+            for b in 0..3 {
+                out[a] = out[a].madd(self.m[a][b], v[b]);
+            }
+        }
+        out
+    }
+
+    /// w_a = sum_b conj(U[b][a]) v_b (adjoint times vector).
+    pub fn adj_mul_vec(&self, v: &[Complex; 3]) -> [Complex; 3] {
+        let mut out = [Complex::ZERO; 3];
+        for a in 0..3 {
+            for b in 0..3 {
+                out[a] = out[a].madd_conj(self.m[b][a], v[b]);
+            }
+        }
+        out
+    }
+
+    pub fn trace(&self) -> Complex {
+        self.m[0][0] + self.m[1][1] + self.m[2][2]
+    }
+
+    pub fn det(&self) -> Complex {
+        let m = &self.m;
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    }
+
+    /// Random SU(3) matrix: Gaussian entries, Gram-Schmidt, det fixed to 1.
+    pub fn random(rng: &mut Rng) -> Su3 {
+        let mut rows = [[Complex::ZERO; 3]; 3];
+        for row in rows.iter_mut() {
+            for e in row.iter_mut() {
+                *e = Complex::new(rng.gaussian(), rng.gaussian());
+            }
+        }
+        // Gram-Schmidt orthonormalization of the rows
+        for i in 0..3 {
+            for j in 0..i {
+                // rows[i] -= <rows[j], rows[i]> rows[j]
+                let mut dot = Complex::ZERO;
+                for c in 0..3 {
+                    dot = dot.madd_conj(rows[j][c], rows[i][c]);
+                }
+                for c in 0..3 {
+                    rows[i][c] = rows[i][c] - rows[j][c] * dot;
+                }
+            }
+            let norm: f64 = rows[i].iter().map(|e| e.norm2()).sum::<f64>().sqrt();
+            for c in 0..3 {
+                rows[i][c] = rows[i][c].scale(1.0 / norm);
+            }
+        }
+        let mut u = Su3 { m: rows };
+        // rescale a row by conj(det) to make det exactly 1 (|det| = 1 already)
+        let d = u.det();
+        for c in 0..3 {
+            u.m[2][c] = u.m[2][c] * d.conj();
+        }
+        u
+    }
+
+    /// Frobenius distance to another matrix.
+    pub fn dist(&self, o: &Su3) -> f64 {
+        let mut s = 0.0;
+        for a in 0..3 {
+            for b in 0..3 {
+                s += (self.m[a][b] - o.m[a][b]).norm2();
+            }
+        }
+        s.sqrt()
+    }
+
+    /// How far from unitary: || U U^dag - 1 ||.
+    pub fn unitarity_error(&self) -> f64 {
+        self.mul(&self.adj()).dist(&Su3::IDENTITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_properties() {
+        let id = Su3::IDENTITY;
+        assert_eq!(id.mul(&id), id);
+        assert!((id.det() - Complex::ONE).abs() < 1e-14);
+        assert!((id.trace() - Complex::new(3.0, 0.0)).abs() < 1e-14);
+    }
+
+    #[test]
+    fn random_is_special_unitary() {
+        let mut rng = Rng::seeded(17);
+        for _ in 0..50 {
+            let u = Su3::random(&mut rng);
+            assert!(u.unitarity_error() < 1e-12, "not unitary");
+            assert!((u.det() - Complex::ONE).abs() < 1e-12, "det != 1");
+        }
+    }
+
+    #[test]
+    fn adj_reverses_products() {
+        let mut rng = Rng::seeded(5);
+        let a = Su3::random(&mut rng);
+        let b = Su3::random(&mut rng);
+        assert!(a.mul(&b).adj().dist(&b.adj().mul(&a.adj())) < 1e-12);
+    }
+
+    #[test]
+    fn adj_mul_vec_matches_explicit_adjoint() {
+        let mut rng = Rng::seeded(9);
+        let u = Su3::random(&mut rng);
+        let v = [
+            Complex::new(rng.gaussian(), rng.gaussian()),
+            Complex::new(rng.gaussian(), rng.gaussian()),
+            Complex::new(rng.gaussian(), rng.gaussian()),
+        ];
+        let got = u.adj_mul_vec(&v);
+        let want = u.adj().mul_vec(&v);
+        for c in 0..3 {
+            assert!((got[c] - want[c]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mul_vec_preserves_norm() {
+        let mut rng = Rng::seeded(23);
+        let u = Su3::random(&mut rng);
+        let v = [
+            Complex::new(1.0, 0.5),
+            Complex::new(-2.0, 0.25),
+            Complex::new(0.0, -1.0),
+        ];
+        let w = u.mul_vec(&v);
+        let nv: f64 = v.iter().map(|e| e.norm2()).sum();
+        let nw: f64 = w.iter().map(|e| e.norm2()).sum();
+        assert!((nv - nw).abs() < 1e-12);
+    }
+}

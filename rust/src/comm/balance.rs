@@ -1,0 +1,134 @@
+//! Static load balancing for the EO2 unpack loop — the paper's proposed
+//! future work (§4.1): "the number of operations on each boundary lattice
+//! site can be statically evaluated in advance. In the future version, we
+//! plan to improve the load balance of the EO2 kernel based on this
+//! empirical information."
+//!
+//! [`balanced_chunks`] partitions the flat site range into `n` contiguous
+//! chunks of (approximately) equal *cost* using the per-site operation
+//! count from [`super::unpack::site_cost`], instead of equal site count.
+
+use super::halo::HaloPlans;
+use super::unpack::site_cost;
+
+/// Equal-count partition (the paper's current scheme; imbalanced in EO2).
+pub fn uniform_chunks(nsites: usize, nthreads: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(nthreads);
+    let base = nsites / nthreads;
+    let rem = nsites % nthreads;
+    let mut begin = 0;
+    for tid in 0..nthreads {
+        let len = base + usize::from(tid < rem);
+        out.push((begin, begin + len));
+        begin += len;
+    }
+    out
+}
+
+/// Cost-weighted partition of the EO2 site loop: contiguous chunks whose
+/// per-chunk cost is as even as the site granularity allows.
+pub fn balanced_chunks(plans: &HaloPlans, nthreads: usize) -> Vec<(usize, usize)> {
+    let nsites = plans.nsites;
+    let costs: Vec<u64> = (0..nsites).map(|f| site_cost(plans, f)).collect();
+    let total: u64 = costs.iter().sum();
+    if total == 0 {
+        return uniform_chunks(nsites, nthreads);
+    }
+    let mut out = Vec::with_capacity(nthreads);
+    let mut begin = 0usize;
+    let mut acc = 0u64;
+    let mut consumed = 0u64;
+    for tid in 0..nthreads {
+        // remaining cost spread over remaining threads
+        let want = (total - consumed) / (nthreads - tid) as u64;
+        let mut end = begin;
+        if tid == nthreads - 1 {
+            end = nsites;
+            acc = total - consumed;
+        } else {
+            while end < nsites && (acc < want || end == begin) {
+                acc += costs[end];
+                end += 1;
+            }
+        }
+        out.push((begin, end));
+        consumed += acc;
+        begin = end;
+        acc = 0;
+    }
+    out
+}
+
+/// Cost of a chunk under the plan (for tests and the Fig. 9 harness).
+pub fn chunk_cost(plans: &HaloPlans, chunk: (usize, usize)) -> u64 {
+    (chunk.0..chunk.1).map(|f| site_cost(plans, f)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{Geometry, LatticeDims, Parity, Tiling};
+
+    fn plans() -> HaloPlans {
+        let geom = Geometry::single_rank(
+            LatticeDims::new(8, 8, 4, 8).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap();
+        HaloPlans::new(&geom, Parity::Odd, [true; 4])
+    }
+
+    #[test]
+    fn uniform_covers_range() {
+        let chunks = uniform_chunks(103, 12);
+        assert_eq!(chunks.len(), 12);
+        assert_eq!(chunks[0].0, 0);
+        assert_eq!(chunks.last().unwrap().1, 103);
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn balanced_covers_range_and_reduces_imbalance() {
+        let p = plans();
+        let n = 12;
+        let uni = uniform_chunks(p.nsites, n);
+        let bal = balanced_chunks(&p, n);
+        assert_eq!(bal.len(), n);
+        assert_eq!(bal[0].0, 0);
+        assert_eq!(bal.last().unwrap().1, p.nsites);
+        for w in bal.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+        let imbalance = |chunks: &[(usize, usize)]| {
+            let costs: Vec<u64> = chunks.iter().map(|&c| chunk_cost(&p, c)).collect();
+            let max = *costs.iter().max().unwrap() as f64;
+            let mean = costs.iter().sum::<u64>() as f64 / costs.len() as f64;
+            max / mean
+        };
+        let iu = imbalance(&uni);
+        let ib = imbalance(&bal);
+        assert!(
+            iu > 1.5,
+            "uniform split should be visibly imbalanced (got {iu:.2})"
+        );
+        assert!(
+            ib < iu * 0.7,
+            "balanced split must cut the imbalance: {ib:.2} vs {iu:.2}"
+        );
+    }
+
+    #[test]
+    fn balanced_degenerates_gracefully() {
+        // no comm -> zero cost everywhere -> uniform fallback
+        let geom = Geometry::single_rank(
+            LatticeDims::new(4, 4, 4, 4).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap();
+        let p = HaloPlans::new(&geom, Parity::Even, [false; 4]);
+        let chunks = balanced_chunks(&p, 4);
+        assert_eq!(chunks, uniform_chunks(p.nsites, 4));
+    }
+}

@@ -1,0 +1,147 @@
+//! Global <-> per-rank field decomposition.
+//!
+//! Used by the multi-rank driver tests (a distributed hopping must equal
+//! the single-rank periodic operator on the joined field) and by the
+//! examples to set up distributed runs from one global configuration.
+
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{
+    Dir, EvenOdd, Geometry, Parity, SiteCoord,
+};
+
+/// Extract this rank's local fermion field from a global one.
+///
+/// Both fields hold the same parity. Local extents are all even, so the
+/// local parity of a site equals its global parity.
+pub fn extract_fermion(global: &FermionField, _ggeom: &Geometry, lgeom: &Geometry) -> FermionField {
+    let mut local = FermionField::zeros(lgeom);
+    let origin = lgeom.origin();
+    let sites: Vec<SiteCoord> = local.layout.sites().collect();
+    for s in sites {
+        let gs = global_site(lgeom, s, origin);
+        let v = global.site(gs);
+        local.set_site(s, &v);
+    }
+
+    local
+}
+
+/// Insert a rank's local fermion field into the global one.
+pub fn insert_fermion(global: &mut FermionField, local: &FermionField, lgeom: &Geometry) {
+    let origin = lgeom.origin();
+    for s in local.layout.sites().collect::<Vec<_>>() {
+        let gs = global_site(lgeom, s, origin);
+        let v = local.site(s);
+        global.set_site(gs, &v);
+    }
+}
+
+/// Extract this rank's local gauge field from a global one.
+pub fn extract_gauge(global: &GaugeField, lgeom: &Geometry) -> GaugeField {
+    let mut local = GaugeField::unit(lgeom);
+    let origin = lgeom.origin();
+    for p in Parity::BOTH {
+        for s in EoLayoutSites::new(lgeom) {
+            // local compacted site of parity p -> global lexical coords
+            let phi = EvenOdd::row_parity(s.y, s.z, s.t, p);
+            let lx = EvenOdd::lexical_x(s.ix, phi);
+            let gx = origin[0] + lx;
+            let gy = origin[1] + s.y;
+            let gz = origin[2] + s.z;
+            let gt = origin[3] + s.t;
+            for dir in Dir::ALL {
+                let u = global.link_at(dir, gx, gy, gz, gt);
+                local.set_link(dir, p, s, &u);
+            }
+        }
+    }
+    local
+}
+
+/// Convert a local compacted site (of one parity) to the global compacted
+/// site of the same parity.
+fn global_site(_lgeom: &Geometry, s: SiteCoord, origin: [usize; 4]) -> SiteCoord {
+    // the compacted x index shifts by origin_x / 2 (origin_x is even)
+    debug_assert_eq!(origin[0] % 2, 0);
+    SiteCoord {
+        t: origin[3] + s.t,
+        z: origin[2] + s.z,
+        y: origin[1] + s.y,
+        ix: origin[0] / 2 + s.ix,
+    }
+}
+
+/// Iterate local sites (helper; same as layout.sites() but avoids holding
+/// a borrow of a temporary layout).
+struct EoLayoutSites {
+    sites: std::vec::IntoIter<SiteCoord>,
+}
+
+impl EoLayoutSites {
+    fn new(geom: &Geometry) -> Self {
+        let l = crate::lattice::EoLayout::new(geom);
+        EoLayoutSites {
+            sites: l.sites().collect::<Vec<_>>().into_iter(),
+        }
+    }
+}
+
+impl Iterator for EoLayoutSites {
+    type Item = SiteCoord;
+    fn next(&mut self) -> Option<SiteCoord> {
+        self.sites.next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{LatticeDims, ProcGrid, Tiling};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fermion_split_join_roundtrip() {
+        let global_dims = LatticeDims::new(8, 4, 4, 8).unwrap();
+        let tiling = Tiling::new(2, 2).unwrap();
+        let ggeom = Geometry::single_rank(global_dims, tiling).unwrap();
+        let grid = ProcGrid([1, 1, 2, 2]);
+        let mut rng = Rng::seeded(3);
+        let global = FermionField::gaussian(&ggeom, &mut rng);
+
+        let mut rebuilt = FermionField::zeros(&ggeom);
+        for rank in 0..grid.size() {
+            let lgeom = Geometry::for_rank(global_dims, grid, rank, tiling).unwrap();
+            let local = extract_fermion(&global, &ggeom, &lgeom);
+            insert_fermion(&mut rebuilt, &local, &lgeom);
+        }
+        assert_eq!(global.data, rebuilt.data);
+    }
+
+    #[test]
+    fn gauge_extraction_preserves_links() {
+        let global_dims = LatticeDims::new(8, 4, 4, 4).unwrap();
+        let tiling = Tiling::new(2, 2).unwrap();
+        let ggeom = Geometry::single_rank(global_dims, tiling).unwrap();
+        let grid = ProcGrid([2, 1, 1, 2]);
+        let mut rng = Rng::seeded(4);
+        let global = GaugeField::random(&ggeom, &mut rng);
+
+        for rank in 0..grid.size() {
+            let lgeom = Geometry::for_rank(global_dims, grid, rank, tiling).unwrap();
+            let local = extract_gauge(&global, &lgeom);
+            let origin = lgeom.origin();
+            // spot-check a few local lexical coordinates
+            for (x, y, z, t) in [(0, 0, 0, 0), (3, 1, 2, 1), (2, 3, 3, 0)] {
+                let want = global.link_at(
+                    Dir::Y,
+                    origin[0] + x,
+                    origin[1] + y,
+                    origin[2] + z,
+                    origin[3] + t,
+                );
+                let got = local.link_at(Dir::Y, x, y, z, t);
+                assert!(got.dist(&want) < 1e-12, "rank {rank} site ({x},{y},{z},{t})");
+            }
+        }
+    }
+}

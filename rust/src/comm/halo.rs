@@ -1,0 +1,313 @@
+//! Halo-exchange plans for the even-odd hopping (paper §3.5).
+//!
+//! The exchange sends *projected half-spinors* (12 f32/site), halving the
+//! traffic vs full spinors, with the QWS/QXS division of labor:
+//!
+//! * **upward export** (to the +d neighbor): the receiver's backward hop
+//!   `(1 + g_d) U_d^dag(x-d) psi(x-d)` needs `U^dag * proj+`, and the
+//!   *sender* applies the 3x3 link multiplication (EO1 does the U-mult
+//!   for data exported upward);
+//! * **downward export** (to the -d neighbor): the receiver's forward hop
+//!   `(1 - g_d) U_d(x) psi(x+d)` needs only `proj-`; the *receiver*
+//!   multiplies its local link (EO2 does the U-mult for data imported
+//!   from upward).
+//!
+//! The x-face site sets are irregular in the compacted layout: only the
+//! rows whose row parity places a site on the face participate (Fig. 7:
+//! "two of the sixteen elements need to be sent"). The site lists below
+//! are exactly the index vectors the `compact`/`tbl` instructions consume
+//! on A64FX.
+//!
+//! Buffer ordering contract: every rank enumerates face sites in the
+//! canonical (t, z, y, ix) order, and for the x-direction the sender and
+//! receiver rows pair up because `phi_in = 1 - phi_out` on matching rows.
+//! All ranks share the same local dims, so sender position k lands at
+//! receiver position k.
+
+use crate::lattice::{EoLayout, EvenOdd, Geometry, Parity, SiteCoord};
+
+/// Number of f32 per packed site: 2 spin x 3 color x (re, im).
+pub const HALF_SPINOR_F32: usize = 12;
+
+/// Sentinel for "site not on this face".
+pub const NOT_ON_FACE: u32 = u32::MAX;
+
+/// Flat canonical index of a compacted site (t, z, y, ix order).
+#[inline]
+pub fn flat_site(l: &EoLayout, s: SiteCoord) -> usize {
+    let ny = l.nyt * l.tiling.vy();
+    let nxh = l.nxt * l.tiling.vx();
+    ((s.t * l.nz + s.z) * ny + s.y) * nxh + s.ix
+}
+
+/// Inverse of [`flat_site`].
+#[inline]
+pub fn site_from_flat(l: &EoLayout, flat: usize) -> SiteCoord {
+    let ny = l.nyt * l.tiling.vy();
+    let nxh = l.nxt * l.tiling.vx();
+    let ix = flat % nxh;
+    let r = flat / nxh;
+    let y = r % ny;
+    let r = r / ny;
+    let z = r % l.nz;
+    let t = r / l.nz;
+    SiteCoord { t, z, y, ix }
+}
+
+/// Halo plans of one rank for one output parity.
+#[derive(Clone, Debug)]
+pub struct HaloPlans {
+    pub p_out: Parity,
+    /// which directions exchange halos (grid > 1 or forced self-comm)
+    pub comm: [bool; 4],
+    /// EO1 upward-export source sites (parity p_in, high face of d);
+    /// packed as U^dag * proj+.
+    pub up_export: [Vec<SiteCoord>; 4],
+    /// EO1 downward-export source sites (parity p_in, low face of d);
+    /// packed as proj- only.
+    pub down_export: [Vec<SiteCoord>; 4],
+    /// EO2: flat output-site index -> position in the buffer imported from
+    /// the +d neighbor (output site on the high face; needs local U-mult).
+    pub up_import_pos: [Vec<u32>; 4],
+    /// EO2: flat output-site index -> position in the buffer imported from
+    /// the -d neighbor (output site on the low face; pre-multiplied).
+    pub down_import_pos: [Vec<u32>; 4],
+    /// number of sites in each direction's face buffer
+    pub face_count: [usize; 4],
+    pub nsites: usize,
+}
+
+impl HaloPlans {
+    pub fn new(geom: &Geometry, p_out: Parity, comm: [bool; 4]) -> HaloPlans {
+        let l = EoLayout::new(geom);
+        let d = geom.local;
+        let p_in = p_out.flip();
+        let (ny, nxh) = (d.y, d.xh());
+        let nsites = d.half_volume();
+
+        let mut plans = HaloPlans {
+            p_out,
+            comm,
+            up_export: Default::default(),
+            down_export: Default::default(),
+            up_import_pos: std::array::from_fn(|_| Vec::new()),
+            down_import_pos: std::array::from_fn(|_| Vec::new()),
+            face_count: [0; 4],
+            nsites,
+        };
+
+        for dir in 0..4 {
+            if !comm[dir] {
+                continue;
+            }
+            plans.up_import_pos[dir] = vec![NOT_ON_FACE; nsites];
+            plans.down_import_pos[dir] = vec![NOT_ON_FACE; nsites];
+
+            if dir == 0 {
+                // ---- x faces: one site per qualifying row -------------
+                let (mut cnt_up_exp, mut cnt_dn_exp) = (0u32, 0u32);
+                for t in 0..d.t {
+                    for z in 0..d.z {
+                        for y in 0..ny {
+                            let phi_in = EvenOdd::row_parity(y, z, t, p_in);
+                            if phi_in == 1 {
+                                // source x = 2*(XH-1)+1 = NX-1: high face
+                                plans.up_export[0].push(SiteCoord {
+                                    t,
+                                    z,
+                                    y,
+                                    ix: nxh - 1,
+                                });
+                                // same row on the receive side: phi_out = 0,
+                                // output site x = 0 imports from downward
+                                let s = SiteCoord { t, z, y, ix: 0 };
+                                plans.down_import_pos[0][flat_site(&l, s)] =
+                                    cnt_up_exp;
+                                cnt_up_exp += 1;
+                            } else {
+                                // source x = 0: low face
+                                plans.down_export[0].push(SiteCoord {
+                                    t,
+                                    z,
+                                    y,
+                                    ix: 0,
+                                });
+                                // phi_out = 1: output site x = NX-1 imports
+                                // from upward
+                                let s = SiteCoord {
+                                    t,
+                                    z,
+                                    y,
+                                    ix: nxh - 1,
+                                };
+                                plans.up_import_pos[0][flat_site(&l, s)] =
+                                    cnt_dn_exp;
+                                cnt_dn_exp += 1;
+                            }
+                        }
+                    }
+                }
+                assert_eq!(
+                    cnt_up_exp, cnt_dn_exp,
+                    "x faces must split rows evenly (even row count)"
+                );
+                plans.face_count[0] = cnt_up_exp as usize;
+            } else {
+                // ---- y/z/t faces: full 3D slabs -----------------------
+                // Separate dense counters per face: a receiver's hi-face
+                // site at (coords with the d-coordinate dropped) pairs
+                // with the sender's lo-face site at the same dropped
+                // coordinates; both sides enumerate in (t, z, y, ix)
+                // order, so position = dense index in face order.
+                for t in 0..d.t {
+                    for z in 0..d.z {
+                        for y in 0..ny {
+                            let on_hi = match dir {
+                                1 => y == d.y - 1,
+                                2 => z == d.z - 1,
+                                _ => t == d.t - 1,
+                            };
+                            let on_lo = match dir {
+                                1 => y == 0,
+                                2 => z == 0,
+                                _ => t == 0,
+                            };
+                            if !(on_hi || on_lo) {
+                                continue;
+                            }
+                            for ix in 0..nxh {
+                                let s = SiteCoord { t, z, y, ix };
+                                if on_hi {
+                                    plans.up_export[dir].push(s);
+                                    // hi-face output sites import from the
+                                    // +d neighbor (its lo face, same dense
+                                    // order)
+                                    plans.up_import_pos[dir][flat_site(&l, s)] =
+                                        (plans.up_export[dir].len() - 1) as u32;
+                                }
+                                if on_lo {
+                                    plans.down_export[dir].push(s);
+                                    // lo-face output sites import from the
+                                    // -d neighbor (its hi face)
+                                    plans.down_import_pos[dir][flat_site(&l, s)] =
+                                        (plans.down_export[dir].len() - 1) as u32;
+                                }
+                            }
+                        }
+                    }
+                }
+                plans.face_count[dir] = plans.up_export[dir].len();
+                assert_eq!(
+                    plans.up_export[dir].len(),
+                    plans.down_export[dir].len()
+                );
+            }
+        }
+        plans
+    }
+
+    /// f32 length of one face buffer in direction `dir`.
+    pub fn buffer_len(&self, dir: usize) -> usize {
+        self.face_count[dir] * HALF_SPINOR_F32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{Geometry, LatticeDims, Tiling};
+
+    fn geom() -> Geometry {
+        Geometry::single_rank(
+            LatticeDims::new(8, 4, 4, 6).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flat_site_roundtrip() {
+        let g = geom();
+        let l = EoLayout::new(&g);
+        for (i, s) in l.sites().enumerate() {
+            assert_eq!(flat_site(&l, s), i, "canonical order is flat order");
+            assert_eq!(site_from_flat(&l, i), s);
+        }
+    }
+
+    #[test]
+    fn face_counts() {
+        let g = geom();
+        let d = g.local;
+        for p in Parity::BOTH {
+            let plans = HaloPlans::new(&g, p, [true; 4]);
+            // x face: half the rows
+            assert_eq!(plans.face_count[0], d.y * d.z * d.t / 2);
+            // y/z/t faces: full slabs of the compacted lattice
+            assert_eq!(plans.face_count[1], d.xh() * d.z * d.t);
+            assert_eq!(plans.face_count[2], d.xh() * d.y * d.t);
+            assert_eq!(plans.face_count[3], d.xh() * d.y * d.z);
+        }
+    }
+
+    #[test]
+    fn fig7_two_of_sixteen() {
+        // 4x4 tiling: a 4x4-site tile row block has 4 lane rows, of which
+        // 2 have the face site -> 2 of 16 lanes per vector are sent.
+        let g = Geometry::single_rank(
+            LatticeDims::new(16, 16, 4, 4).unwrap(),
+            Tiling::new(4, 4).unwrap(),
+        )
+        .unwrap();
+        let plans = HaloPlans::new(&g, Parity::Odd, [true; 4]);
+        // per x-edge tile: vy = 4 lane rows, half qualify -> 2 of the 16
+        // lanes of each boundary vector are sent, as in Fig. 7
+        let edge_tiles = (16 / 4) * 4 * 4; // (NY/VLENY) * NZ * NT
+        assert_eq!(plans.face_count[0] / edge_tiles, 2);
+    }
+
+    #[test]
+    fn import_positions_cover_buffer_exactly() {
+        let g = geom();
+        let plans = HaloPlans::new(&g, Parity::Even, [true; 4]);
+        for dir in 0..4 {
+            for pos_map in [&plans.up_import_pos[dir], &plans.down_import_pos[dir]] {
+                let mut seen = vec![false; plans.face_count[dir]];
+                for &p in pos_map.iter().filter(|&&p| p != NOT_ON_FACE) {
+                    assert!(!seen[p as usize], "duplicate buffer position");
+                    seen[p as usize] = true;
+                }
+                assert!(seen.iter().all(|&b| b), "buffer hole in dir {dir}");
+            }
+        }
+    }
+
+    #[test]
+    fn export_sites_have_source_parity_face_coords() {
+        let g = geom();
+        let d = g.local;
+        let p_out = Parity::Odd;
+        let plans = HaloPlans::new(&g, p_out, [true; 4]);
+        // x: upward-export sites must sit at lexical x = NX-1 for p_in
+        for s in &plans.up_export[0] {
+            let phi = EvenOdd::row_parity(s.y, s.z, s.t, p_out.flip());
+            assert_eq!(EvenOdd::lexical_x(s.ix, phi), d.x - 1);
+        }
+        for s in &plans.down_export[0] {
+            let phi = EvenOdd::row_parity(s.y, s.z, s.t, p_out.flip());
+            assert_eq!(EvenOdd::lexical_x(s.ix, phi), 0);
+        }
+        // t: slabs
+        assert!(plans.up_export[3].iter().all(|s| s.t == d.t - 1));
+        assert!(plans.down_export[3].iter().all(|s| s.t == 0));
+    }
+
+    #[test]
+    fn disabled_directions_empty() {
+        let g = geom();
+        let plans = HaloPlans::new(&g, Parity::Even, [false, false, true, false]);
+        assert!(plans.up_export[0].is_empty());
+        assert!(plans.up_import_pos[0].is_empty());
+        assert_eq!(plans.face_count[2], g.local.xh() * g.local.y * g.local.t);
+    }
+}

@@ -1,0 +1,15 @@
+//! Communication layer: simulated-MPI rank world, halo-exchange plans and
+//! kernels (EO1 pack / EO2 unpack), load balancing, field decomposition,
+//! and the TofuD network model for weak-scaling projection.
+
+pub mod balance;
+pub mod decompose;
+pub mod halo;
+pub mod netmodel;
+pub mod pack;
+pub mod unpack;
+pub mod world;
+
+pub use halo::HaloPlans;
+pub use unpack::RecvBuffers;
+pub use world::{run_world, Comm};

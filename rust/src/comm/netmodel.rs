@@ -1,0 +1,208 @@
+//! TofuD network model + discrete-event weak-scaling simulator.
+//!
+//! Fugaku's Tofu interconnect D gives each node 28 Gbps x 2 lanes x 10
+//! ports (paper §3.1); per neighbor link the effective payload bandwidth
+//! is ~6.8 GB/s, with ~1 us put latency. The paper's rank maps guarantee
+//! every halo exchange is nearest-neighbor (within the node between CMGs,
+//! or one hop on the 6D mesh-torus), so per-node communication cost is
+//! *independent of the node count* — that is why Fig. 10 is flat.
+//!
+//! This module projects measured single-node kernel times onto a
+//! multi-node machine: a discrete-event simulation where each rank's
+//! dslash is (EO1 -> post sends) || bulk -> wait(halos) -> EO2, with wire
+//! times from this model. The *compute* times are real measurements from
+//! the native kernels on this host; only the wire is modeled.
+
+/// TofuD-like link parameters (per neighbor exchange).
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    /// effective point-to-point payload bandwidth (bytes/s)
+    pub bandwidth: f64,
+    /// one-way latency (s)
+    pub latency: f64,
+    /// intra-node (CMG-to-CMG) bandwidth for same-node neighbors (bytes/s)
+    pub intra_bandwidth: f64,
+    pub intra_latency: f64,
+}
+
+impl NetModel {
+    /// TofuD injection: 6.8 GB/s per port, ~1 us latency; intra-node
+    /// CMG-to-CMG via the ring bus, ~115 GB/s class, ~0.2 us.
+    pub fn tofu_d() -> NetModel {
+        NetModel {
+            bandwidth: 6.8e9,
+            latency: 1.0e-6,
+            intra_bandwidth: 115.0e9,
+            intra_latency: 0.2e-6,
+        }
+    }
+
+    /// Wire time of one message of `bytes`, intra- or inter-node.
+    pub fn transfer_time(&self, bytes: usize, intra_node: bool) -> f64 {
+        if intra_node {
+            self.intra_latency + bytes as f64 / self.intra_bandwidth
+        } else {
+            self.latency + bytes as f64 / self.bandwidth
+        }
+    }
+}
+
+/// Per-rank measured compute times feeding the simulation (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct RankCompute {
+    pub eo1: f64,
+    pub bulk: f64,
+    pub eo2: f64,
+}
+
+/// Message sizes of one hopping application (bytes per direction).
+#[derive(Clone, Copy, Debug)]
+pub struct HaloBytes {
+    pub per_dir: [usize; 4],
+    /// is the neighbor in this direction on the same node?
+    pub intra: [bool; 4],
+}
+
+/// Simulated wall-clock of one distributed hopping application under the
+/// model: every rank runs EO1, posts both sends per direction, overlaps
+/// bulk with the wire, then waits for the slowest halo and runs EO2.
+///
+/// All ranks are identical by symmetry of the decomposition, so the
+/// simulation is per-rank with neighbor times equal to own times (SPMD
+/// steady state) — the paper's setup (uniform local volume, neighbor-only
+/// rank maps) satisfies this exactly.
+pub fn hopping_wallclock(c: RankCompute, h: HaloBytes, net: &NetModel) -> f64 {
+    // sends are posted after EO1; the wire runs concurrently with bulk
+    let mut slowest_arrival: f64 = 0.0;
+    for dir in 0..4 {
+        if h.per_dir[dir] == 0 {
+            continue;
+        }
+        // both orientations, posted back-to-back after EO1
+        let wire = net.transfer_time(h.per_dir[dir], h.intra[dir]);
+        slowest_arrival = slowest_arrival.max(c.eo1 + wire);
+    }
+    let halos_ready = slowest_arrival;
+    let bulk_done = c.eo1 + c.bulk;
+    bulk_done.max(halos_ready) + c.eo2
+}
+
+/// Weak-scaling projection: per-node sustained GFlops vs node count.
+///
+/// `flops_per_rank` is the flop count of one hopping application on one
+/// rank. With neighbor-only communication the simulated wallclock is
+/// node-count independent; node counts only enter through which neighbors
+/// stay intra-node (the 4-ranks-per-node [2,2,1,1] CMG placement keeps x/y
+/// neighbors on-node for single-node runs, and off-node otherwise).
+pub fn weak_scaling_gflops_per_node(
+    nodes: &[usize],
+    ranks_per_node: usize,
+    c: RankCompute,
+    bytes_per_dir: [usize; 4],
+    flops_per_rank: u64,
+    net: &NetModel,
+) -> Vec<(usize, f64)> {
+    nodes
+        .iter()
+        .map(|&n| {
+            // single node: all neighbors intra; multi-node: the directions
+            // split across nodes go off-node. The paper's rank maps place
+            // 4 ranks/node as a [1,1,2,2] block: z/t neighbors on-node
+            // until the grid grows past the node, x/y depend on the global
+            // grid. Conservatively: on one node everything is intra; on
+            // many nodes z/t stay intra (CMG pairs) and x/y go inter.
+            let intra = if n == 1 {
+                [true; 4]
+            } else {
+                [false, false, true, true]
+            };
+            let wall = hopping_wallclock(
+                c,
+                HaloBytes {
+                    per_dir: bytes_per_dir,
+                    intra,
+                },
+                net,
+            );
+            let gflops_rank = flops_per_rank as f64 / wall / 1e9;
+            (n, gflops_rank * ranks_per_node as f64)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_monotone_in_size() {
+        let net = NetModel::tofu_d();
+        assert!(net.transfer_time(1 << 20, false) > net.transfer_time(1 << 10, false));
+        assert!(net.transfer_time(1 << 20, true) < net.transfer_time(1 << 20, false));
+    }
+
+    #[test]
+    fn overlap_hides_fast_wire() {
+        let net = NetModel::tofu_d();
+        let c = RankCompute {
+            eo1: 10e-6,
+            bulk: 100e-6,
+            eo2: 20e-6,
+        };
+        let h = HaloBytes {
+            per_dir: [1000, 1000, 1000, 1000],
+            intra: [false; 4],
+        };
+        // wire (~1.1 us) finishes well inside the 100 us bulk
+        let wall = hopping_wallclock(c, h, &net);
+        assert!((wall - (10e-6 + 100e-6 + 20e-6)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slow_wire_exposes_wait() {
+        let net = NetModel {
+            bandwidth: 1e6, // pathologically slow
+            latency: 1e-3,
+            intra_bandwidth: 1e6,
+            intra_latency: 1e-3,
+        };
+        let c = RankCompute {
+            eo1: 10e-6,
+            bulk: 100e-6,
+            eo2: 20e-6,
+        };
+        let h = HaloBytes {
+            per_dir: [100_000, 0, 0, 0],
+            intra: [false; 4],
+        };
+        let wall = hopping_wallclock(c, h, &net);
+        assert!(wall > 0.1, "wire-bound case must dominate ({wall})");
+    }
+
+    #[test]
+    fn weak_scaling_is_flat_for_neighbor_comm() {
+        let net = NetModel::tofu_d();
+        let c = RankCompute {
+            eo1: 10e-6,
+            bulk: 150e-6,
+            eo2: 25e-6,
+        };
+        let series = weak_scaling_gflops_per_node(
+            &[1, 2, 8, 64, 512],
+            4,
+            c,
+            [50_000, 50_000, 80_000, 80_000],
+            1368 * 8192,
+            &net,
+        );
+        let first = series[1].1; // multi-node baseline
+        for &(n, g) in &series[1..] {
+            assert!(
+                (g - first).abs() / first < 1e-9,
+                "per-node perf must be n-independent beyond 1 node (n={n})"
+            );
+        }
+        // single node (all intra) is at least as fast
+        assert!(series[0].1 >= first);
+    }
+}

@@ -1,0 +1,178 @@
+//! EO1: pack the send buffers (paper §3.5-3.6, Fig. 7 top, Fig. 9 top).
+//!
+//! Each direction's boundary loop runs independently and is *averagely*
+//! parallelized over the threads (ranges of the face-site lists), which is
+//! why EO1's thread load is well balanced in Fig. 9. Upward exports carry
+//! the `U^dag * proj+` product (the sender does the 3x3 multiply);
+//! downward exports carry only `proj-`.
+//!
+//! The per-site write of 12 consecutive f32 from lanes selected by the
+//! site list is the software analog of the SVE `compact` instruction.
+
+use crate::algebra::PROJ;
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{Dir, SiteCoord};
+
+use super::halo::{HaloPlans, HALF_SPINOR_F32};
+
+/// Pack a range of the upward-export list of direction `dir` into `buf`.
+///
+/// Content per site: `U_dir^dag(x) * proj+_dir(psi(x))`, 12 f32.
+pub fn pack_up_range(
+    buf: &mut [f32],
+    plans: &HaloPlans,
+    dir: usize,
+    u: &GaugeField,
+    psi: &FermionField,
+    begin: usize,
+    end: usize,
+) {
+    let p_in = plans.p_out.flip();
+    let entry = &PROJ[dir][1];
+    for i in begin..end {
+        let s: SiteCoord = plans.up_export[dir][i];
+        let h = entry.project(&psi.site(s));
+        let w = h.link_adj_mul(&u.link(Dir::from_index(dir), p_in, s));
+        write_half(&mut buf[i * HALF_SPINOR_F32..(i + 1) * HALF_SPINOR_F32], &w);
+    }
+}
+
+/// Pack a range of the downward-export list of direction `dir` into `buf`.
+///
+/// Content per site: `proj-_dir(psi(x))`, 12 f32 (no U-mult; the receiver
+/// multiplies its local link).
+pub fn pack_down_range(
+    buf: &mut [f32],
+    plans: &HaloPlans,
+    dir: usize,
+    psi: &FermionField,
+    begin: usize,
+    end: usize,
+) {
+    let entry = &PROJ[dir][0];
+    for i in begin..end {
+        let s: SiteCoord = plans.down_export[dir][i];
+        let h = entry.project(&psi.site(s));
+        write_half(&mut buf[i * HALF_SPINOR_F32..(i + 1) * HALF_SPINOR_F32], &h);
+    }
+}
+
+#[inline]
+fn write_half(dst: &mut [f32], h: &crate::algebra::HalfSpinor) {
+    let mut k = 0;
+    for s in 0..2 {
+        for c in 0..3 {
+            dst[k] = h.h[s][c].re as f32;
+            dst[k + 1] = h.h[s][c].im as f32;
+            k += 2;
+        }
+    }
+}
+
+/// Alias used by the driver.
+pub const HALF_F32: usize = HALF_SPINOR_F32;
+
+/// Like [`pack_up_range`] but `buf` starts at site `begin` (relative
+/// addressing, for per-thread buffer sub-slices).
+pub fn pack_up_range_rel(
+    buf: &mut [f32],
+    plans: &HaloPlans,
+    dir: usize,
+    u: &GaugeField,
+    psi: &FermionField,
+    begin: usize,
+    end: usize,
+) {
+    let p_in = plans.p_out.flip();
+    let entry = &PROJ[dir][1];
+    for i in begin..end {
+        let s: SiteCoord = plans.up_export[dir][i];
+        let h = entry.project(&psi.site(s));
+        let w = h.link_adj_mul(&u.link(Dir::from_index(dir), p_in, s));
+        let k = (i - begin) * HALF_SPINOR_F32;
+        write_half(&mut buf[k..k + HALF_SPINOR_F32], &w);
+    }
+}
+
+/// Like [`pack_down_range`] but with relative buffer addressing.
+pub fn pack_down_range_rel(
+    buf: &mut [f32],
+    plans: &HaloPlans,
+    dir: usize,
+    psi: &FermionField,
+    begin: usize,
+    end: usize,
+) {
+    let entry = &PROJ[dir][0];
+    for i in begin..end {
+        let s: SiteCoord = plans.down_export[dir][i];
+        let h = entry.project(&psi.site(s));
+        let k = (i - begin) * HALF_SPINOR_F32;
+        write_half(&mut buf[k..k + HALF_SPINOR_F32], &h);
+    }
+}
+
+/// Read one packed half-spinor back (EO2 side).
+#[inline]
+pub fn read_half(src: &[f32]) -> crate::algebra::HalfSpinor {
+    let mut h = crate::algebra::HalfSpinor::default();
+    let mut k = 0;
+    for s in 0..2 {
+        for c in 0..3 {
+            h.h[s][c] = crate::algebra::Complex::new(src[k] as f64, src[k + 1] as f64);
+            k += 2;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algebra::{Complex, HalfSpinor};
+    use crate::lattice::{Geometry, LatticeDims, Parity, Tiling};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn half_spinor_roundtrip() {
+        let mut rng = Rng::seeded(4);
+        let mut h = HalfSpinor::default();
+        for s in 0..2 {
+            for c in 0..3 {
+                h.h[s][c] = Complex::new(rng.gaussian(), rng.gaussian());
+            }
+        }
+        let mut buf = vec![0.0f32; HALF_SPINOR_F32];
+        write_half(&mut buf, &h);
+        let back = read_half(&buf);
+        for s in 0..2 {
+            for c in 0..3 {
+                assert!((back.h[s][c] - h.h[s][c]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_ranges_compose() {
+        // packing [0, n) in one go == packing [0, k) + [k, n)
+        let geom = Geometry::single_rank(
+            LatticeDims::new(8, 4, 4, 4).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap();
+        let mut rng = Rng::seeded(5);
+        let u = GaugeField::random(&geom, &mut rng);
+        let psi = FermionField::gaussian(&geom, &mut rng);
+        let plans = HaloPlans::new(&geom, Parity::Odd, [true; 4]);
+        for dir in 0..4 {
+            let n = plans.face_count[dir];
+            let mut whole = vec![0.0f32; plans.buffer_len(dir)];
+            pack_up_range(&mut whole, &plans, dir, &u, &psi, 0, n);
+            let mut split = vec![0.0f32; plans.buffer_len(dir)];
+            pack_up_range(&mut split, &plans, dir, &u, &psi, 0, n / 3);
+            pack_up_range(&mut split, &plans, dir, &u, &psi, n / 3, n);
+            assert_eq!(whole, split);
+            assert!(whole.iter().any(|&v| v != 0.0));
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! EO2: merge the received halo data into the output field (paper §3.6,
+//! Fig. 7 bottom, Fig. 9 bottom).
+//!
+//! Faithful to the paper's structure: EO2 is a *single loop over all local
+//! output sites*; each site checks every communicated direction for an
+//! incoming contribution. "The number of boundaries concerning each site
+//! depends on the place of the site on the local lattice", so uniformly
+//! splitting the flat site range over threads is load-imbalanced — sites
+//! owned by the last thread (the high-t slab in canonical order) all
+//! import from the upward t-process and pay the 3x3 U-multiplication.
+//! This is exactly the Fig. 9 imbalance; [`super::balance`] provides the
+//! cost-weighted partition the paper proposes as future work.
+//!
+//! Delivery of buffer entries to lattice lanes through the precomputed
+//! position maps is the software analog of the `tbl` delivery in Fig. 7.
+
+use crate::algebra::{Spinor, PROJ};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{Dir, SiteCoord};
+
+use super::halo::{site_from_flat, HaloPlans, HALF_SPINOR_F32, NOT_ON_FACE};
+use super::pack::read_half;
+
+/// Received buffers for one hopping application, indexed by direction.
+#[derive(Clone, Debug, Default)]
+pub struct RecvBuffers {
+    /// from the +d neighbor (output sites on the high face; needs U-mult)
+    pub from_up: [Vec<f32>; 4],
+    /// from the -d neighbor (pre-multiplied by the sender)
+    pub from_down: [Vec<f32>; 4],
+}
+
+/// EO2 cost of one site (used by the balancer and the profiler):
+/// reconstruction ~24, the U-mult ~144, plus a small constant for the
+/// per-site face scan that every site pays (interior included) — without
+/// it the balancer would hand one thread almost all interior sites.
+pub fn site_cost(plans: &HaloPlans, flat: usize) -> u64 {
+    let mut cost = 3;
+    for dir in 0..4 {
+        if !plans.comm[dir] {
+            continue;
+        }
+        if plans.up_import_pos[dir][flat] != NOT_ON_FACE {
+            cost += 144 + 24; // U-mult + reconstruct
+        }
+        if plans.down_import_pos[dir][flat] != NOT_ON_FACE {
+            cost += 24; // reconstruct only
+        }
+    }
+    cost
+}
+
+/// Process the flat output-site range `[begin, end)`: add every incoming
+/// halo contribution to `out`.
+pub fn eo2_range(
+    out: &mut FermionField,
+    plans: &HaloPlans,
+    bufs: &RecvBuffers,
+    u: &GaugeField,
+    begin: usize,
+    end: usize,
+) {
+    let l = out.layout;
+    let ptr = crate::coordinator::team::SendPtr(out.data.as_mut_ptr());
+    // single-threaded call: trivially disjoint
+    unsafe { eo2_range_raw(ptr, &l, plans, bufs, u, begin, end) }
+}
+
+/// Raw-pointer variant for the thread team: each thread processes a
+/// disjoint flat-site range of the same output buffer.
+///
+/// # Safety
+/// Ranges given to concurrent callers must be disjoint; `out` must point
+/// at a live buffer laid out by `l`.
+pub unsafe fn eo2_range_raw(
+    out: crate::coordinator::team::SendPtr<f32>,
+    l: &crate::lattice::EoLayout,
+    plans: &HaloPlans,
+    bufs: &RecvBuffers,
+    u: &GaugeField,
+    begin: usize,
+    end: usize,
+) {
+    for flat in begin..end {
+        // fast path: most sites are interior
+        let mut touched = false;
+        for dir in 0..4 {
+            if plans.comm[dir]
+                && (plans.up_import_pos[dir][flat] != NOT_ON_FACE
+                    || plans.down_import_pos[dir][flat] != NOT_ON_FACE)
+            {
+                touched = true;
+                break;
+            }
+        }
+        if !touched {
+            continue;
+        }
+        let s: SiteCoord = site_from_flat(l, flat);
+        let mut acc = Spinor::ZERO;
+        for dir in 0..4 {
+            if !plans.comm[dir] {
+                continue;
+            }
+            // import from the +d neighbor: forward hop at the high face;
+            // multiply the local link U_d(x) then reconstruct with (1 - g)
+            let pos = plans.up_import_pos[dir][flat];
+            if pos != NOT_ON_FACE {
+                let off = pos as usize * HALF_SPINOR_F32;
+                let h = read_half(&bufs.from_up[dir][off..off + HALF_SPINOR_F32]);
+                let w = h.link_mul(&u.link(Dir::from_index(dir), plans.p_out, s));
+                PROJ[dir][0].reconstruct_accum(&mut acc, &w);
+            }
+            // import from the -d neighbor: backward hop at the low face;
+            // the sender already multiplied U^dag, just reconstruct (1 + g)
+            let pos = plans.down_import_pos[dir][flat];
+            if pos != NOT_ON_FACE {
+                let off = pos as usize * HALF_SPINOR_F32;
+                let w = read_half(&bufs.from_down[dir][off..off + HALF_SPINOR_F32]);
+                PROJ[dir][1].reconstruct_accum(&mut acc, &w);
+            }
+        }
+        // accumulate into the output storage (read-modify-write through
+        // the raw pointer; sites in [begin, end) are storage-disjoint)
+        let lc = l.site_to_lane(s);
+        for spin in 0..4 {
+            for color in 0..3 {
+                let ro = l.spinor_vec(lc.tile, spin, color, 0) + lc.lane;
+                let io = l.spinor_vec(lc.tile, spin, color, 1) + lc.lane;
+                *out.0.add(ro) += acc.s[spin][color].re as f32;
+                *out.0.add(io) += acc.s[spin][color].im as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{Geometry, LatticeDims, Parity, Tiling};
+
+    #[test]
+    fn site_cost_zero_in_interior_and_positive_on_faces() {
+        let geom = Geometry::single_rank(
+            LatticeDims::new(8, 4, 4, 4).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap();
+        let plans = HaloPlans::new(&geom, Parity::Odd, [true; 4]);
+        let l = crate::lattice::EoLayout::new(&geom);
+        let mut interior = 0;
+        let mut corner_cost = 0;
+        for flat in 0..plans.nsites {
+            let c = site_cost(&plans, flat);
+            let s = site_from_flat(&l, flat);
+            let on_t_face = s.t == 0 || s.t == 3;
+            if !on_t_face && s.z != 0 && s.z != 3 && s.y != 0 && s.y != 3 {
+                // may still be on the x face; just track interior count
+            }
+            if c == 3 {
+                // base scan cost only: no face contributions
+                interior += 1;
+            }
+            corner_cost = corner_cost.max(c);
+        }
+        assert!(interior > 0, "some sites must be pure bulk");
+        assert!(site_cost(&plans, 0) > 3, "flat 0 is the origin corner");
+        // a site on several faces pays several contributions
+        assert!(corner_cost >= 2 * (144 + 24) || corner_cost >= 144 + 24 + 24);
+    }
+}

@@ -1,0 +1,202 @@
+//! Simulated MPI: an in-process rank world.
+//!
+//! Each rank is an OS thread; point-to-point messages travel over
+//! channels. The API mirrors the MPI subset the paper's code needs:
+//! tagged send/recv, barrier, and an all-reduce (for solver dot
+//! products). Communication is FUNNELED as on Fugaku (§3.6): only the
+//! rank's master thread calls these functions.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// A tagged message.
+struct Msg {
+    from: usize,
+    tag: u64,
+    payload: Vec<f32>,
+}
+
+/// Per-rank communicator handle.
+pub struct Comm {
+    pub rank: usize,
+    pub nranks: usize,
+    senders: Vec<Sender<Msg>>,
+    inbox: Receiver<Msg>,
+    /// messages that arrived while waiting for a different (from, tag)
+    pending: HashMap<(usize, u64), Vec<Vec<f32>>>,
+    barrier: Arc<Barrier>,
+    reduce_slots: Arc<Mutex<Vec<f64>>>,
+    reduce_barrier: Arc<Barrier>,
+}
+
+impl Comm {
+    /// Non-blocking send (buffered by the channel).
+    pub fn send(&self, to: usize, tag: u64, payload: Vec<f32>) {
+        self.senders[to]
+            .send(Msg {
+                from: self.rank,
+                tag,
+                payload,
+            })
+            .expect("rank channel closed");
+    }
+
+    /// Blocking receive matching (from, tag).
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+        if let Some(queue) = self.pending.get_mut(&(from, tag)) {
+            if !queue.is_empty() {
+                return queue.remove(0);
+            }
+        }
+        loop {
+            let msg = self.inbox.recv().expect("rank channel closed");
+            if msg.from == from && msg.tag == tag {
+                return msg.payload;
+            }
+            self.pending
+                .entry((msg.from, msg.tag))
+                .or_default()
+                .push(msg.payload);
+        }
+    }
+
+    /// Barrier over all ranks.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// Sum a scalar across all ranks (two-phase with shared slots).
+    pub fn allreduce_sum(&self, value: f64) -> f64 {
+        {
+            let mut slots = self.reduce_slots.lock().unwrap();
+            slots[self.rank] = value;
+        }
+        self.reduce_barrier.wait();
+        let total: f64 = self.reduce_slots.lock().unwrap().iter().sum();
+        // second barrier so no rank overwrites its slot for the next call
+        // before everyone has read
+        self.reduce_barrier.wait();
+        total
+    }
+}
+
+/// Run `f(rank, comm)` on `nranks` threads; returns the per-rank results
+/// in rank order.
+pub fn run_world<T, F>(nranks: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut Comm) -> T + Sync,
+{
+    assert!(nranks > 0);
+    let mut senders = Vec::with_capacity(nranks);
+    let mut inboxes = Vec::with_capacity(nranks);
+    for _ in 0..nranks {
+        let (tx, rx) = channel();
+        senders.push(tx);
+        inboxes.push(rx);
+    }
+    let barrier = Arc::new(Barrier::new(nranks));
+    let reduce_slots = Arc::new(Mutex::new(vec![0.0f64; nranks]));
+    let reduce_barrier = Arc::new(Barrier::new(nranks));
+
+    let mut comms: Vec<Comm> = inboxes
+        .into_iter()
+        .enumerate()
+        .map(|(rank, inbox)| Comm {
+            rank,
+            nranks,
+            senders: senders.clone(),
+            inbox,
+            pending: HashMap::new(),
+            barrier: Arc::clone(&barrier),
+            reduce_slots: Arc::clone(&reduce_slots),
+            reduce_barrier: Arc::clone(&reduce_barrier),
+        })
+        .collect();
+    // drop the original senders so channels close when the world ends
+    drop(senders);
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(nranks);
+        for (rank, mut comm) in comms.drain(..).enumerate() {
+            let f = &f;
+            handles.push(scope.spawn(move || f(rank, &mut comm)));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rank thread panicked"))
+            .collect()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pass() {
+        let results = run_world(4, |rank, comm| {
+            let next = (rank + 1) % 4;
+            let prev = (rank + 3) % 4;
+            comm.send(next, 7, vec![rank as f32]);
+            let got = comm.recv(prev, 7);
+            got[0] as usize
+        });
+        assert_eq!(results, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn tags_disambiguate() {
+        let results = run_world(2, |rank, comm| {
+            let other = 1 - rank;
+            comm.send(other, 1, vec![10.0 + rank as f32]);
+            comm.send(other, 2, vec![20.0 + rank as f32]);
+            // receive in the opposite order to exercise the pending queue
+            let b = comm.recv(other, 2);
+            let a = comm.recv(other, 1);
+            (a[0], b[0])
+        });
+        assert_eq!(results[0], (11.0, 21.0));
+        assert_eq!(results[1], (10.0, 20.0));
+    }
+
+    #[test]
+    fn self_send() {
+        // the paper enforces communication with the self process
+        let results = run_world(1, |_, comm| {
+            comm.send(0, 3, vec![1.0, 2.0]);
+            comm.recv(0, 3)
+        });
+        assert_eq!(results[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn allreduce() {
+        let results = run_world(3, |rank, comm| {
+            let a = comm.allreduce_sum(rank as f64 + 1.0);
+            let b = comm.allreduce_sum(rank as f64 * 10.0);
+            (a, b)
+        });
+        for (a, b) in results {
+            assert_eq!(a, 6.0);
+            assert_eq!(b, 30.0);
+        }
+    }
+
+    #[test]
+    fn same_tag_ordering_preserved() {
+        let results = run_world(2, |rank, comm| {
+            if rank == 0 {
+                comm.send(1, 5, vec![1.0]);
+                comm.send(1, 5, vec![2.0]);
+                vec![]
+            } else {
+                let a = comm.recv(0, 5);
+                let b = comm.recv(0, 5);
+                vec![a[0], b[0]]
+            }
+        });
+        assert_eq!(results[1], vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,13 @@
+//! Run configuration: a TOML-subset parser plus the typed [`RunConfig`]
+//! consumed by the launcher. (`serde`/`toml` are unavailable offline, so
+//! the parser is a substrate of this repo.)
+//!
+//! Supported syntax: `[section.subsection]` headers, `key = value` with
+//! string / integer / float / boolean / homogeneous-array values, `#`
+//! comments, blank lines.
+
+mod parser;
+mod run;
+
+pub use parser::{ConfigError, Document, Value};
+pub use run::{LatticeConfig, ParallelConfig, RunConfig, SolverConfig};

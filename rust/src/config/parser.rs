@@ -1,0 +1,290 @@
+//! TOML-subset parser. See module docs in `config/mod.rs` for the grammar.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct ConfigError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_ints(&self) -> Option<Vec<i64>> {
+        match self {
+            Value::Array(items) => items.iter().map(Value::as_int).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path keys (`section.key`) to values.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut doc = Document::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(head) = line.strip_prefix('[') {
+                let head = head.strip_suffix(']').ok_or_else(|| ConfigError {
+                    line: lineno,
+                    message: "unterminated section header".into(),
+                })?;
+                section = head.trim().to_string();
+                if section.is_empty() {
+                    return Err(ConfigError {
+                        line: lineno,
+                        message: "empty section name".into(),
+                    });
+                }
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| ConfigError {
+                line: lineno,
+                message: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(ConfigError {
+                    line: lineno,
+                    message: "empty key".into(),
+                });
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let value = parse_value(val.trim(), lineno)?;
+            if doc.entries.insert(full.clone(), value).is_some() {
+                return Err(ConfigError {
+                    line: lineno,
+                    message: format!("duplicate key {full}"),
+                });
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|e| ConfigError {
+            line: 0,
+            message: format!("{}: {e}", path.display()),
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn set(&mut self, key: &str, value: Value) {
+        self.entries.insert(key.to_string(), value);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, line: usize) -> Result<Value, ConfigError> {
+    let err = |m: String| ConfigError { line, message: m };
+    if s.is_empty() {
+        return Err(err("missing value".into()));
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .ok_or_else(|| err("unterminated string".into()))?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body
+            .strip_suffix(']')
+            .ok_or_else(|| err("unterminated array".into()))?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, ConfigError> = body
+            .split(',')
+            .map(|item| parse_value(item.trim(), line))
+            .collect();
+        return Ok(Value::Array(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(format!("cannot parse value {s:?}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run configuration
+title = "weak scaling"     # inline comment
+
+[lattice]
+dims = [16, 16, 8, 8]
+tiling = "4x4"
+
+[solver]
+kappa = 0.13
+tol = 1e-8
+maxiter = 500
+use_pjrt = true
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        assert_eq!(doc.str_or("title", ""), "weak scaling");
+        assert_eq!(
+            doc.get("lattice.dims").unwrap().as_ints().unwrap(),
+            vec![16, 16, 8, 8]
+        );
+        assert_eq!(doc.str_or("lattice.tiling", ""), "4x4");
+        assert!((doc.float_or("solver.kappa", 0.0) - 0.13).abs() < 1e-12);
+        assert!((doc.float_or("solver.tol", 0.0) - 1e-8).abs() < 1e-20);
+        assert_eq!(doc.int_or("solver.maxiter", 0), 500);
+        assert!(doc.bool_or("solver.use_pjrt", false));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Document::parse("x = 3").unwrap();
+        assert_eq!(doc.float_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(Document::parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn bad_syntax_reports_line() {
+        let e = Document::parse("ok = 1\nbogus line").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn unterminated_string_rejected() {
+        assert!(Document::parse("s = \"abc").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = Document::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = Document::parse("a = []").unwrap();
+        assert_eq!(doc.get("a").unwrap(), &Value::Array(vec![]));
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let doc = Document::parse("").unwrap();
+        assert_eq!(doc.int_or("nope", 7), 7);
+        assert_eq!(doc.str_or("nope", "d"), "d");
+    }
+}

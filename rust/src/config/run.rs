@@ -1,0 +1,201 @@
+//! Typed run configuration consumed by the launcher and examples.
+
+use std::path::{Path, PathBuf};
+
+use super::parser::{ConfigError, Document};
+use crate::lattice::{GeometryError, LatticeDims, ProcGrid, Tiling};
+
+#[derive(Clone, Debug)]
+pub struct LatticeConfig {
+    pub global: LatticeDims,
+    pub grid: ProcGrid,
+    pub tiling: Tiling,
+}
+
+#[derive(Clone, Debug)]
+pub struct SolverConfig {
+    pub kappa: f64,
+    pub tol: f64,
+    pub maxiter: usize,
+    pub use_pjrt: bool,
+    /// "cg" or "bicgstab"
+    pub algorithm: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ParallelConfig {
+    /// OpenMP-analog threads per rank (paper: 12 per CMG)
+    pub threads_per_rank: usize,
+    /// force the comm path even for self-neighbor directions
+    /// (the paper enforces x/y communication in its measurements)
+    pub force_comm: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub lattice: LatticeConfig,
+    pub solver: SolverConfig,
+    pub parallel: ParallelConfig,
+    pub artifacts_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            lattice: LatticeConfig {
+                global: LatticeDims::new(8, 8, 8, 16).unwrap(),
+                grid: ProcGrid([1, 1, 1, 1]),
+                tiling: Tiling::new(4, 4).unwrap(),
+            },
+            solver: SolverConfig {
+                kappa: 0.13,
+                tol: 1e-8,
+                maxiter: 1000,
+                use_pjrt: false,
+                algorithm: "cg".into(),
+            },
+            parallel: ParallelConfig {
+                threads_per_rank: 4,
+                force_comm: false,
+            },
+            artifacts_dir: PathBuf::from("artifacts"),
+            seed: 20230227,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML-subset file; missing keys fall back to defaults.
+    pub fn load(path: &Path) -> Result<RunConfig, ConfigError> {
+        let doc = Document::load(path)?;
+        RunConfig::from_document(&doc)
+    }
+
+    pub fn from_document(doc: &Document) -> Result<RunConfig, ConfigError> {
+        let defaults = RunConfig::default();
+        let geo_err = |e: GeometryError| ConfigError {
+            line: 0,
+            message: e.0,
+        };
+
+        let global = match doc.get("lattice.dims") {
+            Some(v) => {
+                let ints = v.as_ints().ok_or_else(|| ConfigError {
+                    line: 0,
+                    message: "lattice.dims must be an int array".into(),
+                })?;
+                if ints.len() != 4 {
+                    return Err(ConfigError {
+                        line: 0,
+                        message: "lattice.dims must have 4 entries".into(),
+                    });
+                }
+                LatticeDims::new(
+                    ints[0] as usize,
+                    ints[1] as usize,
+                    ints[2] as usize,
+                    ints[3] as usize,
+                )
+                .map_err(geo_err)?
+            }
+            None => defaults.lattice.global,
+        };
+        let grid = match doc.get("lattice.grid") {
+            Some(v) => {
+                let ints = v.as_ints().ok_or_else(|| ConfigError {
+                    line: 0,
+                    message: "lattice.grid must be an int array".into(),
+                })?;
+                if ints.len() != 4 {
+                    return Err(ConfigError {
+                        line: 0,
+                        message: "lattice.grid must have 4 entries".into(),
+                    });
+                }
+                ProcGrid([
+                    ints[0] as usize,
+                    ints[1] as usize,
+                    ints[2] as usize,
+                    ints[3] as usize,
+                ])
+            }
+            None => defaults.lattice.grid,
+        };
+        let tiling = Tiling::parse(&doc.str_or("lattice.tiling", "4x4"))
+            .map_err(|m| ConfigError { line: 0, message: m })?;
+
+        Ok(RunConfig {
+            lattice: LatticeConfig {
+                global,
+                grid,
+                tiling,
+            },
+            solver: SolverConfig {
+                kappa: doc.float_or("solver.kappa", defaults.solver.kappa),
+                tol: doc.float_or("solver.tol", defaults.solver.tol),
+                maxiter: doc.int_or("solver.maxiter", defaults.solver.maxiter as i64)
+                    as usize,
+                use_pjrt: doc.bool_or("solver.use_pjrt", defaults.solver.use_pjrt),
+                algorithm: doc.str_or("solver.algorithm", &defaults.solver.algorithm),
+            },
+            parallel: ParallelConfig {
+                threads_per_rank: doc.int_or(
+                    "parallel.threads_per_rank",
+                    defaults.parallel.threads_per_rank as i64,
+                ) as usize,
+                force_comm: doc.bool_or("parallel.force_comm", defaults.parallel.force_comm),
+            },
+            artifacts_dir: PathBuf::from(doc.str_or("artifacts_dir", "artifacts")),
+            seed: doc.int_or("seed", defaults.seed as i64) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.lattice.global.volume(), 8 * 8 * 8 * 16);
+        assert_eq!(c.solver.algorithm, "cg");
+    }
+
+    #[test]
+    fn full_document() {
+        let doc = Document::parse(
+            r#"
+seed = 99
+[lattice]
+dims = [16, 16, 8, 8]
+grid = [1, 1, 2, 2]
+tiling = "8x2"
+[solver]
+kappa = 0.125
+algorithm = "bicgstab"
+[parallel]
+threads_per_rank = 12
+force_comm = true
+"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert_eq!(c.lattice.global, LatticeDims::new(16, 16, 8, 8).unwrap());
+        assert_eq!(c.lattice.grid, ProcGrid([1, 1, 2, 2]));
+        assert_eq!(c.lattice.tiling.to_string(), "8x2");
+        assert_eq!(c.solver.algorithm, "bicgstab");
+        assert_eq!(c.parallel.threads_per_rank, 12);
+        assert!(c.parallel.force_comm);
+        assert_eq!(c.seed, 99);
+    }
+
+    #[test]
+    fn bad_dims_rejected() {
+        let doc = Document::parse("[lattice]\ndims = [15, 4, 4, 4]").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err());
+        let doc = Document::parse("[lattice]\ndims = [4, 4, 4]").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! The distributed even-odd hopping driver: EO1 -> post sends -> bulk
+//! (overlapped with the wire) -> wait -> EO2, with every phase charged to
+//! the FAPP-analog profiler. This is the per-rank pipeline of §3.5-3.6.
+
+use crate::comm::halo::HaloPlans;
+use crate::comm::unpack::RecvBuffers;
+use crate::comm::{balance, pack, unpack, Comm};
+use crate::dslash::{HoppingEo, WrapMode};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{Dir, Geometry, Parity};
+
+use super::profiler::{Phase, Profiler};
+use super::team::{chunk_range, SendPtr, Team};
+
+/// EO2 thread-partition policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Eo2Schedule {
+    /// equal site counts (the paper's current scheme; Fig. 9 imbalance)
+    Uniform,
+    /// cost-weighted static partition (the paper's proposed future work)
+    Balanced,
+}
+
+/// Message tag: direction, orientation, output parity.
+fn tag(dir: usize, upward: bool, p_out: Parity) -> u64 {
+    ((p_out.index() as u64) << 8) | ((dir as u64) << 1) | u64::from(upward)
+}
+
+/// Distributed even-odd hopping operator for one rank.
+pub struct DistHopping {
+    pub geom: Geometry,
+    pub comm_dirs: [bool; 4],
+    bulk: HoppingEo,
+    plans: [HaloPlans; 2],
+    pub schedule: Eo2Schedule,
+    /// cached balanced chunks per parity (computed on demand)
+    chunks: [Vec<(usize, usize)>; 2],
+    nthreads: usize,
+}
+
+impl DistHopping {
+    /// `force_comm` routes even self-neighbor directions through the
+    /// communication path, as the paper does in all its measurements.
+    pub fn new(
+        geom: &Geometry,
+        force_comm: bool,
+        nthreads: usize,
+        schedule: Eo2Schedule,
+    ) -> DistHopping {
+        let comm_dirs =
+            std::array::from_fn(|d| force_comm || geom.grid.0[d] > 1);
+        let wrap = std::array::from_fn(|d| {
+            if comm_dirs[d] {
+                WrapMode::SkipBoundary
+            } else {
+                WrapMode::Periodic
+            }
+        });
+        let plans = [
+            HaloPlans::new(geom, Parity::Even, comm_dirs),
+            HaloPlans::new(geom, Parity::Odd, comm_dirs),
+        ];
+        let chunks = std::array::from_fn(|p| match schedule {
+            Eo2Schedule::Uniform => balance::uniform_chunks(plans[p].nsites, nthreads),
+            Eo2Schedule::Balanced => balance::balanced_chunks(&plans[p], nthreads),
+        });
+        DistHopping {
+            geom: *geom,
+            comm_dirs,
+            bulk: HoppingEo::with_wrap(geom, wrap),
+            plans,
+            schedule,
+            chunks,
+            nthreads,
+        }
+    }
+
+    pub fn plans(&self, p_out: Parity) -> &HaloPlans {
+        &self.plans[p_out.index()]
+    }
+
+    /// out = H_{p_out <- 1-p_out} psi across the rank world.
+    pub fn hopping(
+        &self,
+        out: &mut FermionField,
+        u: &GaugeField,
+        psi: &FermionField,
+        p_out: Parity,
+        comm: &mut Comm,
+        team: &mut Team,
+        prof: &Profiler,
+    ) {
+        let plans = &self.plans[p_out.index()];
+        let rank = comm.rank;
+        let grid = self.geom.grid;
+
+        // ---------------- EO1: pack send buffers --------------------
+        let mut up_bufs: [Vec<f32>; 4] = Default::default();
+        let mut down_bufs: [Vec<f32>; 4] = Default::default();
+        for dir in 0..4 {
+            if self.comm_dirs[dir] {
+                up_bufs[dir] = vec![0.0f32; plans.buffer_len(dir)];
+                down_bufs[dir] = vec![0.0f32; plans.buffer_len(dir)];
+            }
+        }
+        {
+            let up_ptrs: [SendPtr<f32>; 4] =
+                std::array::from_fn(|d| SendPtr(up_bufs[d].as_mut_ptr()));
+            let down_ptrs: [SendPtr<f32>; 4] =
+                std::array::from_fn(|d| SendPtr(down_bufs[d].as_mut_ptr()));
+            let n = self.nthreads;
+            team.parallel(|tid| {
+                prof.scope(tid, Phase::Eo1, || {
+                    for dir in 0..4 {
+                        if !self.comm_dirs[dir] {
+                            continue;
+                        }
+                        // each direction's face loop is split evenly over
+                        // the threads (paper §3.6: balanced EO1)
+                        let count = plans.face_count[dir];
+                        let (b, e) = chunk_range(count, tid, n);
+                        if b == e {
+                            continue;
+                        }
+                        let up = unsafe {
+                            up_ptrs[dir].slice_mut(
+                                b * pack::HALF_F32,
+                                (e - b) * pack::HALF_F32,
+                            )
+                        };
+                        pack_up_shifted(up, plans, dir, u, psi, b, e);
+                        let down = unsafe {
+                            down_ptrs[dir].slice_mut(
+                                b * pack::HALF_F32,
+                                (e - b) * pack::HALF_F32,
+                            )
+                        };
+                        pack_down_shifted(down, plans, dir, psi, b, e);
+                    }
+                });
+            });
+        }
+
+        // ---------------- post sends (master thread, FUNNELED) -------
+        for dir in 0..4 {
+            if !self.comm_dirs[dir] {
+                continue;
+            }
+            let up_rank = grid.neighbor(rank, Dir::from_index(dir), 1);
+            let down_rank = grid.neighbor(rank, Dir::from_index(dir), -1);
+            comm.send(up_rank, tag(dir, true, p_out), std::mem::take(&mut up_bufs[dir]));
+            comm.send(
+                down_rank,
+                tag(dir, false, p_out),
+                std::mem::take(&mut down_bufs[dir]),
+            );
+        }
+
+        // ---------------- bulk, overlapped with the wire -------------
+        {
+            let out_ptr = SendPtr(out.data.as_mut_ptr());
+            let ntiles = self.bulk.layout.ntiles();
+            let tile_f32 = crate::lattice::SC2 * self.bulk.layout.vlen();
+            let n = self.nthreads;
+            let bulk = &self.bulk;
+            team.parallel(|tid| {
+                prof.scope(tid, Phase::Bulk, || {
+                    let (b, e) = chunk_range(ntiles, tid, n);
+                    if b == e {
+                        return;
+                    }
+                    // disjoint tile ranges per thread
+                    let out_tiles = unsafe {
+                        out_ptr.slice_mut(b * tile_f32, (e - b) * tile_f32)
+                    };
+                    bulk.apply_tiles(out_tiles, u, psi, p_out, b, e);
+                });
+            });
+        }
+
+        // ---------------- receive halos ------------------------------
+        let mut bufs = RecvBuffers::default();
+        prof.scope(0, Phase::CommWait, || {
+            for dir in 0..4 {
+                if !self.comm_dirs[dir] {
+                    continue;
+                }
+                let up_rank = grid.neighbor(rank, Dir::from_index(dir), 1);
+                let down_rank = grid.neighbor(rank, Dir::from_index(dir), -1);
+                // my from_down buffer is the -d neighbor's upward export
+                bufs.from_down[dir] = comm.recv(down_rank, tag(dir, true, p_out));
+                // my from_up buffer is the +d neighbor's downward export
+                bufs.from_up[dir] = comm.recv(up_rank, tag(dir, false, p_out));
+            }
+        });
+
+        // ---------------- EO2: unpack + boundary hopping -------------
+        {
+            let out_ptr = SendPtr(out.data.as_mut_ptr());
+            let layout = self.bulk.layout;
+            let chunks = &self.chunks[p_out.index()];
+            let bufs = &bufs;
+            team.parallel(|tid| {
+                prof.scope(tid, Phase::Eo2, || {
+                    let (b, e) = chunks[tid];
+                    if b == e {
+                        return;
+                    }
+                    unsafe {
+                        unpack::eo2_range_raw(out_ptr, &layout, plans, bufs, u, b, e);
+                    }
+                });
+            });
+        }
+    }
+}
+
+/// EO1 pack helpers re-exported with the profiling-friendly names used by
+/// the driver (they operate on buffer *sub-slices* starting at site b).
+fn pack_up_shifted(
+    buf: &mut [f32],
+    plans: &HaloPlans,
+    dir: usize,
+    u: &GaugeField,
+    psi: &FermionField,
+    b: usize,
+    e: usize,
+) {
+    // pack::pack_up_range indexes the buffer absolutely; shift into a view
+    pack::pack_up_range_rel(buf, plans, dir, u, psi, b, e);
+}
+
+fn pack_down_shifted(
+    buf: &mut [f32],
+    plans: &HaloPlans,
+    dir: usize,
+    psi: &FermionField,
+    b: usize,
+    e: usize,
+) {
+    pack::pack_down_range_rel(buf, plans, dir, psi, b, e);
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: persistent thread team (OpenMP analog), the
+//! EO1 -> bulk ∥ comm -> EO2 distributed hopping driver, the FAPP-analog
+//! profiler, and operator compositions for the solvers.
+
+pub mod driver;
+pub mod operator;
+pub mod profiler;
+pub mod team;
+
+pub use driver::{DistHopping, Eo2Schedule};
+pub use profiler::{Phase, Profiler, Report};
+pub use team::{BarrierKind, Team};

@@ -1,0 +1,221 @@
+//! FAPP-analog profiler: per-thread, per-phase cycle (time) accounting.
+//!
+//! The paper uses the Fujitsu advanced performance profiler to produce
+//! the stacked per-thread execution-time bars of Figs. 8 and 9. This
+//! profiler collects the same series for our kernels: each thread
+//! accumulates wall time into phase buckets; the harness renders the
+//! per-thread stacks and the imbalance statistics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Execution phases of one distributed hopping application.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// EO1: pack send buffers (paper Fig. 9 top)
+    Eo1 = 0,
+    /// bulk stencil (paper Fig. 8)
+    Bulk = 1,
+    /// waiting for halo messages
+    CommWait = 2,
+    /// EO2: unpack + boundary hopping (paper Fig. 9 bottom)
+    Eo2 = 3,
+    /// barrier / join time
+    Barrier = 4,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 5] = [
+        Phase::Eo1,
+        Phase::Bulk,
+        Phase::CommWait,
+        Phase::Eo2,
+        Phase::Barrier,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Eo1 => "EO1(pack)",
+            Phase::Bulk => "bulk",
+            Phase::CommWait => "comm-wait",
+            Phase::Eo2 => "EO2(unpack)",
+            Phase::Barrier => "barrier",
+        }
+    }
+}
+
+const NPHASE: usize = 5;
+
+/// Lock-free per-thread x per-phase nanosecond accumulators.
+#[derive(Debug)]
+pub struct Profiler {
+    nthreads: usize,
+    nanos: Vec<AtomicU64>,
+    /// per-thread flop counters (for per-core Flops as in Fig. 9's check)
+    flops: Vec<AtomicU64>,
+}
+
+impl Profiler {
+    pub fn new(nthreads: usize) -> Profiler {
+        Profiler {
+            nthreads,
+            nanos: (0..nthreads * NPHASE).map(|_| AtomicU64::new(0)).collect(),
+            flops: (0..nthreads).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    /// Time `f` and charge it to (tid, phase).
+    #[inline]
+    pub fn scope<R>(&self, tid: usize, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let start = Instant::now();
+        let r = f();
+        self.add(tid, phase, start.elapsed().as_nanos() as u64);
+        r
+    }
+
+    #[inline]
+    pub fn add(&self, tid: usize, phase: Phase, nanos: u64) {
+        self.nanos[tid * NPHASE + phase as usize].fetch_add(nanos, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_flops(&self, tid: usize, flops: u64) {
+        self.flops[tid].fetch_add(flops, Ordering::Relaxed);
+    }
+
+    pub fn seconds(&self, tid: usize, phase: Phase) -> f64 {
+        self.nanos[tid * NPHASE + phase as usize].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn thread_flops(&self, tid: usize) -> u64 {
+        self.flops[tid].load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        for a in &self.nanos {
+            a.store(0, Ordering::Relaxed);
+        }
+        for a in &self.flops {
+            a.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot: `report[tid][phase]` in seconds.
+    pub fn snapshot(&self) -> Report {
+        let mut times = Vec::with_capacity(self.nthreads);
+        for tid in 0..self.nthreads {
+            times.push(
+                Phase::ALL
+                    .iter()
+                    .map(|&p| self.seconds(tid, p))
+                    .collect::<Vec<f64>>(),
+            );
+        }
+        Report {
+            times,
+            flops: (0..self.nthreads).map(|t| self.thread_flops(t)).collect(),
+        }
+    }
+}
+
+/// A profiling snapshot for rendering / assertions.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// [tid][phase] seconds
+    pub times: Vec<Vec<f64>>,
+    pub flops: Vec<u64>,
+}
+
+impl Report {
+    /// Total time of one phase across threads.
+    pub fn phase_total(&self, phase: Phase) -> f64 {
+        self.times.iter().map(|t| t[phase as usize]).sum()
+    }
+
+    /// max/mean imbalance of a phase across threads (1.0 = balanced).
+    pub fn imbalance(&self, phase: Phase) -> f64 {
+        let vals: Vec<f64> = self.times.iter().map(|t| t[phase as usize]).collect();
+        let max = vals.iter().cloned().fold(0.0, f64::max);
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Render the Fig. 8/9-style per-thread stacked bars.
+    pub fn render(&self, title: &str) -> String {
+        let labels: Vec<String> = (0..self.times.len())
+            .map(|t| format!("thread {t:>2}"))
+            .collect();
+        let segments: Vec<String> =
+            Phase::ALL.iter().map(|p| p.label().to_string()).collect();
+        crate::util::tables::stacked_bars(title, &labels, &segments, &self.times, 60)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_thread_and_phase() {
+        let p = Profiler::new(3);
+        p.add(0, Phase::Bulk, 1_000_000);
+        p.add(0, Phase::Bulk, 500_000);
+        p.add(2, Phase::Eo2, 2_000_000);
+        assert!((p.seconds(0, Phase::Bulk) - 1.5e-3).abs() < 1e-12);
+        assert_eq!(p.seconds(1, Phase::Bulk), 0.0);
+        assert!((p.seconds(2, Phase::Eo2) - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scope_times_work() {
+        let p = Profiler::new(1);
+        let r = p.scope(0, Phase::Eo1, || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(r, 42);
+        assert!(p.seconds(0, Phase::Eo1) >= 4e-3);
+    }
+
+    #[test]
+    fn report_imbalance() {
+        let p = Profiler::new(4);
+        for tid in 0..4 {
+            p.add(tid, Phase::Eo2, 1_000_000);
+        }
+        p.add(3, Phase::Eo2, 3_000_000); // thread 3 is 4x the others
+        let r = p.snapshot();
+        let imb = r.imbalance(Phase::Eo2);
+        assert!(imb > 2.0, "imbalance {imb}");
+        assert!((r.phase_total(Phase::Eo2) - 7e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let p = Profiler::new(2);
+        p.add(1, Phase::Barrier, 7);
+        p.add_flops(1, 99);
+        p.reset();
+        assert_eq!(p.seconds(1, Phase::Barrier), 0.0);
+        assert_eq!(p.thread_flops(1), 0);
+    }
+
+    #[test]
+    fn render_contains_threads_and_legend() {
+        let p = Profiler::new(2);
+        p.add(0, Phase::Bulk, 1000);
+        p.add(1, Phase::Eo1, 500);
+        let s = p.snapshot().render("fig");
+        assert!(s.contains("thread  0"));
+        assert!(s.contains("legend:"));
+        assert!(s.contains("EO2"));
+    }
+}

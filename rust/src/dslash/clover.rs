@@ -1,0 +1,368 @@
+//! Clover term: the site-local `D_ee` / `D_oo` blocks of the clover
+//! fermion matrix (the operator QWS implements; paper §2). For the plain
+//! Wilson matrix these blocks are the identity; the clover improvement
+//! adds `- kappa c_sw/2 sigma_munu F_munu(x)`, site-local and block
+//! diagonal — exactly the structure the paper describes for QWS's
+//! `D_ee`/`D_oo`.
+//!
+//! Implementation notes:
+//! * `F_munu` is the clover-leaf average of the four plaquettes around
+//!   `x`, anti-hermitized: `F = (Q - Q^dag) / 8`.
+//! * `sigma_munu = (i/2) [gamma_mu, gamma_nu]`.
+//! * The per-site operator `A(x) = 1 - (kappa c_sw / 2) sigma.F` is a
+//!   hermitian 12x12 matrix in (spin, color) space; we store it densely
+//!   and invert it with Gaussian elimination (needed for `D_ee^{-1}` in
+//!   the even-odd preconditioning, Eq. 4).
+//!
+//! This is the extension feature; it is validated by unit tests
+//! (hermiticity, unit-gauge identity, gamma5-hermiticity of the full
+//! clover matrix, inverse correctness) rather than wired into the
+//! benchmark harness.
+
+use crate::algebra::{Complex, Gamma, Spinor, GAMMA};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{Dir, EvenOdd, Geometry, Parity, SiteCoord};
+
+/// sigma_munu = (i/2)[g_mu, g_nu] as explicit 4x4 matrices.
+fn sigma(mu: usize, nu: usize) -> Gamma {
+    let a = GAMMA[mu].matmul(&GAMMA[nu]);
+    let b = GAMMA[nu].matmul(&GAMMA[mu]);
+    // (i/2)(a - b)
+    let mut out = [[Complex::ZERO; 4]; 4];
+    for i in 0..4 {
+        for j in 0..4 {
+            out[i][j] = (a.0[i][j] - b.0[i][j]).mul_i().scale(0.5);
+        }
+    }
+    Gamma(out)
+}
+
+/// 3x3 color matrix helpers on [[Complex;3];3] via Su3 (not nec. unitary).
+type Mat3 = crate::algebra::Su3;
+
+/// Clover-leaf field strength F_munu(x) (anti-hermitian 3x3).
+fn field_strength(
+    u: &GaugeField,
+    geom: &Geometry,
+    coords: [usize; 4],
+    mu: usize,
+    nu: usize,
+) -> Mat3 {
+    let ext = [geom.local.x, geom.local.y, geom.local.z, geom.local.t];
+    let link = |dir: usize, c: [usize; 4]| -> Mat3 {
+        u.link_at(Dir::from_index(dir), c[0], c[1], c[2], c[3])
+    };
+    let step = |mut c: [usize; 4], dir: usize, sign: i64| -> [usize; 4] {
+        let n = ext[dir] as i64;
+        c[dir] = ((c[dir] as i64 + sign).rem_euclid(n)) as usize;
+        c
+    };
+
+    // the four leaves around x in the (mu, nu) plane
+    let x = coords;
+    let xp_mu = step(x, mu, 1);
+    let xp_nu = step(x, nu, 1);
+    let xm_mu = step(x, mu, -1);
+    let xm_nu = step(x, nu, -1);
+    let xp_mu_m_nu = step(xp_mu, nu, -1);
+    let xm_mu_p_nu = step(xm_mu, nu, 1);
+    let xm_mu_m_nu = step(xm_mu, nu, -1);
+
+    // leaf 1: U_mu(x) U_nu(x+mu) U_mu(x+nu)^+ U_nu(x)^+
+    let l1 = link(mu, x)
+        .mul(&link(nu, xp_mu))
+        .mul(&link(mu, xp_nu).adj())
+        .mul(&link(nu, x).adj());
+    // leaf 2: U_nu(x) U_mu(x-mu+nu)^+ U_nu(x-mu)^+ U_mu(x-mu)
+    let l2 = link(nu, x)
+        .mul(&link(mu, xm_mu_p_nu).adj())
+        .mul(&link(nu, xm_mu).adj())
+        .mul(&link(mu, xm_mu));
+    // leaf 3: U_mu(x-mu)^+ U_nu(x-mu-nu)^+ U_mu(x-mu-nu) U_nu(x-nu)
+    let l3 = link(mu, xm_mu)
+        .adj()
+        .mul(&link(nu, xm_mu_m_nu).adj())
+        .mul(&link(mu, xm_mu_m_nu))
+        .mul(&link(nu, xm_nu));
+    // leaf 4: U_nu(x-nu)^+ U_mu(x-nu) U_nu(x+mu-nu) U_mu(x)^+
+    let l4 = link(nu, xm_nu)
+        .adj()
+        .mul(&link(mu, xm_nu))
+        .mul(&link(nu, xp_mu_m_nu))
+        .mul(&link(mu, x).adj());
+
+    // Q = sum of leaves; F = -i (Q - Q^dag)/8  (hermitian convention, so
+    // sigma (x) F — and with it the whole clover block — is hermitian)
+    let mut q = Mat3::default();
+    for leaf in [l1, l2, l3, l4] {
+        for a in 0..3 {
+            for b in 0..3 {
+                q.m[a][b] += leaf.m[a][b];
+            }
+        }
+    }
+    let qd = q.adj();
+    let mut f = Mat3::default();
+    for a in 0..3 {
+        for b in 0..3 {
+            f.m[a][b] = (q.m[a][b] - qd.m[a][b]).scale(1.0 / 8.0).mul_mi();
+        }
+    }
+    f
+}
+
+/// The site-local clover operator of one parity: a dense hermitian 12x12
+/// matrix per site, `A(x) = 1 - (kappa c_sw / 2) sum_{mu<nu} sigma.F`.
+#[derive(Clone, Debug)]
+pub struct CloverTerm {
+    pub parity: Parity,
+    /// per compacted site, row-major 12x12 (spin-major: i = 3*spin+color)
+    pub blocks: Vec<[[Complex; 12]; 12]>,
+    sites: Vec<SiteCoord>,
+}
+
+impl CloverTerm {
+    pub fn new(geom: &Geometry, u: &GaugeField, parity: Parity, kappa: f64, c_sw: f64) -> CloverTerm {
+        let layout = crate::lattice::EoLayout::new(geom);
+        let sites: Vec<SiteCoord> = layout.sites().collect();
+        let mut blocks = Vec::with_capacity(sites.len());
+        // precompute sigma matrices for the 6 planes
+        let planes: Vec<(usize, usize, Gamma)> = (0..4)
+            .flat_map(|mu| ((mu + 1)..4).map(move |nu| (mu, nu)))
+            .map(|(mu, nu)| (mu, nu, sigma(mu, nu)))
+            .collect();
+        for &s in &sites {
+            let phi = EvenOdd::row_parity(s.y, s.z, s.t, parity);
+            let coords = [EvenOdd::lexical_x(s.ix, phi), s.y, s.z, s.t];
+            let mut block = [[Complex::ZERO; 12]; 12];
+            for i in 0..12 {
+                block[i][i] = Complex::ONE;
+            }
+            let coef = -kappa * c_sw * 0.5;
+            for (mu, nu, sig) in &planes {
+                let f = field_strength(u, geom, coords, *mu, *nu);
+                // block -= (kappa c_sw / 2) * sigma (x) F   [factor 2 for
+                // the mu<nu restriction: sigma_numu F_numu = sigma_munu F_munu]
+                for si in 0..4 {
+                    for sj in 0..4 {
+                        let g = sig.0[si][sj];
+                        if g == Complex::ZERO {
+                            continue;
+                        }
+                        for ca in 0..3 {
+                            for cb in 0..3 {
+                                block[3 * si + ca][3 * sj + cb] +=
+                                    (g * f.m[ca][cb]).scale(2.0 * coef);
+                            }
+                        }
+                    }
+                }
+            }
+            blocks.push(block);
+        }
+        CloverTerm {
+            parity,
+            blocks,
+            sites,
+        }
+    }
+
+    /// out = A psi (site-local block multiply).
+    pub fn apply(&self, out: &mut FermionField, psi: &FermionField) {
+        for (k, &s) in self.sites.iter().enumerate() {
+            let v = psi.site(s);
+            let mut w = Spinor::ZERO;
+            let block = &self.blocks[k];
+            for i in 0..12 {
+                let mut acc = Complex::ZERO;
+                for j in 0..12 {
+                    acc = acc.madd(block[i][j], v.s[j / 3][j % 3]);
+                }
+                w.s[i / 3][i % 3] = acc;
+            }
+            out.set_site(s, &w);
+        }
+    }
+
+    /// Invert every site block (Gauss-Jordan with partial pivoting) —
+    /// gives `D_ee^{-1}` / `D_oo^{-1}` for the preconditioning (Eq. 4).
+    pub fn inverse(&self) -> CloverTerm {
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|b| invert12(b).expect("clover block is singular"))
+            .collect();
+        CloverTerm {
+            parity: self.parity,
+            blocks,
+            sites: self.sites.clone(),
+        }
+    }
+
+    /// Hermiticity error max_i,j |A_ij - conj(A_ji)|.
+    pub fn hermiticity_error(&self) -> f64 {
+        let mut err = 0.0f64;
+        for b in &self.blocks {
+            for i in 0..12 {
+                for j in 0..12 {
+                    err = err.max((b[i][j] - b[j][i].conj()).abs());
+                }
+            }
+        }
+        err
+    }
+}
+
+/// Dense 12x12 complex inverse (Gauss-Jordan, partial pivot).
+fn invert12(a: &[[Complex; 12]; 12]) -> Option<[[Complex; 12]; 12]> {
+    let mut m = *a;
+    let mut inv = [[Complex::ZERO; 12]; 12];
+    for i in 0..12 {
+        inv[i][i] = Complex::ONE;
+    }
+    for col in 0..12 {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..12 {
+            if m[r][col].norm2() > m[piv][col].norm2() {
+                piv = r;
+            }
+        }
+        if m[piv][col].norm2() < 1e-28 {
+            return None;
+        }
+        m.swap(col, piv);
+        inv.swap(col, piv);
+        // normalize row
+        let d = m[col][col];
+        let dinv = d.conj().scale(1.0 / d.norm2());
+        for j in 0..12 {
+            m[col][j] = m[col][j] * dinv;
+            inv[col][j] = inv[col][j] * dinv;
+        }
+        // eliminate
+        for r in 0..12 {
+            if r == col {
+                continue;
+            }
+            let f = m[r][col];
+            if f == Complex::ZERO {
+                continue;
+            }
+            for j in 0..12 {
+                m[r][j] = m[r][j] - f * m[col][j];
+                inv[r][j] = inv[r][j] - f * inv[col][j];
+            }
+        }
+    }
+    Some(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{LatticeDims, Tiling};
+    use crate::util::rng::Rng;
+
+    const KAPPA: f64 = 0.13;
+    const CSW: f64 = 1.0;
+
+    fn geom() -> Geometry {
+        Geometry::single_rank(
+            LatticeDims::new(4, 4, 4, 4).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sigma_matrices_antisymmetric_and_hermitian() {
+        for mu in 0..4 {
+            for nu in (mu + 1)..4 {
+                let s = sigma(mu, nu);
+                let sn = sigma(nu, mu);
+                for i in 0..4 {
+                    for j in 0..4 {
+                        assert!((s.0[i][j] + sn.0[i][j]).abs() < 1e-14);
+                        assert!((s.0[i][j] - s.0[j][i].conj()).abs() < 1e-14);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unit_gauge_clover_is_identity() {
+        let g = geom();
+        let u = GaugeField::unit(&g);
+        let clov = CloverTerm::new(&g, &u, Parity::Even, KAPPA, CSW);
+        let mut rng = Rng::seeded(61);
+        let psi = FermionField::gaussian(&g, &mut rng);
+        let mut out = FermionField::zeros(&g);
+        clov.apply(&mut out, &psi);
+        let mut d = out.clone();
+        d.axpy(-1.0, &psi);
+        assert!(d.norm2() < 1e-10, "unit-gauge clover must be 1");
+    }
+
+    #[test]
+    fn clover_block_is_hermitian() {
+        let g = geom();
+        let mut rng = Rng::seeded(62);
+        let u = GaugeField::random(&g, &mut rng);
+        let clov = CloverTerm::new(&g, &u, Parity::Odd, KAPPA, CSW);
+        assert!(clov.hermiticity_error() < 1e-5, "{}", clov.hermiticity_error());
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let g = geom();
+        let mut rng = Rng::seeded(63);
+        let u = GaugeField::random(&g, &mut rng);
+        let clov = CloverTerm::new(&g, &u, Parity::Even, KAPPA, CSW);
+        let inv = clov.inverse();
+        let psi = FermionField::gaussian(&g, &mut rng);
+        let mut mid = FermionField::zeros(&g);
+        clov.apply(&mut mid, &psi);
+        let mut back = FermionField::zeros(&g);
+        inv.apply(&mut back, &mid);
+        let mut d = back.clone();
+        d.axpy(-1.0, &psi);
+        let rel = (d.norm2() / psi.norm2()).sqrt();
+        assert!(rel < 1e-5, "A^-1 A != 1: {rel}");
+    }
+
+    #[test]
+    fn clover_gamma5_hermiticity() {
+        // g5 A g5 = A^dag = A (hermitian) => A commutes appropriately:
+        // verify <x, A y> == <A x, y>
+        let g = geom();
+        let mut rng = Rng::seeded(64);
+        let u = GaugeField::random(&g, &mut rng);
+        let clov = CloverTerm::new(&g, &u, Parity::Even, KAPPA, CSW);
+        let x = FermionField::gaussian(&g, &mut rng);
+        let y = FermionField::gaussian(&g, &mut rng);
+        let mut ay = FermionField::zeros(&g);
+        clov.apply(&mut ay, &y);
+        let mut ax = FermionField::zeros(&g);
+        clov.apply(&mut ax, &x);
+        let lhs = x.dot(&ay);
+        let rhs = ax.dot(&y);
+        assert!((lhs.re - rhs.re).abs() < 1e-4 && (lhs.im - rhs.im).abs() < 1e-4);
+    }
+
+    #[test]
+    fn field_strength_hermitian() {
+        let g = geom();
+        let mut rng = Rng::seeded(65);
+        let u = GaugeField::random(&g, &mut rng);
+        let f = field_strength(&u, &g, [1, 2, 3, 0], 0, 3);
+        // hermitian convention: F - F^dag = 0
+        let fd = f.adj();
+        for a in 0..3 {
+            for b in 0..3 {
+                assert!((f.m[a][b] - fd.m[a][b]).abs() < 1e-10);
+            }
+        }
+    }
+}

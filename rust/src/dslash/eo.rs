@@ -1,0 +1,430 @@
+//! The vectorized even-odd Wilson hopping kernel — the paper's kernel
+//! (§3.3-3.4), and the Rust analog of its ACLE implementation.
+//!
+//! `H_{p_out <- p_in}` is applied tile by tile. Per output tile and
+//! direction the kernel
+//!
+//! 1. builds the shifted source spinor (and, for backward hops, the
+//!    shifted link) with the lane-shuffle engine ([`super::shift`]) —
+//!    never with gather/scatter (that variant lives in [`super::gather`]
+//!    and is what Fig. 8 "before" profiles);
+//! 2. projects 4 -> 2 spin components with the `(1 -+ gamma_mu)` tables;
+//! 3. multiplies the 3x3 link into the half-spinor on the lanes;
+//! 4. reconstructs and accumulates the 4-spinor.
+//!
+//! All lane loops run over a compile-time `V = VLEN` so the compiler
+//! vectorizes them; `apply` dispatches on the runtime tiling.
+
+use crate::algebra::{Coef, ProjEntry, PROJ};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{EoLayout, Geometry, Parity, CC2, SC2};
+
+use super::shift::{LanePlan, ShiftPlans};
+
+/// How to treat the local-lattice boundary in each direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WrapMode {
+    /// Periodic wrap inside the local lattice (single-rank operator).
+    Periodic,
+    /// Skip contributions crossing the boundary; they are supplied by the
+    /// halo-exchange path (EO1/EO2).
+    SkipBoundary,
+}
+
+/// The vectorized even-odd hopping operator.
+#[derive(Clone, Debug)]
+pub struct HoppingEo {
+    pub layout: EoLayout,
+    pub plans: ShiftPlans,
+    pub wrap: [WrapMode; 4],
+}
+
+impl HoppingEo {
+    /// Fully periodic operator (single-rank use).
+    pub fn new(geom: &Geometry) -> HoppingEo {
+        HoppingEo {
+            layout: EoLayout::new(geom),
+            plans: ShiftPlans::new(geom.tiling),
+            wrap: [WrapMode::Periodic; 4],
+        }
+    }
+
+    /// Operator with per-direction boundary handling (multi-rank bulk part).
+    pub fn with_wrap(geom: &Geometry, wrap: [WrapMode; 4]) -> HoppingEo {
+        HoppingEo {
+            layout: EoLayout::new(geom),
+            plans: ShiftPlans::new(geom.tiling),
+            wrap,
+        }
+    }
+
+    /// out = H_{p_out <- p_in} psi. `psi` has parity `1 - p_out`.
+    pub fn apply(
+        &self,
+        out: &mut FermionField,
+        u: &GaugeField,
+        psi: &FermionField,
+        p_out: Parity,
+    ) {
+        let ntiles = self.layout.ntiles();
+        self.apply_tiles(&mut out.data, u, psi, p_out, 0, ntiles);
+    }
+
+    /// Apply to a contiguous range of output tiles (the unit the thread
+    /// team distributes). `out_tiles` covers exactly the tiles
+    /// `[tile_begin, tile_end)` of the output field.
+    pub fn apply_tiles(
+        &self,
+        out_tiles: &mut [f32],
+        u: &GaugeField,
+        psi: &FermionField,
+        p_out: Parity,
+        tile_begin: usize,
+        tile_end: usize,
+    ) {
+        debug_assert_eq!(
+            out_tiles.len(),
+            (tile_end - tile_begin) * SC2 * self.layout.vlen()
+        );
+        match self.layout.vlen() {
+            2 => self.apply_v::<2>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            4 => self.apply_v::<4>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            8 => self.apply_v::<8>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            16 => self.apply_v::<16>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            32 => self.apply_v::<32>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            v => panic!("unsupported VLEN {v} (expected 2/4/8/16/32)"),
+        }
+    }
+
+    fn apply_v<const V: usize>(
+        &self,
+        out_tiles: &mut [f32],
+        u: &GaugeField,
+        psi: &FermionField,
+        p_out: Parity,
+        tile_begin: usize,
+        tile_end: usize,
+    ) {
+        let l = &self.layout;
+        debug_assert_eq!(l.vlen(), V);
+        let p_in = p_out.flip();
+        let (nxt, nyt, nz, nt) = (l.nxt, l.nyt, l.nz, l.nt);
+        let vy = l.tiling.vy();
+
+        // scratch tiles (per-call; the thread team gives each thread its own)
+        let mut ps = [0.0f32; 1].repeat(SC2 * V); // shifted spinor tile
+        let mut us = [0.0f32; 1].repeat(CC2 * V); // shifted link tile
+        let mut h = [0.0f32; 1].repeat(12 * V); // projected half spinor
+        let mut w = [0.0f32; 1].repeat(12 * V); // link * half spinor
+        let mut acc = [0.0f32; 1].repeat(SC2 * V);
+
+        for tile in tile_begin..tile_end {
+            let (t, z, yt, xt) = l.tile_coords(tile);
+            // row-parity phase of the tile's first lane row (Fig. 5)
+            let b = (yt * vy + z + t + p_out.index()) % 2;
+            acc.iter_mut().for_each(|a| *a = 0.0);
+
+            // ---------------- X direction ----------------
+            {
+                let skip = self.wrap[0] == WrapMode::SkipBoundary;
+                // forward: neighbor tile at xt+1 (wraps at the edge)
+                let nbr = l.tile_index(t, z, yt, (xt + 1) % nxt);
+                let mask = skip && xt + 1 == nxt;
+                let plan = &self.plans.x_plus[b];
+                shuffle::<V>(&mut ps, tile_slice::<V>(&psi.data, tile, SC2), tile_slice::<V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                hop_fwd::<V>(&mut acc, &mut h, &mut w, &ps, tile_slice::<V>(&u.data[0][p_out.index()], tile, CC2), &PROJ[0][0]);
+
+                // backward: neighbor tile at xt-1; link U_x(x - x^) shifts too
+                let nbr = l.tile_index(t, z, yt, (xt + nxt - 1) % nxt);
+                let mask = skip && xt == 0;
+                let plan = &self.plans.x_minus[b];
+                shuffle::<V>(&mut ps, tile_slice::<V>(&psi.data, tile, SC2), tile_slice::<V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                shuffle::<V>(&mut us, tile_slice::<V>(&u.data[0][p_in.index()], tile, CC2), tile_slice::<V>(&u.data[0][p_in.index()], nbr, CC2), plan, false, CC2);
+                hop_bwd::<V>(&mut acc, &mut h, &mut w, &ps, &us, &PROJ[0][1]);
+            }
+
+            // ---------------- Y direction ----------------
+            {
+                let skip = self.wrap[1] == WrapMode::SkipBoundary;
+                let nbr = l.tile_index(t, z, (yt + 1) % nyt, xt);
+                let mask = skip && yt + 1 == nyt;
+                let plan = &self.plans.y_plus;
+                shuffle::<V>(&mut ps, tile_slice::<V>(&psi.data, tile, SC2), tile_slice::<V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                hop_fwd::<V>(&mut acc, &mut h, &mut w, &ps, tile_slice::<V>(&u.data[1][p_out.index()], tile, CC2), &PROJ[1][0]);
+
+                let nbr = l.tile_index(t, z, (yt + nyt - 1) % nyt, xt);
+                let mask = skip && yt == 0;
+                let plan = &self.plans.y_minus;
+                shuffle::<V>(&mut ps, tile_slice::<V>(&psi.data, tile, SC2), tile_slice::<V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                shuffle::<V>(&mut us, tile_slice::<V>(&u.data[1][p_in.index()], tile, CC2), tile_slice::<V>(&u.data[1][p_in.index()], nbr, CC2), plan, false, CC2);
+                hop_bwd::<V>(&mut acc, &mut h, &mut w, &ps, &us, &PROJ[1][1]);
+            }
+
+            // ---------------- Z direction (whole-tile strides) ----------
+            {
+                let skip = self.wrap[2] == WrapMode::SkipBoundary;
+                if !(skip && z + 1 == nz) {
+                    let nbr = l.tile_index(t, (z + 1) % nz, yt, xt);
+                    hop_fwd::<V>(&mut acc, &mut h, &mut w, tile_slice::<V>(&psi.data, nbr, SC2), tile_slice::<V>(&u.data[2][p_out.index()], tile, CC2), &PROJ[2][0]);
+                }
+                if !(skip && z == 0) {
+                    let nbr = l.tile_index(t, (z + nz - 1) % nz, yt, xt);
+                    hop_bwd::<V>(&mut acc, &mut h, &mut w, tile_slice::<V>(&psi.data, nbr, SC2), tile_slice::<V>(&u.data[2][p_in.index()], nbr, CC2), &PROJ[2][1]);
+                }
+            }
+
+            // ---------------- T direction (whole-tile strides) ----------
+            {
+                let skip = self.wrap[3] == WrapMode::SkipBoundary;
+                if !(skip && t + 1 == nt) {
+                    let nbr = l.tile_index((t + 1) % nt, z, yt, xt);
+                    hop_fwd::<V>(&mut acc, &mut h, &mut w, tile_slice::<V>(&psi.data, nbr, SC2), tile_slice::<V>(&u.data[3][p_out.index()], tile, CC2), &PROJ[3][0]);
+                }
+                if !(skip && t == 0) {
+                    let nbr = l.tile_index((t + nt - 1) % nt, z, yt, xt);
+                    hop_bwd::<V>(&mut acc, &mut h, &mut w, tile_slice::<V>(&psi.data, nbr, SC2), tile_slice::<V>(&u.data[3][p_in.index()], nbr, CC2), &PROJ[3][1]);
+                }
+            }
+
+            // store the accumulated tile
+            let rel = tile - tile_begin;
+            let dst = &mut out_tiles[rel * SC2 * V..(rel + 1) * SC2 * V];
+            dst.copy_from_slice(&acc);
+        }
+    }
+}
+
+/// The SC2*V (or CC2*V) block of one tile.
+#[inline]
+fn tile_slice<const V: usize>(data: &[f32], tile: usize, ncomp: usize) -> &[f32] {
+    &data[tile * ncomp * V..(tile + 1) * ncomp * V]
+}
+
+/// Apply a lane plan to every component vector of a tile block.
+#[inline]
+fn shuffle<const V: usize>(
+    dst: &mut [f32],
+    cur: &[f32],
+    nbr: &[f32],
+    plan: &LanePlan,
+    mask: bool,
+    ncomp: usize,
+) {
+    for k in 0..ncomp {
+        plan.apply(&mut dst[k * V..(k + 1) * V], &cur[k * V..(k + 1) * V], &nbr[k * V..(k + 1) * V], mask);
+    }
+}
+
+/// Fixed-size view of the component vector at `off` (bounds-checked once;
+/// the lane loops below then vectorize without per-element checks).
+#[inline(always)]
+fn arr<const V: usize>(s: &[f32], off: usize) -> &[f32; V] {
+    s[off..off + V].try_into().unwrap()
+}
+
+/// Mutable (re, im) pair of adjacent component vectors starting at `off`.
+#[inline(always)]
+fn arr_pair_mut<const V: usize>(s: &mut [f32], off: usize) -> (&mut [f32; V], &mut [f32; V]) {
+    let (a, b) = s[off..off + 2 * V].split_at_mut(V);
+    (a.try_into().unwrap(), b.try_into().unwrap())
+}
+
+/// dst = a + coef * b, lanewise on split re/im vectors.
+#[inline]
+fn add_coef<const V: usize>(
+    dst_re: &mut [f32; V],
+    dst_im: &mut [f32; V],
+    a_re: &[f32; V],
+    a_im: &[f32; V],
+    b_re: &[f32; V],
+    b_im: &[f32; V],
+    coef: Coef,
+) {
+    match coef {
+        Coef::One => {
+            for l in 0..V {
+                dst_re[l] = a_re[l] + b_re[l];
+                dst_im[l] = a_im[l] + b_im[l];
+            }
+        }
+        Coef::MinusOne => {
+            for l in 0..V {
+                dst_re[l] = a_re[l] - b_re[l];
+                dst_im[l] = a_im[l] - b_im[l];
+            }
+        }
+        Coef::I => {
+            for l in 0..V {
+                dst_re[l] = a_re[l] - b_im[l];
+                dst_im[l] = a_im[l] + b_re[l];
+            }
+        }
+        Coef::MinusI => {
+            for l in 0..V {
+                dst_re[l] = a_re[l] + b_im[l];
+                dst_im[l] = a_im[l] - b_re[l];
+            }
+        }
+    }
+}
+
+/// Offsets into a spinor tile block: component (spin, color, reim) vector.
+#[inline(always)]
+const fn so<const V: usize>(s: usize, c: usize, reim: usize) -> usize {
+    ((s * 3 + c) * 2 + reim) * V
+}
+
+/// Offsets into a gauge tile block: component (a, b, reim) vector.
+#[inline(always)]
+const fn go<const V: usize>(a: usize, b: usize, reim: usize) -> usize {
+    ((a * 3 + b) * 2 + reim) * V
+}
+
+/// Project the 4-spinor tile `ps` to the half-spinor `h` (2 x 3 x 2 x V).
+#[inline]
+fn project<const V: usize>(h: &mut [f32], ps: &[f32], e: &ProjEntry) {
+    for c in 0..3 {
+        // h0 = psi_0 + c1 * psi_j1
+        let (dr, di) = arr_pair_mut::<V>(h, so::<V>(0, c, 0));
+        add_coef::<V>(
+            dr,
+            di,
+            arr::<V>(ps, so::<V>(0, c, 0)),
+            arr::<V>(ps, so::<V>(0, c, 1)),
+            arr::<V>(ps, so::<V>(e.j1, c, 0)),
+            arr::<V>(ps, so::<V>(e.j1, c, 1)),
+            e.c1,
+        );
+        // h1 = psi_1 + c2 * psi_j2
+        let (dr, di) = arr_pair_mut::<V>(h, so::<V>(1, c, 0));
+        add_coef::<V>(
+            dr,
+            di,
+            arr::<V>(ps, so::<V>(1, c, 0)),
+            arr::<V>(ps, so::<V>(1, c, 1)),
+            arr::<V>(ps, so::<V>(e.j2, c, 0)),
+            arr::<V>(ps, so::<V>(e.j2, c, 1)),
+            e.c2,
+        );
+    }
+}
+
+#[inline]
+fn accum_coef<const V: usize>(
+    acc: &mut [f32],
+    spin: usize,
+    c: usize,
+    wr: &[f32; V],
+    wi: &[f32; V],
+    coef: Coef,
+) {
+    let (dr, di) = arr_pair_mut::<V>(acc, so::<V>(spin, c, 0));
+    match coef {
+        Coef::One => {
+            for l in 0..V {
+                dr[l] += wr[l];
+                di[l] += wi[l];
+            }
+        }
+        Coef::MinusOne => {
+            for l in 0..V {
+                dr[l] -= wr[l];
+                di[l] -= wi[l];
+            }
+        }
+        Coef::I => {
+            for l in 0..V {
+                dr[l] -= wi[l];
+                di[l] += wr[l];
+            }
+        }
+        Coef::MinusI => {
+            for l in 0..V {
+                dr[l] += wi[l];
+                di[l] -= wr[l];
+            }
+        }
+    }
+}
+
+/// Fused SU(3) multiply + reconstruction: computes w[s][a] and
+/// accumulates the reconstructed 4-spinor without materializing `w`
+/// (saves one 12xV round trip per hop).
+#[inline]
+fn su3_mul_reconstruct<const V: usize>(
+    acc: &mut [f32],
+    u: &[f32],
+    h: &[f32],
+    dag: bool,
+    e: &ProjEntry,
+) {
+    for s in 0..2 {
+        for a in 0..3 {
+            let mut wr = [0.0f32; V];
+            let mut wi = [0.0f32; V];
+            for b in 0..3 {
+                let (ur, ui): (&[f32; V], &[f32; V]) = if dag {
+                    (arr::<V>(u, go::<V>(b, a, 0)), arr::<V>(u, go::<V>(b, a, 1)))
+                } else {
+                    (arr::<V>(u, go::<V>(a, b, 0)), arr::<V>(u, go::<V>(a, b, 1)))
+                };
+                let hr = arr::<V>(h, so::<V>(s, b, 0));
+                let hi = arr::<V>(h, so::<V>(s, b, 1));
+                if dag {
+                    for l in 0..V {
+                        wr[l] += ur[l] * hr[l] + ui[l] * hi[l];
+                        wi[l] += ur[l] * hi[l] - ui[l] * hr[l];
+                    }
+                } else {
+                    for l in 0..V {
+                        wr[l] += ur[l] * hr[l] - ui[l] * hi[l];
+                        wi[l] += ur[l] * hi[l] + ui[l] * hr[l];
+                    }
+                }
+            }
+            // upper rows: acc[s] += w
+            {
+                let (dr, di) = arr_pair_mut::<V>(acc, so::<V>(s, a, 0));
+                for l in 0..V {
+                    dr[l] += wr[l];
+                    di[l] += wi[l];
+                }
+            }
+            // lower rows fed by this w row
+            if e.k1 == s {
+                accum_coef::<V>(acc, 2, a, &wr, &wi, e.d1);
+            }
+            if e.k2 == s {
+                accum_coef::<V>(acc, 3, a, &wr, &wi, e.d2);
+            }
+        }
+    }
+}
+
+/// Forward hop on one tile: project, multiply U, reconstruct-accumulate.
+#[inline]
+fn hop_fwd<const V: usize>(
+    acc: &mut [f32],
+    h: &mut [f32],
+    _w: &mut [f32],
+    ps: &[f32],
+    u_tile: &[f32],
+    e: &ProjEntry,
+) {
+    project::<V>(h, ps, e);
+    su3_mul_reconstruct::<V>(acc, u_tile, h, false, e);
+}
+
+/// Backward hop on one tile: project, multiply U^dag, reconstruct.
+#[inline]
+fn hop_bwd<const V: usize>(
+    acc: &mut [f32],
+    h: &mut [f32],
+    _w: &mut [f32],
+    ps: &[f32],
+    u_tile: &[f32],
+    e: &ProjEntry,
+) {
+    project::<V>(h, ps, e);
+    su3_mul_reconstruct::<V>(acc, u_tile, h, true, e);
+}

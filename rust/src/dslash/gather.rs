@@ -1,0 +1,144 @@
+//! The gather/scatter variant of the even-odd hopping — Fig. 8 "before".
+//!
+//! The paper found that a leftover portable loop nest (outer loop over the
+//! 24 (Re/Im)-spin-color components, inner over SIMD lanes) was compiled
+//! into gather-load / scatter-store instructions, saturating the L1 cache
+//! and bottlenecking the whole kernel. This module reproduces that code
+//! shape deliberately:
+//!
+//! * neighbor access goes through *per-element index arithmetic* (a
+//!   software gather: one `site_to_lane` address computation per lane per
+//!   component) instead of the precomputed lane-shuffle plans;
+//! * the accumulator is kept *lane-major* (`[V][24]`, i.e. AoS) and the
+//!   final store walks components in the outer loop and lanes in the inner
+//!   loop, producing the strided scatter pattern.
+//!
+//! `harness::fig8` profiles this against [`super::eo::HoppingEo`].
+
+use crate::algebra::{Complex, Spinor, PROJ};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{
+    Dir, EoLayout, EvenOdd, Geometry, Parity, SiteCoord, IM, RE, SC2,
+};
+
+/// Gather-style even-odd hopping operator (slow on purpose).
+#[derive(Clone, Debug)]
+pub struct HoppingGather {
+    pub geom: Geometry,
+    pub layout: EoLayout,
+}
+
+impl HoppingGather {
+    pub fn new(geom: &Geometry) -> HoppingGather {
+        HoppingGather {
+            geom: *geom,
+            layout: EoLayout::new(geom),
+        }
+    }
+
+    /// out = H_{p_out <- 1-p_out} psi, periodic. Same result as the
+    /// shuffle kernel, pathological access pattern.
+    pub fn apply(
+        &self,
+        out: &mut FermionField,
+        u: &GaugeField,
+        psi: &FermionField,
+        p_out: Parity,
+    ) {
+        let ntiles = self.layout.ntiles();
+        self.apply_tiles(&mut out.data, u, psi, p_out, 0, ntiles);
+    }
+
+    /// `out_tiles` covers exactly the output tiles `[tile_begin, tile_end)`.
+    pub fn apply_tiles(
+        &self,
+        out_tiles: &mut [f32],
+        u: &GaugeField,
+        psi: &FermionField,
+        p_out: Parity,
+        tile_begin: usize,
+        tile_end: usize,
+    ) {
+        let l = &self.layout;
+        let v = l.vlen();
+        let d = self.geom.local;
+        let ext = [d.x, d.y, d.z, d.t];
+        let p_in = p_out.flip();
+
+        // lane-major accumulator: [V][24] — the AoS shape whose final
+        // store is a strided scatter
+        let mut acc: Vec<Spinor> = vec![Spinor::ZERO; v];
+
+        for tile in tile_begin..tile_end {
+            acc.iter_mut().for_each(|a| *a = Spinor::ZERO);
+
+            for lane in 0..v {
+                // per-lane index arithmetic — the software gather
+                let s = l.lane_to_site(crate::lattice::LaneCoord { tile, lane });
+                let phi = EvenOdd::row_parity(s.y, s.z, s.t, p_out);
+                let coords = [EvenOdd::lexical_x(s.ix, phi), s.y, s.z, s.t];
+                for mu in 0..4 {
+                    let mut cf = coords;
+                    cf[mu] = (cf[mu] + 1) % ext[mu];
+                    let nbr = SiteCoord {
+                        t: cf[3],
+                        z: cf[2],
+                        y: cf[1],
+                        ix: EvenOdd::compact_x(cf[0]),
+                    };
+                    let e = &PROJ[mu][0];
+                    let h = e.project(&gather_site(psi, l, nbr));
+                    let w = h.link_mul(&u.link(Dir::from_index(mu), p_out, s));
+                    e.reconstruct_accum(&mut acc[lane], &w);
+
+                    let mut cb = coords;
+                    cb[mu] = (cb[mu] + ext[mu] - 1) % ext[mu];
+                    let nbr = SiteCoord {
+                        t: cb[3],
+                        z: cb[2],
+                        y: cb[1],
+                        ix: EvenOdd::compact_x(cb[0]),
+                    };
+                    let e = &PROJ[mu][1];
+                    let h = e.project(&gather_site(psi, l, nbr));
+                    let w = h.link_adj_mul(&u.link(Dir::from_index(mu), p_in, nbr));
+                    e.reconstruct_accum(&mut acc[lane], &w);
+                }
+            }
+
+            // the pathological store: outer loop over the 24 components,
+            // inner over lanes -> stride-V writes element by element
+            let base = (tile - tile_begin) * SC2 * v;
+            for spin in 0..4 {
+                for color in 0..3 {
+                    for reim in 0..2 {
+                        let comp = ((spin * 3 + color) * 2 + reim) * v;
+                        for lane in 0..v {
+                            let val = if reim == RE {
+                                acc[lane].s[spin][color].re
+                            } else {
+                                acc[lane].s[spin][color].im
+                            };
+                            out_tiles[base + comp + lane] = val as f32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Element-by-element site load (the gather): each of the 24 components is
+/// fetched through its own computed address.
+fn gather_site(psi: &FermionField, l: &EoLayout, s: SiteCoord) -> Spinor {
+    let mut out = Spinor::ZERO;
+    for spin in 0..4 {
+        for color in 0..3 {
+            out.s[spin][color] = Complex::new(
+                psi.data[l.spinor_elem(s, spin, color, RE)] as f64,
+                psi.data[l.spinor_elem(s, spin, color, IM)] as f64,
+            );
+        }
+    }
+    out
+}

@@ -1,0 +1,25 @@
+//! Wilson dslash kernels.
+//!
+//! * [`eo`] — the vectorized even-odd hopping kernel with lane-shuffle
+//!   stencil shifts: the paper's contribution (its "ACLE" implementation).
+//! * [`gather`] — the same operator through per-element gather/scatter
+//!   access: the pathological variant Fig. 8 profiles "before" tuning.
+//! * [`scalar`] — plain site-at-a-time baseline (the paper's "without
+//!   ACLE" comparison, ~10x slower on A64FX).
+//! * [`full`] — full Wilson matrix / even-odd preconditioned operator
+//!   compositions on top of a hopping kernel.
+//! * [`shift`] — the `sel`/`tbl`/`ext` lane-shuffle engine.
+//! * [`clover`] — site-local clover `D_ee`/`D_oo` blocks (QWS context).
+//! * [`flops`] — flop accounting (QXS 1368 flop/site convention).
+
+pub mod clover;
+pub mod eo;
+pub mod flops;
+pub mod full;
+pub mod gather;
+pub mod scalar;
+pub mod shift;
+
+pub use eo::{HoppingEo, WrapMode};
+pub use gather::HoppingGather;
+pub use scalar::HoppingScalar;

@@ -1,0 +1,242 @@
+//! Lane shuffle engine: the SVE `sel`/`tbl`/`ext` analogs (paper §3.4,
+//! Figs. 5-6).
+//!
+//! A SIMD vector holds a `VLENX x VLENY` tile of the x-compacted x-y
+//! plane (lane = `ly*VLENX + lx`). Neighbor access in x/y needs data from
+//! two tiles merged into one vector:
+//!
+//! * **x-direction** (Fig. 5): on the compacted arrays the `+-x` neighbor
+//!   of compact index `ix` is `ix + phi` / `ix - (1 - phi)` where
+//!   `phi = (y+z+t+p_out) mod 2` is the *row* parity — so each lane row
+//!   shifts by 0 or 1 depending on its parity. SVE does this with a
+//!   predicated `sel` of the current/neighbor loads followed by a `tbl`
+//!   permute; here the same merge+permute is a precomputed [`LanePlan`].
+//! * **y-direction** (Fig. 6): all rows shift by one, i.e. an `ext`
+//!   (concatenate two vectors, extract a window).
+//! * **z/t**: whole-tile strides, no lane shuffle at all.
+//!
+//! Plans also carry the *boundary mask*: the lanes whose neighbor lives on
+//! another rank. In `SkipBoundary` mode those lanes are zeroed (their
+//! contribution arrives through the EO1/EO2 communication path instead).
+
+use crate::lattice::Tiling;
+
+/// Which source vector a lane reads from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Src {
+    /// the current tile
+    Cur = 0,
+    /// the neighbor tile (x or y neighbor, direction depends on the plan)
+    Nbr = 1,
+}
+
+/// A precomputed lane permutation: for each destination lane, the source
+/// vector and source lane, plus whether the lane crosses the local-lattice
+/// boundary when the neighbor tile wraps around.
+#[derive(Clone, Debug)]
+pub struct LanePlan {
+    pub src: Vec<Src>,
+    pub idx: Vec<usize>,
+    /// lanes that read from the *wrapped* neighbor (candidates for
+    /// boundary masking when the tile sits on the lattice edge)
+    pub crosses: Vec<bool>,
+}
+
+impl LanePlan {
+    /// Apply: `dst[l] = (src[l] == Cur ? cur : nbr)[idx[l]]`, the
+    /// sel+tbl / ext analog. `mask_cross` zeroes boundary-crossing lanes.
+    #[inline]
+    pub fn apply(&self, dst: &mut [f32], cur: &[f32], nbr: &[f32], mask_cross: bool) {
+        for l in 0..dst.len() {
+            let v = match self.src[l] {
+                Src::Cur => cur[self.idx[l]],
+                Src::Nbr => nbr[self.idx[l]],
+            };
+            dst[l] = if mask_cross && self.crosses[l] { 0.0 } else { v };
+        }
+    }
+
+    /// Does any lane read from the neighbor tile?
+    pub fn uses_neighbor(&self) -> bool {
+        self.src.iter().any(|&s| s == Src::Nbr)
+    }
+}
+
+/// All plans for one tiling: x+- for both row-parity phases, y+-.
+///
+/// `x_plus[b]` / `x_minus[b]` are indexed by the parity phase
+/// `b = (yt*VLENY + z + t + p_out) mod 2` of the tile's first lane row;
+/// rows within a tile alternate parity when `VLENY > 1`.
+#[derive(Clone, Debug)]
+pub struct ShiftPlans {
+    pub tiling: Tiling,
+    pub x_plus: [LanePlan; 2],
+    pub x_minus: [LanePlan; 2],
+    pub y_plus: LanePlan,
+    pub y_minus: LanePlan,
+}
+
+impl ShiftPlans {
+    pub fn new(tiling: Tiling) -> ShiftPlans {
+        let (vx, vy) = (tiling.vx(), tiling.vy());
+        let v = tiling.vlen();
+
+        let build = |f: &dyn Fn(usize, usize) -> (Src, usize, usize, bool)| -> LanePlan {
+            let mut plan = LanePlan {
+                src: vec![Src::Cur; v],
+                idx: vec![0; v],
+                crosses: vec![false; v],
+            };
+            for ly in 0..vy {
+                for lx in 0..vx {
+                    let (src, slx, sly, cross) = f(lx, ly);
+                    let dst = tiling.lane(lx, ly);
+                    plan.src[dst] = src;
+                    plan.idx[dst] = tiling.lane(slx, sly);
+                    plan.crosses[dst] = cross;
+                }
+            }
+            plan
+        };
+
+        // x+ with phase b: rows with phi(ly) = (b + ly) % 2 == 1 shift by 1
+        let x_plus = std::array::from_fn(|b| {
+            build(&|lx, ly| {
+                if (b + ly) % 2 == 1 {
+                    if lx + 1 < vx {
+                        (Src::Cur, lx + 1, ly, false)
+                    } else {
+                        // crosses into the +x neighbor tile
+                        (Src::Nbr, 0, ly, true)
+                    }
+                } else {
+                    (Src::Cur, lx, ly, false)
+                }
+            })
+        });
+        // x- with phase b: rows with phi(ly) == 0 shift by -1
+        let x_minus = std::array::from_fn(|b| {
+            build(&|lx, ly| {
+                if (b + ly) % 2 == 0 {
+                    if lx > 0 {
+                        (Src::Cur, lx - 1, ly, false)
+                    } else {
+                        (Src::Nbr, vx - 1, ly, true)
+                    }
+                } else {
+                    (Src::Cur, lx, ly, false)
+                }
+            })
+        });
+        // y+: all rows shift up by one; last row reads the +y neighbor tile
+        let y_plus = build(&|lx, ly| {
+            if ly + 1 < vy {
+                (Src::Cur, lx, ly + 1, false)
+            } else {
+                (Src::Nbr, lx, 0, true)
+            }
+        });
+        let y_minus = build(&|lx, ly| {
+            if ly > 0 {
+                (Src::Cur, lx, ly - 1, false)
+            } else {
+                (Src::Nbr, lx, vy - 1, true)
+            }
+        });
+
+        ShiftPlans {
+            tiling,
+            x_plus,
+            x_minus,
+            y_plus,
+            y_minus,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force oracle: where should the +x-shifted value of lane
+    /// (lx, ly) come from, given the row-parity phase?
+    #[test]
+    fn x_plus_matches_row_parity_rule() {
+        for (vx, vy) in [(4, 4), (8, 2), (2, 8), (16, 1)] {
+            let tiling = Tiling::new(vx, vy).unwrap();
+            let plans = ShiftPlans::new(tiling);
+            for b in 0..2 {
+                let plan = &plans.x_plus[b];
+                for ly in 0..vy {
+                    let phi = (b + ly) % 2;
+                    for lx in 0..vx {
+                        let dst = tiling.lane(lx, ly);
+                        if phi == 0 {
+                            assert_eq!(plan.src[dst], Src::Cur);
+                            assert_eq!(plan.idx[dst], dst, "no shift when phi=0");
+                        } else if lx + 1 < vx {
+                            assert_eq!(plan.idx[dst], tiling.lane(lx + 1, ly));
+                        } else {
+                            assert_eq!(plan.src[dst], Src::Nbr);
+                            assert!(plan.crosses[dst]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn x_plans_are_phase_complementary() {
+        // a row that shifts in phase 0 must not shift in phase 1
+        let tiling = Tiling::new(4, 4).unwrap();
+        let plans = ShiftPlans::new(tiling);
+        for ly in 0..4 {
+            let l = tiling.lane(1, ly);
+            let shifted0 = plans.x_plus[0].idx[l] != l;
+            let shifted1 = plans.x_plus[1].idx[l] != l;
+            assert_ne!(shifted0, shifted1);
+        }
+    }
+
+    #[test]
+    fn apply_merges_and_masks() {
+        let tiling = Tiling::new(2, 2).unwrap();
+        let plans = ShiftPlans::new(tiling);
+        // cur = [0,1,2,3], nbr = [10,11,12,13]
+        let cur: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        let nbr: Vec<f32> = (10..14).map(|i| i as f32).collect();
+        let mut dst = vec![0.0; 4];
+        // phase 0: row ly=0 has phi=0 (no shift), ly=1 phi=1 (shift);
+        // the crossing lane (lx=1, ly=1) reads the neighbor's (lx=0, ly=1)
+        plans.x_plus[0].apply(&mut dst, &cur, &nbr, false);
+        assert_eq!(dst, vec![0.0, 1.0, 3.0, 12.0]);
+        plans.x_plus[0].apply(&mut dst, &cur, &nbr, true);
+        assert_eq!(dst, vec![0.0, 1.0, 3.0, 0.0], "crossing lane masked");
+    }
+
+    #[test]
+    fn y_shift_is_ext_like() {
+        let tiling = Tiling::new(2, 2).unwrap();
+        let plans = ShiftPlans::new(tiling);
+        let cur: Vec<f32> = (0..4).map(|i| i as f32).collect();
+        let nbr: Vec<f32> = (10..14).map(|i| i as f32).collect();
+        let mut dst = vec![0.0; 4];
+        // +y: out row0 = cur row1, out row1 = nbr row0
+        plans.y_plus.apply(&mut dst, &cur, &nbr, false);
+        assert_eq!(dst, vec![2.0, 3.0, 10.0, 11.0]);
+        plans.y_minus.apply(&mut dst, &cur, &nbr, false);
+        assert_eq!(dst, vec![12.0, 13.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn vy1_tiling_shifts_whole_vector_or_not() {
+        // 16x1 tiling: a row is the whole vector; phase decides everything
+        let tiling = Tiling::new(16, 1).unwrap();
+        let plans = ShiftPlans::new(tiling);
+        assert!(!plans.x_plus[0].uses_neighbor(), "phi=0: no shift at all");
+        assert!(plans.x_plus[1].uses_neighbor());
+        // y always crosses (vy = 1)
+        assert!(plans.y_plus.crosses.iter().all(|&c| c));
+    }
+}

@@ -1,0 +1,221 @@
+//! The gauge (link) field: one SU(3) matrix per site and direction,
+//! stored per parity in the AoSoA layout (paper Eq. 7, gauge case).
+
+use crate::algebra::{Complex, Su3};
+use crate::lattice::{
+    Dir, EoLayout, EvenOdd, Geometry, Parity, SiteCoord, IM, RE,
+};
+use crate::util::rng::Rng;
+
+/// Gauge field: `data[dir][parity]` is one AoSoA array of 3x3 links.
+#[derive(Clone, Debug)]
+pub struct GaugeField {
+    pub layout: EoLayout,
+    pub geom: Geometry,
+    pub data: [[Vec<f32>; 2]; 4],
+}
+
+impl GaugeField {
+    /// Cold start: all links are the identity.
+    pub fn unit(geom: &Geometry) -> GaugeField {
+        let mut g = GaugeField::filled(geom, 0.0);
+        for dir in 0..4 {
+            for p in 0..2 {
+                for tile in 0..g.layout.ntiles() {
+                    for c in 0..3 {
+                        let off = g.layout.gauge_vec(tile, c, c, RE);
+                        for l in 0..g.layout.vlen() {
+                            g.data[dir][p][off + l] = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    /// Hot start: independent random SU(3) on every link.
+    pub fn random(geom: &Geometry, rng: &mut Rng) -> GaugeField {
+        let mut g = GaugeField::filled(geom, 0.0);
+        for dir in Dir::ALL {
+            for p in Parity::BOTH {
+                // canonical site order for layout-independent content
+                let sites: Vec<SiteCoord> = g.layout.sites().collect();
+                for s in sites {
+                    g.set_link(dir, p, s, &Su3::random(rng));
+                }
+            }
+        }
+        g
+    }
+
+    fn filled(geom: &Geometry, v: f32) -> GaugeField {
+        let layout = EoLayout::new(geom);
+        let len = layout.gauge_len();
+        GaugeField {
+            layout,
+            geom: *geom,
+            data: std::array::from_fn(|_| std::array::from_fn(|_| vec![v; len])),
+        }
+    }
+
+    /// The link U_dir at a compacted site of the given parity.
+    pub fn link(&self, dir: Dir, p: Parity, s: SiteCoord) -> Su3 {
+        let arr = &self.data[dir.index()][p.index()];
+        let lc = self.layout.site_to_lane(s);
+        let mut u = Su3::default();
+        for a in 0..3 {
+            for b in 0..3 {
+                let ro = self.layout.gauge_vec(lc.tile, a, b, RE) + lc.lane;
+                let io = self.layout.gauge_vec(lc.tile, a, b, IM) + lc.lane;
+                u.m[a][b] = Complex::new(arr[ro] as f64, arr[io] as f64);
+            }
+        }
+        u
+    }
+
+    pub fn set_link(&mut self, dir: Dir, p: Parity, s: SiteCoord, u: &Su3) {
+        let layout = self.layout;
+        let arr = &mut self.data[dir.index()][p.index()];
+        for a in 0..3 {
+            for b in 0..3 {
+                arr[layout.gauge_elem(s, a, b, RE)] = u.m[a][b].re as f32;
+                arr[layout.gauge_elem(s, a, b, IM)] = u.m[a][b].im as f32;
+            }
+        }
+    }
+
+    /// Link at a *lexical* local coordinate (x, y, z, t).
+    pub fn link_at(&self, dir: Dir, x: usize, y: usize, z: usize, t: usize) -> Su3 {
+        let p = Parity::of_site(x, y, z, t);
+        debug_assert_eq!(EvenOdd::row_parity(y, z, t, p), x % 2);
+        self.link(
+            dir,
+            p,
+            SiteCoord {
+                t,
+                z,
+                y,
+                ix: EvenOdd::compact_x(x),
+            },
+        )
+    }
+
+    /// Average plaquette `<Re tr P>/3` over all sites and the 6 planes.
+    /// Scalar implementation: an observable / test oracle, not a kernel.
+    pub fn plaquette(&self) -> f64 {
+        let d = self.geom.local;
+        let mut total = 0.0;
+        let mut count = 0usize;
+        let ext = [d.x, d.y, d.z, d.t];
+        let mut coords = [0usize; 4];
+        for t in 0..d.t {
+            for z in 0..d.z {
+                for y in 0..d.y {
+                    for x in 0..d.x {
+                        coords[0] = x;
+                        coords[1] = y;
+                        coords[2] = z;
+                        coords[3] = t;
+                        for mu in 0..4 {
+                            for nu in (mu + 1)..4 {
+                                let mut cmu = coords;
+                                cmu[mu] = (cmu[mu] + 1) % ext[mu];
+                                let mut cnu = coords;
+                                cnu[nu] = (cnu[nu] + 1) % ext[nu];
+                                let u1 = self.link_at(
+                                    Dir::from_index(mu),
+                                    coords[0], coords[1], coords[2], coords[3],
+                                );
+                                let u2 = self.link_at(
+                                    Dir::from_index(nu),
+                                    cmu[0], cmu[1], cmu[2], cmu[3],
+                                );
+                                let u3 = self.link_at(
+                                    Dir::from_index(mu),
+                                    cnu[0], cnu[1], cnu[2], cnu[3],
+                                );
+                                let u4 = self.link_at(
+                                    Dir::from_index(nu),
+                                    coords[0], coords[1], coords[2], coords[3],
+                                );
+                                let p = u1.mul(&u2).mul(&u3.adj()).mul(&u4.adj());
+                                total += p.trace().re;
+                                count += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        total / (3.0 * count as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{LatticeDims, Tiling};
+
+    fn geom() -> Geometry {
+        Geometry::single_rank(
+            LatticeDims::new(4, 4, 4, 4).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn unit_gauge_plaquette_is_one() {
+        let g = GaugeField::unit(&geom());
+        assert!((g.plaquette() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_links_are_su3() {
+        let mut rng = Rng::seeded(6);
+        let g = GaugeField::random(&geom(), &mut rng);
+        let s = SiteCoord { t: 1, z: 2, y: 3, ix: 1 };
+        for dir in Dir::ALL {
+            for p in Parity::BOTH {
+                let u = g.link(dir, p, s);
+                // f32 storage => looser tolerance than the f64 Su3 tests
+                assert!(u.unitarity_error() < 1e-5);
+                assert!((u.det() - Complex::ONE).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn random_plaquette_is_small() {
+        // <P> ~ 0 for a strongly disordered (hot) configuration
+        let mut rng = Rng::seeded(7);
+        let g = GaugeField::random(&geom(), &mut rng);
+        let p = g.plaquette();
+        assert!(p.abs() < 0.1, "hot plaquette {p}");
+    }
+
+    #[test]
+    fn link_roundtrip() {
+        let mut rng = Rng::seeded(8);
+        let mut g = GaugeField::unit(&geom());
+        let u = Su3::random(&mut rng);
+        let s = SiteCoord { t: 0, z: 1, y: 2, ix: 0 };
+        g.set_link(Dir::Z, Parity::Odd, s, &u);
+        assert!(g.link(Dir::Z, Parity::Odd, s).dist(&u) < 1e-6);
+    }
+
+    #[test]
+    fn link_at_consistent_with_parity_storage() {
+        let mut rng = Rng::seeded(9);
+        let g = GaugeField::random(&geom(), &mut rng);
+        // lexical (3,2,1,0): parity = 0 (even), ix = 1
+        let via_lex = g.link_at(Dir::X, 3, 2, 1, 0);
+        let via_eo = g.link(
+            Dir::X,
+            Parity::Even,
+            SiteCoord { t: 0, z: 1, y: 2, ix: 1 },
+        );
+        assert!(via_lex.dist(&via_eo) < 1e-12);
+    }
+}

@@ -1,0 +1,277 @@
+//! Binary tensor I/O shared with `python/compile/fieldio.py` and the
+//! canonical-order conversions between Python/PJRT arrays and the AoSoA
+//! fields.
+//!
+//! Format (little-endian): magic `LQCD0001`, u32 dtype (0 = f32, 1 = f64),
+//! u32 ndim, u32 dims[ndim], then the data in C (row-major) order.
+//!
+//! Canonical array orders (matching the JAX side):
+//!   spinor  (T, Z, Y, XH, spin, color, reim)
+//!   gauge   (dir, parity, T, Z, Y, XH, colrow, colcol, reim)
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{FermionField, GaugeField};
+use crate::lattice::{NCOL, NSPIN, SiteCoord};
+
+const MAGIC: &[u8; 8] = b"LQCD0001";
+
+/// A dense tensor read from disk.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f64>,
+    /// dtype code as stored (0 = f32, 1 = f64)
+    pub dtype: u32,
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+}
+
+pub fn read_tensor(path: &Path) -> Result<Tensor> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic {:?}", path.display(), magic);
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let dtype = u32::from_le_bytes(u32buf);
+    f.read_exact(&mut u32buf)?;
+    let ndim = u32::from_le_bytes(u32buf) as usize;
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        f.read_exact(&mut u32buf)?;
+        dims.push(u32::from_le_bytes(u32buf) as usize);
+    }
+    let count: usize = dims.iter().product();
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    let data: Vec<f64> = match dtype {
+        0 => {
+            if raw.len() != count * 4 {
+                bail!("{}: size mismatch", path.display());
+            }
+            raw.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+                .collect()
+        }
+        1 => {
+            if raw.len() != count * 8 {
+                bail!("{}: size mismatch", path.display());
+            }
+            raw.chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        }
+        other => bail!("{}: unknown dtype code {other}", path.display()),
+    };
+    Ok(Tensor { dims, data, dtype })
+}
+
+pub fn write_tensor_f32(path: &Path, dims: &[usize], data: &[f32]) -> Result<()> {
+    let count: usize = dims.iter().product();
+    if data.len() != count {
+        bail!("write {}: dims/product mismatch", path.display());
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&0u32.to_le_bytes())?;
+    f.write_all(&(dims.len() as u32).to_le_bytes())?;
+    for &d in dims {
+        f.write_all(&(d as u32).to_le_bytes())?;
+    }
+    for &v in data {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Canonical <-> AoSoA conversions
+// ---------------------------------------------------------------------------
+
+/// Expected canonical f32 element count of one parity spinor field.
+pub fn canonical_spinor_len(field: &FermionField) -> usize {
+    field.layout.nsites() * NSPIN * NCOL * 2
+}
+
+/// Fill a fermion field from a canonical-order buffer
+/// (T, Z, Y, XH, spin, color, reim).
+pub fn fermion_from_canonical(field: &mut FermionField, canon: &[f64]) -> Result<()> {
+    if canon.len() != canonical_spinor_len(field) {
+        bail!(
+            "canonical spinor length {} != expected {}",
+            canon.len(),
+            canonical_spinor_len(field)
+        );
+    }
+    let l = field.layout;
+    for (sidx, s) in l.sites().enumerate() {
+        for spin in 0..NSPIN {
+            for color in 0..NCOL {
+                for reim in 0..2 {
+                    let cidx = ((sidx * NSPIN + spin) * NCOL + color) * 2 + reim;
+                    let off = l.spinor_elem(s, spin, color, reim);
+                    field.data[off] = canon[cidx] as f32;
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Dump a fermion field to canonical order (T, Z, Y, XH, spin, color, reim).
+pub fn fermion_to_canonical(field: &FermionField) -> Vec<f32> {
+    let l = field.layout;
+    let mut out = vec![0.0f32; canonical_spinor_len(field)];
+    for (sidx, s) in l.sites().enumerate() {
+        for spin in 0..NSPIN {
+            for color in 0..NCOL {
+                for reim in 0..2 {
+                    let cidx = ((sidx * NSPIN + spin) * NCOL + color) * 2 + reim;
+                    out[cidx] = field.data[l.spinor_elem(s, spin, color, reim)];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Fill a gauge field from a canonical-order buffer
+/// (dir, parity, T, Z, Y, XH, a, b, reim).
+pub fn gauge_from_canonical(gauge: &mut GaugeField, canon: &[f64]) -> Result<()> {
+    let l = gauge.layout;
+    let per_par = l.nsites() * NCOL * NCOL * 2;
+    if canon.len() != 4 * 2 * per_par {
+        bail!(
+            "canonical gauge length {} != expected {}",
+            canon.len(),
+            4 * 2 * per_par
+        );
+    }
+    let sites: Vec<SiteCoord> = l.sites().collect();
+    for dir in 0..4 {
+        for p in 0..2 {
+            let base = (dir * 2 + p) * per_par;
+            let arr = &mut gauge.data[dir][p];
+            for (sidx, &s) in sites.iter().enumerate() {
+                for a in 0..3 {
+                    for b in 0..3 {
+                        for reim in 0..2 {
+                            let cidx =
+                                base + ((sidx * NCOL + a) * NCOL + b) * 2 + reim;
+                            arr[l.gauge_elem(s, a, b, reim)] = canon[cidx] as f32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Dump a gauge field to canonical order (dir, parity, T, Z, Y, XH, a, b, reim).
+pub fn gauge_to_canonical(gauge: &GaugeField) -> Vec<f32> {
+    let l = gauge.layout;
+    let per_par = l.nsites() * NCOL * NCOL * 2;
+    let mut out = vec![0.0f32; 4 * 2 * per_par];
+    let sites: Vec<SiteCoord> = l.sites().collect();
+    for dir in 0..4 {
+        for p in 0..2 {
+            let base = (dir * 2 + p) * per_par;
+            let arr = &gauge.data[dir][p];
+            for (sidx, &s) in sites.iter().enumerate() {
+                for a in 0..3 {
+                    for b in 0..3 {
+                        for reim in 0..2 {
+                            let cidx =
+                                base + ((sidx * NCOL + a) * NCOL + b) * 2 + reim;
+                            out[cidx] = arr[l.gauge_elem(s, a, b, reim)];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{Geometry, LatticeDims, Tiling};
+    use crate::util::rng::Rng;
+
+    fn geom() -> Geometry {
+        Geometry::single_rank(
+            LatticeDims::new(4, 4, 2, 2).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn tensor_roundtrip(){
+        let dir = std::env::temp_dir().join("lqcd_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        write_tensor_f32(&path, &[2, 3, 4], &data).unwrap();
+        let t = read_tensor(&path).unwrap();
+        assert_eq!(t.dims, vec![2, 3, 4]);
+        assert_eq!(t.dtype, 0);
+        assert_eq!(t.as_f32(), data);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn fermion_canonical_roundtrip() {
+        let g = geom();
+        let mut rng = Rng::seeded(10);
+        let f = crate::field::FermionField::gaussian(&g, &mut rng);
+        let canon: Vec<f64> = fermion_to_canonical(&f).iter().map(|&v| v as f64).collect();
+        let mut f2 = crate::field::FermionField::zeros(&g);
+        fermion_from_canonical(&mut f2, &canon).unwrap();
+        assert_eq!(f.data, f2.data);
+    }
+
+    #[test]
+    fn gauge_canonical_roundtrip() {
+        let g = geom();
+        let mut rng = Rng::seeded(11);
+        let u = crate::field::GaugeField::random(&g, &mut rng);
+        let canon: Vec<f64> = gauge_to_canonical(&u).iter().map(|&v| v as f64).collect();
+        let mut u2 = crate::field::GaugeField::unit(&g);
+        gauge_from_canonical(&mut u2, &canon).unwrap();
+        for d in 0..4 {
+            for p in 0..2 {
+                assert_eq!(u.data[d][p], u2.data[d][p]);
+            }
+        }
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let g = geom();
+        let mut f = crate::field::FermionField::zeros(&g);
+        assert!(fermion_from_canonical(&mut f, &[0.0; 3]).is_err());
+    }
+}

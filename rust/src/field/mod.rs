@@ -1,0 +1,9 @@
+//! Lattice fields in the AoSoA layout: even/odd spinor fields and the
+//! gauge field, plus binary I/O shared with the Python compile path.
+
+mod fermion;
+mod gauge;
+pub mod io;
+
+pub use fermion::FermionField;
+pub use gauge::GaugeField;

@@ -1,0 +1,116 @@
+//! Fig. 8: cycle accounting of the bulk kernel before/after tuning.
+//!
+//! The paper's "before" is compiler-generated gather-load/scatter-store
+//! from a leftover portable loop nest, which made the kernel L1-bound;
+//! "after" replaces it with explicit SIMD shuffles. We profile
+//! [`HoppingGather`] (the deliberately gather-shaped variant) against
+//! [`HoppingEo`] (the shuffle kernel) under the same thread team and
+//! render per-thread stacked time bars.
+
+use crate::coordinator::team::{chunk_range, SendPtr};
+use crate::coordinator::{BarrierKind, Phase, Profiler, Team};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{Geometry, LatticeDims, Parity, Tiling, SC2};
+use crate::util::rng::Rng;
+
+use super::Opts;
+
+pub struct Fig8Result {
+    pub report: String,
+    /// total bulk seconds, gather variant
+    pub before_secs: f64,
+    /// total bulk seconds, shuffle variant
+    pub after_secs: f64,
+}
+
+/// Profile both bulk variants on the paper's per-process lattice.
+pub fn run(opts: Opts) -> Fig8Result {
+    // paper: 16^4 global over 4 ranks = 16x16x8x8 per process
+    let dims = if opts.quick {
+        LatticeDims::new(16, 16, 4, 4).unwrap()
+    } else {
+        LatticeDims::new(16, 16, 8, 8).unwrap()
+    };
+    let tiling = Tiling::new(4, 4).unwrap();
+    let geom = Geometry::single_rank(dims, tiling).unwrap();
+    let mut rng = Rng::seeded(88);
+    let u = GaugeField::random(&geom, &mut rng);
+    let psi = FermionField::gaussian(&geom, &mut rng);
+    let mut out = FermionField::zeros(&geom);
+    let mut team = Team::new(opts.threads, BarrierKind::Sleep);
+
+    let shuffle = crate::dslash::HoppingEo::new(&geom);
+    let gather = crate::dslash::HoppingGather::new(&geom);
+    let layout = shuffle.layout;
+    let ntiles = layout.ntiles();
+    let tile_f32 = SC2 * layout.vlen();
+
+    let mut profile = |use_gather: bool| -> (String, f64) {
+        let prof = Profiler::new(opts.threads);
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let n = opts.threads;
+        for _ in 0..opts.iters {
+            team.parallel(|tid| {
+                prof.scope(tid, Phase::Bulk, || {
+                    let (b, e) = chunk_range(ntiles, tid, n);
+                    if b == e {
+                        return;
+                    }
+                    let out_tiles =
+                        unsafe { out_ptr.slice_mut(b * tile_f32, (e - b) * tile_f32) };
+                    if use_gather {
+                        gather.apply_tiles(out_tiles, &u, &psi, Parity::Odd, b, e);
+                    } else {
+                        shuffle.apply_tiles(out_tiles, &u, &psi, Parity::Odd, b, e);
+                    }
+                });
+            });
+        }
+        let report = prof.snapshot();
+        let total = report.phase_total(Phase::Bulk);
+        let title = if use_gather {
+            "Fig 8 (top): bulk BEFORE tuning — gather/scatter variant"
+        } else {
+            "Fig 8 (bottom): bulk AFTER tuning — lane-shuffle (sel/tbl/ext) variant"
+        };
+        (report.render(title), total)
+    };
+
+    let (before_chart, before_secs) = profile(true);
+    let (after_chart, after_secs) = profile(false);
+
+    let mut report = String::new();
+    report.push_str(&before_chart);
+    report.push('\n');
+    report.push_str(&after_chart);
+    report.push_str(&format!(
+        "\nshape: tuned kernel speedup = {:.2}x (paper: the gather variant was the whole-kernel bottleneck via L1 busy)\n",
+        before_secs / after_secs
+    ));
+    Fig8Result {
+        report,
+        before_secs,
+        after_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gather_variant_slower() {
+        let r = run(Opts {
+            iters: 2,
+            threads: 1,
+            quick: true,
+        });
+        assert!(
+            r.before_secs > r.after_secs,
+            "gather {} vs shuffle {}",
+            r.before_secs,
+            r.after_secs
+        );
+        assert!(r.report.contains("Fig 8"));
+    }
+}

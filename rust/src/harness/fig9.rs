@@ -1,0 +1,124 @@
+//! Fig. 9: per-thread cycle accounting of the EO1 (pack) and EO2 (unpack)
+//! kernels, exposing the EO2 load imbalance, plus the balanced-EO2
+//! extension the paper proposes as future work.
+//!
+//! The imbalance mechanism (paper §4.1): EO2 is one flat loop over all
+//! local sites, split uniformly over threads; in canonical (t,z,y,x)
+//! order the *last* thread owns the high-t slab, whose sites all import
+//! from the upward t-process and pay the 3x3 link multiplication.
+
+use crate::comm::run_world;
+use crate::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Phase, Profiler, Team};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{Geometry, LatticeDims, Parity, Tiling};
+use crate::util::rng::Rng;
+
+use super::Opts;
+
+pub struct Fig9Result {
+    pub report: String,
+    /// max/mean thread-time imbalance of EO2, uniform schedule
+    pub eo2_imbalance_uniform: f64,
+    /// same with the cost-balanced schedule
+    pub eo2_imbalance_balanced: f64,
+    /// EO1 imbalance (should stay near 1)
+    pub eo1_imbalance: f64,
+    /// is the *last* thread the heaviest in EO2 (paper: thread 11)?
+    pub last_thread_heaviest: bool,
+}
+
+pub fn run(opts: Opts) -> Fig9Result {
+    let dims = if opts.quick {
+        LatticeDims::new(16, 16, 4, 4).unwrap()
+    } else {
+        LatticeDims::new(16, 16, 8, 8).unwrap()
+    };
+    let tiling = Tiling::new(4, 4).unwrap();
+    let geom = Geometry::single_rank(dims, tiling).unwrap();
+
+    let profile = |schedule: Eo2Schedule| {
+        run_world(1, |_, comm| {
+            let mut rng = Rng::seeded(99);
+            let u = GaugeField::random(&geom, &mut rng);
+            let psi = FermionField::gaussian(&geom, &mut rng);
+            let mut out = FermionField::zeros(&geom);
+            let dist = DistHopping::new(&geom, true, opts.threads, schedule);
+            let mut team = Team::new(opts.threads, BarrierKind::Sleep);
+            let prof = Profiler::new(opts.threads);
+            for _ in 0..opts.iters {
+                dist.hopping(&mut out, &u, &psi, Parity::Odd, comm, &mut team, &prof);
+            }
+            prof.snapshot()
+        })
+        .remove(0)
+    };
+
+    let uniform = profile(Eo2Schedule::Uniform);
+    let balanced = profile(Eo2Schedule::Balanced);
+
+    let eo2_vals: Vec<f64> = uniform
+        .times
+        .iter()
+        .map(|t| t[Phase::Eo2 as usize])
+        .collect();
+    let last_thread_heaviest = eo2_vals
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i == eo2_vals.len() - 1)
+        .unwrap_or(false);
+
+    let mut report = String::new();
+    report.push_str(&uniform.render(
+        "Fig 9: EO1 (pack) + EO2 (unpack) per-thread accounting — uniform site split",
+    ));
+    report.push('\n');
+    report.push_str(&balanced.render(
+        "Fig 9 (extension): cost-balanced EO2 split (the paper's proposed future work)",
+    ));
+    report.push_str(&format!(
+        "\nshape: EO1 imbalance {:.2} (paper: balanced), EO2 imbalance {:.2} (paper: significant, last thread heaviest: {}), balanced-EO2 imbalance {:.2}\n",
+        uniform.imbalance(Phase::Eo1),
+        uniform.imbalance(Phase::Eo2),
+        last_thread_heaviest,
+        balanced.imbalance(Phase::Eo2),
+    ));
+
+    Fig9Result {
+        report,
+        eo2_imbalance_uniform: uniform.imbalance(Phase::Eo2),
+        eo2_imbalance_balanced: balanced.imbalance(Phase::Eo2),
+        eo1_imbalance: uniform.imbalance(Phase::Eo1),
+        last_thread_heaviest,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eo2_imbalance_reproduced_and_fixed() {
+        // wall-clock thread times on an oversubscribed host are noisy, so
+        // assert the paper's *shape* with slack: uniform splitting shows a
+        // clear imbalance, and the cost-balanced split does not regress
+        // beyond noise. The exact cost-level guarantee is asserted
+        // deterministically in comm::balance.
+        let r = run(Opts {
+            iters: 16,
+            threads: 4,
+            quick: true,
+        });
+        assert!(
+            r.eo2_imbalance_uniform > 1.15,
+            "uniform EO2 should be imbalanced: {}",
+            r.eo2_imbalance_uniform
+        );
+        assert!(
+            r.eo2_imbalance_balanced < r.eo2_imbalance_uniform * 1.25,
+            "balanced schedule regressed: {} vs {}",
+            r.eo2_imbalance_balanced,
+            r.eo2_imbalance_uniform
+        );
+    }
+}

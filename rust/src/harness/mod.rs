@@ -1,0 +1,35 @@
+//! Benchmark harness: one module per table/figure of the paper's
+//! evaluation (DESIGN.md section 6 experiment index).
+//!
+//! Every module regenerates the corresponding artifact's rows/series on
+//! this host and prints them in the paper's format, alongside the
+//! A64FX-projected numbers per the substitution rule. Entry points are
+//! reachable both from `cargo bench` targets and the `lqcd` CLI.
+
+pub mod acle;
+pub mod barrier;
+pub mod fig10;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;
+
+/// Common options for harness runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Opts {
+    /// multiplications per measurement (paper: 1000)
+    pub iters: usize,
+    /// threads per rank (paper: 12)
+    pub threads: usize,
+    /// shrink lattices/iterations for CI-speed runs
+    pub quick: bool,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts {
+            iters: 50,
+            threads: 4,
+            quick: false,
+        }
+    }
+}

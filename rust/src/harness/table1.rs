@@ -1,0 +1,186 @@
+//! Table 1: effect of the 2D SIMD tiling on the even-odd Wilson matrix
+//! multiplication (single precision).
+//!
+//! Paper setup: four MPI ranks per node ([1,1,2,2]), per-process lattices
+//! 16x16x8x8, 64x16x8x4, 64x32x16x8; tilings 16x1, 8x2, 4x4, 2x8;
+//! communication enforced in all four directions; 1000 multiplications.
+//! The 16x1 tiling is unavailable on the first lattice (XH = 8 < 16) —
+//! the paper's dash.
+//!
+//! On this host we run one rank (the decomposition is SPMD-symmetric, so
+//! per-rank throughput is the per-node number divided by 4) with the
+//! communication path forced in all directions, exactly as the paper does
+//! for its self-process sends.
+
+use crate::comm::run_world;
+use crate::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{Geometry, LatticeDims, Parity, Tiling};
+use crate::util::rng::Rng;
+use crate::util::tables::Table;
+use crate::util::timer::Stopwatch;
+
+use super::Opts;
+
+/// One measured cell of Table 1.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub lattice: LatticeDims,
+    pub tiling: Tiling,
+    /// per-rank sustained GFlops (QXS flop convention); None = unavailable
+    pub gflops: Option<f64>,
+}
+
+/// The paper's per-process lattice list.
+pub fn paper_lattices(quick: bool) -> Vec<LatticeDims> {
+    if quick {
+        vec![
+            LatticeDims::new(16, 16, 4, 4).unwrap(),
+            LatticeDims::new(32, 16, 4, 4).unwrap(),
+        ]
+    } else {
+        vec![
+            LatticeDims::new(16, 16, 8, 8).unwrap(),
+            LatticeDims::new(64, 16, 8, 4).unwrap(),
+            LatticeDims::new(64, 32, 16, 8).unwrap(),
+        ]
+    }
+}
+
+/// Measure one (lattice, tiling) cell: `iters` applications of the
+/// even-odd matrix (both hopping blocks) through the full EO1/bulk/EO2
+/// pipeline with forced self-communication.
+pub fn measure_cell(
+    dims: LatticeDims,
+    tiling: Tiling,
+    iters: usize,
+    threads: usize,
+) -> Option<f64> {
+    let geom = Geometry::single_rank(dims, tiling).ok()?;
+    let secs = run_world(1, |_, comm| {
+        let mut rng = Rng::seeded(2023);
+        let u = GaugeField::random(&geom, &mut rng);
+        let psi_e = FermionField::gaussian(&geom, &mut rng);
+        let mut out_o = FermionField::zeros(&geom);
+        let mut out_e = FermionField::zeros(&geom);
+        let dist = DistHopping::new(&geom, true, threads, Eo2Schedule::Uniform);
+        let mut team = Team::new(threads, BarrierKind::Sleep);
+        let prof = Profiler::new(threads);
+        // warmup
+        dist.hopping(&mut out_o, &u, &psi_e, Parity::Odd, comm, &mut team, &prof);
+        let sw = Stopwatch::start();
+        for _ in 0..iters {
+            dist.hopping(&mut out_o, &u, &psi_e, Parity::Odd, comm, &mut team, &prof);
+            dist.hopping(&mut out_e, &u, &out_o, Parity::Even, comm, &mut team, &prof);
+        }
+        sw.secs()
+    })[0];
+    // one iteration = both blocks = 1368 flop x full local volume
+    let flops = crate::FLOP_PER_SITE as f64 * dims.volume() as f64 * iters as f64;
+    Some(flops / secs / 1e9)
+}
+
+/// Run the full sweep and render the paper-format table.
+pub fn run(opts: Opts) -> (String, Vec<Cell>) {
+    let tilings = Tiling::table1_sweep();
+    let mut cells = Vec::new();
+    let mut table = Table::new(
+        "Table 1: 2D tiling sweep, even-odd Wilson matrix, f32 (per-rank GFlops; paper reports per-node = 4 ranks)",
+        &["lattice size/process", "16x1", "8x2", "4x4", "2x8"],
+    );
+    for dims in paper_lattices(opts.quick) {
+        let mut row = vec![dims.to_string()];
+        for &tiling in &tilings {
+            let gflops = measure_cell(dims, tiling, opts.iters, opts.threads);
+            row.push(match gflops {
+                Some(g) => format!("{g:.2}"),
+                None => "-".to_string(),
+            });
+            cells.push(Cell {
+                lattice: dims,
+                tiling,
+                gflops,
+            });
+        }
+        table.row(row);
+    }
+    let mut out = table.render();
+    out.push_str(&shape_summary(&cells));
+    (out, cells)
+}
+
+/// The paper's qualitative claims about this table, evaluated on our data.
+fn shape_summary(cells: &[Cell]) -> String {
+    let mut out = String::new();
+    // claim 1: the smallest (cache-resident) lattice is fastest
+    let mut by_lattice: Vec<(LatticeDims, f64)> = Vec::new();
+    for c in cells {
+        if let Some(g) = c.gflops {
+            match by_lattice.iter_mut().find(|(d, _)| *d == c.lattice) {
+                Some((_, best)) => *best = best.max(g),
+                None => by_lattice.push((c.lattice, g)),
+            }
+        }
+    }
+    if by_lattice.len() > 1 {
+        let first = by_lattice[0];
+        let best_other = by_lattice[1..]
+            .iter()
+            .cloned()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        out.push_str(&format!(
+            "shape: smallest (cache-resident) lattice best? {} ({}: {:.2} vs best larger {}: {:.2}; paper: clearly yes — 24 MiB fits A64FX L2)\n",
+            first.1 >= best_other.1,
+            first.0,
+            first.1,
+            best_other.0,
+            best_other.1
+        ));
+    }
+    // claim 2: no strong tiling preference (spread across tilings small)
+    for (dims, _) in &by_lattice {
+        let vals: Vec<f64> = cells
+            .iter()
+            .filter(|c| c.lattice == *dims)
+            .filter_map(|c| c.gflops)
+            .collect();
+        if vals.len() > 1 {
+            let max = vals.iter().cloned().fold(f64::MIN, f64::max);
+            let min = vals.iter().cloned().fold(f64::MAX, f64::min);
+            out.push_str(&format!(
+                "shape: tiling spread on {dims}: {:.1}% (paper: no significant preference)\n",
+                (max - min) / max * 100.0
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_cell_measures() {
+        let g = measure_cell(
+            LatticeDims::new(8, 4, 4, 4).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+            2,
+            1,
+        );
+        assert!(g.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn unavailable_tiling_is_none() {
+        // 16x1 tiling on NX=16: XH = 8 < 16 -> None (the paper's dash)
+        let g = measure_cell(
+            LatticeDims::new(16, 16, 4, 4).unwrap(),
+            Tiling::new(16, 1).unwrap(),
+            1,
+            1,
+        );
+        assert!(g.is_none());
+    }
+}

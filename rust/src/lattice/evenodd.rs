@@ -1,0 +1,102 @@
+//! Even-odd (red-black) site decomposition, Fig. 4 of the paper.
+//!
+//! Site parity is `(x + y + z + t) mod 2`. Sites of one parity are stored
+//! *compacted in the x-direction*: a site of parity `p` at compact index
+//! `ix` in row `(y, z, t)` has lexical `x = 2*ix + phi` with the row parity
+//! `phi = (y + z + t + p) mod 2`.
+
+/// Site parity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Parity {
+    Even = 0,
+    Odd = 1,
+}
+
+impl Parity {
+    pub const BOTH: [Parity; 2] = [Parity::Even, Parity::Odd];
+
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    #[inline]
+    pub fn flip(self) -> Parity {
+        match self {
+            Parity::Even => Parity::Odd,
+            Parity::Odd => Parity::Even,
+        }
+    }
+
+    #[inline]
+    pub fn from_index(i: usize) -> Parity {
+        if i % 2 == 0 {
+            Parity::Even
+        } else {
+            Parity::Odd
+        }
+    }
+
+    /// Parity of a site from its coordinates.
+    #[inline]
+    pub fn of_site(x: usize, y: usize, z: usize, t: usize) -> Parity {
+        Parity::from_index(x + y + z + t)
+    }
+}
+
+/// Helper for even-odd coordinate arithmetic on a row basis.
+#[derive(Clone, Copy, Debug)]
+pub struct EvenOdd;
+
+impl EvenOdd {
+    /// Row parity `phi = (y + z + t + p) mod 2`.
+    #[inline]
+    pub fn row_parity(y: usize, z: usize, t: usize, p: Parity) -> usize {
+        (y + z + t + p.index()) % 2
+    }
+
+    /// Lexical x coordinate of compact index `ix` in a row of parity `phi`.
+    #[inline]
+    pub fn lexical_x(ix: usize, phi: usize) -> usize {
+        2 * ix + phi
+    }
+
+    /// Compact x index of a lexical coordinate `x` (must match parity).
+    #[inline]
+    pub fn compact_x(x: usize) -> usize {
+        x / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parity_basic() {
+        assert_eq!(Parity::of_site(0, 0, 0, 0), Parity::Even);
+        assert_eq!(Parity::of_site(1, 0, 0, 0), Parity::Odd);
+        assert_eq!(Parity::of_site(1, 1, 0, 0), Parity::Even);
+        assert_eq!(Parity::Even.flip(), Parity::Odd);
+        assert_eq!(Parity::Odd.flip(), Parity::Even);
+    }
+
+    #[test]
+    fn row_parity_reconstructs_x() {
+        // every lexical site maps to (parity, ix) and back
+        let (ny, nz, nt, nx) = (4, 2, 2, 8);
+        for t in 0..nt {
+            for z in 0..nz {
+                for y in 0..ny {
+                    for x in 0..nx {
+                        let p = Parity::of_site(x, y, z, t);
+                        let phi = EvenOdd::row_parity(y, z, t, p);
+                        assert_eq!(x % 2, phi, "x parity must equal row parity");
+                        let ix = EvenOdd::compact_x(x);
+                        assert_eq!(EvenOdd::lexical_x(ix, phi), x);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,268 @@
+//! Lattice extents and the 4D process decomposition.
+
+use std::fmt;
+
+use super::{Dir, Tiling};
+
+#[derive(Debug, Clone)]
+pub struct GeometryError(pub String);
+
+impl fmt::Display for GeometryError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for GeometryError {}
+
+/// Lattice extents, all even (even-odd parity must survive the periodic
+/// wrap) and >= 2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LatticeDims {
+    pub x: usize,
+    pub y: usize,
+    pub z: usize,
+    pub t: usize,
+}
+
+impl LatticeDims {
+    pub fn new(x: usize, y: usize, z: usize, t: usize) -> Result<Self, GeometryError> {
+        for (name, v) in [("NX", x), ("NY", y), ("NZ", z), ("NT", t)] {
+            if v < 2 {
+                return Err(GeometryError(format!("{name} must be >= 2, got {v}")));
+            }
+            if v % 2 != 0 {
+                return Err(GeometryError(format!(
+                    "{name} must be even for the even-odd layout, got {v}"
+                )));
+            }
+        }
+        Ok(LatticeDims { x, y, z, t })
+    }
+
+    /// Parse "16x16x8x8" (paper order NX x NY x NZ x NT).
+    pub fn parse(s: &str) -> Result<Self, GeometryError> {
+        let parts: Vec<usize> = s
+            .split('x')
+            .map(|p| p.parse().map_err(|_| GeometryError(format!("bad dims {s:?}"))))
+            .collect::<Result<_, _>>()?;
+        if parts.len() != 4 {
+            return Err(GeometryError(format!("dims must be NXxNYxNZxNT, got {s:?}")));
+        }
+        LatticeDims::new(parts[0], parts[1], parts[2], parts[3])
+    }
+
+    #[inline]
+    pub fn extent(&self, d: Dir) -> usize {
+        match d {
+            Dir::X => self.x,
+            Dir::Y => self.y,
+            Dir::Z => self.z,
+            Dir::T => self.t,
+        }
+    }
+
+    /// Compacted x extent (NX / 2).
+    #[inline]
+    pub fn xh(&self) -> usize {
+        self.x / 2
+    }
+
+    #[inline]
+    pub fn volume(&self) -> usize {
+        self.x * self.y * self.z * self.t
+    }
+
+    #[inline]
+    pub fn half_volume(&self) -> usize {
+        self.volume() / 2
+    }
+}
+
+impl fmt::Display for LatticeDims {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}x{}x{}", self.x, self.y, self.z, self.t)
+    }
+}
+
+/// 4D process grid (paper notation `[px, py, pz, pt]`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProcGrid(pub [usize; 4]);
+
+impl ProcGrid {
+    pub fn size(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Rank id of grid coordinates (x fastest).
+    pub fn rank_of(&self, c: [usize; 4]) -> usize {
+        ((c[3] * self.0[2] + c[2]) * self.0[1] + c[1]) * self.0[0] + c[0]
+    }
+
+    /// Grid coordinates of a rank id.
+    pub fn coords_of(&self, rank: usize) -> [usize; 4] {
+        let mut r = rank;
+        let mut c = [0usize; 4];
+        for d in 0..4 {
+            c[d] = r % self.0[d];
+            r /= self.0[d];
+        }
+        c
+    }
+
+    /// Neighbor rank in direction `d`, displacement `sign` (periodic).
+    pub fn neighbor(&self, rank: usize, d: Dir, sign: i64) -> usize {
+        let mut c = self.coords_of(rank);
+        let n = self.0[d.index()] as i64;
+        c[d.index()] = ((c[d.index()] as i64 + sign).rem_euclid(n)) as usize;
+        self.rank_of(c)
+    }
+}
+
+/// Per-rank geometry: local extents, tiling, and placement in the global
+/// lattice. Single-rank geometry has a trivial 1x1x1x1 grid.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    /// local (per-process) lattice extents
+    pub local: LatticeDims,
+    /// global lattice extents
+    pub global: LatticeDims,
+    pub tiling: Tiling,
+    pub grid: ProcGrid,
+    pub rank: usize,
+}
+
+impl Geometry {
+    pub fn single_rank(local: LatticeDims, tiling: Tiling) -> Result<Self, GeometryError> {
+        Self::for_rank(local, ProcGrid([1, 1, 1, 1]), 0, tiling)
+    }
+
+    /// Geometry of `rank` in a decomposition of `global` over `grid`.
+    pub fn for_rank(
+        global: LatticeDims,
+        grid: ProcGrid,
+        rank: usize,
+        tiling: Tiling,
+    ) -> Result<Self, GeometryError> {
+        if rank >= grid.size() {
+            return Err(GeometryError(format!(
+                "rank {rank} out of range for grid of {}",
+                grid.size()
+            )));
+        }
+        let g = grid.0;
+        for (d, name) in [(0, "NX"), (1, "NY"), (2, "NZ"), (3, "NT")] {
+            let ext = global.extent(Dir::from_index(d));
+            if ext % g[d] != 0 {
+                return Err(GeometryError(format!(
+                    "{name} = {ext} not divisible by grid[{d}] = {}",
+                    g[d]
+                )));
+            }
+        }
+        let local = LatticeDims::new(
+            global.x / g[0],
+            global.y / g[1],
+            global.z / g[2],
+            global.t / g[3],
+        )?;
+        if local.xh() % tiling.vx() != 0 {
+            return Err(GeometryError(format!(
+                "XH = {} not divisible by VLENX = {} (tiling {tiling} unavailable)",
+                local.xh(),
+                tiling.vx()
+            )));
+        }
+        if local.y % tiling.vy() != 0 {
+            return Err(GeometryError(format!(
+                "NY = {} not divisible by VLENY = {} (tiling {tiling} unavailable)",
+                local.y,
+                tiling.vy()
+            )));
+        }
+        Ok(Geometry {
+            local,
+            global,
+            tiling,
+            grid,
+            rank,
+        })
+    }
+
+    /// Grid coordinates of this rank.
+    pub fn coords(&self) -> [usize; 4] {
+        self.grid.coords_of(self.rank)
+    }
+
+    /// Global coordinate of the local origin. All local extents are even,
+    /// so the origin offset is even in every direction and local parity
+    /// equals global parity.
+    pub fn origin(&self) -> [usize; 4] {
+        let c = self.coords();
+        [
+            c[0] * self.local.x,
+            c[1] * self.local.y,
+            c[2] * self.local.z,
+            c[3] * self.local.t,
+        ]
+    }
+
+    /// Is this rank alone in direction `d` (wrap stays on-rank)?
+    pub fn self_neighbor(&self, d: Dir) -> bool {
+        self.grid.0[d.index()] == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_validation() {
+        assert!(LatticeDims::new(4, 4, 4, 4).is_ok());
+        assert!(LatticeDims::new(3, 4, 4, 4).is_err());
+        assert!(LatticeDims::new(4, 4, 4, 0).is_err());
+        assert_eq!(LatticeDims::parse("16x16x8x8").unwrap().volume(), 16 * 16 * 8 * 8);
+        assert!(LatticeDims::parse("16x16x8").is_err());
+    }
+
+    #[test]
+    fn grid_rank_roundtrip() {
+        let g = ProcGrid([1, 1, 2, 2]);
+        for r in 0..g.size() {
+            assert_eq!(g.rank_of(g.coords_of(r)), r);
+        }
+    }
+
+    #[test]
+    fn grid_neighbors_periodic() {
+        let g = ProcGrid([2, 1, 2, 1]);
+        // rank 0 at [0,0,0,0]; +x neighbor is rank 1, -x wraps to rank 1 too
+        assert_eq!(g.neighbor(0, Dir::X, 1), 1);
+        assert_eq!(g.neighbor(0, Dir::X, -1), 1);
+        assert_eq!(g.neighbor(0, Dir::Z, 1), 2);
+        assert_eq!(g.neighbor(2, Dir::Z, 1), 0);
+    }
+
+    #[test]
+    fn paper_decomposition() {
+        // 16^4 over [1,1,2,2] -> local 16x16x8x8 (paper section 4.1)
+        let global = LatticeDims::new(16, 16, 16, 16).unwrap();
+        let grid = ProcGrid([1, 1, 2, 2]);
+        let t = Tiling::new(4, 4).unwrap();
+        let geo = Geometry::for_rank(global, grid, 3, t).unwrap();
+        assert_eq!(geo.local, LatticeDims::new(16, 16, 8, 8).unwrap());
+        assert_eq!(geo.coords(), [0, 0, 1, 1]);
+        assert_eq!(geo.origin(), [0, 0, 8, 8]);
+        assert!(geo.self_neighbor(Dir::X));
+        assert!(!geo.self_neighbor(Dir::Z));
+    }
+
+    #[test]
+    fn tiling_divisibility_enforced() {
+        let local = LatticeDims::new(16, 16, 8, 8).unwrap();
+        // XH = 8 < VLENX = 16: unavailable, like the Table 1 dash
+        assert!(Geometry::single_rank(local, Tiling::new(16, 1).unwrap()).is_err());
+        assert!(Geometry::single_rank(local, Tiling::new(4, 4).unwrap()).is_ok());
+    }
+}

@@ -1,0 +1,277 @@
+//! AoSoA memory layout (paper section 3.2, Eq. 7).
+//!
+//! For one parity, single precision, the paper's layout is
+//!
+//! ```text
+//! spinor: [NT][NZ][NY/VLENY][NX/NEO/VLENX][ND][NC][2][VLEN]
+//! gauge : [NDIM][NEO][NT][NZ][NY/VLENY][NX/NEO/VLENX][NC][NC][2][VLEN]
+//! ```
+//!
+//! i.e. "Array of Structure of Array": the trailing `[VLEN]` axis is the
+//! SIMD vector, holding a `VLENX x VLENY` tile of the x-compacted x-y
+//! plane (lane = `ly * VLENX + lx`, x fastest). Real and imaginary parts
+//! occupy separate vectors (`[2]` axis), matching QWS.
+
+use super::{EvenOdd, Geometry, Parity, Tiling};
+
+pub const NSPIN: usize = 4;
+pub const NCOL: usize = 3;
+pub const NREIM: usize = 2;
+/// spin x color x re/im components per site of a spinor field
+pub const SC2: usize = NSPIN * NCOL * NREIM; // 24
+/// color x color x re/im components per site of one gauge link
+pub const CC2: usize = NCOL * NCOL * NREIM; // 18
+pub const RE: usize = 0;
+pub const IM: usize = 1;
+
+/// A site of one parity in compacted coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SiteCoord {
+    pub t: usize,
+    pub z: usize,
+    pub y: usize,
+    /// compacted x index (lexical x = 2*ix + phi)
+    pub ix: usize,
+}
+
+/// Position of a site inside the AoSoA storage: which tile, which lane.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LaneCoord {
+    pub tile: usize,
+    pub lane: usize,
+}
+
+/// Index calculator for the AoSoA layout of one parity.
+#[derive(Clone, Copy, Debug)]
+pub struct EoLayout {
+    pub nt: usize,
+    pub nz: usize,
+    /// tiles along y: NY / VLENY
+    pub nyt: usize,
+    /// tiles along compacted x: XH / VLENX
+    pub nxt: usize,
+    pub tiling: Tiling,
+}
+
+impl EoLayout {
+    pub fn new(geom: &Geometry) -> EoLayout {
+        let d = geom.local;
+        let tl = geom.tiling;
+        debug_assert_eq!(d.xh() % tl.vx(), 0);
+        debug_assert_eq!(d.y % tl.vy(), 0);
+        EoLayout {
+            nt: d.t,
+            nz: d.z,
+            nyt: d.y / tl.vy(),
+            nxt: d.xh() / tl.vx(),
+            tiling: tl,
+        }
+    }
+
+    #[inline]
+    pub fn vlen(&self) -> usize {
+        self.tiling.vlen()
+    }
+
+    /// Number of SIMD tiles in one parity field.
+    #[inline]
+    pub fn ntiles(&self) -> usize {
+        self.nt * self.nz * self.nyt * self.nxt
+    }
+
+    /// Number of sites in one parity field.
+    #[inline]
+    pub fn nsites(&self) -> usize {
+        self.ntiles() * self.vlen()
+    }
+
+    /// f32 length of a spinor field in this layout.
+    #[inline]
+    pub fn spinor_len(&self) -> usize {
+        self.ntiles() * SC2 * self.vlen()
+    }
+
+    /// f32 length of one direction+parity of the gauge field.
+    #[inline]
+    pub fn gauge_len(&self) -> usize {
+        self.ntiles() * CC2 * self.vlen()
+    }
+
+    /// Tile index of tile coordinates (t, z, yt, xt); xt fastest.
+    #[inline]
+    pub fn tile_index(&self, t: usize, z: usize, yt: usize, xt: usize) -> usize {
+        debug_assert!(t < self.nt && z < self.nz && yt < self.nyt && xt < self.nxt);
+        ((t * self.nz + z) * self.nyt + yt) * self.nxt + xt
+    }
+
+    /// Inverse of [`tile_index`]: tile -> (t, z, yt, xt).
+    #[inline]
+    pub fn tile_coords(&self, tile: usize) -> (usize, usize, usize, usize) {
+        let xt = tile % self.nxt;
+        let r = tile / self.nxt;
+        let yt = r % self.nyt;
+        let r = r / self.nyt;
+        let z = r % self.nz;
+        let t = r / self.nz;
+        (t, z, yt, xt)
+    }
+
+    /// Storage position of a compacted site.
+    #[inline]
+    pub fn site_to_lane(&self, s: SiteCoord) -> LaneCoord {
+        let (vx, vy) = (self.tiling.vx(), self.tiling.vy());
+        let tile = self.tile_index(s.t, s.z, s.y / vy, s.ix / vx);
+        LaneCoord {
+            tile,
+            lane: self.tiling.lane(s.ix % vx, s.y % vy),
+        }
+    }
+
+    /// Inverse of [`site_to_lane`].
+    #[inline]
+    pub fn lane_to_site(&self, lc: LaneCoord) -> SiteCoord {
+        let (t, z, yt, xt) = self.tile_coords(lc.tile);
+        let (lx, ly) = self.tiling.coords(lc.lane);
+        SiteCoord {
+            t,
+            z,
+            y: yt * self.tiling.vy() + ly,
+            ix: xt * self.tiling.vx() + lx,
+        }
+    }
+
+    /// Offset of the `[VLEN]` vector for spinor component (spin, color, reim).
+    #[inline]
+    pub fn spinor_vec(&self, tile: usize, spin: usize, color: usize, reim: usize) -> usize {
+        debug_assert!(spin < NSPIN && color < NCOL && reim < NREIM);
+        ((tile * NSPIN + spin) * NCOL + color) * NREIM * self.vlen()
+            + reim * self.vlen()
+    }
+
+    /// Offset of the `[VLEN]` vector for link component (row a, col b, reim).
+    #[inline]
+    pub fn gauge_vec(&self, tile: usize, a: usize, b: usize, reim: usize) -> usize {
+        debug_assert!(a < NCOL && b < NCOL && reim < NREIM);
+        ((tile * NCOL + a) * NCOL + b) * NREIM * self.vlen() + reim * self.vlen()
+    }
+
+    /// Scalar f32 offset of one spinor component of one site.
+    #[inline]
+    pub fn spinor_elem(
+        &self,
+        s: SiteCoord,
+        spin: usize,
+        color: usize,
+        reim: usize,
+    ) -> usize {
+        let lc = self.site_to_lane(s);
+        self.spinor_vec(lc.tile, spin, color, reim) + lc.lane
+    }
+
+    /// Scalar f32 offset of one link component of one site.
+    #[inline]
+    pub fn gauge_elem(&self, s: SiteCoord, a: usize, b: usize, reim: usize) -> usize {
+        let lc = self.site_to_lane(s);
+        self.gauge_vec(lc.tile, a, b, reim) + lc.lane
+    }
+
+    /// Iterate all compacted sites of this parity (t, z, y, ix order).
+    pub fn sites(&self) -> impl Iterator<Item = SiteCoord> + '_ {
+        let (vy, vx) = (self.tiling.vy(), self.tiling.vx());
+        let (ny, nxh) = (self.nyt * vy, self.nxt * vx);
+        (0..self.nt).flat_map(move |t| {
+            (0..self.nz).flat_map(move |z| {
+                (0..ny).flat_map(move |y| {
+                    (0..nxh).map(move |ix| SiteCoord { t, z, y, ix })
+                })
+            })
+        })
+    }
+
+    /// Lexical x of a compacted site for output parity `p`.
+    #[inline]
+    pub fn lexical_x(&self, s: SiteCoord, p: Parity) -> usize {
+        EvenOdd::lexical_x(s.ix, EvenOdd::row_parity(s.y, s.z, s.t, p))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::LatticeDims;
+
+    fn layout(tiling: Tiling) -> EoLayout {
+        let dims = LatticeDims::new(16, 8, 4, 6).unwrap();
+        let geom = Geometry::single_rank(dims, tiling).unwrap();
+        EoLayout::new(&geom)
+    }
+
+    #[test]
+    fn site_lane_bijection() {
+        for tiling in [Tiling::new(4, 4).unwrap(), Tiling::new(8, 2).unwrap(), Tiling::new(2, 8).unwrap()] {
+            let l = layout(tiling);
+            let mut seen = vec![false; l.nsites()];
+            for s in l.sites() {
+                let lc = l.site_to_lane(s);
+                assert_eq!(l.lane_to_site(lc), s);
+                let flat = lc.tile * l.vlen() + lc.lane;
+                assert!(!seen[flat], "collision at {s:?}");
+                seen[flat] = true;
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn offsets_disjoint_and_dense() {
+        let l = layout(Tiling::new(4, 2).unwrap());
+        // every (site, spin, color, reim) must map to a unique offset
+        let mut seen = vec![false; l.spinor_len()];
+        for s in l.sites() {
+            for spin in 0..NSPIN {
+                for color in 0..NCOL {
+                    for reim in 0..NREIM {
+                        let off = l.spinor_elem(s, spin, color, reim);
+                        assert!(!seen[off]);
+                        seen[off] = true;
+                    }
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "layout leaves holes");
+    }
+
+    #[test]
+    fn vectors_are_contiguous_lanes() {
+        let l = layout(Tiling::new(4, 4).unwrap());
+        let base = l.spinor_vec(3, 2, 1, IM);
+        // lane n of the same vector is base + n
+        let (t, z, yt, xt) = l.tile_coords(3);
+        for lane in 0..l.vlen() {
+            let (lx, ly) = l.tiling.coords(lane);
+            let s = SiteCoord {
+                t,
+                z,
+                y: yt * l.tiling.vy() + ly,
+                ix: xt * l.tiling.vx() + lx,
+            };
+            assert_eq!(l.spinor_elem(s, 2, 1, IM), base + lane);
+        }
+    }
+
+    #[test]
+    fn tile_coords_roundtrip() {
+        let l = layout(Tiling::new(2, 2).unwrap());
+        for tile in 0..l.ntiles() {
+            let (t, z, yt, xt) = l.tile_coords(tile);
+            assert_eq!(l.tile_index(t, z, yt, xt), tile);
+        }
+    }
+
+    #[test]
+    fn gauge_len_ratio() {
+        let l = layout(Tiling::new(4, 4).unwrap());
+        // 18 components per link vs 24 per spinor site
+        assert_eq!(l.gauge_len() * SC2, l.spinor_len() * CC2);
+    }
+}

@@ -1,0 +1,35 @@
+//! Lattice geometry: extents, even-odd site indexing (Fig. 4), the 2D x-y
+//! SIMD tiling (Fig. 3), and the AoSoA memory layout shared by all native
+//! kernels.
+
+mod evenodd;
+mod geometry;
+mod layout;
+mod tiling;
+
+pub use evenodd::{EvenOdd, Parity};
+pub use geometry::{Geometry, GeometryError, LatticeDims};
+pub use geometry::ProcGrid;
+pub use layout::{EoLayout, LaneCoord, SiteCoord, CC2, IM, NCOL, NREIM, NSPIN, RE, SC2};
+pub use tiling::Tiling;
+
+/// Direction labels, paper order: x, y, z, t.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    X = 0,
+    Y = 1,
+    Z = 2,
+    T = 3,
+}
+
+impl Dir {
+    pub const ALL: [Dir; 4] = [Dir::X, Dir::Y, Dir::Z, Dir::T];
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Dir {
+        Dir::ALL[i]
+    }
+}

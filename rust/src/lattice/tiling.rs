@@ -1,0 +1,124 @@
+//! 2D x-y SIMD tiling (paper Fig. 3): a `VLENX x VLENY` patch of the
+//! x-compacted x-y plane is packed into one SIMD vector of
+//! `VLEN = VLENX * VLENY` lanes. Lane order within a vector is
+//! x-fastest: `lane = ly * VLENX + lx`.
+
+use std::fmt;
+
+/// A 2D SIMD tiling choice. The paper's single-precision sweep uses
+/// VLEN = 16 with shapes 16x1, 8x2, 4x4 and 2x8 (Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tiling {
+    vx: usize,
+    vy: usize,
+}
+
+impl Tiling {
+    /// Create a tiling; `vx >= 2` because even-odd compaction halves the
+    /// x extent (the paper's VLENX >= 2 restriction), `vy >= 1`.
+    pub fn new(vx: usize, vy: usize) -> Result<Tiling, String> {
+        if vx < 2 {
+            return Err(format!(
+                "VLENX must be >= 2 (even-odd halves x), got {vx}"
+            ));
+        }
+        if vy < 1 {
+            return Err("VLENY must be >= 1".to_string());
+        }
+        Ok(Tiling { vx, vy })
+    }
+
+    /// Parse "4x4" style strings.
+    pub fn parse(s: &str) -> Result<Tiling, String> {
+        let (a, b) = s
+            .split_once('x')
+            .ok_or_else(|| format!("tiling must be VXxVY, got {s:?}"))?;
+        let vx = a.parse().map_err(|_| format!("bad VLENX in {s:?}"))?;
+        let vy = b.parse().map_err(|_| format!("bad VLENY in {s:?}"))?;
+        Tiling::new(vx, vy)
+    }
+
+    /// The Table 1 sweep for VLEN = 16.
+    pub fn table1_sweep() -> Vec<Tiling> {
+        vec![
+            Tiling { vx: 16, vy: 1 },
+            Tiling { vx: 8, vy: 2 },
+            Tiling { vx: 4, vy: 4 },
+            Tiling { vx: 2, vy: 8 },
+        ]
+    }
+
+    #[inline]
+    pub fn vx(self) -> usize {
+        self.vx
+    }
+
+    #[inline]
+    pub fn vy(self) -> usize {
+        self.vy
+    }
+
+    /// SIMD vector length (lanes).
+    #[inline]
+    pub fn vlen(self) -> usize {
+        self.vx * self.vy
+    }
+
+    /// Lane index of in-tile coordinates (x-fastest).
+    #[inline]
+    pub fn lane(self, lx: usize, ly: usize) -> usize {
+        debug_assert!(lx < self.vx && ly < self.vy);
+        ly * self.vx + lx
+    }
+
+    /// Inverse of [`Tiling::lane`]: lane -> (lx, ly).
+    #[inline]
+    pub fn coords(self, lane: usize) -> (usize, usize) {
+        debug_assert!(lane < self.vlen());
+        (lane % self.vx, lane / self.vx)
+    }
+}
+
+impl fmt::Display for Tiling {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.vx, self.vy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_roundtrip() {
+        let t = Tiling::new(4, 4).unwrap();
+        for lane in 0..t.vlen() {
+            let (lx, ly) = t.coords(lane);
+            assert_eq!(t.lane(lx, ly), lane);
+        }
+    }
+
+    #[test]
+    fn vlenx_1_rejected() {
+        assert!(Tiling::new(1, 16).is_err());
+    }
+
+    #[test]
+    fn parse_and_display() {
+        let t = Tiling::parse("8x2").unwrap();
+        assert_eq!((t.vx(), t.vy(), t.vlen()), (8, 2, 16));
+        assert_eq!(t.to_string(), "8x2");
+        assert!(Tiling::parse("8").is_err());
+        assert!(Tiling::parse("axb").is_err());
+    }
+
+    #[test]
+    fn table1_sweep_shapes() {
+        let shapes: Vec<(usize, usize)> = Tiling::table1_sweep()
+            .iter()
+            .map(|t| (t.vx(), t.vy()))
+            .collect();
+        assert_eq!(shapes, vec![(16, 1), (8, 2), (4, 4), (2, 8)]);
+        assert!(Tiling::table1_sweep().iter().all(|t| t.vlen() == 16));
+    }
+}

@@ -1,0 +1,39 @@
+//! # lqcd — even-odd Wilson fermion matrix on a SIMD-tiled lattice
+//!
+//! A reproduction of *“Wilson matrix kernel for lattice QCD on A64FX
+//! architecture”* (Kanamori, Nitadori, Matsufuru; HPCAsia 2023 workshops,
+//! DOI 10.1145/3581576.3581610) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — the Pallas even-odd hopping kernel (`python/compile/kernels/`),
+//!   AOT-lowered to HLO text at build time.
+//! * **L2** — the JAX even-odd preconditioned operator and solver graphs
+//!   (`python/compile/model.py`).
+//! * **L3** — this crate: the parallel runtime. Simulated-MPI rank world,
+//!   halo exchange with the paper's EO1 (pack) / EO2 (unpack) kernels,
+//!   thread team with bulk/boundary overlap, FAPP-analog profiler, CG /
+//!   BiCGStab drivers, a PJRT runtime executing the AOT artifacts, and a
+//!   complete *native* even-odd Wilson dslash — the “ACLE” analog — with
+//!   lane-shuffle stencil shifts (`sel`/`tbl`/`ext`/`compact` analogs),
+//!   plus the gather-indexed and plain-scalar variants the paper profiles
+//!   against (Fig. 8, §4.2).
+//!
+//! The benchmark harness ([`harness`]) regenerates every table and figure
+//! of the paper's evaluation; see `DESIGN.md` for the experiment index and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod algebra;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod dslash;
+pub mod field;
+pub mod harness;
+pub mod lattice;
+pub mod perf;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+/// Floating-point operations per lattice site for one application of the
+/// full Wilson matrix `D_W` in the QXS counting convention (paper §2).
+pub const FLOP_PER_SITE: u64 = 1368;

@@ -1,0 +1,244 @@
+//! `lqcd` — launcher for the even-odd Wilson matrix runtime.
+//!
+//! Subcommands:
+//!   info                     machine model + host calibration + manifest
+//!   solve                    even-odd CG/BiCGStab solve (native or PJRT)
+//!   bench-table1             Table 1: 2D tiling sweep
+//!   bench-fig8               Fig 8: gather vs shuffle cycle accounting
+//!   bench-fig9               Fig 9: EO1/EO2 thread accounting (+balanced)
+//!   bench-fig10              Fig 10: weak scaling projection
+//!   bench-acle               §4.2: vectorized vs plain (~10x claim)
+//!   bench-barrier            FLIB_BARRIER ablation
+
+use std::process::ExitCode;
+
+use lqcd::config::RunConfig;
+use lqcd::coordinator::operator::{LinearOperator, NativeMdagM, NativeMeo};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::harness::{self, Opts};
+use lqcd::lattice::{Geometry, LatticeDims, Tiling};
+use lqcd::perf::{calibrate_host, A64fx};
+use lqcd::solver;
+use lqcd::util::cli;
+use lqcd::util::rng::Rng;
+
+const VALUE_OPTS: &[&str] = &[
+    "dims", "tiling", "threads", "iters", "config", "kappa", "tol", "maxiter",
+    "algorithm", "artifacts", "seed",
+];
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<(), Box<dyn std::error::Error>> {
+    let args = cli::parse(std::env::args().skip(1), VALUE_OPTS)?;
+    let cmd = args.command.clone().unwrap_or_else(|| "help".to_string());
+
+    // config file as base, CLI overrides
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(std::path::Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(d) = args.get("dims") {
+        cfg.lattice.global = LatticeDims::parse(d)?;
+    }
+    if let Some(t) = args.get("tiling") {
+        cfg.lattice.tiling = Tiling::parse(t)?;
+    }
+    cfg.solver.kappa = args.get_parse("kappa", cfg.solver.kappa)?;
+    cfg.solver.tol = args.get_parse("tol", cfg.solver.tol)?;
+    cfg.solver.maxiter = args.get_parse("maxiter", cfg.solver.maxiter)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.into();
+    }
+    if let Some(alg) = args.get("algorithm") {
+        cfg.solver.algorithm = alg.to_string();
+    }
+    let use_pjrt = args.flag("pjrt") || cfg.solver.use_pjrt;
+    let opts = Opts {
+        iters: args.get_parse("iters", if args.flag("quick") { 10 } else { 50 })?,
+        threads: args.get_parse("threads", cfg.parallel.threads_per_rank)?,
+        quick: args.flag("quick"),
+    };
+    args.finish()?;
+
+    match cmd.as_str() {
+        "info" => info(&cfg),
+        "solve" => solve(&cfg, use_pjrt),
+        "bench-table1" => {
+            let (report, _) = harness::table1::run(opts);
+            println!("{report}");
+            Ok(())
+        }
+        "bench-fig8" => {
+            println!("{}", harness::fig8::run(opts).report);
+            Ok(())
+        }
+        "bench-fig9" => {
+            println!("{}", harness::fig9::run(opts).report);
+            Ok(())
+        }
+        "bench-fig10" => {
+            println!("{}", harness::fig10::run(opts).report);
+            Ok(())
+        }
+        "bench-acle" => {
+            println!("{}", harness::acle::run(opts).report);
+            Ok(())
+        }
+        "bench-barrier" => {
+            println!("{}", harness::barrier::run(opts).report);
+            Ok(())
+        }
+        _ => {
+            println!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn info(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
+    let a64 = A64fx::fugaku_normal();
+    println!("# lqcd — even-odd Wilson matrix on a SIMD-tiled lattice");
+    println!(
+        "paper target: A64FX node, {:.0} GFlops f32 peak, {:.0} GB/s,",
+        a64.peak_sp_gflops, a64.mem_bw_gbs
+    );
+    println!(
+        "  B/F=1.12 memory roofline = {:.0} GFlops/node",
+        a64.mem_roofline_gflops(1.12)
+    );
+    let host = calibrate_host();
+    println!(
+        "this host: ~{:.1} GFlops/core f32 (measured), ~{:.1} GB/s stream,",
+        host.core_sp_gflops, host.mem_bw_gbs
+    );
+    println!(
+        "  host B/F=1.12 roofline = {:.1} GFlops",
+        host.mem_roofline_gflops(1.12)
+    );
+    println!(
+        "config: lattice {} tiling {} kappa {}",
+        cfg.lattice.global, cfg.lattice.tiling, cfg.solver.kappa
+    );
+    match lqcd::runtime::Runtime::load(&cfg.artifacts_dir) {
+        Ok(rt) => {
+            println!(
+                "artifacts: {} compiled on {} (lattice {})",
+                rt.manifest.artifacts.len(),
+                rt.platform(),
+                rt.manifest.dims
+            );
+            for a in &rt.manifest.artifacts {
+                println!("  - {}", a.name);
+            }
+        }
+        Err(e) => println!("artifacts: not loaded ({e})"),
+    }
+    Ok(())
+}
+
+fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Error>> {
+    let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
+        .map_err(|e| e.to_string())?;
+    let mut rng = Rng::seeded(cfg.seed);
+    println!(
+        "generating random gauge configuration on {} ...",
+        cfg.lattice.global
+    );
+    let u = GaugeField::random(&geom, &mut rng);
+    println!("plaquette = {:.6}", u.plaquette());
+    let b = FermionField::gaussian(&geom, &mut rng);
+    let kappa = cfg.solver.kappa as f32;
+
+    let sw = lqcd::util::timer::Stopwatch::start();
+    let stats = if use_pjrt {
+        let rt = lqcd::runtime::Runtime::load(&cfg.artifacts_dir)?;
+        println!("PJRT platform: {}", rt.platform());
+        let mut op = lqcd::runtime::PjrtMeo::new(&rt, &geom, &u, kappa)?;
+        let mut x = FermionField::zeros(&geom);
+        let stats =
+            solver::bicgstab(&mut op, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
+        println!(
+            "true |Mx-b|/|b| = {:.3e}",
+            solver::residual::operator_residual(&mut op, &x, &b)
+        );
+        stats
+    } else if cfg.solver.algorithm == "bicgstab" {
+        let mut op = NativeMeo::new(&geom, u, kappa);
+        let mut x = FermionField::zeros(&geom);
+        let stats =
+            solver::bicgstab(&mut op, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
+        println!(
+            "true |Mx-b|/|b| = {:.3e}",
+            solver::residual::operator_residual(&mut op, &x, &b)
+        );
+        stats
+    } else {
+        // CGNR: solve M^dag M x = M^dag b
+        let mut op = NativeMdagM::new(&geom, u, kappa);
+        let mut bp = b.clone();
+        bp.gamma5();
+        let mut mbp = FermionField::zeros(&geom);
+        op.meo().apply(&mut mbp, &bp);
+        mbp.gamma5();
+        let mut x = FermionField::zeros(&geom);
+        let stats = solver::cg(&mut op, &mut x, &mbp, cfg.solver.tol, cfg.solver.maxiter);
+        println!(
+            "true |MdagM x - Mdag b|/|Mdag b| = {:.3e}",
+            solver::residual::operator_residual(&mut op, &x, &mbp)
+        );
+        stats
+    };
+    let secs = sw.secs();
+    println!(
+        "{}: {} iterations, converged={}, rel residual {:.3e}, {:.2}s, {:.2} GFlops",
+        if use_pjrt {
+            "pjrt-bicgstab"
+        } else {
+            &cfg.solver.algorithm
+        },
+        stats.iterations,
+        stats.converged,
+        stats.rel_residual,
+        secs,
+        stats.flops as f64 / secs / 1e9,
+    );
+    Ok(())
+}
+
+const HELP: &str = "\
+lqcd — even-odd Wilson fermion matrix for lattice QCD (A64FX paper repro)
+
+USAGE: lqcd <command> [options]
+
+COMMANDS:
+  info          machine model, host calibration, artifact inventory
+  solve         even-odd preconditioned solve on a random gauge field
+  bench-table1  Table 1: 2D SIMD tiling sweep (GFlops)
+  bench-fig8    Fig 8: gather/scatter vs shuffle bulk kernel accounting
+  bench-fig9    Fig 9: EO1/EO2 per-thread load (+ balanced extension)
+  bench-fig10   Fig 10: weak scaling to 512 nodes (TofuD model)
+  bench-acle    vectorized vs plain scalar kernel (~10x claim)
+  bench-barrier FLIB_BARRIER ablation (spin vs sleep barrier)
+
+OPTIONS:
+  --dims NXxNYxNZxNT   lattice (default 8x8x8x16)
+  --tiling VXxVY       SIMD tiling (default 4x4)
+  --threads N          threads per rank
+  --iters N            measurement iterations
+  --kappa X --tol X --maxiter N
+  --algorithm cg|bicgstab
+  --pjrt               execute the AOT artifacts on the hot path
+  --artifacts DIR      artifact directory (default ./artifacts)
+  --config FILE        TOML-subset run configuration
+  --quick              smaller lattices/iterations
+";

@@ -1,0 +1,134 @@
+//! Machine models: the A64FX/Fugaku node the paper ran on, and a
+//! calibration of *this* host so measured GFlops can be normalized into
+//! paper-scale estimates (DESIGN.md section 4: substitution rule).
+
+use std::time::Instant;
+
+/// A64FX (Fugaku node) parameters, paper §3.1.
+#[derive(Clone, Copy, Debug)]
+pub struct A64fx {
+    /// single-precision peak per node (normal mode 2.0 GHz), GFlops
+    pub peak_sp_gflops: f64,
+    /// double-precision peak per node, GFlops
+    pub peak_dp_gflops: f64,
+    /// HBM bandwidth per node, GB/s
+    pub mem_bw_gbs: f64,
+    /// L2 size per CMG, bytes
+    pub l2_per_cmg: usize,
+    pub cmgs: usize,
+    pub cores_per_cmg: usize,
+}
+
+impl A64fx {
+    pub const fn fugaku_normal() -> A64fx {
+        A64fx {
+            peak_sp_gflops: 6144.0,
+            peak_dp_gflops: 3072.0,
+            mem_bw_gbs: 1024.0,
+            l2_per_cmg: 8 * 1024 * 1024,
+            cmgs: 4,
+            cores_per_cmg: 12,
+        }
+    }
+
+    /// Memory-roofline bound for a kernel with byte/flop ratio `bf`
+    /// (B/F = 1.12 for the Wilson matrix, paper §2), in GFlops.
+    pub fn mem_roofline_gflops(&self, bf: f64) -> f64 {
+        self.mem_bw_gbs / bf
+    }
+
+    /// Does a working set fit in the node's total L2?
+    pub fn fits_l2(&self, bytes: usize) -> bool {
+        bytes <= self.l2_per_cmg * self.cmgs
+    }
+}
+
+/// Measured characteristics of the host running the benchmarks.
+#[derive(Clone, Copy, Debug)]
+pub struct HostCalibration {
+    /// single-core f32 FMA throughput estimate, GFlops
+    pub core_sp_gflops: f64,
+    /// large-buffer streaming read bandwidth, GB/s
+    pub mem_bw_gbs: f64,
+}
+
+/// Quick (~100 ms) calibration of this host.
+pub fn calibrate_host() -> HostCalibration {
+    // --- FMA throughput: 8 independent f32x8 accumulator chains ---------
+    const LANES: usize = 8;
+    const CHAINS: usize = 8;
+    let mut acc = [[1.0f32; LANES]; CHAINS];
+    let a = [1.000_1f32; LANES];
+    let b = [0.999_9f32; LANES];
+    let iters = 2_000_000usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for c in 0..CHAINS {
+            for l in 0..LANES {
+                acc[c][l] = acc[c][l] * a[l] + b[l];
+            }
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    // keep the result alive
+    let sink: f32 = acc.iter().flatten().sum();
+    std::hint::black_box(sink);
+    let flops = (iters * CHAINS * LANES * 2) as f64;
+    let core_sp_gflops = flops / dt / 1e9;
+
+    // --- streaming bandwidth: sum a buffer much larger than LLC ---------
+    let n = 64 * 1024 * 1024 / 4; // 64 MiB of f32
+    let buf = vec![1.0f32; n];
+    let t0 = Instant::now();
+    let mut total = 0.0f32;
+    for chunk in buf.chunks_exact(16) {
+        let mut s = 0.0f32;
+        for &v in chunk {
+            s += v;
+        }
+        total += s;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(total);
+    let mem_bw_gbs = (n * 4) as f64 / dt / 1e9;
+
+    HostCalibration {
+        core_sp_gflops,
+        mem_bw_gbs,
+    }
+}
+
+impl HostCalibration {
+    /// Memory-roofline bound on this host for byte/flop ratio `bf`.
+    pub fn mem_roofline_gflops(&self, bf: f64) -> f64 {
+        self.mem_bw_gbs / bf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a64fx_constants() {
+        let m = A64fx::fugaku_normal();
+        assert_eq!(m.cmgs * m.cores_per_cmg, 48);
+        // B/F = 1.12 roofline ~ 914 GFlops; Table 1 best (448) is ~half
+        let roof = m.mem_roofline_gflops(1.12);
+        assert!((roof - 914.3).abs() < 1.0);
+        assert!(448.0 / roof > 0.4 && 448.0 / roof < 0.6);
+        assert!(m.fits_l2(24 * 1024 * 1024));
+        assert!(!m.fits_l2(64 * 1024 * 1024));
+    }
+
+    #[test]
+    fn host_calibration_sane() {
+        let h = calibrate_host();
+        // generous bounds: debug builds are ~50x slower than release
+        assert!(
+            h.core_sp_gflops > 0.01 && h.core_sp_gflops < 10_000.0,
+            "{h:?}"
+        );
+        assert!(h.mem_bw_gbs > 0.05 && h.mem_bw_gbs < 10_000.0, "{h:?}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Performance models: the A64FX machine model, host calibration, and
+//! roofline / efficiency conversions (DESIGN.md sections 4, 10).
+
+pub mod machine;
+pub mod roofline;
+
+pub use machine::{calibrate_host, A64fx, HostCalibration};

@@ -1,0 +1,57 @@
+//! Byte/flop accounting and roofline/efficiency conversions between this
+//! host and the paper's A64FX numbers.
+
+use crate::lattice::LatticeDims;
+
+/// Bytes touched per site by one Wilson matrix application in single
+/// precision: the paper quotes B/F = 1.12 at 1368 flop/site.
+pub const WILSON_BF: f64 = 1.12;
+
+/// Data footprint (bytes) of the gauge + spinor working set of one local
+/// lattice in single precision (paper §4.1: 18 MiB + 6 MiB at 16^4).
+pub fn working_set_bytes(dims: LatticeDims) -> usize {
+    let sites = dims.volume();
+    let gauge = sites * 4 * 9 * 2 * 4; // 4 dirs x 3x3 complex f32
+    let spinor = sites * 4 * 3 * 2 * 4; // 4 spin x 3 color complex f32
+    gauge + spinor
+}
+
+/// Efficiency of a measurement relative to a peak (fraction).
+pub fn efficiency(measured_gflops: f64, peak_gflops: f64) -> f64 {
+    measured_gflops / peak_gflops
+}
+
+/// Translate "fraction of memory roofline achieved on this host" into the
+/// GFlops the same fraction would give on a Fugaku node — the
+/// shape-preserving normalization used in EXPERIMENTS.md.
+pub fn project_to_a64fx(
+    measured_gflops: f64,
+    host_roofline_gflops: f64,
+    a64fx_roofline_gflops: f64,
+) -> f64 {
+    measured_gflops / host_roofline_gflops * a64fx_roofline_gflops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_footprint_16_4() {
+        // paper §4.1: at 16^4, gauge 18 MiB and spinor 6 MiB
+        let dims = LatticeDims::new(16, 16, 16, 16).unwrap();
+        let sites = dims.volume();
+        let gauge = sites * 4 * 9 * 2 * 4;
+        let spinor = sites * 4 * 3 * 2 * 4;
+        assert_eq!(gauge, 18 * 1024 * 1024);
+        assert_eq!(spinor, 6 * 1024 * 1024);
+        assert_eq!(working_set_bytes(dims), 24 * 1024 * 1024);
+    }
+
+    #[test]
+    fn projection_is_linear() {
+        let projected = project_to_a64fx(5.0, 10.0, 914.0);
+        assert!((projected - 457.0).abs() < 1e-9);
+        assert!((efficiency(457.0, 914.0) - 0.5).abs() < 1e-12);
+    }
+}

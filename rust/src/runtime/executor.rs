@@ -1,0 +1,241 @@
+//! PJRT executor: load HLO-text artifacts, compile once, execute from the
+//! Rust hot path. Python never runs here — the artifacts were lowered at
+//! build time by `python/compile/aot.py`.
+//!
+//! Interchange format is HLO *text* (see `/opt/xla-example/README.md` and
+//! DESIGN.md): jax >= 0.5 serializes HloModuleProto with 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::field::io::{fermion_to_canonical, gauge_to_canonical};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::Geometry;
+
+use super::manifest::Manifest;
+
+/// A PJRT CPU client with all manifest artifacts compiled.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Load + compile every artifact in `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        for art in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                art.file
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", art.file))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", art.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", art.name))?;
+            executables.insert(art.name.clone(), exe);
+        }
+        Ok(Runtime {
+            manifest,
+            client,
+            executables,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute artifact `name` on raw f32 buffers (shape-checked against
+    /// the manifest). Returns the flattened outputs.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.manifest.artifact(name)?;
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not compiled"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if buf.len() != ispec.len() {
+                bail!(
+                    "{name} input {i}: {} elements given, {} expected",
+                    buf.len(),
+                    ispec.len()
+                );
+            }
+            let lit = if ispec.shape.is_empty() {
+                xla::Literal::scalar(buf[0])
+            } else {
+                let dims: Vec<i64> = ispec.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .map_err(|e| anyhow!("{name} input {i} reshape: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{name} execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name} fetch: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: outputs arrive as a tuple
+        let outs = result
+            .to_tuple()
+            .map_err(|e| anyhow!("{name} untuple: {e:?}"))?;
+        let mut out_bufs = Vec::with_capacity(outs.len());
+        for (o, ospec) in outs.iter().zip(&spec.outputs) {
+            let v: Vec<f32> = match ospec.dtype.as_str() {
+                "f32" => o
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("{name} output: {e:?}"))?,
+                "i32" => o
+                    .to_vec::<i32>()
+                    .map_err(|e| anyhow!("{name} output: {e:?}"))?
+                    .into_iter()
+                    .map(|x| x as f32)
+                    .collect(),
+                other => bail!("{name}: unsupported output dtype {other}"),
+            };
+            out_bufs.push(v);
+        }
+        Ok(out_bufs)
+    }
+}
+
+/// The PJRT-backed even-odd preconditioned operator: executes the `meo`
+/// artifact on the request path. Implements the same [`LinearOperator`]
+/// interface as the native operators, so every solver runs on it.
+pub struct PjrtMeo<'rt> {
+    rt: &'rt Runtime,
+    /// canonical gauge buffer, converted once
+    u_canon: Vec<f32>,
+    kappa: f32,
+    half_volume: usize,
+    artifact: &'static str,
+}
+
+impl<'rt> PjrtMeo<'rt> {
+    pub fn new(rt: &'rt Runtime, geom: &Geometry, u: &GaugeField, kappa: f32) -> Result<Self> {
+        if geom.local != rt.manifest.dims {
+            bail!(
+                "geometry {} != artifact lattice {}",
+                geom.local,
+                rt.manifest.dims
+            );
+        }
+        Ok(PjrtMeo {
+            rt,
+            u_canon: gauge_to_canonical(u),
+            kappa,
+            half_volume: geom.local.half_volume(),
+            artifact: "meo",
+        })
+    }
+
+    /// Switch to the normal-operator artifact (`mdagm`).
+    pub fn normal(mut self) -> Self {
+        self.artifact = "mdagm";
+        self
+    }
+
+    /// Run the whole-solver artifact (`cg_solve`): returns (x, iterations,
+    /// rel |r|^2).
+    pub fn cg_solve_artifact(
+        &self,
+        b: &FermionField,
+    ) -> Result<(Vec<f32>, usize, f64)> {
+        let psi = fermion_to_canonical(b);
+        let outs = self.rt.execute(
+            "cg_solve",
+            &[self.u_canon.clone(), psi, vec![self.kappa]],
+        )?;
+        let x = outs[0].clone();
+        let iters = outs[1][0] as usize;
+        let rr = outs[2][0] as f64;
+        Ok((x, iters, rr))
+    }
+}
+
+impl crate::coordinator::operator::LinearOperator for PjrtMeo<'_> {
+    fn apply(&mut self, out: &mut FermionField, psi: &FermionField) {
+        let psi_canon = fermion_to_canonical(psi);
+        let outs = self
+            .rt
+            .execute(
+                self.artifact,
+                &[self.u_canon.clone(), psi_canon, vec![self.kappa]],
+            )
+            .expect("PJRT execution failed");
+        let canon: Vec<f64> = outs[0].iter().map(|&v| v as f64).collect();
+        crate::field::io::fermion_from_canonical(out, &canon)
+            .expect("PJRT output shape mismatch");
+    }
+
+    fn flops_per_apply(&self) -> u64 {
+        let base = crate::dslash::flops::meo_flops(self.half_volume);
+        if self.artifact == "mdagm" {
+            2 * base
+        } else {
+            base
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::operator::{LinearOperator, NativeMeo};
+    use crate::lattice::{LatticeDims, Tiling};
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// PJRT meo must equal the native meo on the same fields — the
+    /// centerpiece cross-layer test (L1+L2 artifact vs L3 native kernel).
+    #[test]
+    fn pjrt_meo_matches_native() {
+        let rt = Runtime::load(&artifacts_dir()).expect("run `make artifacts` first");
+        let dims = rt.manifest.dims;
+        let geom = Geometry::single_rank(dims, Tiling::new(2, 2).unwrap()).unwrap();
+        let mut rng = Rng::seeded(42);
+        let u = GaugeField::random(&geom, &mut rng);
+        let psi = FermionField::gaussian(&geom, &mut rng);
+        let kappa = 0.13f32;
+
+        let mut pjrt = PjrtMeo::new(&rt, &geom, &u, kappa).unwrap();
+        let mut out_pjrt = FermionField::zeros(&geom);
+        pjrt.apply(&mut out_pjrt, &psi);
+
+        let mut native = NativeMeo::new(&geom, u, kappa);
+        let mut out_native = FermionField::zeros(&geom);
+        native.apply(&mut out_native, &psi);
+
+        let mut d = out_pjrt.clone();
+        d.axpy(-1.0, &out_native);
+        let rel = (d.norm2() / out_native.norm2()).sqrt();
+        assert!(rel < 1e-5, "PJRT vs native rel diff {rel}");
+    }
+}

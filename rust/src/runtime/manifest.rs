@@ -1,0 +1,159 @@
+//! `artifacts/manifest.json` reader: which HLO-text artifacts exist, their
+//! I/O shapes, and the lattice they were lowered for.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::lattice::LatticeDims;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dims: LatticeDims,
+    pub cg_tol: f64,
+    pub cg_maxiter: usize,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+        .collect::<Result<Vec<usize>>>()?;
+    let dtype = j
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`?)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let dims_arr = j
+            .get("dims")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing dims"))?;
+        if dims_arr.len() != 4 {
+            bail!("manifest dims must have 4 entries");
+        }
+        let d: Vec<usize> = dims_arr.iter().filter_map(Json::as_usize).collect();
+        let dims = LatticeDims::new(d[0], d[1], d[2], d[3])
+            .map_err(|e| anyhow!("manifest dims: {e}"))?;
+
+        let mut artifacts = Vec::new();
+        for a in j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = dir.join(
+                a.get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name} missing file"))?,
+            );
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name,
+                file,
+                inputs,
+                outputs,
+            });
+        }
+
+        Ok(Manifest {
+            dims,
+            cg_tol: j.get("cg_tol").and_then(Json::as_f64).unwrap_or(1e-10),
+            cg_maxiter: j
+                .get("cg_maxiter")
+                .and_then(Json::as_usize)
+                .unwrap_or(1000),
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Requires `make artifacts` (the Makefile test target guarantees it).
+    #[test]
+    fn loads_real_manifest() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            panic!("artifacts/manifest.json missing: run `make artifacts`");
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 6);
+        let meo = m.artifact("meo").unwrap();
+        assert_eq!(meo.inputs.len(), 3, "u, psi, kappa");
+        // u: (4, 2, T, Z, Y, XH, 3, 3, 2)
+        assert_eq!(meo.inputs[0].shape.len(), 9);
+        assert_eq!(meo.inputs[0].dtype, "f32");
+        // psi: (T, Z, Y, XH, 4, 3, 2)
+        assert_eq!(meo.inputs[1].shape.len(), 7);
+        assert!(meo.file.exists());
+        assert!(m.artifact("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` (L1 Pallas kernel + L2 JAX operator graphs)
+//! and executes them from the Rust request path via the PJRT C API.
+
+mod executor;
+mod manifest;
+
+pub use executor::{PjrtMeo, Runtime};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,215 @@
+//! BiCGStab for the non-hermitian even-odd operator M-hat.
+//!
+//! Complex-coefficient variant (the fields are complex; dot products use
+//! the sesquilinear inner product). Often converges in ~half the operator
+//! applications of CGNR on the same system.
+
+use crate::algebra::Complex;
+use crate::coordinator::operator::LinearOperator;
+use crate::field::FermionField;
+
+use super::SolveStats;
+
+/// Global sesquilinear dot through the operator's reducer.
+fn gdot<A: LinearOperator>(op: &mut A, a: &FermionField, b: &FermionField) -> Complex {
+    let local = a.dot(b);
+    Complex::new(op.reduce_sum(local.re), op.reduce_sum(local.im))
+}
+
+/// Solve `A x = b` with BiCGStab. `x` holds the initial guess on entry.
+pub fn bicgstab<A: LinearOperator>(
+    op: &mut A,
+    x: &mut FermionField,
+    b: &FermionField,
+    tol: f64,
+    maxiter: usize,
+) -> SolveStats {
+    let bnorm2 = op.reduce_sum(b.norm2());
+    if bnorm2 == 0.0 {
+        x.fill(0.0);
+        return SolveStats {
+            iterations: 0,
+            converged: true,
+            rel_residual: 0.0,
+            history: vec![],
+            flops: 0,
+        };
+    }
+    let limit = tol * tol * bnorm2;
+
+    let mut r = b.clone();
+    let mut t = FermionField {
+        layout: r.layout,
+        data: vec![0.0; r.data.len()],
+    };
+    op.apply(&mut t, x);
+    r.axpy(-1.0, &t);
+    let rhat = r.clone();
+    let mut p = r.clone();
+    let mut v = FermionField {
+        layout: r.layout,
+        data: vec![0.0; r.data.len()],
+    };
+    let mut flops = op.flops_per_apply() as u64;
+    let mut rho = gdot(op, &rhat, &r);
+    let mut history = Vec::new();
+    let mut iterations = 0;
+    let mut rr = op.reduce_sum(r.norm2());
+
+    while iterations < maxiter && rr > limit {
+        // v = A p
+        op.apply(&mut v, &p);
+        flops += op.flops_per_apply();
+        let rhat_v = gdot(op, &rhat, &v);
+        if rhat_v.abs() < 1e-300 {
+            break; // breakdown
+        }
+        let alpha = rho * rhat_v.conj().scale(1.0 / rhat_v.norm2());
+        // s = r - alpha v   (reuse r as s)
+        r.caxpy(-alpha, &v);
+        let snorm = op.reduce_sum(r.norm2());
+        if snorm <= limit {
+            x.caxpy(alpha, &p);
+            rr = snorm;
+            iterations += 1;
+            history.push((rr / bnorm2).sqrt());
+            break;
+        }
+        // t = A s
+        op.apply(&mut t, &r);
+        flops += op.flops_per_apply();
+        let ts = gdot(op, &t, &r);
+        let tt = op.reduce_sum(t.norm2());
+        if tt == 0.0 {
+            break;
+        }
+        let omega = ts.scale(1.0 / tt);
+        // x += alpha p + omega s
+        x.caxpy(alpha, &p);
+        x.caxpy(omega, &r);
+        // r = s - omega t
+        r.caxpy(-omega, &t);
+        rr = op.reduce_sum(r.norm2());
+        iterations += 1;
+        history.push((rr / bnorm2).sqrt());
+
+        let rho_new = gdot(op, &rhat, &r);
+        if rho.abs() < 1e-300 || omega.abs() < 1e-300 {
+            break;
+        }
+        let beta = (rho_new * alpha) * (rho * omega).conj().scale(
+            1.0 / (rho * omega).norm2(),
+        );
+        // p = r + beta (p - omega v)
+        p.caxpy(-omega, &v);
+        // p = beta * p + r: do it via scale trick
+        cscale(&mut p, beta);
+        p.axpy(1.0, &r);
+        rho = rho_new;
+    }
+
+    SolveStats {
+        iterations,
+        converged: rr <= limit,
+        rel_residual: (rr / bnorm2).sqrt(),
+        history,
+        flops,
+    }
+}
+
+/// In-place complex scale of a field.
+fn cscale(f: &mut FermionField, a: Complex) {
+    let layout = f.layout;
+    let vlen = layout.vlen();
+    let (ar, ai) = (a.re as f32, a.im as f32);
+    for tile in 0..layout.ntiles() {
+        for spin in 0..4 {
+            for color in 0..3 {
+                let ro = layout.spinor_vec(tile, spin, color, 0);
+                let io = layout.spinor_vec(tile, spin, color, 1);
+                for l in 0..vlen {
+                    let re = f.data[ro + l];
+                    let im = f.data[io + l];
+                    f.data[ro + l] = ar * re - ai * im;
+                    f.data[io + l] = ar * im + ai * re;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::operator::{LinearOperator, NativeMeo};
+    use crate::field::GaugeField;
+    use crate::lattice::{Geometry, LatticeDims, Tiling};
+    use crate::util::rng::Rng;
+
+    fn geom() -> Geometry {
+        Geometry::single_rank(
+            LatticeDims::new(4, 4, 4, 4).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn bicgstab_converges_on_meo() {
+        let g = geom();
+        let mut rng = Rng::seeded(201);
+        let u = GaugeField::random(&g, &mut rng);
+        let b = FermionField::gaussian(&g, &mut rng);
+        let mut op = NativeMeo::new(&g, u, 0.12);
+        let mut x = FermionField::zeros(&g);
+        let stats = bicgstab(&mut op, &mut x, &b, 1e-8, 300);
+        assert!(stats.converged, "{stats:?}");
+        let mut ax = FermionField::zeros(&g);
+        op.apply(&mut ax, &x);
+        ax.axpy(-1.0, &b);
+        let rel = (ax.norm2() / b.norm2()).sqrt();
+        assert!(rel < 1e-5, "true residual {rel}");
+    }
+
+    #[test]
+    fn bicgstab_cheaper_than_cgnr_in_applies() {
+        // BiCGStab on M vs CG on M^dag M: compare operator applications
+        use crate::coordinator::operator::NativeMdagM;
+        use crate::solver::cg;
+        let g = geom();
+        let mut rng = Rng::seeded(202);
+        let u = GaugeField::random(&g, &mut rng);
+        let b = FermionField::gaussian(&g, &mut rng);
+
+        let mut op_m = NativeMeo::new(&g, u.clone(), 0.12);
+        let mut x1 = FermionField::zeros(&g);
+        let s_b = bicgstab(&mut op_m, &mut x1, &b, 1e-8, 300);
+
+        let mut op_n = NativeMdagM::new(&g, u, 0.12);
+        // CGNR solves M^dag M x = M^dag b
+        let mut bp = FermionField::zeros(&g);
+        {
+            let mut g5b = b.clone();
+            g5b.gamma5();
+            let mut mg5b = FermionField::zeros(&g);
+            op_n.meo().apply(&mut mg5b, &g5b);
+            mg5b.gamma5();
+            bp = mg5b;
+        }
+        let mut x2 = FermionField::zeros(&g);
+        let s_c = cg(&mut op_n, &mut x2, &bp, 1e-8, 300);
+
+        // both must reach the same solution of M x = b
+        let mut d = x1.clone();
+        d.axpy(-1.0, &x2);
+        let rel = (d.norm2() / x2.norm2()).sqrt();
+        assert!(rel < 1e-3, "solutions differ {rel}");
+        // and BiCGStab uses fewer M-applications (2/iter vs 4/iter)
+        assert!(
+            s_b.flops < s_c.flops,
+            "bicgstab {} vs cgnr {}",
+            s_b.flops,
+            s_c.flops
+        );
+    }
+}

@@ -1,0 +1,29 @@
+//! Iterative solvers for the even-odd preconditioned Wilson system.
+//!
+//! * [`cg`] — conjugate gradient on the hermitian positive-definite
+//!   normal operator `M-hat^dag M-hat` (CGNR).
+//! * [`bicgstab`] — BiCGStab directly on the non-hermitian `M-hat`.
+//!
+//! Both are generic over [`crate::coordinator::operator::LinearOperator`];
+//! dot products go through `reduce_sum` so the same code runs single-rank
+//! and distributed (allreduce), native and PJRT-backed.
+
+mod bicgstab;
+mod cg;
+pub mod residual;
+
+pub use bicgstab::bicgstab;
+pub use cg::cg;
+
+/// Convergence record of one solve.
+#[derive(Clone, Debug)]
+pub struct SolveStats {
+    pub iterations: usize,
+    pub converged: bool,
+    /// |r| / |b| at exit (recursive residual)
+    pub rel_residual: f64,
+    /// |r|/|b| after each iteration
+    pub history: Vec<f64>,
+    /// total flops spent in operator applications
+    pub flops: u64,
+}

@@ -1,0 +1,161 @@
+//! Minimal command-line parser (the `clap` substrate).
+//!
+//! Supports `lqcd <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags may be given as `--key=value` or `--key value`. Unknown options
+//! are errors so typos never silently fall back to defaults.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Parsed arguments: subcommand, options, positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+    /// names consumed by typed getters, used by `finish` to reject typos
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+/// Option names that take a value (everything else is a boolean flag).
+pub fn parse<I: IntoIterator<Item = String>>(
+    argv: I,
+    value_opts: &[&str],
+) -> Result<Args, CliError> {
+    let mut args = Args::default();
+    let mut it = argv.into_iter().peekable();
+    while let Some(tok) = it.next() {
+        if let Some(body) = tok.strip_prefix("--") {
+            let (key, inline_val) = match body.split_once('=') {
+                Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                None => (body.to_string(), None),
+            };
+            if value_opts.contains(&key.as_str()) {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{key} needs a value")))?,
+                };
+                args.opts.insert(key, val);
+            } else if inline_val.is_some() {
+                return Err(CliError(format!("--{key} does not take a value")));
+            } else {
+                args.flags.push(key);
+            }
+        } else if args.command.is_none() && args.positional.is_empty() {
+            args.command = Some(tok);
+        } else {
+            args.positional.push(tok);
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(name.to_string());
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: cannot parse {s:?}"))),
+        }
+    }
+
+    /// Error on any option/flag that no getter asked about.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let consumed = self.consumed.borrow();
+        for k in self.opts.keys() {
+            if !consumed.iter().any(|c| c == k) {
+                return Err(CliError(format!("unknown option --{k}")));
+            }
+        }
+        for f in &self.flags {
+            if !consumed.iter().any(|c| c == f) {
+                return Err(CliError(format!("unknown flag --{f}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = parse(
+            sv(&["bench", "--dims", "16x16x8x8", "--verbose", "extra"]),
+            &["dims"],
+        )
+        .unwrap();
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.get("dims"), Some("16x16x8x8"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, sv(&["extra"]));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(sv(&["run", "--reps=7"]), &["reps"]).unwrap();
+        assert_eq!(a.get_parse("reps", 0usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(sv(&["run", "--reps"]), &["reps"]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected_by_finish() {
+        let a = parse(sv(&["run", "--oops", "1"]), &["oops"]).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        assert!(parse(sv(&["run", "--verbose=yes"]), &[]).is_err());
+    }
+
+    #[test]
+    fn default_used_when_absent() {
+        let a = parse(sv(&["run"]), &["reps"]).unwrap();
+        assert_eq!(a.get_parse("reps", 42usize).unwrap(), 42);
+    }
+}

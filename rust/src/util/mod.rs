@@ -1,0 +1,11 @@
+//! Foundation substrates built from scratch (no external crates available
+//! offline beyond the `xla` closure): RNG, CLI parsing, timing/statistics,
+//! table rendering for the benchmark harness, and a miniature
+//! property-based-testing framework used across the test suite.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod tables;
+pub mod timer;

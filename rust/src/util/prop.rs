@@ -1,0 +1,166 @@
+//! Miniature property-based testing framework (the `proptest` substrate).
+//!
+//! Runs a property over `cases` randomly generated inputs; on failure it
+//! reports the seed and the case index so the exact input can be replayed
+//! deterministically (`Runner::replay`).
+//!
+//! ```no_run
+//! use lqcd::util::prop::Runner;
+//! Runner::new("addition commutes", 100).run(|g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn u64_below(&mut self, n: u64) -> u64 {
+        self.rng.below(n)
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.rng.below((hi - lo + 1) as u64) as i64
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64_in(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.gaussian()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len() as u64) as usize]
+    }
+
+    /// An even lattice extent in [2, max] (lattice dims must be even).
+    pub fn even_extent(&mut self, max: usize) -> usize {
+        2 * self.usize_in(1, max / 2)
+    }
+}
+
+/// Property runner.
+pub struct Runner {
+    name: String,
+    cases: usize,
+    seed: u64,
+}
+
+impl Runner {
+    pub fn new(name: &str, cases: usize) -> Self {
+        // Allow overriding the seed for replay via env var.
+        let seed = std::env::var("LQCD_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_CAFE);
+        Runner {
+            name: name.to_string(),
+            cases,
+            seed,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the property across all cases; panics with replay info on failure.
+    pub fn run<F: FnMut(&mut Gen)>(&self, mut property: F) {
+        for case in 0..self.cases {
+            let rng = Rng::seeded(self.seed).split(case as u64);
+            let mut g = Gen { rng };
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || property(&mut g),
+            ));
+            if let Err(payload) = result {
+                eprintln!(
+                    "property '{}' failed at case {case} \
+                     (replay: LQCD_PROP_SEED={} case {case})",
+                    self.name, self.seed
+                );
+                std::panic::resume_unwind(payload);
+            }
+        }
+    }
+
+    /// Re-run exactly one case (for debugging a reported failure).
+    pub fn replay<F: FnMut(&mut Gen)>(&self, case: usize, mut property: F) {
+        let rng = Rng::seeded(self.seed).split(case as u64);
+        let mut g = Gen { rng };
+        property(&mut g);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        Runner::new("count", 25).run(|_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut first = Vec::new();
+        Runner::new("gen", 5).run(|g| first.push(g.i64_in(0, 1000)));
+        let mut second = Vec::new();
+        Runner::new("gen", 5).run(|g| second.push(g.i64_in(0, 1000)));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        Runner::new("ranges", 200).run(|g| {
+            let v = g.i64_in(-3, 7);
+            assert!((-3..=7).contains(&v));
+            let e = g.even_extent(12);
+            assert!(e >= 2 && e <= 12 && e % 2 == 0);
+            let f = g.f64_in(1.5, 2.5);
+            assert!((1.5..2.5).contains(&f));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        Runner::new("fails", 10).run(|g| {
+            assert!(g.i64_in(0, 100) > 1000);
+        });
+    }
+
+    #[test]
+    fn replay_single_case() {
+        let r = Runner::new("replay", 3).with_seed(99);
+        let mut vals = Vec::new();
+        r.run(|g| vals.push(g.u64_below(1 << 20)));
+        let mut replayed = 0;
+        r.replay(1, |g| replayed = g.u64_below(1 << 20));
+        assert_eq!(replayed, vals[1]);
+    }
+}

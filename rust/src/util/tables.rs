@@ -1,0 +1,164 @@
+//! ASCII table and bar-chart rendering for the benchmark harness.
+//!
+//! The harness prints the same rows/series the paper reports: Table 1 as a
+//! table, Figs. 8-10 as per-thread stacked bars / scaling series rendered
+//! in text.
+
+/// A simple column-aligned table.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:>w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.header, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+}
+
+/// Horizontal bar chart: one labelled bar per entry, scaled to `width`.
+/// Used for the Fig. 8/9 per-thread cycle-account renderings.
+pub fn bar_chart(title: &str, entries: &[(String, f64)], width: usize) -> String {
+    let max = entries
+        .iter()
+        .map(|(_, v)| *v)
+        .fold(f64::MIN_POSITIVE, f64::max);
+    let label_w = entries.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("## {title}\n");
+    for (label, v) in entries {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<label_w$} | {:<width$} {:.3e}\n",
+            label,
+            "#".repeat(n.min(width)),
+            v,
+        ));
+    }
+    out
+}
+
+/// Stacked horizontal bars: each entry has per-segment values; segments are
+/// rendered with distinct characters. Returns the chart plus a legend.
+pub fn stacked_bars(
+    title: &str,
+    labels: &[String],
+    segments: &[String],
+    values: &[Vec<f64>],
+    width: usize,
+) -> String {
+    const CHARS: &[char] = &['#', '=', '+', ':', '.', '%', '@', '*'];
+    let totals: Vec<f64> = values.iter().map(|v| v.iter().sum()).collect();
+    let max = totals.iter().cloned().fold(f64::MIN_POSITIVE, f64::max);
+    let label_w = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = format!("## {title}\n");
+    for (i, label) in labels.iter().enumerate() {
+        let mut bar = String::new();
+        for (j, v) in values[i].iter().enumerate() {
+            let n = ((v / max) * width as f64).round() as usize;
+            let ch = CHARS[j % CHARS.len()];
+            bar.extend(std::iter::repeat(ch).take(n));
+        }
+        out.push_str(&format!(
+            "{:<label_w$} | {:<width$} {:.3e} s\n",
+            label, bar, totals[i]
+        ));
+    }
+    out.push_str("legend: ");
+    for (j, s) in segments.iter().enumerate() {
+        out.push_str(&format!("{}={} ", CHARS[j % CHARS.len()], s));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["lattice", "GFlops"]);
+        t.row(vec!["16x16x8x8".into(), "448".into()]);
+        t.row(vec!["64x32x16x8".into(), "343".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        assert!(s.contains("16x16x8x8 |"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn bars_scale_to_width() {
+        let s = bar_chart(
+            "b",
+            &[("t0".into(), 1.0), ("t1".into(), 2.0)],
+            10,
+        );
+        assert!(s.contains("##########"));
+        assert!(s.contains("#####"));
+    }
+
+    #[test]
+    fn stacked_has_legend() {
+        let s = stacked_bars(
+            "f",
+            &["t0".into()],
+            &["bulk".into(), "wait".into()],
+            &[vec![1.0, 1.0]],
+            8,
+        );
+        assert!(s.contains("legend:"));
+        assert!(s.contains("#=")); // both segments present
+    }
+}

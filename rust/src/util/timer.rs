@@ -1,0 +1,193 @@
+//! Timing and measurement statistics for the benchmark harness.
+//!
+//! `criterion` is not available offline, so benches use this substrate:
+//! warmup + repeated timed runs, robust summary statistics, and GFlops
+//! conversion using the paper's 1368 flop/site convention.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over repeated measurements (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub samples: Vec<f64>,
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty(), "no samples");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let min = samples[0];
+        let max = samples[n - 1];
+        let median = if n % 2 == 1 {
+            samples[n / 2]
+        } else {
+            0.5 * (samples[n / 2 - 1] + samples[n / 2])
+        };
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / n as f64;
+        Stats {
+            min,
+            median,
+            mean,
+            max,
+            stddev: var.sqrt(),
+            samples,
+        }
+    }
+
+    /// Relative spread (stddev / mean) — used to decide convergence.
+    pub fn rel_spread(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.stddev / self.mean
+        }
+    }
+}
+
+/// A benchmark runner: warms up, then times `reps` runs of `f`.
+///
+/// `f` receives the iteration index and returns an optional amount of work
+/// (e.g. flops) done, summed into the result.
+pub struct Bench {
+    pub warmup: usize,
+    pub reps: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub stats: Stats,
+    /// work units (flops) per run, if reported
+    pub work_per_run: Option<f64>,
+}
+
+impl BenchResult {
+    /// GFlops based on the *median* run time.
+    pub fn gflops(&self) -> Option<f64> {
+        self.work_per_run
+            .map(|w| w / self.stats.median / 1.0e9)
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 2,
+            reps: 5,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, reps: usize) -> Self {
+        Bench { warmup, reps }
+    }
+
+    pub fn run<F>(&self, mut f: F) -> BenchResult
+    where
+        F: FnMut() -> Option<f64>,
+    {
+        let mut work = None;
+        for _ in 0..self.warmup {
+            work = f();
+        }
+        let mut samples = Vec::with_capacity(self.reps);
+        for _ in 0..self.reps {
+            let start = Instant::now();
+            work = f();
+            samples.push(start.elapsed().as_secs_f64());
+        }
+        BenchResult {
+            stats: Stats::from_samples(samples),
+            work_per_run: work,
+        }
+    }
+}
+
+/// Simple scoped stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Format seconds human-readably (ns/us/ms/s).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_even_median() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((s.median - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn stats_empty_panics() {
+        Stats::from_samples(vec![]);
+    }
+
+    #[test]
+    fn bench_counts_runs() {
+        let mut calls = 0;
+        let b = Bench::new(1, 3);
+        let r = b.run(|| {
+            calls += 1;
+            Some(10.0)
+        });
+        assert_eq!(calls, 4); // 1 warmup + 3 timed
+        assert_eq!(r.stats.samples.len(), 3);
+        assert!(r.gflops().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_secs(5e-9).contains("ns"));
+        assert!(fmt_secs(5e-6).contains("us"));
+        assert!(fmt_secs(5e-3).contains("ms"));
+        assert!(fmt_secs(5.0).contains(" s"));
+    }
+}

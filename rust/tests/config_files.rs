@@ -1,0 +1,45 @@
+//! The shipped example configuration must load and describe the paper's
+//! setup; error paths must fail loudly, not fall back to defaults.
+
+use std::path::PathBuf;
+
+use lqcd::config::RunConfig;
+use lqcd::lattice::{LatticeDims, ProcGrid};
+
+fn repo_path(rel: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(rel)
+}
+
+#[test]
+fn example_config_is_paper_setup() {
+    let cfg = RunConfig::load(&repo_path("configs/example.toml")).unwrap();
+    assert_eq!(cfg.lattice.global, LatticeDims::new(16, 16, 16, 16).unwrap());
+    assert_eq!(cfg.lattice.grid, ProcGrid([1, 1, 2, 2]));
+    assert_eq!(cfg.lattice.tiling.to_string(), "4x4");
+    assert_eq!(cfg.parallel.threads_per_rank, 12);
+    assert!(cfg.parallel.force_comm);
+    assert_eq!(cfg.solver.algorithm, "bicgstab");
+    // local volume per rank = 16x16x8x8, the paper's Table 1 first row
+    let geom = lqcd::lattice::Geometry::for_rank(
+        cfg.lattice.global,
+        cfg.lattice.grid,
+        0,
+        cfg.lattice.tiling,
+    )
+    .unwrap();
+    assert_eq!(geom.local, LatticeDims::new(16, 16, 8, 8).unwrap());
+}
+
+#[test]
+fn missing_config_errors() {
+    assert!(RunConfig::load(&repo_path("configs/nope.toml")).is_err());
+}
+
+#[test]
+fn missing_artifacts_dir_errors_cleanly() {
+    let err = match lqcd::runtime::Runtime::load(&repo_path("no-such-artifacts")) {
+        Ok(_) => panic!("load of a missing dir must fail"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("manifest"), "unhelpful error: {err}");
+}

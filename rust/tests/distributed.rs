@@ -1,0 +1,179 @@
+//! Distributed-runtime correctness: the EO1 -> bulk ∥ comm -> EO2 pipeline
+//! over the simulated-MPI rank world must reproduce the single-rank
+//! periodic operator exactly, for every decomposition and for forced
+//! self-communication (the paper's measurement mode).
+
+use lqcd::comm::decompose::{extract_fermion, extract_gauge, insert_fermion};
+use lqcd::comm::run_world;
+use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use lqcd::dslash::HoppingEo;
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, LatticeDims, Parity, ProcGrid, Tiling};
+use lqcd::util::rng::Rng;
+
+fn run_case(
+    global_dims: LatticeDims,
+    grid: ProcGrid,
+    tiling: Tiling,
+    force_comm: bool,
+    nthreads: usize,
+    schedule: Eo2Schedule,
+    p_out: Parity,
+    seed: u64,
+) {
+    let ggeom = Geometry::single_rank(global_dims, tiling).unwrap();
+    let mut rng = Rng::seeded(seed);
+    let u_global = GaugeField::random(&ggeom, &mut rng);
+    let psi_global = FermionField::gaussian(&ggeom, &mut rng);
+
+    // reference: single-rank periodic
+    let mut want = FermionField::zeros(&ggeom);
+    HoppingEo::new(&ggeom).apply(&mut want, &u_global, &psi_global, p_out);
+
+    // distributed
+    let nranks = grid.size();
+    let results = run_world(nranks, |rank, comm| {
+        let lgeom = Geometry::for_rank(global_dims, grid, rank, tiling).unwrap();
+        let u = extract_gauge(&u_global, &lgeom);
+        let psi = extract_fermion(&psi_global, &ggeom, &lgeom);
+        let dist = DistHopping::new(&lgeom, force_comm, nthreads, schedule);
+        let mut team = Team::new(nthreads, BarrierKind::Sleep);
+        let prof = Profiler::new(nthreads);
+        let mut out = FermionField::zeros(&lgeom);
+        dist.hopping(&mut out, &u, &psi, p_out, comm, &mut team, &prof);
+        out
+    });
+
+    let mut got = FermionField::zeros(&ggeom);
+    for (rank, local) in results.iter().enumerate() {
+        let lgeom = Geometry::for_rank(global_dims, grid, rank, tiling).unwrap();
+        insert_fermion(&mut got, local, &lgeom);
+    }
+
+    let mut d = got.clone();
+    d.axpy(-1.0, &want);
+    let rel = (d.norm2() / want.norm2()).sqrt();
+    assert!(
+        rel < 1e-5,
+        "distributed vs periodic rel diff {rel} (grid {grid:?}, force={force_comm}, nt={nthreads})"
+    );
+}
+
+#[test]
+fn single_rank_forced_self_comm() {
+    // the paper's benchmark mode: one process per direction, comm enforced
+    run_case(
+        LatticeDims::new(8, 4, 4, 4).unwrap(),
+        ProcGrid([1, 1, 1, 1]),
+        Tiling::new(2, 2).unwrap(),
+        true,
+        1,
+        Eo2Schedule::Uniform,
+        Parity::Odd,
+        11,
+    );
+}
+
+#[test]
+fn paper_grid_1122() {
+    // the paper's 4-process [1,1,2,2] assignment
+    run_case(
+        LatticeDims::new(8, 4, 4, 8).unwrap(),
+        ProcGrid([1, 1, 2, 2]),
+        Tiling::new(2, 2).unwrap(),
+        true,
+        2,
+        Eo2Schedule::Uniform,
+        Parity::Odd,
+        12,
+    );
+}
+
+#[test]
+fn x_direction_split() {
+    // x decomposition exercises the irregular compacted faces hardest
+    run_case(
+        LatticeDims::new(16, 4, 2, 2).unwrap(),
+        ProcGrid([2, 1, 1, 1]),
+        Tiling::new(2, 2).unwrap(),
+        false,
+        1,
+        Eo2Schedule::Uniform,
+        Parity::Even,
+        13,
+    );
+}
+
+#[test]
+fn y_direction_split() {
+    run_case(
+        LatticeDims::new(8, 8, 2, 2).unwrap(),
+        ProcGrid([1, 2, 1, 1]),
+        Tiling::new(2, 2).unwrap(),
+        false,
+        2,
+        Eo2Schedule::Uniform,
+        Parity::Odd,
+        14,
+    );
+}
+
+#[test]
+fn all_directions_split() {
+    run_case(
+        LatticeDims::new(8, 8, 4, 4).unwrap(),
+        ProcGrid([2, 2, 2, 2]),
+        Tiling::new(2, 2).unwrap(),
+        false,
+        1,
+        Eo2Schedule::Uniform,
+        Parity::Even,
+        15,
+    );
+}
+
+#[test]
+fn balanced_schedule_same_result() {
+    for schedule in [Eo2Schedule::Uniform, Eo2Schedule::Balanced] {
+        run_case(
+            LatticeDims::new(8, 4, 4, 8).unwrap(),
+            ProcGrid([1, 1, 2, 2]),
+            Tiling::new(2, 2).unwrap(),
+            true,
+            3,
+            schedule,
+            Parity::Odd,
+            16,
+        );
+    }
+}
+
+#[test]
+fn many_threads_and_both_parities() {
+    for p in Parity::BOTH {
+        run_case(
+            LatticeDims::new(8, 4, 4, 4).unwrap(),
+            ProcGrid([1, 1, 1, 2]),
+            Tiling::new(2, 2).unwrap(),
+            true,
+            6,
+            Eo2Schedule::Uniform,
+            p,
+            17 + p.index() as u64,
+        );
+    }
+}
+
+#[test]
+fn larger_tiling_with_comm() {
+    run_case(
+        LatticeDims::new(16, 8, 2, 4).unwrap(),
+        ProcGrid([1, 1, 1, 2]),
+        Tiling::new(4, 2).unwrap(),
+        true,
+        2,
+        Eo2Schedule::Uniform,
+        Parity::Odd,
+        19,
+    );
+}

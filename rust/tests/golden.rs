@@ -1,0 +1,167 @@
+//! Golden-data tests: the Rust native kernels must reproduce the Python
+//! reference (pure-jnp oracle, f64) bit-for-convention. This pins the two
+//! sides of the AOT boundary to the same gamma basis, site ordering,
+//! even-odd compaction and hopping normalization.
+//!
+//! Requires `make artifacts` to have produced `artifacts/golden/`.
+
+use std::path::PathBuf;
+
+use lqcd::dslash::{full, HoppingEo};
+use lqcd::field::io::{
+    fermion_from_canonical, gauge_from_canonical, read_tensor,
+};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, LatticeDims, Parity, Tiling};
+
+const KAPPA: f32 = 0.13;
+
+fn golden_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden");
+    assert!(
+        dir.join("u_eo.bin").exists(),
+        "golden data missing: run `make artifacts` first ({})",
+        dir.display()
+    );
+    dir
+}
+
+fn geom(tiling: Tiling) -> Geometry {
+    // golden lattice is 4x4x4x4 (aot.py --golden-dims)
+    Geometry::single_rank(LatticeDims::new(4, 4, 4, 4).unwrap(), tiling).unwrap()
+}
+
+fn load_gauge(g: &Geometry) -> GaugeField {
+    let t = read_tensor(&golden_dir().join("u_eo.bin")).unwrap();
+    assert_eq!(t.dims[..2], [4, 2], "gauge canonical shape");
+    let mut u = GaugeField::unit(g);
+    gauge_from_canonical(&mut u, &t.data).unwrap();
+    u
+}
+
+fn load_fermion(g: &Geometry, name: &str) -> FermionField {
+    let t = read_tensor(&golden_dir().join(format!("{name}.bin"))).unwrap();
+    let mut f = FermionField::zeros(g);
+    fermion_from_canonical(&mut f, &t.data).unwrap();
+    f
+}
+
+fn assert_close(got: &FermionField, want: &FermionField, tol: f64, what: &str) {
+    let mut d = got.clone();
+    d.axpy(-1.0, want);
+    let rel = (d.norm2() / want.norm2()).sqrt();
+    assert!(rel < tol, "{what}: rel diff {rel}");
+}
+
+#[test]
+fn hopping_oe_matches_python_oracle() {
+    for tiling in [Tiling::new(2, 2).unwrap(), Tiling::new(2, 4).unwrap()] {
+        let g = geom(tiling);
+        let u = load_gauge(&g);
+        let psi_e = load_fermion(&g, "psi_e");
+        let want = load_fermion(&g, "hop_oe");
+        let mut got = FermionField::zeros(&g);
+        HoppingEo::new(&g).apply(&mut got, &u, &psi_e, Parity::Odd);
+        assert_close(&got, &want, 1e-5, &format!("H_oe ({tiling})"));
+    }
+}
+
+#[test]
+fn hopping_eo_matches_python_oracle() {
+    let g = geom(Tiling::new(2, 2).unwrap());
+    let u = load_gauge(&g);
+    let psi_o = load_fermion(&g, "psi_o");
+    let want = load_fermion(&g, "hop_eo");
+    let mut got = FermionField::zeros(&g);
+    HoppingEo::new(&g).apply(&mut got, &u, &psi_o, Parity::Even);
+    assert_close(&got, &want, 1e-5, "H_eo");
+}
+
+#[test]
+fn meo_matches_python_oracle() {
+    let g = geom(Tiling::new(2, 2).unwrap());
+    let u = load_gauge(&g);
+    let psi_e = load_fermion(&g, "psi_e");
+    let want = load_fermion(&g, "meo");
+    let hop = HoppingEo::new(&g);
+    let mut got = FermionField::zeros(&g);
+    let mut tmp = FermionField::zeros(&g);
+    full::meo(&hop, &mut got, &mut tmp, &u, &psi_e, KAPPA);
+    assert_close(&got, &want, 1e-5, "M-hat");
+}
+
+#[test]
+fn plaquette_matches_python_oracle() {
+    let g = geom(Tiling::new(2, 2).unwrap());
+    let u = load_gauge(&g);
+    let t = read_tensor(&golden_dir().join("plaq.bin")).unwrap();
+    let want = t.data[0];
+    let got = u.plaquette();
+    assert!(
+        (got - want).abs() < 1e-5,
+        "plaquette: got {got}, want {want}"
+    );
+}
+
+#[test]
+fn dslash_full_matches_python_oracle() {
+    // full-lattice D_W check through the even/odd pair: scatter the golden
+    // full-lattice fields into (even, odd) halves using compaction, apply,
+    // and compare against the golden full result.
+    use lqcd::lattice::{EvenOdd, SiteCoord};
+
+    let g = geom(Tiling::new(2, 2).unwrap());
+    let u = load_gauge(&g);
+    let psi_t = read_tensor(&golden_dir().join("psi_full.bin")).unwrap();
+    let want_t = read_tensor(&golden_dir().join("dslash_full.bin")).unwrap();
+    let dims = g.local;
+
+    // canonical full-lattice order: (T, Z, Y, X, spin, color, reim)
+    let full_index = |t: usize, z: usize, y: usize, x: usize,
+                      s: usize, c: usize, r: usize| {
+        ((((((t * dims.z + z) * dims.y + y) * dims.x + x) * 4 + s) * 3 + c) * 2) + r
+    };
+    let mut psi_e = FermionField::zeros(&g);
+    let mut psi_o = FermionField::zeros(&g);
+    for (parity, field) in [(Parity::Even, &mut psi_e), (Parity::Odd, &mut psi_o)] {
+        for sc in field.layout.sites().collect::<Vec<SiteCoord>>() {
+            let phi = EvenOdd::row_parity(sc.y, sc.z, sc.t, parity);
+            let x = EvenOdd::lexical_x(sc.ix, phi);
+            for s in 0..4 {
+                for c in 0..3 {
+                    for r in 0..2 {
+                        let off = field.layout.spinor_elem(sc, s, c, r);
+                        field.data[off] =
+                            psi_t.data[full_index(sc.t, sc.z, sc.y, x, s, c, r)] as f32;
+                    }
+                }
+            }
+        }
+    }
+
+    let hop = HoppingEo::new(&g);
+    let mut out_e = FermionField::zeros(&g);
+    let mut out_o = FermionField::zeros(&g);
+    full::dslash_full(&hop, &mut out_e, &mut out_o, &u, &psi_e, &psi_o, KAPPA);
+
+    let mut err2 = 0.0f64;
+    let mut norm2 = 0.0f64;
+    for (parity, field) in [(Parity::Even, &out_e), (Parity::Odd, &out_o)] {
+        for sc in field.layout.sites() {
+            let phi = EvenOdd::row_parity(sc.y, sc.z, sc.t, parity);
+            let x = EvenOdd::lexical_x(sc.ix, phi);
+            for s in 0..4 {
+                for c in 0..3 {
+                    for r in 0..2 {
+                        let got = field.data[field.layout.spinor_elem(sc, s, c, r)] as f64;
+                        let want = want_t.data[full_index(sc.t, sc.z, sc.y, x, s, c, r)];
+                        err2 += (got - want) * (got - want);
+                        norm2 += want * want;
+                    }
+                }
+            }
+        }
+    }
+    let rel = (err2 / norm2).sqrt();
+    assert!(rel < 1e-5, "D_W full: rel diff {rel}");
+}

@@ -1,0 +1,137 @@
+//! Cross-kernel equivalence: the vectorized shuffle kernel, the gather
+//! variant, and the scalar baseline must agree exactly on the same
+//! operator, for every tiling, parity and a sweep of lattice shapes.
+
+use lqcd::dslash::{HoppingEo, HoppingGather, HoppingScalar};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, LatticeDims, Parity, Tiling};
+use lqcd::util::prop::Runner;
+use lqcd::util::rng::Rng;
+
+fn rel_diff(a: &FermionField, b: &FermionField) -> f64 {
+    let mut d = a.clone();
+    d.axpy(-1.0, b);
+    (d.norm2() / a.norm2().max(1e-30)).sqrt()
+}
+
+fn check_geom(geom: Geometry, seed: u64, p_out: Parity) {
+    let mut rng = Rng::seeded(seed);
+    let u = GaugeField::random(&geom, &mut rng);
+    let psi = FermionField::gaussian(&geom, &mut rng);
+
+    let mut out_vec = FermionField::zeros(&geom);
+    HoppingEo::new(&geom).apply(&mut out_vec, &u, &psi, p_out);
+
+    let mut out_scalar = FermionField::zeros(&geom);
+    HoppingScalar::new(&geom).apply(&mut out_scalar, &u, &psi, p_out);
+
+    let d = rel_diff(&out_scalar, &out_vec);
+    assert!(d < 1e-5, "vectorized vs scalar rel diff {d} ({geom:?})");
+
+    let mut out_gather = FermionField::zeros(&geom);
+    HoppingGather::new(&geom).apply(&mut out_gather, &u, &psi, p_out);
+    let d = rel_diff(&out_scalar, &out_gather);
+    assert!(d < 1e-5, "gather vs scalar rel diff {d} ({geom:?})");
+}
+
+#[test]
+fn all_tilings_4x4x4x4() {
+    let dims = LatticeDims::new(4, 4, 4, 4).unwrap();
+    // 4^4 has XH = 2, so VLENX = 2 is the only option; sweep VLENY
+    for (vx, vy) in [(2, 1), (2, 2), (2, 4)] {
+        let geom = Geometry::single_rank(dims, Tiling::new(vx, vy).unwrap()).unwrap();
+        for p in Parity::BOTH {
+            check_geom(geom, 1000 + vx as u64 * 10 + vy as u64, p);
+        }
+    }
+}
+
+#[test]
+fn paper_tilings_on_16x16_xy_plane() {
+    // all four Table 1 tilings (VLEN = 16) on a lattice where they fit
+    let dims = LatticeDims::new(32, 16, 2, 2).unwrap();
+    for t in Tiling::table1_sweep() {
+        let geom = Geometry::single_rank(dims, t).unwrap();
+        check_geom(geom, 77, Parity::Odd);
+    }
+}
+
+#[test]
+fn asymmetric_lattices() {
+    for (x, y, z, t) in [(8, 2, 2, 4), (4, 8, 4, 2), (12, 4, 2, 8), (4, 6, 8, 2)] {
+        let dims = LatticeDims::new(x, y, z, t).unwrap();
+        let geom = Geometry::single_rank(dims, Tiling::new(2, 2).unwrap()).unwrap();
+        check_geom(geom, (x * 100 + y * 10 + z) as u64, Parity::Even);
+    }
+}
+
+#[test]
+fn property_random_shapes_and_tilings() {
+    Runner::new("kernel equivalence", 12).run(|g| {
+        let x = 2 * g.usize_in(1, 4);
+        let y = 2 * g.usize_in(1, 3);
+        let z = 2 * g.usize_in(1, 2);
+        let t = 2 * g.usize_in(1, 2);
+        let dims = LatticeDims::new(x, y, z, t).unwrap();
+        // any tiling that divides (XH, Y)
+        let mut choices = Vec::new();
+        for vx in [2usize, 4, 8] {
+            for vy in [1usize, 2, 4] {
+                if dims.xh() % vx == 0 && dims.y % vy == 0 {
+                    choices.push((vx, vy));
+                }
+            }
+        }
+        if choices.is_empty() {
+            return;
+        }
+        let &(vx, vy) = g.choose(&choices);
+        let geom = Geometry::single_rank(dims, Tiling::new(vx, vy).unwrap()).unwrap();
+        let p = if g.bool() { Parity::Even } else { Parity::Odd };
+        check_geom(geom, g.u64_below(1 << 32), p);
+    });
+}
+
+#[test]
+fn skip_boundary_plus_edges_equals_periodic_minus_interior() {
+    // SkipBoundary must zero exactly the boundary-crossing contributions:
+    // on a lattice with one rank, periodic == skip + (periodic - skip),
+    // and skip must differ from periodic only on edge tiles.
+    use lqcd::dslash::WrapMode;
+    let dims = LatticeDims::new(8, 4, 4, 4).unwrap();
+    let geom = Geometry::single_rank(dims, Tiling::new(2, 2).unwrap()).unwrap();
+    let mut rng = Rng::seeded(42);
+    let u = GaugeField::random(&geom, &mut rng);
+    let psi = FermionField::gaussian(&geom, &mut rng);
+
+    let mut periodic = FermionField::zeros(&geom);
+    HoppingEo::new(&geom).apply(&mut periodic, &u, &psi, Parity::Odd);
+
+    let mut skipped = FermionField::zeros(&geom);
+    HoppingEo::with_wrap(&geom, [WrapMode::SkipBoundary; 4])
+        .apply(&mut skipped, &u, &psi, Parity::Odd);
+
+    // the skipped result must never exceed the periodic one in norm and
+    // must differ (the boundary terms are missing)
+    assert!(skipped.norm2() < periodic.norm2());
+    assert!(rel_diff(&periodic, &skipped) > 1e-3);
+
+    // interior sites (no face neighbor) must agree exactly
+    let l = skipped.layout;
+    for s in l.sites() {
+        let xl = l.lexical_x(s, Parity::Odd);
+        let interior = xl > 0
+            && xl < dims.x - 1
+            && s.y > 0
+            && s.y < dims.y - 1
+            && s.z > 0
+            && s.z < dims.z - 1
+            && s.t > 0
+            && s.t < dims.t - 1;
+        if interior {
+            let a = periodic.site(s);
+            let b = skipped.site(s);
+            assert!(a.sub(&b).norm2() < 1e-12, "interior site {s:?} touched");
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Property-based invariants of the operator algebra, run with the
+//! in-repo mini property framework over randomized geometries, tilings,
+//! gauge fields and sources.
+
+use lqcd::algebra::Complex;
+use lqcd::coordinator::operator::{LinearOperator, NativeMdagM, NativeMeo};
+use lqcd::dslash::{full, HoppingEo};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, LatticeDims, Parity, Tiling};
+use lqcd::util::prop::{Gen, Runner};
+use lqcd::util::rng::Rng;
+
+/// Draw a random valid (dims, tiling) pair small enough for fast tests.
+fn random_geometry(g: &mut Gen) -> Geometry {
+    loop {
+        let dims = LatticeDims::new(
+            2 * g.usize_in(2, 4), // NX in {4,6,8}: XH >= 2
+            2 * g.usize_in(1, 3),
+            2 * g.usize_in(1, 2),
+            2 * g.usize_in(1, 3),
+        )
+        .unwrap();
+        let mut tilings = Vec::new();
+        for vx in [2usize, 4] {
+            for vy in [1usize, 2, 4] {
+                if dims.xh() % vx == 0 && dims.y % vy == 0 {
+                    tilings.push((vx, vy));
+                }
+            }
+        }
+        if tilings.is_empty() {
+            continue;
+        }
+        let &(vx, vy) = g.choose(&tilings);
+        return Geometry::single_rank(dims, Tiling::new(vx, vy).unwrap()).unwrap();
+    }
+}
+
+#[test]
+fn hopping_norm_bounded_by_8() {
+    // ||H psi|| <= 8 ||psi||: H is a sum of 8 terms, each a product of a
+    // projector (norm 2) and a unitary, but the projected subspaces
+    // overlap, giving the factor 8 overall.
+    Runner::new("hopping norm bound", 8).run(|g| {
+        let geom = random_geometry(g);
+        let mut rng = Rng::seeded(g.u64_below(1 << 48));
+        let u = GaugeField::random(&geom, &mut rng);
+        let psi = FermionField::gaussian(&geom, &mut rng);
+        let mut out = FermionField::zeros(&geom);
+        HoppingEo::new(&geom).apply(&mut out, &u, &psi, Parity::Odd);
+        let ratio = (out.norm2() / psi.norm2()).sqrt();
+        assert!(ratio <= 8.0 + 1e-3, "||H|| ratio {ratio}");
+    });
+}
+
+#[test]
+fn meo_gamma5_hermiticity_random_geometries() {
+    // <x, M y> == <g5 M g5 x, y> for random geometry/tiling/fields
+    Runner::new("gamma5 hermiticity", 6).run(|g| {
+        let geom = random_geometry(g);
+        let mut rng = Rng::seeded(g.u64_below(1 << 48));
+        let u = GaugeField::random(&geom, &mut rng);
+        let x = FermionField::gaussian(&geom, &mut rng);
+        let y = FermionField::gaussian(&geom, &mut rng);
+        let kappa = g.f64_in(0.05, 0.14) as f32;
+        let mut op = NativeMeo::new(&geom, u, kappa);
+
+        let mut my = FermionField::zeros(&geom);
+        op.apply(&mut my, &y);
+        let lhs = x.dot(&my);
+
+        let mut g5x = x.clone();
+        g5x.gamma5();
+        let mut mg5x = FermionField::zeros(&geom);
+        op.apply(&mut mg5x, &g5x);
+        mg5x.gamma5();
+        let rhs = mg5x.dot(&y);
+
+        let scale = (x.norm2() * y.norm2()).sqrt().max(1.0);
+        assert!(
+            (lhs - rhs).abs() / scale < 1e-5,
+            "lhs {lhs:?} rhs {rhs:?}"
+        );
+    });
+}
+
+#[test]
+fn mdagm_positive_definite() {
+    Runner::new("MdagM > 0", 6).run(|g| {
+        let geom = random_geometry(g);
+        let mut rng = Rng::seeded(g.u64_below(1 << 48));
+        let u = GaugeField::random(&geom, &mut rng);
+        let x = FermionField::gaussian(&geom, &mut rng);
+        let kappa = g.f64_in(0.05, 0.14) as f32;
+        let mut op = NativeMdagM::new(&geom, u, kappa);
+        let mut ax = FermionField::zeros(&geom);
+        op.apply(&mut ax, &x);
+        let q = x.dot(&ax);
+        assert!(q.re > 0.0, "non-positive quadratic form {q:?}");
+        assert!(q.im.abs() < 1e-4 * q.re, "non-real quadratic form {q:?}");
+    });
+}
+
+#[test]
+fn schur_solution_solves_full_system_random() {
+    // Eqs. 4+5 against the full matrix, over random small systems
+    Runner::new("schur solves D", 4).run(|g| {
+        let geom = random_geometry(g);
+        let mut rng = Rng::seeded(g.u64_below(1 << 48));
+        let u = GaugeField::random(&geom, &mut rng);
+        let b_e = FermionField::gaussian(&geom, &mut rng);
+        let b_o = FermionField::gaussian(&geom, &mut rng);
+        let kappa = g.f64_in(0.05, 0.13) as f32;
+        let hop = HoppingEo::new(&geom);
+
+        let mut rhs = FermionField::zeros(&geom);
+        full::schur_rhs(&hop, &mut rhs, &u, &b_e, &b_o, kappa);
+        let mut op = NativeMeo::new(&geom, u.clone(), kappa);
+        let mut x_e = FermionField::zeros(&geom);
+        let stats = lqcd::solver::bicgstab(&mut op, &mut x_e, &rhs, 1e-9, 600);
+        assert!(stats.converged, "{stats:?}");
+        let mut x_o = FermionField::zeros(&geom);
+        full::reconstruct_odd(&hop, &mut x_o, &u, &b_o, &x_e, kappa);
+        let rel = lqcd::solver::residual::full_system_residual(
+            &hop, &u, &x_e, &x_o, &b_e, &b_o, kappa,
+        );
+        assert!(rel < 1e-5, "full-system residual {rel}");
+    });
+}
+
+#[test]
+fn hopping_with_unit_gauge_preserves_momentum_zero_mode() {
+    // on U = 1, the constant spinor is an H eigenvector with eigenvalue 8
+    Runner::new("free zero mode", 5).run(|g| {
+        let geom = random_geometry(g);
+        let u = GaugeField::unit(&geom);
+        let mut psi = FermionField::zeros(&geom);
+        let mut rng = Rng::seeded(g.u64_below(1 << 48));
+        // constant (site-independent) random spinor content
+        let mut v = lqcd::algebra::Spinor::ZERO;
+        for i in 0..4 {
+            for c in 0..3 {
+                v.s[i][c] = Complex::new(rng.gaussian(), rng.gaussian());
+            }
+        }
+        for s in psi.layout.sites().collect::<Vec<_>>() {
+            psi.set_site(s, &v);
+        }
+        let mut out = FermionField::zeros(&geom);
+        HoppingEo::new(&geom).apply(&mut out, &u, &psi, Parity::Even);
+        let mut want = psi.clone();
+        want.scale(8.0);
+        want.axpy(-1.0, &out);
+        assert!(
+            want.norm2() / psi.norm2() < 1e-10,
+            "constant mode not preserved"
+        );
+    });
+}
+
+#[test]
+fn dslash_full_determinant_free_check() {
+    // D_W at kappa=0 is the identity: D psi == psi
+    Runner::new("kappa zero identity", 4).run(|g| {
+        let geom = random_geometry(g);
+        let mut rng = Rng::seeded(g.u64_below(1 << 48));
+        let u = GaugeField::random(&geom, &mut rng);
+        let psi_e = FermionField::gaussian(&geom, &mut rng);
+        let psi_o = FermionField::gaussian(&geom, &mut rng);
+        let hop = HoppingEo::new(&geom);
+        let mut out_e = FermionField::zeros(&geom);
+        let mut out_o = FermionField::zeros(&geom);
+        full::dslash_full(&hop, &mut out_e, &mut out_o, &u, &psi_e, &psi_o, 0.0);
+        out_e.axpy(-1.0, &psi_e);
+        out_o.axpy(-1.0, &psi_o);
+        assert!(out_e.norm2() + out_o.norm2() < 1e-10);
+    });
+}
