@@ -20,11 +20,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // hot-start gauge configuration: independent random SU(3) links
     let mut rng = Rng::seeded(7);
-    let u = GaugeField::random(&geom, &mut rng);
+    let u: GaugeField = GaugeField::random(&geom, &mut rng);
     println!("plaquette = {:.6} (hot start: ~0)", u.plaquette());
 
     // a Gaussian fermion source on the even sites
-    let psi = FermionField::gaussian(&geom, &mut rng);
+    let psi: FermionField = FermionField::gaussian(&geom, &mut rng);
     println!("|psi|^2 = {:.3}", psi.norm2());
 
     // apply the hopping operator H_oe (the paper's kernel)

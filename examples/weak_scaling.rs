@@ -36,8 +36,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         )?;
         let ggeom = Geometry::single_rank(global, tiling).map_err(|e| e.to_string())?;
         let mut rng = Rng::seeded(5);
-        let u_global = GaugeField::random(&ggeom, &mut rng);
-        let psi_global = FermionField::gaussian(&ggeom, &mut rng);
+        let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+        let psi_global: FermionField = FermionField::gaussian(&ggeom, &mut rng);
         let iters = opts.iters;
 
         let sw = Stopwatch::start();

@@ -1,5 +1,12 @@
 //! Solver benchmark: CGNR vs BiCGStab on the even-odd preconditioned
-//! system — iterations, operator applications, and sustained GFlops.
+//! system, across precisions — f32 (paper hot path), mixed-precision
+//! iterative refinement (f64 outer / f32 inner), and f64 reference.
+//!
+//! Besides the human-readable table, the bench emits a JSON report with
+//! per-precision iteration counts and residual histories (default
+//! `solver_bench.json`, override with `LQCD_BENCH_JSON=path` or disable
+//! with `LQCD_BENCH_JSON=-`) so future PRs can track the f32 / mixed /
+//! f64 trade-off quantitatively.
 
 mod common;
 
@@ -7,10 +14,75 @@ use lqcd::coordinator::operator::NativeMdagM;
 use lqcd::coordinator::operator::{LinearOperator, NativeMeo};
 use lqcd::field::{FermionField, GaugeField};
 use lqcd::lattice::{Geometry, LatticeDims, Tiling};
-use lqcd::solver;
+use lqcd::solver::{self, InnerAlgorithm};
 use lqcd::util::rng::Rng;
 use lqcd::util::tables::Table;
 use lqcd::util::timer::Stopwatch;
+
+/// One benchmark row headed for the JSON report.
+struct Run {
+    name: &'static str,
+    precision: &'static str,
+    /// relative-residual target this run solved to
+    tol: f64,
+    iterations: usize,
+    inner_iterations: usize,
+    seconds: f64,
+    gflops: f64,
+    true_residual: f64,
+    history: Vec<f64>,
+}
+
+/// JSON number, with NaN/inf (e.g. from a solver breakdown) mapped to
+/// null so the report stays parseable exactly when a run went wrong.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6e}")
+    } else {
+        "null".to_string()
+    }
+}
+
+fn json_escape_history(h: &[f64]) -> String {
+    let items: Vec<String> = h.iter().map(|&v| json_f64(v)).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn emit_json(dims: &str, kappa: f64, runs: &[Run]) {
+    let path = std::env::var("LQCD_BENCH_JSON")
+        .unwrap_or_else(|_| "solver_bench.json".to_string());
+    if path == "-" {
+        return;
+    }
+    let mut entries = Vec::new();
+    for r in runs {
+        entries.push(format!(
+            "    {{\n      \"solver\": \"{}\",\n      \"precision\": \"{}\",\n      \
+             \"tol\": {:.1e},\n      \
+             \"iterations\": {},\n      \"inner_iterations\": {},\n      \
+             \"seconds\": {:.4},\n      \"gflops\": {:.3},\n      \
+             \"true_residual\": {},\n      \"residual_history\": {}\n    }}",
+            r.name,
+            r.precision,
+            r.tol,
+            r.iterations,
+            r.inner_iterations,
+            r.seconds,
+            r.gflops,
+            json_f64(r.true_residual),
+            json_escape_history(&r.history),
+        ));
+    }
+    let doc = format!(
+        "{{\n  \"bench\": \"solver\",\n  \"lattice\": \"{dims}\",\n  \
+         \"kappa\": {kappa},\n  \"runs\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    match std::fs::write(&path, doc) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let opts = common::opts(1, 1);
@@ -21,56 +93,153 @@ fn main() {
     };
     let geom = Geometry::single_rank(dims, Tiling::new(4, 4).unwrap()).unwrap();
     let mut rng = Rng::seeded(9001);
-    let u = GaugeField::random(&geom, &mut rng);
-    let b = FermionField::gaussian(&geom, &mut rng);
-    let kappa = 0.13f32;
+    // generate at f64, demote: all precisions see the same configuration
+    let u64f: GaugeField<f64> = GaugeField::random(&geom, &mut rng);
+    let b64: FermionField<f64> = FermionField::gaussian(&geom, &mut rng);
+    let u32f = u64f.to_precision::<f32>();
+    let b32 = b64.to_precision::<f32>();
+    let kappa = 0.13f64;
     let tol = 1e-8;
+    let mut runs: Vec<Run> = Vec::new();
 
     let mut table = Table::new(
         &format!("Solver comparison on {dims} (kappa = {kappa}, tol = {tol:.0e})"),
-        &["solver", "iterations", "GFlops", "seconds", "true residual"],
+        &["solver", "precision", "iters", "GFlops", "seconds", "true residual"],
     );
 
-    // BiCGStab on M-hat
+    // BiCGStab on M-hat, f32
     {
-        let mut op = NativeMeo::new(&geom, u.clone(), kappa);
-        let mut x = FermionField::zeros(&geom);
+        let mut op = NativeMeo::new(&geom, u32f.clone(), kappa as f32);
+        let mut x = FermionField::<f32>::zeros(&geom);
         let sw = Stopwatch::start();
-        let stats = solver::bicgstab(&mut op, &mut x, &b, tol, 1000);
+        let stats = solver::bicgstab(&mut op, &mut x, &b32, tol, 1000);
         let secs = sw.secs();
-        let resid = solver::residual::operator_residual(&mut op, &x, &b);
+        let resid = solver::residual::operator_residual(&mut op, &x, &b32);
         table.row(vec![
             "bicgstab(M)".into(),
+            "f32".into(),
             stats.iterations.to_string(),
             format!("{:.2}", stats.flops as f64 / secs / 1e9),
             format!("{secs:.2}"),
             format!("{resid:.2e}"),
         ]);
-        assert!(stats.converged);
+        if !stats.converged {
+            eprintln!("warning: f32 bicgstab stalled at {:.2e}", stats.rel_residual);
+        }
+        runs.push(Run {
+            name: "bicgstab",
+            precision: "f32",
+            tol,
+            iterations: stats.iterations,
+            inner_iterations: 0,
+            seconds: secs,
+            gflops: stats.flops as f64 / secs / 1e9,
+            true_residual: resid,
+            history: stats.history,
+        });
     }
 
-    // CGNR on M^dag M
+    // CGNR on M^dag M, f32
     {
-        let mut op = NativeMdagM::new(&geom, u, kappa);
-        let mut bp = b.clone();
+        let mut op = NativeMdagM::new(&geom, u32f.clone(), kappa as f32);
+        let mut bp = b32.clone();
         bp.gamma5();
-        let mut mbp = FermionField::zeros(&geom);
+        let mut mbp = FermionField::<f32>::zeros(&geom);
         op.meo().apply(&mut mbp, &bp);
         mbp.gamma5();
-        let mut x = FermionField::zeros(&geom);
+        let mut x = FermionField::<f32>::zeros(&geom);
         let sw = Stopwatch::start();
         let stats = solver::cg(&mut op, &mut x, &mbp, tol, 1000);
         let secs = sw.secs();
         let resid = solver::residual::operator_residual(&mut op, &x, &mbp);
         table.row(vec![
             "cgnr(MdagM)".into(),
+            "f32".into(),
+            stats.iterations.to_string(),
+            format!("{:.2}", stats.flops as f64 / secs / 1e9),
+            format!("{secs:.2}"),
+            format!("{resid:.2e}"),
+        ]);
+        if !stats.converged {
+            eprintln!("warning: f32 cgnr stalled at {:.2e}", stats.rel_residual);
+        }
+        runs.push(Run {
+            name: "cgnr",
+            precision: "f32",
+            tol,
+            iterations: stats.iterations,
+            inner_iterations: 0,
+            seconds: secs,
+            gflops: stats.flops as f64 / secs / 1e9,
+            true_residual: resid,
+            history: stats.history,
+        });
+    }
+
+    // Mixed: f64 outer refinement, f32 inner BiCGStab, to f64 accuracy
+    {
+        let mut outer = NativeMeo::new(&geom, u64f.clone(), kappa);
+        let mut inner = NativeMeo::new(&geom, u32f.clone(), kappa as f32);
+        let mut x = FermionField::<f64>::zeros(&geom);
+        let sw = Stopwatch::start();
+        let stats = solver::mixed_refinement(
+            &mut outer, &mut inner, &mut x, &b64,
+            1e-12, 40, 1e-4, 1000, InnerAlgorithm::BiCgStab,
+        );
+        let secs = sw.secs();
+        let resid = solver::residual::operator_residual(&mut outer, &x, &b64);
+        table.row(vec![
+            "bicgstab(M) + refine".into(),
+            "mixed".into(),
+            format!("{}+{}", stats.outer_iterations, stats.inner_iterations),
+            format!("{:.2}", stats.flops as f64 / secs / 1e9),
+            format!("{secs:.2}"),
+            format!("{resid:.2e}"),
+        ]);
+        assert!(stats.converged);
+        runs.push(Run {
+            name: "bicgstab+refine",
+            precision: "mixed",
+            tol: 1e-12,
+            iterations: stats.outer_iterations,
+            inner_iterations: stats.inner_iterations,
+            seconds: secs,
+            gflops: stats.flops as f64 / secs / 1e9,
+            true_residual: resid,
+            history: stats.history,
+        });
+    }
+
+    // BiCGStab on M-hat, f64 reference (same 1e-12 target as mixed)
+    {
+        let mut op = NativeMeo::new(&geom, u64f.clone(), kappa);
+        let mut x = FermionField::<f64>::zeros(&geom);
+        let sw = Stopwatch::start();
+        let stats = solver::bicgstab(&mut op, &mut x, &b64, 1e-12, 2000);
+        let secs = sw.secs();
+        let resid = solver::residual::operator_residual(&mut op, &x, &b64);
+        table.row(vec![
+            "bicgstab(M)".into(),
+            "f64".into(),
             stats.iterations.to_string(),
             format!("{:.2}", stats.flops as f64 / secs / 1e9),
             format!("{secs:.2}"),
             format!("{resid:.2e}"),
         ]);
         assert!(stats.converged);
+        runs.push(Run {
+            name: "bicgstab",
+            precision: "f64",
+            tol: 1e-12,
+            iterations: stats.iterations,
+            inner_iterations: 0,
+            seconds: secs,
+            gflops: stats.flops as f64 / secs / 1e9,
+            true_residual: resid,
+            history: stats.history,
+        });
     }
 
     println!("{}", table.render());
+    emit_json(&dims.to_string(), kappa, &runs);
 }

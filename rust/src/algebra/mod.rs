@@ -8,11 +8,13 @@
 mod complex;
 mod gamma;
 mod project;
+mod real;
 mod spinor;
 mod su3;
 
 pub use complex::Complex;
 pub use gamma::{Gamma, GAMMA, GAMMA5};
 pub use project::{Coef, ProjEntry, PROJ};
+pub use real::Real;
 pub use spinor::{HalfSpinor, Spinor};
 pub use su3::Su3;

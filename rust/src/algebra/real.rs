@@ -1,0 +1,139 @@
+//! The [`Real`] scalar trait: the one abstraction that makes the whole
+//! field / kernel / solver stack precision-generic.
+//!
+//! The paper's kernel is single-precision by design (A64FX peaks at 2x
+//! the f32 throughput), but production workflows wrap a fast f32 inner
+//! solve in an f64 outer iteration (mixed-precision iterative
+//! refinement; see [`crate::solver::mixed`]). Everything that stores or
+//! moves field data — [`crate::field`], [`crate::dslash`],
+//! [`crate::comm`], the operators in [`crate::coordinator::operator`]
+//! and the solvers in [`crate::solver`] — is generic over `Real`, with
+//! `f32` as the default type parameter so the paper-faithful hot path
+//! stays the default everywhere.
+//!
+//! Reductions (dot products, norms) deliberately do *not* happen in `R`:
+//! every accumulation goes through [`Real::to_f64`] and sums in f64,
+//! regardless of the field precision. CG stagnates when ~10^5 f32 terms
+//! are accumulated in f32; keeping the reduction precision fixed also
+//! means `SolveStats` are comparable across precisions.
+
+use std::fmt::{Debug, Display};
+use std::ops::{Add, AddAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// A real scalar the lattice stack can be instantiated at.
+///
+/// Implemented for `f32` (the paper's benchmark precision) and `f64`
+/// (the outer-solve / oracle precision). The bounds are exactly what the
+/// kernels and solvers need: plain arithmetic, comparison, and loss-free
+/// round-trips through `f64` for reductions and cross-precision
+/// conversion.
+pub trait Real:
+    Copy
+    + Clone
+    + Default
+    + Debug
+    + Display
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + 'static
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Machine epsilon of this precision (reported by solvers and used
+    /// by tests to scale tolerances).
+    const EPSILON: f64;
+    /// Short name for reports and JSON output ("f32" / "f64").
+    const NAME: &'static str;
+
+    /// Round an f64 into this precision.
+    fn from_f64(v: f64) -> Self;
+
+    /// Widen into f64 (exact for both instantiations).
+    fn to_f64(self) -> f64;
+}
+
+impl Real for f32 {
+    const ZERO: f32 = 0.0;
+    const ONE: f32 = 1.0;
+    const EPSILON: f64 = f32::EPSILON as f64;
+    const NAME: &'static str = "f32";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f32 {
+        v as f32
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+}
+
+impl Real for f64 {
+    const ZERO: f64 = 0.0;
+    const ONE: f64 = 1.0;
+    const EPSILON: f64 = f64::EPSILON;
+    const NAME: &'static str = "f64";
+
+    #[inline(always)]
+    fn from_f64(v: f64) -> f64 {
+        v
+    }
+
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sum_as_f64<R: Real>(xs: &[R]) -> f64 {
+        xs.iter().map(|&x| x.to_f64()).sum()
+    }
+
+    #[test]
+    fn roundtrip_and_constants() {
+        assert_eq!(f32::from_f64(1.5), 1.5f32);
+        assert_eq!(f64::from_f64(1.5), 1.5f64);
+        assert_eq!(<f32 as Real>::ZERO, 0.0);
+        assert_eq!(<f64 as Real>::ONE, 1.0);
+        assert_eq!(<f32 as Real>::NAME, "f32");
+        assert_eq!(<f64 as Real>::NAME, "f64");
+        assert!(<f32 as Real>::EPSILON > <f64 as Real>::EPSILON);
+    }
+
+    #[test]
+    fn f64_accumulation_beats_native_f32_sum() {
+        // 1 + eps/2 summed repeatedly: a pure-f32 accumulator never moves,
+        // the f64 accumulator tracks every term.
+        let tiny = (f32::EPSILON / 4.0) as f64;
+        let xs: Vec<f32> = std::iter::once(1.0f32)
+            .chain(std::iter::repeat(tiny as f32).take(1000))
+            .collect();
+        let naive: f32 = xs.iter().sum();
+        let wide = sum_as_f64(&xs);
+        assert_eq!(naive, 1.0, "f32 accumulation silently drops the tail");
+        assert!((wide - (1.0 + 1000.0 * (tiny as f32) as f64)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generic_arithmetic_compiles_at_both_precisions() {
+        fn axpy<R: Real>(a: R, x: R, y: R) -> R {
+            a * x + y
+        }
+        assert_eq!(axpy(2.0f32, 3.0, 1.0), 7.0);
+        assert_eq!(axpy(2.0f64, 3.0, 1.0), 7.0);
+    }
+}

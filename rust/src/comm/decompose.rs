@@ -4,6 +4,7 @@
 //! the single-rank periodic operator on the joined field) and by the
 //! examples to set up distributed runs from one global configuration.
 
+use crate::algebra::Real;
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{
     Dir, EvenOdd, Geometry, Parity, SiteCoord,
@@ -13,7 +14,11 @@ use crate::lattice::{
 ///
 /// Both fields hold the same parity. Local extents are all even, so the
 /// local parity of a site equals its global parity.
-pub fn extract_fermion(global: &FermionField, _ggeom: &Geometry, lgeom: &Geometry) -> FermionField {
+pub fn extract_fermion<R: Real>(
+    global: &FermionField<R>,
+    _ggeom: &Geometry,
+    lgeom: &Geometry,
+) -> FermionField<R> {
     let mut local = FermionField::zeros(lgeom);
     let origin = lgeom.origin();
     let sites: Vec<SiteCoord> = local.layout.sites().collect();
@@ -27,7 +32,11 @@ pub fn extract_fermion(global: &FermionField, _ggeom: &Geometry, lgeom: &Geometr
 }
 
 /// Insert a rank's local fermion field into the global one.
-pub fn insert_fermion(global: &mut FermionField, local: &FermionField, lgeom: &Geometry) {
+pub fn insert_fermion<R: Real>(
+    global: &mut FermionField<R>,
+    local: &FermionField<R>,
+    lgeom: &Geometry,
+) {
     let origin = lgeom.origin();
     for s in local.layout.sites().collect::<Vec<_>>() {
         let gs = global_site(lgeom, s, origin);
@@ -37,7 +46,7 @@ pub fn insert_fermion(global: &mut FermionField, local: &FermionField, lgeom: &G
 }
 
 /// Extract this rank's local gauge field from a global one.
-pub fn extract_gauge(global: &GaugeField, lgeom: &Geometry) -> GaugeField {
+pub fn extract_gauge<R: Real>(global: &GaugeField<R>, lgeom: &Geometry) -> GaugeField<R> {
     let mut local = GaugeField::unit(lgeom);
     let origin = lgeom.origin();
     for p in Parity::BOTH {
@@ -106,7 +115,7 @@ mod tests {
         let ggeom = Geometry::single_rank(global_dims, tiling).unwrap();
         let grid = ProcGrid([1, 1, 2, 2]);
         let mut rng = Rng::seeded(3);
-        let global = FermionField::gaussian(&ggeom, &mut rng);
+        let global: FermionField = FermionField::gaussian(&ggeom, &mut rng);
 
         let mut rebuilt = FermionField::zeros(&ggeom);
         for rank in 0..grid.size() {
@@ -124,7 +133,7 @@ mod tests {
         let ggeom = Geometry::single_rank(global_dims, tiling).unwrap();
         let grid = ProcGrid([2, 1, 1, 2]);
         let mut rng = Rng::seeded(4);
-        let global = GaugeField::random(&ggeom, &mut rng);
+        let global: GaugeField = GaugeField::random(&ggeom, &mut rng);
 
         for rank in 0..grid.size() {
             let lgeom = Geometry::for_rank(global_dims, grid, rank, tiling).unwrap();

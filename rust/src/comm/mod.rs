@@ -12,4 +12,4 @@ pub mod world;
 
 pub use halo::HaloPlans;
 pub use unpack::RecvBuffers;
-pub use world::{run_world, Comm};
+pub use world::{run_world, Comm, CommScalar, Payload};

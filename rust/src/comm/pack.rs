@@ -6,10 +6,14 @@
 //! the `U^dag * proj+` product (the sender does the 3x3 multiply);
 //! downward exports carry only `proj-`.
 //!
-//! The per-site write of 12 consecutive f32 from lanes selected by the
+//! Buffers are generic over the [`Real`] wire scalar: the halo of an f64
+//! field travels as f64 (12 reals per site either way), so the
+//! distributed operator is exact at every precision.
+//!
+//! The per-site write of 12 consecutive reals from lanes selected by the
 //! site list is the software analog of the SVE `compact` instruction.
 
-use crate::algebra::PROJ;
+use crate::algebra::{Real, PROJ};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{Dir, SiteCoord};
 
@@ -17,13 +21,13 @@ use super::halo::{HaloPlans, HALF_SPINOR_F32};
 
 /// Pack a range of the upward-export list of direction `dir` into `buf`.
 ///
-/// Content per site: `U_dir^dag(x) * proj+_dir(psi(x))`, 12 f32.
-pub fn pack_up_range(
-    buf: &mut [f32],
+/// Content per site: `U_dir^dag(x) * proj+_dir(psi(x))`, 12 reals.
+pub fn pack_up_range<R: Real>(
+    buf: &mut [R],
     plans: &HaloPlans,
     dir: usize,
-    u: &GaugeField,
-    psi: &FermionField,
+    u: &GaugeField<R>,
+    psi: &FermionField<R>,
     begin: usize,
     end: usize,
 ) {
@@ -39,13 +43,13 @@ pub fn pack_up_range(
 
 /// Pack a range of the downward-export list of direction `dir` into `buf`.
 ///
-/// Content per site: `proj-_dir(psi(x))`, 12 f32 (no U-mult; the receiver
-/// multiplies its local link).
-pub fn pack_down_range(
-    buf: &mut [f32],
+/// Content per site: `proj-_dir(psi(x))`, 12 reals (no U-mult; the
+/// receiver multiplies its local link).
+pub fn pack_down_range<R: Real>(
+    buf: &mut [R],
     plans: &HaloPlans,
     dir: usize,
-    psi: &FermionField,
+    psi: &FermionField<R>,
     begin: usize,
     end: usize,
 ) {
@@ -58,28 +62,28 @@ pub fn pack_down_range(
 }
 
 #[inline]
-fn write_half(dst: &mut [f32], h: &crate::algebra::HalfSpinor) {
+fn write_half<R: Real>(dst: &mut [R], h: &crate::algebra::HalfSpinor) {
     let mut k = 0;
     for s in 0..2 {
         for c in 0..3 {
-            dst[k] = h.h[s][c].re as f32;
-            dst[k + 1] = h.h[s][c].im as f32;
+            dst[k] = R::from_f64(h.h[s][c].re);
+            dst[k + 1] = R::from_f64(h.h[s][c].im);
             k += 2;
         }
     }
 }
 
-/// Alias used by the driver.
+/// Alias used by the driver (reals per packed site, any precision).
 pub const HALF_F32: usize = HALF_SPINOR_F32;
 
 /// Like [`pack_up_range`] but `buf` starts at site `begin` (relative
 /// addressing, for per-thread buffer sub-slices).
-pub fn pack_up_range_rel(
-    buf: &mut [f32],
+pub fn pack_up_range_rel<R: Real>(
+    buf: &mut [R],
     plans: &HaloPlans,
     dir: usize,
-    u: &GaugeField,
-    psi: &FermionField,
+    u: &GaugeField<R>,
+    psi: &FermionField<R>,
     begin: usize,
     end: usize,
 ) {
@@ -95,11 +99,11 @@ pub fn pack_up_range_rel(
 }
 
 /// Like [`pack_down_range`] but with relative buffer addressing.
-pub fn pack_down_range_rel(
-    buf: &mut [f32],
+pub fn pack_down_range_rel<R: Real>(
+    buf: &mut [R],
     plans: &HaloPlans,
     dir: usize,
-    psi: &FermionField,
+    psi: &FermionField<R>,
     begin: usize,
     end: usize,
 ) {
@@ -114,12 +118,13 @@ pub fn pack_down_range_rel(
 
 /// Read one packed half-spinor back (EO2 side).
 #[inline]
-pub fn read_half(src: &[f32]) -> crate::algebra::HalfSpinor {
+pub fn read_half<R: Real>(src: &[R]) -> crate::algebra::HalfSpinor {
     let mut h = crate::algebra::HalfSpinor::default();
     let mut k = 0;
     for s in 0..2 {
         for c in 0..3 {
-            h.h[s][c] = crate::algebra::Complex::new(src[k] as f64, src[k + 1] as f64);
+            h.h[s][c] =
+                crate::algebra::Complex::new(src[k].to_f64(), src[k + 1].to_f64());
             k += 2;
         }
     }
@@ -150,6 +155,15 @@ mod tests {
                 assert!((back.h[s][c] - h.h[s][c]).abs() < 1e-6);
             }
         }
+        // f64 wire: lossless
+        let mut buf = vec![0.0f64; HALF_SPINOR_F32];
+        write_half(&mut buf, &h);
+        let back = read_half(&buf);
+        for s in 0..2 {
+            for c in 0..3 {
+                assert_eq!(back.h[s][c], h.h[s][c]);
+            }
+        }
     }
 
     #[test]
@@ -161,8 +175,8 @@ mod tests {
         )
         .unwrap();
         let mut rng = Rng::seeded(5);
-        let u = GaugeField::random(&geom, &mut rng);
-        let psi = FermionField::gaussian(&geom, &mut rng);
+        let u: GaugeField = GaugeField::random(&geom, &mut rng);
+        let psi: FermionField = FermionField::gaussian(&geom, &mut rng);
         let plans = HaloPlans::new(&geom, Parity::Odd, [true; 4]);
         for dir in 0..4 {
             let n = plans.face_count[dir];

@@ -14,7 +14,7 @@
 //! Delivery of buffer entries to lattice lanes through the precomputed
 //! position maps is the software analog of the `tbl` delivery in Fig. 7.
 
-use crate::algebra::{Spinor, PROJ};
+use crate::algebra::{Real, Spinor, PROJ};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{Dir, SiteCoord};
 
@@ -22,12 +22,22 @@ use super::halo::{site_from_flat, HaloPlans, HALF_SPINOR_F32, NOT_ON_FACE};
 use super::pack::read_half;
 
 /// Received buffers for one hopping application, indexed by direction.
-#[derive(Clone, Debug, Default)]
-pub struct RecvBuffers {
+/// The wire scalar follows the field precision.
+#[derive(Clone, Debug)]
+pub struct RecvBuffers<R: Real = f32> {
     /// from the +d neighbor (output sites on the high face; needs U-mult)
-    pub from_up: [Vec<f32>; 4],
+    pub from_up: [Vec<R>; 4],
     /// from the -d neighbor (pre-multiplied by the sender)
-    pub from_down: [Vec<f32>; 4],
+    pub from_down: [Vec<R>; 4],
+}
+
+impl<R: Real> Default for RecvBuffers<R> {
+    fn default() -> Self {
+        RecvBuffers {
+            from_up: std::array::from_fn(|_| Vec::new()),
+            from_down: std::array::from_fn(|_| Vec::new()),
+        }
+    }
 }
 
 /// EO2 cost of one site (used by the balancer and the profiler):
@@ -52,11 +62,11 @@ pub fn site_cost(plans: &HaloPlans, flat: usize) -> u64 {
 
 /// Process the flat output-site range `[begin, end)`: add every incoming
 /// halo contribution to `out`.
-pub fn eo2_range(
-    out: &mut FermionField,
+pub fn eo2_range<R: Real>(
+    out: &mut FermionField<R>,
     plans: &HaloPlans,
-    bufs: &RecvBuffers,
-    u: &GaugeField,
+    bufs: &RecvBuffers<R>,
+    u: &GaugeField<R>,
     begin: usize,
     end: usize,
 ) {
@@ -72,12 +82,12 @@ pub fn eo2_range(
 /// # Safety
 /// Ranges given to concurrent callers must be disjoint; `out` must point
 /// at a live buffer laid out by `l`.
-pub unsafe fn eo2_range_raw(
-    out: crate::coordinator::team::SendPtr<f32>,
+pub unsafe fn eo2_range_raw<R: Real>(
+    out: crate::coordinator::team::SendPtr<R>,
     l: &crate::lattice::EoLayout,
     plans: &HaloPlans,
-    bufs: &RecvBuffers,
-    u: &GaugeField,
+    bufs: &RecvBuffers<R>,
+    u: &GaugeField<R>,
     begin: usize,
     end: usize,
 ) {
@@ -127,8 +137,8 @@ pub unsafe fn eo2_range_raw(
             for color in 0..3 {
                 let ro = l.spinor_vec(lc.tile, spin, color, 0) + lc.lane;
                 let io = l.spinor_vec(lc.tile, spin, color, 1) + lc.lane;
-                *out.0.add(ro) += acc.s[spin][color].re as f32;
-                *out.0.add(io) += acc.s[spin][color].im as f32;
+                *out.0.add(ro) += R::from_f64(acc.s[spin][color].re);
+                *out.0.add(io) += R::from_f64(acc.s[spin][color].im);
             }
         }
     }

@@ -10,11 +10,53 @@ use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 
+/// A wire buffer: halo payloads travel at the precision of the field
+/// they were packed from (12 reals per site either way).
+#[derive(Clone, Debug)]
+pub enum Payload {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+/// Scalars that can travel through the simulated-MPI world. Implemented
+/// for `f32` and `f64`; a `recv` with the wrong precision for the
+/// matching send panics loudly (a type confusion, never a silent cast).
+pub trait CommScalar: Copy + Send + 'static {
+    fn wrap(v: Vec<Self>) -> Payload;
+    fn unwrap(p: Payload) -> Vec<Self>;
+}
+
+impl CommScalar for f32 {
+    fn wrap(v: Vec<f32>) -> Payload {
+        Payload::F32(v)
+    }
+
+    fn unwrap(p: Payload) -> Vec<f32> {
+        match p {
+            Payload::F32(v) => v,
+            Payload::F64(_) => panic!("recv precision mismatch: wanted f32, got f64"),
+        }
+    }
+}
+
+impl CommScalar for f64 {
+    fn wrap(v: Vec<f64>) -> Payload {
+        Payload::F64(v)
+    }
+
+    fn unwrap(p: Payload) -> Vec<f64> {
+        match p {
+            Payload::F64(v) => v,
+            Payload::F32(_) => panic!("recv precision mismatch: wanted f64, got f32"),
+        }
+    }
+}
+
 /// A tagged message.
 struct Msg {
     from: usize,
     tag: u64,
-    payload: Vec<f32>,
+    payload: Payload,
 }
 
 /// Per-rank communicator handle.
@@ -24,7 +66,7 @@ pub struct Comm {
     senders: Vec<Sender<Msg>>,
     inbox: Receiver<Msg>,
     /// messages that arrived while waiting for a different (from, tag)
-    pending: HashMap<(usize, u64), Vec<Vec<f32>>>,
+    pending: HashMap<(usize, u64), Vec<Payload>>,
     barrier: Arc<Barrier>,
     reduce_slots: Arc<Mutex<Vec<f64>>>,
     reduce_barrier: Arc<Barrier>,
@@ -32,27 +74,27 @@ pub struct Comm {
 
 impl Comm {
     /// Non-blocking send (buffered by the channel).
-    pub fn send(&self, to: usize, tag: u64, payload: Vec<f32>) {
+    pub fn send<S: CommScalar>(&self, to: usize, tag: u64, payload: Vec<S>) {
         self.senders[to]
             .send(Msg {
                 from: self.rank,
                 tag,
-                payload,
+                payload: S::wrap(payload),
             })
             .expect("rank channel closed");
     }
 
     /// Blocking receive matching (from, tag).
-    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<f32> {
+    pub fn recv<S: CommScalar>(&mut self, from: usize, tag: u64) -> Vec<S> {
         if let Some(queue) = self.pending.get_mut(&(from, tag)) {
             if !queue.is_empty() {
-                return queue.remove(0);
+                return S::unwrap(queue.remove(0));
             }
         }
         loop {
             let msg = self.inbox.recv().expect("rank channel closed");
             if msg.from == from && msg.tag == tag {
-                return msg.payload;
+                return S::unwrap(msg.payload);
             }
             self.pending
                 .entry((msg.from, msg.tag))
@@ -140,7 +182,7 @@ mod tests {
             let next = (rank + 1) % 4;
             let prev = (rank + 3) % 4;
             comm.send(next, 7, vec![rank as f32]);
-            let got = comm.recv(prev, 7);
+            let got: Vec<f32> = comm.recv(prev, 7);
             got[0] as usize
         });
         assert_eq!(results, vec![3, 0, 1, 2]);
@@ -153,8 +195,8 @@ mod tests {
             comm.send(other, 1, vec![10.0 + rank as f32]);
             comm.send(other, 2, vec![20.0 + rank as f32]);
             // receive in the opposite order to exercise the pending queue
-            let b = comm.recv(other, 2);
-            let a = comm.recv(other, 1);
+            let b: Vec<f32> = comm.recv(other, 2);
+            let a: Vec<f32> = comm.recv(other, 1);
             (a[0], b[0])
         });
         assert_eq!(results[0], (11.0, 21.0));
@@ -165,8 +207,8 @@ mod tests {
     fn self_send() {
         // the paper enforces communication with the self process
         let results = run_world(1, |_, comm| {
-            comm.send(0, 3, vec![1.0, 2.0]);
-            comm.recv(0, 3)
+            comm.send(0, 3, vec![1.0f32, 2.0]);
+            comm.recv::<f32>(0, 3)
         });
         assert_eq!(results[0], vec![1.0, 2.0]);
     }
@@ -188,12 +230,12 @@ mod tests {
     fn same_tag_ordering_preserved() {
         let results = run_world(2, |rank, comm| {
             if rank == 0 {
-                comm.send(1, 5, vec![1.0]);
-                comm.send(1, 5, vec![2.0]);
+                comm.send(1, 5, vec![1.0f32]);
+                comm.send(1, 5, vec![2.0f32]);
                 vec![]
             } else {
-                let a = comm.recv(0, 5);
-                let b = comm.recv(0, 5);
+                let a: Vec<f32> = comm.recv(0, 5);
+                let b: Vec<f32> = comm.recv(0, 5);
                 vec![a[0], b[0]]
             }
         });

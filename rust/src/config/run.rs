@@ -20,6 +20,13 @@ pub struct SolverConfig {
     pub use_pjrt: bool,
     /// "cg" or "bicgstab"
     pub algorithm: String,
+    /// Field/kernel precision: "f32" (paper hot path), "f64", or "mixed"
+    /// (f64 outer iterative refinement around an f32 inner solve).
+    pub precision: String,
+    /// Mixed precision: relative tolerance of each inner f32 solve.
+    pub inner_tol: f64,
+    /// Mixed precision: cap on outer refinement steps.
+    pub max_outer: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -54,6 +61,9 @@ impl Default for RunConfig {
                 maxiter: 1000,
                 use_pjrt: false,
                 algorithm: "cg".into(),
+                precision: "f32".into(),
+                inner_tol: 1e-4,
+                max_outer: 40,
             },
             parallel: ParallelConfig {
                 threads_per_rank: 4,
@@ -138,6 +148,43 @@ impl RunConfig {
                     as usize,
                 use_pjrt: doc.bool_or("solver.use_pjrt", defaults.solver.use_pjrt),
                 algorithm: doc.str_or("solver.algorithm", &defaults.solver.algorithm),
+                precision: {
+                    let p = doc.str_or("solver.precision", &defaults.solver.precision);
+                    match p.as_str() {
+                        "f32" | "f64" | "mixed" => p,
+                        other => {
+                            return Err(ConfigError {
+                                line: 0,
+                                message: format!(
+                                    "solver.precision must be f32, f64 or mixed (got {other:?})"
+                                ),
+                            })
+                        }
+                    }
+                },
+                inner_tol: {
+                    let t = doc.float_or("solver.inner_tol", defaults.solver.inner_tol);
+                    if !(t > 0.0 && t < 1.0) {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "solver.inner_tol must be in (0, 1) (got {t})"
+                            ),
+                        });
+                    }
+                    t
+                },
+                max_outer: {
+                    let n =
+                        doc.int_or("solver.max_outer", defaults.solver.max_outer as i64);
+                    if n <= 0 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!("solver.max_outer must be positive (got {n})"),
+                        });
+                    }
+                    n as usize
+                },
             },
             parallel: ParallelConfig {
                 threads_per_rank: doc.int_or(
@@ -161,6 +208,27 @@ mod tests {
         let c = RunConfig::default();
         assert_eq!(c.lattice.global.volume(), 8 * 8 * 8 * 16);
         assert_eq!(c.solver.algorithm, "cg");
+        assert_eq!(c.solver.precision, "f32");
+        assert!(c.solver.inner_tol > 0.0 && c.solver.max_outer > 0);
+    }
+
+    #[test]
+    fn precision_keys_parse_and_validate() {
+        let doc = Document::parse(
+            "[solver]\nprecision = \"mixed\"\ninner_tol = 1e-5\nmax_outer = 25",
+        )
+        .unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert_eq!(c.solver.precision, "mixed");
+        assert!((c.solver.inner_tol - 1e-5).abs() < 1e-18);
+        assert_eq!(c.solver.max_outer, 25);
+
+        let doc = Document::parse("[solver]\nprecision = \"f16\"").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "bad precision must fail");
+        let doc = Document::parse("[solver]\ninner_tol = -1.0").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "negative inner_tol must fail");
+        let doc = Document::parse("[solver]\nmax_outer = -1").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "negative max_outer must fail");
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //! (overlapped with the wire) -> wait -> EO2, with every phase charged to
 //! the FAPP-analog profiler. This is the per-rank pipeline of §3.5-3.6.
 
+use crate::algebra::Real;
 use crate::comm::halo::HaloPlans;
 use crate::comm::unpack::RecvBuffers;
-use crate::comm::{balance, pack, unpack, Comm};
+use crate::comm::{balance, pack, unpack, Comm, CommScalar};
 use crate::dslash::{HoppingEo, WrapMode};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{Dir, Geometry, Parity};
@@ -79,12 +80,13 @@ impl DistHopping {
         &self.plans[p_out.index()]
     }
 
-    /// out = H_{p_out <- 1-p_out} psi across the rank world.
-    pub fn hopping(
+    /// out = H_{p_out <- 1-p_out} psi across the rank world. Generic over
+    /// the field precision: halo buffers and the wire payload follow `R`.
+    pub fn hopping<R: Real + CommScalar>(
         &self,
-        out: &mut FermionField,
-        u: &GaugeField,
-        psi: &FermionField,
+        out: &mut FermionField<R>,
+        u: &GaugeField<R>,
+        psi: &FermionField<R>,
         p_out: Parity,
         comm: &mut Comm,
         team: &mut Team,
@@ -95,18 +97,18 @@ impl DistHopping {
         let grid = self.geom.grid;
 
         // ---------------- EO1: pack send buffers --------------------
-        let mut up_bufs: [Vec<f32>; 4] = Default::default();
-        let mut down_bufs: [Vec<f32>; 4] = Default::default();
+        let mut up_bufs: [Vec<R>; 4] = std::array::from_fn(|_| Vec::new());
+        let mut down_bufs: [Vec<R>; 4] = std::array::from_fn(|_| Vec::new());
         for dir in 0..4 {
             if self.comm_dirs[dir] {
-                up_bufs[dir] = vec![0.0f32; plans.buffer_len(dir)];
-                down_bufs[dir] = vec![0.0f32; plans.buffer_len(dir)];
+                up_bufs[dir] = vec![R::ZERO; plans.buffer_len(dir)];
+                down_bufs[dir] = vec![R::ZERO; plans.buffer_len(dir)];
             }
         }
         {
-            let up_ptrs: [SendPtr<f32>; 4] =
+            let up_ptrs: [SendPtr<R>; 4] =
                 std::array::from_fn(|d| SendPtr(up_bufs[d].as_mut_ptr()));
-            let down_ptrs: [SendPtr<f32>; 4] =
+            let down_ptrs: [SendPtr<R>; 4] =
                 std::array::from_fn(|d| SendPtr(down_bufs[d].as_mut_ptr()));
             let n = self.nthreads;
             team.parallel(|tid| {
@@ -179,7 +181,7 @@ impl DistHopping {
         }
 
         // ---------------- receive halos ------------------------------
-        let mut bufs = RecvBuffers::default();
+        let mut bufs = RecvBuffers::<R>::default();
         prof.scope(0, Phase::CommWait, || {
             for dir in 0..4 {
                 if !self.comm_dirs[dir] {
@@ -217,12 +219,12 @@ impl DistHopping {
 
 /// EO1 pack helpers re-exported with the profiling-friendly names used by
 /// the driver (they operate on buffer *sub-slices* starting at site b).
-fn pack_up_shifted(
-    buf: &mut [f32],
+fn pack_up_shifted<R: Real>(
+    buf: &mut [R],
     plans: &HaloPlans,
     dir: usize,
-    u: &GaugeField,
-    psi: &FermionField,
+    u: &GaugeField<R>,
+    psi: &FermionField<R>,
     b: usize,
     e: usize,
 ) {
@@ -230,11 +232,11 @@ fn pack_up_shifted(
     pack::pack_up_range_rel(buf, plans, dir, u, psi, b, e);
 }
 
-fn pack_down_shifted(
-    buf: &mut [f32],
+fn pack_down_shifted<R: Real>(
+    buf: &mut [R],
     plans: &HaloPlans,
     dir: usize,
-    psi: &FermionField,
+    psi: &FermionField<R>,
     b: usize,
     e: usize,
 ) {

@@ -3,8 +3,14 @@
 //! The solvers are generic over [`LinearOperator`]; implementations here
 //! wrap the native kernels (single-rank periodic and distributed) — the
 //! PJRT-backed operator lives in [`crate::runtime`].
+//!
+//! Every operator is generic over the [`Real`] field scalar (default
+//! `f32`): `kappa`, the internal scratch fields and the gauge storage all
+//! follow the operator's precision, while `reduce_sum` stays f64 at every
+//! precision (global reductions are always accumulated wide).
 
-use crate::comm::Comm;
+use crate::algebra::Real;
+use crate::comm::{Comm, CommScalar};
 use crate::dslash::{full, HoppingEo};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{Geometry, Parity};
@@ -13,31 +19,32 @@ use super::driver::DistHopping;
 use super::profiler::Profiler;
 use super::team::Team;
 
-/// An operator on even-parity fermion fields.
-pub trait LinearOperator {
+/// An operator on even-parity fermion fields of precision `R`.
+pub trait LinearOperator<R: Real = f32> {
     /// out = A psi.
-    fn apply(&mut self, out: &mut FermionField, psi: &FermionField);
+    fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>);
 
     /// Flop per application (QXS convention), for harness reporting.
     fn flops_per_apply(&self) -> u64;
 
-    /// Sum a scalar across ranks (identity for single-rank operators).
+    /// Sum a scalar across ranks (identity for single-rank operators);
+    /// always f64 regardless of the field precision.
     fn reduce_sum(&mut self, v: f64) -> f64 {
         v
     }
 }
 
 /// Native single-rank M-hat = 1 - kappa^2 H_eo H_oe (Eq. 4 LHS).
-pub struct NativeMeo {
+pub struct NativeMeo<R: Real = f32> {
     hop: HoppingEo,
-    u: GaugeField,
-    kappa: f32,
-    tmp: FermionField,
+    u: GaugeField<R>,
+    kappa: R,
+    tmp: FermionField<R>,
     half_volume: usize,
 }
 
-impl NativeMeo {
-    pub fn new(geom: &Geometry, u: GaugeField, kappa: f32) -> NativeMeo {
+impl<R: Real> NativeMeo<R> {
+    pub fn new(geom: &Geometry, u: GaugeField<R>, kappa: R) -> NativeMeo<R> {
         NativeMeo {
             hop: HoppingEo::new(geom),
             u,
@@ -47,7 +54,7 @@ impl NativeMeo {
         }
     }
 
-    pub fn gauge(&self) -> &GaugeField {
+    pub fn gauge(&self) -> &GaugeField<R> {
         &self.u
     }
 
@@ -55,13 +62,13 @@ impl NativeMeo {
         &self.hop
     }
 
-    pub fn kappa(&self) -> f32 {
+    pub fn kappa(&self) -> R {
         self.kappa
     }
 }
 
-impl LinearOperator for NativeMeo {
-    fn apply(&mut self, out: &mut FermionField, psi: &FermionField) {
+impl<R: Real> LinearOperator<R> for NativeMeo<R> {
+    fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>) {
         full::meo(&self.hop, out, &mut self.tmp, &self.u, psi, self.kappa);
     }
 
@@ -72,28 +79,28 @@ impl LinearOperator for NativeMeo {
 
 /// Native single-rank normal operator M-hat^dag M-hat (hermitian positive
 /// definite; what CG solves).
-pub struct NativeMdagM {
-    inner: NativeMeo,
-    mid: FermionField,
+pub struct NativeMdagM<R: Real = f32> {
+    inner: NativeMeo<R>,
+    mid: FermionField<R>,
 }
 
-impl NativeMdagM {
-    pub fn new(geom: &Geometry, u: GaugeField, kappa: f32) -> NativeMdagM {
+impl<R: Real> NativeMdagM<R> {
+    pub fn new(geom: &Geometry, u: GaugeField<R>, kappa: R) -> NativeMdagM<R> {
         NativeMdagM {
             inner: NativeMeo::new(geom, u, kappa),
             mid: FermionField::zeros(geom),
         }
     }
 
-    pub fn meo(&mut self) -> &mut NativeMeo {
+    pub fn meo(&mut self) -> &mut NativeMeo<R> {
         &mut self.inner
     }
 }
 
-impl LinearOperator for NativeMdagM {
-    fn apply(&mut self, out: &mut FermionField, psi: &FermionField) {
+impl<R: Real> LinearOperator<R> for NativeMdagM<R> {
+    fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>) {
         // mid = M psi ; out = g5 M g5 mid
-        let mut m_psi = std::mem::replace(&mut self.mid, FermionField::zeros_like_hack());
+        let mut m_psi = std::mem::replace(&mut self.mid, FermionField::placeholder());
         self.inner.apply(&mut m_psi, psi);
         m_psi.gamma5();
         self.inner.apply(out, &m_psi);
@@ -107,46 +114,29 @@ impl LinearOperator for NativeMdagM {
     }
 }
 
-impl FermionField {
-    /// Internal helper: placeholder value swapped out during MdagM apply.
-    fn zeros_like_hack() -> FermionField {
-        // an empty field; immediately replaced. Uses a minimal layout.
-        FermionField {
-            layout: crate::lattice::EoLayout {
-                nt: 0,
-                nz: 0,
-                nyt: 0,
-                nxt: 0,
-                tiling: crate::lattice::Tiling::new(2, 1).unwrap(),
-            },
-            data: Vec::new(),
-        }
-    }
-}
-
 /// Distributed M-hat over the rank world: two distributed hoppings plus
 /// the axpy; dot-product reductions go through the communicator.
-pub struct DistMeo<'a> {
+pub struct DistMeo<'a, R: Real + CommScalar = f32> {
     pub dist: &'a DistHopping,
-    pub u: &'a GaugeField,
-    pub kappa: f32,
+    pub u: &'a GaugeField<R>,
+    pub kappa: R,
     pub comm: &'a mut Comm,
     pub team: &'a mut Team,
     pub prof: &'a Profiler,
-    pub tmp: FermionField,
+    pub tmp: FermionField<R>,
     half_volume: usize,
 }
 
-impl<'a> DistMeo<'a> {
+impl<'a, R: Real + CommScalar> DistMeo<'a, R> {
     pub fn new(
         geom: &Geometry,
         dist: &'a DistHopping,
-        u: &'a GaugeField,
-        kappa: f32,
+        u: &'a GaugeField<R>,
+        kappa: R,
         comm: &'a mut Comm,
         team: &'a mut Team,
         prof: &'a Profiler,
-    ) -> DistMeo<'a> {
+    ) -> DistMeo<'a, R> {
         DistMeo {
             dist,
             u,
@@ -160,8 +150,8 @@ impl<'a> DistMeo<'a> {
     }
 }
 
-impl LinearOperator for DistMeo<'_> {
-    fn apply(&mut self, out: &mut FermionField, psi: &FermionField) {
+impl<R: Real + CommScalar> LinearOperator<R> for DistMeo<'_, R> {
+    fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>) {
         self.dist
             .hopping(&mut self.tmp, self.u, psi, Parity::Odd, self.comm, self.team, self.prof);
         self.dist
@@ -180,13 +170,16 @@ impl LinearOperator for DistMeo<'_> {
 
 /// gamma5-wrapped normal operator over any M-hat-like operator: CGNR on
 /// the distributed or PJRT operator reuses this.
-pub struct NormalOp<A: LinearOperator> {
+pub struct NormalOp<A, R: Real = f32> {
     pub inner: A,
-    mid: FermionField,
+    mid: FermionField<R>,
 }
 
-impl<A: LinearOperator> NormalOp<A> {
-    pub fn new(inner: A, geom: &Geometry) -> NormalOp<A> {
+impl<A, R: Real> NormalOp<A, R>
+where
+    A: LinearOperator<R>,
+{
+    pub fn new(inner: A, geom: &Geometry) -> NormalOp<A, R> {
         NormalOp {
             inner,
             mid: FermionField::zeros(geom),
@@ -194,9 +187,12 @@ impl<A: LinearOperator> NormalOp<A> {
     }
 }
 
-impl<A: LinearOperator> LinearOperator for NormalOp<A> {
-    fn apply(&mut self, out: &mut FermionField, psi: &FermionField) {
-        let mut m_psi = std::mem::replace(&mut self.mid, FermionField::zeros_like_hack());
+impl<A, R: Real> LinearOperator<R> for NormalOp<A, R>
+where
+    A: LinearOperator<R>,
+{
+    fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>) {
+        let mut m_psi = std::mem::replace(&mut self.mid, FermionField::placeholder());
         self.inner.apply(&mut m_psi, psi);
         m_psi.gamma5();
         self.inner.apply(out, &m_psi);

@@ -19,7 +19,7 @@
 //! clover matrix, inverse correctness) rather than wired into the
 //! benchmark harness.
 
-use crate::algebra::{Complex, Gamma, Spinor, GAMMA};
+use crate::algebra::{Complex, Gamma, Real, Spinor, GAMMA};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{Dir, EvenOdd, Geometry, Parity, SiteCoord};
 
@@ -41,8 +41,8 @@ fn sigma(mu: usize, nu: usize) -> Gamma {
 type Mat3 = crate::algebra::Su3;
 
 /// Clover-leaf field strength F_munu(x) (anti-hermitian 3x3).
-fn field_strength(
-    u: &GaugeField,
+fn field_strength<R: Real>(
+    u: &GaugeField<R>,
     geom: &Geometry,
     coords: [usize; 4],
     mu: usize,
@@ -122,7 +122,15 @@ pub struct CloverTerm {
 }
 
 impl CloverTerm {
-    pub fn new(geom: &Geometry, u: &GaugeField, parity: Parity, kappa: f64, c_sw: f64) -> CloverTerm {
+    /// Build the clover blocks from a gauge field of any precision; the
+    /// leaf algebra itself always runs in f64.
+    pub fn new<R: Real>(
+        geom: &Geometry,
+        u: &GaugeField<R>,
+        parity: Parity,
+        kappa: f64,
+        c_sw: f64,
+    ) -> CloverTerm {
         let layout = crate::lattice::EoLayout::new(geom);
         let sites: Vec<SiteCoord> = layout.sites().collect();
         let mut blocks = Vec::with_capacity(sites.len());
@@ -167,8 +175,8 @@ impl CloverTerm {
         }
     }
 
-    /// out = A psi (site-local block multiply).
-    pub fn apply(&self, out: &mut FermionField, psi: &FermionField) {
+    /// out = A psi (site-local block multiply), at the field's precision.
+    pub fn apply<R: Real>(&self, out: &mut FermionField<R>, psi: &FermionField<R>) {
         for (k, &s) in self.sites.iter().enumerate() {
             let v = psi.site(s);
             let mut w = Spinor::ZERO;
@@ -294,10 +302,10 @@ mod tests {
     #[test]
     fn unit_gauge_clover_is_identity() {
         let g = geom();
-        let u = GaugeField::unit(&g);
+        let u: GaugeField = GaugeField::unit(&g);
         let clov = CloverTerm::new(&g, &u, Parity::Even, KAPPA, CSW);
         let mut rng = Rng::seeded(61);
-        let psi = FermionField::gaussian(&g, &mut rng);
+        let psi: FermionField = FermionField::gaussian(&g, &mut rng);
         let mut out = FermionField::zeros(&g);
         clov.apply(&mut out, &psi);
         let mut d = out.clone();
@@ -309,7 +317,7 @@ mod tests {
     fn clover_block_is_hermitian() {
         let g = geom();
         let mut rng = Rng::seeded(62);
-        let u = GaugeField::random(&g, &mut rng);
+        let u: GaugeField = GaugeField::random(&g, &mut rng);
         let clov = CloverTerm::new(&g, &u, Parity::Odd, KAPPA, CSW);
         assert!(clov.hermiticity_error() < 1e-5, "{}", clov.hermiticity_error());
     }
@@ -318,10 +326,10 @@ mod tests {
     fn inverse_is_inverse() {
         let g = geom();
         let mut rng = Rng::seeded(63);
-        let u = GaugeField::random(&g, &mut rng);
+        let u: GaugeField = GaugeField::random(&g, &mut rng);
         let clov = CloverTerm::new(&g, &u, Parity::Even, KAPPA, CSW);
         let inv = clov.inverse();
-        let psi = FermionField::gaussian(&g, &mut rng);
+        let psi: FermionField = FermionField::gaussian(&g, &mut rng);
         let mut mid = FermionField::zeros(&g);
         clov.apply(&mut mid, &psi);
         let mut back = FermionField::zeros(&g);
@@ -338,10 +346,10 @@ mod tests {
         // verify <x, A y> == <A x, y>
         let g = geom();
         let mut rng = Rng::seeded(64);
-        let u = GaugeField::random(&g, &mut rng);
+        let u: GaugeField = GaugeField::random(&g, &mut rng);
         let clov = CloverTerm::new(&g, &u, Parity::Even, KAPPA, CSW);
-        let x = FermionField::gaussian(&g, &mut rng);
-        let y = FermionField::gaussian(&g, &mut rng);
+        let x: FermionField = FermionField::gaussian(&g, &mut rng);
+        let y: FermionField = FermionField::gaussian(&g, &mut rng);
         let mut ay = FermionField::zeros(&g);
         clov.apply(&mut ay, &y);
         let mut ax = FermionField::zeros(&g);
@@ -355,7 +363,7 @@ mod tests {
     fn field_strength_hermitian() {
         let g = geom();
         let mut rng = Rng::seeded(65);
-        let u = GaugeField::random(&g, &mut rng);
+        let u: GaugeField = GaugeField::random(&g, &mut rng);
         let f = field_strength(&u, &g, [1, 2, 3, 0], 0, 3);
         // hermitian convention: F - F^dag = 0
         let fd = f.adj();

@@ -13,9 +13,12 @@
 //! 4. reconstructs and accumulates the 4-spinor.
 //!
 //! All lane loops run over a compile-time `V = VLEN` so the compiler
-//! vectorizes them; `apply` dispatches on the runtime tiling.
+//! vectorizes them; `apply` dispatches on the runtime tiling. The whole
+//! kernel is generic over the [`Real`] lane scalar — the f32
+//! instantiation is the paper's benchmark kernel, the f64 one backs the
+//! oracle comparisons and the mixed-precision outer operator.
 
-use crate::algebra::{Coef, ProjEntry, PROJ};
+use crate::algebra::{Coef, ProjEntry, Real, PROJ};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{EoLayout, Geometry, Parity, CC2, SC2};
 
@@ -32,6 +35,10 @@ pub enum WrapMode {
 }
 
 /// The vectorized even-odd hopping operator.
+///
+/// The struct itself holds only the layout and lane plans — precision
+/// enters through the generic `apply` / `apply_tiles` methods, so one
+/// operator instance serves both f32 and f64 fields.
 #[derive(Clone, Debug)]
 pub struct HoppingEo {
     pub layout: EoLayout,
@@ -59,11 +66,11 @@ impl HoppingEo {
     }
 
     /// out = H_{p_out <- p_in} psi. `psi` has parity `1 - p_out`.
-    pub fn apply(
+    pub fn apply<R: Real>(
         &self,
-        out: &mut FermionField,
-        u: &GaugeField,
-        psi: &FermionField,
+        out: &mut FermionField<R>,
+        u: &GaugeField<R>,
+        psi: &FermionField<R>,
         p_out: Parity,
     ) {
         let ntiles = self.layout.ntiles();
@@ -73,11 +80,11 @@ impl HoppingEo {
     /// Apply to a contiguous range of output tiles (the unit the thread
     /// team distributes). `out_tiles` covers exactly the tiles
     /// `[tile_begin, tile_end)` of the output field.
-    pub fn apply_tiles(
+    pub fn apply_tiles<R: Real>(
         &self,
-        out_tiles: &mut [f32],
-        u: &GaugeField,
-        psi: &FermionField,
+        out_tiles: &mut [R],
+        u: &GaugeField<R>,
+        psi: &FermionField<R>,
         p_out: Parity,
         tile_begin: usize,
         tile_end: usize,
@@ -87,20 +94,20 @@ impl HoppingEo {
             (tile_end - tile_begin) * SC2 * self.layout.vlen()
         );
         match self.layout.vlen() {
-            2 => self.apply_v::<2>(out_tiles, u, psi, p_out, tile_begin, tile_end),
-            4 => self.apply_v::<4>(out_tiles, u, psi, p_out, tile_begin, tile_end),
-            8 => self.apply_v::<8>(out_tiles, u, psi, p_out, tile_begin, tile_end),
-            16 => self.apply_v::<16>(out_tiles, u, psi, p_out, tile_begin, tile_end),
-            32 => self.apply_v::<32>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            2 => self.apply_v::<R, 2>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            4 => self.apply_v::<R, 4>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            8 => self.apply_v::<R, 8>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            16 => self.apply_v::<R, 16>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            32 => self.apply_v::<R, 32>(out_tiles, u, psi, p_out, tile_begin, tile_end),
             v => panic!("unsupported VLEN {v} (expected 2/4/8/16/32)"),
         }
     }
 
-    fn apply_v<const V: usize>(
+    fn apply_v<R: Real, const V: usize>(
         &self,
-        out_tiles: &mut [f32],
-        u: &GaugeField,
-        psi: &FermionField,
+        out_tiles: &mut [R],
+        u: &GaugeField<R>,
+        psi: &FermionField<R>,
         p_out: Parity,
         tile_begin: usize,
         tile_end: usize,
@@ -112,17 +119,16 @@ impl HoppingEo {
         let vy = l.tiling.vy();
 
         // scratch tiles (per-call; the thread team gives each thread its own)
-        let mut ps = [0.0f32; 1].repeat(SC2 * V); // shifted spinor tile
-        let mut us = [0.0f32; 1].repeat(CC2 * V); // shifted link tile
-        let mut h = [0.0f32; 1].repeat(12 * V); // projected half spinor
-        let mut w = [0.0f32; 1].repeat(12 * V); // link * half spinor
-        let mut acc = [0.0f32; 1].repeat(SC2 * V);
+        let mut ps = vec![R::ZERO; SC2 * V]; // shifted spinor tile
+        let mut us = vec![R::ZERO; CC2 * V]; // shifted link tile
+        let mut h = vec![R::ZERO; 12 * V]; // projected half spinor
+        let mut acc = vec![R::ZERO; SC2 * V];
 
         for tile in tile_begin..tile_end {
             let (t, z, yt, xt) = l.tile_coords(tile);
             // row-parity phase of the tile's first lane row (Fig. 5)
             let b = (yt * vy + z + t + p_out.index()) % 2;
-            acc.iter_mut().for_each(|a| *a = 0.0);
+            acc.iter_mut().for_each(|a| *a = R::ZERO);
 
             // ---------------- X direction ----------------
             {
@@ -131,16 +137,16 @@ impl HoppingEo {
                 let nbr = l.tile_index(t, z, yt, (xt + 1) % nxt);
                 let mask = skip && xt + 1 == nxt;
                 let plan = &self.plans.x_plus[b];
-                shuffle::<V>(&mut ps, tile_slice::<V>(&psi.data, tile, SC2), tile_slice::<V>(&psi.data, nbr, SC2), plan, mask, SC2);
-                hop_fwd::<V>(&mut acc, &mut h, &mut w, &ps, tile_slice::<V>(&u.data[0][p_out.index()], tile, CC2), &PROJ[0][0]);
+                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(&psi.data, tile, SC2), tile_slice::<R, V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                hop_fwd::<R, V>(&mut acc, &mut h, &ps, tile_slice::<R, V>(&u.data[0][p_out.index()], tile, CC2), &PROJ[0][0]);
 
                 // backward: neighbor tile at xt-1; link U_x(x - x^) shifts too
                 let nbr = l.tile_index(t, z, yt, (xt + nxt - 1) % nxt);
                 let mask = skip && xt == 0;
                 let plan = &self.plans.x_minus[b];
-                shuffle::<V>(&mut ps, tile_slice::<V>(&psi.data, tile, SC2), tile_slice::<V>(&psi.data, nbr, SC2), plan, mask, SC2);
-                shuffle::<V>(&mut us, tile_slice::<V>(&u.data[0][p_in.index()], tile, CC2), tile_slice::<V>(&u.data[0][p_in.index()], nbr, CC2), plan, false, CC2);
-                hop_bwd::<V>(&mut acc, &mut h, &mut w, &ps, &us, &PROJ[0][1]);
+                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(&psi.data, tile, SC2), tile_slice::<R, V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[0][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[0][p_in.index()], nbr, CC2), plan, false, CC2);
+                hop_bwd::<R, V>(&mut acc, &mut h, &ps, &us, &PROJ[0][1]);
             }
 
             // ---------------- Y direction ----------------
@@ -149,15 +155,15 @@ impl HoppingEo {
                 let nbr = l.tile_index(t, z, (yt + 1) % nyt, xt);
                 let mask = skip && yt + 1 == nyt;
                 let plan = &self.plans.y_plus;
-                shuffle::<V>(&mut ps, tile_slice::<V>(&psi.data, tile, SC2), tile_slice::<V>(&psi.data, nbr, SC2), plan, mask, SC2);
-                hop_fwd::<V>(&mut acc, &mut h, &mut w, &ps, tile_slice::<V>(&u.data[1][p_out.index()], tile, CC2), &PROJ[1][0]);
+                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(&psi.data, tile, SC2), tile_slice::<R, V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                hop_fwd::<R, V>(&mut acc, &mut h, &ps, tile_slice::<R, V>(&u.data[1][p_out.index()], tile, CC2), &PROJ[1][0]);
 
                 let nbr = l.tile_index(t, z, (yt + nyt - 1) % nyt, xt);
                 let mask = skip && yt == 0;
                 let plan = &self.plans.y_minus;
-                shuffle::<V>(&mut ps, tile_slice::<V>(&psi.data, tile, SC2), tile_slice::<V>(&psi.data, nbr, SC2), plan, mask, SC2);
-                shuffle::<V>(&mut us, tile_slice::<V>(&u.data[1][p_in.index()], tile, CC2), tile_slice::<V>(&u.data[1][p_in.index()], nbr, CC2), plan, false, CC2);
-                hop_bwd::<V>(&mut acc, &mut h, &mut w, &ps, &us, &PROJ[1][1]);
+                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(&psi.data, tile, SC2), tile_slice::<R, V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[1][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[1][p_in.index()], nbr, CC2), plan, false, CC2);
+                hop_bwd::<R, V>(&mut acc, &mut h, &ps, &us, &PROJ[1][1]);
             }
 
             // ---------------- Z direction (whole-tile strides) ----------
@@ -165,11 +171,11 @@ impl HoppingEo {
                 let skip = self.wrap[2] == WrapMode::SkipBoundary;
                 if !(skip && z + 1 == nz) {
                     let nbr = l.tile_index(t, (z + 1) % nz, yt, xt);
-                    hop_fwd::<V>(&mut acc, &mut h, &mut w, tile_slice::<V>(&psi.data, nbr, SC2), tile_slice::<V>(&u.data[2][p_out.index()], tile, CC2), &PROJ[2][0]);
+                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(&psi.data, nbr, SC2), tile_slice::<R, V>(&u.data[2][p_out.index()], tile, CC2), &PROJ[2][0]);
                 }
                 if !(skip && z == 0) {
                     let nbr = l.tile_index(t, (z + nz - 1) % nz, yt, xt);
-                    hop_bwd::<V>(&mut acc, &mut h, &mut w, tile_slice::<V>(&psi.data, nbr, SC2), tile_slice::<V>(&u.data[2][p_in.index()], nbr, CC2), &PROJ[2][1]);
+                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(&psi.data, nbr, SC2), tile_slice::<R, V>(&u.data[2][p_in.index()], nbr, CC2), &PROJ[2][1]);
                 }
             }
 
@@ -178,11 +184,11 @@ impl HoppingEo {
                 let skip = self.wrap[3] == WrapMode::SkipBoundary;
                 if !(skip && t + 1 == nt) {
                     let nbr = l.tile_index((t + 1) % nt, z, yt, xt);
-                    hop_fwd::<V>(&mut acc, &mut h, &mut w, tile_slice::<V>(&psi.data, nbr, SC2), tile_slice::<V>(&u.data[3][p_out.index()], tile, CC2), &PROJ[3][0]);
+                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(&psi.data, nbr, SC2), tile_slice::<R, V>(&u.data[3][p_out.index()], tile, CC2), &PROJ[3][0]);
                 }
                 if !(skip && t == 0) {
                     let nbr = l.tile_index((t + nt - 1) % nt, z, yt, xt);
-                    hop_bwd::<V>(&mut acc, &mut h, &mut w, tile_slice::<V>(&psi.data, nbr, SC2), tile_slice::<V>(&u.data[3][p_in.index()], nbr, CC2), &PROJ[3][1]);
+                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(&psi.data, nbr, SC2), tile_slice::<R, V>(&u.data[3][p_in.index()], nbr, CC2), &PROJ[3][1]);
                 }
             }
 
@@ -196,16 +202,16 @@ impl HoppingEo {
 
 /// The SC2*V (or CC2*V) block of one tile.
 #[inline]
-fn tile_slice<const V: usize>(data: &[f32], tile: usize, ncomp: usize) -> &[f32] {
+fn tile_slice<R: Real, const V: usize>(data: &[R], tile: usize, ncomp: usize) -> &[R] {
     &data[tile * ncomp * V..(tile + 1) * ncomp * V]
 }
 
 /// Apply a lane plan to every component vector of a tile block.
 #[inline]
-fn shuffle<const V: usize>(
-    dst: &mut [f32],
-    cur: &[f32],
-    nbr: &[f32],
+fn shuffle<R: Real, const V: usize>(
+    dst: &mut [R],
+    cur: &[R],
+    nbr: &[R],
     plan: &LanePlan,
     mask: bool,
     ncomp: usize,
@@ -218,26 +224,29 @@ fn shuffle<const V: usize>(
 /// Fixed-size view of the component vector at `off` (bounds-checked once;
 /// the lane loops below then vectorize without per-element checks).
 #[inline(always)]
-fn arr<const V: usize>(s: &[f32], off: usize) -> &[f32; V] {
+fn arr<R: Real, const V: usize>(s: &[R], off: usize) -> &[R; V] {
     s[off..off + V].try_into().unwrap()
 }
 
 /// Mutable (re, im) pair of adjacent component vectors starting at `off`.
 #[inline(always)]
-fn arr_pair_mut<const V: usize>(s: &mut [f32], off: usize) -> (&mut [f32; V], &mut [f32; V]) {
+fn arr_pair_mut<R: Real, const V: usize>(
+    s: &mut [R],
+    off: usize,
+) -> (&mut [R; V], &mut [R; V]) {
     let (a, b) = s[off..off + 2 * V].split_at_mut(V);
     (a.try_into().unwrap(), b.try_into().unwrap())
 }
 
 /// dst = a + coef * b, lanewise on split re/im vectors.
 #[inline]
-fn add_coef<const V: usize>(
-    dst_re: &mut [f32; V],
-    dst_im: &mut [f32; V],
-    a_re: &[f32; V],
-    a_im: &[f32; V],
-    b_re: &[f32; V],
-    b_im: &[f32; V],
+fn add_coef<R: Real, const V: usize>(
+    dst_re: &mut [R; V],
+    dst_im: &mut [R; V],
+    a_re: &[R; V],
+    a_im: &[R; V],
+    b_re: &[R; V],
+    b_im: &[R; V],
     coef: Coef,
 ) {
     match coef {
@@ -282,43 +291,43 @@ const fn go<const V: usize>(a: usize, b: usize, reim: usize) -> usize {
 
 /// Project the 4-spinor tile `ps` to the half-spinor `h` (2 x 3 x 2 x V).
 #[inline]
-fn project<const V: usize>(h: &mut [f32], ps: &[f32], e: &ProjEntry) {
+fn project<R: Real, const V: usize>(h: &mut [R], ps: &[R], e: &ProjEntry) {
     for c in 0..3 {
         // h0 = psi_0 + c1 * psi_j1
-        let (dr, di) = arr_pair_mut::<V>(h, so::<V>(0, c, 0));
-        add_coef::<V>(
+        let (dr, di) = arr_pair_mut::<R, V>(h, so::<V>(0, c, 0));
+        add_coef::<R, V>(
             dr,
             di,
-            arr::<V>(ps, so::<V>(0, c, 0)),
-            arr::<V>(ps, so::<V>(0, c, 1)),
-            arr::<V>(ps, so::<V>(e.j1, c, 0)),
-            arr::<V>(ps, so::<V>(e.j1, c, 1)),
+            arr::<R, V>(ps, so::<V>(0, c, 0)),
+            arr::<R, V>(ps, so::<V>(0, c, 1)),
+            arr::<R, V>(ps, so::<V>(e.j1, c, 0)),
+            arr::<R, V>(ps, so::<V>(e.j1, c, 1)),
             e.c1,
         );
         // h1 = psi_1 + c2 * psi_j2
-        let (dr, di) = arr_pair_mut::<V>(h, so::<V>(1, c, 0));
-        add_coef::<V>(
+        let (dr, di) = arr_pair_mut::<R, V>(h, so::<V>(1, c, 0));
+        add_coef::<R, V>(
             dr,
             di,
-            arr::<V>(ps, so::<V>(1, c, 0)),
-            arr::<V>(ps, so::<V>(1, c, 1)),
-            arr::<V>(ps, so::<V>(e.j2, c, 0)),
-            arr::<V>(ps, so::<V>(e.j2, c, 1)),
+            arr::<R, V>(ps, so::<V>(1, c, 0)),
+            arr::<R, V>(ps, so::<V>(1, c, 1)),
+            arr::<R, V>(ps, so::<V>(e.j2, c, 0)),
+            arr::<R, V>(ps, so::<V>(e.j2, c, 1)),
             e.c2,
         );
     }
 }
 
 #[inline]
-fn accum_coef<const V: usize>(
-    acc: &mut [f32],
+fn accum_coef<R: Real, const V: usize>(
+    acc: &mut [R],
     spin: usize,
     c: usize,
-    wr: &[f32; V],
-    wi: &[f32; V],
+    wr: &[R; V],
+    wi: &[R; V],
     coef: Coef,
 ) {
-    let (dr, di) = arr_pair_mut::<V>(acc, so::<V>(spin, c, 0));
+    let (dr, di) = arr_pair_mut::<R, V>(acc, so::<V>(spin, c, 0));
     match coef {
         Coef::One => {
             for l in 0..V {
@@ -351,25 +360,25 @@ fn accum_coef<const V: usize>(
 /// accumulates the reconstructed 4-spinor without materializing `w`
 /// (saves one 12xV round trip per hop).
 #[inline]
-fn su3_mul_reconstruct<const V: usize>(
-    acc: &mut [f32],
-    u: &[f32],
-    h: &[f32],
+fn su3_mul_reconstruct<R: Real, const V: usize>(
+    acc: &mut [R],
+    u: &[R],
+    h: &[R],
     dag: bool,
     e: &ProjEntry,
 ) {
     for s in 0..2 {
         for a in 0..3 {
-            let mut wr = [0.0f32; V];
-            let mut wi = [0.0f32; V];
+            let mut wr = [R::ZERO; V];
+            let mut wi = [R::ZERO; V];
             for b in 0..3 {
-                let (ur, ui): (&[f32; V], &[f32; V]) = if dag {
-                    (arr::<V>(u, go::<V>(b, a, 0)), arr::<V>(u, go::<V>(b, a, 1)))
+                let (ur, ui): (&[R; V], &[R; V]) = if dag {
+                    (arr::<R, V>(u, go::<V>(b, a, 0)), arr::<R, V>(u, go::<V>(b, a, 1)))
                 } else {
-                    (arr::<V>(u, go::<V>(a, b, 0)), arr::<V>(u, go::<V>(a, b, 1)))
+                    (arr::<R, V>(u, go::<V>(a, b, 0)), arr::<R, V>(u, go::<V>(a, b, 1)))
                 };
-                let hr = arr::<V>(h, so::<V>(s, b, 0));
-                let hi = arr::<V>(h, so::<V>(s, b, 1));
+                let hr = arr::<R, V>(h, so::<V>(s, b, 0));
+                let hi = arr::<R, V>(h, so::<V>(s, b, 1));
                 if dag {
                     for l in 0..V {
                         wr[l] += ur[l] * hr[l] + ui[l] * hi[l];
@@ -384,7 +393,7 @@ fn su3_mul_reconstruct<const V: usize>(
             }
             // upper rows: acc[s] += w
             {
-                let (dr, di) = arr_pair_mut::<V>(acc, so::<V>(s, a, 0));
+                let (dr, di) = arr_pair_mut::<R, V>(acc, so::<V>(s, a, 0));
                 for l in 0..V {
                     dr[l] += wr[l];
                     di[l] += wi[l];
@@ -392,10 +401,10 @@ fn su3_mul_reconstruct<const V: usize>(
             }
             // lower rows fed by this w row
             if e.k1 == s {
-                accum_coef::<V>(acc, 2, a, &wr, &wi, e.d1);
+                accum_coef::<R, V>(acc, 2, a, &wr, &wi, e.d1);
             }
             if e.k2 == s {
-                accum_coef::<V>(acc, 3, a, &wr, &wi, e.d2);
+                accum_coef::<R, V>(acc, 3, a, &wr, &wi, e.d2);
             }
         }
     }
@@ -403,28 +412,26 @@ fn su3_mul_reconstruct<const V: usize>(
 
 /// Forward hop on one tile: project, multiply U, reconstruct-accumulate.
 #[inline]
-fn hop_fwd<const V: usize>(
-    acc: &mut [f32],
-    h: &mut [f32],
-    _w: &mut [f32],
-    ps: &[f32],
-    u_tile: &[f32],
+fn hop_fwd<R: Real, const V: usize>(
+    acc: &mut [R],
+    h: &mut [R],
+    ps: &[R],
+    u_tile: &[R],
     e: &ProjEntry,
 ) {
-    project::<V>(h, ps, e);
-    su3_mul_reconstruct::<V>(acc, u_tile, h, false, e);
+    project::<R, V>(h, ps, e);
+    su3_mul_reconstruct::<R, V>(acc, u_tile, h, false, e);
 }
 
 /// Backward hop on one tile: project, multiply U^dag, reconstruct.
 #[inline]
-fn hop_bwd<const V: usize>(
-    acc: &mut [f32],
-    h: &mut [f32],
-    _w: &mut [f32],
-    ps: &[f32],
-    u_tile: &[f32],
+fn hop_bwd<R: Real, const V: usize>(
+    acc: &mut [R],
+    h: &mut [R],
+    ps: &[R],
+    u_tile: &[R],
     e: &ProjEntry,
 ) {
-    project::<V>(h, ps, e);
-    su3_mul_reconstruct::<V>(acc, u_tile, h, true, e);
+    project::<R, V>(h, ps, e);
+    su3_mul_reconstruct::<R, V>(acc, u_tile, h, true, e);
 }

@@ -1,21 +1,25 @@
 //! Full Wilson matrix `D_W = 1 - kappa H` on an (even, odd) field pair,
 //! plus the even-odd preconditioned operator M-hat (Eq. 4) and the odd
-//! reconstruction (Eq. 5), generic over any hopping implementation.
+//! reconstruction (Eq. 5), generic over the hopping implementation's
+//! field precision: `kappa` and all temporaries follow the field scalar
+//! `R`, so the same compositions serve the f32 hot path and the f64
+//! outer solve.
 
+use crate::algebra::Real;
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::Parity;
 
 use super::eo::HoppingEo;
 
 /// out_e = psi_e - kappa * H_eo psi_o,  out_o = psi_o - kappa * H_oe psi_e.
-pub fn dslash_full(
+pub fn dslash_full<R: Real>(
     hop: &HoppingEo,
-    out_e: &mut FermionField,
-    out_o: &mut FermionField,
-    u: &GaugeField,
-    psi_e: &FermionField,
-    psi_o: &FermionField,
-    kappa: f32,
+    out_e: &mut FermionField<R>,
+    out_o: &mut FermionField<R>,
+    u: &GaugeField<R>,
+    psi_e: &FermionField<R>,
+    psi_o: &FermionField<R>,
+    kappa: R,
 ) {
     hop.apply(out_e, u, psi_o, Parity::Even);
     out_e.xpay(-kappa, psi_e);
@@ -26,13 +30,13 @@ pub fn dslash_full(
 /// The even-odd preconditioned operator (Eq. 4 LHS):
 /// out = psi - kappa^2 H_eo H_oe psi  (psi lives on even sites).
 /// `tmp` is odd-parity scratch.
-pub fn meo(
+pub fn meo<R: Real>(
     hop: &HoppingEo,
-    out: &mut FermionField,
-    tmp: &mut FermionField,
-    u: &GaugeField,
-    psi: &FermionField,
-    kappa: f32,
+    out: &mut FermionField<R>,
+    tmp: &mut FermionField<R>,
+    u: &GaugeField<R>,
+    psi: &FermionField<R>,
+    kappa: R,
 ) {
     hop.apply(tmp, u, psi, Parity::Odd);
     hop.apply(out, u, tmp, Parity::Even);
@@ -40,13 +44,13 @@ pub fn meo(
 }
 
 /// M-hat^dagger = gamma5 M-hat gamma5.
-pub fn meo_dag(
+pub fn meo_dag<R: Real>(
     hop: &HoppingEo,
-    out: &mut FermionField,
-    tmp: &mut FermionField,
-    u: &GaugeField,
-    psi: &FermionField,
-    kappa: f32,
+    out: &mut FermionField<R>,
+    tmp: &mut FermionField<R>,
+    u: &GaugeField<R>,
+    psi: &FermionField<R>,
+    kappa: R,
 ) {
     let mut g5psi = psi.clone();
     g5psi.gamma5();
@@ -55,29 +59,29 @@ pub fn meo_dag(
 }
 
 /// Eq. 5: xi_o = eta_o + kappa H_oe xi_e (D_oo = 1 for Wilson).
-pub fn reconstruct_odd(
+pub fn reconstruct_odd<R: Real>(
     hop: &HoppingEo,
-    out: &mut FermionField,
-    u: &GaugeField,
-    eta_o: &FermionField,
-    xi_e: &FermionField,
-    kappa: f32,
+    out: &mut FermionField<R>,
+    u: &GaugeField<R>,
+    eta_o: &FermionField<R>,
+    xi_e: &FermionField<R>,
+    kappa: R,
 ) {
     hop.apply(out, u, xi_e, Parity::Odd);
     out.scale(kappa);
-    out.axpy(1.0, eta_o);
+    out.axpy(R::ONE, eta_o);
 }
 
 /// rhs of Eq. 4: b = eta_e + kappa H_eo eta_o (D_oo^-1 = 1).
-pub fn schur_rhs(
+pub fn schur_rhs<R: Real>(
     hop: &HoppingEo,
-    out: &mut FermionField,
-    u: &GaugeField,
-    eta_e: &FermionField,
-    eta_o: &FermionField,
-    kappa: f32,
+    out: &mut FermionField<R>,
+    u: &GaugeField<R>,
+    eta_e: &FermionField<R>,
+    eta_o: &FermionField<R>,
+    kappa: R,
 ) {
     hop.apply(out, u, eta_o, Parity::Even);
     out.scale(kappa);
-    out.axpy(1.0, eta_e);
+    out.axpy(R::ONE, eta_e);
 }

@@ -15,7 +15,7 @@
 //!
 //! `harness::fig8` profiles this against [`super::eo::HoppingEo`].
 
-use crate::algebra::{Complex, Spinor, PROJ};
+use crate::algebra::{Complex, Real, Spinor, PROJ};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{
     Dir, EoLayout, EvenOdd, Geometry, Parity, SiteCoord, IM, RE, SC2,
@@ -38,11 +38,11 @@ impl HoppingGather {
 
     /// out = H_{p_out <- 1-p_out} psi, periodic. Same result as the
     /// shuffle kernel, pathological access pattern.
-    pub fn apply(
+    pub fn apply<R: Real>(
         &self,
-        out: &mut FermionField,
-        u: &GaugeField,
-        psi: &FermionField,
+        out: &mut FermionField<R>,
+        u: &GaugeField<R>,
+        psi: &FermionField<R>,
         p_out: Parity,
     ) {
         let ntiles = self.layout.ntiles();
@@ -50,11 +50,11 @@ impl HoppingGather {
     }
 
     /// `out_tiles` covers exactly the output tiles `[tile_begin, tile_end)`.
-    pub fn apply_tiles(
+    pub fn apply_tiles<R: Real>(
         &self,
-        out_tiles: &mut [f32],
-        u: &GaugeField,
-        psi: &FermionField,
+        out_tiles: &mut [R],
+        u: &GaugeField<R>,
+        psi: &FermionField<R>,
         p_out: Parity,
         tile_begin: usize,
         tile_end: usize,
@@ -119,7 +119,7 @@ impl HoppingGather {
                             } else {
                                 acc[lane].s[spin][color].im
                             };
-                            out_tiles[base + comp + lane] = val as f32;
+                            out_tiles[base + comp + lane] = R::from_f64(val);
                         }
                     }
                 }
@@ -130,13 +130,13 @@ impl HoppingGather {
 
 /// Element-by-element site load (the gather): each of the 24 components is
 /// fetched through its own computed address.
-fn gather_site(psi: &FermionField, l: &EoLayout, s: SiteCoord) -> Spinor {
+fn gather_site<R: Real>(psi: &FermionField<R>, l: &EoLayout, s: SiteCoord) -> Spinor {
     let mut out = Spinor::ZERO;
     for spin in 0..4 {
         for color in 0..3 {
             out.s[spin][color] = Complex::new(
-                psi.data[l.spinor_elem(s, spin, color, RE)] as f64,
-                psi.data[l.spinor_elem(s, spin, color, IM)] as f64,
+                psi.data[l.spinor_elem(s, spin, color, RE)].to_f64(),
+                psi.data[l.spinor_elem(s, spin, color, IM)].to_f64(),
             );
         }
     }

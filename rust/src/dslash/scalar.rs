@@ -5,7 +5,7 @@
 //! Also serves as the in-crate correctness oracle for the vectorized
 //! kernel (which is itself pinned to the Python reference via golden data).
 
-use crate::algebra::{Spinor, PROJ};
+use crate::algebra::{Real, Spinor, PROJ};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{Dir, EvenOdd, Geometry, Parity, SiteCoord};
 
@@ -21,11 +21,13 @@ impl HoppingScalar {
     }
 
     /// out = H_{p_out <- 1-p_out} psi, fully periodic on the local lattice.
-    pub fn apply(
+    /// All site algebra runs in f64 regardless of the field precision `R`
+    /// (the oracle property the vectorized kernels are checked against).
+    pub fn apply<R: Real>(
         &self,
-        out: &mut FermionField,
-        u: &GaugeField,
-        psi: &FermionField,
+        out: &mut FermionField<R>,
+        u: &GaugeField<R>,
+        psi: &FermionField<R>,
         p_out: Parity,
     ) {
         let d = self.geom.local;
@@ -96,8 +98,8 @@ mod tests {
             Tiling::new(2, 2).unwrap(),
         )
         .unwrap();
-        let u = GaugeField::unit(&geom);
-        let mut psi = FermionField::zeros(&geom);
+        let u: GaugeField = GaugeField::unit(&geom);
+        let mut psi: FermionField = FermionField::zeros(&geom);
         psi.fill(1.0);
         let mut out = FermionField::zeros(&geom);
         HoppingScalar::new(&geom).apply(&mut out, &u, &psi, Parity::Even);

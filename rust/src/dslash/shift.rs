@@ -19,6 +19,7 @@
 //! another rank. In `SkipBoundary` mode those lanes are zeroed (their
 //! contribution arrives through the EO1/EO2 communication path instead).
 
+use crate::algebra::Real;
 use crate::lattice::Tiling;
 
 /// Which source vector a lane reads from.
@@ -45,14 +46,16 @@ pub struct LanePlan {
 impl LanePlan {
     /// Apply: `dst[l] = (src[l] == Cur ? cur : nbr)[idx[l]]`, the
     /// sel+tbl / ext analog. `mask_cross` zeroes boundary-crossing lanes.
+    /// Generic over the lane scalar: the same plan serves f32 and f64
+    /// field instantiations.
     #[inline]
-    pub fn apply(&self, dst: &mut [f32], cur: &[f32], nbr: &[f32], mask_cross: bool) {
+    pub fn apply<R: Real>(&self, dst: &mut [R], cur: &[R], nbr: &[R], mask_cross: bool) {
         for l in 0..dst.len() {
             let v = match self.src[l] {
                 Src::Cur => cur[self.idx[l]],
                 Src::Nbr => nbr[self.idx[l]],
             };
-            dst[l] = if mask_cross && self.crosses[l] { 0.0 } else { v };
+            dst[l] = if mask_cross && self.crosses[l] { R::ZERO } else { v };
         }
     }
 

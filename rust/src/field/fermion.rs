@@ -1,39 +1,68 @@
 //! One-parity (even or odd) fermion field in the AoSoA layout, with the
 //! linear-algebra kernels an iterative solver needs (axpy / dot / norm).
 //!
-//! Dot products accumulate in f64: the fields are f32 (the paper's
-//! single-precision benchmark case) but CG stagnates if reductions are
-//! accumulated in f32 over ~10^5 terms.
+//! The field is generic over the [`Real`] scalar (default `f32`, the
+//! paper's single-precision benchmark case; `f64` backs the oracle and
+//! the mixed-precision outer solve). Dot products always accumulate in
+//! f64 regardless of `R`: CG stagnates if reductions are accumulated in
+//! f32 over ~10^5 terms.
 
-use crate::algebra::{Complex, Spinor};
+use crate::algebra::{Complex, Real, Spinor};
 use crate::lattice::{EoLayout, Geometry, SiteCoord, IM, NCOL, NSPIN, RE};
 use crate::util::rng::Rng;
 
 /// A fermion field on the sites of one parity.
 #[derive(Clone, Debug)]
-pub struct FermionField {
+pub struct FermionField<R: Real = f32> {
     pub layout: EoLayout,
-    pub data: Vec<f32>,
+    pub data: Vec<R>,
 }
 
-impl FermionField {
-    pub fn zeros(geom: &Geometry) -> FermionField {
+impl<R: Real> FermionField<R> {
+    pub fn zeros(geom: &Geometry) -> FermionField<R> {
         let layout = EoLayout::new(geom);
         FermionField {
-            data: vec![0.0; layout.spinor_len()],
+            data: vec![R::ZERO; layout.spinor_len()],
             layout,
         }
     }
 
+    /// Same layout and length as `self`, zero content.
+    pub fn zeros_like(&self) -> FermionField<R> {
+        FermionField {
+            layout: self.layout,
+            data: vec![R::ZERO; self.data.len()],
+        }
+    }
+
+    /// Internal placeholder swapped out during normal-operator applies
+    /// (zero-length; immediately replaced).
+    pub(crate) fn placeholder() -> FermionField<R> {
+        FermionField {
+            layout: EoLayout {
+                nt: 0,
+                nz: 0,
+                nyt: 0,
+                nxt: 0,
+                tiling: crate::lattice::Tiling::new(2, 1).unwrap(),
+            },
+            data: Vec::new(),
+        }
+    }
+
     /// Gaussian random source (mean 0, unit variance per component).
-    pub fn gaussian(geom: &Geometry, rng: &mut Rng) -> FermionField {
+    ///
+    /// The RNG draw sequence is independent of `R`, so the same seed
+    /// produces the same physical field at every precision (modulo
+    /// rounding into `R`).
+    pub fn gaussian(geom: &Geometry, rng: &mut Rng) -> FermionField<R> {
         let mut f = FermionField::zeros(geom);
         // fill in canonical site order so the content is layout-independent
         for s in f.layout.sites() {
             for spin in 0..NSPIN {
                 for color in 0..NCOL {
-                    let re = rng.gaussian() as f32;
-                    let im = rng.gaussian() as f32;
+                    let re = R::from_f64(rng.gaussian());
+                    let im = R::from_f64(rng.gaussian());
                     let off = f.layout.spinor_elem(s, spin, color, RE);
                     f.data[off] = re;
                     let off = f.layout.spinor_elem(s, spin, color, IM);
@@ -50,11 +79,20 @@ impl FermionField {
         site: SiteCoord,
         spin: usize,
         color: usize,
-    ) -> FermionField {
+    ) -> FermionField<R> {
         let mut f = FermionField::zeros(geom);
         let off = f.layout.spinor_elem(site, spin, color, RE);
-        f.data[off] = 1.0;
+        f.data[off] = R::ONE;
         f
+    }
+
+    /// Convert into another precision (promotion is exact, demotion
+    /// rounds each component).
+    pub fn to_precision<S: Real>(&self) -> FermionField<S> {
+        FermionField {
+            layout: self.layout,
+            data: self.data.iter().map(|&v| S::from_f64(v.to_f64())).collect(),
+        }
     }
 
     pub fn site(&self, s: SiteCoord) -> Spinor {
@@ -67,7 +105,7 @@ impl FermionField {
                 let ro = self.layout.spinor_vec(lc.tile, spin, color, RE) + lc.lane;
                 let io = self.layout.spinor_vec(lc.tile, spin, color, IM) + lc.lane;
                 out.s[spin][color] =
-                    Complex::new(self.data[ro] as f64, self.data[io] as f64);
+                    Complex::new(self.data[ro].to_f64(), self.data[io].to_f64());
             }
         }
         out
@@ -79,40 +117,40 @@ impl FermionField {
             for color in 0..NCOL {
                 let ro = self.layout.spinor_vec(lc.tile, spin, color, RE) + lc.lane;
                 let io = self.layout.spinor_vec(lc.tile, spin, color, IM) + lc.lane;
-                self.data[ro] = v.s[spin][color].re as f32;
-                self.data[io] = v.s[spin][color].im as f32;
+                self.data[ro] = R::from_f64(v.s[spin][color].re);
+                self.data[io] = R::from_f64(v.s[spin][color].im);
             }
         }
     }
 
-    pub fn fill(&mut self, v: f32) {
+    pub fn fill(&mut self, v: R) {
         self.data.iter_mut().for_each(|x| *x = v);
     }
 
     /// self += a * o
-    pub fn axpy(&mut self, a: f32, o: &FermionField) {
+    pub fn axpy(&mut self, a: R, o: &FermionField<R>) {
         debug_assert_eq!(self.data.len(), o.data.len());
         for (x, y) in self.data.iter_mut().zip(&o.data) {
-            *x += a * y;
+            *x += a * *y;
         }
     }
 
     /// self = a * self + o
-    pub fn xpay(&mut self, a: f32, o: &FermionField) {
+    pub fn xpay(&mut self, a: R, o: &FermionField<R>) {
         debug_assert_eq!(self.data.len(), o.data.len());
         for (x, y) in self.data.iter_mut().zip(&o.data) {
-            *x = a * *x + y;
+            *x = a * *x + *y;
         }
     }
 
-    pub fn scale(&mut self, a: f32) {
+    pub fn scale(&mut self, a: R) {
         self.data.iter_mut().for_each(|x| *x *= a);
     }
 
     /// self += a * o with a *complex* scalar (couples the re/im planes).
-    pub fn caxpy(&mut self, a: Complex, o: &FermionField) {
+    pub fn caxpy(&mut self, a: Complex, o: &FermionField<R>) {
         let vlen = self.layout.vlen();
-        let (ar, ai) = (a.re as f32, a.im as f32);
+        let (ar, ai) = (R::from_f64(a.re), R::from_f64(a.im));
         for tile in 0..self.layout.ntiles() {
             for spin in 0..NSPIN {
                 for color in 0..NCOL {
@@ -130,17 +168,17 @@ impl FermionField {
     }
 
     /// Re <self, o>, accumulated in f64.
-    pub fn dot_re(&self, o: &FermionField) -> f64 {
+    pub fn dot_re(&self, o: &FermionField<R>) -> f64 {
         debug_assert_eq!(self.data.len(), o.data.len());
         self.data
             .iter()
             .zip(&o.data)
-            .map(|(&a, &b)| a as f64 * b as f64)
+            .map(|(&a, &b)| a.to_f64() * b.to_f64())
             .sum()
     }
 
     /// Full complex <self, o> (conjugating self), accumulated in f64.
-    pub fn dot(&self, o: &FermionField) -> Complex {
+    pub fn dot(&self, o: &FermionField<R>) -> Complex {
         let vlen = self.layout.vlen();
         let (mut re, mut im) = (0.0f64, 0.0f64);
         for tile in 0..self.layout.ntiles() {
@@ -149,10 +187,10 @@ impl FermionField {
                     let ro = self.layout.spinor_vec(tile, spin, color, RE);
                     let io = self.layout.spinor_vec(tile, spin, color, IM);
                     for l in 0..vlen {
-                        let ar = self.data[ro + l] as f64;
-                        let ai = self.data[io + l] as f64;
-                        let br = o.data[ro + l] as f64;
-                        let bi = o.data[io + l] as f64;
+                        let ar = self.data[ro + l].to_f64();
+                        let ai = self.data[io + l].to_f64();
+                        let br = o.data[ro + l].to_f64();
+                        let bi = o.data[io + l].to_f64();
                         re += ar * br + ai * bi;
                         im += ar * bi - ai * br;
                     }
@@ -163,7 +201,7 @@ impl FermionField {
     }
 
     pub fn norm2(&self) -> f64 {
-        self.data.iter().map(|&a| a as f64 * a as f64).sum()
+        self.data.iter().map(|&a| a.to_f64() * a.to_f64()).sum()
     }
 
     /// gamma5 in place: negate spin components 2 and 3.
@@ -200,7 +238,7 @@ mod tests {
     #[test]
     fn site_roundtrip() {
         let g = geom();
-        let mut f = FermionField::zeros(&g);
+        let mut f = FermionField::<f32>::zeros(&g);
         let mut rng = Rng::seeded(1);
         let mut v = Spinor::ZERO;
         for i in 0..4 {
@@ -219,10 +257,26 @@ mod tests {
     }
 
     #[test]
+    fn site_roundtrip_is_exact_at_f64() {
+        let g = geom();
+        let mut f = FermionField::<f64>::zeros(&g);
+        let mut rng = Rng::seeded(1);
+        let mut v = Spinor::ZERO;
+        for i in 0..4 {
+            for c in 0..3 {
+                v.s[i][c] = Complex::new(rng.gaussian(), rng.gaussian());
+            }
+        }
+        let s = SiteCoord { t: 1, z: 2, y: 3, ix: 2 };
+        f.set_site(s, &v);
+        assert_eq!((f.site(s).sub(&v)).norm2(), 0.0, "f64 storage is lossless");
+    }
+
+    #[test]
     fn axpy_dot_norm() {
         let g = geom();
         let mut rng = Rng::seeded(2);
-        let a = FermionField::gaussian(&g, &mut rng);
+        let a = FermionField::<f32>::gaussian(&g, &mut rng);
         let b = FermionField::gaussian(&g, &mut rng);
         let mut c = a.clone();
         c.axpy(2.0, &b);
@@ -234,7 +288,7 @@ mod tests {
     fn dot_conjugate_symmetry() {
         let g = geom();
         let mut rng = Rng::seeded(3);
-        let a = FermionField::gaussian(&g, &mut rng);
+        let a = FermionField::<f32>::gaussian(&g, &mut rng);
         let b = FermionField::gaussian(&g, &mut rng);
         let ab = a.dot(&b);
         let ba = b.dot(&a);
@@ -247,7 +301,7 @@ mod tests {
     fn gamma5_involution_and_site_consistency() {
         let g = geom();
         let mut rng = Rng::seeded(4);
-        let a = FermionField::gaussian(&g, &mut rng);
+        let a = FermionField::<f32>::gaussian(&g, &mut rng);
         let mut b = a.clone();
         b.gamma5();
         let s = SiteCoord { t: 0, z: 1, y: 2, ix: 3 };
@@ -260,7 +314,7 @@ mod tests {
     fn point_source_norm() {
         let g = geom();
         let s = SiteCoord { t: 0, z: 0, y: 0, ix: 0 };
-        let f = FermionField::point_source(&g, s, 2, 1);
+        let f = FermionField::<f32>::point_source(&g, s, 2, 1);
         assert_eq!(f.norm2(), 1.0);
         assert_eq!(f.site(s).s[2][1], Complex::ONE);
     }
@@ -272,10 +326,39 @@ mod tests {
         let d = LatticeDims::new(8, 4, 4, 4).unwrap();
         let g1 = Geometry::single_rank(d, Tiling::new(4, 2).unwrap()).unwrap();
         let g2 = Geometry::single_rank(d, Tiling::new(2, 4).unwrap()).unwrap();
-        let f1 = FermionField::gaussian(&g1, &mut Rng::seeded(9));
-        let f2 = FermionField::gaussian(&g2, &mut Rng::seeded(9));
+        let f1 = FermionField::<f32>::gaussian(&g1, &mut Rng::seeded(9));
+        let f2 = FermionField::<f32>::gaussian(&g2, &mut Rng::seeded(9));
         for s in f1.layout.sites() {
             assert!((f1.site(s).sub(&f2.site(s))).norm2() < 1e-12, "{s:?}");
         }
+    }
+
+    #[test]
+    fn gaussian_content_independent_of_precision() {
+        // same seed, same draws: the f32 field is the rounded f64 field
+        let g = geom();
+        let f32f = FermionField::<f32>::gaussian(&g, &mut Rng::seeded(17));
+        let f64f = FermionField::<f64>::gaussian(&g, &mut Rng::seeded(17));
+        for (a, b) in f32f.data.iter().zip(&f64f.data) {
+            assert_eq!(*a, *b as f32);
+        }
+    }
+
+    #[test]
+    fn precision_roundtrip() {
+        let g = geom();
+        let f = FermionField::<f32>::gaussian(&g, &mut Rng::seeded(21));
+        // f32 -> f64 -> f32 is lossless
+        let back: FermionField<f32> = f.to_precision::<f64>().to_precision();
+        assert_eq!(f.data, back.data);
+        // f64 -> f32 rounds
+        let wide = FermionField::<f64>::gaussian(&g, &mut Rng::seeded(22));
+        let narrow: FermionField<f32> = wide.to_precision();
+        let mut err = 0.0f64;
+        for (a, b) in wide.data.iter().zip(&narrow.data) {
+            err = err.max((a - *b as f64).abs());
+        }
+        assert!(err > 0.0, "demotion must actually round");
+        assert!(err < 1e-6, "demotion error too large: {err}");
     }
 }

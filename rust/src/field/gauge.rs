@@ -1,7 +1,8 @@
 //! The gauge (link) field: one SU(3) matrix per site and direction,
-//! stored per parity in the AoSoA layout (paper Eq. 7, gauge case).
+//! stored per parity in the AoSoA layout (paper Eq. 7, gauge case),
+//! generic over the [`Real`] storage scalar (default `f32`).
 
-use crate::algebra::{Complex, Su3};
+use crate::algebra::{Complex, Real, Su3};
 use crate::lattice::{
     Dir, EoLayout, EvenOdd, Geometry, Parity, SiteCoord, IM, RE,
 };
@@ -9,23 +10,23 @@ use crate::util::rng::Rng;
 
 /// Gauge field: `data[dir][parity]` is one AoSoA array of 3x3 links.
 #[derive(Clone, Debug)]
-pub struct GaugeField {
+pub struct GaugeField<R: Real = f32> {
     pub layout: EoLayout,
     pub geom: Geometry,
-    pub data: [[Vec<f32>; 2]; 4],
+    pub data: [[Vec<R>; 2]; 4],
 }
 
-impl GaugeField {
+impl<R: Real> GaugeField<R> {
     /// Cold start: all links are the identity.
-    pub fn unit(geom: &Geometry) -> GaugeField {
-        let mut g = GaugeField::filled(geom, 0.0);
+    pub fn unit(geom: &Geometry) -> GaugeField<R> {
+        let mut g = GaugeField::filled(geom, R::ZERO);
         for dir in 0..4 {
             for p in 0..2 {
                 for tile in 0..g.layout.ntiles() {
                     for c in 0..3 {
                         let off = g.layout.gauge_vec(tile, c, c, RE);
                         for l in 0..g.layout.vlen() {
-                            g.data[dir][p][off + l] = 1.0;
+                            g.data[dir][p][off + l] = R::ONE;
                         }
                     }
                 }
@@ -35,8 +36,11 @@ impl GaugeField {
     }
 
     /// Hot start: independent random SU(3) on every link.
-    pub fn random(geom: &Geometry, rng: &mut Rng) -> GaugeField {
-        let mut g = GaugeField::filled(geom, 0.0);
+    ///
+    /// The RNG draw sequence is independent of `R`: the same seed gives
+    /// the same physical configuration at every precision.
+    pub fn random(geom: &Geometry, rng: &mut Rng) -> GaugeField<R> {
+        let mut g = GaugeField::filled(geom, R::ZERO);
         for dir in Dir::ALL {
             for p in Parity::BOTH {
                 // canonical site order for layout-independent content
@@ -49,13 +53,30 @@ impl GaugeField {
         g
     }
 
-    fn filled(geom: &Geometry, v: f32) -> GaugeField {
+    fn filled(geom: &Geometry, v: R) -> GaugeField<R> {
         let layout = EoLayout::new(geom);
         let len = layout.gauge_len();
         GaugeField {
             layout,
             geom: *geom,
             data: std::array::from_fn(|_| std::array::from_fn(|_| vec![v; len])),
+        }
+    }
+
+    /// Convert into another precision (promotion is exact, demotion
+    /// rounds each component).
+    pub fn to_precision<S: Real>(&self) -> GaugeField<S> {
+        GaugeField {
+            layout: self.layout,
+            geom: self.geom,
+            data: std::array::from_fn(|d| {
+                std::array::from_fn(|p| {
+                    self.data[d][p]
+                        .iter()
+                        .map(|&v| S::from_f64(v.to_f64()))
+                        .collect()
+                })
+            }),
         }
     }
 
@@ -68,7 +89,7 @@ impl GaugeField {
             for b in 0..3 {
                 let ro = self.layout.gauge_vec(lc.tile, a, b, RE) + lc.lane;
                 let io = self.layout.gauge_vec(lc.tile, a, b, IM) + lc.lane;
-                u.m[a][b] = Complex::new(arr[ro] as f64, arr[io] as f64);
+                u.m[a][b] = Complex::new(arr[ro].to_f64(), arr[io].to_f64());
             }
         }
         u
@@ -79,8 +100,8 @@ impl GaugeField {
         let arr = &mut self.data[dir.index()][p.index()];
         for a in 0..3 {
             for b in 0..3 {
-                arr[layout.gauge_elem(s, a, b, RE)] = u.m[a][b].re as f32;
-                arr[layout.gauge_elem(s, a, b, IM)] = u.m[a][b].im as f32;
+                arr[layout.gauge_elem(s, a, b, RE)] = R::from_f64(u.m[a][b].re);
+                arr[layout.gauge_elem(s, a, b, IM)] = R::from_f64(u.m[a][b].im);
             }
         }
     }
@@ -167,14 +188,14 @@ mod tests {
 
     #[test]
     fn unit_gauge_plaquette_is_one() {
-        let g = GaugeField::unit(&geom());
+        let g = GaugeField::<f32>::unit(&geom());
         assert!((g.plaquette() - 1.0).abs() < 1e-12);
     }
 
     #[test]
     fn random_links_are_su3() {
         let mut rng = Rng::seeded(6);
-        let g = GaugeField::random(&geom(), &mut rng);
+        let g = GaugeField::<f32>::random(&geom(), &mut rng);
         let s = SiteCoord { t: 1, z: 2, y: 3, ix: 1 };
         for dir in Dir::ALL {
             for p in Parity::BOTH {
@@ -187,10 +208,24 @@ mod tests {
     }
 
     #[test]
+    fn random_links_are_su3_tightly_at_f64() {
+        let mut rng = Rng::seeded(6);
+        let g = GaugeField::<f64>::random(&geom(), &mut rng);
+        let s = SiteCoord { t: 1, z: 2, y: 3, ix: 1 };
+        for dir in Dir::ALL {
+            for p in Parity::BOTH {
+                let u = g.link(dir, p, s);
+                assert!(u.unitarity_error() < 1e-12);
+                assert!((u.det() - Complex::ONE).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
     fn random_plaquette_is_small() {
         // <P> ~ 0 for a strongly disordered (hot) configuration
         let mut rng = Rng::seeded(7);
-        let g = GaugeField::random(&geom(), &mut rng);
+        let g = GaugeField::<f32>::random(&geom(), &mut rng);
         let p = g.plaquette();
         assert!(p.abs() < 0.1, "hot plaquette {p}");
     }
@@ -198,7 +233,7 @@ mod tests {
     #[test]
     fn link_roundtrip() {
         let mut rng = Rng::seeded(8);
-        let mut g = GaugeField::unit(&geom());
+        let mut g = GaugeField::<f32>::unit(&geom());
         let u = Su3::random(&mut rng);
         let s = SiteCoord { t: 0, z: 1, y: 2, ix: 0 };
         g.set_link(Dir::Z, Parity::Odd, s, &u);
@@ -208,7 +243,7 @@ mod tests {
     #[test]
     fn link_at_consistent_with_parity_storage() {
         let mut rng = Rng::seeded(9);
-        let g = GaugeField::random(&geom(), &mut rng);
+        let g = GaugeField::<f32>::random(&geom(), &mut rng);
         // lexical (3,2,1,0): parity = 0 (even), ix = 1
         let via_lex = g.link_at(Dir::X, 3, 2, 1, 0);
         let via_eo = g.link(
@@ -217,5 +252,19 @@ mod tests {
             SiteCoord { t: 0, z: 1, y: 2, ix: 1 },
         );
         assert!(via_lex.dist(&via_eo) < 1e-12);
+    }
+
+    #[test]
+    fn precision_demotion_matches_direct_f32_generation() {
+        // generating at f64 then demoting equals generating at f32
+        let g = geom();
+        let hi = GaugeField::<f64>::random(&g, &mut Rng::seeded(10));
+        let lo = GaugeField::<f32>::random(&g, &mut Rng::seeded(10));
+        let demoted: GaugeField<f32> = hi.to_precision();
+        for d in 0..4 {
+            for p in 0..2 {
+                assert_eq!(demoted.data[d][p], lo.data[d][p]);
+            }
+        }
     }
 }

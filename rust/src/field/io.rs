@@ -12,9 +12,10 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 
 use super::{FermionField, GaugeField};
+use crate::algebra::Real;
 use crate::lattice::{NCOL, NSPIN, SiteCoord};
 
 const MAGIC: &[u8; 8] = b"LQCD0001";
@@ -108,14 +109,17 @@ pub fn write_tensor_f32(path: &Path, dims: &[usize], data: &[f32]) -> Result<()>
 // Canonical <-> AoSoA conversions
 // ---------------------------------------------------------------------------
 
-/// Expected canonical f32 element count of one parity spinor field.
-pub fn canonical_spinor_len(field: &FermionField) -> usize {
+/// Expected canonical element count of one parity spinor field.
+pub fn canonical_spinor_len<R: Real>(field: &FermionField<R>) -> usize {
     field.layout.nsites() * NSPIN * NCOL * 2
 }
 
 /// Fill a fermion field from a canonical-order buffer
 /// (T, Z, Y, XH, spin, color, reim).
-pub fn fermion_from_canonical(field: &mut FermionField, canon: &[f64]) -> Result<()> {
+pub fn fermion_from_canonical<R: Real>(
+    field: &mut FermionField<R>,
+    canon: &[f64],
+) -> Result<()> {
     if canon.len() != canonical_spinor_len(field) {
         bail!(
             "canonical spinor length {} != expected {}",
@@ -130,7 +134,7 @@ pub fn fermion_from_canonical(field: &mut FermionField, canon: &[f64]) -> Result
                 for reim in 0..2 {
                     let cidx = ((sidx * NSPIN + spin) * NCOL + color) * 2 + reim;
                     let off = l.spinor_elem(s, spin, color, reim);
-                    field.data[off] = canon[cidx] as f32;
+                    field.data[off] = R::from_f64(canon[cidx]);
                 }
             }
         }
@@ -139,9 +143,9 @@ pub fn fermion_from_canonical(field: &mut FermionField, canon: &[f64]) -> Result
 }
 
 /// Dump a fermion field to canonical order (T, Z, Y, XH, spin, color, reim).
-pub fn fermion_to_canonical(field: &FermionField) -> Vec<f32> {
+pub fn fermion_to_canonical<R: Real>(field: &FermionField<R>) -> Vec<R> {
     let l = field.layout;
-    let mut out = vec![0.0f32; canonical_spinor_len(field)];
+    let mut out = vec![R::ZERO; canonical_spinor_len(field)];
     for (sidx, s) in l.sites().enumerate() {
         for spin in 0..NSPIN {
             for color in 0..NCOL {
@@ -157,7 +161,10 @@ pub fn fermion_to_canonical(field: &FermionField) -> Vec<f32> {
 
 /// Fill a gauge field from a canonical-order buffer
 /// (dir, parity, T, Z, Y, XH, a, b, reim).
-pub fn gauge_from_canonical(gauge: &mut GaugeField, canon: &[f64]) -> Result<()> {
+pub fn gauge_from_canonical<R: Real>(
+    gauge: &mut GaugeField<R>,
+    canon: &[f64],
+) -> Result<()> {
     let l = gauge.layout;
     let per_par = l.nsites() * NCOL * NCOL * 2;
     if canon.len() != 4 * 2 * per_par {
@@ -178,7 +185,7 @@ pub fn gauge_from_canonical(gauge: &mut GaugeField, canon: &[f64]) -> Result<()>
                         for reim in 0..2 {
                             let cidx =
                                 base + ((sidx * NCOL + a) * NCOL + b) * 2 + reim;
-                            arr[l.gauge_elem(s, a, b, reim)] = canon[cidx] as f32;
+                            arr[l.gauge_elem(s, a, b, reim)] = R::from_f64(canon[cidx]);
                         }
                     }
                 }
@@ -189,10 +196,10 @@ pub fn gauge_from_canonical(gauge: &mut GaugeField, canon: &[f64]) -> Result<()>
 }
 
 /// Dump a gauge field to canonical order (dir, parity, T, Z, Y, XH, a, b, reim).
-pub fn gauge_to_canonical(gauge: &GaugeField) -> Vec<f32> {
+pub fn gauge_to_canonical<R: Real>(gauge: &GaugeField<R>) -> Vec<R> {
     let l = gauge.layout;
     let per_par = l.nsites() * NCOL * NCOL * 2;
-    let mut out = vec![0.0f32; 4 * 2 * per_par];
+    let mut out = vec![R::ZERO; 4 * 2 * per_par];
     let sites: Vec<SiteCoord> = l.sites().collect();
     for dir in 0..4 {
         for p in 0..2 {

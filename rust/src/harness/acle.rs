@@ -28,8 +28,8 @@ pub fn run(opts: Opts) -> AcleResult {
     };
     let geom = Geometry::single_rank(dims, Tiling::new(4, 4).unwrap()).unwrap();
     let mut rng = Rng::seeded(4242);
-    let u = GaugeField::random(&geom, &mut rng);
-    let psi = FermionField::gaussian(&geom, &mut rng);
+    let u: GaugeField = GaugeField::random(&geom, &mut rng);
+    let psi: FermionField = FermionField::gaussian(&geom, &mut rng);
     let mut out = FermionField::zeros(&geom);
     let flops = crate::FLOP_PER_SITE as f64 * dims.half_volume() as f64 * opts.iters as f64;
 

@@ -22,8 +22,8 @@ pub struct BarrierResult {
 fn measure(kind: BarrierKind, geom: &Geometry, opts: &Opts) -> f64 {
     run_world(1, |_, comm| {
         let mut rng = Rng::seeded(777);
-        let u = GaugeField::random(geom, &mut rng);
-        let psi = FermionField::gaussian(geom, &mut rng);
+        let u: GaugeField = GaugeField::random(geom, &mut rng);
+        let psi: FermionField = FermionField::gaussian(geom, &mut rng);
         let mut out = FermionField::zeros(geom);
         let dist = DistHopping::new(geom, true, opts.threads, Eo2Schedule::Uniform);
         let mut team = Team::new(opts.threads, kind);

@@ -29,8 +29,8 @@ pub fn measure_phases(dims: LatticeDims, opts: &Opts) -> (RankCompute, [usize; 4
     let geom = Geometry::single_rank(dims, tiling).unwrap();
     let (report, plans_bytes) = run_world(1, |_, comm| {
         let mut rng = Rng::seeded(1010);
-        let u = GaugeField::random(&geom, &mut rng);
-        let psi = FermionField::gaussian(&geom, &mut rng);
+        let u: GaugeField = GaugeField::random(&geom, &mut rng);
+        let psi: FermionField = FermionField::gaussian(&geom, &mut rng);
         let mut out = FermionField::zeros(&geom);
         let dist = DistHopping::new(&geom, true, opts.threads, Eo2Schedule::Balanced);
         let mut team = Team::new(opts.threads, BarrierKind::Sleep);

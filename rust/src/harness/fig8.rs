@@ -34,8 +34,8 @@ pub fn run(opts: Opts) -> Fig8Result {
     let tiling = Tiling::new(4, 4).unwrap();
     let geom = Geometry::single_rank(dims, tiling).unwrap();
     let mut rng = Rng::seeded(88);
-    let u = GaugeField::random(&geom, &mut rng);
-    let psi = FermionField::gaussian(&geom, &mut rng);
+    let u: GaugeField = GaugeField::random(&geom, &mut rng);
+    let psi: FermionField = FermionField::gaussian(&geom, &mut rng);
     let mut out = FermionField::zeros(&geom);
     let mut team = Team::new(opts.threads, BarrierKind::Sleep);
 

@@ -39,8 +39,8 @@ pub fn run(opts: Opts) -> Fig9Result {
     let profile = |schedule: Eo2Schedule| {
         run_world(1, |_, comm| {
             let mut rng = Rng::seeded(99);
-            let u = GaugeField::random(&geom, &mut rng);
-            let psi = FermionField::gaussian(&geom, &mut rng);
+            let u: GaugeField = GaugeField::random(&geom, &mut rng);
+            let psi: FermionField = FermionField::gaussian(&geom, &mut rng);
             let mut out = FermionField::zeros(&geom);
             let dist = DistHopping::new(&geom, true, opts.threads, schedule);
             let mut team = Team::new(opts.threads, BarrierKind::Sleep);

@@ -59,8 +59,8 @@ pub fn measure_cell(
     let geom = Geometry::single_rank(dims, tiling).ok()?;
     let secs = run_world(1, |_, comm| {
         let mut rng = Rng::seeded(2023);
-        let u = GaugeField::random(&geom, &mut rng);
-        let psi_e = FermionField::gaussian(&geom, &mut rng);
+        let u: GaugeField = GaugeField::random(&geom, &mut rng);
+        let psi_e: FermionField = FermionField::gaussian(&geom, &mut rng);
         let mut out_o = FermionField::zeros(&geom);
         let mut out_e = FermionField::zeros(&geom);
         let dist = DistHopping::new(&geom, true, threads, Eo2Schedule::Uniform);

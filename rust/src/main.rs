@@ -12,19 +12,20 @@
 
 use std::process::ExitCode;
 
+use lqcd::algebra::Real;
 use lqcd::config::RunConfig;
 use lqcd::coordinator::operator::{LinearOperator, NativeMdagM, NativeMeo};
 use lqcd::field::{FermionField, GaugeField};
 use lqcd::harness::{self, Opts};
 use lqcd::lattice::{Geometry, LatticeDims, Tiling};
 use lqcd::perf::{calibrate_host, A64fx};
-use lqcd::solver;
+use lqcd::solver::{self, InnerAlgorithm};
 use lqcd::util::cli;
 use lqcd::util::rng::Rng;
 
 const VALUE_OPTS: &[&str] = &[
     "dims", "tiling", "threads", "iters", "config", "kappa", "tol", "maxiter",
-    "algorithm", "artifacts", "seed",
+    "algorithm", "artifacts", "seed", "precision", "inner-tol", "max-outer",
 ];
 
 fn main() -> ExitCode {
@@ -61,6 +62,24 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
     }
     if let Some(alg) = args.get("algorithm") {
         cfg.solver.algorithm = alg.to_string();
+    }
+    if let Some(p) = args.get("precision") {
+        match p {
+            "f32" | "f64" | "mixed" => cfg.solver.precision = p.to_string(),
+            other => return Err(format!("--precision must be f32, f64 or mixed (got {other})").into()),
+        }
+    }
+    cfg.solver.inner_tol = args.get_parse("inner-tol", cfg.solver.inner_tol)?;
+    if !(cfg.solver.inner_tol > 0.0 && cfg.solver.inner_tol < 1.0) {
+        return Err(format!(
+            "--inner-tol must be in (0, 1) (got {})",
+            cfg.solver.inner_tol
+        )
+        .into());
+    }
+    cfg.solver.max_outer = args.get_parse("max-outer", cfg.solver.max_outer)?;
+    if cfg.solver.max_outer == 0 {
+        return Err("--max-outer must be positive".into());
     }
     let use_pjrt = args.flag("pjrt") || cfg.solver.use_pjrt;
     let opts = Opts {
@@ -147,6 +166,20 @@ fn info(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
 }
 
 fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Error>> {
+    match cfg.solver.precision.as_str() {
+        "f64" | "mixed" if use_pjrt => {
+            return Err(format!(
+                "--pjrt only supports f32 (the artifacts are lowered at f32); \
+                 got --precision {}",
+                cfg.solver.precision
+            )
+            .into())
+        }
+        "f64" => return solve_native::<f64>(cfg),
+        "mixed" => return solve_mixed(cfg),
+        _ if !use_pjrt => return solve_native::<f32>(cfg),
+        _ => {}
+    }
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
     let mut rng = Rng::seeded(cfg.seed);
@@ -154,25 +187,51 @@ fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Erro
         "generating random gauge configuration on {} ...",
         cfg.lattice.global
     );
-    let u = GaugeField::random(&geom, &mut rng);
+    let u: GaugeField = GaugeField::random(&geom, &mut rng);
     println!("plaquette = {:.6}", u.plaquette());
-    let b = FermionField::gaussian(&geom, &mut rng);
+    let b: FermionField = FermionField::gaussian(&geom, &mut rng);
     let kappa = cfg.solver.kappa as f32;
 
     let sw = lqcd::util::timer::Stopwatch::start();
-    let stats = if use_pjrt {
-        let rt = lqcd::runtime::Runtime::load(&cfg.artifacts_dir)?;
-        println!("PJRT platform: {}", rt.platform());
-        let mut op = lqcd::runtime::PjrtMeo::new(&rt, &geom, &u, kappa)?;
-        let mut x = FermionField::zeros(&geom);
-        let stats =
-            solver::bicgstab(&mut op, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
-        println!(
-            "true |Mx-b|/|b| = {:.3e}",
-            solver::residual::operator_residual(&mut op, &x, &b)
-        );
-        stats
-    } else if cfg.solver.algorithm == "bicgstab" {
+    let rt = lqcd::runtime::Runtime::load(&cfg.artifacts_dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut op = lqcd::runtime::PjrtMeo::new(&rt, &geom, &u, kappa)?;
+    let mut x = FermionField::zeros(&geom);
+    let stats = solver::bicgstab(&mut op, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
+    println!(
+        "true |Mx-b|/|b| = {:.3e}",
+        solver::residual::operator_residual(&mut op, &x, &b)
+    );
+    let secs = sw.secs();
+    println!(
+        "pjrt-bicgstab: {} iterations, converged={}, rel residual {:.3e}, {:.2}s, {:.2} GFlops",
+        stats.iterations,
+        stats.converged,
+        stats.rel_residual,
+        secs,
+        stats.flops as f64 / secs / 1e9,
+    );
+    Ok(())
+}
+
+/// Uniform-precision native solve at `R` (`--precision f32` without
+/// `--pjrt`, and `--precision f64`).
+fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
+    let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
+        .map_err(|e| e.to_string())?;
+    let mut rng = Rng::seeded(cfg.seed);
+    println!(
+        "generating random gauge configuration on {} ({}) ...",
+        cfg.lattice.global,
+        R::NAME
+    );
+    let u: GaugeField<R> = GaugeField::random(&geom, &mut rng);
+    println!("plaquette = {:.6}", u.plaquette());
+    let b: FermionField<R> = FermionField::gaussian(&geom, &mut rng);
+    let kappa = R::from_f64(cfg.solver.kappa);
+
+    let sw = lqcd::util::timer::Stopwatch::start();
+    let stats = if cfg.solver.algorithm == "bicgstab" {
         let mut op = NativeMeo::new(&geom, u, kappa);
         let mut x = FermionField::zeros(&geom);
         let stats =
@@ -183,7 +242,6 @@ fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Erro
         );
         stats
     } else {
-        // CGNR: solve M^dag M x = M^dag b
         let mut op = NativeMdagM::new(&geom, u, kappa);
         let mut bp = b.clone();
         bp.gamma5();
@@ -200,18 +258,97 @@ fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Erro
     };
     let secs = sw.secs();
     println!(
-        "{}: {} iterations, converged={}, rel residual {:.3e}, {:.2}s, {:.2} GFlops",
-        if use_pjrt {
-            "pjrt-bicgstab"
-        } else {
-            &cfg.solver.algorithm
-        },
+        "{}({}): {} iterations, converged={}, rel residual {:.3e}, {:.2}s, {:.2} GFlops",
+        cfg.solver.algorithm,
+        R::NAME,
         stats.iterations,
         stats.converged,
         stats.rel_residual,
         secs,
         stats.flops as f64 / secs / 1e9,
     );
+    Ok(())
+}
+
+/// Mixed-precision solve: f64 outer iterative refinement, f32 inner
+/// CG/BiCGStab (`--precision mixed`).
+fn solve_mixed(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
+    let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
+        .map_err(|e| e.to_string())?;
+    let mut rng = Rng::seeded(cfg.seed);
+    println!(
+        "generating random gauge configuration on {} (mixed f64/f32) ...",
+        cfg.lattice.global
+    );
+    let u: GaugeField<f64> = GaugeField::random(&geom, &mut rng);
+    println!("plaquette = {:.6}", u.plaquette());
+    let b: FermionField<f64> = FermionField::gaussian(&geom, &mut rng);
+    let kappa = cfg.solver.kappa;
+    let u32 = u.to_precision::<f32>();
+
+    let sw = lqcd::util::timer::Stopwatch::start();
+    let stats = if cfg.solver.algorithm == "bicgstab" {
+        let mut outer = NativeMeo::new(&geom, u, kappa);
+        let mut inner = NativeMeo::new(&geom, u32, kappa as f32);
+        let mut x = FermionField::<f64>::zeros(&geom);
+        let stats = solver::mixed_refinement(
+            &mut outer,
+            &mut inner,
+            &mut x,
+            &b,
+            cfg.solver.tol,
+            cfg.solver.max_outer,
+            cfg.solver.inner_tol,
+            cfg.solver.maxiter,
+            InnerAlgorithm::BiCgStab,
+        );
+        println!(
+            "true |Mx-b|/|b| = {:.3e}",
+            solver::residual::operator_residual(&mut outer, &x, &b)
+        );
+        stats
+    } else {
+        // CGNR at f64: MdagM x = Mdag b, inner CG on the f32 normal operator
+        let mut outer = NativeMdagM::new(&geom, u, kappa);
+        let mut inner = NativeMdagM::new(&geom, u32, kappa as f32);
+        let mut bp = b.clone();
+        bp.gamma5();
+        let mut mbp = FermionField::zeros(&geom);
+        outer.meo().apply(&mut mbp, &bp);
+        mbp.gamma5();
+        let mut x = FermionField::<f64>::zeros(&geom);
+        let stats = solver::mixed_refinement(
+            &mut outer,
+            &mut inner,
+            &mut x,
+            &mbp,
+            cfg.solver.tol,
+            cfg.solver.max_outer,
+            cfg.solver.inner_tol,
+            cfg.solver.maxiter,
+            InnerAlgorithm::Cg,
+        );
+        println!(
+            "true |MdagM x - Mdag b|/|Mdag b| = {:.3e}",
+            solver::residual::operator_residual(&mut outer, &x, &mbp)
+        );
+        stats
+    };
+    let secs = sw.secs();
+    println!(
+        "{}(mixed): {} outer steps, {} inner f32 iterations, converged={}, \
+         rel residual {:.3e}, {:.2}s, {:.2} GFlops",
+        cfg.solver.algorithm,
+        stats.outer_iterations,
+        stats.inner_iterations,
+        stats.converged,
+        stats.rel_residual,
+        secs,
+        stats.flops as f64 / secs / 1e9,
+    );
+    for (i, r) in stats.history.iter().enumerate() {
+        println!("  outer {i:>2}  true |r|/|b| = {r:.3e}");
+    }
     Ok(())
 }
 
@@ -237,7 +374,11 @@ OPTIONS:
   --iters N            measurement iterations
   --kappa X --tol X --maxiter N
   --algorithm cg|bicgstab
-  --pjrt               execute the AOT artifacts on the hot path
+  --precision f32|f64|mixed   field/kernel precision (mixed = f64 outer
+                       iterative refinement around an f32 inner solve)
+  --inner-tol X        mixed: relative tolerance of each inner f32 solve
+  --max-outer N        mixed: cap on outer refinement steps
+  --pjrt               execute the AOT artifacts on the hot path (f32)
   --artifacts DIR      artifact directory (default ./artifacts)
   --config FILE        TOML-subset run configuration
   --quick              smaller lattices/iterations

@@ -9,8 +9,9 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
+use super::xla;
 use crate::field::io::{fermion_to_canonical, gauge_to_canonical};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::Geometry;
@@ -217,7 +218,20 @@ mod tests {
     /// centerpiece cross-layer test (L1+L2 artifact vs L3 native kernel).
     #[test]
     fn pjrt_meo_matches_native() {
-        let rt = Runtime::load(&artifacts_dir()).expect("run `make artifacts` first");
+        let rt = match Runtime::load(&artifacts_dir()) {
+            Ok(rt) => rt,
+            Err(e) => {
+                // LQCD_REQUIRE_ARTIFACTS marks an environment with the full
+                // artifact + PJRT pipeline: there a load failure is a real
+                // regression, not a missing optional dependency.
+                assert!(
+                    std::env::var_os("LQCD_REQUIRE_ARTIFACTS").is_none(),
+                    "LQCD_REQUIRE_ARTIFACTS set but PJRT runtime failed to load: {e}"
+                );
+                eprintln!("skipping pjrt_meo_matches_native: {e}");
+                return;
+            }
+        };
         let dims = rt.manifest.dims;
         let geom = Geometry::single_rank(dims, Tiling::new(2, 2).unwrap()).unwrap();
         let mut rng = Rng::seeded(42);

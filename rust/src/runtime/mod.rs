@@ -4,6 +4,7 @@
 
 mod executor;
 mod manifest;
+pub mod xla;
 
 pub use executor::{PjrtMeo, Runtime};
 pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

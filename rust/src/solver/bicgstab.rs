@@ -4,29 +4,33 @@
 //! the sesquilinear inner product). Often converges in ~half the operator
 //! applications of CGNR on the same system.
 
-use crate::algebra::Complex;
+use crate::algebra::{Complex, Real};
 use crate::coordinator::operator::LinearOperator;
 use crate::field::FermionField;
 
 use super::SolveStats;
 
 /// Global sesquilinear dot through the operator's reducer.
-fn gdot<A: LinearOperator>(op: &mut A, a: &FermionField, b: &FermionField) -> Complex {
+fn gdot<R: Real, A: LinearOperator<R>>(
+    op: &mut A,
+    a: &FermionField<R>,
+    b: &FermionField<R>,
+) -> Complex {
     let local = a.dot(b);
     Complex::new(op.reduce_sum(local.re), op.reduce_sum(local.im))
 }
 
 /// Solve `A x = b` with BiCGStab. `x` holds the initial guess on entry.
-pub fn bicgstab<A: LinearOperator>(
+pub fn bicgstab<R: Real, A: LinearOperator<R>>(
     op: &mut A,
-    x: &mut FermionField,
-    b: &FermionField,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
     tol: f64,
     maxiter: usize,
 ) -> SolveStats {
     let bnorm2 = op.reduce_sum(b.norm2());
     if bnorm2 == 0.0 {
-        x.fill(0.0);
+        x.fill(R::ZERO);
         return SolveStats {
             iterations: 0,
             converged: true,
@@ -38,19 +42,13 @@ pub fn bicgstab<A: LinearOperator>(
     let limit = tol * tol * bnorm2;
 
     let mut r = b.clone();
-    let mut t = FermionField {
-        layout: r.layout,
-        data: vec![0.0; r.data.len()],
-    };
+    let mut t = b.zeros_like();
     op.apply(&mut t, x);
-    r.axpy(-1.0, &t);
+    r.axpy(-R::ONE, &t);
     let rhat = r.clone();
     let mut p = r.clone();
-    let mut v = FermionField {
-        layout: r.layout,
-        data: vec![0.0; r.data.len()],
-    };
-    let mut flops = op.flops_per_apply() as u64;
+    let mut v = b.zeros_like();
+    let mut flops = op.flops_per_apply();
     let mut rho = gdot(op, &rhat, &r);
     let mut history = Vec::new();
     let mut iterations = 0;
@@ -104,7 +102,7 @@ pub fn bicgstab<A: LinearOperator>(
         p.caxpy(-omega, &v);
         // p = beta * p + r: do it via scale trick
         cscale(&mut p, beta);
-        p.axpy(1.0, &r);
+        p.axpy(R::ONE, &r);
         rho = rho_new;
     }
 
@@ -118,10 +116,10 @@ pub fn bicgstab<A: LinearOperator>(
 }
 
 /// In-place complex scale of a field.
-fn cscale(f: &mut FermionField, a: Complex) {
+fn cscale<R: Real>(f: &mut FermionField<R>, a: Complex) {
     let layout = f.layout;
     let vlen = layout.vlen();
-    let (ar, ai) = (a.re as f32, a.im as f32);
+    let (ar, ai) = (R::from_f64(a.re), R::from_f64(a.im));
     for tile in 0..layout.ntiles() {
         for spin in 0..4 {
             for color in 0..3 {
@@ -160,7 +158,7 @@ mod tests {
         let mut rng = Rng::seeded(201);
         let u = GaugeField::random(&g, &mut rng);
         let b = FermionField::gaussian(&g, &mut rng);
-        let mut op = NativeMeo::new(&g, u, 0.12);
+        let mut op = NativeMeo::new(&g, u, 0.12f32);
         let mut x = FermionField::zeros(&g);
         let stats = bicgstab(&mut op, &mut x, &b, 1e-8, 300);
         assert!(stats.converged, "{stats:?}");
@@ -181,11 +179,11 @@ mod tests {
         let u = GaugeField::random(&g, &mut rng);
         let b = FermionField::gaussian(&g, &mut rng);
 
-        let mut op_m = NativeMeo::new(&g, u.clone(), 0.12);
+        let mut op_m = NativeMeo::new(&g, u.clone(), 0.12f32);
         let mut x1 = FermionField::zeros(&g);
         let s_b = bicgstab(&mut op_m, &mut x1, &b, 1e-8, 300);
 
-        let mut op_n = NativeMdagM::new(&g, u, 0.12);
+        let mut op_n = NativeMdagM::new(&g, u, 0.12f32);
         // CGNR solves M^dag M x = M^dag b
         let mut bp = FermionField::zeros(&g);
         {

@@ -1,5 +1,8 @@
-//! Conjugate gradient for hermitian positive-definite operators.
+//! Conjugate gradient for hermitian positive-definite operators, generic
+//! over the field precision. Scalars alpha/beta are computed from f64
+//! reductions and rounded into the field precision for the axpy updates.
 
+use crate::algebra::Real;
 use crate::coordinator::operator::LinearOperator;
 use crate::field::FermionField;
 
@@ -7,16 +10,16 @@ use super::SolveStats;
 
 /// Solve `A x = b` with CG. `x` holds the initial guess on entry and the
 /// solution on exit. Convergence criterion: `|r| <= tol * |b|`.
-pub fn cg<A: LinearOperator>(
+pub fn cg<R: Real, A: LinearOperator<R>>(
     op: &mut A,
-    x: &mut FermionField,
-    b: &FermionField,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
     tol: f64,
     maxiter: usize,
 ) -> SolveStats {
     let bnorm2 = op.reduce_sum(b.norm2());
     if bnorm2 == 0.0 {
-        x.fill(0.0);
+        x.fill(R::ZERO);
         return SolveStats {
             iterations: 0,
             converged: true,
@@ -29,12 +32,12 @@ pub fn cg<A: LinearOperator>(
 
     // r = b - A x
     let mut r = b.clone();
-    let mut ap = FermionField { layout: r.layout, data: vec![0.0; r.data.len()] };
+    let mut ap = b.zeros_like();
     op.apply(&mut ap, x);
-    r.axpy(-1.0, &ap);
+    r.axpy(-R::ONE, &ap);
     let mut p = r.clone();
     let mut rr = op.reduce_sum(r.norm2());
-    let mut flops = op.flops_per_apply() as u64;
+    let mut flops = op.flops_per_apply();
     let mut history = Vec::new();
 
     let mut iterations = 0;
@@ -43,11 +46,11 @@ pub fn cg<A: LinearOperator>(
         flops += op.flops_per_apply();
         let pap = op.reduce_sum(p.dot_re(&ap));
         debug_assert!(pap.is_finite());
-        let alpha = (rr / pap) as f32;
-        x.axpy(alpha, &p);
-        r.axpy(-alpha, &ap);
+        let alpha = rr / pap;
+        x.axpy(R::from_f64(alpha), &p);
+        r.axpy(R::from_f64(-alpha), &ap);
         let rr_new = op.reduce_sum(r.norm2());
-        let beta = (rr_new / rr) as f32;
+        let beta = R::from_f64(rr_new / rr);
         // p = r + beta p
         p.xpay(beta, &r);
         rr = rr_new;
@@ -86,7 +89,7 @@ mod tests {
         let mut rng = Rng::seeded(101);
         let u = GaugeField::random(&g, &mut rng);
         let b = FermionField::gaussian(&g, &mut rng);
-        let mut op = NativeMdagM::new(&g, u, 0.12);
+        let mut op = NativeMdagM::new(&g, u, 0.12f32);
         let mut x = FermionField::zeros(&g);
         let stats = cg(&mut op, &mut x, &b, 1e-8, 500);
         assert!(stats.converged, "CG did not converge: {stats:?}");
@@ -107,7 +110,7 @@ mod tests {
         let g = geom();
         let mut rng = Rng::seeded(102);
         let u = GaugeField::random(&g, &mut rng);
-        let mut op = NativeMdagM::new(&g, u, 0.12);
+        let mut op = NativeMdagM::new(&g, u, 0.12f32);
         let b = FermionField::zeros(&g);
         let mut x = FermionField::gaussian(&g, &mut rng);
         let stats = cg(&mut op, &mut x, &b, 1e-8, 100);
@@ -121,7 +124,7 @@ mod tests {
         let mut rng = Rng::seeded(103);
         let u = GaugeField::random(&g, &mut rng);
         let b = FermionField::gaussian(&g, &mut rng);
-        let mut op = NativeMdagM::new(&g, u, 0.12);
+        let mut op = NativeMdagM::new(&g, u, 0.12f32);
 
         let mut x_cold = FermionField::zeros(&g);
         let cold = cg(&mut op, &mut x_cold, &b, 1e-8, 500);
@@ -139,7 +142,7 @@ mod tests {
         let mut rng = Rng::seeded(104);
         let u = GaugeField::random(&g, &mut rng);
         let b = FermionField::gaussian(&g, &mut rng);
-        let mut op = NativeMdagM::new(&g, u, 0.12);
+        let mut op = NativeMdagM::new(&g, u, 0.12f32);
         let mut x = FermionField::zeros(&g);
         let stats = cg(&mut op, &mut x, &b, 1e-14, 3);
         assert_eq!(stats.iterations, 3);

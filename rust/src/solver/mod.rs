@@ -3,17 +3,22 @@
 //! * [`cg`] — conjugate gradient on the hermitian positive-definite
 //!   normal operator `M-hat^dag M-hat` (CGNR).
 //! * [`bicgstab`] — BiCGStab directly on the non-hermitian `M-hat`.
+//! * [`mixed`] — mixed-precision iterative refinement: f64 outer defect
+//!   correction around an f32 inner CG/BiCGStab.
 //!
-//! Both are generic over [`crate::coordinator::operator::LinearOperator`];
-//! dot products go through `reduce_sum` so the same code runs single-rank
-//! and distributed (allreduce), native and PJRT-backed.
+//! All are generic over [`crate::coordinator::operator::LinearOperator`]
+//! and the [`crate::algebra::Real`] field scalar; dot products go through
+//! `reduce_sum` (always f64) so the same code runs single-rank and
+//! distributed (allreduce), native and PJRT-backed, at either precision.
 
 mod bicgstab;
 mod cg;
+pub mod mixed;
 pub mod residual;
 
 pub use bicgstab::bicgstab;
 pub use cg::cg;
+pub use mixed::{mixed_refinement, InnerAlgorithm, MixedStats};
 
 /// Convergence record of one solve.
 #[derive(Clone, Debug)]

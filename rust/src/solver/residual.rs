@@ -1,44 +1,39 @@
 //! True-residual verification helpers (the solvers report the recursive
 //! residual; examples and tests verify against the real operator).
 
+use crate::algebra::Real;
 use crate::dslash::{full, HoppingEo};
 use crate::field::{FermionField, GaugeField};
 
 /// |D x - b| / |b| on the full even/odd system.
-pub fn full_system_residual(
+pub fn full_system_residual<R: Real>(
     hop: &HoppingEo,
-    u: &GaugeField,
-    x_e: &FermionField,
-    x_o: &FermionField,
-    b_e: &FermionField,
-    b_o: &FermionField,
-    kappa: f32,
+    u: &GaugeField<R>,
+    x_e: &FermionField<R>,
+    x_o: &FermionField<R>,
+    b_e: &FermionField<R>,
+    b_o: &FermionField<R>,
+    kappa: R,
 ) -> f64 {
-    let mut out_e = FermionField {
-        layout: x_e.layout,
-        data: vec![0.0; x_e.data.len()],
-    };
-    let mut out_o = out_e.clone();
+    let mut out_e = x_e.zeros_like();
+    let mut out_o = x_e.zeros_like();
     full::dslash_full(hop, &mut out_e, &mut out_o, u, x_e, x_o, kappa);
-    out_e.axpy(-1.0, b_e);
-    out_o.axpy(-1.0, b_o);
+    out_e.axpy(-R::ONE, b_e);
+    out_o.axpy(-R::ONE, b_o);
     let num = out_e.norm2() + out_o.norm2();
     let den = b_e.norm2() + b_o.norm2();
     (num / den).sqrt()
 }
 
 /// |A x - b| / |b| for any operator.
-pub fn operator_residual<A: crate::coordinator::operator::LinearOperator>(
+pub fn operator_residual<R: Real, A: crate::coordinator::operator::LinearOperator<R>>(
     op: &mut A,
-    x: &FermionField,
-    b: &FermionField,
+    x: &FermionField<R>,
+    b: &FermionField<R>,
 ) -> f64 {
-    let mut ax = FermionField {
-        layout: x.layout,
-        data: vec![0.0; x.data.len()],
-    };
+    let mut ax = x.zeros_like();
     op.apply(&mut ax, x);
-    ax.axpy(-1.0, b);
+    ax.axpy(-R::ONE, b);
     (op.reduce_sum(ax.norm2()) / op.reduce_sum(b.norm2())).sqrt()
 }
 

@@ -4,6 +4,7 @@
 //! property-based-testing framework used across the test suite.
 
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

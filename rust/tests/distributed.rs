@@ -23,8 +23,8 @@ fn run_case(
 ) {
     let ggeom = Geometry::single_rank(global_dims, tiling).unwrap();
     let mut rng = Rng::seeded(seed);
-    let u_global = GaugeField::random(&ggeom, &mut rng);
-    let psi_global = FermionField::gaussian(&ggeom, &mut rng);
+    let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+    let psi_global: FermionField = FermionField::gaussian(&ggeom, &mut rng);
 
     // reference: single-rank periodic
     let mut want = FermionField::zeros(&ggeom);

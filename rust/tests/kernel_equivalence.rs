@@ -16,8 +16,8 @@ fn rel_diff(a: &FermionField, b: &FermionField) -> f64 {
 
 fn check_geom(geom: Geometry, seed: u64, p_out: Parity) {
     let mut rng = Rng::seeded(seed);
-    let u = GaugeField::random(&geom, &mut rng);
-    let psi = FermionField::gaussian(&geom, &mut rng);
+    let u: GaugeField = GaugeField::random(&geom, &mut rng);
+    let psi: FermionField = FermionField::gaussian(&geom, &mut rng);
 
     let mut out_vec = FermionField::zeros(&geom);
     HoppingEo::new(&geom).apply(&mut out_vec, &u, &psi, p_out);
@@ -101,8 +101,8 @@ fn skip_boundary_plus_edges_equals_periodic_minus_interior() {
     let dims = LatticeDims::new(8, 4, 4, 4).unwrap();
     let geom = Geometry::single_rank(dims, Tiling::new(2, 2).unwrap()).unwrap();
     let mut rng = Rng::seeded(42);
-    let u = GaugeField::random(&geom, &mut rng);
-    let psi = FermionField::gaussian(&geom, &mut rng);
+    let u: GaugeField = GaugeField::random(&geom, &mut rng);
+    let psi: FermionField = FermionField::gaussian(&geom, &mut rng);
 
     let mut periodic = FermionField::zeros(&geom);
     HoppingEo::new(&geom).apply(&mut periodic, &u, &psi, Parity::Odd);

@@ -44,8 +44,8 @@ fn hopping_norm_bounded_by_8() {
     Runner::new("hopping norm bound", 8).run(|g| {
         let geom = random_geometry(g);
         let mut rng = Rng::seeded(g.u64_below(1 << 48));
-        let u = GaugeField::random(&geom, &mut rng);
-        let psi = FermionField::gaussian(&geom, &mut rng);
+        let u: GaugeField = GaugeField::random(&geom, &mut rng);
+        let psi: FermionField = FermionField::gaussian(&geom, &mut rng);
         let mut out = FermionField::zeros(&geom);
         HoppingEo::new(&geom).apply(&mut out, &u, &psi, Parity::Odd);
         let ratio = (out.norm2() / psi.norm2()).sqrt();
@@ -133,8 +133,8 @@ fn hopping_with_unit_gauge_preserves_momentum_zero_mode() {
     // on U = 1, the constant spinor is an H eigenvector with eigenvalue 8
     Runner::new("free zero mode", 5).run(|g| {
         let geom = random_geometry(g);
-        let u = GaugeField::unit(&geom);
-        let mut psi = FermionField::zeros(&geom);
+        let u: GaugeField = GaugeField::unit(&geom);
+        let mut psi: FermionField = FermionField::zeros(&geom);
         let mut rng = Rng::seeded(g.u64_below(1 << 48));
         // constant (site-independent) random spinor content
         let mut v = lqcd::algebra::Spinor::ZERO;
@@ -164,9 +164,9 @@ fn dslash_full_determinant_free_check() {
     Runner::new("kappa zero identity", 4).run(|g| {
         let geom = random_geometry(g);
         let mut rng = Rng::seeded(g.u64_below(1 << 48));
-        let u = GaugeField::random(&geom, &mut rng);
-        let psi_e = FermionField::gaussian(&geom, &mut rng);
-        let psi_o = FermionField::gaussian(&geom, &mut rng);
+        let u: GaugeField = GaugeField::random(&geom, &mut rng);
+        let psi_e: FermionField = FermionField::gaussian(&geom, &mut rng);
+        let psi_o: FermionField = FermionField::gaussian(&geom, &mut rng);
         let hop = HoppingEo::new(&geom);
         let mut out_e = FermionField::zeros(&geom);
         let mut out_o = FermionField::zeros(&geom);
