@@ -16,6 +16,7 @@
 //! ```
 
 use lqcd::coordinator::operator::{LinearOperator, NativeMeo};
+use lqcd::coordinator::{BarrierKind, Team};
 use lqcd::dslash::full;
 use lqcd::field::io::fermion_from_canonical;
 use lqcd::field::{FermionField, GaugeField};
@@ -85,16 +86,18 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("full-system |D psi - eta| / |eta| = {rel:.3e}");
     assert!(rel < 1e-5, "full-system residual too large");
 
-    println!("\n== cross-check: same solve with the native Rust operator ==");
+    println!("\n== cross-check: same solve, native fused pipeline on 2 threads ==");
     let mut nop = NativeMeo::new(&geom, u.clone(), kappa);
+    let mut team = Team::new(2, BarrierKind::Sleep);
     let mut x_native = FermionField::zeros(&geom);
     let sw = Stopwatch::start();
-    let nstats = solver::bicgstab(&mut nop, &mut x_native, &b, tol, 500);
+    let nstats = solver::fused::bicgstab(&mut nop, &mut team, &mut x_native, &b, tol, 500);
     println!(
-        "bicgstab(native): {} iters in {:.2}s ({:.2} GFlops)",
+        "bicgstab(native fused, 2 threads): {} iters in {:.2}s ({:.2} GFlops, {:.0} sweeps/iter)",
         nstats.iterations,
         sw.secs(),
-        nstats.flops as f64 / sw.secs() / 1e9
+        nstats.flops as f64 / sw.secs() / 1e9,
+        nstats.sweeps_per_iter
     );
     let mut d = x_native.clone();
     d.axpy(-1.0, &x_e);

@@ -1,17 +1,23 @@
 //! Solver benchmark: CGNR vs BiCGStab on the even-odd preconditioned
 //! system, across precisions — f32 (paper hot path), mixed-precision
-//! iterative refinement (f64 outer / f32 inner), and f64 reference.
+//! iterative refinement (f64 outer / f32 inner), f64 reference — plus
+//! the fused thread-parallel pipeline vs the unfused reference on 8⁴
+//! (sweeps/iteration, effective bandwidth, and thread scaling).
 //!
-//! Besides the human-readable table, the bench emits a JSON report with
-//! per-precision iteration counts and residual histories (default
-//! `solver_bench.json`, override with `LQCD_BENCH_JSON=path` or disable
-//! with `LQCD_BENCH_JSON=-`) so future PRs can track the f32 / mixed /
-//! f64 trade-off quantitatively.
+//! Besides the human-readable tables, the bench emits a JSON report
+//! with per-run iteration counts, residual histories, sweeps/iteration
+//! and effective bandwidth (default `solver_bench.json`, override with
+//! `LQCD_BENCH_JSON=path` or disable with `LQCD_BENCH_JSON=-`) so the
+//! perf trajectory of the fused-vs-unfused gain is tracked across PRs.
+//!
+//! `cargo bench --bench solver -- --smoke` (or `LQCD_BENCH_SMOKE=1`)
+//! runs a seconds-scale variant for CI: same code paths, smaller
+//! lattice and iteration caps.
 
 mod common;
 
-use lqcd::coordinator::operator::NativeMdagM;
-use lqcd::coordinator::operator::{LinearOperator, NativeMeo};
+use lqcd::coordinator::operator::{LinearOperator, NativeMdagM, NativeMeo, UnfusedMdagM};
+use lqcd::coordinator::{BarrierKind, Team};
 use lqcd::field::{FermionField, GaugeField};
 use lqcd::lattice::{Geometry, LatticeDims, Tiling};
 use lqcd::solver::{self, InnerAlgorithm};
@@ -21,14 +27,21 @@ use lqcd::util::timer::Stopwatch;
 
 /// One benchmark row headed for the JSON report.
 struct Run {
-    name: &'static str,
+    name: String,
     precision: &'static str,
     /// relative-residual target this run solved to
     tol: f64,
+    /// worker-team threads (1 = serial)
+    threads: usize,
     iterations: usize,
     inner_iterations: usize,
     seconds: f64,
     gflops: f64,
+    /// full-field memory sweeps per iteration
+    sweeps_per_iter: f64,
+    /// bytes one iteration streams through memory (model, see
+    /// [`cg_iter_bytes`])
+    bytes_per_iter: u64,
     true_residual: f64,
     history: Vec<f64>,
 }
@@ -48,6 +61,15 @@ fn json_escape_history(h: &[f64]) -> String {
     format!("[{}]", items.join(", "))
 }
 
+/// Effective streamed bandwidth of a run, GB/s.
+fn eff_bw_gbs(r: &Run) -> f64 {
+    if r.seconds > 0.0 {
+        r.bytes_per_iter as f64 * r.iterations as f64 / r.seconds / 1e9
+    } else {
+        0.0
+    }
+}
+
 fn emit_json(dims: &str, kappa: f64, runs: &[Run]) {
     let path = std::env::var("LQCD_BENCH_JSON")
         .unwrap_or_else(|_| "solver_bench.json".to_string());
@@ -58,17 +80,23 @@ fn emit_json(dims: &str, kappa: f64, runs: &[Run]) {
     for r in runs {
         entries.push(format!(
             "    {{\n      \"solver\": \"{}\",\n      \"precision\": \"{}\",\n      \
-             \"tol\": {:.1e},\n      \
+             \"tol\": {:.1e},\n      \"threads\": {},\n      \
              \"iterations\": {},\n      \"inner_iterations\": {},\n      \
              \"seconds\": {:.4},\n      \"gflops\": {:.3},\n      \
+             \"sweeps_per_iter\": {:.1},\n      \"bytes_per_iter\": {},\n      \
+             \"eff_bw_gbs\": {:.3},\n      \
              \"true_residual\": {},\n      \"residual_history\": {}\n    }}",
             r.name,
             r.precision,
             r.tol,
+            r.threads,
             r.iterations,
             r.inner_iterations,
             r.seconds,
             r.gflops,
+            r.sweeps_per_iter,
+            r.bytes_per_iter,
+            eff_bw_gbs(r),
             json_f64(r.true_residual),
             json_escape_history(&r.history),
         ));
@@ -84,9 +112,40 @@ fn emit_json(dims: &str, kappa: f64, runs: &[Run]) {
     }
 }
 
+/// Bytes one CGNR iteration streams through memory (model).
+///
+/// The normal operator apply is 4 hopping passes; each streams the
+/// source field in, the destination field out, and the 8 gauge blocks
+/// (4 directions x 2 parities). The fused pipeline adds the tail reads
+/// (`b` of the xpay tail, twice) and the dot-capture re-read of `p`
+/// inside the apply, then two BLAS passes (combined x/r update: 4 reads
+/// + 2 writes; p xpay: 2 reads + 1 write). The unfused reference
+/// ([`UnfusedMdagM`], the pre-fusion pipeline) runs the same 4 hopping
+/// passes plus two in-place gamma5 passes, two 3-stream xpay tails, and
+/// the dot / axpy / axpy / norm² / xpay chain as separate passes.
+fn cg_iter_bytes(geom: &Geometry, elem_bytes: usize, fused: bool) -> u64 {
+    let layout = lqcd::lattice::EoLayout::new(geom);
+    let f = (layout.spinor_len() * elem_bytes) as u64; // one spinor field
+    let g = (8 * layout.gauge_len() * elem_bytes) as u64; // all gauge blocks
+    let hop4 = 4 * (2 * f + g);
+    if fused {
+        // apply(+tails +capture): hop4 + 2 tail reads + capture read of p
+        // update: x,r,p,ap read + x,r write ; xpay: p,r read + p write
+        hop4 + 3 * f + 6 * f + 3 * f
+    } else {
+        // apply: hop4 + 2 gamma5 (2f each) + 2 xpay tails (3f each)
+        // dot(2f) + axpy(3f) + axpy(3f) + norm2(f) + xpay(3f)
+        hop4 + 4 * f + 6 * f + 12 * f
+    }
+}
+
+
 fn main() {
     let opts = common::opts(1, 1);
-    let dims = if opts.quick {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("LQCD_BENCH_SMOKE").is_ok();
+    let quick = opts.quick || smoke;
+    let dims = if quick {
         LatticeDims::new(8, 8, 4, 4).unwrap()
     } else {
         LatticeDims::new(8, 8, 8, 16).unwrap()
@@ -100,6 +159,7 @@ fn main() {
     let b32 = b64.to_precision::<f32>();
     let kappa = 0.13f64;
     let tol = 1e-8;
+    let maxiter = if smoke { 60 } else { 1000 };
     let mut runs: Vec<Run> = Vec::new();
 
     let mut table = Table::new(
@@ -112,7 +172,7 @@ fn main() {
         let mut op = NativeMeo::new(&geom, u32f.clone(), kappa as f32);
         let mut x = FermionField::<f32>::zeros(&geom);
         let sw = Stopwatch::start();
-        let stats = solver::bicgstab(&mut op, &mut x, &b32, tol, 1000);
+        let stats = solver::bicgstab(&mut op, &mut x, &b32, tol, maxiter);
         let secs = sw.secs();
         let resid = solver::residual::operator_residual(&mut op, &x, &b32);
         table.row(vec![
@@ -123,17 +183,20 @@ fn main() {
             format!("{secs:.2}"),
             format!("{resid:.2e}"),
         ]);
-        if !stats.converged {
+        if !stats.converged && !smoke {
             eprintln!("warning: f32 bicgstab stalled at {:.2e}", stats.rel_residual);
         }
         runs.push(Run {
-            name: "bicgstab",
+            name: "bicgstab".into(),
             precision: "f32",
             tol,
+            threads: 1,
             iterations: stats.iterations,
             inner_iterations: 0,
             seconds: secs,
             gflops: stats.flops as f64 / secs / 1e9,
+            sweeps_per_iter: stats.sweeps_per_iter,
+            bytes_per_iter: 0,
             true_residual: resid,
             history: stats.history,
         });
@@ -149,7 +212,7 @@ fn main() {
         mbp.gamma5();
         let mut x = FermionField::<f32>::zeros(&geom);
         let sw = Stopwatch::start();
-        let stats = solver::cg(&mut op, &mut x, &mbp, tol, 1000);
+        let stats = solver::cg(&mut op, &mut x, &mbp, tol, maxiter);
         let secs = sw.secs();
         let resid = solver::residual::operator_residual(&mut op, &x, &mbp);
         table.row(vec![
@@ -160,17 +223,20 @@ fn main() {
             format!("{secs:.2}"),
             format!("{resid:.2e}"),
         ]);
-        if !stats.converged {
+        if !stats.converged && !smoke {
             eprintln!("warning: f32 cgnr stalled at {:.2e}", stats.rel_residual);
         }
         runs.push(Run {
-            name: "cgnr",
+            name: "cgnr".into(),
             precision: "f32",
             tol,
+            threads: 1,
             iterations: stats.iterations,
             inner_iterations: 0,
             seconds: secs,
             gflops: stats.flops as f64 / secs / 1e9,
+            sweeps_per_iter: stats.sweeps_per_iter,
+            bytes_per_iter: cg_iter_bytes(&geom, 4, false),
             true_residual: resid,
             history: stats.history,
         });
@@ -184,7 +250,7 @@ fn main() {
         let sw = Stopwatch::start();
         let stats = solver::mixed_refinement(
             &mut outer, &mut inner, &mut x, &b64,
-            1e-12, 40, 1e-4, 1000, InnerAlgorithm::BiCgStab,
+            1e-12, 40, 1e-4, maxiter, InnerAlgorithm::BiCgStab,
         );
         let secs = sw.secs();
         let resid = solver::residual::operator_residual(&mut outer, &x, &b64);
@@ -196,15 +262,18 @@ fn main() {
             format!("{secs:.2}"),
             format!("{resid:.2e}"),
         ]);
-        assert!(stats.converged);
+        assert!(stats.converged || smoke);
         runs.push(Run {
-            name: "bicgstab+refine",
+            name: "bicgstab+refine".into(),
             precision: "mixed",
             tol: 1e-12,
+            threads: 1,
             iterations: stats.outer_iterations,
             inner_iterations: stats.inner_iterations,
             seconds: secs,
             gflops: stats.flops as f64 / secs / 1e9,
+            sweeps_per_iter: 0.0,
+            bytes_per_iter: 0,
             true_residual: resid,
             history: stats.history,
         });
@@ -215,7 +284,7 @@ fn main() {
         let mut op = NativeMeo::new(&geom, u64f.clone(), kappa);
         let mut x = FermionField::<f64>::zeros(&geom);
         let sw = Stopwatch::start();
-        let stats = solver::bicgstab(&mut op, &mut x, &b64, 1e-12, 2000);
+        let stats = solver::bicgstab(&mut op, &mut x, &b64, 1e-12, 2 * maxiter);
         let secs = sw.secs();
         let resid = solver::residual::operator_residual(&mut op, &x, &b64);
         table.row(vec![
@@ -226,20 +295,149 @@ fn main() {
             format!("{secs:.2}"),
             format!("{resid:.2e}"),
         ]);
-        assert!(stats.converged);
+        assert!(stats.converged || smoke);
         runs.push(Run {
-            name: "bicgstab",
+            name: "bicgstab".into(),
             precision: "f64",
             tol: 1e-12,
+            threads: 1,
             iterations: stats.iterations,
             inner_iterations: 0,
             seconds: secs,
             gflops: stats.flops as f64 / secs / 1e9,
+            sweeps_per_iter: stats.sweeps_per_iter,
+            bytes_per_iter: 0,
             true_residual: resid,
             history: stats.history,
         });
     }
 
     println!("{}", table.render());
+
+    // ---- fused thread-parallel pipeline vs unfused reference on 8⁴ ----
+    //
+    // Same system solved four ways: the generic unfused CG (the 6
+    // sweeps/iteration reference) and the fused pipeline (3 fused
+    // sweeps/iteration) on worker teams of 1, 2 and 4 threads. The
+    // residual histories must be bitwise identical across all four —
+    // the fused pipeline changes memory traffic and parallelism, never
+    // arithmetic.
+    let fdims = if smoke {
+        LatticeDims::new(4, 4, 4, 4).unwrap()
+    } else {
+        LatticeDims::new(8, 8, 8, 8).unwrap()
+    };
+    // 4^4 only tiles as 2x2 (xh = 2); the acceptance lattice 8^4 uses
+    // the paper's 4x4
+    let ftiling = if smoke {
+        Tiling::new(2, 2).unwrap()
+    } else {
+        Tiling::new(4, 4).unwrap()
+    };
+    let fgeom = Geometry::single_rank(fdims, ftiling).unwrap();
+    let mut frng = Rng::seeded(4242);
+    let fu: GaugeField<f32> =
+        GaugeField::<f64>::random(&fgeom, &mut frng).to_precision();
+    let fb: FermionField<f32> =
+        FermionField::<f64>::gaussian(&fgeom, &mut frng).to_precision();
+    let ftol = 1e-5;
+    let fmaxiter = if smoke { 40 } else { 500 };
+    let fkappa = 0.13f32;
+
+    // CGNR right-hand side: Mdag b
+    let mut mbp = FermionField::<f32>::zeros(&fgeom);
+    {
+        let mut op = NativeMdagM::new(&fgeom, fu.clone(), fkappa);
+        let mut bp = fb.clone();
+        bp.gamma5();
+        op.meo().apply(&mut mbp, &bp);
+        mbp.gamma5();
+    }
+
+    let mut ftable = Table::new(
+        &format!(
+            "Fused thread-parallel CG vs unfused on {fdims} (f32, tol = {ftol:.0e})"
+        ),
+        &["pipeline", "threads", "iters", "sweeps/iter", "seconds", "speedup", "eff GB/s"],
+    );
+
+    // unfused single-thread reference (the pre-fusion pipeline)
+    let (ref_secs, ref_history) = {
+        let mut op = UnfusedMdagM::new(&fgeom, fu.clone(), fkappa);
+        let mut x = FermionField::<f32>::zeros(&fgeom);
+        let sw = Stopwatch::start();
+        let stats = solver::cg(&mut op, &mut x, &mbp, ftol, fmaxiter);
+        let secs = sw.secs();
+        let resid = solver::residual::operator_residual(&mut op, &x, &mbp);
+        let run = Run {
+            name: "cgnr-unfused".into(),
+            precision: "f32",
+            tol: ftol,
+            threads: 1,
+            iterations: stats.iterations,
+            inner_iterations: 0,
+            seconds: secs,
+            gflops: stats.flops as f64 / secs / 1e9,
+            sweeps_per_iter: stats.sweeps_per_iter,
+            bytes_per_iter: cg_iter_bytes(&fgeom, 4, false),
+            true_residual: resid,
+            history: stats.history.clone(),
+        };
+        ftable.row(vec![
+            "unfused".into(),
+            "1".into(),
+            stats.iterations.to_string(),
+            format!("{:.0}", stats.sweeps_per_iter),
+            format!("{secs:.3}"),
+            "1.00x".into(),
+            format!("{:.2}", eff_bw_gbs(&run)),
+        ]);
+        runs.push(run);
+        (secs, stats.history)
+    };
+
+    for threads in [1usize, 2, 4] {
+        let mut op = NativeMdagM::new(&fgeom, fu.clone(), fkappa);
+        let mut team = Team::new(threads, BarrierKind::Sleep);
+        let mut x = FermionField::<f32>::zeros(&fgeom);
+        let sw = Stopwatch::start();
+        let stats = solver::fused::cg(&mut op, &mut team, &mut x, &mbp, ftol, fmaxiter);
+        let secs = sw.secs();
+        let resid = solver::residual::operator_residual(&mut op, &x, &mbp);
+        assert_eq!(
+            stats.history, ref_history,
+            "fused({threads}t) residual history diverged from the unfused reference"
+        );
+        let run = Run {
+            name: "cgnr-fused".into(),
+            precision: "f32",
+            tol: ftol,
+            threads,
+            iterations: stats.iterations,
+            inner_iterations: 0,
+            seconds: secs,
+            gflops: stats.flops as f64 / secs / 1e9,
+            sweeps_per_iter: stats.sweeps_per_iter,
+            bytes_per_iter: cg_iter_bytes(&fgeom, 4, true),
+            true_residual: resid,
+            history: stats.history.clone(),
+        };
+        ftable.row(vec![
+            "fused".into(),
+            threads.to_string(),
+            stats.iterations.to_string(),
+            format!("{:.0}", stats.sweeps_per_iter),
+            format!("{secs:.3}"),
+            format!("{:.2}x", ref_secs / secs),
+            format!("{:.2}", eff_bw_gbs(&run)),
+        ]);
+        runs.push(run);
+    }
+
+    println!("{}", ftable.render());
+    println!(
+        "fused pipeline: 3 full-field sweeps/iteration (vs 6 unfused); residual \
+         histories bitwise identical across pipelines and thread counts"
+    );
     emit_json(&dims.to_string(), kappa, &runs);
 }

@@ -27,6 +27,10 @@ pub struct SolverConfig {
     pub inner_tol: f64,
     /// Mixed precision: cap on outer refinement steps.
     pub max_outer: usize,
+    /// Worker-team threads the fused solver pipeline iterates on
+    /// (1 = serial fused sweeps; residual histories are identical at
+    /// any value).
+    pub threads: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -64,6 +68,7 @@ impl Default for RunConfig {
                 precision: "f32".into(),
                 inner_tol: 1e-4,
                 max_outer: 40,
+                threads: 1,
             },
             parallel: ParallelConfig {
                 threads_per_rank: 4,
@@ -185,6 +190,16 @@ impl RunConfig {
                     }
                     n as usize
                 },
+                threads: {
+                    let n = doc.int_or("solver.threads", defaults.solver.threads as i64);
+                    if n <= 0 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!("solver.threads must be positive (got {n})"),
+                        });
+                    }
+                    n as usize
+                },
             },
             parallel: ParallelConfig {
                 threads_per_rank: doc.int_or(
@@ -215,13 +230,16 @@ mod tests {
     #[test]
     fn precision_keys_parse_and_validate() {
         let doc = Document::parse(
-            "[solver]\nprecision = \"mixed\"\ninner_tol = 1e-5\nmax_outer = 25",
+            "[solver]\nprecision = \"mixed\"\ninner_tol = 1e-5\nmax_outer = 25\nthreads = 4",
         )
         .unwrap();
         let c = RunConfig::from_document(&doc).unwrap();
         assert_eq!(c.solver.precision, "mixed");
         assert!((c.solver.inner_tol - 1e-5).abs() < 1e-18);
         assert_eq!(c.solver.max_outer, 25);
+        assert_eq!(c.solver.threads, 4);
+        let doc = Document::parse("[solver]\nthreads = 0").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "zero threads must fail");
 
         let doc = Document::parse("[solver]\nprecision = \"f16\"").unwrap();
         assert!(RunConfig::from_document(&doc).is_err(), "bad precision must fail");

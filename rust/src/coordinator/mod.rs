@@ -9,4 +9,4 @@ pub mod team;
 
 pub use driver::{DistHopping, Eo2Schedule};
 pub use profiler::{Phase, Profiler, Report};
-pub use team::{BarrierKind, Team};
+pub use team::{BarrierKind, Team, TeamBarrier};

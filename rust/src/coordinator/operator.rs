@@ -11,13 +11,13 @@
 
 use crate::algebra::Real;
 use crate::comm::{Comm, CommScalar};
-use crate::dslash::{full, HoppingEo};
+use crate::dslash::{full, DotCapture, HoppingEo, StoreTail};
 use crate::field::{FermionField, GaugeField};
-use crate::lattice::{Geometry, Parity};
+use crate::lattice::{Geometry, Parity, SC2};
 
 use super::driver::DistHopping;
 use super::profiler::Profiler;
-use super::team::Team;
+use super::team::{chunk_range, SendPtr, Team, TeamBarrier};
 
 /// An operator on even-parity fermion fields of precision `R`.
 pub trait LinearOperator<R: Real = f32> {
@@ -69,7 +69,24 @@ impl<R: Real> NativeMeo<R> {
 
 impl<R: Real> LinearOperator<R> for NativeMeo<R> {
     fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>) {
-        full::meo(&self.hop, out, &mut self.tmp, &self.u, psi, self.kappa);
+        // M-hat = 1 - kappa^2 H_eo H_oe with the xpay tail fused into
+        // the second hopping's store (bit-identical to `full::meo`, one
+        // fewer full-field sweep).
+        self.hop.apply(&mut self.tmp, &self.u, psi, Parity::Odd);
+        let ntiles = self.hop.layout.ntiles();
+        self.hop.apply_tiles_fused(
+            &mut out.data,
+            &self.u,
+            &self.tmp.data,
+            Parity::Even,
+            0,
+            ntiles,
+            StoreTail::Xpay {
+                a: -(self.kappa * self.kappa),
+                b: &psi.data,
+            },
+            None,
+        );
     }
 
     fn flops_per_apply(&self) -> u64 {
@@ -99,18 +116,254 @@ impl<R: Real> NativeMdagM<R> {
 
 impl<R: Real> LinearOperator<R> for NativeMdagM<R> {
     fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>) {
-        // mid = M psi ; out = g5 M g5 mid
-        let mut m_psi = std::mem::replace(&mut self.mid, FermionField::placeholder());
-        self.inner.apply(&mut m_psi, psi);
-        m_psi.gamma5();
-        self.inner.apply(out, &m_psi);
-        out.gamma5();
-        // undo gamma5 on mid before stashing it back (content irrelevant)
-        self.mid = m_psi;
+        // M^dag M = (g5 M g5)(M): both gamma5 passes and both xpay
+        // tails are fused into the even-parity hopping stores, so the
+        // whole normal apply is four kernel sweeps and nothing else.
+        // Bit-identical to the unfused apply/gamma5 sequence.
+        let NativeMdagM { inner, mid } = self;
+        let a = -(inner.kappa * inner.kappa);
+        let ntiles = inner.hop.layout.ntiles();
+        // mid = g5 (M psi)
+        inner.hop.apply(&mut inner.tmp, &inner.u, psi, Parity::Odd);
+        inner.hop.apply_tiles_fused(
+            &mut mid.data,
+            &inner.u,
+            &inner.tmp.data,
+            Parity::Even,
+            0,
+            ntiles,
+            StoreTail::Gamma5Xpay { a, b: &psi.data },
+            None,
+        );
+        // out = g5 (M mid)
+        inner.hop.apply(&mut inner.tmp, &inner.u, mid, Parity::Odd);
+        inner.hop.apply_tiles_fused(
+            &mut out.data,
+            &inner.u,
+            &inner.tmp.data,
+            Parity::Even,
+            0,
+            ntiles,
+            StoreTail::Gamma5Xpay { a, b: &mid.data },
+            None,
+        );
     }
 
     fn flops_per_apply(&self) -> u64 {
         2 * self.inner.flops_per_apply()
+    }
+}
+
+/// The pre-fusion normal operator: `full::meo` with separate xpay
+/// tails followed by separate in-place gamma5 passes — exactly the
+/// pipeline [`NativeMdagM`]'s fused store tails replace. Kept as the
+/// reference baseline for the equivalence tests and the solver bench:
+/// bit-identical results to [`NativeMdagM`], more memory sweeps.
+pub struct UnfusedMdagM<R: Real = f32> {
+    hop: HoppingEo,
+    u: GaugeField<R>,
+    kappa: R,
+    tmp: FermionField<R>,
+    mid: FermionField<R>,
+    half_volume: usize,
+}
+
+impl<R: Real> UnfusedMdagM<R> {
+    pub fn new(geom: &Geometry, u: GaugeField<R>, kappa: R) -> UnfusedMdagM<R> {
+        UnfusedMdagM {
+            hop: HoppingEo::new(geom),
+            u,
+            kappa,
+            tmp: FermionField::zeros(geom),
+            mid: FermionField::zeros(geom),
+            half_volume: geom.local.half_volume(),
+        }
+    }
+}
+
+impl<R: Real> LinearOperator<R> for UnfusedMdagM<R> {
+    fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>) {
+        full::meo(&self.hop, &mut self.mid, &mut self.tmp, &self.u, psi, self.kappa);
+        self.mid.gamma5();
+        full::meo(&self.hop, out, &mut self.tmp, &self.u, &self.mid, self.kappa);
+        out.gamma5();
+    }
+
+    fn flops_per_apply(&self) -> u64 {
+        2 * crate::dslash::flops::meo_flops(self.half_volume)
+    }
+}
+
+/// Raw, team-shareable view of a native operator: everything a worker
+/// thread needs to run the operator's tile-sharded kernel phases inside
+/// one [`Team`] parallel region. Obtained via [`FusedSolvable`]; the
+/// view holds the operator mutably borrowed, so no other access can
+/// race the scratch fields it exposes as raw pointers.
+pub struct FusedView<'a, R: Real> {
+    hop: &'a HoppingEo,
+    u: &'a GaugeField<R>,
+    /// the fused xpay-tail coefficient, -kappa²
+    a: R,
+    /// odd-parity hopping scratch, written tile-sharded
+    tmp: SendPtr<R>,
+    /// even-parity scratch for the normal operator's mid field
+    /// (`None` selects the plain M-hat, `Some` the M^dag M pipeline)
+    mid: Option<SendPtr<R>>,
+    field_len: usize,
+    ntiles: usize,
+    vlen: usize,
+}
+
+impl<R: Real> FusedView<'_, R> {
+    pub fn ntiles(&self) -> usize {
+        self.ntiles
+    }
+
+    pub fn vals_per_tile(&self) -> usize {
+        SC2 * self.vlen
+    }
+
+    pub fn vlen(&self) -> usize {
+        self.vlen
+    }
+
+    pub fn field_len(&self) -> usize {
+        self.field_len
+    }
+
+    /// Apply `out = A psi` from inside a team parallel region, with an
+    /// optional fused dot capture `dot = (with, partials)` recording
+    /// per-tile `[Re⟨with, out⟩, Im⟨with, out⟩, |out|²]`.
+    ///
+    /// Internal kernel phases synchronize on `bar`; tiles are sharded
+    /// by `tid` with [`chunk_range`], matching the ownership the BLAS-1
+    /// phases of the fused solvers use.
+    ///
+    /// # Safety
+    ///
+    /// Every thread of an `n`-thread region must call this exactly once
+    /// with identical arguments (`tid` excepted). `out`, `psi` and
+    /// `dot.0` must point to fields of this operator's layout
+    /// (`field_len` values; `partials` to `ntiles` entries), none of
+    /// them aliasing each other or the view's scratch. `out` and the
+    /// partials are written tile-sharded; the caller must pass another
+    /// barrier before reading them.
+    pub unsafe fn apply_team(
+        &self,
+        tid: usize,
+        n: usize,
+        bar: &TeamBarrier,
+        out: SendPtr<R>,
+        psi: *const R,
+        dot: Option<(*const R, SendPtr<[f64; 3]>)>,
+    ) {
+        let vpt = self.vals_per_tile();
+        let (tb, te) = chunk_range(self.ntiles, tid, n);
+        let len = self.field_len;
+        let psi_s = std::slice::from_raw_parts(psi, len);
+        let capture = |dot: Option<(*const R, SendPtr<[f64; 3]>)>| {
+            // SAFETY: same contract as this fn — `with` points to a full
+            // field, the partials shard [tb, te) is owned by this thread
+            dot.map(|(w, p)| unsafe {
+                DotCapture {
+                    with: std::slice::from_raw_parts(w, len),
+                    partials: p.slice_mut(tb, te - tb),
+                }
+            })
+        };
+
+        // phase 1: tmp = H_oe psi
+        {
+            let tmp_tiles = self.tmp.slice_mut(tb * vpt, (te - tb) * vpt);
+            self.hop.apply_tiles_fused(
+                tmp_tiles, self.u, psi_s, Parity::Odd, tb, te,
+                StoreTail::Assign, None,
+            );
+        }
+        bar.wait();
+        match self.mid {
+            None => {
+                // phase 2: out = psi - kappa² H_eo tmp (+ capture)
+                let tmp_s = std::slice::from_raw_parts(self.tmp.0 as *const R, len);
+                let out_tiles = out.slice_mut(tb * vpt, (te - tb) * vpt);
+                self.hop.apply_tiles_fused(
+                    out_tiles, self.u, tmp_s, Parity::Even, tb, te,
+                    StoreTail::Xpay { a: self.a, b: psi_s },
+                    capture(dot),
+                );
+            }
+            Some(mid) => {
+                // phase 2: mid = g5 (psi - kappa² H_eo tmp)
+                {
+                    let tmp_s =
+                        std::slice::from_raw_parts(self.tmp.0 as *const R, len);
+                    let mid_tiles = mid.slice_mut(tb * vpt, (te - tb) * vpt);
+                    self.hop.apply_tiles_fused(
+                        mid_tiles, self.u, tmp_s, Parity::Even, tb, te,
+                        StoreTail::Gamma5Xpay { a: self.a, b: psi_s },
+                        None,
+                    );
+                }
+                bar.wait();
+                let mid_s = std::slice::from_raw_parts(mid.0 as *const R, len);
+                // phase 3: tmp = H_oe mid
+                {
+                    let tmp_tiles = self.tmp.slice_mut(tb * vpt, (te - tb) * vpt);
+                    self.hop.apply_tiles_fused(
+                        tmp_tiles, self.u, mid_s, Parity::Odd, tb, te,
+                        StoreTail::Assign, None,
+                    );
+                }
+                bar.wait();
+                // phase 4: out = g5 (mid - kappa² H_eo tmp) (+ capture)
+                let tmp_s = std::slice::from_raw_parts(self.tmp.0 as *const R, len);
+                let out_tiles = out.slice_mut(tb * vpt, (te - tb) * vpt);
+                self.hop.apply_tiles_fused(
+                    out_tiles, self.u, tmp_s, Parity::Even, tb, te,
+                    StoreTail::Gamma5Xpay { a: self.a, b: mid_s },
+                    capture(dot),
+                );
+            }
+        }
+    }
+}
+
+/// A native single-rank operator the fused solver pipeline can run
+/// tile-sharded on the worker team ([`crate::solver::fused`]).
+pub trait FusedSolvable<R: Real>: LinearOperator<R> {
+    /// Borrow the raw view used inside team parallel regions. The
+    /// operator stays mutably borrowed while the view lives.
+    fn fused_view(&mut self) -> FusedView<'_, R>;
+}
+
+impl<R: Real> FusedSolvable<R> for NativeMeo<R> {
+    fn fused_view(&mut self) -> FusedView<'_, R> {
+        FusedView {
+            a: -(self.kappa * self.kappa),
+            tmp: SendPtr(self.tmp.data.as_mut_ptr()),
+            mid: None,
+            field_len: self.tmp.data.len(),
+            ntiles: self.hop.layout.ntiles(),
+            vlen: self.hop.layout.vlen(),
+            hop: &self.hop,
+            u: &self.u,
+        }
+    }
+}
+
+impl<R: Real> FusedSolvable<R> for NativeMdagM<R> {
+    fn fused_view(&mut self) -> FusedView<'_, R> {
+        let NativeMdagM { inner, mid } = self;
+        FusedView {
+            a: -(inner.kappa * inner.kappa),
+            tmp: SendPtr(inner.tmp.data.as_mut_ptr()),
+            mid: Some(SendPtr(mid.data.as_mut_ptr())),
+            field_len: mid.data.len(),
+            ntiles: inner.hop.layout.ntiles(),
+            vlen: inner.hop.layout.vlen(),
+            hop: &inner.hop,
+            u: &inner.u,
+        }
     }
 }
 

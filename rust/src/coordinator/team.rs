@@ -75,6 +75,22 @@ impl Team {
         self.shared.kind
     }
 
+    /// Run a generic job `f(tid, barrier)` on all threads: the team
+    /// analog of one OpenMP parallel region with in-region barriers.
+    ///
+    /// Unlike the dslash phases driven through [`Team::parallel`] (one
+    /// region per phase), a `run` job can synchronize *inside* the
+    /// region via the supplied [`TeamBarrier`] — the fused solver
+    /// pipeline uses this to execute a whole CG/BiCGStab iteration
+    /// (kernel phases, BLAS-1 sweeps, reductions) in a single region.
+    pub fn run<F>(&mut self, f: F)
+    where
+        F: Fn(usize, &TeamBarrier) + Send + Sync,
+    {
+        let bar = TeamBarrier::new(self.n, self.shared.kind);
+        self.parallel(|tid| f(tid, &bar));
+    }
+
     /// Run `f(tid)` on all threads (caller participates as tid 0) and
     /// return once every thread finished its share.
     pub fn parallel<F>(&mut self, f: F)
@@ -164,6 +180,55 @@ impl Drop for Team {
         self.shared.job_cv.notify_all();
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+    }
+}
+
+/// Reusable in-region barrier for [`Team::run`] jobs (sense-reversing).
+///
+/// All `n` threads of the region must call [`TeamBarrier::wait`]; the
+/// call returns once every thread has arrived. The wait flavor follows
+/// the team's [`BarrierKind`]: `Spin` busy-waits (the FLIB hardware
+/// barrier analog), `Sleep` yields (safe when the team is oversubscribed
+/// on fewer cores). The release does an Acquire/Release handoff, so
+/// writes made before `wait` by any thread are visible to every thread
+/// after it returns.
+pub struct TeamBarrier {
+    n: usize,
+    kind: BarrierKind,
+    /// threads arrived in the current generation
+    count: AtomicUsize,
+    /// generation counter (flips the "sense" each time the barrier opens)
+    generation: AtomicU64,
+}
+
+impl TeamBarrier {
+    pub fn new(n: usize, kind: BarrierKind) -> TeamBarrier {
+        TeamBarrier {
+            n,
+            kind,
+            count: AtomicUsize::new(0),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    /// Block until all `n` threads of the region have arrived.
+    pub fn wait(&self) {
+        if self.n == 1 {
+            return;
+        }
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+            // last arrival: reset and open the next generation
+            self.count.store(0, Ordering::Release);
+            self.generation.fetch_add(1, Ordering::AcqRel);
+        } else {
+            while self.generation.load(Ordering::Acquire) == gen {
+                match self.kind {
+                    BarrierKind::Spin => std::hint::spin_loop(),
+                    BarrierKind::Sleep => std::thread::yield_now(),
+                }
+            }
         }
     }
 }
@@ -267,6 +332,58 @@ mod tests {
             sum.fetch_add(data[b..e].iter().sum::<u64>(), Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn run_job_with_in_region_barrier() {
+        // phase 1 writes per-thread slots, barrier, phase 2 reads ALL
+        // slots: any missed synchronization shows up as a zero sum.
+        for kind in [BarrierKind::Sleep, BarrierKind::Spin] {
+            let n = 4;
+            let mut team = Team::new(n, kind);
+            let mut slots = vec![0u64; n];
+            let ptr = SendPtr(slots.as_mut_ptr());
+            let sums = AtomicU64::new(0);
+            team.run(|tid, bar| {
+                unsafe { ptr.slice_mut(tid, 1)[0] = (tid as u64) + 1 };
+                bar.wait();
+                // after the barrier every slot is published; read shared
+                let total: u64 = (0..n).map(|i| unsafe { *ptr.0.add(i) }).sum();
+                sums.fetch_add(total, Ordering::Relaxed);
+            });
+            // every thread saw the full 1+2+3+4
+            assert_eq!(sums.load(Ordering::Relaxed), 10 * n as u64, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn barrier_reusable_across_many_phases() {
+        for kind in [BarrierKind::Sleep, BarrierKind::Spin] {
+            let n = 3;
+            let mut team = Team::new(n, kind);
+            let counter = AtomicU64::new(0);
+            team.run(|_tid, bar| {
+                for phase in 0..50u64 {
+                    // all threads must agree on the phase count so far
+                    assert_eq!(
+                        counter.load(Ordering::SeqCst) % (n as u64),
+                        0,
+                        "phase {phase} entered before the last one drained"
+                    );
+                    bar.wait();
+                    counter.fetch_add(1, Ordering::SeqCst);
+                    bar.wait();
+                }
+            });
+            assert_eq!(counter.load(Ordering::SeqCst), 50 * n as u64, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn single_thread_barrier_is_noop() {
+        let bar = TeamBarrier::new(1, BarrierKind::Spin);
+        bar.wait();
+        bar.wait();
     }
 
     #[test]

@@ -19,10 +19,41 @@
 //! oracle comparisons and the mixed-precision outer operator.
 
 use crate::algebra::{Coef, ProjEntry, Real, PROJ};
-use crate::field::{FermionField, GaugeField};
+use crate::field::{blas, FermionField, GaugeField};
 use crate::lattice::{EoLayout, Geometry, Parity, CC2, SC2};
 
 use super::shift::{LanePlan, ShiftPlans};
+
+/// How the kernel's accumulated tile is stored to the output: the tail
+/// of the even-odd operator fused into the store instead of running as
+/// a separate full-field pass afterwards.
+///
+/// `b` is the full-field data slice of the same layout as the output
+/// (indexed by absolute tile). The fused expressions evaluate exactly
+/// like their two-pass references — `Xpay` matches `apply` followed by
+/// `FermionField::xpay`, `Gamma5Xpay` additionally matches a trailing
+/// `gamma5` — so fused results are bit-identical at any precision.
+#[derive(Clone, Copy)]
+pub enum StoreTail<'a, R: Real> {
+    /// out = acc (the plain hopping store)
+    Assign,
+    /// out = a * acc + b (the M-hat `-kappa²` + identity tail)
+    Xpay { a: R, b: &'a [R] },
+    /// out = gamma5 * (a * acc + b) (the normal operator's tail)
+    Gamma5Xpay { a: R, b: &'a [R] },
+}
+
+/// In-kernel dot capture: for each output tile the kernel writes
+/// `partials[tile - tile_begin] = [Re⟨with, out⟩, Im⟨with, out⟩, |out|²]`
+/// (`with` conjugated, canonical [`blas`] grouping) right after the
+/// store, while the freshly written tile is still in registers/L1 —
+/// the solver's `p·Ap`-style reduction costs no extra field sweep.
+pub struct DotCapture<'a, R: Real> {
+    /// full-field data slice, indexed by absolute tile
+    pub with: &'a [R],
+    /// one entry per tile of the applied range
+    pub partials: &'a mut [[f64; 3]],
+}
 
 /// How to treat the local-lattice boundary in each direction.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,28 +120,58 @@ impl HoppingEo {
         tile_begin: usize,
         tile_end: usize,
     ) {
+        self.apply_tiles_fused(
+            out_tiles,
+            u,
+            &psi.data,
+            p_out,
+            tile_begin,
+            tile_end,
+            StoreTail::Assign,
+            None,
+        );
+    }
+
+    /// [`Self::apply_tiles`] with a fused store tail and optional
+    /// in-kernel dot capture. `psi` is the source field's data slice
+    /// (so team phases can feed scratch written through raw pointers).
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_tiles_fused<R: Real>(
+        &self,
+        out_tiles: &mut [R],
+        u: &GaugeField<R>,
+        psi: &[R],
+        p_out: Parity,
+        tile_begin: usize,
+        tile_end: usize,
+        tail: StoreTail<R>,
+        dot: Option<DotCapture<R>>,
+    ) {
         debug_assert_eq!(
             out_tiles.len(),
             (tile_end - tile_begin) * SC2 * self.layout.vlen()
         );
         match self.layout.vlen() {
-            2 => self.apply_v::<R, 2>(out_tiles, u, psi, p_out, tile_begin, tile_end),
-            4 => self.apply_v::<R, 4>(out_tiles, u, psi, p_out, tile_begin, tile_end),
-            8 => self.apply_v::<R, 8>(out_tiles, u, psi, p_out, tile_begin, tile_end),
-            16 => self.apply_v::<R, 16>(out_tiles, u, psi, p_out, tile_begin, tile_end),
-            32 => self.apply_v::<R, 32>(out_tiles, u, psi, p_out, tile_begin, tile_end),
+            2 => self.apply_v::<R, 2>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
+            4 => self.apply_v::<R, 4>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
+            8 => self.apply_v::<R, 8>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
+            16 => self.apply_v::<R, 16>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
+            32 => self.apply_v::<R, 32>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
             v => panic!("unsupported VLEN {v} (expected 2/4/8/16/32)"),
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn apply_v<R: Real, const V: usize>(
         &self,
         out_tiles: &mut [R],
         u: &GaugeField<R>,
-        psi: &FermionField<R>,
+        psi: &[R],
         p_out: Parity,
         tile_begin: usize,
         tile_end: usize,
+        tail: StoreTail<R>,
+        mut dot: Option<DotCapture<R>>,
     ) {
         let l = &self.layout;
         debug_assert_eq!(l.vlen(), V);
@@ -137,14 +198,14 @@ impl HoppingEo {
                 let nbr = l.tile_index(t, z, yt, (xt + 1) % nxt);
                 let mask = skip && xt + 1 == nxt;
                 let plan = &self.plans.x_plus[b];
-                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(&psi.data, tile, SC2), tile_slice::<R, V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, tile, SC2), tile_slice::<R, V>(psi, nbr, SC2), plan, mask, SC2);
                 hop_fwd::<R, V>(&mut acc, &mut h, &ps, tile_slice::<R, V>(&u.data[0][p_out.index()], tile, CC2), &PROJ[0][0]);
 
                 // backward: neighbor tile at xt-1; link U_x(x - x^) shifts too
                 let nbr = l.tile_index(t, z, yt, (xt + nxt - 1) % nxt);
                 let mask = skip && xt == 0;
                 let plan = &self.plans.x_minus[b];
-                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(&psi.data, tile, SC2), tile_slice::<R, V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, tile, SC2), tile_slice::<R, V>(psi, nbr, SC2), plan, mask, SC2);
                 shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[0][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[0][p_in.index()], nbr, CC2), plan, false, CC2);
                 hop_bwd::<R, V>(&mut acc, &mut h, &ps, &us, &PROJ[0][1]);
             }
@@ -155,13 +216,13 @@ impl HoppingEo {
                 let nbr = l.tile_index(t, z, (yt + 1) % nyt, xt);
                 let mask = skip && yt + 1 == nyt;
                 let plan = &self.plans.y_plus;
-                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(&psi.data, tile, SC2), tile_slice::<R, V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, tile, SC2), tile_slice::<R, V>(psi, nbr, SC2), plan, mask, SC2);
                 hop_fwd::<R, V>(&mut acc, &mut h, &ps, tile_slice::<R, V>(&u.data[1][p_out.index()], tile, CC2), &PROJ[1][0]);
 
                 let nbr = l.tile_index(t, z, (yt + nyt - 1) % nyt, xt);
                 let mask = skip && yt == 0;
                 let plan = &self.plans.y_minus;
-                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(&psi.data, tile, SC2), tile_slice::<R, V>(&psi.data, nbr, SC2), plan, mask, SC2);
+                shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, tile, SC2), tile_slice::<R, V>(psi, nbr, SC2), plan, mask, SC2);
                 shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[1][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[1][p_in.index()], nbr, CC2), plan, false, CC2);
                 hop_bwd::<R, V>(&mut acc, &mut h, &ps, &us, &PROJ[1][1]);
             }
@@ -171,11 +232,11 @@ impl HoppingEo {
                 let skip = self.wrap[2] == WrapMode::SkipBoundary;
                 if !(skip && z + 1 == nz) {
                     let nbr = l.tile_index(t, (z + 1) % nz, yt, xt);
-                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(&psi.data, nbr, SC2), tile_slice::<R, V>(&u.data[2][p_out.index()], tile, CC2), &PROJ[2][0]);
+                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), tile_slice::<R, V>(&u.data[2][p_out.index()], tile, CC2), &PROJ[2][0]);
                 }
                 if !(skip && z == 0) {
                     let nbr = l.tile_index(t, (z + nz - 1) % nz, yt, xt);
-                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(&psi.data, nbr, SC2), tile_slice::<R, V>(&u.data[2][p_in.index()], nbr, CC2), &PROJ[2][1]);
+                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), tile_slice::<R, V>(&u.data[2][p_in.index()], nbr, CC2), &PROJ[2][1]);
                 }
             }
 
@@ -184,18 +245,43 @@ impl HoppingEo {
                 let skip = self.wrap[3] == WrapMode::SkipBoundary;
                 if !(skip && t + 1 == nt) {
                     let nbr = l.tile_index((t + 1) % nt, z, yt, xt);
-                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(&psi.data, nbr, SC2), tile_slice::<R, V>(&u.data[3][p_out.index()], tile, CC2), &PROJ[3][0]);
+                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), tile_slice::<R, V>(&u.data[3][p_out.index()], tile, CC2), &PROJ[3][0]);
                 }
                 if !(skip && t == 0) {
                     let nbr = l.tile_index((t + nt - 1) % nt, z, yt, xt);
-                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(&psi.data, nbr, SC2), tile_slice::<R, V>(&u.data[3][p_in.index()], nbr, CC2), &PROJ[3][1]);
+                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), tile_slice::<R, V>(&u.data[3][p_in.index()], nbr, CC2), &PROJ[3][1]);
                 }
             }
 
-            // store the accumulated tile
+            // store the accumulated tile, applying the fused tail
             let rel = tile - tile_begin;
             let dst = &mut out_tiles[rel * SC2 * V..(rel + 1) * SC2 * V];
-            dst.copy_from_slice(&acc);
+            match tail {
+                StoreTail::Assign => dst.copy_from_slice(&acc),
+                StoreTail::Xpay { a, b } => {
+                    let bt = tile_slice::<R, V>(b, tile, SC2);
+                    for i in 0..SC2 * V {
+                        dst[i] = a * acc[i] + bt[i];
+                    }
+                }
+                StoreTail::Gamma5Xpay { a, b } => {
+                    let bt = tile_slice::<R, V>(b, tile, SC2);
+                    for c in 0..SC2 {
+                        // component c belongs to spin c / 6; gamma5
+                        // negates spins 2 and 3 (exact, so fusing it
+                        // here bit-matches a trailing gamma5 pass)
+                        let lower = c / 6 >= 2;
+                        for i in c * V..(c + 1) * V {
+                            let v = a * acc[i] + bt[i];
+                            dst[i] = if lower { -v } else { v };
+                        }
+                    }
+                }
+            }
+            if let Some(cap) = dot.as_mut() {
+                let wt = tile_slice::<R, V>(cap.with, tile, SC2);
+                cap.partials[rel] = blas::cdot_norm2_tile(wt, dst, V);
+            }
         }
     }
 }

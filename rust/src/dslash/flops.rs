@@ -42,6 +42,54 @@ pub fn meo_flops(half_volume: usize) -> u64 {
     2 * hopping_block_flops(half_volume) + 2 * 24 * half_volume as u64
 }
 
+// ---- BLAS-1 accounting --------------------------------------------------
+//
+// The solvers charge every axpy/xpay sweep and every dot/norm reduction,
+// not just the operator applies, so the GFlops a `SolveStats` reports is
+// the rate of the whole iteration. `nreal` is the number of *real*
+// components the sweep touches (one parity field = 24 per site, i.e.
+// `FermionField::data.len()`).
+
+/// Real components of a one-parity spinor field over `half_volume` sites.
+pub fn spinor_reals(half_volume: usize) -> u64 {
+    24 * half_volume as u64
+}
+
+/// `x += a y` with a real scalar: one madd per component.
+pub fn axpy_flops(nreal: u64) -> u64 {
+    2 * nreal
+}
+
+/// `x = a x + y` with a real scalar: one madd per component.
+pub fn xpay_flops(nreal: u64) -> u64 {
+    2 * nreal
+}
+
+/// `|x|²`: one madd per component.
+pub fn norm2_flops(nreal: u64) -> u64 {
+    2 * nreal
+}
+
+/// `Re⟨x, y⟩`: one madd per component.
+pub fn dot_re_flops(nreal: u64) -> u64 {
+    2 * nreal
+}
+
+/// `x += a y` with a complex scalar: a complex madd (8 flop) per pair.
+pub fn caxpy_flops(nreal: u64) -> u64 {
+    4 * nreal
+}
+
+/// Complex ⟨x, y⟩: a complex madd per pair.
+pub fn cdot_flops(nreal: u64) -> u64 {
+    4 * nreal
+}
+
+/// `x = a x` with a complex scalar: 6 flop per pair.
+pub fn cscale_flops(nreal: u64) -> u64 {
+    3 * nreal
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,5 +107,21 @@ mod tests {
     fn block_flops_scale_with_volume() {
         assert_eq!(hopping_block_flops(100), 136_800);
         assert!(meo_flops(100) > 2 * hopping_block_flops(100));
+    }
+
+    #[test]
+    fn blas1_accounting() {
+        let n = spinor_reals(100);
+        assert_eq!(n, 2400);
+        assert_eq!(axpy_flops(n), 2 * n);
+        assert_eq!(xpay_flops(n), 2 * n);
+        assert_eq!(norm2_flops(n), 2 * n);
+        assert_eq!(dot_re_flops(n), 2 * n);
+        // complex ops: 8 (madd) and 6 (scale) flop per re/im pair
+        assert_eq!(caxpy_flops(n), 8 * n / 2);
+        assert_eq!(cdot_flops(n), 8 * n / 2);
+        assert_eq!(cscale_flops(n), 6 * n / 2);
+        // one meo apply dwarfs any single BLAS-1 sweep
+        assert!(meo_flops(100) > caxpy_flops(n));
     }
 }

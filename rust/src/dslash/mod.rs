@@ -20,6 +20,6 @@ pub mod gather;
 pub mod scalar;
 pub mod shift;
 
-pub use eo::{HoppingEo, WrapMode};
+pub use eo::{DotCapture, HoppingEo, StoreTail, WrapMode};
 pub use gather::HoppingGather;
 pub use scalar::HoppingScalar;

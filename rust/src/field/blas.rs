@@ -1,0 +1,347 @@
+//! Fused, tile-grouped BLAS-1 kernels on raw AoSoA spinor slices.
+//!
+//! These are the building blocks the fused solver pipeline shards over
+//! the thread team: every function operates on a slice covering whole
+//! SIMD tiles (`len = ntiles * SC2 * vlen`), so a thread can be handed a
+//! contiguous tile range of a [`super::FermionField`] and work with the
+//! same ownership granularity as the hopping kernel.
+//!
+//! ## Reduction contract
+//!
+//! Every reduction in the stack groups identically: an f64 accumulator
+//! per *tile* (iterating component-pair, then lane, inside the tile),
+//! and tile partials combined in tile order. The serial field methods
+//! (`norm2`/`dot_re`/`dot`), the fused kernels here, and the in-kernel
+//! dot capture of [`crate::dslash::HoppingEo`] all share this grouping,
+//! which is what makes solver residual histories *bitwise* independent
+//! of fusion and of the team's thread count: a different thread count
+//! only changes who computes a tile partial, never how any sum is
+//! associated.
+//!
+//! The updates themselves (`axpy`-family) are elementwise and replicate
+//! the exact expression shapes of the unfused field methods, so a fused
+//! kernel produces bit-identical field contents to its two-pass
+//! reference at any precision.
+
+use crate::algebra::Real;
+use crate::lattice::SC2;
+
+/// Number of scalar values in one spinor tile.
+#[inline(always)]
+pub fn vals_per_tile(vlen: usize) -> usize {
+    SC2 * vlen
+}
+
+/// Per-tile |x|²: component-pair → lane order, f64 accumulation.
+#[inline]
+pub fn norm2_tile<R: Real>(x: &[R], vlen: usize) -> f64 {
+    debug_assert_eq!(x.len(), vals_per_tile(vlen));
+    let mut acc = 0.0f64;
+    for k in 0..SC2 / 2 {
+        let ro = 2 * k * vlen;
+        let io = ro + vlen;
+        for l in 0..vlen {
+            let xr = x[ro + l].to_f64();
+            let xi = x[io + l].to_f64();
+            acc += xr * xr + xi * xi;
+        }
+    }
+    acc
+}
+
+/// Per-tile Re⟨a, b⟩ in the canonical order (equals the real part of the
+/// sesquilinear dot; for split re/im storage this is the plain product
+/// sum, grouped pair-by-pair).
+#[inline]
+pub fn dot_re_tile<R: Real>(a: &[R], b: &[R], vlen: usize) -> f64 {
+    debug_assert_eq!(a.len(), vals_per_tile(vlen));
+    debug_assert_eq!(b.len(), vals_per_tile(vlen));
+    let mut acc = 0.0f64;
+    for k in 0..SC2 / 2 {
+        let ro = 2 * k * vlen;
+        let io = ro + vlen;
+        for l in 0..vlen {
+            acc += a[ro + l].to_f64() * b[ro + l].to_f64()
+                + a[io + l].to_f64() * b[io + l].to_f64();
+        }
+    }
+    acc
+}
+
+/// Per-tile complex ⟨d, x⟩ (d conjugated) plus |x|², in the canonical
+/// order: returns `[re, im, norm2]`. This is the capture the fused
+/// kernels and the hopping kernel's dot tail share.
+#[inline]
+pub fn cdot_norm2_tile<R: Real>(d: &[R], x: &[R], vlen: usize) -> [f64; 3] {
+    debug_assert_eq!(d.len(), vals_per_tile(vlen));
+    debug_assert_eq!(x.len(), vals_per_tile(vlen));
+    let (mut re, mut im, mut n2) = (0.0f64, 0.0f64, 0.0f64);
+    for k in 0..SC2 / 2 {
+        let ro = 2 * k * vlen;
+        let io = ro + vlen;
+        for l in 0..vlen {
+            let dr = d[ro + l].to_f64();
+            let di = d[io + l].to_f64();
+            let xr = x[ro + l].to_f64();
+            let xi = x[io + l].to_f64();
+            re += dr * xr + di * xi;
+            im += dr * xi - di * xr;
+            n2 += xr * xr + xi * xi;
+        }
+    }
+    [re, im, n2]
+}
+
+/// x += a * y, elementwise (bit-matches `FermionField::axpy`).
+#[inline]
+pub fn axpy_slice<R: Real>(x: &mut [R], a: R, y: &[R]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (x, y) in x.iter_mut().zip(y) {
+        *x += a * *y;
+    }
+}
+
+/// x = a * x + y, elementwise (bit-matches `FermionField::xpay`).
+#[inline]
+pub fn xpay_slice<R: Real>(x: &mut [R], a: R, y: &[R]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (x, y) in x.iter_mut().zip(y) {
+        *x = a * *x + *y;
+    }
+}
+
+/// Fused `x += a * y` and per-tile |x|² partials in one sweep.
+///
+/// `partials[i]` receives the canonical norm² of tile `i` of the range.
+pub fn axpy_norm2_slice<R: Real>(
+    x: &mut [R],
+    a: R,
+    y: &[R],
+    vlen: usize,
+    partials: &mut [f64],
+) {
+    let vpt = vals_per_tile(vlen);
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), partials.len() * vpt);
+    for (i, p) in partials.iter_mut().enumerate() {
+        let xt = &mut x[i * vpt..(i + 1) * vpt];
+        axpy_slice(xt, a, &y[i * vpt..(i + 1) * vpt]);
+        *p = norm2_tile(xt, vlen);
+    }
+}
+
+/// The fused CG update: `x += alpha * p`, `r += neg_alpha * ap`, and
+/// per-tile |r|² partials — three two-pass sweeps collapsed into one
+/// pass over the tile range. Elementwise identical to the sequential
+/// `axpy`/`axpy`/`norm2` reference.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_update_slice<R: Real>(
+    x: &mut [R],
+    r: &mut [R],
+    p: &[R],
+    ap: &[R],
+    alpha: R,
+    neg_alpha: R,
+    vlen: usize,
+    partials: &mut [f64],
+) {
+    let vpt = vals_per_tile(vlen);
+    debug_assert_eq!(x.len(), partials.len() * vpt);
+    for (i, pt) in partials.iter_mut().enumerate() {
+        let span = i * vpt..(i + 1) * vpt;
+        axpy_slice(&mut x[span.clone()], alpha, &p[span.clone()]);
+        let rt = &mut r[span.clone()];
+        axpy_slice(rt, neg_alpha, &ap[span]);
+        *pt = norm2_tile(rt, vlen);
+    }
+}
+
+/// Complex x += (ar + i·ai) * y (bit-matches `FermionField::caxpy`).
+pub fn caxpy_slice<R: Real>(x: &mut [R], ar: R, ai: R, y: &[R], vlen: usize) {
+    debug_assert_eq!(x.len(), y.len());
+    let pairs = x.len() / (2 * vlen);
+    for k in 0..pairs {
+        let ro = 2 * k * vlen;
+        let io = ro + vlen;
+        for l in 0..vlen {
+            let or = y[ro + l];
+            let oi = y[io + l];
+            x[ro + l] += ar * or - ai * oi;
+            x[io + l] += ar * oi + ai * or;
+        }
+    }
+}
+
+/// Fused complex `r += (ar + i·ai) * t` with per-tile capture of
+/// `[Re⟨d, r⟩, Im⟨d, r⟩, |r|²]` (d conjugated). With `d = None` the
+/// dot slots are zero and only the norm² slot is meaningful.
+#[allow(clippy::too_many_arguments)]
+pub fn caxpy_capture_slice<R: Real>(
+    r: &mut [R],
+    ar: R,
+    ai: R,
+    t: &[R],
+    d: Option<&[R]>,
+    vlen: usize,
+    partials: &mut [[f64; 3]],
+) {
+    let vpt = vals_per_tile(vlen);
+    debug_assert_eq!(r.len(), partials.len() * vpt);
+    for (i, p) in partials.iter_mut().enumerate() {
+        let span = i * vpt..(i + 1) * vpt;
+        let rt = &mut r[span.clone()];
+        caxpy_slice(rt, ar, ai, &t[span.clone()], vlen);
+        *p = match d {
+            Some(d) => cdot_norm2_tile(&d[span], rt, vlen),
+            None => [0.0, 0.0, norm2_tile(rt, vlen)],
+        };
+    }
+}
+
+/// Fused `x += a * p + w * s` (complex): the two sequential `caxpy`
+/// sweeps of the BiCGStab x-update collapsed into one pass, evaluating
+/// the two updates in the same order elementwise.
+#[allow(clippy::too_many_arguments)]
+pub fn caxpy2_slice<R: Real>(
+    x: &mut [R],
+    ar: R,
+    ai: R,
+    p: &[R],
+    wr: R,
+    wi: R,
+    s: &[R],
+    vlen: usize,
+) {
+    debug_assert_eq!(x.len(), p.len());
+    debug_assert_eq!(x.len(), s.len());
+    let pairs = x.len() / (2 * vlen);
+    for k in 0..pairs {
+        let ro = 2 * k * vlen;
+        let io = ro + vlen;
+        for l in 0..vlen {
+            let (pr, pi) = (p[ro + l], p[io + l]);
+            let (sr, si) = (s[ro + l], s[io + l]);
+            let xr = x[ro + l] + (ar * pr - ai * pi);
+            let xi = x[io + l] + (ar * pi + ai * pr);
+            x[ro + l] = xr + (wr * sr - wi * si);
+            x[io + l] = xi + (wr * si + wi * sr);
+        }
+    }
+}
+
+/// Fused BiCGStab search-direction update:
+/// `p = beta * (p + (-omega) * v) + r` in one sweep, evaluating the
+/// unfused `caxpy(-omega, v)` → `cscale(beta)` → `axpy(1, r)` sequence
+/// elementwise so the result is bit-identical to the three-pass
+/// reference.
+#[allow(clippy::too_many_arguments)]
+pub fn p_update_slice<R: Real>(
+    p: &mut [R],
+    mor: R,
+    moi: R,
+    v: &[R],
+    br: R,
+    bi: R,
+    r: &[R],
+    vlen: usize,
+) {
+    debug_assert_eq!(p.len(), v.len());
+    debug_assert_eq!(p.len(), r.len());
+    let pairs = p.len() / (2 * vlen);
+    for k in 0..pairs {
+        let ro = 2 * k * vlen;
+        let io = ro + vlen;
+        for l in 0..vlen {
+            let (vr, vi) = (v[ro + l], v[io + l]);
+            // caxpy(-omega, v)
+            let t1r = p[ro + l] + (mor * vr - moi * vi);
+            let t1i = p[io + l] + (mor * vi + moi * vr);
+            // cscale(beta)
+            let t2r = br * t1r - bi * t1i;
+            let t2i = br * t1i + bi * t1r;
+            // axpy(ONE, r)
+            p[ro + l] = t2r + R::ONE * r[ro + l];
+            p[io + l] = t2i + R::ONE * r[io + l];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::seeded(seed);
+        let a = (0..n).map(|_| rng.gaussian()).collect();
+        let b = (0..n).map(|_| rng.gaussian()).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn axpy_norm2_matches_two_pass_bitwise() {
+        let vlen = 4;
+        let vpt = vals_per_tile(vlen);
+        let (mut x, y) = vecs(3 * vpt, 11);
+        let mut x2 = x.clone();
+        let mut partials = vec![0.0; 3];
+        axpy_norm2_slice(&mut x, 0.37, &y, vlen, &mut partials);
+        // reference: separate axpy, then canonical per-tile norm
+        axpy_slice(&mut x2, 0.37, &y);
+        assert_eq!(x, x2);
+        let want: f64 = (0..3)
+            .map(|i| norm2_tile(&x2[i * vpt..(i + 1) * vpt], vlen))
+            .sum();
+        let got: f64 = partials.iter().sum();
+        assert_eq!(got, want, "partials must reproduce the canonical grouping");
+    }
+
+    #[test]
+    fn cdot_norm2_tile_consistent_with_parts() {
+        let vlen = 2;
+        let vpt = vals_per_tile(vlen);
+        let (d, x) = vecs(vpt, 13);
+        let [re, _im, n2] = cdot_norm2_tile(&d, &x, vlen);
+        assert_eq!(re, dot_re_tile(&d, &x, vlen));
+        assert_eq!(n2, norm2_tile(&x, vlen));
+        let [sre, sim, sn2] = cdot_norm2_tile(&x, &x, vlen);
+        assert_eq!(sre, sn2, "self dot re == norm2");
+        assert_eq!(sim, 0.0, "self dot is real");
+    }
+
+    #[test]
+    fn p_update_matches_three_pass() {
+        let vlen = 4;
+        let vpt = vals_per_tile(vlen);
+        let (mut p, v) = vecs(2 * vpt, 17);
+        let (r, _) = vecs(2 * vpt, 19);
+        let (mor, moi, br, bi) = (-0.3, 0.7, 1.1, -0.2);
+        let mut p2 = p.clone();
+        p_update_slice(&mut p, mor, moi, &v, br, bi, &r, vlen);
+        // three-pass reference
+        caxpy_slice(&mut p2, mor, moi, &v, vlen);
+        for k in 0..p2.len() / (2 * vlen) {
+            let (ro, io) = (2 * k * vlen, 2 * k * vlen + vlen);
+            for l in 0..vlen {
+                let (re, im) = (p2[ro + l], p2[io + l]);
+                p2[ro + l] = br * re - bi * im;
+                p2[io + l] = br * im + bi * re;
+            }
+        }
+        axpy_slice(&mut p2, 1.0, &r);
+        assert_eq!(p, p2);
+    }
+
+    #[test]
+    fn caxpy2_matches_two_caxpys() {
+        let vlen = 8;
+        let vpt = vals_per_tile(vlen);
+        let (mut x, p) = vecs(vpt, 23);
+        let (s, _) = vecs(vpt, 29);
+        let mut x2 = x.clone();
+        caxpy2_slice(&mut x, 0.5, -0.25, &p, 0.125, 2.0, &s, vlen);
+        caxpy_slice(&mut x2, 0.5, -0.25, &p, vlen);
+        caxpy_slice(&mut x2, 0.125, 2.0, &s, vlen);
+        assert_eq!(x, x2);
+    }
+}

@@ -5,8 +5,12 @@
 //! paper's single-precision benchmark case; `f64` backs the oracle and
 //! the mixed-precision outer solve). Dot products always accumulate in
 //! f64 regardless of `R`: CG stagnates if reductions are accumulated in
-//! f32 over ~10^5 terms.
+//! f32 over ~10^5 terms. All reductions use the canonical per-tile
+//! grouping of [`super::blas`], so they are bitwise identical whether
+//! computed serially, fused into another sweep, or sharded over the
+//! thread team.
 
+use super::blas;
 use crate::algebra::{Complex, Real, Spinor};
 use crate::lattice::{EoLayout, Geometry, SiteCoord, IM, NCOL, NSPIN, RE};
 use crate::util::rng::Rng;
@@ -127,20 +131,67 @@ impl<R: Real> FermionField<R> {
         self.data.iter_mut().for_each(|x| *x = v);
     }
 
+    /// Number of SIMD tiles (the sharding unit of the thread team).
+    #[inline]
+    pub fn ntiles(&self) -> usize {
+        self.layout.ntiles()
+    }
+
+    /// Scalar values per SIMD tile.
+    #[inline]
+    pub fn vals_per_tile(&self) -> usize {
+        blas::vals_per_tile(self.layout.vlen())
+    }
+
+    /// View of the contiguous tile range `[b, e)` — the same ownership
+    /// granularity the hopping kernel's `apply_tiles` uses, so BLAS-1
+    /// work can be sharded over the team with kernel-compatible ranges.
+    #[inline]
+    pub fn tiles(&self, b: usize, e: usize) -> &[R] {
+        let vpt = self.vals_per_tile();
+        &self.data[b * vpt..e * vpt]
+    }
+
+    /// Mutable view of the contiguous tile range `[b, e)`.
+    #[inline]
+    pub fn tiles_mut(&mut self, b: usize, e: usize) -> &mut [R] {
+        let vpt = self.vals_per_tile();
+        &mut self.data[b * vpt..e * vpt]
+    }
+
+    /// True when every component is (±)0 — used by the solvers to skip
+    /// the initial operator apply for a zero initial guess.
+    pub fn is_zero(&self) -> bool {
+        self.data.iter().all(|&v| v == R::ZERO)
+    }
+
     /// self += a * o
     pub fn axpy(&mut self, a: R, o: &FermionField<R>) {
         debug_assert_eq!(self.data.len(), o.data.len());
-        for (x, y) in self.data.iter_mut().zip(&o.data) {
-            *x += a * *y;
-        }
+        blas::axpy_slice(&mut self.data, a, &o.data);
     }
 
     /// self = a * self + o
     pub fn xpay(&mut self, a: R, o: &FermionField<R>) {
         debug_assert_eq!(self.data.len(), o.data.len());
-        for (x, y) in self.data.iter_mut().zip(&o.data) {
-            *x = a * *x + *y;
+        blas::xpay_slice(&mut self.data, a, &o.data);
+    }
+
+    /// Fused `self += a * o` returning |self|² from the same sweep —
+    /// the residual update + reduction of one CG iteration in a single
+    /// pass instead of two. Bit-identical to `axpy` followed by `norm2`.
+    pub fn axpy_norm2(&mut self, a: R, o: &FermionField<R>) -> f64 {
+        debug_assert_eq!(self.data.len(), o.data.len());
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        let mut total = 0.0f64;
+        for tile in 0..self.layout.ntiles() {
+            let span = tile * vpt..(tile + 1) * vpt;
+            let xt = &mut self.data[span.clone()];
+            blas::axpy_slice(xt, a, &o.data[span]);
+            total += blas::norm2_tile(xt, vlen);
         }
+        total
     }
 
     pub fn scale(&mut self, a: R) {
@@ -149,59 +200,47 @@ impl<R: Real> FermionField<R> {
 
     /// self += a * o with a *complex* scalar (couples the re/im planes).
     pub fn caxpy(&mut self, a: Complex, o: &FermionField<R>) {
-        let vlen = self.layout.vlen();
+        debug_assert_eq!(self.data.len(), o.data.len());
         let (ar, ai) = (R::from_f64(a.re), R::from_f64(a.im));
-        for tile in 0..self.layout.ntiles() {
-            for spin in 0..NSPIN {
-                for color in 0..NCOL {
-                    let ro = self.layout.spinor_vec(tile, spin, color, RE);
-                    let io = self.layout.spinor_vec(tile, spin, color, IM);
-                    for l in 0..vlen {
-                        let or = o.data[ro + l];
-                        let oi = o.data[io + l];
-                        self.data[ro + l] += ar * or - ai * oi;
-                        self.data[io + l] += ar * oi + ai * or;
-                    }
-                }
-            }
-        }
+        blas::caxpy_slice(&mut self.data, ar, ai, &o.data, self.layout.vlen());
     }
 
-    /// Re <self, o>, accumulated in f64.
+    /// Re <self, o>, accumulated in f64 per tile (canonical grouping).
     pub fn dot_re(&self, o: &FermionField<R>) -> f64 {
         debug_assert_eq!(self.data.len(), o.data.len());
-        self.data
-            .iter()
-            .zip(&o.data)
-            .map(|(&a, &b)| a.to_f64() * b.to_f64())
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        (0..self.layout.ntiles())
+            .map(|t| {
+                let span = t * vpt..(t + 1) * vpt;
+                blas::dot_re_tile(&self.data[span.clone()], &o.data[span], vlen)
+            })
             .sum()
     }
 
-    /// Full complex <self, o> (conjugating self), accumulated in f64.
+    /// Full complex <self, o> (conjugating self), accumulated in f64
+    /// per tile (canonical grouping).
     pub fn dot(&self, o: &FermionField<R>) -> Complex {
+        debug_assert_eq!(self.data.len(), o.data.len());
         let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
         let (mut re, mut im) = (0.0f64, 0.0f64);
-        for tile in 0..self.layout.ntiles() {
-            for spin in 0..NSPIN {
-                for color in 0..NCOL {
-                    let ro = self.layout.spinor_vec(tile, spin, color, RE);
-                    let io = self.layout.spinor_vec(tile, spin, color, IM);
-                    for l in 0..vlen {
-                        let ar = self.data[ro + l].to_f64();
-                        let ai = self.data[io + l].to_f64();
-                        let br = o.data[ro + l].to_f64();
-                        let bi = o.data[io + l].to_f64();
-                        re += ar * br + ai * bi;
-                        im += ar * bi - ai * br;
-                    }
-                }
-            }
+        for t in 0..self.layout.ntiles() {
+            let span = t * vpt..(t + 1) * vpt;
+            let [tre, tim, _] =
+                blas::cdot_norm2_tile(&self.data[span.clone()], &o.data[span], vlen);
+            re += tre;
+            im += tim;
         }
         Complex::new(re, im)
     }
 
     pub fn norm2(&self) -> f64 {
-        self.data.iter().map(|&a| a.to_f64() * a.to_f64()).sum()
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        (0..self.layout.ntiles())
+            .map(|t| blas::norm2_tile(&self.data[t * vpt..(t + 1) * vpt], vlen))
+            .sum()
     }
 
     /// gamma5 in place: negate spin components 2 and 3.

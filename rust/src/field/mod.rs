@@ -1,6 +1,7 @@
 //! Lattice fields in the AoSoA layout: even/odd spinor fields and the
 //! gauge field, plus binary I/O shared with the Python compile path.
 
+pub mod blas;
 mod fermion;
 mod gauge;
 pub mod io;

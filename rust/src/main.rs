@@ -15,6 +15,7 @@ use std::process::ExitCode;
 use lqcd::algebra::Real;
 use lqcd::config::RunConfig;
 use lqcd::coordinator::operator::{LinearOperator, NativeMdagM, NativeMeo};
+use lqcd::coordinator::{BarrierKind, Team};
 use lqcd::field::{FermionField, GaugeField};
 use lqcd::harness::{self, Opts};
 use lqcd::lattice::{Geometry, LatticeDims, Tiling};
@@ -80,6 +81,10 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
     cfg.solver.max_outer = args.get_parse("max-outer", cfg.solver.max_outer)?;
     if cfg.solver.max_outer == 0 {
         return Err("--max-outer must be positive".into());
+    }
+    cfg.solver.threads = args.get_parse("threads", cfg.solver.threads)?;
+    if cfg.solver.threads == 0 {
+        return Err("--threads must be positive".into());
     }
     let use_pjrt = args.flag("pjrt") || cfg.solver.use_pjrt;
     let opts = Opts {
@@ -215,27 +220,33 @@ fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Erro
 }
 
 /// Uniform-precision native solve at `R` (`--precision f32` without
-/// `--pjrt`, and `--precision f64`).
+/// `--pjrt`, and `--precision f64`), on the fused thread-parallel
+/// pipeline: whole iterations run on the worker team
+/// (`solver.threads` / `--threads`), with the kernel tails and
+/// reductions fused into 3 (CG) / 6 (BiCGStab) sweeps per iteration.
 fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
     let mut rng = Rng::seeded(cfg.seed);
     println!(
-        "generating random gauge configuration on {} ({}) ...",
+        "generating random gauge configuration on {} ({}, {} threads) ...",
         cfg.lattice.global,
-        R::NAME
+        R::NAME,
+        cfg.solver.threads
     );
     let u: GaugeField<R> = GaugeField::random(&geom, &mut rng);
     println!("plaquette = {:.6}", u.plaquette());
     let b: FermionField<R> = FermionField::gaussian(&geom, &mut rng);
     let kappa = R::from_f64(cfg.solver.kappa);
+    let mut team = Team::new(cfg.solver.threads, BarrierKind::Sleep);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let stats = if cfg.solver.algorithm == "bicgstab" {
         let mut op = NativeMeo::new(&geom, u, kappa);
         let mut x = FermionField::zeros(&geom);
-        let stats =
-            solver::bicgstab(&mut op, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
+        let stats = solver::fused::bicgstab(
+            &mut op, &mut team, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter,
+        );
         println!(
             "true |Mx-b|/|b| = {:.3e}",
             solver::residual::operator_residual(&mut op, &x, &b)
@@ -249,7 +260,9 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
         op.meo().apply(&mut mbp, &bp);
         mbp.gamma5();
         let mut x = FermionField::zeros(&geom);
-        let stats = solver::cg(&mut op, &mut x, &mbp, cfg.solver.tol, cfg.solver.maxiter);
+        let stats = solver::fused::cg(
+            &mut op, &mut team, &mut x, &mbp, cfg.solver.tol, cfg.solver.maxiter,
+        );
         println!(
             "true |MdagM x - Mdag b|/|Mdag b| = {:.3e}",
             solver::residual::operator_residual(&mut op, &x, &mbp)
@@ -258,7 +271,8 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
     };
     let secs = sw.secs();
     println!(
-        "{}({}): {} iterations, converged={}, rel residual {:.3e}, {:.2}s, {:.2} GFlops",
+        "{}({}): {} iterations, converged={}, rel residual {:.3e}, {:.2}s, \
+         {:.2} GFlops, {:.0} sweeps/iter",
         cfg.solver.algorithm,
         R::NAME,
         stats.iterations,
@@ -266,6 +280,7 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
         stats.rel_residual,
         secs,
         stats.flops as f64 / secs / 1e9,
+        stats.sweeps_per_iter,
     );
     Ok(())
 }
@@ -285,13 +300,14 @@ fn solve_mixed(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
     let b: FermionField<f64> = FermionField::gaussian(&geom, &mut rng);
     let kappa = cfg.solver.kappa;
     let u32 = u.to_precision::<f32>();
+    let mut team = Team::new(cfg.solver.threads, BarrierKind::Sleep);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let stats = if cfg.solver.algorithm == "bicgstab" {
         let mut outer = NativeMeo::new(&geom, u, kappa);
         let mut inner = NativeMeo::new(&geom, u32, kappa as f32);
         let mut x = FermionField::<f64>::zeros(&geom);
-        let stats = solver::mixed_refinement(
+        let stats = solver::mixed_refinement_team(
             &mut outer,
             &mut inner,
             &mut x,
@@ -301,6 +317,7 @@ fn solve_mixed(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
             cfg.solver.inner_tol,
             cfg.solver.maxiter,
             InnerAlgorithm::BiCgStab,
+            &mut team,
         );
         println!(
             "true |Mx-b|/|b| = {:.3e}",
@@ -317,7 +334,7 @@ fn solve_mixed(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
         outer.meo().apply(&mut mbp, &bp);
         mbp.gamma5();
         let mut x = FermionField::<f64>::zeros(&geom);
-        let stats = solver::mixed_refinement(
+        let stats = solver::mixed_refinement_team(
             &mut outer,
             &mut inner,
             &mut x,
@@ -327,6 +344,7 @@ fn solve_mixed(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
             cfg.solver.inner_tol,
             cfg.solver.maxiter,
             InnerAlgorithm::Cg,
+            &mut team,
         );
         println!(
             "true |MdagM x - Mdag b|/|Mdag b| = {:.3e}",
@@ -370,7 +388,10 @@ COMMANDS:
 OPTIONS:
   --dims NXxNYxNZxNT   lattice (default 8x8x8x16)
   --tiling VXxVY       SIMD tiling (default 4x4)
-  --threads N          threads per rank
+  --threads N          worker-team threads: for `solve`, the fused solver
+                       pipeline runs whole iterations on the team
+                       (solver.threads; residual histories are identical
+                       at any thread count); for benches, threads per rank
   --iters N            measurement iterations
   --kappa X --tol X --maxiter N
   --algorithm cg|bicgstab

@@ -6,8 +6,10 @@
 
 use crate::algebra::{Complex, Real};
 use crate::coordinator::operator::LinearOperator;
+use crate::dslash::flops as fl;
 use crate::field::FermionField;
 
+use super::fused::BICGSTAB_UNFUSED_SWEEPS;
 use super::SolveStats;
 
 /// Global sesquilinear dot through the operator's reducer.
@@ -29,6 +31,8 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
     maxiter: usize,
 ) -> SolveStats {
     let bnorm2 = op.reduce_sum(b.norm2());
+    let nreal = b.data.len() as u64;
+    let mut flops = fl::norm2_flops(nreal);
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
         return SolveStats {
@@ -37,27 +41,38 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
             rel_residual: 0.0,
             history: vec![],
             flops: 0,
+            sweeps_per_iter: BICGSTAB_UNFUSED_SWEEPS,
         };
     }
     let limit = tol * tol * bnorm2;
 
+    // r = b - A x; a zero initial guess skips the first operator apply.
+    // The skip is agreed globally (reduce_sum is collective) so ranks
+    // of a distributed operator never mismatch the apply's collectives.
+    let x_zero = op.reduce_sum(if x.is_zero() { 0.0 } else { 1.0 }) == 0.0;
     let mut r = b.clone();
     let mut t = b.zeros_like();
-    op.apply(&mut t, x);
-    r.axpy(-R::ONE, &t);
+    let mut rr;
+    if x_zero {
+        rr = bnorm2;
+    } else {
+        op.apply(&mut t, x);
+        r.axpy(-R::ONE, &t);
+        rr = op.reduce_sum(r.norm2());
+        flops += op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+    }
     let rhat = r.clone();
     let mut p = r.clone();
     let mut v = b.zeros_like();
-    let mut flops = op.flops_per_apply();
     let mut rho = gdot(op, &rhat, &r);
+    flops += fl::cdot_flops(nreal);
     let mut history = Vec::new();
     let mut iterations = 0;
-    let mut rr = op.reduce_sum(r.norm2());
 
     while iterations < maxiter && rr > limit {
         // v = A p
         op.apply(&mut v, &p);
-        flops += op.flops_per_apply();
+        flops += op.flops_per_apply() + fl::cdot_flops(nreal);
         let rhat_v = gdot(op, &rhat, &v);
         if rhat_v.abs() < 1e-300 {
             break; // breakdown
@@ -66,8 +81,10 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
         // s = r - alpha v   (reuse r as s)
         r.caxpy(-alpha, &v);
         let snorm = op.reduce_sum(r.norm2());
+        flops += fl::caxpy_flops(nreal) + fl::norm2_flops(nreal);
         if snorm <= limit {
             x.caxpy(alpha, &p);
+            flops += fl::caxpy_flops(nreal);
             rr = snorm;
             iterations += 1;
             history.push((rr / bnorm2).sqrt());
@@ -75,7 +92,7 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
         }
         // t = A s
         op.apply(&mut t, &r);
-        flops += op.flops_per_apply();
+        flops += op.flops_per_apply() + fl::cdot_flops(nreal) + fl::norm2_flops(nreal);
         let ts = gdot(op, &t, &r);
         let tt = op.reduce_sum(t.norm2());
         if tt == 0.0 {
@@ -88,6 +105,7 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
         // r = s - omega t
         r.caxpy(-omega, &t);
         rr = op.reduce_sum(r.norm2());
+        flops += 3 * fl::caxpy_flops(nreal) + fl::norm2_flops(nreal) + fl::cdot_flops(nreal);
         iterations += 1;
         history.push((rr / bnorm2).sqrt());
 
@@ -103,6 +121,7 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
         // p = beta * p + r: do it via scale trick
         cscale(&mut p, beta);
         p.axpy(R::ONE, &r);
+        flops += fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal);
         rho = rho_new;
     }
 
@@ -112,6 +131,7 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
         rel_residual: (rr / bnorm2).sqrt(),
         history,
         flops,
+        sweeps_per_iter: BICGSTAB_UNFUSED_SWEEPS,
     }
 }
 

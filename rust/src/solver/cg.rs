@@ -4,8 +4,10 @@
 
 use crate::algebra::Real;
 use crate::coordinator::operator::LinearOperator;
+use crate::dslash::flops as fl;
 use crate::field::FermionField;
 
+use super::fused::CG_UNFUSED_SWEEPS;
 use super::SolveStats;
 
 /// Solve `A x = b` with CG. `x` holds the initial guess on entry and the
@@ -18,6 +20,8 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
     maxiter: usize,
 ) -> SolveStats {
     let bnorm2 = op.reduce_sum(b.norm2());
+    let nreal = b.data.len() as u64;
+    let mut flops = fl::norm2_flops(nreal);
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
         return SolveStats {
@@ -26,24 +30,34 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
             rel_residual: 0.0,
             history: vec![],
             flops: 0,
+            sweeps_per_iter: CG_UNFUSED_SWEEPS,
         };
     }
     let limit = tol * tol * bnorm2;
 
-    // r = b - A x
+    // r = b - A x; for the common zero initial guess skip the operator
+    // apply entirely (r = b and |r|² = |b|² are already known). The
+    // skip must be agreed globally — `apply`/`reduce_sum` are
+    // collective for distributed operators, so a rank-local decision
+    // would mismatch the collectives.
+    let x_zero = op.reduce_sum(if x.is_zero() { 0.0 } else { 1.0 }) == 0.0;
     let mut r = b.clone();
     let mut ap = b.zeros_like();
-    op.apply(&mut ap, x);
-    r.axpy(-R::ONE, &ap);
+    let mut rr;
+    if x_zero {
+        rr = bnorm2;
+    } else {
+        op.apply(&mut ap, x);
+        r.axpy(-R::ONE, &ap);
+        rr = op.reduce_sum(r.norm2());
+        flops += op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+    }
     let mut p = r.clone();
-    let mut rr = op.reduce_sum(r.norm2());
-    let mut flops = op.flops_per_apply();
     let mut history = Vec::new();
 
     let mut iterations = 0;
     while iterations < maxiter && rr > limit {
         op.apply(&mut ap, &p);
-        flops += op.flops_per_apply();
         let pap = op.reduce_sum(p.dot_re(&ap));
         debug_assert!(pap.is_finite());
         let alpha = rr / pap;
@@ -53,6 +67,11 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
         let beta = R::from_f64(rr_new / rr);
         // p = r + beta p
         p.xpay(beta, &r);
+        flops += op.flops_per_apply()
+            + fl::dot_re_flops(nreal)
+            + 2 * fl::axpy_flops(nreal)
+            + fl::norm2_flops(nreal)
+            + fl::xpay_flops(nreal);
         rr = rr_new;
         iterations += 1;
         history.push((rr / bnorm2).sqrt());
@@ -64,6 +83,7 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
         rel_residual: (rr / bnorm2).sqrt(),
         history,
         flops,
+        sweeps_per_iter: CG_UNFUSED_SWEEPS,
     }
 }
 

@@ -1,0 +1,488 @@
+//! Thread-parallel fused solver pipeline.
+//!
+//! Each Krylov iteration runs as **one** [`Team`] parallel region: the
+//! operator's kernel phases and the BLAS-1 sweeps are tile-sharded over
+//! the persistent workers, synchronized by the in-region
+//! [`crate::coordinator::TeamBarrier`], with reductions accumulated as
+//! per-tile f64 partials and combined (in tile order) at the barriers.
+//! Relative to the generic [`super::cg`] / [`super::bicgstab`] loops
+//! this collapses a CG iteration from 6 full-field memory sweeps
+//! (operator, p·Ap dot, two axpy, norm², xpay) to 3 fused passes:
+//!
+//! 1. `Ap = A p` with the `-kappa²`/gamma5 tails *and* the `p·Ap`
+//!    reduction folded into the kernel's store loop;
+//! 2. `x += alpha p` ∥ `r -= alpha Ap` ∥ `|r|²` in one pass;
+//! 3. `p = beta p + r`.
+//!
+//! BiCGStab drops from 15 passes to 6 the same way.
+//!
+//! Because every reduction uses the canonical per-tile grouping of
+//! [`crate::field::blas`] and every fused update replicates the
+//! elementwise expressions of its two-pass reference, the residual
+//! histories are **bitwise identical** to the unfused single-threaded
+//! solvers at any thread count — threading changes who computes a tile,
+//! never how a sum is associated. The unfused generic solvers remain
+//! the reference implementation (and serve operators, like the
+//! distributed or PJRT-backed ones, that cannot expose tile phases).
+
+use crate::algebra::{Complex, Real};
+use crate::coordinator::operator::FusedSolvable;
+use crate::coordinator::team::{chunk_range, SendPtr, Team};
+use crate::dslash::flops as fl;
+use crate::field::{blas, FermionField};
+
+use super::SolveStats;
+
+/// Full-field memory sweeps per fused CG iteration (operator pass with
+/// fused dot + combined x/r update + p xpay).
+pub const CG_FUSED_SWEEPS: f64 = 3.0;
+/// Sweeps per unfused CG iteration (operator, dot, axpy, axpy, norm², xpay).
+pub const CG_UNFUSED_SWEEPS: f64 = 6.0;
+/// Sweeps per fused BiCGStab iteration.
+pub const BICGSTAB_FUSED_SWEEPS: f64 = 6.0;
+/// Sweeps per unfused BiCGStab iteration.
+pub const BICGSTAB_UNFUSED_SWEEPS: f64 = 15.0;
+
+/// Shared read-only view of a whole field behind a [`SendPtr`].
+///
+/// # Safety
+/// No thread may hold a `&mut` into the same range concurrently.
+unsafe fn ro<'a, T>(p: SendPtr<T>, len: usize) -> &'a [T] {
+    std::slice::from_raw_parts(p.0 as *const T, len)
+}
+
+/// Shared read-only view of the range `[offset, offset + len)` only —
+/// used for a thread's own-shard reads so the reference never overlaps
+/// the ranges other threads are concurrently writing.
+///
+/// # Safety
+/// No thread may hold a `&mut` into this range concurrently.
+unsafe fn ro_at<'a, T>(p: SendPtr<T>, offset: usize, len: usize) -> &'a [T] {
+    std::slice::from_raw_parts(p.0.add(offset) as *const T, len)
+}
+
+/// Per-iteration outcome, written by tid 0 inside the region and read
+/// by the master loop after the region completes (every thread computes
+/// the same reductions from the same tile partials, so tid 0's record
+/// is what all threads acted on).
+#[derive(Clone, Copy, Default)]
+struct IterOut {
+    /// 0 = full iteration; the other codes mirror the unfused solver's
+    /// early exits (see `bicgstab`)
+    kind: u8,
+    rr: f64,
+    rho: Complex,
+}
+
+/// Thread-parallel fused CG on the hermitian positive-definite normal
+/// operator. Behaves exactly like [`super::cg`] (same signature modulo
+/// the team, same convergence criterion, bitwise-identical residual
+/// history) but runs each iteration as one parallel region of 3 fused
+/// sweeps.
+pub fn cg<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+) -> SolveStats {
+    let flops_apply = op.flops_per_apply();
+    let view = op.fused_view();
+    let ntiles = view.ntiles();
+    let vpt = view.vals_per_tile();
+    let vlen = view.vlen();
+    let len = view.field_len();
+    let n = team.nthreads();
+    let nreal = len as u64;
+
+    let bnorm2 = b.norm2();
+    let mut flops = fl::norm2_flops(nreal);
+    if bnorm2 == 0.0 {
+        x.fill(R::ZERO);
+        return SolveStats {
+            iterations: 0,
+            converged: true,
+            rel_residual: 0.0,
+            history: vec![],
+            flops: 0,
+            sweeps_per_iter: CG_FUSED_SWEEPS,
+        };
+    }
+    let limit = tol * tol * bnorm2;
+
+    let mut r = b.clone();
+    let mut ap = b.zeros_like();
+    let mut dot_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles];
+    let mut rr_partials: Vec<f64> = vec![0.0; ntiles];
+    let mut rr;
+
+    if x.is_zero() {
+        // zero initial guess: r = b, |r|² = |b|² — no operator apply
+        rr = bnorm2;
+    } else {
+        // one region: ap = A x, then r = b - ap fused with |r|²
+        let ap_ptr = SendPtr(ap.data.as_mut_ptr());
+        let r_ptr = SendPtr(r.data.as_mut_ptr());
+        let x_raw = SendPtr(x.data.as_mut_ptr());
+        let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
+        team.run(|tid, bar| unsafe {
+            view.apply_team(tid, n, bar, ap_ptr, x_raw.0 as *const R, None);
+            bar.wait();
+            let (tb, te) = chunk_range(ntiles, tid, n);
+            let r_t = r_ptr.slice_mut(tb * vpt, (te - tb) * vpt);
+            let ap_s = ro::<R>(ap_ptr, len);
+            blas::axpy_norm2_slice(
+                r_t,
+                -R::ONE,
+                &ap_s[tb * vpt..te * vpt],
+                vlen,
+                rr_ptr.slice_mut(tb, te - tb),
+            );
+        });
+        rr = rr_partials.iter().sum();
+        flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+    }
+
+    let mut p = r.clone();
+    let mut history = Vec::new();
+    let mut iterations = 0;
+
+    let x_ptr = SendPtr(x.data.as_mut_ptr());
+    let r_ptr = SendPtr(r.data.as_mut_ptr());
+    let p_ptr = SendPtr(p.data.as_mut_ptr());
+    let ap_ptr = SendPtr(ap.data.as_mut_ptr());
+    let dot_ptr = SendPtr(dot_partials.as_mut_ptr());
+    let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
+
+    while iterations < maxiter && rr > limit {
+        let rr_iter = rr;
+        team.run(|tid, bar| unsafe {
+            // sweep 1: ap = A p with fused tails and p·Ap capture
+            view.apply_team(
+                tid,
+                n,
+                bar,
+                ap_ptr,
+                p_ptr.0 as *const R,
+                Some((p_ptr.0 as *const R, dot_ptr)),
+            );
+            bar.wait();
+            // every thread combines the same partials in tile order,
+            // so alpha is identical everywhere (and to the serial run)
+            let pap: f64 = ro::<[f64; 3]>(dot_ptr, ntiles).iter().map(|t| t[0]).sum();
+            let alpha = rr_iter / pap;
+            let (tb, te) = chunk_range(ntiles, tid, n);
+            // sweep 2: x += alpha p ; r -= alpha ap ; per-tile |r|²
+            blas::cg_update_slice(
+                x_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                ro_at::<R>(p_ptr, tb * vpt, (te - tb) * vpt),
+                ro_at::<R>(ap_ptr, tb * vpt, (te - tb) * vpt),
+                R::from_f64(alpha),
+                R::from_f64(-alpha),
+                vlen,
+                rr_ptr.slice_mut(tb, te - tb),
+            );
+            bar.wait();
+            let rr_new: f64 = ro::<f64>(rr_ptr, ntiles).iter().sum();
+            let beta = R::from_f64(rr_new / rr_iter);
+            // sweep 3: p = beta p + r
+            blas::xpay_slice(
+                p_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                beta,
+                ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
+            );
+        });
+        rr = rr_partials.iter().sum();
+        flops += flops_apply
+            + fl::dot_re_flops(nreal)
+            + 2 * fl::axpy_flops(nreal)
+            + fl::norm2_flops(nreal)
+            + fl::xpay_flops(nreal);
+        iterations += 1;
+        history.push((rr / bnorm2).sqrt());
+    }
+
+    SolveStats {
+        iterations,
+        converged: rr <= limit,
+        rel_residual: (rr / bnorm2).sqrt(),
+        history,
+        flops,
+        sweeps_per_iter: CG_FUSED_SWEEPS,
+    }
+}
+
+/// Thread-parallel fused BiCGStab on the non-hermitian M-hat. Same
+/// algorithm, breakdown handling and (bitwise) residual history as
+/// [`super::bicgstab`], in 6 fused sweeps per iteration on the team.
+pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+) -> SolveStats {
+    let flops_apply = op.flops_per_apply();
+    let view = op.fused_view();
+    let ntiles = view.ntiles();
+    let vpt = view.vals_per_tile();
+    let vlen = view.vlen();
+    let len = view.field_len();
+    let n = team.nthreads();
+    let nreal = len as u64;
+
+    let bnorm2 = b.norm2();
+    let mut flops = fl::norm2_flops(nreal);
+    if bnorm2 == 0.0 {
+        x.fill(R::ZERO);
+        return SolveStats {
+            iterations: 0,
+            converged: true,
+            rel_residual: 0.0,
+            history: vec![],
+            flops: 0,
+            sweeps_per_iter: BICGSTAB_FUSED_SWEEPS,
+        };
+    }
+    let limit = tol * tol * bnorm2;
+
+    let mut r = b.clone();
+    let mut t = b.zeros_like();
+    let mut rr;
+    let mut rr_partials: Vec<f64> = vec![0.0; ntiles];
+
+    if x.is_zero() {
+        rr = bnorm2;
+    } else {
+        let t_ptr = SendPtr(t.data.as_mut_ptr());
+        let r_ptr = SendPtr(r.data.as_mut_ptr());
+        let x_raw = SendPtr(x.data.as_mut_ptr());
+        let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
+        team.run(|tid, bar| unsafe {
+            view.apply_team(tid, n, bar, t_ptr, x_raw.0 as *const R, None);
+            bar.wait();
+            let (tb, te) = chunk_range(ntiles, tid, n);
+            blas::axpy_norm2_slice(
+                r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                -R::ONE,
+                ro_at::<R>(t_ptr, tb * vpt, (te - tb) * vpt),
+                vlen,
+                rr_ptr.slice_mut(tb, te - tb),
+            );
+        });
+        rr = rr_partials.iter().sum();
+        flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+    }
+
+    let rhat = r.clone();
+    let mut p = r.clone();
+    let mut v = b.zeros_like();
+    // rho = <rhat, r> = |r|² at start (rhat == r), but compute it like
+    // the unfused solver does so the value is grouping-identical
+    let mut rho = rhat.dot(&r);
+    flops += fl::cdot_flops(nreal);
+    let mut history = Vec::new();
+    let mut iterations = 0;
+
+    let mut v_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles];
+    let mut s_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles];
+    let mut t_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles];
+    let mut r_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles];
+    let mut out = IterOut::default();
+
+    let x_ptr = SendPtr(x.data.as_mut_ptr());
+    let r_ptr = SendPtr(r.data.as_mut_ptr());
+    let p_ptr = SendPtr(p.data.as_mut_ptr());
+    let v_ptr = SendPtr(v.data.as_mut_ptr());
+    let t_ptr = SendPtr(t.data.as_mut_ptr());
+    let rhat_raw = SendPtr(rhat.data.as_ptr() as *mut R);
+    let vp_ptr = SendPtr(v_partials.as_mut_ptr());
+    let sp_ptr = SendPtr(s_partials.as_mut_ptr());
+    let tp_ptr = SendPtr(t_partials.as_mut_ptr());
+    let rp_ptr = SendPtr(r_partials.as_mut_ptr());
+    let out_ptr = SendPtr(&mut out as *mut IterOut);
+
+    while iterations < maxiter && rr > limit {
+        let rho_c = rho;
+        team.run(|tid, bar| unsafe {
+            let (tb, te) = chunk_range(ntiles, tid, n);
+            let record = |o: IterOut| {
+                if tid == 0 {
+                    // master-thread-only write; read after the region
+                    unsafe { *out_ptr.0 = o };
+                }
+            };
+            // sweep 1: v = A p with fused <rhat, v> capture
+            view.apply_team(
+                tid,
+                n,
+                bar,
+                v_ptr,
+                p_ptr.0 as *const R,
+                Some((rhat_raw.0 as *const R, vp_ptr)),
+            );
+            bar.wait();
+            let vp = ro::<[f64; 3]>(vp_ptr, ntiles);
+            let rhat_v = Complex::new(
+                vp.iter().map(|t| t[0]).sum(),
+                vp.iter().map(|t| t[1]).sum(),
+            );
+            if rhat_v.abs() < 1e-300 {
+                record(IterOut { kind: 1, rr: 0.0, rho: rho_c });
+                return; // breakdown (matches the unfused solver)
+            }
+            let alpha = rho_c * rhat_v.conj().scale(1.0 / rhat_v.norm2());
+            let ma = -alpha;
+            // sweep 2: s = r - alpha v (in place in r) with |s|² capture
+            blas::caxpy_capture_slice(
+                r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                R::from_f64(ma.re),
+                R::from_f64(ma.im),
+                ro_at::<R>(v_ptr, tb * vpt, (te - tb) * vpt),
+                None,
+                vlen,
+                sp_ptr.slice_mut(tb, te - tb),
+            );
+            bar.wait();
+            let snorm: f64 =
+                ro::<[f64; 3]>(sp_ptr, ntiles).iter().map(|t| t[2]).sum();
+            if snorm <= limit {
+                // converged at the half step: x += alpha p and stop
+                blas::caxpy_slice(
+                    x_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                    R::from_f64(alpha.re),
+                    R::from_f64(alpha.im),
+                    ro_at::<R>(p_ptr, tb * vpt, (te - tb) * vpt),
+                    vlen,
+                );
+                record(IterOut { kind: 2, rr: snorm, rho: rho_c });
+                return;
+            }
+            // sweep 3: t = A s with fused <s, t> and |t|² capture
+            view.apply_team(
+                tid,
+                n,
+                bar,
+                t_ptr,
+                r_ptr.0 as *const R,
+                Some((r_ptr.0 as *const R, tp_ptr)),
+            );
+            bar.wait();
+            let tp = ro::<[f64; 3]>(tp_ptr, ntiles);
+            // the capture conjugates s; ts = <t, s> conjugates t, so
+            // flip the imaginary part (exact, hence bit-identical)
+            let ts = Complex::new(
+                tp.iter().map(|t| t[0]).sum(),
+                -tp.iter().map(|t| t[1]).sum::<f64>(),
+            );
+            let tt: f64 = tp.iter().map(|t| t[2]).sum();
+            if tt == 0.0 {
+                record(IterOut { kind: 3, rr: 0.0, rho: rho_c });
+                return; // breakdown
+            }
+            let omega = ts.scale(1.0 / tt);
+            // sweep 4: x += alpha p + omega s (s lives in r)
+            blas::caxpy2_slice(
+                x_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                R::from_f64(alpha.re),
+                R::from_f64(alpha.im),
+                ro_at::<R>(p_ptr, tb * vpt, (te - tb) * vpt),
+                R::from_f64(omega.re),
+                R::from_f64(omega.im),
+                ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
+                vlen,
+            );
+            let mo = -omega;
+            // sweep 5: r = s - omega t with <rhat, r> and |r|² capture
+            blas::caxpy_capture_slice(
+                r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                R::from_f64(mo.re),
+                R::from_f64(mo.im),
+                ro_at::<R>(t_ptr, tb * vpt, (te - tb) * vpt),
+                Some(ro_at::<R>(rhat_raw, tb * vpt, (te - tb) * vpt)),
+                vlen,
+                rp_ptr.slice_mut(tb, te - tb),
+            );
+            bar.wait();
+            let rp = ro::<[f64; 3]>(rp_ptr, ntiles);
+            let rr_new: f64 = rp.iter().map(|t| t[2]).sum();
+            let rho_new = Complex::new(
+                rp.iter().map(|t| t[0]).sum(),
+                rp.iter().map(|t| t[1]).sum(),
+            );
+            if rho_c.abs() < 1e-300 || omega.abs() < 1e-300 {
+                record(IterOut { kind: 4, rr: rr_new, rho: rho_new });
+                return; // breakdown after the updates, like unfused
+            }
+            let beta = (rho_new * alpha)
+                * (rho_c * omega).conj().scale(1.0 / (rho_c * omega).norm2());
+            // sweep 6: p = beta (p - omega v) + r
+            blas::p_update_slice(
+                p_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                R::from_f64(mo.re),
+                R::from_f64(mo.im),
+                ro_at::<R>(v_ptr, tb * vpt, (te - tb) * vpt),
+                R::from_f64(beta.re),
+                R::from_f64(beta.im),
+                ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
+                vlen,
+            );
+            record(IterOut { kind: 0, rr: rr_new, rho: rho_new });
+        });
+
+        // master: act on tid 0's record (all threads computed the same)
+        match out.kind {
+            1 => {
+                flops += flops_apply + fl::cdot_flops(nreal);
+                break;
+            }
+            2 => {
+                flops += flops_apply
+                    + fl::cdot_flops(nreal)
+                    + fl::caxpy_flops(nreal)
+                    + fl::norm2_flops(nreal)
+                    + fl::caxpy_flops(nreal);
+                rr = out.rr;
+                iterations += 1;
+                history.push((rr / bnorm2).sqrt());
+                break;
+            }
+            3 => {
+                flops += 2 * flops_apply
+                    + 2 * fl::cdot_flops(nreal)
+                    + fl::caxpy_flops(nreal)
+                    + 2 * fl::norm2_flops(nreal);
+                break;
+            }
+            kind => {
+                // full iteration (kind 0) or post-update breakdown (4):
+                // norm² sweeps are |s|², |t|² and the final |r|²
+                flops += 2 * flops_apply
+                    + 3 * fl::cdot_flops(nreal)
+                    + 4 * fl::caxpy_flops(nreal)
+                    + 3 * fl::norm2_flops(nreal);
+                rr = out.rr;
+                iterations += 1;
+                history.push((rr / bnorm2).sqrt());
+                if kind == 4 {
+                    break;
+                }
+                rho = out.rho;
+                flops +=
+                    fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal);
+            }
+        }
+    }
+
+    SolveStats {
+        iterations,
+        converged: rr <= limit,
+        rel_residual: (rr / bnorm2).sqrt(),
+        history,
+        flops,
+        sweeps_per_iter: BICGSTAB_FUSED_SWEEPS,
+    }
+}

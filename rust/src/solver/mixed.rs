@@ -22,10 +22,12 @@
 //! floor, so the inner solver never stalls.
 
 use crate::algebra::Real;
-use crate::coordinator::operator::LinearOperator;
+use crate::coordinator::operator::{FusedSolvable, LinearOperator};
+use crate::coordinator::Team;
+use crate::dslash::flops as fl;
 use crate::field::FermionField;
 
-use super::{bicgstab, cg};
+use super::{bicgstab, cg, fused};
 
 /// Inner Krylov algorithm of the refinement loop.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -63,6 +65,12 @@ pub struct MixedStats {
 /// same gauge configuration via [`crate::field::GaugeField::to_precision`]).
 /// For `InnerAlgorithm::Cg` both must be the normal operator.
 ///
+/// Works with *any* inner [`LinearOperator`] (native, distributed,
+/// PJRT-backed) and runs the inner solves serially; use
+/// [`mixed_refinement_team`] to run them on the worker team through the
+/// fused pipeline. The inner residual recursion is bitwise identical
+/// either way.
+///
 /// `x` holds the initial guess on entry and the solution on exit.
 #[allow(clippy::too_many_arguments)]
 pub fn mixed_refinement<Hi, Lo>(
@@ -80,6 +88,58 @@ where
     Hi: LinearOperator<f64>,
     Lo: LinearOperator<f32>,
 {
+    refine(outer, inner, x, b, tol, max_outer, move |op, x32, b32| match alg {
+        InnerAlgorithm::Cg => cg(op, x32, b32, inner_tol, inner_maxiter),
+        InnerAlgorithm::BiCgStab => bicgstab(op, x32, b32, inner_tol, inner_maxiter),
+    })
+}
+
+/// [`mixed_refinement`] with every inner f32 solve — where essentially
+/// all the work happens — running on the worker team through the fused
+/// pipeline ([`fused`]). Requires a native ([`FusedSolvable`]) inner
+/// operator; results are bitwise identical to the serial entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_refinement_team<Hi, Lo>(
+    outer: &mut Hi,
+    inner: &mut Lo,
+    x: &mut FermionField<f64>,
+    b: &FermionField<f64>,
+    tol: f64,
+    max_outer: usize,
+    inner_tol: f64,
+    inner_maxiter: usize,
+    alg: InnerAlgorithm,
+    team: &mut Team,
+) -> MixedStats
+where
+    Hi: LinearOperator<f64>,
+    Lo: LinearOperator<f32> + FusedSolvable<f32>,
+{
+    refine(outer, inner, x, b, tol, max_outer, move |op, x32, b32| match alg {
+        InnerAlgorithm::Cg => {
+            fused::cg(op, &mut *team, x32, b32, inner_tol, inner_maxiter)
+        }
+        InnerAlgorithm::BiCgStab => {
+            fused::bicgstab(op, &mut *team, x32, b32, inner_tol, inner_maxiter)
+        }
+    })
+}
+
+/// The shared defect-correction loop; `solve` runs one inner f32 solve
+/// of `A d ~= r/|r|` and returns its stats.
+fn refine<Hi, Lo, S>(
+    outer: &mut Hi,
+    inner: &mut Lo,
+    x: &mut FermionField<f64>,
+    b: &FermionField<f64>,
+    tol: f64,
+    max_outer: usize,
+    mut solve: S,
+) -> MixedStats
+where
+    Hi: LinearOperator<f64>,
+    S: FnMut(&mut Lo, &mut FermionField<f32>, &FermionField<f32>) -> super::SolveStats,
+{
     let bnorm2 = outer.reduce_sum(b.norm2());
     if bnorm2 == 0.0 {
         x.fill(0.0);
@@ -95,19 +155,30 @@ where
     }
     let bnorm = bnorm2.sqrt();
 
-    // r = b - A x (f64)
+    let nreal = b.data.len() as u64;
+
+    // r = b - A x (f64); a zero initial guess skips the operator apply.
+    // Agreed globally (reduce_sum is collective) so distributed outer
+    // operators never mismatch the apply's collectives.
+    let x_zero = outer.reduce_sum(if x.is_zero() { 0.0 } else { 1.0 }) == 0.0;
     let mut r = b.clone();
     let mut ax = b.zeros_like();
-    outer.apply(&mut ax, x);
-    r.axpy(-1.0, &ax);
-    let mut flops = outer.flops_per_apply();
+    let mut flops = fl::norm2_flops(nreal);
+    let mut rnorm;
+    if x_zero {
+        rnorm = bnorm;
+    } else {
+        outer.apply(&mut ax, x);
+        r.axpy(-1.0, &ax);
+        rnorm = outer.reduce_sum(r.norm2()).sqrt();
+        flops +=
+            outer.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+    }
 
     let mut history = Vec::new();
     let mut inner_histories = Vec::new();
     let mut inner_iterations = 0usize;
     let mut outer_iterations = 0usize;
-
-    let mut rnorm = outer.reduce_sum(r.norm2()).sqrt();
     history.push(rnorm / bnorm);
 
     while outer_iterations < max_outer && rnorm > tol * bnorm {
@@ -118,14 +189,7 @@ where
 
         // inner solve A d ~= r/|r| at f32
         let mut corr32: FermionField<f32> = d32.zeros_like();
-        let stats = match alg {
-            InnerAlgorithm::Cg => {
-                cg(inner, &mut corr32, &d32, inner_tol, inner_maxiter)
-            }
-            InnerAlgorithm::BiCgStab => {
-                bicgstab(inner, &mut corr32, &d32, inner_tol, inner_maxiter)
-            }
-        };
+        let stats = solve(inner, &mut corr32, &d32);
         inner_iterations += stats.iterations;
         inner_histories.push(stats.history);
         flops += stats.flops;
@@ -134,7 +198,9 @@ where
         let corr: FermionField<f64> = corr32.to_precision();
         x.axpy(rnorm, &corr);
         outer.apply(&mut ax, x);
-        flops += outer.flops_per_apply();
+        flops += outer.flops_per_apply()
+            + 2 * fl::axpy_flops(nreal)
+            + fl::norm2_flops(nreal);
         r = b.clone();
         r.axpy(-1.0, &ax);
         rnorm = outer.reduce_sum(r.norm2()).sqrt();

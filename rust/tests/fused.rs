@@ -1,0 +1,308 @@
+//! Fused-kernel and thread-parallel solver equivalence tests.
+//!
+//! The contract under test: every fused kernel (xpay/gamma5 store
+//! tails, in-kernel dot capture, fused BLAS-1 sweeps) bit-matches its
+//! unfused two-pass reference at f64 and matches to rounding at f32
+//! (in practice also bitwise, since the elementwise expressions and
+//! reduction groupings are identical by construction), and the
+//! thread-parallel fused solvers produce *identical* iteration counts
+//! and residual histories at 1, 2 and 4 threads as the serial unfused
+//! reference.
+
+use lqcd::algebra::Real;
+use lqcd::coordinator::operator::{LinearOperator, NativeMdagM, NativeMeo, UnfusedMdagM};
+use lqcd::coordinator::{BarrierKind, Team};
+use lqcd::dslash::{full, HoppingEo};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, LatticeDims, Tiling};
+use lqcd::solver::{self, InnerAlgorithm};
+use lqcd::util::rng::Rng;
+
+fn geom() -> Geometry {
+    Geometry::single_rank(
+        LatticeDims::new(4, 4, 4, 4).unwrap(),
+        Tiling::new(2, 2).unwrap(),
+    )
+    .unwrap()
+}
+
+/// Max |a-b| over two fields' raw data.
+fn max_abs_diff<R: Real>(a: &FermionField<R>, b: &FermionField<R>) -> f64 {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| (x.to_f64() - y.to_f64()).abs())
+        .fold(0.0, f64::max)
+}
+
+
+#[test]
+fn fused_meo_apply_bit_matches_unfused_f64() {
+    let g = geom();
+    let mut rng = Rng::seeded(601);
+    let u = GaugeField::<f64>::random(&g, &mut rng);
+    let psi = FermionField::<f64>::gaussian(&g, &mut rng);
+    let kappa = 0.137f64;
+
+    // fused: the xpay tail inside the kernel store
+    let mut op = NativeMeo::new(&g, u.clone(), kappa);
+    let mut got = FermionField::<f64>::zeros(&g);
+    op.apply(&mut got, &psi);
+
+    // unfused two-pass reference
+    let hop = HoppingEo::new(&g);
+    let mut want = FermionField::<f64>::zeros(&g);
+    let mut tmp = FermionField::<f64>::zeros(&g);
+    full::meo(&hop, &mut want, &mut tmp, &u, &psi, kappa);
+
+    assert_eq!(got.data, want.data, "fused M-hat must bit-match at f64");
+}
+
+#[test]
+fn fused_meo_apply_matches_unfused_f32() {
+    let g = geom();
+    let mut rng = Rng::seeded(602);
+    let u = GaugeField::<f32>::random(&g, &mut rng);
+    let psi = FermionField::<f32>::gaussian(&g, &mut rng);
+    let kappa = 0.137f32;
+
+    let mut op = NativeMeo::new(&g, u.clone(), kappa);
+    let mut got = FermionField::<f32>::zeros(&g);
+    op.apply(&mut got, &psi);
+
+    let hop = HoppingEo::new(&g);
+    let mut want = FermionField::<f32>::zeros(&g);
+    let mut tmp = FermionField::<f32>::zeros(&g);
+    full::meo(&hop, &mut want, &mut tmp, &u, &psi, kappa);
+
+    assert!(
+        max_abs_diff(&got, &want) <= f32::EPSILON as f64,
+        "fused M-hat must match the two-pass reference to rounding at f32"
+    );
+}
+
+#[test]
+fn fused_mdagm_apply_bit_matches_gamma5_sequence() {
+    let g = geom();
+    let mut rng = Rng::seeded(603);
+    let u64f = GaugeField::<f64>::random(&g, &mut rng);
+    let psi64 = FermionField::<f64>::gaussian(&g, &mut rng);
+    let kappa = 0.12f64;
+
+    let mut fused = NativeMdagM::new(&g, u64f.clone(), kappa);
+    let mut got = FermionField::<f64>::zeros(&g);
+    fused.apply(&mut got, &psi64);
+
+    let mut unfused = UnfusedMdagM::new(&g, u64f, kappa);
+    let mut want = FermionField::<f64>::zeros(&g);
+    unfused.apply(&mut want, &psi64);
+    assert_eq!(got.data, want.data, "fused M^dag M must bit-match at f64");
+
+    // and to rounding at f32
+    let u32f: GaugeField<f32> = GaugeField::<f64>::random(&g, &mut Rng::seeded(604))
+        .to_precision();
+    let psi32: FermionField<f32> = psi64.to_precision();
+    let mut fused = NativeMdagM::new(&g, u32f.clone(), kappa as f32);
+    let mut got = FermionField::<f32>::zeros(&g);
+    fused.apply(&mut got, &psi32);
+    let mut unfused = UnfusedMdagM::new(&g, u32f, kappa as f32);
+    let mut want = FermionField::<f32>::zeros(&g);
+    unfused.apply(&mut want, &psi32);
+    assert!(max_abs_diff(&got, &want) <= f32::EPSILON as f64);
+}
+
+#[test]
+fn axpy_norm2_bit_matches_two_pass() {
+    let g = geom();
+    for seed in [605u64, 606] {
+        let mut rng = Rng::seeded(seed);
+        let mut x = FermionField::<f64>::gaussian(&g, &mut rng);
+        let y = FermionField::<f64>::gaussian(&g, &mut rng);
+        let mut x2 = x.clone();
+        let fused = x.axpy_norm2(-0.73, &y);
+        x2.axpy(-0.73, &y);
+        let two_pass = x2.norm2();
+        assert_eq!(x.data, x2.data, "fused axpy part must be identical");
+        assert_eq!(fused, two_pass, "fused norm must bit-match norm2()");
+    }
+    // f32 fields: the reduction is f64 either way, still identical
+    let mut rng = Rng::seeded(607);
+    let mut x = FermionField::<f32>::gaussian(&g, &mut rng);
+    let y = FermionField::<f32>::gaussian(&g, &mut rng);
+    let mut x2 = x.clone();
+    let fused = x.axpy_norm2(0.25, &y);
+    x2.axpy(0.25, &y);
+    assert_eq!(x.data, x2.data);
+    assert!((fused - x2.norm2()).abs() <= 1e-7 * fused.abs());
+}
+
+/// CG: serial unfused reference vs the fused pipeline at 1, 2 and 4
+/// threads — iteration counts and residual histories must be identical
+/// (bitwise: same reduction grouping, same elementwise updates).
+#[test]
+fn threaded_cg_matches_serial_unfused() {
+    let g = geom();
+    let mut rng = Rng::seeded(611);
+    let u: GaugeField<f32> = GaugeField::<f64>::random(&g, &mut rng).to_precision();
+    let b: FermionField<f32> =
+        FermionField::<f64>::gaussian(&g, &mut rng).to_precision();
+    let kappa = 0.12f32;
+
+    // CGNR rhs
+    let mut mbp = FermionField::<f32>::zeros(&g);
+    {
+        let mut op = NativeMdagM::new(&g, u.clone(), kappa);
+        let mut bp = b.clone();
+        bp.gamma5();
+        op.meo().apply(&mut mbp, &bp);
+        mbp.gamma5();
+    }
+
+    let mut refop = UnfusedMdagM::new(&g, u.clone(), kappa);
+    let mut x_ref = FermionField::<f32>::zeros(&g);
+    let reference = solver::cg(&mut refop, &mut x_ref, &mbp, 1e-6, 200);
+    assert!(reference.iterations > 3, "system must take several iterations");
+
+    for threads in [1usize, 2, 4] {
+        let mut op = NativeMdagM::new(&g, u.clone(), kappa);
+        let mut team = Team::new(threads, BarrierKind::Sleep);
+        let mut x = FermionField::<f32>::zeros(&g);
+        let stats = solver::fused::cg(&mut op, &mut team, &mut x, &mbp, 1e-6, 200);
+        assert_eq!(
+            stats.iterations, reference.iterations,
+            "{threads}-thread fused CG iteration count"
+        );
+        assert_eq!(
+            stats.history, reference.history,
+            "{threads}-thread fused CG residual history"
+        );
+        assert_eq!(stats.converged, reference.converged);
+        assert_eq!(
+            x.data, x_ref.data,
+            "{threads}-thread fused CG solution must be identical"
+        );
+    }
+
+    // the spin barrier flavor must agree too
+    let mut op = NativeMdagM::new(&g, u, kappa);
+    let mut team = Team::new(2, BarrierKind::Spin);
+    let mut x = FermionField::<f32>::zeros(&g);
+    let stats = solver::fused::cg(&mut op, &mut team, &mut x, &mbp, 1e-6, 200);
+    assert_eq!(stats.history, reference.history, "spin-barrier history");
+}
+
+/// BiCGStab: serial unfused vs fused at 1, 2, 4 threads.
+#[test]
+fn threaded_bicgstab_matches_serial_unfused() {
+    let g = geom();
+    let mut rng = Rng::seeded(613);
+    let u: GaugeField<f32> = GaugeField::<f64>::random(&g, &mut rng).to_precision();
+    let b: FermionField<f32> =
+        FermionField::<f64>::gaussian(&g, &mut rng).to_precision();
+    let kappa = 0.12f32;
+
+    let mut refop = NativeMeo::new(&g, u.clone(), kappa);
+    let mut x_ref = FermionField::<f32>::zeros(&g);
+    let reference = solver::bicgstab(&mut refop, &mut x_ref, &b, 1e-6, 200);
+    assert!(reference.iterations > 3);
+
+    for threads in [1usize, 2, 4] {
+        let mut op = NativeMeo::new(&g, u.clone(), kappa);
+        let mut team = Team::new(threads, BarrierKind::Sleep);
+        let mut x = FermionField::<f32>::zeros(&g);
+        let stats =
+            solver::fused::bicgstab(&mut op, &mut team, &mut x, &b, 1e-6, 200);
+        assert_eq!(stats.iterations, reference.iterations, "{threads} threads");
+        assert_eq!(stats.history, reference.history, "{threads} threads");
+        assert_eq!(x.data, x_ref.data, "{threads} threads");
+    }
+}
+
+/// The mixed-precision refinement must be unchanged by running its
+/// inner solves on the team.
+#[test]
+fn mixed_refinement_identical_on_team() {
+    let g = geom();
+    let mut rng = Rng::seeded(617);
+    let u = GaugeField::<f64>::random(&g, &mut rng);
+    let b = FermionField::<f64>::gaussian(&g, &mut rng);
+    let kappa = 0.12f64;
+
+    let run = |team: Option<&mut Team>| {
+        let mut outer = NativeMeo::new(&g, u.clone(), kappa);
+        let mut inner = NativeMeo::new(&g, u.to_precision::<f32>(), kappa as f32);
+        let mut x = FermionField::<f64>::zeros(&g);
+        let stats = match team {
+            Some(team) => solver::mixed_refinement_team(
+                &mut outer,
+                &mut inner,
+                &mut x,
+                &b,
+                1e-11,
+                40,
+                1e-4,
+                200,
+                InnerAlgorithm::BiCgStab,
+                team,
+            ),
+            None => solver::mixed_refinement(
+                &mut outer,
+                &mut inner,
+                &mut x,
+                &b,
+                1e-11,
+                40,
+                1e-4,
+                200,
+                InnerAlgorithm::BiCgStab,
+            ),
+        };
+        (stats, x)
+    };
+    let (serial, x_serial) = run(None);
+    assert!(serial.converged, "{serial:?}");
+
+    let mut team = Team::new(3, BarrierKind::Sleep);
+    let (teamed, x_team) = run(Some(&mut team));
+    assert_eq!(teamed.outer_iterations, serial.outer_iterations);
+    assert_eq!(teamed.inner_iterations, serial.inner_iterations);
+    assert_eq!(teamed.history, serial.history);
+    assert_eq!(teamed.inner_histories, serial.inner_histories);
+    assert_eq!(x_team.data, x_serial.data);
+}
+
+/// A zero initial guess must skip the initial operator apply (cheaper
+/// setup, same solve).
+#[test]
+fn zero_guess_skips_first_apply() {
+    let g = geom();
+    let mut rng = Rng::seeded(619);
+    let u = GaugeField::<f32>::random(&g, &mut rng);
+    let b = FermionField::<f32>::gaussian(&g, &mut rng);
+    let mut op = NativeMeo::new(&g, u.clone(), 0.12f32);
+
+    // tol = 1: |r| = |b| already satisfies |r| <= tol |b| — the solve
+    // does zero iterations, so the remaining flops are the setup's
+    let mut x = FermionField::<f32>::zeros(&g);
+    let cold = solver::bicgstab(&mut op, &mut x, &b, 1.0, 10);
+    assert!(cold.converged);
+    assert_eq!(cold.iterations, 0);
+
+    let mut xw = FermionField::<f32>::gaussian(&g, &mut rng);
+    xw.scale(1e-3);
+    let warm = solver::bicgstab(&mut op, &mut xw, &b, 1.0, 10);
+    assert!(warm.converged);
+    assert!(
+        cold.flops < warm.flops,
+        "zero guess must not pay the initial operator apply: {} vs {}",
+        cold.flops,
+        warm.flops
+    );
+
+    // and the skip does not change the solution of a real solve
+    let mut x1 = FermionField::<f32>::zeros(&g);
+    let s1 = solver::bicgstab(&mut op, &mut x1, &b, 1e-6, 200);
+    assert!(s1.converged);
+    let resid = solver::residual::operator_residual(&mut op, &x1, &b);
+    assert!(resid < 1e-5, "true residual {resid}");
+}
