@@ -1,0 +1,129 @@
+//! Multi-RHS block solve: N right-hand sides through one gauge stream.
+//!
+//! The even-odd Wilson solve is memory-bandwidth bound and most of the
+//! streamed bytes are gauge links, so solving one system at a time pins
+//! the arithmetic intensity at the paper's B/F ≈ 1.12. The block-field
+//! subsystem interleaves N right-hand sides inside each SIMD site tile
+//! and applies the hopping kernel to all of them per link load:
+//!
+//!   bytes/site/RHS = (gauge bytes + N · spinor bytes) / N
+//!
+//! which falls toward the pure-spinor floor as N grows.
+//!
+//! This example solves the same 8⁴ system with N = 4 Gaussian sources
+//! twice — once as four independent fused CGNR solves, once as one
+//! block solve — and verifies that the per-RHS residual histories are
+//! IDENTICAL (the block solver runs N independent recurrences through
+//! shared batched sweeps; masking a converged system never perturbs
+//! the stragglers), while the block pass streams the gauge field once
+//! per sweep instead of four times.
+//!
+//! ```sh
+//! cargo run --release --example solve_wilson_block
+//! ```
+
+use lqcd::coordinator::operator::{LinearOperator, MultiMdagM, NativeMdagM, NativeMeo};
+use lqcd::coordinator::{BarrierKind, Team};
+use lqcd::field::{FermionField, GaugeField, MultiFermionField};
+use lqcd::lattice::{EoLayout, Geometry, LatticeDims, Tiling};
+use lqcd::solver;
+use lqcd::util::rng::Rng;
+use lqcd::util::timer::Stopwatch;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let nrhs = 4;
+    let kappa = 0.13f32;
+    let tol = 1e-5;
+    let maxiter = 500;
+    let dims = LatticeDims::new(8, 8, 8, 8).unwrap();
+    let geom = Geometry::single_rank(dims, Tiling::new(4, 4).unwrap())
+        .map_err(|e| e.to_string())?;
+    let mut rng = Rng::seeded(20230227);
+
+    println!("== workload: random gauge on {dims}, {nrhs} Gaussian sources ==");
+    let u: GaugeField<f32> = GaugeField::random(&geom, &mut rng);
+    println!("plaquette = {:.6}", u.plaquette());
+    let sources: Vec<FermionField<f32>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&geom, &mut rng)).collect();
+
+    // CGNR right-hand sides: Mdag b_r
+    let mut meo = NativeMeo::new(&geom, u.clone(), kappa);
+    let rhs: Vec<FermionField<f32>> = sources
+        .iter()
+        .map(|b| {
+            let mut bp = b.clone();
+            bp.gamma5();
+            let mut mbp = FermionField::zeros(&geom);
+            meo.apply(&mut mbp, &bp);
+            mbp.gamma5();
+            mbp
+        })
+        .collect();
+
+    // ---- reference: N independent fused solves --------------------------
+    println!("\n== {nrhs} independent fused CGNR solves (gauge streamed per solve) ==");
+    let mut team = Team::new(2, BarrierKind::Sleep);
+    let sw = Stopwatch::start();
+    let mut independent = Vec::new();
+    for (r, b) in rhs.iter().enumerate() {
+        let mut op = NativeMdagM::new(&geom, u.clone(), kappa);
+        let mut x = FermionField::<f32>::zeros(&geom);
+        let stats = solver::fused::cg(&mut op, &mut team, &mut x, b, tol, maxiter);
+        println!(
+            "  rhs {r}: {} iterations, converged={}, |r|/|b| = {:.3e}",
+            stats.iterations, stats.converged, stats.rel_residual
+        );
+        independent.push((x, stats));
+    }
+    let indep_secs = sw.secs();
+
+    // ---- block: one batched solve, gauge streamed once per sweep --------
+    println!("\n== one block CGNR solve of all {nrhs} systems ==");
+    let b_block = MultiFermionField::from_rhs(&rhs);
+    let mut op = MultiMdagM::new(&geom, u.clone(), kappa, nrhs);
+    let mut x_block = MultiFermionField::<f32>::zeros(&geom, nrhs);
+    let sw = Stopwatch::start();
+    let stats = solver::block_cg(&mut op, &mut team, &mut x_block, &b_block, tol, maxiter);
+    let block_secs = sw.secs();
+    for (r, s) in stats.per_rhs.iter().enumerate() {
+        println!(
+            "  rhs {r}: {} iterations, converged={}, |r|/|b| = {:.3e}",
+            s.iterations, s.converged, s.rel_residual
+        );
+    }
+
+    // per-RHS trajectories must be identical to the independent solves
+    let mut worst = 0.0f64;
+    for (r, (x_ind, s_ind)) in independent.iter().enumerate() {
+        assert_eq!(
+            stats.per_rhs[r].history, s_ind.history,
+            "rhs {r}: block residual history diverged from the independent solve"
+        );
+        let xr = x_block.extract_rhs(r);
+        let mut d = xr.clone();
+        d.axpy(-1.0, x_ind);
+        let rel = (d.norm2() / x_ind.norm2().max(1e-300)).sqrt();
+        worst = worst.max(rel);
+    }
+    println!("\nper-RHS residual histories identical to the independent solves");
+    println!("worst |x_block - x_independent| / |x| = {worst:.3e}");
+    assert!(worst < 1e-6, "block solutions diverged");
+
+    // gauge-amortization arithmetic for this lattice
+    let layout = EoLayout::new(&geom);
+    let g = (8 * layout.gauge_len() * 4) as f64; // all gauge blocks, f32
+    let f = (layout.spinor_len() * 4) as f64; // one spinor field, f32
+    let sites = layout.nsites() as f64;
+    println!("\n== gauge-stream amortization (one hopping pass, model) ==");
+    for n in [1usize, 2, 4, 8] {
+        let bytes_per_site_rhs = (g + 2.0 * f * n as f64) / (sites * n as f64);
+        println!("  nrhs {n}: {bytes_per_site_rhs:>7.1} bytes/site/RHS");
+    }
+    println!(
+        "\nindependent: {indep_secs:.2}s   block: {block_secs:.2}s   \
+         ({} batched iterations, {:.0} sweeps/iter/RHS)",
+        stats.iterations, stats.sweeps_per_iter
+    );
+    println!("\nOK: block solve matches the independent solves.");
+    Ok(())
+}

@@ -144,6 +144,82 @@ pub unsafe fn eo2_range_raw<R: Real>(
     }
 }
 
+/// [`eo2_range_raw`] with the M-hat xpay tail `out = a * out + b` fused
+/// into the same pass: every site of the range gets the tail applied,
+/// and sites with incoming halo contributions accumulate them *first* —
+/// exactly the value and rounding order of `eo2_range_raw` followed by
+/// a separate full-field `FermionField::xpay(a, b)` sweep, so the fused
+/// distributed M-hat is bit-identical to the two-pass reference while
+/// saving the xpay's 3 full-field memory streams as a separate pass.
+///
+/// # Safety
+/// Same contract as [`eo2_range_raw`]; additionally `b` must point at a
+/// live field of the same layout.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn eo2_tail_range_raw<R: Real>(
+    out: crate::coordinator::team::SendPtr<R>,
+    l: &crate::lattice::EoLayout,
+    plans: &HaloPlans,
+    bufs: &RecvBuffers<R>,
+    u: &GaugeField<R>,
+    begin: usize,
+    end: usize,
+    a: R,
+    b: *const R,
+) {
+    for flat in begin..end {
+        let mut touched = false;
+        for dir in 0..4 {
+            if plans.comm[dir]
+                && (plans.up_import_pos[dir][flat] != NOT_ON_FACE
+                    || plans.down_import_pos[dir][flat] != NOT_ON_FACE)
+            {
+                touched = true;
+                break;
+            }
+        }
+        let s: SiteCoord = site_from_flat(l, flat);
+        let mut acc = Spinor::ZERO;
+        if touched {
+            for dir in 0..4 {
+                if !plans.comm[dir] {
+                    continue;
+                }
+                let pos = plans.up_import_pos[dir][flat];
+                if pos != NOT_ON_FACE {
+                    let off = pos as usize * HALF_SPINOR_F32;
+                    let h = read_half(&bufs.from_up[dir][off..off + HALF_SPINOR_F32]);
+                    let w = h.link_mul(&u.link(Dir::from_index(dir), plans.p_out, s));
+                    PROJ[dir][0].reconstruct_accum(&mut acc, &w);
+                }
+                let pos = plans.down_import_pos[dir][flat];
+                if pos != NOT_ON_FACE {
+                    let off = pos as usize * HALF_SPINOR_F32;
+                    let w = read_half(&bufs.from_down[dir][off..off + HALF_SPINOR_F32]);
+                    PROJ[dir][1].reconstruct_accum(&mut acc, &w);
+                }
+            }
+        }
+        let lc = l.site_to_lane(s);
+        for spin in 0..4 {
+            for color in 0..3 {
+                let ro = l.spinor_vec(lc.tile, spin, color, 0) + lc.lane;
+                let io = l.spinor_vec(lc.tile, spin, color, 1) + lc.lane;
+                // accumulate-then-xpay in the reference order: the halo
+                // add rounds into R first, then the tail rounds once
+                let mut re = *out.0.add(ro);
+                let mut im = *out.0.add(io);
+                if touched {
+                    re += R::from_f64(acc.s[spin][color].re);
+                    im += R::from_f64(acc.s[spin][color].im);
+                }
+                *out.0.add(ro) = a * re + *b.add(ro);
+                *out.0.add(io) = a * im + *b.add(io);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -29,8 +29,13 @@ pub struct SolverConfig {
     pub max_outer: usize,
     /// Worker-team threads the fused solver pipeline iterates on
     /// (1 = serial fused sweeps; residual histories are identical at
-    /// any value).
-    pub threads: usize,
+    /// any value). `None` (key unset) auto-derives a team size from
+    /// the machine model ([`crate::perf::auto_solver_threads`]).
+    pub threads: Option<usize>,
+    /// Right-hand sides solved together per batched sweep (1 = the
+    /// single-RHS fused pipeline; >1 routes through the multi-RHS
+    /// block solver, streaming the gauge field once for all systems).
+    pub nrhs: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -68,7 +73,8 @@ impl Default for RunConfig {
                 precision: "f32".into(),
                 inner_tol: 1e-4,
                 max_outer: 40,
-                threads: 1,
+                threads: None,
+                nrhs: 1,
             },
             parallel: ParallelConfig {
                 threads_per_rank: 4,
@@ -190,12 +196,25 @@ impl RunConfig {
                     }
                     n as usize
                 },
-                threads: {
-                    let n = doc.int_or("solver.threads", defaults.solver.threads as i64);
+                threads: match doc.get("solver.threads") {
+                    None => defaults.solver.threads,
+                    Some(_) => {
+                        let n = doc.int_or("solver.threads", 0);
+                        if n <= 0 {
+                            return Err(ConfigError {
+                                line: 0,
+                                message: format!("solver.threads must be positive (got {n})"),
+                            });
+                        }
+                        Some(n as usize)
+                    }
+                },
+                nrhs: {
+                    let n = doc.int_or("solver.nrhs", defaults.solver.nrhs as i64);
                     if n <= 0 {
                         return Err(ConfigError {
                             line: 0,
-                            message: format!("solver.threads must be positive (got {n})"),
+                            message: format!("solver.nrhs must be positive (got {n})"),
                         });
                     }
                     n as usize
@@ -225,6 +244,8 @@ mod tests {
         assert_eq!(c.solver.algorithm, "cg");
         assert_eq!(c.solver.precision, "f32");
         assert!(c.solver.inner_tol > 0.0 && c.solver.max_outer > 0);
+        assert_eq!(c.solver.threads, None, "unset threads means auto");
+        assert_eq!(c.solver.nrhs, 1);
     }
 
     #[test]
@@ -237,9 +258,18 @@ mod tests {
         assert_eq!(c.solver.precision, "mixed");
         assert!((c.solver.inner_tol - 1e-5).abs() < 1e-18);
         assert_eq!(c.solver.max_outer, 25);
-        assert_eq!(c.solver.threads, 4);
+        assert_eq!(c.solver.threads, Some(4));
         let doc = Document::parse("[solver]\nthreads = 0").unwrap();
         assert!(RunConfig::from_document(&doc).is_err(), "zero threads must fail");
+
+        let doc = Document::parse("[solver]\nnrhs = 4").unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert_eq!(c.solver.nrhs, 4);
+        assert_eq!(c.solver.threads, None, "absent key stays auto");
+        let doc = Document::parse("[solver]\nnrhs = 0").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "zero nrhs must fail");
+        let doc = Document::parse("[solver]\nnrhs = -2").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "negative nrhs must fail");
 
         let doc = Document::parse("[solver]\nprecision = \"f16\"").unwrap();
         assert!(RunConfig::from_document(&doc).is_err(), "bad precision must fail");

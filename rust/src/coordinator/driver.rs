@@ -6,7 +6,7 @@ use crate::algebra::Real;
 use crate::comm::halo::HaloPlans;
 use crate::comm::unpack::RecvBuffers;
 use crate::comm::{balance, pack, unpack, Comm, CommScalar};
-use crate::dslash::{HoppingEo, WrapMode};
+use crate::dslash::{HoppingEo, StoreTail, WrapMode};
 use crate::field::{FermionField, GaugeField};
 use crate::lattice::{Dir, Geometry, Parity};
 
@@ -36,6 +36,10 @@ pub struct DistHopping {
     pub schedule: Eo2Schedule,
     /// cached balanced chunks per parity (computed on demand)
     chunks: [Vec<(usize, usize)>; 2],
+    /// site-uniform chunks per parity, used when a fused tail makes the
+    /// EO2 pass cost uniform per site (the balanced chunks weight halo
+    /// imports only and would serialize the tail on one thread)
+    tail_chunks: [Vec<(usize, usize)>; 2],
     nthreads: usize,
 }
 
@@ -65,6 +69,8 @@ impl DistHopping {
             Eo2Schedule::Uniform => balance::uniform_chunks(plans[p].nsites, nthreads),
             Eo2Schedule::Balanced => balance::balanced_chunks(&plans[p], nthreads),
         });
+        let tail_chunks =
+            std::array::from_fn(|p| balance::uniform_chunks(plans[p].nsites, nthreads));
         DistHopping {
             geom: *geom,
             comm_dirs,
@@ -72,6 +78,7 @@ impl DistHopping {
             plans,
             schedule,
             chunks,
+            tail_chunks,
             nthreads,
         }
     }
@@ -91,6 +98,50 @@ impl DistHopping {
         comm: &mut Comm,
         team: &mut Team,
         prof: &Profiler,
+    ) {
+        self.hopping_inner(out, u, psi, p_out, comm, team, prof, None);
+    }
+
+    /// [`Self::hopping`] with the M-hat xpay tail `out = a * (H psi) + b`
+    /// fused into the pipeline instead of running as a separate
+    /// full-field sweep afterwards (ROADMAP PR 2 follow-up):
+    ///
+    /// * when no direction communicates, the bulk kernel covers every
+    ///   site and stores through [`StoreTail::Xpay`] — zero extra passes;
+    /// * otherwise the bulk stores plain and EO2 applies the tail per
+    ///   site in the same pass that merges the halo contributions
+    ///   ([`unpack::eo2_tail_range_raw`]).
+    ///
+    /// Both paths are **bit-identical** to `hopping` followed by
+    /// `FermionField::xpay(a, b)` — the fused distributed M-hat changes
+    /// memory traffic, never arithmetic.
+    #[allow(clippy::too_many_arguments)]
+    pub fn hopping_fused<R: Real + CommScalar>(
+        &self,
+        out: &mut FermionField<R>,
+        u: &GaugeField<R>,
+        psi: &FermionField<R>,
+        p_out: Parity,
+        comm: &mut Comm,
+        team: &mut Team,
+        prof: &Profiler,
+        a: R,
+        b: &FermionField<R>,
+    ) {
+        self.hopping_inner(out, u, psi, p_out, comm, team, prof, Some((a, b)));
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn hopping_inner<R: Real + CommScalar>(
+        &self,
+        out: &mut FermionField<R>,
+        u: &GaugeField<R>,
+        psi: &FermionField<R>,
+        p_out: Parity,
+        comm: &mut Comm,
+        team: &mut Team,
+        prof: &Profiler,
+        tail: Option<(R, &FermionField<R>)>,
     ) {
         let plans = &self.plans[p_out.index()];
         let rank = comm.rank;
@@ -159,6 +210,12 @@ impl DistHopping {
         }
 
         // ---------------- bulk, overlapped with the wire -------------
+        // With no communicated direction the bulk covers every site, so
+        // a fused tail can ride the kernel store itself; with halo
+        // imports pending it is applied in EO2 instead (bit-identical).
+        let any_comm = self.comm_dirs.iter().any(|&c| c);
+        let bulk_tail = if any_comm { None } else { tail };
+        let eo2_tail = if any_comm { tail } else { None };
         {
             let out_ptr = SendPtr(out.data.as_mut_ptr());
             let ntiles = self.bulk.layout.ntiles();
@@ -175,7 +232,19 @@ impl DistHopping {
                     let out_tiles = unsafe {
                         out_ptr.slice_mut(b * tile_f32, (e - b) * tile_f32)
                     };
-                    bulk.apply_tiles(out_tiles, u, psi, p_out, b, e);
+                    match bulk_tail {
+                        Some((a, bf)) => bulk.apply_tiles_fused(
+                            out_tiles,
+                            u,
+                            &psi.data,
+                            p_out,
+                            b,
+                            e,
+                            StoreTail::Xpay { a, b: &bf.data },
+                            None,
+                        ),
+                        None => bulk.apply_tiles(out_tiles, u, psi, p_out, b, e),
+                    }
                 });
             });
         }
@@ -200,7 +269,13 @@ impl DistHopping {
         {
             let out_ptr = SendPtr(out.data.as_mut_ptr());
             let layout = self.bulk.layout;
-            let chunks = &self.chunks[p_out.index()];
+            // a fused tail touches every site, so shard by site count;
+            // without one the schedule's halo-cost partition applies
+            let chunks = if eo2_tail.is_some() {
+                &self.tail_chunks[p_out.index()]
+            } else {
+                &self.chunks[p_out.index()]
+            };
             let bufs = &bufs;
             team.parallel(|tid| {
                 prof.scope(tid, Phase::Eo2, || {
@@ -208,8 +283,23 @@ impl DistHopping {
                     if b == e {
                         return;
                     }
-                    unsafe {
-                        unpack::eo2_range_raw(out_ptr, &layout, plans, bufs, u, b, e);
+                    match eo2_tail {
+                        Some((a, bf)) => unsafe {
+                            unpack::eo2_tail_range_raw(
+                                out_ptr,
+                                &layout,
+                                plans,
+                                bufs,
+                                u,
+                                b,
+                                e,
+                                a,
+                                bf.data.as_ptr(),
+                            );
+                        },
+                        None => unsafe {
+                            unpack::eo2_range_raw(out_ptr, &layout, plans, bufs, u, b, e);
+                        },
                     }
                 });
             });

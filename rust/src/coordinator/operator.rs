@@ -11,8 +11,8 @@
 
 use crate::algebra::Real;
 use crate::comm::{Comm, CommScalar};
-use crate::dslash::{full, DotCapture, HoppingEo, StoreTail};
-use crate::field::{FermionField, GaugeField};
+use crate::dslash::{full, DotCapture, HoppingEo, MultiDotCapture, MultiStoreTail, StoreTail};
+use crate::field::{FermionField, GaugeField, MultiFermionField};
 use crate::lattice::{Geometry, Parity, SC2};
 
 use super::driver::DistHopping;
@@ -367,6 +367,203 @@ impl<R: Real> FusedSolvable<R> for NativeMdagM<R> {
     }
 }
 
+/// A multi-RHS operator on block fermion fields: applies to all active
+/// right-hand sides of a [`MultiFermionField`] in one batched pass that
+/// streams the gauge field once per site, tile-sharded over the worker
+/// [`Team`] ([`crate::solver::block`] drives this).
+pub trait MultiOperator<R: Real> {
+    /// Number of interleaved right-hand sides this operator is sized for.
+    fn nrhs(&self) -> usize;
+
+    /// out_r = A psi_r for every RHS with `active[r]`; masked RHS are
+    /// neither read nor written. With `dot = Some((with, partials))` the
+    /// kernel captures `[Re⟨with_r, out_r⟩, Im⟨with_r, out_r⟩, |out_r|²]`
+    /// per (site tile, RHS) into `partials[tile * nrhs + r]` (canonical
+    /// grouping; masked entries untouched) — the block solver's `p·Ap`
+    /// reductions cost no extra sweep.
+    fn apply_multi(
+        &mut self,
+        team: &mut Team,
+        out: &mut MultiFermionField<R>,
+        psi: &MultiFermionField<R>,
+        active: &[bool],
+        dot: Option<(&MultiFermionField<R>, &mut [[f64; 3]])>,
+    );
+
+    /// Flop per application of one RHS (QXS convention); the block
+    /// solver multiplies by the number of *active* RHS so `SolveStats`
+    /// flops scale honestly with the mask, not with `nrhs`.
+    fn flops_per_apply_rhs(&self) -> u64;
+}
+
+/// Multi-RHS native single-rank M-hat: the batched analog of
+/// [`NativeMeo`], two multi-hopping phases on the team with the
+/// `-kappa²` xpay tail fused into the second store. Per-RHS results
+/// bit-match [`NativeMeo::apply`] on the demuxed fields.
+pub struct MultiNativeMeo<R: Real = f32> {
+    hop: HoppingEo,
+    u: GaugeField<R>,
+    kappa: R,
+    tmp: MultiFermionField<R>,
+    half_volume: usize,
+    nrhs: usize,
+}
+
+impl<R: Real> MultiNativeMeo<R> {
+    pub fn new(geom: &Geometry, u: GaugeField<R>, kappa: R, nrhs: usize) -> MultiNativeMeo<R> {
+        MultiNativeMeo {
+            hop: HoppingEo::new(geom),
+            u,
+            kappa,
+            tmp: MultiFermionField::zeros(geom, nrhs),
+            half_volume: geom.local.half_volume(),
+            nrhs,
+        }
+    }
+
+    pub fn kappa(&self) -> R {
+        self.kappa
+    }
+
+    /// Run one multi-hopping phase tile-sharded over the team.
+    ///
+    /// `out` is written disjointly per thread (site-tile ranges); `psi`
+    /// and the tail's `b` are read-only full block slices. Completion of
+    /// `Team::parallel` synchronizes the writes, so successive phases
+    /// can read each other's output through plain slices.
+    #[allow(clippy::too_many_arguments)]
+    fn phase(
+        hop: &HoppingEo,
+        u: &GaugeField<R>,
+        team: &mut Team,
+        out: &mut MultiFermionField<R>,
+        psi: &[R],
+        p_out: Parity,
+        nrhs: usize,
+        active: &[bool],
+        tail: MultiStoreTail<R>,
+        dot: Option<(&[R], &mut [[f64; 3]])>,
+    ) {
+        let ntiles = hop.layout.ntiles();
+        let vpt = SC2 * hop.layout.vlen();
+        let n = team.nthreads();
+        let out_ptr = SendPtr(out.data.as_mut_ptr());
+        let dot = dot.map(|(w, p)| {
+            debug_assert_eq!(p.len(), ntiles * nrhs);
+            (w, SendPtr(p.as_mut_ptr()))
+        });
+        team.parallel(|tid| {
+            let (tb, te) = chunk_range(ntiles, tid, n);
+            if tb == te {
+                return;
+            }
+            // SAFETY: site-tile ranges are disjoint per thread; each
+            // thread writes only its own out sub-tiles / partials.
+            let out_tiles =
+                unsafe { out_ptr.slice_mut(tb * nrhs * vpt, (te - tb) * nrhs * vpt) };
+            let cap = dot.map(|(w, p)| MultiDotCapture {
+                with: w,
+                partials: unsafe { p.slice_mut(tb * nrhs, (te - tb) * nrhs) },
+            });
+            hop.apply_tiles_multi(out_tiles, u, psi, p_out, tb, te, nrhs, active, tail, cap);
+        });
+    }
+}
+
+impl<R: Real> MultiOperator<R> for MultiNativeMeo<R> {
+    fn nrhs(&self) -> usize {
+        self.nrhs
+    }
+
+    fn apply_multi(
+        &mut self,
+        team: &mut Team,
+        out: &mut MultiFermionField<R>,
+        psi: &MultiFermionField<R>,
+        active: &[bool],
+        dot: Option<(&MultiFermionField<R>, &mut [[f64; 3]])>,
+    ) {
+        debug_assert_eq!(psi.nrhs, self.nrhs);
+        debug_assert_eq!(out.nrhs, self.nrhs);
+        let a = -(self.kappa * self.kappa);
+        // phase 1: tmp = H_oe psi
+        let MultiNativeMeo { hop, u, tmp, nrhs, .. } = self;
+        Self::phase(hop, u, team, tmp, &psi.data, Parity::Odd, *nrhs, active, MultiStoreTail::Assign, None);
+        // phase 2: out = psi - kappa² H_eo tmp (+ capture)
+        let dot = dot.map(|(w, p)| (&w.data[..], p));
+        Self::phase(
+            hop, u, team, out, &tmp.data, Parity::Even, *nrhs, active,
+            MultiStoreTail::Xpay { a, b: &psi.data },
+            dot,
+        );
+    }
+
+    fn flops_per_apply_rhs(&self) -> u64 {
+        crate::dslash::flops::meo_flops(self.half_volume)
+    }
+}
+
+/// Multi-RHS native normal operator M-hat^dag M-hat: four batched
+/// hopping phases with both gamma5/xpay tails fused into the
+/// even-parity stores, like [`NativeMdagM`] but for N interleaved RHS.
+pub struct MultiMdagM<R: Real = f32> {
+    inner: MultiNativeMeo<R>,
+    mid: MultiFermionField<R>,
+}
+
+impl<R: Real> MultiMdagM<R> {
+    pub fn new(geom: &Geometry, u: GaugeField<R>, kappa: R, nrhs: usize) -> MultiMdagM<R> {
+        MultiMdagM {
+            inner: MultiNativeMeo::new(geom, u, kappa, nrhs),
+            mid: MultiFermionField::zeros(geom, nrhs),
+        }
+    }
+
+    pub fn meo(&mut self) -> &mut MultiNativeMeo<R> {
+        &mut self.inner
+    }
+}
+
+impl<R: Real> MultiOperator<R> for MultiMdagM<R> {
+    fn nrhs(&self) -> usize {
+        self.inner.nrhs
+    }
+
+    fn apply_multi(
+        &mut self,
+        team: &mut Team,
+        out: &mut MultiFermionField<R>,
+        psi: &MultiFermionField<R>,
+        active: &[bool],
+        dot: Option<(&MultiFermionField<R>, &mut [[f64; 3]])>,
+    ) {
+        let MultiMdagM { inner, mid } = self;
+        let MultiNativeMeo { hop, u, tmp, nrhs, kappa, .. } = inner;
+        let a = -(*kappa * *kappa);
+        let nrhs = *nrhs;
+        debug_assert_eq!(psi.nrhs, nrhs);
+        // mid = g5 (M psi)
+        MultiNativeMeo::phase(hop, u, team, tmp, &psi.data, Parity::Odd, nrhs, active, MultiStoreTail::Assign, None);
+        MultiNativeMeo::phase(
+            hop, u, team, mid, &tmp.data, Parity::Even, nrhs, active,
+            MultiStoreTail::Gamma5Xpay { a, b: &psi.data },
+            None,
+        );
+        // out = g5 (M mid)
+        MultiNativeMeo::phase(hop, u, team, tmp, &mid.data, Parity::Odd, nrhs, active, MultiStoreTail::Assign, None);
+        let dot = dot.map(|(w, p)| (&w.data[..], p));
+        MultiNativeMeo::phase(
+            hop, u, team, out, &tmp.data, Parity::Even, nrhs, active,
+            MultiStoreTail::Gamma5Xpay { a, b: &mid.data },
+            dot,
+        );
+    }
+
+    fn flops_per_apply_rhs(&self) -> u64 {
+        2 * self.inner.flops_per_apply_rhs()
+    }
+}
+
 /// Distributed M-hat over the rank world: two distributed hoppings plus
 /// the axpy; dot-product reductions go through the communicator.
 pub struct DistMeo<'a, R: Real + CommScalar = f32> {
@@ -405,11 +602,24 @@ impl<'a, R: Real + CommScalar> DistMeo<'a, R> {
 
 impl<R: Real + CommScalar> LinearOperator<R> for DistMeo<'_, R> {
     fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>) {
+        // M-hat = 1 - kappa² H_eo H_oe with the xpay tail fused into the
+        // second hopping's pipeline (bulk store when nothing
+        // communicates, the EO2 merge pass otherwise) — bit-identical to
+        // the separate xpay sweep this replaces, one fewer full-field
+        // pass per apply.
         self.dist
             .hopping(&mut self.tmp, self.u, psi, Parity::Odd, self.comm, self.team, self.prof);
-        self.dist
-            .hopping(out, self.u, &self.tmp, Parity::Even, self.comm, self.team, self.prof);
-        out.xpay(-(self.kappa * self.kappa), psi);
+        self.dist.hopping_fused(
+            out,
+            self.u,
+            &self.tmp,
+            Parity::Even,
+            self.comm,
+            self.team,
+            self.prof,
+            -(self.kappa * self.kappa),
+            psi,
+        );
     }
 
     fn flops_per_apply(&self) -> u64 {

@@ -286,15 +286,17 @@ impl HoppingEo {
     }
 }
 
-/// The SC2*V (or CC2*V) block of one tile.
+/// The SC2*V (or CC2*V) block of one tile. (`pub(super)`: shared with
+/// the multi-RHS kernel in [`super::multi`], which indexes spinor data
+/// by *sub-tile* — `site_tile * nrhs + rhs` — through the same helper.)
 #[inline]
-fn tile_slice<R: Real, const V: usize>(data: &[R], tile: usize, ncomp: usize) -> &[R] {
+pub(super) fn tile_slice<R: Real, const V: usize>(data: &[R], tile: usize, ncomp: usize) -> &[R] {
     &data[tile * ncomp * V..(tile + 1) * ncomp * V]
 }
 
 /// Apply a lane plan to every component vector of a tile block.
 #[inline]
-fn shuffle<R: Real, const V: usize>(
+pub(super) fn shuffle<R: Real, const V: usize>(
     dst: &mut [R],
     cur: &[R],
     nbr: &[R],
@@ -498,7 +500,7 @@ fn su3_mul_reconstruct<R: Real, const V: usize>(
 
 /// Forward hop on one tile: project, multiply U, reconstruct-accumulate.
 #[inline]
-fn hop_fwd<R: Real, const V: usize>(
+pub(super) fn hop_fwd<R: Real, const V: usize>(
     acc: &mut [R],
     h: &mut [R],
     ps: &[R],
@@ -511,7 +513,7 @@ fn hop_fwd<R: Real, const V: usize>(
 
 /// Backward hop on one tile: project, multiply U^dag, reconstruct.
 #[inline]
-fn hop_bwd<R: Real, const V: usize>(
+pub(super) fn hop_bwd<R: Real, const V: usize>(
     acc: &mut [R],
     h: &mut [R],
     ps: &[R],

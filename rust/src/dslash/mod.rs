@@ -8,6 +8,9 @@
 //!   ACLE" comparison, ~10x slower on A64FX).
 //! * [`full`] — full Wilson matrix / even-odd preconditioned operator
 //!   compositions on top of a hopping kernel.
+//! * [`multi`] — the multi-RHS batched hopping: one gauge stream feeds
+//!   N interleaved right-hand sides (block-field layout), with per-RHS
+//!   fused store tails, dot capture and convergence masking.
 //! * [`shift`] — the `sel`/`tbl`/`ext` lane-shuffle engine.
 //! * [`clover`] — site-local clover `D_ee`/`D_oo` blocks (QWS context).
 //! * [`flops`] — flop accounting (QXS 1368 flop/site convention).
@@ -17,9 +20,11 @@ pub mod eo;
 pub mod flops;
 pub mod full;
 pub mod gather;
+pub mod multi;
 pub mod scalar;
 pub mod shift;
 
 pub use eo::{DotCapture, HoppingEo, StoreTail, WrapMode};
+pub use multi::{MultiDotCapture, MultiStoreTail};
 pub use gather::HoppingGather;
 pub use scalar::HoppingScalar;

@@ -1,0 +1,272 @@
+//! Multi-RHS even-odd hopping: one gauge stream, N spinors.
+//!
+//! The single-RHS kernel ([`super::eo`]) is memory-bandwidth bound, and
+//! most of what it streams is the gauge field: per output site a hopping
+//! pass reads 8 links (144 values at f32) against one spinor in and one
+//! out (48 values). Batching N right-hand sides against one gauge load
+//! multiplies the kernel's arithmetic intensity by ~N on the link part —
+//! the block-field layout of [`crate::field::block`] interleaves the N
+//! spinors *inside* each site tile precisely so the per-(site, hop) link
+//! tile stays in registers/L1 while it is applied to all N sub-tiles
+//! back to back.
+//!
+//! The per-RHS arithmetic is byte-for-byte the single kernel's: the hop
+//! order per site tile, the projection/SU(3)/reconstruction helpers, the
+//! fused store tails and the dot capture are all shared with
+//! [`super::eo`], so applying the multi kernel to a block field is
+//! **bitwise identical** (at any precision) to applying [`HoppingEo`] to
+//! each demuxed RHS separately.
+//!
+//! RHS whose `active` flag is false are skipped entirely — no shuffle,
+//! no hops, no store, no capture — which is how the block solver's
+//! per-RHS convergence masking stops converged systems from costing
+//! kernel work.
+
+use crate::algebra::Real;
+use crate::field::{blas, GaugeField};
+use crate::lattice::{Parity, CC2, SC2};
+
+use super::eo::{hop_bwd, hop_fwd, shuffle, tile_slice, HoppingEo, WrapMode};
+
+/// Fused store tail of the multi-RHS kernel: the same expressions as
+/// [`super::eo::StoreTail`], with `b` a *block-field* data slice
+/// (indexed by sub-tile `site_tile * nrhs + rhs`, like the output).
+#[derive(Clone, Copy)]
+pub enum MultiStoreTail<'a, R: Real> {
+    /// out = acc
+    Assign,
+    /// out = a * acc + b (per RHS)
+    Xpay { a: R, b: &'a [R] },
+    /// out = gamma5 * (a * acc + b) (per RHS)
+    Gamma5Xpay { a: R, b: &'a [R] },
+}
+
+/// In-kernel per-(site tile, RHS) dot capture:
+/// `partials[(tile - tile_begin) * nrhs + r] = [Re⟨with_r, out_r⟩,
+/// Im⟨with_r, out_r⟩, |out_r|²]` in the canonical [`blas`] grouping.
+/// Entries of masked RHS are left untouched.
+pub struct MultiDotCapture<'a, R: Real> {
+    /// block-field data slice, indexed by absolute sub-tile
+    pub with: &'a [R],
+    /// `(tile_end - tile_begin) * nrhs` entries
+    pub partials: &'a mut [[f64; 3]],
+}
+
+impl HoppingEo {
+    /// Multi-RHS analog of [`HoppingEo::apply_tiles_fused`]: apply the
+    /// hopping to the *site*-tile range `[tile_begin, tile_end)` of a
+    /// block field with `nrhs` interleaved right-hand sides.
+    ///
+    /// `out_tiles` covers `(tile_end - tile_begin) * nrhs` sub-tiles;
+    /// `psi` (and the tail's `b` / capture's `with`) are full block-field
+    /// data slices. Sub-tiles of RHS with `active[r] == false` are not
+    /// read or written.
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_tiles_multi<R: Real>(
+        &self,
+        out_tiles: &mut [R],
+        u: &GaugeField<R>,
+        psi: &[R],
+        p_out: Parity,
+        tile_begin: usize,
+        tile_end: usize,
+        nrhs: usize,
+        active: &[bool],
+        tail: MultiStoreTail<R>,
+        dot: Option<MultiDotCapture<R>>,
+    ) {
+        debug_assert_eq!(active.len(), nrhs);
+        debug_assert_eq!(
+            out_tiles.len(),
+            (tile_end - tile_begin) * nrhs * SC2 * self.layout.vlen()
+        );
+        match self.layout.vlen() {
+            2 => self.apply_multi_v::<R, 2>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            4 => self.apply_multi_v::<R, 4>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            8 => self.apply_multi_v::<R, 8>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            16 => self.apply_multi_v::<R, 16>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            32 => self.apply_multi_v::<R, 32>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            v => panic!("unsupported VLEN {v} (expected 2/4/8/16/32)"),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn apply_multi_v<R: Real, const V: usize>(
+        &self,
+        out_tiles: &mut [R],
+        u: &GaugeField<R>,
+        psi: &[R],
+        p_out: Parity,
+        tile_begin: usize,
+        tile_end: usize,
+        nrhs: usize,
+        active: &[bool],
+        tail: MultiStoreTail<R>,
+        mut dot: Option<MultiDotCapture<R>>,
+    ) {
+        let l = &self.layout;
+        debug_assert_eq!(l.vlen(), V);
+        let p_in = p_out.flip();
+        let (nxt, nyt, nz, nt) = (l.nxt, l.nyt, l.nz, l.nt);
+        let vy = l.tiling.vy();
+
+        // scratch: the shifted-spinor / half-spinor tiles are reused
+        // sequentially per RHS; the accumulators are per-RHS so every
+        // hop's link data is consumed by all N spinors while hot
+        let mut ps = vec![R::ZERO; SC2 * V];
+        let mut us = vec![R::ZERO; CC2 * V];
+        let mut h = vec![R::ZERO; 12 * V];
+        let mut acc = vec![R::ZERO; nrhs * SC2 * V];
+
+        // sub-tile index of (site tile, rhs) into block-field storage
+        let st = |tile: usize, r: usize| tile * nrhs + r;
+
+        for tile in tile_begin..tile_end {
+            let (t, z, yt, xt) = l.tile_coords(tile);
+            let b = (yt * vy + z + t + p_out.index()) % 2;
+            acc.iter_mut().for_each(|a| *a = R::ZERO);
+
+            // ---------------- X direction ----------------
+            {
+                let skip = self.wrap[0] == WrapMode::SkipBoundary;
+                let nbr = l.tile_index(t, z, yt, (xt + 1) % nxt);
+                let mask = skip && xt + 1 == nxt;
+                let plan = &self.plans.x_plus[b];
+                let u_tile = tile_slice::<R, V>(&u.data[0][p_out.index()], tile, CC2);
+                for r in 0..nrhs {
+                    if !active[r] {
+                        continue;
+                    }
+                    shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, st(tile, r), SC2), tile_slice::<R, V>(psi, st(nbr, r), SC2), plan, mask, SC2);
+                    hop_fwd::<R, V>(&mut acc[r * SC2 * V..(r + 1) * SC2 * V], &mut h, &ps, u_tile, &crate::algebra::PROJ[0][0]);
+                }
+
+                let nbr = l.tile_index(t, z, yt, (xt + nxt - 1) % nxt);
+                let mask = skip && xt == 0;
+                let plan = &self.plans.x_minus[b];
+                // the backward link shuffle is RHS-independent: once per hop
+                shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[0][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[0][p_in.index()], nbr, CC2), plan, false, CC2);
+                for r in 0..nrhs {
+                    if !active[r] {
+                        continue;
+                    }
+                    shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, st(tile, r), SC2), tile_slice::<R, V>(psi, st(nbr, r), SC2), plan, mask, SC2);
+                    hop_bwd::<R, V>(&mut acc[r * SC2 * V..(r + 1) * SC2 * V], &mut h, &ps, &us, &crate::algebra::PROJ[0][1]);
+                }
+            }
+
+            // ---------------- Y direction ----------------
+            {
+                let skip = self.wrap[1] == WrapMode::SkipBoundary;
+                let nbr = l.tile_index(t, z, (yt + 1) % nyt, xt);
+                let mask = skip && yt + 1 == nyt;
+                let plan = &self.plans.y_plus;
+                let u_tile = tile_slice::<R, V>(&u.data[1][p_out.index()], tile, CC2);
+                for r in 0..nrhs {
+                    if !active[r] {
+                        continue;
+                    }
+                    shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, st(tile, r), SC2), tile_slice::<R, V>(psi, st(nbr, r), SC2), plan, mask, SC2);
+                    hop_fwd::<R, V>(&mut acc[r * SC2 * V..(r + 1) * SC2 * V], &mut h, &ps, u_tile, &crate::algebra::PROJ[1][0]);
+                }
+
+                let nbr = l.tile_index(t, z, (yt + nyt - 1) % nyt, xt);
+                let mask = skip && yt == 0;
+                let plan = &self.plans.y_minus;
+                shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[1][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[1][p_in.index()], nbr, CC2), plan, false, CC2);
+                for r in 0..nrhs {
+                    if !active[r] {
+                        continue;
+                    }
+                    shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, st(tile, r), SC2), tile_slice::<R, V>(psi, st(nbr, r), SC2), plan, mask, SC2);
+                    hop_bwd::<R, V>(&mut acc[r * SC2 * V..(r + 1) * SC2 * V], &mut h, &ps, &us, &crate::algebra::PROJ[1][1]);
+                }
+            }
+
+            // ---------------- Z direction (whole-tile strides) ----------
+            {
+                let skip = self.wrap[2] == WrapMode::SkipBoundary;
+                if !(skip && z + 1 == nz) {
+                    let nbr = l.tile_index(t, (z + 1) % nz, yt, xt);
+                    let u_tile = tile_slice::<R, V>(&u.data[2][p_out.index()], tile, CC2);
+                    for r in 0..nrhs {
+                        if !active[r] {
+                            continue;
+                        }
+                        hop_fwd::<R, V>(&mut acc[r * SC2 * V..(r + 1) * SC2 * V], &mut h, tile_slice::<R, V>(psi, st(nbr, r), SC2), u_tile, &crate::algebra::PROJ[2][0]);
+                    }
+                }
+                if !(skip && z == 0) {
+                    let nbr = l.tile_index(t, (z + nz - 1) % nz, yt, xt);
+                    let u_tile = tile_slice::<R, V>(&u.data[2][p_in.index()], nbr, CC2);
+                    for r in 0..nrhs {
+                        if !active[r] {
+                            continue;
+                        }
+                        hop_bwd::<R, V>(&mut acc[r * SC2 * V..(r + 1) * SC2 * V], &mut h, tile_slice::<R, V>(psi, st(nbr, r), SC2), u_tile, &crate::algebra::PROJ[2][1]);
+                    }
+                }
+            }
+
+            // ---------------- T direction (whole-tile strides) ----------
+            {
+                let skip = self.wrap[3] == WrapMode::SkipBoundary;
+                if !(skip && t + 1 == nt) {
+                    let nbr = l.tile_index((t + 1) % nt, z, yt, xt);
+                    let u_tile = tile_slice::<R, V>(&u.data[3][p_out.index()], tile, CC2);
+                    for r in 0..nrhs {
+                        if !active[r] {
+                            continue;
+                        }
+                        hop_fwd::<R, V>(&mut acc[r * SC2 * V..(r + 1) * SC2 * V], &mut h, tile_slice::<R, V>(psi, st(nbr, r), SC2), u_tile, &crate::algebra::PROJ[3][0]);
+                    }
+                }
+                if !(skip && t == 0) {
+                    let nbr = l.tile_index((t + nt - 1) % nt, z, yt, xt);
+                    let u_tile = tile_slice::<R, V>(&u.data[3][p_in.index()], nbr, CC2);
+                    for r in 0..nrhs {
+                        if !active[r] {
+                            continue;
+                        }
+                        hop_bwd::<R, V>(&mut acc[r * SC2 * V..(r + 1) * SC2 * V], &mut h, tile_slice::<R, V>(psi, st(nbr, r), SC2), u_tile, &crate::algebra::PROJ[3][1]);
+                    }
+                }
+            }
+
+            // store per RHS, applying the fused tail (same expressions as
+            // the single kernel, so per-RHS results bit-match it)
+            let rel = tile - tile_begin;
+            for r in 0..nrhs {
+                if !active[r] {
+                    continue;
+                }
+                let ar = &acc[r * SC2 * V..(r + 1) * SC2 * V];
+                let dst = &mut out_tiles
+                    [(rel * nrhs + r) * SC2 * V..(rel * nrhs + r + 1) * SC2 * V];
+                match tail {
+                    MultiStoreTail::Assign => dst.copy_from_slice(ar),
+                    MultiStoreTail::Xpay { a, b } => {
+                        let bt = tile_slice::<R, V>(b, st(tile, r), SC2);
+                        for i in 0..SC2 * V {
+                            dst[i] = a * ar[i] + bt[i];
+                        }
+                    }
+                    MultiStoreTail::Gamma5Xpay { a, b } => {
+                        let bt = tile_slice::<R, V>(b, st(tile, r), SC2);
+                        for c in 0..SC2 {
+                            let lower = c / 6 >= 2;
+                            for i in c * V..(c + 1) * V {
+                                let v = a * ar[i] + bt[i];
+                                dst[i] = if lower { -v } else { v };
+                            }
+                        }
+                    }
+                }
+                if let Some(cap) = dot.as_mut() {
+                    let wt = tile_slice::<R, V>(cap.with, st(tile, r), SC2);
+                    cap.partials[rel * nrhs + r] = blas::cdot_norm2_tile(wt, dst, V);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,497 @@
+//! Multi-RHS block fermion field: N right-hand sides interleaved
+//! RHS-innermost so one pass over the gauge field can feed all of them.
+//!
+//! ## Layout
+//!
+//! A [`MultiFermionField`] stores its N spinors tile-interleaved:
+//!
+//! ```text
+//! [site_tile][rhs][ND][NC][2][VLEN]
+//! ```
+//!
+//! i.e. the RHS axis sits *inside* the site-tile axis and *outside* the
+//! component/lane axes. Each `(site_tile, rhs)` block is exactly one
+//! standard AoSoA spinor tile (`SC2 * VLEN` values), so every tile-level
+//! kernel of [`super::blas`] and the hopping kernel's per-tile machinery
+//! apply unchanged to one RHS sub-tile — and the N sub-tiles of one site
+//! tile are contiguous in memory, which is what lets the multi-RHS
+//! dslash ([`crate::dslash::multi`]) stream the site's gauge links once
+//! while applying them to all N spinors back to back in cache.
+//!
+//! ## Reduction contract
+//!
+//! All per-RHS reductions iterate site tiles in tile order for a fixed
+//! RHS and use the canonical per-tile grouping of [`super::blas`]; a
+//! per-RHS reduction over the block field is therefore **bitwise
+//! identical** to the same reduction on the demuxed
+//! [`FermionField`] — the property the block solver's "per-RHS history
+//! matches the independent solve" guarantee rests on.
+//!
+//! ## Masking
+//!
+//! Every fused sweep here takes an `active` mask (one flag per RHS);
+//! masked-out RHS are skipped entirely, so a converged system stops
+//! costing BLAS-1 (and, via the masked dslash, kernel) work while the
+//! stragglers keep iterating. Masked data is left untouched — frozen at
+//! its converged value.
+
+use super::blas;
+use super::FermionField;
+use crate::algebra::{Complex, Real};
+use crate::lattice::{EoLayout, Geometry};
+
+/// N right-hand-side spinor fields of one parity, tile-interleaved.
+#[derive(Clone, Debug)]
+pub struct MultiFermionField<R: Real = f32> {
+    pub layout: EoLayout,
+    pub nrhs: usize,
+    /// `[site_tile][rhs][SC2][vlen]`
+    pub data: Vec<R>,
+}
+
+impl<R: Real> MultiFermionField<R> {
+    pub fn zeros(geom: &Geometry, nrhs: usize) -> MultiFermionField<R> {
+        assert!(nrhs >= 1, "nrhs must be at least 1");
+        let layout = EoLayout::new(geom);
+        MultiFermionField {
+            data: vec![R::ZERO; layout.spinor_len() * nrhs],
+            nrhs,
+            layout,
+        }
+    }
+
+    /// Same layout, RHS count and length as `self`, zero content.
+    pub fn zeros_like(&self) -> MultiFermionField<R> {
+        MultiFermionField {
+            layout: self.layout,
+            nrhs: self.nrhs,
+            data: vec![R::ZERO; self.data.len()],
+        }
+    }
+
+    /// Mux N ordinary fields (all of the same layout) into one block
+    /// field; RHS `r` becomes sub-tile `r` of every site tile.
+    pub fn from_rhs(fields: &[FermionField<R>]) -> MultiFermionField<R> {
+        assert!(!fields.is_empty(), "need at least one RHS");
+        let mut m = MultiFermionField {
+            layout: fields[0].layout,
+            nrhs: fields.len(),
+            data: vec![R::ZERO; fields[0].data.len() * fields.len()],
+        };
+        for (r, f) in fields.iter().enumerate() {
+            m.set_rhs(r, f);
+        }
+        m
+    }
+
+    /// Number of SIMD site tiles (the sharding unit of the thread team;
+    /// each holds `nrhs` RHS sub-tiles).
+    #[inline]
+    pub fn site_tiles(&self) -> usize {
+        self.layout.ntiles()
+    }
+
+    /// Scalar values per RHS sub-tile.
+    #[inline]
+    pub fn vals_per_tile(&self) -> usize {
+        blas::vals_per_tile(self.layout.vlen())
+    }
+
+    /// Scalar values of one RHS (= an ordinary field's `data.len()`).
+    #[inline]
+    pub fn rhs_len(&self) -> usize {
+        self.layout.spinor_len()
+    }
+
+    /// The `[site_tile][rhs]` sub-tile span start, in scalar values.
+    #[inline]
+    fn sub_tile_off(&self, site_tile: usize, r: usize) -> usize {
+        (site_tile * self.nrhs + r) * self.vals_per_tile()
+    }
+
+    /// Demux RHS `r` into an ordinary field (exact copy).
+    pub fn extract_rhs(&self, r: usize) -> FermionField<R> {
+        assert!(r < self.nrhs);
+        let vpt = self.vals_per_tile();
+        let mut f = FermionField {
+            layout: self.layout,
+            data: vec![R::ZERO; self.rhs_len()],
+        };
+        for t in 0..self.site_tiles() {
+            let src = self.sub_tile_off(t, r);
+            f.data[t * vpt..(t + 1) * vpt]
+                .copy_from_slice(&self.data[src..src + vpt]);
+        }
+        f
+    }
+
+    /// Demux all RHS.
+    pub fn demux(&self) -> Vec<FermionField<R>> {
+        (0..self.nrhs).map(|r| self.extract_rhs(r)).collect()
+    }
+
+    /// Mux an ordinary field into RHS slot `r` (exact copy).
+    pub fn set_rhs(&mut self, r: usize, f: &FermionField<R>) {
+        assert!(r < self.nrhs);
+        assert_eq!(f.data.len(), self.rhs_len(), "layout mismatch");
+        let vpt = self.vals_per_tile();
+        for t in 0..self.site_tiles() {
+            let dst = self.sub_tile_off(t, r);
+            self.data[dst..dst + vpt].copy_from_slice(&f.data[t * vpt..(t + 1) * vpt]);
+        }
+    }
+
+    /// Zero the data of RHS `r` only.
+    pub fn fill_rhs(&mut self, r: usize, v: R) {
+        assert!(r < self.nrhs);
+        let vpt = self.vals_per_tile();
+        for t in 0..self.site_tiles() {
+            let dst = self.sub_tile_off(t, r);
+            self.data[dst..dst + vpt].iter_mut().for_each(|x| *x = v);
+        }
+    }
+
+    /// True when every component of every RHS is (±)0.
+    pub fn is_zero(&self) -> bool {
+        self.data.iter().all(|&v| v == R::ZERO)
+    }
+
+    /// Per-RHS |x_r|², canonical per-tile grouping in site-tile order —
+    /// bitwise equal to `extract_rhs(r).norm2()`.
+    pub fn norm2_per_rhs(&self) -> Vec<f64> {
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        let mut out = vec![0.0f64; self.nrhs];
+        for t in 0..self.site_tiles() {
+            for (r, acc) in out.iter_mut().enumerate() {
+                let off = (t * self.nrhs + r) * vpt;
+                *acc += blas::norm2_tile(&self.data[off..off + vpt], vlen);
+            }
+        }
+        out
+    }
+
+    /// Per-RHS complex ⟨self_r, o_r⟩ (self conjugated), canonical
+    /// grouping — bitwise equal to the demuxed `FermionField::dot`.
+    pub fn dot_per_rhs(&self, o: &MultiFermionField<R>) -> Vec<Complex> {
+        debug_assert_eq!(self.data.len(), o.data.len());
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        let mut out = vec![Complex::ZERO; self.nrhs];
+        for t in 0..self.site_tiles() {
+            for (r, acc) in out.iter_mut().enumerate() {
+                let off = (t * self.nrhs + r) * vpt;
+                let [re, im, _] = blas::cdot_norm2_tile(
+                    &self.data[off..off + vpt],
+                    &o.data[off..off + vpt],
+                    vlen,
+                );
+                acc.re += re;
+                acc.im += im;
+            }
+        }
+        out
+    }
+
+    /// Per-RHS fused `self_r += a_r * o_r` with |self_r|² capture, for
+    /// active RHS only. `rr[r]` is overwritten for active RHS and left
+    /// untouched for masked ones.
+    pub fn axpy_norm2_masked(
+        &mut self,
+        a: &[R],
+        o: &MultiFermionField<R>,
+        active: &[bool],
+        rr: &mut [f64],
+    ) {
+        debug_assert_eq!(self.data.len(), o.data.len());
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        for (r, on) in active.iter().enumerate() {
+            if *on {
+                rr[r] = 0.0;
+            }
+        }
+        for t in 0..self.site_tiles() {
+            for r in 0..self.nrhs {
+                if !active[r] {
+                    continue;
+                }
+                let off = (t * self.nrhs + r) * vpt;
+                let xt = &mut self.data[off..off + vpt];
+                blas::axpy_slice(xt, a[r], &o.data[off..off + vpt]);
+                rr[r] += blas::norm2_tile(xt, vlen);
+            }
+        }
+    }
+
+    /// Per-RHS `p_r = beta_r * p_r + r_r` for active RHS.
+    pub fn xpay_masked(&mut self, beta: &[R], o: &MultiFermionField<R>, active: &[bool]) {
+        debug_assert_eq!(self.data.len(), o.data.len());
+        let vpt = self.vals_per_tile();
+        for t in 0..self.site_tiles() {
+            for r in 0..self.nrhs {
+                if !active[r] {
+                    continue;
+                }
+                let off = (t * self.nrhs + r) * vpt;
+                blas::xpay_slice(&mut self.data[off..off + vpt], beta[r], &o.data[off..off + vpt]);
+            }
+        }
+    }
+
+    /// Per-RHS complex `self_r += a_r * o_r` for active RHS.
+    pub fn caxpy_masked(&mut self, a: &[Complex], o: &MultiFermionField<R>, active: &[bool]) {
+        debug_assert_eq!(self.data.len(), o.data.len());
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        for t in 0..self.site_tiles() {
+            for r in 0..self.nrhs {
+                if !active[r] {
+                    continue;
+                }
+                let off = (t * self.nrhs + r) * vpt;
+                blas::caxpy_slice(
+                    &mut self.data[off..off + vpt],
+                    R::from_f64(a[r].re),
+                    R::from_f64(a[r].im),
+                    &o.data[off..off + vpt],
+                    vlen,
+                );
+            }
+        }
+    }
+
+    /// Per-RHS fused complex `self_r += a_r * t_r` with capture of
+    /// `[Re⟨d_r, self_r⟩, Im⟨d_r, self_r⟩, |self_r|²]` for active RHS
+    /// (canonical grouping; `d = None` fills only the norm² slot).
+    pub fn caxpy_capture_masked(
+        &mut self,
+        a: &[Complex],
+        t: &MultiFermionField<R>,
+        d: Option<&MultiFermionField<R>>,
+        active: &[bool],
+        captures: &mut [[f64; 3]],
+    ) {
+        debug_assert_eq!(self.data.len(), t.data.len());
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        for (r, on) in active.iter().enumerate() {
+            if *on {
+                captures[r] = [0.0; 3];
+            }
+        }
+        for st in 0..self.site_tiles() {
+            for r in 0..self.nrhs {
+                if !active[r] {
+                    continue;
+                }
+                let off = (st * self.nrhs + r) * vpt;
+                let rt = &mut self.data[off..off + vpt];
+                blas::caxpy_slice(
+                    rt,
+                    R::from_f64(a[r].re),
+                    R::from_f64(a[r].im),
+                    &t.data[off..off + vpt],
+                    vlen,
+                );
+                let part = match d {
+                    Some(d) => blas::cdot_norm2_tile(&d.data[off..off + vpt], rt, vlen),
+                    None => [0.0, 0.0, blas::norm2_tile(rt, vlen)],
+                };
+                for (acc, v) in captures[r].iter_mut().zip(part) {
+                    *acc += v;
+                }
+            }
+        }
+    }
+
+    /// Per-RHS fused `self_r += a_r * p_r + w_r * s_r` for active RHS
+    /// (the BiCGStab x-update).
+    pub fn caxpy2_masked(
+        &mut self,
+        a: &[Complex],
+        p: &MultiFermionField<R>,
+        w: &[Complex],
+        s: &MultiFermionField<R>,
+        active: &[bool],
+    ) {
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        for t in 0..self.site_tiles() {
+            for r in 0..self.nrhs {
+                if !active[r] {
+                    continue;
+                }
+                let off = (t * self.nrhs + r) * vpt;
+                blas::caxpy2_slice(
+                    &mut self.data[off..off + vpt],
+                    R::from_f64(a[r].re),
+                    R::from_f64(a[r].im),
+                    &p.data[off..off + vpt],
+                    R::from_f64(w[r].re),
+                    R::from_f64(w[r].im),
+                    &s.data[off..off + vpt],
+                    vlen,
+                );
+            }
+        }
+    }
+
+    /// Per-RHS fused `self_r = beta_r (self_r - omega_r v_r) + r_r` for
+    /// active RHS (the BiCGStab search-direction update; `mo = -omega`).
+    pub fn p_update_masked(
+        &mut self,
+        mo: &[Complex],
+        v: &MultiFermionField<R>,
+        beta: &[Complex],
+        rr: &MultiFermionField<R>,
+        active: &[bool],
+    ) {
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        for t in 0..self.site_tiles() {
+            for r in 0..self.nrhs {
+                if !active[r] {
+                    continue;
+                }
+                let off = (t * self.nrhs + r) * vpt;
+                blas::p_update_slice(
+                    &mut self.data[off..off + vpt],
+                    R::from_f64(mo[r].re),
+                    R::from_f64(mo[r].im),
+                    &v.data[off..off + vpt],
+                    R::from_f64(beta[r].re),
+                    R::from_f64(beta[r].im),
+                    &rr.data[off..off + vpt],
+                    vlen,
+                );
+            }
+        }
+    }
+}
+
+/// The fused block-CG update, per active RHS: `x_r += alpha_r p_r`,
+/// `r_r -= alpha_r ap_r`, and |r_r|² into `rr[r]` — one streaming pass
+/// over the interleaved storage, elementwise identical per RHS to
+/// [`blas::cg_update_slice`] on the demuxed fields.
+pub fn cg_update_masked<R: Real>(
+    x: &mut MultiFermionField<R>,
+    r: &mut MultiFermionField<R>,
+    p: &MultiFermionField<R>,
+    ap: &MultiFermionField<R>,
+    alpha: &[R],
+    active: &[bool],
+    rr: &mut [f64],
+) {
+    let nrhs = x.nrhs;
+    let vlen = x.layout.vlen();
+    let vpt = x.vals_per_tile();
+    for (i, on) in active.iter().enumerate() {
+        if *on {
+            rr[i] = 0.0;
+        }
+    }
+    for t in 0..x.site_tiles() {
+        for i in 0..nrhs {
+            if !active[i] {
+                continue;
+            }
+            let off = (t * nrhs + i) * vpt;
+            let span = off..off + vpt;
+            blas::axpy_slice(&mut x.data[span.clone()], alpha[i], &p.data[span.clone()]);
+            let rt = &mut r.data[span.clone()];
+            blas::axpy_slice(rt, -alpha[i], &ap.data[span]);
+            rr[i] += blas::norm2_tile(rt, vlen);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{LatticeDims, Tiling};
+    use crate::util::rng::Rng;
+
+    fn geom() -> Geometry {
+        Geometry::single_rank(
+            LatticeDims::new(8, 4, 4, 4).unwrap(),
+            Tiling::new(4, 2).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn mux_demux_roundtrip_is_exact() {
+        let g = geom();
+        let mut rng = Rng::seeded(31);
+        let fields: Vec<FermionField<f32>> =
+            (0..3).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let m = MultiFermionField::from_rhs(&fields);
+        assert_eq!(m.nrhs, 3);
+        for (r, f) in fields.iter().enumerate() {
+            assert_eq!(m.extract_rhs(r).data, f.data, "rhs {r} not bit-exact");
+        }
+        let back = m.demux();
+        for (a, b) in back.iter().zip(&fields) {
+            assert_eq!(a.data, b.data);
+        }
+    }
+
+    #[test]
+    fn per_rhs_reductions_match_demuxed_bitwise() {
+        let g = geom();
+        let mut rng = Rng::seeded(32);
+        let fields: Vec<FermionField<f32>> =
+            (0..4).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let others: Vec<FermionField<f32>> =
+            (0..4).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let m = MultiFermionField::from_rhs(&fields);
+        let o = MultiFermionField::from_rhs(&others);
+        let n2 = m.norm2_per_rhs();
+        let dots = m.dot_per_rhs(&o);
+        for r in 0..4 {
+            assert_eq!(n2[r], fields[r].norm2(), "norm2 grouping differs at rhs {r}");
+            let want = fields[r].dot(&others[r]);
+            assert_eq!(dots[r].re, want.re);
+            assert_eq!(dots[r].im, want.im);
+        }
+    }
+
+    #[test]
+    fn masked_sweeps_freeze_inactive_rhs() {
+        let g = geom();
+        let mut rng = Rng::seeded(33);
+        let fields: Vec<FermionField<f32>> =
+            (0..3).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let o_fields: Vec<FermionField<f32>> =
+            (0..3).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let mut m = MultiFermionField::from_rhs(&fields);
+        let o = MultiFermionField::from_rhs(&o_fields);
+        let active = [true, false, true];
+        let mut rr = [0.0f64; 3];
+        m.axpy_norm2_masked(&[2.0, 3.0, -1.0], &o, &active, &mut rr);
+        // active rhs match the single-field fused op bitwise
+        for r in [0usize, 2] {
+            let mut want = fields[r].clone();
+            let a = [2.0f32, 3.0, -1.0][r];
+            let wrr = want.axpy_norm2(a, &o_fields[r]);
+            assert_eq!(m.extract_rhs(r).data, want.data);
+            assert_eq!(rr[r], wrr);
+        }
+        // masked rhs untouched, rr slot untouched
+        assert_eq!(m.extract_rhs(1).data, fields[1].data);
+        assert_eq!(rr[1], 0.0);
+    }
+
+    #[test]
+    fn fill_rhs_touches_only_its_slot() {
+        let g = geom();
+        let mut rng = Rng::seeded(34);
+        let fields: Vec<FermionField<f32>> =
+            (0..2).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let mut m = MultiFermionField::from_rhs(&fields);
+        m.fill_rhs(0, 0.0);
+        assert_eq!(m.extract_rhs(0).norm2(), 0.0);
+        assert_eq!(m.extract_rhs(1).data, fields[1].data);
+    }
+}

@@ -1,10 +1,14 @@
 //! Lattice fields in the AoSoA layout: even/odd spinor fields and the
-//! gauge field, plus binary I/O shared with the Python compile path.
+//! gauge field, plus binary I/O shared with the Python compile path,
+//! and the multi-RHS block field ([`block`]) that interleaves N
+//! right-hand sides for gauge-stream amortization.
 
 pub mod blas;
+pub mod block;
 mod fermion;
 mod gauge;
 pub mod io;
 
+pub use block::MultiFermionField;
 pub use fermion::FermionField;
 pub use gauge::GaugeField;

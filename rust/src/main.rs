@@ -14,12 +14,14 @@ use std::process::ExitCode;
 
 use lqcd::algebra::Real;
 use lqcd::config::RunConfig;
-use lqcd::coordinator::operator::{LinearOperator, NativeMdagM, NativeMeo};
+use lqcd::coordinator::operator::{
+    LinearOperator, MultiMdagM, MultiNativeMeo, NativeMdagM, NativeMeo,
+};
 use lqcd::coordinator::{BarrierKind, Team};
-use lqcd::field::{FermionField, GaugeField};
+use lqcd::field::{FermionField, GaugeField, MultiFermionField};
 use lqcd::harness::{self, Opts};
 use lqcd::lattice::{Geometry, LatticeDims, Tiling};
-use lqcd::perf::{calibrate_host, A64fx};
+use lqcd::perf::{auto_solver_threads, calibrate_host, A64fx};
 use lqcd::solver::{self, InnerAlgorithm};
 use lqcd::util::cli;
 use lqcd::util::rng::Rng;
@@ -27,6 +29,7 @@ use lqcd::util::rng::Rng;
 const VALUE_OPTS: &[&str] = &[
     "dims", "tiling", "threads", "iters", "config", "kappa", "tol", "maxiter",
     "algorithm", "artifacts", "seed", "precision", "inner-tol", "max-outer",
+    "nrhs",
 ];
 
 fn main() -> ExitCode {
@@ -82,9 +85,18 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
     if cfg.solver.max_outer == 0 {
         return Err("--max-outer must be positive".into());
     }
-    cfg.solver.threads = args.get_parse("threads", cfg.solver.threads)?;
-    if cfg.solver.threads == 0 {
-        return Err("--threads must be positive".into());
+    if let Some(t) = args.get("threads") {
+        let t: usize = t
+            .parse()
+            .map_err(|_| format!("--threads: cannot parse {t:?}"))?;
+        if t == 0 {
+            return Err("--threads must be positive".into());
+        }
+        cfg.solver.threads = Some(t);
+    }
+    cfg.solver.nrhs = args.get_parse("nrhs", cfg.solver.nrhs)?;
+    if cfg.solver.nrhs == 0 {
+        return Err("--nrhs must be positive".into());
     }
     let use_pjrt = args.flag("pjrt") || cfg.solver.use_pjrt;
     let opts = Opts {
@@ -170,7 +182,37 @@ fn info(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
+/// Resolve `solver.threads`, auto-deriving (and logging) a team size
+/// from the machine model when the config leaves it unset. The choice
+/// is also recorded in the solve's `SolveStats.threads`.
+fn resolve_threads(cfg: &RunConfig) -> usize {
+    match cfg.solver.threads {
+        Some(t) => t,
+        None => {
+            let t = auto_solver_threads();
+            println!(
+                "solver.threads unset: auto-selected {t} worker threads \
+                 (bandwidth-saturation heuristic from the core count)"
+            );
+            t
+        }
+    }
+}
+
 fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Error>> {
+    if cfg.solver.nrhs > 1 {
+        if use_pjrt {
+            return Err("--pjrt does not support --nrhs > 1 (native block solver only)".into());
+        }
+        return match cfg.solver.precision.as_str() {
+            "f32" => solve_block::<f32>(cfg),
+            "f64" => solve_block::<f64>(cfg),
+            other => Err(format!(
+                "--nrhs > 1 supports --precision f32 or f64 (got {other})"
+            )
+            .into()),
+        };
+    }
     match cfg.solver.precision.as_str() {
         "f64" | "mixed" if use_pjrt => {
             return Err(format!(
@@ -227,18 +269,19 @@ fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Erro
 fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
+    let threads = resolve_threads(cfg);
     let mut rng = Rng::seeded(cfg.seed);
     println!(
         "generating random gauge configuration on {} ({}, {} threads) ...",
         cfg.lattice.global,
         R::NAME,
-        cfg.solver.threads
+        threads
     );
     let u: GaugeField<R> = GaugeField::random(&geom, &mut rng);
     println!("plaquette = {:.6}", u.plaquette());
     let b: FermionField<R> = FermionField::gaussian(&geom, &mut rng);
     let kappa = R::from_f64(cfg.solver.kappa);
-    let mut team = Team::new(cfg.solver.threads, BarrierKind::Sleep);
+    let mut team = Team::new(threads, BarrierKind::Sleep);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let stats = if cfg.solver.algorithm == "bicgstab" {
@@ -272,7 +315,7 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
     let secs = sw.secs();
     println!(
         "{}({}): {} iterations, converged={}, rel residual {:.3e}, {:.2}s, \
-         {:.2} GFlops, {:.0} sweeps/iter",
+         {:.2} GFlops, {:.0} sweeps/iter, {} threads",
         cfg.solver.algorithm,
         R::NAME,
         stats.iterations,
@@ -281,8 +324,105 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
         secs,
         stats.flops as f64 / secs / 1e9,
         stats.sweeps_per_iter,
+        stats.threads,
     );
     Ok(())
+}
+
+/// Multi-RHS block solve (`--nrhs N`, N > 1): N Gaussian sources
+/// interleaved into one block field, solved together by the batched
+/// solver — the gauge field is streamed once per sweep for all N
+/// systems, and converged systems drop out of the kernel work via the
+/// per-RHS masks.
+fn solve_block<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
+    let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
+        .map_err(|e| e.to_string())?;
+    let threads = resolve_threads(cfg);
+    let nrhs = cfg.solver.nrhs;
+    let mut rng = Rng::seeded(cfg.seed);
+    println!(
+        "generating random gauge configuration on {} ({}, {} threads, {} rhs) ...",
+        cfg.lattice.global,
+        R::NAME,
+        threads,
+        nrhs
+    );
+    let u: GaugeField<R> = GaugeField::random(&geom, &mut rng);
+    println!("plaquette = {:.6}", u.plaquette());
+    let sources: Vec<FermionField<R>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&geom, &mut rng)).collect();
+    let kappa = R::from_f64(cfg.solver.kappa);
+    let mut team = Team::new(threads, BarrierKind::Sleep);
+
+    let sw = lqcd::util::timer::Stopwatch::start();
+    let (stats, resid) = if cfg.solver.algorithm == "bicgstab" {
+        let b = MultiFermionField::from_rhs(&sources);
+        let mut op = MultiNativeMeo::new(&geom, u.clone(), kappa, nrhs);
+        let mut x = MultiFermionField::<R>::zeros(&geom, nrhs);
+        let stats =
+            solver::block_bicgstab(&mut op, &mut team, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
+        // worst true per-RHS residual, via the single-RHS operator
+        let mut meo = NativeMeo::new(&geom, u, kappa);
+        let resid = worst_true_residual(&mut meo, &x, &sources);
+        (stats, resid)
+    } else {
+        // CGNR: per-RHS right-hand side is Mdag b_r
+        let mut op = MultiMdagM::new(&geom, u.clone(), kappa, nrhs);
+        let mut meo = NativeMeo::new(&geom, u, kappa);
+        let rhs: Vec<FermionField<R>> = sources
+            .iter()
+            .map(|b| {
+                let mut bp = b.clone();
+                bp.gamma5();
+                let mut mbp = FermionField::zeros(&geom);
+                meo.apply(&mut mbp, &bp);
+                mbp.gamma5();
+                mbp
+            })
+            .collect();
+        let b = MultiFermionField::from_rhs(&rhs);
+        let mut x = MultiFermionField::<R>::zeros(&geom, nrhs);
+        let stats =
+            solver::block_cg(&mut op, &mut team, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
+        let mut ndag = NativeMdagM::new(&geom, meo.gauge().clone(), kappa);
+        let resid = worst_true_residual(&mut ndag, &x, &rhs);
+        (stats, resid)
+    };
+    let secs = sw.secs();
+    for (r, s) in stats.per_rhs.iter().enumerate() {
+        println!(
+            "  rhs {r:>2}: {} iterations, converged={}, rel residual {:.3e}",
+            s.iterations, s.converged, s.rel_residual
+        );
+    }
+    println!(
+        "block-{}({}, nrhs={}): {} batched iterations, all converged={}, \
+         worst true |r|/|b| = {:.3e}, {:.2}s, {:.2} GFlops, {} threads",
+        cfg.solver.algorithm,
+        R::NAME,
+        stats.nrhs,
+        stats.iterations,
+        stats.converged,
+        resid,
+        secs,
+        stats.flops as f64 / secs / 1e9,
+        stats.threads,
+    );
+    Ok(())
+}
+
+/// Max over RHS of the true relative residual |A x_r - b_r| / |b_r|.
+fn worst_true_residual<R: Real, A: LinearOperator<R>>(
+    op: &mut A,
+    x: &MultiFermionField<R>,
+    bs: &[FermionField<R>],
+) -> f64 {
+    let mut worst = 0.0f64;
+    for (r, b) in bs.iter().enumerate() {
+        let xr = x.extract_rhs(r);
+        worst = worst.max(solver::residual::operator_residual(op, &xr, b));
+    }
+    worst
 }
 
 /// Mixed-precision solve: f64 outer iterative refinement, f32 inner
@@ -290,17 +430,19 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
 fn solve_mixed(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
+    let threads = resolve_threads(cfg);
     let mut rng = Rng::seeded(cfg.seed);
     println!(
-        "generating random gauge configuration on {} (mixed f64/f32) ...",
-        cfg.lattice.global
+        "generating random gauge configuration on {} (mixed f64/f32, {} threads) ...",
+        cfg.lattice.global,
+        threads
     );
     let u: GaugeField<f64> = GaugeField::random(&geom, &mut rng);
     println!("plaquette = {:.6}", u.plaquette());
     let b: FermionField<f64> = FermionField::gaussian(&geom, &mut rng);
     let kappa = cfg.solver.kappa;
     let u32 = u.to_precision::<f32>();
-    let mut team = Team::new(cfg.solver.threads, BarrierKind::Sleep);
+    let mut team = Team::new(threads, BarrierKind::Sleep);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let stats = if cfg.solver.algorithm == "bicgstab" {
@@ -391,7 +533,11 @@ OPTIONS:
   --threads N          worker-team threads: for `solve`, the fused solver
                        pipeline runs whole iterations on the team
                        (solver.threads; residual histories are identical
-                       at any thread count); for benches, threads per rank
+                       at any thread count; unset = auto from the machine
+                       model); for benches, threads per rank
+  --nrhs N             right-hand sides per batched sweep (default 1);
+                       N > 1 solves N systems through the multi-RHS block
+                       solver, streaming the gauge field once for all
   --iters N            measurement iterations
   --kappa X --tol X --maxiter N
   --algorithm cg|bicgstab

@@ -105,6 +105,30 @@ impl HostCalibration {
     }
 }
 
+/// Default worker-team size for the fused solver pipeline when
+/// `solver.threads` is left unset: derived from this host's core count
+/// through the bandwidth argument below. (Cheap — no calibration run.)
+pub fn auto_solver_threads() -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    auto_solver_threads_for(cores)
+}
+
+/// Core-count → team-size heuristic behind [`auto_solver_threads`].
+///
+/// The Wilson solve is memory-bandwidth bound: the kernel needs ~1.12
+/// bytes per flop while balanced nodes provide far less (A64FX: 1024
+/// GB/s against 6144 GFlops ≈ 0.17 B/F, paper §2), so the memory bus
+/// saturates at a small fraction of the cores and extra threads only
+/// add barrier traffic. Half the cores is already past saturation on
+/// every host this runs on; the cap is the paper's 12 threads per CMG
+/// (one NUMA domain — beyond it the team would straddle memory
+/// domains the single-rank pipeline doesn't partition for).
+pub fn auto_solver_threads_for(cores: usize) -> usize {
+    (cores / 2).clamp(1, 12)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,6 +143,17 @@ mod tests {
         assert!(448.0 / roof > 0.4 && 448.0 / roof < 0.6);
         assert!(m.fits_l2(24 * 1024 * 1024));
         assert!(!m.fits_l2(64 * 1024 * 1024));
+    }
+
+    #[test]
+    fn auto_threads_heuristic() {
+        assert_eq!(auto_solver_threads_for(1), 1);
+        assert_eq!(auto_solver_threads_for(2), 1);
+        assert_eq!(auto_solver_threads_for(4), 2);
+        assert_eq!(auto_solver_threads_for(48), 12, "capped at one CMG");
+        assert_eq!(auto_solver_threads_for(128), 12);
+        let t = auto_solver_threads();
+        assert!(t >= 1 && t <= 12);
     }
 
     #[test]

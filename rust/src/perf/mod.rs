@@ -4,4 +4,6 @@
 pub mod machine;
 pub mod roofline;
 
-pub use machine::{calibrate_host, A64fx, HostCalibration};
+pub use machine::{
+    auto_solver_threads, auto_solver_threads_for, calibrate_host, A64fx, HostCalibration,
+};

@@ -42,6 +42,7 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
             history: vec![],
             flops: 0,
             sweeps_per_iter: BICGSTAB_UNFUSED_SWEEPS,
+            threads: 1,
         };
     }
     let limit = tol * tol * bnorm2;
@@ -132,6 +133,7 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
         history,
         flops,
         sweeps_per_iter: BICGSTAB_UNFUSED_SWEEPS,
+        threads: 1,
     }
 }
 

@@ -31,6 +31,7 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
             history: vec![],
             flops: 0,
             sweeps_per_iter: CG_UNFUSED_SWEEPS,
+            threads: 1,
         };
     }
     let limit = tol * tol * bnorm2;
@@ -84,6 +85,7 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
         history,
         flops,
         sweeps_per_iter: CG_UNFUSED_SWEEPS,
+        threads: 1,
     }
 }
 

@@ -107,6 +107,7 @@ pub fn cg<R: Real, A: FusedSolvable<R>>(
             history: vec![],
             flops: 0,
             sweeps_per_iter: CG_FUSED_SWEEPS,
+            threads: n,
         };
     }
     let limit = tol * tol * bnorm2;
@@ -211,6 +212,7 @@ pub fn cg<R: Real, A: FusedSolvable<R>>(
         history,
         flops,
         sweeps_per_iter: CG_FUSED_SWEEPS,
+        threads: n,
     }
 }
 
@@ -245,6 +247,7 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
             history: vec![],
             flops: 0,
             sweeps_per_iter: BICGSTAB_FUSED_SWEEPS,
+            threads: n,
         };
     }
     let limit = tol * tol * bnorm2;
@@ -484,5 +487,6 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
         history,
         flops,
         sweeps_per_iter: BICGSTAB_FUSED_SWEEPS,
+        threads: n,
     }
 }

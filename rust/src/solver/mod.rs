@@ -9,6 +9,10 @@
 //!   the worker team, kernel + BLAS-1 sweeps fused (3 sweeps per CG
 //!   iteration instead of 6), residual histories bitwise identical to
 //!   the unfused solvers at any thread count.
+//! * [`block`] — multi-RHS batched solvers on the block field: one gauge
+//!   stream feeds N right-hand sides per sweep, per-RHS scalars keep
+//!   every system on its independent trajectory, and per-RHS stopping
+//!   masks let converged systems drop out of the kernel work.
 //!
 //! The generic solvers are generic over
 //! [`crate::coordinator::operator::LinearOperator`] and the
@@ -20,12 +24,14 @@
 //! operators) for tile-phased applies.
 
 mod bicgstab;
+pub mod block;
 mod cg;
 pub mod fused;
 pub mod mixed;
 pub mod residual;
 
 pub use bicgstab::bicgstab;
+pub use block::{block_bicgstab, block_cg, BlockSolveStats, RhsStats};
 pub use cg::cg;
 pub use mixed::{mixed_refinement, mixed_refinement_team, InnerAlgorithm, MixedStats};
 
@@ -45,4 +51,7 @@ pub struct SolveStats {
     /// (an operator apply counts as one pass; each separate BLAS-1 pass
     /// counts one) — 6 for unfused CG, 3 for the fused pipeline
     pub sweeps_per_iter: f64,
+    /// worker-team threads the solve ran on (1 = serial); records the
+    /// auto-selected count when `solver.threads` was left unset
+    pub threads: usize,
 }

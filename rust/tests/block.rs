@@ -1,0 +1,366 @@
+//! Multi-RHS block subsystem correctness.
+//!
+//! The contract under test: the block field's mux/demux are exact; the
+//! batched multi-RHS dslash bit-matches the single-RHS kernel per
+//! demuxed RHS (f64 exactly, f32 to rounding — in practice bitwise,
+//! since the per-RHS arithmetic is the same code); and the block
+//! solvers reproduce N independent fused solves per RHS — bitwise
+//! residual histories at f64, including *through* per-RHS mask
+//! activation, because the batched recurrences are independent.
+
+use lqcd::algebra::Real;
+use lqcd::coordinator::operator::{
+    LinearOperator, MultiMdagM, MultiNativeMeo, MultiOperator, NativeMdagM, NativeMeo,
+};
+use lqcd::coordinator::{BarrierKind, Team};
+use lqcd::field::{FermionField, GaugeField, MultiFermionField};
+use lqcd::lattice::{Geometry, LatticeDims, Tiling};
+use lqcd::solver;
+use lqcd::util::rng::Rng;
+
+fn geom() -> Geometry {
+    Geometry::single_rank(
+        LatticeDims::new(4, 4, 4, 4).unwrap(),
+        Tiling::new(2, 2).unwrap(),
+    )
+    .unwrap()
+}
+
+fn max_abs_diff<R: Real>(a: &FermionField<R>, b: &FermionField<R>) -> f64 {
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| (x.to_f64() - y.to_f64()).abs())
+        .fold(0.0, f64::max)
+}
+
+/// CGNR right-hand side Mdag b for one source.
+fn cgnr_rhs<R: Real>(geom: &Geometry, u: &GaugeField<R>, kappa: R, b: &FermionField<R>) -> FermionField<R> {
+    let mut op = NativeMeo::new(geom, u.clone(), kappa);
+    let mut bp = b.clone();
+    bp.gamma5();
+    let mut mbp = FermionField::zeros(geom);
+    op.apply(&mut mbp, &bp);
+    mbp.gamma5();
+    mbp
+}
+
+#[test]
+fn mux_demux_roundtrip_across_tilings() {
+    for tiling in [Tiling::new(2, 2).unwrap(), Tiling::new(4, 2).unwrap()] {
+        let g = Geometry::single_rank(LatticeDims::new(8, 4, 4, 4).unwrap(), tiling).unwrap();
+        let mut rng = Rng::seeded(71);
+        let fields: Vec<FermionField<f32>> =
+            (0..5).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let m = MultiFermionField::from_rhs(&fields);
+        for (r, f) in fields.iter().enumerate() {
+            assert_eq!(m.extract_rhs(r).data, f.data, "tiling {tiling}, rhs {r}");
+        }
+        // overwrite one slot, the others must be untouched
+        let mut m2 = m.clone();
+        m2.set_rhs(2, &fields[0]);
+        assert_eq!(m2.extract_rhs(2).data, fields[0].data);
+        for r in [0usize, 1, 3, 4] {
+            assert_eq!(m2.extract_rhs(r).data, fields[r].data);
+        }
+    }
+}
+
+#[test]
+fn multi_apply_bit_matches_single_per_rhs_f64() {
+    let g = geom();
+    let mut rng = Rng::seeded(72);
+    let u = GaugeField::<f64>::random(&g, &mut rng);
+    let kappa = 0.137f64;
+    let nrhs = 3;
+    let srcs: Vec<FermionField<f64>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+    let psi = MultiFermionField::from_rhs(&srcs);
+    let active = vec![true; nrhs];
+
+    for threads in [1usize, 3] {
+        let mut team = Team::new(threads, BarrierKind::Sleep);
+        // M-hat
+        let mut mop = MultiNativeMeo::new(&g, u.clone(), kappa, nrhs);
+        let mut out = psi.zeros_like();
+        mop.apply_multi(&mut team, &mut out, &psi, &active, None);
+        let mut sop = NativeMeo::new(&g, u.clone(), kappa);
+        for (r, s) in srcs.iter().enumerate() {
+            let mut want = FermionField::zeros(&g);
+            sop.apply(&mut want, s);
+            assert_eq!(
+                out.extract_rhs(r).data,
+                want.data,
+                "multi M-hat rhs {r} must bit-match single at f64 ({threads} threads)"
+            );
+        }
+        // normal operator
+        let mut mop = MultiMdagM::new(&g, u.clone(), kappa, nrhs);
+        let mut out = psi.zeros_like();
+        mop.apply_multi(&mut team, &mut out, &psi, &active, None);
+        let mut sop = NativeMdagM::new(&g, u.clone(), kappa);
+        for (r, s) in srcs.iter().enumerate() {
+            let mut want = FermionField::zeros(&g);
+            sop.apply(&mut want, s);
+            assert_eq!(
+                out.extract_rhs(r).data,
+                want.data,
+                "multi MdagM rhs {r} must bit-match single at f64 ({threads} threads)"
+            );
+        }
+    }
+}
+
+#[test]
+fn multi_apply_matches_single_per_rhs_f32() {
+    let g = geom();
+    let mut rng = Rng::seeded(73);
+    let u = GaugeField::<f32>::random(&g, &mut rng);
+    let kappa = 0.137f32;
+    let nrhs = 2;
+    let srcs: Vec<FermionField<f32>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+    let psi = MultiFermionField::from_rhs(&srcs);
+    let mut team = Team::new(2, BarrierKind::Sleep);
+    let mut mop = MultiNativeMeo::new(&g, u.clone(), kappa, nrhs);
+    let mut out = psi.zeros_like();
+    mop.apply_multi(&mut team, &mut out, &psi, &[true, true], None);
+    let mut sop = NativeMeo::new(&g, u.clone(), kappa);
+    for (r, s) in srcs.iter().enumerate() {
+        let mut want = FermionField::zeros(&g);
+        sop.apply(&mut want, s);
+        assert!(
+            max_abs_diff(&out.extract_rhs(r), &want) <= f32::EPSILON as f64,
+            "multi M-hat rhs {r} must match single to rounding at f32"
+        );
+    }
+}
+
+#[test]
+fn multi_apply_mask_skips_inactive_rhs() {
+    let g = geom();
+    let mut rng = Rng::seeded(74);
+    let u = GaugeField::<f32>::random(&g, &mut rng);
+    let nrhs = 3;
+    let srcs: Vec<FermionField<f32>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+    let psi = MultiFermionField::from_rhs(&srcs);
+    let mut mop = MultiNativeMeo::new(&g, u.clone(), 0.13f32, nrhs);
+    let mut team = Team::new(1, BarrierKind::Sleep);
+    // pre-fill the output with a sentinel; masked sub-tiles must keep it
+    let mut out = psi.zeros_like();
+    out.fill_rhs(1, 42.0);
+    mop.apply_multi(&mut team, &mut out, &psi, &[true, false, true], None);
+    assert!(
+        out.extract_rhs(1).data.iter().all(|&v| v == 42.0),
+        "masked rhs must not be written by the kernel"
+    );
+    let mut sop = NativeMeo::new(&g, u, 0.13f32);
+    for r in [0usize, 2] {
+        let mut want = FermionField::zeros(&g);
+        sop.apply(&mut want, &srcs[r]);
+        assert_eq!(out.extract_rhs(r).data, want.data, "active rhs {r}");
+    }
+}
+
+#[test]
+fn block_cg_matches_independent_fused_solves_f64() {
+    let g = geom();
+    let mut rng = Rng::seeded(75);
+    let u = GaugeField::<f64>::random(&g, &mut rng);
+    let kappa = 0.12f64;
+    let nrhs = 4;
+    let tol = 1e-10;
+    let maxiter = 400;
+    let rhs: Vec<FermionField<f64>> = (0..nrhs)
+        .map(|_| cgnr_rhs(&g, &u, kappa, &FermionField::gaussian(&g, &mut rng)))
+        .collect();
+
+    // RHS 0 gets a warm start (a presolved solution), so it converges
+    // in a couple of iterations and its mask activates while the
+    // cold-started stragglers keep iterating — exercising the masked
+    // path deterministically.
+    let mut team = Team::new(2, BarrierKind::Sleep);
+    let warm0 = {
+        let mut op = NativeMdagM::new(&g, u.clone(), kappa);
+        let mut x = FermionField::<f64>::zeros(&g);
+        let s = solver::fused::cg(&mut op, &mut team, &mut x, &rhs[0], tol, maxiter);
+        assert!(s.converged);
+        x
+    };
+
+    // independent fused solves (the reference trajectories)
+    let mut xs = Vec::new();
+    let mut hist = Vec::new();
+    for (r, b) in rhs.iter().enumerate() {
+        let mut op = NativeMdagM::new(&g, u.clone(), kappa);
+        let mut x = if r == 0 { warm0.clone() } else { FermionField::<f64>::zeros(&g) };
+        let s = solver::fused::cg(&mut op, &mut team, &mut x, b, tol, maxiter);
+        assert!(s.converged, "independent solve did not converge");
+        xs.push(x);
+        hist.push(s.history);
+    }
+    let iters: Vec<usize> = hist.iter().map(|h| h.len()).collect();
+    assert!(
+        iters.iter().any(|&i| i != iters[0]),
+        "want staggered convergence to exercise the masks (got {iters:?})"
+    );
+
+    // one block solve of all four, same warm start on RHS 0
+    let b_block = MultiFermionField::from_rhs(&rhs);
+    let mut op = MultiMdagM::new(&g, u.clone(), kappa, nrhs);
+    let mut x_block = MultiFermionField::<f64>::zeros(&g, nrhs);
+    x_block.set_rhs(0, &warm0);
+    let stats = solver::block_cg(&mut op, &mut team, &mut x_block, &b_block, tol, maxiter);
+    assert!(stats.converged, "block solve did not converge: {stats:?}");
+    assert_eq!(stats.nrhs, nrhs);
+    assert_eq!(stats.threads, 2);
+    for r in 0..nrhs {
+        assert_eq!(
+            stats.per_rhs[r].history, hist[r],
+            "rhs {r}: block history must be bitwise identical to the independent solve"
+        );
+        assert_eq!(stats.per_rhs[r].iterations, iters[r]);
+        assert_eq!(
+            x_block.extract_rhs(r).data,
+            xs[r].data,
+            "rhs {r}: block solution must be bitwise identical at f64"
+        );
+    }
+    // batched iteration count is the straggler's
+    assert_eq!(stats.iterations, *iters.iter().max().unwrap());
+}
+
+#[test]
+fn block_cg_matches_independent_fused_solves_f32() {
+    let g = geom();
+    let mut rng = Rng::seeded(76);
+    let u = GaugeField::<f32>::random(&g, &mut rng);
+    let kappa = 0.12f32;
+    let nrhs = 2;
+    let tol = 1e-5;
+    let rhs: Vec<FermionField<f32>> = (0..nrhs)
+        .map(|_| cgnr_rhs(&g, &u, kappa, &FermionField::gaussian(&g, &mut rng)))
+        .collect();
+    let mut team = Team::new(1, BarrierKind::Sleep);
+    let mut hist = Vec::new();
+    for b in &rhs {
+        let mut op = NativeMdagM::new(&g, u.clone(), kappa);
+        let mut x = FermionField::<f32>::zeros(&g);
+        let s = solver::fused::cg(&mut op, &mut team, &mut x, b, tol, 400);
+        assert!(s.converged);
+        hist.push(s.history);
+    }
+    let b_block = MultiFermionField::from_rhs(&rhs);
+    let mut op = MultiMdagM::new(&g, u.clone(), kappa, nrhs);
+    let mut x_block = MultiFermionField::<f32>::zeros(&g, nrhs);
+    let stats = solver::block_cg(&mut op, &mut team, &mut x_block, &b_block, tol, 400);
+    assert!(stats.converged);
+    // same arithmetic per RHS: identical trajectories at f32 too
+    for r in 0..nrhs {
+        assert_eq!(stats.per_rhs[r].history, hist[r], "rhs {r} (f32)");
+    }
+}
+
+#[test]
+fn block_bicgstab_matches_independent_fused_solves_f64() {
+    let g = geom();
+    let mut rng = Rng::seeded(77);
+    let u = GaugeField::<f64>::random(&g, &mut rng);
+    let kappa = 0.12f64;
+    let nrhs = 3;
+    let tol = 1e-10;
+    let maxiter = 300;
+    let rhs: Vec<FermionField<f64>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+
+    let mut team = Team::new(2, BarrierKind::Sleep);
+    let mut hist = Vec::new();
+    let mut xs = Vec::new();
+    for b in &rhs {
+        let mut op = NativeMeo::new(&g, u.clone(), kappa);
+        let mut x = FermionField::<f64>::zeros(&g);
+        let s = solver::fused::bicgstab(&mut op, &mut team, &mut x, b, tol, maxiter);
+        assert!(s.converged, "independent bicgstab did not converge");
+        hist.push(s.history);
+        xs.push(x);
+    }
+
+    let b_block = MultiFermionField::from_rhs(&rhs);
+    let mut op = MultiNativeMeo::new(&g, u.clone(), kappa, nrhs);
+    let mut x_block = MultiFermionField::<f64>::zeros(&g, nrhs);
+    let stats =
+        solver::block_bicgstab(&mut op, &mut team, &mut x_block, &b_block, tol, maxiter);
+    assert!(stats.converged, "block bicgstab did not converge: {stats:?}");
+    for r in 0..nrhs {
+        assert_eq!(
+            stats.per_rhs[r].history, hist[r],
+            "rhs {r}: block bicgstab history must match the independent solve"
+        );
+        assert_eq!(
+            x_block.extract_rhs(r).data,
+            xs[r].data,
+            "rhs {r}: block bicgstab solution must be bitwise identical at f64"
+        );
+    }
+}
+
+#[test]
+fn block_cg_zero_rhs_slot_converges_immediately_and_stays_zero() {
+    let g = geom();
+    let mut rng = Rng::seeded(78);
+    let u = GaugeField::<f32>::random(&g, &mut rng);
+    let kappa = 0.12f32;
+    let b0 = cgnr_rhs(&g, &u, kappa, &FermionField::gaussian(&g, &mut rng));
+    let zero = FermionField::<f32>::zeros(&g);
+    let b_block = MultiFermionField::from_rhs(&[b0.clone(), zero]);
+    let mut op = MultiMdagM::new(&g, u.clone(), kappa, 2);
+    let mut team = Team::new(1, BarrierKind::Sleep);
+    let mut x = MultiFermionField::<f32>::zeros(&g, 2);
+    // seed the zero-RHS slot with garbage: the solver must zero it
+    x.fill_rhs(1, 3.0);
+    let stats = solver::block_cg(&mut op, &mut team, &mut x, &b_block, 1e-5, 400);
+    assert!(stats.converged);
+    assert_eq!(stats.per_rhs[1].iterations, 0);
+    assert!(stats.per_rhs[1].converged);
+    assert_eq!(x.extract_rhs(1).norm2(), 0.0, "zero rhs must give zero solution");
+    // and the live system still matches its independent solve
+    let mut sop = NativeMdagM::new(&g, u, kappa);
+    let mut x_ind = FermionField::<f32>::zeros(&g);
+    let s_ind = solver::fused::cg(&mut sop, &mut team, &mut x_ind, &b0, 1e-5, 400);
+    assert_eq!(stats.per_rhs[0].history, s_ind.history);
+}
+
+#[test]
+fn block_stats_flops_scale_with_active_rhs_not_nrhs() {
+    // Two solves of the same single system: alone, and padded with a
+    // zero RHS that is masked from iteration 0. The padded solve must
+    // charge (almost) the same flops — the mask keeps dead RHS free —
+    // while a naive nrhs-scaled accounting would double it.
+    let g = geom();
+    let mut rng = Rng::seeded(79);
+    let u = GaugeField::<f32>::random(&g, &mut rng);
+    let kappa = 0.12f32;
+    let b0 = cgnr_rhs(&g, &u, kappa, &FermionField::gaussian(&g, &mut rng));
+    let mut team = Team::new(1, BarrierKind::Sleep);
+
+    let one = MultiFermionField::from_rhs(&[b0.clone()]);
+    let mut op1 = MultiMdagM::new(&g, u.clone(), kappa, 1);
+    let mut x1 = MultiFermionField::<f32>::zeros(&g, 1);
+    let s1 = solver::block_cg(&mut op1, &mut team, &mut x1, &one, 1e-5, 400);
+
+    let padded = MultiFermionField::from_rhs(&[b0, FermionField::zeros(&g)]);
+    let mut op2 = MultiMdagM::new(&g, u, kappa, 2);
+    let mut x2 = MultiFermionField::<f32>::zeros(&g, 2);
+    let s2 = solver::block_cg(&mut op2, &mut team, &mut x2, &padded, 1e-5, 400);
+
+    assert_eq!(s1.per_rhs[0].history, s2.per_rhs[0].history);
+    // the padded run pays one extra |b|² reduction for the dead slot;
+    // everything iteration-scale must be identical
+    assert!(
+        s2.flops < s1.flops + s1.flops / 100,
+        "masked RHS must not be charged: {} vs {}",
+        s2.flops,
+        s1.flops
+    );
+}

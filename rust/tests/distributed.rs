@@ -4,11 +4,13 @@
 //! self-communication (the paper's measurement mode).
 
 use lqcd::comm::decompose::{extract_fermion, extract_gauge, insert_fermion};
-use lqcd::comm::run_world;
+use lqcd::comm::{run_world, Comm};
+use lqcd::coordinator::operator::{DistMeo, LinearOperator, NormalOp};
 use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
 use lqcd::dslash::HoppingEo;
 use lqcd::field::{FermionField, GaugeField};
 use lqcd::lattice::{Geometry, LatticeDims, Parity, ProcGrid, Tiling};
+use lqcd::solver;
 use lqcd::util::rng::Rng;
 
 fn run_case(
@@ -160,6 +162,145 @@ fn many_threads_and_both_parities() {
             Eo2Schedule::Uniform,
             p,
             17 + p.index() as u64,
+        );
+    }
+}
+
+/// The pre-fusion distributed M-hat: two hoppings plus a *separate*
+/// xpay sweep — exactly the pipeline `DistMeo`'s fused tail replaces.
+/// Kept here as the reference for the bit-match and history pinning.
+struct OldDistMeo<'a> {
+    dist: &'a DistHopping,
+    u: &'a GaugeField<f32>,
+    kappa: f32,
+    comm: &'a mut Comm,
+    team: &'a mut Team,
+    prof: &'a Profiler,
+    tmp: FermionField<f32>,
+}
+
+impl LinearOperator<f32> for OldDistMeo<'_> {
+    fn apply(&mut self, out: &mut FermionField<f32>, psi: &FermionField<f32>) {
+        self.dist
+            .hopping(&mut self.tmp, self.u, psi, Parity::Odd, self.comm, self.team, self.prof);
+        self.dist
+            .hopping(out, self.u, &self.tmp, Parity::Even, self.comm, self.team, self.prof);
+        out.xpay(-(self.kappa * self.kappa), psi);
+    }
+
+    fn flops_per_apply(&self) -> u64 {
+        lqcd::dslash::flops::meo_flops(self.dist.geom.local.half_volume())
+    }
+
+    fn reduce_sum(&mut self, v: f64) -> f64 {
+        self.comm.allreduce_sum(v)
+    }
+}
+
+/// DistMeo's fused xpay tail (bulk-store tail without comm, EO2-fused
+/// tail with comm) must reproduce the separate-xpay pipeline *bitwise*.
+#[test]
+fn dist_meo_fused_tail_bit_matches_separate_xpay() {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    // (grid, force_comm): no-comm-dirs → bulk StoreTail::Xpay path;
+    // forced self-comm and a real split → EO2-fused tail path
+    let cases = [
+        (ProcGrid([1, 1, 1, 1]), false),
+        (ProcGrid([1, 1, 1, 1]), true),
+        (ProcGrid([1, 1, 2, 2]), true),
+    ];
+    for (grid, force_comm) in cases {
+        let ggeom = Geometry::single_rank(global, tiling).unwrap();
+        let mut rng = Rng::seeded(41);
+        let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+        let psi_global: FermionField = FermionField::gaussian(&ggeom, &mut rng);
+        let kappa = 0.137f32;
+        run_world(grid.size(), |rank, comm| {
+            let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+            let u = extract_gauge(&u_global, &lgeom);
+            let psi = extract_fermion(&psi_global, &ggeom, &lgeom);
+            let dist = DistHopping::new(&lgeom, force_comm, 2, Eo2Schedule::Uniform);
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let prof = Profiler::new(2);
+
+            // reference: hopping, hopping, separate xpay
+            let mut want = FermionField::zeros(&lgeom);
+            let mut tmp = FermionField::zeros(&lgeom);
+            dist.hopping(&mut tmp, &u, &psi, Parity::Odd, comm, &mut team, &prof);
+            dist.hopping(&mut want, &u, &tmp, Parity::Even, comm, &mut team, &prof);
+            want.xpay(-(kappa * kappa), &psi);
+
+            // fused DistMeo
+            let mut got = FermionField::zeros(&lgeom);
+            let mut op = DistMeo::new(&lgeom, &dist, &u, kappa, comm, &mut team, &prof);
+            op.apply(&mut got, &psi);
+
+            assert_eq!(
+                got.data, want.data,
+                "fused tail must bit-match (grid {grid:?}, force={force_comm}, rank {rank})"
+            );
+        });
+    }
+}
+
+/// A distributed CGNR solve through the fused DistMeo must produce a
+/// residual history identical to the separate-xpay pipeline's — the
+/// fusion changes memory traffic, never arithmetic.
+#[test]
+fn dist_meo_fused_solve_history_pinned() {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(43);
+    let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+    let b_global: FermionField = FermionField::gaussian(&ggeom, &mut rng);
+    let kappa = 0.12f32;
+    let (tol, maxiter) = (1e-5, 40);
+
+    let histories = run_world(grid.size(), |rank, comm| {
+        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+        let u = extract_gauge(&u_global, &lgeom);
+        let b = extract_fermion(&b_global, &ggeom, &lgeom);
+        let dist = DistHopping::new(&lgeom, true, 2, Eo2Schedule::Uniform);
+        let prof = Profiler::new(2);
+
+        // reference solve on the old separate-xpay operator
+        let old_hist = {
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let inner = OldDistMeo {
+                dist: &dist,
+                u: &u,
+                kappa,
+                comm: &mut *comm,
+                team: &mut team,
+                prof: &prof,
+                tmp: FermionField::zeros(&lgeom),
+            };
+            let mut op = NormalOp::new(inner, &lgeom);
+            let mut x = FermionField::<f32>::zeros(&lgeom);
+            let stats = solver::cg(&mut op, &mut x, &b, tol, maxiter);
+            stats.history
+        };
+
+        // same solve on the fused operator
+        let new_hist = {
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let inner = DistMeo::new(&lgeom, &dist, &u, kappa, comm, &mut team, &prof);
+            let mut op = NormalOp::new(inner, &lgeom);
+            let mut x = FermionField::<f32>::zeros(&lgeom);
+            let stats = solver::cg(&mut op, &mut x, &b, tol, maxiter);
+            stats.history
+        };
+        (old_hist, new_hist)
+    });
+
+    for (rank, (old_hist, new_hist)) in histories.iter().enumerate() {
+        assert!(!old_hist.is_empty(), "reference solve ran no iterations");
+        assert_eq!(
+            old_hist, new_hist,
+            "rank {rank}: fused DistMeo residual history diverged from separate-xpay"
         );
     }
 }
