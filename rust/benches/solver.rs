@@ -10,6 +10,13 @@
 //! `LQCD_BENCH_JSON=path` or disable with `LQCD_BENCH_JSON=-`) so the
 //! perf trajectory of the fused-vs-unfused gain is tracked across PRs.
 //!
+//! The multi-RHS section sweeps gauge compression × nrhs: the same
+//! systems solved with full (18 reals/link) and two-row compressed
+//! (12 reals/link) gauge storage, recording `gauge_reals_per_link` and
+//! the modeled bytes/site drop in the JSON — compression and multi-RHS
+//! amortization compose, and the bench asserts two-row is strictly
+//! below full at every nrhs.
+//!
 //! `cargo bench --bench solver -- --smoke` (or `LQCD_BENCH_SMOKE=1`)
 //! runs a seconds-scale variant for CI: same code paths, smaller
 //! lattice and iteration caps.
@@ -20,7 +27,8 @@ use lqcd::coordinator::operator::{
     LinearOperator, MultiMdagM, NativeMdagM, NativeMeo, UnfusedMdagM,
 };
 use lqcd::coordinator::{BarrierKind, Team};
-use lqcd::field::{FermionField, GaugeField, MultiFermionField};
+use lqcd::dslash::{Compression, Links};
+use lqcd::field::{CompressedGaugeField, FermionField, GaugeField, MultiFermionField};
 use lqcd::lattice::{Geometry, LatticeDims, Tiling};
 use lqcd::solver::{self, InnerAlgorithm};
 use lqcd::util::rng::Rng;
@@ -49,6 +57,9 @@ struct Run {
     /// modeled bytes per site per RHS of one iteration — the gauge
     /// stream is shared across RHS, so this falls as nrhs grows
     bytes_per_site: f64,
+    /// reals streamed per gauge link (18 full, 12 two-row compressed) —
+    /// makes the perf trajectory self-describing
+    gauge_reals_per_link: usize,
     true_residual: f64,
     history: Vec<f64>,
 }
@@ -92,6 +103,7 @@ fn emit_json(dims: &str, kappa: f64, runs: &[Run]) {
              \"seconds\": {:.4},\n      \"gflops\": {:.3},\n      \
              \"sweeps_per_iter\": {:.1},\n      \"bytes_per_iter\": {},\n      \
              \"bytes_per_site\": {:.3},\n      \
+             \"gauge_reals_per_link\": {},\n      \
              \"eff_bw_gbs\": {:.3},\n      \
              \"true_residual\": {},\n      \"residual_history\": {}\n    }}",
             r.name,
@@ -106,6 +118,7 @@ fn emit_json(dims: &str, kappa: f64, runs: &[Run]) {
             r.sweeps_per_iter,
             r.bytes_per_iter,
             r.bytes_per_site,
+            r.gauge_reals_per_link,
             eff_bw_gbs(r),
             json_f64(r.true_residual),
             json_escape_history(&r.history),
@@ -153,12 +166,20 @@ fn cg_iter_bytes(geom: &Geometry, elem_bytes: usize, fused: bool) -> u64 {
 /// sides (model): the 4 hopping passes stream the 8 gauge blocks ONCE
 /// each — that is the amortization the block field buys — while every
 /// spinor stream (kernel source/destination, fused tails, capture
-/// re-read, and the two BLAS passes) is paid once per RHS. At nrhs = 1
+/// re-read, and the two BLAS passes) is paid once per RHS. The gauge
+/// term scales with `reals_per_link` (18 full, 12 two-row compressed:
+/// the tentpole's 1/3 gauge-stream cut). At nrhs = 1 with full links
 /// this reduces exactly to `cg_iter_bytes(geom, eb, true)`.
-fn block_cg_iter_bytes(geom: &Geometry, elem_bytes: usize, nrhs: u64) -> u64 {
+fn block_cg_iter_bytes(
+    geom: &Geometry,
+    elem_bytes: usize,
+    nrhs: u64,
+    reals_per_link: usize,
+) -> u64 {
     let layout = lqcd::lattice::EoLayout::new(geom);
     let f = (layout.spinor_len() * elem_bytes) as u64;
-    let g = (8 * layout.gauge_len() * elem_bytes) as u64;
+    // 8 link blocks (4 directions x 2 parities), reals_per_link each
+    let g = (8 * layout.ntiles() * reals_per_link * layout.vlen() * elem_bytes) as u64;
     // gauge once, spinor in/out per RHS, per hopping pass
     let hop4 = 4 * (2 * f * nrhs + g);
     hop4 + (3 + 6 + 3) * f * nrhs
@@ -232,6 +253,7 @@ fn main() {
             sweeps_per_iter: stats.sweeps_per_iter,
             bytes_per_iter: 0,
             bytes_per_site: 0.0,
+            gauge_reals_per_link: 18,
             true_residual: resid,
             history: stats.history,
         });
@@ -274,6 +296,7 @@ fn main() {
             sweeps_per_iter: stats.sweeps_per_iter,
             bytes_per_iter: cg_iter_bytes(&geom, 4, false),
             bytes_per_site: per_site(&geom, cg_iter_bytes(&geom, 4, false), 1),
+            gauge_reals_per_link: 18,
             true_residual: resid,
             history: stats.history,
         });
@@ -313,6 +336,7 @@ fn main() {
             sweeps_per_iter: 0.0,
             bytes_per_iter: 0,
             bytes_per_site: 0.0,
+            gauge_reals_per_link: 18,
             true_residual: resid,
             history: stats.history,
         });
@@ -348,6 +372,7 @@ fn main() {
             sweeps_per_iter: stats.sweeps_per_iter,
             bytes_per_iter: 0,
             bytes_per_site: 0.0,
+            gauge_reals_per_link: 18,
             true_residual: resid,
             history: stats.history,
         });
@@ -377,8 +402,16 @@ fn main() {
     };
     let fgeom = Geometry::single_rank(fdims, ftiling).unwrap();
     let mut frng = Rng::seeded(4242);
-    let fu: GaugeField<f32> =
-        GaugeField::<f64>::random(&fgeom, &mut frng).to_precision();
+    // project the configuration through the two-row round trip: the
+    // third row becomes the canonical cross-product rebuild, so the
+    // compressed runs below are BITWISE comparable to the full-link
+    // reference histories (physics unchanged — the projection is a
+    // ~1-ulp re-unitarization)
+    let fu: GaugeField<f32> = {
+        let raw: GaugeField<f32> =
+            GaugeField::<f64>::random(&fgeom, &mut frng).to_precision();
+        CompressedGaugeField::compress(&raw).reconstruct()
+    };
     let fb: FermionField<f32> =
         FermionField::<f64>::gaussian(&fgeom, &mut frng).to_precision();
     let ftol = 1e-5;
@@ -423,6 +456,7 @@ fn main() {
             sweeps_per_iter: stats.sweeps_per_iter,
             bytes_per_iter: cg_iter_bytes(&fgeom, 4, false),
             bytes_per_site: per_site(&fgeom, cg_iter_bytes(&fgeom, 4, false), 1),
+            gauge_reals_per_link: 18,
             true_residual: resid,
             history: stats.history.clone(),
         };
@@ -464,6 +498,7 @@ fn main() {
             sweeps_per_iter: stats.sweeps_per_iter,
             bytes_per_iter: cg_iter_bytes(&fgeom, 4, true),
             bytes_per_site: per_site(&fgeom, cg_iter_bytes(&fgeom, 4, true), 1),
+            gauge_reals_per_link: 18,
             true_residual: resid,
             history: stats.history.clone(),
         };
@@ -485,18 +520,22 @@ fn main() {
          histories bitwise identical across pipelines and thread counts"
     );
 
-    // ---- multi-RHS block solver: gauge-stream amortization sweep -------
+    // ---- multi-RHS block solver: compression × nrhs sweep --------------
     //
     // The same lattice solved with N ∈ {1, 2, 4, 8} stacked Gaussian
-    // sources through the block solver. Each batched sweep streams the
-    // gauge field once for all N systems, so the modeled bytes/site per
-    // RHS fall monotonically toward the pure-spinor floor — the
-    // acceptance metric recorded in solver_bench.json. RHS 0 is the
-    // single-RHS system above, and its residual history must stay
-    // bitwise identical to the fused reference at every N.
+    // sources through the block solver, once with full 18-real links and
+    // once with two-row compressed 12-real links. Each batched sweep
+    // streams the gauge field once for all N systems, so the modeled
+    // bytes/site per RHS fall monotonically toward the pure-spinor floor
+    // — and the two-row rows sit strictly below the full rows at every
+    // nrhs (asserted), because compression cuts exactly the stream that
+    // multi-RHS cannot amortize away. RHS 0 is the single-RHS system
+    // above, and its residual history must stay bitwise identical to
+    // the fused reference at every N and either compression (the gauge
+    // field is two-row projected, see above).
     let mut btable = Table::new(
-        &format!("Block CGNR multi-RHS sweep on {fdims} (f32, tol = {ftol:.0e})"),
-        &["nrhs", "iters (max)", "seconds", "bytes/site/RHS", "eff GB/s"],
+        &format!("Block CGNR compression × nrhs sweep on {fdims} (f32, tol = {ftol:.0e})"),
+        &["links", "nrhs", "iters (max)", "seconds", "bytes/site/RHS", "eff GB/s"],
     );
     let bsources: Vec<FermionField<f32>> = {
         let mut brng = Rng::seeded(7777);
@@ -515,65 +554,91 @@ fn main() {
         }
         v
     };
-    let mut prev_bytes_per_site = f64::INFINITY;
-    for nrhs in [1usize, 2, 4, 8] {
-        let b = MultiFermionField::from_rhs(&bsources[..nrhs]);
-        let mut op = MultiMdagM::new(&fgeom, fu.clone(), fkappa, nrhs);
-        let mut team = Team::new(1, BarrierKind::Sleep);
-        let mut x = MultiFermionField::<f32>::zeros(&fgeom, nrhs);
-        let sw = Stopwatch::start();
-        let stats = solver::block_cg(&mut op, &mut team, &mut x, &b, ftol, fmaxiter);
-        let secs = sw.secs();
-        assert_eq!(
-            stats.per_rhs[0].history, ref_history,
-            "block(nrhs={nrhs}) rhs 0 history diverged from the fused reference"
-        );
-        let bytes = block_cg_iter_bytes(&fgeom, 4, nrhs as u64);
-        let bps = per_site(&fgeom, bytes, nrhs as u64);
-        assert!(
-            bps < prev_bytes_per_site,
-            "bytes/site/RHS must strictly decrease with nrhs ({bps} !< {prev_bytes_per_site})"
-        );
-        prev_bytes_per_site = bps;
-        // worst TRUE residual over the RHS, like every other JSON row
-        let resid = {
-            let mut rop = NativeMdagM::new(&fgeom, fu.clone(), fkappa);
-            (0..nrhs)
-                .map(|r| {
-                    let xr = x.extract_rhs(r);
-                    solver::residual::operator_residual(&mut rop, &xr, &bsources[r])
-                })
-                .fold(0.0f64, f64::max)
-        };
-        let run = Run {
-            name: "block-cgnr".into(),
-            precision: "f32",
-            tol: ftol,
-            threads: 1,
-            nrhs,
-            iterations: stats.iterations,
-            inner_iterations: 0,
-            seconds: secs,
-            gflops: stats.flops as f64 / secs / 1e9,
-            sweeps_per_iter: stats.sweeps_per_iter,
-            bytes_per_iter: bytes,
-            bytes_per_site: bps,
-            true_residual: resid,
-            history: stats.per_rhs[0].history.clone(),
-        };
-        btable.row(vec![
-            nrhs.to_string(),
-            stats.iterations.to_string(),
-            format!("{secs:.3}"),
-            format!("{bps:.1}"),
-            format!("{:.2}", eff_bw_gbs(&run)),
-        ]);
-        runs.push(run);
+    let nrhs_sweep = [1usize, 2, 4, 8];
+    // bytes/site of the full-link rows, indexed like nrhs_sweep, for the
+    // cross-compression assertion
+    let mut full_bps = [0.0f64; 4];
+    for compression in [Compression::None, Compression::TwoRow] {
+        let reals = compression.reals_per_link();
+        let mut prev_bytes_per_site = f64::INFINITY;
+        for (ni, &nrhs) in nrhs_sweep.iter().enumerate() {
+            let b = MultiFermionField::from_rhs(&bsources[..nrhs]);
+            let links = Links::from_gauge(fu.clone(), compression);
+            let mut op = MultiMdagM::with_links(&fgeom, links, fkappa, nrhs);
+            let mut team = Team::new(1, BarrierKind::Sleep);
+            let mut x = MultiFermionField::<f32>::zeros(&fgeom, nrhs);
+            let sw = Stopwatch::start();
+            let stats = solver::block_cg(&mut op, &mut team, &mut x, &b, ftol, fmaxiter);
+            let secs = sw.secs();
+            // bit-exactness across compression: the projected gauge field
+            // makes the two-row kernel arithmetic identical to full links
+            assert_eq!(
+                stats.per_rhs[0].history, ref_history,
+                "block({compression}, nrhs={nrhs}) rhs 0 history diverged from the fused reference"
+            );
+            let bytes = block_cg_iter_bytes(&fgeom, 4, nrhs as u64, reals);
+            let bps = per_site(&fgeom, bytes, nrhs as u64);
+            assert!(
+                bps < prev_bytes_per_site,
+                "bytes/site/RHS must strictly decrease with nrhs ({bps} !< {prev_bytes_per_site})"
+            );
+            prev_bytes_per_site = bps;
+            match compression {
+                Compression::None => full_bps[ni] = bps,
+                Compression::TwoRow => assert!(
+                    bps < full_bps[ni],
+                    "two-row bytes/site must be strictly below full links at nrhs {nrhs} \
+                     ({bps} !< {})",
+                    full_bps[ni]
+                ),
+            }
+            // worst TRUE residual over the RHS, like every other JSON row
+            let resid = {
+                let mut rop = NativeMdagM::new(&fgeom, fu.clone(), fkappa);
+                (0..nrhs)
+                    .map(|r| {
+                        let xr = x.extract_rhs(r);
+                        solver::residual::operator_residual(&mut rop, &xr, &bsources[r])
+                    })
+                    .fold(0.0f64, f64::max)
+            };
+            let run = Run {
+                name: match compression {
+                    Compression::None => "block-cgnr".into(),
+                    Compression::TwoRow => "block-cgnr-2row".into(),
+                },
+                precision: "f32",
+                tol: ftol,
+                threads: 1,
+                nrhs,
+                iterations: stats.iterations,
+                inner_iterations: 0,
+                seconds: secs,
+                gflops: stats.flops as f64 / secs / 1e9,
+                sweeps_per_iter: stats.sweeps_per_iter,
+                bytes_per_iter: bytes,
+                bytes_per_site: bps,
+                gauge_reals_per_link: reals,
+                true_residual: resid,
+                history: stats.per_rhs[0].history.clone(),
+            };
+            btable.row(vec![
+                compression.to_string(),
+                nrhs.to_string(),
+                stats.iterations.to_string(),
+                format!("{secs:.3}"),
+                format!("{bps:.1}"),
+                format!("{:.2}", eff_bw_gbs(&run)),
+            ]);
+            runs.push(run);
+        }
     }
     println!("{}", btable.render());
     println!(
-        "block solver: gauge links streamed once per sweep for all RHS — \
-         bytes/site/RHS strictly decreasing with nrhs (recorded in the JSON)"
+        "block solver: gauge links streamed once per sweep for all RHS, and two-row \
+         compression cuts that stream by a third — bytes/site/RHS strictly \
+         decreasing with nrhs, two-row strictly below full at every nrhs \
+         (both asserted; gauge_reals_per_link recorded in the JSON)"
     );
 
     emit_json(&dims.to_string(), kappa, &runs);

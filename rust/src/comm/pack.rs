@@ -14,7 +14,8 @@
 //! site list is the software analog of the SVE `compact` instruction.
 
 use crate::algebra::{Real, PROJ};
-use crate::field::{FermionField, GaugeField};
+use crate::dslash::links::LinkSource;
+use crate::field::FermionField;
 use crate::lattice::{Dir, SiteCoord};
 
 use super::halo::{HaloPlans, HALF_SPINOR_F32};
@@ -22,11 +23,11 @@ use super::halo::{HaloPlans, HALF_SPINOR_F32};
 /// Pack a range of the upward-export list of direction `dir` into `buf`.
 ///
 /// Content per site: `U_dir^dag(x) * proj+_dir(psi(x))`, 12 reals.
-pub fn pack_up_range<R: Real>(
+pub fn pack_up_range<R: Real, U: LinkSource<R>>(
     buf: &mut [R],
     plans: &HaloPlans,
     dir: usize,
-    u: &GaugeField<R>,
+    u: &U,
     psi: &FermionField<R>,
     begin: usize,
     end: usize,
@@ -36,7 +37,7 @@ pub fn pack_up_range<R: Real>(
     for i in begin..end {
         let s: SiteCoord = plans.up_export[dir][i];
         let h = entry.project(&psi.site(s));
-        let w = h.link_adj_mul(&u.link(Dir::from_index(dir), p_in, s));
+        let w = h.link_adj_mul(&u.site_link(Dir::from_index(dir), p_in, s));
         write_half(&mut buf[i * HALF_SPINOR_F32..(i + 1) * HALF_SPINOR_F32], &w);
     }
 }
@@ -78,11 +79,11 @@ pub const HALF_F32: usize = HALF_SPINOR_F32;
 
 /// Like [`pack_up_range`] but `buf` starts at site `begin` (relative
 /// addressing, for per-thread buffer sub-slices).
-pub fn pack_up_range_rel<R: Real>(
+pub fn pack_up_range_rel<R: Real, U: LinkSource<R>>(
     buf: &mut [R],
     plans: &HaloPlans,
     dir: usize,
-    u: &GaugeField<R>,
+    u: &U,
     psi: &FermionField<R>,
     begin: usize,
     end: usize,
@@ -92,7 +93,7 @@ pub fn pack_up_range_rel<R: Real>(
     for i in begin..end {
         let s: SiteCoord = plans.up_export[dir][i];
         let h = entry.project(&psi.site(s));
-        let w = h.link_adj_mul(&u.link(Dir::from_index(dir), p_in, s));
+        let w = h.link_adj_mul(&u.site_link(Dir::from_index(dir), p_in, s));
         let k = (i - begin) * HALF_SPINOR_F32;
         write_half(&mut buf[k..k + HALF_SPINOR_F32], &w);
     }
@@ -135,6 +136,7 @@ pub fn read_half<R: Real>(src: &[R]) -> crate::algebra::HalfSpinor {
 mod tests {
     use super::*;
     use crate::algebra::{Complex, HalfSpinor};
+    use crate::field::GaugeField;
     use crate::lattice::{Geometry, LatticeDims, Parity, Tiling};
     use crate::util::rng::Rng;
 

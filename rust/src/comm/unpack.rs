@@ -15,7 +15,8 @@
 //! position maps is the software analog of the `tbl` delivery in Fig. 7.
 
 use crate::algebra::{Real, Spinor, PROJ};
-use crate::field::{FermionField, GaugeField};
+use crate::dslash::links::LinkSource;
+use crate::field::FermionField;
 use crate::lattice::{Dir, SiteCoord};
 
 use super::halo::{site_from_flat, HaloPlans, HALF_SPINOR_F32, NOT_ON_FACE};
@@ -62,11 +63,11 @@ pub fn site_cost(plans: &HaloPlans, flat: usize) -> u64 {
 
 /// Process the flat output-site range `[begin, end)`: add every incoming
 /// halo contribution to `out`.
-pub fn eo2_range<R: Real>(
+pub fn eo2_range<R: Real, U: LinkSource<R>>(
     out: &mut FermionField<R>,
     plans: &HaloPlans,
     bufs: &RecvBuffers<R>,
-    u: &GaugeField<R>,
+    u: &U,
     begin: usize,
     end: usize,
 ) {
@@ -82,12 +83,12 @@ pub fn eo2_range<R: Real>(
 /// # Safety
 /// Ranges given to concurrent callers must be disjoint; `out` must point
 /// at a live buffer laid out by `l`.
-pub unsafe fn eo2_range_raw<R: Real>(
+pub unsafe fn eo2_range_raw<R: Real, U: LinkSource<R>>(
     out: crate::coordinator::team::SendPtr<R>,
     l: &crate::lattice::EoLayout,
     plans: &HaloPlans,
     bufs: &RecvBuffers<R>,
-    u: &GaugeField<R>,
+    u: &U,
     begin: usize,
     end: usize,
 ) {
@@ -118,7 +119,7 @@ pub unsafe fn eo2_range_raw<R: Real>(
             if pos != NOT_ON_FACE {
                 let off = pos as usize * HALF_SPINOR_F32;
                 let h = read_half(&bufs.from_up[dir][off..off + HALF_SPINOR_F32]);
-                let w = h.link_mul(&u.link(Dir::from_index(dir), plans.p_out, s));
+                let w = h.link_mul(&u.site_link(Dir::from_index(dir), plans.p_out, s));
                 PROJ[dir][0].reconstruct_accum(&mut acc, &w);
             }
             // import from the -d neighbor: backward hop at the low face;
@@ -156,12 +157,12 @@ pub unsafe fn eo2_range_raw<R: Real>(
 /// Same contract as [`eo2_range_raw`]; additionally `b` must point at a
 /// live field of the same layout.
 #[allow(clippy::too_many_arguments)]
-pub unsafe fn eo2_tail_range_raw<R: Real>(
+pub unsafe fn eo2_tail_range_raw<R: Real, U: LinkSource<R>>(
     out: crate::coordinator::team::SendPtr<R>,
     l: &crate::lattice::EoLayout,
     plans: &HaloPlans,
     bufs: &RecvBuffers<R>,
-    u: &GaugeField<R>,
+    u: &U,
     begin: usize,
     end: usize,
     a: R,
@@ -189,7 +190,7 @@ pub unsafe fn eo2_tail_range_raw<R: Real>(
                 if pos != NOT_ON_FACE {
                     let off = pos as usize * HALF_SPINOR_F32;
                     let h = read_half(&bufs.from_up[dir][off..off + HALF_SPINOR_F32]);
-                    let w = h.link_mul(&u.link(Dir::from_index(dir), plans.p_out, s));
+                    let w = h.link_mul(&u.site_link(Dir::from_index(dir), plans.p_out, s));
                     PROJ[dir][0].reconstruct_accum(&mut acc, &w);
                 }
                 let pos = plans.down_import_pos[dir][flat];

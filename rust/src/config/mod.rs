@@ -10,4 +10,4 @@ mod parser;
 mod run;
 
 pub use parser::{ConfigError, Document, Value};
-pub use run::{LatticeConfig, ParallelConfig, RunConfig, SolverConfig};
+pub use run::{GaugeConfig, LatticeConfig, ParallelConfig, RunConfig, SolverConfig};

@@ -3,6 +3,7 @@
 use std::path::{Path, PathBuf};
 
 use super::parser::{ConfigError, Document};
+use crate::dslash::Compression;
 use crate::lattice::{GeometryError, LatticeDims, ProcGrid, Tiling};
 
 #[derive(Clone, Debug)]
@@ -38,6 +39,15 @@ pub struct SolverConfig {
     pub nrhs: usize,
 }
 
+/// Gauge-link storage options.
+#[derive(Clone, Debug)]
+pub struct GaugeConfig {
+    /// `gauge.compression`: `none` (18 reals/link, stream as stored) or
+    /// `two-row` (12 reals/link, third row rebuilt in-register by the
+    /// kernels — only valid for unitary links; see ARCHITECTURE.md).
+    pub compression: Compression,
+}
+
 #[derive(Clone, Debug)]
 pub struct ParallelConfig {
     /// OpenMP-analog threads per rank (paper: 12 per CMG)
@@ -51,6 +61,7 @@ pub struct ParallelConfig {
 pub struct RunConfig {
     pub lattice: LatticeConfig,
     pub solver: SolverConfig,
+    pub gauge: GaugeConfig,
     pub parallel: ParallelConfig,
     pub artifacts_dir: PathBuf,
     pub seed: u64,
@@ -75,6 +86,9 @@ impl Default for RunConfig {
                 max_outer: 40,
                 threads: None,
                 nrhs: 1,
+            },
+            gauge: GaugeConfig {
+                compression: Compression::None,
             },
             parallel: ParallelConfig {
                 threads_per_rank: 4,
@@ -220,6 +234,12 @@ impl RunConfig {
                     n as usize
                 },
             },
+            gauge: GaugeConfig {
+                compression: Compression::parse(
+                    &doc.str_or("gauge.compression", defaults.gauge.compression.name()),
+                )
+                .map_err(|m| ConfigError { line: 0, message: m })?,
+            },
             parallel: ParallelConfig {
                 threads_per_rank: doc.int_or(
                     "parallel.threads_per_rank",
@@ -246,6 +266,19 @@ mod tests {
         assert!(c.solver.inner_tol > 0.0 && c.solver.max_outer > 0);
         assert_eq!(c.solver.threads, None, "unset threads means auto");
         assert_eq!(c.solver.nrhs, 1);
+        assert_eq!(c.gauge.compression, Compression::None);
+    }
+
+    #[test]
+    fn gauge_compression_parses_and_validates() {
+        let doc = Document::parse("[gauge]\ncompression = \"two-row\"").unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert_eq!(c.gauge.compression, Compression::TwoRow);
+        let doc = Document::parse("[gauge]\ncompression = \"none\"").unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert_eq!(c.gauge.compression, Compression::None);
+        let doc = Document::parse("[gauge]\ncompression = \"one-row\"").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "bad compression must fail");
     }
 
     #[test]

@@ -6,8 +6,8 @@ use crate::algebra::Real;
 use crate::comm::halo::HaloPlans;
 use crate::comm::unpack::RecvBuffers;
 use crate::comm::{balance, pack, unpack, Comm, CommScalar};
-use crate::dslash::{HoppingEo, StoreTail, WrapMode};
-use crate::field::{FermionField, GaugeField};
+use crate::dslash::{HoppingEo, LinkSource, StoreTail, WrapMode};
+use crate::field::FermionField;
 use crate::lattice::{Dir, Geometry, Parity};
 
 use super::profiler::{Phase, Profiler};
@@ -88,11 +88,15 @@ impl DistHopping {
     }
 
     /// out = H_{p_out <- 1-p_out} psi across the rank world. Generic over
-    /// the field precision: halo buffers and the wire payload follow `R`.
-    pub fn hopping<R: Real + CommScalar>(
+    /// the field precision (halo buffers and the wire payload follow `R`)
+    /// and the [`LinkSource`]: the bulk kernel streams full or two-row
+    /// compressed link tiles, and the EO1 pack / EO2 merge fetch their
+    /// per-site links from the same source. Only spinor half-halos ever
+    /// hit the wire, so compression changes no message.
+    pub fn hopping<R: Real + CommScalar, U: LinkSource<R>>(
         &self,
         out: &mut FermionField<R>,
-        u: &GaugeField<R>,
+        u: &U,
         psi: &FermionField<R>,
         p_out: Parity,
         comm: &mut Comm,
@@ -116,10 +120,10 @@ impl DistHopping {
     /// `FermionField::xpay(a, b)` — the fused distributed M-hat changes
     /// memory traffic, never arithmetic.
     #[allow(clippy::too_many_arguments)]
-    pub fn hopping_fused<R: Real + CommScalar>(
+    pub fn hopping_fused<R: Real + CommScalar, U: LinkSource<R>>(
         &self,
         out: &mut FermionField<R>,
-        u: &GaugeField<R>,
+        u: &U,
         psi: &FermionField<R>,
         p_out: Parity,
         comm: &mut Comm,
@@ -132,10 +136,10 @@ impl DistHopping {
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn hopping_inner<R: Real + CommScalar>(
+    fn hopping_inner<R: Real + CommScalar, U: LinkSource<R>>(
         &self,
         out: &mut FermionField<R>,
-        u: &GaugeField<R>,
+        u: &U,
         psi: &FermionField<R>,
         p_out: Parity,
         comm: &mut Comm,
@@ -309,11 +313,11 @@ impl DistHopping {
 
 /// EO1 pack helpers re-exported with the profiling-friendly names used by
 /// the driver (they operate on buffer *sub-slices* starting at site b).
-fn pack_up_shifted<R: Real>(
+fn pack_up_shifted<R: Real, U: LinkSource<R>>(
     buf: &mut [R],
     plans: &HaloPlans,
     dir: usize,
-    u: &GaugeField<R>,
+    u: &U,
     psi: &FermionField<R>,
     b: usize,
     e: usize,

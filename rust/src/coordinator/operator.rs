@@ -11,7 +11,10 @@
 
 use crate::algebra::Real;
 use crate::comm::{Comm, CommScalar};
-use crate::dslash::{full, DotCapture, HoppingEo, MultiDotCapture, MultiStoreTail, StoreTail};
+use crate::dslash::{
+    full, DotCapture, HoppingEo, LinkSource, Links, MultiDotCapture, MultiStoreTail,
+    StoreTail,
+};
 use crate::field::{FermionField, GaugeField, MultiFermionField};
 use crate::lattice::{Geometry, Parity, SC2};
 
@@ -37,7 +40,7 @@ pub trait LinearOperator<R: Real = f32> {
 /// Native single-rank M-hat = 1 - kappa^2 H_eo H_oe (Eq. 4 LHS).
 pub struct NativeMeo<R: Real = f32> {
     hop: HoppingEo,
-    u: GaugeField<R>,
+    u: Links<R>,
     kappa: R,
     tmp: FermionField<R>,
     half_volume: usize,
@@ -45,6 +48,12 @@ pub struct NativeMeo<R: Real = f32> {
 
 impl<R: Real> NativeMeo<R> {
     pub fn new(geom: &Geometry, u: GaugeField<R>, kappa: R) -> NativeMeo<R> {
+        NativeMeo::with_links(geom, Links::Full(u), kappa)
+    }
+
+    /// Construct from an explicit link source (full or two-row
+    /// compressed) — what `gauge.compression` routes through.
+    pub fn with_links(geom: &Geometry, u: Links<R>, kappa: R) -> NativeMeo<R> {
         NativeMeo {
             hop: HoppingEo::new(geom),
             u,
@@ -54,7 +63,7 @@ impl<R: Real> NativeMeo<R> {
         }
     }
 
-    pub fn gauge(&self) -> &GaugeField<R> {
+    pub fn links(&self) -> &Links<R> {
         &self.u
     }
 
@@ -90,7 +99,7 @@ impl<R: Real> LinearOperator<R> for NativeMeo<R> {
     }
 
     fn flops_per_apply(&self) -> u64 {
-        crate::dslash::flops::meo_flops(self.half_volume)
+        crate::dslash::flops::meo_links_flops(self.half_volume, self.u.reals_per_link())
     }
 }
 
@@ -103,8 +112,13 @@ pub struct NativeMdagM<R: Real = f32> {
 
 impl<R: Real> NativeMdagM<R> {
     pub fn new(geom: &Geometry, u: GaugeField<R>, kappa: R) -> NativeMdagM<R> {
+        NativeMdagM::with_links(geom, Links::Full(u), kappa)
+    }
+
+    /// Construct from an explicit link source (full or two-row).
+    pub fn with_links(geom: &Geometry, u: Links<R>, kappa: R) -> NativeMdagM<R> {
         NativeMdagM {
-            inner: NativeMeo::new(geom, u, kappa),
+            inner: NativeMeo::with_links(geom, u, kappa),
             mid: FermionField::zeros(geom),
         }
     }
@@ -201,7 +215,7 @@ impl<R: Real> LinearOperator<R> for UnfusedMdagM<R> {
 /// race the scratch fields it exposes as raw pointers.
 pub struct FusedView<'a, R: Real> {
     hop: &'a HoppingEo,
-    u: &'a GaugeField<R>,
+    u: &'a Links<R>,
     /// the fused xpay-tail coefficient, -kappa²
     a: R,
     /// odd-parity hopping scratch, written tile-sharded
@@ -394,15 +408,24 @@ pub trait MultiOperator<R: Real> {
     /// solver multiplies by the number of *active* RHS so `SolveStats`
     /// flops scale honestly with the mask, not with `nrhs`.
     fn flops_per_apply_rhs(&self) -> u64;
+
+    /// Flops of per-apply work *shared* across the RHS — e.g. the
+    /// two-row link rebuild, done once per site tile no matter how many
+    /// RHS consume the tile. The block solver charges this once per
+    /// batched apply (with any active RHS), never per RHS.
+    fn flops_per_apply_shared(&self) -> u64 {
+        0
+    }
 }
 
 /// Multi-RHS native single-rank M-hat: the batched analog of
-/// [`NativeMeo`], two multi-hopping phases on the team with the
-/// `-kappa²` xpay tail fused into the second store. Per-RHS results
+/// [`NativeMeo`], two multi-hopping phases with the `-kappa²` xpay tail
+/// fused into the second store, run as ONE team region per apply
+/// (in-region [`TeamBarrier`] between the phases). Per-RHS results
 /// bit-match [`NativeMeo::apply`] on the demuxed fields.
 pub struct MultiNativeMeo<R: Real = f32> {
     hop: HoppingEo,
-    u: GaugeField<R>,
+    u: Links<R>,
     kappa: R,
     tmp: MultiFermionField<R>,
     half_volume: usize,
@@ -411,6 +434,19 @@ pub struct MultiNativeMeo<R: Real = f32> {
 
 impl<R: Real> MultiNativeMeo<R> {
     pub fn new(geom: &Geometry, u: GaugeField<R>, kappa: R, nrhs: usize) -> MultiNativeMeo<R> {
+        MultiNativeMeo::with_links(geom, Links::Full(u), kappa, nrhs)
+    }
+
+    /// Construct from an explicit link source (full or two-row). The
+    /// compressed source composes with multi-RHS amortization: each
+    /// link tile is reconstructed once per site tile and consumed by
+    /// all N right-hand sides while hot.
+    pub fn with_links(
+        geom: &Geometry,
+        u: Links<R>,
+        kappa: R,
+        nrhs: usize,
+    ) -> MultiNativeMeo<R> {
         MultiNativeMeo {
             hop: HoppingEo::new(geom),
             u,
@@ -425,48 +461,8 @@ impl<R: Real> MultiNativeMeo<R> {
         self.kappa
     }
 
-    /// Run one multi-hopping phase tile-sharded over the team.
-    ///
-    /// `out` is written disjointly per thread (site-tile ranges); `psi`
-    /// and the tail's `b` are read-only full block slices. Completion of
-    /// `Team::parallel` synchronizes the writes, so successive phases
-    /// can read each other's output through plain slices.
-    #[allow(clippy::too_many_arguments)]
-    fn phase(
-        hop: &HoppingEo,
-        u: &GaugeField<R>,
-        team: &mut Team,
-        out: &mut MultiFermionField<R>,
-        psi: &[R],
-        p_out: Parity,
-        nrhs: usize,
-        active: &[bool],
-        tail: MultiStoreTail<R>,
-        dot: Option<(&[R], &mut [[f64; 3]])>,
-    ) {
-        let ntiles = hop.layout.ntiles();
-        let vpt = SC2 * hop.layout.vlen();
-        let n = team.nthreads();
-        let out_ptr = SendPtr(out.data.as_mut_ptr());
-        let dot = dot.map(|(w, p)| {
-            debug_assert_eq!(p.len(), ntiles * nrhs);
-            (w, SendPtr(p.as_mut_ptr()))
-        });
-        team.parallel(|tid| {
-            let (tb, te) = chunk_range(ntiles, tid, n);
-            if tb == te {
-                return;
-            }
-            // SAFETY: site-tile ranges are disjoint per thread; each
-            // thread writes only its own out sub-tiles / partials.
-            let out_tiles =
-                unsafe { out_ptr.slice_mut(tb * nrhs * vpt, (te - tb) * nrhs * vpt) };
-            let cap = dot.map(|(w, p)| MultiDotCapture {
-                with: w,
-                partials: unsafe { p.slice_mut(tb * nrhs, (te - tb) * nrhs) },
-            });
-            hop.apply_tiles_multi(out_tiles, u, psi, p_out, tb, te, nrhs, active, tail, cap);
-        });
+    pub fn links(&self) -> &Links<R> {
+        &self.u
     }
 }
 
@@ -485,21 +481,20 @@ impl<R: Real> MultiOperator<R> for MultiNativeMeo<R> {
     ) {
         debug_assert_eq!(psi.nrhs, self.nrhs);
         debug_assert_eq!(out.nrhs, self.nrhs);
-        let a = -(self.kappa * self.kappa);
-        // phase 1: tmp = H_oe psi
-        let MultiNativeMeo { hop, u, tmp, nrhs, .. } = self;
-        Self::phase(hop, u, team, tmp, &psi.data, Parity::Odd, *nrhs, active, MultiStoreTail::Assign, None);
-        // phase 2: out = psi - kappa² H_eo tmp (+ capture)
-        let dot = dot.map(|(w, p)| (&w.data[..], p));
-        Self::phase(
-            hop, u, team, out, &tmp.data, Parity::Even, *nrhs, active,
-            MultiStoreTail::Xpay { a, b: &psi.data },
-            dot,
-        );
+        apply_multi_via_view(self.multi_fused_view(), team, out, psi, active, dot);
     }
 
     fn flops_per_apply_rhs(&self) -> u64 {
+        // per-RHS arithmetic only; the link rebuild is shared (below)
         crate::dslash::flops::meo_flops(self.half_volume)
+    }
+
+    fn flops_per_apply_shared(&self) -> u64 {
+        // two-row reconstruction happens once per link tile per apply
+        // and feeds every RHS — charging it per RHS would overstate the
+        // executed arithmetic exactly where the bench tracks it
+        crate::dslash::flops::meo_links_flops(self.half_volume, self.u.reals_per_link())
+            - crate::dslash::flops::meo_flops(self.half_volume)
     }
 }
 
@@ -513,8 +508,13 @@ pub struct MultiMdagM<R: Real = f32> {
 
 impl<R: Real> MultiMdagM<R> {
     pub fn new(geom: &Geometry, u: GaugeField<R>, kappa: R, nrhs: usize) -> MultiMdagM<R> {
+        MultiMdagM::with_links(geom, Links::Full(u), kappa, nrhs)
+    }
+
+    /// Construct from an explicit link source (full or two-row).
+    pub fn with_links(geom: &Geometry, u: Links<R>, kappa: R, nrhs: usize) -> MultiMdagM<R> {
         MultiMdagM {
-            inner: MultiNativeMeo::new(geom, u, kappa, nrhs),
+            inner: MultiNativeMeo::with_links(geom, u, kappa, nrhs),
             mid: MultiFermionField::zeros(geom, nrhs),
         }
     }
@@ -537,38 +537,246 @@ impl<R: Real> MultiOperator<R> for MultiMdagM<R> {
         active: &[bool],
         dot: Option<(&MultiFermionField<R>, &mut [[f64; 3]])>,
     ) {
-        let MultiMdagM { inner, mid } = self;
-        let MultiNativeMeo { hop, u, tmp, nrhs, kappa, .. } = inner;
-        let a = -(*kappa * *kappa);
-        let nrhs = *nrhs;
-        debug_assert_eq!(psi.nrhs, nrhs);
-        // mid = g5 (M psi)
-        MultiNativeMeo::phase(hop, u, team, tmp, &psi.data, Parity::Odd, nrhs, active, MultiStoreTail::Assign, None);
-        MultiNativeMeo::phase(
-            hop, u, team, mid, &tmp.data, Parity::Even, nrhs, active,
-            MultiStoreTail::Gamma5Xpay { a, b: &psi.data },
-            None,
-        );
-        // out = g5 (M mid)
-        MultiNativeMeo::phase(hop, u, team, tmp, &mid.data, Parity::Odd, nrhs, active, MultiStoreTail::Assign, None);
-        let dot = dot.map(|(w, p)| (&w.data[..], p));
-        MultiNativeMeo::phase(
-            hop, u, team, out, &tmp.data, Parity::Even, nrhs, active,
-            MultiStoreTail::Gamma5Xpay { a, b: &mid.data },
-            dot,
-        );
+        debug_assert_eq!(psi.nrhs, self.inner.nrhs);
+        apply_multi_via_view(self.multi_fused_view(), team, out, psi, active, dot);
     }
 
     fn flops_per_apply_rhs(&self) -> u64 {
         2 * self.inner.flops_per_apply_rhs()
     }
+
+    fn flops_per_apply_shared(&self) -> u64 {
+        2 * self.inner.flops_per_apply_shared()
+    }
+}
+
+/// Run one full multi-RHS operator apply as a single team region over a
+/// [`MultiFusedView`] (the phases synchronize on the in-region barrier).
+fn apply_multi_via_view<R: Real>(
+    view: MultiFusedView<'_, R>,
+    team: &mut Team,
+    out: &mut MultiFermionField<R>,
+    psi: &MultiFermionField<R>,
+    active: &[bool],
+    dot: Option<(&MultiFermionField<R>, &mut [[f64; 3]])>,
+) {
+    let n = team.nthreads();
+    let out_ptr = SendPtr(out.data.as_mut_ptr());
+    // raw pointers cross the closure only inside SendPtr wrappers
+    let psi_ptr = SendPtr(psi.data.as_ptr() as *mut R);
+    let dot = dot.map(|(w, p)| {
+        debug_assert_eq!(p.len(), view.ntiles() * view.nrhs());
+        (SendPtr(w.data.as_ptr() as *mut R), SendPtr(p.as_mut_ptr()))
+    });
+    team.run(|tid, bar| unsafe {
+        // SAFETY: out/psi are live fields of the view's layout; the
+        // view's scratch is exclusively borrowed through the operator.
+        view.apply_team(
+            tid,
+            n,
+            bar,
+            out_ptr,
+            psi_ptr.0 as *const R,
+            active,
+            dot.map(|(w, p)| (w.0 as *const R, p)),
+        );
+    });
+}
+
+/// Raw, team-shareable view of a multi-RHS native operator: the batched
+/// analog of [`FusedView`]. One [`Team::run`] region can execute the
+/// operator's multi-hopping phases (synchronized on the in-region
+/// [`TeamBarrier`]) plus the block solver's masked BLAS-1 sweeps —
+/// which is how [`crate::solver::block`] runs a whole batched iteration
+/// as a single parallel region.
+pub struct MultiFusedView<'a, R: Real> {
+    hop: &'a HoppingEo,
+    u: &'a Links<R>,
+    /// the fused xpay-tail coefficient, -kappa²
+    a: R,
+    /// odd-parity batched scratch, written tile-sharded
+    tmp: SendPtr<R>,
+    /// even-parity scratch for the normal operator's mid block field
+    /// (`None` selects the plain M-hat, `Some` the M^dag M pipeline)
+    mid: Option<SendPtr<R>>,
+    nrhs: usize,
+    /// block-field length: `spinor_len * nrhs`
+    field_len: usize,
+    ntiles: usize,
+    vlen: usize,
+}
+
+impl<R: Real> MultiFusedView<'_, R> {
+    pub fn ntiles(&self) -> usize {
+        self.ntiles
+    }
+
+    pub fn nrhs(&self) -> usize {
+        self.nrhs
+    }
+
+    /// Scalar values per RHS sub-tile.
+    pub fn vals_per_tile(&self) -> usize {
+        SC2 * self.vlen
+    }
+
+    pub fn vlen(&self) -> usize {
+        self.vlen
+    }
+
+    pub fn field_len(&self) -> usize {
+        self.field_len
+    }
+
+    /// Apply `out_r = A psi_r` for every active RHS from inside a team
+    /// parallel region, with an optional fused per-(site tile, RHS) dot
+    /// capture (`partials[tile * nrhs + r]`, masked entries untouched).
+    ///
+    /// # Safety
+    ///
+    /// Same contract as [`FusedView::apply_team`], with block-field
+    /// lengths: every thread of an `n`-thread region calls this exactly
+    /// once with identical arguments (`tid` excepted); `out`, `psi` and
+    /// `dot.0` point to block fields of this operator's layout
+    /// (`field_len` values; partials to `ntiles * nrhs` entries), none
+    /// aliasing each other or the view's scratch. `out` and the partials
+    /// are written tile-sharded; pass a barrier before reading them.
+    #[allow(clippy::too_many_arguments)]
+    pub unsafe fn apply_team(
+        &self,
+        tid: usize,
+        n: usize,
+        bar: &TeamBarrier,
+        out: SendPtr<R>,
+        psi: *const R,
+        active: &[bool],
+        dot: Option<(*const R, SendPtr<[f64; 3]>)>,
+    ) {
+        let vpt = self.vals_per_tile();
+        let nrhs = self.nrhs;
+        let (tb, te) = chunk_range(self.ntiles, tid, n);
+        let len = self.field_len;
+        let psi_s = std::slice::from_raw_parts(psi, len);
+        let capture = |dot: Option<(*const R, SendPtr<[f64; 3]>)>| {
+            // SAFETY: same contract as this fn — `with` points to a full
+            // block field, the partials shard [tb, te) is thread-owned
+            dot.map(|(w, p)| unsafe {
+                MultiDotCapture {
+                    with: std::slice::from_raw_parts(w, len),
+                    partials: p.slice_mut(tb * nrhs, (te - tb) * nrhs),
+                }
+            })
+        };
+
+        // phase 1: tmp = H_oe psi
+        {
+            let tmp_tiles = self.tmp.slice_mut(tb * nrhs * vpt, (te - tb) * nrhs * vpt);
+            self.hop.apply_tiles_multi(
+                tmp_tiles, self.u, psi_s, Parity::Odd, tb, te, nrhs, active,
+                MultiStoreTail::Assign, None,
+            );
+        }
+        bar.wait();
+        match self.mid {
+            None => {
+                // phase 2: out = psi - kappa² H_eo tmp (+ capture)
+                let tmp_s = std::slice::from_raw_parts(self.tmp.0 as *const R, len);
+                let out_tiles = out.slice_mut(tb * nrhs * vpt, (te - tb) * nrhs * vpt);
+                self.hop.apply_tiles_multi(
+                    out_tiles, self.u, tmp_s, Parity::Even, tb, te, nrhs, active,
+                    MultiStoreTail::Xpay { a: self.a, b: psi_s },
+                    capture(dot),
+                );
+            }
+            Some(mid) => {
+                // phase 2: mid = g5 (psi - kappa² H_eo tmp)
+                {
+                    let tmp_s =
+                        std::slice::from_raw_parts(self.tmp.0 as *const R, len);
+                    let mid_tiles =
+                        mid.slice_mut(tb * nrhs * vpt, (te - tb) * nrhs * vpt);
+                    self.hop.apply_tiles_multi(
+                        mid_tiles, self.u, tmp_s, Parity::Even, tb, te, nrhs, active,
+                        MultiStoreTail::Gamma5Xpay { a: self.a, b: psi_s },
+                        None,
+                    );
+                }
+                bar.wait();
+                let mid_s = std::slice::from_raw_parts(mid.0 as *const R, len);
+                // phase 3: tmp = H_oe mid
+                {
+                    let tmp_tiles =
+                        self.tmp.slice_mut(tb * nrhs * vpt, (te - tb) * nrhs * vpt);
+                    self.hop.apply_tiles_multi(
+                        tmp_tiles, self.u, mid_s, Parity::Odd, tb, te, nrhs, active,
+                        MultiStoreTail::Assign, None,
+                    );
+                }
+                bar.wait();
+                // phase 4: out = g5 (mid - kappa² H_eo tmp) (+ capture)
+                let tmp_s = std::slice::from_raw_parts(self.tmp.0 as *const R, len);
+                let out_tiles = out.slice_mut(tb * nrhs * vpt, (te - tb) * nrhs * vpt);
+                self.hop.apply_tiles_multi(
+                    out_tiles, self.u, tmp_s, Parity::Even, tb, te, nrhs, active,
+                    MultiStoreTail::Gamma5Xpay { a: self.a, b: mid_s },
+                    capture(dot),
+                );
+            }
+        }
+    }
+}
+
+/// A multi-RHS operator the block solvers can run as ONE team region
+/// per batched iteration (operator phases + masked BLAS-1 sweeps inside
+/// a single [`Team::run`] job).
+pub trait MultiFusedSolvable<R: Real>: MultiOperator<R> {
+    /// Borrow the raw view used inside team parallel regions. The
+    /// operator stays mutably borrowed while the view lives.
+    fn multi_fused_view(&mut self) -> MultiFusedView<'_, R>;
+}
+
+impl<R: Real> MultiFusedSolvable<R> for MultiNativeMeo<R> {
+    fn multi_fused_view(&mut self) -> MultiFusedView<'_, R> {
+        MultiFusedView {
+            a: -(self.kappa * self.kappa),
+            tmp: SendPtr(self.tmp.data.as_mut_ptr()),
+            mid: None,
+            nrhs: self.nrhs,
+            field_len: self.tmp.data.len(),
+            ntiles: self.hop.layout.ntiles(),
+            vlen: self.hop.layout.vlen(),
+            hop: &self.hop,
+            u: &self.u,
+        }
+    }
+}
+
+impl<R: Real> MultiFusedSolvable<R> for MultiMdagM<R> {
+    fn multi_fused_view(&mut self) -> MultiFusedView<'_, R> {
+        let MultiMdagM { inner, mid } = self;
+        MultiFusedView {
+            a: -(inner.kappa * inner.kappa),
+            tmp: SendPtr(inner.tmp.data.as_mut_ptr()),
+            mid: Some(SendPtr(mid.data.as_mut_ptr())),
+            nrhs: inner.nrhs,
+            field_len: mid.data.len(),
+            ntiles: inner.hop.layout.ntiles(),
+            vlen: inner.hop.layout.vlen(),
+            hop: &inner.hop,
+            u: &inner.u,
+        }
+    }
 }
 
 /// Distributed M-hat over the rank world: two distributed hoppings plus
 /// the axpy; dot-product reductions go through the communicator.
-pub struct DistMeo<'a, R: Real + CommScalar = f32> {
+pub struct DistMeo<'a, R: Real + CommScalar = f32, U: LinkSource<R> = GaugeField<R>> {
     pub dist: &'a DistHopping,
-    pub u: &'a GaugeField<R>,
+    /// the link source — a plain [`GaugeField`], a compressed field, or
+    /// the runtime-selected [`Links`] sum; bulk kernel and EO2 merge
+    /// both stream it (halos carry only spinors, so compression never
+    /// touches the wire)
+    pub u: &'a U,
     pub kappa: R,
     pub comm: &'a mut Comm,
     pub team: &'a mut Team,
@@ -577,16 +785,16 @@ pub struct DistMeo<'a, R: Real + CommScalar = f32> {
     half_volume: usize,
 }
 
-impl<'a, R: Real + CommScalar> DistMeo<'a, R> {
+impl<'a, R: Real + CommScalar, U: LinkSource<R>> DistMeo<'a, R, U> {
     pub fn new(
         geom: &Geometry,
         dist: &'a DistHopping,
-        u: &'a GaugeField<R>,
+        u: &'a U,
         kappa: R,
         comm: &'a mut Comm,
         team: &'a mut Team,
         prof: &'a Profiler,
-    ) -> DistMeo<'a, R> {
+    ) -> DistMeo<'a, R, U> {
         DistMeo {
             dist,
             u,
@@ -600,7 +808,7 @@ impl<'a, R: Real + CommScalar> DistMeo<'a, R> {
     }
 }
 
-impl<R: Real + CommScalar> LinearOperator<R> for DistMeo<'_, R> {
+impl<R: Real + CommScalar, U: LinkSource<R>> LinearOperator<R> for DistMeo<'_, R, U> {
     fn apply(&mut self, out: &mut FermionField<R>, psi: &FermionField<R>) {
         // M-hat = 1 - kappa² H_eo H_oe with the xpay tail fused into the
         // second hopping's pipeline (bulk store when nothing
@@ -623,7 +831,7 @@ impl<R: Real + CommScalar> LinearOperator<R> for DistMeo<'_, R> {
     }
 
     fn flops_per_apply(&self) -> u64 {
-        crate::dslash::flops::meo_flops(self.half_volume)
+        crate::dslash::flops::meo_links_flops(self.half_volume, self.u.reals_per_link())
     }
 
     fn reduce_sum(&mut self, v: f64) -> f64 {

@@ -19,9 +19,10 @@
 //! oracle comparisons and the mixed-precision outer operator.
 
 use crate::algebra::{Coef, ProjEntry, Real, PROJ};
-use crate::field::{blas, FermionField, GaugeField};
+use crate::field::{blas, FermionField};
 use crate::lattice::{EoLayout, Geometry, Parity, CC2, SC2};
 
+use super::links::LinkSource;
 use super::shift::{LanePlan, ShiftPlans};
 
 /// How the kernel's accumulated tile is stored to the output: the tail
@@ -97,10 +98,13 @@ impl HoppingEo {
     }
 
     /// out = H_{p_out <- p_in} psi. `psi` has parity `1 - p_out`.
-    pub fn apply<R: Real>(
+    /// Generic over the [`LinkSource`]: a full [`crate::field::GaugeField`]
+    /// streams its tiles copy-free, a compressed source rebuilds the
+    /// third row in-tile.
+    pub fn apply<R: Real, U: LinkSource<R>>(
         &self,
         out: &mut FermionField<R>,
-        u: &GaugeField<R>,
+        u: &U,
         psi: &FermionField<R>,
         p_out: Parity,
     ) {
@@ -111,10 +115,10 @@ impl HoppingEo {
     /// Apply to a contiguous range of output tiles (the unit the thread
     /// team distributes). `out_tiles` covers exactly the tiles
     /// `[tile_begin, tile_end)` of the output field.
-    pub fn apply_tiles<R: Real>(
+    pub fn apply_tiles<R: Real, U: LinkSource<R>>(
         &self,
         out_tiles: &mut [R],
-        u: &GaugeField<R>,
+        u: &U,
         psi: &FermionField<R>,
         p_out: Parity,
         tile_begin: usize,
@@ -136,10 +140,10 @@ impl HoppingEo {
     /// in-kernel dot capture. `psi` is the source field's data slice
     /// (so team phases can feed scratch written through raw pointers).
     #[allow(clippy::too_many_arguments)]
-    pub fn apply_tiles_fused<R: Real>(
+    pub fn apply_tiles_fused<R: Real, U: LinkSource<R>>(
         &self,
         out_tiles: &mut [R],
-        u: &GaugeField<R>,
+        u: &U,
         psi: &[R],
         p_out: Parity,
         tile_begin: usize,
@@ -152,20 +156,20 @@ impl HoppingEo {
             (tile_end - tile_begin) * SC2 * self.layout.vlen()
         );
         match self.layout.vlen() {
-            2 => self.apply_v::<R, 2>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
-            4 => self.apply_v::<R, 4>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
-            8 => self.apply_v::<R, 8>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
-            16 => self.apply_v::<R, 16>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
-            32 => self.apply_v::<R, 32>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
+            2 => self.apply_v::<R, U, 2>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
+            4 => self.apply_v::<R, U, 4>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
+            8 => self.apply_v::<R, U, 8>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
+            16 => self.apply_v::<R, U, 16>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
+            32 => self.apply_v::<R, U, 32>(out_tiles, u, psi, p_out, tile_begin, tile_end, tail, dot),
             v => panic!("unsupported VLEN {v} (expected 2/4/8/16/32)"),
         }
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn apply_v<R: Real, const V: usize>(
+    fn apply_v<R: Real, U: LinkSource<R>, const V: usize>(
         &self,
         out_tiles: &mut [R],
-        u: &GaugeField<R>,
+        u: &U,
         psi: &[R],
         p_out: Parity,
         tile_begin: usize,
@@ -182,6 +186,7 @@ impl HoppingEo {
         // scratch tiles (per-call; the thread team gives each thread its own)
         let mut ps = vec![R::ZERO; SC2 * V]; // shifted spinor tile
         let mut us = vec![R::ZERO; CC2 * V]; // shifted link tile
+        let mut uf = vec![R::ZERO; CC2 * V]; // reconstruction buffer (compressed sources)
         let mut h = vec![R::ZERO; 12 * V]; // projected half spinor
         let mut acc = vec![R::ZERO; SC2 * V];
 
@@ -199,14 +204,14 @@ impl HoppingEo {
                 let mask = skip && xt + 1 == nxt;
                 let plan = &self.plans.x_plus[b];
                 shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, tile, SC2), tile_slice::<R, V>(psi, nbr, SC2), plan, mask, SC2);
-                hop_fwd::<R, V>(&mut acc, &mut h, &ps, tile_slice::<R, V>(&u.data[0][p_out.index()], tile, CC2), &PROJ[0][0]);
+                hop_fwd::<R, V>(&mut acc, &mut h, &ps, u.link_tile::<V>(0, p_out, tile, &mut uf), &PROJ[0][0]);
 
                 // backward: neighbor tile at xt-1; link U_x(x - x^) shifts too
                 let nbr = l.tile_index(t, z, yt, (xt + nxt - 1) % nxt);
                 let mask = skip && xt == 0;
                 let plan = &self.plans.x_minus[b];
                 shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, tile, SC2), tile_slice::<R, V>(psi, nbr, SC2), plan, mask, SC2);
-                shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[0][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[0][p_in.index()], nbr, CC2), plan, false, CC2);
+                u.link_tile_shifted::<V>(0, p_in, tile, nbr, plan, &mut us);
                 hop_bwd::<R, V>(&mut acc, &mut h, &ps, &us, &PROJ[0][1]);
             }
 
@@ -217,13 +222,13 @@ impl HoppingEo {
                 let mask = skip && yt + 1 == nyt;
                 let plan = &self.plans.y_plus;
                 shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, tile, SC2), tile_slice::<R, V>(psi, nbr, SC2), plan, mask, SC2);
-                hop_fwd::<R, V>(&mut acc, &mut h, &ps, tile_slice::<R, V>(&u.data[1][p_out.index()], tile, CC2), &PROJ[1][0]);
+                hop_fwd::<R, V>(&mut acc, &mut h, &ps, u.link_tile::<V>(1, p_out, tile, &mut uf), &PROJ[1][0]);
 
                 let nbr = l.tile_index(t, z, (yt + nyt - 1) % nyt, xt);
                 let mask = skip && yt == 0;
                 let plan = &self.plans.y_minus;
                 shuffle::<R, V>(&mut ps, tile_slice::<R, V>(psi, tile, SC2), tile_slice::<R, V>(psi, nbr, SC2), plan, mask, SC2);
-                shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[1][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[1][p_in.index()], nbr, CC2), plan, false, CC2);
+                u.link_tile_shifted::<V>(1, p_in, tile, nbr, plan, &mut us);
                 hop_bwd::<R, V>(&mut acc, &mut h, &ps, &us, &PROJ[1][1]);
             }
 
@@ -232,11 +237,11 @@ impl HoppingEo {
                 let skip = self.wrap[2] == WrapMode::SkipBoundary;
                 if !(skip && z + 1 == nz) {
                     let nbr = l.tile_index(t, (z + 1) % nz, yt, xt);
-                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), tile_slice::<R, V>(&u.data[2][p_out.index()], tile, CC2), &PROJ[2][0]);
+                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), u.link_tile::<V>(2, p_out, tile, &mut uf), &PROJ[2][0]);
                 }
                 if !(skip && z == 0) {
                     let nbr = l.tile_index(t, (z + nz - 1) % nz, yt, xt);
-                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), tile_slice::<R, V>(&u.data[2][p_in.index()], nbr, CC2), &PROJ[2][1]);
+                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), u.link_tile::<V>(2, p_in, nbr, &mut uf), &PROJ[2][1]);
                 }
             }
 
@@ -245,11 +250,11 @@ impl HoppingEo {
                 let skip = self.wrap[3] == WrapMode::SkipBoundary;
                 if !(skip && t + 1 == nt) {
                     let nbr = l.tile_index((t + 1) % nt, z, yt, xt);
-                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), tile_slice::<R, V>(&u.data[3][p_out.index()], tile, CC2), &PROJ[3][0]);
+                    hop_fwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), u.link_tile::<V>(3, p_out, tile, &mut uf), &PROJ[3][0]);
                 }
                 if !(skip && t == 0) {
                     let nbr = l.tile_index((t + nt - 1) % nt, z, yt, xt);
-                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), tile_slice::<R, V>(&u.data[3][p_in.index()], nbr, CC2), &PROJ[3][1]);
+                    hop_bwd::<R, V>(&mut acc, &mut h, tile_slice::<R, V>(psi, nbr, SC2), u.link_tile::<V>(3, p_in, nbr, &mut uf), &PROJ[3][1]);
                 }
             }
 

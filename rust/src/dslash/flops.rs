@@ -42,6 +42,34 @@ pub fn meo_flops(half_volume: usize) -> u64 {
     2 * hopping_block_flops(half_volume) + 2 * 24 * half_volume as u64
 }
 
+// ---- two-row link compression ------------------------------------------
+
+/// Flops of rebuilding one two-row-compressed link's third row in
+/// registers: 3 complex entries of `conj(row0 × row1)`, each 4 mul +
+/// 3 add (re) and 4 mul + 3 add + 1 negate (im) = 15.
+pub const TWO_ROW_RECONSTRUCT_FLOPS_PER_LINK: u64 = 3 * 15;
+
+/// Extra flops one hopping block pays per output site when its links
+/// are two-row compressed: 8 hops, one link rebuilt per hop.
+pub fn two_row_hopping_flops(half_volume: usize) -> u64 {
+    8 * TWO_ROW_RECONSTRUCT_FLOPS_PER_LINK * half_volume as u64
+}
+
+/// [`meo_flops`] with the link storage charged honestly: a two-row
+/// source (12 reals per link) pays [`two_row_hopping_flops`] on each of
+/// the two hopping blocks; a full source (18 reals) pays nothing extra.
+/// The reconstruction work is the flops-for-bytes trade the roofline
+/// makes free — but it is real arithmetic and the GFlops reports count
+/// it.
+pub fn meo_links_flops(half_volume: usize, reals_per_link: usize) -> u64 {
+    let rebuild = if reals_per_link < 18 {
+        2 * two_row_hopping_flops(half_volume)
+    } else {
+        0
+    };
+    meo_flops(half_volume) + rebuild
+}
+
 // ---- BLAS-1 accounting --------------------------------------------------
 //
 // The solvers charge every axpy/xpay sweep and every dot/norm reduction,
@@ -107,6 +135,19 @@ mod tests {
     fn block_flops_scale_with_volume() {
         assert_eq!(hopping_block_flops(100), 136_800);
         assert!(meo_flops(100) > 2 * hopping_block_flops(100));
+    }
+
+    #[test]
+    fn two_row_reconstruction_charged_honestly() {
+        // full links add nothing; two-row links pay 2 * 8 * 45 per site
+        assert_eq!(meo_links_flops(100, 18), meo_flops(100));
+        assert_eq!(
+            meo_links_flops(100, 12),
+            meo_flops(100) + 2 * 8 * 45 * 100
+        );
+        // the rebuild is small next to the hop itself (< 7% of QXS)
+        let ratio = two_row_hopping_flops(100) as f64 / hopping_block_flops(100) as f64;
+        assert!(ratio < 0.07, "ratio {ratio}");
     }
 
     #[test]

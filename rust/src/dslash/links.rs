@@ -1,0 +1,410 @@
+//! Link sources: how gauge links flow into the stencil kernels.
+//!
+//! The hopping kernels ([`super::eo`], [`super::multi`]) and the
+//! distributed driver's halo helpers are generic over [`LinkSource`]: a
+//! provider of per-(direction, parity, tile) link tiles in the full
+//! `CC2 * VLEN` layout the SU(3) lane math consumes. Two providers
+//! exist:
+//!
+//! * [`GaugeField`] — *copy-through*: `link_tile` borrows the tile
+//!   straight out of storage (zero copies, the pre-compression hot
+//!   path, bit-for-bit the old kernel);
+//! * [`CompressedGaugeField`] — *in-tile two-row reconstruction*: the 12
+//!   stored component vectors are copied (or, for the backward hop,
+//!   lane-shuffled via the [`super::shift`] plan) into the caller's tile
+//!   buffer and the 6 third-row vectors are rebuilt lanewise
+//!   ([`crate::field::compressed::reconstruct_third_row`]). Because the
+//!   shuffle is a pure lane permutation and the rebuild is lanewise, the
+//!   shuffle-then-reconstruct order is bitwise identical to
+//!   reconstructing both tiles first — it just moves 12 vectors instead
+//!   of 18.
+//!
+//! [`Links`] is the runtime-selectable sum of the two, picked by the
+//! `gauge.compression` config key; the operators in
+//! [`crate::coordinator::operator`] store it so one monomorphized solver
+//! stack serves both representations.
+
+use crate::algebra::{Real, Su3};
+use crate::field::compressed::{reconstruct_third_row, CT2};
+use crate::field::{CompressedGaugeField, GaugeField};
+use crate::lattice::{Dir, EoLayout, Parity, SiteCoord, CC2};
+
+use super::eo::{shuffle, tile_slice};
+use super::shift::LanePlan;
+
+/// Gauge-link storage policy (the `gauge.compression` config key).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Compression {
+    /// Full 18-real links, streamed as stored.
+    #[default]
+    None,
+    /// Two-row 12-real links, third row rebuilt in-register.
+    TwoRow,
+}
+
+impl Compression {
+    /// Parse the config/CLI spelling (`none` | `two-row`).
+    pub fn parse(s: &str) -> Result<Compression, String> {
+        match s {
+            "none" => Ok(Compression::None),
+            "two-row" => Ok(Compression::TwoRow),
+            other => Err(format!(
+                "gauge compression must be \"none\" or \"two-row\" (got {other:?})"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::TwoRow => "two-row",
+        }
+    }
+
+    /// Reals streamed per link under this policy (18 or 12).
+    pub fn reals_per_link(self) -> usize {
+        match self {
+            Compression::None => CC2,
+            Compression::TwoRow => CT2,
+        }
+    }
+}
+
+impl std::fmt::Display for Compression {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A provider of SU(3) link tiles for the stencil kernels.
+///
+/// `Sync` because kernel phases run tile-sharded on the worker team with
+/// the source shared read-only across threads.
+pub trait LinkSource<R: Real>: Sync {
+    /// Reals streamed per link (18 full, 12 two-row) — the bytes/site
+    /// model and the flop accounting key off this.
+    fn reals_per_link(&self) -> usize;
+
+    fn layout(&self) -> &EoLayout;
+
+    /// The `CC2 * V` link tile for (dir, parity, tile): either borrowed
+    /// straight from storage (`buf` untouched) or materialized into
+    /// `buf` by two-row reconstruction. `buf` must hold `CC2 * V`
+    /// values; `V` must equal the layout's `vlen`.
+    fn link_tile<'a, const V: usize>(
+        &'a self,
+        dir: usize,
+        p: Parity,
+        tile: usize,
+        buf: &'a mut [R],
+    ) -> &'a [R];
+
+    /// The backward-hop link tile: the lane shuffle of (`tile`, `nbr`)
+    /// by `plan`, written into `buf` (`CC2 * V` values). The compressed
+    /// source shuffles the 12 stored vectors and reconstructs in the
+    /// shuffled tile — bitwise identical to shuffling a reconstructed
+    /// pair, with a third less data moved.
+    fn link_tile_shifted<const V: usize>(
+        &self,
+        dir: usize,
+        p: Parity,
+        tile: usize,
+        nbr: usize,
+        plan: &LanePlan,
+        buf: &mut [R],
+    );
+
+    /// One link as an f64 matrix, for the per-site paths (EO1 halo pack,
+    /// EO2 halo merge, observables). Compressed sources rebuild the
+    /// third row in `R` first, so the value matches the reconstructed
+    /// field's bitwise.
+    fn site_link(&self, dir: Dir, p: Parity, s: SiteCoord) -> Su3;
+}
+
+impl<R: Real> LinkSource<R> for GaugeField<R> {
+    #[inline(always)]
+    fn reals_per_link(&self) -> usize {
+        CC2
+    }
+
+    #[inline(always)]
+    fn layout(&self) -> &EoLayout {
+        &self.layout
+    }
+
+    #[inline(always)]
+    fn link_tile<'a, const V: usize>(
+        &'a self,
+        dir: usize,
+        p: Parity,
+        tile: usize,
+        _buf: &'a mut [R],
+    ) -> &'a [R] {
+        tile_slice::<R, V>(&self.data[dir][p.index()], tile, CC2)
+    }
+
+    #[inline(always)]
+    fn link_tile_shifted<const V: usize>(
+        &self,
+        dir: usize,
+        p: Parity,
+        tile: usize,
+        nbr: usize,
+        plan: &LanePlan,
+        buf: &mut [R],
+    ) {
+        let arr = &self.data[dir][p.index()];
+        shuffle::<R, V>(
+            buf,
+            tile_slice::<R, V>(arr, tile, CC2),
+            tile_slice::<R, V>(arr, nbr, CC2),
+            plan,
+            false,
+            CC2,
+        );
+    }
+
+    #[inline(always)]
+    fn site_link(&self, dir: Dir, p: Parity, s: SiteCoord) -> Su3 {
+        self.link(dir, p, s)
+    }
+}
+
+impl<R: Real> LinkSource<R> for CompressedGaugeField<R> {
+    #[inline(always)]
+    fn reals_per_link(&self) -> usize {
+        CT2
+    }
+
+    #[inline(always)]
+    fn layout(&self) -> &EoLayout {
+        &self.layout
+    }
+
+    #[inline(always)]
+    fn link_tile<'a, const V: usize>(
+        &'a self,
+        dir: usize,
+        p: Parity,
+        tile: usize,
+        buf: &'a mut [R],
+    ) -> &'a [R] {
+        let stored = tile_slice::<R, V>(&self.data[dir][p.index()], tile, CT2);
+        buf[..CT2 * V].copy_from_slice(stored);
+        reconstruct_third_row(buf, V);
+        &buf[..CC2 * V]
+    }
+
+    #[inline(always)]
+    fn link_tile_shifted<const V: usize>(
+        &self,
+        dir: usize,
+        p: Parity,
+        tile: usize,
+        nbr: usize,
+        plan: &LanePlan,
+        buf: &mut [R],
+    ) {
+        let arr = &self.data[dir][p.index()];
+        // shuffle only the stored rows, then rebuild in the shifted tile
+        shuffle::<R, V>(
+            buf,
+            tile_slice::<R, V>(arr, tile, CT2),
+            tile_slice::<R, V>(arr, nbr, CT2),
+            plan,
+            false,
+            CT2,
+        );
+        reconstruct_third_row(buf, V);
+    }
+
+    #[inline(always)]
+    fn site_link(&self, dir: Dir, p: Parity, s: SiteCoord) -> Su3 {
+        self.link(dir, p, s)
+    }
+}
+
+/// Runtime-selected link representation: the sum type the operators
+/// store so `gauge.compression` can switch the whole solver stack
+/// between full and two-row links without re-monomorphizing it.
+#[derive(Clone, Debug)]
+pub enum Links<R: Real = f32> {
+    /// Full 18-real links (copy-through).
+    Full(GaugeField<R>),
+    /// Two-row 12-real links (in-tile reconstruction).
+    TwoRow(CompressedGaugeField<R>),
+}
+
+impl<R: Real> Links<R> {
+    /// Wrap a gauge field under the given compression policy. `TwoRow`
+    /// compresses (drops the third row); the original field is consumed
+    /// either way.
+    pub fn from_gauge(u: GaugeField<R>, c: Compression) -> Links<R> {
+        match c {
+            Compression::None => Links::Full(u),
+            Compression::TwoRow => Links::TwoRow(CompressedGaugeField::compress(&u)),
+        }
+    }
+
+    pub fn compression(&self) -> Compression {
+        match self {
+            Links::Full(_) => Compression::None,
+            Links::TwoRow(_) => Compression::TwoRow,
+        }
+    }
+
+    /// Materialize a full gauge field: a clone for `Full`, the canonical
+    /// third-row rebuild for `TwoRow` (the field the compressed kernels
+    /// are bitwise equivalent to).
+    pub fn to_gauge(&self) -> GaugeField<R> {
+        match self {
+            Links::Full(u) => u.clone(),
+            Links::TwoRow(c) => c.reconstruct(),
+        }
+    }
+}
+
+impl<R: Real> LinkSource<R> for Links<R> {
+    #[inline(always)]
+    fn reals_per_link(&self) -> usize {
+        match self {
+            Links::Full(u) => LinkSource::<R>::reals_per_link(u),
+            Links::TwoRow(c) => LinkSource::<R>::reals_per_link(c),
+        }
+    }
+
+    #[inline(always)]
+    fn layout(&self) -> &EoLayout {
+        match self {
+            Links::Full(u) => &u.layout,
+            Links::TwoRow(c) => &c.layout,
+        }
+    }
+
+    #[inline(always)]
+    fn link_tile<'a, const V: usize>(
+        &'a self,
+        dir: usize,
+        p: Parity,
+        tile: usize,
+        buf: &'a mut [R],
+    ) -> &'a [R] {
+        match self {
+            Links::Full(u) => u.link_tile::<V>(dir, p, tile, buf),
+            Links::TwoRow(c) => c.link_tile::<V>(dir, p, tile, buf),
+        }
+    }
+
+    #[inline(always)]
+    fn link_tile_shifted<const V: usize>(
+        &self,
+        dir: usize,
+        p: Parity,
+        tile: usize,
+        nbr: usize,
+        plan: &LanePlan,
+        buf: &mut [R],
+    ) {
+        match self {
+            Links::Full(u) => u.link_tile_shifted::<V>(dir, p, tile, nbr, plan, buf),
+            Links::TwoRow(c) => c.link_tile_shifted::<V>(dir, p, tile, nbr, plan, buf),
+        }
+    }
+
+    #[inline(always)]
+    fn site_link(&self, dir: Dir, p: Parity, s: SiteCoord) -> Su3 {
+        match self {
+            Links::Full(u) => u.link(dir, p, s),
+            Links::TwoRow(c) => c.link(dir, p, s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dslash::shift::ShiftPlans;
+    use crate::lattice::{Geometry, LatticeDims, Tiling};
+    use crate::util::rng::Rng;
+
+    fn geom() -> Geometry {
+        Geometry::single_rank(
+            LatticeDims::new(8, 4, 4, 4).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn compression_parse_roundtrip() {
+        assert_eq!(Compression::parse("none").unwrap(), Compression::None);
+        assert_eq!(Compression::parse("two-row").unwrap(), Compression::TwoRow);
+        assert!(Compression::parse("one-row").is_err());
+        assert_eq!(Compression::None.reals_per_link(), 18);
+        assert_eq!(Compression::TwoRow.reals_per_link(), 12);
+        assert_eq!(Compression::TwoRow.to_string(), "two-row");
+    }
+
+    #[test]
+    fn compressed_tiles_match_reconstructed_field_bitwise() {
+        const V: usize = 4;
+        let g = geom();
+        let mut rng = Rng::seeded(101);
+        let u = GaugeField::<f64>::random(&g, &mut rng);
+        let c = CompressedGaugeField::compress(&u);
+        let full = c.reconstruct();
+        let mut buf = vec![0.0f64; CC2 * V];
+        let mut buf2 = vec![0.0f64; CC2 * V];
+        for dir in 0..4 {
+            for p in Parity::BOTH {
+                for tile in [0usize, 3, full.layout.ntiles() - 1] {
+                    let want = full.link_tile::<V>(dir, p, tile, &mut buf2).to_vec();
+                    let got = c.link_tile::<V>(dir, p, tile, &mut buf);
+                    assert_eq!(got, &want[..], "dir {dir} {p:?} tile {tile}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shifted_compressed_tiles_match_shifting_reconstructed() {
+        const V: usize = 4;
+        let g = geom();
+        let mut rng = Rng::seeded(102);
+        let u = GaugeField::<f32>::random(&g, &mut rng);
+        let c = CompressedGaugeField::compress(&u);
+        let full = c.reconstruct();
+        let plans = ShiftPlans::new(g.tiling);
+        let mut got = vec![0.0f32; CC2 * V];
+        let mut want = vec![0.0f32; CC2 * V];
+        for (dir, plan) in [(0usize, &plans.x_minus[0]), (1, &plans.y_minus)] {
+            for p in Parity::BOTH {
+                let (tile, nbr) = (1usize, 0usize);
+                full.link_tile_shifted::<V>(dir, p, tile, nbr, plan, &mut want);
+                c.link_tile_shifted::<V>(dir, p, tile, nbr, plan, &mut got);
+                assert_eq!(got, want, "dir {dir} {p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn links_enum_delegates() {
+        const V: usize = 4;
+        let g = geom();
+        let mut rng = Rng::seeded(103);
+        let u = GaugeField::<f32>::random(&g, &mut rng);
+        let full = Links::from_gauge(u.clone(), Compression::None);
+        let two = Links::from_gauge(u.clone(), Compression::TwoRow);
+        assert_eq!(full.compression(), Compression::None);
+        assert_eq!(two.compression(), Compression::TwoRow);
+        assert_eq!(LinkSource::<f32>::reals_per_link(&full), 18);
+        assert_eq!(LinkSource::<f32>::reals_per_link(&two), 12);
+        // to_gauge of TwoRow is the projected field the kernels match
+        let proj = two.to_gauge();
+        let mut buf = vec![0.0f32; CC2 * V];
+        let got = two.link_tile::<V>(2, Parity::Odd, 1, &mut buf).to_vec();
+        let mut buf2 = vec![0.0f32; CC2 * V];
+        let want = proj.link_tile::<V>(2, Parity::Odd, 1, &mut buf2).to_vec();
+        assert_eq!(got, want);
+    }
+}

@@ -11,6 +11,9 @@
 //! * [`multi`] — the multi-RHS batched hopping: one gauge stream feeds
 //!   N interleaved right-hand sides (block-field layout), with per-RHS
 //!   fused store tails, dot capture and convergence masking.
+//! * [`links`] — the [`links::LinkSource`] abstraction the hot kernels
+//!   stream gauge tiles through: full 18-real links (copy-through) or
+//!   two-row 12-real compressed links rebuilt in-register.
 //! * [`shift`] — the `sel`/`tbl`/`ext` lane-shuffle engine.
 //! * [`clover`] — site-local clover `D_ee`/`D_oo` blocks (QWS context).
 //! * [`flops`] — flop accounting (QXS 1368 flop/site convention).
@@ -20,11 +23,13 @@ pub mod eo;
 pub mod flops;
 pub mod full;
 pub mod gather;
+pub mod links;
 pub mod multi;
 pub mod scalar;
 pub mod shift;
 
 pub use eo::{DotCapture, HoppingEo, StoreTail, WrapMode};
+pub use links::{Compression, LinkSource, Links};
 pub use multi::{MultiDotCapture, MultiStoreTail};
 pub use gather::HoppingGather;
 pub use scalar::HoppingScalar;

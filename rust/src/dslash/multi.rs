@@ -23,10 +23,11 @@
 //! kernel work.
 
 use crate::algebra::Real;
-use crate::field::{blas, GaugeField};
+use crate::field::blas;
 use crate::lattice::{Parity, CC2, SC2};
 
 use super::eo::{hop_bwd, hop_fwd, shuffle, tile_slice, HoppingEo, WrapMode};
+use super::links::LinkSource;
 
 /// Fused store tail of the multi-RHS kernel: the same expressions as
 /// [`super::eo::StoreTail`], with `b` a *block-field* data slice
@@ -62,10 +63,10 @@ impl HoppingEo {
     /// data slices. Sub-tiles of RHS with `active[r] == false` are not
     /// read or written.
     #[allow(clippy::too_many_arguments)]
-    pub fn apply_tiles_multi<R: Real>(
+    pub fn apply_tiles_multi<R: Real, U: LinkSource<R>>(
         &self,
         out_tiles: &mut [R],
-        u: &GaugeField<R>,
+        u: &U,
         psi: &[R],
         p_out: Parity,
         tile_begin: usize,
@@ -80,21 +81,25 @@ impl HoppingEo {
             out_tiles.len(),
             (tile_end - tile_begin) * nrhs * SC2 * self.layout.vlen()
         );
+        if !active.iter().any(|&a| a) {
+            // nothing to feed: skip the link loads/reconstruction too
+            return;
+        }
         match self.layout.vlen() {
-            2 => self.apply_multi_v::<R, 2>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
-            4 => self.apply_multi_v::<R, 4>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
-            8 => self.apply_multi_v::<R, 8>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
-            16 => self.apply_multi_v::<R, 16>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
-            32 => self.apply_multi_v::<R, 32>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            2 => self.apply_multi_v::<R, U, 2>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            4 => self.apply_multi_v::<R, U, 4>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            8 => self.apply_multi_v::<R, U, 8>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            16 => self.apply_multi_v::<R, U, 16>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
+            32 => self.apply_multi_v::<R, U, 32>(out_tiles, u, psi, p_out, tile_begin, tile_end, nrhs, active, tail, dot),
             v => panic!("unsupported VLEN {v} (expected 2/4/8/16/32)"),
         }
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn apply_multi_v<R: Real, const V: usize>(
+    fn apply_multi_v<R: Real, U: LinkSource<R>, const V: usize>(
         &self,
         out_tiles: &mut [R],
-        u: &GaugeField<R>,
+        u: &U,
         psi: &[R],
         p_out: Parity,
         tile_begin: usize,
@@ -115,6 +120,9 @@ impl HoppingEo {
         // hop's link data is consumed by all N spinors while hot
         let mut ps = vec![R::ZERO; SC2 * V];
         let mut us = vec![R::ZERO; CC2 * V];
+        // reconstruction buffer: a compressed source rebuilds each hop's
+        // link tile here ONCE per site tile, and all N RHS consume it
+        let mut uf = vec![R::ZERO; CC2 * V];
         let mut h = vec![R::ZERO; 12 * V];
         let mut acc = vec![R::ZERO; nrhs * SC2 * V];
 
@@ -132,7 +140,7 @@ impl HoppingEo {
                 let nbr = l.tile_index(t, z, yt, (xt + 1) % nxt);
                 let mask = skip && xt + 1 == nxt;
                 let plan = &self.plans.x_plus[b];
-                let u_tile = tile_slice::<R, V>(&u.data[0][p_out.index()], tile, CC2);
+                let u_tile = u.link_tile::<V>(0, p_out, tile, &mut uf);
                 for r in 0..nrhs {
                     if !active[r] {
                         continue;
@@ -144,8 +152,9 @@ impl HoppingEo {
                 let nbr = l.tile_index(t, z, yt, (xt + nxt - 1) % nxt);
                 let mask = skip && xt == 0;
                 let plan = &self.plans.x_minus[b];
-                // the backward link shuffle is RHS-independent: once per hop
-                shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[0][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[0][p_in.index()], nbr, CC2), plan, false, CC2);
+                // the backward link shuffle (and, for compressed links,
+                // the reconstruction) is RHS-independent: once per hop
+                u.link_tile_shifted::<V>(0, p_in, tile, nbr, plan, &mut us);
                 for r in 0..nrhs {
                     if !active[r] {
                         continue;
@@ -161,7 +170,7 @@ impl HoppingEo {
                 let nbr = l.tile_index(t, z, (yt + 1) % nyt, xt);
                 let mask = skip && yt + 1 == nyt;
                 let plan = &self.plans.y_plus;
-                let u_tile = tile_slice::<R, V>(&u.data[1][p_out.index()], tile, CC2);
+                let u_tile = u.link_tile::<V>(1, p_out, tile, &mut uf);
                 for r in 0..nrhs {
                     if !active[r] {
                         continue;
@@ -173,7 +182,7 @@ impl HoppingEo {
                 let nbr = l.tile_index(t, z, (yt + nyt - 1) % nyt, xt);
                 let mask = skip && yt == 0;
                 let plan = &self.plans.y_minus;
-                shuffle::<R, V>(&mut us, tile_slice::<R, V>(&u.data[1][p_in.index()], tile, CC2), tile_slice::<R, V>(&u.data[1][p_in.index()], nbr, CC2), plan, false, CC2);
+                u.link_tile_shifted::<V>(1, p_in, tile, nbr, plan, &mut us);
                 for r in 0..nrhs {
                     if !active[r] {
                         continue;
@@ -188,7 +197,7 @@ impl HoppingEo {
                 let skip = self.wrap[2] == WrapMode::SkipBoundary;
                 if !(skip && z + 1 == nz) {
                     let nbr = l.tile_index(t, (z + 1) % nz, yt, xt);
-                    let u_tile = tile_slice::<R, V>(&u.data[2][p_out.index()], tile, CC2);
+                    let u_tile = u.link_tile::<V>(2, p_out, tile, &mut uf);
                     for r in 0..nrhs {
                         if !active[r] {
                             continue;
@@ -198,7 +207,7 @@ impl HoppingEo {
                 }
                 if !(skip && z == 0) {
                     let nbr = l.tile_index(t, (z + nz - 1) % nz, yt, xt);
-                    let u_tile = tile_slice::<R, V>(&u.data[2][p_in.index()], nbr, CC2);
+                    let u_tile = u.link_tile::<V>(2, p_in, nbr, &mut uf);
                     for r in 0..nrhs {
                         if !active[r] {
                             continue;
@@ -213,7 +222,7 @@ impl HoppingEo {
                 let skip = self.wrap[3] == WrapMode::SkipBoundary;
                 if !(skip && t + 1 == nt) {
                     let nbr = l.tile_index((t + 1) % nt, z, yt, xt);
-                    let u_tile = tile_slice::<R, V>(&u.data[3][p_out.index()], tile, CC2);
+                    let u_tile = u.link_tile::<V>(3, p_out, tile, &mut uf);
                     for r in 0..nrhs {
                         if !active[r] {
                             continue;
@@ -223,7 +232,7 @@ impl HoppingEo {
                 }
                 if !(skip && t == 0) {
                     let nbr = l.tile_index((t + nt - 1) % nt, z, yt, xt);
-                    let u_tile = tile_slice::<R, V>(&u.data[3][p_in.index()], nbr, CC2);
+                    let u_tile = u.link_tile::<V>(3, p_in, nbr, &mut uf);
                     for r in 0..nrhs {
                         if !active[r] {
                             continue;

@@ -29,11 +29,14 @@
 //!
 //! ## Masking
 //!
-//! Every fused sweep here takes an `active` mask (one flag per RHS);
-//! masked-out RHS are skipped entirely, so a converged system stops
-//! costing BLAS-1 (and, via the masked dslash, kernel) work while the
-//! stragglers keep iterating. Masked data is left untouched — frozen at
-//! its converged value.
+//! Masked sweeps take an `active` mask (one flag per RHS); masked-out
+//! RHS are skipped entirely, so a converged system stops costing BLAS-1
+//! (and, via the masked dslash, kernel) work while the stragglers keep
+//! iterating. Masked data is left untouched — frozen at its converged
+//! value. Only the warm-start residual helper lives here: the block
+//! solvers' per-iteration sweeps run tile-sharded inside one team
+//! region ([`crate::solver::block`]) directly on the [`blas`] slice
+//! kernels, sharing this module's sub-tile indexing.
 
 use super::blas;
 use super::FermionField;
@@ -224,186 +227,6 @@ impl<R: Real> MultiFermionField<R> {
         }
     }
 
-    /// Per-RHS `p_r = beta_r * p_r + r_r` for active RHS.
-    pub fn xpay_masked(&mut self, beta: &[R], o: &MultiFermionField<R>, active: &[bool]) {
-        debug_assert_eq!(self.data.len(), o.data.len());
-        let vpt = self.vals_per_tile();
-        for t in 0..self.site_tiles() {
-            for r in 0..self.nrhs {
-                if !active[r] {
-                    continue;
-                }
-                let off = (t * self.nrhs + r) * vpt;
-                blas::xpay_slice(&mut self.data[off..off + vpt], beta[r], &o.data[off..off + vpt]);
-            }
-        }
-    }
-
-    /// Per-RHS complex `self_r += a_r * o_r` for active RHS.
-    pub fn caxpy_masked(&mut self, a: &[Complex], o: &MultiFermionField<R>, active: &[bool]) {
-        debug_assert_eq!(self.data.len(), o.data.len());
-        let vlen = self.layout.vlen();
-        let vpt = self.vals_per_tile();
-        for t in 0..self.site_tiles() {
-            for r in 0..self.nrhs {
-                if !active[r] {
-                    continue;
-                }
-                let off = (t * self.nrhs + r) * vpt;
-                blas::caxpy_slice(
-                    &mut self.data[off..off + vpt],
-                    R::from_f64(a[r].re),
-                    R::from_f64(a[r].im),
-                    &o.data[off..off + vpt],
-                    vlen,
-                );
-            }
-        }
-    }
-
-    /// Per-RHS fused complex `self_r += a_r * t_r` with capture of
-    /// `[Re⟨d_r, self_r⟩, Im⟨d_r, self_r⟩, |self_r|²]` for active RHS
-    /// (canonical grouping; `d = None` fills only the norm² slot).
-    pub fn caxpy_capture_masked(
-        &mut self,
-        a: &[Complex],
-        t: &MultiFermionField<R>,
-        d: Option<&MultiFermionField<R>>,
-        active: &[bool],
-        captures: &mut [[f64; 3]],
-    ) {
-        debug_assert_eq!(self.data.len(), t.data.len());
-        let vlen = self.layout.vlen();
-        let vpt = self.vals_per_tile();
-        for (r, on) in active.iter().enumerate() {
-            if *on {
-                captures[r] = [0.0; 3];
-            }
-        }
-        for st in 0..self.site_tiles() {
-            for r in 0..self.nrhs {
-                if !active[r] {
-                    continue;
-                }
-                let off = (st * self.nrhs + r) * vpt;
-                let rt = &mut self.data[off..off + vpt];
-                blas::caxpy_slice(
-                    rt,
-                    R::from_f64(a[r].re),
-                    R::from_f64(a[r].im),
-                    &t.data[off..off + vpt],
-                    vlen,
-                );
-                let part = match d {
-                    Some(d) => blas::cdot_norm2_tile(&d.data[off..off + vpt], rt, vlen),
-                    None => [0.0, 0.0, blas::norm2_tile(rt, vlen)],
-                };
-                for (acc, v) in captures[r].iter_mut().zip(part) {
-                    *acc += v;
-                }
-            }
-        }
-    }
-
-    /// Per-RHS fused `self_r += a_r * p_r + w_r * s_r` for active RHS
-    /// (the BiCGStab x-update).
-    pub fn caxpy2_masked(
-        &mut self,
-        a: &[Complex],
-        p: &MultiFermionField<R>,
-        w: &[Complex],
-        s: &MultiFermionField<R>,
-        active: &[bool],
-    ) {
-        let vlen = self.layout.vlen();
-        let vpt = self.vals_per_tile();
-        for t in 0..self.site_tiles() {
-            for r in 0..self.nrhs {
-                if !active[r] {
-                    continue;
-                }
-                let off = (t * self.nrhs + r) * vpt;
-                blas::caxpy2_slice(
-                    &mut self.data[off..off + vpt],
-                    R::from_f64(a[r].re),
-                    R::from_f64(a[r].im),
-                    &p.data[off..off + vpt],
-                    R::from_f64(w[r].re),
-                    R::from_f64(w[r].im),
-                    &s.data[off..off + vpt],
-                    vlen,
-                );
-            }
-        }
-    }
-
-    /// Per-RHS fused `self_r = beta_r (self_r - omega_r v_r) + r_r` for
-    /// active RHS (the BiCGStab search-direction update; `mo = -omega`).
-    pub fn p_update_masked(
-        &mut self,
-        mo: &[Complex],
-        v: &MultiFermionField<R>,
-        beta: &[Complex],
-        rr: &MultiFermionField<R>,
-        active: &[bool],
-    ) {
-        let vlen = self.layout.vlen();
-        let vpt = self.vals_per_tile();
-        for t in 0..self.site_tiles() {
-            for r in 0..self.nrhs {
-                if !active[r] {
-                    continue;
-                }
-                let off = (t * self.nrhs + r) * vpt;
-                blas::p_update_slice(
-                    &mut self.data[off..off + vpt],
-                    R::from_f64(mo[r].re),
-                    R::from_f64(mo[r].im),
-                    &v.data[off..off + vpt],
-                    R::from_f64(beta[r].re),
-                    R::from_f64(beta[r].im),
-                    &rr.data[off..off + vpt],
-                    vlen,
-                );
-            }
-        }
-    }
-}
-
-/// The fused block-CG update, per active RHS: `x_r += alpha_r p_r`,
-/// `r_r -= alpha_r ap_r`, and |r_r|² into `rr[r]` — one streaming pass
-/// over the interleaved storage, elementwise identical per RHS to
-/// [`blas::cg_update_slice`] on the demuxed fields.
-pub fn cg_update_masked<R: Real>(
-    x: &mut MultiFermionField<R>,
-    r: &mut MultiFermionField<R>,
-    p: &MultiFermionField<R>,
-    ap: &MultiFermionField<R>,
-    alpha: &[R],
-    active: &[bool],
-    rr: &mut [f64],
-) {
-    let nrhs = x.nrhs;
-    let vlen = x.layout.vlen();
-    let vpt = x.vals_per_tile();
-    for (i, on) in active.iter().enumerate() {
-        if *on {
-            rr[i] = 0.0;
-        }
-    }
-    for t in 0..x.site_tiles() {
-        for i in 0..nrhs {
-            if !active[i] {
-                continue;
-            }
-            let off = (t * nrhs + i) * vpt;
-            let span = off..off + vpt;
-            blas::axpy_slice(&mut x.data[span.clone()], alpha[i], &p.data[span.clone()]);
-            let rt = &mut r.data[span.clone()];
-            blas::axpy_slice(rt, -alpha[i], &ap.data[span]);
-            rr[i] += blas::norm2_tile(rt, vlen);
-        }
-    }
 }
 
 #[cfg(test)]

@@ -124,49 +124,108 @@ impl<R: Real> GaugeField<R> {
 
     /// Average plaquette `<Re tr P>/3` over all sites and the 6 planes.
     /// Scalar implementation: an observable / test oracle, not a kernel.
+    ///
+    /// Links are materialized by tile passes over the AoSoA storage —
+    /// tile offset computed once per tile, each `Su3` built exactly once
+    /// — instead of a `link_at` lookup per plaquette corner (which
+    /// re-derived the site's parity and tile index and rebuilt the same
+    /// matrix ~12 times). Because tiles are t-outermost, the cache is a
+    /// *per-t-slab* ring: the corner loop at time `t` only touches
+    /// links at `t` and `t+1`, so at most three slabs (current, next,
+    /// and slab 0 pinned for the periodic wrap) are live — O(V/T)
+    /// memory, not O(V). The corner loop reads the slabs in the
+    /// original lexical order with the original `mul`/`adj`/`trace`
+    /// chain, so the accumulated f64 total is bit-for-bit the value the
+    /// per-corner lookup produced (pinned by
+    /// `plaquette_bit_matches_link_at_oracle`).
     pub fn plaquette(&self) -> f64 {
         let d = self.geom.local;
+        let ext = [d.x, d.y, d.z, d.t];
+        let slab_vol = d.x * d.y * d.z;
+        let slex = |x: usize, y: usize, z: usize| (z * d.y + y) * d.x + x;
+
+        let l = &self.layout;
+        let vlen = l.vlen();
+        // tiles are (t, z, yt, xt) with t outermost: one t-slab is the
+        // contiguous tile range [t * tpt, (t + 1) * tpt)
+        let tpt = l.nz * l.nyt * l.nxt;
+        let build_slab = |t: usize| -> [Vec<Su3>; 4] {
+            let mut slab: [Vec<Su3>; 4] =
+                std::array::from_fn(|_| vec![Su3::IDENTITY; slab_vol]);
+            for p in Parity::BOTH {
+                for (dir, cache) in slab.iter_mut().enumerate() {
+                    let arr = &self.data[dir][p.index()];
+                    for tile in t * tpt..(t + 1) * tpt {
+                        let base = tile * crate::lattice::CC2 * vlen;
+                        for lane in 0..vlen {
+                            let mut u = Su3::default();
+                            for a in 0..3 {
+                                for b in 0..3 {
+                                    let off = base + ((a * 3 + b) * 2) * vlen + lane;
+                                    u.m[a][b] = Complex::new(
+                                        arr[off].to_f64(),
+                                        arr[off + vlen].to_f64(),
+                                    );
+                                }
+                            }
+                            let s = l.lane_to_site(crate::lattice::LaneCoord {
+                                tile,
+                                lane,
+                            });
+                            let x = l.lexical_x(s, p);
+                            cache[slex(x, s.y, s.z)] = u;
+                        }
+                    }
+                }
+            }
+            slab
+        };
+
+        // slab ring: slab 0 stays pinned for the wrap at t = T-1
+        let slab0 = build_slab(0);
+        let mut cur: Option<[Vec<Su3>; 4]> = None;
+        let mut next: Option<[Vec<Su3>; 4]> = if d.t > 1 { Some(build_slab(1)) } else { None };
+
+        // corner loop: identical iteration and accumulation order (and
+        // per-plaquette arithmetic) as the per-site lookup reference
         let mut total = 0.0;
         let mut count = 0usize;
-        let ext = [d.x, d.y, d.z, d.t];
-        let mut coords = [0usize; 4];
         for t in 0..d.t {
+            let cur_s: &[Vec<Su3>; 4] = if t == 0 { &slab0 } else { cur.as_ref().unwrap() };
+            // mu < nu, so only cnu with nu = 3 ever leaves the slab
+            let next_s: &[Vec<Su3>; 4] =
+                if (t + 1) % d.t == 0 { &slab0 } else { next.as_ref().unwrap() };
             for z in 0..d.z {
                 for y in 0..d.y {
                     for x in 0..d.x {
-                        coords[0] = x;
-                        coords[1] = y;
-                        coords[2] = z;
-                        coords[3] = t;
+                        let coords = [x, y, z, t];
                         for mu in 0..4 {
                             for nu in (mu + 1)..4 {
                                 let mut cmu = coords;
                                 cmu[mu] = (cmu[mu] + 1) % ext[mu];
                                 let mut cnu = coords;
                                 cnu[nu] = (cnu[nu] + 1) % ext[nu];
-                                let u1 = self.link_at(
-                                    Dir::from_index(mu),
-                                    coords[0], coords[1], coords[2], coords[3],
-                                );
-                                let u2 = self.link_at(
-                                    Dir::from_index(nu),
-                                    cmu[0], cmu[1], cmu[2], cmu[3],
-                                );
-                                let u3 = self.link_at(
-                                    Dir::from_index(mu),
-                                    cnu[0], cnu[1], cnu[2], cnu[3],
-                                );
-                                let u4 = self.link_at(
-                                    Dir::from_index(nu),
-                                    coords[0], coords[1], coords[2], coords[3],
-                                );
-                                let p = u1.mul(&u2).mul(&u3.adj()).mul(&u4.adj());
+                                let u1 = &cur_s[mu][slex(x, y, z)];
+                                // cmu shifts mu <= 2: stays in this slab
+                                let u2 = &cur_s[nu][slex(cmu[0], cmu[1], cmu[2])];
+                                let u3 = if nu == 3 {
+                                    &next_s[mu][slex(x, y, z)]
+                                } else {
+                                    &cur_s[mu][slex(cnu[0], cnu[1], cnu[2])]
+                                };
+                                let u4 = &cur_s[nu][slex(x, y, z)];
+                                let p = u1.mul(u2).mul(&u3.adj()).mul(&u4.adj());
                                 total += p.trace().re;
                                 count += 1;
                             }
                         }
                     }
                 }
+            }
+            // advance the ring: next becomes current, build t + 2
+            cur = next.take();
+            if t + 2 < d.t {
+                next = Some(build_slab(t + 2));
             }
         }
         total / (3.0 * count as f64)
@@ -219,6 +278,70 @@ mod tests {
                 assert!((u.det() - Complex::ONE).abs() < 1e-12);
             }
         }
+    }
+
+    /// The per-corner `link_at` implementation `plaquette` replaced —
+    /// kept verbatim as the oracle for the bit-for-bit pinning below.
+    fn plaquette_link_at_oracle<R: crate::algebra::Real>(g: &GaugeField<R>) -> f64 {
+        let d = g.geom.local;
+        let mut total = 0.0;
+        let mut count = 0usize;
+        let ext = [d.x, d.y, d.z, d.t];
+        for t in 0..d.t {
+            for z in 0..d.z {
+                for y in 0..d.y {
+                    for x in 0..d.x {
+                        let coords = [x, y, z, t];
+                        for mu in 0..4 {
+                            for nu in (mu + 1)..4 {
+                                let mut cmu = coords;
+                                cmu[mu] = (cmu[mu] + 1) % ext[mu];
+                                let mut cnu = coords;
+                                cnu[nu] = (cnu[nu] + 1) % ext[nu];
+                                let u1 = g.link_at(
+                                    Dir::from_index(mu),
+                                    coords[0], coords[1], coords[2], coords[3],
+                                );
+                                let u2 =
+                                    g.link_at(Dir::from_index(nu), cmu[0], cmu[1], cmu[2], cmu[3]);
+                                let u3 =
+                                    g.link_at(Dir::from_index(mu), cnu[0], cnu[1], cnu[2], cnu[3]);
+                                let u4 = g.link_at(
+                                    Dir::from_index(nu),
+                                    coords[0], coords[1], coords[2], coords[3],
+                                );
+                                let p = u1.mul(&u2).mul(&u3.adj()).mul(&u4.adj());
+                                total += p.trace().re;
+                                count += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        total / (3.0 * count as f64)
+    }
+
+    #[test]
+    fn plaquette_bit_matches_link_at_oracle() {
+        // the tile-cached implementation must reproduce the per-corner
+        // lookup EXACTLY — same accumulation order, same f64 bits
+        for seed in [21u64, 22] {
+            let mut rng = Rng::seeded(seed);
+            let g32 = GaugeField::<f32>::random(&geom(), &mut rng);
+            assert_eq!(g32.plaquette(), plaquette_link_at_oracle(&g32));
+        }
+        let mut rng = Rng::seeded(23);
+        let g64 = GaugeField::<f64>::random(&geom(), &mut rng);
+        assert_eq!(g64.plaquette(), plaquette_link_at_oracle(&g64));
+        // and on an asymmetric lattice with a different tiling
+        let geom = Geometry::single_rank(
+            crate::lattice::LatticeDims::new(8, 4, 2, 6).unwrap(),
+            Tiling::new(4, 2).unwrap(),
+        )
+        .unwrap();
+        let g = GaugeField::<f32>::random(&geom, &mut Rng::seeded(24));
+        assert_eq!(g.plaquette(), plaquette_link_at_oracle(&g));
     }
 
     #[test]

@@ -5,10 +5,12 @@
 
 pub mod blas;
 pub mod block;
+pub mod compressed;
 mod fermion;
 mod gauge;
 pub mod io;
 
 pub use block::MultiFermionField;
+pub use compressed::{CompressedGaugeField, CT2};
 pub use fermion::FermionField;
 pub use gauge::GaugeField;

@@ -18,6 +18,7 @@ use lqcd::coordinator::operator::{
     LinearOperator, MultiMdagM, MultiNativeMeo, NativeMdagM, NativeMeo,
 };
 use lqcd::coordinator::{BarrierKind, Team};
+use lqcd::dslash::{Compression, Links};
 use lqcd::field::{FermionField, GaugeField, MultiFermionField};
 use lqcd::harness::{self, Opts};
 use lqcd::lattice::{Geometry, LatticeDims, Tiling};
@@ -29,7 +30,7 @@ use lqcd::util::rng::Rng;
 const VALUE_OPTS: &[&str] = &[
     "dims", "tiling", "threads", "iters", "config", "kappa", "tol", "maxiter",
     "algorithm", "artifacts", "seed", "precision", "inner-tol", "max-outer",
-    "nrhs",
+    "nrhs", "gauge-compression",
 ];
 
 fn main() -> ExitCode {
@@ -97,6 +98,9 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
     cfg.solver.nrhs = args.get_parse("nrhs", cfg.solver.nrhs)?;
     if cfg.solver.nrhs == 0 {
         return Err("--nrhs must be positive".into());
+    }
+    if let Some(c) = args.get("gauge-compression") {
+        cfg.gauge.compression = Compression::parse(c)?;
     }
     let use_pjrt = args.flag("pjrt") || cfg.solver.use_pjrt;
     let opts = Opts {
@@ -227,6 +231,12 @@ fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Erro
         _ if !use_pjrt => return solve_native::<f32>(cfg),
         _ => {}
     }
+    if cfg.gauge.compression != Compression::None {
+        return Err(
+            "--pjrt does not support --gauge-compression (the artifacts stream full links)"
+                .into(),
+        );
+    }
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
     let mut rng = Rng::seeded(cfg.seed);
@@ -281,11 +291,15 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
     println!("plaquette = {:.6}", u.plaquette());
     let b: FermionField<R> = FermionField::gaussian(&geom, &mut rng);
     let kappa = R::from_f64(cfg.solver.kappa);
+    let links = Links::from_gauge(u, cfg.gauge.compression);
+    if cfg.gauge.compression == Compression::TwoRow {
+        println!("gauge compression: two-row (12 reals/link streamed, third row rebuilt in-kernel)");
+    }
     let mut team = Team::new(threads, BarrierKind::Sleep);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let stats = if cfg.solver.algorithm == "bicgstab" {
-        let mut op = NativeMeo::new(&geom, u, kappa);
+        let mut op = NativeMeo::with_links(&geom, links, kappa);
         let mut x = FermionField::zeros(&geom);
         let stats = solver::fused::bicgstab(
             &mut op, &mut team, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter,
@@ -296,7 +310,7 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
         );
         stats
     } else {
-        let mut op = NativeMdagM::new(&geom, u, kappa);
+        let mut op = NativeMdagM::with_links(&geom, links, kappa);
         let mut bp = b.clone();
         bp.gamma5();
         let mut mbp = FermionField::zeros(&geom);
@@ -352,23 +366,27 @@ fn solve_block<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error
     let sources: Vec<FermionField<R>> =
         (0..nrhs).map(|_| FermionField::gaussian(&geom, &mut rng)).collect();
     let kappa = R::from_f64(cfg.solver.kappa);
+    let links = Links::from_gauge(u, cfg.gauge.compression);
+    if cfg.gauge.compression == Compression::TwoRow {
+        println!("gauge compression: two-row (12 reals/link streamed once for all {nrhs} rhs)");
+    }
     let mut team = Team::new(threads, BarrierKind::Sleep);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let (stats, resid) = if cfg.solver.algorithm == "bicgstab" {
         let b = MultiFermionField::from_rhs(&sources);
-        let mut op = MultiNativeMeo::new(&geom, u.clone(), kappa, nrhs);
+        let mut op = MultiNativeMeo::with_links(&geom, links.clone(), kappa, nrhs);
         let mut x = MultiFermionField::<R>::zeros(&geom, nrhs);
         let stats =
             solver::block_bicgstab(&mut op, &mut team, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
         // worst true per-RHS residual, via the single-RHS operator
-        let mut meo = NativeMeo::new(&geom, u, kappa);
+        let mut meo = NativeMeo::with_links(&geom, links, kappa);
         let resid = worst_true_residual(&mut meo, &x, &sources);
         (stats, resid)
     } else {
         // CGNR: per-RHS right-hand side is Mdag b_r
-        let mut op = MultiMdagM::new(&geom, u.clone(), kappa, nrhs);
-        let mut meo = NativeMeo::new(&geom, u, kappa);
+        let mut op = MultiMdagM::with_links(&geom, links.clone(), kappa, nrhs);
+        let mut meo = NativeMeo::with_links(&geom, links.clone(), kappa);
         let rhs: Vec<FermionField<R>> = sources
             .iter()
             .map(|b| {
@@ -384,7 +402,7 @@ fn solve_block<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error
         let mut x = MultiFermionField::<R>::zeros(&geom, nrhs);
         let stats =
             solver::block_cg(&mut op, &mut team, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
-        let mut ndag = NativeMdagM::new(&geom, meo.gauge().clone(), kappa);
+        let mut ndag = NativeMdagM::with_links(&geom, links, kappa);
         let resid = worst_true_residual(&mut ndag, &x, &rhs);
         (stats, resid)
     };
@@ -442,12 +460,18 @@ fn solve_mixed(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
     let b: FermionField<f64> = FermionField::gaussian(&geom, &mut rng);
     let kappa = cfg.solver.kappa;
     let u32 = u.to_precision::<f32>();
+    // both the f64 outer and f32 inner operators honor the compression
+    let links64 = Links::from_gauge(u, cfg.gauge.compression);
+    let links32 = Links::from_gauge(u32, cfg.gauge.compression);
+    if cfg.gauge.compression == Compression::TwoRow {
+        println!("gauge compression: two-row (outer f64 and inner f32 operators)");
+    }
     let mut team = Team::new(threads, BarrierKind::Sleep);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let stats = if cfg.solver.algorithm == "bicgstab" {
-        let mut outer = NativeMeo::new(&geom, u, kappa);
-        let mut inner = NativeMeo::new(&geom, u32, kappa as f32);
+        let mut outer = NativeMeo::with_links(&geom, links64, kappa);
+        let mut inner = NativeMeo::with_links(&geom, links32, kappa as f32);
         let mut x = FermionField::<f64>::zeros(&geom);
         let stats = solver::mixed_refinement_team(
             &mut outer,
@@ -468,8 +492,8 @@ fn solve_mixed(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
         stats
     } else {
         // CGNR at f64: MdagM x = Mdag b, inner CG on the f32 normal operator
-        let mut outer = NativeMdagM::new(&geom, u, kappa);
-        let mut inner = NativeMdagM::new(&geom, u32, kappa as f32);
+        let mut outer = NativeMdagM::with_links(&geom, links64, kappa);
+        let mut inner = NativeMdagM::with_links(&geom, links32, kappa as f32);
         let mut bp = b.clone();
         bp.gamma5();
         let mut mbp = FermionField::zeros(&geom);
@@ -543,6 +567,11 @@ OPTIONS:
   --algorithm cg|bicgstab
   --precision f32|f64|mixed   field/kernel precision (mixed = f64 outer
                        iterative refinement around an f32 inner solve)
+  --gauge-compression none|two-row
+                       gauge-link storage: two-row streams 12 reals per
+                       link (instead of 18) and rebuilds the third SU(3)
+                       row in-register — 1/3 less gauge traffic on the
+                       bandwidth-bound kernel; links must be unitary
   --inner-tol X        mixed: relative tolerance of each inner f32 solve
   --max-outer N        mixed: cap on outer refinement steps
   --pjrt               execute the AOT artifacts on the hot path (f32)

@@ -11,6 +11,17 @@
 //! residual histories are **bitwise identical** to N independent
 //! [`super::fused::cg`] solves at any precision.
 //!
+//! Each batched iteration runs as **one** [`crate::coordinator::Team`]
+//! parallel region (the [`crate::coordinator::operator::MultiFusedView`]
+//! pipeline): the operator's
+//! multi-hopping phases *and* the masked BLAS-1 sweeps are tile-sharded
+//! over the persistent workers, synchronized by the in-region
+//! [`crate::coordinator::TeamBarrier`] — the same structure as
+//! [`super::fused`], rather than one team region per phase. Every
+//! reduction keeps the canonical per-(site tile, RHS) f64 grouping
+//! (partials combined in site-tile order), so the one-region pipeline is
+//! bitwise identical to the per-phase one at any thread count.
+//!
 //! Per-RHS stopping masks: when system r reaches `|r_r| <= tol |b_r|`
 //! it is deactivated — the batched kernel skips its sub-tiles and every
 //! BLAS sweep skips its data — so converged systems stop costing kernel
@@ -21,19 +32,25 @@
 //!
 //! [`block_bicgstab`] is the same construction around the BiCGStab
 //! recurrence (complex per-RHS scalars, per-RHS breakdown handling
-//! mirroring [`super::fused::bicgstab`]'s early exits).
+//! mirroring [`super::fused::bicgstab`]'s early exits). Its per-RHS
+//! stage scalars (alpha, omega, beta, masks) are pure functions of the
+//! shared tile partials, computed redundantly — and identically — by
+//! every thread inside the region and once more by the master for the
+//! bookkeeping.
 //!
 //! Flop accounting scales with the number of *active* RHS at each
 //! sweep; the bytes/site amortization of the shared gauge stream is
 //! modeled and reported by the solver benchmark.
 
 use crate::algebra::{Complex, Real};
-use crate::coordinator::operator::MultiOperator;
+use crate::coordinator::operator::MultiFusedSolvable;
+use crate::coordinator::team::{chunk_range, SendPtr};
 use crate::coordinator::Team;
 use crate::dslash::flops as fl;
-use crate::field::block::{cg_update_masked, MultiFermionField};
+use crate::field::blas;
+use crate::field::block::MultiFermionField;
 
-use super::fused::{BICGSTAB_FUSED_SWEEPS, CG_FUSED_SWEEPS};
+use super::fused::{ro, ro_at, BICGSTAB_FUSED_SWEEPS, CG_FUSED_SWEEPS};
 
 /// Convergence record of one right-hand side of a block solve.
 #[derive(Clone, Debug)]
@@ -80,10 +97,18 @@ impl BlockSolveStats {
     }
 }
 
+/// Sum one component of the per-(site tile, RHS) capture partials for
+/// RHS `i`, in site-tile order — the canonical reduction grouping that
+/// matches the single-RHS fused solver bitwise.
+#[inline]
+fn sum_cap(partials: &[[f64; 3]], ntiles: usize, nrhs: usize, i: usize, c: usize) -> f64 {
+    (0..ntiles).map(|t| partials[t * nrhs + i][c]).sum()
+}
+
 /// Batched CG on a hermitian positive-definite multi-RHS operator
 /// (normal-operator CGNR): solve `A x_r = b_r` for every RHS, with
 /// per-RHS convergence masks. `x` holds the initial guesses on entry.
-pub fn block_cg<R: Real, A: MultiOperator<R>>(
+pub fn block_cg<R: Real, A: MultiFusedSolvable<R>>(
     op: &mut A,
     team: &mut Team,
     x: &mut MultiFermionField<R>,
@@ -96,6 +121,11 @@ pub fn block_cg<R: Real, A: MultiOperator<R>>(
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
     let ntiles = b.site_tiles();
     let nreal = b.rhs_len() as u64;
+    let vpt = b.vals_per_tile();
+    let vlen = b.layout.vlen();
+    let n = team.nthreads();
+    let flops_apply = op.flops_per_apply_rhs();
+    let flops_shared = op.flops_per_apply_shared();
 
     let bnorm2 = b.norm2_per_rhs();
     let mut flops = nrhs as u64 * fl::norm2_flops(nreal);
@@ -123,7 +153,10 @@ pub fn block_cg<R: Real, A: MultiOperator<R>>(
         r.axpy_norm2_masked(&neg, &ap, &active, &mut rr);
         let nact = active.iter().filter(|&&a| a).count() as u64;
         flops += nact
-            * (op.flops_per_apply_rhs() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+            * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+        if nact > 0 {
+            flops += flops_shared;
+        }
     }
     // RHS already at tolerance (warm starts) never enter the loop, like
     // the single solver's `rr > limit` entry condition
@@ -135,47 +168,106 @@ pub fn block_cg<R: Real, A: MultiOperator<R>>(
     }
     let mut p = r.clone();
 
+    let view = op.multi_fused_view();
     let mut dot_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
-    let mut alphas = vec![R::ZERO; nrhs];
-    let mut betas = vec![R::ZERO; nrhs];
-    let mut rr_new = vec![0.0f64; nrhs];
+    let mut rr_partials: Vec<f64> = vec![0.0; ntiles * nrhs];
     let mut iterations = 0;
+
+    let x_ptr = SendPtr(x.data.as_mut_ptr());
+    let r_ptr = SendPtr(r.data.as_mut_ptr());
+    let p_ptr = SendPtr(p.data.as_mut_ptr());
+    let ap_ptr = SendPtr(ap.data.as_mut_ptr());
+    let dot_ptr = SendPtr(dot_partials.as_mut_ptr());
+    let rrp_ptr = SendPtr(rr_partials.as_mut_ptr());
 
     while iterations < maxiter && active.iter().any(|&a| a) {
         let nact = active.iter().filter(|&&a| a).count() as u64;
-        // sweep 1: ap = A p, gauge streamed once for all active RHS,
-        // per-(tile, RHS) p·Ap capture fused into the kernel store
-        op.apply_multi(team, &mut ap, &p, &active, Some((&p, &mut dot_partials)));
-        for i in 0..nrhs {
-            if !active[i] {
-                continue;
+        let rr_iter = rr.clone();
+        let mask = active.clone();
+        // one region: operator phases + both BLAS sweeps, all sharded
+        team.run(|tid, bar| unsafe {
+            // sweep 1: ap = A p, gauge streamed once for all active RHS,
+            // per-(site tile, RHS) p·Ap capture fused into the store
+            view.apply_team(
+                tid,
+                n,
+                bar,
+                ap_ptr,
+                p_ptr.0 as *const R,
+                &mask,
+                Some((p_ptr.0 as *const R, dot_ptr)),
+            );
+            bar.wait();
+            // every thread combines the same partials in site-tile
+            // order, so the per-RHS alphas are identical everywhere
+            // (and to the single-RHS fused solver)
+            let dp = ro::<[f64; 3]>(dot_ptr, ntiles * nrhs);
+            // nrhs-sized per-thread scratch: redundant tiny allocations
+            // (a few words per thread per iteration) are accepted — the
+            // region's work is O(volume) field sweeps, and sharing the
+            // buffers would need per-tid slots or an extra barrier
+            let mut alphas = vec![R::ZERO; nrhs];
+            for i in 0..nrhs {
+                if mask[i] {
+                    let pap = sum_cap(dp, ntiles, nrhs, i, 0);
+                    alphas[i] = R::from_f64(rr_iter[i] / pap);
+                }
             }
-            // combine partials in site-tile order: the same grouping the
-            // single-RHS fused solver uses, hence bit-identical alphas
-            let pap: f64 = (0..ntiles).map(|t| dot_partials[t * nrhs + i][0]).sum();
-            alphas[i] = R::from_f64(rr[i] / pap);
-        }
-        // sweep 2: x += alpha p ; r -= alpha ap ; per-RHS |r|²
-        cg_update_masked(x, &mut r, &p, &ap, &alphas, &active, &mut rr_new);
-        for i in 0..nrhs {
-            if active[i] {
-                betas[i] = R::from_f64(rr_new[i] / rr[i]);
+            let (tb, te) = chunk_range(ntiles, tid, n);
+            // sweep 2: x += alpha p ; r -= alpha ap ; per-sub-tile |r|²
+            for t in tb..te {
+                for i in 0..nrhs {
+                    if !mask[i] {
+                        continue;
+                    }
+                    let off = (t * nrhs + i) * vpt;
+                    blas::axpy_slice(
+                        x_ptr.slice_mut(off, vpt),
+                        alphas[i],
+                        ro_at::<R>(p_ptr, off, vpt),
+                    );
+                    let rt = r_ptr.slice_mut(off, vpt);
+                    blas::axpy_slice(rt, -alphas[i], ro_at::<R>(ap_ptr, off, vpt));
+                    rrp_ptr.slice_mut(t * nrhs + i, 1)[0] = blas::norm2_tile(rt, vlen);
+                }
             }
-        }
-        // sweep 3: p = beta p + r
-        p.xpay_masked(&betas, &r, &active);
-        flops += nact
-            * (op.flops_per_apply_rhs()
-                + fl::dot_re_flops(nreal)
-                + 2 * fl::axpy_flops(nreal)
-                + fl::norm2_flops(nreal)
-                + fl::xpay_flops(nreal));
+            bar.wait();
+            let rrp = ro::<f64>(rrp_ptr, ntiles * nrhs);
+            let mut betas = vec![R::ZERO; nrhs];
+            for i in 0..nrhs {
+                if mask[i] {
+                    let rr_new: f64 = (0..ntiles).map(|t| rrp[t * nrhs + i]).sum();
+                    betas[i] = R::from_f64(rr_new / rr_iter[i]);
+                }
+            }
+            // sweep 3: p = beta p + r
+            for t in tb..te {
+                for i in 0..nrhs {
+                    if !mask[i] {
+                        continue;
+                    }
+                    let off = (t * nrhs + i) * vpt;
+                    blas::xpay_slice(
+                        p_ptr.slice_mut(off, vpt),
+                        betas[i],
+                        ro_at::<R>(r_ptr, off, vpt),
+                    );
+                }
+            }
+        });
+        flops += flops_shared
+            + nact
+                * (flops_apply
+                    + fl::dot_re_flops(nreal)
+                    + 2 * fl::axpy_flops(nreal)
+                    + fl::norm2_flops(nreal)
+                    + fl::xpay_flops(nreal));
         iterations += 1;
         for i in 0..nrhs {
             if !active[i] {
                 continue;
             }
-            rr[i] = rr_new[i];
+            rr[i] = (0..ntiles).map(|t| rr_partials[t * nrhs + i]).sum();
             stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
             stats[i].iterations = iterations;
             if rr[i] <= limit[i] {
@@ -194,11 +286,143 @@ pub fn block_cg<R: Real, A: MultiOperator<R>>(
     BlockSolveStats::finish(nrhs, iterations, stats, flops, CG_FUSED_SWEEPS, team.nthreads())
 }
 
+// ---- BiCGStab stage scalars --------------------------------------------
+//
+// Each stage turns the shared tile partials into per-RHS scalars and the
+// next sweep's mask. They are pure functions: every thread of the region
+// calls them on identical inputs (and the master calls them again after
+// the region for stats/flops bookkeeping), so all parties agree exactly.
+
+/// Stage 1 (after `v = A p` with ⟨rhat, v⟩ capture): per-RHS alpha, and
+/// the `rhat·v ≈ 0` breakdown mask. Returns `(mask_b, alpha)`.
+fn stage_alpha(
+    active: &[bool],
+    rho: &[Complex],
+    vp: &[[f64; 3]],
+    ntiles: usize,
+    nrhs: usize,
+) -> (Vec<bool>, Vec<Complex>) {
+    let mut mask_b = active.to_vec();
+    let mut alpha = vec![Complex::ZERO; nrhs];
+    for i in 0..nrhs {
+        if !active[i] {
+            continue;
+        }
+        let rhat_v = Complex::new(
+            sum_cap(vp, ntiles, nrhs, i, 0),
+            sum_cap(vp, ntiles, nrhs, i, 1),
+        );
+        if rhat_v.abs() < 1e-300 {
+            // breakdown: deactivate unconverged (single solver: break)
+            mask_b[i] = false;
+            continue;
+        }
+        alpha[i] = rho[i] * rhat_v.conj().scale(1.0 / rhat_v.norm2());
+    }
+    (mask_b, alpha)
+}
+
+/// Stage 2 (after `s = r - alpha v` with |s|² capture): which RHS
+/// converged at the half step. Returns `(mask_half, mask_c, snorm)`.
+fn stage_half(
+    mask_b: &[bool],
+    sp: &[[f64; 3]],
+    limit: &[f64],
+    ntiles: usize,
+    nrhs: usize,
+) -> (Vec<bool>, Vec<bool>, Vec<f64>) {
+    let mut mask_half = vec![false; nrhs];
+    let mut mask_c = mask_b.to_vec();
+    let mut snorm = vec![0.0f64; nrhs];
+    for i in 0..nrhs {
+        if !mask_b[i] {
+            continue;
+        }
+        snorm[i] = sum_cap(sp, ntiles, nrhs, i, 2);
+        if snorm[i] <= limit[i] {
+            mask_half[i] = true;
+            mask_c[i] = false;
+        }
+    }
+    (mask_half, mask_c, snorm)
+}
+
+/// Stage 3 (after `t = A s` with ⟨s, t⟩ / |t|² capture): per-RHS omega
+/// and the `|t|² = 0` breakdown mask. Returns `(mask_d, omega)`.
+fn stage_omega(
+    mask_c: &[bool],
+    tp: &[[f64; 3]],
+    ntiles: usize,
+    nrhs: usize,
+) -> (Vec<bool>, Vec<Complex>) {
+    let mut mask_d = mask_c.to_vec();
+    let mut omega = vec![Complex::ZERO; nrhs];
+    for i in 0..nrhs {
+        if !mask_c[i] {
+            continue;
+        }
+        let re = sum_cap(tp, ntiles, nrhs, i, 0);
+        let im = sum_cap(tp, ntiles, nrhs, i, 1);
+        let n2 = sum_cap(tp, ntiles, nrhs, i, 2);
+        // the capture conjugates s; ts = <t, s> flips the imaginary part
+        let ts = Complex::new(re, -im);
+        if n2 == 0.0 {
+            mask_d[i] = false;
+            continue; // breakdown
+        }
+        omega[i] = ts.scale(1.0 / n2);
+    }
+    (mask_d, omega)
+}
+
+/// Stage 4 (after `r = s - omega t` with ⟨rhat, r⟩ / |r|² capture):
+/// post-update breakdowns, convergence, and the next search-direction
+/// beta. Returns `(mask_e, beta, rr_new, rho_new)`.
+#[allow(clippy::too_many_arguments)]
+fn stage_final(
+    mask_d: &[bool],
+    rp: &[[f64; 3]],
+    rho: &[Complex],
+    omega: &[Complex],
+    alpha: &[Complex],
+    limit: &[f64],
+    ntiles: usize,
+    nrhs: usize,
+) -> (Vec<bool>, Vec<Complex>, Vec<f64>, Vec<Complex>) {
+    let mut mask_e = mask_d.to_vec();
+    let mut beta = vec![Complex::ZERO; nrhs];
+    let mut rr_new = vec![0.0f64; nrhs];
+    let mut rho_new = vec![Complex::ZERO; nrhs];
+    for i in 0..nrhs {
+        if !mask_d[i] {
+            continue;
+        }
+        rr_new[i] = sum_cap(rp, ntiles, nrhs, i, 2);
+        rho_new[i] = Complex::new(
+            sum_cap(rp, ntiles, nrhs, i, 0),
+            sum_cap(rp, ntiles, nrhs, i, 1),
+        );
+        if rho[i].abs() < 1e-300 || omega[i].abs() < 1e-300 {
+            // post-update breakdown, like the single solver's exit
+            mask_e[i] = false;
+            continue;
+        }
+        if rr_new[i] <= limit[i] {
+            mask_e[i] = false;
+            continue;
+        }
+        beta[i] = (rho_new[i] * alpha[i])
+            * (rho[i] * omega[i]).conj().scale(1.0 / (rho[i] * omega[i]).norm2());
+    }
+    (mask_e, beta, rr_new, rho_new)
+}
+
 /// Batched BiCGStab on a (non-hermitian) multi-RHS M-hat operator, with
 /// per-RHS complex scalars, per-RHS convergence masks, and per-RHS
 /// breakdown handling mirroring the single-RHS solver's early exits
 /// (a broken-down RHS is deactivated unconverged; the others continue).
-pub fn block_bicgstab<R: Real, A: MultiOperator<R>>(
+/// Each batched iteration is ONE team region of up to 6 fused sweeps.
+pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
     op: &mut A,
     team: &mut Team,
     x: &mut MultiFermionField<R>,
@@ -211,6 +435,11 @@ pub fn block_bicgstab<R: Real, A: MultiOperator<R>>(
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
     let ntiles = b.site_tiles();
     let nreal = b.rhs_len() as u64;
+    let vpt = b.vals_per_tile();
+    let vlen = b.layout.vlen();
+    let n = team.nthreads();
+    let flops_apply = op.flops_per_apply_rhs();
+    let flops_shared = op.flops_per_apply_shared();
     let count = |m: &[bool]| m.iter().filter(|&&a| a).count() as u64;
 
     let bnorm2 = b.norm2_per_rhs();
@@ -236,7 +465,10 @@ pub fn block_bicgstab<R: Real, A: MultiOperator<R>>(
         let neg = vec![-R::ONE; nrhs];
         r.axpy_norm2_masked(&neg, &t, &active, &mut rr);
         flops += count(&active)
-            * (op.flops_per_apply_rhs() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+            * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+        if active.iter().any(|&a| a) {
+            flops += flops_shared;
+        }
     }
     // RHS already at tolerance (warm starts) never enter the loop, like
     // the single solver's `rr > limit` entry condition
@@ -252,60 +484,194 @@ pub fn block_bicgstab<R: Real, A: MultiOperator<R>>(
     let mut rho = rhat.dot_per_rhs(&r);
     flops += count(&active) * fl::cdot_flops(nreal);
 
+    let view = op.multi_fused_view();
     let mut v_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
+    let mut s_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
     let mut t_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
-    let mut s_caps = vec![[0.0f64; 3]; nrhs];
-    let mut r_caps = vec![[0.0f64; 3]; nrhs];
-    let mut alpha = vec![Complex::ZERO; nrhs];
-    let mut omega = vec![Complex::ZERO; nrhs];
-    let mut beta = vec![Complex::ZERO; nrhs];
-    let mut neg = vec![Complex::ZERO; nrhs];
+    let mut r_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
     let mut iterations = 0;
 
+    let x_ptr = SendPtr(x.data.as_mut_ptr());
+    let r_ptr = SendPtr(r.data.as_mut_ptr());
+    let p_ptr = SendPtr(p.data.as_mut_ptr());
+    let v_ptr = SendPtr(v.data.as_mut_ptr());
+    let t_ptr = SendPtr(t.data.as_mut_ptr());
+    let rhat_raw = SendPtr(rhat.data.as_ptr() as *mut R);
+    let vp_ptr = SendPtr(v_partials.as_mut_ptr());
+    let sp_ptr = SendPtr(s_partials.as_mut_ptr());
+    let tp_ptr = SendPtr(t_partials.as_mut_ptr());
+    let rp_ptr = SendPtr(r_partials.as_mut_ptr());
+
     while iterations < maxiter && active.iter().any(|&a| a) {
-        // sweep 1: v = A p with fused per-RHS <rhat, v> capture
-        op.apply_multi(team, &mut v, &p, &active, Some((&rhat, &mut v_partials)));
-        flops += count(&active) * (op.flops_per_apply_rhs() + fl::cdot_flops(nreal));
-        let mut mask_b = active.clone();
+        let rho_iter = rho.clone();
+        let mask = active.clone();
+        team.run(|tid, bar| unsafe {
+            let (tb, te) = chunk_range(ntiles, tid, n);
+            // sweep 1: v = A p with fused per-RHS <rhat, v> capture
+            view.apply_team(
+                tid,
+                n,
+                bar,
+                v_ptr,
+                p_ptr.0 as *const R,
+                &mask,
+                Some((rhat_raw.0 as *const R, vp_ptr)),
+            );
+            bar.wait();
+            let vp = ro::<[f64; 3]>(vp_ptr, ntiles * nrhs);
+            // the stage helpers allocate nrhs-sized vectors per thread
+            // per iteration — accepted, as above: O(nrhs) words against
+            // O(volume) sweep work, redundant by design so every thread
+            // (and the master replay) agrees without communication
+            let (mask_b, alpha) = stage_alpha(&mask, &rho_iter, vp, ntiles, nrhs);
+            if !mask_b.iter().any(|&a| a) {
+                return; // every live RHS broke down (uniform decision)
+            }
+            // sweep 2: s = r - alpha v (in place in r) with per-sub-tile
+            // |s|² capture
+            for tl in tb..te {
+                for i in 0..nrhs {
+                    if !mask_b[i] {
+                        continue;
+                    }
+                    let off = (tl * nrhs + i) * vpt;
+                    let ma = -alpha[i];
+                    let rt = r_ptr.slice_mut(off, vpt);
+                    blas::caxpy_slice(
+                        rt,
+                        R::from_f64(ma.re),
+                        R::from_f64(ma.im),
+                        ro_at::<R>(v_ptr, off, vpt),
+                        vlen,
+                    );
+                    sp_ptr.slice_mut(tl * nrhs + i, 1)[0] =
+                        [0.0, 0.0, blas::norm2_tile(rt, vlen)];
+                }
+            }
+            bar.wait();
+            let sp = ro::<[f64; 3]>(sp_ptr, ntiles * nrhs);
+            let (mask_half, mask_c, _snorm) = stage_half(&mask_b, sp, &limit, ntiles, nrhs);
+            if mask_half.iter().any(|&h| h) {
+                // converged at the half step: x += alpha p (own shard)
+                for tl in tb..te {
+                    for i in 0..nrhs {
+                        if !mask_half[i] {
+                            continue;
+                        }
+                        let off = (tl * nrhs + i) * vpt;
+                        blas::caxpy_slice(
+                            x_ptr.slice_mut(off, vpt),
+                            R::from_f64(alpha[i].re),
+                            R::from_f64(alpha[i].im),
+                            ro_at::<R>(p_ptr, off, vpt),
+                            vlen,
+                        );
+                    }
+                }
+            }
+            if !mask_c.iter().any(|&a| a) {
+                return; // all live RHS done at the half step
+            }
+            // sweep 3: t = A s with fused per-RHS <s, t>, |t|² capture
+            view.apply_team(
+                tid,
+                n,
+                bar,
+                t_ptr,
+                r_ptr.0 as *const R,
+                &mask_c,
+                Some((r_ptr.0 as *const R, tp_ptr)),
+            );
+            bar.wait();
+            let tp = ro::<[f64; 3]>(tp_ptr, ntiles * nrhs);
+            let (mask_d, omega) = stage_omega(&mask_c, tp, ntiles, nrhs);
+            if !mask_d.iter().any(|&a| a) {
+                return; // breakdown (|t|² = 0) on every remaining RHS
+            }
+            // sweep 4: x += alpha p + omega s (s lives in r), and
+            // sweep 5: r = s - omega t with <rhat, r> / |r|² capture
+            for tl in tb..te {
+                for i in 0..nrhs {
+                    if !mask_d[i] {
+                        continue;
+                    }
+                    let off = (tl * nrhs + i) * vpt;
+                    blas::caxpy2_slice(
+                        x_ptr.slice_mut(off, vpt),
+                        R::from_f64(alpha[i].re),
+                        R::from_f64(alpha[i].im),
+                        ro_at::<R>(p_ptr, off, vpt),
+                        R::from_f64(omega[i].re),
+                        R::from_f64(omega[i].im),
+                        ro_at::<R>(r_ptr, off, vpt),
+                        vlen,
+                    );
+                    let mo = -omega[i];
+                    let rt = r_ptr.slice_mut(off, vpt);
+                    blas::caxpy_slice(
+                        rt,
+                        R::from_f64(mo.re),
+                        R::from_f64(mo.im),
+                        ro_at::<R>(t_ptr, off, vpt),
+                        vlen,
+                    );
+                    rp_ptr.slice_mut(tl * nrhs + i, 1)[0] = blas::cdot_norm2_tile(
+                        ro_at::<R>(rhat_raw, off, vpt),
+                        rt,
+                        vlen,
+                    );
+                }
+            }
+            bar.wait();
+            let rp = ro::<[f64; 3]>(rp_ptr, ntiles * nrhs);
+            let (mask_e, beta, _rr_new, _rho_new) =
+                stage_final(&mask_d, rp, &rho_iter, &omega, &alpha, &limit, ntiles, nrhs);
+            if !mask_e.iter().any(|&a| a) {
+                return;
+            }
+            // sweep 6: p = beta (p - omega v) + r
+            for tl in tb..te {
+                for i in 0..nrhs {
+                    if !mask_e[i] {
+                        continue;
+                    }
+                    let off = (tl * nrhs + i) * vpt;
+                    let mo = -omega[i];
+                    blas::p_update_slice(
+                        p_ptr.slice_mut(off, vpt),
+                        R::from_f64(mo.re),
+                        R::from_f64(mo.im),
+                        ro_at::<R>(v_ptr, off, vpt),
+                        R::from_f64(beta[i].re),
+                        R::from_f64(beta[i].im),
+                        ro_at::<R>(r_ptr, off, vpt),
+                        vlen,
+                    );
+                }
+            }
+        });
+
+        // master bookkeeping: replay the stage cascade on the (final)
+        // shared partials — the same pure functions the threads ran, so
+        // masks and scalars agree exactly
+        let (mask_b, alpha) = stage_alpha(&mask, &rho_iter, &v_partials, ntiles, nrhs);
+        flops += count(&mask) * (flops_apply + fl::cdot_flops(nreal)) + flops_shared;
         for i in 0..nrhs {
-            if !active[i] {
-                continue;
+            if mask[i] && !mask_b[i] {
+                active[i] = false; // rhat·v breakdown
             }
-            let (re, im) = (0..ntiles).fold((0.0, 0.0), |(re, im), tl| {
-                let p = v_partials[tl * nrhs + i];
-                (re + p[0], im + p[1])
-            });
-            let rhat_v = Complex::new(re, im);
-            if rhat_v.abs() < 1e-300 {
-                // breakdown: deactivate unconverged (single solver: break)
-                active[i] = false;
-                mask_b[i] = false;
-                continue;
-            }
-            alpha[i] = rho[i] * rhat_v.conj().scale(1.0 / rhat_v.norm2());
-            neg[i] = -alpha[i];
         }
-        // sweep 2: s = r - alpha v (in place in r) with |s|² capture
-        r.caxpy_capture_masked(&neg, &v, None, &mask_b, &mut s_caps);
+        if !mask_b.iter().any(|&a| a) {
+            iterations += 1;
+            continue;
+        }
+        let (mask_half, mask_c, snorm) = stage_half(&mask_b, &s_partials, &limit, ntiles, nrhs);
         flops += count(&mask_b) * (fl::caxpy_flops(nreal) + fl::norm2_flops(nreal));
-        let mut mask_c = mask_b.clone();
-        let mut mask_half = vec![false; nrhs];
-        for i in 0..nrhs {
-            if !mask_b[i] {
-                continue;
-            }
-            if s_caps[i][2] <= limit[i] {
-                // converged at the half step: x += alpha p, then stop
-                mask_half[i] = true;
-                mask_c[i] = false;
-            }
-        }
         if mask_half.iter().any(|&h| h) {
-            x.caxpy_masked(&alpha, &p, &mask_half);
             flops += count(&mask_half) * fl::caxpy_flops(nreal);
             for i in 0..nrhs {
                 if mask_half[i] {
-                    rr[i] = s_caps[i][2];
+                    rr[i] = snorm[i];
                     stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
                     stats[i].iterations = iterations + 1;
                     stats[i].converged = true;
@@ -313,72 +679,47 @@ pub fn block_bicgstab<R: Real, A: MultiOperator<R>>(
                 }
             }
         }
-        // sweep 3: t = A s with fused per-RHS <s, t>, |t|² capture
-        if mask_c.iter().any(|&a| a) {
-            op.apply_multi(team, &mut t, &r, &mask_c, Some((&r, &mut t_partials)));
-            flops += count(&mask_c)
-                * (op.flops_per_apply_rhs() + fl::cdot_flops(nreal) + fl::norm2_flops(nreal));
+        if !mask_c.iter().any(|&a| a) {
+            iterations += 1;
+            continue;
         }
-        let mut mask_d = mask_c.clone();
+        let (mask_d, omega) = stage_omega(&mask_c, &t_partials, ntiles, nrhs);
+        flops += count(&mask_c)
+            * (flops_apply + fl::cdot_flops(nreal) + fl::norm2_flops(nreal))
+            + flops_shared;
         for i in 0..nrhs {
-            if !mask_c[i] {
-                continue;
+            if mask_c[i] && !mask_d[i] {
+                active[i] = false; // |t|² = 0 breakdown
             }
-            let (re, im, n2) = (0..ntiles).fold((0.0, 0.0, 0.0), |(re, im, n2), tl| {
-                let p = t_partials[tl * nrhs + i];
-                (re + p[0], im + p[1], n2 + p[2])
-            });
-            // the capture conjugates s; ts = <t, s> flips the imaginary part
-            let ts = Complex::new(re, -im);
-            if n2 == 0.0 {
-                active[i] = false;
-                mask_d[i] = false;
-                continue; // breakdown
-            }
-            omega[i] = ts.scale(1.0 / n2);
-            neg[i] = -omega[i];
         }
         if mask_d.iter().any(|&a| a) {
-            // sweep 4: x += alpha p + omega s (s lives in r)
-            x.caxpy2_masked(&alpha, &p, &omega, &r, &mask_d);
-            // sweep 5: r = s - omega t with <rhat, r> and |r|² capture
-            r.caxpy_capture_masked(&neg, &t, Some(&rhat), &mask_d, &mut r_caps);
+            let (mask_e, _beta, rr_new, rho_new) = stage_final(
+                &mask_d, &r_partials, &rho_iter, &omega, &alpha, &limit, ntiles, nrhs,
+            );
             flops += count(&mask_d)
                 * (3 * fl::caxpy_flops(nreal) + fl::cdot_flops(nreal) + fl::norm2_flops(nreal));
-        }
-        let mut mask_e = mask_d.clone();
-        for i in 0..nrhs {
-            if !mask_d[i] {
-                continue;
+            for i in 0..nrhs {
+                if !mask_d[i] {
+                    continue;
+                }
+                rr[i] = rr_new[i];
+                stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
+                stats[i].iterations = iterations + 1;
+                if rho_iter[i].abs() < 1e-300 || omega[i].abs() < 1e-300 {
+                    // post-update breakdown, like the single solver
+                    stats[i].converged = rr[i] <= limit[i];
+                    active[i] = false;
+                } else if rr[i] <= limit[i] {
+                    stats[i].converged = true;
+                    active[i] = false;
+                } else {
+                    rho[i] = rho_new[i];
+                }
             }
-            let rr_new = r_caps[i][2];
-            let rho_new = Complex::new(r_caps[i][0], r_caps[i][1]);
-            rr[i] = rr_new;
-            stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
-            stats[i].iterations = iterations + 1;
-            if rho[i].abs() < 1e-300 || omega[i].abs() < 1e-300 {
-                // post-update breakdown, like the single solver's exit
-                stats[i].converged = rr[i] <= limit[i];
-                active[i] = false;
-                mask_e[i] = false;
-                continue;
+            if mask_e.iter().any(|&a| a) {
+                flops += count(&mask_e)
+                    * (fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal));
             }
-            if rr[i] <= limit[i] {
-                stats[i].converged = true;
-                active[i] = false;
-                mask_e[i] = false;
-                continue;
-            }
-            beta[i] = (rho_new * alpha[i])
-                * (rho[i] * omega[i]).conj().scale(1.0 / (rho[i] * omega[i]).norm2());
-            rho[i] = rho_new;
-            neg[i] = -omega[i];
-        }
-        if mask_e.iter().any(|&a| a) {
-            // sweep 6: p = beta (p - omega v) + r
-            p.p_update_masked(&neg, &v, &beta, &r, &mask_e);
-            flops += count(&mask_e)
-                * (fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal));
         }
         iterations += 1;
     }

@@ -44,10 +44,11 @@ pub const BICGSTAB_FUSED_SWEEPS: f64 = 6.0;
 pub const BICGSTAB_UNFUSED_SWEEPS: f64 = 15.0;
 
 /// Shared read-only view of a whole field behind a [`SendPtr`].
+/// (`pub(crate)`: the block solver's team regions use the same views.)
 ///
 /// # Safety
 /// No thread may hold a `&mut` into the same range concurrently.
-unsafe fn ro<'a, T>(p: SendPtr<T>, len: usize) -> &'a [T] {
+pub(crate) unsafe fn ro<'a, T>(p: SendPtr<T>, len: usize) -> &'a [T] {
     std::slice::from_raw_parts(p.0 as *const T, len)
 }
 
@@ -57,7 +58,7 @@ unsafe fn ro<'a, T>(p: SendPtr<T>, len: usize) -> &'a [T] {
 ///
 /// # Safety
 /// No thread may hold a `&mut` into this range concurrently.
-unsafe fn ro_at<'a, T>(p: SendPtr<T>, offset: usize, len: usize) -> &'a [T] {
+pub(crate) unsafe fn ro_at<'a, T>(p: SendPtr<T>, offset: usize, len: usize) -> &'a [T] {
     std::slice::from_raw_parts(p.0.add(offset) as *const T, len)
 }
 

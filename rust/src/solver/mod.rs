@@ -12,7 +12,10 @@
 //! * [`block`] — multi-RHS batched solvers on the block field: one gauge
 //!   stream feeds N right-hand sides per sweep, per-RHS scalars keep
 //!   every system on its independent trajectory, and per-RHS stopping
-//!   masks let converged systems drop out of the kernel work.
+//!   masks let converged systems drop out of the kernel work. Like the
+//!   single-RHS fused pipeline, every batched iteration is ONE team
+//!   region (operator phases + masked BLAS sweeps on the in-region
+//!   barrier).
 //!
 //! The generic solvers are generic over
 //! [`crate::coordinator::operator::LinearOperator`] and the
@@ -21,7 +24,8 @@
 //! distributed (allreduce), native and PJRT-backed, at either precision.
 //! The fused solvers additionally require
 //! [`crate::coordinator::operator::FusedSolvable`] (native single-rank
-//! operators) for tile-phased applies.
+//! operators) for tile-phased applies; the block solvers require its
+//! multi-RHS analog [`crate::coordinator::operator::MultiFusedSolvable`].
 
 mod bicgstab;
 pub mod block;

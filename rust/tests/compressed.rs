@@ -1,0 +1,363 @@
+//! Two-row compressed gauge links: correctness across every hot path.
+//!
+//! The contract under test (see `field::compressed`):
+//!
+//! * compression round-trips exactly (stored rows are copies) and the
+//!   rebuilt third row is within ~1e-13 of the stored one at f64 for
+//!   exact SU(3) input;
+//! * the compressed kernel is **bitwise identical** (f32 and f64) to
+//!   the uncompressed kernel on the *projected* field
+//!   `compress(u).reconstruct()`, because every reconstruction path
+//!   shares one canonical elementwise expression — single-RHS,
+//!   multi-RHS, and the distributed EO1/bulk/EO2 pipeline alike;
+//! * against the *original* field the difference is bounded by the
+//!   cross-product rounding (tiny at f64, a few ulp at f32);
+//! * solver trajectories through two-row operators match the full-link
+//!   trajectories on the projected field bitwise, so `--gauge-compression
+//!   two-row` changes memory traffic, never convergence behavior.
+
+use lqcd::comm::decompose::{extract_fermion, extract_gauge};
+use lqcd::comm::run_world;
+use lqcd::coordinator::operator::{
+    DistMeo, LinearOperator, MultiMdagM, NativeMdagM, NativeMeo,
+};
+use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use lqcd::dslash::{Compression, HoppingEo, Links};
+use lqcd::field::{CompressedGaugeField, FermionField, GaugeField, MultiFermionField};
+use lqcd::lattice::{Geometry, LatticeDims, Parity, ProcGrid, Tiling};
+use lqcd::solver;
+use lqcd::util::rng::Rng;
+
+fn geom() -> Geometry {
+    Geometry::single_rank(
+        LatticeDims::new(4, 4, 4, 4).unwrap(),
+        Tiling::new(2, 2).unwrap(),
+    )
+    .unwrap()
+}
+
+fn max_abs_diff<R: lqcd::algebra::Real>(a: &[R], b: &[R]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x.to_f64() - y.to_f64()).abs())
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn round_trip_exact_and_third_row_tight_f64() {
+    for (dims, tiling) in [
+        (LatticeDims::new(4, 4, 4, 4).unwrap(), Tiling::new(2, 2).unwrap()),
+        (LatticeDims::new(8, 4, 2, 2).unwrap(), Tiling::new(4, 2).unwrap()),
+    ] {
+        let g = Geometry::single_rank(dims, tiling).unwrap();
+        let mut rng = Rng::seeded(201);
+        let u = GaugeField::<f64>::random(&g, &mut rng);
+        let c = CompressedGaugeField::compress(&u);
+        let back = c.reconstruct();
+        // stored rows: exact round trip
+        let c2 = CompressedGaugeField::compress(&back);
+        for d in 0..4 {
+            for p in 0..2 {
+                assert_eq!(c.data[d][p], c2.data[d][p], "rows must round-trip bitwise");
+            }
+        }
+        // third row: rebuilt to ~machine precision of the stored row
+        let mut worst = 0.0f64;
+        for d in 0..4 {
+            for p in 0..2 {
+                worst = worst.max(max_abs_diff(&u.data[d][p], &back.data[d][p]));
+            }
+        }
+        assert!(worst < 1e-13, "third-row rebuild off by {worst} ({dims})");
+    }
+}
+
+/// The compressed kernel vs the uncompressed kernel, both hopping
+/// parities, on the projected field (bitwise) and the original (close).
+fn check_kernel<R: lqcd::algebra::Real>(seed: u64, tol_orig: f64) {
+    let g = geom();
+    let mut rng = Rng::seeded(seed);
+    let u = GaugeField::<R>::random(&g, &mut rng);
+    let c = CompressedGaugeField::compress(&u);
+    let proj = c.reconstruct();
+    let links = Links::TwoRow(c);
+    let psi: FermionField<R> = FermionField::gaussian(&g, &mut rng);
+    let hop = HoppingEo::new(&g);
+    for p_out in Parity::BOTH {
+        let mut want_proj = FermionField::<R>::zeros(&g);
+        hop.apply(&mut want_proj, &proj, &psi, p_out);
+        let mut got = FermionField::<R>::zeros(&g);
+        hop.apply(&mut got, &links, &psi, p_out);
+        assert_eq!(
+            got.data, want_proj.data,
+            "two-row kernel must bit-match full links on the projected field ({p_out:?})"
+        );
+        let mut want_orig = FermionField::<R>::zeros(&g);
+        hop.apply(&mut want_orig, &u, &psi, p_out);
+        let d = max_abs_diff(&got.data, &want_orig.data);
+        assert!(
+            d <= tol_orig,
+            "two-row kernel vs original field off by {d} ({p_out:?})"
+        );
+    }
+}
+
+#[test]
+fn kernel_two_row_bit_matches_projected_f64() {
+    // f64: bitwise on the projected field, ~1e-13 on the original
+    check_kernel::<f64>(202, 1e-12);
+}
+
+#[test]
+fn kernel_two_row_bit_matches_projected_f32() {
+    // f32: still bitwise on the projected field (same arithmetic in R);
+    // a few ulp against the original
+    check_kernel::<f32>(203, 1e-4);
+}
+
+#[test]
+fn single_rhs_solve_history_identical_to_projected_full_links() {
+    for threads in [1usize, 2] {
+        let g = geom();
+        let mut rng = Rng::seeded(204);
+        let u = GaugeField::<f64>::random(&g, &mut rng);
+        let proj = CompressedGaugeField::compress(&u).reconstruct();
+        let b: FermionField<f64> = FermionField::gaussian(&g, &mut rng);
+        let kappa = 0.13f64;
+        let (tol, maxiter) = (1e-10, 300);
+
+        let mut team = Team::new(threads, BarrierKind::Sleep);
+        let full_hist = {
+            let mut op = NativeMeo::new(&g, proj.clone(), kappa);
+            let mut x = FermionField::<f64>::zeros(&g);
+            let s = solver::fused::bicgstab(&mut op, &mut team, &mut x, &b, tol, maxiter);
+            assert!(s.converged);
+            s.history
+        };
+        let two_hist = {
+            let links = Links::from_gauge(u.clone(), Compression::TwoRow);
+            let mut op = NativeMeo::with_links(&g, links, kappa);
+            let mut x = FermionField::<f64>::zeros(&g);
+            let s = solver::fused::bicgstab(&mut op, &mut team, &mut x, &b, tol, maxiter);
+            assert!(s.converged);
+            s.history
+        };
+        assert_eq!(
+            full_hist, two_hist,
+            "two-row solve history must bit-match full links on the projected field ({threads} threads)"
+        );
+    }
+}
+
+#[test]
+fn two_row_operator_charges_reconstruction_flops() {
+    let g = geom();
+    let mut rng = Rng::seeded(205);
+    let u = GaugeField::<f32>::random(&g, &mut rng);
+    let full = NativeMeo::new(&g, u.clone(), 0.13f32);
+    let two = NativeMeo::with_links(&g, Links::from_gauge(u, Compression::TwoRow), 0.13f32);
+    assert!(
+        two.flops_per_apply() > full.flops_per_apply(),
+        "in-kernel reconstruction must be charged"
+    );
+    let extra = two.flops_per_apply() - full.flops_per_apply();
+    // 2 hopping blocks x 8 links/site x 45 flop over the half lattice
+    assert_eq!(extra, 2 * 8 * 45 * g.local.half_volume() as u64);
+
+    // multi-RHS: the rebuild is shared across RHS (once per site tile),
+    // so it must be charged per APPLY, never per RHS
+    use lqcd::coordinator::operator::{MultiNativeMeo, MultiOperator};
+    let u2 = two.links().clone();
+    let mfull = MultiNativeMeo::new(&g, full.links().to_gauge(), 0.13f32, 4);
+    let mtwo = MultiNativeMeo::with_links(&g, u2, 0.13f32, 4);
+    assert_eq!(
+        mtwo.flops_per_apply_rhs(),
+        mfull.flops_per_apply_rhs(),
+        "per-RHS arithmetic is independent of link storage"
+    );
+    assert_eq!(mfull.flops_per_apply_shared(), 0);
+    assert_eq!(mtwo.flops_per_apply_shared(), extra);
+}
+
+#[test]
+fn multi_rhs_two_row_bit_matches_single_and_projected_f64() {
+    let g = geom();
+    let mut rng = Rng::seeded(206);
+    let u = GaugeField::<f64>::random(&g, &mut rng);
+    let kappa = 0.137f64;
+    let nrhs = 3;
+    let srcs: Vec<FermionField<f64>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+    let psi = MultiFermionField::from_rhs(&srcs);
+    let active = vec![true; nrhs];
+    let proj = CompressedGaugeField::compress(&u).reconstruct();
+
+    for threads in [1usize, 3] {
+        let mut team = Team::new(threads, BarrierKind::Sleep);
+        use lqcd::coordinator::operator::{MultiNativeMeo, MultiOperator};
+        // batched two-row apply
+        let links = Links::from_gauge(u.clone(), Compression::TwoRow);
+        let mut mop = MultiNativeMeo::with_links(&g, links.clone(), kappa, nrhs);
+        let mut out = psi.zeros_like();
+        mop.apply_multi(&mut team, &mut out, &psi, &active, None);
+        // must bit-match the single-RHS two-row operator per RHS...
+        let mut sop = NativeMeo::with_links(&g, links, kappa);
+        // ...and the full-link batched operator on the projected field
+        let mut pop = MultiNativeMeo::new(&g, proj.clone(), kappa, nrhs);
+        let mut pout = psi.zeros_like();
+        pop.apply_multi(&mut team, &mut pout, &psi, &active, None);
+        for (r, s) in srcs.iter().enumerate() {
+            let mut want = FermionField::zeros(&g);
+            sop.apply(&mut want, s);
+            assert_eq!(
+                out.extract_rhs(r).data,
+                want.data,
+                "multi two-row rhs {r} must bit-match single two-row ({threads} threads)"
+            );
+            assert_eq!(
+                out.extract_rhs(r).data,
+                pout.extract_rhs(r).data,
+                "multi two-row rhs {r} must bit-match projected full links"
+            );
+        }
+    }
+}
+
+#[test]
+fn block_solve_two_row_histories_identical_to_projected() {
+    let g = geom();
+    let mut rng = Rng::seeded(207);
+    let u = GaugeField::<f32>::random(&g, &mut rng);
+    let proj = CompressedGaugeField::compress(&u).reconstruct();
+    let kappa = 0.12f32;
+    let nrhs = 2;
+    let (tol, maxiter) = (1e-5, 400);
+    // CGNR right-hand sides Mdag b through the projected operator (the
+    // arithmetic both solves below share)
+    let rhs: Vec<FermionField<f32>> = (0..nrhs)
+        .map(|_| {
+            let b: FermionField<f32> = FermionField::gaussian(&g, &mut rng);
+            let mut bp = b.clone();
+            bp.gamma5();
+            let mut meo = NativeMeo::new(&g, proj.clone(), kappa);
+            let mut mbp = FermionField::zeros(&g);
+            meo.apply(&mut mbp, &bp);
+            mbp.gamma5();
+            mbp
+        })
+        .collect();
+    let b_block = MultiFermionField::from_rhs(&rhs);
+    let mut team = Team::new(2, BarrierKind::Sleep);
+
+    let full_stats = {
+        let mut op = MultiMdagM::new(&g, proj.clone(), kappa, nrhs);
+        let mut x = MultiFermionField::<f32>::zeros(&g, nrhs);
+        solver::block_cg(&mut op, &mut team, &mut x, &b_block, tol, maxiter)
+    };
+    assert!(full_stats.converged);
+    let two_stats = {
+        let links = Links::from_gauge(u, Compression::TwoRow);
+        let mut op = MultiMdagM::with_links(&g, links, kappa, nrhs);
+        let mut x = MultiFermionField::<f32>::zeros(&g, nrhs);
+        solver::block_cg(&mut op, &mut team, &mut x, &b_block, tol, maxiter)
+    };
+    assert!(two_stats.converged);
+    for r in 0..nrhs {
+        assert_eq!(
+            full_stats.per_rhs[r].history, two_stats.per_rhs[r].history,
+            "rhs {r}: block two-row history must bit-match projected full links"
+        );
+    }
+}
+
+/// Distributed hopping (EO1 pack / bulk ∥ comm / EO2 merge) with
+/// two-row links must bit-match full links on the projected field, for
+/// a real decomposition and for forced self-communication.
+#[test]
+fn distributed_hopping_two_row_bit_matches_projected() {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let cases = [
+        (ProcGrid([1, 1, 1, 1]), true), // forced self-comm: EO1/EO2 live
+        (ProcGrid([1, 1, 2, 2]), true),
+        (ProcGrid([2, 1, 1, 1]), false), // x split: irregular faces
+    ];
+    for (grid, force_comm) in cases {
+        let ggeom = Geometry::single_rank(global, tiling).unwrap();
+        let mut rng = Rng::seeded(208);
+        let u_raw: GaugeField<f32> = GaugeField::random(&ggeom, &mut rng);
+        let proj_global = CompressedGaugeField::compress(&u_raw).reconstruct();
+        let psi_global: FermionField<f32> = FermionField::gaussian(&ggeom, &mut rng);
+        for p_out in Parity::BOTH {
+            run_world(grid.size(), |rank, comm| {
+                let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+                let proj = extract_gauge(&proj_global, &lgeom);
+                let compressed = CompressedGaugeField::compress(&proj);
+                let psi = extract_fermion(&psi_global, &ggeom, &lgeom);
+                let dist = DistHopping::new(&lgeom, force_comm, 2, Eo2Schedule::Uniform);
+                let mut team = Team::new(2, BarrierKind::Sleep);
+                let prof = Profiler::new(2);
+
+                let mut want = FermionField::zeros(&lgeom);
+                dist.hopping(&mut want, &proj, &psi, p_out, comm, &mut team, &prof);
+                let mut got = FermionField::zeros(&lgeom);
+                dist.hopping(&mut got, &compressed, &psi, p_out, comm, &mut team, &prof);
+                assert_eq!(
+                    got.data, want.data,
+                    "distributed two-row must bit-match (grid {grid:?}, force={force_comm}, \
+                     rank {rank}, {p_out:?})"
+                );
+            });
+        }
+    }
+}
+
+/// A distributed CGNR solve through a two-row DistMeo must produce the
+/// same residual history as the full-link operator on the projected
+/// field — compression composes with the fused distributed pipeline.
+#[test]
+fn distributed_solve_two_row_history_identical() {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(209);
+    let u_raw: GaugeField<f32> = GaugeField::random(&ggeom, &mut rng);
+    let proj_global = CompressedGaugeField::compress(&u_raw).reconstruct();
+    let b_global: FermionField<f32> = FermionField::gaussian(&ggeom, &mut rng);
+    let kappa = 0.12f32;
+    let (tol, maxiter) = (1e-5, 40);
+
+    let histories = run_world(grid.size(), |rank, comm| {
+        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+        let proj = extract_gauge(&proj_global, &lgeom);
+        let compressed = CompressedGaugeField::compress(&proj);
+        let b = extract_fermion(&b_global, &ggeom, &lgeom);
+        let dist = DistHopping::new(&lgeom, true, 2, Eo2Schedule::Uniform);
+        let prof = Profiler::new(2);
+
+        let full_hist = {
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let inner = DistMeo::new(&lgeom, &dist, &proj, kappa, comm, &mut team, &prof);
+            let mut op = lqcd::coordinator::operator::NormalOp::new(inner, &lgeom);
+            let mut x = FermionField::<f32>::zeros(&lgeom);
+            solver::cg(&mut op, &mut x, &b, tol, maxiter).history
+        };
+        let two_hist = {
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let inner =
+                DistMeo::new(&lgeom, &dist, &compressed, kappa, comm, &mut team, &prof);
+            let mut op = lqcd::coordinator::operator::NormalOp::new(inner, &lgeom);
+            let mut x = FermionField::<f32>::zeros(&lgeom);
+            solver::cg(&mut op, &mut x, &b, tol, maxiter).history
+        };
+        (full_hist, two_hist)
+    });
+    for (rank, (full_hist, two_hist)) in histories.iter().enumerate() {
+        assert!(!full_hist.is_empty(), "reference solve ran no iterations");
+        assert_eq!(
+            full_hist, two_hist,
+            "rank {rank}: distributed two-row history diverged from projected full links"
+        );
+    }
+}

@@ -19,6 +19,7 @@ fn example_config_is_paper_setup() {
     assert_eq!(cfg.parallel.threads_per_rank, 12);
     assert!(cfg.parallel.force_comm);
     assert_eq!(cfg.solver.algorithm, "bicgstab");
+    assert_eq!(cfg.gauge.compression, lqcd::dslash::Compression::None);
     // local volume per rank = 16x16x8x8, the paper's Table 1 first row
     let geom = lqcd::lattice::Geometry::for_rank(
         cfg.lattice.global,
