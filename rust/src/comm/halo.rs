@@ -210,6 +210,15 @@ impl HaloPlans {
     pub fn buffer_len(&self, dir: usize) -> usize {
         self.face_count[dir] * HALF_SPINOR_F32
     }
+
+    /// Real length of one *batched* face buffer in direction `dir`
+    /// carrying `nact` active right-hand sides: the same face sites, with
+    /// the RHS axis innermost on the wire (`[site][rhs][12]`), so one
+    /// message per direction serves the whole batch and masked RHS cost
+    /// zero bytes.
+    pub fn buffer_len_multi(&self, dir: usize, nact: usize) -> usize {
+        self.face_count[dir] * nact * HALF_SPINOR_F32
+    }
 }
 
 #[cfg(test)]

@@ -12,4 +12,7 @@ pub mod world;
 
 pub use halo::HaloPlans;
 pub use unpack::RecvBuffers;
-pub use world::{run_world, Comm, CommScalar, Payload};
+pub use world::{
+    decode_wire_sig, run_world, validate_wire_format, wire_sig, Comm, CommError,
+    CommScalar, Payload, MAX_WIRE_RHS,
+};

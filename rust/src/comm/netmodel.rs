@@ -47,6 +47,53 @@ impl NetModel {
     }
 }
 
+/// Halo traffic of one (batched) distributed hopping application:
+/// message count and wire bytes, per rank.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HaloTraffic {
+    /// point-to-point messages posted (2 per communicated direction:
+    /// upward + downward export) — independent of the batch width
+    pub messages: u64,
+    /// payload bytes across all messages: 12 reals per face site per
+    /// *active* RHS
+    pub bytes: u64,
+}
+
+/// Traffic model of one batched hopping: each communicated direction
+/// posts exactly TWO messages whatever `nact` is (that is the batching
+/// win — N right-hand sides ride the same latency), while the payload
+/// carries `face * nact * 12` reals per orientation. Masked (converged)
+/// RHS cost zero bytes.
+pub fn batched_hopping_traffic(
+    face_count: [usize; 4],
+    comm: [bool; 4],
+    nact: usize,
+    elem_bytes: usize,
+) -> HaloTraffic {
+    let mut messages = 0u64;
+    let mut bytes = 0u64;
+    for d in 0..4 {
+        if comm[d] {
+            messages += 2;
+            bytes += (2 * face_count[d] * nact * crate::comm::halo::HALF_SPINOR_F32
+                * elem_bytes) as u64;
+        }
+    }
+    HaloTraffic { messages, bytes }
+}
+
+/// Wire bytes per (local site, RHS) of one batched hopping: constant in
+/// the batch width — batching amortizes the message *count* (latency)
+/// and lets the memory-side gauge stream amortize, it does not shrink
+/// the per-RHS payload. This is why batching does NOT help a
+/// latency-free, bandwidth-bound wire; see ARCHITECTURE.md.
+pub fn halo_bytes_per_site_rhs(t: HaloTraffic, nsites: usize, nact: usize) -> f64 {
+    if nact == 0 {
+        return 0.0;
+    }
+    t.bytes as f64 / (nsites * nact) as f64
+}
+
 /// Per-rank measured compute times feeding the simulation (seconds).
 #[derive(Clone, Copy, Debug)]
 pub struct RankCompute {
@@ -133,6 +180,37 @@ pub fn weak_scaling_gflops_per_node(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn batched_traffic_messages_independent_of_nrhs() {
+        let faces = [8usize, 32, 16, 16];
+        let comm = [true, true, true, false];
+        let one = batched_hopping_traffic(faces, comm, 1, 4);
+        let four = batched_hopping_traffic(faces, comm, 4, 4);
+        // message count: 2 per live direction, whatever the batch width
+        assert_eq!(one.messages, 6);
+        assert_eq!(four.messages, one.messages);
+        // payload: linear in active RHS, zero for masked ones
+        assert_eq!(four.bytes, 4 * one.bytes);
+        assert_eq!(one.bytes, (2 * (8 + 32 + 16) * 12 * 4) as u64);
+        let none = batched_hopping_traffic(faces, comm, 0, 4);
+        assert_eq!(none.bytes, 0);
+        // f64 wire doubles the bytes, not the messages
+        let wide = batched_hopping_traffic(faces, comm, 1, 8);
+        assert_eq!(wide.bytes, 2 * one.bytes);
+        assert_eq!(wide.messages, one.messages);
+    }
+
+    #[test]
+    fn halo_bytes_per_site_rhs_constant_in_nrhs() {
+        let faces = [8usize, 32, 16, 16];
+        let comm = [true; 4];
+        let nsites = 512;
+        let a = halo_bytes_per_site_rhs(batched_hopping_traffic(faces, comm, 1, 4), nsites, 1);
+        let b = halo_bytes_per_site_rhs(batched_hopping_traffic(faces, comm, 4, 4), nsites, 4);
+        assert!((a - b).abs() < 1e-12, "wire bytes/site/RHS must not depend on nrhs");
+        assert_eq!(halo_bytes_per_site_rhs(batched_hopping_traffic(faces, comm, 0, 4), nsites, 0), 0.0);
+    }
 
     #[test]
     fn transfer_time_monotone_in_size() {

@@ -15,7 +15,7 @@
 
 use crate::algebra::{Real, PROJ};
 use crate::dslash::links::LinkSource;
-use crate::field::FermionField;
+use crate::field::{FermionField, MultiFermionField};
 use crate::lattice::{Dir, SiteCoord};
 
 use super::halo::{HaloPlans, HALF_SPINOR_F32};
@@ -117,6 +117,71 @@ pub fn pack_down_range_rel<R: Real>(
     }
 }
 
+/// Batched [`pack_up_range_rel`]: pack the upward-export sites
+/// `[begin, end)` of direction `dir` for every *active* RHS of a block
+/// field, RHS-innermost on the wire (`[site][active rhs][12]`). The
+/// site's link is fetched once and applied to all active RHS — the halo
+/// pack amortizes the gauge access exactly like the bulk kernel — and
+/// the per-RHS arithmetic (project, `U^dag` multiply, rounding) is the
+/// single-RHS pack's, so each active RHS's payload bit-matches what
+/// [`pack_up_range_rel`] would produce for its demuxed field.
+#[allow(clippy::too_many_arguments)]
+pub fn pack_up_multi_rel<R: Real, U: LinkSource<R>>(
+    buf: &mut [R],
+    plans: &HaloPlans,
+    dir: usize,
+    u: &U,
+    psi: &MultiFermionField<R>,
+    active: &[bool],
+    begin: usize,
+    end: usize,
+) {
+    let p_in = plans.p_out.flip();
+    let entry = &PROJ[dir][1];
+    let nact = active.iter().filter(|&&a| a).count();
+    for i in begin..end {
+        let s: SiteCoord = plans.up_export[dir][i];
+        let link = u.site_link(Dir::from_index(dir), p_in, s);
+        let mut k = (i - begin) * nact * HALF_SPINOR_F32;
+        for (r, &on) in active.iter().enumerate() {
+            if !on {
+                continue;
+            }
+            let h = entry.project(&psi.site_rhs(s, r));
+            let w = h.link_adj_mul(&link);
+            write_half(&mut buf[k..k + HALF_SPINOR_F32], &w);
+            k += HALF_SPINOR_F32;
+        }
+    }
+}
+
+/// Batched [`pack_down_range_rel`]: `proj-` only, per active RHS,
+/// RHS-innermost on the wire.
+pub fn pack_down_multi_rel<R: Real>(
+    buf: &mut [R],
+    plans: &HaloPlans,
+    dir: usize,
+    psi: &MultiFermionField<R>,
+    active: &[bool],
+    begin: usize,
+    end: usize,
+) {
+    let entry = &PROJ[dir][0];
+    let nact = active.iter().filter(|&&a| a).count();
+    for i in begin..end {
+        let s: SiteCoord = plans.down_export[dir][i];
+        let mut k = (i - begin) * nact * HALF_SPINOR_F32;
+        for (r, &on) in active.iter().enumerate() {
+            if !on {
+                continue;
+            }
+            let h = entry.project(&psi.site_rhs(s, r));
+            write_half(&mut buf[k..k + HALF_SPINOR_F32], &h);
+            k += HALF_SPINOR_F32;
+        }
+    }
+}
+
 /// Read one packed half-spinor back (EO2 side).
 #[inline]
 pub fn read_half<R: Real>(src: &[R]) -> crate::algebra::HalfSpinor {
@@ -164,6 +229,58 @@ mod tests {
         for s in 0..2 {
             for c in 0..3 {
                 assert_eq!(back.h[s][c], h.h[s][c]);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_pack_bit_matches_single_rhs_and_drops_masked() {
+        let geom = Geometry::single_rank(
+            LatticeDims::new(8, 4, 4, 4).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap();
+        let mut rng = Rng::seeded(6);
+        let u: GaugeField = GaugeField::random(&geom, &mut rng);
+        let fields: Vec<FermionField<f32>> = (0..3)
+            .map(|_| FermionField::gaussian(&geom, &mut rng))
+            .collect();
+        let m = crate::field::MultiFermionField::from_rhs(&fields);
+        let plans = HaloPlans::new(&geom, Parity::Even, [true; 4]);
+        let active = [true, false, true];
+        let nact = 2;
+        for dir in 0..4 {
+            let n = plans.face_count[dir];
+            let mut multi = vec![0.0f32; plans.buffer_len_multi(dir, nact)];
+            pack_up_multi_rel(&mut multi, &plans, dir, &u, &m, &active, 0, n);
+            // per active RHS the payload is byte-for-byte the single pack's
+            for (slot, r) in [(0usize, 0usize), (1, 2)] {
+                let mut single = vec![0.0f32; plans.buffer_len(dir)];
+                pack_up_range(&mut single, &plans, dir, &u, &fields[r], 0, n);
+                for site in 0..n {
+                    let mo = (site * nact + slot) * HALF_SPINOR_F32;
+                    let so = site * HALF_SPINOR_F32;
+                    assert_eq!(
+                        &multi[mo..mo + HALF_SPINOR_F32],
+                        &single[so..so + HALF_SPINOR_F32],
+                        "dir {dir} rhs {r} site {site}"
+                    );
+                }
+            }
+            // masked RHS cost zero bytes: the buffer is exactly nact wide
+            assert_eq!(multi.len(), n * nact * HALF_SPINOR_F32);
+            // down-exports too
+            let mut multi = vec![0.0f32; plans.buffer_len_multi(dir, nact)];
+            pack_down_multi_rel(&mut multi, &plans, dir, &m, &active, 0, n);
+            let mut single = vec![0.0f32; plans.buffer_len(dir)];
+            pack_down_range(&mut single, &plans, dir, &fields[2], 0, n);
+            for site in 0..n {
+                let mo = (site * nact + 1) * HALF_SPINOR_F32;
+                let so = site * HALF_SPINOR_F32;
+                assert_eq!(
+                    &multi[mo..mo + HALF_SPINOR_F32],
+                    &single[so..so + HALF_SPINOR_F32]
+                );
             }
         }
     }

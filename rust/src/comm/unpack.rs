@@ -221,6 +221,166 @@ pub unsafe fn eo2_tail_range_raw<R: Real, U: LinkSource<R>>(
     }
 }
 
+/// Per-RHS fused tail of the batched EO2 merge pass. `b` points at a
+/// block field of the output's layout (sub-tile indexed like the output).
+#[derive(Clone, Copy)]
+pub enum MultiEo2Tail<R: Real> {
+    /// halo merge only (interior sites untouched)
+    None,
+    /// out_r = a * out_r + b_r on every site of every active RHS
+    Xpay {
+        a: R,
+        b: crate::coordinator::team::SendPtr<R>,
+    },
+    /// out_r = gamma5 * (a * out_r + b_r)
+    Gamma5Xpay {
+        a: R,
+        b: crate::coordinator::team::SendPtr<R>,
+    },
+}
+
+/// Batched EO2: merge the received multi-RHS halo buffers (RHS-innermost
+/// on the wire, active RHS only) into a block-field output, optionally
+/// fusing the per-RHS M-hat xpay / gamma5-xpay tail into the same pass.
+///
+/// Per-(direction, site) the local link is fetched **once** and consumed
+/// by every active RHS — the EO2 analog of the bulk kernel's gauge
+/// amortization — while the per-RHS accumulate/reconstruct/tail
+/// arithmetic is exactly [`eo2_range_raw`] / [`eo2_tail_range_raw`]'s,
+/// so each active RHS bit-matches the single-RHS merge of its demuxed
+/// field. Masked RHS are neither read nor written (frozen), including by
+/// the tail.
+///
+/// # Safety
+/// Same contract as [`eo2_range_raw`] with block-field lengths; ranges
+/// given to concurrent callers must be disjoint; a tail's `b` must point
+/// at a live block field of the same layout.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn eo2_multi_range_raw<R: Real, U: LinkSource<R>>(
+    out: crate::coordinator::team::SendPtr<R>,
+    l: &crate::lattice::EoLayout,
+    plans: &HaloPlans,
+    bufs: &RecvBuffers<R>,
+    u: &U,
+    nrhs: usize,
+    active: &[bool],
+    begin: usize,
+    end: usize,
+    tail: MultiEo2Tail<R>,
+) {
+    let nact = active.iter().filter(|&&a| a).count();
+    let mut accs = vec![Spinor::ZERO; nrhs];
+    for flat in begin..end {
+        let mut touched = false;
+        for dir in 0..4 {
+            if plans.comm[dir]
+                && (plans.up_import_pos[dir][flat] != NOT_ON_FACE
+                    || plans.down_import_pos[dir][flat] != NOT_ON_FACE)
+            {
+                touched = true;
+                break;
+            }
+        }
+        if !touched && matches!(tail, MultiEo2Tail::None) {
+            continue;
+        }
+        let s: SiteCoord = site_from_flat(l, flat);
+        if touched {
+            for (r, &on) in active.iter().enumerate() {
+                if on {
+                    accs[r] = Spinor::ZERO;
+                }
+            }
+            for dir in 0..4 {
+                if !plans.comm[dir] {
+                    continue;
+                }
+                // +d import: fetch the local link once, feed all RHS
+                let pos = plans.up_import_pos[dir][flat];
+                if pos != NOT_ON_FACE {
+                    let link = u.site_link(Dir::from_index(dir), plans.p_out, s);
+                    let base = pos as usize * nact * HALF_SPINOR_F32;
+                    let mut slot = 0;
+                    for (r, &on) in active.iter().enumerate() {
+                        if !on {
+                            continue;
+                        }
+                        let off = base + slot * HALF_SPINOR_F32;
+                        let h =
+                            read_half(&bufs.from_up[dir][off..off + HALF_SPINOR_F32]);
+                        let w = h.link_mul(&link);
+                        PROJ[dir][0].reconstruct_accum(&mut accs[r], &w);
+                        slot += 1;
+                    }
+                }
+                // -d import: pre-multiplied by the sender
+                let pos = plans.down_import_pos[dir][flat];
+                if pos != NOT_ON_FACE {
+                    let base = pos as usize * nact * HALF_SPINOR_F32;
+                    let mut slot = 0;
+                    for (r, &on) in active.iter().enumerate() {
+                        if !on {
+                            continue;
+                        }
+                        let off = base + slot * HALF_SPINOR_F32;
+                        let w =
+                            read_half(&bufs.from_down[dir][off..off + HALF_SPINOR_F32]);
+                        PROJ[dir][1].reconstruct_accum(&mut accs[r], &w);
+                        slot += 1;
+                    }
+                }
+            }
+        }
+        let lc = l.site_to_lane(s);
+        for (r, &on) in active.iter().enumerate() {
+            if !on {
+                continue;
+            }
+            let sub = lc.tile * nrhs + r;
+            for spin in 0..4 {
+                for color in 0..3 {
+                    let ro = l.spinor_vec(sub, spin, color, 0) + lc.lane;
+                    let io = l.spinor_vec(sub, spin, color, 1) + lc.lane;
+                    // accumulate-then-tail in the single-RHS reference
+                    // order: halo add rounds into R first, the tail
+                    // rounds once
+                    let mut re = *out.0.add(ro);
+                    let mut im = *out.0.add(io);
+                    if touched {
+                        re += R::from_f64(accs[r].s[spin][color].re);
+                        im += R::from_f64(accs[r].s[spin][color].im);
+                    }
+                    match tail {
+                        MultiEo2Tail::None => {
+                            if touched {
+                                *out.0.add(ro) = re;
+                                *out.0.add(io) = im;
+                            }
+                        }
+                        MultiEo2Tail::Xpay { a, b } => {
+                            *out.0.add(ro) = a * re + *b.0.add(ro);
+                            *out.0.add(io) = a * im + *b.0.add(io);
+                        }
+                        MultiEo2Tail::Gamma5Xpay { a, b } => {
+                            let vr = a * re + *b.0.add(ro);
+                            let vi = a * im + *b.0.add(io);
+                            // gamma5 negates the lower two spins, like
+                            // the kernel's Gamma5Xpay store tail
+                            if spin >= 2 {
+                                *out.0.add(ro) = -vr;
+                                *out.0.add(io) = -vi;
+                            } else {
+                                *out.0.add(ro) = vr;
+                                *out.0.add(io) = vi;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

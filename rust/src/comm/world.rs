@@ -7,6 +7,7 @@
 //! rank's master thread calls these functions.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
 
@@ -18,15 +19,39 @@ pub enum Payload {
     F64(Vec<f64>),
 }
 
+/// A structured communication-layer error: what went wrong and which
+/// ranks disagreed, surfaced *before* any payload is posted (see
+/// [`validate_wire_format`]) instead of a type panic mid-exchange.
+#[derive(Clone, Debug)]
+pub struct CommError(pub String);
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CommError {}
+
 /// Scalars that can travel through the simulated-MPI world. Implemented
 /// for `f32` and `f64`; a `recv` with the wrong precision for the
 /// matching send panics loudly (a type confusion, never a silent cast).
+/// The [`validate_wire_format`] handshake exists to catch that confusion
+/// *before* the first send, as a structured [`CommError`].
 pub trait CommScalar: Copy + Send + 'static {
+    /// Wire identifier of this scalar (part of the halo wire signature).
+    const WIRE_ID: u64;
+    /// Human name used when decoding a wire-signature mismatch.
+    const WIRE_NAME: &'static str;
+
     fn wrap(v: Vec<Self>) -> Payload;
     fn unwrap(p: Payload) -> Vec<Self>;
 }
 
 impl CommScalar for f32 {
+    const WIRE_ID: u64 = 1;
+    const WIRE_NAME: &'static str = "f32";
+
     fn wrap(v: Vec<f32>) -> Payload {
         Payload::F32(v)
     }
@@ -40,6 +65,9 @@ impl CommScalar for f32 {
 }
 
 impl CommScalar for f64 {
+    const WIRE_ID: u64 = 2;
+    const WIRE_NAME: &'static str = "f64";
+
     fn wrap(v: Vec<f64>) -> Payload {
         Payload::F64(v)
     }
@@ -50,6 +78,96 @@ impl CommScalar for f64 {
             Payload::F32(_) => panic!("recv precision mismatch: wanted f64, got f32"),
         }
     }
+}
+
+/// Most right-hand sides a batched halo message can describe: the active
+/// mask must fit the wire signature's 32 mask bits.
+pub const MAX_WIRE_RHS: usize = 32;
+
+/// Sentinel signature a rank posts when its own batch is unencodable
+/// (`nrhs > MAX_WIRE_RHS`): it still joins the collective — so no rank
+/// hangs at the barrier — and can never equal a valid signature
+/// (precision nibble 0xF).
+const OVERFLOW_SIG: u64 = 0xF << 44;
+
+/// Encode the halo wire format — (precision, nrhs, active mask) — into
+/// one u64 so every rank can compare formats in a single collective and
+/// batched message tags can carry the format they were packed under.
+/// Bits: `[0, 32)` active mask, `[32, 44)` nrhs, `[44, 48)` precision id.
+///
+/// Panics when `nrhs > MAX_WIRE_RHS`; the batched exchange only calls
+/// this after [`validate_wire_format`] succeeded (which reports the
+/// overflow as a structured error instead), so the assert is a
+/// defense-in-depth invariant, not a reachable failure mode.
+pub fn wire_sig<S: CommScalar>(nrhs: usize, active: &[bool]) -> u64 {
+    assert!(
+        nrhs <= MAX_WIRE_RHS,
+        "batched halos support at most {MAX_WIRE_RHS} RHS per message (got {nrhs})"
+    );
+    debug_assert_eq!(active.len(), nrhs);
+    let mut mask = 0u64;
+    for (r, &on) in active.iter().enumerate() {
+        if on {
+            mask |= 1 << r;
+        }
+    }
+    mask | ((nrhs as u64) << 32) | (S::WIRE_ID << 44)
+}
+
+/// Decode a wire signature for error reporting.
+pub fn decode_wire_sig(sig: u64) -> String {
+    let mask = sig & 0xffff_ffff;
+    let nrhs = ((sig >> 32) & 0xfff) as usize;
+    let prec = match sig >> 44 {
+        1 => "f32",
+        2 => "f64",
+        _ => "?",
+    };
+    let mask_str: String = (0..nrhs.min(MAX_WIRE_RHS))
+        .map(|r| if mask & (1 << r) != 0 { '1' } else { '0' })
+        .collect();
+    format!("precision {prec}, nrhs {nrhs}, active mask [{mask_str}]")
+}
+
+/// Wire-format handshake: every rank posts its (precision, nrhs, active
+/// mask) signature and compares against the whole world. Run BEFORE the
+/// first halo send of a batched exchange, so a rank-count, precision or
+/// mask desync surfaces as one structured [`CommError`] naming the
+/// disagreeing ranks — instead of a type panic (or a tag-mismatch hang)
+/// in the middle of the exchange.
+pub fn validate_wire_format<S: CommScalar>(
+    comm: &Comm,
+    nrhs: usize,
+    active: &[bool],
+) -> Result<(), CommError> {
+    // an unencodable batch still joins the collective (sentinel sig) so
+    // the other ranks are never left hanging at the barrier, then
+    // reports the overflow as a structured error on every rank
+    let sig = if nrhs <= MAX_WIRE_RHS {
+        wire_sig::<S>(nrhs, active)
+    } else {
+        OVERFLOW_SIG
+    };
+    let sigs = comm.exchange_sigs(sig);
+    if nrhs > MAX_WIRE_RHS {
+        return Err(CommError(format!(
+            "batched halos carry at most {MAX_WIRE_RHS} right-hand sides per \
+             message (the wire signature's mask width); got nrhs {nrhs}"
+        )));
+    }
+    if sigs.iter().all(|&s| s == sig) {
+        return Ok(());
+    }
+    let lines: Vec<String> = sigs
+        .iter()
+        .enumerate()
+        .map(|(r, &s)| format!("  rank {r}: {}", decode_wire_sig(s)))
+        .collect();
+    Err(CommError(format!(
+        "halo wire-format mismatch across the rank world (detected before any \
+         payload was sent):\n{}",
+        lines.join("\n")
+    )))
 }
 
 /// A tagged message.
@@ -70,6 +188,13 @@ pub struct Comm {
     barrier: Arc<Barrier>,
     reduce_slots: Arc<Mutex<Vec<f64>>>,
     reduce_barrier: Arc<Barrier>,
+    /// wire-signature slots for the pre-exchange format handshake
+    sig_slots: Arc<Mutex<Vec<u64>>>,
+    /// per-rank vector slots for `allgather_f64`
+    gather_slots: Arc<Mutex<Vec<Vec<f64>>>>,
+    /// barrier shared by the sig/gather collectives (all collective calls
+    /// are made in identical order on every rank, so one barrier serves)
+    coll_barrier: Arc<Barrier>,
 }
 
 impl Comm {
@@ -121,6 +246,45 @@ impl Comm {
         self.reduce_barrier.wait();
         total
     }
+
+    /// Collective: post this rank's wire signature, return everyone's.
+    /// (Internal to [`validate_wire_format`]; collective calls must be
+    /// made in the same order on every rank.)
+    fn exchange_sigs(&self, sig: u64) -> Vec<u64> {
+        {
+            let mut slots = self.sig_slots.lock().unwrap();
+            slots[self.rank] = sig;
+        }
+        self.coll_barrier.wait();
+        let sigs = self.sig_slots.lock().unwrap().clone();
+        // second barrier so no rank posts its next signature before
+        // everyone has read this round
+        self.coll_barrier.wait();
+        sigs
+    }
+
+    /// Gather every rank's f64 vector (rank-indexed). The distributed
+    /// multi-RHS operators use this to fold per-tile reduction partials
+    /// in *global* site-tile order, which keeps solver scalars bitwise
+    /// independent of the rank count. Collective: every rank must call
+    /// with the same sequence of gathers.
+    pub fn allgather_f64(&self, v: &[f64]) -> Vec<Vec<f64>> {
+        {
+            let mut slots = self.gather_slots.lock().unwrap();
+            slots[self.rank] = v.to_vec();
+        }
+        self.coll_barrier.wait();
+        let all = self.gather_slots.lock().unwrap().clone();
+        self.coll_barrier.wait();
+        all
+    }
+
+    /// Collective OR of a per-rank flag: lets the solvers take globally
+    /// consistent control-flow decisions (e.g. warm-start detection)
+    /// without divergent collective sequences.
+    pub fn allreduce_any(&self, v: bool) -> bool {
+        self.exchange_sigs(u64::from(v)).iter().any(|&s| s != 0)
+    }
 }
 
 /// Run `f(rank, comm)` on `nranks` threads; returns the per-rank results
@@ -141,6 +305,9 @@ where
     let barrier = Arc::new(Barrier::new(nranks));
     let reduce_slots = Arc::new(Mutex::new(vec![0.0f64; nranks]));
     let reduce_barrier = Arc::new(Barrier::new(nranks));
+    let sig_slots = Arc::new(Mutex::new(vec![0u64; nranks]));
+    let gather_slots = Arc::new(Mutex::new(vec![Vec::new(); nranks]));
+    let coll_barrier = Arc::new(Barrier::new(nranks));
 
     let mut comms: Vec<Comm> = inboxes
         .into_iter()
@@ -154,6 +321,9 @@ where
             barrier: Arc::clone(&barrier),
             reduce_slots: Arc::clone(&reduce_slots),
             reduce_barrier: Arc::clone(&reduce_barrier),
+            sig_slots: Arc::clone(&sig_slots),
+            gather_slots: Arc::clone(&gather_slots),
+            coll_barrier: Arc::clone(&coll_barrier),
         })
         .collect();
     // drop the original senders so channels close when the world ends
@@ -223,6 +393,105 @@ mod tests {
         for (a, b) in results {
             assert_eq!(a, 6.0);
             assert_eq!(b, 30.0);
+        }
+    }
+
+    #[test]
+    fn wire_sig_roundtrip_and_decode() {
+        let sig = wire_sig::<f32>(3, &[true, false, true]);
+        assert_eq!(sig & 0xffff_ffff, 0b101);
+        assert_eq!((sig >> 32) & 0xfff, 3);
+        assert_eq!(sig >> 44, 1);
+        let s = decode_wire_sig(sig);
+        assert!(s.contains("f32") && s.contains("nrhs 3") && s.contains("101"), "{s}");
+        let sig64 = wire_sig::<f64>(2, &[true, true]);
+        assert!(decode_wire_sig(sig64).contains("f64"));
+        assert_ne!(sig, sig64);
+    }
+
+    #[test]
+    fn wire_format_handshake_agrees_and_disagrees() {
+        // matching formats: every rank gets Ok
+        let results = run_world(3, |_, comm| {
+            validate_wire_format::<f32>(comm, 2, &[true, false]).is_ok()
+        });
+        assert!(results.iter().all(|&ok| ok));
+
+        // mask desync: every rank gets a structured error naming ranks
+        let results = run_world(2, |rank, comm| {
+            let active = if rank == 0 { [true, true] } else { [true, false] };
+            validate_wire_format::<f32>(comm, 2, &active).unwrap_err().to_string()
+        });
+        for msg in &results {
+            assert!(msg.contains("rank 0") && msg.contains("rank 1"), "{msg}");
+            assert!(msg.contains("before any payload was sent"), "{msg}");
+        }
+
+        // precision desync: the decoded error names both precisions
+        let results = run_world(2, |rank, comm| {
+            if rank == 0 {
+                validate_wire_format::<f32>(comm, 1, &[true]).unwrap_err().to_string()
+            } else {
+                validate_wire_format::<f64>(comm, 1, &[true]).unwrap_err().to_string()
+            }
+        });
+        assert!(results[0].contains("f32") && results[0].contains("f64"));
+    }
+
+    #[test]
+    fn oversized_batch_is_structured_error_not_a_hang() {
+        // every rank over the cap gets Err; none deadlocks at the barrier
+        let results = run_world(2, |_, comm| {
+            let active = vec![true; 40];
+            validate_wire_format::<f32>(comm, 40, &active).unwrap_err().to_string()
+        });
+        for m in &results {
+            assert!(m.contains("at most 32") && m.contains("got nrhs 40"), "{m}");
+        }
+        // one oversized rank + one valid rank: the valid rank sees a
+        // mismatch (sentinel sig), the oversized one its overflow error
+        let results = run_world(2, |rank, comm| {
+            if rank == 0 {
+                validate_wire_format::<f32>(comm, 2, &[true, true])
+                    .unwrap_err()
+                    .to_string()
+            } else {
+                validate_wire_format::<f32>(comm, 40, &vec![true; 40])
+                    .unwrap_err()
+                    .to_string()
+            }
+        });
+        assert!(results[0].contains("mismatch"), "{}", results[0]);
+        assert!(results[1].contains("at most 32"), "{}", results[1]);
+    }
+
+    #[test]
+    fn allgather_returns_rank_ordered_vectors() {
+        let results = run_world(3, |rank, comm| {
+            let mine = vec![rank as f64, 10.0 * rank as f64];
+            let all = comm.allgather_f64(&mine);
+            // a second round must not see stale slots
+            let all2 = comm.allgather_f64(&[100.0 + rank as f64]);
+            (all, all2)
+        });
+        for (all, all2) in results {
+            for r in 0..3 {
+                assert_eq!(all[r], vec![r as f64, 10.0 * r as f64]);
+                assert_eq!(all2[r], vec![100.0 + r as f64]);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_any_ors_flags() {
+        let results = run_world(3, |rank, comm| {
+            let a = comm.allreduce_any(rank == 1);
+            let b = comm.allreduce_any(false);
+            (a, b)
+        });
+        for (a, b) in results {
+            assert!(a);
+            assert!(!b);
         }
     }
 

@@ -101,6 +101,80 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Validate the flag/key *combinations* of a `solve` run, up front
+    /// and in one place (the per-key range checks live in parsing).
+    /// Collects every offense so e.g.
+    /// `--pjrt --precision f64 --gauge-compression two-row` reports all
+    /// offending flags at once instead of whichever branch ran first.
+    pub fn validate_solve(&self, use_pjrt: bool) -> Result<(), String> {
+        let mut errs: Vec<String> = Vec::new();
+        let s = &self.solver;
+        if !matches!(s.algorithm.as_str(), "cg" | "bicgstab") {
+            errs.push(format!(
+                "solver.algorithm must be \"cg\" or \"bicgstab\" (got {:?})",
+                s.algorithm
+            ));
+        }
+        let nranks = self.lattice.grid.size();
+        if use_pjrt {
+            if matches!(s.precision.as_str(), "f64" | "mixed") {
+                errs.push(format!(
+                    "--pjrt only supports f32 (the artifacts are lowered at f32); \
+                     got --precision {}",
+                    s.precision
+                ));
+            }
+            if s.nrhs > 1 {
+                errs.push(
+                    "--pjrt does not support --nrhs > 1 (native block solver only)"
+                        .into(),
+                );
+            }
+            if self.gauge.compression != Compression::None {
+                errs.push(
+                    "--pjrt does not support --gauge-compression (the artifacts \
+                     stream full links)"
+                        .into(),
+                );
+            }
+            if nranks > 1 {
+                errs.push(format!(
+                    "--pjrt does not support a multi-rank grid (lattice.grid gives \
+                     {nranks} ranks); drop --pjrt or use --grid 1x1x1x1"
+                ));
+            }
+        }
+        if s.nrhs > 1 && s.precision == "mixed" {
+            errs.push(
+                "--nrhs > 1 supports --precision f32 or f64; mixed-precision block \
+                 refinement is an open ROADMAP item (PR 3/PR 4 notes), not a typo \
+                 in your flags"
+                    .into(),
+            );
+        }
+        if nranks > 1 && s.precision == "mixed" {
+            errs.push(
+                "distributed solves (a multi-rank lattice.grid / --grid) support \
+                 --precision f32 or f64; mixed refinement over the rank world is \
+                 an open ROADMAP item"
+                    .into(),
+            );
+        }
+        if nranks > 1 && s.nrhs > crate::comm::MAX_WIRE_RHS {
+            errs.push(format!(
+                "distributed batched halos carry at most {} right-hand sides per \
+                 message (the wire signature's mask width); got --nrhs {}",
+                crate::comm::MAX_WIRE_RHS,
+                s.nrhs
+            ));
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs.join("\n"))
+        }
+    }
+
     /// Load from a TOML-subset file; missing keys fall back to defaults.
     pub fn load(path: &Path) -> Result<RunConfig, ConfigError> {
         let doc = Document::load(path)?;

@@ -4,10 +4,10 @@
 
 use crate::algebra::Real;
 use crate::comm::halo::HaloPlans;
-use crate::comm::unpack::RecvBuffers;
-use crate::comm::{balance, pack, unpack, Comm, CommScalar};
-use crate::dslash::{HoppingEo, LinkSource, StoreTail, WrapMode};
-use crate::field::FermionField;
+use crate::comm::unpack::{MultiEo2Tail, RecvBuffers};
+use crate::comm::{balance, pack, unpack, validate_wire_format, wire_sig, Comm, CommScalar};
+use crate::dslash::{HoppingEo, LinkSource, MultiStoreTail, StoreTail, WrapMode};
+use crate::field::{FermionField, MultiFermionField};
 use crate::lattice::{Dir, Geometry, Parity};
 
 use super::profiler::{Phase, Profiler};
@@ -25,6 +25,29 @@ pub enum Eo2Schedule {
 /// Message tag: direction, orientation, output parity.
 fn tag(dir: usize, upward: bool, p_out: Parity) -> u64 {
     ((p_out.index() as u64) << 8) | ((dir as u64) << 1) | u64::from(upward)
+}
+
+/// Batched-message tag: the single-RHS tag plus the halo wire signature
+/// (precision, nrhs, active mask), so a rank that somehow got past the
+/// pre-send handshake with a diverged batch shape can never consume a
+/// mismatched payload — the tags simply don't match.
+fn tag_multi(dir: usize, upward: bool, p_out: Parity, sig: u64) -> u64 {
+    tag(dir, upward, p_out) | (sig << 9)
+}
+
+/// Per-RHS fused tail of the batched distributed hopping: the analog of
+/// the `a`/`b` xpay arguments of [`DistHopping::hopping_fused`], with a
+/// gamma5 flavor so the distributed normal operator can fuse both of its
+/// gamma5 passes into the EO2 merge (or the bulk store when nothing
+/// communicates) exactly like the native [`crate::dslash::MultiStoreTail`].
+#[derive(Clone, Copy)]
+pub enum MultiHopTail<'a, R: Real> {
+    /// out_r = H psi_r
+    Assign,
+    /// out_r = a * (H psi_r) + b_r
+    Xpay { a: R, b: &'a MultiFermionField<R> },
+    /// out_r = gamma5 * (a * (H psi_r) + b_r)
+    Gamma5Xpay { a: R, b: &'a MultiFermionField<R> },
 }
 
 /// Distributed even-odd hopping operator for one rank.
@@ -150,6 +173,19 @@ impl DistHopping {
         let plans = &self.plans[p_out.index()];
         let rank = comm.rank;
         let grid = self.geom.grid;
+        let any_comm = self.comm_dirs.iter().any(|&c| c);
+
+        // wire-format handshake: a precision desync across the rank
+        // world surfaces here, BEFORE any payload is posted, as one
+        // structured error naming every rank's format — instead of a
+        // type panic (or a tag hang) in the middle of the exchange.
+        // A single-rank world cannot desync with itself, so the forced
+        // self-comm hot loops of the harness skip the collective.
+        if any_comm && comm.nranks > 1 {
+            if let Err(e) = validate_wire_format::<R>(comm, 1, &[true]) {
+                panic!("{e}");
+            }
+        }
 
         // ---------------- EO1: pack send buffers --------------------
         let mut up_bufs: [Vec<R>; 4] = std::array::from_fn(|_| Vec::new());
@@ -217,7 +253,6 @@ impl DistHopping {
         // With no communicated direction the bulk covers every site, so
         // a fused tail can ride the kernel store itself; with halo
         // imports pending it is applied in EO2 instead (bit-identical).
-        let any_comm = self.comm_dirs.iter().any(|&c| c);
         let bulk_tail = if any_comm { None } else { tail };
         let eo2_tail = if any_comm { tail } else { None };
         {
@@ -304,6 +339,216 @@ impl DistHopping {
                         None => unsafe {
                             unpack::eo2_range_raw(out_ptr, &layout, plans, bufs, u, b, e);
                         },
+                    }
+                });
+            });
+        }
+    }
+
+    /// Batched distributed hopping: `out_r = H psi_r` (plus the optional
+    /// fused per-RHS tail) for every *active* RHS of a block field, with
+    /// the same EO1 -> post sends -> bulk ∥ wire -> wait -> EO2 pipeline
+    /// as [`Self::hopping`] — but ONE message per direction/orientation
+    /// carrying all active RHS, RHS-innermost on the wire. The message
+    /// count per application is therefore independent of `nrhs`, while
+    /// masked (converged) RHS drop out of the payload entirely.
+    ///
+    /// Per-RHS arithmetic (bulk kernel, EO1 pack, EO2 merge, tails) is
+    /// byte-for-byte the single-RHS pipeline's, so each active RHS
+    /// bit-matches [`Self::hopping`]/[`Self::hopping_fused`] on its
+    /// demuxed field at any precision and rank count.
+    ///
+    /// Before the first send the ranks handshake on (precision, nrhs,
+    /// active mask); a desync panics with the structured
+    /// [`crate::comm::CommError`] message naming every rank's view (use
+    /// [`validate_wire_format`] directly for a `Result`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn hopping_multi<R: Real + CommScalar, U: LinkSource<R>>(
+        &self,
+        out: &mut MultiFermionField<R>,
+        u: &U,
+        psi: &MultiFermionField<R>,
+        p_out: Parity,
+        active: &[bool],
+        comm: &mut Comm,
+        team: &mut Team,
+        prof: &Profiler,
+        tail: MultiHopTail<R>,
+    ) {
+        let nrhs = psi.nrhs;
+        debug_assert_eq!(out.nrhs, nrhs);
+        debug_assert_eq!(active.len(), nrhs);
+        let nact = active.iter().filter(|&&a| a).count();
+        let plans = &self.plans[p_out.index()];
+        let rank = comm.rank;
+        let grid = self.geom.grid;
+        let any_comm = self.comm_dirs.iter().any(|&c| c);
+
+        if any_comm && comm.nranks > 1 {
+            // wire-format handshake BEFORE any payload is posted (see
+            // the module docs of `comm::world`): a rank-count, precision
+            // or mask desync is a structured error here, never a
+            // mid-exchange type panic or tag-mismatch hang (a 1-rank
+            // world cannot desync with itself — skip the collective)
+            if let Err(e) = validate_wire_format::<R>(comm, nrhs, active) {
+                panic!("{e}");
+            }
+        }
+        if nact == 0 {
+            // uniform (validated) decision: nothing to hop, send nothing
+            return;
+        }
+        let sig = wire_sig::<R>(nrhs, active);
+        let n = self.nthreads;
+
+        // ---------------- EO1: pack batched send buffers -------------
+        let mut up_bufs: [Vec<R>; 4] = std::array::from_fn(|_| Vec::new());
+        let mut down_bufs: [Vec<R>; 4] = std::array::from_fn(|_| Vec::new());
+        for dir in 0..4 {
+            if self.comm_dirs[dir] {
+                up_bufs[dir] = vec![R::ZERO; plans.buffer_len_multi(dir, nact)];
+                down_bufs[dir] = vec![R::ZERO; plans.buffer_len_multi(dir, nact)];
+            }
+        }
+        {
+            let up_ptrs: [SendPtr<R>; 4] =
+                std::array::from_fn(|d| SendPtr(up_bufs[d].as_mut_ptr()));
+            let down_ptrs: [SendPtr<R>; 4] =
+                std::array::from_fn(|d| SendPtr(down_bufs[d].as_mut_ptr()));
+            let site_reals = nact * pack::HALF_F32;
+            team.parallel(|tid| {
+                prof.scope(tid, Phase::Eo1, || {
+                    for dir in 0..4 {
+                        if !self.comm_dirs[dir] {
+                            continue;
+                        }
+                        let count = plans.face_count[dir];
+                        let (b, e) = chunk_range(count, tid, n);
+                        if b == e {
+                            continue;
+                        }
+                        let up = unsafe {
+                            up_ptrs[dir].slice_mut(b * site_reals, (e - b) * site_reals)
+                        };
+                        pack::pack_up_multi_rel(up, plans, dir, u, psi, active, b, e);
+                        let down = unsafe {
+                            down_ptrs[dir]
+                                .slice_mut(b * site_reals, (e - b) * site_reals)
+                        };
+                        pack::pack_down_multi_rel(down, plans, dir, psi, active, b, e);
+                    }
+                });
+            });
+        }
+
+        // ---------------- post sends (master thread, FUNNELED) -------
+        // one message per direction per orientation, whatever nrhs is
+        for dir in 0..4 {
+            if !self.comm_dirs[dir] {
+                continue;
+            }
+            let up_rank = grid.neighbor(rank, Dir::from_index(dir), 1);
+            let down_rank = grid.neighbor(rank, Dir::from_index(dir), -1);
+            comm.send(
+                up_rank,
+                tag_multi(dir, true, p_out, sig),
+                std::mem::take(&mut up_bufs[dir]),
+            );
+            comm.send(
+                down_rank,
+                tag_multi(dir, false, p_out, sig),
+                std::mem::take(&mut down_bufs[dir]),
+            );
+        }
+
+        // ---------------- bulk, overlapped with the wire -------------
+        {
+            let out_ptr = SendPtr(out.data.as_mut_ptr());
+            let ntiles = self.bulk.layout.ntiles();
+            let sub_reals = nrhs * crate::lattice::SC2 * self.bulk.layout.vlen();
+            let bulk = &self.bulk;
+            team.parallel(|tid| {
+                prof.scope(tid, Phase::Bulk, || {
+                    let (b, e) = chunk_range(ntiles, tid, n);
+                    if b == e {
+                        return;
+                    }
+                    let out_tiles = unsafe {
+                        out_ptr.slice_mut(b * sub_reals, (e - b) * sub_reals)
+                    };
+                    // without communicating directions the bulk covers
+                    // every site, so the tail rides the kernel store;
+                    // otherwise it moves to the EO2 merge (bit-identical)
+                    let store = if any_comm {
+                        MultiStoreTail::Assign
+                    } else {
+                        match tail {
+                            MultiHopTail::Assign => MultiStoreTail::Assign,
+                            MultiHopTail::Xpay { a, b: bf } => {
+                                MultiStoreTail::Xpay { a, b: &bf.data }
+                            }
+                            MultiHopTail::Gamma5Xpay { a, b: bf } => {
+                                MultiStoreTail::Gamma5Xpay { a, b: &bf.data }
+                            }
+                        }
+                    };
+                    bulk.apply_tiles_multi(
+                        out_tiles, u, &psi.data, p_out, b, e, nrhs, active, store,
+                        None,
+                    );
+                });
+            });
+        }
+
+        // ---------------- receive batched halos ----------------------
+        let mut bufs = RecvBuffers::<R>::default();
+        prof.scope(0, Phase::CommWait, || {
+            for dir in 0..4 {
+                if !self.comm_dirs[dir] {
+                    continue;
+                }
+                let up_rank = grid.neighbor(rank, Dir::from_index(dir), 1);
+                let down_rank = grid.neighbor(rank, Dir::from_index(dir), -1);
+                bufs.from_down[dir] = comm.recv(down_rank, tag_multi(dir, true, p_out, sig));
+                bufs.from_up[dir] = comm.recv(up_rank, tag_multi(dir, false, p_out, sig));
+            }
+        });
+
+        // ---------------- EO2: batched unpack + boundary hopping -----
+        // (without communicating directions the tail already rode the
+        // bulk store and there is nothing to merge)
+        if any_comm {
+            let out_ptr = SendPtr(out.data.as_mut_ptr());
+            let layout = self.bulk.layout;
+            let eo2_tail = match tail {
+                MultiHopTail::Assign => MultiEo2Tail::None,
+                MultiHopTail::Xpay { a, b: bf } => MultiEo2Tail::Xpay {
+                    a,
+                    b: SendPtr(bf.data.as_ptr() as *mut R),
+                },
+                MultiHopTail::Gamma5Xpay { a, b: bf } => MultiEo2Tail::Gamma5Xpay {
+                    a,
+                    b: SendPtr(bf.data.as_ptr() as *mut R),
+                },
+            };
+            // a fused tail touches every site: shard by site count
+            let chunks = if matches!(eo2_tail, MultiEo2Tail::None) {
+                &self.chunks[p_out.index()]
+            } else {
+                &self.tail_chunks[p_out.index()]
+            };
+            let bufs = &bufs;
+            team.parallel(|tid| {
+                prof.scope(tid, Phase::Eo2, || {
+                    let (b, e) = chunks[tid];
+                    if b == e {
+                        return;
+                    }
+                    unsafe {
+                        unpack::eo2_multi_range_raw(
+                            out_ptr, &layout, plans, bufs, u, nrhs, active, b, e,
+                            eo2_tail,
+                        );
                     }
                 });
             });

@@ -7,6 +7,6 @@ pub mod operator;
 pub mod profiler;
 pub mod team;
 
-pub use driver::{DistHopping, Eo2Schedule};
+pub use driver::{DistHopping, Eo2Schedule, MultiHopTail};
 pub use profiler::{Phase, Profiler, Report};
 pub use team::{BarrierKind, Team, TeamBarrier};

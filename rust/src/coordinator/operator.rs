@@ -10,15 +10,15 @@
 //! precision (global reductions are always accumulated wide).
 
 use crate::algebra::Real;
-use crate::comm::{Comm, CommScalar};
+use crate::comm::{validate_wire_format, Comm, CommError, CommScalar};
 use crate::dslash::{
     full, DotCapture, HoppingEo, LinkSource, Links, MultiDotCapture, MultiStoreTail,
     StoreTail,
 };
 use crate::field::{FermionField, GaugeField, MultiFermionField};
-use crate::lattice::{Geometry, Parity, SC2};
+use crate::lattice::{EoLayout, Geometry, Parity, SC2};
 
-use super::driver::DistHopping;
+use super::driver::{DistHopping, MultiHopTail};
 use super::profiler::Profiler;
 use super::team::{chunk_range, SendPtr, Team, TeamBarrier};
 
@@ -416,6 +416,46 @@ pub trait MultiOperator<R: Real> {
     fn flops_per_apply_shared(&self) -> u64 {
         0
     }
+
+    /// Combine per-(site tile, RHS) capture partials
+    /// (`partials[tile * nrhs + r]`) into per-RHS `[Re, Im, |·|²]` sums
+    /// in the **canonical site-tile grouping**. Single-rank operators
+    /// sum their local tiles in tile order (this default); distributed
+    /// operators gather every rank's partials and fold them in *global*
+    /// site-tile order, so solver scalars are bitwise independent of the
+    /// rank decomposition. Entries of masked RHS may hold stale data —
+    /// callers only read the RHS they wrote this sweep.
+    fn reduce_caps(&mut self, partials: &[[f64; 3]]) -> Vec<[f64; 3]> {
+        reduce_caps_tile_order(partials, self.nrhs())
+    }
+
+    /// Collective OR of a per-rank flag (identity for single-rank
+    /// operators): lets the generic block solvers take globally
+    /// consistent control-flow decisions — e.g. warm-start detection —
+    /// without divergent collective sequences across ranks.
+    fn reduce_any(&mut self, v: bool) -> bool {
+        v
+    }
+}
+
+/// Fold per-(site tile, RHS) partials into per-RHS sums in site-tile
+/// order — the canonical reduction grouping every solver in the repo
+/// shares (each component accumulates tile-by-tile, exactly like
+/// [`MultiFermionField::norm2_per_rhs`] and the block solvers' in-region
+/// `sum_cap`).
+pub fn reduce_caps_tile_order(partials: &[[f64; 3]], nrhs: usize) -> Vec<[f64; 3]> {
+    debug_assert_eq!(partials.len() % nrhs, 0);
+    let ntiles = partials.len() / nrhs;
+    let mut out = vec![[0.0f64; 3]; nrhs];
+    for t in 0..ntiles {
+        for (r, acc) in out.iter_mut().enumerate() {
+            let p = &partials[t * nrhs + r];
+            acc[0] += p[0];
+            acc[1] += p[1];
+            acc[2] += p[2];
+        }
+    }
+    out
 }
 
 /// Multi-RHS native single-rank M-hat: the batched analog of
@@ -836,6 +876,273 @@ impl<R: Real + CommScalar, U: LinkSource<R>> LinearOperator<R> for DistMeo<'_, R
 
     fn reduce_sum(&mut self, v: f64) -> f64 {
         self.comm.allreduce_sum(v)
+    }
+}
+
+/// (rank, local tile) pairs covering the whole decomposed lattice, in
+/// **global** site-tile order — the fold order of the distributed
+/// multi-RHS reductions. Every rank computes the same table from the
+/// geometry alone (the [`Geometry`] carries global dims, grid and
+/// tiling), so no communication is needed to agree on it.
+fn global_tile_order(geom: &Geometry) -> Vec<(u32, u32)> {
+    let grid = geom.grid;
+    let gg = Geometry::single_rank(geom.global, geom.tiling)
+        .expect("global geometry is valid whenever the per-rank one is");
+    let glayout = EoLayout::new(&gg);
+    let (vx, vy) = (geom.tiling.vx(), geom.tiling.vy());
+    let mut entries: Vec<(usize, u32, u32)> = Vec::new();
+    for rank in 0..grid.size() {
+        let lg = Geometry::for_rank(geom.global, grid, rank, geom.tiling)
+            .expect("every rank of a valid decomposition has a geometry");
+        let ll = EoLayout::new(&lg);
+        let origin = lg.origin();
+        // tile-coordinate offset of this rank: local extents divide by
+        // the tiling, so the origin lands on a tile boundary
+        let (ot, oz) = (origin[3], origin[2]);
+        let (oyt, oxt) = (origin[1] / vy, (origin[0] / 2) / vx);
+        for lt in 0..ll.ntiles() {
+            let (t, z, yt, xt) = ll.tile_coords(lt);
+            let g = glayout.tile_index(ot + t, oz + z, oyt + yt, oxt + xt);
+            entries.push((g, rank as u32, lt as u32));
+        }
+    }
+    entries.sort_unstable();
+    debug_assert_eq!(entries.len(), glayout.ntiles());
+    entries.into_iter().map(|(_, r, lt)| (r, lt)).collect()
+}
+
+/// Distributed multi-RHS M-hat: the batched analog of [`DistMeo`] and
+/// the rank-decomposed analog of [`MultiNativeMeo`]. Both hopping
+/// applications run the bulk/EO1/EO2 overlap phases of
+/// [`DistHopping::hopping_multi`], so per application there is ONE halo
+/// message per direction/orientation for all active RHS (RHS-innermost
+/// on the wire; converged RHS cost zero bytes), the gauge stream — full
+/// or two-row compressed — is consumed once per site tile for all N
+/// RHS, and the `-kappa²` xpay tail is fused into the second hopping's
+/// store (bulk or EO2 merge). Per-RHS output bit-matches [`DistMeo`] on
+/// the demuxed fields at any precision, grid and mask.
+///
+/// Reductions ([`MultiOperator::reduce_caps`]) gather every rank's
+/// per-tile partials and fold them in *global* site-tile order, so the
+/// solver scalars (alpha, beta, residual norms) are bitwise identical
+/// to the single-rank block solver's grouping regardless of the rank
+/// count.
+pub struct DistMultiMeo<'a, R: Real + CommScalar = f32, U: LinkSource<R> = GaugeField<R>> {
+    pub dist: &'a DistHopping,
+    pub u: &'a U,
+    pub kappa: R,
+    pub comm: &'a mut Comm,
+    pub prof: &'a Profiler,
+    tmp: MultiFermionField<R>,
+    nrhs: usize,
+    half_volume: usize,
+    /// (rank, local tile) in global site-tile order (see `reduce_caps`)
+    reduce_order: std::sync::Arc<Vec<(u32, u32)>>,
+}
+
+impl<'a, R: Real + CommScalar, U: LinkSource<R>> DistMultiMeo<'a, R, U> {
+    /// Construct the operator, running the wire-format handshake: if the
+    /// ranks disagree on precision or batch width the structured
+    /// [`CommError`] names every rank's view — surfaced here, before any
+    /// halo payload could be posted.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        geom: &Geometry,
+        dist: &'a DistHopping,
+        u: &'a U,
+        kappa: R,
+        nrhs: usize,
+        comm: &'a mut Comm,
+        prof: &'a Profiler,
+    ) -> Result<DistMultiMeo<'a, R, U>, CommError> {
+        validate_wire_format::<R>(comm, nrhs, &vec![true; nrhs])?;
+        Ok(DistMultiMeo {
+            dist,
+            u,
+            kappa,
+            comm,
+            prof,
+            tmp: MultiFermionField::zeros(geom, nrhs),
+            nrhs,
+            half_volume: geom.local.half_volume(),
+            reduce_order: std::sync::Arc::new(global_tile_order(geom)),
+        })
+    }
+
+    /// Gather-and-fold reduction shared with [`DistMultiMdagM`].
+    fn reduce_caps_global(
+        comm: &Comm,
+        reduce_order: &[(u32, u32)],
+        partials: &[[f64; 3]],
+        nrhs: usize,
+    ) -> Vec<[f64; 3]> {
+        let flat: Vec<f64> = partials.iter().flat_map(|p| p.iter().copied()).collect();
+        let all = comm.allgather_f64(&flat);
+        let mut out = vec![[0.0f64; 3]; nrhs];
+        for &(rank, lt) in reduce_order {
+            let row = &all[rank as usize];
+            for (r, acc) in out.iter_mut().enumerate() {
+                let base = (lt as usize * nrhs + r) * 3;
+                acc[0] += row[base];
+                acc[1] += row[base + 1];
+                acc[2] += row[base + 2];
+            }
+        }
+        out
+    }
+}
+
+impl<R: Real + CommScalar, U: LinkSource<R>> MultiOperator<R> for DistMultiMeo<'_, R, U> {
+    fn nrhs(&self) -> usize {
+        self.nrhs
+    }
+
+    fn apply_multi(
+        &mut self,
+        team: &mut Team,
+        out: &mut MultiFermionField<R>,
+        psi: &MultiFermionField<R>,
+        active: &[bool],
+        dot: Option<(&MultiFermionField<R>, &mut [[f64; 3]])>,
+    ) {
+        debug_assert_eq!(psi.nrhs, self.nrhs);
+        debug_assert_eq!(out.nrhs, self.nrhs);
+        // M-hat = 1 - kappa² H_eo H_oe, xpay tail fused into the second
+        // hopping's pipeline (bulk store without comm, EO2 merge with)
+        self.dist.hopping_multi(
+            &mut self.tmp,
+            self.u,
+            psi,
+            Parity::Odd,
+            active,
+            self.comm,
+            team,
+            self.prof,
+            MultiHopTail::Assign,
+        );
+        self.dist.hopping_multi(
+            out,
+            self.u,
+            &self.tmp,
+            Parity::Even,
+            active,
+            self.comm,
+            team,
+            self.prof,
+            MultiHopTail::Xpay {
+                a: -(self.kappa * self.kappa),
+                b: psi,
+            },
+        );
+        // the store completes only after the EO2 merge, so the dot
+        // capture is a post-pass here (same per-tile values as the
+        // native kernels' fused capture — identical function, same data)
+        if let Some((with, partials)) = dot {
+            with.cdot_norm2_partials(out, active, partials);
+        }
+    }
+
+    fn flops_per_apply_rhs(&self) -> u64 {
+        crate::dslash::flops::meo_flops(self.half_volume)
+    }
+
+    fn flops_per_apply_shared(&self) -> u64 {
+        crate::dslash::flops::meo_links_flops(self.half_volume, self.u.reals_per_link())
+            - crate::dslash::flops::meo_flops(self.half_volume)
+    }
+
+    fn reduce_caps(&mut self, partials: &[[f64; 3]]) -> Vec<[f64; 3]> {
+        Self::reduce_caps_global(self.comm, &self.reduce_order, partials, self.nrhs)
+    }
+
+    fn reduce_any(&mut self, v: bool) -> bool {
+        self.comm.allreduce_any(v)
+    }
+}
+
+/// Distributed multi-RHS normal operator M-hat^dag M-hat: four batched
+/// distributed hoppings with both gamma5/xpay tails fused into the
+/// even-parity pipelines (bulk store or EO2 merge), like
+/// [`MultiMdagM`] over the rank world. What the distributed block CGNR
+/// solves.
+pub struct DistMultiMdagM<'a, R: Real + CommScalar = f32, U: LinkSource<R> = GaugeField<R>> {
+    inner: DistMultiMeo<'a, R, U>,
+    mid: MultiFermionField<R>,
+}
+
+impl<'a, R: Real + CommScalar, U: LinkSource<R>> DistMultiMdagM<'a, R, U> {
+    /// Construct, running the same wire-format handshake as
+    /// [`DistMultiMeo::new`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        geom: &Geometry,
+        dist: &'a DistHopping,
+        u: &'a U,
+        kappa: R,
+        nrhs: usize,
+        comm: &'a mut Comm,
+        prof: &'a Profiler,
+    ) -> Result<DistMultiMdagM<'a, R, U>, CommError> {
+        Ok(DistMultiMdagM {
+            inner: DistMultiMeo::new(geom, dist, u, kappa, nrhs, comm, prof)?,
+            mid: MultiFermionField::zeros(geom, nrhs),
+        })
+    }
+}
+
+impl<R: Real + CommScalar, U: LinkSource<R>> MultiOperator<R> for DistMultiMdagM<'_, R, U> {
+    fn nrhs(&self) -> usize {
+        self.inner.nrhs
+    }
+
+    fn apply_multi(
+        &mut self,
+        team: &mut Team,
+        out: &mut MultiFermionField<R>,
+        psi: &MultiFermionField<R>,
+        active: &[bool],
+        dot: Option<(&MultiFermionField<R>, &mut [[f64; 3]])>,
+    ) {
+        let DistMultiMdagM { inner, mid } = self;
+        debug_assert_eq!(psi.nrhs, inner.nrhs);
+        let a = -(inner.kappa * inner.kappa);
+        // mid = g5 (psi - kappa² H_eo H_oe psi)
+        inner.dist.hopping_multi(
+            &mut inner.tmp, inner.u, psi, Parity::Odd, active, inner.comm, team,
+            inner.prof, MultiHopTail::Assign,
+        );
+        inner.dist.hopping_multi(
+            mid, inner.u, &inner.tmp, Parity::Even, active, inner.comm, team,
+            inner.prof, MultiHopTail::Gamma5Xpay { a, b: psi },
+        );
+        // out = g5 (mid - kappa² H_eo H_oe mid)
+        inner.dist.hopping_multi(
+            &mut inner.tmp, inner.u, mid, Parity::Odd, active, inner.comm, team,
+            inner.prof, MultiHopTail::Assign,
+        );
+        inner.dist.hopping_multi(
+            out, inner.u, &inner.tmp, Parity::Even, active, inner.comm, team,
+            inner.prof, MultiHopTail::Gamma5Xpay { a, b: mid },
+        );
+        if let Some((with, partials)) = dot {
+            with.cdot_norm2_partials(out, active, partials);
+        }
+    }
+
+    fn flops_per_apply_rhs(&self) -> u64 {
+        2 * self.inner.flops_per_apply_rhs()
+    }
+
+    fn flops_per_apply_shared(&self) -> u64 {
+        2 * self.inner.flops_per_apply_shared()
+    }
+
+    fn reduce_caps(&mut self, partials: &[[f64; 3]]) -> Vec<[f64; 3]> {
+        self.inner.reduce_caps(partials)
+    }
+
+    fn reduce_any(&mut self, v: bool) -> bool {
+        self.inner.reduce_any(v)
     }
 }
 

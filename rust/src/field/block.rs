@@ -40,8 +40,8 @@
 
 use super::blas;
 use super::FermionField;
-use crate::algebra::{Complex, Real};
-use crate::lattice::{EoLayout, Geometry};
+use crate::algebra::{Complex, Real, Spinor};
+use crate::lattice::{EoLayout, Geometry, SiteCoord, IM, NCOL, NSPIN, RE};
 
 /// N right-hand-side spinor fields of one parity, tile-interleaved.
 #[derive(Clone, Debug)]
@@ -196,6 +196,75 @@ impl<R: Real> MultiFermionField<R> {
         out
     }
 
+    /// One site of RHS `r` as an f64 spinor — the block-field analog of
+    /// [`FermionField::site`] (the halo pack reads through this, so the
+    /// value is bitwise the demuxed field's).
+    pub fn site_rhs(&self, s: SiteCoord, r: usize) -> Spinor {
+        debug_assert!(r < self.nrhs);
+        let lc = self.layout.site_to_lane(s);
+        let sub = lc.tile * self.nrhs + r;
+        let mut out = Spinor::ZERO;
+        for spin in 0..NSPIN {
+            for color in 0..NCOL {
+                let ro = self.layout.spinor_vec(sub, spin, color, RE) + lc.lane;
+                let io = self.layout.spinor_vec(sub, spin, color, IM) + lc.lane;
+                out.s[spin][color] =
+                    Complex::new(self.data[ro].to_f64(), self.data[io].to_f64());
+            }
+        }
+        out
+    }
+
+    /// In-place gamma5 on every RHS: negate the lower two spins — the
+    /// same expression as [`FermionField::gamma5`], applied per sub-tile,
+    /// so the result bit-matches the demuxed fields'.
+    pub fn gamma5(&mut self) {
+        let vlen = self.layout.vlen();
+        for sub in 0..self.site_tiles() * self.nrhs {
+            for spin in 2..NSPIN {
+                for color in 0..NCOL {
+                    for reim in 0..2 {
+                        let off = self.layout.spinor_vec(sub, spin, color, reim);
+                        for v in &mut self.data[off..off + vlen] {
+                            *v = -*v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-(site tile, RHS) `[Re⟨self_r, o_r⟩, Im⟨self_r, o_r⟩, |o_r|²]`
+    /// capture partials for active RHS (`partials[tile * nrhs + r]`;
+    /// masked entries untouched) — the post-pass analog of the kernels'
+    /// fused [`crate::dslash::MultiDotCapture`], producing identical
+    /// values on identical data. The distributed operators use this
+    /// because their stores complete only after the EO2 halo merge.
+    pub fn cdot_norm2_partials(
+        &self,
+        o: &MultiFermionField<R>,
+        active: &[bool],
+        partials: &mut [[f64; 3]],
+    ) {
+        debug_assert_eq!(self.data.len(), o.data.len());
+        debug_assert_eq!(partials.len(), self.site_tiles() * self.nrhs);
+        let vlen = self.layout.vlen();
+        let vpt = self.vals_per_tile();
+        for t in 0..self.site_tiles() {
+            for (r, &on) in active.iter().enumerate() {
+                if !on {
+                    continue;
+                }
+                let off = (t * self.nrhs + r) * vpt;
+                partials[t * self.nrhs + r] = blas::cdot_norm2_tile(
+                    &self.data[off..off + vpt],
+                    &o.data[off..off + vpt],
+                    vlen,
+                );
+            }
+        }
+    }
+
     /// Per-RHS fused `self_r += a_r * o_r` with |self_r|² capture, for
     /// active RHS only. `rr[r]` is overwritten for active RHS and left
     /// untouched for masked ones.
@@ -304,6 +373,59 @@ mod tests {
         // masked rhs untouched, rr slot untouched
         assert_eq!(m.extract_rhs(1).data, fields[1].data);
         assert_eq!(rr[1], 0.0);
+    }
+
+    #[test]
+    fn site_rhs_and_gamma5_match_demuxed() {
+        let g = geom();
+        let mut rng = Rng::seeded(35);
+        let fields: Vec<FermionField<f32>> =
+            (0..3).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let mut m = MultiFermionField::from_rhs(&fields);
+        let l = m.layout;
+        for (i, s) in l.sites().enumerate() {
+            if i % 7 != 0 {
+                continue; // spot-check
+            }
+            for (r, f) in fields.iter().enumerate() {
+                let a = m.site_rhs(s, r);
+                let b = f.site(s);
+                for spin in 0..4 {
+                    for c in 0..3 {
+                        assert_eq!(a.s[spin][c], b.s[spin][c], "rhs {r} site {s:?}");
+                    }
+                }
+            }
+        }
+        m.gamma5();
+        for (r, f) in fields.iter().enumerate() {
+            let mut want = f.clone();
+            want.gamma5();
+            assert_eq!(m.extract_rhs(r).data, want.data, "gamma5 rhs {r}");
+        }
+    }
+
+    #[test]
+    fn cdot_norm2_partials_match_fused_capture_semantics() {
+        let g = geom();
+        let mut rng = Rng::seeded(36);
+        let fields: Vec<FermionField<f32>> =
+            (0..2).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let others: Vec<FermionField<f32>> =
+            (0..2).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+        let w = MultiFermionField::from_rhs(&fields);
+        let o = MultiFermionField::from_rhs(&others);
+        let mut parts = vec![[f64::NAN; 3]; w.site_tiles() * 2];
+        w.cdot_norm2_partials(&o, &[true, false], &mut parts);
+        // active rhs: summing the partials in tile order reproduces the
+        // canonical whole-field reductions bitwise
+        let re: f64 = (0..w.site_tiles()).map(|t| parts[t * 2][0]).sum();
+        let n2: f64 = (0..w.site_tiles()).map(|t| parts[t * 2][2]).sum();
+        let dot = fields[0].dot(&others[0]);
+        assert_eq!(re, dot.re);
+        assert_eq!(n2, others[0].norm2());
+        // masked rhs untouched
+        assert!(parts.iter().skip(1).step_by(2).all(|p| p[0].is_nan()));
     }
 
     #[test]

@@ -94,6 +94,25 @@ impl ProcGrid {
         self.0.iter().product()
     }
 
+    /// Parse "1x1x2x2" (PX x PY x PZ x PT, the `--grid` CLI spelling).
+    pub fn parse(s: &str) -> Result<ProcGrid, GeometryError> {
+        let parts: Vec<usize> = s
+            .split('x')
+            .map(|p| p.parse().map_err(|_| GeometryError(format!("bad grid {s:?}"))))
+            .collect::<Result<_, _>>()?;
+        if parts.len() != 4 {
+            return Err(GeometryError(format!(
+                "grid must be PXxPYxPZxPT, got {s:?}"
+            )));
+        }
+        if parts.iter().any(|&p| p == 0) {
+            return Err(GeometryError(format!(
+                "grid extents must be >= 1, got {s:?}"
+            )));
+        }
+        Ok(ProcGrid([parts[0], parts[1], parts[2], parts[3]]))
+    }
+
     /// Rank id of grid coordinates (x fastest).
     pub fn rank_of(&self, c: [usize; 4]) -> usize {
         ((c[3] * self.0[2] + c[2]) * self.0[1] + c[1]) * self.0[0] + c[0]
@@ -224,6 +243,15 @@ mod tests {
         assert!(LatticeDims::new(4, 4, 4, 0).is_err());
         assert_eq!(LatticeDims::parse("16x16x8x8").unwrap().volume(), 16 * 16 * 8 * 8);
         assert!(LatticeDims::parse("16x16x8").is_err());
+    }
+
+    #[test]
+    fn grid_parse() {
+        assert_eq!(ProcGrid::parse("1x1x2x2").unwrap(), ProcGrid([1, 1, 2, 2]));
+        assert_eq!(ProcGrid::parse("1x1x2x2").unwrap().size(), 4);
+        assert!(ProcGrid::parse("1x1x2").is_err());
+        assert!(ProcGrid::parse("0x1x1x1").is_err());
+        assert!(ProcGrid::parse("axbxcxd").is_err());
     }
 
     #[test]

@@ -129,6 +129,56 @@ pub fn auto_solver_threads_for(cores: usize) -> usize {
     (cores / 2).clamp(1, 12)
 }
 
+/// Which bound produced the auto-derived team size (logged by the
+/// launcher so `solver.threads` auto-selection is explainable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AutoThreadBound {
+    /// the bandwidth-saturation heuristic from the whole-machine core count
+    Heuristic,
+    /// clamped by `parallel.threads_per_rank`: a distributed config puts
+    /// several ranks on this node, so the team must not size itself from
+    /// the whole machine
+    RankCap,
+}
+
+impl std::fmt::Display for AutoThreadBound {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AutoThreadBound::Heuristic => {
+                "bandwidth-saturation heuristic from the core count"
+            }
+            AutoThreadBound::RankCap => {
+                "clamped by parallel.threads_per_rank (multiple ranks share this machine)"
+            }
+        })
+    }
+}
+
+/// [`auto_solver_threads`] with an optional per-rank clamp: a
+/// distributed run places `grid.size()` ranks on this one simulated
+/// node, so sizing each rank's team from the whole machine's
+/// `available_parallelism` oversubscribes it `nranks`-fold. Pass
+/// `Some(parallel.threads_per_rank)` for multi-rank configs; returns
+/// the team size and which bound won.
+pub fn auto_solver_threads_capped(threads_per_rank: Option<usize>) -> (usize, AutoThreadBound) {
+    auto_solver_threads_capped_for(
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        threads_per_rank,
+    )
+}
+
+/// Pure core-count form of [`auto_solver_threads_capped`] (testable).
+pub fn auto_solver_threads_capped_for(
+    cores: usize,
+    threads_per_rank: Option<usize>,
+) -> (usize, AutoThreadBound) {
+    let auto = auto_solver_threads_for(cores);
+    match threads_per_rank {
+        Some(cap) if cap.max(1) < auto => (cap.max(1), AutoThreadBound::RankCap),
+        _ => (auto, AutoThreadBound::Heuristic),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +204,35 @@ mod tests {
         assert_eq!(auto_solver_threads_for(128), 12);
         let t = auto_solver_threads();
         assert!(t >= 1 && t <= 12);
+    }
+
+    #[test]
+    fn auto_threads_rank_cap() {
+        // single-rank: heuristic wins, no clamp applied
+        assert_eq!(
+            auto_solver_threads_capped_for(48, None),
+            (12, AutoThreadBound::Heuristic)
+        );
+        // 4 ranks on a 48-core node, 4 threads each: the rank cap wins
+        assert_eq!(
+            auto_solver_threads_capped_for(48, Some(4)),
+            (4, AutoThreadBound::RankCap)
+        );
+        // a generous per-rank budget does not inflate the heuristic
+        assert_eq!(
+            auto_solver_threads_capped_for(8, Some(12)),
+            (4, AutoThreadBound::Heuristic)
+        );
+        // tie goes to the heuristic (nothing was clamped)
+        assert_eq!(
+            auto_solver_threads_capped_for(24, Some(12)),
+            (12, AutoThreadBound::Heuristic)
+        );
+        // a zero cap still yields a runnable team
+        assert_eq!(
+            auto_solver_threads_capped_for(48, Some(0)),
+            (1, AutoThreadBound::RankCap)
+        );
     }
 
     #[test]

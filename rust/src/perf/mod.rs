@@ -5,5 +5,6 @@ pub mod machine;
 pub mod roofline;
 
 pub use machine::{
-    auto_solver_threads, auto_solver_threads_for, calibrate_host, A64fx, HostCalibration,
+    auto_solver_threads, auto_solver_threads_capped, auto_solver_threads_capped_for,
+    auto_solver_threads_for, calibrate_host, A64fx, AutoThreadBound, HostCalibration,
 };

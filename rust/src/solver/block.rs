@@ -41,9 +41,21 @@
 //! Flop accounting scales with the number of *active* RHS at each
 //! sweep; the bytes/site amortization of the shared gauge stream is
 //! modeled and reported by the solver benchmark.
+//!
+//! [`block_cg_generic`]/[`block_bicgstab_generic`] drive the same
+//! per-RHS recurrences over **any** [`MultiOperator`] — in particular
+//! the distributed [`crate::coordinator::operator::DistMultiMeo`] /
+//! [`crate::coordinator::operator::DistMultiMdagM`], whose batched halo
+//! exchange cannot run inside one team region (FUNNELED comm). All
+//! reductions go through the operator's `reduce_caps` hook, so the
+//! distributed operators fold every rank's per-tile partials in global
+//! site-tile order and the solver scalars are bitwise independent of
+//! the rank decomposition.
 
 use crate::algebra::{Complex, Real};
-use crate::coordinator::operator::MultiFusedSolvable;
+use crate::coordinator::operator::{
+    reduce_caps_tile_order, MultiFusedSolvable, MultiOperator,
+};
 use crate::coordinator::team::{chunk_range, SendPtr};
 use crate::coordinator::Team;
 use crate::dslash::flops as fl;
@@ -288,18 +300,21 @@ pub fn block_cg<R: Real, A: MultiFusedSolvable<R>>(
 
 // ---- BiCGStab stage scalars --------------------------------------------
 //
-// Each stage turns the shared tile partials into per-RHS scalars and the
-// next sweep's mask. They are pure functions: every thread of the region
-// calls them on identical inputs (and the master calls them again after
-// the region for stats/flops bookkeeping), so all parties agree exactly.
+// Each stage turns the per-RHS *reduced* captures (`red[r]` = the
+// canonical site-tile-order fold of the per-(tile, RHS) partials, see
+// [`reduce_caps_tile_order`] / [`MultiOperator::reduce_caps`]) into
+// per-RHS scalars and the next sweep's mask. They are pure functions:
+// every thread of the fused region calls them on identical inputs (and
+// the master calls them again after the region for stats/flops
+// bookkeeping), and the generic/distributed solvers call them on
+// globally reduced captures — all parties agree exactly.
 
 /// Stage 1 (after `v = A p` with ⟨rhat, v⟩ capture): per-RHS alpha, and
 /// the `rhat·v ≈ 0` breakdown mask. Returns `(mask_b, alpha)`.
 fn stage_alpha(
     active: &[bool],
     rho: &[Complex],
-    vp: &[[f64; 3]],
-    ntiles: usize,
+    vred: &[[f64; 3]],
     nrhs: usize,
 ) -> (Vec<bool>, Vec<Complex>) {
     let mut mask_b = active.to_vec();
@@ -308,10 +323,7 @@ fn stage_alpha(
         if !active[i] {
             continue;
         }
-        let rhat_v = Complex::new(
-            sum_cap(vp, ntiles, nrhs, i, 0),
-            sum_cap(vp, ntiles, nrhs, i, 1),
-        );
+        let rhat_v = Complex::new(vred[i][0], vred[i][1]);
         if rhat_v.abs() < 1e-300 {
             // breakdown: deactivate unconverged (single solver: break)
             mask_b[i] = false;
@@ -326,9 +338,8 @@ fn stage_alpha(
 /// converged at the half step. Returns `(mask_half, mask_c, snorm)`.
 fn stage_half(
     mask_b: &[bool],
-    sp: &[[f64; 3]],
+    sred: &[[f64; 3]],
     limit: &[f64],
-    ntiles: usize,
     nrhs: usize,
 ) -> (Vec<bool>, Vec<bool>, Vec<f64>) {
     let mut mask_half = vec![false; nrhs];
@@ -338,7 +349,7 @@ fn stage_half(
         if !mask_b[i] {
             continue;
         }
-        snorm[i] = sum_cap(sp, ntiles, nrhs, i, 2);
+        snorm[i] = sred[i][2];
         if snorm[i] <= limit[i] {
             mask_half[i] = true;
             mask_c[i] = false;
@@ -351,8 +362,7 @@ fn stage_half(
 /// and the `|t|² = 0` breakdown mask. Returns `(mask_d, omega)`.
 fn stage_omega(
     mask_c: &[bool],
-    tp: &[[f64; 3]],
-    ntiles: usize,
+    tred: &[[f64; 3]],
     nrhs: usize,
 ) -> (Vec<bool>, Vec<Complex>) {
     let mut mask_d = mask_c.to_vec();
@@ -361,11 +371,9 @@ fn stage_omega(
         if !mask_c[i] {
             continue;
         }
-        let re = sum_cap(tp, ntiles, nrhs, i, 0);
-        let im = sum_cap(tp, ntiles, nrhs, i, 1);
-        let n2 = sum_cap(tp, ntiles, nrhs, i, 2);
         // the capture conjugates s; ts = <t, s> flips the imaginary part
-        let ts = Complex::new(re, -im);
+        let ts = Complex::new(tred[i][0], -tred[i][1]);
+        let n2 = tred[i][2];
         if n2 == 0.0 {
             mask_d[i] = false;
             continue; // breakdown
@@ -381,12 +389,11 @@ fn stage_omega(
 #[allow(clippy::too_many_arguments)]
 fn stage_final(
     mask_d: &[bool],
-    rp: &[[f64; 3]],
+    rred: &[[f64; 3]],
     rho: &[Complex],
     omega: &[Complex],
     alpha: &[Complex],
     limit: &[f64],
-    ntiles: usize,
     nrhs: usize,
 ) -> (Vec<bool>, Vec<Complex>, Vec<f64>, Vec<Complex>) {
     let mut mask_e = mask_d.to_vec();
@@ -397,11 +404,8 @@ fn stage_final(
         if !mask_d[i] {
             continue;
         }
-        rr_new[i] = sum_cap(rp, ntiles, nrhs, i, 2);
-        rho_new[i] = Complex::new(
-            sum_cap(rp, ntiles, nrhs, i, 0),
-            sum_cap(rp, ntiles, nrhs, i, 1),
-        );
+        rr_new[i] = rred[i][2];
+        rho_new[i] = Complex::new(rred[i][0], rred[i][1]);
         if rho[i].abs() < 1e-300 || omega[i].abs() < 1e-300 {
             // post-update breakdown, like the single solver's exit
             mask_e[i] = false;
@@ -518,12 +522,13 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
                 Some((rhat_raw.0 as *const R, vp_ptr)),
             );
             bar.wait();
-            let vp = ro::<[f64; 3]>(vp_ptr, ntiles * nrhs);
-            // the stage helpers allocate nrhs-sized vectors per thread
-            // per iteration — accepted, as above: O(nrhs) words against
-            // O(volume) sweep work, redundant by design so every thread
-            // (and the master replay) agrees without communication
-            let (mask_b, alpha) = stage_alpha(&mask, &rho_iter, vp, ntiles, nrhs);
+            // the reduce/stage helpers allocate nrhs-sized vectors per
+            // thread per iteration — accepted, as above: O(nrhs) words
+            // against O(volume) sweep work, redundant by design so every
+            // thread (and the master replay) agrees without communication
+            let vred =
+                reduce_caps_tile_order(ro::<[f64; 3]>(vp_ptr, ntiles * nrhs), nrhs);
+            let (mask_b, alpha) = stage_alpha(&mask, &rho_iter, &vred, nrhs);
             if !mask_b.iter().any(|&a| a) {
                 return; // every live RHS broke down (uniform decision)
             }
@@ -549,8 +554,9 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
                 }
             }
             bar.wait();
-            let sp = ro::<[f64; 3]>(sp_ptr, ntiles * nrhs);
-            let (mask_half, mask_c, _snorm) = stage_half(&mask_b, sp, &limit, ntiles, nrhs);
+            let sred =
+                reduce_caps_tile_order(ro::<[f64; 3]>(sp_ptr, ntiles * nrhs), nrhs);
+            let (mask_half, mask_c, _snorm) = stage_half(&mask_b, &sred, &limit, nrhs);
             if mask_half.iter().any(|&h| h) {
                 // converged at the half step: x += alpha p (own shard)
                 for tl in tb..te {
@@ -583,8 +589,9 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
                 Some((r_ptr.0 as *const R, tp_ptr)),
             );
             bar.wait();
-            let tp = ro::<[f64; 3]>(tp_ptr, ntiles * nrhs);
-            let (mask_d, omega) = stage_omega(&mask_c, tp, ntiles, nrhs);
+            let tred =
+                reduce_caps_tile_order(ro::<[f64; 3]>(tp_ptr, ntiles * nrhs), nrhs);
+            let (mask_d, omega) = stage_omega(&mask_c, &tred, nrhs);
             if !mask_d.iter().any(|&a| a) {
                 return; // breakdown (|t|² = 0) on every remaining RHS
             }
@@ -623,9 +630,10 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
                 }
             }
             bar.wait();
-            let rp = ro::<[f64; 3]>(rp_ptr, ntiles * nrhs);
+            let rred =
+                reduce_caps_tile_order(ro::<[f64; 3]>(rp_ptr, ntiles * nrhs), nrhs);
             let (mask_e, beta, _rr_new, _rho_new) =
-                stage_final(&mask_d, rp, &rho_iter, &omega, &alpha, &limit, ntiles, nrhs);
+                stage_final(&mask_d, &rred, &rho_iter, &omega, &alpha, &limit, nrhs);
             if !mask_e.iter().any(|&a| a) {
                 return;
             }
@@ -654,7 +662,12 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
         // master bookkeeping: replay the stage cascade on the (final)
         // shared partials — the same pure functions the threads ran, so
         // masks and scalars agree exactly
-        let (mask_b, alpha) = stage_alpha(&mask, &rho_iter, &v_partials, ntiles, nrhs);
+        let (mask_b, alpha) = stage_alpha(
+            &mask,
+            &rho_iter,
+            &reduce_caps_tile_order(&v_partials, nrhs),
+            nrhs,
+        );
         flops += count(&mask) * (flops_apply + fl::cdot_flops(nreal)) + flops_shared;
         for i in 0..nrhs {
             if mask[i] && !mask_b[i] {
@@ -665,7 +678,12 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
             iterations += 1;
             continue;
         }
-        let (mask_half, mask_c, snorm) = stage_half(&mask_b, &s_partials, &limit, ntiles, nrhs);
+        let (mask_half, mask_c, snorm) = stage_half(
+            &mask_b,
+            &reduce_caps_tile_order(&s_partials, nrhs),
+            &limit,
+            nrhs,
+        );
         flops += count(&mask_b) * (fl::caxpy_flops(nreal) + fl::norm2_flops(nreal));
         if mask_half.iter().any(|&h| h) {
             flops += count(&mask_half) * fl::caxpy_flops(nreal);
@@ -683,7 +701,8 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
             iterations += 1;
             continue;
         }
-        let (mask_d, omega) = stage_omega(&mask_c, &t_partials, ntiles, nrhs);
+        let (mask_d, omega) =
+            stage_omega(&mask_c, &reduce_caps_tile_order(&t_partials, nrhs), nrhs);
         flops += count(&mask_c)
             * (flops_apply + fl::cdot_flops(nreal) + fl::norm2_flops(nreal))
             + flops_shared;
@@ -694,7 +713,13 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
         }
         if mask_d.iter().any(|&a| a) {
             let (mask_e, _beta, rr_new, rho_new) = stage_final(
-                &mask_d, &r_partials, &rho_iter, &omega, &alpha, &limit, ntiles, nrhs,
+                &mask_d,
+                &reduce_caps_tile_order(&r_partials, nrhs),
+                &rho_iter,
+                &omega,
+                &alpha,
+                &limit,
+                nrhs,
             );
             flops += count(&mask_d)
                 * (3 * fl::caxpy_flops(nreal) + fl::cdot_flops(nreal) + fl::norm2_flops(nreal));
@@ -732,6 +757,530 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
     // a pass that ended entirely in breakdowns counted no per-RHS
     // iteration (mirroring the single solver's uncounted early exits),
     // so report the max over per-RHS counts, not the loop counter
+    let done = stats.iter().map(|s| s.iterations).max().unwrap_or(0);
+    BlockSolveStats::finish(nrhs, done, stats, flops, BICGSTAB_FUSED_SWEEPS, team.nthreads())
+}
+
+// ---- generic block solvers (any MultiOperator, incl. distributed) ------
+//
+// [`block_cg`]/[`block_bicgstab`] above require [`MultiFusedSolvable`]:
+// a native operator whose kernel phases can run inside ONE team region.
+// A distributed operator cannot expose that (its halo exchange is
+// FUNNELED through the master thread), so the `_generic` variants below
+// drive any [`MultiOperator`] — `apply_multi` runs the operator's own
+// pipeline (team regions + wire), the BLAS-1 sweeps run tile-sharded on
+// the team here, and every reduction goes through the operator's
+// `reduce_caps`/`reduce_any` hooks so the distributed impls can fold
+// each rank's per-tile partials in GLOBAL site-tile order.
+//
+// Arithmetic contract: the per-RHS scalar cascade (alpha/beta/omega,
+// masks, histories) and the per-sub-tile BLAS kernels are exactly the
+// fused solvers' — on a single-rank operator without communicated
+// directions the `_generic` histories are **bitwise identical** to
+// [`block_cg`]/[`block_bicgstab`]. Across a real decomposition the
+// reductions stay bitwise rank-count-independent (global-tile-order
+// fold); the operator's face sites are the one place a multi-rank run
+// rounds differently (bulk-partial + EO2 merge vs the single-rank
+// kernel's one accumulation chain), so multi-rank histories track the
+// single-rank ones to f64 tightness rather than bit equality — see
+// ARCHITECTURE.md and `rust/tests/distributed.rs`.
+
+/// Batched CG over any [`MultiOperator`] (CGNR on a normal operator):
+/// the distributed analog of [`block_cg`], with per-RHS convergence
+/// masks propagated into the operator (and thence the halo payload).
+pub fn block_cg_generic<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+) -> BlockSolveStats {
+    let nrhs = op.nrhs();
+    assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
+    assert_eq!(x.nrhs, nrhs, "solution count mismatch");
+    let ntiles = b.site_tiles();
+    let nreal = b.rhs_len() as u64;
+    let vpt = b.vals_per_tile();
+    let vlen = b.layout.vlen();
+    let n = team.nthreads();
+    let flops_apply = op.flops_per_apply_rhs();
+    let flops_shared = op.flops_per_apply_shared();
+
+    let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
+    // |b_r|² through the operator's reduction: canonical site-tile
+    // grouping locally, global-tile-order fold when distributed
+    for t in 0..ntiles {
+        for r in 0..nrhs {
+            let off = (t * nrhs + r) * vpt;
+            caps[t * nrhs + r] = [0.0, 0.0, blas::norm2_tile(&b.data[off..off + vpt], vlen)];
+        }
+    }
+    let bnorm2: Vec<f64> = op.reduce_caps(&caps).iter().map(|c| c[2]).collect();
+
+    let mut flops = nrhs as u64 * fl::norm2_flops(nreal);
+    let mut active = vec![true; nrhs];
+    let mut stats: Vec<RhsStats> = (0..nrhs)
+        .map(|_| RhsStats { iterations: 0, converged: false, rel_residual: 0.0, history: vec![] })
+        .collect();
+    for r in 0..nrhs {
+        if bnorm2[r] == 0.0 {
+            x.fill_rhs(r, R::ZERO);
+            active[r] = false;
+            stats[r].converged = true;
+        }
+    }
+    let limit: Vec<f64> = bnorm2.iter().map(|&bn| tol * tol * bn).collect();
+
+    let mut r = b.clone();
+    let mut ap = b.zeros_like();
+    let mut rr = bnorm2.clone();
+    // globally consistent warm-start decision (a rank whose local shard
+    // happens to be zero must still join the collective apply)
+    if op.reduce_any(!x.is_zero()) {
+        op.apply_multi(team, &mut ap, x, &active, None);
+        // r = b - A x with per-(tile, RHS) |r|² capture (serial entry
+        // phase, like the fused solver's axpy_norm2_masked)
+        for t in 0..ntiles {
+            for i in 0..nrhs {
+                if !active[i] {
+                    continue;
+                }
+                let off = (t * nrhs + i) * vpt;
+                let rt = &mut r.data[off..off + vpt];
+                blas::axpy_slice(rt, -R::ONE, &ap.data[off..off + vpt]);
+                caps[t * nrhs + i] = [0.0, 0.0, blas::norm2_tile(rt, vlen)];
+            }
+        }
+        let red = op.reduce_caps(&caps);
+        let nact = active.iter().filter(|&&a| a).count() as u64;
+        for i in 0..nrhs {
+            if active[i] {
+                rr[i] = red[i][2];
+            }
+        }
+        flops += nact * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+        if nact > 0 {
+            flops += flops_shared;
+        }
+    }
+    for i in 0..nrhs {
+        if active[i] && rr[i] <= limit[i] {
+            active[i] = false;
+            stats[i].converged = true;
+        }
+    }
+    let mut p = r.clone();
+    let mut iterations = 0;
+
+    while iterations < maxiter && active.iter().any(|&a| a) {
+        let nact = active.iter().filter(|&&a| a).count() as u64;
+        let rr_iter = rr.clone();
+        let mask = active.clone();
+        // sweep 1: ap = A p with per-(tile, RHS) p·Ap capture
+        op.apply_multi(team, &mut ap, &p, &mask, Some((&p, &mut caps)));
+        let red = op.reduce_caps(&caps);
+        let mut alphas = vec![R::ZERO; nrhs];
+        for i in 0..nrhs {
+            if mask[i] {
+                alphas[i] = R::from_f64(rr_iter[i] / red[i][0]);
+            }
+        }
+        // sweep 2: x += alpha p ; r -= alpha ap ; per-(tile, RHS) |r|²
+        {
+            let x_ptr = SendPtr(x.data.as_mut_ptr());
+            let r_ptr = SendPtr(r.data.as_mut_ptr());
+            let p_raw = SendPtr(p.data.as_ptr() as *mut R);
+            let ap_raw = SendPtr(ap.data.as_ptr() as *mut R);
+            let caps_ptr = SendPtr(caps.as_mut_ptr());
+            let mask = &mask;
+            let alphas = &alphas;
+            team.parallel(|tid| unsafe {
+                let (tb, te) = chunk_range(ntiles, tid, n);
+                for t in tb..te {
+                    for i in 0..nrhs {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let off = (t * nrhs + i) * vpt;
+                        blas::axpy_slice(
+                            x_ptr.slice_mut(off, vpt),
+                            alphas[i],
+                            ro_at::<R>(p_raw, off, vpt),
+                        );
+                        let rt = r_ptr.slice_mut(off, vpt);
+                        blas::axpy_slice(rt, -alphas[i], ro_at::<R>(ap_raw, off, vpt));
+                        caps_ptr.slice_mut(t * nrhs + i, 1)[0] =
+                            [0.0, 0.0, blas::norm2_tile(rt, vlen)];
+                    }
+                }
+            });
+        }
+        let red = op.reduce_caps(&caps);
+        let mut betas = vec![R::ZERO; nrhs];
+        for i in 0..nrhs {
+            if mask[i] {
+                betas[i] = R::from_f64(red[i][2] / rr_iter[i]);
+            }
+        }
+        // sweep 3: p = beta p + r
+        {
+            let p_ptr = SendPtr(p.data.as_mut_ptr());
+            let r_raw = SendPtr(r.data.as_ptr() as *mut R);
+            let mask = &mask;
+            let betas = &betas;
+            team.parallel(|tid| unsafe {
+                let (tb, te) = chunk_range(ntiles, tid, n);
+                for t in tb..te {
+                    for i in 0..nrhs {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let off = (t * nrhs + i) * vpt;
+                        blas::xpay_slice(
+                            p_ptr.slice_mut(off, vpt),
+                            betas[i],
+                            ro_at::<R>(r_raw, off, vpt),
+                        );
+                    }
+                }
+            });
+        }
+        flops += flops_shared
+            + nact
+                * (flops_apply
+                    + fl::dot_re_flops(nreal)
+                    + 2 * fl::axpy_flops(nreal)
+                    + fl::norm2_flops(nreal)
+                    + fl::xpay_flops(nreal));
+        iterations += 1;
+        for i in 0..nrhs {
+            if !active[i] {
+                continue;
+            }
+            rr[i] = red[i][2];
+            stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
+            stats[i].iterations = iterations;
+            if rr[i] <= limit[i] {
+                active[i] = false;
+                stats[i].converged = true;
+            }
+        }
+    }
+
+    for i in 0..nrhs {
+        if bnorm2[i] > 0.0 {
+            stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
+        }
+    }
+    BlockSolveStats::finish(nrhs, iterations, stats, flops, CG_FUSED_SWEEPS, team.nthreads())
+}
+
+/// Batched BiCGStab over any [`MultiOperator`]: the distributed analog
+/// of [`block_bicgstab`] (same per-RHS stage cascade, breakdown
+/// handling, masks and histories; reductions through the operator).
+pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+) -> BlockSolveStats {
+    let nrhs = op.nrhs();
+    assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
+    assert_eq!(x.nrhs, nrhs, "solution count mismatch");
+    let ntiles = b.site_tiles();
+    let nreal = b.rhs_len() as u64;
+    let vpt = b.vals_per_tile();
+    let vlen = b.layout.vlen();
+    let n = team.nthreads();
+    let flops_apply = op.flops_per_apply_rhs();
+    let flops_shared = op.flops_per_apply_shared();
+    let count = |m: &[bool]| m.iter().filter(|&&a| a).count() as u64;
+
+    let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
+    for t in 0..ntiles {
+        for r in 0..nrhs {
+            let off = (t * nrhs + r) * vpt;
+            caps[t * nrhs + r] = [0.0, 0.0, blas::norm2_tile(&b.data[off..off + vpt], vlen)];
+        }
+    }
+    let bnorm2: Vec<f64> = op.reduce_caps(&caps).iter().map(|c| c[2]).collect();
+
+    let mut flops = nrhs as u64 * fl::norm2_flops(nreal);
+    let mut active = vec![true; nrhs];
+    let mut stats: Vec<RhsStats> = (0..nrhs)
+        .map(|_| RhsStats { iterations: 0, converged: false, rel_residual: 0.0, history: vec![] })
+        .collect();
+    for r in 0..nrhs {
+        if bnorm2[r] == 0.0 {
+            x.fill_rhs(r, R::ZERO);
+            active[r] = false;
+            stats[r].converged = true;
+        }
+    }
+    let limit: Vec<f64> = bnorm2.iter().map(|&bn| tol * tol * bn).collect();
+
+    let mut r = b.clone();
+    let mut t = b.zeros_like();
+    let mut rr = bnorm2.clone();
+    if op.reduce_any(!x.is_zero()) {
+        op.apply_multi(team, &mut t, x, &active, None);
+        for tl in 0..ntiles {
+            for i in 0..nrhs {
+                if !active[i] {
+                    continue;
+                }
+                let off = (tl * nrhs + i) * vpt;
+                let rt = &mut r.data[off..off + vpt];
+                blas::axpy_slice(rt, -R::ONE, &t.data[off..off + vpt]);
+                caps[tl * nrhs + i] = [0.0, 0.0, blas::norm2_tile(rt, vlen)];
+            }
+        }
+        let red = op.reduce_caps(&caps);
+        for i in 0..nrhs {
+            if active[i] {
+                rr[i] = red[i][2];
+            }
+        }
+        flops += count(&active)
+            * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+        if active.iter().any(|&a| a) {
+            flops += flops_shared;
+        }
+    }
+    for i in 0..nrhs {
+        if active[i] && rr[i] <= limit[i] {
+            active[i] = false;
+            stats[i].converged = true;
+        }
+    }
+    let rhat = r.clone();
+    let mut p = r.clone();
+    let mut v = b.zeros_like();
+    // rho = <rhat, r> through the operator's reduction (bitwise the
+    // local dot_per_rhs on a single rank)
+    rhat.cdot_norm2_partials(&r, &active, &mut caps);
+    let red = op.reduce_caps(&caps);
+    let mut rho: Vec<Complex> = red.iter().map(|c| Complex::new(c[0], c[1])).collect();
+    flops += count(&active) * fl::cdot_flops(nreal);
+    let mut iterations = 0;
+
+    while iterations < maxiter && active.iter().any(|&a| a) {
+        let rho_iter = rho.clone();
+        let mask = active.clone();
+        // sweep 1: v = A p with per-RHS <rhat, v> capture
+        op.apply_multi(team, &mut v, &p, &mask, Some((&rhat, &mut caps)));
+        let vred = op.reduce_caps(&caps);
+        let (mask_b, alpha) = stage_alpha(&mask, &rho_iter, &vred, nrhs);
+        flops += count(&mask) * (flops_apply + fl::cdot_flops(nreal)) + flops_shared;
+        for i in 0..nrhs {
+            if mask[i] && !mask_b[i] {
+                active[i] = false; // rhat·v breakdown
+            }
+        }
+        if !mask_b.iter().any(|&a| a) {
+            iterations += 1;
+            continue;
+        }
+        // sweep 2: s = r - alpha v (in place in r) with |s|² capture
+        {
+            let r_ptr = SendPtr(r.data.as_mut_ptr());
+            let v_raw = SendPtr(v.data.as_ptr() as *mut R);
+            let caps_ptr = SendPtr(caps.as_mut_ptr());
+            let mask_b = &mask_b;
+            let alpha = &alpha;
+            team.parallel(|tid| unsafe {
+                let (tb, te) = chunk_range(ntiles, tid, n);
+                for tl in tb..te {
+                    for i in 0..nrhs {
+                        if !mask_b[i] {
+                            continue;
+                        }
+                        let off = (tl * nrhs + i) * vpt;
+                        let ma = -alpha[i];
+                        let rt = r_ptr.slice_mut(off, vpt);
+                        blas::caxpy_slice(
+                            rt,
+                            R::from_f64(ma.re),
+                            R::from_f64(ma.im),
+                            ro_at::<R>(v_raw, off, vpt),
+                            vlen,
+                        );
+                        caps_ptr.slice_mut(tl * nrhs + i, 1)[0] =
+                            [0.0, 0.0, blas::norm2_tile(rt, vlen)];
+                    }
+                }
+            });
+        }
+        let sred = op.reduce_caps(&caps);
+        let (mask_half, mask_c, snorm) = stage_half(&mask_b, &sred, &limit, nrhs);
+        flops += count(&mask_b) * (fl::caxpy_flops(nreal) + fl::norm2_flops(nreal));
+        if mask_half.iter().any(|&h| h) {
+            // converged at the half step: x += alpha p
+            let x_ptr = SendPtr(x.data.as_mut_ptr());
+            let p_raw = SendPtr(p.data.as_ptr() as *mut R);
+            let mh = &mask_half;
+            let alpha_ref = &alpha;
+            team.parallel(|tid| unsafe {
+                let (tb, te) = chunk_range(ntiles, tid, n);
+                for tl in tb..te {
+                    for i in 0..nrhs {
+                        if !mh[i] {
+                            continue;
+                        }
+                        let off = (tl * nrhs + i) * vpt;
+                        blas::caxpy_slice(
+                            x_ptr.slice_mut(off, vpt),
+                            R::from_f64(alpha_ref[i].re),
+                            R::from_f64(alpha_ref[i].im),
+                            ro_at::<R>(p_raw, off, vpt),
+                            vlen,
+                        );
+                    }
+                }
+            });
+            flops += count(&mask_half) * fl::caxpy_flops(nreal);
+            for i in 0..nrhs {
+                if mask_half[i] {
+                    rr[i] = snorm[i];
+                    stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
+                    stats[i].iterations = iterations + 1;
+                    stats[i].converged = true;
+                    active[i] = false;
+                }
+            }
+        }
+        if !mask_c.iter().any(|&a| a) {
+            iterations += 1;
+            continue;
+        }
+        // sweep 3: t = A s (s lives in r) with <s, t> / |t|² capture
+        op.apply_multi(team, &mut t, &r, &mask_c, Some((&r, &mut caps)));
+        let tred = op.reduce_caps(&caps);
+        let (mask_d, omega) = stage_omega(&mask_c, &tred, nrhs);
+        flops += count(&mask_c)
+            * (flops_apply + fl::cdot_flops(nreal) + fl::norm2_flops(nreal))
+            + flops_shared;
+        for i in 0..nrhs {
+            if mask_c[i] && !mask_d[i] {
+                active[i] = false; // |t|² = 0 breakdown
+            }
+        }
+        if mask_d.iter().any(|&a| a) {
+            // sweep 4: x += alpha p + omega s, and
+            // sweep 5: r = s - omega t with <rhat, r> / |r|² capture
+            {
+                let x_ptr = SendPtr(x.data.as_mut_ptr());
+                let r_ptr = SendPtr(r.data.as_mut_ptr());
+                let p_raw = SendPtr(p.data.as_ptr() as *mut R);
+                let t_raw = SendPtr(t.data.as_ptr() as *mut R);
+                let rhat_raw = SendPtr(rhat.data.as_ptr() as *mut R);
+                let caps_ptr = SendPtr(caps.as_mut_ptr());
+                let md = &mask_d;
+                let alpha_ref = &alpha;
+                let omega_ref = &omega;
+                team.parallel(|tid| unsafe {
+                    let (tb, te) = chunk_range(ntiles, tid, n);
+                    for tl in tb..te {
+                        for i in 0..nrhs {
+                            if !md[i] {
+                                continue;
+                            }
+                            let off = (tl * nrhs + i) * vpt;
+                            blas::caxpy2_slice(
+                                x_ptr.slice_mut(off, vpt),
+                                R::from_f64(alpha_ref[i].re),
+                                R::from_f64(alpha_ref[i].im),
+                                ro_at::<R>(p_raw, off, vpt),
+                                R::from_f64(omega_ref[i].re),
+                                R::from_f64(omega_ref[i].im),
+                                ro_at::<R>(r_ptr, off, vpt),
+                                vlen,
+                            );
+                            let mo = -omega_ref[i];
+                            let rt = r_ptr.slice_mut(off, vpt);
+                            blas::caxpy_slice(
+                                rt,
+                                R::from_f64(mo.re),
+                                R::from_f64(mo.im),
+                                ro_at::<R>(t_raw, off, vpt),
+                                vlen,
+                            );
+                            caps_ptr.slice_mut(tl * nrhs + i, 1)[0] = blas::cdot_norm2_tile(
+                                ro_at::<R>(rhat_raw, off, vpt),
+                                rt,
+                                vlen,
+                            );
+                        }
+                    }
+                });
+            }
+            let rred = op.reduce_caps(&caps);
+            let (mask_e, beta, rr_new, rho_new) =
+                stage_final(&mask_d, &rred, &rho_iter, &omega, &alpha, &limit, nrhs);
+            flops += count(&mask_d)
+                * (3 * fl::caxpy_flops(nreal) + fl::cdot_flops(nreal) + fl::norm2_flops(nreal));
+            for i in 0..nrhs {
+                if !mask_d[i] {
+                    continue;
+                }
+                rr[i] = rr_new[i];
+                stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
+                stats[i].iterations = iterations + 1;
+                if rho_iter[i].abs() < 1e-300 || omega[i].abs() < 1e-300 {
+                    stats[i].converged = rr[i] <= limit[i];
+                    active[i] = false;
+                } else if rr[i] <= limit[i] {
+                    stats[i].converged = true;
+                    active[i] = false;
+                } else {
+                    rho[i] = rho_new[i];
+                }
+            }
+            if mask_e.iter().any(|&a| a) {
+                // sweep 6: p = beta (p - omega v) + r
+                let p_ptr = SendPtr(p.data.as_mut_ptr());
+                let v_raw = SendPtr(v.data.as_ptr() as *mut R);
+                let r_raw = SendPtr(r.data.as_ptr() as *mut R);
+                let me = &mask_e;
+                let beta_ref = &beta;
+                let omega_ref = &omega;
+                team.parallel(|tid| unsafe {
+                    let (tb, te) = chunk_range(ntiles, tid, n);
+                    for tl in tb..te {
+                        for i in 0..nrhs {
+                            if !me[i] {
+                                continue;
+                            }
+                            let off = (tl * nrhs + i) * vpt;
+                            let mo = -omega_ref[i];
+                            blas::p_update_slice(
+                                p_ptr.slice_mut(off, vpt),
+                                R::from_f64(mo.re),
+                                R::from_f64(mo.im),
+                                ro_at::<R>(v_raw, off, vpt),
+                                R::from_f64(beta_ref[i].re),
+                                R::from_f64(beta_ref[i].im),
+                                ro_at::<R>(r_raw, off, vpt),
+                                vlen,
+                            );
+                        }
+                    }
+                });
+                flops += count(&mask_e)
+                    * (fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal));
+            }
+        }
+        iterations += 1;
+    }
+
+    for i in 0..nrhs {
+        if bnorm2[i] > 0.0 {
+            stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
+        }
+    }
     let done = stats.iter().map(|s| s.iterations).max().unwrap_or(0);
     BlockSolveStats::finish(nrhs, done, stats, flops, BICGSTAB_FUSED_SWEEPS, team.nthreads())
 }

@@ -35,7 +35,10 @@ pub mod mixed;
 pub mod residual;
 
 pub use bicgstab::bicgstab;
-pub use block::{block_bicgstab, block_cg, BlockSolveStats, RhsStats};
+pub use block::{
+    block_bicgstab, block_bicgstab_generic, block_cg, block_cg_generic,
+    BlockSolveStats, RhsStats,
+};
 pub use cg::cg;
 pub use mixed::{mixed_refinement, mixed_refinement_team, InnerAlgorithm, MixedStats};
 

@@ -1,0 +1,167 @@
+//! CLI/config validation matrix: every flag combination `lqcd solve`
+//! rejects must be rejected by `RunConfig::validate_solve` (the single
+//! early validation block the launcher calls), exercised through the
+//! same `config::run` parsing the `--config` path uses — including the
+//! new `parallel (grid) × nrhs` combinations.
+
+use lqcd::config::RunConfig;
+use lqcd::dslash::Compression;
+use lqcd::lattice::ProcGrid;
+
+/// A default config with targeted overrides, as the CLI layer builds it.
+fn cfg(f: impl FnOnce(&mut RunConfig)) -> RunConfig {
+    let mut c = RunConfig::default();
+    f(&mut c);
+    c
+}
+
+#[test]
+fn default_config_is_valid_for_solve() {
+    assert!(cfg(|_| {}).validate_solve(false).is_ok());
+    assert!(cfg(|_| {}).validate_solve(true).is_ok(), "pjrt f32 single-RHS is fine");
+}
+
+#[test]
+fn pjrt_reports_every_offending_flag_at_once() {
+    // the historical behavior reported only whichever branch ran first;
+    // the hoisted block must name ALL offenses in one error
+    let c = cfg(|c| {
+        c.solver.precision = "f64".into();
+        c.solver.nrhs = 2;
+        c.gauge.compression = Compression::TwoRow;
+        c.lattice.grid = ProcGrid([1, 1, 1, 2]);
+    });
+    let err = c.validate_solve(true).unwrap_err();
+    assert!(err.contains("--precision f64"), "missing precision offense: {err}");
+    assert!(err.contains("--nrhs"), "missing nrhs offense: {err}");
+    assert!(err.contains("--gauge-compression"), "missing compression offense: {err}");
+    assert!(err.contains("multi-rank"), "missing grid offense: {err}");
+    // four distinct lines, one per offense
+    assert_eq!(err.lines().count(), 4, "{err}");
+}
+
+#[test]
+fn pjrt_mixed_precision_rejected() {
+    let c = cfg(|c| c.solver.precision = "mixed".into());
+    let err = c.validate_solve(true).unwrap_err();
+    assert!(err.contains("--pjrt only supports f32"), "{err}");
+    // but mixed without pjrt is a supported single-rank path
+    assert!(c.validate_solve(false).is_ok());
+}
+
+#[test]
+fn nrhs_with_mixed_points_at_the_roadmap_gap() {
+    let c = cfg(|c| {
+        c.solver.nrhs = 4;
+        c.solver.precision = "mixed".into();
+    });
+    let err = c.validate_solve(false).unwrap_err();
+    // not a bare "got mixed": the message explains WHAT is missing
+    assert!(err.contains("ROADMAP"), "{err}");
+    assert!(err.contains("block refinement"), "{err}");
+    assert!(err.contains("f32 or f64"), "{err}");
+}
+
+#[test]
+fn grid_times_nrhs_times_compression_compose() {
+    // the combinations this PR makes legal: multi-rank × multi-RHS ×
+    // two-row at both uniform precisions
+    for precision in ["f32", "f64"] {
+        for nrhs in [1usize, 2, 8] {
+            for compression in [Compression::None, Compression::TwoRow] {
+                let c = cfg(|c| {
+                    c.lattice.grid = ProcGrid([1, 1, 2, 2]);
+                    c.solver.nrhs = nrhs;
+                    c.solver.precision = precision.into();
+                    c.gauge.compression = compression;
+                });
+                assert!(
+                    c.validate_solve(false).is_ok(),
+                    "grid × nrhs {nrhs} × {compression} × {precision} must be legal"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn grid_with_mixed_precision_rejected() {
+    let c = cfg(|c| {
+        c.lattice.grid = ProcGrid([1, 1, 1, 2]);
+        c.solver.precision = "mixed".into();
+    });
+    let err = c.validate_solve(false).unwrap_err();
+    assert!(err.contains("distributed"), "{err}");
+    assert!(err.contains("ROADMAP"), "{err}");
+    // grid × mixed × nrhs reports both combination offenses
+    let c = cfg(|c| {
+        c.lattice.grid = ProcGrid([1, 1, 1, 2]);
+        c.solver.precision = "mixed".into();
+        c.solver.nrhs = 2;
+    });
+    assert_eq!(c.validate_solve(false).unwrap_err().lines().count(), 2);
+}
+
+#[test]
+fn distributed_nrhs_capped_by_wire_mask_width() {
+    let c = cfg(|c| {
+        c.lattice.grid = ProcGrid([1, 1, 1, 2]);
+        c.solver.nrhs = 33;
+    });
+    let err = c.validate_solve(false).unwrap_err();
+    assert!(err.contains("at most 32"), "{err}");
+    // 32 is fine, and so is 33 on a single rank (native block solver)
+    assert!(cfg(|c| {
+        c.lattice.grid = ProcGrid([1, 1, 1, 2]);
+        c.solver.nrhs = 32;
+    })
+    .validate_solve(false)
+    .is_ok());
+    assert!(cfg(|c| c.solver.nrhs = 33).validate_solve(false).is_ok());
+}
+
+#[test]
+fn unknown_algorithm_rejected() {
+    let c = cfg(|c| c.solver.algorithm = "sor".into());
+    let err = c.validate_solve(false).unwrap_err();
+    assert!(err.contains("solver.algorithm"), "{err}");
+    for ok in ["cg", "bicgstab"] {
+        assert!(cfg(|c| c.solver.algorithm = ok.into()).validate_solve(false).is_ok());
+    }
+}
+
+#[test]
+fn config_file_driven_combinations() {
+    // the same matrix through the TOML-subset parser, like --config
+    let doc = lqcd::config::Document::parse(
+        "[lattice]\ngrid = [1, 1, 2, 2]\n[solver]\nnrhs = 2\nprecision = \"f64\"",
+    )
+    .unwrap();
+    let c = RunConfig::from_document(&doc).unwrap();
+    assert_eq!(c.lattice.grid.size(), 4);
+    assert!(c.validate_solve(false).is_ok());
+
+    let doc = lqcd::config::Document::parse(
+        "[lattice]\ngrid = [1, 1, 1, 2]\n[solver]\nnrhs = 2\nprecision = \"mixed\"",
+    )
+    .unwrap();
+    let c = RunConfig::from_document(&doc).unwrap();
+    let err = c.validate_solve(false).unwrap_err();
+    assert!(err.contains("block refinement") && err.contains("distributed"), "{err}");
+
+    // per-key range checks still fail at parse time, before validate
+    let doc = lqcd::config::Document::parse("[solver]\nnrhs = 0").unwrap();
+    assert!(RunConfig::from_document(&doc).is_err());
+    let doc = lqcd::config::Document::parse("[solver]\nprecision = \"f16\"").unwrap();
+    assert!(RunConfig::from_document(&doc).is_err());
+}
+
+#[test]
+fn grid_cli_spelling_parses_like_the_config_array() {
+    let from_cli = ProcGrid::parse("1x1x2x2").unwrap();
+    let doc = lqcd::config::Document::parse("[lattice]\ngrid = [1, 1, 2, 2]").unwrap();
+    let from_cfg = RunConfig::from_document(&doc).unwrap().lattice.grid;
+    assert_eq!(from_cli, from_cfg);
+    assert!(ProcGrid::parse("1x1x0x2").is_err());
+    assert!(ProcGrid::parse("2x2").is_err());
+}

@@ -4,11 +4,14 @@
 //! self-communication (the paper's measurement mode).
 
 use lqcd::comm::decompose::{extract_fermion, extract_gauge, insert_fermion};
-use lqcd::comm::{run_world, Comm};
-use lqcd::coordinator::operator::{DistMeo, LinearOperator, NormalOp};
+use lqcd::comm::{run_world, validate_wire_format, Comm};
+use lqcd::coordinator::operator::{
+    DistMeo, DistMultiMdagM, DistMultiMeo, LinearOperator, MultiMdagM, MultiOperator,
+    NormalOp,
+};
 use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
 use lqcd::dslash::HoppingEo;
-use lqcd::field::{FermionField, GaugeField};
+use lqcd::field::{CompressedGaugeField, FermionField, GaugeField, MultiFermionField};
 use lqcd::lattice::{Geometry, LatticeDims, Parity, ProcGrid, Tiling};
 use lqcd::solver;
 use lqcd::util::rng::Rng;
@@ -317,4 +320,388 @@ fn larger_tiling_with_comm() {
         Parity::Odd,
         19,
     );
+}
+
+// ===================== batched multi-RHS distributed path ================
+
+/// The batched distributed M-hat must reproduce the single-RHS fused
+/// [`DistMeo`] *bitwise* per RHS — one message per direction for all
+/// RHS changes the wire format, never the arithmetic — including with
+/// a staggered convergence mask (masked RHS frozen, absent from the
+/// payload).
+#[test]
+fn dist_multi_meo_bit_matches_single_rhs_dist_meo() {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let nrhs = 3;
+    // no-comm bulk-tail path, forced self-comm, and a real split
+    let cases = [
+        (ProcGrid([1, 1, 1, 1]), false),
+        (ProcGrid([1, 1, 1, 1]), true),
+        (ProcGrid([1, 1, 2, 2]), true),
+        (ProcGrid([2, 1, 1, 1]), false),
+    ];
+    for (grid, force_comm) in cases {
+        let ggeom = Geometry::single_rank(global, tiling).unwrap();
+        let mut rng = Rng::seeded(71);
+        let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+        let psis_global: Vec<FermionField> =
+            (0..nrhs).map(|_| FermionField::gaussian(&ggeom, &mut rng)).collect();
+        let kappa = 0.131f32;
+        run_world(grid.size(), |rank, comm| {
+            let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+            let u = extract_gauge(&u_global, &lgeom);
+            let psis: Vec<FermionField> = psis_global
+                .iter()
+                .map(|p| extract_fermion(p, &ggeom, &lgeom))
+                .collect();
+            let dist = DistHopping::new(&lgeom, force_comm, 2, Eo2Schedule::Uniform);
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let prof = Profiler::new(2);
+
+            // reference: the single-RHS fused DistMeo, one RHS at a time
+            let mut want = Vec::new();
+            for psi in &psis {
+                let mut op =
+                    DistMeo::new(&lgeom, &dist, &u, kappa, &mut *comm, &mut team, &prof);
+                let mut o = FermionField::zeros(&lgeom);
+                op.apply(&mut o, psi);
+                want.push(o);
+            }
+
+            // batched: all RHS through one exchange per direction
+            let psi_m = MultiFermionField::from_rhs(&psis);
+            let mut out = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+            let mut mop =
+                DistMultiMeo::new(&lgeom, &dist, &u, kappa, nrhs, comm, &prof).unwrap();
+            mop.apply_multi(&mut team, &mut out, &psi_m, &[true; 3], None);
+            for (r, w) in want.iter().enumerate() {
+                assert_eq!(
+                    out.extract_rhs(r).data,
+                    w.data,
+                    "rhs {r} diverged (grid {grid:?}, force={force_comm}, rank {rank})"
+                );
+            }
+
+            // staggered mask: active RHS bit-identical, masked frozen
+            let mut out2 = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+            mop.apply_multi(&mut team, &mut out2, &psi_m, &[true, false, true], None);
+            assert_eq!(out2.extract_rhs(0).data, want[0].data);
+            assert_eq!(out2.extract_rhs(2).data, want[2].data);
+            assert!(out2.extract_rhs(1).data.iter().all(|&v| v == 0.0), "masked rhs written");
+        });
+    }
+}
+
+/// Distributed block BiCGStab at nrhs = N must give per-RHS residual
+/// histories bitwise identical to N independent nrhs = 1 distributed
+/// solves: the recurrences are independent and masking one RHS never
+/// perturbs another, even though all of them share each halo message.
+#[test]
+fn dist_block_bicgstab_histories_bit_match_nrhs1() {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let nrhs = 3;
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(72);
+    let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+    let bs_global: Vec<FermionField> =
+        (0..nrhs).map(|_| FermionField::gaussian(&ggeom, &mut rng)).collect();
+    let kappa = 0.12f32;
+    let (tol, maxiter) = (1e-4, 60);
+
+    let results = run_world(grid.size(), |rank, comm| {
+        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+        let u = extract_gauge(&u_global, &lgeom);
+        let bs: Vec<FermionField> = bs_global
+            .iter()
+            .map(|b| extract_fermion(b, &ggeom, &lgeom))
+            .collect();
+        let dist = DistHopping::new(&lgeom, true, 2, Eo2Schedule::Uniform);
+        let prof = Profiler::new(2);
+
+        // batched solve, all RHS in one wire stream
+        let batched = {
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let b = MultiFermionField::from_rhs(&bs);
+            let mut x = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+            let mut op =
+                DistMultiMeo::new(&lgeom, &dist, &u, kappa, nrhs, &mut *comm, &prof)
+                    .unwrap();
+            solver::block_bicgstab_generic(&mut op, &mut team, &mut x, &b, tol, maxiter)
+        };
+        // N independent single-RHS batched solves
+        let singles: Vec<_> = bs
+            .iter()
+            .map(|b1| {
+                let mut team = Team::new(2, BarrierKind::Sleep);
+                let b = MultiFermionField::from_rhs(std::slice::from_ref(b1));
+                let mut x = MultiFermionField::<f32>::zeros(&lgeom, 1);
+                let mut op =
+                    DistMultiMeo::new(&lgeom, &dist, &u, kappa, 1, &mut *comm, &prof)
+                        .unwrap();
+                solver::block_bicgstab_generic(&mut op, &mut team, &mut x, &b, tol, maxiter)
+            })
+            .collect();
+        (batched, singles)
+    });
+
+    for (rank, (batched, singles)) in results.iter().enumerate() {
+        for r in 0..nrhs {
+            assert!(!singles[r].per_rhs[0].history.is_empty());
+            assert_eq!(
+                batched.per_rhs[r].history, singles[r].per_rhs[0].history,
+                "rank {rank} rhs {r}: batched history diverged from independent solve"
+            );
+            assert_eq!(batched.per_rhs[r].converged, singles[r].per_rhs[0].converged);
+        }
+    }
+}
+
+/// On one rank without communicated directions the distributed generic
+/// block CG is the native pipeline: per-RHS histories must be BITWISE
+/// identical to the single-rank fused [`solver::block_cg`] (which PR 3
+/// pinned against N independent fused solves).
+#[test]
+fn dist_block_cg_single_rank_bit_matches_native_block() {
+    let global = LatticeDims::new(8, 4, 4, 4).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let nrhs = 2;
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(73);
+    let u: GaugeField = GaugeField::random(&ggeom, &mut rng);
+    let sources: Vec<FermionField> =
+        (0..nrhs).map(|_| FermionField::gaussian(&ggeom, &mut rng)).collect();
+    let kappa = 0.13f32;
+    let (tol, maxiter) = (1e-5, 80);
+
+    // CGNR right-hand sides via the native operator
+    let mut meo = lqcd::coordinator::operator::NativeMeo::new(&ggeom, u.clone(), kappa);
+    let rhs: Vec<FermionField> = sources
+        .iter()
+        .map(|b| {
+            let mut bp = b.clone();
+            bp.gamma5();
+            let mut mbp = FermionField::zeros(&ggeom);
+            meo.apply(&mut mbp, &bp);
+            mbp.gamma5();
+            mbp
+        })
+        .collect();
+    let b = MultiFermionField::from_rhs(&rhs);
+
+    // native fused block solver
+    let native = {
+        let mut team = Team::new(2, BarrierKind::Sleep);
+        let mut op = MultiMdagM::new(&ggeom, u.clone(), kappa, nrhs);
+        let mut x = MultiFermionField::<f32>::zeros(&ggeom, nrhs);
+        solver::block_cg(&mut op, &mut team, &mut x, &b, tol, maxiter)
+    };
+
+    // distributed generic solver, 1 rank, periodic bulk (no comm dirs)
+    let dist_stats = run_world(1, |_, comm| {
+        let dist = DistHopping::new(&ggeom, false, 2, Eo2Schedule::Uniform);
+        let mut team = Team::new(2, BarrierKind::Sleep);
+        let prof = Profiler::new(2);
+        let mut op =
+            DistMultiMdagM::new(&ggeom, &dist, &u, kappa, nrhs, comm, &prof).unwrap();
+        let mut x = MultiFermionField::<f32>::zeros(&ggeom, nrhs);
+        solver::block_cg_generic(&mut op, &mut team, &mut x, &b, tol, maxiter)
+    })
+    .pop()
+    .unwrap();
+
+    assert!(native.iterations > 0);
+    assert_eq!(native.iterations, dist_stats.iterations);
+    for r in 0..nrhs {
+        assert_eq!(
+            native.per_rhs[r].history, dist_stats.per_rhs[r].history,
+            "rhs {r}: generic distributed history != native fused block history"
+        );
+    }
+}
+
+/// Across a real decomposition the reductions stay bitwise (global
+/// site-tile fold), and the only rounding difference versus the
+/// single-rank block solver is the face sites' halo-merge accumulation
+/// order — at f64 the per-iteration histories must agree to ~1e-12
+/// with identical iteration counts, at 1, 2 and 4 simulated ranks.
+#[test]
+fn dist_block_cg_f64_tracks_single_rank_block() {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let nrhs = 2;
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(74);
+    let u: GaugeField<f64> = GaugeField::random(&ggeom, &mut rng);
+    let sources: Vec<FermionField<f64>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&ggeom, &mut rng)).collect();
+    let kappa = 0.125f64;
+    // fixed-iteration window far above convergence: deterministic
+    // history length, no mask flips near the tolerance edge
+    let (tol, maxiter) = (1e-30, 15);
+
+    let mut meo = lqcd::coordinator::operator::NativeMeo::new(&ggeom, u.clone(), kappa);
+    let rhs: Vec<FermionField<f64>> = sources
+        .iter()
+        .map(|b| {
+            let mut bp = b.clone();
+            bp.gamma5();
+            let mut mbp = FermionField::zeros(&ggeom);
+            meo.apply(&mut mbp, &bp);
+            mbp.gamma5();
+            mbp
+        })
+        .collect();
+    let b_global = MultiFermionField::from_rhs(&rhs);
+
+    let native = {
+        let mut team = Team::new(1, BarrierKind::Sleep);
+        let mut op = MultiMdagM::new(&ggeom, u.clone(), kappa, nrhs);
+        let mut x = MultiFermionField::<f64>::zeros(&ggeom, nrhs);
+        solver::block_cg(&mut op, &mut team, &mut x, &b_global, tol, maxiter)
+    };
+
+    for grid in [ProcGrid([1, 1, 1, 1]), ProcGrid([1, 1, 1, 2]), ProcGrid([1, 1, 2, 2])] {
+        let stats = run_world(grid.size(), |rank, comm| {
+            let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+            let ul = extract_gauge(&u, &lgeom);
+            let rl: Vec<FermionField<f64>> = rhs
+                .iter()
+                .map(|f| extract_fermion(f, &ggeom, &lgeom))
+                .collect();
+            let bl = MultiFermionField::from_rhs(&rl);
+            let dist = DistHopping::new(&lgeom, true, 2, Eo2Schedule::Uniform);
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let prof = Profiler::new(2);
+            let mut op =
+                DistMultiMdagM::new(&lgeom, &dist, &ul, kappa, nrhs, comm, &prof).unwrap();
+            let mut x = MultiFermionField::<f64>::zeros(&lgeom, nrhs);
+            solver::block_cg_generic(&mut op, &mut team, &mut x, &bl, tol, maxiter)
+        });
+        // every rank reports identical stats (global reductions)
+        for s in &stats {
+            assert_eq!(s.iterations, stats[0].iterations);
+            for r in 0..nrhs {
+                assert_eq!(s.per_rhs[r].history, stats[0].per_rhs[r].history);
+            }
+        }
+        for r in 0..nrhs {
+            let h = &stats[0].per_rhs[r].history;
+            assert_eq!(h.len(), native.per_rhs[r].history.len(), "grid {grid:?}");
+            for (i, (a, w)) in h.iter().zip(&native.per_rhs[r].history).enumerate() {
+                let rel = (a - w).abs() / w.abs();
+                assert!(
+                    rel < 1e-8,
+                    "grid {grid:?} rhs {r} iter {i}: {a} vs {w} (rel {rel:.2e})"
+                );
+            }
+        }
+    }
+}
+
+/// Two-row compressed links compose with the batched distributed path:
+/// on a two-row-projected field the compressed solve's histories are
+/// bitwise the full-link solve's.
+#[test]
+fn dist_block_two_row_bit_matches_full_links() {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let nrhs = 2;
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(75);
+    // project through the two-row round trip so compressed == full bitwise
+    let u_global: GaugeField<f32> = {
+        let raw: GaugeField<f32> = GaugeField::random(&ggeom, &mut rng);
+        CompressedGaugeField::compress(&raw).reconstruct()
+    };
+    let bs_global: Vec<FermionField> =
+        (0..nrhs).map(|_| FermionField::gaussian(&ggeom, &mut rng)).collect();
+    let kappa = 0.12f32;
+    let (tol, maxiter) = (1e-4, 50);
+
+    let results = run_world(grid.size(), |rank, comm| {
+        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+        let proj = extract_gauge(&u_global, &lgeom);
+        let compressed = CompressedGaugeField::compress(&proj);
+        let bs: Vec<FermionField> = bs_global
+            .iter()
+            .map(|b| extract_fermion(b, &ggeom, &lgeom))
+            .collect();
+        let b = MultiFermionField::from_rhs(&bs);
+        let dist = DistHopping::new(&lgeom, true, 2, Eo2Schedule::Uniform);
+        let prof = Profiler::new(2);
+
+        let full = {
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let mut x = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+            let mut op =
+                DistMultiMeo::new(&lgeom, &dist, &proj, kappa, nrhs, &mut *comm, &prof)
+                    .unwrap();
+            solver::block_bicgstab_generic(&mut op, &mut team, &mut x, &b, tol, maxiter)
+        };
+        let two_row = {
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let mut x = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+            let mut op = DistMultiMeo::new(
+                &lgeom, &dist, &compressed, kappa, nrhs, comm, &prof,
+            )
+            .unwrap();
+            solver::block_bicgstab_generic(&mut op, &mut team, &mut x, &b, tol, maxiter)
+        };
+        (full, two_row)
+    });
+    for (rank, (full, two_row)) in results.iter().enumerate() {
+        for r in 0..nrhs {
+            assert!(!full.per_rhs[r].history.is_empty());
+            assert_eq!(
+                full.per_rhs[r].history, two_row.per_rhs[r].history,
+                "rank {rank} rhs {r}: two-row distributed history != full links"
+            );
+        }
+    }
+}
+
+/// Regression (wire-format handshake): a precision / nrhs / mask desync
+/// across ranks is a structured error surfaced BEFORE any halo payload
+/// is posted — the pre-batching behavior was a type panic mid-exchange.
+#[test]
+fn wire_format_desync_is_structured_error_before_send() {
+    // nrhs desync at operator construction: both ranks get Err, and the
+    // message names both ranks' batch shapes
+    let msgs = run_world(2, |rank, comm| {
+        let nrhs = if rank == 0 { 2 } else { 4 };
+        validate_wire_format::<f32>(comm, nrhs, &vec![true; nrhs])
+            .unwrap_err()
+            .to_string()
+    });
+    for m in &msgs {
+        assert!(m.contains("rank 0") && m.contains("nrhs 2"), "{m}");
+        assert!(m.contains("rank 1") && m.contains("nrhs 4"), "{m}");
+    }
+
+    // the same handshake is what DistMultiMeo::new runs: a desynced
+    // construction fails as a Result, never touching the wire
+    let global = LatticeDims::new(8, 4, 4, 4).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(76);
+    let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+    let errs = run_world(grid.size(), |rank, comm| {
+        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+        let u = extract_gauge(&u_global, &lgeom);
+        let dist = DistHopping::new(&lgeom, true, 1, Eo2Schedule::Uniform);
+        let prof = Profiler::new(1);
+        let nrhs = if rank == 0 { 1 } else { 2 };
+        DistMultiMeo::new(&lgeom, &dist, &u, 0.1f32, nrhs, comm, &prof)
+            .err()
+            .map(|e| e.to_string())
+    });
+    for e in errs {
+        let e = e.expect("desynced construction must fail on every rank");
+        assert!(e.contains("before any payload was sent"), "{e}");
+    }
 }
