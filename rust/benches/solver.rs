@@ -32,6 +32,9 @@ use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
 use lqcd::dslash::{Compression, Links};
 use lqcd::field::{CompressedGaugeField, FermionField, GaugeField, MultiFermionField};
 use lqcd::lattice::{Geometry, LatticeDims, Parity, ProcGrid, Tiling};
+// byte models shared with `lqcd tune` (identical formulas by construction:
+// the tuner fits the roofline the floor below asserts against)
+use lqcd::perf::roofline::{block_cg_iter_bytes, bytes_per_site, cg_iter_bytes};
 use lqcd::solver::{self, InnerAlgorithm};
 use lqcd::util::rng::Rng;
 use lqcd::util::tables::Table;
@@ -149,65 +152,6 @@ fn emit_json(dims: &str, kappa: f64, runs: &[Run]) {
     }
 }
 
-/// Bytes one CGNR iteration streams through memory (model).
-///
-/// The normal operator apply is 4 hopping passes; each streams the
-/// source field in, the destination field out, and the 8 gauge blocks
-/// (4 directions x 2 parities). The fused pipeline adds the tail reads
-/// (`b` of the xpay tail, twice) and the dot-capture re-read of `p`
-/// inside the apply, then two BLAS passes (combined x/r update: 4 reads
-/// + 2 writes; p xpay: 2 reads + 1 write). The unfused reference
-/// ([`UnfusedMdagM`], the pre-fusion pipeline) runs the same 4 hopping
-/// passes plus two in-place gamma5 passes, two 3-stream xpay tails, and
-/// the dot / axpy / axpy / norm² / xpay chain as separate passes.
-fn cg_iter_bytes(geom: &Geometry, elem_bytes: usize, fused: bool) -> u64 {
-    let layout = lqcd::lattice::EoLayout::new(geom);
-    let f = (layout.spinor_len() * elem_bytes) as u64; // one spinor field
-    let g = (8 * layout.gauge_len() * elem_bytes) as u64; // all gauge blocks
-    let hop4 = 4 * (2 * f + g);
-    if fused {
-        // apply(+tails +capture): hop4 + 2 tail reads + capture read of p
-        // update: x,r,p,ap read + x,r write ; xpay: p,r read + p write
-        hop4 + 3 * f + 6 * f + 3 * f
-    } else {
-        // apply: hop4 + 2 gamma5 (2f each) + 2 xpay tails (3f each)
-        // dot(2f) + axpy(3f) + axpy(3f) + norm2(f) + xpay(3f)
-        hop4 + 4 * f + 6 * f + 12 * f
-    }
-}
-
-/// Bytes one *block* CGNR iteration streams for `nrhs` right-hand
-/// sides (model): the 4 hopping passes stream the 8 gauge blocks ONCE
-/// each — that is the amortization the block field buys — while every
-/// spinor stream (kernel source/destination, fused tails, capture
-/// re-read, and the two BLAS passes) is paid once per RHS. The gauge
-/// term scales with `reals_per_link` (18 full, 12 two-row compressed:
-/// the tentpole's 1/3 gauge-stream cut). At nrhs = 1 with full links
-/// this reduces exactly to `cg_iter_bytes(geom, eb, true)`.
-fn block_cg_iter_bytes(
-    geom: &Geometry,
-    elem_bytes: usize,
-    nrhs: u64,
-    reals_per_link: usize,
-) -> u64 {
-    let layout = lqcd::lattice::EoLayout::new(geom);
-    let f = (layout.spinor_len() * elem_bytes) as u64;
-    // 8 link blocks (4 directions x 2 parities), reals_per_link each
-    let g = (8 * layout.ntiles() * reals_per_link * layout.vlen() * elem_bytes) as u64;
-    // gauge once, spinor in/out per RHS, per hopping pass
-    let hop4 = 4 * (2 * f * nrhs + g);
-    hop4 + (3 + 6 + 3) * f * nrhs
-}
-
-/// Modeled bytes per site per RHS of one iteration: the acceptance
-/// metric for gauge-stream amortization (strictly decreasing in nrhs
-/// at fixed lattice size, because the `g / nrhs` share shrinks).
-fn per_site(geom: &Geometry, bytes_per_iter: u64, nrhs: u64) -> f64 {
-    let sites = lqcd::lattice::EoLayout::new(geom).nsites() as u64 * nrhs;
-    bytes_per_iter as f64 / sites as f64
-}
-
-
 fn main() {
     let opts = common::opts(1, 1);
     let smoke = std::env::args().any(|a| a == "--smoke")
@@ -315,7 +259,7 @@ fn main() {
             gflops: stats.flops as f64 / secs / 1e9,
             sweeps_per_iter: stats.sweeps_per_iter,
             bytes_per_iter: cg_iter_bytes(&geom, 4, false),
-            bytes_per_site: per_site(&geom, cg_iter_bytes(&geom, 4, false), 1),
+            bytes_per_site: bytes_per_site(&geom, cg_iter_bytes(&geom, 4, false), 1),
             gauge_reals_per_link: 18,
             true_residual: resid,
             history: stats.history,
@@ -484,7 +428,7 @@ fn main() {
             gflops: stats.flops as f64 / secs / 1e9,
             sweeps_per_iter: stats.sweeps_per_iter,
             bytes_per_iter: cg_iter_bytes(&fgeom, 4, false),
-            bytes_per_site: per_site(&fgeom, cg_iter_bytes(&fgeom, 4, false), 1),
+            bytes_per_site: bytes_per_site(&fgeom, cg_iter_bytes(&fgeom, 4, false), 1),
             gauge_reals_per_link: 18,
             true_residual: resid,
             history: stats.history.clone(),
@@ -529,7 +473,7 @@ fn main() {
             gflops: stats.flops as f64 / secs / 1e9,
             sweeps_per_iter: stats.sweeps_per_iter,
             bytes_per_iter: cg_iter_bytes(&fgeom, 4, true),
-            bytes_per_site: per_site(&fgeom, cg_iter_bytes(&fgeom, 4, true), 1),
+            bytes_per_site: bytes_per_site(&fgeom, cg_iter_bytes(&fgeom, 4, true), 1),
             gauge_reals_per_link: 18,
             true_residual: resid,
             history: stats.history.clone(),
@@ -609,7 +553,7 @@ fn main() {
                 "block({compression}, nrhs={nrhs}) rhs 0 history diverged from the fused reference"
             );
             let bytes = block_cg_iter_bytes(&fgeom, 4, nrhs as u64, reals);
-            let bps = per_site(&fgeom, bytes, nrhs as u64);
+            let bps = bytes_per_site(&fgeom, bytes, nrhs as u64);
             assert!(
                 bps < prev_bytes_per_site,
                 "bytes/site/RHS must strictly decrease with nrhs ({bps} !< {prev_bytes_per_site})"
@@ -772,7 +716,7 @@ fn main() {
             // memory-side model: same 4 hopping passes as block CGNR,
             // gauge streamed once per pass for all RHS
             let mem_bytes = block_cg_iter_bytes(&lgeom0, 4, nrhs as u64, 18);
-            let mem_bps = per_site(&lgeom0, mem_bytes, nrhs as u64);
+            let mem_bps = bytes_per_site(&lgeom0, mem_bytes, nrhs as u64);
             assert!(
                 mem_bps < prev_bps,
                 "distributed bytes/site/RHS must strictly decrease in nrhs \
@@ -837,4 +781,70 @@ fn main() {
     );
 
     emit_json(&dims.to_string(), kappa, &runs);
+    assert_roofline_floor(&runs);
+}
+
+/// CI bandwidth floor: the best fused-CG run must reach a configurable
+/// fraction of the fitted host roofline, or the bench fails loudly.
+///
+/// Opt-in via `LQCD_ROOFLINE_FLOOR` (a fraction in (0, 1]) so local
+/// `cargo bench` runs are never gated. The roofline itself comes from
+/// the tune cache when `LQCD_TUNE_JSON` points at one (the GB/s the
+/// tuner's best measured configuration achieved, through the same byte
+/// models this bench reports), otherwise from a live STREAM-triad
+/// calibration.
+fn assert_roofline_floor(runs: &[Run]) {
+    let floor: f64 = match std::env::var("LQCD_ROOFLINE_FLOOR") {
+        Ok(v) => v
+            .parse()
+            .unwrap_or_else(|_| panic!("LQCD_ROOFLINE_FLOOR must be a number, got {v:?}")),
+        Err(_) => {
+            println!("roofline floor: LQCD_ROOFLINE_FLOOR unset, assertion skipped");
+            return;
+        }
+    };
+    assert!(
+        floor > 0.0 && floor <= 1.0,
+        "LQCD_ROOFLINE_FLOOR must be in (0, 1], got {floor}"
+    );
+    let best = runs
+        .iter()
+        .filter(|r| r.name == "cgnr-fused")
+        .map(eff_bw_gbs)
+        .fold(0.0, f64::max);
+    let (roofline, source) = match std::env::var("LQCD_TUNE_JSON") {
+        Ok(path) => {
+            let text = std::fs::read_to_string(&path)
+                .unwrap_or_else(|e| panic!("LQCD_TUNE_JSON={path}: {e}"));
+            let cache = lqcd::perf::TuneCache::parse(&text)
+                .unwrap_or_else(|e| panic!("LQCD_TUNE_JSON={path}: {e}"));
+            (cache.choice.roofline_gbs, format!("tune cache {path}"))
+        }
+        Err(_) => {
+            let host = lqcd::perf::calibrate_host();
+            (
+                host.mem_bw_saturated_gbs,
+                "live STREAM-triad calibration".to_string(),
+            )
+        }
+    };
+    let need = floor * roofline;
+    if best < need {
+        eprintln!(
+            "ROOFLINE FLOOR VIOLATION\n\
+             \x20 best fused-CG effective bandwidth: {best:.2} GB/s\n\
+             \x20 fitted roofline ({source}): {roofline:.2} GB/s\n\
+             \x20 required: {:.0}% of roofline = {need:.2} GB/s\n\
+             The solver hot path fell below the bandwidth floor. Either a perf\n\
+             regression landed, or the floor is mis-calibrated for this machine\n\
+             (re-run `lqcd tune` to refresh the cache, or lower LQCD_ROOFLINE_FLOOR).",
+            floor * 100.0
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "roofline floor OK: best fused-CG {best:.2} GB/s >= {:.0}% of \
+         {roofline:.2} GB/s ({source})",
+        floor * 100.0
+    );
 }

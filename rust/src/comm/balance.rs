@@ -28,7 +28,21 @@ pub fn uniform_chunks(nsites: usize, nthreads: usize) -> Vec<(usize, usize)> {
 /// Cost-weighted partition of the EO2 site loop: contiguous chunks whose
 /// per-chunk cost is as even as the site granularity allows.
 pub fn balanced_chunks(plans: &HaloPlans, nthreads: usize) -> Vec<(usize, usize)> {
+    balanced_chunks_granular(plans, nthreads, 1)
+}
+
+/// [`balanced_chunks`] with a chunk-boundary granularity: every chunk
+/// boundary (except the final `nsites`) is rounded up to a multiple of
+/// `granularity` sites. Coarser boundaries trade a little balance for
+/// unpack loops that start on tile-aligned offsets — which of the two
+/// wins is machine-dependent, so `lqcd tune` sweeps it.
+pub fn balanced_chunks_granular(
+    plans: &HaloPlans,
+    nthreads: usize,
+    granularity: usize,
+) -> Vec<(usize, usize)> {
     let nsites = plans.nsites;
+    let gran = granularity.max(1);
     let costs: Vec<u64> = (0..nsites).map(|f| site_cost(plans, f)).collect();
     let total: u64 = costs.iter().sum();
     if total == 0 {
@@ -49,6 +63,12 @@ pub fn balanced_chunks(plans: &HaloPlans, nthreads: usize) -> Vec<(usize, usize)
             while end < nsites && (acc < want || end == begin) {
                 acc += costs[end];
                 end += 1;
+            }
+            if end < nsites && end % gran != 0 {
+                let aligned = (end / gran + 1) * gran;
+                let aligned = aligned.min(nsites);
+                acc += costs[end..aligned].iter().sum::<u64>();
+                end = aligned;
             }
         }
         out.push((begin, end));
@@ -117,6 +137,32 @@ mod tests {
             ib < iu * 0.7,
             "balanced split must cut the imbalance: {ib:.2} vs {iu:.2}"
         );
+    }
+
+    #[test]
+    fn granular_boundaries_are_aligned_and_cover_range() {
+        let p = plans();
+        for gran in [1usize, 4, 16] {
+            let chunks = balanced_chunks_granular(&p, 6, gran);
+            assert_eq!(chunks.len(), 6);
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, p.nsites);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            for &(_, end) in &chunks[..chunks.len() - 1] {
+                assert!(
+                    end % gran == 0 || end == p.nsites,
+                    "boundary {end} not aligned to {gran}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn granularity_one_matches_balanced() {
+        let p = plans();
+        assert_eq!(balanced_chunks(&p, 8), balanced_chunks_granular(&p, 8, 1));
     }
 
     #[test]

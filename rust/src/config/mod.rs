@@ -10,4 +10,6 @@ mod parser;
 mod run;
 
 pub use parser::{ConfigError, Document, Value};
-pub use run::{GaugeConfig, LatticeConfig, ParallelConfig, RunConfig, SolverConfig};
+pub use run::{
+    GaugeConfig, LatticeConfig, ParallelConfig, RunConfig, SolverConfig, TuneConfig,
+};

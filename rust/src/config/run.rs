@@ -3,6 +3,7 @@
 use std::path::{Path, PathBuf};
 
 use super::parser::{ConfigError, Document};
+use crate::coordinator::Eo2Schedule;
 use crate::dslash::Compression;
 use crate::lattice::{GeometryError, LatticeDims, ProcGrid, Tiling};
 
@@ -11,6 +12,10 @@ pub struct LatticeConfig {
     pub global: LatticeDims,
     pub grid: ProcGrid,
     pub tiling: Tiling,
+    /// whether `lattice.tiling` was set explicitly (config key or CLI
+    /// override). An explicit tiling pins the knob — the tune cache
+    /// only fills it when this is false.
+    pub tiling_explicit: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -55,6 +60,28 @@ pub struct ParallelConfig {
     /// force the comm path even for self-neighbor directions
     /// (the paper enforces x/y communication in its measurements)
     pub force_comm: bool,
+    /// how the distributed EO2 merge partitions boundary sites across
+    /// threads (`None` = let the tune cache / heuristic decide)
+    pub eo2_schedule: Option<Eo2Schedule>,
+    /// boundary-site granularity of the balanced EO2 partition
+    /// (`None` = let the tune cache / heuristic decide)
+    pub eo2_granularity: Option<usize>,
+}
+
+/// `[tune]`: autotuner cache location and sweep/assertion parameters.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// where `lqcd tune` writes and `lqcd solve` looks for the
+    /// per-machine cache
+    pub cache_dir: PathBuf,
+    /// total wall budget of one `lqcd tune` sweep
+    pub budget_ms: u64,
+    /// bench assertion floor: effective GB/s must reach this fraction
+    /// of the fitted roofline
+    pub roofline_floor: f64,
+    /// `false` disables cache lookup on the solve path entirely
+    /// (`--no-tune`): knobs come from CLI/config or the heuristics
+    pub enabled: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -63,6 +90,7 @@ pub struct RunConfig {
     pub solver: SolverConfig,
     pub gauge: GaugeConfig,
     pub parallel: ParallelConfig,
+    pub tune: TuneConfig,
     pub artifacts_dir: PathBuf,
     pub seed: u64,
 }
@@ -74,6 +102,7 @@ impl Default for RunConfig {
                 global: LatticeDims::new(8, 8, 8, 16).unwrap(),
                 grid: ProcGrid([1, 1, 1, 1]),
                 tiling: Tiling::new(4, 4).unwrap(),
+                tiling_explicit: false,
             },
             solver: SolverConfig {
                 kappa: 0.13,
@@ -93,6 +122,14 @@ impl Default for RunConfig {
             parallel: ParallelConfig {
                 threads_per_rank: 4,
                 force_comm: false,
+                eo2_schedule: None,
+                eo2_granularity: None,
+            },
+            tune: TuneConfig {
+                cache_dir: PathBuf::from("tune-cache"),
+                budget_ms: 3000,
+                roofline_floor: 0.5,
+                enabled: true,
             },
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 20230227,
@@ -231,6 +268,7 @@ impl RunConfig {
             }
             None => defaults.lattice.grid,
         };
+        let tiling_explicit = doc.get("lattice.tiling").is_some();
         let tiling = Tiling::parse(&doc.str_or("lattice.tiling", "4x4"))
             .map_err(|m| ConfigError { line: 0, message: m })?;
 
@@ -239,6 +277,7 @@ impl RunConfig {
                 global,
                 grid,
                 tiling,
+                tiling_explicit,
             },
             solver: SolverConfig {
                 kappa: doc.float_or("solver.kappa", defaults.solver.kappa),
@@ -320,6 +359,58 @@ impl RunConfig {
                     defaults.parallel.threads_per_rank as i64,
                 ) as usize,
                 force_comm: doc.bool_or("parallel.force_comm", defaults.parallel.force_comm),
+                eo2_schedule: match doc.get("parallel.eo2_schedule") {
+                    None => None,
+                    Some(_) => Some(
+                        Eo2Schedule::parse(&doc.str_or("parallel.eo2_schedule", ""))
+                            .map_err(|m| ConfigError { line: 0, message: m })?,
+                    ),
+                },
+                eo2_granularity: match doc.get("parallel.eo2_granularity") {
+                    None => None,
+                    Some(_) => {
+                        let n = doc.int_or("parallel.eo2_granularity", 0);
+                        if n <= 0 {
+                            return Err(ConfigError {
+                                line: 0,
+                                message: format!(
+                                    "parallel.eo2_granularity must be positive (got {n})"
+                                ),
+                            });
+                        }
+                        Some(n as usize)
+                    }
+                },
+            },
+            tune: TuneConfig {
+                cache_dir: PathBuf::from(doc.str_or(
+                    "tune.cache_dir",
+                    &defaults.tune.cache_dir.to_string_lossy(),
+                )),
+                budget_ms: {
+                    let n = doc.int_or("tune.budget_ms", defaults.tune.budget_ms as i64);
+                    if n <= 0 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!("tune.budget_ms must be positive (got {n})"),
+                        });
+                    }
+                    n as u64
+                },
+                roofline_floor: {
+                    let f =
+                        doc.float_or("tune.roofline_floor", defaults.tune.roofline_floor);
+                    if !(f > 0.0 && f <= 1.0) {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "tune.roofline_floor must be in (0, 1] (got {f})"
+                            ),
+                        });
+                    }
+                    f
+                },
+                enabled: doc.bool_or("tune.enabled", defaults.tune.enabled),
             },
             artifacts_dir: PathBuf::from(doc.str_or("artifacts_dir", "artifacts")),
             seed: doc.int_or("seed", defaults.seed as i64) as u64,
@@ -412,6 +503,40 @@ force_comm = true
         assert_eq!(c.parallel.threads_per_rank, 12);
         assert!(c.parallel.force_comm);
         assert_eq!(c.seed, 99);
+    }
+
+    #[test]
+    fn tune_and_eo2_keys_parse_and_validate() {
+        let c = RunConfig::default();
+        assert!(!c.lattice.tiling_explicit, "default tiling is not pinned");
+        assert_eq!(c.parallel.eo2_schedule, None);
+        assert_eq!(c.parallel.eo2_granularity, None);
+        assert!(c.tune.enabled);
+
+        let doc = Document::parse(
+            "[lattice]\ntiling = \"4x4\"\n\
+             [parallel]\neo2_schedule = \"balanced\"\neo2_granularity = 8\n\
+             [tune]\ncache_dir = \"/tmp/tc\"\nbudget_ms = 500\n\
+             roofline_floor = 0.25\nenabled = false",
+        )
+        .unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert!(c.lattice.tiling_explicit, "present key pins the tiling");
+        assert_eq!(c.parallel.eo2_schedule, Some(Eo2Schedule::Balanced));
+        assert_eq!(c.parallel.eo2_granularity, Some(8));
+        assert_eq!(c.tune.cache_dir, PathBuf::from("/tmp/tc"));
+        assert_eq!(c.tune.budget_ms, 500);
+        assert!((c.tune.roofline_floor - 0.25).abs() < 1e-15);
+        assert!(!c.tune.enabled);
+
+        let doc = Document::parse("[parallel]\neo2_schedule = \"striped\"").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "bad schedule must fail");
+        let doc = Document::parse("[parallel]\neo2_granularity = 0").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "zero granularity must fail");
+        let doc = Document::parse("[tune]\nbudget_ms = 0").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "zero budget must fail");
+        let doc = Document::parse("[tune]\nroofline_floor = 1.5").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "floor > 1 must fail");
     }
 
     #[test]

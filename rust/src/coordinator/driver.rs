@@ -22,6 +22,28 @@ pub enum Eo2Schedule {
     Balanced,
 }
 
+impl Eo2Schedule {
+    /// Parse the CLI/config spelling ("uniform" | "balanced").
+    pub fn parse(s: &str) -> Result<Eo2Schedule, String> {
+        match s {
+            "uniform" => Ok(Eo2Schedule::Uniform),
+            "balanced" => Ok(Eo2Schedule::Balanced),
+            _ => Err(format!(
+                "eo2 schedule must be \"uniform\" or \"balanced\", got {s:?}"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for Eo2Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Eo2Schedule::Uniform => "uniform",
+            Eo2Schedule::Balanced => "balanced",
+        })
+    }
+}
+
 /// Message tag: direction, orientation, output parity.
 fn tag(dir: usize, upward: bool, p_out: Parity) -> u64 {
     ((p_out.index() as u64) << 8) | ((dir as u64) << 1) | u64::from(upward)
@@ -75,6 +97,21 @@ impl DistHopping {
         nthreads: usize,
         schedule: Eo2Schedule,
     ) -> DistHopping {
+        DistHopping::with_chunking(geom, force_comm, nthreads, schedule, 1)
+    }
+
+    /// [`Self::new`] with an explicit EO2 chunk-boundary granularity for
+    /// the balanced schedule (sites; 1 = exact cost boundaries). The
+    /// partition only moves WHICH thread merges which sites — the
+    /// per-site arithmetic is unchanged, so any granularity produces
+    /// bit-identical fields (pinned by `tests/tune.rs`).
+    pub fn with_chunking(
+        geom: &Geometry,
+        force_comm: bool,
+        nthreads: usize,
+        schedule: Eo2Schedule,
+        granularity: usize,
+    ) -> DistHopping {
         let comm_dirs =
             std::array::from_fn(|d| force_comm || geom.grid.0[d] > 1);
         let wrap = std::array::from_fn(|d| {
@@ -90,7 +127,9 @@ impl DistHopping {
         ];
         let chunks = std::array::from_fn(|p| match schedule {
             Eo2Schedule::Uniform => balance::uniform_chunks(plans[p].nsites, nthreads),
-            Eo2Schedule::Balanced => balance::balanced_chunks(&plans[p], nthreads),
+            Eo2Schedule::Balanced => {
+                balance::balanced_chunks_granular(&plans[p], nthreads, granularity)
+            }
         });
         let tail_chunks =
             std::array::from_fn(|p| balance::uniform_chunks(plans[p].nsites, nthreads));

@@ -22,15 +22,18 @@ pub enum Phase {
     Eo2 = 3,
     /// barrier / join time
     Barrier = 4,
+    /// solver BLAS sweeps (axpy/xpay/dot tails of the fused CG pipeline)
+    Blas = 5,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 5] = [
+    pub const ALL: [Phase; 6] = [
         Phase::Eo1,
         Phase::Bulk,
         Phase::CommWait,
         Phase::Eo2,
         Phase::Barrier,
+        Phase::Blas,
     ];
 
     pub fn label(self) -> &'static str {
@@ -40,11 +43,12 @@ impl Phase {
             Phase::CommWait => "comm-wait",
             Phase::Eo2 => "EO2(unpack)",
             Phase::Barrier => "barrier",
+            Phase::Blas => "blas",
         }
     }
 }
 
-const NPHASE: usize = 5;
+const NPHASE: usize = 6;
 
 /// Lock-free per-thread x per-phase nanosecond accumulators.
 #[derive(Debug)]
@@ -131,6 +135,14 @@ pub struct Report {
 }
 
 impl Report {
+    /// Number of threads the snapshot covers. Carried explicitly into
+    /// the JSON output because `imbalance` alone cannot distinguish a
+    /// single-thread report (max/mean trivially 1.0) from a genuinely
+    /// balanced many-thread one.
+    pub fn nthreads(&self) -> usize {
+        self.times.len()
+    }
+
     /// Total time of one phase across threads.
     pub fn phase_total(&self, phase: Phase) -> f64 {
         self.times.iter().map(|t| t[phase as usize]).sum()
@@ -156,6 +168,40 @@ impl Report {
         let segments: Vec<String> =
             Phase::ALL.iter().map(|p| p.label().to_string()).collect();
         crate::util::tables::stacked_bars(title, &labels, &segments, &self.times, 60)
+    }
+
+    /// Machine-readable profile (the `profile.json` of `lqcd solve
+    /// --profile`): thread count, per-phase totals + max/mean imbalance,
+    /// per-thread phase seconds and flops. Deterministic key order.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"threads\": {},\n", self.nthreads()));
+        s.push_str("  \"phases\": {\n");
+        for (i, &p) in Phase::ALL.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {{\"seconds\": {:.9}, \"imbalance\": {:.6}}}{}\n",
+                p.label(),
+                self.phase_total(p),
+                self.imbalance(p),
+                if i + 1 < Phase::ALL.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  },\n  \"per_thread\": [\n");
+        for tid in 0..self.nthreads() {
+            let times: Vec<String> = self.times[tid]
+                .iter()
+                .map(|t| format!("{t:.9}"))
+                .collect();
+            s.push_str(&format!(
+                "    {{\"tid\": {}, \"seconds\": [{}], \"flops\": {}}}{}\n",
+                tid,
+                times.join(", "),
+                self.flops[tid],
+                if tid + 1 < self.nthreads() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
     }
 }
 
@@ -217,5 +263,32 @@ mod tests {
         assert!(s.contains("thread  0"));
         assert!(s.contains("legend:"));
         assert!(s.contains("EO2"));
+    }
+
+    #[test]
+    fn json_reports_thread_count_and_parses() {
+        let p = Profiler::new(2);
+        p.add(0, Phase::Bulk, 1_000_000);
+        p.add(1, Phase::Blas, 500_000);
+        p.add_flops(0, 1234);
+        let text = p.snapshot().to_json();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(j.get("threads").unwrap().as_usize(), Some(2));
+        let phases = j.get("phases").unwrap();
+        let bulk_secs = phases
+            .get("bulk")
+            .unwrap()
+            .get("seconds")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(bulk_secs > 0.0);
+        let per = j.get("per_thread").unwrap().as_arr().unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].get("flops").unwrap().as_usize(), Some(1234));
+        assert_eq!(
+            per[1].get("seconds").unwrap().as_arr().unwrap().len(),
+            Phase::ALL.len()
+        );
     }
 }

@@ -40,12 +40,33 @@ impl Tiling {
 
     /// The Table 1 sweep for VLEN = 16.
     pub fn table1_sweep() -> Vec<Tiling> {
-        vec![
-            Tiling { vx: 16, vy: 1 },
-            Tiling { vx: 8, vy: 2 },
-            Tiling { vx: 4, vy: 4 },
-            Tiling { vx: 2, vy: 8 },
-        ]
+        Tiling::sweep_for_vlen(16)
+    }
+
+    /// All legal `VLENX x VLENY` shapes at a fixed vector length: every
+    /// divisor pair with `vx >= 2` (the even-odd restriction), largest
+    /// `vx` first, so `sweep_for_vlen(16)` is exactly the Table 1 family
+    /// 16x1, 8x2, 4x4, 2x8.
+    pub fn sweep_for_vlen(vlen: usize) -> Vec<Tiling> {
+        let mut out = Vec::new();
+        let mut vx = vlen;
+        while vx >= 2 {
+            if vlen % vx == 0 {
+                out.push(Tiling {
+                    vx,
+                    vy: vlen / vx,
+                });
+            }
+            vx -= 1;
+        }
+        out
+    }
+
+    /// Whether a local lattice can be laid out with this tiling: the
+    /// x-compacted extent must split into `vx` columns and y into `vy`
+    /// rows (the same constraint `Geometry::for_rank` enforces).
+    pub fn divides(self, dims: crate::lattice::LatticeDims) -> bool {
+        dims.xh() % self.vx == 0 && dims.y % self.vy == 0
     }
 
     #[inline]
@@ -120,5 +141,30 @@ mod tests {
             .collect();
         assert_eq!(shapes, vec![(16, 1), (8, 2), (4, 4), (2, 8)]);
         assert!(Tiling::table1_sweep().iter().all(|t| t.vlen() == 16));
+    }
+
+    #[test]
+    fn sweep_for_vlen_families() {
+        let shapes = |v: usize| -> Vec<(usize, usize)> {
+            Tiling::sweep_for_vlen(v)
+                .iter()
+                .map(|t| (t.vx(), t.vy()))
+                .collect()
+        };
+        assert_eq!(shapes(4), vec![(4, 1), (2, 2)]);
+        assert_eq!(shapes(8), vec![(8, 1), (4, 2), (2, 4)]);
+        assert_eq!(shapes(16), vec![(16, 1), (8, 2), (4, 4), (2, 8)]);
+        // vx = 1 shapes are excluded even though they divide vlen
+        assert!(Tiling::sweep_for_vlen(8).iter().all(|t| t.vx() >= 2));
+    }
+
+    #[test]
+    fn divides_checks_compacted_x_and_y() {
+        let dims = crate::lattice::LatticeDims::new(8, 4, 4, 4).unwrap();
+        // xh = 4
+        assert!(Tiling::new(4, 4).unwrap().divides(dims));
+        assert!(Tiling::new(2, 2).unwrap().divides(dims));
+        assert!(!Tiling::new(8, 2).unwrap().divides(dims)); // 4 % 8 != 0
+        assert!(!Tiling::new(2, 8).unwrap().divides(dims)); // 4 % 8 != 0
     }
 }

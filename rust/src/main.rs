@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   info                     machine model + host calibration + manifest
 //!   solve                    even-odd CG/BiCGStab solve (native or PJRT)
+//!   tune                     autotune tiling/threads/EO2 chunking, cache result
 //!   bench-table1             Table 1: 2D tiling sweep
 //!   bench-fig8               Fig 8: gather vs shuffle cycle accounting
 //!   bench-fig9               Fig 9: EO1/EO2 thread accounting (+balanced)
@@ -20,12 +21,17 @@ use lqcd::coordinator::operator::{
     DistMultiMdagM, DistMultiMeo, LinearOperator, MultiMdagM, MultiNativeMeo,
     MultiOperator, NativeMdagM, NativeMeo,
 };
-use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Report, Team};
 use lqcd::dslash::{Compression, Links};
 use lqcd::field::{FermionField, GaugeField, MultiFermionField};
 use lqcd::harness::{self, Opts};
 use lqcd::lattice::{Geometry, LatticeDims, Parity, ProcGrid, Tiling};
-use lqcd::perf::{auto_solver_threads_capped, calibrate_host, A64fx};
+use lqcd::perf::tune::{
+    CacheLookup, ExplicitKnobs, HostFingerprint, KnobSource, TuneCache, TuneOptions,
+};
+use lqcd::perf::{
+    auto_solver_threads_capped, calibrate_host, run_tune, A64fx, AutoThreadBound,
+};
 use lqcd::solver::{self, InnerAlgorithm};
 use lqcd::util::cli;
 use lqcd::util::rng::Rng;
@@ -33,7 +39,8 @@ use lqcd::util::rng::Rng;
 const VALUE_OPTS: &[&str] = &[
     "dims", "tiling", "threads", "iters", "config", "kappa", "tol", "maxiter",
     "algorithm", "artifacts", "seed", "precision", "inner-tol", "max-outer",
-    "nrhs", "gauge-compression", "grid",
+    "nrhs", "gauge-compression", "grid", "eo2-schedule", "eo2-granularity",
+    "tune-cache", "budget-ms",
 ];
 
 fn main() -> ExitCode {
@@ -60,6 +67,7 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
     }
     if let Some(t) = args.get("tiling") {
         cfg.lattice.tiling = Tiling::parse(t)?;
+        cfg.lattice.tiling_explicit = true;
     }
     if let Some(g) = args.get("grid") {
         cfg.lattice.grid = ProcGrid::parse(g)?;
@@ -108,6 +116,29 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
     if let Some(c) = args.get("gauge-compression") {
         cfg.gauge.compression = Compression::parse(c)?;
     }
+    if let Some(s) = args.get("eo2-schedule") {
+        cfg.parallel.eo2_schedule = Some(Eo2Schedule::parse(s)?);
+    }
+    if let Some(g) = args.get("eo2-granularity") {
+        let g: usize = g
+            .parse()
+            .map_err(|_| format!("--eo2-granularity: cannot parse {g:?}"))?;
+        if g == 0 {
+            return Err("--eo2-granularity must be positive".into());
+        }
+        cfg.parallel.eo2_granularity = Some(g);
+    }
+    if let Some(d) = args.get("tune-cache") {
+        cfg.tune.cache_dir = d.into();
+    }
+    cfg.tune.budget_ms = args.get_parse("budget-ms", cfg.tune.budget_ms)?;
+    if cfg.tune.budget_ms == 0 {
+        return Err("--budget-ms must be positive".into());
+    }
+    if args.flag("no-tune") {
+        cfg.tune.enabled = false;
+    }
+    let profile = args.flag("profile");
     let use_pjrt = args.flag("pjrt") || cfg.solver.use_pjrt;
     let opts = Opts {
         iters: args.get_parse("iters", if args.flag("quick") { 10 } else { 50 })?,
@@ -118,7 +149,8 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
 
     match cmd.as_str() {
         "info" => info(&cfg),
-        "solve" => solve(&cfg, use_pjrt),
+        "solve" => solve(&cfg, use_pjrt, profile),
+        "tune" => tune(&cfg, opts.quick),
         "bench-table1" => {
             let (report, _) = harness::table1::run(opts);
             println!("{report}");
@@ -164,8 +196,12 @@ fn info(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
     );
     let host = calibrate_host();
     println!(
-        "this host: ~{:.1} GFlops/core f32 (measured), ~{:.1} GB/s stream,",
+        "this host: ~{:.1} GFlops/core f32 (measured), ~{:.1} GB/s triad (1 thread),",
         host.core_sp_gflops, host.mem_bw_gbs
+    );
+    println!(
+        "  ~{:.1} GB/s saturated at {} threads,",
+        host.mem_bw_saturated_gbs, host.saturation_threads
     );
     println!(
         "  host B/F=1.12 roofline = {:.1} GFlops",
@@ -192,49 +228,235 @@ fn info(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
-/// Resolve `solver.threads`, auto-deriving (and logging) a team size
-/// from the machine model when the config leaves it unset. Distributed
-/// configs (`nranks > 1`) clamp the auto choice by
+/// `lqcd tune`: calibrate the host, sweep the empirical knobs on the
+/// configured lattice, and persist the per-machine cache that
+/// subsequent `lqcd solve` runs resolve their knobs from.
+fn tune(cfg: &RunConfig, quick: bool) -> Result<(), Box<dyn std::error::Error>> {
+    let dims = cfg.lattice.global;
+    println!("calibrating host (STREAM-triad thread sweep + FMA chains) ...");
+    let host = calibrate_host();
+    println!(
+        "  ~{:.1} GFlops/core f32, triad {:.1} GB/s (1 thread), \
+         {:.1} GB/s saturated at {} threads",
+        host.core_sp_gflops,
+        host.mem_bw_gbs,
+        host.mem_bw_saturated_gbs,
+        host.saturation_threads,
+    );
+    let opts = TuneOptions {
+        dims,
+        seed: cfg.seed,
+        budget_ms: cfg.tune.budget_ms,
+        quick,
+    };
+    println!(
+        "tuning on {} (budget {} ms{}) ...",
+        dims,
+        cfg.tune.budget_ms,
+        if quick { ", --quick" } else { "" },
+    );
+    let m = run_tune(&host, &opts);
+    for s in &m.tilings {
+        println!(
+            "  tiling {:>5}: {:9.3} us/apply, {:6.1} GB/s",
+            s.tiling.to_string(),
+            s.seconds_per_apply * 1e6,
+            s.gbs,
+        );
+    }
+    for s in &m.threads {
+        println!(
+            "  threads {:>3}: {:9.3} us/iter,  {:6.1} GB/s",
+            s.threads,
+            s.seconds_per_iter * 1e6,
+            s.gbs,
+        );
+    }
+    for s in &m.chunks {
+        println!(
+            "  eo2 {:>8}/{:<2}: {:9.3} us/apply, EO2 imbalance {:.2}",
+            s.schedule.to_string(),
+            s.granularity,
+            s.seconds_per_apply * 1e6,
+            s.eo2_imbalance,
+        );
+    }
+    let fp = HostFingerprint::new(num_cores(), host.mem_bw_saturated_gbs, dims);
+    let cache = TuneCache::from_measurements(fp, m);
+    let c = &cache.choice;
+    println!(
+        "chosen: tiling {}, threads {} (bandwidth knee), eo2 {}/{}; \
+         fitted roofline {:.1} GB/s",
+        c.tiling, c.threads, c.eo2_schedule, c.eo2_granularity, c.roofline_gbs,
+    );
+    let path = cache.save(&cfg.tune.cache_dir)?;
+    println!("tune cache written: {}", path.display());
+    Ok(())
+}
+
+fn num_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// The per-rank lattice the solve actually runs — what the tune cache
+/// is keyed by (tuning measures single-rank kernels at local volume).
+fn local_dims_for(cfg: &RunConfig, nranks: usize) -> LatticeDims {
+    if nranks <= 1 {
+        return cfg.lattice.global;
+    }
+    let g = cfg.lattice.global;
+    let p = cfg.lattice.grid.0;
+    LatticeDims::new(
+        g.x / p[0].max(1),
+        g.y / p[1].max(1),
+        g.z / p[2].max(1),
+        g.t / p[3].max(1),
+    )
+    .unwrap_or(g)
+}
+
+/// Knob values every solve path consumes, after full resolution.
+struct Knobs {
+    threads: usize,
+    eo2_schedule: Eo2Schedule,
+    eo2_granularity: usize,
+    /// per-knob provenance line (also stored in `SolveStats`)
+    summary: String,
+}
+
+/// Resolve every performance knob as CLI/config → tune cache → static
+/// heuristic, logging the cache-lookup outcome and which source won
+/// each knob. The resolved tiling is written back into `cfg` so the
+/// geometry construction downstream picks it up. Distributed configs
+/// (`nranks > 1`) clamp the auto/tuned team size by
 /// `parallel.threads_per_rank`: every rank lives on this one simulated
 /// node, so sizing each team from the whole machine's core count would
-/// oversubscribe it nranks-fold. The log says which bound won; the
-/// choice is also recorded in the solve's `SolveStats.threads`.
-fn resolve_threads(cfg: &RunConfig, nranks: usize) -> usize {
-    match cfg.solver.threads {
-        Some(t) => t,
-        None => {
-            let cap = (nranks > 1).then_some(cfg.parallel.threads_per_rank);
-            let (t, bound) = auto_solver_threads_capped(cap);
-            println!("solver.threads unset: auto-selected {t} worker threads ({bound})");
+/// oversubscribe it nranks-fold.
+fn resolve_solve_knobs(cfg: &mut RunConfig, nranks: usize) -> Knobs {
+    let local_dims = local_dims_for(cfg, nranks);
+    let cache: Option<TuneCache> = if cfg.tune.enabled {
+        match TuneCache::load_for_host(&cfg.tune.cache_dir, num_cores(), local_dims) {
+            CacheLookup::Hit(c) => {
+                println!(
+                    "tune cache: hit in {} (tiling {}, threads {}, eo2 {}/{})",
+                    cfg.tune.cache_dir.display(),
+                    c.choice.tiling,
+                    c.choice.threads,
+                    c.choice.eo2_schedule,
+                    c.choice.eo2_granularity,
+                );
+                Some(*c)
+            }
+            CacheLookup::Stale { found, want } => {
+                println!(
+                    "tune cache: stale ({found}; this run wants {want}) — ignoring it; \
+                     re-run `lqcd tune` to refresh"
+                );
+                None
+            }
+            CacheLookup::Corrupt(msg) => {
+                eprintln!("warning: tune cache unreadable ({msg}); using heuristics");
+                None
+            }
+            CacheLookup::Missing => None,
+        }
+    } else {
+        None
+    };
+    let explicit = ExplicitKnobs {
+        tiling: cfg.lattice.tiling_explicit.then_some(cfg.lattice.tiling),
+        threads: cfg.solver.threads,
+        eo2_schedule: cfg.parallel.eo2_schedule,
+        eo2_granularity: cfg.parallel.eo2_granularity,
+    };
+    let cap = (nranks > 1).then_some(cfg.parallel.threads_per_rank);
+    let (auto_threads, auto_bound) = auto_solver_threads_capped(cap);
+    let r = lqcd::perf::resolve_knobs(
+        &explicit,
+        cache.as_ref(),
+        local_dims,
+        cfg.lattice.tiling,
+        auto_threads,
+    );
+    cfg.lattice.tiling = r.tiling.0;
+    let threads = match r.threads {
+        (t, KnobSource::Cli) => t,
+        (t, KnobSource::Cache) => {
+            let t = match cap {
+                Some(c) => t.min(c.max(1)),
+                None => t,
+            };
+            println!(
+                "solver.threads unset: auto-selected {t} worker threads ({})",
+                AutoThreadBound::Tuned
+            );
             t
         }
+        (t, KnobSource::Heuristic) => {
+            println!("solver.threads unset: auto-selected {t} worker threads ({auto_bound})");
+            t
+        }
+    };
+    let summary = r.summary();
+    println!("knob resolution: {summary}");
+    Knobs {
+        threads,
+        eo2_schedule: r.eo2_schedule.0,
+        eo2_granularity: r.eo2_granularity.0,
+        summary,
     }
 }
 
-fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Error>> {
+/// Render the profiler snapshot and write the machine-readable
+/// `profile.json` next to the artifacts (`lqcd solve --profile`).
+fn emit_profile(
+    report: &Report,
+    dir: &std::path::Path,
+) -> Result<(), Box<dyn std::error::Error>> {
+    println!("{}", report.render("solve: per-thread phase seconds"));
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join("profile.json");
+    std::fs::write(&path, report.to_json())?;
+    println!("profile written: {}", path.display());
+    Ok(())
+}
+
+fn solve(
+    cfg: &RunConfig,
+    use_pjrt: bool,
+    profile: bool,
+) -> Result<(), Box<dyn std::error::Error>> {
     // every rejected flag combination is reported here, all at once —
     // the per-branch checks this replaces each only saw the first
     // offense on their own path
     cfg.validate_solve(use_pjrt)?;
     let nranks = cfg.lattice.grid.size();
+    let mut cfg = cfg.clone();
+    let knobs = resolve_solve_knobs(&mut cfg, nranks);
+    let cfg = &cfg;
     if nranks > 1 {
         // rank-decomposed path: grid × nrhs × compression compose
         return match cfg.solver.precision.as_str() {
-            "f64" => solve_distributed::<f64>(cfg),
-            _ => solve_distributed::<f32>(cfg),
+            "f64" => solve_distributed::<f64>(cfg, &knobs, profile),
+            _ => solve_distributed::<f32>(cfg, &knobs, profile),
         };
     }
     if cfg.solver.nrhs > 1 {
         return match cfg.solver.precision.as_str() {
-            "f64" => solve_block::<f64>(cfg),
-            _ => solve_block::<f32>(cfg),
+            "f64" => solve_block::<f64>(cfg, &knobs, profile),
+            _ => solve_block::<f32>(cfg, &knobs, profile),
         };
     }
     match cfg.solver.precision.as_str() {
-        "f64" => return solve_native::<f64>(cfg),
-        "mixed" => return solve_mixed(cfg),
-        _ if !use_pjrt => return solve_native::<f32>(cfg),
+        "f64" => return solve_native::<f64>(cfg, &knobs, profile),
+        "mixed" => return solve_mixed(cfg, &knobs, profile),
+        _ if !use_pjrt => return solve_native::<f32>(cfg, &knobs, profile),
         _ => {}
+    }
+    if profile {
+        eprintln!("warning: --profile is not wired into the PJRT path; ignoring");
     }
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
@@ -275,10 +497,14 @@ fn solve(cfg: &RunConfig, use_pjrt: bool) -> Result<(), Box<dyn std::error::Erro
 /// pipeline: whole iterations run on the worker team
 /// (`solver.threads` / `--threads`), with the kernel tails and
 /// reductions fused into 3 (CG) / 6 (BiCGStab) sweeps per iteration.
-fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
+fn solve_native<R: Real>(
+    cfg: &RunConfig,
+    knobs: &Knobs,
+    profile: bool,
+) -> Result<(), Box<dyn std::error::Error>> {
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
-    let threads = resolve_threads(cfg, 1);
+    let threads = knobs.threads;
     let mut rng = Rng::seeded(cfg.seed);
     println!(
         "generating random gauge configuration on {} ({}, {} threads) ...",
@@ -295,13 +521,20 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
         println!("gauge compression: two-row (12 reals/link streamed, third row rebuilt in-kernel)");
     }
     let mut team = Team::new(threads, BarrierKind::Sleep);
+    let prof = profile.then(|| Profiler::new(threads));
 
     let sw = lqcd::util::timer::Stopwatch::start();
-    let stats = if cfg.solver.algorithm == "bicgstab" {
+    let mut stats = if cfg.solver.algorithm == "bicgstab" {
         let mut op = NativeMeo::with_links(&geom, links, kappa);
         let mut x = FermionField::zeros(&geom);
-        let stats = solver::fused::bicgstab(
-            &mut op, &mut team, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter,
+        let stats = solver::fused::bicgstab_profiled(
+            &mut op,
+            &mut team,
+            &mut x,
+            &b,
+            cfg.solver.tol,
+            cfg.solver.maxiter,
+            prof.as_ref(),
         );
         println!(
             "true |Mx-b|/|b| = {:.3e}",
@@ -316,8 +549,14 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
         op.meo().apply(&mut mbp, &bp);
         mbp.gamma5();
         let mut x = FermionField::zeros(&geom);
-        let stats = solver::fused::cg(
-            &mut op, &mut team, &mut x, &mbp, cfg.solver.tol, cfg.solver.maxiter,
+        let stats = solver::fused::cg_profiled(
+            &mut op,
+            &mut team,
+            &mut x,
+            &mbp,
+            cfg.solver.tol,
+            cfg.solver.maxiter,
+            prof.as_ref(),
         );
         println!(
             "true |MdagM x - Mdag b|/|Mdag b| = {:.3e}",
@@ -326,6 +565,7 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
         stats
     };
     let secs = sw.secs();
+    stats.knob_sources = Some(knobs.summary.clone());
     println!(
         "{}({}): {} iterations, converged={}, rel residual {:.3e}, {:.2}s, \
          {:.2} GFlops, {:.0} sweeps/iter, {} threads",
@@ -339,6 +579,9 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
         stats.sweeps_per_iter,
         stats.threads,
     );
+    if let Some(p) = &prof {
+        emit_profile(&p.snapshot(), &cfg.artifacts_dir)?;
+    }
     Ok(())
 }
 
@@ -347,10 +590,17 @@ fn solve_native<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Erro
 /// solver — the gauge field is streamed once per sweep for all N
 /// systems, and converged systems drop out of the kernel work via the
 /// per-RHS masks.
-fn solve_block<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
+fn solve_block<R: Real>(
+    cfg: &RunConfig,
+    knobs: &Knobs,
+    profile: bool,
+) -> Result<(), Box<dyn std::error::Error>> {
+    if profile {
+        eprintln!("warning: --profile is not wired into the block solver yet; ignoring");
+    }
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
-    let threads = resolve_threads(cfg, 1);
+    let threads = knobs.threads;
     let nrhs = cfg.solver.nrhs;
     let mut rng = Rng::seeded(cfg.seed);
     println!(
@@ -425,6 +675,7 @@ fn solve_block<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error
         stats.flops as f64 / secs / 1e9,
         stats.threads,
     );
+    println!("knobs: {}", knobs.summary);
     Ok(())
 }
 
@@ -439,6 +690,8 @@ fn solve_block<R: Real>(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error
 /// `--gauge-compression` compose freely at f32/f64.
 fn solve_distributed<R: Real + CommScalar>(
     cfg: &RunConfig,
+    knobs: &Knobs,
+    profile: bool,
 ) -> Result<(), Box<dyn std::error::Error>> {
     let grid = cfg.lattice.grid;
     let nranks = grid.size();
@@ -449,7 +702,7 @@ fn solve_distributed<R: Real + CommScalar>(
     // thread panic)
     Geometry::for_rank(cfg.lattice.global, grid, 0, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
-    let threads = resolve_threads(cfg, nranks);
+    let threads = knobs.threads;
     let mut rng = Rng::seeded(cfg.seed);
     println!(
         "generating random gauge configuration on {} ({}, grid {:?} = {} ranks, \
@@ -477,6 +730,7 @@ fn solve_distributed<R: Real + CommScalar>(
     let (tol, maxiter) = (cfg.solver.tol, cfg.solver.maxiter);
     let force_comm = cfg.parallel.force_comm;
     let compression = cfg.gauge.compression;
+    let (eo2_schedule, eo2_granularity) = (knobs.eo2_schedule, knobs.eo2_granularity);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let results = run_world(nranks, |rank, comm| {
@@ -486,7 +740,13 @@ fn solve_distributed<R: Real + CommScalar>(
             .iter()
             .map(|s| extract_fermion(s, &ggeom, &lgeom))
             .collect();
-        let dist = DistHopping::new(&lgeom, force_comm, threads, Eo2Schedule::Uniform);
+        let dist = DistHopping::with_chunking(
+            &lgeom,
+            force_comm,
+            threads,
+            eo2_schedule,
+            eo2_granularity,
+        );
         let mut team = Team::new(threads, BarrierKind::Sleep);
         let prof = Profiler::new(threads);
         let mut x = MultiFermionField::<R>::zeros(&lgeom, nrhs);
@@ -522,7 +782,7 @@ fn solve_distributed<R: Real + CommScalar>(
                 solver::block_cg_generic(&mut op, &mut team, &mut x, &mbp, tol, maxiter);
             (mbp, stats)
         };
-        (x.demux(), rhs.demux(), stats)
+        (x.demux(), rhs.demux(), stats, prof.snapshot())
     });
     let secs = sw.secs();
 
@@ -532,7 +792,7 @@ fn solve_distributed<R: Real + CommScalar>(
         (0..nrhs).map(|_| FermionField::zeros(&ggeom)).collect();
     let mut rhs: Vec<FermionField<R>> =
         (0..nrhs).map(|_| FermionField::zeros(&ggeom)).collect();
-    for (rank, (xl, rl, _)) in results.iter().enumerate() {
+    for (rank, (xl, rl, _, _)) in results.iter().enumerate() {
         let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
         for r in 0..nrhs {
             insert_fermion(&mut xs[r], &xl[r], &lgeom);
@@ -598,6 +858,12 @@ fn solve_distributed<R: Real + CommScalar>(
         secs,
         stats.threads,
     );
+    println!("knobs: {}", knobs.summary);
+    if profile {
+        // rank 0's per-thread phase stacks (the profiler is threaded
+        // through every distributed hopping already)
+        emit_profile(&results[0].3, &cfg.artifacts_dir)?;
+    }
     Ok(())
 }
 
@@ -617,10 +883,17 @@ fn worst_true_residual<R: Real, A: LinearOperator<R>>(
 
 /// Mixed-precision solve: f64 outer iterative refinement, f32 inner
 /// CG/BiCGStab (`--precision mixed`).
-fn solve_mixed(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
+fn solve_mixed(
+    cfg: &RunConfig,
+    knobs: &Knobs,
+    profile: bool,
+) -> Result<(), Box<dyn std::error::Error>> {
+    if profile {
+        eprintln!("warning: --profile is not wired into the mixed-precision path yet; ignoring");
+    }
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
-    let threads = resolve_threads(cfg, 1);
+    let threads = knobs.threads;
     let mut rng = Rng::seeded(cfg.seed);
     println!(
         "generating random gauge configuration on {} (mixed f64/f32, {} threads) ...",
@@ -716,6 +989,10 @@ USAGE: lqcd <command> [options]
 COMMANDS:
   info          machine model, host calibration, artifact inventory
   solve         even-odd preconditioned solve on a random gauge field
+  tune          measure tiling/threads/EO2-chunking on this host and write
+                the per-machine tune cache that later solves resolve their
+                performance knobs from (knob precedence: CLI/config >
+                tune cache > static heuristic; --quick for a CI-sized sweep)
   bench-table1  Table 1: 2D SIMD tiling sweep (GFlops)
   bench-fig8    Fig 8: gather/scatter vs shuffle bulk kernel accounting
   bench-fig9    Fig 9: EO1/EO2 per-thread load (+ balanced extension)
@@ -754,5 +1031,17 @@ OPTIONS:
   --pjrt               execute the AOT artifacts on the hot path (f32)
   --artifacts DIR      artifact directory (default ./artifacts)
   --config FILE        TOML-subset run configuration
-  --quick              smaller lattices/iterations
+  --quick              smaller lattices/iterations; for `tune`, a CI-sized sweep
+  --eo2-schedule uniform|balanced
+                       distributed EO2 merge partition (unset = tune cache
+                       or heuristic)
+  --eo2-granularity N  boundary-site granularity of the balanced EO2
+                       partition (unset = tune cache or heuristic)
+  --tune-cache DIR     tune-cache directory (default ./tune-cache)
+  --budget-ms N        total wall budget of a `tune` sweep (default 3000)
+  --no-tune            ignore the tune cache: knobs come from CLI/config
+                       or the static heuristics only
+  --profile            render per-thread phase bars after the solve and
+                       write profile.json to the artifacts dir (native
+                       fused + distributed paths)
 ";

@@ -48,11 +48,88 @@ impl A64fx {
 pub struct HostCalibration {
     /// single-core f32 FMA throughput estimate, GFlops
     pub core_sp_gflops: f64,
-    /// large-buffer streaming read bandwidth, GB/s
+    /// single-thread STREAM-triad bandwidth (read+read+write), GB/s
     pub mem_bw_gbs: f64,
+    /// saturated multi-threaded STREAM-triad bandwidth, GB/s — the
+    /// whole-host memory roofline (a single thread rarely drives the
+    /// full bus; the old read-only single-thread sweep underestimated
+    /// multi-core hosts badly)
+    pub mem_bw_saturated_gbs: f64,
+    /// smallest thread count that reached the saturated bandwidth
+    /// (within [`SATURATION_FRACTION`]) — the measured knee
+    pub saturation_threads: usize,
 }
 
-/// Quick (~100 ms) calibration of this host.
+/// A thread count "saturates" the memory bus once it reaches this
+/// fraction of the best bandwidth any count achieved.
+pub const SATURATION_FRACTION: f64 = 0.95;
+
+/// One STREAM-triad pass `a[i] = b[i] + s * c[i]`: two read streams and
+/// one write stream per element, the canonical bandwidth kernel.
+fn triad_pass(a: &mut [f32], b: &[f32], c: &[f32], s: f32) {
+    for ((x, &y), &z) in a.iter_mut().zip(b.iter()).zip(c.iter()) {
+        *x = y + s * z;
+    }
+}
+
+/// STREAM-triad bandwidth at a fixed thread count, GB/s. Each thread
+/// owns a private a/b/c triple (first-touch local), all threads start
+/// together behind a barrier, and the wall time covers `reps` passes.
+pub fn triad_bw_gbs(nthreads: usize, elems_per_thread: usize, reps: usize) -> f64 {
+    let nthreads = nthreads.max(1);
+    let start = std::sync::Barrier::new(nthreads);
+    let mut dt = 0.0f64;
+    std::thread::scope(|scope| {
+        let start = &start;
+        let mut handles = Vec::with_capacity(nthreads - 1);
+        for _ in 1..nthreads {
+            handles.push(scope.spawn(move || {
+                let mut a = vec![0.0f32; elems_per_thread];
+                let b = vec![1.0f32; elems_per_thread];
+                let c = vec![2.0f32; elems_per_thread];
+                start.wait();
+                for _ in 0..reps {
+                    triad_pass(&mut a, &b, &c, 3.0);
+                }
+                std::hint::black_box(a[0]);
+            }));
+        }
+        // the caller participates as thread 0 and owns the clock
+        let mut a = vec![0.0f32; elems_per_thread];
+        let b = vec![1.0f32; elems_per_thread];
+        let c = vec![2.0f32; elems_per_thread];
+        start.wait();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            triad_pass(&mut a, &b, &c, 3.0);
+        }
+        std::hint::black_box(a[0]);
+        for h in handles {
+            h.join().unwrap();
+        }
+        dt = t0.elapsed().as_secs_f64();
+    });
+    let bytes = 3 * 4 * elems_per_thread * nthreads * reps;
+    bytes as f64 / dt.max(1e-9) / 1e9
+}
+
+/// The thread counts the triad sweep samples on a host with `cores`
+/// cores: 1, doubling up to the core count, always ending at `cores`.
+pub fn triad_thread_sweep(cores: usize) -> Vec<usize> {
+    let cores = cores.max(1);
+    let mut counts = vec![1usize];
+    let mut t = 2;
+    while t < cores {
+        counts.push(t);
+        t *= 2;
+    }
+    if cores > 1 {
+        counts.push(cores);
+    }
+    counts
+}
+
+/// Quick (~hundreds of ms) calibration of this host.
 pub fn calibrate_host() -> HostCalibration {
     // --- FMA throughput: 8 independent f32x8 accumulator chains ---------
     const LANES: usize = 8;
@@ -76,32 +153,43 @@ pub fn calibrate_host() -> HostCalibration {
     let flops = (iters * CHAINS * LANES * 2) as f64;
     let core_sp_gflops = flops / dt / 1e9;
 
-    // --- streaming bandwidth: sum a buffer much larger than LLC ---------
-    let n = 64 * 1024 * 1024 / 4; // 64 MiB of f32
-    let buf = vec![1.0f32; n];
-    let t0 = Instant::now();
-    let mut total = 0.0f32;
-    for chunk in buf.chunks_exact(16) {
-        let mut s = 0.0f32;
-        for &v in chunk {
-            s += v;
+    // --- streaming bandwidth: multi-threaded STREAM triad ---------------
+    // Total working set ~96 MiB (far past any LLC) split across the
+    // threads; swept over 1, 2, 4, ... cores to find both the 1-thread
+    // number and the saturated whole-host bandwidth.
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let total_elems = 32 * 1024 * 1024 / 4; // 32 MiB per array, 3 arrays
+    let mut mem_bw_gbs = 0.0;
+    let mut samples: Vec<(usize, f64)> = Vec::new();
+    for &t in &triad_thread_sweep(cores) {
+        let gbs = triad_bw_gbs(t, total_elems / t, 2);
+        if t == 1 {
+            mem_bw_gbs = gbs;
         }
-        total += s;
+        samples.push((t, gbs));
     }
-    let dt = t0.elapsed().as_secs_f64();
-    std::hint::black_box(total);
-    let mem_bw_gbs = (n * 4) as f64 / dt / 1e9;
+    let best = samples.iter().map(|&(_, g)| g).fold(0.0, f64::max);
+    let saturation_threads = samples
+        .iter()
+        .find(|&&(_, g)| g >= SATURATION_FRACTION * best)
+        .map(|&(t, _)| t)
+        .unwrap_or(1);
 
     HostCalibration {
         core_sp_gflops,
         mem_bw_gbs,
+        mem_bw_saturated_gbs: best,
+        saturation_threads,
     }
 }
 
 impl HostCalibration {
-    /// Memory-roofline bound on this host for byte/flop ratio `bf`.
+    /// Memory-roofline bound on this host for byte/flop ratio `bf`,
+    /// from the saturated (whole-host) bandwidth.
     pub fn mem_roofline_gflops(&self, bf: f64) -> f64 {
-        self.mem_bw_gbs / bf
+        self.mem_bw_saturated_gbs / bf
     }
 }
 
@@ -139,6 +227,9 @@ pub enum AutoThreadBound {
     /// several ranks on this node, so the team must not size itself from
     /// the whole machine
     RankCap,
+    /// taken from the per-machine tune cache: the bandwidth-saturation
+    /// knee `lqcd tune` measured on this host, not the cores/2 guess
+    Tuned,
 }
 
 impl std::fmt::Display for AutoThreadBound {
@@ -149,6 +240,9 @@ impl std::fmt::Display for AutoThreadBound {
             }
             AutoThreadBound::RankCap => {
                 "clamped by parallel.threads_per_rank (multiple ranks share this machine)"
+            }
+            AutoThreadBound::Tuned => {
+                "measured bandwidth-saturation knee from the tune cache"
             }
         })
     }
@@ -244,5 +338,25 @@ mod tests {
             "{h:?}"
         );
         assert!(h.mem_bw_gbs > 0.05 && h.mem_bw_gbs < 10_000.0, "{h:?}");
+        // saturated bandwidth is never below a modest fraction of the
+        // 1-thread number (same kernel, more streams; allow scheduler
+        // jitter on loaded machines)
+        assert!(h.mem_bw_saturated_gbs > 0.5 * h.mem_bw_gbs, "{h:?}");
+        assert!(h.saturation_threads >= 1, "{h:?}");
+    }
+
+    #[test]
+    fn triad_thread_sweep_shape() {
+        assert_eq!(triad_thread_sweep(1), vec![1]);
+        assert_eq!(triad_thread_sweep(2), vec![1, 2]);
+        assert_eq!(triad_thread_sweep(6), vec![1, 2, 4, 6]);
+        assert_eq!(triad_thread_sweep(8), vec![1, 2, 4, 8]);
+        assert_eq!(triad_thread_sweep(48), vec![1, 2, 4, 8, 16, 32, 48]);
+    }
+
+    #[test]
+    fn triad_measures_positive_bandwidth() {
+        let gbs = triad_bw_gbs(2, 64 * 1024, 2);
+        assert!(gbs > 0.0 && gbs.is_finite(), "{gbs}");
     }
 }

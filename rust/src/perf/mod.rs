@@ -1,10 +1,18 @@
-//! Performance models: the A64FX machine model, host calibration, and
-//! roofline / efficiency conversions (DESIGN.md sections 4, 10).
+//! Performance models: the A64FX machine model, host calibration,
+//! roofline / efficiency conversions (DESIGN.md sections 4, 10), and
+//! the profiler-driven autotuner behind `lqcd tune`.
 
 pub mod machine;
 pub mod roofline;
+pub mod tune;
 
 pub use machine::{
     auto_solver_threads, auto_solver_threads_capped, auto_solver_threads_capped_for,
-    auto_solver_threads_for, calibrate_host, A64fx, AutoThreadBound, HostCalibration,
+    auto_solver_threads_for, calibrate_host, triad_bw_gbs, triad_thread_sweep, A64fx,
+    AutoThreadBound, HostCalibration, SATURATION_FRACTION,
+};
+pub use tune::{
+    resolve_knobs, run_tune, CacheLookup, ExplicitKnobs, HostFingerprint, KnobSource,
+    Measurements, ResolvedKnobs, TuneCache, TuneChoice, TuneOptions, KNEE_FRACTION,
+    TUNE_CACHE_VERSION,
 };

@@ -1,11 +1,93 @@
 //! Byte/flop accounting and roofline/efficiency conversions between this
 //! host and the paper's A64FX numbers.
+//!
+//! The `*_bytes` models below are the single source of truth for
+//! "bytes one iteration streams through memory": the solver bench uses
+//! them to report effective GB/s, and the `perf::tune` sweeps use the
+//! same models so a fitted roofline and a bench measurement are
+//! directly comparable (ISSUE 6 / ROADMAP item 5).
 
-use crate::lattice::LatticeDims;
+use crate::lattice::{EoLayout, Geometry, LatticeDims};
 
 /// Bytes touched per site by one Wilson matrix application in single
 /// precision: the paper quotes B/F = 1.12 at 1368 flop/site.
 pub const WILSON_BF: f64 = 1.12;
+
+/// Bytes of one even/odd spinor field at `elem_bytes` per real.
+pub fn spinor_field_bytes(geom: &Geometry, elem_bytes: usize) -> u64 {
+    (EoLayout::new(geom).spinor_len() * elem_bytes) as u64
+}
+
+/// Bytes of the full gauge stream (8 link blocks: 4 directions x 2
+/// parities) at `reals_per_link` reals each (18 full, 12 two-row).
+pub fn gauge_stream_bytes(geom: &Geometry, elem_bytes: usize, reals_per_link: usize) -> u64 {
+    let layout = EoLayout::new(geom);
+    (8 * layout.ntiles() * reals_per_link * layout.vlen() * elem_bytes) as u64
+}
+
+/// Bytes one M-hat (even-odd Wilson) application streams: two hopping
+/// passes — each reading the source spinor and gauge blocks and writing
+/// the destination — plus the fused `-kappa²` xpay tail's re-read of
+/// the input field.
+pub fn meo_apply_bytes(geom: &Geometry, elem_bytes: usize, reals_per_link: usize) -> u64 {
+    let f = spinor_field_bytes(geom, elem_bytes);
+    let g = gauge_stream_bytes(geom, elem_bytes, reals_per_link);
+    2 * (2 * f + g) + f
+}
+
+/// Bytes one CGNR iteration streams through memory (model).
+///
+/// The normal operator apply is 4 hopping passes; each streams the
+/// source field in, the destination field out, and the 8 gauge blocks
+/// (4 directions x 2 parities). The fused pipeline adds the tail reads
+/// (`b` of the xpay tail, twice) and the dot-capture re-read of `p`
+/// inside the apply, then two BLAS passes (combined x/r update: 4 reads
+/// + 2 writes; p xpay: 2 reads + 1 write). The unfused reference
+/// (`UnfusedMdagM`, the pre-fusion pipeline) runs the same 4 hopping
+/// passes plus two in-place gamma5 passes, two 3-stream xpay tails, and
+/// the dot / axpy / axpy / norm² / xpay chain as separate passes.
+pub fn cg_iter_bytes(geom: &Geometry, elem_bytes: usize, fused: bool) -> u64 {
+    let f = spinor_field_bytes(geom, elem_bytes);
+    let g = gauge_stream_bytes(geom, elem_bytes, 18);
+    let hop4 = 4 * (2 * f + g);
+    if fused {
+        // apply(+tails +capture): hop4 + 2 tail reads + capture read of p
+        // update: x,r,p,ap read + x,r write ; xpay: p,r read + p write
+        hop4 + 3 * f + 6 * f + 3 * f
+    } else {
+        // apply: hop4 + 2 gamma5 (2f each) + 2 xpay tails (3f each)
+        // dot(2f) + axpy(3f) + axpy(3f) + norm2(f) + xpay(3f)
+        hop4 + 4 * f + 6 * f + 12 * f
+    }
+}
+
+/// Bytes one *block* CGNR iteration streams for `nrhs` right-hand
+/// sides (model): the 4 hopping passes stream the 8 gauge blocks ONCE
+/// each — that is the amortization the block field buys — while every
+/// spinor stream (kernel source/destination, fused tails, capture
+/// re-read, and the two BLAS passes) is paid once per RHS. The gauge
+/// term scales with `reals_per_link` (18 full, 12 two-row compressed).
+/// At nrhs = 1 with full links this reduces exactly to
+/// `cg_iter_bytes(geom, eb, true)`.
+pub fn block_cg_iter_bytes(
+    geom: &Geometry,
+    elem_bytes: usize,
+    nrhs: u64,
+    reals_per_link: usize,
+) -> u64 {
+    let f = spinor_field_bytes(geom, elem_bytes);
+    let g = gauge_stream_bytes(geom, elem_bytes, reals_per_link);
+    // gauge once, spinor in/out per RHS, per hopping pass
+    let hop4 = 4 * (2 * f * nrhs + g);
+    hop4 + (3 + 6 + 3) * f * nrhs
+}
+
+/// Modeled bytes per site per RHS of one iteration (the gauge-stream
+/// amortization metric: strictly decreasing in nrhs at fixed lattice).
+pub fn bytes_per_site(geom: &Geometry, bytes_per_iter: u64, nrhs: u64) -> f64 {
+    let sites = EoLayout::new(geom).nsites() as u64 * nrhs;
+    bytes_per_iter as f64 / sites as f64
+}
 
 /// Data footprint (bytes) of the gauge + spinor working set of one local
 /// lattice in single precision (paper §4.1: 18 MiB + 6 MiB at 16^4).

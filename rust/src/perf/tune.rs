@@ -1,0 +1,1047 @@
+//! `lqcd tune`: profiler-driven autotuning of the hot-path knobs.
+//!
+//! The paper's central empirical lesson is that the right 2D SIMD
+//! packing and thread layout are *not* predictable from first
+//! principles — FAPP profiling (Figs. 8/9, Table 1) found slowdowns
+//! pure modeling missed. This module turns that one-off exercise into
+//! a standing measurement loop:
+//!
+//! 1. [`run_tune`] sweeps the three empirical knobs on the actual host —
+//!    2D tiling shapes (the Table 1 `VLENX x VLENY` family at each
+//!    supported VLEN), solver team sizes (locating the measured
+//!    bandwidth-saturation knee instead of assuming `cores/2`), and the
+//!    EO2 chunking of the distributed merge — timing real `Meo` /
+//!    fused-CG applies and converting each to effective GB/s through
+//!    the same [`crate::perf::roofline`] byte models the solver bench
+//!    reports.
+//! 2. [`choose`] reduces the measurements to a [`TuneChoice`]
+//!    deterministically (no timestamps, no randomness: same
+//!    measurements in, same cache JSON out).
+//! 3. [`TuneCache`] persists the result per machine, keyed by a
+//!    [`HostFingerprint`] (core count + calibrated-bandwidth class +
+//!    lattice volume class), and the solve path resolves each knob as
+//!    CLI/config override → tune cache → static heuristic via
+//!    [`resolve_knobs`], recording which source won.
+//!
+//! Tuning only ever picks *which* measured-identical configuration
+//! runs: every knob combination produces bitwise-identical residual
+//! histories under the canonical-reduction contract (threads,
+//! chunking) or is pinned equal to the explicit-knob run (tiling), so
+//! the tuner can never change numerics — `tests/tune.rs` pins this.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::comm::run_world;
+use crate::coordinator::operator::{LinearOperator, NativeMdagM, NativeMeo};
+use crate::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Phase, Profiler, Team};
+use crate::field::{FermionField, GaugeField};
+use crate::lattice::{Geometry, LatticeDims, Parity, Tiling};
+use crate::perf::machine::HostCalibration;
+use crate::perf::roofline;
+use crate::solver::fused;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Bump when the cache layout or the meaning of a knob changes: an old
+/// on-disk cache then invalidates as stale instead of mis-resolving.
+pub const TUNE_CACHE_VERSION: u64 = 1;
+
+/// A team size sits at the bandwidth "knee" once it reaches this
+/// fraction of the best measured solve bandwidth — the smallest such
+/// count wins, so the tuner never burns cores past saturation.
+pub const KNEE_FRACTION: f64 = 0.92;
+
+const KAPPA: f32 = 0.1;
+
+// ---------------------------------------------------------------------
+// fingerprint + cache
+// ---------------------------------------------------------------------
+
+/// What makes a tune result transferable: same core count, same
+/// bandwidth class (log2 bucket of the saturated STREAM GB/s — ±1
+/// bucket tolerated, absorbing run-to-run calibration jitter), same
+/// lattice volume class (floor log2 of the local volume). The cache
+/// *file name* is keyed by the two stable components (cores, volume
+/// class) so a solve can locate the cache without paying a calibration
+/// run; the bandwidth class is validated when one is available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HostFingerprint {
+    pub cores: usize,
+    /// round(log2(saturated GB/s))
+    pub bw_class: i64,
+    /// floor(log2(local volume))
+    pub volume_class: u32,
+}
+
+impl HostFingerprint {
+    pub fn new(cores: usize, saturated_gbs: f64, dims: LatticeDims) -> HostFingerprint {
+        HostFingerprint {
+            cores: cores.max(1),
+            bw_class: saturated_gbs.max(1e-3).log2().round() as i64,
+            volume_class: volume_class(dims),
+        }
+    }
+
+    /// Stable file-name key (the bandwidth class is intentionally NOT
+    /// part of the key — see the struct docs).
+    pub fn key(&self) -> String {
+        format!("c{}-v{}", self.cores, self.volume_class)
+    }
+
+    /// Whether a cached fingerprint is still valid for this host.
+    pub fn matches(&self, cached: &HostFingerprint) -> bool {
+        self.cores == cached.cores
+            && self.volume_class == cached.volume_class
+            && (self.bw_class - cached.bw_class).abs() <= 1
+    }
+}
+
+/// floor(log2(volume)) — lattices within a factor of 2 in volume share
+/// tuning (the knee and best tile shape move with working-set size,
+/// not with exact extents).
+pub fn volume_class(dims: LatticeDims) -> u32 {
+    let v = dims.volume().max(1);
+    (usize::BITS - 1).saturating_sub(v.leading_zeros())
+}
+
+/// One timed tiling candidate (serial M-hat applies).
+#[derive(Clone, Copy, Debug)]
+pub struct TilingSample {
+    pub tiling: Tiling,
+    pub seconds_per_apply: f64,
+    pub gbs: f64,
+}
+
+/// One timed team size (fused-CG iterations at the best tiling).
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadSample {
+    pub threads: usize,
+    pub seconds_per_iter: f64,
+    pub gbs: f64,
+}
+
+/// One timed EO2 chunking candidate (forced-comm distributed hopping).
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkSample {
+    pub schedule: Eo2Schedule,
+    pub granularity: usize,
+    pub seconds_per_apply: f64,
+    pub eo2_imbalance: f64,
+}
+
+/// Everything the sweep measured. [`choose`] is a pure function of
+/// this, so caching the measurements makes the choice reproducible.
+#[derive(Clone, Debug)]
+pub struct Measurements {
+    pub dims: LatticeDims,
+    pub stream_1t_gbs: f64,
+    pub stream_sat_gbs: f64,
+    pub tilings: Vec<TilingSample>,
+    pub threads: Vec<ThreadSample>,
+    pub chunks: Vec<ChunkSample>,
+}
+
+/// The tuned knob values plus the fitted roofline they came from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TuneChoice {
+    pub tiling: Tiling,
+    pub threads: usize,
+    pub eo2_schedule: Eo2Schedule,
+    pub eo2_granularity: usize,
+    /// best effective GB/s any swept configuration achieved — the
+    /// fitted host roofline the bench's floor assertion measures
+    /// against (falls back to the STREAM number when no kernel sample
+    /// exists)
+    pub roofline_gbs: f64,
+}
+
+/// Deterministic reduction of [`Measurements`] to a [`TuneChoice`]:
+/// fastest tiling (ties go to the earlier candidate), smallest team
+/// size within [`KNEE_FRACTION`] of the best solve bandwidth, fastest
+/// EO2 chunking. Empty sweep sections fall back to the static
+/// heuristics so a partial (`--quick`) tune still yields a usable
+/// cache.
+pub fn choose(m: &Measurements) -> TuneChoice {
+    let tiling = m
+        .tilings
+        .iter()
+        .fold(None::<TilingSample>, |best, &s| match best {
+            Some(b) if b.gbs >= s.gbs => Some(b),
+            _ => Some(s),
+        })
+        .map(|s| s.tiling)
+        .unwrap_or_else(|| Tiling::new(4, 4).expect("static tiling"));
+
+    let best_thread_gbs = m.threads.iter().map(|s| s.gbs).fold(0.0, f64::max);
+    let threads = m
+        .threads
+        .iter()
+        .filter(|s| s.gbs >= KNEE_FRACTION * best_thread_gbs)
+        .map(|s| s.threads)
+        .min()
+        .unwrap_or(1);
+
+    let (eo2_schedule, eo2_granularity) = m
+        .chunks
+        .iter()
+        .fold(None::<ChunkSample>, |best, &s| match best {
+            Some(b) if b.seconds_per_apply <= s.seconds_per_apply => Some(b),
+            _ => Some(s),
+        })
+        .map(|s| (s.schedule, s.granularity))
+        .unwrap_or((Eo2Schedule::Uniform, 1));
+
+    let kernel_best = m
+        .tilings
+        .iter()
+        .map(|s| s.gbs)
+        .chain(m.threads.iter().map(|s| s.gbs))
+        .fold(0.0, f64::max);
+    let roofline_gbs = if kernel_best > 0.0 {
+        kernel_best
+    } else {
+        m.stream_sat_gbs
+    };
+
+    TuneChoice {
+        tiling,
+        threads,
+        eo2_schedule,
+        eo2_granularity,
+        roofline_gbs,
+    }
+}
+
+/// The per-machine cache `lqcd tune` writes and `lqcd solve` consumes.
+#[derive(Clone, Debug)]
+pub struct TuneCache {
+    pub version: u64,
+    pub fingerprint: HostFingerprint,
+    pub choice: TuneChoice,
+    pub measurements: Measurements,
+}
+
+/// Outcome of a cache lookup — the solve path logs each variant
+/// differently (hit, stale-refused, corrupt-warning, plain miss).
+#[derive(Debug)]
+pub enum CacheLookup {
+    Hit(Box<TuneCache>),
+    /// a cache exists but its version or fingerprint no longer matches
+    Stale { found: String, want: String },
+    /// a cache file exists but cannot be read or parsed
+    Corrupt(String),
+    Missing,
+}
+
+impl TuneCache {
+    pub fn from_measurements(fingerprint: HostFingerprint, m: Measurements) -> TuneCache {
+        TuneCache {
+            version: TUNE_CACHE_VERSION,
+            fingerprint,
+            choice: choose(&m),
+            measurements: m,
+        }
+    }
+
+    /// Serialize. Key order, float formatting and array order are all
+    /// fixed, and nothing time- or run-dependent is recorded: identical
+    /// measurements serialize to identical bytes (pinned by
+    /// `tests/tune.rs`).
+    pub fn to_json(&self) -> String {
+        let fp = &self.fingerprint;
+        let c = &self.choice;
+        let m = &self.measurements;
+        let d = m.dims;
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"version\": {},\n", self.version));
+        s.push_str(&format!(
+            "  \"fingerprint\": {{\"cores\": {}, \"bw_class\": {}, \"volume_class\": {}}},\n",
+            fp.cores, fp.bw_class, fp.volume_class
+        ));
+        s.push_str(&format!(
+            "  \"choice\": {{\"tiling\": \"{}\", \"threads\": {}, \"eo2_schedule\": \"{}\", \
+             \"eo2_granularity\": {}, \"roofline_gbs\": {}}},\n",
+            c.tiling,
+            c.threads,
+            c.eo2_schedule,
+            c.eo2_granularity,
+            fnum(c.roofline_gbs)
+        ));
+        s.push_str("  \"measurements\": {\n");
+        s.push_str(&format!(
+            "    \"dims\": [{}, {}, {}, {}],\n",
+            d.x, d.y, d.z, d.t
+        ));
+        s.push_str(&format!(
+            "    \"stream_1t_gbs\": {},\n    \"stream_sat_gbs\": {},\n",
+            fnum(m.stream_1t_gbs),
+            fnum(m.stream_sat_gbs)
+        ));
+        s.push_str("    \"tilings\": [\n");
+        for (i, t) in m.tilings.iter().enumerate() {
+            s.push_str(&format!(
+                "      {{\"tiling\": \"{}\", \"seconds_per_apply\": {}, \"gbs\": {}}}{}\n",
+                t.tiling,
+                fnum(t.seconds_per_apply),
+                fnum(t.gbs),
+                comma(i, m.tilings.len())
+            ));
+        }
+        s.push_str("    ],\n    \"threads\": [\n");
+        for (i, t) in m.threads.iter().enumerate() {
+            s.push_str(&format!(
+                "      {{\"threads\": {}, \"seconds_per_iter\": {}, \"gbs\": {}}}{}\n",
+                t.threads,
+                fnum(t.seconds_per_iter),
+                fnum(t.gbs),
+                comma(i, m.threads.len())
+            ));
+        }
+        s.push_str("    ],\n    \"chunks\": [\n");
+        for (i, t) in m.chunks.iter().enumerate() {
+            s.push_str(&format!(
+                "      {{\"schedule\": \"{}\", \"granularity\": {}, \
+                 \"seconds_per_apply\": {}, \"eo2_imbalance\": {}}}{}\n",
+                t.schedule,
+                t.granularity,
+                fnum(t.seconds_per_apply),
+                fnum(t.eo2_imbalance),
+                comma(i, m.chunks.len())
+            ));
+        }
+        s.push_str("    ]\n  }\n}\n");
+        s
+    }
+
+    /// Parse a cache document (strict: any missing or mistyped field is
+    /// an error, so a truncated file surfaces as [`CacheLookup::Corrupt`]
+    /// rather than as half-applied knobs).
+    pub fn parse(text: &str) -> Result<TuneCache, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = get_u64(&j, "version")?;
+        let fpj = j.get("fingerprint").ok_or("missing fingerprint")?;
+        let fingerprint = HostFingerprint {
+            cores: get_u64(fpj, "cores")? as usize,
+            bw_class: get_f64(fpj, "bw_class")? as i64,
+            volume_class: get_u64(fpj, "volume_class")? as u32,
+        };
+        let cj = j.get("choice").ok_or("missing choice")?;
+        let choice = TuneChoice {
+            tiling: Tiling::parse(get_str(cj, "tiling")?)?,
+            threads: (get_u64(cj, "threads")? as usize).max(1),
+            eo2_schedule: Eo2Schedule::parse(get_str(cj, "eo2_schedule")?)?,
+            eo2_granularity: (get_u64(cj, "eo2_granularity")? as usize).max(1),
+            roofline_gbs: get_f64(cj, "roofline_gbs")?,
+        };
+        let mj = j.get("measurements").ok_or("missing measurements")?;
+        let dims_arr = mj
+            .get("dims")
+            .and_then(Json::as_arr)
+            .ok_or("missing dims")?;
+        if dims_arr.len() != 4 {
+            return Err("dims must have 4 entries".into());
+        }
+        let dv: Vec<usize> = dims_arr.iter().filter_map(Json::as_usize).collect();
+        if dv.len() != 4 {
+            return Err("dims entries must be numbers".into());
+        }
+        let dims = LatticeDims::new(dv[0], dv[1], dv[2], dv[3]).map_err(|e| e.to_string())?;
+        let mut tilings = Vec::new();
+        for t in mj
+            .get("tilings")
+            .and_then(Json::as_arr)
+            .ok_or("missing tilings")?
+        {
+            tilings.push(TilingSample {
+                tiling: Tiling::parse(get_str(t, "tiling")?)?,
+                seconds_per_apply: get_f64(t, "seconds_per_apply")?,
+                gbs: get_f64(t, "gbs")?,
+            });
+        }
+        let mut threads = Vec::new();
+        for t in mj
+            .get("threads")
+            .and_then(Json::as_arr)
+            .ok_or("missing threads")?
+        {
+            threads.push(ThreadSample {
+                threads: (get_u64(t, "threads")? as usize).max(1),
+                seconds_per_iter: get_f64(t, "seconds_per_iter")?,
+                gbs: get_f64(t, "gbs")?,
+            });
+        }
+        let mut chunks = Vec::new();
+        for t in mj
+            .get("chunks")
+            .and_then(Json::as_arr)
+            .ok_or("missing chunks")?
+        {
+            chunks.push(ChunkSample {
+                schedule: Eo2Schedule::parse(get_str(t, "schedule")?)?,
+                granularity: (get_u64(t, "granularity")? as usize).max(1),
+                seconds_per_apply: get_f64(t, "seconds_per_apply")?,
+                eo2_imbalance: get_f64(t, "eo2_imbalance")?,
+            });
+        }
+        Ok(TuneCache {
+            version,
+            fingerprint,
+            choice,
+            measurements: Measurements {
+                dims,
+                stream_1t_gbs: get_f64(mj, "stream_1t_gbs")?,
+                stream_sat_gbs: get_f64(mj, "stream_sat_gbs")?,
+                tilings,
+                threads,
+                chunks,
+            },
+        })
+    }
+
+    /// File this cache lives in under `dir`.
+    pub fn path_in(&self, dir: &Path) -> PathBuf {
+        dir.join(format!("tune-{}.json", self.fingerprint.key()))
+    }
+
+    /// Write the cache under `dir` (created if needed); returns the path.
+    pub fn save(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = self.path_in(dir);
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    /// Strict lookup: version AND full fingerprint (including the ±1
+    /// bandwidth-class tolerance) must match.
+    pub fn load_for(dir: &Path, fp: &HostFingerprint) -> CacheLookup {
+        Self::load_checked(dir, &fp.key(), |cached| {
+            if fp.matches(&cached.fingerprint) {
+                None
+            } else {
+                Some((format!("{:?}", cached.fingerprint), format!("{fp:?}")))
+            }
+        })
+    }
+
+    /// Solve-path lookup: keyed by (cores, volume class) only, so a
+    /// solve never pays a calibration run just to read its knobs. The
+    /// stored bandwidth class is accepted as-is — `lqcd tune` validated
+    /// it when the cache was written.
+    pub fn load_for_host(dir: &Path, cores: usize, dims: LatticeDims) -> CacheLookup {
+        let cores = cores.max(1);
+        let vclass = volume_class(dims);
+        let key = format!("c{cores}-v{vclass}");
+        Self::load_checked(dir, &key, |cached| {
+            if cached.fingerprint.cores == cores && cached.fingerprint.volume_class == vclass {
+                None
+            } else {
+                Some((
+                    format!("{:?}", cached.fingerprint),
+                    format!("cores {cores}, volume_class {vclass}"),
+                ))
+            }
+        })
+    }
+
+    fn load_checked(
+        dir: &Path,
+        key: &str,
+        mismatch: impl Fn(&TuneCache) -> Option<(String, String)>,
+    ) -> CacheLookup {
+        let path = dir.join(format!("tune-{key}.json"));
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return CacheLookup::Missing,
+            Err(e) => return CacheLookup::Corrupt(format!("{}: {e}", path.display())),
+        };
+        let cache = match TuneCache::parse(&text) {
+            Ok(c) => c,
+            Err(e) => return CacheLookup::Corrupt(format!("{}: {e}", path.display())),
+        };
+        if cache.version != TUNE_CACHE_VERSION {
+            return CacheLookup::Stale {
+                found: format!("version {}", cache.version),
+                want: format!("version {TUNE_CACHE_VERSION}"),
+            };
+        }
+        match mismatch(&cache) {
+            Some((found, want)) => CacheLookup::Stale { found, want },
+            None => CacheLookup::Hit(Box::new(cache)),
+        }
+    }
+}
+
+fn fnum(v: f64) -> String {
+    format!("{v:.9e}")
+}
+
+fn comma(i: usize, len: usize) -> &'static str {
+    if i + 1 < len {
+        ","
+    } else {
+        ""
+    }
+}
+
+fn get_f64(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("missing number {key:?}"))
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64, String> {
+    let v = get_f64(j, key)?;
+    if v < 0.0 {
+        return Err(format!("{key:?} must be non-negative"));
+    }
+    Ok(v as u64)
+}
+
+fn get_str<'a>(j: &'a Json, key: &str) -> Result<&'a str, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("missing string {key:?}"))
+}
+
+// ---------------------------------------------------------------------
+// knob resolution
+// ---------------------------------------------------------------------
+
+/// Where a resolved knob value came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnobSource {
+    /// explicit CLI option or config key — always wins
+    Cli,
+    /// the per-machine tune cache
+    Cache,
+    /// the static in-code heuristic (the pre-tuning behavior)
+    Heuristic,
+}
+
+impl fmt::Display for KnobSource {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            KnobSource::Cli => "cli/config",
+            KnobSource::Cache => "tune-cache",
+            KnobSource::Heuristic => "heuristic",
+        })
+    }
+}
+
+/// Knobs the user pinned explicitly (CLI option or config key). `None`
+/// means "let the cache or the heuristic decide".
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExplicitKnobs {
+    pub tiling: Option<Tiling>,
+    pub threads: Option<usize>,
+    pub eo2_schedule: Option<Eo2Schedule>,
+    pub eo2_granularity: Option<usize>,
+}
+
+/// The resolved knob set: each value tagged with the source that won.
+#[derive(Clone, Copy, Debug)]
+pub struct ResolvedKnobs {
+    pub tiling: (Tiling, KnobSource),
+    pub threads: (usize, KnobSource),
+    pub eo2_schedule: (Eo2Schedule, KnobSource),
+    pub eo2_granularity: (usize, KnobSource),
+}
+
+impl ResolvedKnobs {
+    /// One-line per-knob provenance, logged by the solve and recorded
+    /// in `SolveStats::knob_sources`.
+    pub fn summary(&self) -> String {
+        format!(
+            "tiling={}[{}] threads={}[{}] eo2-schedule={}[{}] eo2-granularity={}[{}]",
+            self.tiling.0,
+            self.tiling.1,
+            self.threads.0,
+            self.threads.1,
+            self.eo2_schedule.0,
+            self.eo2_schedule.1,
+            self.eo2_granularity.0,
+            self.eo2_granularity.1,
+        )
+    }
+}
+
+/// Resolve every knob as CLI/config → tune cache → static heuristic.
+/// A cached tiling that does not divide the local lattice (tuned at a
+/// different shape within the same volume class) is skipped, not
+/// force-fed: the heuristic takes over for that knob only.
+pub fn resolve_knobs(
+    explicit: &ExplicitKnobs,
+    cache: Option<&TuneCache>,
+    local_dims: LatticeDims,
+    heuristic_tiling: Tiling,
+    heuristic_threads: usize,
+) -> ResolvedKnobs {
+    let choice = cache.map(|c| c.choice);
+    let tiling = if let Some(t) = explicit.tiling {
+        (t, KnobSource::Cli)
+    } else if let Some(c) = choice.filter(|c| c.tiling.divides(local_dims)) {
+        (c.tiling, KnobSource::Cache)
+    } else {
+        (heuristic_tiling, KnobSource::Heuristic)
+    };
+    let threads = if let Some(t) = explicit.threads {
+        (t.max(1), KnobSource::Cli)
+    } else if let Some(c) = choice {
+        (c.threads.max(1), KnobSource::Cache)
+    } else {
+        (heuristic_threads.max(1), KnobSource::Heuristic)
+    };
+    let eo2_schedule = if let Some(s) = explicit.eo2_schedule {
+        (s, KnobSource::Cli)
+    } else if let Some(c) = choice {
+        (c.eo2_schedule, KnobSource::Cache)
+    } else {
+        (Eo2Schedule::Uniform, KnobSource::Heuristic)
+    };
+    let eo2_granularity = if let Some(g) = explicit.eo2_granularity {
+        (g.max(1), KnobSource::Cli)
+    } else if let Some(c) = choice {
+        (c.eo2_granularity.max(1), KnobSource::Cache)
+    } else {
+        (1, KnobSource::Heuristic)
+    };
+    ResolvedKnobs {
+        tiling,
+        threads,
+        eo2_schedule,
+        eo2_granularity,
+    }
+}
+
+// ---------------------------------------------------------------------
+// the sweep
+// ---------------------------------------------------------------------
+
+/// Sweep parameters for [`run_tune`].
+#[derive(Clone, Copy, Debug)]
+pub struct TuneOptions {
+    pub dims: LatticeDims,
+    pub seed: u64,
+    /// total wall budget, split across the three sweeps
+    pub budget_ms: u64,
+    /// `--quick`: CI smoke mode — one VLEN family, two team sizes, two
+    /// chunkings; seconds not minutes
+    pub quick: bool,
+}
+
+/// Tiling candidates: every legal `VLENX x VLENY` shape of each
+/// supported VLEN family that divides the local lattice. `--quick`
+/// sweeps only the paper's VLEN = 16 family.
+pub fn candidate_tilings(dims: LatticeDims, quick: bool) -> Vec<Tiling> {
+    let vlens: &[usize] = if quick { &[16] } else { &[4, 8, 16] };
+    let mut out: Vec<Tiling> = Vec::new();
+    for &v in vlens {
+        for t in Tiling::sweep_for_vlen(v) {
+            if t.divides(dims) && !out.contains(&t) {
+                out.push(t);
+            }
+        }
+    }
+    out
+}
+
+/// Team sizes to time: the doubling sweep of
+/// [`crate::perf::machine::triad_thread_sweep`] plus the `cores/2`
+/// heuristic point, so the measured knee is always comparable to the
+/// static guess. `--quick` times just 1 and `cores/2`.
+pub fn candidate_threads(cores: usize, quick: bool) -> Vec<usize> {
+    let cores = cores.max(1);
+    let mut counts = if quick {
+        vec![1, (cores / 2).max(1)]
+    } else {
+        let mut c = crate::perf::machine::triad_thread_sweep(cores);
+        c.push((cores / 2).max(1));
+        c
+    };
+    counts.sort_unstable();
+    counts.dedup();
+    counts
+}
+
+/// EO2 chunking candidates (schedule, boundary granularity in sites).
+pub fn candidate_chunkings(quick: bool) -> Vec<(Eo2Schedule, usize)> {
+    if quick {
+        vec![(Eo2Schedule::Uniform, 1), (Eo2Schedule::Balanced, 1)]
+    } else {
+        vec![
+            (Eo2Schedule::Uniform, 1),
+            (Eo2Schedule::Balanced, 1),
+            (Eo2Schedule::Balanced, 4),
+            (Eo2Schedule::Balanced, 16),
+        ]
+    }
+}
+
+/// Repetitions that fit a per-candidate budget given one pilot timing.
+fn reps_for_budget(budget_secs: f64, pilot_secs: f64) -> usize {
+    ((budget_secs / pilot_secs.max(1e-9)) as usize).clamp(2, 40)
+}
+
+/// Run the three sweeps and return the raw measurements. Deterministic
+/// in everything but the timings themselves: field content comes from
+/// the seeded RNG, candidate order is fixed, and the arithmetic of
+/// every timed apply is the production kernel's (the tuner measures
+/// the real code path, not a proxy).
+pub fn run_tune(host: &HostCalibration, opts: &TuneOptions) -> Measurements {
+    let dims = opts.dims;
+    let budget = opts.budget_ms as f64 / 1e3;
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    // ---- sweep (a): tiling shapes, serial M-hat applies --------------
+    let tilings = candidate_tilings(dims, opts.quick);
+    let per_tiling = budget / 3.0 / tilings.len().max(1) as f64;
+    let mut tiling_samples = Vec::with_capacity(tilings.len());
+    for &t in &tilings {
+        let geom = match Geometry::single_rank(dims, t) {
+            Ok(g) => g,
+            Err(_) => continue,
+        };
+        let mut rng = Rng::seeded(opts.seed);
+        let u = GaugeField::<f32>::random(&geom, &mut rng);
+        let psi = FermionField::<f32>::gaussian(&geom, &mut rng);
+        let mut out = psi.zeros_like();
+        let mut op = NativeMeo::new(&geom, u, KAPPA);
+        let bytes = roofline::meo_apply_bytes(&geom, 4, 18);
+        let t0 = Instant::now();
+        op.apply(&mut out, &psi);
+        let pilot = t0.elapsed().as_secs_f64();
+        let reps = reps_for_budget(per_tiling, pilot);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            op.apply(&mut out, &psi);
+        }
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        std::hint::black_box(out.data[0]);
+        tiling_samples.push(TilingSample {
+            tiling: t,
+            seconds_per_apply: secs / reps as f64,
+            gbs: bytes as f64 * reps as f64 / secs / 1e9,
+        });
+    }
+
+    // ---- sweep (b): team sizes, fused-CG iterations ------------------
+    let best_tiling = tiling_samples
+        .iter()
+        .fold(None::<TilingSample>, |best, &s| match best {
+            Some(b) if b.gbs >= s.gbs => Some(b),
+            _ => Some(s),
+        })
+        .map(|s| s.tiling)
+        .unwrap_or_else(|| Tiling::new(4, 4).expect("static tiling"));
+    let thread_counts = candidate_threads(cores, opts.quick);
+    let per_thread = budget / 3.0 / thread_counts.len().max(1) as f64;
+    let mut thread_samples = Vec::with_capacity(thread_counts.len());
+    if let Ok(geom) = Geometry::single_rank(dims, best_tiling) {
+        let iter_bytes = roofline::cg_iter_bytes(&geom, 4, true);
+        for &n in &thread_counts {
+            let mut rng = Rng::seeded(opts.seed);
+            let u = GaugeField::<f32>::random(&geom, &mut rng);
+            let b = FermionField::<f32>::gaussian(&geom, &mut rng);
+            let mut x = b.zeros_like();
+            let mut op = NativeMdagM::new(&geom, u, KAPPA);
+            let mut team = Team::new(n, BarrierKind::Spin);
+            // tol = 0 keeps CG running for exactly `maxiter` iterations
+            let t0 = Instant::now();
+            fused::cg(&mut op, &mut team, &mut x, &b, 0.0, 1);
+            let pilot = t0.elapsed().as_secs_f64();
+            let iters = reps_for_budget(per_thread, pilot);
+            x.fill(0.0);
+            let t0 = Instant::now();
+            let stats = fused::cg(&mut op, &mut team, &mut x, &b, 0.0, iters);
+            let secs = t0.elapsed().as_secs_f64().max(1e-9);
+            let done = stats.iterations.max(1);
+            thread_samples.push(ThreadSample {
+                threads: n,
+                seconds_per_iter: secs / done as f64,
+                gbs: iter_bytes as f64 * done as f64 / secs / 1e9,
+            });
+        }
+    }
+
+    // ---- sweep (c): EO2 chunking, forced-comm distributed hopping ----
+    let knee = {
+        let best = thread_samples.iter().map(|s| s.gbs).fold(0.0, f64::max);
+        thread_samples
+            .iter()
+            .filter(|s| s.gbs >= KNEE_FRACTION * best)
+            .map(|s| s.threads)
+            .min()
+            .unwrap_or(1)
+    };
+    let chunkings = candidate_chunkings(opts.quick);
+    let per_chunk = budget / 3.0 / chunkings.len().max(1) as f64;
+    let seed = opts.seed;
+    let chunk_samples: Vec<ChunkSample> = if Geometry::single_rank(dims, best_tiling).is_ok() {
+        run_world(1, |_rank, comm| {
+            let geom = Geometry::single_rank(dims, best_tiling).expect("validated above");
+            let mut rng = Rng::seeded(seed);
+            let u = GaugeField::<f32>::random(&geom, &mut rng);
+            let psi = FermionField::<f32>::gaussian(&geom, &mut rng);
+            let mut out = psi.zeros_like();
+            let mut samples = Vec::with_capacity(chunkings.len());
+            for &(schedule, granularity) in &chunkings {
+                let hop =
+                    DistHopping::with_chunking(&geom, true, knee, schedule, granularity);
+                let mut team = Team::new(knee, BarrierKind::Spin);
+                let prof = Profiler::new(knee);
+                let t0 = Instant::now();
+                hop.hopping(&mut out, &u, &psi, Parity::Even, comm, &mut team, &prof);
+                let pilot = t0.elapsed().as_secs_f64();
+                let reps = reps_for_budget(per_chunk, pilot);
+                prof.reset();
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    hop.hopping(&mut out, &u, &psi, Parity::Even, comm, &mut team, &prof);
+                }
+                let secs = t0.elapsed().as_secs_f64().max(1e-9);
+                std::hint::black_box(out.data[0]);
+                samples.push(ChunkSample {
+                    schedule,
+                    granularity,
+                    seconds_per_apply: secs / reps as f64,
+                    eo2_imbalance: prof.snapshot().imbalance(Phase::Eo2),
+                });
+            }
+            samples
+        })
+        .pop()
+        .unwrap_or_default()
+    } else {
+        Vec::new()
+    };
+
+    Measurements {
+        dims,
+        stream_1t_gbs: host.mem_bw_gbs,
+        stream_sat_gbs: host.mem_bw_saturated_gbs,
+        tilings: tiling_samples,
+        threads: thread_samples,
+        chunks: chunk_samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> LatticeDims {
+        LatticeDims::new(8, 8, 4, 4).unwrap()
+    }
+
+    fn sample_measurements() -> Measurements {
+        Measurements {
+            dims: dims(),
+            stream_1t_gbs: 10.0,
+            stream_sat_gbs: 30.0,
+            tilings: vec![
+                TilingSample {
+                    tiling: Tiling::new(4, 4).unwrap(),
+                    seconds_per_apply: 1e-3,
+                    gbs: 20.0,
+                },
+                TilingSample {
+                    tiling: Tiling::new(2, 2).unwrap(),
+                    seconds_per_apply: 2e-3,
+                    gbs: 10.0,
+                },
+            ],
+            threads: vec![
+                ThreadSample {
+                    threads: 1,
+                    seconds_per_iter: 4e-3,
+                    gbs: 10.0,
+                },
+                ThreadSample {
+                    threads: 2,
+                    seconds_per_iter: 2.1e-3,
+                    gbs: 19.5,
+                },
+                ThreadSample {
+                    threads: 4,
+                    seconds_per_iter: 2e-3,
+                    gbs: 20.0,
+                },
+            ],
+            chunks: vec![
+                ChunkSample {
+                    schedule: Eo2Schedule::Uniform,
+                    granularity: 1,
+                    seconds_per_apply: 3e-3,
+                    eo2_imbalance: 2.0,
+                },
+                ChunkSample {
+                    schedule: Eo2Schedule::Balanced,
+                    granularity: 4,
+                    seconds_per_apply: 2.5e-3,
+                    eo2_imbalance: 1.1,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn choose_picks_knee_not_max() {
+        let c = choose(&sample_measurements());
+        assert_eq!(c.tiling, Tiling::new(4, 4).unwrap());
+        // 2 threads reach 19.5/20.0 = 97.5% > KNEE_FRACTION: knee is 2
+        assert_eq!(c.threads, 2);
+        assert_eq!(c.eo2_schedule, Eo2Schedule::Balanced);
+        assert_eq!(c.eo2_granularity, 4);
+        assert!((c.roofline_gbs - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn choose_falls_back_on_empty_sweeps() {
+        let m = Measurements {
+            dims: dims(),
+            stream_1t_gbs: 5.0,
+            stream_sat_gbs: 12.0,
+            tilings: vec![],
+            threads: vec![],
+            chunks: vec![],
+        };
+        let c = choose(&m);
+        assert_eq!(c.tiling, Tiling::new(4, 4).unwrap());
+        assert_eq!(c.threads, 1);
+        assert_eq!(c.eo2_schedule, Eo2Schedule::Uniform);
+        assert_eq!(c.eo2_granularity, 1);
+        assert!((c.roofline_gbs - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_key_and_tolerance() {
+        let d = dims();
+        let fp = HostFingerprint::new(8, 20.0, d);
+        assert_eq!(fp.key(), format!("c8-v{}", volume_class(d)));
+        // same bucket
+        assert!(fp.matches(&HostFingerprint::new(8, 21.0, d)));
+        // one bucket off is tolerated (calibration jitter)
+        assert!(fp.matches(&HostFingerprint::new(8, 40.0, d)));
+        // four buckets off is a different machine class
+        assert!(!fp.matches(&HostFingerprint::new(8, 320.0, d)));
+        // core count is strict
+        assert!(!fp.matches(&HostFingerprint::new(4, 20.0, d)));
+    }
+
+    #[test]
+    fn volume_class_doubles() {
+        let a = volume_class(LatticeDims::new(8, 8, 8, 8).unwrap()); // 4096
+        let b = volume_class(LatticeDims::new(8, 8, 8, 16).unwrap()); // 8192
+        assert_eq!(a, 12);
+        assert_eq!(b, 13);
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let fp = HostFingerprint::new(8, 20.0, dims());
+        let cache = TuneCache::from_measurements(fp, sample_measurements());
+        let parsed = TuneCache::parse(&cache.to_json()).unwrap();
+        assert_eq!(parsed.version, TUNE_CACHE_VERSION);
+        assert_eq!(parsed.fingerprint, fp);
+        assert_eq!(parsed.choice, cache.choice);
+        assert_eq!(parsed.measurements.tilings.len(), 2);
+        assert_eq!(parsed.measurements.threads.len(), 3);
+        assert_eq!(parsed.measurements.chunks.len(), 2);
+        // serialization is a fixed point after one roundtrip
+        assert_eq!(parsed.to_json(), cache.to_json());
+    }
+
+    #[test]
+    fn candidate_tilings_all_divide() {
+        let d = LatticeDims::new(8, 4, 4, 4).unwrap(); // xh = 4
+        for quick in [false, true] {
+            let c = candidate_tilings(d, quick);
+            assert!(!c.is_empty());
+            assert!(c.iter().all(|t| t.divides(d)), "{c:?}");
+        }
+        // quick restricts to the VLEN=16 family
+        assert!(candidate_tilings(d, true).iter().all(|t| t.vlen() == 16));
+    }
+
+    #[test]
+    fn candidate_threads_include_heuristic_point() {
+        let c = candidate_threads(48, false);
+        assert!(c.contains(&1));
+        assert!(c.contains(&24), "{c:?}"); // 48/2
+        assert!(c.windows(2).all(|w| w[0] < w[1]), "sorted unique: {c:?}");
+        assert_eq!(candidate_threads(8, true), vec![1, 4]);
+        assert_eq!(candidate_threads(1, true), vec![1]);
+    }
+
+    #[test]
+    fn resolution_precedence() {
+        let d = dims();
+        let cache =
+            TuneCache::from_measurements(HostFingerprint::new(8, 20.0, d), sample_measurements());
+        let h_tiling = Tiling::new(2, 2).unwrap();
+        // no explicit, cache present: cache wins everywhere
+        let r = resolve_knobs(&ExplicitKnobs::default(), Some(&cache), d, h_tiling, 3);
+        assert_eq!(r.tiling, (Tiling::new(4, 4).unwrap(), KnobSource::Cache));
+        assert_eq!(r.threads, (2, KnobSource::Cache));
+        assert_eq!(r.eo2_schedule, (Eo2Schedule::Balanced, KnobSource::Cache));
+        assert_eq!(r.eo2_granularity, (4, KnobSource::Cache));
+        // explicit beats cache
+        let e = ExplicitKnobs {
+            tiling: Some(Tiling::new(2, 8).unwrap()),
+            threads: Some(7),
+            eo2_schedule: Some(Eo2Schedule::Uniform),
+            eo2_granularity: Some(2),
+        };
+        let r = resolve_knobs(&e, Some(&cache), d, h_tiling, 3);
+        assert_eq!(r.tiling, (Tiling::new(2, 8).unwrap(), KnobSource::Cli));
+        assert_eq!(r.threads, (7, KnobSource::Cli));
+        assert_eq!(r.eo2_schedule, (Eo2Schedule::Uniform, KnobSource::Cli));
+        assert_eq!(r.eo2_granularity, (2, KnobSource::Cli));
+        // no cache: heuristic
+        let r = resolve_knobs(&ExplicitKnobs::default(), None, d, h_tiling, 3);
+        assert_eq!(r.tiling, (h_tiling, KnobSource::Heuristic));
+        assert_eq!(r.threads, (3, KnobSource::Heuristic));
+        assert_eq!(r.eo2_schedule, (Eo2Schedule::Uniform, KnobSource::Heuristic));
+        assert_eq!(r.eo2_granularity, (1, KnobSource::Heuristic));
+    }
+
+    #[test]
+    fn cached_tiling_that_does_not_divide_falls_back() {
+        // tune at 8x8x4x4 chose 4x4; this lattice has xh = 2 so the
+        // cached tiling cannot be laid out — heuristic takes that knob,
+        // the cache keeps the others
+        let d = LatticeDims::new(4, 8, 4, 8).unwrap();
+        let cache = TuneCache::from_measurements(
+            HostFingerprint::new(8, 20.0, dims()),
+            sample_measurements(),
+        );
+        let h_tiling = Tiling::new(2, 2).unwrap();
+        let r = resolve_knobs(&ExplicitKnobs::default(), Some(&cache), d, h_tiling, 3);
+        assert_eq!(r.tiling, (h_tiling, KnobSource::Heuristic));
+        assert_eq!(r.threads, (2, KnobSource::Cache));
+    }
+
+    #[test]
+    fn summary_names_every_source() {
+        let d = dims();
+        let r = resolve_knobs(
+            &ExplicitKnobs {
+                threads: Some(2),
+                ..Default::default()
+            },
+            None,
+            d,
+            Tiling::new(4, 4).unwrap(),
+            1,
+        );
+        let s = r.summary();
+        assert!(s.contains("tiling=4x4[heuristic]"), "{s}");
+        assert!(s.contains("threads=2[cli/config]"), "{s}");
+        assert!(s.contains("eo2-schedule=uniform[heuristic]"), "{s}");
+        assert!(s.contains("eo2-granularity=1[heuristic]"), "{s}");
+    }
+}

@@ -43,6 +43,7 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
             flops: 0,
             sweeps_per_iter: BICGSTAB_UNFUSED_SWEEPS,
             threads: 1,
+            knob_sources: None,
         };
     }
     let limit = tol * tol * bnorm2;
@@ -134,6 +135,7 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
         flops,
         sweeps_per_iter: BICGSTAB_UNFUSED_SWEEPS,
         threads: 1,
+        knob_sources: None,
     }
 }
 

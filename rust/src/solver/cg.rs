@@ -32,6 +32,7 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
             flops: 0,
             sweeps_per_iter: CG_UNFUSED_SWEEPS,
             threads: 1,
+            knob_sources: None,
         };
     }
     let limit = tol * tol * bnorm2;
@@ -86,6 +87,7 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
         flops,
         sweeps_per_iter: CG_UNFUSED_SWEEPS,
         threads: 1,
+        knob_sources: None,
     }
 }
 

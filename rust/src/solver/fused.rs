@@ -27,11 +27,35 @@
 
 use crate::algebra::{Complex, Real};
 use crate::coordinator::operator::FusedSolvable;
+use crate::coordinator::profiler::{Phase, Profiler};
 use crate::coordinator::team::{chunk_range, SendPtr, Team};
 use crate::dslash::flops as fl;
 use crate::field::{blas, FermionField};
 
 use super::SolveStats;
+
+/// Time `f` into (tid, phase) when a profiler is attached, else just
+/// run it — lets one solver body serve both the bare and the
+/// `--profile` paths with zero overhead when `prof` is `None`.
+#[inline]
+fn scoped<T>(prof: Option<&Profiler>, tid: usize, phase: Phase, f: impl FnOnce() -> T) -> T {
+    match prof {
+        Some(p) => p.scope(tid, phase, f),
+        None => f(),
+    }
+}
+
+/// Charge each thread its tile-share of the solve's total flops (the
+/// fused pipeline shards every sweep by `chunk_range` over tiles, so
+/// the share is exact up to the chunk remainder).
+fn charge_flops(prof: Option<&Profiler>, n: usize, ntiles: usize, flops: u64) {
+    if let Some(p) = prof {
+        for tid in 0..n {
+            let (tb, te) = chunk_range(ntiles, tid, n);
+            p.add_flops(tid, flops * (te - tb) as u64 / ntiles as u64);
+        }
+    }
+}
 
 /// Full-field memory sweeps per fused CG iteration (operator pass with
 /// fused dot + combined x/r update + p xpay).
@@ -88,6 +112,25 @@ pub fn cg<R: Real, A: FusedSolvable<R>>(
     tol: f64,
     maxiter: usize,
 ) -> SolveStats {
+    cg_profiled(op, team, x, b, tol, maxiter, None)
+}
+
+/// [`cg`] with the FAPP-analog profiler attached: kernel sweeps are
+/// charged to [`Phase::Bulk`], fused BLAS sweeps to [`Phase::Blas`],
+/// in-region waits to [`Phase::Barrier`], and each thread's tile-share
+/// of the solve flops to its flop counter. Timing never feeds back
+/// into the arithmetic, so the residual history is bitwise identical
+/// to the unprofiled solve.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_profiled<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
+) -> SolveStats {
     let flops_apply = op.flops_per_apply();
     let view = op.fused_view();
     let ntiles = view.ntiles();
@@ -109,6 +152,7 @@ pub fn cg<R: Real, A: FusedSolvable<R>>(
             flops: 0,
             sweeps_per_iter: CG_FUSED_SWEEPS,
             threads: n,
+            knob_sources: None,
         };
     }
     let limit = tol * tol * bnorm2;
@@ -129,18 +173,22 @@ pub fn cg<R: Real, A: FusedSolvable<R>>(
         let x_raw = SendPtr(x.data.as_mut_ptr());
         let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
         team.run(|tid, bar| unsafe {
-            view.apply_team(tid, n, bar, ap_ptr, x_raw.0 as *const R, None);
-            bar.wait();
+            scoped(prof, tid, Phase::Bulk, || {
+                view.apply_team(tid, n, bar, ap_ptr, x_raw.0 as *const R, None)
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let (tb, te) = chunk_range(ntiles, tid, n);
             let r_t = r_ptr.slice_mut(tb * vpt, (te - tb) * vpt);
             let ap_s = ro::<R>(ap_ptr, len);
-            blas::axpy_norm2_slice(
-                r_t,
-                -R::ONE,
-                &ap_s[tb * vpt..te * vpt],
-                vlen,
-                rr_ptr.slice_mut(tb, te - tb),
-            );
+            scoped(prof, tid, Phase::Blas, || {
+                blas::axpy_norm2_slice(
+                    r_t,
+                    -R::ONE,
+                    &ap_s[tb * vpt..te * vpt],
+                    vlen,
+                    rr_ptr.slice_mut(tb, te - tb),
+                )
+            });
         });
         rr = rr_partials.iter().sum();
         flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
@@ -161,40 +209,46 @@ pub fn cg<R: Real, A: FusedSolvable<R>>(
         let rr_iter = rr;
         team.run(|tid, bar| unsafe {
             // sweep 1: ap = A p with fused tails and p·Ap capture
-            view.apply_team(
-                tid,
-                n,
-                bar,
-                ap_ptr,
-                p_ptr.0 as *const R,
-                Some((p_ptr.0 as *const R, dot_ptr)),
-            );
-            bar.wait();
+            scoped(prof, tid, Phase::Bulk, || {
+                view.apply_team(
+                    tid,
+                    n,
+                    bar,
+                    ap_ptr,
+                    p_ptr.0 as *const R,
+                    Some((p_ptr.0 as *const R, dot_ptr)),
+                )
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             // every thread combines the same partials in tile order,
             // so alpha is identical everywhere (and to the serial run)
             let pap: f64 = ro::<[f64; 3]>(dot_ptr, ntiles).iter().map(|t| t[0]).sum();
             let alpha = rr_iter / pap;
             let (tb, te) = chunk_range(ntiles, tid, n);
             // sweep 2: x += alpha p ; r -= alpha ap ; per-tile |r|²
-            blas::cg_update_slice(
-                x_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                ro_at::<R>(p_ptr, tb * vpt, (te - tb) * vpt),
-                ro_at::<R>(ap_ptr, tb * vpt, (te - tb) * vpt),
-                R::from_f64(alpha),
-                R::from_f64(-alpha),
-                vlen,
-                rr_ptr.slice_mut(tb, te - tb),
-            );
-            bar.wait();
+            scoped(prof, tid, Phase::Blas, || {
+                blas::cg_update_slice(
+                    x_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                    r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                    ro_at::<R>(p_ptr, tb * vpt, (te - tb) * vpt),
+                    ro_at::<R>(ap_ptr, tb * vpt, (te - tb) * vpt),
+                    R::from_f64(alpha),
+                    R::from_f64(-alpha),
+                    vlen,
+                    rr_ptr.slice_mut(tb, te - tb),
+                )
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let rr_new: f64 = ro::<f64>(rr_ptr, ntiles).iter().sum();
             let beta = R::from_f64(rr_new / rr_iter);
             // sweep 3: p = beta p + r
-            blas::xpay_slice(
-                p_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                beta,
-                ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
-            );
+            scoped(prof, tid, Phase::Blas, || {
+                blas::xpay_slice(
+                    p_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                    beta,
+                    ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
+                )
+            });
         });
         rr = rr_partials.iter().sum();
         flops += flops_apply
@@ -206,6 +260,7 @@ pub fn cg<R: Real, A: FusedSolvable<R>>(
         history.push((rr / bnorm2).sqrt());
     }
 
+    charge_flops(prof, n, ntiles, flops);
     SolveStats {
         iterations,
         converged: rr <= limit,
@@ -214,6 +269,7 @@ pub fn cg<R: Real, A: FusedSolvable<R>>(
         flops,
         sweeps_per_iter: CG_FUSED_SWEEPS,
         threads: n,
+        knob_sources: None,
     }
 }
 
@@ -227,6 +283,21 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
     b: &FermionField<R>,
     tol: f64,
     maxiter: usize,
+) -> SolveStats {
+    bicgstab_profiled(op, team, x, b, tol, maxiter, None)
+}
+
+/// [`bicgstab`] with the profiler attached — same phase charging rules
+/// as [`cg_profiled`], same bitwise-unchanged numerics.
+#[allow(clippy::too_many_arguments)]
+pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
 ) -> SolveStats {
     let flops_apply = op.flops_per_apply();
     let view = op.fused_view();
@@ -249,6 +320,7 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
             flops: 0,
             sweeps_per_iter: BICGSTAB_FUSED_SWEEPS,
             threads: n,
+            knob_sources: None,
         };
     }
     let limit = tol * tol * bnorm2;
@@ -266,16 +338,20 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
         let x_raw = SendPtr(x.data.as_mut_ptr());
         let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
         team.run(|tid, bar| unsafe {
-            view.apply_team(tid, n, bar, t_ptr, x_raw.0 as *const R, None);
-            bar.wait();
+            scoped(prof, tid, Phase::Bulk, || {
+                view.apply_team(tid, n, bar, t_ptr, x_raw.0 as *const R, None)
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let (tb, te) = chunk_range(ntiles, tid, n);
-            blas::axpy_norm2_slice(
-                r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                -R::ONE,
-                ro_at::<R>(t_ptr, tb * vpt, (te - tb) * vpt),
-                vlen,
-                rr_ptr.slice_mut(tb, te - tb),
-            );
+            scoped(prof, tid, Phase::Blas, || {
+                blas::axpy_norm2_slice(
+                    r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                    -R::ONE,
+                    ro_at::<R>(t_ptr, tb * vpt, (te - tb) * vpt),
+                    vlen,
+                    rr_ptr.slice_mut(tb, te - tb),
+                )
+            });
         });
         rr = rr_partials.iter().sum();
         flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
@@ -320,15 +396,17 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
                 }
             };
             // sweep 1: v = A p with fused <rhat, v> capture
-            view.apply_team(
-                tid,
-                n,
-                bar,
-                v_ptr,
-                p_ptr.0 as *const R,
-                Some((rhat_raw.0 as *const R, vp_ptr)),
-            );
-            bar.wait();
+            scoped(prof, tid, Phase::Bulk, || {
+                view.apply_team(
+                    tid,
+                    n,
+                    bar,
+                    v_ptr,
+                    p_ptr.0 as *const R,
+                    Some((rhat_raw.0 as *const R, vp_ptr)),
+                )
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let vp = ro::<[f64; 3]>(vp_ptr, ntiles);
             let rhat_v = Complex::new(
                 vp.iter().map(|t| t[0]).sum(),
@@ -341,40 +419,46 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
             let alpha = rho_c * rhat_v.conj().scale(1.0 / rhat_v.norm2());
             let ma = -alpha;
             // sweep 2: s = r - alpha v (in place in r) with |s|² capture
-            blas::caxpy_capture_slice(
-                r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                R::from_f64(ma.re),
-                R::from_f64(ma.im),
-                ro_at::<R>(v_ptr, tb * vpt, (te - tb) * vpt),
-                None,
-                vlen,
-                sp_ptr.slice_mut(tb, te - tb),
-            );
-            bar.wait();
+            scoped(prof, tid, Phase::Blas, || {
+                blas::caxpy_capture_slice(
+                    r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                    R::from_f64(ma.re),
+                    R::from_f64(ma.im),
+                    ro_at::<R>(v_ptr, tb * vpt, (te - tb) * vpt),
+                    None,
+                    vlen,
+                    sp_ptr.slice_mut(tb, te - tb),
+                )
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let snorm: f64 =
                 ro::<[f64; 3]>(sp_ptr, ntiles).iter().map(|t| t[2]).sum();
             if snorm <= limit {
                 // converged at the half step: x += alpha p and stop
-                blas::caxpy_slice(
-                    x_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                    R::from_f64(alpha.re),
-                    R::from_f64(alpha.im),
-                    ro_at::<R>(p_ptr, tb * vpt, (te - tb) * vpt),
-                    vlen,
-                );
+                scoped(prof, tid, Phase::Blas, || {
+                    blas::caxpy_slice(
+                        x_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                        R::from_f64(alpha.re),
+                        R::from_f64(alpha.im),
+                        ro_at::<R>(p_ptr, tb * vpt, (te - tb) * vpt),
+                        vlen,
+                    )
+                });
                 record(IterOut { kind: 2, rr: snorm, rho: rho_c });
                 return;
             }
             // sweep 3: t = A s with fused <s, t> and |t|² capture
-            view.apply_team(
-                tid,
-                n,
-                bar,
-                t_ptr,
-                r_ptr.0 as *const R,
-                Some((r_ptr.0 as *const R, tp_ptr)),
-            );
-            bar.wait();
+            scoped(prof, tid, Phase::Bulk, || {
+                view.apply_team(
+                    tid,
+                    n,
+                    bar,
+                    t_ptr,
+                    r_ptr.0 as *const R,
+                    Some((r_ptr.0 as *const R, tp_ptr)),
+                )
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let tp = ro::<[f64; 3]>(tp_ptr, ntiles);
             // the capture conjugates s; ts = <t, s> conjugates t, so
             // flip the imaginary part (exact, hence bit-identical)
@@ -389,28 +473,32 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
             }
             let omega = ts.scale(1.0 / tt);
             // sweep 4: x += alpha p + omega s (s lives in r)
-            blas::caxpy2_slice(
-                x_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                R::from_f64(alpha.re),
-                R::from_f64(alpha.im),
-                ro_at::<R>(p_ptr, tb * vpt, (te - tb) * vpt),
-                R::from_f64(omega.re),
-                R::from_f64(omega.im),
-                ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
-                vlen,
-            );
+            scoped(prof, tid, Phase::Blas, || {
+                blas::caxpy2_slice(
+                    x_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                    R::from_f64(alpha.re),
+                    R::from_f64(alpha.im),
+                    ro_at::<R>(p_ptr, tb * vpt, (te - tb) * vpt),
+                    R::from_f64(omega.re),
+                    R::from_f64(omega.im),
+                    ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
+                    vlen,
+                )
+            });
             let mo = -omega;
             // sweep 5: r = s - omega t with <rhat, r> and |r|² capture
-            blas::caxpy_capture_slice(
-                r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                R::from_f64(mo.re),
-                R::from_f64(mo.im),
-                ro_at::<R>(t_ptr, tb * vpt, (te - tb) * vpt),
-                Some(ro_at::<R>(rhat_raw, tb * vpt, (te - tb) * vpt)),
-                vlen,
-                rp_ptr.slice_mut(tb, te - tb),
-            );
-            bar.wait();
+            scoped(prof, tid, Phase::Blas, || {
+                blas::caxpy_capture_slice(
+                    r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                    R::from_f64(mo.re),
+                    R::from_f64(mo.im),
+                    ro_at::<R>(t_ptr, tb * vpt, (te - tb) * vpt),
+                    Some(ro_at::<R>(rhat_raw, tb * vpt, (te - tb) * vpt)),
+                    vlen,
+                    rp_ptr.slice_mut(tb, te - tb),
+                )
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let rp = ro::<[f64; 3]>(rp_ptr, ntiles);
             let rr_new: f64 = rp.iter().map(|t| t[2]).sum();
             let rho_new = Complex::new(
@@ -424,16 +512,18 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
             let beta = (rho_new * alpha)
                 * (rho_c * omega).conj().scale(1.0 / (rho_c * omega).norm2());
             // sweep 6: p = beta (p - omega v) + r
-            blas::p_update_slice(
-                p_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                R::from_f64(mo.re),
-                R::from_f64(mo.im),
-                ro_at::<R>(v_ptr, tb * vpt, (te - tb) * vpt),
-                R::from_f64(beta.re),
-                R::from_f64(beta.im),
-                ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
-                vlen,
-            );
+            scoped(prof, tid, Phase::Blas, || {
+                blas::p_update_slice(
+                    p_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                    R::from_f64(mo.re),
+                    R::from_f64(mo.im),
+                    ro_at::<R>(v_ptr, tb * vpt, (te - tb) * vpt),
+                    R::from_f64(beta.re),
+                    R::from_f64(beta.im),
+                    ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
+                    vlen,
+                )
+            });
             record(IterOut { kind: 0, rr: rr_new, rho: rho_new });
         });
 
@@ -481,6 +571,7 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
         }
     }
 
+    charge_flops(prof, n, ntiles, flops);
     SolveStats {
         iterations,
         converged: rr <= limit,
@@ -489,5 +580,6 @@ pub fn bicgstab<R: Real, A: FusedSolvable<R>>(
         flops,
         sweeps_per_iter: BICGSTAB_FUSED_SWEEPS,
         threads: n,
+        knob_sources: None,
     }
 }

@@ -61,4 +61,8 @@ pub struct SolveStats {
     /// worker-team threads the solve ran on (1 = serial); records the
     /// auto-selected count when `solver.threads` was left unset
     pub threads: usize,
+    /// where each performance knob came from (CLI/config, tune cache,
+    /// or static heuristic) — filled by the solve driver when knob
+    /// resolution ran, `None` for direct library calls
+    pub knob_sources: Option<String>,
 }

@@ -20,6 +20,14 @@ fn example_config_is_paper_setup() {
     assert!(cfg.parallel.force_comm);
     assert_eq!(cfg.solver.algorithm, "bicgstab");
     assert_eq!(cfg.gauge.compression, lqcd::dslash::Compression::None);
+    // the shipped [tune] section spells out the defaults; the EO2 keys
+    // are commented out (cache/heuristic decides)
+    assert!(cfg.tune.enabled);
+    assert_eq!(cfg.tune.cache_dir, PathBuf::from("tune-cache"));
+    assert_eq!(cfg.tune.budget_ms, 3000);
+    assert!((cfg.tune.roofline_floor - 0.5).abs() < 1e-12);
+    assert_eq!(cfg.parallel.eo2_schedule, None);
+    assert_eq!(cfg.parallel.eo2_granularity, None);
     // local volume per rank = 16x16x8x8, the paper's Table 1 first row
     let geom = lqcd::lattice::Geometry::for_rank(
         cfg.lattice.global,

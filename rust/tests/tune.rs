@@ -1,0 +1,433 @@
+//! Tuner contract tests: deterministic cache serialization, fingerprint
+//! invalidation, corrupt-cache fallback, knob precedence, and — the
+//! acceptance property — that tuning can only ever pick *which*
+//! configuration runs, never change what it computes: residual
+//! histories are bitwise identical between a tuned-resolution run and
+//! an explicit-knob run, across thread counts, and across EO2
+//! chunkings.
+
+use std::path::PathBuf;
+
+use lqcd::comm::run_world;
+use lqcd::coordinator::operator::NativeMdagM;
+use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use lqcd::field::{FermionField, GaugeField};
+use lqcd::lattice::{Geometry, LatticeDims, Parity, Tiling};
+use lqcd::perf::tune::{
+    candidate_tilings, choose, volume_class, ChunkSample, Measurements, ThreadSample,
+    TilingSample,
+};
+use lqcd::perf::{
+    resolve_knobs, run_tune, CacheLookup, ExplicitKnobs, HostFingerprint, KnobSource,
+    TuneCache, TuneOptions, TUNE_CACHE_VERSION,
+};
+use lqcd::solver::fused;
+use lqcd::util::rng::Rng;
+
+/// Fresh scratch dir per test (no tempfile crate in the offline build).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lqcd-tune-test-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn dims() -> LatticeDims {
+    LatticeDims::new(8, 8, 4, 4).unwrap()
+}
+
+fn sample_measurements() -> Measurements {
+    Measurements {
+        dims: dims(),
+        stream_1t_gbs: 8.5,
+        stream_sat_gbs: 27.25,
+        tilings: vec![
+            TilingSample {
+                tiling: Tiling::new(4, 4).unwrap(),
+                seconds_per_apply: 1.25e-4,
+                gbs: 21.0,
+            },
+            TilingSample {
+                tiling: Tiling::new(2, 8).unwrap(),
+                seconds_per_apply: 1.5e-4,
+                gbs: 17.5,
+            },
+        ],
+        threads: vec![
+            ThreadSample {
+                threads: 1,
+                seconds_per_iter: 9e-4,
+                gbs: 11.0,
+            },
+            ThreadSample {
+                threads: 2,
+                seconds_per_iter: 4.8e-4,
+                gbs: 20.6,
+            },
+            ThreadSample {
+                threads: 4,
+                seconds_per_iter: 4.6e-4,
+                gbs: 21.5,
+            },
+        ],
+        chunks: vec![
+            ChunkSample {
+                schedule: Eo2Schedule::Uniform,
+                granularity: 1,
+                seconds_per_apply: 2e-4,
+                eo2_imbalance: 1.9,
+            },
+            ChunkSample {
+                schedule: Eo2Schedule::Balanced,
+                granularity: 4,
+                seconds_per_apply: 1.7e-4,
+                eo2_imbalance: 1.05,
+            },
+        ],
+    }
+}
+
+fn sample_cache() -> TuneCache {
+    TuneCache::from_measurements(
+        HostFingerprint::new(8, 27.25, dims()),
+        sample_measurements(),
+    )
+}
+
+// ---------------------------------------------------------------------
+// determinism + persistence
+// ---------------------------------------------------------------------
+
+#[test]
+fn cache_serialization_is_deterministic() {
+    // same measurements in → byte-identical JSON out, twice, and after a
+    // parse round trip; no timestamps or run-dependent state anywhere
+    let a = sample_cache();
+    let b = sample_cache();
+    assert_eq!(a.to_json(), b.to_json());
+    let reparsed = TuneCache::parse(&a.to_json()).unwrap();
+    assert_eq!(reparsed.to_json(), a.to_json());
+    for banned in ["time", "date", "stamp"] {
+        assert!(
+            !a.to_json().to_lowercase().contains(banned),
+            "cache JSON must not contain {banned:?}"
+        );
+    }
+}
+
+#[test]
+fn save_load_hit() {
+    let dir = scratch("hit");
+    let cache = sample_cache();
+    let path = cache.save(&dir).unwrap();
+    assert!(path.to_string_lossy().contains(&cache.fingerprint.key()));
+    match TuneCache::load_for(&dir, &cache.fingerprint) {
+        CacheLookup::Hit(c) => assert_eq!(c.choice, cache.choice),
+        other => panic!("expected Hit, got {other:?}"),
+    }
+    // the solve-path lookup (no calibration available) also hits
+    match TuneCache::load_for_host(&dir, 8, dims()) {
+        CacheLookup::Hit(c) => assert_eq!(c.choice, cache.choice),
+        other => panic!("expected Hit, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn stale_version_and_fingerprint_are_refused() {
+    let dir = scratch("stale");
+    let cache = sample_cache();
+    let path = cache.save(&dir).unwrap();
+
+    // a version bump invalidates the cache in place
+    let tampered = cache
+        .to_json()
+        .replace(
+            &format!("\"version\": {TUNE_CACHE_VERSION}"),
+            &format!("\"version\": {}", TUNE_CACHE_VERSION + 1),
+        );
+    std::fs::write(&path, tampered).unwrap();
+    match TuneCache::load_for(&dir, &cache.fingerprint) {
+        CacheLookup::Stale { found, want } => {
+            assert!(found.contains(&format!("{}", TUNE_CACHE_VERSION + 1)), "{found}");
+            assert!(want.contains(&format!("{TUNE_CACHE_VERSION}")), "{want}");
+        }
+        other => panic!("expected Stale, got {other:?}"),
+    }
+
+    // a cache written by a host in a far bandwidth class is stale for
+    // this one (strict lookup only — the solve path ignores bandwidth)
+    cache.save(&dir).unwrap();
+    let fast_host = HostFingerprint::new(8, 27.25 * 16.0, dims());
+    match TuneCache::load_for(&dir, &fast_host) {
+        CacheLookup::Stale { .. } => {}
+        other => panic!("expected Stale for distant bw class, got {other:?}"),
+    }
+
+    // different core count or volume class looks up a different file:
+    // plain Missing, not Stale
+    match TuneCache::load_for_host(&dir, 4, dims()) {
+        CacheLookup::Missing => {}
+        other => panic!("expected Missing for other core count, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn corrupt_cache_reports_not_panics() {
+    let dir = scratch("corrupt");
+    let cache = sample_cache();
+    let path = cache.save(&dir).unwrap();
+    std::fs::write(&path, "{\"version\": not json").unwrap();
+    match TuneCache::load_for_host(&dir, 8, dims()) {
+        CacheLookup::Corrupt(msg) => {
+            assert!(msg.contains("tune-"), "message should name the file: {msg}")
+        }
+        other => panic!("expected Corrupt, got {other:?}"),
+    }
+    // truncated-but-valid JSON (missing fields) is corrupt too
+    std::fs::write(&path, "{\"version\": 1}").unwrap();
+    match TuneCache::load_for_host(&dir, 8, dims()) {
+        CacheLookup::Corrupt(_) => {}
+        other => panic!("expected Corrupt for truncated doc, got {other:?}"),
+    }
+    // and a corrupt cache must leave knob resolution on the heuristics
+    let r = resolve_knobs(
+        &ExplicitKnobs::default(),
+        None,
+        dims(),
+        Tiling::new(2, 2).unwrap(),
+        3,
+    );
+    assert_eq!(r.tiling, (Tiling::new(2, 2).unwrap(), KnobSource::Heuristic));
+    assert_eq!(r.threads, (3, KnobSource::Heuristic));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// precedence
+// ---------------------------------------------------------------------
+
+#[test]
+fn precedence_is_cli_then_cache_then_heuristic() {
+    let cache = sample_cache();
+    let h_tiling = Tiling::new(2, 2).unwrap();
+
+    // cache fills everything the user left open
+    let r = resolve_knobs(&ExplicitKnobs::default(), Some(&cache), dims(), h_tiling, 5);
+    assert_eq!(r.tiling, (cache.choice.tiling, KnobSource::Cache));
+    assert_eq!(r.threads, (cache.choice.threads, KnobSource::Cache));
+    assert_eq!(
+        r.eo2_schedule,
+        (cache.choice.eo2_schedule, KnobSource::Cache)
+    );
+
+    // a CLI/config value wins over the cache, per knob
+    let explicit = ExplicitKnobs {
+        threads: Some(7),
+        ..Default::default()
+    };
+    let r = resolve_knobs(&explicit, Some(&cache), dims(), h_tiling, 5);
+    assert_eq!(r.threads, (7, KnobSource::Cli));
+    assert_eq!(r.tiling.1, KnobSource::Cache, "other knobs stay cached");
+    let s = r.summary();
+    assert!(s.contains("threads=7[cli/config]"), "{s}");
+    assert!(s.contains("[tune-cache]"), "{s}");
+
+    // no cache → heuristics
+    let r = resolve_knobs(&ExplicitKnobs::default(), None, dims(), h_tiling, 5);
+    assert_eq!(r.tiling, (h_tiling, KnobSource::Heuristic));
+    assert_eq!(r.threads, (5, KnobSource::Heuristic));
+    assert_eq!(r.eo2_schedule, (Eo2Schedule::Uniform, KnobSource::Heuristic));
+    assert_eq!(r.eo2_granularity, (1, KnobSource::Heuristic));
+}
+
+#[test]
+fn cached_tiling_is_validated_against_the_lattice() {
+    // cache tuned on 8x8x4x4 chose 4x4; a 4x8x4x8 lattice (xh = 2)
+    // cannot lay that out — the tiling knob falls back, the rest stay
+    let slim = LatticeDims::new(4, 8, 4, 8).unwrap();
+    let cache = sample_cache();
+    let h_tiling = Tiling::new(2, 2).unwrap();
+    let r = resolve_knobs(&ExplicitKnobs::default(), Some(&cache), slim, h_tiling, 5);
+    assert_eq!(r.tiling, (h_tiling, KnobSource::Heuristic));
+    assert_eq!(r.threads.1, KnobSource::Cache);
+}
+
+// ---------------------------------------------------------------------
+// the acceptance property: tuning never changes numerics
+// ---------------------------------------------------------------------
+
+/// Fused CGNR at a given tiling/thread count; returns the residual
+/// history (the canonical-reduction contract makes it a pure function
+/// of (lattice, seed, tiling) — threads must not appear).
+fn cg_history(dims: LatticeDims, tiling: Tiling, threads: usize) -> Vec<f64> {
+    let geom = Geometry::single_rank(dims, tiling).unwrap();
+    let mut rng = Rng::seeded(2023);
+    let u: GaugeField<f32> = GaugeField::random(&geom, &mut rng);
+    let b: FermionField<f32> = FermionField::gaussian(&geom, &mut rng);
+    let mut op = NativeMdagM::new(&geom, u, 0.12f32);
+    let mut team = Team::new(threads, BarrierKind::Spin);
+    let mut x = FermionField::zeros(&geom);
+    let stats = fused::cg(&mut op, &mut team, &mut x, &b, 1e-5, 300);
+    assert!(stats.converged);
+    assert!(stats.iterations > 3, "system must take several iterations");
+    stats.history
+}
+
+#[test]
+fn tuned_resolution_is_bitwise_equal_to_explicit_knobs() {
+    // resolve knobs from a synthetic cache (threads 2, tiling 4x4) and
+    // run; then pin the same knobs explicitly and run again — the
+    // histories must be bitwise identical (resolution only selects the
+    // configuration, it cannot touch the arithmetic)
+    let cache = sample_cache();
+    let tuned = resolve_knobs(
+        &ExplicitKnobs::default(),
+        Some(&cache),
+        dims(),
+        Tiling::new(2, 2).unwrap(),
+        1,
+    );
+    assert_eq!(tuned.tiling.1, KnobSource::Cache);
+    let explicit = resolve_knobs(
+        &ExplicitKnobs {
+            tiling: Some(tuned.tiling.0),
+            threads: Some(tuned.threads.0),
+            eo2_schedule: Some(tuned.eo2_schedule.0),
+            eo2_granularity: Some(tuned.eo2_granularity.0),
+        },
+        None,
+        dims(),
+        Tiling::new(2, 2).unwrap(),
+        1,
+    );
+    assert_eq!(explicit.tiling.1, KnobSource::Cli);
+    let h_tuned = cg_history(dims(), tuned.tiling.0, tuned.threads.0);
+    let h_explicit = cg_history(dims(), explicit.tiling.0, explicit.threads.0);
+    assert_eq!(h_tuned, h_explicit);
+}
+
+#[test]
+fn thread_knob_does_not_change_residual_history() {
+    let t = Tiling::new(4, 4).unwrap();
+    let h1 = cg_history(dims(), t, 1);
+    for threads in [2usize, 3, 4] {
+        assert_eq!(
+            cg_history(dims(), t, threads),
+            h1,
+            "residual history changed at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn eo2_chunking_is_bitwise_invariant() {
+    // the chunking knob only moves which thread merges which boundary
+    // sites — the distributed hopping output must be bitwise identical
+    // across every (schedule, granularity) the tuner can pick
+    let d = dims();
+    let tiling = Tiling::new(4, 4).unwrap();
+    let fields: Vec<Vec<f32>> = [
+        (Eo2Schedule::Uniform, 1usize),
+        (Eo2Schedule::Balanced, 1),
+        (Eo2Schedule::Balanced, 4),
+        (Eo2Schedule::Balanced, 16),
+    ]
+    .iter()
+    .map(|&(schedule, granularity)| {
+        run_world(1, |_rank, comm| {
+            let geom = Geometry::single_rank(d, tiling).unwrap();
+            let mut rng = Rng::seeded(99);
+            let u: GaugeField<f32> = GaugeField::random(&geom, &mut rng);
+            let psi: FermionField<f32> = FermionField::gaussian(&geom, &mut rng);
+            let mut out = psi.zeros_like();
+            let threads = 3;
+            let hop = DistHopping::with_chunking(&geom, true, threads, schedule, granularity);
+            let mut team = Team::new(threads, BarrierKind::Spin);
+            let prof = Profiler::new(threads);
+            hop.hopping(&mut out, &u, &psi, Parity::Even, comm, &mut team, &prof);
+            out.data
+        })
+        .pop()
+        .unwrap()
+    })
+    .collect();
+    for (i, f) in fields.iter().enumerate().skip(1) {
+        assert_eq!(
+            f, &fields[0],
+            "EO2 chunking candidate {i} changed the hopping output"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// an actual (tiny) tune run, end to end
+// ---------------------------------------------------------------------
+
+#[test]
+fn quick_tune_produces_a_cache_a_solve_consumes() {
+    let d = dims();
+    // synthetic calibration: the sweep itself measures the kernels; the
+    // STREAM numbers only seed the fingerprint and the roofline fallback
+    let host = lqcd::perf::HostCalibration {
+        core_sp_gflops: 10.0,
+        mem_bw_gbs: 8.0,
+        mem_bw_saturated_gbs: 24.0,
+        saturation_threads: 2,
+    };
+    let opts = TuneOptions {
+        dims: d,
+        seed: 11,
+        budget_ms: 150,
+        quick: true,
+    };
+    let m = run_tune(&host, &opts);
+    assert!(!m.tilings.is_empty(), "tiling sweep must produce samples");
+    assert!(!m.threads.is_empty(), "thread sweep must produce samples");
+    assert!(!m.chunks.is_empty(), "chunk sweep must produce samples");
+    for s in &m.tilings {
+        assert!(s.tiling.divides(d));
+        assert!(s.gbs > 0.0 && s.seconds_per_apply > 0.0);
+    }
+    let choice = choose(&m);
+    assert!(choice.roofline_gbs > 0.0);
+    assert!(choice.threads >= 1);
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let fp = HostFingerprint::new(cores, host.mem_bw_saturated_gbs, d);
+    let dir = scratch("e2e");
+    let cache = TuneCache::from_measurements(fp, m);
+    cache.save(&dir).unwrap();
+
+    // ... and a later solve on the same host/volume resolves from it
+    let hit = match TuneCache::load_for_host(&dir, cores, d) {
+        CacheLookup::Hit(c) => c,
+        other => panic!("solve-path lookup failed: {other:?}"),
+    };
+    let r = resolve_knobs(
+        &ExplicitKnobs::default(),
+        Some(&hit),
+        d,
+        Tiling::new(2, 2).unwrap(),
+        1,
+    );
+    assert_eq!(r.tiling, (choice.tiling, KnobSource::Cache));
+    assert_eq!(r.threads, (choice.threads, KnobSource::Cache));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn candidate_sweeps_respect_quick_and_volume() {
+    let d = dims();
+    let full = candidate_tilings(d, false);
+    let quick = candidate_tilings(d, true);
+    assert!(!quick.is_empty());
+    assert!(full.len() >= quick.len());
+    for t in quick {
+        assert_eq!(t.vlen(), 16, "--quick sweeps the paper's VLEN=16 family only");
+    }
+    assert_eq!(volume_class(d), volume_class(LatticeDims::new(8, 4, 8, 4).unwrap()));
+}
