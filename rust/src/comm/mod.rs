@@ -4,15 +4,17 @@
 
 pub mod balance;
 pub mod decompose;
+pub mod faults;
 pub mod halo;
 pub mod netmodel;
 pub mod pack;
 pub mod unpack;
 pub mod world;
 
+pub use faults::{FaultKind, FaultPlan};
 pub use halo::HaloPlans;
 pub use unpack::RecvBuffers;
 pub use world::{
-    decode_wire_sig, run_world, validate_wire_format, wire_sig, Comm, CommError,
-    CommScalar, Payload, MAX_WIRE_RHS,
+    decode_wire_sig, run_world, run_world_cfg, validate_wire_format, wire_sig, Comm,
+    CommError, CommScalar, CommStats, Payload, WorldOpts, MAX_WIRE_RHS,
 };

@@ -5,11 +5,43 @@
 //! tagged send/recv, barrier, and an all-reduce (for solver dot
 //! products). Communication is FUNNELED as on Fugaku (§3.6): only the
 //! rank's master thread calls these functions.
+//!
+//! # Fault tolerance
+//!
+//! The transport is hardened against the failure modes the fault plan
+//! ([`crate::comm::faults`]) can inject — and, more importantly, against
+//! the real-world analogues they model:
+//!
+//! * every payload travels under a wire header carrying a **sequence
+//!   number** (per `(sender, tag)` stream) and an FNV-1a **checksum**
+//!   over the payload bits and length;
+//! * every `recv` has a **deadline** (`WorldOpts::timeout_ms`; 0 = wait
+//!   forever) and returns a structured [`CommError`] instead of blocking
+//!   the world on a lost message;
+//! * a corrupt / truncated message, or a deadline expiry, triggers a
+//!   bounded **retransmit** ([`WorldOpts::max_retries`], exponential
+//!   backoff accounted in simulated time) from the sender-side pristine
+//!   store — the in-process model of a NIC retransmit window. The store
+//!   is only armed when a fault plan is active: without injection the
+//!   in-process channel cannot lose or corrupt bytes, so the fault-free
+//!   hot path pays no payload copies;
+//! * a stale sequence number (duplicate delivery) is dropped silently;
+//! * once a communicator fails it is **poisoned**: every later comm call
+//!   short-circuits with the original error instead of stacking one
+//!   timeout per call, so a dead peer costs each survivor at most one
+//!   deadline per blocking primitive in flight.
+//!
+//! All recovery actions are counted in [`CommStats`], which the solver
+//! health guard surfaces in `SolveStats`.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::fmt;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::faults::{FaultPlan, FaultState, IterAction, MessageAction};
 
 /// A wire buffer: halo payloads travel at the precision of the field
 /// they were packed from (12 reals per site either way).
@@ -19,47 +51,123 @@ pub enum Payload {
     F64(Vec<f64>),
 }
 
-/// A structured communication-layer error: what went wrong and which
-/// ranks disagreed, surfaced *before* any payload is posted (see
-/// [`validate_wire_format`]) instead of a type panic mid-exchange.
+/// A structured communication-layer error: what went wrong, on which
+/// rank, and which message (peer, tag, sequence) was involved.
 #[derive(Clone, Debug)]
-pub struct CommError(pub String);
+pub enum CommError {
+    /// A `recv` deadline expired with no matching message and no
+    /// retransmittable copy in the sender store.
+    Timeout { rank: usize, peer: usize, tag: u64, elapsed_ms: u64 },
+    /// A barrier/reduction deadline expired: some rank never arrived.
+    CollectiveTimeout { rank: usize, elapsed_ms: u64 },
+    /// Checksum mismatch that retransmission could not heal.
+    Corrupt { rank: usize, peer: usize, tag: u64, seq: u64, retries: u32 },
+    /// The payload's precision did not match the `recv`'s type (a type
+    /// confusion, never a silent cast).
+    PrecisionMismatch {
+        rank: usize,
+        peer: usize,
+        tag: u64,
+        wanted: &'static str,
+        got: &'static str,
+    },
+    /// Fault injection killed this rank at a solver iteration.
+    Killed { rank: usize, iteration: usize },
+    /// A protocol-level disagreement surfaced *before* any payload is
+    /// posted (see [`validate_wire_format`]).
+    Protocol(String),
+}
 
 impl fmt::Display for CommError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(&self.0)
+        match self {
+            CommError::Timeout { rank, peer, tag, elapsed_ms } => write!(
+                f,
+                "recv timeout on rank {rank}: no message from rank {peer} with \
+                 tag {tag} within {elapsed_ms} ms (and no retransmittable copy)"
+            ),
+            CommError::CollectiveTimeout { rank, elapsed_ms } => write!(
+                f,
+                "collective timeout on rank {rank}: a peer failed to reach the \
+                 barrier within {elapsed_ms} ms"
+            ),
+            CommError::Corrupt { rank, peer, tag, seq, retries } => write!(
+                f,
+                "corrupt message on rank {rank}: checksum mismatch from rank \
+                 {peer}, tag {tag}, seq {seq}; unrecovered after {retries} \
+                 retransmit attempts"
+            ),
+            CommError::PrecisionMismatch { rank, peer, tag, wanted, got } => write!(
+                f,
+                "recv precision mismatch: wanted {wanted}, got {got} (rank \
+                 {rank}, from rank {peer}, tag {tag})"
+            ),
+            CommError::Killed { rank, iteration } => write!(
+                f,
+                "rank {rank} killed by fault injection at solver iteration \
+                 {iteration}"
+            ),
+            CommError::Protocol(msg) => f.write_str(msg),
+        }
     }
 }
 
 impl std::error::Error for CommError {}
 
+/// Recovery/diagnostic counters of one communicator. Snapshot with
+/// [`Comm::stats`]; the solver health guard folds them into
+/// `SolveStats`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// messages healed from the sender-side retransmit store
+    pub retransmits: u64,
+    /// recv/collective deadlines that expired (including recovered ones)
+    pub timeouts: u64,
+    /// stale-sequence (duplicate) deliveries dropped
+    pub duplicates_dropped: u64,
+    /// checksum/length mismatches detected on arrival
+    pub corrupt_detected: u64,
+    /// sends the fault plan delayed
+    pub delayed: u64,
+    /// faults this rank's plan injected (as the acting side)
+    pub injected: u64,
+    /// simulated exponential-backoff milliseconds accounted (not slept)
+    /// while waiting on retransmissions
+    pub backoff_ms: u64,
+}
+
 /// Scalars that can travel through the simulated-MPI world. Implemented
 /// for `f32` and `f64`; a `recv` with the wrong precision for the
-/// matching send panics loudly (a type confusion, never a silent cast).
-/// The [`validate_wire_format`] handshake exists to catch that confusion
-/// *before* the first send, as a structured [`CommError`].
+/// matching send surfaces [`CommError::PrecisionMismatch`]. The
+/// [`validate_wire_format`] handshake exists to catch that confusion
+/// *before* the first send of a batched exchange.
 pub trait CommScalar: Copy + Send + 'static {
     /// Wire identifier of this scalar (part of the halo wire signature).
     const WIRE_ID: u64;
     /// Human name used when decoding a wire-signature mismatch.
     const WIRE_NAME: &'static str;
+    /// Zero fill used when a faulted recv must still produce a buffer.
+    const ZERO: Self;
 
     fn wrap(v: Vec<Self>) -> Payload;
-    fn unwrap(p: Payload) -> Vec<Self>;
+    /// Unwrap a payload of this precision; `Err` carries the name of the
+    /// precision actually found.
+    fn try_unwrap(p: Payload) -> Result<Vec<Self>, &'static str>;
 }
 
 impl CommScalar for f32 {
     const WIRE_ID: u64 = 1;
     const WIRE_NAME: &'static str = "f32";
+    const ZERO: f32 = 0.0;
 
     fn wrap(v: Vec<f32>) -> Payload {
         Payload::F32(v)
     }
 
-    fn unwrap(p: Payload) -> Vec<f32> {
+    fn try_unwrap(p: Payload) -> Result<Vec<f32>, &'static str> {
         match p {
-            Payload::F32(v) => v,
-            Payload::F64(_) => panic!("recv precision mismatch: wanted f32, got f64"),
+            Payload::F32(v) => Ok(v),
+            Payload::F64(_) => Err(f64::WIRE_NAME),
         }
     }
 }
@@ -67,15 +175,16 @@ impl CommScalar for f32 {
 impl CommScalar for f64 {
     const WIRE_ID: u64 = 2;
     const WIRE_NAME: &'static str = "f64";
+    const ZERO: f64 = 0.0;
 
     fn wrap(v: Vec<f64>) -> Payload {
         Payload::F64(v)
     }
 
-    fn unwrap(p: Payload) -> Vec<f64> {
+    fn try_unwrap(p: Payload) -> Result<Vec<f64>, &'static str> {
         match p {
-            Payload::F64(v) => v,
-            Payload::F32(_) => panic!("recv precision mismatch: wanted f64, got f32"),
+            Payload::F64(v) => Ok(v),
+            Payload::F32(_) => Err(f32::WIRE_NAME),
         }
     }
 }
@@ -150,7 +259,7 @@ pub fn validate_wire_format<S: CommScalar>(
     };
     let sigs = comm.exchange_sigs(sig);
     if nrhs > MAX_WIRE_RHS {
-        return Err(CommError(format!(
+        return Err(CommError::Protocol(format!(
             "batched halos carry at most {MAX_WIRE_RHS} right-hand sides per \
              message (the wire signature's mask width); got nrhs {nrhs}"
         )));
@@ -163,19 +272,158 @@ pub fn validate_wire_format<S: CommScalar>(
         .enumerate()
         .map(|(r, &s)| format!("  rank {r}: {}", decode_wire_sig(s)))
         .collect();
-    Err(CommError(format!(
+    Err(CommError::Protocol(format!(
         "halo wire-format mismatch across the rank world (detected before any \
          payload was sent):\n{}",
         lines.join("\n")
     )))
 }
 
-/// A tagged message.
+/// FNV-1a over the payload's bit patterns and length: cheap, and any
+/// truncation or bit flip moves it. Not cryptographic — it models the
+/// link-level CRC of a real interconnect.
+fn payload_checksum(p: &Payload) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |w: u64| {
+        h ^= w;
+        h = h.wrapping_mul(PRIME);
+    };
+    match p {
+        Payload::F32(v) => {
+            eat(v.len() as u64 | (1 << 60));
+            for x in v {
+                eat(u64::from(x.to_bits()));
+            }
+        }
+        Payload::F64(v) => {
+            eat(v.len() as u64 | (2 << 60));
+            for x in v {
+                eat(x.to_bits());
+            }
+        }
+    }
+    h
+}
+
+/// Flip payload bits without touching its length (checksum computed
+/// before the flip stays pristine, so the receiver detects it).
+fn flip_bits(p: Payload) -> Payload {
+    match p {
+        Payload::F32(mut v) => {
+            if let Some(x) = v.first_mut() {
+                *x = f32::from_bits(x.to_bits() ^ 0x5A5A_5A5A);
+            }
+            Payload::F32(v)
+        }
+        Payload::F64(mut v) => {
+            if let Some(x) = v.first_mut() {
+                *x = f64::from_bits(x.to_bits() ^ 0x5A5A_5A5A_5A5A_5A5A);
+            }
+            Payload::F64(v)
+        }
+    }
+}
+
+/// Silent data corruption: poison one element with NaN and let the
+/// sender recompute the checksum, so the transport validates it and only
+/// the solver health guard can catch the damage.
+fn poison_nan(p: Payload) -> Payload {
+    match p {
+        Payload::F32(mut v) => {
+            let mid = v.len() / 2;
+            if let Some(x) = v.get_mut(mid) {
+                *x = f32::NAN;
+            }
+            Payload::F32(v)
+        }
+        Payload::F64(mut v) => {
+            let mid = v.len() / 2;
+            if let Some(x) = v.get_mut(mid) {
+                *x = f64::NAN;
+            }
+            Payload::F64(v)
+        }
+    }
+}
+
+/// Halve the payload (checksum of the full payload stays on the header,
+/// so the length mismatch is detected on arrival).
+fn truncate_half(p: Payload) -> Payload {
+    match p {
+        Payload::F32(mut v) => {
+            let n = v.len() / 2;
+            v.truncate(n);
+            Payload::F32(v)
+        }
+        Payload::F64(mut v) => {
+            let n = v.len() / 2;
+            v.truncate(n);
+            Payload::F64(v)
+        }
+    }
+}
+
+/// A tagged message under the wire header (sequence + checksum).
 struct Msg {
     from: usize,
     tag: u64,
+    seq: u64,
+    checksum: u64,
     payload: Payload,
 }
+
+/// A barrier whose `wait` can give up after a deadline. A timed-out
+/// waiter *withdraws* its arrival count so it cannot corrupt a later
+/// generation; `timeout_ms == 0` waits forever (plain barrier).
+struct TimedBarrier {
+    n: usize,
+    /// (arrived count, generation)
+    state: Mutex<(usize, u64)>,
+    cv: Condvar,
+}
+
+impl TimedBarrier {
+    fn new(n: usize) -> TimedBarrier {
+        TimedBarrier { n, state: Mutex::new((0, 0)), cv: Condvar::new() }
+    }
+
+    /// Returns `false` on deadline expiry (the barrier did not complete
+    /// for this waiter).
+    fn wait(&self, timeout_ms: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let gen = st.1;
+        st.0 += 1;
+        if st.0 == self.n {
+            st.0 = 0;
+            st.1 += 1;
+            self.cv.notify_all();
+            return true;
+        }
+        if timeout_ms == 0 {
+            while st.1 == gen {
+                st = self.cv.wait(st).unwrap();
+            }
+            return true;
+        }
+        let deadline = Instant::now() + Duration::from_millis(timeout_ms);
+        while st.1 == gen {
+            let now = Instant::now();
+            if now >= deadline {
+                st.0 -= 1; // withdraw: don't poison the next generation
+                return false;
+            }
+            st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+        true
+    }
+}
+
+/// Sender-side pristine-copy store keyed by (from, to, tag, seq): the
+/// in-process model of a NIC retransmit window. Only armed when a fault
+/// plan is active.
+type RetransmitStore = Arc<Mutex<HashMap<(usize, usize, u64, u64), Payload>>>;
 
 /// Per-rank communicator handle.
 pub struct Comm {
@@ -184,66 +432,360 @@ pub struct Comm {
     senders: Vec<Sender<Msg>>,
     inbox: Receiver<Msg>,
     /// messages that arrived while waiting for a different (from, tag)
-    pending: HashMap<(usize, u64), Vec<Payload>>,
-    barrier: Arc<Barrier>,
+    pending: HashMap<(usize, u64), Vec<Msg>>,
+    /// recv/collective deadline in ms; 0 = wait forever
+    timeout_ms: u64,
+    /// bounded retransmit attempts per corrupt message
+    max_retries: u32,
+    plan: Arc<FaultPlan>,
+    fstate: RefCell<FaultState>,
+    /// next sequence number per outgoing (to, tag) stream
+    seq_send: RefCell<HashMap<(usize, u64), u64>>,
+    /// next expected sequence number per incoming (from, tag) stream
+    seq_recv: HashMap<(usize, u64), u64>,
+    store: Option<RetransmitStore>,
+    stats: RefCell<CommStats>,
+    /// poison slot: once a comm call fails, every later call
+    /// short-circuits with this error instead of stacking deadlines
+    fault: RefCell<Option<CommError>>,
+    barrier: Arc<TimedBarrier>,
     reduce_slots: Arc<Mutex<Vec<f64>>>,
-    reduce_barrier: Arc<Barrier>,
+    reduce_barrier: Arc<TimedBarrier>,
     /// wire-signature slots for the pre-exchange format handshake
     sig_slots: Arc<Mutex<Vec<u64>>>,
     /// per-rank vector slots for `allgather_f64`
     gather_slots: Arc<Mutex<Vec<Vec<f64>>>>,
     /// barrier shared by the sig/gather collectives (all collective calls
     /// are made in identical order on every rank, so one barrier serves)
-    coll_barrier: Arc<Barrier>,
+    coll_barrier: Arc<TimedBarrier>,
 }
 
 impl Comm {
-    /// Non-blocking send (buffered by the channel).
+    /// Non-blocking send (buffered by the channel). The payload travels
+    /// under a (sequence, checksum) wire header; when a fault plan is
+    /// active a pristine copy enters the retransmit store first and the
+    /// plan decides the payload's fate on the wire.
     pub fn send<S: CommScalar>(&self, to: usize, tag: u64, payload: Vec<S>) {
-        self.senders[to]
-            .send(Msg {
-                from: self.rank,
-                tag,
-                payload: S::wrap(payload),
-            })
-            .expect("rank channel closed");
-    }
-
-    /// Blocking receive matching (from, tag).
-    pub fn recv<S: CommScalar>(&mut self, from: usize, tag: u64) -> Vec<S> {
-        if let Some(queue) = self.pending.get_mut(&(from, tag)) {
-            if !queue.is_empty() {
-                return S::unwrap(queue.remove(0));
+        let seq = {
+            let mut m = self.seq_send.borrow_mut();
+            let c = m.entry((to, tag)).or_insert(0);
+            let s = *c;
+            *c += 1;
+            s
+        };
+        let p = S::wrap(payload);
+        let action =
+            self.plan.message_action(&mut self.fstate.borrow_mut(), self.rank, tag, seq);
+        if let Some(store) = &self.store {
+            store.lock().unwrap().insert((self.rank, to, tag, seq), p.clone());
+        }
+        let sum = payload_checksum(&p);
+        // a peer that already exited (e.g. on its own fault) has dropped
+        // its inbox; the post is a no-op and its silence surfaces on this
+        // side as a recv/collective timeout
+        let post = |payload: Payload, checksum: u64| {
+            let _ = self.senders[to].send(Msg { from: self.rank, tag, seq, checksum, payload });
+        };
+        match action {
+            MessageAction::Deliver => post(p, sum),
+            MessageAction::Drop => {
+                self.stats.borrow_mut().injected += 1;
+            }
+            MessageAction::Delay(ms) => {
+                {
+                    let mut st = self.stats.borrow_mut();
+                    st.injected += 1;
+                    st.delayed += 1;
+                }
+                std::thread::sleep(Duration::from_millis(ms));
+                post(p, sum);
+            }
+            MessageAction::Corrupt => {
+                self.stats.borrow_mut().injected += 1;
+                post(flip_bits(p), sum);
+            }
+            MessageAction::Sdc => {
+                self.stats.borrow_mut().injected += 1;
+                let q = poison_nan(p);
+                let s2 = payload_checksum(&q);
+                post(q, s2);
+            }
+            MessageAction::Duplicate => {
+                self.stats.borrow_mut().injected += 1;
+                post(p.clone(), sum);
+                post(p, sum);
+            }
+            MessageAction::Truncate => {
+                self.stats.borrow_mut().injected += 1;
+                post(truncate_half(p), sum);
             }
         }
+    }
+
+    /// Blocking receive matching (from, tag), bounded by the world's
+    /// `timeout_ms` deadline. Stale duplicates are dropped; corrupt or
+    /// truncated payloads are healed from the retransmit store (bounded
+    /// by `max_retries`); a deadline expiry makes one last store fetch
+    /// before surfacing [`CommError::Timeout`].
+    pub fn recv<S: CommScalar>(&mut self, from: usize, tag: u64) -> Result<Vec<S>, CommError> {
+        if let Some(e) = self.fault.borrow().clone() {
+            return Err(e);
+        }
+        let expect = *self.seq_recv.get(&(from, tag)).unwrap_or(&0);
+
+        // 1) drain pending messages stashed while waiting on other tags
+        if let Some(q) = self.pending.get_mut(&(from, tag)) {
+            while !q.is_empty() && q[0].seq < expect {
+                q.remove(0);
+                self.stats.borrow_mut().duplicates_dropped += 1;
+            }
+            if !q.is_empty() && q[0].seq == expect {
+                let msg = q.remove(0);
+                return self.accept::<S>(from, tag, msg);
+            }
+            // q[0].seq > expect: the expected message was lost in flight —
+            // try the retransmit store before waiting on the channel
+            if !q.is_empty() {
+                if let Some(v) = self.store_accept::<S>(from, tag, expect)? {
+                    return Ok(v);
+                }
+            }
+        }
+
+        // 2) wait on the channel under the deadline
+        let start = Instant::now();
+        let budget = Duration::from_millis(self.timeout_ms);
         loop {
-            let msg = self.inbox.recv().expect("rank channel closed");
+            let msg = if self.timeout_ms == 0 {
+                match self.inbox.recv() {
+                    Ok(m) => m,
+                    Err(_) => break, // world tearing down: fall through to timeout
+                }
+            } else {
+                let elapsed = start.elapsed();
+                if elapsed >= budget {
+                    break;
+                }
+                match self.inbox.recv_timeout(budget - elapsed) {
+                    Ok(m) => m,
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {
+                        break
+                    }
+                }
+            };
             if msg.from == from && msg.tag == tag {
-                return S::unwrap(msg.payload);
+                if msg.seq < expect {
+                    self.stats.borrow_mut().duplicates_dropped += 1;
+                    continue;
+                }
+                if msg.seq > expect {
+                    // gap: stash the future message, try the store for ours
+                    self.pending.entry((from, tag)).or_default().push(msg);
+                    if let Some(v) = self.store_accept::<S>(from, tag, expect)? {
+                        return Ok(v);
+                    }
+                    continue;
+                }
+                return self.accept::<S>(from, tag, msg);
             }
-            self.pending
-                .entry((msg.from, msg.tag))
-                .or_default()
-                .push(msg.payload);
+            self.pending.entry((msg.from, msg.tag)).or_default().push(msg);
+        }
+
+        // 3) deadline expired: one last retransmit-store fetch
+        self.stats.borrow_mut().timeouts += 1;
+        if let Some(v) = self.store_accept::<S>(from, tag, expect)? {
+            return Ok(v);
+        }
+        let e = CommError::Timeout {
+            rank: self.rank,
+            peer: from,
+            tag,
+            elapsed_ms: start.elapsed().as_millis() as u64,
+        };
+        *self.fault.borrow_mut() = Some(e.clone());
+        Err(e)
+    }
+
+    /// `recv` that degrades to a zero-filled buffer of `len` scalars on
+    /// failure. The error stays in the poison slot, so the caller's next
+    /// health check surfaces it; zero-filling lets a faulted rank finish
+    /// the kernel sweep in flight instead of tearing down mid-iteration
+    /// (which would leave its peers hanging until their own deadlines).
+    pub fn recv_or_zero<S: CommScalar>(&mut self, from: usize, tag: u64, len: usize) -> Vec<S> {
+        match self.recv(from, tag) {
+            Ok(v) => v,
+            Err(_) => vec![S::ZERO; len],
         }
     }
 
-    /// Barrier over all ranks.
-    pub fn barrier(&self) {
-        self.barrier.wait();
+    /// Validate and deliver a message whose sequence number matched.
+    fn accept<S: CommScalar>(
+        &mut self,
+        from: usize,
+        tag: u64,
+        msg: Msg,
+    ) -> Result<Vec<S>, CommError> {
+        if payload_checksum(&msg.payload) == msg.checksum {
+            self.seq_recv.insert((from, tag), msg.seq + 1);
+            self.store_remove(from, tag, msg.seq);
+            return self.unwrap_payload(from, tag, msg.payload);
+        }
+        self.stats.borrow_mut().corrupt_detected += 1;
+        // checksum mismatch (corruption, or truncation — the payload
+        // length is folded into the checksum): heal from the sender's
+        // pristine copy, bounded by max_retries with exponential backoff
+        // in simulated time
+        for attempt in 0..self.max_retries {
+            if let Some(p) = self.store_take(from, tag, msg.seq) {
+                self.stats.borrow_mut().retransmits += 1;
+                self.seq_recv.insert((from, tag), msg.seq + 1);
+                return self.unwrap_payload(from, tag, p);
+            }
+            self.stats.borrow_mut().backoff_ms += 1 << attempt;
+        }
+        let e = CommError::Corrupt {
+            rank: self.rank,
+            peer: from,
+            tag,
+            seq: msg.seq,
+            retries: self.max_retries,
+        };
+        *self.fault.borrow_mut() = Some(e.clone());
+        Err(e)
     }
 
-    /// Sum a scalar across all ranks (two-phase with shared slots).
+    /// Try to deliver `seq` straight from the retransmit store (used
+    /// when the channel copy is known lost or late).
+    fn store_accept<S: CommScalar>(
+        &mut self,
+        from: usize,
+        tag: u64,
+        seq: u64,
+    ) -> Result<Option<Vec<S>>, CommError> {
+        match self.store_take(from, tag, seq) {
+            Some(p) => {
+                self.stats.borrow_mut().retransmits += 1;
+                self.seq_recv.insert((from, tag), seq + 1);
+                self.unwrap_payload(from, tag, p).map(Some)
+            }
+            None => Ok(None),
+        }
+    }
+
+    fn store_take(&self, from: usize, tag: u64, seq: u64) -> Option<Payload> {
+        let store = self.store.as_ref()?;
+        store.lock().unwrap().remove(&(from, self.rank, tag, seq))
+    }
+
+    fn store_remove(&self, from: usize, tag: u64, seq: u64) {
+        if let Some(store) = &self.store {
+            store.lock().unwrap().remove(&(from, self.rank, tag, seq));
+        }
+    }
+
+    fn unwrap_payload<S: CommScalar>(
+        &self,
+        from: usize,
+        tag: u64,
+        p: Payload,
+    ) -> Result<Vec<S>, CommError> {
+        S::try_unwrap(p).map_err(|got| {
+            let e = CommError::PrecisionMismatch {
+                rank: self.rank,
+                peer: from,
+                tag,
+                wanted: S::WIRE_NAME,
+                got,
+            };
+            *self.fault.borrow_mut() = Some(e.clone());
+            e
+        })
+    }
+
+    /// Record a collective deadline expiry in the poison slot.
+    fn poison_collective(&self) {
+        self.stats.borrow_mut().timeouts += 1;
+        let mut f = self.fault.borrow_mut();
+        if f.is_none() {
+            *f = Some(CommError::CollectiveTimeout {
+                rank: self.rank,
+                elapsed_ms: self.timeout_ms,
+            });
+        }
+    }
+
+    /// True when this communicator is poisoned; collectives short-circuit
+    /// so a dead peer costs one deadline, not one per collective.
+    fn poisoned(&self) -> bool {
+        self.fault.borrow().is_some()
+    }
+
+    /// The first error this communicator hit, if any (sticky).
+    pub fn comm_fault(&self) -> Option<CommError> {
+        self.fault.borrow().clone()
+    }
+
+    /// Snapshot of the recovery/diagnostic counters.
+    pub fn stats(&self) -> CommStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Per-solver-iteration fault hook: applies rank-level injections
+    /// (stall, kill) and surfaces any fault already in the poison slot.
+    /// Distributed operators call this once per iteration through the
+    /// solver health guard.
+    pub fn iteration_hook(&self, iteration: usize) -> Result<(), CommError> {
+        if let Some(e) = self.comm_fault() {
+            return Err(e);
+        }
+        match self.plan.iteration_action(self.rank, self.nranks, iteration) {
+            IterAction::None => Ok(()),
+            IterAction::Stall(ms) => {
+                self.stats.borrow_mut().injected += 1;
+                std::thread::sleep(Duration::from_millis(ms));
+                Ok(())
+            }
+            IterAction::Kill => {
+                self.stats.borrow_mut().injected += 1;
+                let e = CommError::Killed { rank: self.rank, iteration };
+                *self.fault.borrow_mut() = Some(e.clone());
+                Err(e)
+            }
+        }
+    }
+
+    /// Barrier over all ranks (bounded by the deadline; an expiry
+    /// poisons this communicator instead of hanging the world).
+    pub fn barrier(&self) {
+        if self.poisoned() {
+            return;
+        }
+        if !self.barrier.wait(self.timeout_ms) {
+            self.poison_collective();
+        }
+    }
+
+    /// Sum a scalar across all ranks (two-phase with shared slots). On a
+    /// deadline expiry the local value is returned and the communicator
+    /// is poisoned — the solver health guard surfaces the fault.
     pub fn allreduce_sum(&self, value: f64) -> f64 {
+        if self.poisoned() {
+            return value;
+        }
         {
             let mut slots = self.reduce_slots.lock().unwrap();
             slots[self.rank] = value;
         }
-        self.reduce_barrier.wait();
+        if !self.reduce_barrier.wait(self.timeout_ms) {
+            self.poison_collective();
+            return value;
+        }
         let total: f64 = self.reduce_slots.lock().unwrap().iter().sum();
         // second barrier so no rank overwrites its slot for the next call
         // before everyone has read
-        self.reduce_barrier.wait();
+        if !self.reduce_barrier.wait(self.timeout_ms) {
+            self.poison_collective();
+        }
         total
     }
 
@@ -251,15 +793,23 @@ impl Comm {
     /// (Internal to [`validate_wire_format`]; collective calls must be
     /// made in the same order on every rank.)
     fn exchange_sigs(&self, sig: u64) -> Vec<u64> {
+        if self.poisoned() {
+            return vec![sig; self.nranks];
+        }
         {
             let mut slots = self.sig_slots.lock().unwrap();
             slots[self.rank] = sig;
         }
-        self.coll_barrier.wait();
+        if !self.coll_barrier.wait(self.timeout_ms) {
+            self.poison_collective();
+            return vec![sig; self.nranks];
+        }
         let sigs = self.sig_slots.lock().unwrap().clone();
         // second barrier so no rank posts its next signature before
         // everyone has read this round
-        self.coll_barrier.wait();
+        if !self.coll_barrier.wait(self.timeout_ms) {
+            self.poison_collective();
+        }
         sigs
     }
 
@@ -269,13 +819,21 @@ impl Comm {
     /// independent of the rank count. Collective: every rank must call
     /// with the same sequence of gathers.
     pub fn allgather_f64(&self, v: &[f64]) -> Vec<Vec<f64>> {
+        if self.poisoned() {
+            return vec![v.to_vec(); self.nranks];
+        }
         {
             let mut slots = self.gather_slots.lock().unwrap();
             slots[self.rank] = v.to_vec();
         }
-        self.coll_barrier.wait();
+        if !self.coll_barrier.wait(self.timeout_ms) {
+            self.poison_collective();
+            return vec![v.to_vec(); self.nranks];
+        }
         let all = self.gather_slots.lock().unwrap().clone();
-        self.coll_barrier.wait();
+        if !self.coll_barrier.wait(self.timeout_ms) {
+            self.poison_collective();
+        }
         all
     }
 
@@ -287,9 +845,38 @@ impl Comm {
     }
 }
 
-/// Run `f(rank, comm)` on `nranks` threads; returns the per-rank results
-/// in rank order.
+/// World-construction knobs: deadlines, retransmit bounds, and the fault
+/// plan. `Default` gives a 30 s deadline, 3 retries, and no faults.
+#[derive(Clone, Debug)]
+pub struct WorldOpts {
+    /// recv/collective deadline in ms; 0 = wait forever
+    pub timeout_ms: u64,
+    /// retransmit attempts per corrupt/truncated message
+    pub max_retries: u32,
+    pub faults: FaultPlan,
+}
+
+impl Default for WorldOpts {
+    fn default() -> WorldOpts {
+        WorldOpts { timeout_ms: 30_000, max_retries: 3, faults: FaultPlan::none() }
+    }
+}
+
+/// Run `f(rank, comm)` on `nranks` threads with default [`WorldOpts`];
+/// returns the per-rank results in rank order.
 pub fn run_world<T, F>(nranks: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut Comm) -> T + Sync,
+{
+    run_world_cfg(nranks, WorldOpts::default(), f)
+}
+
+/// Run `f(rank, comm)` on `nranks` threads under explicit transport
+/// options; returns the per-rank results in rank order. A rank thread's
+/// panic is re-raised on the caller (with its original payload) instead
+/// of being masked by a join `expect`.
+pub fn run_world_cfg<T, F>(nranks: usize, opts: WorldOpts, f: F) -> Vec<T>
 where
     T: Send,
     F: Fn(usize, &mut Comm) -> T + Sync,
@@ -302,12 +889,21 @@ where
         senders.push(tx);
         inboxes.push(rx);
     }
-    let barrier = Arc::new(Barrier::new(nranks));
+    let barrier = Arc::new(TimedBarrier::new(nranks));
     let reduce_slots = Arc::new(Mutex::new(vec![0.0f64; nranks]));
-    let reduce_barrier = Arc::new(Barrier::new(nranks));
+    let reduce_barrier = Arc::new(TimedBarrier::new(nranks));
     let sig_slots = Arc::new(Mutex::new(vec![0u64; nranks]));
     let gather_slots = Arc::new(Mutex::new(vec![Vec::new(); nranks]));
-    let coll_barrier = Arc::new(Barrier::new(nranks));
+    let coll_barrier = Arc::new(TimedBarrier::new(nranks));
+    let plan = Arc::new(opts.faults);
+    // the retransmit store is only armed under an active fault plan: the
+    // in-process channel cannot lose bytes on its own, so the fault-free
+    // hot path pays no pristine-copy clones
+    let store: Option<RetransmitStore> = if plan.is_empty() {
+        None
+    } else {
+        Some(Arc::new(Mutex::new(HashMap::new())))
+    };
 
     let mut comms: Vec<Comm> = inboxes
         .into_iter()
@@ -318,6 +914,15 @@ where
             senders: senders.clone(),
             inbox,
             pending: HashMap::new(),
+            timeout_ms: opts.timeout_ms,
+            max_retries: opts.max_retries,
+            plan: Arc::clone(&plan),
+            fstate: RefCell::new(plan.new_state()),
+            seq_send: RefCell::new(HashMap::new()),
+            seq_recv: HashMap::new(),
+            store: store.clone(),
+            stats: RefCell::new(CommStats::default()),
+            fault: RefCell::new(None),
             barrier: Arc::clone(&barrier),
             reduce_slots: Arc::clone(&reduce_slots),
             reduce_barrier: Arc::clone(&reduce_barrier),
@@ -337,7 +942,7 @@ where
         }
         handles
             .into_iter()
-            .map(|h| h.join().expect("rank thread panicked"))
+            .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
             .collect()
     })
 }
@@ -346,13 +951,21 @@ where
 mod tests {
     use super::*;
 
+    fn faulty(spec: &str, timeout_ms: u64) -> WorldOpts {
+        WorldOpts {
+            timeout_ms,
+            max_retries: 3,
+            faults: FaultPlan::parse(spec).unwrap(),
+        }
+    }
+
     #[test]
     fn ring_pass() {
         let results = run_world(4, |rank, comm| {
             let next = (rank + 1) % 4;
             let prev = (rank + 3) % 4;
             comm.send(next, 7, vec![rank as f32]);
-            let got: Vec<f32> = comm.recv(prev, 7);
+            let got: Vec<f32> = comm.recv(prev, 7).unwrap();
             got[0] as usize
         });
         assert_eq!(results, vec![3, 0, 1, 2]);
@@ -365,8 +978,8 @@ mod tests {
             comm.send(other, 1, vec![10.0 + rank as f32]);
             comm.send(other, 2, vec![20.0 + rank as f32]);
             // receive in the opposite order to exercise the pending queue
-            let b: Vec<f32> = comm.recv(other, 2);
-            let a: Vec<f32> = comm.recv(other, 1);
+            let b: Vec<f32> = comm.recv(other, 2).unwrap();
+            let a: Vec<f32> = comm.recv(other, 1).unwrap();
             (a[0], b[0])
         });
         assert_eq!(results[0], (11.0, 21.0));
@@ -378,7 +991,7 @@ mod tests {
         // the paper enforces communication with the self process
         let results = run_world(1, |_, comm| {
             comm.send(0, 3, vec![1.0f32, 2.0]);
-            comm.recv::<f32>(0, 3)
+            comm.recv::<f32>(0, 3).unwrap()
         });
         assert_eq!(results[0], vec![1.0, 2.0]);
     }
@@ -503,11 +1116,212 @@ mod tests {
                 comm.send(1, 5, vec![2.0f32]);
                 vec![]
             } else {
-                let a: Vec<f32> = comm.recv(0, 5);
-                let b: Vec<f32> = comm.recv(0, 5);
+                let a: Vec<f32> = comm.recv(0, 5).unwrap();
+                let b: Vec<f32> = comm.recv(0, 5).unwrap();
                 vec![a[0], b[0]]
             }
         });
         assert_eq!(results[1], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn recv_timeout_is_structured_not_a_hang() {
+        let t0 = Instant::now();
+        let results = run_world_cfg(2, faulty("", 80), |rank, comm| {
+            if rank == 0 {
+                // never sends
+                0
+            } else {
+                match comm.recv::<f32>(0, 9) {
+                    Ok(_) => 1,
+                    Err(CommError::Timeout { rank, peer, tag, .. }) => {
+                        assert_eq!((rank, peer, tag), (1, 0, 9));
+                        // the poison slot short-circuits the next call
+                        assert!(comm.recv::<f32>(0, 10).is_err());
+                        assert_eq!(comm.stats().timeouts, 1);
+                        2
+                    }
+                    Err(e) => panic!("wrong error {e}"),
+                }
+            }
+        });
+        assert_eq!(results, vec![0, 2]);
+        assert!(t0.elapsed() < Duration::from_secs(10));
+    }
+
+    #[test]
+    fn dropped_message_heals_from_retransmit_store() {
+        let results = run_world_cfg(2, faulty("drop:rank=0,tag=4,nth=1", 100), |rank, comm| {
+            if rank == 0 {
+                comm.send(1, 4, vec![1.5f64, 2.5]);
+                (vec![], comm.stats())
+            } else {
+                let v: Vec<f64> = comm.recv(0, 4).unwrap();
+                (v, comm.stats())
+            }
+        });
+        let (v, stats) = &results[1];
+        assert_eq!(v, &vec![1.5, 2.5], "store copy must be pristine");
+        assert_eq!(stats.retransmits, 1);
+        assert_eq!(stats.timeouts, 1);
+        let sender = &results[0].1;
+        assert_eq!(sender.injected, 1);
+    }
+
+    #[test]
+    fn corrupt_message_detected_and_healed_bitwise() {
+        let results =
+            run_world_cfg(2, faulty("corrupt:rank=0,tag=6,nth=1", 200), |rank, comm| {
+                if rank == 0 {
+                    comm.send(1, 6, vec![3.25f32, -7.5]);
+                    vec![]
+                } else {
+                    let v: Vec<f32> = comm.recv(0, 6).unwrap();
+                    let st = comm.stats();
+                    assert_eq!(st.corrupt_detected, 1);
+                    assert_eq!(st.retransmits, 1);
+                    assert_eq!(st.timeouts, 0, "heal must not wait for the deadline");
+                    v
+                }
+            });
+        assert_eq!(results[1], vec![3.25, -7.5]);
+    }
+
+    #[test]
+    fn truncated_message_detected_and_healed() {
+        let results =
+            run_world_cfg(2, faulty("truncate:rank=0,tag=2,nth=1", 200), |rank, comm| {
+                if rank == 0 {
+                    comm.send(1, 2, vec![1.0f64, 2.0, 3.0, 4.0]);
+                    vec![]
+                } else {
+                    let v: Vec<f64> = comm.recv(0, 2).unwrap();
+                    assert_eq!(comm.stats().corrupt_detected, 1);
+                    assert_eq!(comm.stats().retransmits, 1);
+                    v
+                }
+            });
+        assert_eq!(results[1], vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn duplicate_delivery_dropped_by_stale_sequence() {
+        let results =
+            run_world_cfg(2, faulty("duplicate:rank=0,tag=8,nth=1", 200), |rank, comm| {
+                if rank == 0 {
+                    comm.send(1, 8, vec![1.0f32]);
+                    comm.send(1, 8, vec![2.0f32]);
+                    0
+                } else {
+                    let a: Vec<f32> = comm.recv(0, 8).unwrap();
+                    let b: Vec<f32> = comm.recv(0, 8).unwrap();
+                    assert_eq!((a[0], b[0]), (1.0, 2.0));
+                    assert_eq!(comm.stats().duplicates_dropped, 1);
+                    1
+                }
+            });
+        assert_eq!(results, vec![0, 1]);
+    }
+
+    #[test]
+    fn delayed_message_arrives_late_but_intact() {
+        let results =
+            run_world_cfg(2, faulty("delay:rank=0,tag=3,nth=1,ms=30", 1000), |rank, comm| {
+                if rank == 0 {
+                    comm.send(1, 3, vec![9.0f32]);
+                    comm.stats().delayed
+                } else {
+                    let v: Vec<f32> = comm.recv(0, 3).unwrap();
+                    assert_eq!(v, vec![9.0]);
+                    0
+                }
+            });
+        assert_eq!(results[0], 1);
+    }
+
+    #[test]
+    fn precision_mismatch_is_structured_error() {
+        let results = run_world_cfg(2, faulty("", 200), |rank, comm| {
+            if rank == 0 {
+                comm.send(1, 1, vec![1.0f32]);
+                String::new()
+            } else {
+                comm.recv::<f64>(0, 1).unwrap_err().to_string()
+            }
+        });
+        assert!(
+            results[1].contains("recv precision mismatch")
+                && results[1].contains("wanted f64")
+                && results[1].contains("got f32"),
+            "{}",
+            results[1]
+        );
+    }
+
+    #[test]
+    fn collective_timeout_poisons_instead_of_hanging() {
+        let t0 = Instant::now();
+        let results = run_world_cfg(2, faulty("", 60), |rank, comm| {
+            if rank == 0 {
+                // never joins the collective
+                (0.0, None)
+            } else {
+                let v = comm.allreduce_sum(5.0);
+                (v, comm.comm_fault())
+            }
+        });
+        assert_eq!(results[1].0, 5.0, "degrades to the local value");
+        assert!(
+            matches!(results[1].1, Some(CommError::CollectiveTimeout { rank: 1, .. })),
+            "{:?}",
+            results[1].1
+        );
+        assert!(t0.elapsed() < Duration::from_secs(10));
+    }
+
+    #[test]
+    fn kill_hook_poisons_and_shortcircuits() {
+        let results = run_world_cfg(2, faulty("kill:rank=1,iter=2", 60), |rank, comm| {
+            if rank == 0 {
+                // survives its iterations, then times out at the reduce
+                for it in 0..3 {
+                    comm.iteration_hook(it).unwrap();
+                }
+                let _ = comm.allreduce_sum(1.0);
+                comm.comm_fault().map(|e| e.to_string())
+            } else {
+                for it in 0..3 {
+                    if let Err(e) = comm.iteration_hook(it) {
+                        assert!(
+                            matches!(e, CommError::Killed { rank: 1, iteration: 2 }),
+                            "{e}"
+                        );
+                        // poisoned: collectives short-circuit immediately
+                        let _ = comm.allreduce_sum(1.0);
+                        return comm.comm_fault().map(|e| e.to_string());
+                    }
+                }
+                None
+            }
+        });
+        let killed = results[1].as_ref().expect("victim must carry the kill fault");
+        assert!(killed.contains("killed by fault injection"), "{killed}");
+        assert!(killed.contains("iteration 2"), "{killed}");
+        let peer = results[0].as_ref().expect("peer must time out");
+        assert!(peer.contains("collective timeout"), "{peer}");
+    }
+
+    #[test]
+    fn recv_or_zero_degrades_and_records_fault() {
+        let results = run_world_cfg(2, faulty("", 50), |rank, comm| {
+            if rank == 0 {
+                (vec![], None)
+            } else {
+                let v: Vec<f64> = comm.recv_or_zero(0, 11, 4);
+                (v, comm.comm_fault())
+            }
+        });
+        assert_eq!(results[1].0, vec![0.0; 4]);
+        assert!(matches!(results[1].1, Some(CommError::Timeout { .. })));
     }
 }

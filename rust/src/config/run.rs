@@ -42,6 +42,21 @@ pub struct SolverConfig {
     /// single-RHS fused pipeline; >1 routes through the multi-RHS
     /// block solver, streaming the gauge field once for all systems).
     pub nrhs: usize,
+    /// Krylov restarts the solver health guard may perform after
+    /// recoverable events (non-finite scalars, stagnation, residual
+    /// drift) before declaring the solve failed.
+    pub max_restarts: usize,
+}
+
+/// `[comm]`: hardening knobs of the simulated transport (distributed
+/// solves only; single-rank runs never touch the wire).
+#[derive(Clone, Debug)]
+pub struct CommConfig {
+    /// recv/collective deadline per message in ms; 0 waits forever
+    pub timeout_ms: u64,
+    /// retransmit attempts per corrupt/truncated/dropped halo message
+    /// before the receiver reports a structured transport error
+    pub max_retries: u32,
 }
 
 /// Gauge-link storage options.
@@ -91,6 +106,11 @@ pub struct RunConfig {
     pub gauge: GaugeConfig,
     pub parallel: ParallelConfig,
     pub tune: TuneConfig,
+    pub comm: CommConfig,
+    /// `faults.spec`: fault-injection schedule for the simulated
+    /// transport (see `comm::faults` for the grammar). Empty = no
+    /// faults; parse-validated at load, applied by `lqcd solve`.
+    pub faults: String,
     pub artifacts_dir: PathBuf,
     pub seed: u64,
 }
@@ -115,6 +135,7 @@ impl Default for RunConfig {
                 max_outer: 40,
                 threads: None,
                 nrhs: 1,
+                max_restarts: 3,
             },
             gauge: GaugeConfig {
                 compression: Compression::None,
@@ -131,6 +152,11 @@ impl Default for RunConfig {
                 roofline_floor: 0.5,
                 enabled: true,
             },
+            comm: CommConfig {
+                timeout_ms: 30_000,
+                max_retries: 3,
+            },
+            faults: String::new(),
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 20230227,
         }
@@ -204,6 +230,14 @@ impl RunConfig {
                 crate::comm::MAX_WIRE_RHS,
                 s.nrhs
             ));
+        }
+        if !self.faults.is_empty() && nranks == 1 {
+            errs.push(
+                "fault injection (--inject-faults / faults.spec) targets the \
+                 simulated transport: it needs a multi-rank grid (e.g. \
+                 --grid 1x1x1x2)"
+                    .into(),
+            );
         }
         if errs.is_empty() {
             Ok(())
@@ -346,6 +380,21 @@ impl RunConfig {
                     }
                     n as usize
                 },
+                max_restarts: {
+                    let n = doc.int_or(
+                        "solver.max_restarts",
+                        defaults.solver.max_restarts as i64,
+                    );
+                    if n < 0 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "solver.max_restarts must be >= 0 (got {n})"
+                            ),
+                        });
+                    }
+                    n as usize
+                },
             },
             gauge: GaugeConfig {
                 compression: Compression::parse(
@@ -411,6 +460,48 @@ impl RunConfig {
                     f
                 },
                 enabled: doc.bool_or("tune.enabled", defaults.tune.enabled),
+            },
+            comm: CommConfig {
+                timeout_ms: {
+                    let n = doc.int_or(
+                        "comm.timeout_ms",
+                        defaults.comm.timeout_ms as i64,
+                    );
+                    if n < 0 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "comm.timeout_ms must be >= 0 (0 = no deadline; got {n})"
+                            ),
+                        });
+                    }
+                    n as u64
+                },
+                max_retries: {
+                    let n = doc.int_or(
+                        "comm.max_retries",
+                        defaults.comm.max_retries as i64,
+                    );
+                    if n < 0 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!("comm.max_retries must be >= 0 (got {n})"),
+                        });
+                    }
+                    n as u32
+                },
+            },
+            faults: {
+                let spec = doc.str_or("faults.spec", "");
+                // validate the schedule grammar at load so a typo fails
+                // the run up front, not mid-solve
+                if let Err(m) = crate::comm::FaultPlan::parse(&spec) {
+                    return Err(ConfigError {
+                        line: 0,
+                        message: format!("faults.spec: {m}"),
+                    });
+                }
+                spec
             },
             artifacts_dir: PathBuf::from(doc.str_or("artifacts_dir", "artifacts")),
             seed: doc.int_or("seed", defaults.seed as i64) as u64,
@@ -537,6 +628,53 @@ force_comm = true
         assert!(RunConfig::from_document(&doc).is_err(), "zero budget must fail");
         let doc = Document::parse("[tune]\nroofline_floor = 1.5").unwrap();
         assert!(RunConfig::from_document(&doc).is_err(), "floor > 1 must fail");
+    }
+
+    #[test]
+    fn comm_and_fault_keys_parse_and_validate() {
+        let c = RunConfig::default();
+        assert_eq!(c.comm.timeout_ms, 30_000);
+        assert_eq!(c.comm.max_retries, 3);
+        assert_eq!(c.solver.max_restarts, 3);
+        assert!(c.faults.is_empty());
+
+        let doc = Document::parse(
+            "[comm]\ntimeout_ms = 250\nmax_retries = 5\n\
+             [solver]\nmax_restarts = 1\n\
+             [faults]\nspec = \"drop:seed=7\"",
+        )
+        .unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert_eq!(c.comm.timeout_ms, 250);
+        assert_eq!(c.comm.max_retries, 5);
+        assert_eq!(c.solver.max_restarts, 1);
+        assert_eq!(c.faults, "drop:seed=7");
+
+        // timeout 0 = wait forever is legal; negatives are not
+        let doc = Document::parse("[comm]\ntimeout_ms = 0").unwrap();
+        assert_eq!(RunConfig::from_document(&doc).unwrap().comm.timeout_ms, 0);
+        let doc = Document::parse("[comm]\ntimeout_ms = -1").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "negative timeout must fail");
+        let doc = Document::parse("[comm]\nmax_retries = -1").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "negative retries must fail");
+        let doc = Document::parse("[solver]\nmax_restarts = -1").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "negative restarts must fail");
+
+        // a bad schedule grammar fails at load, not mid-solve
+        let doc = Document::parse("[faults]\nspec = \"explode:seed=7\"").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "unknown fault must fail");
+
+        // fault injection needs a wire to inject into
+        let doc = Document::parse("[faults]\nspec = \"drop:seed=7\"").unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        let err = c.validate_solve(false).expect_err("faults on 1 rank");
+        assert!(err.contains("multi-rank"), "{err}");
+        let doc = Document::parse(
+            "[lattice]\ngrid = [1, 1, 1, 2]\n[faults]\nspec = \"drop:seed=7\"",
+        )
+        .unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert!(c.validate_solve(false).is_ok());
     }
 
     #[test]

@@ -336,10 +336,16 @@ impl DistHopping {
                 }
                 let up_rank = grid.neighbor(rank, Dir::from_index(dir), 1);
                 let down_rank = grid.neighbor(rank, Dir::from_index(dir), -1);
-                // my from_down buffer is the -d neighbor's upward export
-                bufs.from_down[dir] = comm.recv(down_rank, tag(dir, true, p_out));
+                // my from_down buffer is the -d neighbor's upward export;
+                // a transport fault degrades to a zero-filled face (the
+                // error stays in the comm's poison slot for the solver
+                // health guard — the sweep itself must finish so peers
+                // aren't left hanging mid-exchange)
+                bufs.from_down[dir] =
+                    comm.recv_or_zero(down_rank, tag(dir, true, p_out), plans.buffer_len(dir));
                 // my from_up buffer is the +d neighbor's downward export
-                bufs.from_up[dir] = comm.recv(up_rank, tag(dir, false, p_out));
+                bufs.from_up[dir] =
+                    comm.recv_or_zero(up_rank, tag(dir, false, p_out), plans.buffer_len(dir));
             }
         });
 
@@ -548,8 +554,19 @@ impl DistHopping {
                 }
                 let up_rank = grid.neighbor(rank, Dir::from_index(dir), 1);
                 let down_rank = grid.neighbor(rank, Dir::from_index(dir), -1);
-                bufs.from_down[dir] = comm.recv(down_rank, tag_multi(dir, true, p_out, sig));
-                bufs.from_up[dir] = comm.recv(up_rank, tag_multi(dir, false, p_out, sig));
+                // a transport fault degrades to a zero-filled batched
+                // face; the poison slot carries the error to the solver
+                // health guard after the sweep completes
+                bufs.from_down[dir] = comm.recv_or_zero(
+                    down_rank,
+                    tag_multi(dir, true, p_out, sig),
+                    plans.buffer_len_multi(dir, nact),
+                );
+                bufs.from_up[dir] = comm.recv_or_zero(
+                    up_rank,
+                    tag_multi(dir, false, p_out, sig),
+                    plans.buffer_len_multi(dir, nact),
+                );
             }
         });
 

@@ -35,6 +35,27 @@ pub trait LinearOperator<R: Real = f32> {
     fn reduce_sum(&mut self, v: f64) -> f64 {
         v
     }
+
+    /// Per-iteration fault hook, called by the solver health guard at
+    /// the top of every iteration: distributed operators apply
+    /// rank-level fault injections (stall/kill) and surface any fault
+    /// already recorded by the transport. No-op for single-rank
+    /// operators.
+    fn fault_hook(&mut self, _iteration: usize) -> Result<(), CommError> {
+        Ok(())
+    }
+
+    /// The first transport fault the underlying communicator hit, if
+    /// any (sticky; `None` for single-rank operators).
+    fn comm_fault(&self) -> Option<CommError> {
+        None
+    }
+
+    /// `(retransmits, timeouts)` recovery counters of the underlying
+    /// transport; zeros for single-rank operators.
+    fn comm_counters(&self) -> (u64, u64) {
+        (0, 0)
+    }
 }
 
 /// Native single-rank M-hat = 1 - kappa^2 H_eo H_oe (Eq. 4 LHS).
@@ -435,6 +456,25 @@ pub trait MultiOperator<R: Real> {
     /// without divergent collective sequences across ranks.
     fn reduce_any(&mut self, v: bool) -> bool {
         v
+    }
+
+    /// Per-iteration fault hook (see
+    /// [`LinearOperator::fault_hook`]): rank-level fault injection and
+    /// transport-fault surfacing for the block solvers.
+    fn fault_hook(&mut self, _iteration: usize) -> Result<(), CommError> {
+        Ok(())
+    }
+
+    /// The first transport fault the underlying communicator hit, if
+    /// any (sticky; `None` for single-rank operators).
+    fn comm_fault(&self) -> Option<CommError> {
+        None
+    }
+
+    /// `(retransmits, timeouts)` recovery counters of the underlying
+    /// transport; zeros for single-rank operators.
+    fn comm_counters(&self) -> (u64, u64) {
+        (0, 0)
     }
 }
 
@@ -877,6 +917,19 @@ impl<R: Real + CommScalar, U: LinkSource<R>> LinearOperator<R> for DistMeo<'_, R
     fn reduce_sum(&mut self, v: f64) -> f64 {
         self.comm.allreduce_sum(v)
     }
+
+    fn fault_hook(&mut self, iteration: usize) -> Result<(), CommError> {
+        self.comm.iteration_hook(iteration)
+    }
+
+    fn comm_fault(&self) -> Option<CommError> {
+        self.comm.comm_fault()
+    }
+
+    fn comm_counters(&self) -> (u64, u64) {
+        let st = self.comm.stats();
+        (st.retransmits, st.timeouts)
+    }
 }
 
 /// (rank, local tile) pairs covering the whole decomposed lattice, in
@@ -1058,6 +1111,19 @@ impl<R: Real + CommScalar, U: LinkSource<R>> MultiOperator<R> for DistMultiMeo<'
     fn reduce_any(&mut self, v: bool) -> bool {
         self.comm.allreduce_any(v)
     }
+
+    fn fault_hook(&mut self, iteration: usize) -> Result<(), CommError> {
+        self.comm.iteration_hook(iteration)
+    }
+
+    fn comm_fault(&self) -> Option<CommError> {
+        self.comm.comm_fault()
+    }
+
+    fn comm_counters(&self) -> (u64, u64) {
+        let st = self.comm.stats();
+        (st.retransmits, st.timeouts)
+    }
 }
 
 /// Distributed multi-RHS normal operator M-hat^dag M-hat: four batched
@@ -1144,6 +1210,18 @@ impl<R: Real + CommScalar, U: LinkSource<R>> MultiOperator<R> for DistMultiMdagM
     fn reduce_any(&mut self, v: bool) -> bool {
         self.inner.reduce_any(v)
     }
+
+    fn fault_hook(&mut self, iteration: usize) -> Result<(), CommError> {
+        self.inner.fault_hook(iteration)
+    }
+
+    fn comm_fault(&self) -> Option<CommError> {
+        self.inner.comm_fault()
+    }
+
+    fn comm_counters(&self) -> (u64, u64) {
+        self.inner.comm_counters()
+    }
 }
 
 /// gamma5-wrapped normal operator over any M-hat-like operator: CGNR on
@@ -1184,5 +1262,17 @@ where
 
     fn reduce_sum(&mut self, v: f64) -> f64 {
         self.inner.reduce_sum(v)
+    }
+
+    fn fault_hook(&mut self, iteration: usize) -> Result<(), CommError> {
+        self.inner.fault_hook(iteration)
+    }
+
+    fn comm_fault(&self) -> Option<CommError> {
+        self.inner.comm_fault()
+    }
+
+    fn comm_counters(&self) -> (u64, u64) {
+        self.inner.comm_counters()
     }
 }

@@ -15,7 +15,7 @@ use std::process::ExitCode;
 
 use lqcd::algebra::Real;
 use lqcd::comm::decompose::{extract_fermion, extract_gauge, insert_fermion};
-use lqcd::comm::{netmodel, run_world, CommScalar, HaloPlans};
+use lqcd::comm::{netmodel, run_world_cfg, CommScalar, FaultPlan, HaloPlans, WorldOpts};
 use lqcd::config::RunConfig;
 use lqcd::coordinator::operator::{
     DistMultiMdagM, DistMultiMeo, LinearOperator, MultiMdagM, MultiNativeMeo,
@@ -32,7 +32,7 @@ use lqcd::perf::tune::{
 use lqcd::perf::{
     auto_solver_threads_capped, calibrate_host, run_tune, A64fx, AutoThreadBound,
 };
-use lqcd::solver::{self, InnerAlgorithm};
+use lqcd::solver::{self, HealthConfig, HealthEventKind, InnerAlgorithm, SolveErrorKind};
 use lqcd::util::cli;
 use lqcd::util::rng::Rng;
 
@@ -40,7 +40,8 @@ const VALUE_OPTS: &[&str] = &[
     "dims", "tiling", "threads", "iters", "config", "kappa", "tol", "maxiter",
     "algorithm", "artifacts", "seed", "precision", "inner-tol", "max-outer",
     "nrhs", "gauge-compression", "grid", "eo2-schedule", "eo2-granularity",
-    "tune-cache", "budget-ms",
+    "tune-cache", "budget-ms", "inject-faults", "comm-timeout-ms",
+    "comm-max-retries", "max-restarts",
 ];
 
 fn main() -> ExitCode {
@@ -138,6 +139,13 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
     if args.flag("no-tune") {
         cfg.tune.enabled = false;
     }
+    if let Some(spec) = args.get("inject-faults") {
+        FaultPlan::parse(spec).map_err(|m| format!("--inject-faults: {m}"))?;
+        cfg.faults = spec.to_string();
+    }
+    cfg.comm.timeout_ms = args.get_parse("comm-timeout-ms", cfg.comm.timeout_ms)?;
+    cfg.comm.max_retries = args.get_parse("comm-max-retries", cfg.comm.max_retries)?;
+    cfg.solver.max_restarts = args.get_parse("max-restarts", cfg.solver.max_restarts)?;
     let profile = args.flag("profile");
     let use_pjrt = args.flag("pjrt") || cfg.solver.use_pjrt;
     let opts = Opts {
@@ -522,12 +530,16 @@ fn solve_native<R: Real>(
     }
     let mut team = Team::new(threads, BarrierKind::Sleep);
     let prof = profile.then(|| Profiler::new(threads));
+    let health = HealthConfig {
+        max_restarts: cfg.solver.max_restarts,
+        ..Default::default()
+    };
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let mut stats = if cfg.solver.algorithm == "bicgstab" {
         let mut op = NativeMeo::with_links(&geom, links, kappa);
         let mut x = FermionField::zeros(&geom);
-        let stats = solver::fused::bicgstab_profiled(
+        let stats = solver::fused::bicgstab_guarded(
             &mut op,
             &mut team,
             &mut x,
@@ -535,7 +547,9 @@ fn solve_native<R: Real>(
             cfg.solver.tol,
             cfg.solver.maxiter,
             prof.as_ref(),
-        );
+            &health,
+        )
+        .map_err(|e| format!("solve failed: {e}"))?;
         println!(
             "true |Mx-b|/|b| = {:.3e}",
             solver::residual::operator_residual(&mut op, &x, &b)
@@ -549,7 +563,7 @@ fn solve_native<R: Real>(
         op.meo().apply(&mut mbp, &bp);
         mbp.gamma5();
         let mut x = FermionField::zeros(&geom);
-        let stats = solver::fused::cg_profiled(
+        let stats = solver::fused::cg_guarded(
             &mut op,
             &mut team,
             &mut x,
@@ -557,7 +571,9 @@ fn solve_native<R: Real>(
             cfg.solver.tol,
             cfg.solver.maxiter,
             prof.as_ref(),
-        );
+            &health,
+        )
+        .map_err(|e| format!("solve failed: {e}"))?;
         println!(
             "true |MdagM x - Mdag b|/|Mdag b| = {:.3e}",
             solver::residual::operator_residual(&mut op, &x, &mbp)
@@ -731,9 +747,23 @@ fn solve_distributed<R: Real + CommScalar>(
     let force_comm = cfg.parallel.force_comm;
     let compression = cfg.gauge.compression;
     let (eo2_schedule, eo2_granularity) = (knobs.eo2_schedule, knobs.eo2_granularity);
+    let health = HealthConfig {
+        max_restarts: cfg.solver.max_restarts,
+        ..Default::default()
+    };
+    let faults = FaultPlan::parse(&cfg.faults)
+        .map_err(|m| format!("faults.spec: {m}"))?;
+    if !faults.is_empty() {
+        println!("fault injection: {}", cfg.faults);
+    }
+    let world = WorldOpts {
+        timeout_ms: cfg.comm.timeout_ms,
+        max_retries: cfg.comm.max_retries,
+        faults,
+    };
 
     let sw = lqcd::util::timer::Stopwatch::start();
-    let results = run_world(nranks, |rank, comm| {
+    let results = run_world_cfg(nranks, world, |rank, comm| {
         let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
         let links = Links::from_gauge(extract_gauge(&u_global, &lgeom), compression);
         let local_sources: Vec<FermionField<R>> = sources
@@ -757,8 +787,9 @@ fn solve_distributed<R: Real + CommScalar>(
                 &lgeom, &dist, &links, kappa, nrhs, comm, &prof,
             )
             .expect("wire-format handshake");
-            let stats =
-                solver::block_bicgstab_generic(&mut op, &mut team, &mut x, &b, tol, maxiter);
+            let stats = solver::block_bicgstab_generic_guarded(
+                &mut op, &mut team, &mut x, &b, tol, maxiter, &health,
+            );
             (b, stats)
         } else {
             // CGNR: per-RHS right-hand side is Mdag b_r, prepared with
@@ -778,13 +809,47 @@ fn solve_distributed<R: Real + CommScalar>(
                 &lgeom, &dist, &links, kappa, nrhs, comm, &prof,
             )
             .expect("wire-format handshake");
-            let stats =
-                solver::block_cg_generic(&mut op, &mut team, &mut x, &mbp, tol, maxiter);
+            let stats = solver::block_cg_generic_guarded(
+                &mut op, &mut team, &mut x, &mbp, tol, maxiter, &health,
+            );
             (mbp, stats)
         };
         (x.demux(), rhs.demux(), stats, prof.snapshot())
     });
     let secs = sw.secs();
+
+    // a rank that diagnosed an unrecoverable fault (killed peer,
+    // exhausted restart budget) carries a structured SolveError; report
+    // the first one and exit non-zero instead of printing garbage
+    // residuals
+    if let Some((rank, e)) = results
+        .iter()
+        .enumerate()
+        .find_map(|(r, (_, _, res, _))| res.as_ref().err().map(|e| (r, e)))
+    {
+        let kind = match &e.kind {
+            SolveErrorKind::Comm(_) => "comm-fault",
+            _ => "restarts-exhausted",
+        };
+        let restarts = e
+            .events
+            .iter()
+            .filter(|ev| ev.kind != HealthEventKind::CommFault)
+            .count();
+        println!(
+            "recovery: {{\"converged\":false,\"error\":\"{kind}\",\"rank\":{rank},\
+             \"iteration\":{},\"restarts\":{},\"health_events\":{},\
+             \"retransmits\":{},\"timeouts\":{}}}",
+            e.iteration,
+            restarts,
+            e.events.len(),
+            e.retransmits,
+            e.timeouts,
+        );
+        return Err(format!("rank {rank}: {e}").into());
+    }
+    let stats_by_rank: Vec<&solver::BlockSolveStats> =
+        results.iter().map(|(_, _, res, _)| res.as_ref().unwrap()).collect();
 
     // join the per-rank solutions / right-hand sides back to the global
     // lattice and measure the true residual with the single-rank operator
@@ -818,9 +883,13 @@ fn solve_distributed<R: Real + CommScalar>(
         worst
     };
 
-    // stats are identical on every rank (all scalars come from the
-    // global-tile-order reductions); report rank 0's
-    let stats = &results[0].2;
+    // solver stats are identical on every rank (all scalars come from
+    // the global-tile-order reductions); report rank 0's. The transport
+    // recovery counters are per-rank — sum them for the fleet view.
+    let stats = stats_by_rank[0];
+    let (retransmits, timeouts) = stats_by_rank
+        .iter()
+        .fold((0u64, 0u64), |acc, s| (acc.0 + s.retransmits, acc.1 + s.timeouts));
     for (r, s) in stats.per_rhs.iter().enumerate() {
         println!(
             "  rhs {r:>2}: {} iterations, converged={}, rel residual {:.3e}",
@@ -857,6 +926,15 @@ fn solve_distributed<R: Real + CommScalar>(
         resid,
         secs,
         stats.threads,
+    );
+    // machine-readable recovery summary (CI chaos smoke greps this):
+    // restarts/health_events are the guard's collective decisions
+    // (identical on every rank), retransmits/timeouts sum the per-rank
+    // transport counters
+    println!(
+        "recovery: {{\"converged\":{},\"restarts\":{},\"health_events\":{},\
+         \"retransmits\":{retransmits},\"timeouts\":{timeouts}}}",
+        stats.converged, stats.restarts, stats.health_events,
     );
     println!("knobs: {}", knobs.summary);
     if profile {
@@ -1044,4 +1122,19 @@ OPTIONS:
   --profile            render per-thread phase bars after the solve and
                        write profile.json to the artifacts dir (native
                        fused + distributed paths)
+  --inject-faults SPEC deterministic fault injection into the simulated
+                       transport (multi-rank solves only). SPEC is
+                       ';'-separated rules: kind[:key=value,...] with
+                       kinds drop|delay|corrupt|sdc|duplicate|truncate|
+                       stall|kill and keys seed|rank|tag|nth|count|ms|iter,
+                       e.g. 'drop:seed=7' or 'kill:rank=1,iter=2'.
+                       Transport faults heal via checksum-verified
+                       retransmit; sdc/stagnation heal via health-guard
+                       restarts; kill surfaces a structured error
+  --comm-timeout-ms N  recv/collective deadline per message (default
+                       30000; 0 waits forever)
+  --comm-max-retries N retransmit attempts per lost/corrupt message
+                       (default 3)
+  --max-restarts N     Krylov restarts the solver health guard may spend
+                       on recoverable events before giving up (default 3)
 ";

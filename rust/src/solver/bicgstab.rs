@@ -3,6 +3,12 @@
 //! Complex-coefficient variant (the fields are complex; dot products use
 //! the sesquilinear inner product). Often converges in ~half the operator
 //! applications of CGNR on the same system.
+//!
+//! The guarded entry point [`bicgstab_guarded`] runs the iteration under
+//! the solver health guard. The non-finite checks deliberately precede
+//! the `< 1e-300` breakdown tests: `NaN.abs() < 1e-300` is *false*, so
+//! without them a poisoned rho/omega would sail straight through the
+//! breakdown guards and corrupt the solution update.
 
 use crate::algebra::{Complex, Real};
 use crate::coordinator::operator::LinearOperator;
@@ -10,6 +16,9 @@ use crate::dslash::flops as fl;
 use crate::field::FermionField;
 
 use super::fused::BICGSTAB_UNFUSED_SWEEPS;
+use super::health::{
+    HealthConfig, HealthGuard, Interrupt, SolveError, StagnationTracker,
+};
 use super::SolveStats;
 
 /// Global sesquilinear dot through the operator's reducer.
@@ -22,7 +31,15 @@ fn gdot<R: Real, A: LinearOperator<R>>(
     Complex::new(op.reduce_sum(local.re), op.reduce_sum(local.im))
 }
 
+fn cfinite(c: Complex) -> bool {
+    c.re.is_finite() && c.im.is_finite()
+}
+
 /// Solve `A x = b` with BiCGStab. `x` holds the initial guess on entry.
+///
+/// Runs under a default health guard; failures fold into a
+/// non-converged [`SolveStats`]. Use [`bicgstab_guarded`] for the typed
+/// error.
 pub fn bicgstab<R: Real, A: LinearOperator<R>>(
     op: &mut A,
     x: &mut FermionField<R>,
@@ -30,21 +47,99 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
     tol: f64,
     maxiter: usize,
 ) -> SolveStats {
+    match bicgstab_guarded(op, x, b, tol, maxiter, &HealthConfig::default()) {
+        Ok(stats) => stats,
+        Err(e) => e.into_stats(BICGSTAB_UNFUSED_SWEEPS, 1),
+    }
+}
+
+/// BiCGStab under the solver health guard (see [`super::cg_guarded`]
+/// for the restart semantics; recoverable events re-enter the iteration
+/// from the warm iterate with a fresh shadow residual).
+pub fn bicgstab_guarded<R: Real, A: LinearOperator<R>>(
+    op: &mut A,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+) -> Result<SolveStats, SolveError> {
+    let mut guard = HealthGuard::new(health);
+    let mut history = Vec::new();
+    let mut flops = 0u64;
+    let c0 = op.comm_counters();
+    let counters = |op: &A| {
+        let c1 = op.comm_counters();
+        (c1.0 - c0.0, c1.1 - c0.1)
+    };
+    loop {
+        match bicgstab_attempt(op, x, b, tol, maxiter, health, &mut history, &mut flops)
+        {
+            Ok(mut stats) => {
+                if stats.converged && health.drift_tol > 0.0 {
+                    let ratio = super::health::drift_ratio(
+                        op,
+                        x,
+                        b,
+                        stats.rel_residual,
+                        &mut flops,
+                    );
+                    if !ratio.is_finite() || ratio > health.drift_tol {
+                        guard.absorb(
+                            Interrupt::Drift { iteration: history.len(), ratio },
+                            &history,
+                            counters(op),
+                        )?;
+                        continue;
+                    }
+                    stats.flops = flops;
+                }
+                guard.finish(&mut stats, counters(op));
+                return Ok(stats);
+            }
+            Err(int) => {
+                guard.absorb(int, &history, counters(op))?;
+            }
+        }
+    }
+}
+
+/// One guarded BiCGStab attempt (see [`super::cg`]'s `cg_attempt` for
+/// the shared conventions: `history`/`flops` accumulate across
+/// attempts, the global iteration number is `history.len()`).
+#[allow(clippy::too_many_arguments)]
+fn bicgstab_attempt<R: Real, A: LinearOperator<R>>(
+    op: &mut A,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+    history: &mut Vec<f64>,
+    flops: &mut u64,
+) -> Result<SolveStats, Interrupt> {
+    let finish = |history: &[f64], flops: u64, converged: bool, rel: f64| SolveStats {
+        iterations: history.len(),
+        converged,
+        rel_residual: rel,
+        history: history.to_vec(),
+        flops,
+        sweeps_per_iter: BICGSTAB_UNFUSED_SWEEPS,
+        threads: 1,
+        knob_sources: None,
+        restarts: 0,
+        health_events: 0,
+        retransmits: 0,
+        timeouts: 0,
+    };
+    op.fault_hook(history.len())
+        .map_err(|err| Interrupt::Comm { err, iteration: history.len() })?;
     let bnorm2 = op.reduce_sum(b.norm2());
     let nreal = b.data.len() as u64;
-    let mut flops = fl::norm2_flops(nreal);
+    *flops += fl::norm2_flops(nreal);
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
-        return SolveStats {
-            iterations: 0,
-            converged: true,
-            rel_residual: 0.0,
-            history: vec![],
-            flops: 0,
-            sweeps_per_iter: BICGSTAB_UNFUSED_SWEEPS,
-            threads: 1,
-            knob_sources: None,
-        };
+        return Ok(finish(&[], 0, true, 0.0));
     }
     let limit = tol * tol * bnorm2;
 
@@ -61,82 +156,126 @@ pub fn bicgstab<R: Real, A: LinearOperator<R>>(
         op.apply(&mut t, x);
         r.axpy(-R::ONE, &t);
         rr = op.reduce_sum(r.norm2());
-        flops += op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        *flops += op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+    }
+    if !rr.is_finite() {
+        // poisoned warm iterate: fall back to a cold restart
+        x.fill(R::ZERO);
+        return Err(Interrupt::NonFinite {
+            what: "initial |r|^2",
+            iteration: history.len(),
+        });
     }
     let rhat = r.clone();
     let mut p = r.clone();
     let mut v = b.zeros_like();
     let mut rho = gdot(op, &rhat, &r);
-    flops += fl::cdot_flops(nreal);
-    let mut history = Vec::new();
-    let mut iterations = 0;
+    *flops += fl::cdot_flops(nreal);
+    if !cfinite(rho) {
+        return Err(Interrupt::NonFinite {
+            what: "rho",
+            iteration: history.len(),
+        });
+    }
+    let mut stag = StagnationTracker::new(health.stagnation_window);
 
-    while iterations < maxiter && rr > limit {
+    while history.len() < maxiter && rr > limit {
+        let iteration = history.len();
+        op.fault_hook(iteration)
+            .map_err(|err| Interrupt::Comm { err, iteration })?;
         // v = A p
         op.apply(&mut v, &p);
-        flops += op.flops_per_apply() + fl::cdot_flops(nreal);
+        *flops += op.flops_per_apply() + fl::cdot_flops(nreal);
         let rhat_v = gdot(op, &rhat, &v);
+        if !cfinite(rhat_v) {
+            return Err(Interrupt::NonFinite { what: "rhat·v", iteration });
+        }
         if rhat_v.abs() < 1e-300 {
             break; // breakdown
         }
         let alpha = rho * rhat_v.conj().scale(1.0 / rhat_v.norm2());
+        if !cfinite(alpha) {
+            return Err(Interrupt::NonFinite { what: "alpha", iteration });
+        }
         // s = r - alpha v   (reuse r as s)
         r.caxpy(-alpha, &v);
         let snorm = op.reduce_sum(r.norm2());
-        flops += fl::caxpy_flops(nreal) + fl::norm2_flops(nreal);
+        *flops += fl::caxpy_flops(nreal) + fl::norm2_flops(nreal);
+        if !snorm.is_finite() {
+            // x has not been touched this iteration — still warm
+            return Err(Interrupt::NonFinite { what: "|s|^2", iteration });
+        }
         if snorm <= limit {
             x.caxpy(alpha, &p);
-            flops += fl::caxpy_flops(nreal);
+            *flops += fl::caxpy_flops(nreal);
             rr = snorm;
-            iterations += 1;
             history.push((rr / bnorm2).sqrt());
             break;
         }
         // t = A s
         op.apply(&mut t, &r);
-        flops += op.flops_per_apply() + fl::cdot_flops(nreal) + fl::norm2_flops(nreal);
+        *flops += op.flops_per_apply() + fl::cdot_flops(nreal) + fl::norm2_flops(nreal);
         let ts = gdot(op, &t, &r);
         let tt = op.reduce_sum(t.norm2());
+        if !cfinite(ts) || !tt.is_finite() {
+            return Err(Interrupt::NonFinite { what: "t·s / |t|^2", iteration });
+        }
         if tt == 0.0 {
             break;
         }
         let omega = ts.scale(1.0 / tt);
+        if !cfinite(omega) {
+            return Err(Interrupt::NonFinite { what: "omega", iteration });
+        }
         // x += alpha p + omega s
         x.caxpy(alpha, &p);
         x.caxpy(omega, &r);
         // r = s - omega t
         r.caxpy(-omega, &t);
         rr = op.reduce_sum(r.norm2());
-        flops += 3 * fl::caxpy_flops(nreal) + fl::norm2_flops(nreal) + fl::cdot_flops(nreal);
-        iterations += 1;
-        history.push((rr / bnorm2).sqrt());
+        *flops += 3 * fl::caxpy_flops(nreal) + fl::norm2_flops(nreal) + fl::cdot_flops(nreal);
+        if !rr.is_finite() {
+            return Err(Interrupt::NonFinite { what: "|r|^2", iteration });
+        }
+        let rel = (rr / bnorm2).sqrt();
+        history.push(rel);
 
         let rho_new = gdot(op, &rhat, &r);
+        if !cfinite(rho_new) {
+            return Err(Interrupt::NonFinite {
+                what: "rho",
+                iteration: history.len(),
+            });
+        }
         if rho.abs() < 1e-300 || omega.abs() < 1e-300 {
             break;
         }
-        let beta = (rho_new * alpha) * (rho * omega).conj().scale(
-            1.0 / (rho * omega).norm2(),
-        );
+        let beta = (rho_new * alpha)
+            * (rho * omega).conj().scale(1.0 / (rho * omega).norm2());
+        if !cfinite(beta) {
+            return Err(Interrupt::NonFinite {
+                what: "beta",
+                iteration: history.len(),
+            });
+        }
         // p = r + beta (p - omega v)
         p.caxpy(-omega, &v);
         // p = beta * p + r: do it via scale trick
         cscale(&mut p, beta);
         p.axpy(R::ONE, &r);
-        flops += fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal);
+        *flops += fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal);
         rho = rho_new;
+        if rr > limit && stag.stalled(rel) {
+            return Err(Interrupt::Stagnation { iteration: history.len() });
+        }
     }
 
-    SolveStats {
-        iterations,
-        converged: rr <= limit,
-        rel_residual: (rr / bnorm2).sqrt(),
-        history,
-        flops,
-        sweeps_per_iter: BICGSTAB_UNFUSED_SWEEPS,
-        threads: 1,
-        knob_sources: None,
+    // A transport fault zero-fills halos rather than panicking: surface
+    // the recorded fault instead of untrustworthy stats.
+    if let Some(err) = op.comm_fault() {
+        return Err(Interrupt::Comm { err, iteration: history.len() });
     }
+    Ok(finish(history, *flops, rr <= limit, (rr / bnorm2).sqrt()))
 }
 
 /// In-place complex scale of a field.
@@ -191,6 +330,37 @@ mod tests {
         ax.axpy(-1.0, &b);
         let rel = (ax.norm2() / b.norm2()).sqrt();
         assert!(rel < 1e-5, "true residual {rel}");
+        assert_eq!(stats.restarts, 0);
+        assert_eq!(stats.health_events, 0);
+    }
+
+    #[test]
+    fn bicgstab_guarded_matches_unguarded_bitwise() {
+        let g = geom();
+        let mut rng = Rng::seeded(203);
+        let u = GaugeField::random(&g, &mut rng);
+        let b = FermionField::gaussian(&g, &mut rng);
+        let mut op = NativeMeo::new(&g, u, 0.12f32);
+
+        let mut x1 = FermionField::zeros(&g);
+        let plain = bicgstab(&mut op, &mut x1, &b, 1e-8, 300);
+        let mut x2 = FermionField::zeros(&g);
+        let strict = bicgstab_guarded(
+            &mut op,
+            &mut x2,
+            &b,
+            1e-8,
+            300,
+            &HealthConfig {
+                stagnation_window: 50,
+                drift_tol: 1000.0,
+                ..Default::default()
+            },
+        )
+        .expect("clean solve");
+        assert_eq!(plain.history, strict.history, "guard changed the history");
+        assert_eq!(x1.data, x2.data, "guard changed the iterates");
+        assert_eq!(strict.restarts, 0);
     }
 
     #[test]

@@ -63,6 +63,10 @@ use crate::field::blas;
 use crate::field::block::MultiFermionField;
 
 use super::fused::{ro, ro_at, BICGSTAB_FUSED_SWEEPS, CG_FUSED_SWEEPS};
+use super::health::{
+    HealthConfig, HealthEventKind, HealthGuard, Interrupt, SolveError,
+    StagnationTracker,
+};
 
 /// Convergence record of one right-hand side of a block solve.
 #[derive(Clone, Debug)]
@@ -93,6 +97,15 @@ pub struct BlockSolveStats {
     pub sweeps_per_iter: f64,
     /// worker-team threads the batched sweeps ran on
     pub threads: usize,
+    /// Krylov restarts the health guard performed (guarded `_generic`
+    /// solvers; always 0 on the native in-region paths)
+    pub restarts: usize,
+    /// health-guard events observed (restarts plus fatal diagnoses)
+    pub health_events: usize,
+    /// halo messages healed from the sender-side retransmit store
+    pub retransmits: u64,
+    /// recv/collective deadlines that expired (including recovered ones)
+    pub timeouts: u64,
 }
 
 impl BlockSolveStats {
@@ -105,7 +118,43 @@ impl BlockSolveStats {
             flops,
             sweeps_per_iter: sweeps,
             threads,
+            restarts: 0,
+            health_events: 0,
+            retransmits: 0,
+            timeouts: 0,
         }
+    }
+}
+
+/// Fold a guarded-solve failure into a (non-converged)
+/// [`BlockSolveStats`] for callers that only consume stats: per-RHS
+/// converged flags come from the error's mask, histories are dropped.
+fn err_to_block(e: SolveError, nrhs: usize, sweeps: f64, threads: usize) -> BlockSolveStats {
+    let mask = e.converged_mask.clone().unwrap_or_else(|| vec![false; nrhs]);
+    BlockSolveStats {
+        nrhs,
+        iterations: e.iteration,
+        converged: false,
+        per_rhs: mask
+            .iter()
+            .map(|&c| RhsStats {
+                iterations: e.iteration,
+                converged: c,
+                rel_residual: f64::NAN,
+                history: vec![],
+            })
+            .collect(),
+        flops: 0,
+        sweeps_per_iter: sweeps,
+        threads,
+        restarts: e
+            .events
+            .iter()
+            .filter(|ev| ev.kind != HealthEventKind::CommFault)
+            .count(),
+        health_events: e.events.len(),
+        retransmits: e.retransmits,
+        timeouts: e.timeouts,
     }
 }
 
@@ -788,6 +837,10 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
 /// Batched CG over any [`MultiOperator`] (CGNR on a normal operator):
 /// the distributed analog of [`block_cg`], with per-RHS convergence
 /// masks propagated into the operator (and thence the halo payload).
+///
+/// Runs under a default health guard; failures fold into a
+/// non-converged [`BlockSolveStats`]. Use [`block_cg_generic_guarded`]
+/// for the typed error.
 pub fn block_cg_generic<R: Real, A: MultiOperator<R>>(
     op: &mut A,
     team: &mut Team,
@@ -797,15 +850,55 @@ pub fn block_cg_generic<R: Real, A: MultiOperator<R>>(
     maxiter: usize,
 ) -> BlockSolveStats {
     let nrhs = op.nrhs();
+    let threads = team.nthreads();
+    match block_cg_generic_guarded(op, team, x, b, tol, maxiter, &HealthConfig::default()) {
+        Ok(stats) => stats,
+        Err(e) => err_to_block(e, nrhs, CG_FUSED_SWEEPS, threads),
+    }
+}
+
+/// Attach the per-RHS converged mask to a fatal guard error: the block
+/// guard loops own the per-RHS bookkeeping, [`HealthGuard::absorb`]
+/// does not.
+fn with_mask(mut e: SolveError, stats: &[RhsStats]) -> SolveError {
+    e.converged_mask = Some(stats.iter().map(|s| s.converged).collect());
+    e
+}
+
+/// Batched CG under the solver health guard: non-finite per-RHS
+/// iteration scalars abort the batched iteration *before* the combined
+/// x/r sweep where possible, the guard restarts the Krylov processes
+/// from the warm iterates (bounded by `solver.max_restarts`), and
+/// transport faults surface as a typed [`SolveError`] whose
+/// `converged_mask` records which RHS had already finished. The
+/// fault-free path is bitwise identical to [`block_cg_generic`]'s
+/// histories (the checks never alter the arithmetic).
+pub fn block_cg_generic_guarded<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+) -> Result<BlockSolveStats, SolveError> {
+    let nrhs = op.nrhs();
     assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
     let ntiles = b.site_tiles();
-    let nreal = b.rhs_len() as u64;
     let vpt = b.vals_per_tile();
     let vlen = b.layout.vlen();
-    let n = team.nthreads();
-    let flops_apply = op.flops_per_apply_rhs();
-    let flops_shared = op.flops_per_apply_shared();
+    let nreal = b.rhs_len() as u64;
+
+    let mut guard = HealthGuard::new(health);
+    let mut history: Vec<f64> = Vec::new();
+    let mut iterations = 0usize;
+    let mut flops = 0u64;
+    let c0 = op.comm_counters();
+    let counters = |op: &A| {
+        let c1 = op.comm_counters();
+        (c1.0 - c0.0, c1.1 - c0.1)
+    };
 
     let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
     // |b_r|² through the operator's reduction: canonical site-tile
@@ -817,8 +910,8 @@ pub fn block_cg_generic<R: Real, A: MultiOperator<R>>(
         }
     }
     let bnorm2: Vec<f64> = op.reduce_caps(&caps).iter().map(|c| c[2]).collect();
+    flops += nrhs as u64 * fl::norm2_flops(nreal);
 
-    let mut flops = nrhs as u64 * fl::norm2_flops(nreal);
     let mut active = vec![true; nrhs];
     let mut stats: Vec<RhsStats> = (0..nrhs)
         .map(|_| RhsStats { iterations: 0, converged: false, rel_residual: 0.0, history: vec![] })
@@ -831,14 +924,121 @@ pub fn block_cg_generic<R: Real, A: MultiOperator<R>>(
         }
     }
     let limit: Vec<f64> = bnorm2.iter().map(|&bn| tol * tol * bn).collect();
+    // a zero-filled |b|² after a transport fault must not masquerade as
+    // an all-trivial solve
+    if let Some(err) = op.comm_fault() {
+        let e = guard
+            .absorb(Interrupt::Comm { err, iteration: 0 }, &history, counters(op))
+            .expect_err("comm faults are fatal");
+        return Err(with_mask(e, &stats));
+    }
 
+    loop {
+        match block_cg_generic_attempt(
+            op,
+            team,
+            x,
+            b,
+            maxiter,
+            health,
+            &bnorm2,
+            &limit,
+            &mut active,
+            &mut stats,
+            &mut iterations,
+            &mut history,
+            &mut flops,
+        ) {
+            Ok(mut out) => {
+                // Drift check at apparent convergence: a recursive
+                // residual that silently diverged from the true one
+                // reactivates the affected RHS and restarts them.
+                if health.drift_tol > 0.0 {
+                    let (redo, worst) = block_drift_reactivate(
+                        op,
+                        team,
+                        x,
+                        b,
+                        &stats,
+                        &bnorm2,
+                        health.drift_tol,
+                        &mut flops,
+                    );
+                    if redo.iter().any(|&a| a) {
+                        guard
+                            .absorb(
+                                Interrupt::Drift { iteration: iterations, ratio: worst },
+                                &history,
+                                counters(op),
+                            )
+                            .map_err(|e| with_mask(e, &stats))?;
+                        for i in 0..nrhs {
+                            if redo[i] {
+                                active[i] = true;
+                                stats[i].converged = false;
+                            }
+                        }
+                        continue;
+                    }
+                    out.flops = flops;
+                }
+                let c = counters(op);
+                out.restarts = guard.restarts;
+                out.health_events = guard.events.len();
+                out.retransmits = c.0;
+                out.timeouts = c.1;
+                return Ok(out);
+            }
+            Err(int) => {
+                guard
+                    .absorb(int, &history, counters(op))
+                    .map_err(|e| with_mask(e, &stats))?;
+            }
+        }
+    }
+}
+
+/// One guarded batched-CG attempt: re-derives every active residual
+/// from the warm iterates, then runs the batched 3-sweep iteration
+/// until all RHS converge, the (global) `maxiter` budget, or an
+/// interrupt. `active`/`stats`/`iterations`/`history`/`flops` persist
+/// across attempts; `iterations` is the global batched-iteration count.
+#[allow(clippy::too_many_arguments)]
+fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    maxiter: usize,
+    health: &HealthConfig,
+    bnorm2: &[f64],
+    limit: &[f64],
+    active: &mut [bool],
+    stats: &mut [RhsStats],
+    iterations: &mut usize,
+    history: &mut Vec<f64>,
+    flops: &mut u64,
+) -> Result<BlockSolveStats, Interrupt> {
+    let nrhs = b.nrhs;
+    let ntiles = b.site_tiles();
+    let nreal = b.rhs_len() as u64;
+    let vpt = b.vals_per_tile();
+    let vlen = b.layout.vlen();
+    let n = team.nthreads();
+    let flops_apply = op.flops_per_apply_rhs();
+    let flops_shared = op.flops_per_apply_shared();
+
+    op.fault_hook(*iterations)
+        .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
+
+    let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
     let mut r = b.clone();
     let mut ap = b.zeros_like();
-    let mut rr = bnorm2.clone();
+    let mut rr = bnorm2.to_vec();
     // globally consistent warm-start decision (a rank whose local shard
     // happens to be zero must still join the collective apply)
     if op.reduce_any(!x.is_zero()) {
-        op.apply_multi(team, &mut ap, x, &active, None);
+        op.apply_multi(team, &mut ap, x, active, None);
         // r = b - A x with per-(tile, RHS) |r|² capture (serial entry
         // phase, like the fused solver's axpy_norm2_masked)
         for t in 0..ntiles {
@@ -859,31 +1059,54 @@ pub fn block_cg_generic<R: Real, A: MultiOperator<R>>(
                 rr[i] = red[i][2];
             }
         }
-        flops += nact * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+        *flops += nact * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
         if nact > 0 {
-            flops += flops_shared;
+            *flops += flops_shared;
         }
     }
+    // a poisoned warm iterate has nothing worth preserving: cold-restart
+    // just that RHS (zero guess) and charge the guard's budget
+    let mut poisoned = false;
     for i in 0..nrhs {
-        if active[i] && rr[i] <= limit[i] {
-            active[i] = false;
-            stats[i].converged = true;
+        if active[i] && !rr[i].is_finite() {
+            x.fill_rhs(i, R::ZERO);
+            poisoned = true;
+        }
+    }
+    if poisoned {
+        return Err(Interrupt::NonFinite { what: "initial |r|^2", iteration: *iterations });
+    }
+    for i in 0..nrhs {
+        if active[i] {
+            stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
+            if rr[i] <= limit[i] {
+                active[i] = false;
+                stats[i].converged = true;
+            }
         }
     }
     let mut p = r.clone();
-    let mut iterations = 0;
+    let mut stag = StagnationTracker::new(health.stagnation_window);
 
-    while iterations < maxiter && active.iter().any(|&a| a) {
+    while *iterations < maxiter && active.iter().any(|&a| a) {
+        op.fault_hook(*iterations)
+            .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
         let nact = active.iter().filter(|&&a| a).count() as u64;
         let rr_iter = rr.clone();
-        let mask = active.clone();
+        let mask: Vec<bool> = active.to_vec();
         // sweep 1: ap = A p with per-(tile, RHS) p·Ap capture
         op.apply_multi(team, &mut ap, &p, &mask, Some((&p, &mut caps)));
         let red = op.reduce_caps(&caps);
         let mut alphas = vec![R::ZERO; nrhs];
         for i in 0..nrhs {
             if mask[i] {
-                alphas[i] = R::from_f64(rr_iter[i] / red[i][0]);
+                let a = rr_iter[i] / red[i][0];
+                // checked before the combined x/r sweep: the solution
+                // iterates are still warm if this reduction was poisoned
+                if !a.is_finite() {
+                    return Err(Interrupt::NonFinite { what: "pAp", iteration: *iterations });
+                }
+                alphas[i] = R::from_f64(a);
             }
         }
         // sweep 2: x += alpha p ; r -= alpha ap ; per-(tile, RHS) |r|²
@@ -917,6 +1140,13 @@ pub fn block_cg_generic<R: Real, A: MultiOperator<R>>(
             });
         }
         let red = op.reduce_caps(&caps);
+        for i in 0..nrhs {
+            // x was updated this sweep, but with a finite alpha: the
+            // restart re-derives r = b - A x from that warm iterate
+            if mask[i] && !red[i][2].is_finite() {
+                return Err(Interrupt::NonFinite { what: "|r|^2", iteration: *iterations });
+            }
+        }
         let mut betas = vec![R::ZERO; nrhs];
         for i in 0..nrhs {
             if mask[i] {
@@ -946,39 +1176,133 @@ pub fn block_cg_generic<R: Real, A: MultiOperator<R>>(
                 }
             });
         }
-        flops += flops_shared
+        *flops += flops_shared
             + nact
                 * (flops_apply
                     + fl::dot_re_flops(nreal)
                     + 2 * fl::axpy_flops(nreal)
                     + fl::norm2_flops(nreal)
                     + fl::xpay_flops(nreal));
-        iterations += 1;
+        *iterations += 1;
         for i in 0..nrhs {
             if !active[i] {
                 continue;
             }
             rr[i] = red[i][2];
-            stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
-            stats[i].iterations = iterations;
+            let rel = (rr[i] / bnorm2[i]).sqrt();
+            stats[i].history.push(rel);
+            stats[i].rel_residual = rel;
+            stats[i].iterations = *iterations;
             if rr[i] <= limit[i] {
                 active[i] = false;
                 stats[i].converged = true;
             }
         }
-    }
-
-    for i in 0..nrhs {
-        if bnorm2[i] > 0.0 {
-            stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
+        // guard diagnostics track the worst system that ran this
+        // iteration
+        let worst = (0..nrhs)
+            .filter(|&i| mask[i])
+            .map(|i| (rr[i] / bnorm2[i]).sqrt())
+            .fold(0.0f64, f64::max);
+        history.push(worst);
+        if active.iter().any(|&a| a) && stag.stalled(worst) {
+            return Err(Interrupt::Stagnation { iteration: *iterations });
         }
     }
-    BlockSolveStats::finish(nrhs, iterations, stats, flops, CG_FUSED_SWEEPS, team.nthreads())
+
+    // A transport fault zero-fills halos rather than panicking, so a
+    // "converged" residual after a fault is not trustworthy: surface
+    // the recorded fault instead of the stats.
+    if let Some(err) = op.comm_fault() {
+        return Err(Interrupt::Comm { err, iteration: *iterations });
+    }
+    Ok(BlockSolveStats::finish(
+        nrhs,
+        *iterations,
+        stats.to_vec(),
+        *flops,
+        CG_FUSED_SWEEPS,
+        team.nthreads(),
+    ))
+}
+
+/// Per-RHS drift check at (apparent) convergence: recompute the true
+/// residuals `r_i = b_i - A x_i` with one batched apply and compare
+/// each converged RHS against the recursive residual it stopped on.
+/// Returns which RHS must be reactivated and the worst ratio seen.
+fn block_drift_reactivate<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    stats: &[RhsStats],
+    bnorm2: &[f64],
+    drift_tol: f64,
+    flops: &mut u64,
+) -> (Vec<bool>, f64) {
+    let nrhs = b.nrhs;
+    let ntiles = b.site_tiles();
+    let vpt = b.vals_per_tile();
+    let vlen = b.layout.vlen();
+    let nreal = b.rhs_len() as u64;
+    let check: Vec<bool> = (0..nrhs)
+        .map(|i| stats[i].converged && bnorm2[i] > 0.0)
+        .collect();
+    if !check.iter().any(|&c| c) {
+        return (vec![false; nrhs], 1.0);
+    }
+    let mut ax = b.zeros_like();
+    op.apply_multi(team, &mut ax, x, &check, None);
+    let mut r = b.clone();
+    let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
+    for t in 0..ntiles {
+        for i in 0..nrhs {
+            if !check[i] {
+                continue;
+            }
+            let off = (t * nrhs + i) * vpt;
+            let rt = &mut r.data[off..off + vpt];
+            blas::axpy_slice(rt, -R::ONE, &ax.data[off..off + vpt]);
+            caps[t * nrhs + i] = [0.0, 0.0, blas::norm2_tile(rt, vlen)];
+        }
+    }
+    let red = op.reduce_caps(&caps);
+    let nact = check.iter().filter(|&&c| c).count() as u64;
+    *flops += op.flops_per_apply_shared()
+        + nact
+            * (op.flops_per_apply_rhs() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+    let mut redo = vec![false; nrhs];
+    let mut worst = 1.0f64;
+    for i in 0..nrhs {
+        if !check[i] {
+            continue;
+        }
+        let true_rel = (red[i][2] / bnorm2[i]).sqrt();
+        let recursive = stats[i].rel_residual;
+        let ratio = if recursive > 0.0 {
+            true_rel / recursive
+        } else if true_rel > 0.0 {
+            f64::INFINITY
+        } else {
+            1.0
+        };
+        if !ratio.is_finite() || ratio > drift_tol {
+            redo[i] = true;
+        }
+        if !ratio.is_finite() || ratio > worst {
+            worst = ratio;
+        }
+    }
+    (redo, worst)
 }
 
 /// Batched BiCGStab over any [`MultiOperator`]: the distributed analog
 /// of [`block_bicgstab`] (same per-RHS stage cascade, breakdown
 /// handling, masks and histories; reductions through the operator).
+///
+/// Runs under a default health guard; failures fold into a
+/// non-converged [`BlockSolveStats`]. Use
+/// [`block_bicgstab_generic_guarded`] for the typed error.
 pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
     op: &mut A,
     team: &mut Team,
@@ -988,16 +1312,46 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
     maxiter: usize,
 ) -> BlockSolveStats {
     let nrhs = op.nrhs();
+    let threads = team.nthreads();
+    match block_bicgstab_generic_guarded(op, team, x, b, tol, maxiter, &HealthConfig::default())
+    {
+        Ok(stats) => stats,
+        Err(e) => err_to_block(e, nrhs, BICGSTAB_FUSED_SWEEPS, threads),
+    }
+}
+
+/// Batched BiCGStab under the solver health guard — the BiCGStab analog
+/// of [`block_cg_generic_guarded`]: per-RHS stage scalars (alpha,
+/// |s|², omega, |r|², rho, beta) are checked before the sweep they
+/// feed, recoverable events restart the affected Krylov processes from
+/// the warm iterates, transport faults surface as typed
+/// [`SolveError`]s with the per-RHS converged mask.
+pub fn block_bicgstab_generic_guarded<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+) -> Result<BlockSolveStats, SolveError> {
+    let nrhs = op.nrhs();
     assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
     let ntiles = b.site_tiles();
-    let nreal = b.rhs_len() as u64;
     let vpt = b.vals_per_tile();
     let vlen = b.layout.vlen();
-    let n = team.nthreads();
-    let flops_apply = op.flops_per_apply_rhs();
-    let flops_shared = op.flops_per_apply_shared();
-    let count = |m: &[bool]| m.iter().filter(|&&a| a).count() as u64;
+    let nreal = b.rhs_len() as u64;
+
+    let mut guard = HealthGuard::new(health);
+    let mut history: Vec<f64> = Vec::new();
+    let mut iterations = 0usize;
+    let mut flops = 0u64;
+    let c0 = op.comm_counters();
+    let counters = |op: &A| {
+        let c1 = op.comm_counters();
+        (c1.0 - c0.0, c1.1 - c0.1)
+    };
 
     let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
     for t in 0..ntiles {
@@ -1007,8 +1361,8 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
         }
     }
     let bnorm2: Vec<f64> = op.reduce_caps(&caps).iter().map(|c| c[2]).collect();
+    flops += nrhs as u64 * fl::norm2_flops(nreal);
 
-    let mut flops = nrhs as u64 * fl::norm2_flops(nreal);
     let mut active = vec![true; nrhs];
     let mut stats: Vec<RhsStats> = (0..nrhs)
         .map(|_| RhsStats { iterations: 0, converged: false, rel_residual: 0.0, history: vec![] })
@@ -1021,12 +1375,113 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
         }
     }
     let limit: Vec<f64> = bnorm2.iter().map(|&bn| tol * tol * bn).collect();
+    if let Some(err) = op.comm_fault() {
+        let e = guard
+            .absorb(Interrupt::Comm { err, iteration: 0 }, &history, counters(op))
+            .expect_err("comm faults are fatal");
+        return Err(with_mask(e, &stats));
+    }
 
+    loop {
+        match block_bicgstab_generic_attempt(
+            op,
+            team,
+            x,
+            b,
+            maxiter,
+            health,
+            &bnorm2,
+            &limit,
+            &mut active,
+            &mut stats,
+            &mut iterations,
+            &mut history,
+            &mut flops,
+        ) {
+            Ok(mut out) => {
+                if health.drift_tol > 0.0 {
+                    let (redo, worst) = block_drift_reactivate(
+                        op,
+                        team,
+                        x,
+                        b,
+                        &stats,
+                        &bnorm2,
+                        health.drift_tol,
+                        &mut flops,
+                    );
+                    if redo.iter().any(|&a| a) {
+                        guard
+                            .absorb(
+                                Interrupt::Drift { iteration: iterations, ratio: worst },
+                                &history,
+                                counters(op),
+                            )
+                            .map_err(|e| with_mask(e, &stats))?;
+                        for i in 0..nrhs {
+                            if redo[i] {
+                                active[i] = true;
+                                stats[i].converged = false;
+                            }
+                        }
+                        continue;
+                    }
+                    out.flops = flops;
+                }
+                let c = counters(op);
+                out.restarts = guard.restarts;
+                out.health_events = guard.events.len();
+                out.retransmits = c.0;
+                out.timeouts = c.1;
+                return Ok(out);
+            }
+            Err(int) => {
+                guard
+                    .absorb(int, &history, counters(op))
+                    .map_err(|e| with_mask(e, &stats))?;
+            }
+        }
+    }
+}
+
+/// One guarded batched-BiCGStab attempt — see
+/// [`block_cg_generic_attempt`] for the shared restart contract.
+#[allow(clippy::too_many_arguments)]
+fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    maxiter: usize,
+    health: &HealthConfig,
+    bnorm2: &[f64],
+    limit: &[f64],
+    active: &mut [bool],
+    stats: &mut [RhsStats],
+    iterations: &mut usize,
+    history: &mut Vec<f64>,
+    flops: &mut u64,
+) -> Result<BlockSolveStats, Interrupt> {
+    let nrhs = b.nrhs;
+    let ntiles = b.site_tiles();
+    let nreal = b.rhs_len() as u64;
+    let vpt = b.vals_per_tile();
+    let vlen = b.layout.vlen();
+    let n = team.nthreads();
+    let flops_apply = op.flops_per_apply_rhs();
+    let flops_shared = op.flops_per_apply_shared();
+    let count = |m: &[bool]| m.iter().filter(|&&a| a).count() as u64;
+    let cfin = |c: Complex| c.re.is_finite() && c.im.is_finite();
+
+    op.fault_hook(*iterations)
+        .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
+
+    let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
     let mut r = b.clone();
     let mut t = b.zeros_like();
-    let mut rr = bnorm2.clone();
+    let mut rr = bnorm2.to_vec();
     if op.reduce_any(!x.is_zero()) {
-        op.apply_multi(team, &mut t, x, &active, None);
+        op.apply_multi(team, &mut t, x, active, None);
         for tl in 0..ntiles {
             for i in 0..nrhs {
                 if !active[i] {
@@ -1044,16 +1499,29 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
                 rr[i] = red[i][2];
             }
         }
-        flops += count(&active)
+        *flops += count(active)
             * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
         if active.iter().any(|&a| a) {
-            flops += flops_shared;
+            *flops += flops_shared;
         }
     }
+    let mut poisoned = false;
     for i in 0..nrhs {
-        if active[i] && rr[i] <= limit[i] {
-            active[i] = false;
-            stats[i].converged = true;
+        if active[i] && !rr[i].is_finite() {
+            x.fill_rhs(i, R::ZERO);
+            poisoned = true;
+        }
+    }
+    if poisoned {
+        return Err(Interrupt::NonFinite { what: "initial |r|^2", iteration: *iterations });
+    }
+    for i in 0..nrhs {
+        if active[i] {
+            stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
+            if rr[i] <= limit[i] {
+                active[i] = false;
+                stats[i].converged = true;
+            }
         }
     }
     let rhat = r.clone();
@@ -1061,27 +1529,40 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
     let mut v = b.zeros_like();
     // rho = <rhat, r> through the operator's reduction (bitwise the
     // local dot_per_rhs on a single rank)
-    rhat.cdot_norm2_partials(&r, &active, &mut caps);
+    rhat.cdot_norm2_partials(&r, active, &mut caps);
     let red = op.reduce_caps(&caps);
     let mut rho: Vec<Complex> = red.iter().map(|c| Complex::new(c[0], c[1])).collect();
-    flops += count(&active) * fl::cdot_flops(nreal);
-    let mut iterations = 0;
+    for i in 0..nrhs {
+        if active[i] && !cfin(rho[i]) {
+            return Err(Interrupt::NonFinite { what: "rho", iteration: *iterations });
+        }
+    }
+    *flops += count(active) * fl::cdot_flops(nreal);
+    let mut stag = StagnationTracker::new(health.stagnation_window);
 
-    while iterations < maxiter && active.iter().any(|&a| a) {
+    while *iterations < maxiter && active.iter().any(|&a| a) {
+        op.fault_hook(*iterations)
+            .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
         let rho_iter = rho.clone();
-        let mask = active.clone();
+        let mask: Vec<bool> = active.to_vec();
         // sweep 1: v = A p with per-RHS <rhat, v> capture
         op.apply_multi(team, &mut v, &p, &mask, Some((&rhat, &mut caps)));
         let vred = op.reduce_caps(&caps);
         let (mask_b, alpha) = stage_alpha(&mask, &rho_iter, &vred, nrhs);
-        flops += count(&mask) * (flops_apply + fl::cdot_flops(nreal)) + flops_shared;
+        for i in 0..nrhs {
+            // checked before any update this iteration touches x or r
+            if mask_b[i] && !cfin(alpha[i]) {
+                return Err(Interrupt::NonFinite { what: "alpha", iteration: *iterations });
+            }
+        }
+        *flops += count(&mask) * (flops_apply + fl::cdot_flops(nreal)) + flops_shared;
         for i in 0..nrhs {
             if mask[i] && !mask_b[i] {
                 active[i] = false; // rhat·v breakdown
             }
         }
         if !mask_b.iter().any(|&a| a) {
-            iterations += 1;
+            *iterations += 1;
             continue;
         }
         // sweep 2: s = r - alpha v (in place in r) with |s|² capture
@@ -1115,8 +1596,14 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
             });
         }
         let sred = op.reduce_caps(&caps);
-        let (mask_half, mask_c, snorm) = stage_half(&mask_b, &sred, &limit, nrhs);
-        flops += count(&mask_b) * (fl::caxpy_flops(nreal) + fl::norm2_flops(nreal));
+        let (mask_half, mask_c, snorm) = stage_half(&mask_b, &sred, limit, nrhs);
+        for i in 0..nrhs {
+            // checked before the half-step x update: x is still warm
+            if mask_b[i] && !snorm[i].is_finite() {
+                return Err(Interrupt::NonFinite { what: "|s|^2", iteration: *iterations });
+            }
+        }
+        *flops += count(&mask_b) * (fl::caxpy_flops(nreal) + fl::norm2_flops(nreal));
         if mask_half.iter().any(|&h| h) {
             // converged at the half step: x += alpha p
             let x_ptr = SendPtr(x.data.as_mut_ptr());
@@ -1141,26 +1628,34 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
                     }
                 }
             });
-            flops += count(&mask_half) * fl::caxpy_flops(nreal);
+            *flops += count(&mask_half) * fl::caxpy_flops(nreal);
             for i in 0..nrhs {
                 if mask_half[i] {
                     rr[i] = snorm[i];
-                    stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
-                    stats[i].iterations = iterations + 1;
+                    let rel = (rr[i] / bnorm2[i]).sqrt();
+                    stats[i].history.push(rel);
+                    stats[i].rel_residual = rel;
+                    stats[i].iterations = *iterations + 1;
                     stats[i].converged = true;
                     active[i] = false;
                 }
             }
         }
         if !mask_c.iter().any(|&a| a) {
-            iterations += 1;
+            *iterations += 1;
             continue;
         }
         // sweep 3: t = A s (s lives in r) with <s, t> / |t|² capture
         op.apply_multi(team, &mut t, &r, &mask_c, Some((&r, &mut caps)));
         let tred = op.reduce_caps(&caps);
         let (mask_d, omega) = stage_omega(&mask_c, &tred, nrhs);
-        flops += count(&mask_c)
+        for i in 0..nrhs {
+            // checked before the combined x update of sweeps 4/5
+            if mask_d[i] && !cfin(omega[i]) {
+                return Err(Interrupt::NonFinite { what: "omega", iteration: *iterations });
+            }
+        }
+        *flops += count(&mask_c)
             * (flops_apply + fl::cdot_flops(nreal) + fl::norm2_flops(nreal))
             + flops_shared;
         for i in 0..nrhs {
@@ -1219,16 +1714,25 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
             }
             let rred = op.reduce_caps(&caps);
             let (mask_e, beta, rr_new, rho_new) =
-                stage_final(&mask_d, &rred, &rho_iter, &omega, &alpha, &limit, nrhs);
-            flops += count(&mask_d)
+                stage_final(&mask_d, &rred, &rho_iter, &omega, &alpha, limit, nrhs);
+            for i in 0..nrhs {
+                // x was updated this sweep, but with finite alpha/omega:
+                // the restart re-derives r from that warm iterate
+                if mask_d[i] && !rr_new[i].is_finite() {
+                    return Err(Interrupt::NonFinite { what: "|r|^2", iteration: *iterations });
+                }
+            }
+            *flops += count(&mask_d)
                 * (3 * fl::caxpy_flops(nreal) + fl::cdot_flops(nreal) + fl::norm2_flops(nreal));
             for i in 0..nrhs {
                 if !mask_d[i] {
                     continue;
                 }
                 rr[i] = rr_new[i];
-                stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
-                stats[i].iterations = iterations + 1;
+                let rel = (rr[i] / bnorm2[i]).sqrt();
+                stats[i].history.push(rel);
+                stats[i].rel_residual = rel;
+                stats[i].iterations = *iterations + 1;
                 if rho_iter[i].abs() < 1e-300 || omega[i].abs() < 1e-300 {
                     stats[i].converged = rr[i] <= limit[i];
                     active[i] = false;
@@ -1237,6 +1741,14 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
                     active[i] = false;
                 } else {
                     rho[i] = rho_new[i];
+                }
+            }
+            for i in 0..nrhs {
+                // counted-then-interrupted (the histories above stay):
+                // a poisoned rho/beta would corrupt the next direction
+                if mask_e[i] && active[i] && (!cfin(rho_new[i]) || !cfin(beta[i])) {
+                    *iterations += 1;
+                    return Err(Interrupt::NonFinite { what: "beta", iteration: *iterations });
                 }
             }
             if mask_e.iter().any(|&a| a) {
@@ -1269,18 +1781,31 @@ pub fn block_bicgstab_generic<R: Real, A: MultiOperator<R>>(
                         }
                     }
                 });
-                flops += count(&mask_e)
+                *flops += count(&mask_e)
                     * (fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal));
             }
         }
-        iterations += 1;
-    }
-
-    for i in 0..nrhs {
-        if bnorm2[i] > 0.0 {
-            stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
+        *iterations += 1;
+        let worst = (0..nrhs)
+            .filter(|&i| mask[i])
+            .map(|i| (rr[i] / bnorm2[i]).sqrt())
+            .fold(0.0f64, f64::max);
+        history.push(worst);
+        if active.iter().any(|&a| a) && stag.stalled(worst) {
+            return Err(Interrupt::Stagnation { iteration: *iterations });
         }
     }
+
+    if let Some(err) = op.comm_fault() {
+        return Err(Interrupt::Comm { err, iteration: *iterations });
+    }
     let done = stats.iter().map(|s| s.iterations).max().unwrap_or(0);
-    BlockSolveStats::finish(nrhs, done, stats, flops, BICGSTAB_FUSED_SWEEPS, team.nthreads())
+    Ok(BlockSolveStats::finish(
+        nrhs,
+        done,
+        stats.to_vec(),
+        *flops,
+        BICGSTAB_FUSED_SWEEPS,
+        team.nthreads(),
+    ))
 }

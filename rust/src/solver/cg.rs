@@ -1,6 +1,13 @@
 //! Conjugate gradient for hermitian positive-definite operators, generic
 //! over the field precision. Scalars alpha/beta are computed from f64
 //! reductions and rounded into the field precision for the axpy updates.
+//!
+//! The guarded entry point [`cg_guarded`] wraps the iteration in the
+//! solver health guard: non-finite iteration scalars abort the attempt
+//! *before* the solution update, the guard restarts the Krylov process
+//! from the warm iterate (bounded by `solver.max_restarts`), and
+//! transport faults surface as typed [`SolveError`]s. The fault-free
+//! path is bitwise identical to the unguarded history.
 
 use crate::algebra::Real;
 use crate::coordinator::operator::LinearOperator;
@@ -8,10 +15,16 @@ use crate::dslash::flops as fl;
 use crate::field::FermionField;
 
 use super::fused::CG_UNFUSED_SWEEPS;
+use super::health::{
+    HealthConfig, HealthGuard, Interrupt, SolveError, StagnationTracker,
+};
 use super::SolveStats;
 
 /// Solve `A x = b` with CG. `x` holds the initial guess on entry and the
 /// solution on exit. Convergence criterion: `|r| <= tol * |b|`.
+///
+/// Runs under a default health guard; failures fold into a
+/// non-converged [`SolveStats`]. Use [`cg_guarded`] for the typed error.
 pub fn cg<R: Real, A: LinearOperator<R>>(
     op: &mut A,
     x: &mut FermionField<R>,
@@ -19,21 +32,102 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
     tol: f64,
     maxiter: usize,
 ) -> SolveStats {
+    match cg_guarded(op, x, b, tol, maxiter, &HealthConfig::default()) {
+        Ok(stats) => stats,
+        Err(e) => e.into_stats(CG_UNFUSED_SWEEPS, 1),
+    }
+}
+
+/// CG under the solver health guard: recoverable events (non-finite
+/// pAp/|r|², stagnation, residual drift) restart the Krylov process
+/// from the warm iterate up to `health.max_restarts` times; transport
+/// faults and an exhausted budget return a typed [`SolveError`].
+pub fn cg_guarded<R: Real, A: LinearOperator<R>>(
+    op: &mut A,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+) -> Result<SolveStats, SolveError> {
+    let mut guard = HealthGuard::new(health);
+    let mut history = Vec::new();
+    let mut flops = 0u64;
+    let c0 = op.comm_counters();
+    let counters = |op: &A| {
+        let c1 = op.comm_counters();
+        (c1.0 - c0.0, c1.1 - c0.1)
+    };
+    loop {
+        match cg_attempt(op, x, b, tol, maxiter, health, &mut history, &mut flops) {
+            Ok(mut stats) => {
+                // Drift check at apparent convergence: the recursive
+                // residual can silently diverge from the true one; a
+                // restart recomputes r = b - A x and iterates on truth.
+                if stats.converged && health.drift_tol > 0.0 {
+                    let ratio = super::health::drift_ratio(
+                        op,
+                        x,
+                        b,
+                        stats.rel_residual,
+                        &mut flops,
+                    );
+                    if !ratio.is_finite() || ratio > health.drift_tol {
+                        guard.absorb(
+                            Interrupt::Drift { iteration: history.len(), ratio },
+                            &history,
+                            counters(op),
+                        )?;
+                        continue;
+                    }
+                    stats.flops = flops;
+                }
+                guard.finish(&mut stats, counters(op));
+                return Ok(stats);
+            }
+            Err(int) => {
+                guard.absorb(int, &history, counters(op))?;
+            }
+        }
+    }
+}
+
+/// One guarded CG attempt: runs until convergence, the (global) maxiter
+/// budget, or an interrupt. `history` and `flops` accumulate across
+/// attempts; the global iteration number is `history.len()`.
+#[allow(clippy::too_many_arguments)]
+fn cg_attempt<R: Real, A: LinearOperator<R>>(
+    op: &mut A,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+    history: &mut Vec<f64>,
+    flops: &mut u64,
+) -> Result<SolveStats, Interrupt> {
+    let finish = |history: &[f64], flops: u64, converged: bool, rel: f64| SolveStats {
+        iterations: history.len(),
+        converged,
+        rel_residual: rel,
+        history: history.to_vec(),
+        flops,
+        sweeps_per_iter: CG_UNFUSED_SWEEPS,
+        threads: 1,
+        knob_sources: None,
+        restarts: 0,
+        health_events: 0,
+        retransmits: 0,
+        timeouts: 0,
+    };
+    op.fault_hook(history.len())
+        .map_err(|err| Interrupt::Comm { err, iteration: history.len() })?;
     let bnorm2 = op.reduce_sum(b.norm2());
     let nreal = b.data.len() as u64;
-    let mut flops = fl::norm2_flops(nreal);
+    *flops += fl::norm2_flops(nreal);
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
-        return SolveStats {
-            iterations: 0,
-            converged: true,
-            rel_residual: 0.0,
-            history: vec![],
-            flops: 0,
-            sweeps_per_iter: CG_UNFUSED_SWEEPS,
-            threads: 1,
-            knob_sources: None,
-        };
+        return Ok(finish(&[], 0, true, 0.0));
     }
     let limit = tol * tol * bnorm2;
 
@@ -52,43 +146,64 @@ pub fn cg<R: Real, A: LinearOperator<R>>(
         op.apply(&mut ap, x);
         r.axpy(-R::ONE, &ap);
         rr = op.reduce_sum(r.norm2());
-        flops += op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        *flops += op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+    }
+    if !rr.is_finite() {
+        // the warm iterate itself is poisoned: nothing to preserve, so
+        // fall back to a cold restart before giving up
+        x.fill(R::ZERO);
+        return Err(Interrupt::NonFinite {
+            what: "initial |r|^2",
+            iteration: history.len(),
+        });
     }
     let mut p = r.clone();
-    let mut history = Vec::new();
+    let mut stag = StagnationTracker::new(health.stagnation_window);
 
-    let mut iterations = 0;
-    while iterations < maxiter && rr > limit {
+    while history.len() < maxiter && rr > limit {
+        let iteration = history.len();
+        op.fault_hook(iteration)
+            .map_err(|err| Interrupt::Comm { err, iteration })?;
         op.apply(&mut ap, &p);
         let pap = op.reduce_sum(p.dot_re(&ap));
-        debug_assert!(pap.is_finite());
+        if !pap.is_finite() {
+            return Err(Interrupt::NonFinite { what: "pAp", iteration });
+        }
         let alpha = rr / pap;
-        x.axpy(R::from_f64(alpha), &p);
+        if !alpha.is_finite() {
+            return Err(Interrupt::NonFinite { what: "alpha", iteration });
+        }
+        // residual update first: if |r|² goes non-finite the solution
+        // iterate has not been touched yet and stays warm for a restart
         r.axpy(R::from_f64(-alpha), &ap);
         let rr_new = op.reduce_sum(r.norm2());
+        if !rr_new.is_finite() {
+            return Err(Interrupt::NonFinite { what: "|r|^2", iteration });
+        }
+        x.axpy(R::from_f64(alpha), &p);
         let beta = R::from_f64(rr_new / rr);
         // p = r + beta p
         p.xpay(beta, &r);
-        flops += op.flops_per_apply()
+        *flops += op.flops_per_apply()
             + fl::dot_re_flops(nreal)
             + 2 * fl::axpy_flops(nreal)
             + fl::norm2_flops(nreal)
             + fl::xpay_flops(nreal);
         rr = rr_new;
-        iterations += 1;
-        history.push((rr / bnorm2).sqrt());
+        let rel = (rr / bnorm2).sqrt();
+        history.push(rel);
+        if rr > limit && stag.stalled(rel) {
+            return Err(Interrupt::Stagnation { iteration: history.len() });
+        }
     }
 
-    SolveStats {
-        iterations,
-        converged: rr <= limit,
-        rel_residual: (rr / bnorm2).sqrt(),
-        history,
-        flops,
-        sweeps_per_iter: CG_UNFUSED_SWEEPS,
-        threads: 1,
-        knob_sources: None,
+    // A transport fault zero-fills halos rather than panicking, so a
+    // "converged" residual after a fault is not trustworthy: surface
+    // the recorded fault instead of the stats.
+    if let Some(err) = op.comm_fault() {
+        return Err(Interrupt::Comm { err, iteration: history.len() });
     }
+    Ok(finish(history, *flops, rr <= limit, (rr / bnorm2).sqrt()))
 }
 
 #[cfg(test)]
@@ -127,6 +242,9 @@ mod tests {
         // value, but has one entry per iteration)
         assert_eq!(stats.history.len(), stats.iterations);
         assert!(stats.flops > 0);
+        // no health events on the clean path
+        assert_eq!(stats.restarts, 0);
+        assert_eq!(stats.health_events, 0);
     }
 
     #[test]
@@ -171,5 +289,110 @@ mod tests {
         let stats = cg(&mut op, &mut x, &b, 1e-14, 3);
         assert_eq!(stats.iterations, 3);
         assert!(!stats.converged);
+    }
+
+    #[test]
+    fn cg_guarded_matches_unguarded_bitwise() {
+        let g = geom();
+        let mut rng = Rng::seeded(105);
+        let u = GaugeField::random(&g, &mut rng);
+        let b = FermionField::gaussian(&g, &mut rng);
+        let mut op = NativeMdagM::new(&g, u, 0.12f32);
+
+        let mut x1 = FermionField::zeros(&g);
+        let plain = cg(&mut op, &mut x1, &b, 1e-8, 500);
+        let mut x2 = FermionField::zeros(&g);
+        let strict = cg_guarded(
+            &mut op,
+            &mut x2,
+            &b,
+            1e-8,
+            500,
+            &HealthConfig {
+                stagnation_window: 50,
+                drift_tol: 100.0,
+                ..Default::default()
+            },
+        )
+        .expect("clean solve");
+        assert_eq!(plain.history, strict.history, "guard changed the history");
+        assert_eq!(x1.data, x2.data, "guard changed the iterates");
+        assert_eq!(strict.restarts, 0);
+    }
+
+    /// Operator that reports NaN reductions for a window of calls:
+    /// exercises the restart path without touching the transport.
+    struct FlakyOp {
+        inner: NativeMdagM<f32>,
+        calls: usize,
+        nan_from: usize,
+        nan_until: usize,
+    }
+
+    impl LinearOperator<f32> for FlakyOp {
+        fn apply(&mut self, out: &mut FermionField<f32>, input: &FermionField<f32>) {
+            self.inner.apply(out, input);
+        }
+        fn flops_per_apply(&self) -> u64 {
+            self.inner.flops_per_apply()
+        }
+        fn reduce_sum(&mut self, v: f64) -> f64 {
+            self.calls += 1;
+            if self.calls >= self.nan_from && self.calls < self.nan_until {
+                f64::NAN
+            } else {
+                v
+            }
+        }
+    }
+
+    #[test]
+    fn cg_guarded_restarts_on_nan_scalar() {
+        let g = geom();
+        let mut rng = Rng::seeded(106);
+        let u = GaugeField::random(&g, &mut rng);
+        let b = FermionField::gaussian(&g, &mut rng);
+        let mut op = FlakyOp {
+            inner: NativeMdagM::new(&g, u.clone(), 0.12f32),
+            calls: 0,
+            nan_from: 10,
+            nan_until: 11,
+        };
+        let mut x = FermionField::zeros(&g);
+        let stats = cg_guarded(&mut op, &mut x, &b, 1e-8, 500, &HealthConfig::default())
+            .expect("one NaN window is recoverable");
+        assert!(stats.converged, "{stats:?}");
+        assert_eq!(stats.restarts, 1);
+        assert_eq!(stats.health_events, 1);
+        // the solve still reaches the true solution
+        let mut clean = NativeMdagM::new(&g, u, 0.12f32);
+        let mut ax = FermionField::zeros(&g);
+        clean.apply(&mut ax, &x);
+        ax.axpy(-1.0, &b);
+        let rel = (ax.norm2() / b.norm2()).sqrt();
+        assert!(rel < 1e-5, "true residual {rel}");
+    }
+
+    #[test]
+    fn cg_guarded_exhausts_restarts_on_persistent_nan() {
+        let g = geom();
+        let mut rng = Rng::seeded(107);
+        let u = GaugeField::random(&g, &mut rng);
+        let b = FermionField::gaussian(&g, &mut rng);
+        let mut op = FlakyOp {
+            inner: NativeMdagM::new(&g, u, 0.12f32),
+            calls: 0,
+            nan_from: 5,
+            nan_until: usize::MAX,
+        };
+        let mut x = FermionField::zeros(&g);
+        let err = cg_guarded(&mut op, &mut x, &b, 1e-8, 500, &HealthConfig::default())
+            .expect_err("persistent NaN must exhaust the budget");
+        assert!(matches!(
+            err.kind,
+            crate::solver::SolveErrorKind::RestartsExhausted
+        ));
+        // default budget: 3 restarts + the final fatal event
+        assert_eq!(err.events.len(), 4);
     }
 }

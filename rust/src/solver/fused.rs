@@ -24,6 +24,13 @@
 //! never how a sum is associated. The unfused generic solvers remain
 //! the reference implementation (and serve operators, like the
 //! distributed or PJRT-backed ones, that cannot expose tile phases).
+//!
+//! Health guard: non-finite iteration scalars are detected *inside* the
+//! parallel region (every thread combines the same partials, so every
+//! thread takes the same early-exit branch and the barriers stay
+//! matched) and recorded like the breakdown codes; the master loop
+//! surfaces them as interrupts and the guarded wrappers restart from
+//! the warm iterate, exactly as the unfused solvers do.
 
 use crate::algebra::{Complex, Real};
 use crate::coordinator::operator::FusedSolvable;
@@ -32,6 +39,9 @@ use crate::coordinator::team::{chunk_range, SendPtr, Team};
 use crate::dslash::flops as fl;
 use crate::field::{blas, FermionField};
 
+use super::health::{
+    HealthConfig, HealthGuard, Interrupt, SolveError, StagnationTracker,
+};
 use super::SolveStats;
 
 /// Time `f` into (tid, phase) when a profiler is attached, else just
@@ -92,11 +102,16 @@ pub(crate) unsafe fn ro_at<'a, T>(p: SendPtr<T>, offset: usize, len: usize) -> &
 /// is what all threads acted on).
 #[derive(Clone, Copy, Default)]
 struct IterOut {
-    /// 0 = full iteration; the other codes mirror the unfused solver's
-    /// early exits (see `bicgstab`)
+    /// 0 = full iteration; 1-4 mirror the unfused solver's breakdown
+    /// exits (see `bicgstab`); 5 = non-finite scalar *before* any
+    /// update (solution iterate untouched); 6 = non-finite after the
+    /// updates (iteration not counted); 7 = iteration complete but the
+    /// next direction is poisoned (counted, then interrupted)
     kind: u8,
     rr: f64,
     rho: Complex,
+    /// which scalar went non-finite (kinds 5-7)
+    what: &'static str,
 }
 
 /// Thread-parallel fused CG on the hermitian positive-definite normal
@@ -131,6 +146,83 @@ pub fn cg_profiled<R: Real, A: FusedSolvable<R>>(
     maxiter: usize,
     prof: Option<&Profiler>,
 ) -> SolveStats {
+    match cg_guarded(op, team, x, b, tol, maxiter, prof, &HealthConfig::default()) {
+        Ok(stats) => stats,
+        Err(e) => e.into_stats(CG_FUSED_SWEEPS, 1),
+    }
+}
+
+/// Fused CG under the solver health guard (see [`super::cg_guarded`]
+/// for the restart semantics).
+#[allow(clippy::too_many_arguments)]
+pub fn cg_guarded<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
+    health: &HealthConfig,
+) -> Result<SolveStats, SolveError> {
+    let mut guard = HealthGuard::new(health);
+    let mut history = Vec::new();
+    let mut flops = 0u64;
+    let c0 = op.comm_counters();
+    let counters = |op: &A| {
+        let c1 = op.comm_counters();
+        (c1.0 - c0.0, c1.1 - c0.1)
+    };
+    let ntiles = op.fused_view().ntiles();
+    let n = team.nthreads();
+    loop {
+        match cg_attempt(op, team, x, b, tol, maxiter, prof, health, &mut history, &mut flops)
+        {
+            Ok(mut stats) => {
+                if stats.converged && health.drift_tol > 0.0 {
+                    let ratio = super::health::drift_ratio(
+                        op,
+                        x,
+                        b,
+                        stats.rel_residual,
+                        &mut flops,
+                    );
+                    if !ratio.is_finite() || ratio > health.drift_tol {
+                        guard.absorb(
+                            Interrupt::Drift { iteration: history.len(), ratio },
+                            &history,
+                            counters(op),
+                        )?;
+                        continue;
+                    }
+                    stats.flops = flops;
+                }
+                guard.finish(&mut stats, counters(op));
+                charge_flops(prof, n, ntiles, flops);
+                return Ok(stats);
+            }
+            Err(int) => {
+                guard.absorb(int, &history, counters(op))?;
+            }
+        }
+    }
+}
+
+/// One guarded fused-CG attempt (`history`/`flops` accumulate across
+/// attempts, the global iteration number is `history.len()`).
+#[allow(clippy::too_many_arguments)]
+fn cg_attempt<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
+    health: &HealthConfig,
+    history: &mut Vec<f64>,
+    flops: &mut u64,
+) -> Result<SolveStats, Interrupt> {
     let flops_apply = op.flops_per_apply();
     let view = op.fused_view();
     let ntiles = view.ntiles();
@@ -139,21 +231,28 @@ pub fn cg_profiled<R: Real, A: FusedSolvable<R>>(
     let len = view.field_len();
     let n = team.nthreads();
     let nreal = len as u64;
+    let finish = |history: &[f64], flops: u64, converged: bool, rel: f64| SolveStats {
+        iterations: history.len(),
+        converged,
+        rel_residual: rel,
+        history: history.to_vec(),
+        flops,
+        sweeps_per_iter: CG_FUSED_SWEEPS,
+        threads: n,
+        knob_sources: None,
+        restarts: 0,
+        health_events: 0,
+        retransmits: 0,
+        timeouts: 0,
+    };
 
+    op.fault_hook(history.len())
+        .map_err(|err| Interrupt::Comm { err, iteration: history.len() })?;
     let bnorm2 = b.norm2();
-    let mut flops = fl::norm2_flops(nreal);
+    *flops += fl::norm2_flops(nreal);
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
-        return SolveStats {
-            iterations: 0,
-            converged: true,
-            rel_residual: 0.0,
-            history: vec![],
-            flops: 0,
-            sweeps_per_iter: CG_FUSED_SWEEPS,
-            threads: n,
-            knob_sources: None,
-        };
+        return Ok(finish(&[], 0, true, 0.0));
     }
     let limit = tol * tol * bnorm2;
 
@@ -191,12 +290,20 @@ pub fn cg_profiled<R: Real, A: FusedSolvable<R>>(
             });
         });
         rr = rr_partials.iter().sum();
-        flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        *flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+    }
+    if !rr.is_finite() {
+        // poisoned warm iterate: fall back to a cold restart
+        x.fill(R::ZERO);
+        return Err(Interrupt::NonFinite {
+            what: "initial |r|^2",
+            iteration: history.len(),
+        });
     }
 
     let mut p = r.clone();
-    let mut history = Vec::new();
-    let mut iterations = 0;
+    let mut out = IterOut::default();
+    let mut stag = StagnationTracker::new(health.stagnation_window);
 
     let x_ptr = SendPtr(x.data.as_mut_ptr());
     let r_ptr = SendPtr(r.data.as_mut_ptr());
@@ -204,10 +311,20 @@ pub fn cg_profiled<R: Real, A: FusedSolvable<R>>(
     let ap_ptr = SendPtr(ap.data.as_mut_ptr());
     let dot_ptr = SendPtr(dot_partials.as_mut_ptr());
     let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
+    let out_ptr = SendPtr(&mut out as *mut IterOut);
 
-    while iterations < maxiter && rr > limit {
+    while history.len() < maxiter && rr > limit {
+        let iteration = history.len();
+        op.fault_hook(iteration)
+            .map_err(|err| Interrupt::Comm { err, iteration })?;
         let rr_iter = rr;
         team.run(|tid, bar| unsafe {
+            let record = |o: IterOut| {
+                if tid == 0 {
+                    // master-thread-only write; read after the region
+                    unsafe { *out_ptr.0 = o };
+                }
+            };
             // sweep 1: ap = A p with fused tails and p·Ap capture
             scoped(prof, tid, Phase::Bulk, || {
                 view.apply_team(
@@ -224,6 +341,12 @@ pub fn cg_profiled<R: Real, A: FusedSolvable<R>>(
             // so alpha is identical everywhere (and to the serial run)
             let pap: f64 = ro::<[f64; 3]>(dot_ptr, ntiles).iter().map(|t| t[0]).sum();
             let alpha = rr_iter / pap;
+            if !pap.is_finite() || !alpha.is_finite() {
+                // uniform early exit on every thread *before* any
+                // update: x stays warm for the guard's restart
+                record(IterOut { kind: 5, rr: rr_iter, rho: Complex::default(), what: "pAp" });
+                return;
+            }
             let (tb, te) = chunk_range(ntiles, tid, n);
             // sweep 2: x += alpha p ; r -= alpha ap ; per-tile |r|²
             scoped(prof, tid, Phase::Blas, || {
@@ -249,28 +372,31 @@ pub fn cg_profiled<R: Real, A: FusedSolvable<R>>(
                     ro_at::<R>(r_ptr, tb * vpt, (te - tb) * vpt),
                 )
             });
+            record(IterOut { kind: 0, rr: rr_new, rho: Complex::default(), what: "" });
         });
+        if out.kind == 5 {
+            return Err(Interrupt::NonFinite { what: out.what, iteration });
+        }
         rr = rr_partials.iter().sum();
-        flops += flops_apply
+        *flops += flops_apply
             + fl::dot_re_flops(nreal)
             + 2 * fl::axpy_flops(nreal)
             + fl::norm2_flops(nreal)
             + fl::xpay_flops(nreal);
-        iterations += 1;
-        history.push((rr / bnorm2).sqrt());
+        if !rr.is_finite() {
+            return Err(Interrupt::NonFinite { what: "|r|^2", iteration });
+        }
+        let rel = (rr / bnorm2).sqrt();
+        history.push(rel);
+        if rr > limit && stag.stalled(rel) {
+            return Err(Interrupt::Stagnation { iteration: history.len() });
+        }
     }
 
-    charge_flops(prof, n, ntiles, flops);
-    SolveStats {
-        iterations,
-        converged: rr <= limit,
-        rel_residual: (rr / bnorm2).sqrt(),
-        history,
-        flops,
-        sweeps_per_iter: CG_FUSED_SWEEPS,
-        threads: n,
-        knob_sources: None,
+    if let Some(err) = op.comm_fault() {
+        return Err(Interrupt::Comm { err, iteration: history.len() });
     }
+    Ok(finish(history, *flops, rr <= limit, (rr / bnorm2).sqrt()))
 }
 
 /// Thread-parallel fused BiCGStab on the non-hermitian M-hat. Same
@@ -299,6 +425,85 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
     maxiter: usize,
     prof: Option<&Profiler>,
 ) -> SolveStats {
+    match bicgstab_guarded(op, team, x, b, tol, maxiter, prof, &HealthConfig::default())
+    {
+        Ok(stats) => stats,
+        Err(e) => e.into_stats(BICGSTAB_FUSED_SWEEPS, 1),
+    }
+}
+
+/// Fused BiCGStab under the solver health guard (see
+/// [`super::cg_guarded`] for the restart semantics).
+#[allow(clippy::too_many_arguments)]
+pub fn bicgstab_guarded<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
+    health: &HealthConfig,
+) -> Result<SolveStats, SolveError> {
+    let mut guard = HealthGuard::new(health);
+    let mut history = Vec::new();
+    let mut flops = 0u64;
+    let c0 = op.comm_counters();
+    let counters = |op: &A| {
+        let c1 = op.comm_counters();
+        (c1.0 - c0.0, c1.1 - c0.1)
+    };
+    let ntiles = op.fused_view().ntiles();
+    let n = team.nthreads();
+    loop {
+        match bicgstab_attempt(
+            op, team, x, b, tol, maxiter, prof, health, &mut history, &mut flops,
+        ) {
+            Ok(mut stats) => {
+                if stats.converged && health.drift_tol > 0.0 {
+                    let ratio = super::health::drift_ratio(
+                        op,
+                        x,
+                        b,
+                        stats.rel_residual,
+                        &mut flops,
+                    );
+                    if !ratio.is_finite() || ratio > health.drift_tol {
+                        guard.absorb(
+                            Interrupt::Drift { iteration: history.len(), ratio },
+                            &history,
+                            counters(op),
+                        )?;
+                        continue;
+                    }
+                    stats.flops = flops;
+                }
+                guard.finish(&mut stats, counters(op));
+                charge_flops(prof, n, ntiles, flops);
+                return Ok(stats);
+            }
+            Err(int) => {
+                guard.absorb(int, &history, counters(op))?;
+            }
+        }
+    }
+}
+
+/// One guarded fused-BiCGStab attempt (`history`/`flops` accumulate
+/// across attempts, the global iteration number is `history.len()`).
+#[allow(clippy::too_many_arguments)]
+fn bicgstab_attempt<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
+    health: &HealthConfig,
+    history: &mut Vec<f64>,
+    flops: &mut u64,
+) -> Result<SolveStats, Interrupt> {
     let flops_apply = op.flops_per_apply();
     let view = op.fused_view();
     let ntiles = view.ntiles();
@@ -307,21 +512,28 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
     let len = view.field_len();
     let n = team.nthreads();
     let nreal = len as u64;
+    let finish = |history: &[f64], flops: u64, converged: bool, rel: f64| SolveStats {
+        iterations: history.len(),
+        converged,
+        rel_residual: rel,
+        history: history.to_vec(),
+        flops,
+        sweeps_per_iter: BICGSTAB_FUSED_SWEEPS,
+        threads: n,
+        knob_sources: None,
+        restarts: 0,
+        health_events: 0,
+        retransmits: 0,
+        timeouts: 0,
+    };
 
+    op.fault_hook(history.len())
+        .map_err(|err| Interrupt::Comm { err, iteration: history.len() })?;
     let bnorm2 = b.norm2();
-    let mut flops = fl::norm2_flops(nreal);
+    *flops += fl::norm2_flops(nreal);
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
-        return SolveStats {
-            iterations: 0,
-            converged: true,
-            rel_residual: 0.0,
-            history: vec![],
-            flops: 0,
-            sweeps_per_iter: BICGSTAB_FUSED_SWEEPS,
-            threads: n,
-            knob_sources: None,
-        };
+        return Ok(finish(&[], 0, true, 0.0));
     }
     let limit = tol * tol * bnorm2;
 
@@ -354,7 +566,15 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
             });
         });
         rr = rr_partials.iter().sum();
-        flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        *flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+    }
+    if !rr.is_finite() {
+        // poisoned warm iterate: fall back to a cold restart
+        x.fill(R::ZERO);
+        return Err(Interrupt::NonFinite {
+            what: "initial |r|^2",
+            iteration: history.len(),
+        });
     }
 
     let rhat = r.clone();
@@ -363,9 +583,14 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
     // rho = <rhat, r> = |r|² at start (rhat == r), but compute it like
     // the unfused solver does so the value is grouping-identical
     let mut rho = rhat.dot(&r);
-    flops += fl::cdot_flops(nreal);
-    let mut history = Vec::new();
-    let mut iterations = 0;
+    *flops += fl::cdot_flops(nreal);
+    if !rho.re.is_finite() || !rho.im.is_finite() {
+        return Err(Interrupt::NonFinite {
+            what: "rho",
+            iteration: history.len(),
+        });
+    }
+    let mut stag = StagnationTracker::new(health.stagnation_window);
 
     let mut v_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles];
     let mut s_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles];
@@ -385,7 +610,10 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
     let rp_ptr = SendPtr(r_partials.as_mut_ptr());
     let out_ptr = SendPtr(&mut out as *mut IterOut);
 
-    while iterations < maxiter && rr > limit {
+    while history.len() < maxiter && rr > limit {
+        let iteration = history.len();
+        op.fault_hook(iteration)
+            .map_err(|err| Interrupt::Comm { err, iteration })?;
         let rho_c = rho;
         team.run(|tid, bar| unsafe {
             let (tb, te) = chunk_range(ntiles, tid, n);
@@ -395,6 +623,7 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
                     unsafe { *out_ptr.0 = o };
                 }
             };
+            let cfin = |c: Complex| c.re.is_finite() && c.im.is_finite();
             // sweep 1: v = A p with fused <rhat, v> capture
             scoped(prof, tid, Phase::Bulk, || {
                 view.apply_team(
@@ -412,11 +641,21 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
                 vp.iter().map(|t| t[0]).sum(),
                 vp.iter().map(|t| t[1]).sum(),
             );
+            // non-finite check precedes the breakdown test (NaN fails
+            // `< 1e-300`); every thread branches identically
+            if !cfin(rhat_v) {
+                record(IterOut { kind: 5, rr, rho: rho_c, what: "rhat·v" });
+                return;
+            }
             if rhat_v.abs() < 1e-300 {
-                record(IterOut { kind: 1, rr: 0.0, rho: rho_c });
+                record(IterOut { kind: 1, rr: 0.0, rho: rho_c, what: "" });
                 return; // breakdown (matches the unfused solver)
             }
             let alpha = rho_c * rhat_v.conj().scale(1.0 / rhat_v.norm2());
+            if !cfin(alpha) {
+                record(IterOut { kind: 5, rr, rho: rho_c, what: "alpha" });
+                return;
+            }
             let ma = -alpha;
             // sweep 2: s = r - alpha v (in place in r) with |s|² capture
             scoped(prof, tid, Phase::Blas, || {
@@ -433,6 +672,11 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
             scoped(prof, tid, Phase::Barrier, || bar.wait());
             let snorm: f64 =
                 ro::<[f64; 3]>(sp_ptr, ntiles).iter().map(|t| t[2]).sum();
+            if !snorm.is_finite() {
+                // x untouched this iteration — still warm
+                record(IterOut { kind: 5, rr, rho: rho_c, what: "|s|^2" });
+                return;
+            }
             if snorm <= limit {
                 // converged at the half step: x += alpha p and stop
                 scoped(prof, tid, Phase::Blas, || {
@@ -444,7 +688,7 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
                         vlen,
                     )
                 });
-                record(IterOut { kind: 2, rr: snorm, rho: rho_c });
+                record(IterOut { kind: 2, rr: snorm, rho: rho_c, what: "" });
                 return;
             }
             // sweep 3: t = A s with fused <s, t> and |t|² capture
@@ -467,11 +711,19 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
                 -tp.iter().map(|t| t[1]).sum::<f64>(),
             );
             let tt: f64 = tp.iter().map(|t| t[2]).sum();
+            if !cfin(ts) || !tt.is_finite() {
+                record(IterOut { kind: 5, rr, rho: rho_c, what: "t·s / |t|^2" });
+                return;
+            }
             if tt == 0.0 {
-                record(IterOut { kind: 3, rr: 0.0, rho: rho_c });
+                record(IterOut { kind: 3, rr: 0.0, rho: rho_c, what: "" });
                 return; // breakdown
             }
             let omega = ts.scale(1.0 / tt);
+            if !cfin(omega) {
+                record(IterOut { kind: 5, rr, rho: rho_c, what: "omega" });
+                return;
+            }
             // sweep 4: x += alpha p + omega s (s lives in r)
             scoped(prof, tid, Phase::Blas, || {
                 blas::caxpy2_slice(
@@ -505,12 +757,27 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
                 rp.iter().map(|t| t[0]).sum(),
                 rp.iter().map(|t| t[1]).sum(),
             );
+            if !rr_new.is_finite() {
+                // updates already applied: the iteration is not counted
+                record(IterOut { kind: 6, rr: rr_new, rho: rho_new, what: "|r|^2" });
+                return;
+            }
+            if !cfin(rho_new) {
+                // iteration completed with a finite residual; count it,
+                // then interrupt before the poisoned direction update
+                record(IterOut { kind: 7, rr: rr_new, rho: rho_new, what: "rho" });
+                return;
+            }
             if rho_c.abs() < 1e-300 || omega.abs() < 1e-300 {
-                record(IterOut { kind: 4, rr: rr_new, rho: rho_new });
+                record(IterOut { kind: 4, rr: rr_new, rho: rho_new, what: "" });
                 return; // breakdown after the updates, like unfused
             }
             let beta = (rho_new * alpha)
                 * (rho_c * omega).conj().scale(1.0 / (rho_c * omega).norm2());
+            if !cfin(beta) {
+                record(IterOut { kind: 7, rr: rr_new, rho: rho_new, what: "beta" });
+                return;
+            }
             // sweep 6: p = beta (p - omega v) + r
             scoped(prof, tid, Phase::Blas, || {
                 blas::p_update_slice(
@@ -524,28 +791,41 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
                     vlen,
                 )
             });
-            record(IterOut { kind: 0, rr: rr_new, rho: rho_new });
+            record(IterOut { kind: 0, rr: rr_new, rho: rho_new, what: "" });
         });
 
         // master: act on tid 0's record (all threads computed the same)
         match out.kind {
+            5 => {
+                return Err(Interrupt::NonFinite { what: out.what, iteration });
+            }
+            6 => {
+                return Err(Interrupt::NonFinite { what: out.what, iteration });
+            }
+            7 => {
+                rr = out.rr;
+                history.push((rr / bnorm2).sqrt());
+                return Err(Interrupt::NonFinite {
+                    what: out.what,
+                    iteration: history.len(),
+                });
+            }
             1 => {
-                flops += flops_apply + fl::cdot_flops(nreal);
+                *flops += flops_apply + fl::cdot_flops(nreal);
                 break;
             }
             2 => {
-                flops += flops_apply
+                *flops += flops_apply
                     + fl::cdot_flops(nreal)
                     + fl::caxpy_flops(nreal)
                     + fl::norm2_flops(nreal)
                     + fl::caxpy_flops(nreal);
                 rr = out.rr;
-                iterations += 1;
                 history.push((rr / bnorm2).sqrt());
                 break;
             }
             3 => {
-                flops += 2 * flops_apply
+                *flops += 2 * flops_apply
                     + 2 * fl::cdot_flops(nreal)
                     + fl::caxpy_flops(nreal)
                     + 2 * fl::norm2_flops(nreal);
@@ -554,32 +834,28 @@ pub fn bicgstab_profiled<R: Real, A: FusedSolvable<R>>(
             kind => {
                 // full iteration (kind 0) or post-update breakdown (4):
                 // norm² sweeps are |s|², |t|² and the final |r|²
-                flops += 2 * flops_apply
+                *flops += 2 * flops_apply
                     + 3 * fl::cdot_flops(nreal)
                     + 4 * fl::caxpy_flops(nreal)
                     + 3 * fl::norm2_flops(nreal);
                 rr = out.rr;
-                iterations += 1;
-                history.push((rr / bnorm2).sqrt());
+                let rel = (rr / bnorm2).sqrt();
+                history.push(rel);
                 if kind == 4 {
                     break;
                 }
                 rho = out.rho;
-                flops +=
+                *flops +=
                     fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal);
+                if rr > limit && stag.stalled(rel) {
+                    return Err(Interrupt::Stagnation { iteration: history.len() });
+                }
             }
         }
     }
 
-    charge_flops(prof, n, ntiles, flops);
-    SolveStats {
-        iterations,
-        converged: rr <= limit,
-        rel_residual: (rr / bnorm2).sqrt(),
-        history,
-        flops,
-        sweeps_per_iter: BICGSTAB_FUSED_SWEEPS,
-        threads: n,
-        knob_sources: None,
+    if let Some(err) = op.comm_fault() {
+        return Err(Interrupt::Comm { err, iteration: history.len() });
     }
+    Ok(finish(history, *flops, rr <= limit, (rr / bnorm2).sqrt()))
 }

@@ -1,0 +1,440 @@
+//! Solver health guard: per-iteration scalar checks, bounded Krylov
+//! restarts, and typed solve errors.
+//!
+//! Krylov recurrences are fragile: one non-finite reduction (silent data
+//! corruption in a halo payload, overflow in a breakdown-adjacent step)
+//! poisons every later iterate, and in release builds the unguarded
+//! solvers would happily iterate on NaN until `maxiter`. The guard
+//! classifies per-iteration events into
+//!
+//! * **recoverable** — non-finite iteration scalars, stagnation of the
+//!   recursive residual, drift between the recursive and true residual.
+//!   The solver recomputes the true residual `r = b - A x` from the
+//!   current (warm) iterate and restarts the Krylov process, bounded by
+//!   [`HealthConfig::max_restarts`].
+//! * **fatal** — transport faults ([`CommError`]: timeouts, unhealed
+//!   corruption, a killed rank) and an exhausted restart budget. These
+//!   surface as a typed [`SolveError`] carrying the full diagnostic
+//!   context (iteration, rank, residual history, event log).
+//!
+//! Restart decisions are made from globally reduced scalars
+//! (`reduce_sum`/`reduce_caps` are bitwise identical across ranks by the
+//! canonical-reduction contract), so every rank of a distributed solve
+//! takes the same branch and the collectives stay matched.
+
+use std::fmt;
+
+use crate::algebra::Real;
+use crate::comm::CommError;
+use crate::coordinator::operator::LinearOperator;
+use crate::dslash::flops as fl;
+use crate::field::FermionField;
+
+use super::SolveStats;
+
+/// Health-guard policy knobs (config `[solver]` section).
+#[derive(Clone, Debug)]
+pub struct HealthConfig {
+    /// Krylov restarts allowed before a recoverable event becomes
+    /// fatal ([`SolveErrorKind::RestartsExhausted`]).
+    pub max_restarts: usize,
+    /// Iterations without a new best relative residual before the guard
+    /// declares stagnation and restarts. `0` disables the check.
+    pub stagnation_window: usize,
+    /// Allowed ratio `true residual / recursive residual` at (apparent)
+    /// convergence before the guard declares drift and restarts.
+    /// `0.0` disables the check.
+    pub drift_tol: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            max_restarts: 3,
+            stagnation_window: 0,
+            drift_tol: 0.0,
+        }
+    }
+}
+
+/// What a guard observed (recoverable events and the fatal ones).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthEventKind {
+    /// A per-iteration scalar (alpha/beta/rho/omega/pAp/|r|²) went
+    /// non-finite.
+    NonFiniteScalar,
+    /// No new best relative residual within the stagnation window.
+    Stagnation,
+    /// True residual disagreed with the recursive one beyond tolerance.
+    ResidualDrift,
+    /// The transport surfaced a structured [`CommError`].
+    CommFault,
+}
+
+impl HealthEventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            HealthEventKind::NonFiniteScalar => "non-finite-scalar",
+            HealthEventKind::Stagnation => "stagnation",
+            HealthEventKind::ResidualDrift => "residual-drift",
+            HealthEventKind::CommFault => "comm-fault",
+        }
+    }
+}
+
+/// One observed event, with where and what.
+#[derive(Clone, Debug)]
+pub struct HealthEvent {
+    pub kind: HealthEventKind,
+    /// Global iteration (across restarts) at which it fired.
+    pub iteration: usize,
+    pub detail: String,
+}
+
+impl fmt::Display for HealthEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[iter {}] {}: {}", self.iteration, self.kind.name(), self.detail)
+    }
+}
+
+/// Why an attempt stopped early. Produced by the solver iteration
+/// bodies, classified by [`HealthGuard::absorb`].
+#[derive(Clone, Debug)]
+pub enum Interrupt {
+    /// A named iteration scalar went non-finite (recoverable).
+    NonFinite { what: &'static str, iteration: usize },
+    /// The recursive residual stagnated (recoverable).
+    Stagnation { iteration: usize },
+    /// Recursive and true residual drifted apart (recoverable).
+    Drift { iteration: usize, ratio: f64 },
+    /// The transport failed (fatal at solver level).
+    Comm { err: CommError, iteration: usize },
+}
+
+/// Fatal failure class of a guarded solve.
+#[derive(Clone, Debug)]
+pub enum SolveErrorKind {
+    /// A structured transport fault (timeout, unhealed corruption, a
+    /// killed rank, precision confusion).
+    Comm(CommError),
+    /// Recoverable events exhausted `solver.max_restarts`.
+    RestartsExhausted,
+}
+
+/// Typed failure of a guarded solve, with full diagnostics.
+#[derive(Clone, Debug)]
+pub struct SolveError {
+    pub kind: SolveErrorKind,
+    /// Global iteration (across restarts) at which the solve died.
+    pub iteration: usize,
+    /// Rank that observed the failure (0 for single-rank solves; for
+    /// comm faults, the rank recorded in the [`CommError`]).
+    pub rank: usize,
+    /// Last known |r|/|b| (NaN if none was ever computed).
+    pub last_residual: f64,
+    /// |r|/|b| after each completed iteration, across restarts.
+    pub history: Vec<f64>,
+    /// Per-RHS converged mask at failure (block solvers only).
+    pub converged_mask: Option<Vec<bool>>,
+    /// Everything the guard observed up to the failure.
+    pub events: Vec<HealthEvent>,
+    /// Transport recovery counters at failure (retransmits, timeouts).
+    pub retransmits: u64,
+    pub timeouts: u64,
+}
+
+impl fmt::Display for SolveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.kind {
+            SolveErrorKind::Comm(e) => write!(
+                f,
+                "solve failed at iteration {} (rank {}): {}",
+                self.iteration, self.rank, e
+            )?,
+            SolveErrorKind::RestartsExhausted => write!(
+                f,
+                "solve failed at iteration {}: restart budget exhausted \
+                 after {} health events",
+                self.iteration,
+                self.events.len()
+            )?,
+        }
+        if let Some(mask) = &self.converged_mask {
+            let done = mask.iter().filter(|c| **c).count();
+            write!(f, "; {done}/{} RHS converged", mask.len())?;
+        }
+        write!(f, "; last |r|/|b| = {:.3e}", self.last_residual)?;
+        for ev in &self.events {
+            write!(f, "\n  {ev}")?;
+        }
+        Ok(())
+    }
+}
+
+impl SolveError {
+    /// Fold the failure into a (non-converged) [`SolveStats`] for
+    /// callers that only consume stats.
+    pub fn into_stats(self, sweeps_per_iter: f64, threads: usize) -> SolveStats {
+        SolveStats {
+            iterations: self.history.len(),
+            converged: false,
+            rel_residual: self.last_residual,
+            history: self.history,
+            flops: 0,
+            sweeps_per_iter,
+            threads,
+            knob_sources: None,
+            restarts: self
+                .events
+                .iter()
+                .filter(|e| e.kind != HealthEventKind::CommFault)
+                .count(),
+            health_events: self.events.len(),
+            retransmits: self.retransmits,
+            timeouts: self.timeouts,
+        }
+    }
+}
+
+/// Restart bookkeeping shared by all guarded solvers.
+#[derive(Clone, Debug)]
+pub struct HealthGuard {
+    pub cfg: HealthConfig,
+    /// Recoverable events absorbed so far (= restarts performed).
+    pub restarts: usize,
+    pub events: Vec<HealthEvent>,
+}
+
+impl HealthGuard {
+    pub fn new(cfg: &HealthConfig) -> Self {
+        HealthGuard {
+            cfg: cfg.clone(),
+            restarts: 0,
+            events: Vec::new(),
+        }
+    }
+
+    /// Classify an interrupt. `Ok(())` means "restart the Krylov
+    /// process from the warm iterate"; `Err` is the final, typed
+    /// failure. `history` is the residual history so far and
+    /// `(retransmits, timeouts)` the transport counters at this point —
+    /// both are moved into the error on the fatal paths.
+    pub fn absorb(
+        &mut self,
+        int: Interrupt,
+        history: &[f64],
+        counters: (u64, u64),
+    ) -> Result<(), SolveError> {
+        let last_residual = history.last().copied().unwrap_or(f64::NAN);
+        let fail = |kind, iteration, rank, events: Vec<HealthEvent>| SolveError {
+            kind,
+            iteration,
+            rank,
+            last_residual,
+            history: history.to_vec(),
+            converged_mask: None,
+            events,
+            retransmits: counters.0,
+            timeouts: counters.1,
+        };
+        match int {
+            Interrupt::Comm { err, iteration } => {
+                let rank = match &err {
+                    CommError::Timeout { rank, .. }
+                    | CommError::CollectiveTimeout { rank, .. }
+                    | CommError::Corrupt { rank, .. }
+                    | CommError::PrecisionMismatch { rank, .. }
+                    | CommError::Killed { rank, .. } => *rank,
+                    CommError::Protocol(_) => 0,
+                };
+                self.events.push(HealthEvent {
+                    kind: HealthEventKind::CommFault,
+                    iteration,
+                    detail: err.to_string(),
+                });
+                Err(fail(SolveErrorKind::Comm(err), iteration, rank, self.events.clone()))
+            }
+            recoverable => {
+                let (kind, iteration, detail) = match recoverable {
+                    Interrupt::NonFinite { what, iteration } => (
+                        HealthEventKind::NonFiniteScalar,
+                        iteration,
+                        format!("{what} went non-finite; restarting from warm iterate"),
+                    ),
+                    Interrupt::Stagnation { iteration } => (
+                        HealthEventKind::Stagnation,
+                        iteration,
+                        format!(
+                            "no residual improvement for {} iterations",
+                            self.cfg.stagnation_window
+                        ),
+                    ),
+                    Interrupt::Drift { iteration, ratio } => (
+                        HealthEventKind::ResidualDrift,
+                        iteration,
+                        format!("true/recursive residual ratio {ratio:.3e}"),
+                    ),
+                    Interrupt::Comm { .. } => unreachable!("handled above"),
+                };
+                self.events.push(HealthEvent { kind, iteration, detail });
+                if self.restarts >= self.cfg.max_restarts {
+                    return Err(fail(
+                        SolveErrorKind::RestartsExhausted,
+                        iteration,
+                        0,
+                        self.events.clone(),
+                    ));
+                }
+                self.restarts += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// Copy the guard's tallies and the transport counters into a
+    /// finished attempt's stats.
+    pub fn finish(&self, stats: &mut SolveStats, counters: (u64, u64)) {
+        stats.restarts = self.restarts;
+        stats.health_events = self.events.len();
+        stats.retransmits = counters.0;
+        stats.timeouts = counters.1;
+    }
+}
+
+/// Ratio `true residual / recursive residual` at apparent convergence
+/// (the drift check): recomputes `r = b - A x` with one extra operator
+/// apply, accounted into `flops`. Returns `INFINITY` when the recursive
+/// residual claims exact zero but the true one disagrees.
+pub(crate) fn drift_ratio<R: Real, A: LinearOperator<R>>(
+    op: &mut A,
+    x: &FermionField<R>,
+    b: &FermionField<R>,
+    recursive_rel: f64,
+    flops: &mut u64,
+) -> f64 {
+    let nreal = b.data.len() as u64;
+    let mut ax = b.zeros_like();
+    op.apply(&mut ax, x);
+    ax.axpy(-R::ONE, b);
+    let true2 = op.reduce_sum(ax.norm2());
+    let bnorm2 = op.reduce_sum(b.norm2());
+    *flops +=
+        op.flops_per_apply() + fl::axpy_flops(nreal) + 2 * fl::norm2_flops(nreal);
+    let true_rel = (true2 / bnorm2).sqrt();
+    if recursive_rel > 0.0 {
+        true_rel / recursive_rel
+    } else if true_rel > 0.0 {
+        f64::INFINITY
+    } else {
+        1.0
+    }
+}
+
+/// Inline tracker for the stagnation check: counts iterations since the
+/// last new best residual. Zero-cost when the window is 0 (disabled).
+#[derive(Clone, Copy, Debug)]
+pub struct StagnationTracker {
+    window: usize,
+    best: f64,
+    since_best: usize,
+}
+
+impl StagnationTracker {
+    pub fn new(window: usize) -> Self {
+        StagnationTracker {
+            window,
+            best: f64::INFINITY,
+            since_best: 0,
+        }
+    }
+
+    /// Record one iteration's relative residual; `true` means the
+    /// window elapsed without improvement (stagnation).
+    pub fn stalled(&mut self, rel: f64) -> bool {
+        if self.window == 0 {
+            return false;
+        }
+        if rel < self.best {
+            self.best = rel;
+            self.since_best = 0;
+            false
+        } else {
+            self.since_best += 1;
+            self.since_best >= self.window
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_allows_max_restarts_then_fails() {
+        let cfg = HealthConfig {
+            max_restarts: 2,
+            ..Default::default()
+        };
+        let mut g = HealthGuard::new(&cfg);
+        let h = [0.5, 0.25];
+        for i in 0..2 {
+            g.absorb(
+                Interrupt::NonFinite { what: "pAp", iteration: i },
+                &h,
+                (0, 0),
+            )
+            .expect("within budget");
+        }
+        let err = g
+            .absorb(
+                Interrupt::NonFinite { what: "pAp", iteration: 2 },
+                &h,
+                (3, 1),
+            )
+            .expect_err("budget exhausted");
+        assert!(matches!(err.kind, SolveErrorKind::RestartsExhausted));
+        assert_eq!(err.iteration, 2);
+        assert_eq!(err.last_residual, 0.25);
+        assert_eq!(err.events.len(), 3);
+        assert_eq!((err.retransmits, err.timeouts), (3, 1));
+        let stats = err.into_stats(6.0, 1);
+        assert!(!stats.converged);
+        assert_eq!(stats.restarts, 3);
+        assert_eq!(stats.health_events, 3);
+    }
+
+    #[test]
+    fn comm_fault_is_always_fatal() {
+        let mut g = HealthGuard::new(&HealthConfig::default());
+        let err = g
+            .absorb(
+                Interrupt::Comm {
+                    err: CommError::Killed { rank: 1, iteration: 4 },
+                    iteration: 4,
+                },
+                &[],
+                (0, 2),
+            )
+            .expect_err("comm faults never restart");
+        assert!(matches!(err.kind, SolveErrorKind::Comm(CommError::Killed { .. })));
+        assert_eq!(err.rank, 1);
+        assert!(err.last_residual.is_nan());
+        let msg = err.to_string();
+        assert!(msg.contains("killed by fault injection"), "{msg}");
+    }
+
+    #[test]
+    fn stagnation_tracker_windows() {
+        let mut t = StagnationTracker::new(3);
+        assert!(!t.stalled(1.0));
+        assert!(!t.stalled(0.5)); // new best
+        assert!(!t.stalled(0.6));
+        assert!(!t.stalled(0.6));
+        assert!(t.stalled(0.55)); // 3rd iteration with no new best
+        // disabled tracker never fires
+        let mut off = StagnationTracker::new(0);
+        for _ in 0..100 {
+            assert!(!off.stalled(1.0));
+        }
+    }
+}

@@ -20,6 +20,12 @@
 //! application runs at f32 speed. Each inner solve only needs to shave a
 //! couple of orders of magnitude (`inner_tol` ~ 1e-4), far above the f32
 //! floor, so the inner solver never stalls.
+//!
+//! The refinement loop runs under the solver health guard: a correction
+//! that drives the true residual non-finite is *rolled back* (the
+//! pre-correction iterate is restored) and retried, bounded by
+//! `solver.max_restarts`; transport faults surface as typed
+//! [`SolveError`]s through the guarded entry points.
 
 use crate::algebra::Real;
 use crate::coordinator::operator::{FusedSolvable, LinearOperator};
@@ -27,6 +33,7 @@ use crate::coordinator::Team;
 use crate::dslash::flops as fl;
 use crate::field::FermionField;
 
+use super::health::{HealthConfig, HealthGuard, Interrupt, SolveError};
 use super::{bicgstab, cg, fused};
 
 /// Inner Krylov algorithm of the refinement loop.
@@ -56,6 +63,15 @@ pub struct MixedStats {
     pub inner_histories: Vec<Vec<f64>>,
     /// total flops across outer applies and inner solves
     pub flops: u64,
+    /// health-guard restarts: rolled-back outer corrections plus inner
+    /// Krylov restarts
+    pub restarts: usize,
+    /// health-guard events across the outer loop and all inner solves
+    pub health_events: usize,
+    /// transport retransmits across the outer and inner operators
+    pub retransmits: u64,
+    /// transport timeouts across the outer and inner operators
+    pub timeouts: u64,
 }
 
 /// Solve `A x = b` at f64 accuracy with f32 inner iterations.
@@ -71,7 +87,9 @@ pub struct MixedStats {
 /// fused pipeline. The inner residual recursion is bitwise identical
 /// either way.
 ///
-/// `x` holds the initial guess on entry and the solution on exit.
+/// `x` holds the initial guess on entry and the solution on exit. Runs
+/// under a default health guard; failures fold into non-converged
+/// stats. Use [`mixed_refinement_guarded`] for the typed error.
 #[allow(clippy::too_many_arguments)]
 pub fn mixed_refinement<Hi, Lo>(
     outer: &mut Hi,
@@ -88,9 +106,45 @@ where
     Hi: LinearOperator<f64>,
     Lo: LinearOperator<f32>,
 {
-    refine(outer, inner, x, b, tol, max_outer, move |op, x32, b32| match alg {
-        InnerAlgorithm::Cg => cg(op, x32, b32, inner_tol, inner_maxiter),
-        InnerAlgorithm::BiCgStab => bicgstab(op, x32, b32, inner_tol, inner_maxiter),
+    mixed_refinement_guarded(
+        outer,
+        inner,
+        x,
+        b,
+        tol,
+        max_outer,
+        inner_tol,
+        inner_maxiter,
+        alg,
+        &HealthConfig::default(),
+    )
+    .unwrap_or_else(err_to_mixed)
+}
+
+/// [`mixed_refinement`] under an explicit health guard, with the typed
+/// failure surfaced.
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_refinement_guarded<Hi, Lo>(
+    outer: &mut Hi,
+    inner: &mut Lo,
+    x: &mut FermionField<f64>,
+    b: &FermionField<f64>,
+    tol: f64,
+    max_outer: usize,
+    inner_tol: f64,
+    inner_maxiter: usize,
+    alg: InnerAlgorithm,
+    health: &HealthConfig,
+) -> Result<MixedStats, SolveError>
+where
+    Hi: LinearOperator<f64>,
+    Lo: LinearOperator<f32>,
+{
+    refine(outer, inner, x, b, tol, max_outer, health, move |op, x32, b32| {
+        match alg {
+            InnerAlgorithm::Cg => cg(op, x32, b32, inner_tol, inner_maxiter),
+            InnerAlgorithm::BiCgStab => bicgstab(op, x32, b32, inner_tol, inner_maxiter),
+        }
     })
 }
 
@@ -115,18 +169,45 @@ where
     Hi: LinearOperator<f64>,
     Lo: LinearOperator<f32> + FusedSolvable<f32>,
 {
-    refine(outer, inner, x, b, tol, max_outer, move |op, x32, b32| match alg {
-        InnerAlgorithm::Cg => {
-            fused::cg(op, &mut *team, x32, b32, inner_tol, inner_maxiter)
-        }
-        InnerAlgorithm::BiCgStab => {
-            fused::bicgstab(op, &mut *team, x32, b32, inner_tol, inner_maxiter)
+    let health = HealthConfig::default();
+    refine(outer, inner, x, b, tol, max_outer, &health, move |op, x32, b32| {
+        match alg {
+            InnerAlgorithm::Cg => {
+                fused::cg(op, &mut *team, x32, b32, inner_tol, inner_maxiter)
+            }
+            InnerAlgorithm::BiCgStab => {
+                fused::bicgstab(op, &mut *team, x32, b32, inner_tol, inner_maxiter)
+            }
         }
     })
+    .unwrap_or_else(err_to_mixed)
+}
+
+/// Fold a guarded failure into non-converged [`MixedStats`] for the
+/// legacy entry points.
+fn err_to_mixed(e: SolveError) -> MixedStats {
+    MixedStats {
+        outer_iterations: e.history.len().saturating_sub(1),
+        inner_iterations: 0,
+        converged: false,
+        rel_residual: e.last_residual,
+        history: e.history.clone(),
+        inner_histories: vec![],
+        flops: 0,
+        restarts: e
+            .events
+            .iter()
+            .filter(|ev| ev.kind != super::HealthEventKind::CommFault)
+            .count(),
+        health_events: e.events.len(),
+        retransmits: e.retransmits,
+        timeouts: e.timeouts,
+    }
 }
 
 /// The shared defect-correction loop; `solve` runs one inner f32 solve
 /// of `A d ~= r/|r|` and returns its stats.
+#[allow(clippy::too_many_arguments)]
 fn refine<Hi, Lo, S>(
     outer: &mut Hi,
     inner: &mut Lo,
@@ -134,16 +215,27 @@ fn refine<Hi, Lo, S>(
     b: &FermionField<f64>,
     tol: f64,
     max_outer: usize,
+    health: &HealthConfig,
     mut solve: S,
-) -> MixedStats
+) -> Result<MixedStats, SolveError>
 where
     Hi: LinearOperator<f64>,
+    Lo: LinearOperator<f32>,
     S: FnMut(&mut Lo, &mut FermionField<f32>, &FermionField<f32>) -> super::SolveStats,
 {
+    let mut guard = HealthGuard::new(health);
+    let co0 = outer.comm_counters();
+    let ci0 = inner.comm_counters();
+    let counters = |outer: &Hi, inner: &Lo| {
+        let co1 = outer.comm_counters();
+        let ci1 = inner.comm_counters();
+        (co1.0 - co0.0 + ci1.0 - ci0.0, co1.1 - co0.1 + ci1.1 - ci0.1)
+    };
+
     let bnorm2 = outer.reduce_sum(b.norm2());
     if bnorm2 == 0.0 {
         x.fill(0.0);
-        return MixedStats {
+        return Ok(MixedStats {
             outer_iterations: 0,
             inner_iterations: 0,
             converged: true,
@@ -151,7 +243,11 @@ where
             history: vec![],
             inner_histories: vec![],
             flops: 0,
-        };
+            restarts: 0,
+            health_events: 0,
+            retransmits: 0,
+            timeouts: 0,
+        });
     }
     let bnorm = bnorm2.sqrt();
 
@@ -178,10 +274,17 @@ where
     let mut history = Vec::new();
     let mut inner_histories = Vec::new();
     let mut inner_iterations = 0usize;
+    let mut inner_restarts = 0usize;
+    let mut inner_events = 0usize;
     let mut outer_iterations = 0usize;
     history.push(rnorm / bnorm);
 
     while outer_iterations < max_outer && rnorm > tol * bnorm {
+        if let Err(err) = outer.fault_hook(outer_iterations) {
+            let int = Interrupt::Comm { err, iteration: outer_iterations };
+            guard.absorb(int, &history, counters(outer, inner))?;
+            unreachable!("comm interrupts are fatal");
+        }
         // unit-norm defect, demoted to the inner precision
         let mut defect = r.clone();
         defect.scale(1.0 / rnorm);
@@ -191,10 +294,20 @@ where
         let mut corr32: FermionField<f32> = d32.zeros_like();
         let stats = solve(inner, &mut corr32, &d32);
         inner_iterations += stats.iterations;
+        inner_restarts += stats.restarts;
+        inner_events += stats.health_events;
         inner_histories.push(stats.history);
         flops += stats.flops;
+        if let Some(err) = inner.comm_fault() {
+            let int = Interrupt::Comm { err, iteration: outer_iterations };
+            guard.absorb(int, &history, counters(outer, inner))?;
+            unreachable!("comm interrupts are fatal");
+        }
 
-        // x += |r| * promote(d); recompute the true residual at f64
+        // x += |r| * promote(d); recompute the true residual at f64.
+        // Keep the pre-correction iterate so a correction that drives
+        // the residual non-finite can be rolled back and retried.
+        let x_prev = x.clone();
         let corr: FermionField<f64> = corr32.to_precision();
         x.axpy(rnorm, &corr);
         outer.apply(&mut ax, x);
@@ -203,7 +316,31 @@ where
             + fl::norm2_flops(nreal);
         r = b.clone();
         r.axpy(-1.0, &ax);
-        rnorm = outer.reduce_sum(r.norm2()).sqrt();
+        let rnorm_new = outer.reduce_sum(r.norm2()).sqrt();
+        if !rnorm_new.is_finite() {
+            *x = x_prev;
+            guard.absorb(
+                Interrupt::NonFinite { what: "outer |r|", iteration: outer_iterations },
+                &history,
+                counters(outer, inner),
+            )?;
+            // restore the residual of the rolled-back iterate
+            outer.apply(&mut ax, x);
+            r = b.clone();
+            r.axpy(-1.0, &ax);
+            rnorm = outer.reduce_sum(r.norm2()).sqrt();
+            flops += outer.flops_per_apply()
+                + fl::axpy_flops(nreal)
+                + fl::norm2_flops(nreal);
+            if !rnorm.is_finite() {
+                // the rolled-back iterate is itself poisoned: go cold
+                x.fill(0.0);
+                r = b.clone();
+                rnorm = bnorm;
+            }
+            continue;
+        }
+        rnorm = rnorm_new;
         outer_iterations += 1;
         history.push(rnorm / bnorm);
 
@@ -214,7 +351,14 @@ where
         }
     }
 
-    MixedStats {
+    if let Some(err) = outer.comm_fault() {
+        let int = Interrupt::Comm { err, iteration: outer_iterations };
+        guard.absorb(int, &history, counters(outer, inner))?;
+        unreachable!("comm interrupts are fatal");
+    }
+
+    let (retransmits, timeouts) = counters(outer, inner);
+    Ok(MixedStats {
         outer_iterations,
         inner_iterations,
         converged: rnorm <= tol * bnorm,
@@ -222,7 +366,11 @@ where
         history,
         inner_histories,
         flops,
-    }
+        restarts: guard.restarts + inner_restarts,
+        health_events: guard.events.len() + inner_events,
+        retransmits,
+        timeouts,
+    })
 }
 
 #[cfg(test)]
@@ -268,6 +416,9 @@ mod tests {
         assert!(stats.rel_residual <= 1e-12);
         assert!(stats.outer_iterations >= 2, "must actually refine");
         assert!(stats.inner_iterations > 0);
+        // clean path: no guard activity
+        assert_eq!(stats.restarts, 0);
+        assert_eq!(stats.health_events, 0);
         // true residual agrees with the reported one
         let true_rel = operator_residual(&mut outer, &x, &b);
         assert!(true_rel < 1e-11, "true residual {true_rel}");

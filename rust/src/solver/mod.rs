@@ -31,16 +31,25 @@ mod bicgstab;
 pub mod block;
 mod cg;
 pub mod fused;
+pub mod health;
 pub mod mixed;
 pub mod residual;
 
-pub use bicgstab::bicgstab;
+pub use bicgstab::{bicgstab, bicgstab_guarded};
 pub use block::{
-    block_bicgstab, block_bicgstab_generic, block_cg, block_cg_generic,
-    BlockSolveStats, RhsStats,
+    block_bicgstab, block_bicgstab_generic, block_bicgstab_generic_guarded,
+    block_cg, block_cg_generic, block_cg_generic_guarded, BlockSolveStats,
+    RhsStats,
 };
-pub use cg::cg;
-pub use mixed::{mixed_refinement, mixed_refinement_team, InnerAlgorithm, MixedStats};
+pub use cg::{cg, cg_guarded};
+pub use health::{
+    HealthConfig, HealthEvent, HealthEventKind, HealthGuard, Interrupt,
+    SolveError, SolveErrorKind,
+};
+pub use mixed::{
+    mixed_refinement, mixed_refinement_guarded, mixed_refinement_team,
+    InnerAlgorithm, MixedStats,
+};
 
 /// Convergence record of one solve.
 #[derive(Clone, Debug)]
@@ -65,4 +74,13 @@ pub struct SolveStats {
     /// or static heuristic) — filled by the solve driver when knob
     /// resolution ran, `None` for direct library calls
     pub knob_sources: Option<String>,
+    /// Krylov restarts the health guard performed after recoverable
+    /// events (non-finite scalars, stagnation, residual drift)
+    pub restarts: usize,
+    /// health-guard events observed (restarts plus fatal diagnoses)
+    pub health_events: usize,
+    /// halo messages healed from the sender-side retransmit store
+    pub retransmits: u64,
+    /// recv/collective deadlines that expired (including recovered ones)
+    pub timeouts: u64,
 }

@@ -28,6 +28,12 @@ fn example_config_is_paper_setup() {
     assert!((cfg.tune.roofline_floor - 0.5).abs() < 1e-12);
     assert_eq!(cfg.parallel.eo2_schedule, None);
     assert_eq!(cfg.parallel.eo2_granularity, None);
+    // the shipped [comm] section spells out the fault-tolerance
+    // defaults; [faults] stays commented out (no injection)
+    assert_eq!(cfg.comm.timeout_ms, 30_000);
+    assert_eq!(cfg.comm.max_retries, 3);
+    assert_eq!(cfg.solver.max_restarts, 3);
+    assert!(cfg.faults.is_empty());
     // local volume per rank = 16x16x8x8, the paper's Table 1 first row
     let geom = lqcd::lattice::Geometry::for_rank(
         cfg.lattice.global,

@@ -1,0 +1,348 @@
+//! Fault-matrix integration tests: injected transport faults against the
+//! guarded distributed block solvers. Transport-level faults (drop,
+//! delay, corrupt, duplicate, truncate, stall) must heal inside the
+//! comm layer — the solver never notices, so residual histories stay
+//! BITWISE identical to the fault-free run. Silent data corruption
+//! (NaN payload with a recomputed checksum) must be caught by the
+//! solver health guard and healed by a Krylov restart. A killed rank
+//! must surface a structured [`SolveError`] on every rank within the
+//! deadline budget — never a hang, never a panic.
+
+use std::time::{Duration, Instant};
+
+use lqcd::comm::decompose::{extract_fermion, extract_gauge};
+use lqcd::comm::{run_world, run_world_cfg, FaultPlan, WorldOpts};
+use lqcd::coordinator::operator::{DistMultiMdagM, DistMultiMeo};
+use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use lqcd::field::{FermionField, GaugeField, MultiFermionField};
+use lqcd::lattice::{Geometry, LatticeDims, ProcGrid, Tiling};
+use lqcd::solver::{self, BlockSolveStats, HealthConfig, SolveError, SolveErrorKind};
+use lqcd::util::rng::Rng;
+
+const TOL: f64 = 1e-4;
+const MAXITER: usize = 40;
+const KAPPA: f32 = 0.12;
+
+fn world_opts(spec: &str, timeout_ms: u64, max_retries: u32) -> WorldOpts {
+    WorldOpts {
+        timeout_ms,
+        max_retries,
+        faults: FaultPlan::parse(spec).unwrap(),
+    }
+}
+
+/// Deterministic problem setup shared by every case: gauge field and
+/// `nrhs` Gaussian sources on an 8x4x4x8 lattice (divisible by both
+/// test grids).
+fn problem(nrhs: usize) -> (LatticeDims, Tiling, GaugeField, Vec<FermionField>) {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(91);
+    let u: GaugeField = GaugeField::random(&ggeom, &mut rng);
+    let bs: Vec<FermionField> =
+        (0..nrhs).map(|_| FermionField::gaussian(&ggeom, &mut rng)).collect();
+    (global, tiling, u, bs)
+}
+
+/// One guarded distributed block-BiCGStab solve under `opts`; returns
+/// each rank's `Result`.
+fn solve_bicgstab(
+    grid: ProcGrid,
+    nrhs: usize,
+    opts: WorldOpts,
+    health: &HealthConfig,
+) -> Vec<Result<BlockSolveStats, SolveError>> {
+    let (global, tiling, u_global, bs_global) = problem(nrhs);
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    run_world_cfg(grid.size(), opts, |rank, comm| {
+        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+        let u = extract_gauge(&u_global, &lgeom);
+        let bs: Vec<FermionField> = bs_global
+            .iter()
+            .map(|b| extract_fermion(b, &ggeom, &lgeom))
+            .collect();
+        let b = MultiFermionField::from_rhs(&bs);
+        let dist = DistHopping::new(&lgeom, true, 1, Eo2Schedule::Uniform);
+        let mut team = Team::new(1, BarrierKind::Sleep);
+        let prof = Profiler::new(1);
+        let mut x = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+        let mut op =
+            DistMultiMeo::new(&lgeom, &dist, &u, KAPPA, nrhs, comm, &prof).unwrap();
+        solver::block_bicgstab_generic_guarded(
+            &mut op, &mut team, &mut x, &b, TOL, MAXITER, health,
+        )
+    })
+}
+
+fn assert_all_ok(
+    results: &[Result<BlockSolveStats, SolveError>],
+    ctx: &str,
+) -> Vec<BlockSolveStats> {
+    results
+        .iter()
+        .enumerate()
+        .map(|(rank, r)| match r {
+            Ok(s) => s.clone(),
+            Err(e) => panic!("{ctx}: rank {rank} failed: {e}"),
+        })
+        .collect()
+}
+
+/// No faults: the guarded distributed solver must be a zero-cost wrapper
+/// — per-RHS residual histories bitwise identical to the unguarded
+/// solver, with every recovery counter at zero.
+#[test]
+fn no_faults_guarded_bit_matches_unguarded() {
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let nrhs = 2;
+    let (global, tiling, u_global, bs_global) = problem(nrhs);
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+
+    let unguarded = run_world(grid.size(), |rank, comm| {
+        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+        let u = extract_gauge(&u_global, &lgeom);
+        let bs: Vec<FermionField> = bs_global
+            .iter()
+            .map(|b| extract_fermion(b, &ggeom, &lgeom))
+            .collect();
+        let b = MultiFermionField::from_rhs(&bs);
+        let dist = DistHopping::new(&lgeom, true, 1, Eo2Schedule::Uniform);
+        let mut team = Team::new(1, BarrierKind::Sleep);
+        let prof = Profiler::new(1);
+        let mut x = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+        let mut op =
+            DistMultiMeo::new(&lgeom, &dist, &u, KAPPA, nrhs, comm, &prof).unwrap();
+        solver::block_bicgstab_generic(&mut op, &mut team, &mut x, &b, TOL, MAXITER)
+    });
+
+    let guarded = assert_all_ok(
+        &solve_bicgstab(grid, nrhs, world_opts("", 30_000, 3), &HealthConfig::default()),
+        "no faults",
+    );
+    for (rank, (g, u)) in guarded.iter().zip(&unguarded).enumerate() {
+        assert_eq!(g.iterations, u.iterations, "rank {rank}");
+        for r in 0..nrhs {
+            assert!(!u.per_rhs[r].history.is_empty());
+            assert_eq!(
+                g.per_rhs[r].history, u.per_rhs[r].history,
+                "rank {rank} rhs {r}: guarded history diverged without faults"
+            );
+            assert_eq!(g.per_rhs[r].converged, u.per_rhs[r].converged);
+        }
+        assert_eq!(g.restarts, 0, "rank {rank}");
+        assert_eq!(g.health_events, 0, "rank {rank}");
+        assert_eq!(g.retransmits, 0, "rank {rank}");
+        assert_eq!(g.timeouts, 0, "rank {rank}");
+    }
+}
+
+/// The transport-healed fault matrix: {drop, delay, corrupt, duplicate,
+/// truncate, rank-stall} x {nrhs 1, 4} x {1x1x1x2, 1x1x2x2}. Every case
+/// must converge with per-RHS histories BITWISE identical to the
+/// fault-free run on the same world — recovery happens entirely below
+/// the solver. Checksum-detected faults (and expired deadlines) must
+/// show up in the recovery counters.
+#[test]
+fn transport_fault_matrix_heals_bitwise() {
+    // (spec, expects retransmits > 0 somewhere in the world)
+    let kinds: &[(&str, bool)] = &[
+        ("drop:seed=7", true),
+        ("delay:seed=8,ms=20", false),
+        ("corrupt:seed=9", true),
+        ("duplicate:seed=10", false),
+        ("truncate:seed=11", true),
+        ("stall:seed=12,ms=30,iter=2", false),
+    ];
+    for grid in [ProcGrid([1, 1, 1, 2]), ProcGrid([1, 1, 2, 2])] {
+        for nrhs in [1usize, 4] {
+            let baseline = assert_all_ok(
+                &solve_bicgstab(
+                    grid,
+                    nrhs,
+                    world_opts("", 300, 3),
+                    &HealthConfig::default(),
+                ),
+                "baseline",
+            );
+            assert!(baseline[0].converged, "baseline must converge");
+            for &(spec, wants_retransmit) in kinds {
+                let ctx = format!("{spec} grid {grid:?} nrhs {nrhs}");
+                let faulted = assert_all_ok(
+                    &solve_bicgstab(
+                        grid,
+                        nrhs,
+                        world_opts(spec, 300, 3),
+                        &HealthConfig::default(),
+                    ),
+                    &ctx,
+                );
+                let mut retransmits = 0;
+                for (rank, (f, b)) in faulted.iter().zip(&baseline).enumerate() {
+                    assert_eq!(f.iterations, b.iterations, "{ctx} rank {rank}");
+                    for r in 0..nrhs {
+                        assert_eq!(
+                            f.per_rhs[r].history, b.per_rhs[r].history,
+                            "{ctx} rank {rank} rhs {r}: transport healing \
+                             must not perturb the solve"
+                        );
+                    }
+                    // the fault never reaches the solver layer
+                    assert_eq!(f.restarts, 0, "{ctx} rank {rank}");
+                    assert_eq!(f.health_events, 0, "{ctx} rank {rank}");
+                    retransmits += f.retransmits;
+                }
+                if wants_retransmit {
+                    assert!(retransmits > 0, "{ctx}: fault healed without the store?");
+                }
+            }
+        }
+    }
+}
+
+/// Silent data corruption passes every transport check (the checksum is
+/// recomputed over the corrupted payload) — it must be the solver health
+/// guard that catches the non-finite scalar and heals the solve with a
+/// Krylov restart.
+#[test]
+fn sdc_heals_via_health_guard_restart() {
+    // nth=20 lands the corruption inside solver iterations (past the
+    // wire-format handshake traffic)
+    let results = solve_bicgstab(
+        ProcGrid([1, 1, 1, 2]),
+        2,
+        world_opts("sdc:nth=20", 300, 3),
+        &HealthConfig::default(),
+    );
+    let stats = assert_all_ok(&results, "sdc");
+    for (rank, s) in stats.iter().enumerate() {
+        assert!(s.converged, "rank {rank}: sdc run must still converge");
+        assert!(s.restarts >= 1, "rank {rank}: guard never restarted");
+        assert!(s.health_events >= 1, "rank {rank}");
+        // transport saw nothing wrong
+        assert_eq!(s.retransmits, 0, "rank {rank}");
+    }
+    // restart decisions come from global reductions: identical everywhere
+    for s in &stats[1..] {
+        assert_eq!(s.restarts, stats[0].restarts);
+        assert_eq!(s.iterations, stats[0].iterations);
+    }
+}
+
+/// Persistent corruption exhausts the restart budget: the guard gives up
+/// with a structured, diagnosable error instead of looping forever.
+#[test]
+fn persistent_sdc_exhausts_restart_budget() {
+    let health = HealthConfig { max_restarts: 2, ..Default::default() };
+    let results = solve_bicgstab(
+        ProcGrid([1, 1, 1, 2]),
+        2,
+        world_opts("sdc:nth=20,count=100000", 300, 3),
+        &health,
+    );
+    for (rank, r) in results.iter().enumerate() {
+        let e = r.as_ref().expect_err("persistent sdc must fail");
+        assert!(
+            matches!(e.kind, SolveErrorKind::RestartsExhausted),
+            "rank {rank}: {e}"
+        );
+        // budget + the final fatal event
+        assert_eq!(e.events.len(), health.max_restarts + 1, "rank {rank}");
+        let mask = e.converged_mask.as_ref().expect("block solves carry a mask");
+        assert_eq!(mask.len(), 2, "rank {rank}");
+    }
+}
+
+/// A killed rank is unrecoverable: the victim reports the kill, its
+/// peers run into recv deadlines, and every rank returns a structured
+/// [`SolveError`] within the deadline budget — bounded wall time, no
+/// hang, no panic.
+#[test]
+fn kill_surfaces_structured_error_on_every_rank() {
+    let sw = Instant::now();
+    let results = solve_bicgstab(
+        ProcGrid([1, 1, 1, 2]),
+        2,
+        world_opts("kill:rank=1,iter=2", 200, 1),
+        &HealthConfig::default(),
+    );
+    let elapsed = sw.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "kill recovery exceeded the deadline budget ({elapsed:?})"
+    );
+    for (rank, r) in results.iter().enumerate() {
+        let e = r.as_ref().expect_err("a killed world cannot converge");
+        assert!(
+            matches!(e.kind, SolveErrorKind::Comm(_)),
+            "rank {rank}: expected a comm fault, got {e}"
+        );
+        let mask = e.converged_mask.as_ref().expect("block solves carry a mask");
+        assert_eq!(mask.len(), 2, "rank {rank}");
+    }
+    // the victim's own diagnostic names the injected kill
+    let victim = results[1].as_ref().unwrap_err();
+    assert!(
+        victim.to_string().contains("killed"),
+        "victim diagnostic: {victim}"
+    );
+}
+
+/// The CG (normal-equations) distributed path is guarded too: clean runs
+/// are bitwise the unguarded solver's, and an injected sdc heals via
+/// restart.
+#[test]
+fn cg_path_guarded_and_heals_sdc() {
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let nrhs = 2;
+    let (global, tiling, u_global, bs_global) = problem(nrhs);
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let run = |opts: WorldOpts, guarded: bool| {
+        run_world_cfg(grid.size(), opts, |rank, comm| {
+            let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+            let u = extract_gauge(&u_global, &lgeom);
+            let bs: Vec<FermionField> = bs_global
+                .iter()
+                .map(|b| extract_fermion(b, &ggeom, &lgeom))
+                .collect();
+            let b = MultiFermionField::from_rhs(&bs);
+            let dist = DistHopping::new(&lgeom, true, 1, Eo2Schedule::Uniform);
+            let mut team = Team::new(1, BarrierKind::Sleep);
+            let prof = Profiler::new(1);
+            let mut x = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+            let mut op =
+                DistMultiMdagM::new(&lgeom, &dist, &u, KAPPA, nrhs, comm, &prof)
+                    .unwrap();
+            if guarded {
+                solver::block_cg_generic_guarded(
+                    &mut op,
+                    &mut team,
+                    &mut x,
+                    &b,
+                    TOL,
+                    MAXITER,
+                    &HealthConfig::default(),
+                )
+            } else {
+                Ok(solver::block_cg_generic(&mut op, &mut team, &mut x, &b, TOL, MAXITER))
+            }
+        })
+    };
+    let unguarded = assert_all_ok(&run(world_opts("", 300, 3), false), "cg unguarded");
+    let clean = assert_all_ok(&run(world_opts("", 300, 3), true), "cg clean");
+    for (rank, (g, u)) in clean.iter().zip(&unguarded).enumerate() {
+        for r in 0..nrhs {
+            assert!(!u.per_rhs[r].history.is_empty());
+            assert_eq!(
+                g.per_rhs[r].history, u.per_rhs[r].history,
+                "rank {rank} rhs {r}: guarded CG history diverged"
+            );
+        }
+        assert_eq!(g.restarts, 0);
+    }
+    let sdc = assert_all_ok(&run(world_opts("sdc:nth=20", 300, 3), true), "cg sdc");
+    for (rank, s) in sdc.iter().enumerate() {
+        assert!(s.converged, "rank {rank}: CG sdc run must converge");
+        assert!(s.restarts >= 1, "rank {rank}: CG guard never restarted");
+    }
+}
