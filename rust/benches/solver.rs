@@ -782,6 +782,7 @@ fn main() {
 
     emit_json(&dims.to_string(), kappa, &runs);
     assert_roofline_floor(&runs);
+    assert_bench_baseline(&runs);
 }
 
 /// CI bandwidth floor: the best fused-CG run must reach a configurable
@@ -847,4 +848,83 @@ fn assert_roofline_floor(runs: &[Run]) {
          {roofline:.2} GB/s ({source})",
         floor * 100.0
     );
+}
+
+/// Perf-regression gate against the committed baseline
+/// (`configs/bench_baseline.json`): for every run name the baseline
+/// lists, the best measured effective bandwidth must stay inside the
+/// tolerance band of the committed GB/s value.
+///
+/// Opt-in via `LQCD_BENCH_BASELINE` (path to the baseline JSON) so
+/// local runs are never gated; the band is `LQCD_BENCH_TOLERANCE`, the
+/// allowed fractional drop below baseline (default 0.5 — shared CI
+/// runners are noisy, so the committed values are collapse-scale
+/// floors, not percent-level trip wires). A failure prints measured vs
+/// required numbers for every violated row.
+fn assert_bench_baseline(runs: &[Run]) {
+    let path = match std::env::var("LQCD_BENCH_BASELINE") {
+        Ok(p) => p,
+        Err(_) => {
+            println!("bench baseline: LQCD_BENCH_BASELINE unset, gate skipped");
+            return;
+        }
+    };
+    let tolerance: f64 = match std::env::var("LQCD_BENCH_TOLERANCE") {
+        Ok(v) => v
+            .parse()
+            .unwrap_or_else(|_| panic!("LQCD_BENCH_TOLERANCE must be a number, got {v:?}")),
+        Err(_) => 0.5,
+    };
+    assert!(
+        (0.0..1.0).contains(&tolerance),
+        "LQCD_BENCH_TOLERANCE must be in [0, 1), got {tolerance}"
+    );
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("LQCD_BENCH_BASELINE={path}: {e}"));
+    let doc = lqcd::util::json::Json::parse(&text)
+        .unwrap_or_else(|e| panic!("LQCD_BENCH_BASELINE={path}: {e}"));
+    let Some(lqcd::util::json::Json::Obj(baselines)) = doc.get("baseline_gbs") else {
+        panic!("LQCD_BENCH_BASELINE={path}: missing baseline_gbs object");
+    };
+    let mut failures = Vec::new();
+    for (name, v) in baselines {
+        let baseline = v
+            .as_f64()
+            .unwrap_or_else(|| panic!("baseline_gbs.{name} must be a number"));
+        // NaN seed: max(NaN, x) = x, and an all-miss fold stays NaN so a
+        // baseline row naming a run this bench no longer emits fails loudly
+        let best = runs
+            .iter()
+            .filter(|r| &r.name == name)
+            .map(eff_bw_gbs)
+            .fold(f64::NAN, f64::max);
+        if best.is_nan() {
+            panic!("baseline_gbs.{name}: no bench run with that name");
+        }
+        let need = baseline * (1.0 - tolerance);
+        if best < need {
+            failures.push(format!(
+                "  {name}: measured {best:.3} GB/s < required {need:.3} GB/s \
+                 (baseline {baseline:.3} GB/s - {:.0}% tolerance)",
+                tolerance * 100.0
+            ));
+        } else {
+            println!(
+                "bench baseline OK: {name} {best:.3} GB/s >= {need:.3} GB/s \
+                 (baseline {baseline:.3} GB/s, tolerance {:.0}%)",
+                tolerance * 100.0
+            );
+        }
+    }
+    if !failures.is_empty() {
+        eprintln!(
+            "BENCH BASELINE VIOLATION ({path})\n{}\n\
+             The solver bench fell below the committed perf baseline. Either a\n\
+             perf regression landed, or the baseline needs re-measuring on this\n\
+             class of machine (edit configs/bench_baseline.json, or widen\n\
+             LQCD_BENCH_TOLERANCE).",
+            failures.join("\n")
+        );
+        std::process::exit(1);
+    }
 }

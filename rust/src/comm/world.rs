@@ -42,6 +42,9 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::faults::{FaultPlan, FaultState, IterAction, MessageAction};
+use crate::perf::telemetry::{
+    Tracer, EV_CORRUPT, EV_DELAY, EV_DUPLICATE, EV_RETRANSMIT, EV_SEND, EV_TIMEOUT,
+};
 
 /// A wire buffer: halo payloads travel at the precision of the field
 /// they were packed from (12 reals per site either way).
@@ -282,6 +285,13 @@ pub fn validate_wire_format<S: CommScalar>(
 /// FNV-1a over the payload's bit patterns and length: cheap, and any
 /// truncation or bit flip moves it. Not cryptographic — it models the
 /// link-level CRC of a real interconnect.
+fn payload_bytes(p: &Payload) -> u64 {
+    match p {
+        Payload::F32(v) => (v.len() * 4) as u64,
+        Payload::F64(v) => (v.len() * 8) as u64,
+    }
+}
+
 fn payload_checksum(p: &Payload) -> u64 {
     const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01b3;
@@ -458,9 +468,26 @@ pub struct Comm {
     /// barrier shared by the sig/gather collectives (all collective calls
     /// are made in identical order on every rank, so one barrier serves)
     coll_barrier: Arc<TimedBarrier>,
+    /// span tracer for transport events; `None` keeps the hot path free
+    /// of telemetry branches beyond one pointer test per event site
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl Comm {
+    /// Attach a span tracer. Transport events (sends, retransmits,
+    /// timeouts, injected delays) are recorded on ring 0: comms are
+    /// FUNNELED, so the rank master thread — which runs as team tid 0 —
+    /// is the only caller and the single-writer-per-ring invariant holds.
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = Some(tracer);
+    }
+
+    fn ev(&self, code: u8, bytes: u64) {
+        if let Some(t) = &self.tracer {
+            t.event(0, code, bytes);
+        }
+    }
+
     /// Non-blocking send (buffered by the channel). The payload travels
     /// under a (sequence, checksum) wire header; when a fault plan is
     /// active a pristine copy enters the retransmit store first and the
@@ -480,6 +507,7 @@ impl Comm {
             store.lock().unwrap().insert((self.rank, to, tag, seq), p.clone());
         }
         let sum = payload_checksum(&p);
+        self.ev(EV_SEND, payload_bytes(&p));
         // a peer that already exited (e.g. on its own fault) has dropped
         // its inbox; the post is a no-op and its silence surfaces on this
         // side as a recv/collective timeout
@@ -497,7 +525,11 @@ impl Comm {
                     st.injected += 1;
                     st.delayed += 1;
                 }
+                let t0 = self.tracer.as_ref().map(|t| t.now_ns());
                 std::thread::sleep(Duration::from_millis(ms));
+                if let (Some(t), Some(s0)) = (&self.tracer, t0) {
+                    t.record(0, EV_DELAY, s0, t.now_ns(), payload_bytes(&p), 0);
+                }
                 post(p, sum);
             }
             MessageAction::Corrupt => {
@@ -538,6 +570,7 @@ impl Comm {
             while !q.is_empty() && q[0].seq < expect {
                 q.remove(0);
                 self.stats.borrow_mut().duplicates_dropped += 1;
+                self.ev(EV_DUPLICATE, 0);
             }
             if !q.is_empty() && q[0].seq == expect {
                 let msg = q.remove(0);
@@ -576,6 +609,7 @@ impl Comm {
             if msg.from == from && msg.tag == tag {
                 if msg.seq < expect {
                     self.stats.borrow_mut().duplicates_dropped += 1;
+                    self.ev(EV_DUPLICATE, 0);
                     continue;
                 }
                 if msg.seq > expect {
@@ -593,6 +627,7 @@ impl Comm {
 
         // 3) deadline expired: one last retransmit-store fetch
         self.stats.borrow_mut().timeouts += 1;
+        self.ev(EV_TIMEOUT, 0);
         if let Some(v) = self.store_accept::<S>(from, tag, expect)? {
             return Ok(v);
         }
@@ -631,6 +666,7 @@ impl Comm {
             return self.unwrap_payload(from, tag, msg.payload);
         }
         self.stats.borrow_mut().corrupt_detected += 1;
+        self.ev(EV_CORRUPT, payload_bytes(&msg.payload));
         // checksum mismatch (corruption, or truncation — the payload
         // length is folded into the checksum): heal from the sender's
         // pristine copy, bounded by max_retries with exponential backoff
@@ -638,6 +674,7 @@ impl Comm {
         for attempt in 0..self.max_retries {
             if let Some(p) = self.store_take(from, tag, msg.seq) {
                 self.stats.borrow_mut().retransmits += 1;
+                self.ev(EV_RETRANSMIT, payload_bytes(&p));
                 self.seq_recv.insert((from, tag), msg.seq + 1);
                 return self.unwrap_payload(from, tag, p);
             }
@@ -665,6 +702,7 @@ impl Comm {
         match self.store_take(from, tag, seq) {
             Some(p) => {
                 self.stats.borrow_mut().retransmits += 1;
+                self.ev(EV_RETRANSMIT, payload_bytes(&p));
                 self.seq_recv.insert((from, tag), seq + 1);
                 self.unwrap_payload(from, tag, p).map(Some)
             }
@@ -705,6 +743,7 @@ impl Comm {
     /// Record a collective deadline expiry in the poison slot.
     fn poison_collective(&self) {
         self.stats.borrow_mut().timeouts += 1;
+        self.ev(EV_TIMEOUT, 0);
         let mut f = self.fault.borrow_mut();
         if f.is_none() {
             *f = Some(CommError::CollectiveTimeout {
@@ -929,6 +968,7 @@ where
             sig_slots: Arc::clone(&sig_slots),
             gather_slots: Arc::clone(&gather_slots),
             coll_barrier: Arc::clone(&coll_barrier),
+            tracer: None,
         })
         .collect();
     // drop the original senders so channels close when the world ends

@@ -99,6 +99,33 @@ pub struct TuneConfig {
     pub enabled: bool,
 }
 
+/// `[telemetry]`: span tracing, metrics export, and the automated
+/// slowdown detector (see `perf::telemetry`). Disabled by default;
+/// `lqcd solve --trace DIR` enables it for one run. Telemetry never
+/// feeds back into the solver arithmetic: residual histories are
+/// bitwise identical with it on or off.
+#[derive(Clone, Debug)]
+pub struct TelemetryConfig {
+    /// master switch: record spans/metrics and write the exporters
+    pub enabled: bool,
+    /// output directory for `trace.json` / `metrics.json`
+    /// (`None` = the run's artifacts dir)
+    pub dir: Option<PathBuf>,
+    /// per-thread span ring capacity; overflow is dropped and counted,
+    /// never reallocated mid-solve
+    pub buffer_spans: usize,
+    /// trailing window of the slowdown detector's median/MAD estimate
+    pub slowdown_window: usize,
+    /// flag an iteration when its comm-wait/barrier time exceeds
+    /// `median + k * MAD` over the trailing window...
+    pub slowdown_k: f64,
+    /// ...and exceeds `factor * median` (multiplicative guard)...
+    pub slowdown_factor: f64,
+    /// ...and exceeds this absolute floor in milliseconds (keeps noise
+    /// on micro-iterations from tripping the detector)
+    pub slowdown_min_ms: f64,
+}
+
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub lattice: LatticeConfig,
@@ -107,6 +134,7 @@ pub struct RunConfig {
     pub parallel: ParallelConfig,
     pub tune: TuneConfig,
     pub comm: CommConfig,
+    pub telemetry: TelemetryConfig,
     /// `faults.spec`: fault-injection schedule for the simulated
     /// transport (see `comm::faults` for the grammar). Empty = no
     /// faults; parse-validated at load, applied by `lqcd solve`.
@@ -155,6 +183,15 @@ impl Default for RunConfig {
             comm: CommConfig {
                 timeout_ms: 30_000,
                 max_retries: 3,
+            },
+            telemetry: TelemetryConfig {
+                enabled: false,
+                dir: None,
+                buffer_spans: 65_536,
+                slowdown_window: 8,
+                slowdown_k: 6.0,
+                slowdown_factor: 3.0,
+                slowdown_min_ms: 2.0,
             },
             faults: String::new(),
             artifacts_dir: PathBuf::from("artifacts"),
@@ -491,6 +528,87 @@ impl RunConfig {
                     n as u32
                 },
             },
+            telemetry: TelemetryConfig {
+                enabled: doc.bool_or("telemetry.enabled", defaults.telemetry.enabled),
+                dir: doc.get("telemetry.dir").map(|_| {
+                    PathBuf::from(doc.str_or("telemetry.dir", ""))
+                }),
+                buffer_spans: {
+                    let n = doc.int_or(
+                        "telemetry.buffer_spans",
+                        defaults.telemetry.buffer_spans as i64,
+                    );
+                    if n <= 0 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "telemetry.buffer_spans must be positive (got {n})"
+                            ),
+                        });
+                    }
+                    n as usize
+                },
+                slowdown_window: {
+                    let n = doc.int_or(
+                        "telemetry.slowdown_window",
+                        defaults.telemetry.slowdown_window as i64,
+                    );
+                    if n < 2 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "telemetry.slowdown_window must be >= 2 (got {n})"
+                            ),
+                        });
+                    }
+                    n as usize
+                },
+                slowdown_k: {
+                    let k = doc.float_or(
+                        "telemetry.slowdown_k",
+                        defaults.telemetry.slowdown_k,
+                    );
+                    if !(k > 0.0) {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "telemetry.slowdown_k must be positive (got {k})"
+                            ),
+                        });
+                    }
+                    k
+                },
+                slowdown_factor: {
+                    let f = doc.float_or(
+                        "telemetry.slowdown_factor",
+                        defaults.telemetry.slowdown_factor,
+                    );
+                    if !(f >= 1.0) {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "telemetry.slowdown_factor must be >= 1 (got {f})"
+                            ),
+                        });
+                    }
+                    f
+                },
+                slowdown_min_ms: {
+                    let m = doc.float_or(
+                        "telemetry.slowdown_min_ms",
+                        defaults.telemetry.slowdown_min_ms,
+                    );
+                    if !(m >= 0.0) {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "telemetry.slowdown_min_ms must be >= 0 (got {m})"
+                            ),
+                        });
+                    }
+                    m
+                },
+            },
             faults: {
                 let spec = doc.str_or("faults.spec", "");
                 // validate the schedule grammar at load so a typo fails
@@ -675,6 +793,44 @@ force_comm = true
         .unwrap();
         let c = RunConfig::from_document(&doc).unwrap();
         assert!(c.validate_solve(false).is_ok());
+    }
+
+    #[test]
+    fn telemetry_keys_parse_and_validate() {
+        let c = RunConfig::default();
+        assert!(!c.telemetry.enabled, "telemetry is off by default");
+        assert_eq!(c.telemetry.dir, None);
+        assert_eq!(c.telemetry.buffer_spans, 65_536);
+        assert_eq!(c.telemetry.slowdown_window, 8);
+        assert!((c.telemetry.slowdown_k - 6.0).abs() < 1e-15);
+        assert!((c.telemetry.slowdown_factor - 3.0).abs() < 1e-15);
+        assert!((c.telemetry.slowdown_min_ms - 2.0).abs() < 1e-15);
+
+        let doc = Document::parse(
+            "[telemetry]\nenabled = true\ndir = \"traces\"\nbuffer_spans = 1024\n\
+             slowdown_window = 16\nslowdown_k = 4.0\nslowdown_factor = 2.5\n\
+             slowdown_min_ms = 0.5",
+        )
+        .unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert!(c.telemetry.enabled);
+        assert_eq!(c.telemetry.dir, Some(PathBuf::from("traces")));
+        assert_eq!(c.telemetry.buffer_spans, 1024);
+        assert_eq!(c.telemetry.slowdown_window, 16);
+        assert!((c.telemetry.slowdown_k - 4.0).abs() < 1e-15);
+        assert!((c.telemetry.slowdown_factor - 2.5).abs() < 1e-15);
+        assert!((c.telemetry.slowdown_min_ms - 0.5).abs() < 1e-15);
+
+        let doc = Document::parse("[telemetry]\nbuffer_spans = 0").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "zero ring must fail");
+        let doc = Document::parse("[telemetry]\nslowdown_window = 1").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "window < 2 must fail");
+        let doc = Document::parse("[telemetry]\nslowdown_k = 0.0").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "k = 0 must fail");
+        let doc = Document::parse("[telemetry]\nslowdown_factor = 0.5").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "factor < 1 must fail");
+        let doc = Document::parse("[telemetry]\nslowdown_min_ms = -1.0").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "negative floor must fail");
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! per-thread stacks and the imbalance statistics.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
+
+use crate::perf::telemetry::Tracer;
 
 /// Execution phases of one distributed hopping application.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,16 +27,20 @@ pub enum Phase {
     Barrier = 4,
     /// solver BLAS sweeps (axpy/xpay/dot tails of the fused CG pipeline)
     Blas = 5,
+    /// time discarded by a health-guard restart (the failed attempt's
+    /// phase buckets are folded here so post-restart bars stay clean)
+    Restart = 6,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 6] = [
+    pub const ALL: [Phase; 7] = [
         Phase::Eo1,
         Phase::Bulk,
         Phase::CommWait,
         Phase::Eo2,
         Phase::Barrier,
         Phase::Blas,
+        Phase::Restart,
     ];
 
     pub fn label(self) -> &'static str {
@@ -44,19 +51,25 @@ impl Phase {
             Phase::Eo2 => "EO2(unpack)",
             Phase::Barrier => "barrier",
             Phase::Blas => "blas",
+            Phase::Restart => "restart",
         }
     }
 }
 
-const NPHASE: usize = 6;
+const NPHASE: usize = 7;
 
-/// Lock-free per-thread x per-phase nanosecond accumulators.
+/// Lock-free per-thread x per-phase nanosecond accumulators, with an
+/// optional span tracer riding every [`Profiler::scope`] call: when a
+/// [`Tracer`] is attached each timed scope also records a
+/// `(phase, rank, thread, iter, t_start, t_end)` span, at the cost of
+/// one extra clock read — with no tracer the path is unchanged.
 #[derive(Debug)]
 pub struct Profiler {
     nthreads: usize,
     nanos: Vec<AtomicU64>,
     /// per-thread flop counters (for per-core Flops as in Fig. 9's check)
     flops: Vec<AtomicU64>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl Profiler {
@@ -65,6 +78,27 @@ impl Profiler {
             nthreads,
             nanos: (0..nthreads * NPHASE).map(|_| AtomicU64::new(0)).collect(),
             flops: (0..nthreads).map(|_| AtomicU64::new(0)).collect(),
+            tracer: None,
+        }
+    }
+
+    /// A profiler that also streams spans into `tracer` (built with the
+    /// same thread count).
+    pub fn with_tracer(nthreads: usize, tracer: Arc<Tracer>) -> Profiler {
+        Profiler {
+            tracer: Some(tracer),
+            ..Profiler::new(nthreads)
+        }
+    }
+
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.as_ref()
+    }
+
+    /// Tag subsequent spans with the solver iteration (no-op untraced).
+    pub fn set_iter(&self, iter: usize) {
+        if let Some(t) = &self.tracer {
+            t.set_iter(iter);
         }
     }
 
@@ -75,9 +109,14 @@ impl Profiler {
     /// Time `f` and charge it to (tid, phase).
     #[inline]
     pub fn scope<R>(&self, tid: usize, phase: Phase, f: impl FnOnce() -> R) -> R {
+        let span_start = self.tracer.as_ref().map(|t| t.now_ns());
         let start = Instant::now();
         let r = f();
-        self.add(tid, phase, start.elapsed().as_nanos() as u64);
+        let nanos = start.elapsed().as_nanos() as u64;
+        self.add(tid, phase, nanos);
+        if let (Some(t), Some(s0)) = (self.tracer.as_deref(), span_start) {
+            t.record(tid, phase as u8, s0, s0 + nanos, 0, 0);
+        }
         r
     }
 
@@ -105,6 +144,26 @@ impl Profiler {
         }
         for a in &self.flops {
             a.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Health-guard restart boundary: fold every per-thread phase bucket
+    /// into [`Phase::Restart`] and zero the flop counters. The discarded
+    /// attempt's wall time stays visible in the bars (as `restart`)
+    /// while the per-phase breakdown and Fig. 9-style flops/core of the
+    /// attempt that eventually converges start clean.
+    pub fn restart_reset(&self) {
+        for tid in 0..self.nthreads {
+            let mut discarded = 0u64;
+            for p in 0..NPHASE {
+                if p == Phase::Restart as usize {
+                    continue;
+                }
+                discarded += self.nanos[tid * NPHASE + p].swap(0, Ordering::Relaxed);
+            }
+            self.nanos[tid * NPHASE + Phase::Restart as usize]
+                .fetch_add(discarded, Ordering::Relaxed);
+            self.flops[tid].store(0, Ordering::Relaxed);
         }
     }
 
@@ -172,36 +231,45 @@ impl Report {
 
     /// Machine-readable profile (the `profile.json` of `lqcd solve
     /// --profile`): thread count, per-phase totals + max/mean imbalance,
-    /// per-thread phase seconds and flops. Deterministic key order.
+    /// per-thread phase seconds and flops. Emitted through
+    /// [`crate::util::json::JsonWriter`]: deterministic key order, the
+    /// repo-wide `{:.9e}` float convention.
     pub fn to_json(&self) -> String {
-        let mut s = String::from("{\n");
-        s.push_str(&format!("  \"threads\": {},\n", self.nthreads()));
-        s.push_str("  \"phases\": {\n");
-        for (i, &p) in Phase::ALL.iter().enumerate() {
-            s.push_str(&format!(
-                "    \"{}\": {{\"seconds\": {:.9}, \"imbalance\": {:.6}}}{}\n",
-                p.label(),
-                self.phase_total(p),
-                self.imbalance(p),
-                if i + 1 < Phase::ALL.len() { "," } else { "" }
-            ));
+        let mut w = crate::util::json::JsonWriter::new();
+        w.obj_begin();
+        w.key("threads");
+        w.uint(self.nthreads() as u64);
+        w.key("phases");
+        w.obj_begin();
+        for &p in Phase::ALL.iter() {
+            w.key(p.label());
+            w.obj_begin();
+            w.key("seconds");
+            w.num(self.phase_total(p));
+            w.key("imbalance");
+            w.num(self.imbalance(p));
+            w.obj_end();
         }
-        s.push_str("  },\n  \"per_thread\": [\n");
+        w.obj_end();
+        w.key("per_thread");
+        w.arr_begin();
         for tid in 0..self.nthreads() {
-            let times: Vec<String> = self.times[tid]
-                .iter()
-                .map(|t| format!("{t:.9}"))
-                .collect();
-            s.push_str(&format!(
-                "    {{\"tid\": {}, \"seconds\": [{}], \"flops\": {}}}{}\n",
-                tid,
-                times.join(", "),
-                self.flops[tid],
-                if tid + 1 < self.nthreads() { "," } else { "" }
-            ));
+            w.obj_begin();
+            w.key("tid");
+            w.uint(tid as u64);
+            w.key("seconds");
+            w.arr_begin();
+            for &t in &self.times[tid] {
+                w.num(t);
+            }
+            w.arr_end();
+            w.key("flops");
+            w.uint(self.flops[tid]);
+            w.obj_end();
         }
-        s.push_str("  ]\n}\n");
-        s
+        w.arr_end();
+        w.obj_end();
+        w.finish()
     }
 }
 
@@ -252,6 +320,43 @@ mod tests {
         p.reset();
         assert_eq!(p.seconds(1, Phase::Barrier), 0.0);
         assert_eq!(p.thread_flops(1), 0);
+    }
+
+    #[test]
+    fn restart_reset_folds_into_restart_bucket() {
+        let p = Profiler::new(2);
+        p.add(0, Phase::Bulk, 3_000_000);
+        p.add(0, Phase::CommWait, 1_000_000);
+        p.add(1, Phase::Blas, 2_000_000);
+        p.add_flops(0, 777);
+        p.restart_reset();
+        // phase buckets are clean, the discarded time is attributed
+        assert_eq!(p.seconds(0, Phase::Bulk), 0.0);
+        assert_eq!(p.seconds(0, Phase::CommWait), 0.0);
+        assert!((p.seconds(0, Phase::Restart) - 4e-3).abs() < 1e-12);
+        assert!((p.seconds(1, Phase::Restart) - 2e-3).abs() < 1e-12);
+        assert_eq!(p.thread_flops(0), 0, "failed attempt's flops discarded");
+        // a second restart accumulates on top of the first
+        p.add(0, Phase::Bulk, 500_000);
+        p.restart_reset();
+        assert!((p.seconds(0, Phase::Restart) - 4.5e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scope_with_tracer_records_spans() {
+        use crate::perf::telemetry::Tracer;
+        let tracer = std::sync::Arc::new(Tracer::new(1, 16, 0));
+        let p = Profiler::with_tracer(1, tracer.clone());
+        p.set_iter(5);
+        let r = p.scope(0, Phase::Bulk, || 7);
+        assert_eq!(r, 7);
+        let data = tracer.drain();
+        assert_eq!(data.spans.len(), 1);
+        assert_eq!(data.spans[0].code, Phase::Bulk as u8);
+        assert_eq!(data.spans[0].iter, 5);
+        // the span and the aggregate bucket agree on the duration
+        let span_secs = data.spans[0].seconds();
+        assert!((span_secs - p.seconds(0, Phase::Bulk)).abs() < 1e-12);
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //!   bench-barrier            FLIB_BARRIER ablation
 
 use std::process::ExitCode;
+use std::sync::Arc;
 
 use lqcd::algebra::Real;
 use lqcd::comm::decompose::{extract_fermion, extract_gauge, insert_fermion};
@@ -30,10 +31,13 @@ use lqcd::perf::tune::{
     CacheLookup, ExplicitKnobs, HostFingerprint, KnobSource, TuneCache, TuneOptions,
 };
 use lqcd::perf::{
-    auto_solver_threads_capped, calibrate_host, run_tune, A64fx, AutoThreadBound,
+    auto_solver_threads_capped, calibrate_host, detect_slowdowns, run_tune,
+    slowdown_summary, span_label, A64fx, AutoThreadBound, Metrics,
+    SlowdownConfig, TraceData, Tracer,
 };
 use lqcd::solver::{self, HealthConfig, HealthEventKind, InnerAlgorithm, SolveErrorKind};
 use lqcd::util::cli;
+use lqcd::util::json::JsonWriter;
 use lqcd::util::rng::Rng;
 
 const VALUE_OPTS: &[&str] = &[
@@ -41,7 +45,7 @@ const VALUE_OPTS: &[&str] = &[
     "algorithm", "artifacts", "seed", "precision", "inner-tol", "max-outer",
     "nrhs", "gauge-compression", "grid", "eo2-schedule", "eo2-granularity",
     "tune-cache", "budget-ms", "inject-faults", "comm-timeout-ms",
-    "comm-max-retries", "max-restarts",
+    "comm-max-retries", "max-restarts", "trace",
 ];
 
 fn main() -> ExitCode {
@@ -146,6 +150,10 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
     cfg.comm.timeout_ms = args.get_parse("comm-timeout-ms", cfg.comm.timeout_ms)?;
     cfg.comm.max_retries = args.get_parse("comm-max-retries", cfg.comm.max_retries)?;
     cfg.solver.max_restarts = args.get_parse("max-restarts", cfg.solver.max_restarts)?;
+    if let Some(dir) = args.get("trace") {
+        cfg.telemetry.enabled = true;
+        cfg.telemetry.dir = Some(dir.into());
+    }
     let profile = args.flag("profile");
     let use_pjrt = args.flag("pjrt") || cfg.solver.use_pjrt;
     let opts = Opts {
@@ -431,6 +439,81 @@ fn emit_profile(
     Ok(())
 }
 
+/// Per-rank span tracer when telemetry is on (`--trace DIR` or config
+/// `[telemetry] enabled`); `None` keeps every solver on the untraced
+/// path with bitwise-identical residual histories.
+fn make_tracer(cfg: &RunConfig, threads: usize, rank: usize) -> Option<Arc<Tracer>> {
+    cfg.telemetry
+        .enabled
+        .then(|| Arc::new(Tracer::new(threads, cfg.telemetry.buffer_spans, rank)))
+}
+
+/// Profiler for a solve path: tracer-backed when telemetry is enabled,
+/// plain when only `--profile` asked for phase accounting, `None` when
+/// neither (zero instrumentation).
+fn make_profiler(
+    profile: bool,
+    threads: usize,
+    tracer: &Option<Arc<Tracer>>,
+) -> Option<Profiler> {
+    match tracer {
+        Some(t) => Some(Profiler::with_tracer(threads, t.clone())),
+        None => profile.then(|| Profiler::new(threads)),
+    }
+}
+
+fn slowdown_config(cfg: &RunConfig) -> SlowdownConfig {
+    SlowdownConfig {
+        window: cfg.telemetry.slowdown_window,
+        k: cfg.telemetry.slowdown_k,
+        factor: cfg.telemetry.slowdown_factor,
+        min_secs: cfg.telemetry.slowdown_min_ms * 1e-3,
+    }
+}
+
+/// Write `trace.json` (Chrome-trace / Perfetto, one track per
+/// rank×thread) and `metrics.json` (phase-time histograms with
+/// p50/p95/p99, transport counters, slowdown report) from the drained
+/// per-rank span buffers, and print the machine-readable `slowdowns:`
+/// summary line the CI smoke greps.
+fn emit_telemetry(
+    cfg: &RunConfig,
+    parts: Vec<TraceData>,
+) -> Result<(), Box<dyn std::error::Error>> {
+    let data = TraceData::merge(parts);
+    let dir = cfg
+        .telemetry
+        .dir
+        .clone()
+        .unwrap_or_else(|| cfg.artifacts_dir.clone());
+    std::fs::create_dir_all(&dir)?;
+    let trace_path = dir.join("trace.json");
+    std::fs::write(&trace_path, data.chrome_trace_json())?;
+
+    let mut m = Metrics::new();
+    m.counter("spans", data.spans.len() as u64);
+    m.counter("spans_dropped", data.dropped);
+    for s in &data.spans {
+        let secs = (s.t_end_ns - s.t_start_ns) as f64 * 1e-9;
+        m.observe(&format!("phase.{}", span_label(s.code)), secs);
+        if s.bytes > 0 {
+            m.counter(&format!("bytes.{}", span_label(s.code)), s.bytes);
+        }
+    }
+    let slow = detect_slowdowns(&data.spans, &slowdown_config(cfg));
+    let metrics_path = dir.join("metrics.json");
+    std::fs::write(&metrics_path, m.to_json(&slow))?;
+    println!("slowdowns: {}", slowdown_summary(&slow));
+    println!(
+        "trace written: {} ({} spans, {} dropped); metrics: {}",
+        trace_path.display(),
+        data.spans.len(),
+        data.dropped,
+        metrics_path.display(),
+    );
+    Ok(())
+}
+
 fn solve(
     cfg: &RunConfig,
     use_pjrt: bool,
@@ -465,6 +548,9 @@ fn solve(
     }
     if profile {
         eprintln!("warning: --profile is not wired into the PJRT path; ignoring");
+    }
+    if cfg.telemetry.enabled {
+        eprintln!("warning: --trace is not wired into the PJRT path; ignoring");
     }
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
@@ -529,7 +615,8 @@ fn solve_native<R: Real>(
         println!("gauge compression: two-row (12 reals/link streamed, third row rebuilt in-kernel)");
     }
     let mut team = Team::new(threads, BarrierKind::Sleep);
-    let prof = profile.then(|| Profiler::new(threads));
+    let tracer = make_tracer(cfg, threads, 0);
+    let prof = make_profiler(profile, threads, &tracer);
     let health = HealthConfig {
         max_restarts: cfg.solver.max_restarts,
         ..Default::default()
@@ -595,8 +682,11 @@ fn solve_native<R: Real>(
         stats.sweeps_per_iter,
         stats.threads,
     );
-    if let Some(p) = &prof {
+    if let (true, Some(p)) = (profile, &prof) {
         emit_profile(&p.snapshot(), &cfg.artifacts_dir)?;
+    }
+    if let Some(t) = &tracer {
+        emit_telemetry(cfg, vec![t.drain()])?;
     }
     Ok(())
 }
@@ -611,9 +701,6 @@ fn solve_block<R: Real>(
     knobs: &Knobs,
     profile: bool,
 ) -> Result<(), Box<dyn std::error::Error>> {
-    if profile {
-        eprintln!("warning: --profile is not wired into the block solver yet; ignoring");
-    }
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
     let threads = knobs.threads;
@@ -636,14 +723,23 @@ fn solve_block<R: Real>(
         println!("gauge compression: two-row (12 reals/link streamed once for all {nrhs} rhs)");
     }
     let mut team = Team::new(threads, BarrierKind::Sleep);
+    let tracer = make_tracer(cfg, threads, 0);
+    let prof = make_profiler(profile, threads, &tracer);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let (stats, resid) = if cfg.solver.algorithm == "bicgstab" {
         let b = MultiFermionField::from_rhs(&sources);
         let mut op = MultiNativeMeo::with_links(&geom, links.clone(), kappa, nrhs);
         let mut x = MultiFermionField::<R>::zeros(&geom, nrhs);
-        let stats =
-            solver::block_bicgstab(&mut op, &mut team, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
+        let stats = solver::block_bicgstab_profiled(
+            &mut op,
+            &mut team,
+            &mut x,
+            &b,
+            cfg.solver.tol,
+            cfg.solver.maxiter,
+            prof.as_ref(),
+        );
         // worst true per-RHS residual, via the single-RHS operator
         let mut meo = NativeMeo::with_links(&geom, links, kappa);
         let resid = worst_true_residual(&mut meo, &x, &sources);
@@ -665,8 +761,15 @@ fn solve_block<R: Real>(
             .collect();
         let b = MultiFermionField::from_rhs(&rhs);
         let mut x = MultiFermionField::<R>::zeros(&geom, nrhs);
-        let stats =
-            solver::block_cg(&mut op, &mut team, &mut x, &b, cfg.solver.tol, cfg.solver.maxiter);
+        let stats = solver::block_cg_profiled(
+            &mut op,
+            &mut team,
+            &mut x,
+            &b,
+            cfg.solver.tol,
+            cfg.solver.maxiter,
+            prof.as_ref(),
+        );
         let mut ndag = NativeMdagM::with_links(&geom, links, kappa);
         let resid = worst_true_residual(&mut ndag, &x, &rhs);
         (stats, resid)
@@ -692,6 +795,12 @@ fn solve_block<R: Real>(
         stats.threads,
     );
     println!("knobs: {}", knobs.summary);
+    if let (true, Some(p)) = (profile, &prof) {
+        emit_profile(&p.snapshot(), &cfg.artifacts_dir)?;
+    }
+    if let Some(t) = &tracer {
+        emit_telemetry(cfg, vec![t.drain()])?;
+    }
     Ok(())
 }
 
@@ -761,6 +870,8 @@ fn solve_distributed<R: Real + CommScalar>(
         max_retries: cfg.comm.max_retries,
         faults,
     };
+    let telemetry_on = cfg.telemetry.enabled;
+    let buffer_spans = cfg.telemetry.buffer_spans;
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let results = run_world_cfg(nranks, world, |rank, comm| {
@@ -778,7 +889,17 @@ fn solve_distributed<R: Real + CommScalar>(
             eo2_granularity,
         );
         let mut team = Team::new(threads, BarrierKind::Sleep);
-        let prof = Profiler::new(threads);
+        let tracer = telemetry_on
+            .then(|| Arc::new(Tracer::new(threads, buffer_spans, rank)));
+        let prof = match &tracer {
+            Some(t) => Profiler::with_tracer(threads, t.clone()),
+            None => Profiler::new(threads),
+        };
+        if let Some(t) = &tracer {
+            // transport events (sends, retransmits, timeouts, injected
+            // faults) land on the same per-rank trace as the phases
+            comm.set_tracer(t.clone());
+        }
         let mut x = MultiFermionField::<R>::zeros(&lgeom, nrhs);
         let all_active = vec![true; nrhs];
         let (rhs, stats) = if algorithm == "bicgstab" {
@@ -787,8 +908,15 @@ fn solve_distributed<R: Real + CommScalar>(
                 &lgeom, &dist, &links, kappa, nrhs, comm, &prof,
             )
             .expect("wire-format handshake");
-            let stats = solver::block_bicgstab_generic_guarded(
-                &mut op, &mut team, &mut x, &b, tol, maxiter, &health,
+            let stats = solver::block_bicgstab_generic_guarded_profiled(
+                &mut op,
+                &mut team,
+                &mut x,
+                &b,
+                tol,
+                maxiter,
+                &health,
+                Some(&prof),
             );
             (b, stats)
         } else {
@@ -809,12 +937,20 @@ fn solve_distributed<R: Real + CommScalar>(
                 &lgeom, &dist, &links, kappa, nrhs, comm, &prof,
             )
             .expect("wire-format handshake");
-            let stats = solver::block_cg_generic_guarded(
-                &mut op, &mut team, &mut x, &mbp, tol, maxiter, &health,
+            let stats = solver::block_cg_generic_guarded_profiled(
+                &mut op,
+                &mut team,
+                &mut x,
+                &mbp,
+                tol,
+                maxiter,
+                &health,
+                Some(&prof),
             );
             (mbp, stats)
         };
-        (x.demux(), rhs.demux(), stats, prof.snapshot())
+        let trace = tracer.map(|t| t.drain());
+        (x.demux(), rhs.demux(), stats, prof.snapshot(), trace)
     });
     let secs = sw.secs();
 
@@ -825,7 +961,7 @@ fn solve_distributed<R: Real + CommScalar>(
     if let Some((rank, e)) = results
         .iter()
         .enumerate()
-        .find_map(|(r, (_, _, res, _))| res.as_ref().err().map(|e| (r, e)))
+        .find_map(|(r, (_, _, res, _, _))| res.as_ref().err().map(|e| (r, e)))
     {
         let kind = match &e.kind {
             SolveErrorKind::Comm(_) => "comm-fault",
@@ -836,20 +972,30 @@ fn solve_distributed<R: Real + CommScalar>(
             .iter()
             .filter(|ev| ev.kind != HealthEventKind::CommFault)
             .count();
-        println!(
-            "recovery: {{\"converged\":false,\"error\":\"{kind}\",\"rank\":{rank},\
-             \"iteration\":{},\"restarts\":{},\"health_events\":{},\
-             \"retransmits\":{},\"timeouts\":{}}}",
-            e.iteration,
-            restarts,
-            e.events.len(),
-            e.retransmits,
-            e.timeouts,
-        );
+        let mut w = JsonWriter::new();
+        w.obj_begin();
+        w.key("converged");
+        w.boolean(false);
+        w.key("error");
+        w.str_val(kind);
+        w.key("rank");
+        w.uint(rank as u64);
+        w.key("iteration");
+        w.uint(e.iteration as u64);
+        w.key("restarts");
+        w.uint(restarts as u64);
+        w.key("health_events");
+        w.uint(e.events.len() as u64);
+        w.key("retransmits");
+        w.uint(e.retransmits);
+        w.key("timeouts");
+        w.uint(e.timeouts);
+        w.obj_end();
+        println!("recovery: {}", w.finish());
         return Err(format!("rank {rank}: {e}").into());
     }
     let stats_by_rank: Vec<&solver::BlockSolveStats> =
-        results.iter().map(|(_, _, res, _)| res.as_ref().unwrap()).collect();
+        results.iter().map(|(_, _, res, _, _)| res.as_ref().unwrap()).collect();
 
     // join the per-rank solutions / right-hand sides back to the global
     // lattice and measure the true residual with the single-rank operator
@@ -857,7 +1003,7 @@ fn solve_distributed<R: Real + CommScalar>(
         (0..nrhs).map(|_| FermionField::zeros(&ggeom)).collect();
     let mut rhs: Vec<FermionField<R>> =
         (0..nrhs).map(|_| FermionField::zeros(&ggeom)).collect();
-    for (rank, (xl, rl, _, _)) in results.iter().enumerate() {
+    for (rank, (xl, rl, _, _, _)) in results.iter().enumerate() {
         let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
         for r in 0..nrhs {
             insert_fermion(&mut xs[r], &xl[r], &lgeom);
@@ -931,16 +1077,39 @@ fn solve_distributed<R: Real + CommScalar>(
     // restarts/health_events are the guard's collective decisions
     // (identical on every rank), retransmits/timeouts sum the per-rank
     // transport counters
-    println!(
-        "recovery: {{\"converged\":{},\"restarts\":{},\"health_events\":{},\
-         \"retransmits\":{retransmits},\"timeouts\":{timeouts}}}",
-        stats.converged, stats.restarts, stats.health_events,
-    );
+    let mut w = JsonWriter::new();
+    w.obj_begin();
+    w.key("converged");
+    w.boolean(stats.converged);
+    w.key("restarts");
+    w.uint(stats.restarts as u64);
+    w.key("health_events");
+    w.uint(stats.health_events as u64);
+    w.key("retransmits");
+    w.uint(retransmits);
+    w.key("timeouts");
+    w.uint(timeouts);
+    w.obj_end();
+    println!("recovery: {}", w.finish());
     println!("knobs: {}", knobs.summary);
     if profile {
-        // rank 0's per-thread phase stacks (the profiler is threaded
-        // through every distributed hopping already)
+        // rank 0's per-thread phase stacks rendered + profile.json, plus
+        // one profile.rank<N>.json per rank for the fleet view
         emit_profile(&results[0].3, &cfg.artifacts_dir)?;
+        for (rank, r) in results.iter().enumerate() {
+            let path = cfg.artifacts_dir.join(format!("profile.rank{rank}.json"));
+            std::fs::write(&path, r.3.to_json())?;
+        }
+        println!(
+            "per-rank profiles written: {}/profile.rank<N>.json ({} ranks)",
+            cfg.artifacts_dir.display(),
+            nranks,
+        );
+    }
+    if telemetry_on {
+        let parts: Vec<TraceData> =
+            results.into_iter().filter_map(|r| r.4).collect();
+        emit_telemetry(cfg, parts)?;
     }
     Ok(())
 }
@@ -966,9 +1135,6 @@ fn solve_mixed(
     knobs: &Knobs,
     profile: bool,
 ) -> Result<(), Box<dyn std::error::Error>> {
-    if profile {
-        eprintln!("warning: --profile is not wired into the mixed-precision path yet; ignoring");
-    }
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
     let threads = knobs.threads;
@@ -990,13 +1156,15 @@ fn solve_mixed(
         println!("gauge compression: two-row (outer f64 and inner f32 operators)");
     }
     let mut team = Team::new(threads, BarrierKind::Sleep);
+    let tracer = make_tracer(cfg, threads, 0);
+    let prof = make_profiler(profile, threads, &tracer);
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let stats = if cfg.solver.algorithm == "bicgstab" {
         let mut outer = NativeMeo::with_links(&geom, links64, kappa);
         let mut inner = NativeMeo::with_links(&geom, links32, kappa as f32);
         let mut x = FermionField::<f64>::zeros(&geom);
-        let stats = solver::mixed_refinement_team(
+        let stats = solver::mixed_refinement_team_profiled(
             &mut outer,
             &mut inner,
             &mut x,
@@ -1007,6 +1175,7 @@ fn solve_mixed(
             cfg.solver.maxiter,
             InnerAlgorithm::BiCgStab,
             &mut team,
+            prof.as_ref(),
         );
         println!(
             "true |Mx-b|/|b| = {:.3e}",
@@ -1023,7 +1192,7 @@ fn solve_mixed(
         outer.meo().apply(&mut mbp, &bp);
         mbp.gamma5();
         let mut x = FermionField::<f64>::zeros(&geom);
-        let stats = solver::mixed_refinement_team(
+        let stats = solver::mixed_refinement_team_profiled(
             &mut outer,
             &mut inner,
             &mut x,
@@ -1034,6 +1203,7 @@ fn solve_mixed(
             cfg.solver.maxiter,
             InnerAlgorithm::Cg,
             &mut team,
+            prof.as_ref(),
         );
         println!(
             "true |MdagM x - Mdag b|/|Mdag b| = {:.3e}",
@@ -1055,6 +1225,12 @@ fn solve_mixed(
     );
     for (i, r) in stats.history.iter().enumerate() {
         println!("  outer {i:>2}  true |r|/|b| = {r:.3e}");
+    }
+    if let (true, Some(p)) = (profile, &prof) {
+        emit_profile(&p.snapshot(), &cfg.artifacts_dir)?;
+    }
+    if let Some(t) = &tracer {
+        emit_telemetry(cfg, vec![t.drain()])?;
     }
     Ok(())
 }
@@ -1120,8 +1296,18 @@ OPTIONS:
   --no-tune            ignore the tune cache: knobs come from CLI/config
                        or the static heuristics only
   --profile            render per-thread phase bars after the solve and
-                       write profile.json to the artifacts dir (native
-                       fused + distributed paths)
+                       write profile.json to the artifacts dir (all
+                       native paths; distributed solves additionally
+                       write one profile.rank<N>.json per rank)
+  --trace DIR          enable span telemetry: write Chrome-trace/Perfetto
+                       trace.json (one track per rank x thread: solver
+                       phases, BLAS sweeps, transport events) and
+                       metrics.json (phase-time p50/p95/p99, counters,
+                       slowdown report) to DIR, and print the
+                       machine-readable `slowdowns:` summary line.
+                       Detector knobs come from the config [telemetry]
+                       section. Off = zero instrumentation; residual
+                       histories are bitwise identical either way
   --inject-faults SPEC deterministic fault injection into the simulated
                        transport (multi-rank solves only). SPEC is
                        ';'-separated rules: kind[:key=value,...] with

@@ -4,12 +4,17 @@
 
 pub mod machine;
 pub mod roofline;
+pub mod telemetry;
 pub mod tune;
 
 pub use machine::{
     auto_solver_threads, auto_solver_threads_capped, auto_solver_threads_capped_for,
     auto_solver_threads_for, calibrate_host, triad_bw_gbs, triad_thread_sweep, A64fx,
     AutoThreadBound, HostCalibration, SATURATION_FRACTION,
+};
+pub use telemetry::{
+    detect_outliers, detect_slowdowns, phase_series, slowdown_summary, span_label,
+    Histogram, Metrics, Slowdown, SlowdownConfig, SpanRecord, TraceData, Tracer,
 };
 pub use tune::{
     resolve_knobs, run_tune, CacheLookup, ExplicitKnobs, HostFingerprint, KnobSource,

@@ -1,0 +1,795 @@
+//! Full-stack telemetry: span tracing, metrics, and slowdown detection.
+//!
+//! The paper's central empirical instrument is the FAPP profiler readout
+//! (Figs. 8/9): per-thread, per-phase time bars that "may signal an
+//! unexpected source of slow-down". The aggregate bars live in
+//! [`crate::coordinator::Profiler`]; this module adds the *when* and
+//! *where*: structured spans `(phase, rank, thread, iter, t_start,
+//! t_end, bytes, flops)` collected into lock-free per-thread ring
+//! buffers, a metrics registry with deterministic fixed-bucket
+//! histograms (p50/p95/p99), Chrome-trace / Perfetto and metrics.json
+//! exporters, and an automated slowdown detector that flags iterations
+//! whose comm-wait/barrier time is an outlier against a trailing-window
+//! median + k·MAD baseline.
+//!
+//! Overhead contract: recording is one branch when tracing is disabled
+//! (the tracer is simply absent) and a bounds check + ring push when
+//! enabled. Rings never reallocate: overflow increments a drop counter
+//! so memory stays bounded and the hot path stays allocation-free.
+//! Telemetry never feeds back into solver arithmetic — residual
+//! histories are bitwise identical with tracing on, off, or absent
+//! (pinned by `rust/tests/telemetry.rs`).
+
+use std::cell::UnsafeCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::JsonWriter;
+
+/// Span codes 0..=6 mirror [`crate::coordinator::Phase`] (EO1, bulk,
+/// comm-wait, EO2, barrier, blas, restart). Codes >= 16 are transport
+/// events recorded by `comm::world` outside any profiler phase.
+pub const EV_SEND: u8 = 16;
+pub const EV_RETRANSMIT: u8 = 17;
+pub const EV_TIMEOUT: u8 = 18;
+pub const EV_DELAY: u8 = 19;
+pub const EV_CORRUPT: u8 = 20;
+pub const EV_DUPLICATE: u8 = 21;
+
+/// Human-readable name of a span code; phase labels match
+/// `Phase::label` so the Perfetto tracks line up with the Fig. 8/9 bars.
+pub fn span_label(code: u8) -> &'static str {
+    match code {
+        0 => "EO1(pack)",
+        1 => "bulk",
+        2 => "comm-wait",
+        3 => "EO2(unpack)",
+        4 => "barrier",
+        5 => "blas",
+        6 => "restart",
+        EV_SEND => "send",
+        EV_RETRANSMIT => "retransmit",
+        EV_TIMEOUT => "timeout",
+        EV_DELAY => "delay-inject",
+        EV_CORRUPT => "corrupt-detected",
+        EV_DUPLICATE => "duplicate-dropped",
+        _ => "event",
+    }
+}
+
+/// One traced span (or instantaneous event: `t_start_ns == t_end_ns`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub code: u8,
+    pub rank: u32,
+    pub thread: u32,
+    /// solver iteration the span belongs to (the tag current at record
+    /// time; see [`Tracer::set_iter`])
+    pub iter: u32,
+    /// nanoseconds since the tracer's epoch
+    pub t_start_ns: u64,
+    pub t_end_ns: u64,
+    pub bytes: u64,
+    pub flops: u64,
+}
+
+impl SpanRecord {
+    pub fn seconds(&self) -> f64 {
+        (self.t_end_ns - self.t_start_ns) as f64 * 1e-9
+    }
+}
+
+/// One bounded single-writer span ring. Thread `tid` of the team is the
+/// only writer of ring `tid` (comm events ride ring 0: the transport is
+/// FUNNELED and the rank master *is* team tid 0), so an `UnsafeCell`
+/// plus the team's region-completion synchronization is enough — no
+/// locks on the record path.
+struct Ring {
+    buf: UnsafeCell<Vec<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+unsafe impl Sync for Ring {}
+
+/// Lock-free span collector: one bounded ring per thread plus the
+/// current-iteration tag. Shared as `Arc` between the profiler (which
+/// records phase scopes), the transport (which records events) and the
+/// exporter (which drains after the solve).
+pub struct Tracer {
+    epoch: Instant,
+    rank: u32,
+    cap: usize,
+    iter: AtomicU32,
+    rings: Vec<Ring>,
+}
+
+impl Tracer {
+    /// `cap` spans per thread ring; overflow is counted, not stored.
+    pub fn new(nthreads: usize, cap: usize, rank: usize) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            rank: rank as u32,
+            cap,
+            iter: AtomicU32::new(0),
+            rings: (0..nthreads.max(1))
+                .map(|_| Ring {
+                    buf: UnsafeCell::new(Vec::with_capacity(cap)),
+                    dropped: AtomicU64::new(0),
+                })
+                .collect(),
+        }
+    }
+
+    /// Tag subsequent spans with the solver iteration they belong to.
+    pub fn set_iter(&self, iter: usize) {
+        self.iter.store(iter as u32, Ordering::Relaxed);
+    }
+
+    /// Nanoseconds since the tracer's epoch.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record a span on thread `tid`'s ring.
+    ///
+    /// Concurrency contract: at most one OS thread records on a given
+    /// `tid` at a time (the team assigns tids uniquely within a region;
+    /// regions are serialized; the FUNNELED transport records from the
+    /// rank master, which is team tid 0's thread).
+    pub fn record(
+        &self,
+        tid: usize,
+        code: u8,
+        t_start_ns: u64,
+        t_end_ns: u64,
+        bytes: u64,
+        flops: u64,
+    ) {
+        let ring = &self.rings[tid.min(self.rings.len() - 1)];
+        let buf = unsafe { &mut *ring.buf.get() };
+        if buf.len() < self.cap {
+            buf.push(SpanRecord {
+                code,
+                rank: self.rank,
+                thread: tid as u32,
+                iter: self.iter.load(Ordering::Relaxed),
+                t_start_ns,
+                t_end_ns,
+                bytes,
+                flops,
+            });
+        } else {
+            ring.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record an instantaneous event (retransmit, timeout, ...).
+    pub fn event(&self, tid: usize, code: u8, bytes: u64) {
+        let t = self.now_ns();
+        self.record(tid, code, t, t, bytes, 0);
+    }
+
+    /// Collect every ring into one sorted span list plus the total drop
+    /// count. Call only after all recording threads have quiesced (the
+    /// solve returned / the world joined).
+    pub fn drain(&self) -> TraceData {
+        let mut spans = Vec::new();
+        let mut dropped = 0u64;
+        for ring in &self.rings {
+            spans.extend_from_slice(unsafe { &*ring.buf.get() });
+            dropped += ring.dropped.load(Ordering::Relaxed);
+        }
+        let mut data = TraceData { spans, dropped };
+        data.sort();
+        data
+    }
+}
+
+/// Drained spans of one rank (or, after [`TraceData::merge`], a world).
+#[derive(Clone, Debug, Default)]
+pub struct TraceData {
+    pub spans: Vec<SpanRecord>,
+    pub dropped: u64,
+}
+
+impl TraceData {
+    fn sort(&mut self) {
+        self.spans.sort_by_key(|s| {
+            (s.rank, s.thread, s.t_start_ns, s.t_end_ns, s.code)
+        });
+    }
+
+    /// Merge per-rank traces into one world trace (sorted, drop counts
+    /// summed). Each rank keeps its own epoch; spans stay comparable
+    /// within a rank×thread track, which is what the timeline shows.
+    pub fn merge(parts: Vec<TraceData>) -> TraceData {
+        let mut out = TraceData::default();
+        for p in parts {
+            out.spans.extend(p.spans);
+            out.dropped += p.dropped;
+        }
+        out.sort();
+        out
+    }
+
+    /// Chrome-trace / Perfetto JSON: complete events ("ph":"X"), one
+    /// track per rank (pid) × thread (tid), timestamps in microseconds.
+    /// Open with https://ui.perfetto.dev or chrome://tracing.
+    pub fn chrome_trace_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.obj_begin();
+        w.key("traceEvents");
+        w.arr_begin();
+        for s in &self.spans {
+            w.obj_begin();
+            w.key("name");
+            w.str_val(span_label(s.code));
+            w.key("ph");
+            w.str_val("X");
+            w.key("ts");
+            w.raw(&format!("{:.3}", s.t_start_ns as f64 / 1e3));
+            w.key("dur");
+            w.raw(&format!("{:.3}", (s.t_end_ns - s.t_start_ns) as f64 / 1e3));
+            w.key("pid");
+            w.uint(s.rank as u64);
+            w.key("tid");
+            w.uint(s.thread as u64);
+            w.key("args");
+            w.obj_begin();
+            w.key("iter");
+            w.uint(s.iter as u64);
+            w.key("bytes");
+            w.uint(s.bytes);
+            w.key("flops");
+            w.uint(s.flops);
+            w.obj_end();
+            w.obj_end();
+        }
+        w.arr_end();
+        w.key("displayTimeUnit");
+        w.str_val("ms");
+        w.key("droppedSpans");
+        w.uint(self.dropped);
+        w.obj_end();
+        w.finish()
+    }
+}
+
+/// Number of log-spaced histogram buckets.
+pub const HIST_BUCKETS: usize = 64;
+/// Bucket range: `HIST_LO * 10^(i * HIST_DECADES / HIST_BUCKETS)` for
+/// bucket edge `i` — 1 ns .. 1000 s covers every phase time we see.
+const HIST_LO: f64 = 1e-9;
+const HIST_DECADES: f64 = 12.0;
+
+/// Deterministic fixed-bucket histogram (log-spaced over 1e-9..1e3).
+/// Quantiles return the geometric midpoint of the covering bucket,
+/// clamped to the observed `[min, max]` — so an empty histogram reads
+/// 0.0 and one-sample / all-equal histograms read the exact value.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v <= HIST_LO {
+            return 0;
+        }
+        let idx = ((v / HIST_LO).log10() / HIST_DECADES * HIST_BUCKETS as f64) as usize;
+        idx.min(HIST_BUCKETS - 1)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() || v < 0.0 {
+            return;
+        }
+        self.counts[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// `q` in [0, 1]; see the type docs for the edge-case contract.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil()).max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if c > 0 && cum >= target {
+                let lo = HIST_LO
+                    * 10f64.powf(i as f64 * HIST_DECADES / HIST_BUCKETS as f64);
+                let hi = HIST_LO
+                    * 10f64.powf((i + 1) as f64 * HIST_DECADES / HIST_BUCKETS as f64);
+                return (lo * hi).sqrt().clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
+/// Metrics registry: named counters, gauges, and histograms with
+/// deterministic (BTreeMap) iteration order for the JSON export.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn counter(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_default()
+            .observe(value);
+    }
+
+    pub fn get_counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// metrics.json: counters, gauges, histogram summaries
+    /// (count/sum/min/max/p50/p95/p99) and the slowdown report.
+    pub fn to_json(&self, slowdowns: &[Slowdown]) -> String {
+        let mut w = JsonWriter::new();
+        w.obj_begin();
+        w.key("counters");
+        w.obj_begin();
+        for (k, v) in &self.counters {
+            w.key(k);
+            w.uint(*v);
+        }
+        w.obj_end();
+        w.key("gauges");
+        w.obj_begin();
+        for (k, v) in &self.gauges {
+            w.key(k);
+            w.num(*v);
+        }
+        w.obj_end();
+        w.key("histograms");
+        w.obj_begin();
+        for (k, h) in &self.histograms {
+            w.key(k);
+            w.obj_begin();
+            w.key("count");
+            w.uint(h.count());
+            w.key("sum");
+            w.num(h.sum());
+            w.key("min");
+            w.num(h.min());
+            w.key("max");
+            w.num(h.max());
+            w.key("p50");
+            w.num(h.quantile(0.50));
+            w.key("p95");
+            w.num(h.quantile(0.95));
+            w.key("p99");
+            w.num(h.quantile(0.99));
+            w.obj_end();
+        }
+        w.obj_end();
+        w.key("slowdowns");
+        w.raw(&slowdown_summary(slowdowns));
+        w.obj_end();
+        w.finish()
+    }
+}
+
+/// Slowdown-detector knobs (config `[telemetry]`). An iteration is
+/// flagged when its phase time exceeds *all* of: the absolute floor,
+/// `factor ×` the trailing-window median, and `median + k × MAD`. The
+/// conjunction keeps clean-but-jittery CI runs silent while a 40 ms+
+/// injected delay on a microsecond-scale phase is unmissable.
+#[derive(Clone, Copy, Debug)]
+pub struct SlowdownConfig {
+    /// trailing samples forming the baseline (no flags before the
+    /// window fills)
+    pub window: usize,
+    /// MAD multiplier
+    pub k: f64,
+    /// multiplicative guard vs the window median
+    pub factor: f64,
+    /// absolute floor in seconds: never flag below this
+    pub min_secs: f64,
+}
+
+impl Default for SlowdownConfig {
+    fn default() -> Self {
+        SlowdownConfig {
+            window: 8,
+            k: 6.0,
+            factor: 3.0,
+            min_secs: 2e-3,
+        }
+    }
+}
+
+/// One flagged iteration.
+#[derive(Clone, Debug)]
+pub struct Slowdown {
+    pub rank: u32,
+    /// span code of the phase (see [`span_label`])
+    pub code: u8,
+    pub iter: u32,
+    pub seconds: f64,
+    /// trailing-window median the sample was judged against
+    pub median: f64,
+    pub mad: f64,
+}
+
+fn median_sorted(s: &[f64]) -> f64 {
+    let n = s.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    }
+}
+
+/// Flag outliers in one time series. Returns `(index, median, mad)` per
+/// flagged sample; the first `cfg.window` samples are baseline only.
+pub fn detect_outliers(series: &[f64], cfg: &SlowdownConfig) -> Vec<(usize, f64, f64)> {
+    let mut out = Vec::new();
+    if series.len() <= cfg.window || cfg.window == 0 {
+        return out;
+    }
+    for i in cfg.window..series.len() {
+        let window = &series[i - cfg.window..i];
+        let mut sorted = window.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let med = median_sorted(&sorted);
+        let mut dev: Vec<f64> = window.iter().map(|x| (x - med).abs()).collect();
+        dev.sort_by(f64::total_cmp);
+        let mad = median_sorted(&dev);
+        let x = series[i];
+        if x > cfg.min_secs && x > med * cfg.factor && x > med + cfg.k * mad {
+            out.push((i, med, mad));
+        }
+    }
+    out
+}
+
+/// Per-iteration critical-path time of one (rank, phase): span durations
+/// summed per thread within an iteration, then the max across threads.
+pub fn phase_series(spans: &[SpanRecord], rank: u32, code: u8) -> Vec<(u32, f64)> {
+    let mut per: BTreeMap<u32, BTreeMap<u32, u64>> = BTreeMap::new();
+    for s in spans {
+        if s.rank == rank && s.code == code {
+            *per.entry(s.iter).or_default().entry(s.thread).or_insert(0) +=
+                s.t_end_ns - s.t_start_ns;
+        }
+    }
+    per.into_iter()
+        .map(|(iter, threads)| {
+            let max = threads.values().copied().max().unwrap_or(0);
+            (iter, max as f64 * 1e-9)
+        })
+        .collect()
+}
+
+/// Run the detector over the wait-dominated phases (comm-wait, barrier —
+/// the paper's Fig. 8/9 "unexpected slow-down" signals) of every rank.
+pub fn detect_slowdowns(spans: &[SpanRecord], cfg: &SlowdownConfig) -> Vec<Slowdown> {
+    let mut ranks: Vec<u32> = spans.iter().map(|s| s.rank).collect();
+    ranks.sort_unstable();
+    ranks.dedup();
+    let mut out = Vec::new();
+    for &rank in &ranks {
+        // codes 2/4 = comm-wait / barrier (Phase mirror, see span_label)
+        for code in [2u8, 4] {
+            let series = phase_series(spans, rank, code);
+            let values: Vec<f64> = series.iter().map(|p| p.1).collect();
+            for (i, median, mad) in detect_outliers(&values, cfg) {
+                out.push(Slowdown {
+                    rank,
+                    code,
+                    iter: series[i].0,
+                    seconds: values[i],
+                    median,
+                    mad,
+                });
+            }
+        }
+    }
+    out.sort_by_key(|s| (s.rank, s.code, s.iter));
+    out
+}
+
+/// The `slowdowns:` summary object — printed as a CLI line and embedded
+/// verbatim in metrics.json, so CI can grep either.
+pub fn slowdown_summary(slowdowns: &[Slowdown]) -> String {
+    let mut w = JsonWriter::new();
+    w.obj_begin();
+    w.key("count");
+    w.uint(slowdowns.len() as u64);
+    w.key("flagged");
+    w.arr_begin();
+    for s in slowdowns {
+        w.obj_begin();
+        w.key("rank");
+        w.uint(s.rank as u64);
+        w.key("phase");
+        w.str_val(span_label(s.code));
+        w.key("iter");
+        w.uint(s.iter as u64);
+        w.key("seconds");
+        w.num(s.seconds);
+        w.key("median");
+        w.num(s.median);
+        w.key("mad");
+        w.num(s.mad);
+        w.obj_end();
+    }
+    w.arr_end();
+    w.obj_end();
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracer_records_and_tags_iterations() {
+        let t = Tracer::new(2, 16, 3);
+        t.set_iter(7);
+        t.record(1, 1, 100, 200, 64, 99);
+        t.event(0, EV_RETRANSMIT, 32);
+        let data = t.drain();
+        assert_eq!(data.spans.len(), 2);
+        assert_eq!(data.dropped, 0);
+        // sorted by (rank, thread, ...): tid 0 event first
+        assert_eq!(data.spans[0].code, EV_RETRANSMIT);
+        assert_eq!(data.spans[0].rank, 3);
+        assert_eq!(data.spans[0].iter, 7);
+        let s = data.spans[1];
+        assert_eq!((s.thread, s.code, s.bytes, s.flops), (1, 1, 64, 99));
+        assert_eq!(s.t_end_ns - s.t_start_ns, 100);
+    }
+
+    #[test]
+    fn ring_overflow_is_counted_not_stored() {
+        let t = Tracer::new(1, 4, 0);
+        for i in 0..10u64 {
+            t.record(0, 5, i, i + 1, 0, 0);
+        }
+        let data = t.drain();
+        assert_eq!(data.spans.len(), 4, "ring capacity bounds memory");
+        assert_eq!(data.dropped, 6, "overflow is drop-counted");
+        // the ring keeps the oldest spans (no overwrite)
+        assert_eq!(data.spans[0].t_start_ns, 0);
+        assert_eq!(data.spans[3].t_start_ns, 3);
+    }
+
+    #[test]
+    fn histogram_quantile_edge_cases() {
+        let empty = Histogram::new();
+        assert_eq!(empty.quantile(0.5), 0.0);
+        assert_eq!(empty.count(), 0);
+        assert_eq!(empty.min(), 0.0);
+        assert_eq!(empty.max(), 0.0);
+
+        let mut one = Histogram::new();
+        one.observe(3.5e-4);
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(one.quantile(q), 3.5e-4, "one sample is exact at q={q}");
+        }
+
+        let mut equal = Histogram::new();
+        for _ in 0..100 {
+            equal.observe(1.25e-2);
+        }
+        assert_eq!(equal.quantile(0.5), 1.25e-2, "all-equal is exact");
+        assert_eq!(equal.quantile(0.99), 1.25e-2);
+        assert_eq!(equal.count(), 100);
+    }
+
+    #[test]
+    fn histogram_orders_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=1000 {
+            h.observe(i as f64 * 1e-6);
+        }
+        let (p50, p95, p99) = (h.quantile(0.5), h.quantile(0.95), h.quantile(0.99));
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!(p50 > 1e-4 && p50 < 1e-3, "p50 {p50} near the median");
+        assert!(p99 <= h.max());
+    }
+
+    #[test]
+    fn chrome_trace_is_well_formed() {
+        let t = Tracer::new(2, 64, 1);
+        t.set_iter(4);
+        t.record(0, 0, 1000, 2500, 0, 0);
+        t.record(1, 2, 2000, 9000, 4096, 0);
+        let text = t.drain().chrome_trace_json();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let e = &events[1];
+        assert_eq!(e.get("name").unwrap().as_str(), Some("comm-wait"));
+        assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(e.get("pid").unwrap().as_usize(), Some(1));
+        assert_eq!(e.get("tid").unwrap().as_usize(), Some(1));
+        assert_eq!(e.get("ts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(e.get("dur").unwrap().as_f64(), Some(7.0));
+        assert_eq!(e.get("args").unwrap().get("iter").unwrap().as_usize(), Some(4));
+        assert_eq!(
+            e.get("args").unwrap().get("bytes").unwrap().as_usize(),
+            Some(4096)
+        );
+        assert_eq!(j.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    }
+
+    #[test]
+    fn detector_finds_planted_outlier() {
+        let cfg = SlowdownConfig::default();
+        // stable ~1 ms baseline with mild jitter, one 80 ms spike
+        let mut series: Vec<f64> = (0..40)
+            .map(|i| 1.0e-3 + 1.0e-5 * ((i * 7 % 11) as f64))
+            .collect();
+        series[23] = 8.0e-2;
+        let hits = detect_outliers(&series, &cfg);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].0, 23);
+        assert!(hits[0].1 > 0.9e-3 && hits[0].1 < 1.2e-3, "median {}", hits[0].1);
+    }
+
+    #[test]
+    fn detector_is_silent_on_clean_series() {
+        let cfg = SlowdownConfig::default();
+        let series: Vec<f64> = (0..60)
+            .map(|i| 1.0e-3 + 2.0e-4 * ((i * 13 % 17) as f64 / 17.0))
+            .collect();
+        assert!(detect_outliers(&series, &cfg).is_empty());
+        // sub-floor spikes stay silent even when they dwarf the median
+        let mut tiny = vec![1.0e-6; 30];
+        tiny[20] = 9.0e-4; // 900x the median but under min_secs
+        assert!(detect_outliers(&tiny, &cfg).is_empty());
+    }
+
+    #[test]
+    fn detect_slowdowns_groups_by_rank_and_phase() {
+        let t = Tracer::new(1, 4096, 0);
+        // comm-wait: 1 ms per iteration, iteration 20 takes 50 ms
+        for iter in 0..30u64 {
+            t.set_iter(iter as usize);
+            let start = iter * 1_000_000;
+            let dur = if iter == 20 { 50_000_000 } else { 1_000_000 };
+            t.record(0, 2, start, start + dur, 0, 0);
+            // bulk is just as slow at iteration 20, but bulk is not a
+            // wait phase — the detector must not scan it
+            t.record(0, 1, start, start + dur, 0, 0);
+        }
+        let data = t.drain();
+        let slow = detect_slowdowns(&data.spans, &SlowdownConfig::default());
+        assert_eq!(slow.len(), 1, "{slow:?}");
+        assert_eq!(slow[0].iter, 20);
+        assert_eq!(slow[0].code, 2);
+        assert_eq!(slow[0].rank, 0);
+        let summary = slowdown_summary(&slow);
+        assert!(summary.starts_with("{\"count\":1,"), "{summary}");
+        crate::util::json::Json::parse(&summary).unwrap();
+    }
+
+    #[test]
+    fn metrics_registry_round_trips() {
+        let mut m = Metrics::new();
+        m.counter("iterations", 40);
+        m.counter("iterations", 2);
+        m.gauge("rel_residual", 1.5e-9);
+        for i in 1..=20 {
+            m.observe("phase.comm-wait.seconds", i as f64 * 1e-4);
+        }
+        assert_eq!(m.get_counter("iterations"), 42);
+        let text = m.to_json(&[]);
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(
+            j.get("counters").unwrap().get("iterations").unwrap().as_usize(),
+            Some(42)
+        );
+        assert_eq!(
+            j.get("gauges").unwrap().get("rel_residual").unwrap().as_f64(),
+            Some(1.5e-9)
+        );
+        let h = j
+            .get("histograms")
+            .unwrap()
+            .get("phase.comm-wait.seconds")
+            .unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize(), Some(20));
+        let p50 = h.get("p50").unwrap().as_f64().unwrap();
+        let p99 = h.get("p99").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99);
+        assert_eq!(
+            j.get("slowdowns").unwrap().get("count").unwrap().as_usize(),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn merge_combines_ranks() {
+        let t0 = Tracer::new(1, 8, 0);
+        let t1 = Tracer::new(1, 8, 1);
+        t0.record(0, 1, 0, 10, 0, 0);
+        t1.record(0, 1, 5, 15, 0, 0);
+        for i in 0..10u64 {
+            t1.record(0, 5, i, i, 0, 0); // overflows the 8-slot ring
+        }
+        let merged = TraceData::merge(vec![t0.drain(), t1.drain()]);
+        assert_eq!(merged.spans.len(), 9);
+        assert_eq!(merged.dropped, 3);
+        assert!(merged.spans.windows(2).all(|w| (w[0].rank, w[0].thread)
+            <= (w[1].rank, w[1].thread)));
+    }
+}

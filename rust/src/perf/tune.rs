@@ -41,7 +41,7 @@ use crate::lattice::{Geometry, LatticeDims, Parity, Tiling};
 use crate::perf::machine::HostCalibration;
 use crate::perf::roofline;
 use crate::solver::fused;
-use crate::util::json::Json;
+use crate::util::json::{fnum, Json};
 use crate::util::rng::Rng;
 
 /// Bump when the cache layout or the meaning of a knob changes: an old
@@ -471,10 +471,6 @@ impl TuneCache {
             None => CacheLookup::Hit(Box::new(cache)),
         }
     }
-}
-
-fn fnum(v: f64) -> String {
-    format!("{v:.9e}")
 }
 
 fn comma(i: usize, len: usize) -> &'static str {

@@ -56,13 +56,16 @@ use crate::algebra::{Complex, Real};
 use crate::coordinator::operator::{
     reduce_caps_tile_order, MultiFusedSolvable, MultiOperator,
 };
+use crate::coordinator::profiler::{Phase, Profiler};
 use crate::coordinator::team::{chunk_range, SendPtr};
 use crate::coordinator::Team;
 use crate::dslash::flops as fl;
 use crate::field::blas;
 use crate::field::block::MultiFermionField;
 
-use super::fused::{ro, ro_at, BICGSTAB_FUSED_SWEEPS, CG_FUSED_SWEEPS};
+use super::fused::{
+    charge_flops, ro, ro_at, scoped, BICGSTAB_FUSED_SWEEPS, CG_FUSED_SWEEPS,
+};
 use super::health::{
     HealthConfig, HealthEventKind, HealthGuard, Interrupt, SolveError,
     StagnationTracker,
@@ -177,6 +180,21 @@ pub fn block_cg<R: Real, A: MultiFusedSolvable<R>>(
     tol: f64,
     maxiter: usize,
 ) -> BlockSolveStats {
+    block_cg_profiled(op, team, x, b, tol, maxiter, None)
+}
+
+/// [`block_cg`] with optional per-phase profiling/tracing. The
+/// instrumentation never touches the arithmetic: histories are bitwise
+/// identical with `prof` `Some` or `None`.
+pub fn block_cg_profiled<R: Real, A: MultiFusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
+) -> BlockSolveStats {
     let nrhs = op.nrhs();
     assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
@@ -242,6 +260,9 @@ pub fn block_cg<R: Real, A: MultiFusedSolvable<R>>(
     let rrp_ptr = SendPtr(rr_partials.as_mut_ptr());
 
     while iterations < maxiter && active.iter().any(|&a| a) {
+        if let Some(p) = prof {
+            p.set_iter(iterations);
+        }
         let nact = active.iter().filter(|&&a| a).count() as u64;
         let rr_iter = rr.clone();
         let mask = active.clone();
@@ -249,16 +270,18 @@ pub fn block_cg<R: Real, A: MultiFusedSolvable<R>>(
         team.run(|tid, bar| unsafe {
             // sweep 1: ap = A p, gauge streamed once for all active RHS,
             // per-(site tile, RHS) p·Ap capture fused into the store
-            view.apply_team(
-                tid,
-                n,
-                bar,
-                ap_ptr,
-                p_ptr.0 as *const R,
-                &mask,
-                Some((p_ptr.0 as *const R, dot_ptr)),
-            );
-            bar.wait();
+            scoped(prof, tid, Phase::Bulk, || unsafe {
+                view.apply_team(
+                    tid,
+                    n,
+                    bar,
+                    ap_ptr,
+                    p_ptr.0 as *const R,
+                    &mask,
+                    Some((p_ptr.0 as *const R, dot_ptr)),
+                );
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             // every thread combines the same partials in site-tile
             // order, so the per-RHS alphas are identical everywhere
             // (and to the single-RHS fused solver)
@@ -276,23 +299,25 @@ pub fn block_cg<R: Real, A: MultiFusedSolvable<R>>(
             }
             let (tb, te) = chunk_range(ntiles, tid, n);
             // sweep 2: x += alpha p ; r -= alpha ap ; per-sub-tile |r|²
-            for t in tb..te {
-                for i in 0..nrhs {
-                    if !mask[i] {
-                        continue;
+            scoped(prof, tid, Phase::Blas, || unsafe {
+                for t in tb..te {
+                    for i in 0..nrhs {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let off = (t * nrhs + i) * vpt;
+                        blas::axpy_slice(
+                            x_ptr.slice_mut(off, vpt),
+                            alphas[i],
+                            ro_at::<R>(p_ptr, off, vpt),
+                        );
+                        let rt = r_ptr.slice_mut(off, vpt);
+                        blas::axpy_slice(rt, -alphas[i], ro_at::<R>(ap_ptr, off, vpt));
+                        rrp_ptr.slice_mut(t * nrhs + i, 1)[0] = blas::norm2_tile(rt, vlen);
                     }
-                    let off = (t * nrhs + i) * vpt;
-                    blas::axpy_slice(
-                        x_ptr.slice_mut(off, vpt),
-                        alphas[i],
-                        ro_at::<R>(p_ptr, off, vpt),
-                    );
-                    let rt = r_ptr.slice_mut(off, vpt);
-                    blas::axpy_slice(rt, -alphas[i], ro_at::<R>(ap_ptr, off, vpt));
-                    rrp_ptr.slice_mut(t * nrhs + i, 1)[0] = blas::norm2_tile(rt, vlen);
                 }
-            }
-            bar.wait();
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let rrp = ro::<f64>(rrp_ptr, ntiles * nrhs);
             let mut betas = vec![R::ZERO; nrhs];
             for i in 0..nrhs {
@@ -302,19 +327,21 @@ pub fn block_cg<R: Real, A: MultiFusedSolvable<R>>(
                 }
             }
             // sweep 3: p = beta p + r
-            for t in tb..te {
-                for i in 0..nrhs {
-                    if !mask[i] {
-                        continue;
+            scoped(prof, tid, Phase::Blas, || unsafe {
+                for t in tb..te {
+                    for i in 0..nrhs {
+                        if !mask[i] {
+                            continue;
+                        }
+                        let off = (t * nrhs + i) * vpt;
+                        blas::xpay_slice(
+                            p_ptr.slice_mut(off, vpt),
+                            betas[i],
+                            ro_at::<R>(r_ptr, off, vpt),
+                        );
                     }
-                    let off = (t * nrhs + i) * vpt;
-                    blas::xpay_slice(
-                        p_ptr.slice_mut(off, vpt),
-                        betas[i],
-                        ro_at::<R>(r_ptr, off, vpt),
-                    );
                 }
-            }
+            });
         });
         flops += flops_shared
             + nact
@@ -344,6 +371,7 @@ pub fn block_cg<R: Real, A: MultiFusedSolvable<R>>(
             stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
         }
     }
+    charge_flops(prof, n, ntiles, flops);
     BlockSolveStats::finish(nrhs, iterations, stats, flops, CG_FUSED_SWEEPS, team.nthreads())
 }
 
@@ -483,6 +511,20 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
     tol: f64,
     maxiter: usize,
 ) -> BlockSolveStats {
+    block_bicgstab_profiled(op, team, x, b, tol, maxiter, None)
+}
+
+/// [`block_bicgstab`] with optional per-phase profiling/tracing; the
+/// instrumentation never touches the arithmetic.
+pub fn block_bicgstab_profiled<R: Real, A: MultiFusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
+) -> BlockSolveStats {
     let nrhs = op.nrhs();
     assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
@@ -556,21 +598,26 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
     let rp_ptr = SendPtr(r_partials.as_mut_ptr());
 
     while iterations < maxiter && active.iter().any(|&a| a) {
+        if let Some(p) = prof {
+            p.set_iter(iterations);
+        }
         let rho_iter = rho.clone();
         let mask = active.clone();
         team.run(|tid, bar| unsafe {
             let (tb, te) = chunk_range(ntiles, tid, n);
             // sweep 1: v = A p with fused per-RHS <rhat, v> capture
-            view.apply_team(
-                tid,
-                n,
-                bar,
-                v_ptr,
-                p_ptr.0 as *const R,
-                &mask,
-                Some((rhat_raw.0 as *const R, vp_ptr)),
-            );
-            bar.wait();
+            scoped(prof, tid, Phase::Bulk, || unsafe {
+                view.apply_team(
+                    tid,
+                    n,
+                    bar,
+                    v_ptr,
+                    p_ptr.0 as *const R,
+                    &mask,
+                    Some((rhat_raw.0 as *const R, vp_ptr)),
+                );
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             // the reduce/stage helpers allocate nrhs-sized vectors per
             // thread per iteration — accepted, as above: O(nrhs) words
             // against O(volume) sweep work, redundant by design so every
@@ -583,61 +630,67 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
             }
             // sweep 2: s = r - alpha v (in place in r) with per-sub-tile
             // |s|² capture
-            for tl in tb..te {
-                for i in 0..nrhs {
-                    if !mask_b[i] {
-                        continue;
+            scoped(prof, tid, Phase::Blas, || unsafe {
+                for tl in tb..te {
+                    for i in 0..nrhs {
+                        if !mask_b[i] {
+                            continue;
+                        }
+                        let off = (tl * nrhs + i) * vpt;
+                        let ma = -alpha[i];
+                        let rt = r_ptr.slice_mut(off, vpt);
+                        blas::caxpy_slice(
+                            rt,
+                            R::from_f64(ma.re),
+                            R::from_f64(ma.im),
+                            ro_at::<R>(v_ptr, off, vpt),
+                            vlen,
+                        );
+                        sp_ptr.slice_mut(tl * nrhs + i, 1)[0] =
+                            [0.0, 0.0, blas::norm2_tile(rt, vlen)];
                     }
-                    let off = (tl * nrhs + i) * vpt;
-                    let ma = -alpha[i];
-                    let rt = r_ptr.slice_mut(off, vpt);
-                    blas::caxpy_slice(
-                        rt,
-                        R::from_f64(ma.re),
-                        R::from_f64(ma.im),
-                        ro_at::<R>(v_ptr, off, vpt),
-                        vlen,
-                    );
-                    sp_ptr.slice_mut(tl * nrhs + i, 1)[0] =
-                        [0.0, 0.0, blas::norm2_tile(rt, vlen)];
                 }
-            }
-            bar.wait();
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let sred =
                 reduce_caps_tile_order(ro::<[f64; 3]>(sp_ptr, ntiles * nrhs), nrhs);
             let (mask_half, mask_c, _snorm) = stage_half(&mask_b, &sred, &limit, nrhs);
             if mask_half.iter().any(|&h| h) {
                 // converged at the half step: x += alpha p (own shard)
-                for tl in tb..te {
-                    for i in 0..nrhs {
-                        if !mask_half[i] {
-                            continue;
+                scoped(prof, tid, Phase::Blas, || unsafe {
+                    for tl in tb..te {
+                        for i in 0..nrhs {
+                            if !mask_half[i] {
+                                continue;
+                            }
+                            let off = (tl * nrhs + i) * vpt;
+                            blas::caxpy_slice(
+                                x_ptr.slice_mut(off, vpt),
+                                R::from_f64(alpha[i].re),
+                                R::from_f64(alpha[i].im),
+                                ro_at::<R>(p_ptr, off, vpt),
+                                vlen,
+                            );
                         }
-                        let off = (tl * nrhs + i) * vpt;
-                        blas::caxpy_slice(
-                            x_ptr.slice_mut(off, vpt),
-                            R::from_f64(alpha[i].re),
-                            R::from_f64(alpha[i].im),
-                            ro_at::<R>(p_ptr, off, vpt),
-                            vlen,
-                        );
                     }
-                }
+                });
             }
             if !mask_c.iter().any(|&a| a) {
                 return; // all live RHS done at the half step
             }
             // sweep 3: t = A s with fused per-RHS <s, t>, |t|² capture
-            view.apply_team(
-                tid,
-                n,
-                bar,
-                t_ptr,
-                r_ptr.0 as *const R,
-                &mask_c,
-                Some((r_ptr.0 as *const R, tp_ptr)),
-            );
-            bar.wait();
+            scoped(prof, tid, Phase::Bulk, || unsafe {
+                view.apply_team(
+                    tid,
+                    n,
+                    bar,
+                    t_ptr,
+                    r_ptr.0 as *const R,
+                    &mask_c,
+                    Some((r_ptr.0 as *const R, tp_ptr)),
+                );
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let tred =
                 reduce_caps_tile_order(ro::<[f64; 3]>(tp_ptr, ntiles * nrhs), nrhs);
             let (mask_d, omega) = stage_omega(&mask_c, &tred, nrhs);
@@ -646,39 +699,41 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
             }
             // sweep 4: x += alpha p + omega s (s lives in r), and
             // sweep 5: r = s - omega t with <rhat, r> / |r|² capture
-            for tl in tb..te {
-                for i in 0..nrhs {
-                    if !mask_d[i] {
-                        continue;
+            scoped(prof, tid, Phase::Blas, || unsafe {
+                for tl in tb..te {
+                    for i in 0..nrhs {
+                        if !mask_d[i] {
+                            continue;
+                        }
+                        let off = (tl * nrhs + i) * vpt;
+                        blas::caxpy2_slice(
+                            x_ptr.slice_mut(off, vpt),
+                            R::from_f64(alpha[i].re),
+                            R::from_f64(alpha[i].im),
+                            ro_at::<R>(p_ptr, off, vpt),
+                            R::from_f64(omega[i].re),
+                            R::from_f64(omega[i].im),
+                            ro_at::<R>(r_ptr, off, vpt),
+                            vlen,
+                        );
+                        let mo = -omega[i];
+                        let rt = r_ptr.slice_mut(off, vpt);
+                        blas::caxpy_slice(
+                            rt,
+                            R::from_f64(mo.re),
+                            R::from_f64(mo.im),
+                            ro_at::<R>(t_ptr, off, vpt),
+                            vlen,
+                        );
+                        rp_ptr.slice_mut(tl * nrhs + i, 1)[0] = blas::cdot_norm2_tile(
+                            ro_at::<R>(rhat_raw, off, vpt),
+                            rt,
+                            vlen,
+                        );
                     }
-                    let off = (tl * nrhs + i) * vpt;
-                    blas::caxpy2_slice(
-                        x_ptr.slice_mut(off, vpt),
-                        R::from_f64(alpha[i].re),
-                        R::from_f64(alpha[i].im),
-                        ro_at::<R>(p_ptr, off, vpt),
-                        R::from_f64(omega[i].re),
-                        R::from_f64(omega[i].im),
-                        ro_at::<R>(r_ptr, off, vpt),
-                        vlen,
-                    );
-                    let mo = -omega[i];
-                    let rt = r_ptr.slice_mut(off, vpt);
-                    blas::caxpy_slice(
-                        rt,
-                        R::from_f64(mo.re),
-                        R::from_f64(mo.im),
-                        ro_at::<R>(t_ptr, off, vpt),
-                        vlen,
-                    );
-                    rp_ptr.slice_mut(tl * nrhs + i, 1)[0] = blas::cdot_norm2_tile(
-                        ro_at::<R>(rhat_raw, off, vpt),
-                        rt,
-                        vlen,
-                    );
                 }
-            }
-            bar.wait();
+            });
+            scoped(prof, tid, Phase::Barrier, || bar.wait());
             let rred =
                 reduce_caps_tile_order(ro::<[f64; 3]>(rp_ptr, ntiles * nrhs), nrhs);
             let (mask_e, beta, _rr_new, _rho_new) =
@@ -687,25 +742,27 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
                 return;
             }
             // sweep 6: p = beta (p - omega v) + r
-            for tl in tb..te {
-                for i in 0..nrhs {
-                    if !mask_e[i] {
-                        continue;
+            scoped(prof, tid, Phase::Blas, || unsafe {
+                for tl in tb..te {
+                    for i in 0..nrhs {
+                        if !mask_e[i] {
+                            continue;
+                        }
+                        let off = (tl * nrhs + i) * vpt;
+                        let mo = -omega[i];
+                        blas::p_update_slice(
+                            p_ptr.slice_mut(off, vpt),
+                            R::from_f64(mo.re),
+                            R::from_f64(mo.im),
+                            ro_at::<R>(v_ptr, off, vpt),
+                            R::from_f64(beta[i].re),
+                            R::from_f64(beta[i].im),
+                            ro_at::<R>(r_ptr, off, vpt),
+                            vlen,
+                        );
                     }
-                    let off = (tl * nrhs + i) * vpt;
-                    let mo = -omega[i];
-                    blas::p_update_slice(
-                        p_ptr.slice_mut(off, vpt),
-                        R::from_f64(mo.re),
-                        R::from_f64(mo.im),
-                        ro_at::<R>(v_ptr, off, vpt),
-                        R::from_f64(beta[i].re),
-                        R::from_f64(beta[i].im),
-                        ro_at::<R>(r_ptr, off, vpt),
-                        vlen,
-                    );
                 }
-            }
+            });
         });
 
         // master bookkeeping: replay the stage cascade on the (final)
@@ -807,6 +864,7 @@ pub fn block_bicgstab<R: Real, A: MultiFusedSolvable<R>>(
     // iteration (mirroring the single solver's uncounted early exits),
     // so report the max over per-RHS counts, not the loop counter
     let done = stats.iter().map(|s| s.iterations).max().unwrap_or(0);
+    charge_flops(prof, n, ntiles, flops);
     BlockSolveStats::finish(nrhs, done, stats, flops, BICGSTAB_FUSED_SWEEPS, team.nthreads())
 }
 
@@ -882,6 +940,25 @@ pub fn block_cg_generic_guarded<R: Real, A: MultiOperator<R>>(
     maxiter: usize,
     health: &HealthConfig,
 ) -> Result<BlockSolveStats, SolveError> {
+    block_cg_generic_guarded_profiled(op, team, x, b, tol, maxiter, health, None)
+}
+
+/// [`block_cg_generic_guarded`] with optional per-phase profiling and
+/// span tracing. On a guarded restart the profiler's accumulators fold
+/// into the `restart` bucket so the emitted per-phase times describe
+/// only the surviving attempt; the instrumentation never touches the
+/// arithmetic.
+#[allow(clippy::too_many_arguments)]
+pub fn block_cg_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+    prof: Option<&Profiler>,
+) -> Result<BlockSolveStats, SolveError> {
     let nrhs = op.nrhs();
     assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
@@ -933,6 +1010,7 @@ pub fn block_cg_generic_guarded<R: Real, A: MultiOperator<R>>(
         return Err(with_mask(e, &stats));
     }
 
+    let mut flops_at_restart = 0u64;
     loop {
         match block_cg_generic_attempt(
             op,
@@ -948,6 +1026,7 @@ pub fn block_cg_generic_guarded<R: Real, A: MultiOperator<R>>(
             &mut iterations,
             &mut history,
             &mut flops,
+            prof,
         ) {
             Ok(mut out) => {
                 // Drift check at apparent convergence: a recursive
@@ -972,6 +1051,10 @@ pub fn block_cg_generic_guarded<R: Real, A: MultiOperator<R>>(
                                 counters(op),
                             )
                             .map_err(|e| with_mask(e, &stats))?;
+                        if let Some(p) = prof {
+                            p.restart_reset();
+                        }
+                        flops_at_restart = flops;
                         for i in 0..nrhs {
                             if redo[i] {
                                 active[i] = true;
@@ -982,6 +1065,7 @@ pub fn block_cg_generic_guarded<R: Real, A: MultiOperator<R>>(
                     }
                     out.flops = flops;
                 }
+                charge_flops(prof, team.nthreads(), ntiles, flops - flops_at_restart);
                 let c = counters(op);
                 out.restarts = guard.restarts;
                 out.health_events = guard.events.len();
@@ -993,6 +1077,10 @@ pub fn block_cg_generic_guarded<R: Real, A: MultiOperator<R>>(
                 guard
                     .absorb(int, &history, counters(op))
                     .map_err(|e| with_mask(e, &stats))?;
+                if let Some(p) = prof {
+                    p.restart_reset();
+                }
+                flops_at_restart = flops;
             }
         }
     }
@@ -1018,6 +1106,7 @@ fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
     iterations: &mut usize,
     history: &mut Vec<f64>,
     flops: &mut u64,
+    prof: Option<&Profiler>,
 ) -> Result<BlockSolveStats, Interrupt> {
     let nrhs = b.nrhs;
     let ntiles = b.site_tiles();
@@ -1089,6 +1178,9 @@ fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
     let mut stag = StagnationTracker::new(health.stagnation_window);
 
     while *iterations < maxiter && active.iter().any(|&a| a) {
+        if let Some(p) = prof {
+            p.set_iter(*iterations);
+        }
         op.fault_hook(*iterations)
             .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
         let nact = active.iter().filter(|&&a| a).count() as u64;
@@ -1118,25 +1210,27 @@ fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
             let caps_ptr = SendPtr(caps.as_mut_ptr());
             let mask = &mask;
             let alphas = &alphas;
-            team.parallel(|tid| unsafe {
-                let (tb, te) = chunk_range(ntiles, tid, n);
-                for t in tb..te {
-                    for i in 0..nrhs {
-                        if !mask[i] {
-                            continue;
+            team.parallel(|tid| {
+                scoped(prof, tid, Phase::Blas, || unsafe {
+                    let (tb, te) = chunk_range(ntiles, tid, n);
+                    for t in tb..te {
+                        for i in 0..nrhs {
+                            if !mask[i] {
+                                continue;
+                            }
+                            let off = (t * nrhs + i) * vpt;
+                            blas::axpy_slice(
+                                x_ptr.slice_mut(off, vpt),
+                                alphas[i],
+                                ro_at::<R>(p_raw, off, vpt),
+                            );
+                            let rt = r_ptr.slice_mut(off, vpt);
+                            blas::axpy_slice(rt, -alphas[i], ro_at::<R>(ap_raw, off, vpt));
+                            caps_ptr.slice_mut(t * nrhs + i, 1)[0] =
+                                [0.0, 0.0, blas::norm2_tile(rt, vlen)];
                         }
-                        let off = (t * nrhs + i) * vpt;
-                        blas::axpy_slice(
-                            x_ptr.slice_mut(off, vpt),
-                            alphas[i],
-                            ro_at::<R>(p_raw, off, vpt),
-                        );
-                        let rt = r_ptr.slice_mut(off, vpt);
-                        blas::axpy_slice(rt, -alphas[i], ro_at::<R>(ap_raw, off, vpt));
-                        caps_ptr.slice_mut(t * nrhs + i, 1)[0] =
-                            [0.0, 0.0, blas::norm2_tile(rt, vlen)];
                     }
-                }
+                })
             });
         }
         let red = op.reduce_caps(&caps);
@@ -1159,21 +1253,23 @@ fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
             let r_raw = SendPtr(r.data.as_ptr() as *mut R);
             let mask = &mask;
             let betas = &betas;
-            team.parallel(|tid| unsafe {
-                let (tb, te) = chunk_range(ntiles, tid, n);
-                for t in tb..te {
-                    for i in 0..nrhs {
-                        if !mask[i] {
-                            continue;
+            team.parallel(|tid| {
+                scoped(prof, tid, Phase::Blas, || unsafe {
+                    let (tb, te) = chunk_range(ntiles, tid, n);
+                    for t in tb..te {
+                        for i in 0..nrhs {
+                            if !mask[i] {
+                                continue;
+                            }
+                            let off = (t * nrhs + i) * vpt;
+                            blas::xpay_slice(
+                                p_ptr.slice_mut(off, vpt),
+                                betas[i],
+                                ro_at::<R>(r_raw, off, vpt),
+                            );
                         }
-                        let off = (t * nrhs + i) * vpt;
-                        blas::xpay_slice(
-                            p_ptr.slice_mut(off, vpt),
-                            betas[i],
-                            ro_at::<R>(r_raw, off, vpt),
-                        );
                     }
-                }
+                })
             });
         }
         *flops += flops_shared
@@ -1335,6 +1431,23 @@ pub fn block_bicgstab_generic_guarded<R: Real, A: MultiOperator<R>>(
     maxiter: usize,
     health: &HealthConfig,
 ) -> Result<BlockSolveStats, SolveError> {
+    block_bicgstab_generic_guarded_profiled(op, team, x, b, tol, maxiter, health, None)
+}
+
+/// [`block_bicgstab_generic_guarded`] with optional per-phase profiling
+/// and span tracing — same restart-bucket contract as
+/// [`block_cg_generic_guarded_profiled`].
+#[allow(clippy::too_many_arguments)]
+pub fn block_bicgstab_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+    prof: Option<&Profiler>,
+) -> Result<BlockSolveStats, SolveError> {
     let nrhs = op.nrhs();
     assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
@@ -1382,6 +1495,7 @@ pub fn block_bicgstab_generic_guarded<R: Real, A: MultiOperator<R>>(
         return Err(with_mask(e, &stats));
     }
 
+    let mut flops_at_restart = 0u64;
     loop {
         match block_bicgstab_generic_attempt(
             op,
@@ -1397,6 +1511,7 @@ pub fn block_bicgstab_generic_guarded<R: Real, A: MultiOperator<R>>(
             &mut iterations,
             &mut history,
             &mut flops,
+            prof,
         ) {
             Ok(mut out) => {
                 if health.drift_tol > 0.0 {
@@ -1418,6 +1533,10 @@ pub fn block_bicgstab_generic_guarded<R: Real, A: MultiOperator<R>>(
                                 counters(op),
                             )
                             .map_err(|e| with_mask(e, &stats))?;
+                        if let Some(p) = prof {
+                            p.restart_reset();
+                        }
+                        flops_at_restart = flops;
                         for i in 0..nrhs {
                             if redo[i] {
                                 active[i] = true;
@@ -1428,6 +1547,7 @@ pub fn block_bicgstab_generic_guarded<R: Real, A: MultiOperator<R>>(
                     }
                     out.flops = flops;
                 }
+                charge_flops(prof, team.nthreads(), ntiles, flops - flops_at_restart);
                 let c = counters(op);
                 out.restarts = guard.restarts;
                 out.health_events = guard.events.len();
@@ -1439,6 +1559,10 @@ pub fn block_bicgstab_generic_guarded<R: Real, A: MultiOperator<R>>(
                 guard
                     .absorb(int, &history, counters(op))
                     .map_err(|e| with_mask(e, &stats))?;
+                if let Some(p) = prof {
+                    p.restart_reset();
+                }
+                flops_at_restart = flops;
             }
         }
     }
@@ -1461,6 +1585,7 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
     iterations: &mut usize,
     history: &mut Vec<f64>,
     flops: &mut u64,
+    prof: Option<&Profiler>,
 ) -> Result<BlockSolveStats, Interrupt> {
     let nrhs = b.nrhs;
     let ntiles = b.site_tiles();
@@ -1541,6 +1666,9 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
     let mut stag = StagnationTracker::new(health.stagnation_window);
 
     while *iterations < maxiter && active.iter().any(|&a| a) {
+        if let Some(p) = prof {
+            p.set_iter(*iterations);
+        }
         op.fault_hook(*iterations)
             .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
         let rho_iter = rho.clone();
@@ -1572,27 +1700,29 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
             let caps_ptr = SendPtr(caps.as_mut_ptr());
             let mask_b = &mask_b;
             let alpha = &alpha;
-            team.parallel(|tid| unsafe {
-                let (tb, te) = chunk_range(ntiles, tid, n);
-                for tl in tb..te {
-                    for i in 0..nrhs {
-                        if !mask_b[i] {
-                            continue;
+            team.parallel(|tid| {
+                scoped(prof, tid, Phase::Blas, || unsafe {
+                    let (tb, te) = chunk_range(ntiles, tid, n);
+                    for tl in tb..te {
+                        for i in 0..nrhs {
+                            if !mask_b[i] {
+                                continue;
+                            }
+                            let off = (tl * nrhs + i) * vpt;
+                            let ma = -alpha[i];
+                            let rt = r_ptr.slice_mut(off, vpt);
+                            blas::caxpy_slice(
+                                rt,
+                                R::from_f64(ma.re),
+                                R::from_f64(ma.im),
+                                ro_at::<R>(v_raw, off, vpt),
+                                vlen,
+                            );
+                            caps_ptr.slice_mut(tl * nrhs + i, 1)[0] =
+                                [0.0, 0.0, blas::norm2_tile(rt, vlen)];
                         }
-                        let off = (tl * nrhs + i) * vpt;
-                        let ma = -alpha[i];
-                        let rt = r_ptr.slice_mut(off, vpt);
-                        blas::caxpy_slice(
-                            rt,
-                            R::from_f64(ma.re),
-                            R::from_f64(ma.im),
-                            ro_at::<R>(v_raw, off, vpt),
-                            vlen,
-                        );
-                        caps_ptr.slice_mut(tl * nrhs + i, 1)[0] =
-                            [0.0, 0.0, blas::norm2_tile(rt, vlen)];
                     }
-                }
+                })
             });
         }
         let sred = op.reduce_caps(&caps);
@@ -1610,23 +1740,25 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
             let p_raw = SendPtr(p.data.as_ptr() as *mut R);
             let mh = &mask_half;
             let alpha_ref = &alpha;
-            team.parallel(|tid| unsafe {
-                let (tb, te) = chunk_range(ntiles, tid, n);
-                for tl in tb..te {
-                    for i in 0..nrhs {
-                        if !mh[i] {
-                            continue;
+            team.parallel(|tid| {
+                scoped(prof, tid, Phase::Blas, || unsafe {
+                    let (tb, te) = chunk_range(ntiles, tid, n);
+                    for tl in tb..te {
+                        for i in 0..nrhs {
+                            if !mh[i] {
+                                continue;
+                            }
+                            let off = (tl * nrhs + i) * vpt;
+                            blas::caxpy_slice(
+                                x_ptr.slice_mut(off, vpt),
+                                R::from_f64(alpha_ref[i].re),
+                                R::from_f64(alpha_ref[i].im),
+                                ro_at::<R>(p_raw, off, vpt),
+                                vlen,
+                            );
                         }
-                        let off = (tl * nrhs + i) * vpt;
-                        blas::caxpy_slice(
-                            x_ptr.slice_mut(off, vpt),
-                            R::from_f64(alpha_ref[i].re),
-                            R::from_f64(alpha_ref[i].im),
-                            ro_at::<R>(p_raw, off, vpt),
-                            vlen,
-                        );
                     }
-                }
+                })
             });
             *flops += count(&mask_half) * fl::caxpy_flops(nreal);
             for i in 0..nrhs {
@@ -1676,40 +1808,43 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
                 let md = &mask_d;
                 let alpha_ref = &alpha;
                 let omega_ref = &omega;
-                team.parallel(|tid| unsafe {
-                    let (tb, te) = chunk_range(ntiles, tid, n);
-                    for tl in tb..te {
-                        for i in 0..nrhs {
-                            if !md[i] {
-                                continue;
+                team.parallel(|tid| {
+                    scoped(prof, tid, Phase::Blas, || unsafe {
+                        let (tb, te) = chunk_range(ntiles, tid, n);
+                        for tl in tb..te {
+                            for i in 0..nrhs {
+                                if !md[i] {
+                                    continue;
+                                }
+                                let off = (tl * nrhs + i) * vpt;
+                                blas::caxpy2_slice(
+                                    x_ptr.slice_mut(off, vpt),
+                                    R::from_f64(alpha_ref[i].re),
+                                    R::from_f64(alpha_ref[i].im),
+                                    ro_at::<R>(p_raw, off, vpt),
+                                    R::from_f64(omega_ref[i].re),
+                                    R::from_f64(omega_ref[i].im),
+                                    ro_at::<R>(r_ptr, off, vpt),
+                                    vlen,
+                                );
+                                let mo = -omega_ref[i];
+                                let rt = r_ptr.slice_mut(off, vpt);
+                                blas::caxpy_slice(
+                                    rt,
+                                    R::from_f64(mo.re),
+                                    R::from_f64(mo.im),
+                                    ro_at::<R>(t_raw, off, vpt),
+                                    vlen,
+                                );
+                                caps_ptr.slice_mut(tl * nrhs + i, 1)[0] =
+                                    blas::cdot_norm2_tile(
+                                        ro_at::<R>(rhat_raw, off, vpt),
+                                        rt,
+                                        vlen,
+                                    );
                             }
-                            let off = (tl * nrhs + i) * vpt;
-                            blas::caxpy2_slice(
-                                x_ptr.slice_mut(off, vpt),
-                                R::from_f64(alpha_ref[i].re),
-                                R::from_f64(alpha_ref[i].im),
-                                ro_at::<R>(p_raw, off, vpt),
-                                R::from_f64(omega_ref[i].re),
-                                R::from_f64(omega_ref[i].im),
-                                ro_at::<R>(r_ptr, off, vpt),
-                                vlen,
-                            );
-                            let mo = -omega_ref[i];
-                            let rt = r_ptr.slice_mut(off, vpt);
-                            blas::caxpy_slice(
-                                rt,
-                                R::from_f64(mo.re),
-                                R::from_f64(mo.im),
-                                ro_at::<R>(t_raw, off, vpt),
-                                vlen,
-                            );
-                            caps_ptr.slice_mut(tl * nrhs + i, 1)[0] = blas::cdot_norm2_tile(
-                                ro_at::<R>(rhat_raw, off, vpt),
-                                rt,
-                                vlen,
-                            );
                         }
-                    }
+                    })
                 });
             }
             let rred = op.reduce_caps(&caps);
@@ -1759,27 +1894,29 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
                 let me = &mask_e;
                 let beta_ref = &beta;
                 let omega_ref = &omega;
-                team.parallel(|tid| unsafe {
-                    let (tb, te) = chunk_range(ntiles, tid, n);
-                    for tl in tb..te {
-                        for i in 0..nrhs {
-                            if !me[i] {
-                                continue;
+                team.parallel(|tid| {
+                    scoped(prof, tid, Phase::Blas, || unsafe {
+                        let (tb, te) = chunk_range(ntiles, tid, n);
+                        for tl in tb..te {
+                            for i in 0..nrhs {
+                                if !me[i] {
+                                    continue;
+                                }
+                                let off = (tl * nrhs + i) * vpt;
+                                let mo = -omega_ref[i];
+                                blas::p_update_slice(
+                                    p_ptr.slice_mut(off, vpt),
+                                    R::from_f64(mo.re),
+                                    R::from_f64(mo.im),
+                                    ro_at::<R>(v_raw, off, vpt),
+                                    R::from_f64(beta_ref[i].re),
+                                    R::from_f64(beta_ref[i].im),
+                                    ro_at::<R>(r_raw, off, vpt),
+                                    vlen,
+                                );
                             }
-                            let off = (tl * nrhs + i) * vpt;
-                            let mo = -omega_ref[i];
-                            blas::p_update_slice(
-                                p_ptr.slice_mut(off, vpt),
-                                R::from_f64(mo.re),
-                                R::from_f64(mo.im),
-                                ro_at::<R>(v_raw, off, vpt),
-                                R::from_f64(beta_ref[i].re),
-                                R::from_f64(beta_ref[i].im),
-                                ro_at::<R>(r_raw, off, vpt),
-                                vlen,
-                            );
                         }
-                    }
+                    })
                 });
                 *flops += count(&mask_e)
                     * (fl::caxpy_flops(nreal) + fl::cscale_flops(nreal) + fl::axpy_flops(nreal));

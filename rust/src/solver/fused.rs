@@ -48,7 +48,12 @@ use super::SolveStats;
 /// run it — lets one solver body serve both the bare and the
 /// `--profile` paths with zero overhead when `prof` is `None`.
 #[inline]
-fn scoped<T>(prof: Option<&Profiler>, tid: usize, phase: Phase, f: impl FnOnce() -> T) -> T {
+pub(crate) fn scoped<T>(
+    prof: Option<&Profiler>,
+    tid: usize,
+    phase: Phase,
+    f: impl FnOnce() -> T,
+) -> T {
     match prof {
         Some(p) => p.scope(tid, phase, f),
         None => f(),
@@ -58,7 +63,7 @@ fn scoped<T>(prof: Option<&Profiler>, tid: usize, phase: Phase, f: impl FnOnce()
 /// Charge each thread its tile-share of the solve's total flops (the
 /// fused pipeline shards every sweep by `chunk_range` over tiles, so
 /// the share is exact up to the chunk remainder).
-fn charge_flops(prof: Option<&Profiler>, n: usize, ntiles: usize, flops: u64) {
+pub(crate) fn charge_flops(prof: Option<&Profiler>, n: usize, ntiles: usize, flops: u64) {
     if let Some(p) = prof {
         for tid in 0..n {
             let (tb, te) = chunk_range(ntiles, tid, n);
@@ -175,6 +180,10 @@ pub fn cg_guarded<R: Real, A: FusedSolvable<R>>(
     };
     let ntiles = op.fused_view().ntiles();
     let n = team.nthreads();
+    // flops already charged-and-discarded by restarts: the profiler's
+    // per-thread counters only ever see the surviving attempt's share
+    // (stats.flops stays cumulative across attempts)
+    let mut flops_at_restart = 0u64;
     loop {
         match cg_attempt(op, team, x, b, tol, maxiter, prof, health, &mut history, &mut flops)
         {
@@ -193,16 +202,24 @@ pub fn cg_guarded<R: Real, A: FusedSolvable<R>>(
                             &history,
                             counters(op),
                         )?;
+                        if let Some(p) = prof {
+                            p.restart_reset();
+                        }
+                        flops_at_restart = flops;
                         continue;
                     }
                     stats.flops = flops;
                 }
                 guard.finish(&mut stats, counters(op));
-                charge_flops(prof, n, ntiles, flops);
+                charge_flops(prof, n, ntiles, flops - flops_at_restart);
                 return Ok(stats);
             }
             Err(int) => {
                 guard.absorb(int, &history, counters(op))?;
+                if let Some(p) = prof {
+                    p.restart_reset();
+                }
+                flops_at_restart = flops;
             }
         }
     }
@@ -315,6 +332,9 @@ fn cg_attempt<R: Real, A: FusedSolvable<R>>(
 
     while history.len() < maxiter && rr > limit {
         let iteration = history.len();
+        if let Some(p) = prof {
+            p.set_iter(iteration);
+        }
         op.fault_hook(iteration)
             .map_err(|err| Interrupt::Comm { err, iteration })?;
         let rr_iter = rr;
@@ -455,6 +475,9 @@ pub fn bicgstab_guarded<R: Real, A: FusedSolvable<R>>(
     };
     let ntiles = op.fused_view().ntiles();
     let n = team.nthreads();
+    // see cg_guarded: restart boundaries fold the failed attempt's
+    // profiler state into the restart bucket and snapshot the flops
+    let mut flops_at_restart = 0u64;
     loop {
         match bicgstab_attempt(
             op, team, x, b, tol, maxiter, prof, health, &mut history, &mut flops,
@@ -474,16 +497,24 @@ pub fn bicgstab_guarded<R: Real, A: FusedSolvable<R>>(
                             &history,
                             counters(op),
                         )?;
+                        if let Some(p) = prof {
+                            p.restart_reset();
+                        }
+                        flops_at_restart = flops;
                         continue;
                     }
                     stats.flops = flops;
                 }
                 guard.finish(&mut stats, counters(op));
-                charge_flops(prof, n, ntiles, flops);
+                charge_flops(prof, n, ntiles, flops - flops_at_restart);
                 return Ok(stats);
             }
             Err(int) => {
                 guard.absorb(int, &history, counters(op))?;
+                if let Some(p) = prof {
+                    p.restart_reset();
+                }
+                flops_at_restart = flops;
             }
         }
     }
@@ -612,6 +643,9 @@ fn bicgstab_attempt<R: Real, A: FusedSolvable<R>>(
 
     while history.len() < maxiter && rr > limit {
         let iteration = history.len();
+        if let Some(p) = prof {
+            p.set_iter(iteration);
+        }
         op.fault_hook(iteration)
             .map_err(|err| Interrupt::Comm { err, iteration })?;
         let rho_c = rho;

@@ -29,6 +29,7 @@
 
 use crate::algebra::Real;
 use crate::coordinator::operator::{FusedSolvable, LinearOperator};
+use crate::coordinator::profiler::Profiler;
 use crate::coordinator::Team;
 use crate::dslash::flops as fl;
 use crate::field::FermionField;
@@ -169,15 +170,64 @@ where
     Hi: LinearOperator<f64>,
     Lo: LinearOperator<f32> + FusedSolvable<f32>,
 {
+    mixed_refinement_team_profiled(
+        outer,
+        inner,
+        x,
+        b,
+        tol,
+        max_outer,
+        inner_tol,
+        inner_maxiter,
+        alg,
+        team,
+        None,
+    )
+}
+
+/// [`mixed_refinement_team`] with optional per-phase profiling and span
+/// tracing of the inner fused solves (where essentially all the work
+/// happens). The instrumentation never feeds back into the arithmetic:
+/// histories are bitwise identical with `prof` `Some` or `None`.
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_refinement_team_profiled<Hi, Lo>(
+    outer: &mut Hi,
+    inner: &mut Lo,
+    x: &mut FermionField<f64>,
+    b: &FermionField<f64>,
+    tol: f64,
+    max_outer: usize,
+    inner_tol: f64,
+    inner_maxiter: usize,
+    alg: InnerAlgorithm,
+    team: &mut Team,
+    prof: Option<&Profiler>,
+) -> MixedStats
+where
+    Hi: LinearOperator<f64>,
+    Lo: LinearOperator<f32> + FusedSolvable<f32>,
+{
     let health = HealthConfig::default();
     refine(outer, inner, x, b, tol, max_outer, &health, move |op, x32, b32| {
         match alg {
-            InnerAlgorithm::Cg => {
-                fused::cg(op, &mut *team, x32, b32, inner_tol, inner_maxiter)
-            }
-            InnerAlgorithm::BiCgStab => {
-                fused::bicgstab(op, &mut *team, x32, b32, inner_tol, inner_maxiter)
-            }
+            InnerAlgorithm::Cg => fused::cg_profiled(
+                op,
+                &mut *team,
+                x32,
+                b32,
+                inner_tol,
+                inner_maxiter,
+                prof,
+            ),
+            InnerAlgorithm::BiCgStab => fused::bicgstab_profiled(
+                op,
+                &mut *team,
+                x32,
+                b32,
+                inner_tol,
+                inner_maxiter,
+                prof,
+            ),
         }
     })
     .unwrap_or_else(err_to_mixed)

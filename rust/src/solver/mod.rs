@@ -38,7 +38,9 @@ pub mod residual;
 pub use bicgstab::{bicgstab, bicgstab_guarded};
 pub use block::{
     block_bicgstab, block_bicgstab_generic, block_bicgstab_generic_guarded,
-    block_cg, block_cg_generic, block_cg_generic_guarded, BlockSolveStats,
+    block_bicgstab_generic_guarded_profiled, block_bicgstab_profiled, block_cg,
+    block_cg_generic, block_cg_generic_guarded,
+    block_cg_generic_guarded_profiled, block_cg_profiled, BlockSolveStats,
     RhsStats,
 };
 pub use cg::{cg, cg_guarded};
@@ -48,7 +50,7 @@ pub use health::{
 };
 pub use mixed::{
     mixed_refinement, mixed_refinement_guarded, mixed_refinement_team,
-    InnerAlgorithm, MixedStats,
+    mixed_refinement_team_profiled, InnerAlgorithm, MixedStats,
 };
 
 /// Convergence record of one solve.

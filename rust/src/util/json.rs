@@ -1,6 +1,11 @@
 //! Minimal JSON parser (the `serde_json` substrate) — enough for
 //! `artifacts/manifest.json`: objects, arrays, strings (with basic
-//! escapes), numbers, booleans, null.
+//! escapes), numbers, booleans, null — plus the streaming [`JsonWriter`]
+//! every machine-readable artifact (profile.json, trace.json,
+//! metrics.json, the `recovery:`/`slowdowns:` CLI lines, solver-bench
+//! report, tune cache) is emitted through, so artifacts diff cleanly
+//! run-to-run: keys in the order the caller writes them, floats in the
+//! repo-wide [`fnum`] convention.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -251,6 +256,145 @@ impl<'a> Parser<'a> {
     }
 }
 
+/// The repo-wide float convention for machine-readable artifacts
+/// (established by the tune cache): deterministic, round-trippable
+/// `{:.9e}`. Never call with non-finite values — NaN/inf are not JSON.
+pub fn fnum(v: f64) -> String {
+    format!("{v:.9e}")
+}
+
+/// Streaming JSON writer: compact output (no whitespace), automatic
+/// comma placement, escaped strings. The caller controls key order, so
+/// the same sequence of calls always produces the same bytes.
+///
+/// ```text
+/// let mut w = JsonWriter::new();
+/// w.obj_begin();
+/// w.key("converged"); w.boolean(true);
+/// w.key("rr"); w.num(1.5e-9);
+/// w.obj_end();
+/// let text = w.finish();
+/// ```
+#[derive(Debug, Default)]
+pub struct JsonWriter {
+    out: String,
+    /// one entry per open container: whether it already holds an element
+    stack: Vec<bool>,
+    /// a key was just written; the next value must not emit a comma
+    pending_key: bool,
+}
+
+impl JsonWriter {
+    pub fn new() -> JsonWriter {
+        JsonWriter::default()
+    }
+
+    /// Comma bookkeeping before an element (value or container start).
+    fn sep(&mut self) {
+        if self.pending_key {
+            self.pending_key = false;
+            return;
+        }
+        if let Some(has) = self.stack.last_mut() {
+            if *has {
+                self.out.push(',');
+            }
+            *has = true;
+        }
+    }
+
+    pub fn obj_begin(&mut self) {
+        self.sep();
+        self.out.push('{');
+        self.stack.push(false);
+    }
+
+    pub fn obj_end(&mut self) {
+        self.stack.pop();
+        self.out.push('}');
+    }
+
+    pub fn arr_begin(&mut self) {
+        self.sep();
+        self.out.push('[');
+        self.stack.push(false);
+    }
+
+    pub fn arr_end(&mut self) {
+        self.stack.pop();
+        self.out.push(']');
+    }
+
+    pub fn key(&mut self, k: &str) {
+        if let Some(has) = self.stack.last_mut() {
+            if *has {
+                self.out.push(',');
+            }
+            *has = true;
+        }
+        self.out.push('"');
+        escape_into(&mut self.out, k);
+        self.out.push_str("\":");
+        self.pending_key = true;
+    }
+
+    pub fn str_val(&mut self, s: &str) {
+        self.sep();
+        self.out.push('"');
+        escape_into(&mut self.out, s);
+        self.out.push('"');
+    }
+
+    /// A float in the [`fnum`] convention.
+    pub fn num(&mut self, v: f64) {
+        self.sep();
+        self.out.push_str(&fnum(v));
+    }
+
+    pub fn uint(&mut self, v: u64) {
+        self.sep();
+        self.out.push_str(&v.to_string());
+    }
+
+    pub fn int(&mut self, v: i64) {
+        self.sep();
+        self.out.push_str(&v.to_string());
+    }
+
+    pub fn boolean(&mut self, v: bool) {
+        self.sep();
+        self.out.push_str(if v { "true" } else { "false" });
+    }
+
+    /// A pre-formatted JSON token (e.g. a fixed-decimal float where the
+    /// `fnum` convention is too wide). The caller guarantees validity.
+    pub fn raw(&mut self, token: &str) {
+        self.sep();
+        self.out.push_str(token);
+    }
+
+    pub fn finish(self) -> String {
+        debug_assert!(self.stack.is_empty(), "unclosed JSON container");
+        self.out
+    }
+}
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -316,5 +460,50 @@ mod tests {
         assert_eq!(a[0].as_f64(), Some(-1.5));
         assert_eq!(a[1].as_f64(), Some(2000.0));
         assert_eq!(a[2].as_f64(), Some(-0.04));
+    }
+
+    #[test]
+    fn writer_round_trips_through_parser() {
+        let mut w = JsonWriter::new();
+        w.obj_begin();
+        w.key("converged");
+        w.boolean(true);
+        w.key("rr");
+        w.num(1.5e-9);
+        w.key("name");
+        w.str_val("a\"b\\c\nd");
+        w.key("list");
+        w.arr_begin();
+        w.uint(1);
+        w.uint(2);
+        w.num(0.0);
+        w.arr_end();
+        w.key("nested");
+        w.obj_begin();
+        w.obj_end();
+        w.key("neg");
+        w.int(-3);
+        w.obj_end();
+        let text = w.finish();
+        let j = Json::parse(&text).unwrap();
+        assert_eq!(j.get("converged").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("rr").unwrap().as_f64(), Some(1.5e-9));
+        assert_eq!(j.get("name").unwrap().as_str(), Some("a\"b\\c\nd"));
+        assert_eq!(j.get("list").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("neg").unwrap().as_f64(), Some(-3.0));
+        // compact, deterministic bytes: no spaces after separators
+        assert!(text.starts_with("{\"converged\":true,\"rr\":"), "{text}");
+    }
+
+    #[test]
+    fn writer_empty_containers_and_fnum() {
+        let mut w = JsonWriter::new();
+        w.arr_begin();
+        w.arr_end();
+        assert_eq!(w.finish(), "[]");
+        assert_eq!(fnum(0.0), "0.000000000e0");
+        assert_eq!(fnum(1.5e-9), "1.500000000e-9");
+        // the convention is itself valid JSON
+        assert_eq!(Json::parse(&fnum(0.0)).unwrap().as_f64(), Some(0.0));
     }
 }

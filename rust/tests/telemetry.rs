@@ -1,0 +1,311 @@
+//! Telemetry integration tests: the span tracer attached to real solves.
+//!
+//! The contract under test is two-sided. Disabled telemetry must be a
+//! bitwise no-op — every solver family produces residual histories
+//! identical to its untraced run, because the tracer only ever brackets
+//! existing phase scopes with clock reads. Enabled telemetry must
+//! actually observe the run: per-rank×thread spans for the solver
+//! phases and transport events, a Perfetto-loadable Chrome trace, and a
+//! slowdown detector that pins an injected stall to the iteration it
+//! fired at.
+
+use std::sync::Arc;
+
+use lqcd::comm::decompose::{extract_fermion, extract_gauge};
+use lqcd::comm::{run_world_cfg, FaultPlan, WorldOpts};
+use lqcd::coordinator::operator::{
+    DistMultiMeo, MultiNativeMeo, NativeMdagM, NativeMeo,
+};
+use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use lqcd::field::{FermionField, GaugeField, MultiFermionField};
+use lqcd::lattice::{Geometry, LatticeDims, ProcGrid, Tiling};
+use lqcd::perf::{detect_slowdowns, SlowdownConfig, TraceData, Tracer};
+use lqcd::solver::{self, HealthConfig, InnerAlgorithm};
+use lqcd::util::json::Json;
+use lqcd::util::rng::Rng;
+
+const KAPPA: f32 = 0.12;
+const TOL: f64 = 1e-4;
+const MAXITER: usize = 40;
+const THREADS: usize = 2;
+
+fn single_rank() -> (Geometry, GaugeField, FermionField) {
+    let dims = LatticeDims::new(8, 4, 4, 4).unwrap();
+    let geom = Geometry::single_rank(dims, Tiling::new(2, 2).unwrap()).unwrap();
+    let mut rng = Rng::seeded(37);
+    let u: GaugeField = GaugeField::random(&geom, &mut rng);
+    let b: FermionField = FermionField::gaussian(&geom, &mut rng);
+    (geom, u, b)
+}
+
+/// Traced profiler for `THREADS` workers on rank 0, plus its tracer.
+fn traced_profiler() -> (Arc<Tracer>, Profiler) {
+    let tracer = Arc::new(Tracer::new(THREADS, 65_536, 0));
+    let prof = Profiler::with_tracer(THREADS, tracer.clone());
+    (tracer, prof)
+}
+
+/// Fused single-RHS BiCGStab: history with `prof` attached.
+fn fused_bicgstab_history(prof: Option<&Profiler>) -> Vec<f64> {
+    let (geom, u, b) = single_rank();
+    let mut team = Team::new(THREADS, BarrierKind::Sleep);
+    let mut op = NativeMeo::new(&geom, u, KAPPA);
+    let mut x = FermionField::zeros(&geom);
+    solver::fused::bicgstab_profiled(&mut op, &mut team, &mut x, &b, TOL, MAXITER, prof)
+        .history
+}
+
+/// Fused single-RHS CGNR on the normal operator.
+fn fused_cg_history(prof: Option<&Profiler>) -> Vec<f64> {
+    let (geom, u, b) = single_rank();
+    let mut team = Team::new(THREADS, BarrierKind::Sleep);
+    let mut op = NativeMdagM::new(&geom, u, KAPPA);
+    let mut bp = b.clone();
+    bp.gamma5();
+    let mut mbp = FermionField::zeros(&geom);
+    op.meo().apply(&mut mbp, &bp);
+    mbp.gamma5();
+    let mut x = FermionField::zeros(&geom);
+    solver::fused::cg_profiled(&mut op, &mut team, &mut x, &mbp, TOL, MAXITER, prof)
+        .history
+}
+
+/// Native block BiCGStab (nrhs = 2): per-RHS histories.
+fn block_bicgstab_histories(prof: Option<&Profiler>) -> Vec<Vec<f64>> {
+    let (geom, u, b0) = single_rank();
+    let mut rng = Rng::seeded(38);
+    let b1: FermionField = FermionField::gaussian(&geom, &mut rng);
+    let b = MultiFermionField::from_rhs(&[b0, b1]);
+    let mut team = Team::new(THREADS, BarrierKind::Sleep);
+    let mut op = MultiNativeMeo::new(&geom, u, KAPPA, 2);
+    let mut x = MultiFermionField::<f32>::zeros(&geom, 2);
+    let stats =
+        solver::block_bicgstab_profiled(&mut op, &mut team, &mut x, &b, TOL, MAXITER, prof);
+    stats.per_rhs.into_iter().map(|s| s.history).collect()
+}
+
+/// Mixed-precision refinement (f64 outer, f32 inner CG).
+fn mixed_history(prof: Option<&Profiler>) -> Vec<f64> {
+    let dims = LatticeDims::new(8, 4, 4, 4).unwrap();
+    let geom = Geometry::single_rank(dims, Tiling::new(2, 2).unwrap()).unwrap();
+    let mut rng = Rng::seeded(37);
+    let u: GaugeField<f64> = GaugeField::random(&geom, &mut rng);
+    let b: FermionField<f64> = FermionField::gaussian(&geom, &mut rng);
+    let u32f = u.to_precision::<f32>();
+    let mut outer = NativeMdagM::new(&geom, u, KAPPA as f64);
+    let mut inner = NativeMdagM::new(&geom, u32f, KAPPA);
+    let mut bp = b.clone();
+    bp.gamma5();
+    let mut mbp = FermionField::zeros(&geom);
+    outer.meo().apply(&mut mbp, &bp);
+    mbp.gamma5();
+    let mut team = Team::new(THREADS, BarrierKind::Sleep);
+    let mut x = FermionField::<f64>::zeros(&geom);
+    solver::mixed_refinement_team_profiled(
+        &mut outer,
+        &mut inner,
+        &mut x,
+        &mbp,
+        1e-8,
+        20,
+        1e-4,
+        MAXITER,
+        InnerAlgorithm::Cg,
+        &mut team,
+        prof,
+    )
+    .history
+}
+
+/// Disabled telemetry is a bitwise no-op on every single-rank solver
+/// family: the traced run's residual history equals the untraced run's
+/// exactly, and the traced run really did record spans.
+#[test]
+fn tracing_is_bitwise_noop_single_rank_families() {
+    // fused BiCGStab
+    let base = fused_bicgstab_history(None);
+    let (tracer, prof) = traced_profiler();
+    let traced = fused_bicgstab_history(Some(&prof));
+    assert!(!base.is_empty());
+    assert_eq!(base, traced, "fused bicgstab history diverged under tracing");
+    assert!(!tracer.drain().spans.is_empty(), "fused bicgstab recorded no spans");
+
+    // fused CGNR
+    let base = fused_cg_history(None);
+    let (tracer, prof) = traced_profiler();
+    let traced = fused_cg_history(Some(&prof));
+    assert!(!base.is_empty());
+    assert_eq!(base, traced, "fused cg history diverged under tracing");
+    assert!(!tracer.drain().spans.is_empty(), "fused cg recorded no spans");
+
+    // native block BiCGStab
+    let base = block_bicgstab_histories(None);
+    let (tracer, prof) = traced_profiler();
+    let traced = block_bicgstab_histories(Some(&prof));
+    for (r, (b, t)) in base.iter().zip(&traced).enumerate() {
+        assert!(!b.is_empty());
+        assert_eq!(b, t, "block bicgstab rhs {r} history diverged under tracing");
+    }
+    assert!(!tracer.drain().spans.is_empty(), "block solver recorded no spans");
+
+    // mixed refinement
+    let base = mixed_history(None);
+    let (tracer, prof) = traced_profiler();
+    let traced = mixed_history(Some(&prof));
+    assert!(!base.is_empty());
+    assert_eq!(base, traced, "mixed history diverged under tracing");
+    assert!(!tracer.drain().spans.is_empty(), "mixed solve recorded no spans");
+}
+
+/// One traced 2-rank distributed guarded solve; returns per-rank
+/// (per-RHS histories, drained trace).
+fn traced_distributed(
+    spec: &str,
+    tol: f64,
+    maxiter: usize,
+) -> Vec<(Vec<Vec<f64>>, TraceData)> {
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(91);
+    let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+    let bs_global: Vec<FermionField> =
+        (0..2).map(|_| FermionField::gaussian(&ggeom, &mut rng)).collect();
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let opts = WorldOpts {
+        timeout_ms: 30_000,
+        max_retries: 3,
+        faults: FaultPlan::parse(spec).unwrap(),
+    };
+    run_world_cfg(grid.size(), opts, |rank, comm| {
+        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+        let u = extract_gauge(&u_global, &lgeom);
+        let bs: Vec<FermionField> = bs_global
+            .iter()
+            .map(|b| extract_fermion(b, &ggeom, &lgeom))
+            .collect();
+        let b = MultiFermionField::from_rhs(&bs);
+        let dist = DistHopping::new(&lgeom, true, 1, Eo2Schedule::Uniform);
+        let mut team = Team::new(1, BarrierKind::Sleep);
+        let tracer = Arc::new(Tracer::new(1, 65_536, rank));
+        let prof = Profiler::with_tracer(1, tracer.clone());
+        comm.set_tracer(tracer.clone());
+        let mut x = MultiFermionField::<f32>::zeros(&lgeom, 2);
+        let mut op =
+            DistMultiMeo::new(&lgeom, &dist, &u, KAPPA, 2, comm, &prof).unwrap();
+        let stats = solver::block_bicgstab_generic_guarded_profiled(
+            &mut op,
+            &mut team,
+            &mut x,
+            &b,
+            tol,
+            maxiter,
+            &HealthConfig::default(),
+            Some(&prof),
+        )
+        .unwrap_or_else(|e| panic!("rank {rank}: {e}"));
+        let histories = stats.per_rhs.iter().map(|s| s.history.clone()).collect();
+        (histories, tracer.drain())
+    })
+}
+
+/// Tracing the distributed solve (operator phases, transport events AND
+/// the in-solver BLAS sweeps) must not perturb the numerics, and the
+/// merged world trace must carry spans from every rank.
+#[test]
+fn traced_distributed_matches_untraced_and_covers_ranks() {
+    let base = traced_distributed("", TOL, MAXITER);
+    // untraced reference via the plain guarded entry point
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(91);
+    let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+    let bs_global: Vec<FermionField> =
+        (0..2).map(|_| FermionField::gaussian(&ggeom, &mut rng)).collect();
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let untraced = run_world_cfg(grid.size(), WorldOpts::default(), |rank, comm| {
+        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+        let u = extract_gauge(&u_global, &lgeom);
+        let bs: Vec<FermionField> = bs_global
+            .iter()
+            .map(|b| extract_fermion(b, &ggeom, &lgeom))
+            .collect();
+        let b = MultiFermionField::from_rhs(&bs);
+        let dist = DistHopping::new(&lgeom, true, 1, Eo2Schedule::Uniform);
+        let mut team = Team::new(1, BarrierKind::Sleep);
+        let prof = Profiler::new(1);
+        let mut x = MultiFermionField::<f32>::zeros(&lgeom, 2);
+        let mut op =
+            DistMultiMeo::new(&lgeom, &dist, &u, KAPPA, 2, comm, &prof).unwrap();
+        let stats = solver::block_bicgstab_generic_guarded(
+            &mut op, &mut team, &mut x, &b, TOL, MAXITER,
+            &HealthConfig::default(),
+        )
+        .unwrap_or_else(|e| panic!("rank {rank}: {e}"));
+        stats.per_rhs.iter().map(|s| s.history.clone()).collect::<Vec<_>>()
+    });
+    for (rank, ((traced, _), plain)) in base.iter().zip(&untraced).enumerate() {
+        for (r, (t, p)) in traced.iter().zip(plain).enumerate() {
+            assert!(!p.is_empty());
+            assert_eq!(t, p, "rank {rank} rhs {r}: tracing perturbed the solve");
+        }
+    }
+    let data = TraceData::merge(base.into_iter().map(|(_, t)| t).collect());
+    assert_eq!(data.dropped, 0, "rings overflowed on a smoke-sized solve");
+    for rank in 0..2u32 {
+        assert!(
+            data.spans.iter().any(|s| s.rank == rank),
+            "no spans from rank {rank}"
+        );
+    }
+    // operator phases and transport sends are both on the trace
+    for code in [0u8, 1, 2, 3, 16] {
+        assert!(
+            data.spans.iter().any(|s| s.code == code),
+            "span code {code} missing from the world trace"
+        );
+    }
+    // the Chrome trace is well-formed JSON with one event per span
+    let doc = Json::parse(&data.chrome_trace_json()).expect("trace.json parses");
+    let events = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .expect("traceEvents array");
+    assert_eq!(events.len(), data.spans.len());
+    let first = &events[0];
+    for key in ["name", "ph", "ts", "dur", "pid", "tid"] {
+        assert!(first.get(key).is_some(), "trace event missing {key:?}");
+    }
+}
+
+/// An injected rank stall must surface as a flagged comm-wait/barrier
+/// outlier at the iteration the stall fired — the waiting peer sees a
+/// 60 ms spike against a microsecond-scale trailing window.
+#[test]
+fn injected_stall_flagged_at_correct_iteration() {
+    // tol below the f32 floor + hard maxiter = exactly 20 iterations,
+    // so the stall at iteration 12 always fires and the detector has a
+    // full trailing window (8) of clean samples in front of it
+    let results = traced_distributed("stall:rank=1,iter=12,ms=60", 1e-12, 20);
+    let data = TraceData::merge(results.into_iter().map(|(_, t)| t).collect());
+    let slow = detect_slowdowns(&data.spans, &SlowdownConfig::default());
+    assert!(
+        slow.iter().any(|s| s.iter == 12 && (s.code == 2 || s.code == 4)),
+        "stall at iteration 12 not flagged; flagged = {:?}",
+        slow.iter().map(|s| (s.rank, s.code, s.iter)).collect::<Vec<_>>()
+    );
+    let hit = slow
+        .iter()
+        .find(|s| s.iter == 12 && (s.code == 2 || s.code == 4))
+        .unwrap();
+    assert!(
+        hit.seconds > 0.04,
+        "flagged outlier should carry the ~60 ms stall, got {}s",
+        hit.seconds
+    );
+    assert!(
+        hit.seconds > hit.median * SlowdownConfig::default().factor,
+        "flagged sample does not clear the median guard"
+    );
+}
