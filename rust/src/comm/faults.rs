@@ -162,6 +162,35 @@ pub enum IterAction {
 #[derive(Clone, Debug, Default)]
 pub struct FaultState {
     counters: Vec<u64>,
+    /// `(rule index, tag, 1-based matching-send hit)` for every trigger
+    /// that actually landed in its firing window — the replay tests
+    /// compare this log across a checkpoint/restart boundary.
+    fired: Vec<(usize, u64, u64)>,
+}
+
+impl FaultState {
+    /// The per-rule matching-send cursors. Checkpointing these (and
+    /// restoring via [`FaultState::restore_cursors`]) is what lets a
+    /// resumed solve fire the *remaining* triggers of a seeded plan at
+    /// the same `(rank, tag, sequence)` points as the uninterrupted run.
+    pub fn cursors(&self) -> Vec<u64> {
+        self.counters.clone()
+    }
+
+    /// Restore cursors saved by [`FaultState::cursors`]. Extra or
+    /// missing entries (plan changed between runs) are ignored
+    /// positionally rather than erroring — the plan text is the
+    /// authority on rule count.
+    pub fn restore_cursors(&mut self, saved: &[u64]) {
+        for (c, &s) in self.counters.iter_mut().zip(saved) {
+            *c = s;
+        }
+    }
+
+    /// Triggers that fired so far, in order.
+    pub fn fired(&self) -> &[(usize, u64, u64)] {
+        &self.fired
+    }
 }
 
 /// A complete, reproducible fault schedule.
@@ -265,7 +294,24 @@ impl FaultPlan {
 
     /// Fresh match-counter state for one communicator.
     pub fn new_state(&self) -> FaultState {
-        FaultState { counters: vec![0; self.rules.len()] }
+        FaultState { counters: vec![0; self.rules.len()], fired: Vec::new() }
+    }
+
+    /// The same plan with every `kill` rule defused (its trigger
+    /// iteration pushed past any reachable solve). A resume relaunch
+    /// uses this: the kill already did its damage in the previous
+    /// incarnation, and replaying it would just murder the world again
+    /// at the same iteration. Rules are defused in place rather than
+    /// removed so rule indices — and therefore checkpointed fault
+    /// cursors — stay aligned.
+    pub fn without_kills(&self) -> FaultPlan {
+        let mut plan = self.clone();
+        for r in &mut plan.rules {
+            if r.kind == FaultKind::Kill {
+                r.iter = usize::MAX;
+            }
+        }
+        plan
     }
 
     /// Decide the fate of one send. `from` is the sending rank (the
@@ -292,6 +338,9 @@ impl FaultPlan {
             }
             let hit = state.counters[i] + 1; // 1-based matching-send index
             state.counters[i] = hit;
+            if hit >= rule.nth && hit < rule.nth + rule.count {
+                state.fired.push((i, tag, hit));
+            }
             if action == MessageAction::Deliver
                 && hit >= rule.nth
                 && hit < rule.nth + rule.count

@@ -44,6 +44,7 @@ use std::time::{Duration, Instant};
 use super::faults::{FaultPlan, FaultState, IterAction, MessageAction};
 use crate::perf::telemetry::{
     Tracer, EV_CORRUPT, EV_DELAY, EV_DUPLICATE, EV_RETRANSMIT, EV_SEND, EV_TIMEOUT,
+    EV_ZEROFILL,
 };
 
 /// A wire buffer: halo payloads travel at the precision of the field
@@ -137,6 +138,10 @@ pub struct CommStats {
     /// simulated exponential-backoff milliseconds accounted (not slept)
     /// while waiting on retransmissions
     pub backoff_ms: u64,
+    /// halo buffers `recv_or_zero` had to zero-fill after a failed recv
+    /// — every one of these means a sweep ran on fabricated data, so
+    /// the count is surfaced through `SolveStats`/`BlockSolveStats`
+    pub zero_fills: u64,
 }
 
 /// Scalars that can travel through the simulated-MPI world. Implemented
@@ -646,10 +651,32 @@ impl Comm {
     /// health check surfaces it; zero-filling lets a faulted rank finish
     /// the kernel sweep in flight instead of tearing down mid-iteration
     /// (which would leave its peers hanging until their own deadlines).
+    /// Every zero-fill is counted (`CommStats::zero_fills`, plus an
+    /// `EV_ZEROFILL` telemetry event), and the poison slot is guaranteed
+    /// non-empty afterwards: with no active fault plan a zero-filled
+    /// halo means real data loss, and the solve must end in a typed
+    /// error, never a silently wrong answer.
     pub fn recv_or_zero<S: CommScalar>(&mut self, from: usize, tag: u64, len: usize) -> Vec<S> {
         match self.recv(from, tag) {
             Ok(v) => v,
-            Err(_) => vec![S::ZERO; len],
+            Err(e) => {
+                self.stats.borrow_mut().zero_fills += 1;
+                self.ev(EV_ZEROFILL, (len * std::mem::size_of::<S>()) as u64);
+                let mut f = self.fault.borrow_mut();
+                if f.is_none() {
+                    *f = Some(CommError::Protocol(format!(
+                        "rank {}: halo from {from} tag {tag} zero-filled ({e})",
+                        self.rank
+                    )));
+                }
+                if self.plan.is_empty() {
+                    eprintln!(
+                        "comm: rank {} zero-filled halo from {from} tag {tag} with no active fault plan: {e}",
+                        self.rank
+                    );
+                }
+                vec![S::ZERO; len]
+            }
         }
     }
 
@@ -767,6 +794,25 @@ impl Comm {
     /// Snapshot of the recovery/diagnostic counters.
     pub fn stats(&self) -> CommStats {
         self.stats.borrow().clone()
+    }
+
+    /// Fault-plan matching-send cursors, for checkpointing: restoring
+    /// them into a relaunched world makes the remaining triggers of a
+    /// seeded plan fire at the same `(rank, tag, sequence)` points as
+    /// the uninterrupted run.
+    pub fn fault_cursors(&self) -> Vec<u64> {
+        self.fstate.borrow().cursors()
+    }
+
+    /// Restore cursors saved by [`Comm::fault_cursors`].
+    pub fn restore_fault_cursors(&self, saved: &[u64]) {
+        self.fstate.borrow_mut().restore_cursors(saved);
+    }
+
+    /// Fault triggers that fired on this communicator so far, in order
+    /// (`(rule index, tag, matching-send hit)`).
+    pub fn fault_fired(&self) -> Vec<(usize, u64, u64)> {
+        self.fstate.borrow().fired().to_vec()
     }
 
     /// Per-solver-iteration fault hook: applies rank-level injections
@@ -1355,13 +1401,14 @@ mod tests {
     fn recv_or_zero_degrades_and_records_fault() {
         let results = run_world_cfg(2, faulty("", 50), |rank, comm| {
             if rank == 0 {
-                (vec![], None)
+                (vec![], None, 0)
             } else {
                 let v: Vec<f64> = comm.recv_or_zero(0, 11, 4);
-                (v, comm.comm_fault())
+                (v, comm.comm_fault(), comm.stats().zero_fills)
             }
         });
         assert_eq!(results[1].0, vec![0.0; 4]);
         assert!(matches!(results[1].1, Some(CommError::Timeout { .. })));
+        assert_eq!(results[1].2, 1, "zero-fill must be counted");
     }
 }

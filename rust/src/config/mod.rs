@@ -11,6 +11,6 @@ mod run;
 
 pub use parser::{ConfigError, Document, Value};
 pub use run::{
-    GaugeConfig, LatticeConfig, ParallelConfig, RunConfig, SolverConfig,
-    TelemetryConfig, TuneConfig,
+    CheckpointConfig, GaugeConfig, LatticeConfig, ParallelConfig, RunConfig,
+    SolverConfig, TelemetryConfig, TuneConfig,
 };

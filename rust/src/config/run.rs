@@ -126,6 +126,29 @@ pub struct TelemetryConfig {
     pub slowdown_min_ms: f64,
 }
 
+/// `[checkpoint]`: deterministic solver checkpoint/restart (see
+/// `solver::checkpoint`). Disabled unless `dir` is set (or
+/// `lqcd solve --checkpoint-dir DIR` is given). Checkpointing never
+/// feeds back into the solver arithmetic: residual histories are
+/// bitwise identical with it on or off, and a resumed run reproduces
+/// the uninterrupted history bitwise from the checkpoint iteration on.
+#[derive(Clone, Debug)]
+pub struct CheckpointConfig {
+    /// checkpoint directory (`None` = checkpointing off)
+    pub dir: Option<PathBuf>,
+    /// write a generation every N solver iterations (0 = never by
+    /// iteration count)
+    pub every_iters: u64,
+    /// ...or every M wall-clock milliseconds (0 = never by clock;
+    /// ignored on multi-rank runs, where clocks may diverge)
+    pub every_ms: u64,
+    /// committed generations to keep per rank (older ones rotate out)
+    pub keep: usize,
+    /// mirror each committed generation into the buddy rank's memory
+    /// so a lost rank's state can be restored from its neighbor
+    pub buddy: bool,
+}
+
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub lattice: LatticeConfig,
@@ -135,6 +158,7 @@ pub struct RunConfig {
     pub tune: TuneConfig,
     pub comm: CommConfig,
     pub telemetry: TelemetryConfig,
+    pub checkpoint: CheckpointConfig,
     /// `faults.spec`: fault-injection schedule for the simulated
     /// transport (see `comm::faults` for the grammar). Empty = no
     /// faults; parse-validated at load, applied by `lqcd solve`.
@@ -192,6 +216,13 @@ impl Default for RunConfig {
                 slowdown_k: 6.0,
                 slowdown_factor: 3.0,
                 slowdown_min_ms: 2.0,
+            },
+            checkpoint: CheckpointConfig {
+                dir: None,
+                every_iters: 25,
+                every_ms: 0,
+                keep: 2,
+                buddy: true,
             },
             faults: String::new(),
             artifacts_dir: PathBuf::from("artifacts"),
@@ -609,6 +640,55 @@ impl RunConfig {
                     m
                 },
             },
+            checkpoint: CheckpointConfig {
+                dir: doc.get("checkpoint.dir").map(|_| {
+                    PathBuf::from(doc.str_or("checkpoint.dir", ""))
+                }),
+                every_iters: {
+                    let n = doc.int_or(
+                        "checkpoint.every_iters",
+                        defaults.checkpoint.every_iters as i64,
+                    );
+                    if n < 0 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "checkpoint.every_iters must be >= 0 (0 = off; got {n})"
+                            ),
+                        });
+                    }
+                    n as u64
+                },
+                every_ms: {
+                    let n = doc.int_or(
+                        "checkpoint.every_ms",
+                        defaults.checkpoint.every_ms as i64,
+                    );
+                    if n < 0 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!(
+                                "checkpoint.every_ms must be >= 0 (0 = off; got {n})"
+                            ),
+                        });
+                    }
+                    n as u64
+                },
+                keep: {
+                    let n = doc.int_or(
+                        "checkpoint.keep",
+                        defaults.checkpoint.keep as i64,
+                    );
+                    if n < 1 {
+                        return Err(ConfigError {
+                            line: 0,
+                            message: format!("checkpoint.keep must be >= 1 (got {n})"),
+                        });
+                    }
+                    n as usize
+                },
+                buddy: doc.bool_or("checkpoint.buddy", defaults.checkpoint.buddy),
+            },
             faults: {
                 let spec = doc.str_or("faults.spec", "");
                 // validate the schedule grammar at load so a typo fails
@@ -831,6 +911,35 @@ force_comm = true
         assert!(RunConfig::from_document(&doc).is_err(), "factor < 1 must fail");
         let doc = Document::parse("[telemetry]\nslowdown_min_ms = -1.0").unwrap();
         assert!(RunConfig::from_document(&doc).is_err(), "negative floor must fail");
+    }
+
+    #[test]
+    fn checkpoint_keys_parse_and_validate() {
+        let c = RunConfig::default();
+        assert_eq!(c.checkpoint.dir, None, "checkpointing is off by default");
+        assert_eq!(c.checkpoint.every_iters, 25);
+        assert_eq!(c.checkpoint.every_ms, 0);
+        assert_eq!(c.checkpoint.keep, 2);
+        assert!(c.checkpoint.buddy);
+
+        let doc = Document::parse(
+            "[checkpoint]\ndir = \"ckpt\"\nevery_iters = 10\nevery_ms = 5000\n\
+             keep = 3\nbuddy = false",
+        )
+        .unwrap();
+        let c = RunConfig::from_document(&doc).unwrap();
+        assert_eq!(c.checkpoint.dir, Some(PathBuf::from("ckpt")));
+        assert_eq!(c.checkpoint.every_iters, 10);
+        assert_eq!(c.checkpoint.every_ms, 5000);
+        assert_eq!(c.checkpoint.keep, 3);
+        assert!(!c.checkpoint.buddy);
+
+        let doc = Document::parse("[checkpoint]\nevery_iters = -1").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "negative cadence must fail");
+        let doc = Document::parse("[checkpoint]\nevery_ms = -1").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "negative clock must fail");
+        let doc = Document::parse("[checkpoint]\nkeep = 0").unwrap();
+        assert!(RunConfig::from_document(&doc).is_err(), "keep = 0 must fail");
     }
 
     #[test]

@@ -56,6 +56,39 @@ pub trait LinearOperator<R: Real = f32> {
     fn comm_counters(&self) -> (u64, u64) {
         (0, 0)
     }
+
+    /// Halo buffers the transport had to zero-fill after failed recvs
+    /// (`CommStats::zero_fills`); zero for single-rank operators.
+    fn comm_zero_fills(&self) -> u64 {
+        0
+    }
+
+    /// Fault-plan matching-send cursors of the underlying transport,
+    /// captured into checkpoints so a resumed solve replays the
+    /// remaining fault schedule faithfully. Empty for single-rank
+    /// operators.
+    fn fault_cursors(&self) -> Vec<u64> {
+        Vec::new()
+    }
+
+    /// Restore cursors saved by [`LinearOperator::fault_cursors`].
+    fn restore_fault_cursors(&mut self, _saved: &[u64]) {}
+
+    /// Phase 2 of the checkpoint commit: collective AND of "my
+    /// generation file is durably on disk". Identity for single-rank
+    /// operators; distributed operators reduce across ranks and report
+    /// `false` when the transport is poisoned, so no rank commits a
+    /// generation another rank lost.
+    fn ckpt_all_committed(&mut self, ok: bool) -> bool {
+        ok
+    }
+
+    /// Ring-exchange of checkpoint payloads for the buddy scheme: send
+    /// ours to rank+1, return rank-1's. `None` for single-rank
+    /// operators or when the transport is already poisoned.
+    fn ckpt_buddy_exchange(&mut self, _payload: &[f64], _gen: u64) -> Option<Vec<f64>> {
+        None
+    }
 }
 
 /// Native single-rank M-hat = 1 - kappa^2 H_eo H_oe (Eq. 4 LHS).
@@ -475,6 +508,33 @@ pub trait MultiOperator<R: Real> {
     /// transport; zeros for single-rank operators.
     fn comm_counters(&self) -> (u64, u64) {
         (0, 0)
+    }
+
+    /// Halo buffers the transport had to zero-fill after failed recvs
+    /// (`CommStats::zero_fills`); zero for single-rank operators.
+    fn comm_zero_fills(&self) -> u64 {
+        0
+    }
+
+    /// Fault-plan matching-send cursors (see
+    /// [`LinearOperator::fault_cursors`]).
+    fn fault_cursors(&self) -> Vec<u64> {
+        Vec::new()
+    }
+
+    /// Restore cursors saved by [`MultiOperator::fault_cursors`].
+    fn restore_fault_cursors(&mut self, _saved: &[u64]) {}
+
+    /// Phase 2 of the checkpoint commit (see
+    /// [`LinearOperator::ckpt_all_committed`]).
+    fn ckpt_all_committed(&mut self, ok: bool) -> bool {
+        ok
+    }
+
+    /// Buddy-copy ring exchange (see
+    /// [`LinearOperator::ckpt_buddy_exchange`]).
+    fn ckpt_buddy_exchange(&mut self, _payload: &[f64], _gen: u64) -> Option<Vec<f64>> {
+        None
     }
 }
 
@@ -930,6 +990,49 @@ impl<R: Real + CommScalar, U: LinkSource<R>> LinearOperator<R> for DistMeo<'_, R
         let st = self.comm.stats();
         (st.retransmits, st.timeouts)
     }
+
+    fn comm_zero_fills(&self) -> u64 {
+        self.comm.stats().zero_fills
+    }
+
+    fn fault_cursors(&self) -> Vec<u64> {
+        self.comm.fault_cursors()
+    }
+
+    fn restore_fault_cursors(&mut self, saved: &[u64]) {
+        self.comm.restore_fault_cursors(saved);
+    }
+
+    fn ckpt_all_committed(&mut self, ok: bool) -> bool {
+        ckpt_all_committed(self.comm, ok)
+    }
+
+    fn ckpt_buddy_exchange(&mut self, payload: &[f64], gen: u64) -> Option<Vec<f64>> {
+        ckpt_buddy_exchange(self.comm, payload, gen)
+    }
+}
+
+/// Phase 2 of the two-phase checkpoint commit: AND of `ok` across the
+/// world. A poisoned transport (dead peer, expired deadline) must veto
+/// the commit — `allreduce_any` degrades to its local argument once
+/// poisoned, which would otherwise read as "everyone is fine".
+fn ckpt_all_committed(comm: &mut Comm, ok: bool) -> bool {
+    let any_failed = comm.allreduce_any(!ok);
+    !any_failed && comm.comm_fault().is_none()
+}
+
+/// Buddy-copy ring exchange: checkpoint payloads ride the ordinary
+/// transport (tag namespace `1<<63 | generation`, disjoint from every
+/// halo/handshake tag) so they enjoy the same retransmit healing.
+fn ckpt_buddy_exchange(comm: &mut Comm, payload: &[f64], gen: u64) -> Option<Vec<f64>> {
+    if comm.nranks < 2 || comm.comm_fault().is_some() {
+        return None;
+    }
+    let to = (comm.rank + 1) % comm.nranks;
+    let from = (comm.rank + comm.nranks - 1) % comm.nranks;
+    let tag = (1u64 << 63) | gen;
+    comm.send(to, tag, payload.to_vec());
+    comm.recv::<f64>(from, tag).ok()
 }
 
 /// (rank, local tile) pairs covering the whole decomposed lattice, in
@@ -1124,6 +1227,26 @@ impl<R: Real + CommScalar, U: LinkSource<R>> MultiOperator<R> for DistMultiMeo<'
         let st = self.comm.stats();
         (st.retransmits, st.timeouts)
     }
+
+    fn comm_zero_fills(&self) -> u64 {
+        self.comm.stats().zero_fills
+    }
+
+    fn fault_cursors(&self) -> Vec<u64> {
+        self.comm.fault_cursors()
+    }
+
+    fn restore_fault_cursors(&mut self, saved: &[u64]) {
+        self.comm.restore_fault_cursors(saved);
+    }
+
+    fn ckpt_all_committed(&mut self, ok: bool) -> bool {
+        ckpt_all_committed(self.comm, ok)
+    }
+
+    fn ckpt_buddy_exchange(&mut self, payload: &[f64], gen: u64) -> Option<Vec<f64>> {
+        ckpt_buddy_exchange(self.comm, payload, gen)
+    }
 }
 
 /// Distributed multi-RHS normal operator M-hat^dag M-hat: four batched
@@ -1222,6 +1345,26 @@ impl<R: Real + CommScalar, U: LinkSource<R>> MultiOperator<R> for DistMultiMdagM
     fn comm_counters(&self) -> (u64, u64) {
         self.inner.comm_counters()
     }
+
+    fn comm_zero_fills(&self) -> u64 {
+        self.inner.comm_zero_fills()
+    }
+
+    fn fault_cursors(&self) -> Vec<u64> {
+        self.inner.fault_cursors()
+    }
+
+    fn restore_fault_cursors(&mut self, saved: &[u64]) {
+        self.inner.restore_fault_cursors(saved);
+    }
+
+    fn ckpt_all_committed(&mut self, ok: bool) -> bool {
+        ckpt_all_committed(self.inner.comm, ok)
+    }
+
+    fn ckpt_buddy_exchange(&mut self, payload: &[f64], gen: u64) -> Option<Vec<f64>> {
+        ckpt_buddy_exchange(self.inner.comm, payload, gen)
+    }
 }
 
 /// gamma5-wrapped normal operator over any M-hat-like operator: CGNR on
@@ -1274,5 +1417,25 @@ where
 
     fn comm_counters(&self) -> (u64, u64) {
         self.inner.comm_counters()
+    }
+
+    fn comm_zero_fills(&self) -> u64 {
+        self.inner.comm_zero_fills()
+    }
+
+    fn fault_cursors(&self) -> Vec<u64> {
+        self.inner.fault_cursors()
+    }
+
+    fn restore_fault_cursors(&mut self, saved: &[u64]) {
+        self.inner.restore_fault_cursors(saved);
+    }
+
+    fn ckpt_all_committed(&mut self, ok: bool) -> bool {
+        self.inner.ckpt_all_committed(ok)
+    }
+
+    fn ckpt_buddy_exchange(&mut self, payload: &[f64], gen: u64) -> Option<Vec<f64>> {
+        self.inner.ckpt_buddy_exchange(payload, gen)
     }
 }

@@ -30,10 +30,12 @@ pub enum Phase {
     /// time discarded by a health-guard restart (the failed attempt's
     /// phase buckets are folded here so post-restart bars stay clean)
     Restart = 6,
+    /// checkpoint writes (encode + fsync + commit collective)
+    Checkpoint = 7,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 7] = [
+    pub const ALL: [Phase; 8] = [
         Phase::Eo1,
         Phase::Bulk,
         Phase::CommWait,
@@ -41,6 +43,7 @@ impl Phase {
         Phase::Barrier,
         Phase::Blas,
         Phase::Restart,
+        Phase::Checkpoint,
     ];
 
     pub fn label(self) -> &'static str {
@@ -52,11 +55,12 @@ impl Phase {
             Phase::Barrier => "barrier",
             Phase::Blas => "blas",
             Phase::Restart => "restart",
+            Phase::Checkpoint => "checkpoint",
         }
     }
 }
 
-const NPHASE: usize = 7;
+const NPHASE: usize = 8;
 
 /// Lock-free per-thread x per-phase nanosecond accumulators, with an
 /// optional span tracer riding every [`Profiler::scope`] call: when a

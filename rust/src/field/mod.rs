@@ -9,6 +9,7 @@ pub mod compressed;
 mod fermion;
 mod gauge;
 pub mod io;
+pub mod snapshot;
 
 pub use block::MultiFermionField;
 pub use compressed::{CompressedGaugeField, CT2};

@@ -1,0 +1,180 @@
+//! Bitwise field snapshots for the checkpoint/restart layer.
+//!
+//! A [`FieldSnap`] captures one named fermion (or block fermion) field as
+//! f64 values plus a dtype tag. The f32 -> f64 -> f32 round trip is
+//! value-exact for every finite float, so restoring a snapshot at the
+//! field's original precision reproduces the original bit patterns —
+//! which is what makes the solver resume contract of
+//! [`crate::solver::checkpoint`] (residual history bitwise identical
+//! from the checkpoint iteration onward) achievable at both precisions.
+//!
+//! [`gauge_hash`] fingerprints a gauge configuration's content (FNV-1a
+//! over the f64 bit patterns of every link element); the checkpoint
+//! header carries it so a resume against the wrong configuration is a
+//! structured error, never a silently wrong solve.
+
+use crate::algebra::Real;
+use crate::field::{FermionField, GaugeField, MultiFermionField};
+
+/// Dtype codes shared with the `field::io` LQCD0001 convention
+/// (0 = f32, 1 = f64).
+fn dtype_of<R: Real>() -> u32 {
+    match R::NAME {
+        "f64" => 1,
+        _ => 0,
+    }
+}
+
+/// One named field captured at an iteration boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FieldSnap {
+    pub name: String,
+    /// dtype code of the source field (0 = f32, 1 = f64)
+    pub dtype: u32,
+    /// the field values widened to f64 (loss-free for both precisions)
+    pub data: Vec<f64>,
+}
+
+impl FieldSnap {
+    /// Snapshot a raw value slice (the building block the field
+    /// wrappers share).
+    pub fn of_slice<R: Real>(name: &str, data: &[R]) -> FieldSnap {
+        FieldSnap {
+            name: name.to_string(),
+            dtype: dtype_of::<R>(),
+            data: data.iter().map(|v| v.to_f64()).collect(),
+        }
+    }
+
+    pub fn of_fermion<R: Real>(name: &str, f: &FermionField<R>) -> FieldSnap {
+        FieldSnap::of_slice(name, &f.data)
+    }
+
+    pub fn of_multi<R: Real>(name: &str, f: &MultiFermionField<R>) -> FieldSnap {
+        FieldSnap::of_slice(name, &f.data)
+    }
+
+    /// Restore into a raw value slice; the destination must already have
+    /// the snapshot's length and precision (a mismatch is a structured
+    /// error, never a cast).
+    pub fn restore_slice<R: Real>(&self, out: &mut [R]) -> Result<(), String> {
+        if self.dtype != dtype_of::<R>() {
+            return Err(format!(
+                "snapshot {:?} holds dtype {} but the solve runs at {}",
+                self.name,
+                if self.dtype == 1 { "f64" } else { "f32" },
+                R::NAME,
+            ));
+        }
+        if self.data.len() != out.len() {
+            return Err(format!(
+                "snapshot {:?} holds {} values, the field wants {}",
+                self.name,
+                self.data.len(),
+                out.len(),
+            ));
+        }
+        for (o, &v) in out.iter_mut().zip(&self.data) {
+            *o = R::from_f64(v);
+        }
+        Ok(())
+    }
+
+    pub fn restore_fermion<R: Real>(&self, f: &mut FermionField<R>) -> Result<(), String> {
+        self.restore_slice(&mut f.data)
+    }
+
+    pub fn restore_multi<R: Real>(&self, f: &mut MultiFermionField<R>) -> Result<(), String> {
+        self.restore_slice(&mut f.data)
+    }
+}
+
+/// FNV-1a content hash of a gauge configuration (dims folded in, every
+/// link element's f64 bit pattern eaten in storage order). Cheap, and
+/// any single changed link moves it; not cryptographic — it guards
+/// against resuming a solve on the wrong configuration, not tampering.
+pub fn gauge_hash<R: Real>(u: &GaugeField<R>) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |w: u64| {
+        h ^= w;
+        h = h.wrapping_mul(PRIME);
+    };
+    for dir in 0..4 {
+        for p in 0..2 {
+            let arr = &u.data[dir][p];
+            eat(arr.len() as u64 | ((dir as u64) << 32) | ((p as u64) << 40));
+            for v in arr {
+                eat(v.to_f64().to_bits());
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lattice::{Geometry, LatticeDims, Tiling};
+    use crate::util::rng::Rng;
+
+    fn geom() -> Geometry {
+        Geometry::single_rank(
+            LatticeDims::new(4, 4, 2, 2).unwrap(),
+            Tiling::new(2, 2).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fermion_roundtrip_is_bitwise_both_precisions() {
+        let g = geom();
+        let mut rng = Rng::seeded(3);
+        let f32f: FermionField<f32> = FermionField::gaussian(&g, &mut rng);
+        let snap = FieldSnap::of_fermion("x", &f32f);
+        let mut back: FermionField<f32> = FermionField::zeros(&g);
+        snap.restore_fermion(&mut back).unwrap();
+        let bits = |f: &FermionField<f32>| -> Vec<u32> {
+            f.data.iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(bits(&f32f), bits(&back));
+
+        let f64f: FermionField<f64> = FermionField::gaussian(&g, &mut rng);
+        let snap = FieldSnap::of_fermion("x", &f64f);
+        let mut back: FermionField<f64> = FermionField::zeros(&g);
+        snap.restore_fermion(&mut back).unwrap();
+        let bits64 = |f: &FermionField<f64>| -> Vec<u64> {
+            f.data.iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(bits64(&f64f), bits64(&back));
+    }
+
+    #[test]
+    fn restore_rejects_precision_and_length_mismatch() {
+        let g = geom();
+        let mut rng = Rng::seeded(4);
+        let f: FermionField<f32> = FermionField::gaussian(&g, &mut rng);
+        let snap = FieldSnap::of_fermion("r", &f);
+        let mut wrong: FermionField<f64> = FermionField::zeros(&g);
+        let e = snap.restore_fermion(&mut wrong).unwrap_err();
+        assert!(e.contains("f32") && e.contains("f64"), "{e}");
+        let mut short = [0.0f32; 3];
+        let e = snap.restore_slice(&mut short).unwrap_err();
+        assert!(e.contains("values"), "{e}");
+    }
+
+    #[test]
+    fn gauge_hash_moves_with_content() {
+        let g = geom();
+        let mut rng = Rng::seeded(5);
+        let u: GaugeField<f32> = GaugeField::random(&g, &mut rng);
+        let h1 = gauge_hash(&u);
+        assert_eq!(h1, gauge_hash(&u), "hash is deterministic");
+        let mut u2 = u.clone();
+        u2.data[1][0][0] += 1e-3;
+        assert_ne!(h1, gauge_hash(&u2), "one changed link moves the hash");
+        let unit: GaugeField<f32> = GaugeField::unit(&g);
+        assert_ne!(h1, gauge_hash(&unit));
+    }
+}

@@ -16,7 +16,9 @@ use std::sync::Arc;
 
 use lqcd::algebra::Real;
 use lqcd::comm::decompose::{extract_fermion, extract_gauge, insert_fermion};
-use lqcd::comm::{netmodel, run_world_cfg, CommScalar, FaultPlan, HaloPlans, WorldOpts};
+use lqcd::comm::{
+    netmodel, run_world_cfg, CommError, CommScalar, FaultPlan, HaloPlans, WorldOpts,
+};
 use lqcd::config::RunConfig;
 use lqcd::coordinator::operator::{
     DistMultiMdagM, DistMultiMeo, LinearOperator, MultiMdagM, MultiNativeMeo,
@@ -24,6 +26,7 @@ use lqcd::coordinator::operator::{
 };
 use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Report, Team};
 use lqcd::dslash::{Compression, Links};
+use lqcd::field::snapshot::gauge_hash;
 use lqcd::field::{FermionField, GaugeField, MultiFermionField};
 use lqcd::harness::{self, Opts};
 use lqcd::lattice::{Geometry, LatticeDims, Parity, ProcGrid, Tiling};
@@ -35,7 +38,10 @@ use lqcd::perf::{
     slowdown_summary, span_label, A64fx, AutoThreadBound, Metrics,
     SlowdownConfig, TraceData, Tracer,
 };
-use lqcd::solver::{self, HealthConfig, HealthEventKind, InnerAlgorithm, SolveErrorKind};
+use lqcd::solver::{
+    self, load_latest, restore_from_buddy, BuddyCopy, Checkpointer, CkptOpts,
+    HealthConfig, HealthEventKind, InnerAlgorithm, SolveErrorKind, SolverState,
+};
 use lqcd::util::cli;
 use lqcd::util::json::JsonWriter;
 use lqcd::util::rng::Rng;
@@ -45,7 +51,8 @@ const VALUE_OPTS: &[&str] = &[
     "algorithm", "artifacts", "seed", "precision", "inner-tol", "max-outer",
     "nrhs", "gauge-compression", "grid", "eo2-schedule", "eo2-granularity",
     "tune-cache", "budget-ms", "inject-faults", "comm-timeout-ms",
-    "comm-max-retries", "max-restarts", "trace",
+    "comm-max-retries", "max-restarts", "trace", "checkpoint-dir",
+    "checkpoint-every", "resume",
 ];
 
 fn main() -> ExitCode {
@@ -154,6 +161,16 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
         cfg.telemetry.enabled = true;
         cfg.telemetry.dir = Some(dir.into());
     }
+    if let Some(dir) = args.get("checkpoint-dir") {
+        cfg.checkpoint.dir = Some(dir.into());
+    }
+    cfg.checkpoint.every_iters =
+        args.get_parse("checkpoint-every", cfg.checkpoint.every_iters)?;
+    let resume: Option<std::path::PathBuf> = args.get("resume").map(Into::into);
+    if let Some(d) = &resume {
+        // --resume DIR implies reading and writing checkpoints there
+        cfg.checkpoint.dir.get_or_insert_with(|| d.clone());
+    }
     let profile = args.flag("profile");
     let use_pjrt = args.flag("pjrt") || cfg.solver.use_pjrt;
     let opts = Opts {
@@ -165,7 +182,7 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
 
     match cmd.as_str() {
         "info" => info(&cfg),
-        "solve" => solve(&cfg, use_pjrt, profile),
+        "solve" => solve(&cfg, use_pjrt, profile, resume.as_deref()),
         "tune" => tune(&cfg, opts.quick),
         "bench-table1" => {
             let (report, _) = harness::table1::run(opts);
@@ -462,6 +479,71 @@ fn make_profiler(
     }
 }
 
+/// Checkpoint sink for one rank when `[checkpoint] dir` (or
+/// `--checkpoint-dir` / `--resume`) is set; `None` keeps every solver
+/// on the uncheckpointed path.
+fn make_checkpointer(
+    cfg: &RunConfig,
+    rank: usize,
+    nranks: usize,
+    ghash: u64,
+) -> Result<Option<Checkpointer>, String> {
+    match &cfg.checkpoint.dir {
+        None => Ok(None),
+        Some(dir) => {
+            let opts = CkptOpts {
+                dir: dir.clone(),
+                every_iters: cfg.checkpoint.every_iters,
+                every_ms: cfg.checkpoint.every_ms,
+                keep: cfg.checkpoint.keep,
+                buddy: cfg.checkpoint.buddy,
+            };
+            Checkpointer::new(opts, rank, nranks, ghash)
+                .map(Some)
+                .map_err(|e| format!("checkpoint: {e}"))
+        }
+    }
+}
+
+/// Load the resume state for one rank (`--resume DIR`): the newest
+/// generation every rank committed, falling back to older generations
+/// when a file fails validation.
+fn load_resume(
+    dir: &std::path::Path,
+    rank: usize,
+    nranks: usize,
+    ghash: u64,
+) -> Result<SolverState, String> {
+    let (st, gen) =
+        load_latest(dir, rank, nranks, ghash).map_err(|e| format!("resume: {e}"))?;
+    println!(
+        "resume: rank {rank} restored generation {gen} (iteration {})",
+        st.iteration
+    );
+    Ok(st)
+}
+
+/// The machine-readable `checkpoint:` line the CI smoke greps.
+fn print_checkpoint_summary(generations: u64, restores: u64) {
+    let mut w = JsonWriter::new();
+    w.obj_begin();
+    w.key("generations");
+    w.uint(generations);
+    w.key("restores");
+    w.uint(restores);
+    w.obj_end();
+    println!("checkpoint: {}", w.finish());
+}
+
+/// Per-rank checkpoint outcome carried out of the distributed world
+/// closure: commit count, whether the rank resumed, and the in-memory
+/// buddy copy of the ring-neighbor's newest generation.
+struct CkptOutcome {
+    generations: u64,
+    restores: u64,
+    buddy: Option<BuddyCopy>,
+}
+
 fn slowdown_config(cfg: &RunConfig) -> SlowdownConfig {
     SlowdownConfig {
         window: cfg.telemetry.slowdown_window,
@@ -518,6 +600,7 @@ fn solve(
     cfg: &RunConfig,
     use_pjrt: bool,
     profile: bool,
+    resume: Option<&std::path::Path>,
 ) -> Result<(), Box<dyn std::error::Error>> {
     // every rejected flag combination is reported here, all at once —
     // the per-branch checks this replaces each only saw the first
@@ -530,20 +613,20 @@ fn solve(
     if nranks > 1 {
         // rank-decomposed path: grid × nrhs × compression compose
         return match cfg.solver.precision.as_str() {
-            "f64" => solve_distributed::<f64>(cfg, &knobs, profile),
-            _ => solve_distributed::<f32>(cfg, &knobs, profile),
+            "f64" => solve_distributed::<f64>(cfg, &knobs, profile, resume),
+            _ => solve_distributed::<f32>(cfg, &knobs, profile, resume),
         };
     }
     if cfg.solver.nrhs > 1 {
         return match cfg.solver.precision.as_str() {
-            "f64" => solve_block::<f64>(cfg, &knobs, profile),
-            _ => solve_block::<f32>(cfg, &knobs, profile),
+            "f64" => solve_block::<f64>(cfg, &knobs, profile, resume),
+            _ => solve_block::<f32>(cfg, &knobs, profile, resume),
         };
     }
     match cfg.solver.precision.as_str() {
-        "f64" => return solve_native::<f64>(cfg, &knobs, profile),
-        "mixed" => return solve_mixed(cfg, &knobs, profile),
-        _ if !use_pjrt => return solve_native::<f32>(cfg, &knobs, profile),
+        "f64" => return solve_native::<f64>(cfg, &knobs, profile, resume),
+        "mixed" => return solve_mixed(cfg, &knobs, profile, resume),
+        _ if !use_pjrt => return solve_native::<f32>(cfg, &knobs, profile, resume),
         _ => {}
     }
     if profile {
@@ -551,6 +634,9 @@ fn solve(
     }
     if cfg.telemetry.enabled {
         eprintln!("warning: --trace is not wired into the PJRT path; ignoring");
+    }
+    if cfg.checkpoint.dir.is_some() || resume.is_some() {
+        eprintln!("warning: checkpointing is not wired into the PJRT path; ignoring");
     }
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
@@ -595,6 +681,7 @@ fn solve_native<R: Real>(
     cfg: &RunConfig,
     knobs: &Knobs,
     profile: bool,
+    resume: Option<&std::path::Path>,
 ) -> Result<(), Box<dyn std::error::Error>> {
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
@@ -608,6 +695,7 @@ fn solve_native<R: Real>(
     );
     let u: GaugeField<R> = GaugeField::random(&geom, &mut rng);
     println!("plaquette = {:.6}", u.plaquette());
+    let ghash = gauge_hash(&u);
     let b: FermionField<R> = FermionField::gaussian(&geom, &mut rng);
     let kappa = R::from_f64(cfg.solver.kappa);
     let links = Links::from_gauge(u, cfg.gauge.compression);
@@ -621,12 +709,17 @@ fn solve_native<R: Real>(
         max_restarts: cfg.solver.max_restarts,
         ..Default::default()
     };
+    let mut ckpt = make_checkpointer(cfg, 0, 1, ghash)?;
+    let resume_state = match resume {
+        Some(dir) => Some(load_resume(dir, 0, 1, ghash)?),
+        None => None,
+    };
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let mut stats = if cfg.solver.algorithm == "bicgstab" {
         let mut op = NativeMeo::with_links(&geom, links, kappa);
         let mut x = FermionField::zeros(&geom);
-        let stats = solver::fused::bicgstab_guarded(
+        let stats = solver::fused::bicgstab_guarded_ckpt(
             &mut op,
             &mut team,
             &mut x,
@@ -635,6 +728,8 @@ fn solve_native<R: Real>(
             cfg.solver.maxiter,
             prof.as_ref(),
             &health,
+            ckpt.as_mut(),
+            resume_state.as_ref(),
         )
         .map_err(|e| format!("solve failed: {e}"))?;
         println!(
@@ -650,7 +745,7 @@ fn solve_native<R: Real>(
         op.meo().apply(&mut mbp, &bp);
         mbp.gamma5();
         let mut x = FermionField::zeros(&geom);
-        let stats = solver::fused::cg_guarded(
+        let stats = solver::fused::cg_guarded_ckpt(
             &mut op,
             &mut team,
             &mut x,
@@ -659,6 +754,8 @@ fn solve_native<R: Real>(
             cfg.solver.maxiter,
             prof.as_ref(),
             &health,
+            ckpt.as_mut(),
+            resume_state.as_ref(),
         )
         .map_err(|e| format!("solve failed: {e}"))?;
         println!(
@@ -682,6 +779,12 @@ fn solve_native<R: Real>(
         stats.sweeps_per_iter,
         stats.threads,
     );
+    if cfg.checkpoint.dir.is_some() {
+        print_checkpoint_summary(
+            ckpt.as_ref().map(|c| c.committed()).unwrap_or(0),
+            resume_state.is_some() as u64,
+        );
+    }
     if let (true, Some(p)) = (profile, &prof) {
         emit_profile(&p.snapshot(), &cfg.artifacts_dir)?;
     }
@@ -700,6 +803,7 @@ fn solve_block<R: Real>(
     cfg: &RunConfig,
     knobs: &Knobs,
     profile: bool,
+    resume: Option<&std::path::Path>,
 ) -> Result<(), Box<dyn std::error::Error>> {
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
@@ -715,6 +819,7 @@ fn solve_block<R: Real>(
     );
     let u: GaugeField<R> = GaugeField::random(&geom, &mut rng);
     println!("plaquette = {:.6}", u.plaquette());
+    let ghash = gauge_hash(&u);
     let sources: Vec<FermionField<R>> =
         (0..nrhs).map(|_| FermionField::gaussian(&geom, &mut rng)).collect();
     let kappa = R::from_f64(cfg.solver.kappa);
@@ -725,21 +830,49 @@ fn solve_block<R: Real>(
     let mut team = Team::new(threads, BarrierKind::Sleep);
     let tracer = make_tracer(cfg, threads, 0);
     let prof = make_profiler(profile, threads, &tracer);
+    let health = HealthConfig {
+        max_restarts: cfg.solver.max_restarts,
+        ..Default::default()
+    };
+    let mut ckpt = make_checkpointer(cfg, 0, 1, ghash)?;
+    let resume_state = match resume {
+        Some(dir) => Some(load_resume(dir, 0, 1, ghash)?),
+        None => None,
+    };
+    // the checkpoint hooks live in the generic guarded block solver;
+    // without them the fused batched pipeline keeps the hot path
+    let ckpt_on = ckpt.is_some() || resume_state.is_some();
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let (stats, resid) = if cfg.solver.algorithm == "bicgstab" {
         let b = MultiFermionField::from_rhs(&sources);
         let mut op = MultiNativeMeo::with_links(&geom, links.clone(), kappa, nrhs);
         let mut x = MultiFermionField::<R>::zeros(&geom, nrhs);
-        let stats = solver::block_bicgstab_profiled(
-            &mut op,
-            &mut team,
-            &mut x,
-            &b,
-            cfg.solver.tol,
-            cfg.solver.maxiter,
-            prof.as_ref(),
-        );
+        let stats = if ckpt_on {
+            solver::block_bicgstab_generic_guarded_ckpt(
+                &mut op,
+                &mut team,
+                &mut x,
+                &b,
+                cfg.solver.tol,
+                cfg.solver.maxiter,
+                &health,
+                prof.as_ref(),
+                ckpt.as_mut(),
+                resume_state.as_ref(),
+            )
+            .map_err(|e| format!("solve failed: {e}"))?
+        } else {
+            solver::block_bicgstab_profiled(
+                &mut op,
+                &mut team,
+                &mut x,
+                &b,
+                cfg.solver.tol,
+                cfg.solver.maxiter,
+                prof.as_ref(),
+            )
+        };
         // worst true per-RHS residual, via the single-RHS operator
         let mut meo = NativeMeo::with_links(&geom, links, kappa);
         let resid = worst_true_residual(&mut meo, &x, &sources);
@@ -761,15 +894,31 @@ fn solve_block<R: Real>(
             .collect();
         let b = MultiFermionField::from_rhs(&rhs);
         let mut x = MultiFermionField::<R>::zeros(&geom, nrhs);
-        let stats = solver::block_cg_profiled(
-            &mut op,
-            &mut team,
-            &mut x,
-            &b,
-            cfg.solver.tol,
-            cfg.solver.maxiter,
-            prof.as_ref(),
-        );
+        let stats = if ckpt_on {
+            solver::block_cg_generic_guarded_ckpt(
+                &mut op,
+                &mut team,
+                &mut x,
+                &b,
+                cfg.solver.tol,
+                cfg.solver.maxiter,
+                &health,
+                prof.as_ref(),
+                ckpt.as_mut(),
+                resume_state.as_ref(),
+            )
+            .map_err(|e| format!("solve failed: {e}"))?
+        } else {
+            solver::block_cg_profiled(
+                &mut op,
+                &mut team,
+                &mut x,
+                &b,
+                cfg.solver.tol,
+                cfg.solver.maxiter,
+                prof.as_ref(),
+            )
+        };
         let mut ndag = NativeMdagM::with_links(&geom, links, kappa);
         let resid = worst_true_residual(&mut ndag, &x, &rhs);
         (stats, resid)
@@ -795,6 +944,12 @@ fn solve_block<R: Real>(
         stats.threads,
     );
     println!("knobs: {}", knobs.summary);
+    if cfg.checkpoint.dir.is_some() {
+        print_checkpoint_summary(
+            ckpt.as_ref().map(|c| c.committed()).unwrap_or(0),
+            resume_state.is_some() as u64,
+        );
+    }
     if let (true, Some(p)) = (profile, &prof) {
         emit_profile(&p.snapshot(), &cfg.artifacts_dir)?;
     }
@@ -817,6 +972,7 @@ fn solve_distributed<R: Real + CommScalar>(
     cfg: &RunConfig,
     knobs: &Knobs,
     profile: bool,
+    resume: Option<&std::path::Path>,
 ) -> Result<(), Box<dyn std::error::Error>> {
     let grid = cfg.lattice.grid;
     let nranks = grid.size();
@@ -868,90 +1024,179 @@ fn solve_distributed<R: Real + CommScalar>(
     let world = WorldOpts {
         timeout_ms: cfg.comm.timeout_ms,
         max_retries: cfg.comm.max_retries,
-        faults,
+        faults: faults.clone(),
     };
     let telemetry_on = cfg.telemetry.enabled;
     let buffer_spans = cfg.telemetry.buffer_spans;
+    let ckpt_cfg = cfg.checkpoint.clone();
 
     let sw = lqcd::util::timer::Stopwatch::start();
-    let results = run_world_cfg(nranks, world, |rank, comm| {
-        let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
-        let links = Links::from_gauge(extract_gauge(&u_global, &lgeom), compression);
-        let local_sources: Vec<FermionField<R>> = sources
-            .iter()
-            .map(|s| extract_fermion(s, &ggeom, &lgeom))
-            .collect();
-        let dist = DistHopping::with_chunking(
-            &lgeom,
-            force_comm,
-            threads,
-            eo2_schedule,
-            eo2_granularity,
-        );
-        let mut team = Team::new(threads, BarrierKind::Sleep);
-        let tracer = telemetry_on
-            .then(|| Arc::new(Tracer::new(threads, buffer_spans, rank)));
-        let prof = match &tracer {
-            Some(t) => Profiler::with_tracer(threads, t.clone()),
-            None => Profiler::new(threads),
-        };
-        if let Some(t) = &tracer {
-            // transport events (sends, retransmits, timeouts, injected
-            // faults) land on the same per-rank trace as the phases
-            comm.set_tracer(t.clone());
-        }
-        let mut x = MultiFermionField::<R>::zeros(&lgeom, nrhs);
-        let all_active = vec![true; nrhs];
-        let (rhs, stats) = if algorithm == "bicgstab" {
-            let b = MultiFermionField::from_rhs(&local_sources);
-            let mut op = DistMultiMeo::new(
-                &lgeom, &dist, &links, kappa, nrhs, comm, &prof,
-            )
-            .expect("wire-format handshake");
-            let stats = solver::block_bicgstab_generic_guarded_profiled(
-                &mut op,
-                &mut team,
-                &mut x,
-                &b,
-                tol,
-                maxiter,
-                &health,
-                Some(&prof),
+    let run_once = |world: WorldOpts, resume_now: bool| {
+        run_world_cfg(nranks, world, |rank, comm| {
+            let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+            let lu = extract_gauge(&u_global, &lgeom);
+            // each rank hashes (and is checkpoint-guarded against) its
+            // own slice of the configuration
+            let ghash = gauge_hash(&lu);
+            let links = Links::from_gauge(lu, compression);
+            let local_sources: Vec<FermionField<R>> = sources
+                .iter()
+                .map(|s| extract_fermion(s, &ggeom, &lgeom))
+                .collect();
+            let dist = DistHopping::with_chunking(
+                &lgeom,
+                force_comm,
+                threads,
+                eo2_schedule,
+                eo2_granularity,
             );
-            (b, stats)
-        } else {
-            // CGNR: per-RHS right-hand side is Mdag b_r, prepared with
-            // the distributed operator itself
-            let mut bp = MultiFermionField::from_rhs(&local_sources);
-            bp.gamma5();
-            let mut mbp = MultiFermionField::<R>::zeros(&lgeom, nrhs);
-            {
-                let mut meo = DistMultiMeo::new(
+            let mut team = Team::new(threads, BarrierKind::Sleep);
+            let tracer = telemetry_on
+                .then(|| Arc::new(Tracer::new(threads, buffer_spans, rank)));
+            let prof = match &tracer {
+                Some(t) => Profiler::with_tracer(threads, t.clone()),
+                None => Profiler::new(threads),
+            };
+            if let Some(t) = &tracer {
+                // transport events (sends, retransmits, timeouts, injected
+                // faults) land on the same per-rank trace as the phases
+                comm.set_tracer(t.clone());
+            }
+            let mut ckpt = match &ckpt_cfg.dir {
+                Some(dir) => {
+                    let opts = CkptOpts {
+                        dir: dir.clone(),
+                        every_iters: ckpt_cfg.every_iters,
+                        every_ms: ckpt_cfg.every_ms,
+                        keep: ckpt_cfg.keep,
+                        buddy: ckpt_cfg.buddy,
+                    };
+                    match Checkpointer::new(opts, rank, nranks, ghash) {
+                        Ok(c) => Some(c),
+                        Err(e) => {
+                            eprintln!(
+                                "checkpoint: rank {rank}: {e}; checkpointing disabled"
+                            );
+                            None
+                        }
+                    }
+                }
+                None => None,
+            };
+            let resume_state = match (resume_now, ckpt_cfg.dir.as_deref()) {
+                (true, Some(dir)) => match load_latest(dir, rank, nranks, ghash) {
+                    Ok((st, gen)) => {
+                        println!(
+                            "resume: rank {rank} restored generation {gen} (iteration {})",
+                            st.iteration
+                        );
+                        Some(st)
+                    }
+                    Err(e) => {
+                        eprintln!("resume: rank {rank}: {e}; starting from scratch");
+                        None
+                    }
+                },
+                _ => None,
+            };
+            let mut x = MultiFermionField::<R>::zeros(&lgeom, nrhs);
+            let all_active = vec![true; nrhs];
+            let (rhs, stats) = if algorithm == "bicgstab" {
+                let b = MultiFermionField::from_rhs(&local_sources);
+                let mut op = DistMultiMeo::new(
                     &lgeom, &dist, &links, kappa, nrhs, comm, &prof,
                 )
                 .expect("wire-format handshake");
-                meo.apply_multi(&mut team, &mut mbp, &bp, &all_active, None);
-            }
-            mbp.gamma5();
-            let mut op = DistMultiMdagM::new(
-                &lgeom, &dist, &links, kappa, nrhs, comm, &prof,
-            )
-            .expect("wire-format handshake");
-            let stats = solver::block_cg_generic_guarded_profiled(
-                &mut op,
-                &mut team,
-                &mut x,
-                &mbp,
-                tol,
-                maxiter,
-                &health,
-                Some(&prof),
-            );
-            (mbp, stats)
-        };
-        let trace = tracer.map(|t| t.drain());
-        (x.demux(), rhs.demux(), stats, prof.snapshot(), trace)
+                let stats = solver::block_bicgstab_generic_guarded_ckpt(
+                    &mut op,
+                    &mut team,
+                    &mut x,
+                    &b,
+                    tol,
+                    maxiter,
+                    &health,
+                    Some(&prof),
+                    ckpt.as_mut(),
+                    resume_state.as_ref(),
+                );
+                (b, stats)
+            } else {
+                // CGNR: per-RHS right-hand side is Mdag b_r, prepared with
+                // the distributed operator itself
+                let mut bp = MultiFermionField::from_rhs(&local_sources);
+                bp.gamma5();
+                let mut mbp = MultiFermionField::<R>::zeros(&lgeom, nrhs);
+                {
+                    let mut meo = DistMultiMeo::new(
+                        &lgeom, &dist, &links, kappa, nrhs, comm, &prof,
+                    )
+                    .expect("wire-format handshake");
+                    meo.apply_multi(&mut team, &mut mbp, &bp, &all_active, None);
+                }
+                mbp.gamma5();
+                let mut op = DistMultiMdagM::new(
+                    &lgeom, &dist, &links, kappa, nrhs, comm, &prof,
+                )
+                .expect("wire-format handshake");
+                let stats = solver::block_cg_generic_guarded_ckpt(
+                    &mut op,
+                    &mut team,
+                    &mut x,
+                    &mbp,
+                    tol,
+                    maxiter,
+                    &health,
+                    Some(&prof),
+                    ckpt.as_mut(),
+                    resume_state.as_ref(),
+                );
+                (mbp, stats)
+            };
+            let trace = tracer.map(|t| t.drain());
+            let outcome = CkptOutcome {
+                generations: ckpt.as_ref().map(|c| c.committed()).unwrap_or(0),
+                restores: resume_state.is_some() as u64,
+                buddy: ckpt.as_mut().and_then(|c| c.take_buddy()),
+            };
+            (x.demux(), rhs.demux(), stats, prof.snapshot(), trace, outcome)
+        })
+    };
+    let mut results = run_once(world, resume.is_some());
+
+    // kill-fault escalation: a killed rank surfaces a structured
+    // `CommError::Killed`. With checkpointing on, rewrite any buddy
+    // copies the survivors hold (re-materializing checkpoint files the
+    // dead rank may have lost), defuse the kill rules, and re-launch the
+    // world resuming from the newest generation committed by ALL ranks.
+    let killed = results.iter().any(|r| {
+        matches!(
+            r.2.as_ref().err().map(|e| &e.kind),
+            Some(SolveErrorKind::Comm(CommError::Killed { .. }))
+        )
     });
+    if killed && ckpt_cfg.dir.is_some() {
+        let dir = ckpt_cfg.dir.clone().unwrap();
+        let mut rewritten = 0usize;
+        for r in &mut results {
+            if let Some(copy) = r.5.buddy.take() {
+                match restore_from_buddy(&dir, &copy) {
+                    Ok(()) => rewritten += 1,
+                    Err(e) => eprintln!("buddy restore: {e}"),
+                }
+            }
+        }
+        println!(
+            "recovery: rank killed mid-solve; {rewritten} buddy checkpoint(s) \
+             rewritten, re-launching {nranks} ranks from the last generation \
+             committed by all"
+        );
+        let world = WorldOpts {
+            timeout_ms: cfg.comm.timeout_ms,
+            max_retries: cfg.comm.max_retries,
+            faults: faults.without_kills(),
+        };
+        results = run_once(world, true);
+    }
     let secs = sw.secs();
 
     // a rank that diagnosed an unrecoverable fault (killed peer,
@@ -961,7 +1206,7 @@ fn solve_distributed<R: Real + CommScalar>(
     if let Some((rank, e)) = results
         .iter()
         .enumerate()
-        .find_map(|(r, (_, _, res, _, _))| res.as_ref().err().map(|e| (r, e)))
+        .find_map(|(r, (_, _, res, _, _, _))| res.as_ref().err().map(|e| (r, e)))
     {
         let kind = match &e.kind {
             SolveErrorKind::Comm(_) => "comm-fault",
@@ -990,12 +1235,14 @@ fn solve_distributed<R: Real + CommScalar>(
         w.uint(e.retransmits);
         w.key("timeouts");
         w.uint(e.timeouts);
+        w.key("zero_fills");
+        w.uint(e.zero_fills);
         w.obj_end();
         println!("recovery: {}", w.finish());
         return Err(format!("rank {rank}: {e}").into());
     }
     let stats_by_rank: Vec<&solver::BlockSolveStats> =
-        results.iter().map(|(_, _, res, _, _)| res.as_ref().unwrap()).collect();
+        results.iter().map(|(_, _, res, _, _, _)| res.as_ref().unwrap()).collect();
 
     // join the per-rank solutions / right-hand sides back to the global
     // lattice and measure the true residual with the single-rank operator
@@ -1003,7 +1250,7 @@ fn solve_distributed<R: Real + CommScalar>(
         (0..nrhs).map(|_| FermionField::zeros(&ggeom)).collect();
     let mut rhs: Vec<FermionField<R>> =
         (0..nrhs).map(|_| FermionField::zeros(&ggeom)).collect();
-    for (rank, (xl, rl, _, _, _)) in results.iter().enumerate() {
+    for (rank, (xl, rl, _, _, _, _)) in results.iter().enumerate() {
         let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
         for r in 0..nrhs {
             insert_fermion(&mut xs[r], &xl[r], &lgeom);
@@ -1033,9 +1280,10 @@ fn solve_distributed<R: Real + CommScalar>(
     // the global-tile-order reductions); report rank 0's. The transport
     // recovery counters are per-rank — sum them for the fleet view.
     let stats = stats_by_rank[0];
-    let (retransmits, timeouts) = stats_by_rank
-        .iter()
-        .fold((0u64, 0u64), |acc, s| (acc.0 + s.retransmits, acc.1 + s.timeouts));
+    let (retransmits, timeouts, zero_fills) =
+        stats_by_rank.iter().fold((0u64, 0u64, 0u64), |acc, s| {
+            (acc.0 + s.retransmits, acc.1 + s.timeouts, acc.2 + s.zero_fills)
+        });
     for (r, s) in stats.per_rhs.iter().enumerate() {
         println!(
             "  rhs {r:>2}: {} iterations, converged={}, rel residual {:.3e}",
@@ -1089,8 +1337,17 @@ fn solve_distributed<R: Real + CommScalar>(
     w.uint(retransmits);
     w.key("timeouts");
     w.uint(timeouts);
+    w.key("zero_fills");
+    w.uint(zero_fills);
     w.obj_end();
     println!("recovery: {}", w.finish());
+    if ckpt_cfg.dir.is_some() {
+        // commit counts agree on every rank (the commit is collective);
+        // restores count how many ranks resumed from disk
+        let generations = results.iter().map(|r| r.5.generations).max().unwrap_or(0);
+        let restores = results.iter().map(|r| r.5.restores).sum();
+        print_checkpoint_summary(generations, restores);
+    }
     println!("knobs: {}", knobs.summary);
     if profile {
         // rank 0's per-thread phase stacks rendered + profile.json, plus
@@ -1134,6 +1391,7 @@ fn solve_mixed(
     cfg: &RunConfig,
     knobs: &Knobs,
     profile: bool,
+    resume: Option<&std::path::Path>,
 ) -> Result<(), Box<dyn std::error::Error>> {
     let geom = Geometry::single_rank(cfg.lattice.global, cfg.lattice.tiling)
         .map_err(|e| e.to_string())?;
@@ -1146,6 +1404,7 @@ fn solve_mixed(
     );
     let u: GaugeField<f64> = GaugeField::random(&geom, &mut rng);
     println!("plaquette = {:.6}", u.plaquette());
+    let ghash = gauge_hash(&u);
     let b: FermionField<f64> = FermionField::gaussian(&geom, &mut rng);
     let kappa = cfg.solver.kappa;
     let u32 = u.to_precision::<f32>();
@@ -1158,13 +1417,18 @@ fn solve_mixed(
     let mut team = Team::new(threads, BarrierKind::Sleep);
     let tracer = make_tracer(cfg, threads, 0);
     let prof = make_profiler(profile, threads, &tracer);
+    let mut ckpt = make_checkpointer(cfg, 0, 1, ghash)?;
+    let resume_state = match resume {
+        Some(dir) => Some(load_resume(dir, 0, 1, ghash)?),
+        None => None,
+    };
 
     let sw = lqcd::util::timer::Stopwatch::start();
     let stats = if cfg.solver.algorithm == "bicgstab" {
         let mut outer = NativeMeo::with_links(&geom, links64, kappa);
         let mut inner = NativeMeo::with_links(&geom, links32, kappa as f32);
         let mut x = FermionField::<f64>::zeros(&geom);
-        let stats = solver::mixed_refinement_team_profiled(
+        let stats = solver::mixed_refinement_team_profiled_ckpt(
             &mut outer,
             &mut inner,
             &mut x,
@@ -1176,6 +1440,8 @@ fn solve_mixed(
             InnerAlgorithm::BiCgStab,
             &mut team,
             prof.as_ref(),
+            ckpt.as_mut(),
+            resume_state.as_ref(),
         );
         println!(
             "true |Mx-b|/|b| = {:.3e}",
@@ -1192,7 +1458,7 @@ fn solve_mixed(
         outer.meo().apply(&mut mbp, &bp);
         mbp.gamma5();
         let mut x = FermionField::<f64>::zeros(&geom);
-        let stats = solver::mixed_refinement_team_profiled(
+        let stats = solver::mixed_refinement_team_profiled_ckpt(
             &mut outer,
             &mut inner,
             &mut x,
@@ -1204,6 +1470,8 @@ fn solve_mixed(
             InnerAlgorithm::Cg,
             &mut team,
             prof.as_ref(),
+            ckpt.as_mut(),
+            resume_state.as_ref(),
         );
         println!(
             "true |MdagM x - Mdag b|/|Mdag b| = {:.3e}",
@@ -1225,6 +1493,12 @@ fn solve_mixed(
     );
     for (i, r) in stats.history.iter().enumerate() {
         println!("  outer {i:>2}  true |r|/|b| = {r:.3e}");
+    }
+    if cfg.checkpoint.dir.is_some() {
+        print_checkpoint_summary(
+            ckpt.as_ref().map(|c| c.committed()).unwrap_or(0),
+            resume_state.is_some() as u64,
+        );
     }
     if let (true, Some(p)) = (profile, &prof) {
         emit_profile(&p.snapshot(), &cfg.artifacts_dir)?;
@@ -1323,4 +1597,19 @@ OPTIONS:
                        (default 3)
   --max-restarts N     Krylov restarts the solver health guard may spend
                        on recoverable events before giving up (default 3)
+  --checkpoint-dir DIR write versioned, CRC-protected solver checkpoints
+                       to DIR on a fixed iteration cadence (atomic
+                       temp+fsync+rename; [checkpoint] config section
+                       sets cadence/rotation/buddy). Distributed solves
+                       commit a generation only once every rank wrote it
+                       (two-phase commit) and exchange in-memory buddy
+                       copies ring-wise; a kill-fault then auto-recovers:
+                       buddy files are rewritten and the world relaunches
+                       resuming from the last generation committed by all
+  --checkpoint-every N checkpoint cadence in solver iterations
+                       (default 25; 0 disables the iteration cadence)
+  --resume DIR         resume a solve from the newest valid checkpoint
+                       generation in DIR (corrupt generations fall back
+                       to older ones); the residual history continues
+                       bitwise identically to the uninterrupted run
 ";

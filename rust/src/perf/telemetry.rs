@@ -27,15 +27,17 @@ use std::time::Instant;
 
 use crate::util::json::JsonWriter;
 
-/// Span codes 0..=6 mirror [`crate::coordinator::Phase`] (EO1, bulk,
-/// comm-wait, EO2, barrier, blas, restart). Codes >= 16 are transport
-/// events recorded by `comm::world` outside any profiler phase.
+/// Span codes 0..=7 mirror [`crate::coordinator::Phase`] (EO1, bulk,
+/// comm-wait, EO2, barrier, blas, restart, checkpoint). Codes >= 16 are
+/// transport events recorded by `comm::world` outside any profiler
+/// phase.
 pub const EV_SEND: u8 = 16;
 pub const EV_RETRANSMIT: u8 = 17;
 pub const EV_TIMEOUT: u8 = 18;
 pub const EV_DELAY: u8 = 19;
 pub const EV_CORRUPT: u8 = 20;
 pub const EV_DUPLICATE: u8 = 21;
+pub const EV_ZEROFILL: u8 = 22;
 
 /// Human-readable name of a span code; phase labels match
 /// `Phase::label` so the Perfetto tracks line up with the Fig. 8/9 bars.
@@ -48,12 +50,14 @@ pub fn span_label(code: u8) -> &'static str {
         4 => "barrier",
         5 => "blas",
         6 => "restart",
+        7 => "checkpoint",
         EV_SEND => "send",
         EV_RETRANSMIT => "retransmit",
         EV_TIMEOUT => "timeout",
         EV_DELAY => "delay-inject",
         EV_CORRUPT => "corrupt-detected",
         EV_DUPLICATE => "duplicate-dropped",
+        EV_ZEROFILL => "zero-fill",
         _ => "event",
     }
 }

@@ -13,8 +13,10 @@
 use crate::algebra::{Complex, Real};
 use crate::coordinator::operator::LinearOperator;
 use crate::dslash::flops as fl;
+use crate::field::snapshot::FieldSnap;
 use crate::field::FermionField;
 
+use super::checkpoint::{Checkpointer, SolverState, FAMILY_BICGSTAB};
 use super::fused::BICGSTAB_UNFUSED_SWEEPS;
 use super::health::{
     HealthConfig, HealthGuard, Interrupt, SolveError, StagnationTracker,
@@ -64,17 +66,85 @@ pub fn bicgstab_guarded<R: Real, A: LinearOperator<R>>(
     maxiter: usize,
     health: &HealthConfig,
 ) -> Result<SolveStats, SolveError> {
+    bicgstab_guarded_ckpt(op, x, b, tol, maxiter, health, None, None)
+}
+
+/// Cross-iteration BiCGStab state restored on resume. `v` and `t` are
+/// recomputed before first read at the iteration boundary, so only the
+/// residual, search direction, shadow residual, and the carried
+/// `rr`/`rho` scalars are part of the checkpoint.
+struct BiCgResume<R: Real> {
+    r: FermionField<R>,
+    p: FermionField<R>,
+    rhat: FermionField<R>,
+    rr: f64,
+    rho: Complex,
+}
+
+/// [`bicgstab_guarded`] with optional checkpointing and resume (the
+/// same contract as [`super::cg_guarded_ckpt`]: resumed runs continue
+/// bitwise identically from the checkpointed iteration boundary).
+#[allow(clippy::too_many_arguments)]
+pub fn bicgstab_guarded_ckpt<R: Real, A: LinearOperator<R>>(
+    op: &mut A,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: Option<&SolverState>,
+) -> Result<SolveStats, SolveError> {
     let mut guard = HealthGuard::new(health);
     let mut history = Vec::new();
     let mut flops = 0u64;
+    let mut pack = None;
+    if let Some(st) = resume {
+        if st.family != FAMILY_BICGSTAB {
+            return Err(SolveError::checkpoint(format!(
+                "checkpoint family {} is not bicgstab",
+                st.family
+            )));
+        }
+        let mut r = b.zeros_like();
+        let mut p = b.zeros_like();
+        let mut rhat = b.zeros_like();
+        st.restore_into("x", &mut x.data).map_err(SolveError::checkpoint)?;
+        st.restore_into("r", &mut r.data).map_err(SolveError::checkpoint)?;
+        st.restore_into("p", &mut p.data).map_err(SolveError::checkpoint)?;
+        st.restore_into("rhat", &mut rhat.data)
+            .map_err(SolveError::checkpoint)?;
+        if st.scalars.len() < 3 {
+            return Err(SolveError::checkpoint("missing bicgstab scalars"));
+        }
+        let rr = st.scalars[0];
+        let rho = Complex::new(st.scalars[1], st.scalars[2]);
+        guard.restarts = st.restarts as usize;
+        history = st.history.clone();
+        flops = st.flops;
+        op.restore_fault_cursors(&st.fault_cursors);
+        pack = Some(BiCgResume { r, p, rhat, rr, rho });
+    }
     let c0 = op.comm_counters();
+    let z0 = op.comm_zero_fills();
     let counters = |op: &A| {
         let c1 = op.comm_counters();
-        (c1.0 - c0.0, c1.1 - c0.1)
+        (c1.0 - c0.0, c1.1 - c0.1, op.comm_zero_fills() - z0)
     };
     loop {
-        match bicgstab_attempt(op, x, b, tol, maxiter, health, &mut history, &mut flops)
-        {
+        match bicgstab_attempt(
+            op,
+            x,
+            b,
+            tol,
+            maxiter,
+            health,
+            &mut history,
+            &mut flops,
+            guard.restarts,
+            ckpt.as_deref_mut(),
+            &mut pack,
+        ) {
             Ok(mut stats) => {
                 if stats.converged && health.drift_tol > 0.0 {
                     let ratio = super::health::drift_ratio(
@@ -117,6 +187,9 @@ fn bicgstab_attempt<R: Real, A: LinearOperator<R>>(
     health: &HealthConfig,
     history: &mut Vec<f64>,
     flops: &mut u64,
+    restarts: usize,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: &mut Option<BiCgResume<R>>,
 ) -> Result<SolveStats, Interrupt> {
     let finish = |history: &[f64], flops: u64, converged: bool, rel: f64| SolveStats {
         iterations: history.len(),
@@ -131,51 +204,67 @@ fn bicgstab_attempt<R: Real, A: LinearOperator<R>>(
         health_events: 0,
         retransmits: 0,
         timeouts: 0,
+        zero_fills: 0,
     };
+    let resumed = resume.take();
     op.fault_hook(history.len())
         .map_err(|err| Interrupt::Comm { err, iteration: history.len() })?;
     let bnorm2 = op.reduce_sum(b.norm2());
     let nreal = b.data.len() as u64;
-    *flops += fl::norm2_flops(nreal);
+    if resumed.is_none() {
+        *flops += fl::norm2_flops(nreal);
+    }
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
         return Ok(finish(&[], 0, true, 0.0));
     }
     let limit = tol * tol * bnorm2;
 
-    // r = b - A x; a zero initial guess skips the first operator apply.
-    // The skip is agreed globally (reduce_sum is collective) so ranks
-    // of a distributed operator never mismatch the apply's collectives.
-    let x_zero = op.reduce_sum(if x.is_zero() { 0.0 } else { 1.0 }) == 0.0;
-    let mut r = b.clone();
     let mut t = b.zeros_like();
-    let mut rr;
-    if x_zero {
-        rr = bnorm2;
-    } else {
-        op.apply(&mut t, x);
-        r.axpy(-R::ONE, &t);
-        rr = op.reduce_sum(r.norm2());
-        *flops += op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
-    }
-    if !rr.is_finite() {
-        // poisoned warm iterate: fall back to a cold restart
-        x.fill(R::ZERO);
-        return Err(Interrupt::NonFinite {
-            what: "initial |r|^2",
-            iteration: history.len(),
-        });
-    }
-    let rhat = r.clone();
-    let mut p = r.clone();
     let mut v = b.zeros_like();
-    let mut rho = gdot(op, &rhat, &r);
-    *flops += fl::cdot_flops(nreal);
-    if !cfinite(rho) {
-        return Err(Interrupt::NonFinite {
-            what: "rho",
-            iteration: history.len(),
-        });
+    let (mut r, rhat, mut p, mut rr, mut rho);
+    if let Some(rs) = resumed {
+        // Checkpoint resume: the restored state reproduces the
+        // interrupted run's iteration boundary bit-for-bit.
+        r = rs.r;
+        p = rs.p;
+        rhat = rs.rhat;
+        rr = rs.rr;
+        rho = rs.rho;
+    } else {
+        // r = b - A x; a zero initial guess skips the first operator
+        // apply. The skip is agreed globally (reduce_sum is collective)
+        // so ranks of a distributed operator never mismatch the apply's
+        // collectives.
+        let x_zero = op.reduce_sum(if x.is_zero() { 0.0 } else { 1.0 }) == 0.0;
+        r = b.clone();
+        if x_zero {
+            rr = bnorm2;
+        } else {
+            op.apply(&mut t, x);
+            r.axpy(-R::ONE, &t);
+            rr = op.reduce_sum(r.norm2());
+            *flops +=
+                op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        }
+        if !rr.is_finite() {
+            // poisoned warm iterate: fall back to a cold restart
+            x.fill(R::ZERO);
+            return Err(Interrupt::NonFinite {
+                what: "initial |r|^2",
+                iteration: history.len(),
+            });
+        }
+        rhat = r.clone();
+        p = r.clone();
+        rho = gdot(op, &rhat, &r);
+        *flops += fl::cdot_flops(nreal);
+        if !cfinite(rho) {
+            return Err(Interrupt::NonFinite {
+                what: "rho",
+                iteration: history.len(),
+            });
+        }
     }
     let mut stag = StagnationTracker::new(health.stagnation_window);
 
@@ -183,6 +272,22 @@ fn bicgstab_attempt<R: Real, A: LinearOperator<R>>(
         let iteration = history.len();
         op.fault_hook(iteration)
             .map_err(|err| Interrupt::Comm { err, iteration })?;
+        if let Some(ck) = ckpt.as_deref_mut() {
+            if ck.due(iteration as u64) {
+                let mut st = SolverState::new(FAMILY_BICGSTAB, iteration as u64);
+                st.restarts = restarts as u64;
+                st.flops = *flops;
+                st.scalars = vec![rr, rho.re, rho.im];
+                st.history = history.clone();
+                st.fields = vec![
+                    FieldSnap::of_fermion("x", x),
+                    FieldSnap::of_fermion("r", &r),
+                    FieldSnap::of_fermion("p", &p),
+                    FieldSnap::of_fermion("rhat", &rhat),
+                ];
+                ck.save_lin(st, op);
+            }
+        }
         // v = A p
         op.apply(&mut v, &p);
         *flops += op.flops_per_apply() + fl::cdot_flops(nreal);

@@ -62,7 +62,11 @@ use crate::coordinator::Team;
 use crate::dslash::flops as fl;
 use crate::field::blas;
 use crate::field::block::MultiFermionField;
+use crate::field::snapshot::FieldSnap;
 
+use super::checkpoint::{
+    Checkpointer, RhsRecord, SolverState, FAMILY_BLOCK_BICGSTAB, FAMILY_BLOCK_CG,
+};
 use super::fused::{
     charge_flops, ro, ro_at, scoped, BICGSTAB_FUSED_SWEEPS, CG_FUSED_SWEEPS,
 };
@@ -109,6 +113,10 @@ pub struct BlockSolveStats {
     pub retransmits: u64,
     /// recv/collective deadlines that expired (including recovered ones)
     pub timeouts: u64,
+    /// halo buffers the transport zero-filled after failed recvs — any
+    /// nonzero value means sweeps ran on fabricated data and the solve
+    /// ended in (or recovered through) a transport fault
+    pub zero_fills: u64,
 }
 
 impl BlockSolveStats {
@@ -125,6 +133,7 @@ impl BlockSolveStats {
             health_events: 0,
             retransmits: 0,
             timeouts: 0,
+            zero_fills: 0,
         }
     }
 }
@@ -158,6 +167,7 @@ fn err_to_block(e: SolveError, nrhs: usize, sweeps: f64, threads: usize) -> Bloc
         health_events: e.events.len(),
         retransmits: e.retransmits,
         timeouts: e.timeouts,
+        zero_fills: e.zero_fills,
     }
 }
 
@@ -959,6 +969,60 @@ pub fn block_cg_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
     health: &HealthConfig,
     prof: Option<&Profiler>,
 ) -> Result<BlockSolveStats, SolveError> {
+    block_cg_generic_guarded_ckpt(op, team, x, b, tol, maxiter, health, prof, None, None)
+}
+
+/// Cross-iteration block-CG state restored on resume (per-RHS masks,
+/// stats, and iteration counters live in the guarded driver and are
+/// restored there).
+struct BlockCgResume<R: Real> {
+    r: MultiFermionField<R>,
+    p: MultiFermionField<R>,
+    rr: Vec<f64>,
+}
+
+/// Restore the per-RHS bookkeeping shared by both generic block guards
+/// from a checkpoint: masks → `active`, per-RHS records → `stats`.
+fn restore_block_rhs(
+    st: &SolverState,
+    nrhs: usize,
+    active: &mut [bool],
+    stats: &mut [RhsStats],
+) -> Result<(), SolveError> {
+    if st.masks.len() != nrhs || st.per_rhs.len() != nrhs {
+        return Err(SolveError::checkpoint(format!(
+            "checkpoint holds {} rhs, operator has {nrhs}",
+            st.masks.len()
+        )));
+    }
+    for i in 0..nrhs {
+        active[i] = st.masks[i];
+        stats[i] = RhsStats {
+            iterations: st.per_rhs[i].iterations as usize,
+            converged: st.per_rhs[i].converged,
+            rel_residual: st.per_rhs[i].rel_residual,
+            history: st.per_rhs[i].history.clone(),
+        };
+    }
+    Ok(())
+}
+
+/// [`block_cg_generic_guarded_profiled`] with a checkpoint sink and/or
+/// resume state (see [`super::cg_guarded_ckpt`] for the bitwise-resume
+/// contract — here it covers every RHS history and the per-RHS masks).
+#[allow(clippy::too_many_arguments)]
+pub fn block_cg_generic_guarded_ckpt<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+    prof: Option<&Profiler>,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: Option<&SolverState>,
+) -> Result<BlockSolveStats, SolveError> {
     let nrhs = op.nrhs();
     assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
@@ -972,9 +1036,10 @@ pub fn block_cg_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
     let mut iterations = 0usize;
     let mut flops = 0u64;
     let c0 = op.comm_counters();
+    let z0 = op.comm_zero_fills();
     let counters = |op: &A| {
         let c1 = op.comm_counters();
-        (c1.0 - c0.0, c1.1 - c0.1)
+        (c1.0 - c0.0, c1.1 - c0.1, op.comm_zero_fills() - z0)
     };
 
     let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
@@ -1010,6 +1075,31 @@ pub fn block_cg_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
         return Err(with_mask(e, &stats));
     }
 
+    let mut pack = None;
+    if let Some(st) = resume {
+        if st.family != FAMILY_BLOCK_CG {
+            return Err(SolveError::checkpoint(format!(
+                "checkpoint holds family tag {}, not block cg",
+                st.family
+            )));
+        }
+        st.restore_into("x", &mut x.data).map_err(SolveError::checkpoint)?;
+        let mut r = b.zeros_like();
+        st.restore_into("r", &mut r.data).map_err(SolveError::checkpoint)?;
+        let mut p = b.zeros_like();
+        st.restore_into("p", &mut p.data).map_err(SolveError::checkpoint)?;
+        if st.scalars.len() != nrhs {
+            return Err(SolveError::checkpoint("missing per-rhs rr scalars"));
+        }
+        restore_block_rhs(st, nrhs, &mut active, &mut stats)?;
+        guard.restarts = st.restarts as usize;
+        history = st.history.clone();
+        iterations = st.iteration as usize;
+        flops = st.flops;
+        op.restore_fault_cursors(&st.fault_cursors);
+        pack = Some(BlockCgResume { r, p, rr: st.scalars.clone() });
+    }
+
     let mut flops_at_restart = 0u64;
     loop {
         match block_cg_generic_attempt(
@@ -1027,6 +1117,9 @@ pub fn block_cg_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
             &mut history,
             &mut flops,
             prof,
+            guard.restarts,
+            ckpt.as_deref_mut(),
+            &mut pack,
         ) {
             Ok(mut out) => {
                 // Drift check at apparent convergence: a recursive
@@ -1071,6 +1164,7 @@ pub fn block_cg_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
                 out.health_events = guard.events.len();
                 out.retransmits = c.0;
                 out.timeouts = c.1;
+                out.zero_fills = c.2;
                 return Ok(out);
             }
             Err(int) => {
@@ -1107,6 +1201,9 @@ fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
     history: &mut Vec<f64>,
     flops: &mut u64,
     prof: Option<&Profiler>,
+    restarts: usize,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: &mut Option<BlockCgResume<R>>,
 ) -> Result<BlockSolveStats, Interrupt> {
     let nrhs = b.nrhs;
     let ntiles = b.site_tiles();
@@ -1117,64 +1214,75 @@ fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
     let flops_apply = op.flops_per_apply_rhs();
     let flops_shared = op.flops_per_apply_shared();
 
+    let resumed = resume.take();
     op.fault_hook(*iterations)
         .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
 
     let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
-    let mut r = b.clone();
     let mut ap = b.zeros_like();
-    let mut rr = bnorm2.to_vec();
-    // globally consistent warm-start decision (a rank whose local shard
-    // happens to be zero must still join the collective apply)
-    if op.reduce_any(!x.is_zero()) {
-        op.apply_multi(team, &mut ap, x, active, None);
-        // r = b - A x with per-(tile, RHS) |r|² capture (serial entry
-        // phase, like the fused solver's axpy_norm2_masked)
-        for t in 0..ntiles {
-            for i in 0..nrhs {
-                if !active[i] {
-                    continue;
+    let (mut r, mut p, mut rr);
+    if let Some(rs) = resumed {
+        // checkpoint resume: every per-RHS recurrence continues from
+        // its restored iteration boundary bit-for-bit (masks/stats were
+        // restored by the guarded driver)
+        r = rs.r;
+        p = rs.p;
+        rr = rs.rr;
+    } else {
+        r = b.clone();
+        rr = bnorm2.to_vec();
+        // globally consistent warm-start decision (a rank whose local
+        // shard happens to be zero must still join the collective apply)
+        if op.reduce_any(!x.is_zero()) {
+            op.apply_multi(team, &mut ap, x, active, None);
+            // r = b - A x with per-(tile, RHS) |r|² capture (serial
+            // entry phase, like the fused solver's axpy_norm2_masked)
+            for t in 0..ntiles {
+                for i in 0..nrhs {
+                    if !active[i] {
+                        continue;
+                    }
+                    let off = (t * nrhs + i) * vpt;
+                    let rt = &mut r.data[off..off + vpt];
+                    blas::axpy_slice(rt, -R::ONE, &ap.data[off..off + vpt]);
+                    caps[t * nrhs + i] = [0.0, 0.0, blas::norm2_tile(rt, vlen)];
                 }
-                let off = (t * nrhs + i) * vpt;
-                let rt = &mut r.data[off..off + vpt];
-                blas::axpy_slice(rt, -R::ONE, &ap.data[off..off + vpt]);
-                caps[t * nrhs + i] = [0.0, 0.0, blas::norm2_tile(rt, vlen)];
+            }
+            let red = op.reduce_caps(&caps);
+            let nact = active.iter().filter(|&&a| a).count() as u64;
+            for i in 0..nrhs {
+                if active[i] {
+                    rr[i] = red[i][2];
+                }
+            }
+            *flops += nact * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+            if nact > 0 {
+                *flops += flops_shared;
             }
         }
-        let red = op.reduce_caps(&caps);
-        let nact = active.iter().filter(|&&a| a).count() as u64;
+        // a poisoned warm iterate has nothing worth preserving:
+        // cold-restart just that RHS (zero guess) and charge the budget
+        let mut poisoned = false;
+        for i in 0..nrhs {
+            if active[i] && !rr[i].is_finite() {
+                x.fill_rhs(i, R::ZERO);
+                poisoned = true;
+            }
+        }
+        if poisoned {
+            return Err(Interrupt::NonFinite { what: "initial |r|^2", iteration: *iterations });
+        }
         for i in 0..nrhs {
             if active[i] {
-                rr[i] = red[i][2];
+                stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
+                if rr[i] <= limit[i] {
+                    active[i] = false;
+                    stats[i].converged = true;
+                }
             }
         }
-        *flops += nact * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
-        if nact > 0 {
-            *flops += flops_shared;
-        }
+        p = r.clone();
     }
-    // a poisoned warm iterate has nothing worth preserving: cold-restart
-    // just that RHS (zero guess) and charge the guard's budget
-    let mut poisoned = false;
-    for i in 0..nrhs {
-        if active[i] && !rr[i].is_finite() {
-            x.fill_rhs(i, R::ZERO);
-            poisoned = true;
-        }
-    }
-    if poisoned {
-        return Err(Interrupt::NonFinite { what: "initial |r|^2", iteration: *iterations });
-    }
-    for i in 0..nrhs {
-        if active[i] {
-            stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
-            if rr[i] <= limit[i] {
-                active[i] = false;
-                stats[i].converged = true;
-            }
-        }
-    }
-    let mut p = r.clone();
     let mut stag = StagnationTracker::new(health.stagnation_window);
 
     while *iterations < maxiter && active.iter().any(|&a| a) {
@@ -1183,6 +1291,31 @@ fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
         }
         op.fault_hook(*iterations)
             .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
+        if let Some(ck) = ckpt.as_deref_mut() {
+            if ck.due(*iterations as u64) {
+                let mut st = SolverState::new(FAMILY_BLOCK_CG, *iterations as u64);
+                st.restarts = restarts as u64;
+                st.flops = *flops;
+                st.scalars = rr.clone();
+                st.history = history.clone();
+                st.masks = active.to_vec();
+                st.per_rhs = stats
+                    .iter()
+                    .map(|s| RhsRecord {
+                        iterations: s.iterations as u64,
+                        converged: s.converged,
+                        rel_residual: s.rel_residual,
+                        history: s.history.clone(),
+                    })
+                    .collect();
+                st.fields = vec![
+                    FieldSnap::of_multi("x", x),
+                    FieldSnap::of_multi("r", &r),
+                    FieldSnap::of_multi("p", &p),
+                ];
+                scoped(prof, 0, Phase::Checkpoint, || ck.save_multi(st, op));
+            }
+        }
         let nact = active.iter().filter(|&&a| a).count() as u64;
         let rr_iter = rr.clone();
         let mask: Vec<bool> = active.to_vec();
@@ -1448,6 +1581,39 @@ pub fn block_bicgstab_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
     health: &HealthConfig,
     prof: Option<&Profiler>,
 ) -> Result<BlockSolveStats, SolveError> {
+    block_bicgstab_generic_guarded_ckpt(
+        op, team, x, b, tol, maxiter, health, prof, None, None,
+    )
+}
+
+/// Cross-iteration block-BiCGStab state restored on resume; `v`/`t`
+/// are recomputed before first read each iteration, so only the
+/// residuals, search directions, shadow residual, and the per-RHS
+/// `rr`/`rho` scalars are part of the checkpoint.
+struct BlockBiCgResume<R: Real> {
+    r: MultiFermionField<R>,
+    p: MultiFermionField<R>,
+    rhat: MultiFermionField<R>,
+    rr: Vec<f64>,
+    rho: Vec<Complex>,
+}
+
+/// [`block_bicgstab_generic_guarded_profiled`] with a checkpoint sink
+/// and/or resume state — the BiCGStab analog of
+/// [`block_cg_generic_guarded_ckpt`].
+#[allow(clippy::too_many_arguments)]
+pub fn block_bicgstab_generic_guarded_ckpt<R: Real, A: MultiOperator<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut MultiFermionField<R>,
+    b: &MultiFermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+    prof: Option<&Profiler>,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: Option<&SolverState>,
+) -> Result<BlockSolveStats, SolveError> {
     let nrhs = op.nrhs();
     assert_eq!(b.nrhs, nrhs, "rhs count mismatch");
     assert_eq!(x.nrhs, nrhs, "solution count mismatch");
@@ -1461,9 +1627,10 @@ pub fn block_bicgstab_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
     let mut iterations = 0usize;
     let mut flops = 0u64;
     let c0 = op.comm_counters();
+    let z0 = op.comm_zero_fills();
     let counters = |op: &A| {
         let c1 = op.comm_counters();
-        (c1.0 - c0.0, c1.1 - c0.1)
+        (c1.0 - c0.0, c1.1 - c0.1, op.comm_zero_fills() - z0)
     };
 
     let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
@@ -1495,6 +1662,39 @@ pub fn block_bicgstab_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
         return Err(with_mask(e, &stats));
     }
 
+    let mut pack = None;
+    if let Some(st) = resume {
+        if st.family != FAMILY_BLOCK_BICGSTAB {
+            return Err(SolveError::checkpoint(format!(
+                "checkpoint holds family tag {}, not block bicgstab",
+                st.family
+            )));
+        }
+        st.restore_into("x", &mut x.data).map_err(SolveError::checkpoint)?;
+        let mut r = b.zeros_like();
+        st.restore_into("r", &mut r.data).map_err(SolveError::checkpoint)?;
+        let mut p = b.zeros_like();
+        st.restore_into("p", &mut p.data).map_err(SolveError::checkpoint)?;
+        let mut rhat = b.zeros_like();
+        st.restore_into("rhat", &mut rhat.data)
+            .map_err(SolveError::checkpoint)?;
+        // scalars: per-RHS rr, then per-RHS (rho.re, rho.im) pairs
+        if st.scalars.len() != 3 * nrhs {
+            return Err(SolveError::checkpoint("missing per-rhs rr/rho scalars"));
+        }
+        let rr = st.scalars[..nrhs].to_vec();
+        let rho: Vec<Complex> = (0..nrhs)
+            .map(|i| Complex::new(st.scalars[nrhs + 2 * i], st.scalars[nrhs + 2 * i + 1]))
+            .collect();
+        restore_block_rhs(st, nrhs, &mut active, &mut stats)?;
+        guard.restarts = st.restarts as usize;
+        history = st.history.clone();
+        iterations = st.iteration as usize;
+        flops = st.flops;
+        op.restore_fault_cursors(&st.fault_cursors);
+        pack = Some(BlockBiCgResume { r, p, rhat, rr, rho });
+    }
+
     let mut flops_at_restart = 0u64;
     loop {
         match block_bicgstab_generic_attempt(
@@ -1512,6 +1712,9 @@ pub fn block_bicgstab_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
             &mut history,
             &mut flops,
             prof,
+            guard.restarts,
+            ckpt.as_deref_mut(),
+            &mut pack,
         ) {
             Ok(mut out) => {
                 if health.drift_tol > 0.0 {
@@ -1553,6 +1756,7 @@ pub fn block_bicgstab_generic_guarded_profiled<R: Real, A: MultiOperator<R>>(
                 out.health_events = guard.events.len();
                 out.retransmits = c.0;
                 out.timeouts = c.1;
+                out.zero_fills = c.2;
                 return Ok(out);
             }
             Err(int) => {
@@ -1586,6 +1790,9 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
     history: &mut Vec<f64>,
     flops: &mut u64,
     prof: Option<&Profiler>,
+    restarts: usize,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: &mut Option<BlockBiCgResume<R>>,
 ) -> Result<BlockSolveStats, Interrupt> {
     let nrhs = b.nrhs;
     let ntiles = b.site_tiles();
@@ -1598,71 +1805,84 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
     let count = |m: &[bool]| m.iter().filter(|&&a| a).count() as u64;
     let cfin = |c: Complex| c.re.is_finite() && c.im.is_finite();
 
+    let resumed = resume.take();
     op.fault_hook(*iterations)
         .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
 
     let mut caps: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles * nrhs];
-    let mut r = b.clone();
     let mut t = b.zeros_like();
-    let mut rr = bnorm2.to_vec();
-    if op.reduce_any(!x.is_zero()) {
-        op.apply_multi(team, &mut t, x, active, None);
-        for tl in 0..ntiles {
-            for i in 0..nrhs {
-                if !active[i] {
-                    continue;
+    let (mut r, rhat, mut p, mut rr, mut rho);
+    if let Some(rs) = resumed {
+        // Bitwise continuation: the restored pack carries the exact
+        // r/p/rhat/rr/rho of the checkpointed iteration; the warm-start
+        // re-derivation below is only for health restarts.
+        r = rs.r;
+        rhat = rs.rhat;
+        p = rs.p;
+        rr = rs.rr;
+        rho = rs.rho;
+    } else {
+        r = b.clone();
+        rr = bnorm2.to_vec();
+        if op.reduce_any(!x.is_zero()) {
+            op.apply_multi(team, &mut t, x, active, None);
+            for tl in 0..ntiles {
+                for i in 0..nrhs {
+                    if !active[i] {
+                        continue;
+                    }
+                    let off = (tl * nrhs + i) * vpt;
+                    let rt = &mut r.data[off..off + vpt];
+                    blas::axpy_slice(rt, -R::ONE, &t.data[off..off + vpt]);
+                    caps[tl * nrhs + i] = [0.0, 0.0, blas::norm2_tile(rt, vlen)];
                 }
-                let off = (tl * nrhs + i) * vpt;
-                let rt = &mut r.data[off..off + vpt];
-                blas::axpy_slice(rt, -R::ONE, &t.data[off..off + vpt]);
-                caps[tl * nrhs + i] = [0.0, 0.0, blas::norm2_tile(rt, vlen)];
+            }
+            let red = op.reduce_caps(&caps);
+            for i in 0..nrhs {
+                if active[i] {
+                    rr[i] = red[i][2];
+                }
+            }
+            *flops += count(active)
+                * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
+            if active.iter().any(|&a| a) {
+                *flops += flops_shared;
             }
         }
-        let red = op.reduce_caps(&caps);
+        let mut poisoned = false;
+        for i in 0..nrhs {
+            if active[i] && !rr[i].is_finite() {
+                x.fill_rhs(i, R::ZERO);
+                poisoned = true;
+            }
+        }
+        if poisoned {
+            return Err(Interrupt::NonFinite { what: "initial |r|^2", iteration: *iterations });
+        }
         for i in 0..nrhs {
             if active[i] {
-                rr[i] = red[i][2];
+                stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
+                if rr[i] <= limit[i] {
+                    active[i] = false;
+                    stats[i].converged = true;
+                }
             }
         }
-        *flops += count(active)
-            * (flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal));
-        if active.iter().any(|&a| a) {
-            *flops += flops_shared;
-        }
-    }
-    let mut poisoned = false;
-    for i in 0..nrhs {
-        if active[i] && !rr[i].is_finite() {
-            x.fill_rhs(i, R::ZERO);
-            poisoned = true;
-        }
-    }
-    if poisoned {
-        return Err(Interrupt::NonFinite { what: "initial |r|^2", iteration: *iterations });
-    }
-    for i in 0..nrhs {
-        if active[i] {
-            stats[i].rel_residual = (rr[i] / bnorm2[i]).sqrt();
-            if rr[i] <= limit[i] {
-                active[i] = false;
-                stats[i].converged = true;
+        rhat = r.clone();
+        p = r.clone();
+        // rho = <rhat, r> through the operator's reduction (bitwise the
+        // local dot_per_rhs on a single rank)
+        rhat.cdot_norm2_partials(&r, active, &mut caps);
+        let red = op.reduce_caps(&caps);
+        rho = red.iter().map(|c| Complex::new(c[0], c[1])).collect();
+        for i in 0..nrhs {
+            if active[i] && !cfin(rho[i]) {
+                return Err(Interrupt::NonFinite { what: "rho", iteration: *iterations });
             }
         }
+        *flops += count(active) * fl::cdot_flops(nreal);
     }
-    let rhat = r.clone();
-    let mut p = r.clone();
     let mut v = b.zeros_like();
-    // rho = <rhat, r> through the operator's reduction (bitwise the
-    // local dot_per_rhs on a single rank)
-    rhat.cdot_norm2_partials(&r, active, &mut caps);
-    let red = op.reduce_caps(&caps);
-    let mut rho: Vec<Complex> = red.iter().map(|c| Complex::new(c[0], c[1])).collect();
-    for i in 0..nrhs {
-        if active[i] && !cfin(rho[i]) {
-            return Err(Interrupt::NonFinite { what: "rho", iteration: *iterations });
-        }
-    }
-    *flops += count(active) * fl::cdot_flops(nreal);
     let mut stag = StagnationTracker::new(health.stagnation_window);
 
     while *iterations < maxiter && active.iter().any(|&a| a) {
@@ -1671,6 +1891,36 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
         }
         op.fault_hook(*iterations)
             .map_err(|err| Interrupt::Comm { err, iteration: *iterations })?;
+        if let Some(ck) = ckpt.as_deref_mut() {
+            if ck.due(*iterations as u64) {
+                let mut st = SolverState::new(FAMILY_BLOCK_BICGSTAB, *iterations as u64);
+                st.restarts = restarts as u64;
+                st.flops = *flops;
+                st.scalars = rr
+                    .iter()
+                    .copied()
+                    .chain(rho.iter().flat_map(|c| [c.re, c.im]))
+                    .collect();
+                st.history = history.clone();
+                st.masks = active.to_vec();
+                st.per_rhs = stats
+                    .iter()
+                    .map(|s| RhsRecord {
+                        iterations: s.iterations as u64,
+                        converged: s.converged,
+                        rel_residual: s.rel_residual,
+                        history: s.history.clone(),
+                    })
+                    .collect();
+                st.fields = vec![
+                    FieldSnap::of_multi("x", x),
+                    FieldSnap::of_multi("r", &r),
+                    FieldSnap::of_multi("p", &p),
+                    FieldSnap::of_multi("rhat", &rhat),
+                ];
+                scoped(prof, 0, Phase::Checkpoint, || ck.save_multi(st, op));
+            }
+        }
         let rho_iter = rho.clone();
         let mask: Vec<bool> = active.to_vec();
         // sweep 1: v = A p with per-RHS <rhat, v> capture

@@ -12,8 +12,10 @@
 use crate::algebra::Real;
 use crate::coordinator::operator::LinearOperator;
 use crate::dslash::flops as fl;
+use crate::field::snapshot::FieldSnap;
 use crate::field::FermionField;
 
+use super::checkpoint::{Checkpointer, SolverState, FAMILY_CG};
 use super::fused::CG_UNFUSED_SWEEPS;
 use super::health::{
     HealthConfig, HealthGuard, Interrupt, SolveError, StagnationTracker,
@@ -50,16 +52,78 @@ pub fn cg_guarded<R: Real, A: LinearOperator<R>>(
     maxiter: usize,
     health: &HealthConfig,
 ) -> Result<SolveStats, SolveError> {
+    cg_guarded_ckpt(op, x, b, tol, maxiter, health, None, None)
+}
+
+/// Cross-iteration Krylov state restored from a checkpoint, consumed by
+/// the first attempt after a resume.
+struct CgResume<R: Real> {
+    r: FermionField<R>,
+    p: FermionField<R>,
+    rr: f64,
+}
+
+/// [`cg_guarded`] with a checkpoint sink and/or a resume state. `ckpt`
+/// saves complete solver state on its cadence; `resume` restores a
+/// state saved by this family and continues with a residual history
+/// bitwise identical to the uninterrupted run from that iteration on.
+#[allow(clippy::too_many_arguments)]
+pub fn cg_guarded_ckpt<R: Real, A: LinearOperator<R>>(
+    op: &mut A,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    health: &HealthConfig,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: Option<&SolverState>,
+) -> Result<SolveStats, SolveError> {
     let mut guard = HealthGuard::new(health);
     let mut history = Vec::new();
     let mut flops = 0u64;
+    let mut pack = None;
+    if let Some(st) = resume {
+        if st.family != FAMILY_CG {
+            return Err(SolveError::checkpoint(format!(
+                "checkpoint holds family tag {}, not cg",
+                st.family
+            )));
+        }
+        st.restore_into("x", &mut x.data).map_err(SolveError::checkpoint)?;
+        let mut r = b.zeros_like();
+        st.restore_into("r", &mut r.data).map_err(SolveError::checkpoint)?;
+        let mut p = b.zeros_like();
+        st.restore_into("p", &mut p.data).map_err(SolveError::checkpoint)?;
+        let rr = *st
+            .scalars
+            .first()
+            .ok_or_else(|| SolveError::checkpoint("missing rr scalar"))?;
+        guard.restarts = st.restarts as usize;
+        history = st.history.clone();
+        flops = st.flops;
+        op.restore_fault_cursors(&st.fault_cursors);
+        pack = Some(CgResume { r, p, rr });
+    }
     let c0 = op.comm_counters();
+    let z0 = op.comm_zero_fills();
     let counters = |op: &A| {
         let c1 = op.comm_counters();
-        (c1.0 - c0.0, c1.1 - c0.1)
+        (c1.0 - c0.0, c1.1 - c0.1, op.comm_zero_fills() - z0)
     };
     loop {
-        match cg_attempt(op, x, b, tol, maxiter, health, &mut history, &mut flops) {
+        match cg_attempt(
+            op,
+            x,
+            b,
+            tol,
+            maxiter,
+            health,
+            &mut history,
+            &mut flops,
+            guard.restarts,
+            ckpt.as_deref_mut(),
+            &mut pack,
+        ) {
             Ok(mut stats) => {
                 // Drift check at apparent convergence: the recursive
                 // residual can silently diverge from the true one; a
@@ -105,6 +169,9 @@ fn cg_attempt<R: Real, A: LinearOperator<R>>(
     health: &HealthConfig,
     history: &mut Vec<f64>,
     flops: &mut u64,
+    restarts: usize,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: &mut Option<CgResume<R>>,
 ) -> Result<SolveStats, Interrupt> {
     let finish = |history: &[f64], flops: u64, converged: bool, rel: f64| SolveStats {
         iterations: history.len(),
@@ -119,51 +186,80 @@ fn cg_attempt<R: Real, A: LinearOperator<R>>(
         health_events: 0,
         retransmits: 0,
         timeouts: 0,
+        zero_fills: 0,
     };
+    let resumed = resume.take();
     op.fault_hook(history.len())
         .map_err(|err| Interrupt::Comm { err, iteration: history.len() })?;
     let bnorm2 = op.reduce_sum(b.norm2());
     let nreal = b.data.len() as u64;
-    *flops += fl::norm2_flops(nreal);
+    if resumed.is_none() {
+        *flops += fl::norm2_flops(nreal);
+    }
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
         return Ok(finish(&[], 0, true, 0.0));
     }
     let limit = tol * tol * bnorm2;
 
-    // r = b - A x; for the common zero initial guess skip the operator
-    // apply entirely (r = b and |r|² = |b|² are already known). The
-    // skip must be agreed globally — `apply`/`reduce_sum` are
-    // collective for distributed operators, so a rank-local decision
-    // would mismatch the collectives.
-    let x_zero = op.reduce_sum(if x.is_zero() { 0.0 } else { 1.0 }) == 0.0;
-    let mut r = b.clone();
     let mut ap = b.zeros_like();
-    let mut rr;
-    if x_zero {
-        rr = bnorm2;
+    let (mut r, mut p, mut rr);
+    if let Some(rs) = resumed {
+        // A checkpoint resume: the cross-iteration state (r, p, rr) is
+        // restored bit-for-bit, so the loop below continues exactly
+        // where the interrupted run's iteration boundary was.
+        r = rs.r;
+        p = rs.p;
+        rr = rs.rr;
     } else {
-        op.apply(&mut ap, x);
-        r.axpy(-R::ONE, &ap);
-        rr = op.reduce_sum(r.norm2());
-        *flops += op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        // r = b - A x; for the common zero initial guess skip the
+        // operator apply entirely (r = b and |r|² = |b|² are already
+        // known). The skip must be agreed globally — `apply`/
+        // `reduce_sum` are collective for distributed operators, so a
+        // rank-local decision would mismatch the collectives.
+        let x_zero = op.reduce_sum(if x.is_zero() { 0.0 } else { 1.0 }) == 0.0;
+        r = b.clone();
+        if x_zero {
+            rr = bnorm2;
+        } else {
+            op.apply(&mut ap, x);
+            r.axpy(-R::ONE, &ap);
+            rr = op.reduce_sum(r.norm2());
+            *flops +=
+                op.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        }
+        if !rr.is_finite() {
+            // the warm iterate itself is poisoned: nothing to preserve,
+            // so fall back to a cold restart before giving up
+            x.fill(R::ZERO);
+            return Err(Interrupt::NonFinite {
+                what: "initial |r|^2",
+                iteration: history.len(),
+            });
+        }
+        p = r.clone();
     }
-    if !rr.is_finite() {
-        // the warm iterate itself is poisoned: nothing to preserve, so
-        // fall back to a cold restart before giving up
-        x.fill(R::ZERO);
-        return Err(Interrupt::NonFinite {
-            what: "initial |r|^2",
-            iteration: history.len(),
-        });
-    }
-    let mut p = r.clone();
     let mut stag = StagnationTracker::new(health.stagnation_window);
 
     while history.len() < maxiter && rr > limit {
         let iteration = history.len();
         op.fault_hook(iteration)
             .map_err(|err| Interrupt::Comm { err, iteration })?;
+        if let Some(ck) = ckpt.as_deref_mut() {
+            if ck.due(iteration as u64) {
+                let mut st = SolverState::new(FAMILY_CG, iteration as u64);
+                st.restarts = restarts as u64;
+                st.flops = *flops;
+                st.scalars = vec![rr];
+                st.history = history.clone();
+                st.fields = vec![
+                    FieldSnap::of_fermion("x", x),
+                    FieldSnap::of_fermion("r", &r),
+                    FieldSnap::of_fermion("p", &p),
+                ];
+                ck.save_lin(st, op);
+            }
+        }
         op.apply(&mut ap, &p);
         let pap = op.reduce_sum(p.dot_re(&ap));
         if !pap.is_finite() {

@@ -1,0 +1,800 @@
+//! Deterministic checkpoint/restart for long Krylov solves.
+//!
+//! A checkpoint captures *complete* solver state at an iteration
+//! boundary — the iterate, every cross-iteration Krylov vector, the
+//! iteration scalars, per-RHS convergence masks and statistics, the
+//! health-guard restart counter, and the fault-plan sequence cursors —
+//! plus a content hash of the gauge configuration the solve runs
+//! against. Because the repo's reductions use canonical grouping
+//! (bitwise identical across thread counts and rank layouts), restoring
+//! that state reproduces the uninterrupted run's residual history
+//! *bitwise* from the checkpoint iteration onward; the corruption tests
+//! in `rust/tests/checkpoint.rs` pin that contract per solver family.
+//!
+//! ## On-disk format (all integers little-endian)
+//!
+//! ```text
+//! +--------+---------+------------+------------+-------------+---------+-------+
+//! | magic  | version | gauge_hash | generation | payload_len | payload | crc32 |
+//! | 8 B    | u32     | u64        | u64        | u64         | ...     | u32   |
+//! +--------+---------+------------+------------+-------------+---------+-------+
+//! magic = "LQCKPT01"; crc32 = IEEE CRC-32 of the payload bytes.
+//! ```
+//!
+//! Files are written atomically (temp file + fsync + rename) as
+//! `ckpt-r<rank>-g<gen>.lqckpt`; a generation *counts* only once its
+//! commit marker `ckpt-r<rank>-g<gen>.ok` exists. On the distributed
+//! path the marker is written only after an all-ranks collective agrees
+//! every rank durably wrote the generation (two-phase commit), so the
+//! highest generation committed by *all* ranks is always a globally
+//! consistent resume point. Older generations are kept (`keep`-deep
+//! rotation) so a corrupted newest checkpoint falls back instead of
+//! failing; each rank can additionally hold an in-memory buddy copy of
+//! its ring-neighbor's latest checkpoint, exchanged over the existing
+//! `Comm` transport, to re-materialize a lost file after a rank death.
+
+use std::fmt;
+use std::fs;
+use std::io::Write as _;
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::algebra::Real;
+use crate::coordinator::operator::{LinearOperator, MultiOperator};
+use crate::field::snapshot::FieldSnap;
+
+const MAGIC: &[u8; 8] = b"LQCKPT01";
+/// Bump on any payload layout change; older files become `StaleVersion`.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Solver family tags stored in the payload (resume refuses a family
+/// mismatch rather than misinterpreting vectors).
+pub const FAMILY_CG: u8 = 0;
+pub const FAMILY_BICGSTAB: u8 = 1;
+pub const FAMILY_MIXED: u8 = 2;
+pub const FAMILY_FUSED_CG: u8 = 3;
+pub const FAMILY_FUSED_BICGSTAB: u8 = 4;
+pub const FAMILY_BLOCK_CG: u8 = 5;
+pub const FAMILY_BLOCK_BICGSTAB: u8 = 6;
+
+/// IEEE CRC-32 (reflected, poly 0xEDB88320), bitwise — fast enough for
+/// checkpoint cadences and keeps the crate dependency-free.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= u32::from(b);
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Structured checkpoint failures; every variant that concerns a file
+/// names the generation so operators know which one was rejected.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    Io { gen: Option<u64>, msg: String },
+    Truncated { gen: u64, len: usize },
+    BadMagic { gen: u64 },
+    StaleVersion { gen: u64, found: u32 },
+    BadCrc { gen: u64, want: u32, found: u32 },
+    GaugeMismatch { gen: u64, want: u64, found: u64 },
+    Malformed { gen: u64, what: &'static str },
+    NoCheckpoint,
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io { gen: Some(g), msg } => {
+                write!(f, "checkpoint generation {g}: io error: {msg}")
+            }
+            CheckpointError::Io { gen: None, msg } => write!(f, "checkpoint io error: {msg}"),
+            CheckpointError::Truncated { gen, len } => {
+                write!(f, "checkpoint generation {gen}: truncated ({len} bytes)")
+            }
+            CheckpointError::BadMagic { gen } => {
+                write!(f, "checkpoint generation {gen}: bad magic (not a checkpoint file)")
+            }
+            CheckpointError::StaleVersion { gen, found } => write!(
+                f,
+                "checkpoint generation {gen}: format version {found}, this build reads {FORMAT_VERSION}"
+            ),
+            CheckpointError::BadCrc { gen, want, found } => write!(
+                f,
+                "checkpoint generation {gen}: payload crc mismatch (stored {want:#010x}, computed {found:#010x})"
+            ),
+            CheckpointError::GaugeMismatch { gen, want, found } => write!(
+                f,
+                "checkpoint generation {gen}: gauge hash {found:#018x} does not match this configuration ({want:#018x})"
+            ),
+            CheckpointError::Malformed { gen, what } => {
+                write!(f, "checkpoint generation {gen}: malformed payload ({what})")
+            }
+            CheckpointError::NoCheckpoint => write!(f, "no committed checkpoint generation found"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// Per-RHS statistics captured so a resumed block solve reports the
+/// same per-RHS histories as the uninterrupted run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RhsRecord {
+    pub iterations: u64,
+    pub converged: bool,
+    pub rel_residual: f64,
+    pub history: Vec<f64>,
+}
+
+/// Complete solver state at one iteration boundary.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SolverState {
+    pub family: u8,
+    pub iteration: u64,
+    pub restarts: u64,
+    pub flops: u64,
+    /// family-specific iteration scalars (rr, rho, alpha, omega, ...)
+    pub scalars: Vec<f64>,
+    pub history: Vec<f64>,
+    /// per-RHS active mask (empty for single-RHS families)
+    pub masks: Vec<bool>,
+    pub per_rhs: Vec<RhsRecord>,
+    /// fault-plan sequence cursors (see `Comm::fault_cursors`)
+    pub fault_cursors: Vec<u64>,
+    pub fields: Vec<FieldSnap>,
+}
+
+impl SolverState {
+    pub fn new(family: u8, iteration: u64) -> SolverState {
+        SolverState {
+            family,
+            iteration,
+            ..SolverState::default()
+        }
+    }
+
+    pub fn field(&self, name: &str) -> Option<&FieldSnap> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+
+    /// Restore one named snapshot into a value slice; missing names and
+    /// shape mismatches are plain-text errors the caller wraps.
+    pub fn restore_into<R: Real>(&self, name: &str, out: &mut [R]) -> Result<(), String> {
+        match self.field(name) {
+            Some(snap) => snap.restore_slice(out),
+            None => Err(format!("checkpoint holds no field {name:?}")),
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        e.u8(self.family);
+        e.u64(self.iteration);
+        e.u64(self.restarts);
+        e.u64(self.flops);
+        e.f64s(&self.scalars);
+        e.f64s(&self.history);
+        e.u64(self.masks.len() as u64);
+        for &m in &self.masks {
+            e.u8(u8::from(m));
+        }
+        e.u64(self.per_rhs.len() as u64);
+        for r in &self.per_rhs {
+            e.u64(r.iterations);
+            e.u8(u8::from(r.converged));
+            e.f64(r.rel_residual);
+            e.f64s(&r.history);
+        }
+        e.u64(self.fault_cursors.len() as u64);
+        for &c in &self.fault_cursors {
+            e.u64(c);
+        }
+        e.u64(self.fields.len() as u64);
+        for f in &self.fields {
+            e.str(&f.name);
+            e.u32(f.dtype);
+            e.f64s(&f.data);
+        }
+        e.b
+    }
+
+    fn decode(bytes: &[u8]) -> Result<SolverState, &'static str> {
+        let mut d = Dec { b: bytes, pos: 0 };
+        let mut st = SolverState::new(d.u8()?, 0);
+        st.iteration = d.u64()?;
+        st.restarts = d.u64()?;
+        st.flops = d.u64()?;
+        st.scalars = d.f64s()?;
+        st.history = d.f64s()?;
+        let nmask = d.len()?;
+        st.masks = (0..nmask)
+            .map(|_| d.u8().map(|v| v != 0))
+            .collect::<Result<_, _>>()?;
+        let nrhs = d.len()?;
+        for _ in 0..nrhs {
+            st.per_rhs.push(RhsRecord {
+                iterations: d.u64()?,
+                converged: d.u8()? != 0,
+                rel_residual: d.f64()?,
+                history: d.f64s()?,
+            });
+        }
+        let ncur = d.len()?;
+        st.fault_cursors = (0..ncur).map(|_| d.u64()).collect::<Result<_, _>>()?;
+        let nfields = d.len()?;
+        for _ in 0..nfields {
+            st.fields.push(FieldSnap {
+                name: d.str()?,
+                dtype: d.u32()?,
+                data: d.f64s()?,
+            });
+        }
+        if d.pos != bytes.len() {
+            return Err("trailing bytes");
+        }
+        Ok(st)
+    }
+}
+
+#[derive(Default)]
+struct Enc {
+    b: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.b.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.b.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn f64s(&mut self, vs: &[f64]) {
+        self.u64(vs.len() as u64);
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.b.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], &'static str> {
+        if self.pos + n > self.b.len() {
+            return Err("payload ran out of bytes");
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, &'static str> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, &'static str> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, &'static str> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, &'static str> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    /// A length prefix, sanity-capped so a corrupt length cannot ask for
+    /// an absurd allocation.
+    fn len(&mut self) -> Result<usize, &'static str> {
+        let n = self.u64()?;
+        if n > (1 << 40) {
+            return Err("implausible length prefix");
+        }
+        Ok(n as usize)
+    }
+    fn f64s(&mut self) -> Result<Vec<f64>, &'static str> {
+        let n = self.len()?;
+        if self.pos + 8 * n > self.b.len() {
+            return Err("vector ran past payload end");
+        }
+        (0..n).map(|_| self.f64()).collect()
+    }
+    fn str(&mut self) -> Result<String, &'static str> {
+        let n = self.len()?;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| "non-utf8 field name")
+    }
+}
+
+/// Assemble the full file image (header + payload + trailing CRC).
+pub fn encode_file(state: &SolverState, gauge_hash: u64, gen: u64) -> Vec<u8> {
+    let payload = state.encode();
+    let mut b = Vec::with_capacity(payload.len() + 40);
+    b.extend_from_slice(MAGIC);
+    b.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    b.extend_from_slice(&gauge_hash.to_le_bytes());
+    b.extend_from_slice(&gen.to_le_bytes());
+    b.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    let crc = crc32(&payload);
+    b.extend_from_slice(&payload);
+    b.extend_from_slice(&crc.to_le_bytes());
+    b
+}
+
+/// Validate and decode a file image. `gen` labels errors and is
+/// cross-checked against the header; `expect_gauge` guards against
+/// resuming on the wrong configuration.
+pub fn decode_file(bytes: &[u8], gen: u64, expect_gauge: u64) -> Result<SolverState, CheckpointError> {
+    const HEADER: usize = 8 + 4 + 8 + 8 + 8;
+    if bytes.len() < HEADER + 4 {
+        return Err(CheckpointError::Truncated { gen, len: bytes.len() });
+    }
+    if &bytes[..8] != MAGIC {
+        return Err(CheckpointError::BadMagic { gen });
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != FORMAT_VERSION {
+        return Err(CheckpointError::StaleVersion { gen, found: version });
+    }
+    let found_gauge = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    if found_gauge != expect_gauge {
+        return Err(CheckpointError::GaugeMismatch {
+            gen,
+            want: expect_gauge,
+            found: found_gauge,
+        });
+    }
+    let stored_gen = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    if stored_gen != gen {
+        return Err(CheckpointError::Malformed {
+            gen,
+            what: "header generation does not match file name",
+        });
+    }
+    let plen = u64::from_le_bytes(bytes[28..36].try_into().unwrap()) as usize;
+    if bytes.len() != HEADER + plen + 4 {
+        return Err(CheckpointError::Truncated { gen, len: bytes.len() });
+    }
+    let payload = &bytes[HEADER..HEADER + plen];
+    let want = u32::from_le_bytes(bytes[HEADER + plen..].try_into().unwrap());
+    let found = crc32(payload);
+    if want != found {
+        return Err(CheckpointError::BadCrc { gen, want, found });
+    }
+    SolverState::decode(payload).map_err(|what| CheckpointError::Malformed { gen, what })
+}
+
+pub fn ckpt_path(dir: &Path, rank: usize, gen: u64) -> PathBuf {
+    dir.join(format!("ckpt-r{rank}-g{gen:08}.lqckpt"))
+}
+
+pub fn commit_path(dir: &Path, rank: usize, gen: u64) -> PathBuf {
+    dir.join(format!("ckpt-r{rank}-g{gen:08}.ok"))
+}
+
+/// Read + validate one on-disk generation for one rank.
+pub fn read_state_file(
+    dir: &Path,
+    rank: usize,
+    gen: u64,
+    expect_gauge: u64,
+) -> Result<SolverState, CheckpointError> {
+    let path = ckpt_path(dir, rank, gen);
+    let bytes = fs::read(&path).map_err(|e| CheckpointError::Io {
+        gen: Some(gen),
+        msg: format!("{}: {e}", path.display()),
+    })?;
+    decode_file(&bytes, gen, expect_gauge)
+}
+
+/// Generations whose commit marker exists for `rank`, ascending.
+pub fn committed_generations(dir: &Path, rank: usize) -> Vec<u64> {
+    let prefix = format!("ckpt-r{rank}-g");
+    let mut gens = Vec::new();
+    if let Ok(entries) = fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(rest) = name.strip_prefix(&prefix) {
+                if let Some(digits) = rest.strip_suffix(".ok") {
+                    if let Ok(g) = digits.parse::<u64>() {
+                        gens.push(g);
+                    }
+                }
+            }
+        }
+    }
+    gens.sort_unstable();
+    gens
+}
+
+/// Load the newest generation for `rank` that every rank of an
+/// `nranks`-wide world committed, falling back to older common
+/// generations when a file fails validation. Returns the state and the
+/// generation it came from; the first validation failure (if any) is
+/// what you get when nothing loads.
+pub fn load_latest(
+    dir: &Path,
+    rank: usize,
+    nranks: usize,
+    expect_gauge: u64,
+) -> Result<(SolverState, u64), CheckpointError> {
+    let mut common = committed_generations(dir, rank);
+    for r in (0..nranks).filter(|&r| r != rank) {
+        let theirs = committed_generations(dir, r);
+        common.retain(|g| theirs.contains(g));
+    }
+    let mut first_err = None;
+    for &gen in common.iter().rev() {
+        match read_state_file(dir, rank, gen, expect_gauge) {
+            Ok(st) => return Ok((st, gen)),
+            Err(e) => {
+                eprintln!("checkpoint: {e}; trying previous generation");
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    Err(first_err.unwrap_or(CheckpointError::NoCheckpoint))
+}
+
+/// Pack raw bytes into f64 bit patterns for transport over `Comm`
+/// (length first, then 8 bytes per lane; no FP arithmetic ever touches
+/// the lanes, so the bits survive).
+pub fn bytes_to_f64s(bytes: &[u8]) -> Vec<f64> {
+    let mut v = Vec::with_capacity(1 + bytes.len().div_ceil(8));
+    v.push(f64::from_bits(bytes.len() as u64));
+    for chunk in bytes.chunks(8) {
+        let mut b = [0u8; 8];
+        b[..chunk.len()].copy_from_slice(chunk);
+        v.push(f64::from_bits(u64::from_le_bytes(b)));
+    }
+    v
+}
+
+pub fn f64s_to_bytes(v: &[f64]) -> Option<Vec<u8>> {
+    let n = v.first()?.to_bits() as usize;
+    if n > (v.len() - 1) * 8 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n);
+    for lane in &v[1..] {
+        out.extend_from_slice(&lane.to_bits().to_le_bytes());
+    }
+    out.truncate(n);
+    Some(out)
+}
+
+/// In-memory copy of a neighbor's checkpoint file, good for
+/// re-materializing a dead rank's state on the surviving side.
+#[derive(Clone, Debug)]
+pub struct BuddyCopy {
+    pub owner: usize,
+    pub gen: u64,
+    pub bytes: Vec<u8>,
+}
+
+/// Write a buddy copy back to disk as the owner's committed generation
+/// (file first, then marker — same commit order as a live rank).
+pub fn restore_from_buddy(dir: &Path, copy: &BuddyCopy) -> Result<(), CheckpointError> {
+    let io = |e: std::io::Error| CheckpointError::Io {
+        gen: Some(copy.gen),
+        msg: e.to_string(),
+    };
+    fs::create_dir_all(dir).map_err(io)?;
+    fs::write(ckpt_path(dir, copy.owner, copy.gen), &copy.bytes).map_err(io)?;
+    fs::write(commit_path(dir, copy.owner, copy.gen), format!("{}\n", copy.gen)).map_err(io)?;
+    Ok(())
+}
+
+/// Cadence / placement knobs for one solve attempt.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CkptOpts {
+    pub dir: PathBuf,
+    /// checkpoint every N iterations (0 disables the iteration cadence)
+    pub every_iters: u64,
+    /// wall-clock cadence in ms (0 disables; ignored when nranks > 1
+    /// because clocks may disagree across ranks and the commit protocol
+    /// is collective)
+    pub every_ms: u64,
+    /// how many committed generations to keep on disk
+    pub keep: usize,
+    /// exchange in-memory buddy copies with the ring neighbor
+    pub buddy: bool,
+}
+
+impl CkptOpts {
+    pub fn new(dir: impl Into<PathBuf>) -> CkptOpts {
+        CkptOpts {
+            dir: dir.into(),
+            every_iters: 25,
+            every_ms: 0,
+            keep: 2,
+            buddy: true,
+        }
+    }
+}
+
+/// Internal adapter so one `&mut op` serves both collective hooks
+/// during a save.
+trait CommitHooks {
+    fn all_committed(&mut self, ok: bool) -> bool;
+    fn buddy_exchange(&mut self, payload: &[f64], gen: u64) -> Option<Vec<f64>>;
+}
+
+struct LinHooks<'a, R: Real, A: LinearOperator<R> + ?Sized>(&'a mut A, PhantomData<R>);
+
+impl<'a, R: Real, A: LinearOperator<R> + ?Sized> CommitHooks for LinHooks<'a, R, A> {
+    fn all_committed(&mut self, ok: bool) -> bool {
+        self.0.ckpt_all_committed(ok)
+    }
+    fn buddy_exchange(&mut self, payload: &[f64], gen: u64) -> Option<Vec<f64>> {
+        self.0.ckpt_buddy_exchange(payload, gen)
+    }
+}
+
+struct MultiHooks<'a, R: Real, O: MultiOperator<R> + ?Sized>(&'a mut O, PhantomData<R>);
+
+impl<'a, R: Real, O: MultiOperator<R> + ?Sized> CommitHooks for MultiHooks<'a, R, O> {
+    fn all_committed(&mut self, ok: bool) -> bool {
+        self.0.ckpt_all_committed(ok)
+    }
+    fn buddy_exchange(&mut self, payload: &[f64], gen: u64) -> Option<Vec<f64>> {
+        self.0.ckpt_buddy_exchange(payload, gen)
+    }
+}
+
+/// The sink the solvers drive: owns cadence, atomic writes, generation
+/// rotation, the two-phase commit, and the buddy copy. Checkpoint
+/// failures never fail the solve — a save that cannot commit logs to
+/// stderr and disables further attempts for this solve.
+pub struct Checkpointer {
+    opts: CkptOpts,
+    rank: usize,
+    nranks: usize,
+    gauge_hash: u64,
+    next_gen: u64,
+    committed: u64,
+    last_save: Instant,
+    degraded: bool,
+    buddy_payload: Option<BuddyCopy>,
+}
+
+impl Checkpointer {
+    pub fn new(
+        opts: CkptOpts,
+        rank: usize,
+        nranks: usize,
+        gauge_hash: u64,
+    ) -> Result<Checkpointer, CheckpointError> {
+        fs::create_dir_all(&opts.dir).map_err(|e| CheckpointError::Io {
+            gen: None,
+            msg: format!("{}: {e}", opts.dir.display()),
+        })?;
+        let next_gen = committed_generations(&opts.dir, rank)
+            .last()
+            .map(|g| g + 1)
+            .unwrap_or(0);
+        Ok(Checkpointer {
+            opts,
+            rank,
+            nranks,
+            gauge_hash,
+            next_gen,
+            committed: 0,
+            last_save: Instant::now(),
+            degraded: false,
+            buddy_payload: None,
+        })
+    }
+
+    /// Should this iteration boundary checkpoint? Deterministic across
+    /// ranks for the iteration cadence; the wall-clock cadence only
+    /// applies single-rank (see `CkptOpts::every_ms`).
+    pub fn due(&self, iteration: u64) -> bool {
+        if self.degraded || iteration == 0 {
+            return false;
+        }
+        if self.opts.every_iters > 0 && iteration % self.opts.every_iters == 0 {
+            return true;
+        }
+        self.nranks == 1
+            && self.opts.every_ms > 0
+            && self.last_save.elapsed().as_millis() as u64 >= self.opts.every_ms
+    }
+
+    /// Generations committed by this sink during this solve.
+    pub fn committed(&self) -> u64 {
+        self.committed
+    }
+
+    pub fn take_buddy(&mut self) -> Option<BuddyCopy> {
+        self.buddy_payload.take()
+    }
+
+    /// Save from a single-RHS solver; fills the fault cursors from the
+    /// operator before encoding.
+    pub fn save_lin<R: Real, A: LinearOperator<R> + ?Sized>(
+        &mut self,
+        mut state: SolverState,
+        op: &mut A,
+    ) -> bool {
+        state.fault_cursors = op.fault_cursors();
+        self.save_inner(state, &mut LinHooks(op, PhantomData))
+    }
+
+    /// Save from a block solver.
+    pub fn save_multi<R: Real, O: MultiOperator<R> + ?Sized>(
+        &mut self,
+        mut state: SolverState,
+        op: &mut O,
+    ) -> bool {
+        state.fault_cursors = op.fault_cursors();
+        self.save_inner(state, &mut MultiHooks(op, PhantomData))
+    }
+
+    fn save_inner(&mut self, state: SolverState, hooks: &mut dyn CommitHooks) -> bool {
+        if self.degraded {
+            return false;
+        }
+        let gen = self.next_gen;
+        self.next_gen = gen + 1;
+        self.last_save = Instant::now();
+        let bytes = encode_file(&state, self.gauge_hash, gen);
+        let wrote = match self.write_atomic(gen, &bytes) {
+            Ok(()) => true,
+            Err(e) => {
+                eprintln!("checkpoint: generation {gen} write failed: {e}");
+                false
+            }
+        };
+        // Phase 2: the generation counts only if every rank wrote it.
+        let all = hooks.all_committed(wrote);
+        if !all {
+            if wrote {
+                let _ = fs::remove_file(ckpt_path(&self.opts.dir, self.rank, gen));
+            }
+            self.degraded = true;
+            eprintln!(
+                "checkpoint: generation {gen} not durable on all ranks; checkpointing disabled for this attempt"
+            );
+            return false;
+        }
+        if let Err(e) = fs::write(
+            commit_path(&self.opts.dir, self.rank, gen),
+            format!("{gen}\n"),
+        ) {
+            eprintln!("checkpoint: generation {gen} commit marker failed: {e}");
+            self.degraded = true;
+            return false;
+        }
+        self.committed += 1;
+        if self.opts.buddy && self.nranks > 1 {
+            if let Some(reply) = hooks.buddy_exchange(&bytes_to_f64s(&bytes), gen) {
+                if let Some(raw) = f64s_to_bytes(&reply) {
+                    self.buddy_payload = Some(BuddyCopy {
+                        owner: (self.rank + self.nranks - 1) % self.nranks,
+                        gen,
+                        bytes: raw,
+                    });
+                }
+            }
+        }
+        self.rotate();
+        true
+    }
+
+    fn write_atomic(&self, gen: u64, bytes: &[u8]) -> std::io::Result<()> {
+        let tmp = self.opts.dir.join(format!(".tmp-r{}-g{gen:08}", self.rank));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, ckpt_path(&self.opts.dir, self.rank, gen))?;
+        // Best-effort directory fsync so the rename itself is durable.
+        if let Ok(d) = fs::File::open(&self.opts.dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+
+    fn rotate(&self) {
+        let gens = committed_generations(&self.opts.dir, self.rank);
+        if gens.len() <= self.opts.keep {
+            return;
+        }
+        for &g in &gens[..gens.len() - self.opts.keep] {
+            let _ = fs::remove_file(ckpt_path(&self.opts.dir, self.rank, g));
+            let _ = fs::remove_file(commit_path(&self.opts.dir, self.rank, g));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The classic IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn sample_state() -> SolverState {
+        let mut st = SolverState::new(FAMILY_BICGSTAB, 17);
+        st.restarts = 2;
+        st.flops = 123_456;
+        st.scalars = vec![1.5, -2.25, 1e-300];
+        st.history = vec![1.0, 0.5, 0.25];
+        st.masks = vec![true, false, true];
+        st.per_rhs = vec![RhsRecord {
+            iterations: 9,
+            converged: true,
+            rel_residual: 1e-7,
+            history: vec![1.0, 1e-7],
+        }];
+        st.fault_cursors = vec![3, 0, 8];
+        st.fields = vec![FieldSnap {
+            name: "r".into(),
+            dtype: 1,
+            data: vec![0.125, -3.5],
+        }];
+        st
+    }
+
+    #[test]
+    fn payload_roundtrip_is_exact() {
+        let st = sample_state();
+        let back = SolverState::decode(&st.encode()).unwrap();
+        assert_eq!(st, back);
+    }
+
+    #[test]
+    fn file_roundtrip_and_header_checks() {
+        let st = sample_state();
+        let img = encode_file(&st, 0xDEAD_BEEF, 4);
+        assert_eq!(decode_file(&img, 4, 0xDEAD_BEEF).unwrap(), st);
+        assert!(matches!(
+            decode_file(&img, 4, 0xBAD),
+            Err(CheckpointError::GaugeMismatch { gen: 4, .. })
+        ));
+        assert!(matches!(
+            decode_file(&img[..10], 4, 0xDEAD_BEEF),
+            Err(CheckpointError::Truncated { gen: 4, .. })
+        ));
+        let mut flipped = img.clone();
+        let mid = 40 + flipped.len().saturating_sub(44) / 2;
+        flipped[mid] ^= 0x10;
+        assert!(matches!(
+            decode_file(&flipped, 4, 0xDEAD_BEEF),
+            Err(CheckpointError::BadCrc { gen: 4, .. })
+        ));
+    }
+
+    #[test]
+    fn byte_packing_roundtrip() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65] {
+            let bytes: Vec<u8> = (0..n).map(|i| (i * 37 + 5) as u8).collect();
+            let lanes = bytes_to_f64s(&bytes);
+            assert_eq!(f64s_to_bytes(&lanes).unwrap(), bytes);
+        }
+        assert!(f64s_to_bytes(&[]).is_none());
+        // A length lane that promises more than the payload carries.
+        assert!(f64s_to_bytes(&[f64::from_bits(64)]).is_none());
+    }
+}

@@ -37,8 +37,12 @@ use crate::coordinator::operator::FusedSolvable;
 use crate::coordinator::profiler::{Phase, Profiler};
 use crate::coordinator::team::{chunk_range, SendPtr, Team};
 use crate::dslash::flops as fl;
+use crate::field::snapshot::FieldSnap;
 use crate::field::{blas, FermionField};
 
+use super::checkpoint::{
+    Checkpointer, SolverState, FAMILY_FUSED_BICGSTAB, FAMILY_FUSED_CG,
+};
 use super::health::{
     HealthConfig, HealthGuard, Interrupt, SolveError, StagnationTracker,
 };
@@ -170,13 +174,65 @@ pub fn cg_guarded<R: Real, A: FusedSolvable<R>>(
     prof: Option<&Profiler>,
     health: &HealthConfig,
 ) -> Result<SolveStats, SolveError> {
+    cg_guarded_ckpt(op, team, x, b, tol, maxiter, prof, health, None, None)
+}
+
+/// Cross-iteration fused-CG state restored from a checkpoint. The
+/// fused pipeline shares state shape with [`super::cg`] (x, r, p, rr):
+/// the same iteration-boundary contract makes fused checkpoints
+/// resumable bitwise.
+struct CgResume<R: Real> {
+    r: FermionField<R>,
+    p: FermionField<R>,
+    rr: f64,
+}
+
+/// [`cg_guarded`] with a checkpoint sink and/or resume state (see
+/// [`super::cg_guarded_ckpt`] for the bitwise-resume contract).
+#[allow(clippy::too_many_arguments)]
+pub fn cg_guarded_ckpt<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
+    health: &HealthConfig,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: Option<&SolverState>,
+) -> Result<SolveStats, SolveError> {
     let mut guard = HealthGuard::new(health);
     let mut history = Vec::new();
     let mut flops = 0u64;
+    let mut pack = None;
+    if let Some(st) = resume {
+        if st.family != FAMILY_FUSED_CG {
+            return Err(SolveError::checkpoint(format!(
+                "checkpoint holds family tag {}, not fused cg",
+                st.family
+            )));
+        }
+        st.restore_into("x", &mut x.data).map_err(SolveError::checkpoint)?;
+        let mut r = b.zeros_like();
+        st.restore_into("r", &mut r.data).map_err(SolveError::checkpoint)?;
+        let mut p = b.zeros_like();
+        st.restore_into("p", &mut p.data).map_err(SolveError::checkpoint)?;
+        let rr = *st
+            .scalars
+            .first()
+            .ok_or_else(|| SolveError::checkpoint("missing rr scalar"))?;
+        guard.restarts = st.restarts as usize;
+        history = st.history.clone();
+        flops = st.flops;
+        op.restore_fault_cursors(&st.fault_cursors);
+        pack = Some(CgResume { r, p, rr });
+    }
     let c0 = op.comm_counters();
+    let z0 = op.comm_zero_fills();
     let counters = |op: &A| {
         let c1 = op.comm_counters();
-        (c1.0 - c0.0, c1.1 - c0.1)
+        (c1.0 - c0.0, c1.1 - c0.1, op.comm_zero_fills() - z0)
     };
     let ntiles = op.fused_view().ntiles();
     let n = team.nthreads();
@@ -185,8 +241,21 @@ pub fn cg_guarded<R: Real, A: FusedSolvable<R>>(
     // (stats.flops stays cumulative across attempts)
     let mut flops_at_restart = 0u64;
     loop {
-        match cg_attempt(op, team, x, b, tol, maxiter, prof, health, &mut history, &mut flops)
-        {
+        match cg_attempt(
+            op,
+            team,
+            x,
+            b,
+            tol,
+            maxiter,
+            prof,
+            health,
+            &mut history,
+            &mut flops,
+            guard.restarts,
+            ckpt.as_deref_mut(),
+            &mut pack,
+        ) {
             Ok(mut stats) => {
                 if stats.converged && health.drift_tol > 0.0 {
                     let ratio = super::health::drift_ratio(
@@ -239,6 +308,9 @@ fn cg_attempt<R: Real, A: FusedSolvable<R>>(
     health: &HealthConfig,
     history: &mut Vec<f64>,
     flops: &mut u64,
+    restarts: usize,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: &mut Option<CgResume<R>>,
 ) -> Result<SolveStats, Interrupt> {
     let flops_apply = op.flops_per_apply();
     let view = op.fused_view();
@@ -261,64 +333,75 @@ fn cg_attempt<R: Real, A: FusedSolvable<R>>(
         health_events: 0,
         retransmits: 0,
         timeouts: 0,
+        zero_fills: 0,
     };
 
+    let resumed = resume.take();
     op.fault_hook(history.len())
         .map_err(|err| Interrupt::Comm { err, iteration: history.len() })?;
     let bnorm2 = b.norm2();
-    *flops += fl::norm2_flops(nreal);
+    if resumed.is_none() {
+        *flops += fl::norm2_flops(nreal);
+    }
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
         return Ok(finish(&[], 0, true, 0.0));
     }
     let limit = tol * tol * bnorm2;
 
-    let mut r = b.clone();
     let mut ap = b.zeros_like();
     let mut dot_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles];
     let mut rr_partials: Vec<f64> = vec![0.0; ntiles];
-    let mut rr;
+    let (mut r, mut p, mut rr);
 
-    if x.is_zero() {
-        // zero initial guess: r = b, |r|² = |b|² — no operator apply
-        rr = bnorm2;
+    if let Some(rs) = resumed {
+        // checkpoint resume: restored state reproduces the interrupted
+        // run's iteration boundary bit-for-bit
+        r = rs.r;
+        p = rs.p;
+        rr = rs.rr;
     } else {
-        // one region: ap = A x, then r = b - ap fused with |r|²
-        let ap_ptr = SendPtr(ap.data.as_mut_ptr());
-        let r_ptr = SendPtr(r.data.as_mut_ptr());
-        let x_raw = SendPtr(x.data.as_mut_ptr());
-        let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
-        team.run(|tid, bar| unsafe {
-            scoped(prof, tid, Phase::Bulk, || {
-                view.apply_team(tid, n, bar, ap_ptr, x_raw.0 as *const R, None)
+        r = b.clone();
+        if x.is_zero() {
+            // zero initial guess: r = b, |r|² = |b|² — no operator apply
+            rr = bnorm2;
+        } else {
+            // one region: ap = A x, then r = b - ap fused with |r|²
+            let ap_ptr = SendPtr(ap.data.as_mut_ptr());
+            let r_ptr = SendPtr(r.data.as_mut_ptr());
+            let x_raw = SendPtr(x.data.as_mut_ptr());
+            let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
+            team.run(|tid, bar| unsafe {
+                scoped(prof, tid, Phase::Bulk, || {
+                    view.apply_team(tid, n, bar, ap_ptr, x_raw.0 as *const R, None)
+                });
+                scoped(prof, tid, Phase::Barrier, || bar.wait());
+                let (tb, te) = chunk_range(ntiles, tid, n);
+                let r_t = r_ptr.slice_mut(tb * vpt, (te - tb) * vpt);
+                let ap_s = ro::<R>(ap_ptr, len);
+                scoped(prof, tid, Phase::Blas, || {
+                    blas::axpy_norm2_slice(
+                        r_t,
+                        -R::ONE,
+                        &ap_s[tb * vpt..te * vpt],
+                        vlen,
+                        rr_ptr.slice_mut(tb, te - tb),
+                    )
+                });
             });
-            scoped(prof, tid, Phase::Barrier, || bar.wait());
-            let (tb, te) = chunk_range(ntiles, tid, n);
-            let r_t = r_ptr.slice_mut(tb * vpt, (te - tb) * vpt);
-            let ap_s = ro::<R>(ap_ptr, len);
-            scoped(prof, tid, Phase::Blas, || {
-                blas::axpy_norm2_slice(
-                    r_t,
-                    -R::ONE,
-                    &ap_s[tb * vpt..te * vpt],
-                    vlen,
-                    rr_ptr.slice_mut(tb, te - tb),
-                )
+            rr = rr_partials.iter().sum();
+            *flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        }
+        if !rr.is_finite() {
+            // poisoned warm iterate: fall back to a cold restart
+            x.fill(R::ZERO);
+            return Err(Interrupt::NonFinite {
+                what: "initial |r|^2",
+                iteration: history.len(),
             });
-        });
-        rr = rr_partials.iter().sum();
-        *flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        }
+        p = r.clone();
     }
-    if !rr.is_finite() {
-        // poisoned warm iterate: fall back to a cold restart
-        x.fill(R::ZERO);
-        return Err(Interrupt::NonFinite {
-            what: "initial |r|^2",
-            iteration: history.len(),
-        });
-    }
-
-    let mut p = r.clone();
     let mut out = IterOut::default();
     let mut stag = StagnationTracker::new(health.stagnation_window);
 
@@ -337,6 +420,21 @@ fn cg_attempt<R: Real, A: FusedSolvable<R>>(
         }
         op.fault_hook(iteration)
             .map_err(|err| Interrupt::Comm { err, iteration })?;
+        if let Some(ck) = ckpt.as_deref_mut() {
+            if ck.due(iteration as u64) {
+                let mut st = SolverState::new(FAMILY_FUSED_CG, iteration as u64);
+                st.restarts = restarts as u64;
+                st.flops = *flops;
+                st.scalars = vec![rr];
+                st.history = history.clone();
+                st.fields = vec![
+                    FieldSnap::of_fermion("x", x),
+                    FieldSnap::of_fermion("r", &r),
+                    FieldSnap::of_fermion("p", &p),
+                ];
+                scoped(prof, 0, Phase::Checkpoint, || ck.save_lin(st, op));
+            }
+        }
         let rr_iter = rr;
         team.run(|tid, bar| unsafe {
             let record = |o: IterOut| {
@@ -465,13 +563,70 @@ pub fn bicgstab_guarded<R: Real, A: FusedSolvable<R>>(
     prof: Option<&Profiler>,
     health: &HealthConfig,
 ) -> Result<SolveStats, SolveError> {
+    bicgstab_guarded_ckpt(op, team, x, b, tol, maxiter, prof, health, None, None)
+}
+
+/// Cross-iteration fused-BiCGStab state restored on resume; `v`/`t`
+/// are recomputed before first read, so the checkpoint carries the
+/// same state as the unfused solver's.
+struct BiCgResume<R: Real> {
+    r: FermionField<R>,
+    p: FermionField<R>,
+    rhat: FermionField<R>,
+    rr: f64,
+    rho: Complex,
+}
+
+/// [`bicgstab_guarded`] with a checkpoint sink and/or resume state
+/// (see [`super::cg_guarded_ckpt`] for the bitwise-resume contract).
+#[allow(clippy::too_many_arguments)]
+pub fn bicgstab_guarded_ckpt<R: Real, A: FusedSolvable<R>>(
+    op: &mut A,
+    team: &mut Team,
+    x: &mut FermionField<R>,
+    b: &FermionField<R>,
+    tol: f64,
+    maxiter: usize,
+    prof: Option<&Profiler>,
+    health: &HealthConfig,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: Option<&SolverState>,
+) -> Result<SolveStats, SolveError> {
     let mut guard = HealthGuard::new(health);
     let mut history = Vec::new();
     let mut flops = 0u64;
+    let mut pack = None;
+    if let Some(st) = resume {
+        if st.family != FAMILY_FUSED_BICGSTAB {
+            return Err(SolveError::checkpoint(format!(
+                "checkpoint holds family tag {}, not fused bicgstab",
+                st.family
+            )));
+        }
+        let mut r = b.zeros_like();
+        let mut p = b.zeros_like();
+        let mut rhat = b.zeros_like();
+        st.restore_into("x", &mut x.data).map_err(SolveError::checkpoint)?;
+        st.restore_into("r", &mut r.data).map_err(SolveError::checkpoint)?;
+        st.restore_into("p", &mut p.data).map_err(SolveError::checkpoint)?;
+        st.restore_into("rhat", &mut rhat.data)
+            .map_err(SolveError::checkpoint)?;
+        if st.scalars.len() < 3 {
+            return Err(SolveError::checkpoint("missing bicgstab scalars"));
+        }
+        let rr = st.scalars[0];
+        let rho = Complex::new(st.scalars[1], st.scalars[2]);
+        guard.restarts = st.restarts as usize;
+        history = st.history.clone();
+        flops = st.flops;
+        op.restore_fault_cursors(&st.fault_cursors);
+        pack = Some(BiCgResume { r, p, rhat, rr, rho });
+    }
     let c0 = op.comm_counters();
+    let z0 = op.comm_zero_fills();
     let counters = |op: &A| {
         let c1 = op.comm_counters();
-        (c1.0 - c0.0, c1.1 - c0.1)
+        (c1.0 - c0.0, c1.1 - c0.1, op.comm_zero_fills() - z0)
     };
     let ntiles = op.fused_view().ntiles();
     let n = team.nthreads();
@@ -480,7 +635,19 @@ pub fn bicgstab_guarded<R: Real, A: FusedSolvable<R>>(
     let mut flops_at_restart = 0u64;
     loop {
         match bicgstab_attempt(
-            op, team, x, b, tol, maxiter, prof, health, &mut history, &mut flops,
+            op,
+            team,
+            x,
+            b,
+            tol,
+            maxiter,
+            prof,
+            health,
+            &mut history,
+            &mut flops,
+            guard.restarts,
+            ckpt.as_deref_mut(),
+            &mut pack,
         ) {
             Ok(mut stats) => {
                 if stats.converged && health.drift_tol > 0.0 {
@@ -534,6 +701,9 @@ fn bicgstab_attempt<R: Real, A: FusedSolvable<R>>(
     health: &HealthConfig,
     history: &mut Vec<f64>,
     flops: &mut u64,
+    restarts: usize,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: &mut Option<BiCgResume<R>>,
 ) -> Result<SolveStats, Interrupt> {
     let flops_apply = op.flops_per_apply();
     let view = op.fused_view();
@@ -556,71 +726,85 @@ fn bicgstab_attempt<R: Real, A: FusedSolvable<R>>(
         health_events: 0,
         retransmits: 0,
         timeouts: 0,
+        zero_fills: 0,
     };
 
+    let resumed = resume.take();
     op.fault_hook(history.len())
         .map_err(|err| Interrupt::Comm { err, iteration: history.len() })?;
     let bnorm2 = b.norm2();
-    *flops += fl::norm2_flops(nreal);
+    if resumed.is_none() {
+        *flops += fl::norm2_flops(nreal);
+    }
     if bnorm2 == 0.0 {
         x.fill(R::ZERO);
         return Ok(finish(&[], 0, true, 0.0));
     }
     let limit = tol * tol * bnorm2;
 
-    let mut r = b.clone();
     let mut t = b.zeros_like();
-    let mut rr;
     let mut rr_partials: Vec<f64> = vec![0.0; ntiles];
+    let (mut r, rhat, mut p, mut rr, mut rho);
 
-    if x.is_zero() {
-        rr = bnorm2;
+    if let Some(rs) = resumed {
+        // checkpoint resume: restored state reproduces the interrupted
+        // run's iteration boundary bit-for-bit
+        r = rs.r;
+        p = rs.p;
+        rhat = rs.rhat;
+        rr = rs.rr;
+        rho = rs.rho;
     } else {
-        let t_ptr = SendPtr(t.data.as_mut_ptr());
-        let r_ptr = SendPtr(r.data.as_mut_ptr());
-        let x_raw = SendPtr(x.data.as_mut_ptr());
-        let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
-        team.run(|tid, bar| unsafe {
-            scoped(prof, tid, Phase::Bulk, || {
-                view.apply_team(tid, n, bar, t_ptr, x_raw.0 as *const R, None)
+        r = b.clone();
+        if x.is_zero() {
+            rr = bnorm2;
+        } else {
+            let t_ptr = SendPtr(t.data.as_mut_ptr());
+            let r_ptr = SendPtr(r.data.as_mut_ptr());
+            let x_raw = SendPtr(x.data.as_mut_ptr());
+            let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
+            team.run(|tid, bar| unsafe {
+                scoped(prof, tid, Phase::Bulk, || {
+                    view.apply_team(tid, n, bar, t_ptr, x_raw.0 as *const R, None)
+                });
+                scoped(prof, tid, Phase::Barrier, || bar.wait());
+                let (tb, te) = chunk_range(ntiles, tid, n);
+                scoped(prof, tid, Phase::Blas, || {
+                    blas::axpy_norm2_slice(
+                        r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
+                        -R::ONE,
+                        ro_at::<R>(t_ptr, tb * vpt, (te - tb) * vpt),
+                        vlen,
+                        rr_ptr.slice_mut(tb, te - tb),
+                    )
+                });
             });
-            scoped(prof, tid, Phase::Barrier, || bar.wait());
-            let (tb, te) = chunk_range(ntiles, tid, n);
-            scoped(prof, tid, Phase::Blas, || {
-                blas::axpy_norm2_slice(
-                    r_ptr.slice_mut(tb * vpt, (te - tb) * vpt),
-                    -R::ONE,
-                    ro_at::<R>(t_ptr, tb * vpt, (te - tb) * vpt),
-                    vlen,
-                    rr_ptr.slice_mut(tb, te - tb),
-                )
+            rr = rr_partials.iter().sum();
+            *flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        }
+        if !rr.is_finite() {
+            // poisoned warm iterate: fall back to a cold restart
+            x.fill(R::ZERO);
+            return Err(Interrupt::NonFinite {
+                what: "initial |r|^2",
+                iteration: history.len(),
             });
-        });
-        rr = rr_partials.iter().sum();
-        *flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
-    }
-    if !rr.is_finite() {
-        // poisoned warm iterate: fall back to a cold restart
-        x.fill(R::ZERO);
-        return Err(Interrupt::NonFinite {
-            what: "initial |r|^2",
-            iteration: history.len(),
-        });
-    }
+        }
 
-    let rhat = r.clone();
-    let mut p = r.clone();
-    let mut v = b.zeros_like();
-    // rho = <rhat, r> = |r|² at start (rhat == r), but compute it like
-    // the unfused solver does so the value is grouping-identical
-    let mut rho = rhat.dot(&r);
-    *flops += fl::cdot_flops(nreal);
-    if !rho.re.is_finite() || !rho.im.is_finite() {
-        return Err(Interrupt::NonFinite {
-            what: "rho",
-            iteration: history.len(),
-        });
+        rhat = r.clone();
+        p = r.clone();
+        // rho = <rhat, r> = |r|² at start (rhat == r), but compute it
+        // like the unfused solver does so the value is grouping-identical
+        rho = rhat.dot(&r);
+        *flops += fl::cdot_flops(nreal);
+        if !rho.re.is_finite() || !rho.im.is_finite() {
+            return Err(Interrupt::NonFinite {
+                what: "rho",
+                iteration: history.len(),
+            });
+        }
     }
+    let mut v = b.zeros_like();
     let mut stag = StagnationTracker::new(health.stagnation_window);
 
     let mut v_partials: Vec<[f64; 3]> = vec![[0.0; 3]; ntiles];
@@ -648,6 +832,23 @@ fn bicgstab_attempt<R: Real, A: FusedSolvable<R>>(
         }
         op.fault_hook(iteration)
             .map_err(|err| Interrupt::Comm { err, iteration })?;
+        if let Some(ck) = ckpt.as_deref_mut() {
+            if ck.due(iteration as u64) {
+                let mut st =
+                    SolverState::new(FAMILY_FUSED_BICGSTAB, iteration as u64);
+                st.restarts = restarts as u64;
+                st.flops = *flops;
+                st.scalars = vec![rr, rho.re, rho.im];
+                st.history = history.clone();
+                st.fields = vec![
+                    FieldSnap::of_fermion("x", x),
+                    FieldSnap::of_fermion("r", &r),
+                    FieldSnap::of_fermion("p", &p),
+                    FieldSnap::of_fermion("rhat", &rhat),
+                ];
+                scoped(prof, 0, Phase::Checkpoint, || ck.save_lin(st, op));
+            }
+        }
         let rho_c = rho;
         team.run(|tid, bar| unsafe {
             let (tb, te) = chunk_range(ntiles, tid, n);

@@ -119,6 +119,9 @@ pub enum SolveErrorKind {
     Comm(CommError),
     /// Recoverable events exhausted `solver.max_restarts`.
     RestartsExhausted,
+    /// A checkpoint resume could not restore solver state (missing or
+    /// mismatched field snapshot, wrong solver family).
+    Checkpoint(String),
 }
 
 /// Typed failure of a guarded solve, with full diagnostics.
@@ -138,9 +141,11 @@ pub struct SolveError {
     pub converged_mask: Option<Vec<bool>>,
     /// Everything the guard observed up to the failure.
     pub events: Vec<HealthEvent>,
-    /// Transport recovery counters at failure (retransmits, timeouts).
+    /// Transport recovery counters at failure (retransmits, timeouts,
+    /// zero-filled halos).
     pub retransmits: u64,
     pub timeouts: u64,
+    pub zero_fills: u64,
 }
 
 impl fmt::Display for SolveError {
@@ -158,6 +163,9 @@ impl fmt::Display for SolveError {
                 self.iteration,
                 self.events.len()
             )?,
+            SolveErrorKind::Checkpoint(msg) => {
+                write!(f, "checkpoint resume failed: {msg}")?
+            }
         }
         if let Some(mask) = &self.converged_mask {
             let done = mask.iter().filter(|c| **c).count();
@@ -172,6 +180,22 @@ impl fmt::Display for SolveError {
 }
 
 impl SolveError {
+    /// A resume-time failure (before any iteration ran).
+    pub fn checkpoint(msg: impl Into<String>) -> SolveError {
+        SolveError {
+            kind: SolveErrorKind::Checkpoint(msg.into()),
+            iteration: 0,
+            rank: 0,
+            last_residual: f64::NAN,
+            history: Vec::new(),
+            converged_mask: None,
+            events: Vec::new(),
+            retransmits: 0,
+            timeouts: 0,
+            zero_fills: 0,
+        }
+    }
+
     /// Fold the failure into a (non-converged) [`SolveStats`] for
     /// callers that only consume stats.
     pub fn into_stats(self, sweeps_per_iter: f64, threads: usize) -> SolveStats {
@@ -192,6 +216,7 @@ impl SolveError {
             health_events: self.events.len(),
             retransmits: self.retransmits,
             timeouts: self.timeouts,
+            zero_fills: self.zero_fills,
         }
     }
 }
@@ -217,13 +242,13 @@ impl HealthGuard {
     /// Classify an interrupt. `Ok(())` means "restart the Krylov
     /// process from the warm iterate"; `Err` is the final, typed
     /// failure. `history` is the residual history so far and
-    /// `(retransmits, timeouts)` the transport counters at this point —
-    /// both are moved into the error on the fatal paths.
+    /// `(retransmits, timeouts, zero_fills)` the transport counters at
+    /// this point — both are moved into the error on the fatal paths.
     pub fn absorb(
         &mut self,
         int: Interrupt,
         history: &[f64],
-        counters: (u64, u64),
+        counters: (u64, u64, u64),
     ) -> Result<(), SolveError> {
         let last_residual = history.last().copied().unwrap_or(f64::NAN);
         let fail = |kind, iteration, rank, events: Vec<HealthEvent>| SolveError {
@@ -236,6 +261,7 @@ impl HealthGuard {
             events,
             retransmits: counters.0,
             timeouts: counters.1,
+            zero_fills: counters.2,
         };
         match int {
             Interrupt::Comm { err, iteration } => {
@@ -293,11 +319,12 @@ impl HealthGuard {
 
     /// Copy the guard's tallies and the transport counters into a
     /// finished attempt's stats.
-    pub fn finish(&self, stats: &mut SolveStats, counters: (u64, u64)) {
+    pub fn finish(&self, stats: &mut SolveStats, counters: (u64, u64, u64)) {
         stats.restarts = self.restarts;
         stats.health_events = self.events.len();
         stats.retransmits = counters.0;
         stats.timeouts = counters.1;
+        stats.zero_fills = counters.2;
     }
 }
 
@@ -381,7 +408,7 @@ mod tests {
             g.absorb(
                 Interrupt::NonFinite { what: "pAp", iteration: i },
                 &h,
-                (0, 0),
+                (0, 0, 0),
             )
             .expect("within budget");
         }
@@ -389,14 +416,14 @@ mod tests {
             .absorb(
                 Interrupt::NonFinite { what: "pAp", iteration: 2 },
                 &h,
-                (3, 1),
+                (3, 1, 2),
             )
             .expect_err("budget exhausted");
         assert!(matches!(err.kind, SolveErrorKind::RestartsExhausted));
         assert_eq!(err.iteration, 2);
         assert_eq!(err.last_residual, 0.25);
         assert_eq!(err.events.len(), 3);
-        assert_eq!((err.retransmits, err.timeouts), (3, 1));
+        assert_eq!((err.retransmits, err.timeouts, err.zero_fills), (3, 1, 2));
         let stats = err.into_stats(6.0, 1);
         assert!(!stats.converged);
         assert_eq!(stats.restarts, 3);
@@ -413,7 +440,7 @@ mod tests {
                     iteration: 4,
                 },
                 &[],
-                (0, 2),
+                (0, 2, 0),
             )
             .expect_err("comm faults never restart");
         assert!(matches!(err.kind, SolveErrorKind::Comm(CommError::Killed { .. })));

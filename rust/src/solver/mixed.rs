@@ -32,8 +32,10 @@ use crate::coordinator::operator::{FusedSolvable, LinearOperator};
 use crate::coordinator::profiler::Profiler;
 use crate::coordinator::Team;
 use crate::dslash::flops as fl;
+use crate::field::snapshot::FieldSnap;
 use crate::field::FermionField;
 
+use super::checkpoint::{Checkpointer, RhsRecord, SolverState, FAMILY_MIXED};
 use super::health::{HealthConfig, HealthGuard, Interrupt, SolveError};
 use super::{bicgstab, cg, fused};
 
@@ -73,6 +75,9 @@ pub struct MixedStats {
     pub retransmits: u64,
     /// transport timeouts across the outer and inner operators
     pub timeouts: u64,
+    /// halo buffers zero-filled after failed recvs across both operators
+    /// — nonzero means some sweeps ran on fabricated data
+    pub zero_fills: u64,
 }
 
 /// Solve `A x = b` at f64 accuracy with f32 inner iterations.
@@ -141,12 +146,21 @@ where
     Hi: LinearOperator<f64>,
     Lo: LinearOperator<f32>,
 {
-    refine(outer, inner, x, b, tol, max_outer, health, move |op, x32, b32| {
-        match alg {
+    refine(
+        outer,
+        inner,
+        x,
+        b,
+        tol,
+        max_outer,
+        health,
+        None,
+        None,
+        move |op, x32, b32| match alg {
             InnerAlgorithm::Cg => cg(op, x32, b32, inner_tol, inner_maxiter),
             InnerAlgorithm::BiCgStab => bicgstab(op, x32, b32, inner_tol, inner_maxiter),
-        }
-    })
+        },
+    )
 }
 
 /// [`mixed_refinement`] with every inner f32 solve — where essentially
@@ -207,9 +221,62 @@ where
     Hi: LinearOperator<f64>,
     Lo: LinearOperator<f32> + FusedSolvable<f32>,
 {
+    mixed_refinement_team_profiled_ckpt(
+        outer,
+        inner,
+        x,
+        b,
+        tol,
+        max_outer,
+        inner_tol,
+        inner_maxiter,
+        alg,
+        team,
+        prof,
+        None,
+        None,
+    )
+}
+
+/// [`mixed_refinement_team_profiled`] with a checkpoint sink and/or a
+/// resume state. Checkpoints land at outer-iteration boundaries: the
+/// f64 iterate, outer residual history, the per-outer-step inner
+/// histories, and accumulated counters. Resume recomputes the f64
+/// defect `r = b - A x` from the restored iterate — bit-for-bit the
+/// same value the interrupted run held — so the continued outer and
+/// inner histories are bitwise identical to the uninterrupted run.
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_refinement_team_profiled_ckpt<Hi, Lo>(
+    outer: &mut Hi,
+    inner: &mut Lo,
+    x: &mut FermionField<f64>,
+    b: &FermionField<f64>,
+    tol: f64,
+    max_outer: usize,
+    inner_tol: f64,
+    inner_maxiter: usize,
+    alg: InnerAlgorithm,
+    team: &mut Team,
+    prof: Option<&Profiler>,
+    ckpt: Option<&mut Checkpointer>,
+    resume: Option<&SolverState>,
+) -> MixedStats
+where
+    Hi: LinearOperator<f64>,
+    Lo: LinearOperator<f32> + FusedSolvable<f32>,
+{
     let health = HealthConfig::default();
-    refine(outer, inner, x, b, tol, max_outer, &health, move |op, x32, b32| {
-        match alg {
+    refine(
+        outer,
+        inner,
+        x,
+        b,
+        tol,
+        max_outer,
+        &health,
+        ckpt,
+        resume,
+        move |op, x32, b32| match alg {
             InnerAlgorithm::Cg => fused::cg_profiled(
                 op,
                 &mut *team,
@@ -228,8 +295,8 @@ where
                 inner_maxiter,
                 prof,
             ),
-        }
-    })
+        },
+    )
     .unwrap_or_else(err_to_mixed)
 }
 
@@ -252,6 +319,7 @@ fn err_to_mixed(e: SolveError) -> MixedStats {
         health_events: e.events.len(),
         retransmits: e.retransmits,
         timeouts: e.timeouts,
+        zero_fills: e.zero_fills,
     }
 }
 
@@ -266,6 +334,8 @@ fn refine<Hi, Lo, S>(
     tol: f64,
     max_outer: usize,
     health: &HealthConfig,
+    mut ckpt: Option<&mut Checkpointer>,
+    resume: Option<&SolverState>,
     mut solve: S,
 ) -> Result<MixedStats, SolveError>
 where
@@ -276,10 +346,16 @@ where
     let mut guard = HealthGuard::new(health);
     let co0 = outer.comm_counters();
     let ci0 = inner.comm_counters();
+    let zo0 = outer.comm_zero_fills();
+    let zi0 = inner.comm_zero_fills();
     let counters = |outer: &Hi, inner: &Lo| {
         let co1 = outer.comm_counters();
         let ci1 = inner.comm_counters();
-        (co1.0 - co0.0 + ci1.0 - ci0.0, co1.1 - co0.1 + ci1.1 - ci0.1)
+        (
+            co1.0 - co0.0 + ci1.0 - ci0.0,
+            co1.1 - co0.1 + ci1.1 - ci0.1,
+            outer.comm_zero_fills() - zo0 + inner.comm_zero_fills() - zi0,
+        )
     };
 
     let bnorm2 = outer.reduce_sum(b.norm2());
@@ -297,29 +373,12 @@ where
             health_events: 0,
             retransmits: 0,
             timeouts: 0,
+            zero_fills: 0,
         });
     }
     let bnorm = bnorm2.sqrt();
 
     let nreal = b.data.len() as u64;
-
-    // r = b - A x (f64); a zero initial guess skips the operator apply.
-    // Agreed globally (reduce_sum is collective) so distributed outer
-    // operators never mismatch the apply's collectives.
-    let x_zero = outer.reduce_sum(if x.is_zero() { 0.0 } else { 1.0 }) == 0.0;
-    let mut r = b.clone();
-    let mut ax = b.zeros_like();
-    let mut flops = fl::norm2_flops(nreal);
-    let mut rnorm;
-    if x_zero {
-        rnorm = bnorm;
-    } else {
-        outer.apply(&mut ax, x);
-        r.axpy(-1.0, &ax);
-        rnorm = outer.reduce_sum(r.norm2()).sqrt();
-        flops +=
-            outer.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
-    }
 
     let mut history = Vec::new();
     let mut inner_histories = Vec::new();
@@ -327,13 +386,89 @@ where
     let mut inner_restarts = 0usize;
     let mut inner_events = 0usize;
     let mut outer_iterations = 0usize;
-    history.push(rnorm / bnorm);
+    let mut flops;
+
+    let mut r = b.clone();
+    let mut ax = b.zeros_like();
+    let mut rnorm;
+
+    if let Some(st) = resume {
+        if st.family != FAMILY_MIXED {
+            return Err(SolveError::checkpoint(format!(
+                "checkpoint holds family tag {}, not mixed",
+                st.family
+            )));
+        }
+        st.restore_into("x", &mut x.data).map_err(SolveError::checkpoint)?;
+        guard.restarts = st.restarts as usize;
+        history = st.history.clone();
+        inner_histories = st.per_rhs.iter().map(|rec| rec.history.clone()).collect();
+        if st.scalars.len() < 3 {
+            return Err(SolveError::checkpoint("missing mixed counters"));
+        }
+        inner_iterations = st.scalars[0] as usize;
+        inner_restarts = st.scalars[1] as usize;
+        inner_events = st.scalars[2] as usize;
+        outer_iterations = st.iteration as usize;
+        flops = st.flops;
+        outer.restore_fault_cursors(&st.fault_cursors);
+        // Recompute the f64 defect from the restored iterate. The
+        // computation is the same one the interrupted run performed at
+        // the end of its last outer step, on bitwise-identical inputs,
+        // so r and rnorm come back bit-for-bit (history stays pinned).
+        outer.apply(&mut ax, x);
+        r.axpy(-1.0, &ax);
+        rnorm = outer.reduce_sum(r.norm2()).sqrt();
+        if !rnorm.is_finite() {
+            return Err(SolveError::checkpoint("restored iterate has non-finite residual"));
+        }
+    } else {
+        // r = b - A x (f64); a zero initial guess skips the operator
+        // apply. Agreed globally (reduce_sum is collective) so
+        // distributed outer operators never mismatch the collectives.
+        let x_zero = outer.reduce_sum(if x.is_zero() { 0.0 } else { 1.0 }) == 0.0;
+        flops = fl::norm2_flops(nreal);
+        if x_zero {
+            rnorm = bnorm;
+        } else {
+            outer.apply(&mut ax, x);
+            r.axpy(-1.0, &ax);
+            rnorm = outer.reduce_sum(r.norm2()).sqrt();
+            flops +=
+                outer.flops_per_apply() + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
+        }
+        history.push(rnorm / bnorm);
+    }
 
     while outer_iterations < max_outer && rnorm > tol * bnorm {
         if let Err(err) = outer.fault_hook(outer_iterations) {
             let int = Interrupt::Comm { err, iteration: outer_iterations };
             guard.absorb(int, &history, counters(outer, inner))?;
             unreachable!("comm interrupts are fatal");
+        }
+        if let Some(ck) = ckpt.as_deref_mut() {
+            if ck.due(outer_iterations as u64) {
+                let mut st = SolverState::new(FAMILY_MIXED, outer_iterations as u64);
+                st.restarts = guard.restarts as u64;
+                st.flops = flops;
+                st.scalars = vec![
+                    inner_iterations as f64,
+                    inner_restarts as f64,
+                    inner_events as f64,
+                ];
+                st.history = history.clone();
+                st.per_rhs = inner_histories
+                    .iter()
+                    .map(|h: &Vec<f64>| RhsRecord {
+                        iterations: h.len() as u64,
+                        converged: true,
+                        rel_residual: h.last().copied().unwrap_or(f64::NAN),
+                        history: h.clone(),
+                    })
+                    .collect();
+                st.fields = vec![FieldSnap::of_fermion("x", x)];
+                ck.save_lin(st, outer);
+            }
         }
         // unit-norm defect, demoted to the inner precision
         let mut defect = r.clone();
@@ -407,7 +542,7 @@ where
         unreachable!("comm interrupts are fatal");
     }
 
-    let (retransmits, timeouts) = counters(outer, inner);
+    let (retransmits, timeouts, zero_fills) = counters(outer, inner);
     Ok(MixedStats {
         outer_iterations,
         inner_iterations,
@@ -420,6 +555,7 @@ where
         health_events: guard.events.len() + inner_events,
         retransmits,
         timeouts,
+        zero_fills,
     })
 }
 

@@ -29,28 +29,34 @@
 
 mod bicgstab;
 pub mod block;
+pub mod checkpoint;
 mod cg;
 pub mod fused;
 pub mod health;
 pub mod mixed;
 pub mod residual;
 
-pub use bicgstab::{bicgstab, bicgstab_guarded};
+pub use bicgstab::{bicgstab, bicgstab_guarded, bicgstab_guarded_ckpt};
+pub use checkpoint::{
+    load_latest, read_state_file, restore_from_buddy, BuddyCopy, CheckpointError,
+    Checkpointer, CkptOpts, SolverState,
+};
 pub use block::{
     block_bicgstab, block_bicgstab_generic, block_bicgstab_generic_guarded,
-    block_bicgstab_generic_guarded_profiled, block_bicgstab_profiled, block_cg,
-    block_cg_generic, block_cg_generic_guarded,
-    block_cg_generic_guarded_profiled, block_cg_profiled, BlockSolveStats,
-    RhsStats,
+    block_bicgstab_generic_guarded_ckpt, block_bicgstab_generic_guarded_profiled,
+    block_bicgstab_profiled, block_cg, block_cg_generic, block_cg_generic_guarded,
+    block_cg_generic_guarded_ckpt, block_cg_generic_guarded_profiled,
+    block_cg_profiled, BlockSolveStats, RhsStats,
 };
-pub use cg::{cg, cg_guarded};
+pub use cg::{cg, cg_guarded, cg_guarded_ckpt};
 pub use health::{
     HealthConfig, HealthEvent, HealthEventKind, HealthGuard, Interrupt,
     SolveError, SolveErrorKind,
 };
 pub use mixed::{
     mixed_refinement, mixed_refinement_guarded, mixed_refinement_team,
-    mixed_refinement_team_profiled, InnerAlgorithm, MixedStats,
+    mixed_refinement_team_profiled, mixed_refinement_team_profiled_ckpt,
+    InnerAlgorithm, MixedStats,
 };
 
 /// Convergence record of one solve.
@@ -85,4 +91,8 @@ pub struct SolveStats {
     pub retransmits: u64,
     /// recv/collective deadlines that expired (including recovered ones)
     pub timeouts: u64,
+    /// halo buffers the transport zero-filled after failed recvs — any
+    /// nonzero value means sweeps ran on fabricated data and the solve
+    /// ended in (or recovered through) a transport fault
+    pub zero_fills: u64,
 }

@@ -1,0 +1,616 @@
+//! Checkpoint/restart integration tests.
+//!
+//! The contract under test: a solve interrupted after a checkpoint and
+//! resumed via `load_latest` continues with residual history and final
+//! iterate BITWISE identical to the uninterrupted run — for every
+//! solver family (cg, bicgstab, fused cg/bicgstab, mixed refinement,
+//! block cg/bicgstab, distributed block). Corrupted checkpoint files
+//! are detected by structured errors naming the generation and older
+//! generations are used instead — a bad file is never silently loaded.
+//! On a 2-rank world the buddy scheme re-materializes a lost rank's
+//! checkpoint from its ring neighbor's in-memory copy.
+
+use std::fs;
+use std::path::PathBuf;
+
+use lqcd::comm::decompose::{extract_fermion, extract_gauge};
+use lqcd::comm::{run_world_cfg, FaultPlan, WorldOpts};
+use lqcd::coordinator::operator::{
+    DistMultiMeo, MultiMdagM, MultiNativeMeo, NativeMdagM, NativeMeo,
+};
+use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use lqcd::field::snapshot::gauge_hash;
+use lqcd::field::{FermionField, GaugeField, MultiFermionField};
+use lqcd::lattice::{Geometry, LatticeDims, ProcGrid, Tiling};
+use lqcd::solver::checkpoint::{ckpt_path, commit_path, committed_generations};
+use lqcd::solver::{
+    self, load_latest, read_state_file, restore_from_buddy, BuddyCopy,
+    CheckpointError, Checkpointer, CkptOpts, HealthConfig, InnerAlgorithm,
+    SolveErrorKind, SolverState,
+};
+use lqcd::util::rng::Rng;
+
+/// Fresh scratch dir per test (no tempfile crate in the offline build).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "lqcd-ckpt-test-{}-{tag}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn opts(dir: &PathBuf, every_iters: u64, keep: usize, buddy: bool) -> CkptOpts {
+    CkptOpts {
+        dir: dir.clone(),
+        every_iters,
+        every_ms: 0,
+        keep,
+        buddy,
+    }
+}
+
+fn geom() -> Geometry {
+    Geometry::single_rank(
+        LatticeDims::new(4, 4, 4, 4).unwrap(),
+        Tiling::new(2, 2).unwrap(),
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// corruption matrix
+// ---------------------------------------------------------------------------
+
+/// Every corruption class is detected with a structured error naming
+/// the generation; `load_latest` falls back to an older intact
+/// generation, and errors out (rather than silently loading) when no
+/// generation survives.
+#[test]
+fn corruption_matrix_detects_and_falls_back() {
+    let dir = scratch("corrupt");
+    let g = geom();
+    let mut rng = Rng::seeded(701);
+    let u = GaugeField::random(&g, &mut rng);
+    let b = FermionField::gaussian(&g, &mut rng);
+    let ghash = gauge_hash(&u);
+    let mut op = NativeMdagM::new(&g, u, 0.12f32);
+    let mut x = FermionField::zeros(&g);
+    let mut ckpt = Checkpointer::new(opts(&dir, 2, 8, false), 0, 1, ghash).unwrap();
+    let stats = solver::cg_guarded_ckpt(
+        &mut op, &mut x, &b, 1e-8, 500, &HealthConfig::default(),
+        Some(&mut ckpt), None,
+    )
+    .expect("clean checkpointed solve");
+    assert!(stats.converged);
+    assert!(ckpt.committed() >= 2, "need several generations on disk");
+
+    let gens = committed_generations(&dir, 0);
+    assert!(gens.len() >= 2, "{gens:?}");
+    let newest = *gens.last().unwrap();
+    let path = ckpt_path(&dir, 0, newest);
+    let pristine = fs::read(&path).unwrap();
+
+    // truncated file
+    fs::write(&path, &pristine[..pristine.len() / 2]).unwrap();
+    let e = read_state_file(&dir, 0, newest, ghash).unwrap_err();
+    assert!(matches!(e, CheckpointError::Truncated { gen, .. } if gen == newest), "{e}");
+    assert!(e.to_string().contains(&format!("generation {newest}")), "{e}");
+
+    // bad magic
+    let mut bytes = pristine.clone();
+    bytes[0] ^= 0xFF;
+    fs::write(&path, &bytes).unwrap();
+    let e = read_state_file(&dir, 0, newest, ghash).unwrap_err();
+    assert!(matches!(e, CheckpointError::BadMagic { gen } if gen == newest), "{e}");
+
+    // stale format version
+    let mut bytes = pristine.clone();
+    bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+    fs::write(&path, &bytes).unwrap();
+    let e = read_state_file(&dir, 0, newest, ghash).unwrap_err();
+    assert!(
+        matches!(e, CheckpointError::StaleVersion { gen, found: 99 } if gen == newest),
+        "{e}"
+    );
+
+    // gauge hash of a different configuration
+    fs::write(&path, &pristine).unwrap();
+    let e = read_state_file(&dir, 0, newest, ghash ^ 1).unwrap_err();
+    assert!(matches!(e, CheckpointError::GaugeMismatch { gen, .. } if gen == newest), "{e}");
+
+    // flipped payload bit
+    let mut bytes = pristine.clone();
+    bytes[40] ^= 0x01;
+    fs::write(&path, &bytes).unwrap();
+    let e = read_state_file(&dir, 0, newest, ghash).unwrap_err();
+    assert!(matches!(e, CheckpointError::BadCrc { gen, .. } if gen == newest), "{e}");
+
+    // flipped CRC trailer
+    let mut bytes = pristine.clone();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    fs::write(&path, &bytes).unwrap();
+    let e = read_state_file(&dir, 0, newest, ghash).unwrap_err();
+    assert!(matches!(e, CheckpointError::BadCrc { gen, .. } if gen == newest), "{e}");
+
+    // newest is corrupt (payload flip still on disk): load_latest must
+    // fall back to the previous intact generation, not fail, not load
+    // the bad file
+    let mut bytes = pristine.clone();
+    bytes[40] ^= 0x01;
+    fs::write(&path, &bytes).unwrap();
+    let (st, gen) = load_latest(&dir, 0, 1, ghash).expect("fallback generation");
+    assert!(gen < newest, "fell back from {newest} to {gen}");
+    let want = read_state_file(&dir, 0, gen, ghash).unwrap();
+    assert_eq!(st, want);
+    assert_eq!(st.history.len() as u64, st.iteration);
+
+    // every generation corrupt: a hard error, never a silent load
+    for &gn in &gens {
+        let p = ckpt_path(&dir, 0, gn);
+        let mut by = fs::read(&p).unwrap();
+        by[40] ^= 0x01;
+        fs::write(&p, &by).unwrap();
+    }
+    let e = load_latest(&dir, 0, 1, ghash).unwrap_err();
+    assert!(matches!(e, CheckpointError::BadCrc { .. }), "{e}");
+
+    // restoring the newest file restores service
+    fs::write(&path, &pristine).unwrap();
+    let (_, gen) = load_latest(&dir, 0, 1, ghash).unwrap();
+    assert_eq!(gen, newest);
+}
+
+/// A checkpoint written by one family is refused by another with a
+/// typed error, not misinterpreted.
+#[test]
+fn wrong_family_resume_is_typed_error() {
+    let dir = scratch("family");
+    let g = geom();
+    let mut rng = Rng::seeded(703);
+    let u = GaugeField::random(&g, &mut rng);
+    let b = FermionField::gaussian(&g, &mut rng);
+    let ghash = gauge_hash(&u);
+    let mut op = NativeMdagM::new(&g, u.clone(), 0.12f32);
+    let mut x = FermionField::zeros(&g);
+    let mut ckpt = Checkpointer::new(opts(&dir, 5, 2, false), 0, 1, ghash).unwrap();
+    solver::cg_guarded_ckpt(
+        &mut op, &mut x, &b, 1e-8, 500, &HealthConfig::default(),
+        Some(&mut ckpt), None,
+    )
+    .unwrap();
+    let (st, _) = load_latest(&dir, 0, 1, ghash).unwrap();
+
+    let mut meo = NativeMeo::new(&g, u, 0.12f32);
+    let mut x2 = FermionField::zeros(&g);
+    let e = solver::bicgstab_guarded_ckpt(
+        &mut meo, &mut x2, &b, 1e-7, 300, &HealthConfig::default(),
+        None, Some(&st),
+    )
+    .expect_err("cg state fed to bicgstab");
+    assert!(matches!(e.kind, SolveErrorKind::Checkpoint(_)), "{e}");
+}
+
+// ---------------------------------------------------------------------------
+// bitwise resume pins, one per solver family
+// ---------------------------------------------------------------------------
+
+/// Runs `solve(maxiter, ckpt, resume)` three ways — uninterrupted,
+/// interrupted at `cap` iterations with a checkpoint sink, resumed from
+/// the latest generation — and returns (full stats+iterate, resumed
+/// stats+iterate, checkpoint iteration).
+fn interrupt_and_resume<S>(
+    dir: &PathBuf,
+    ghash: u64,
+    every: u64,
+    cap: usize,
+    maxiter: usize,
+    mut solve: S,
+) -> (solver::SolveStats, FermionField<f32>, solver::SolveStats, FermionField<f32>, u64)
+where
+    S: FnMut(
+        usize,
+        Option<&mut Checkpointer>,
+        Option<&SolverState>,
+    ) -> (solver::SolveStats, FermionField<f32>),
+{
+    let (full, x_full) = solve(maxiter, None, None);
+    assert!(full.converged, "reference run must converge: {full:?}");
+    assert!(full.iterations > cap, "cap {cap} must interrupt the solve");
+
+    let mut ckpt = Checkpointer::new(
+        CkptOpts { dir: dir.clone(), every_iters: every, every_ms: 0, keep: 4, buddy: false },
+        0, 1, ghash,
+    )
+    .unwrap();
+    let (part, _) = solve(cap, Some(&mut ckpt), None);
+    assert!(!part.converged, "interrupted run must stop early");
+    assert!(ckpt.committed() >= 1, "no generation committed before the cap");
+
+    let (st, _) = load_latest(dir, 0, 1, ghash).expect("latest generation");
+    let at = st.iteration;
+    assert!(at > 0 && (at as usize) < full.iterations);
+    let (resumed, x_resumed) = solve(maxiter, None, Some(&st));
+    (full, x_full, resumed, x_resumed, at)
+}
+
+#[test]
+fn cg_resume_bitwise_identical() {
+    let dir = scratch("cg");
+    let g = geom();
+    let mut rng = Rng::seeded(705);
+    let u = GaugeField::random(&g, &mut rng);
+    let b = FermionField::gaussian(&g, &mut rng);
+    let ghash = gauge_hash(&u);
+    let (full, x_full, resumed, x_resumed, at) =
+        interrupt_and_resume(&dir, ghash, 5, 12, 500, |maxiter, ckpt, resume| {
+            let mut op = NativeMdagM::new(&g, u.clone(), 0.12f32);
+            let mut x = FermionField::zeros(&g);
+            let stats = solver::cg_guarded_ckpt(
+                &mut op, &mut x, &b, 1e-8, maxiter, &HealthConfig::default(),
+                ckpt, resume,
+            )
+            .expect("clean solve");
+            (stats, x)
+        });
+    assert!(resumed.converged);
+    assert_eq!(resumed.iterations, full.iterations);
+    assert_eq!(
+        resumed.history, full.history,
+        "cg history diverged after resume from iteration {at}"
+    );
+    assert_eq!(x_resumed.data, x_full.data, "cg iterate diverged");
+}
+
+#[test]
+fn bicgstab_resume_bitwise_identical() {
+    let dir = scratch("bicgstab");
+    let g = geom();
+    let mut rng = Rng::seeded(707);
+    let u = GaugeField::random(&g, &mut rng);
+    let b = FermionField::gaussian(&g, &mut rng);
+    let ghash = gauge_hash(&u);
+    let (full, x_full, resumed, x_resumed, at) =
+        interrupt_and_resume(&dir, ghash, 5, 12, 300, |maxiter, ckpt, resume| {
+            let mut op = NativeMeo::new(&g, u.clone(), 0.12f32);
+            let mut x = FermionField::zeros(&g);
+            let stats = solver::bicgstab_guarded_ckpt(
+                &mut op, &mut x, &b, 1e-6, maxiter, &HealthConfig::default(),
+                ckpt, resume,
+            )
+            .expect("clean solve");
+            (stats, x)
+        });
+    assert!(resumed.converged);
+    assert_eq!(
+        resumed.history, full.history,
+        "bicgstab history diverged after resume from iteration {at}"
+    );
+    assert_eq!(x_resumed.data, x_full.data, "bicgstab iterate diverged");
+}
+
+#[test]
+fn fused_cg_resume_bitwise_identical() {
+    let dir = scratch("fused-cg");
+    let g = geom();
+    let mut rng = Rng::seeded(709);
+    let u = GaugeField::random(&g, &mut rng);
+    let b = FermionField::gaussian(&g, &mut rng);
+    let ghash = gauge_hash(&u);
+    let (full, x_full, resumed, x_resumed, at) =
+        interrupt_and_resume(&dir, ghash, 5, 12, 500, |maxiter, ckpt, resume| {
+            let mut op = NativeMdagM::new(&g, u.clone(), 0.12f32);
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let mut x = FermionField::zeros(&g);
+            let stats = solver::fused::cg_guarded_ckpt(
+                &mut op, &mut team, &mut x, &b, 1e-8, maxiter, None,
+                &HealthConfig::default(), ckpt, resume,
+            )
+            .expect("clean solve");
+            (stats, x)
+        });
+    assert!(resumed.converged);
+    assert_eq!(
+        resumed.history, full.history,
+        "fused cg history diverged after resume from iteration {at}"
+    );
+    assert_eq!(x_resumed.data, x_full.data, "fused cg iterate diverged");
+}
+
+#[test]
+fn fused_bicgstab_resume_bitwise_identical() {
+    let dir = scratch("fused-bicgstab");
+    let g = geom();
+    let mut rng = Rng::seeded(711);
+    let u = GaugeField::random(&g, &mut rng);
+    let b = FermionField::gaussian(&g, &mut rng);
+    let ghash = gauge_hash(&u);
+    let (full, x_full, resumed, x_resumed, at) =
+        interrupt_and_resume(&dir, ghash, 5, 12, 300, |maxiter, ckpt, resume| {
+            let mut op = NativeMeo::new(&g, u.clone(), 0.12f32);
+            let mut team = Team::new(2, BarrierKind::Sleep);
+            let mut x = FermionField::zeros(&g);
+            let stats = solver::fused::bicgstab_guarded_ckpt(
+                &mut op, &mut team, &mut x, &b, 1e-6, maxiter, None,
+                &HealthConfig::default(), ckpt, resume,
+            )
+            .expect("clean solve");
+            (stats, x)
+        });
+    assert!(resumed.converged);
+    assert_eq!(
+        resumed.history, full.history,
+        "fused bicgstab history diverged after resume from iteration {at}"
+    );
+    assert_eq!(x_resumed.data, x_full.data, "fused bicgstab iterate diverged");
+}
+
+#[test]
+fn mixed_resume_bitwise_identical() {
+    let dir = scratch("mixed");
+    let g = geom();
+    let mut rng = Rng::seeded(713);
+    let u = GaugeField::<f64>::random(&g, &mut rng);
+    let b = FermionField::<f64>::gaussian(&g, &mut rng);
+    let ghash = gauge_hash(&u);
+    let kappa = 0.12f64;
+    let mut run = |max_outer: usize,
+                   ckpt: Option<&mut Checkpointer>,
+                   resume: Option<&SolverState>| {
+        let mut outer = NativeMeo::new(&g, u.clone(), kappa);
+        let mut inner = NativeMeo::new(&g, u.to_precision::<f32>(), kappa as f32);
+        let mut team = Team::new(2, BarrierKind::Sleep);
+        let mut x = FermionField::<f64>::zeros(&g);
+        let stats = solver::mixed_refinement_team_profiled_ckpt(
+            &mut outer, &mut inner, &mut x, &b, 1e-11, max_outer, 1e-2, 200,
+            InnerAlgorithm::BiCgStab, &mut team, None, ckpt, resume,
+        );
+        (stats, x)
+    };
+
+    let (full, x_full) = run(40, None, None);
+    assert!(full.converged, "{full:?}");
+    assert!(full.outer_iterations > 2);
+
+    let mut ckpt = Checkpointer::new(opts(&dir, 1, 4, false), 0, 1, ghash).unwrap();
+    let (part, _) = run(2, Some(&mut ckpt), None);
+    assert!(!part.converged);
+    assert!(ckpt.committed() >= 1);
+
+    let (st, _) = load_latest(&dir, 0, 1, ghash).unwrap();
+    assert!(st.iteration > 0);
+    let (resumed, x_resumed) = run(40, None, Some(&st));
+    assert!(resumed.converged);
+    assert_eq!(resumed.outer_iterations, full.outer_iterations);
+    assert_eq!(resumed.history, full.history, "mixed outer history diverged");
+    assert_eq!(
+        resumed.inner_histories, full.inner_histories,
+        "mixed inner histories diverged"
+    );
+    assert_eq!(x_resumed.data, x_full.data, "mixed iterate diverged");
+}
+
+#[test]
+fn block_cg_resume_bitwise_identical() {
+    let dir = scratch("block-cg");
+    let g = geom();
+    let nrhs = 3;
+    let mut rng = Rng::seeded(715);
+    let u = GaugeField::random(&g, &mut rng);
+    let bs: Vec<FermionField<f32>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+    let b = MultiFermionField::from_rhs(&bs);
+    let ghash = gauge_hash(&u);
+    let mut run = |maxiter: usize,
+                   ckpt: Option<&mut Checkpointer>,
+                   resume: Option<&SolverState>| {
+        let mut op = MultiMdagM::new(&g, u.clone(), 0.12f32, nrhs);
+        let mut team = Team::new(1, BarrierKind::Sleep);
+        let mut x = MultiFermionField::<f32>::zeros(&g, nrhs);
+        let stats = solver::block_cg_generic_guarded_ckpt(
+            &mut op, &mut team, &mut x, &b, 1e-5, maxiter,
+            &HealthConfig::default(), None, ckpt, resume,
+        )
+        .expect("clean solve");
+        (stats, x)
+    };
+
+    let (full, x_full) = run(300, None, None);
+    assert!(full.converged, "{full:?}");
+    assert!(full.iterations > 12);
+
+    let mut ckpt = Checkpointer::new(opts(&dir, 5, 4, false), 0, 1, ghash).unwrap();
+    let (part, _) = run(12, Some(&mut ckpt), None);
+    assert!(!part.converged);
+    assert!(ckpt.committed() >= 1);
+
+    let (st, _) = load_latest(&dir, 0, 1, ghash).unwrap();
+    let (resumed, x_resumed) = run(300, None, Some(&st));
+    assert!(resumed.converged);
+    assert_eq!(resumed.iterations, full.iterations);
+    for r in 0..nrhs {
+        assert_eq!(
+            resumed.per_rhs[r].history, full.per_rhs[r].history,
+            "block cg rhs {r} history diverged after resume from iteration {}",
+            st.iteration
+        );
+        assert_eq!(resumed.per_rhs[r].converged, full.per_rhs[r].converged);
+    }
+    assert_eq!(x_resumed.data, x_full.data, "block cg iterate diverged");
+}
+
+#[test]
+fn block_bicgstab_resume_bitwise_identical() {
+    let dir = scratch("block-bicgstab");
+    let g = geom();
+    let nrhs = 3;
+    let mut rng = Rng::seeded(717);
+    let u = GaugeField::random(&g, &mut rng);
+    let bs: Vec<FermionField<f32>> =
+        (0..nrhs).map(|_| FermionField::gaussian(&g, &mut rng)).collect();
+    let b = MultiFermionField::from_rhs(&bs);
+    let ghash = gauge_hash(&u);
+    let mut run = |maxiter: usize,
+                   ckpt: Option<&mut Checkpointer>,
+                   resume: Option<&SolverState>| {
+        let mut op = MultiNativeMeo::new(&g, u.clone(), 0.12f32, nrhs);
+        let mut team = Team::new(1, BarrierKind::Sleep);
+        let mut x = MultiFermionField::<f32>::zeros(&g, nrhs);
+        let stats = solver::block_bicgstab_generic_guarded_ckpt(
+            &mut op, &mut team, &mut x, &b, 1e-5, maxiter,
+            &HealthConfig::default(), None, ckpt, resume,
+        )
+        .expect("clean solve");
+        (stats, x)
+    };
+
+    let (full, x_full) = run(300, None, None);
+    assert!(full.converged, "{full:?}");
+    assert!(full.iterations > 12);
+
+    let mut ckpt = Checkpointer::new(opts(&dir, 5, 4, false), 0, 1, ghash).unwrap();
+    let (part, _) = run(12, Some(&mut ckpt), None);
+    assert!(!part.converged);
+    assert!(ckpt.committed() >= 1);
+
+    let (st, _) = load_latest(&dir, 0, 1, ghash).unwrap();
+    let (resumed, x_resumed) = run(300, None, Some(&st));
+    assert!(resumed.converged);
+    assert_eq!(resumed.iterations, full.iterations);
+    for r in 0..nrhs {
+        assert_eq!(
+            resumed.per_rhs[r].history, full.per_rhs[r].history,
+            "block bicgstab rhs {r} history diverged after resume from iteration {}",
+            st.iteration
+        );
+    }
+    assert_eq!(x_resumed.data, x_full.data, "block bicgstab iterate diverged");
+}
+
+// ---------------------------------------------------------------------------
+// 2-rank distributed: collective generations, buddy restore, bitwise resume
+// ---------------------------------------------------------------------------
+
+#[test]
+fn two_rank_resume_and_buddy_restore() {
+    let dir = scratch("dist");
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let nrhs = 2;
+    let global = LatticeDims::new(8, 4, 4, 8).unwrap();
+    let tiling = Tiling::new(2, 2).unwrap();
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let mut rng = Rng::seeded(719);
+    let u_global: GaugeField = GaugeField::random(&ggeom, &mut rng);
+    let bs_global: Vec<FermionField> =
+        (0..nrhs).map(|_| FermionField::gaussian(&ggeom, &mut rng)).collect();
+    let world = || WorldOpts {
+        timeout_ms: 30_000,
+        max_retries: 3,
+        faults: FaultPlan::none(),
+    };
+
+    // ckpt: None = no sink, Some(cap) = checkpoint with maxiter capped;
+    // resume loads the last globally-consistent generation per rank.
+    let run = |ckpt_cap: Option<usize>, resume: bool| {
+        run_world_cfg(grid.size(), world(), |rank, comm| {
+            let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+            let u = extract_gauge(&u_global, &lgeom);
+            let ghash = gauge_hash(&u);
+            let bs: Vec<FermionField> = bs_global
+                .iter()
+                .map(|b| extract_fermion(b, &ggeom, &lgeom))
+                .collect();
+            let b = MultiFermionField::from_rhs(&bs);
+            let dist = DistHopping::new(&lgeom, true, 1, Eo2Schedule::Uniform);
+            let mut team = Team::new(1, BarrierKind::Sleep);
+            let prof = Profiler::new(1);
+            let mut x = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+            let mut op =
+                DistMultiMeo::new(&lgeom, &dist, &u, 0.12f32, nrhs, comm, &prof).unwrap();
+            let mut ckpt = ckpt_cap.map(|_| {
+                Checkpointer::new(opts(&dir, 4, 4, true), rank, 2, ghash).unwrap()
+            });
+            let st = resume.then(|| {
+                let (st, gen) = load_latest(&dir, rank, 2, ghash).expect("resume state");
+                (st, gen)
+            });
+            let maxiter = ckpt_cap.unwrap_or(80);
+            let stats = solver::block_bicgstab_generic_guarded_ckpt(
+                &mut op, &mut team, &mut x, &b, 1e-5, maxiter,
+                &HealthConfig::default(), None,
+                ckpt.as_mut(), st.as_ref().map(|(s, _)| s),
+            )
+            .expect("solve");
+            let buddy = ckpt.as_mut().and_then(|c| c.take_buddy());
+            (stats, ghash, st.map(|(_, g)| g), buddy)
+        })
+    };
+
+    // reference: the uninterrupted 2-rank run
+    let full = run(None, false);
+    assert!(full[0].0.converged, "{:?}", full[0].0);
+
+    // interrupted checkpointed run: stops at 10 iterations with
+    // generations committed at iterations 4 and 8 on both ranks
+    let part = run(Some(10), false);
+    assert!(!part[0].0.converged);
+    for rank in 0..2 {
+        assert_eq!(committed_generations(&dir, rank), vec![0, 1], "rank {rank}");
+    }
+
+    // buddy copies crossed the ring: each rank carried its neighbor's
+    // newest generation out of the world, bitwise the on-disk file
+    let b0 = part[0].3.clone().expect("rank 0 buddy");
+    let b1 = part[1].3.clone().expect("rank 1 buddy");
+    assert_eq!(b0.owner, 1);
+    assert_eq!(b1.owner, 0);
+    assert_eq!(b0.gen, 1);
+    assert_eq!(b1.gen, 1);
+    assert_eq!(b0.bytes, fs::read(ckpt_path(&dir, 1, 1)).unwrap());
+    assert_eq!(b1.bytes, fs::read(ckpt_path(&dir, 0, 1)).unwrap());
+
+    // simulate losing rank 1's local storage entirely
+    for gen in committed_generations(&dir, 1) {
+        fs::remove_file(ckpt_path(&dir, 1, gen)).unwrap();
+        fs::remove_file(commit_path(&dir, 1, gen)).unwrap();
+    }
+    let ghash1 = part[1].1;
+    assert!(load_latest(&dir, 1, 2, ghash1).is_err(), "rank 1 must have nothing left");
+
+    // the survivor's buddy copy re-materializes the dead rank's
+    // checkpoint; afterwards both ranks agree on generation 1
+    restore_from_buddy(&dir, &b0).unwrap();
+    let (st1, gen1) = load_latest(&dir, 1, 2, ghash1).unwrap();
+    assert_eq!(gen1, 1);
+    assert_eq!(st1.iteration, 8);
+
+    // resume: both ranks load the last generation committed by all and
+    // continue bitwise identically to the uninterrupted run
+    let resumed = run(None, true);
+    for rank in 0..2 {
+        assert_eq!(resumed[rank].2, Some(1), "rank {rank} resumed generation");
+        let (rs, fs_) = (&resumed[rank].0, &full[rank].0);
+        assert!(rs.converged, "rank {rank}");
+        assert_eq!(rs.iterations, fs_.iterations, "rank {rank}");
+        for r in 0..nrhs {
+            assert_eq!(
+                rs.per_rhs[r].history, fs_.per_rhs[r].history,
+                "rank {rank} rhs {r}: resumed history diverged from the \
+                 uninterrupted run"
+            );
+        }
+    }
+}
+
+/// Buddy transport helpers: the f64 bit-packing used to ship checkpoint
+/// images over `Comm` must round-trip raw bytes exactly.
+#[test]
+fn buddy_copy_roundtrip_via_restore() {
+    let dir = scratch("buddy-rt");
+    fs::create_dir_all(&dir).unwrap();
+    let copy = BuddyCopy { owner: 3, gen: 7, bytes: vec![1, 2, 3, 250, 251, 252] };
+    restore_from_buddy(&dir, &copy).unwrap();
+    assert_eq!(fs::read(ckpt_path(&dir, 3, 7)).unwrap(), copy.bytes);
+    assert_eq!(committed_generations(&dir, 3), vec![7]);
+}

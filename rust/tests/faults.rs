@@ -14,9 +14,13 @@ use lqcd::comm::decompose::{extract_fermion, extract_gauge};
 use lqcd::comm::{run_world, run_world_cfg, FaultPlan, WorldOpts};
 use lqcd::coordinator::operator::{DistMultiMdagM, DistMultiMeo};
 use lqcd::coordinator::{BarrierKind, DistHopping, Eo2Schedule, Profiler, Team};
+use lqcd::field::snapshot::gauge_hash;
 use lqcd::field::{FermionField, GaugeField, MultiFermionField};
 use lqcd::lattice::{Geometry, LatticeDims, ProcGrid, Tiling};
-use lqcd::solver::{self, BlockSolveStats, HealthConfig, SolveError, SolveErrorKind};
+use lqcd::solver::{
+    self, load_latest, BlockSolveStats, Checkpointer, CkptOpts, HealthConfig,
+    SolveError, SolveErrorKind,
+};
 use lqcd::util::rng::Rng;
 
 const TOL: f64 = 1e-4;
@@ -286,6 +290,142 @@ fn kill_surfaces_structured_error_on_every_rank() {
         victim.to_string().contains("killed"),
         "victim diagnostic: {victim}"
     );
+}
+
+/// The fault-cursor checkpoint contract at the [`FaultPlan`] level: a
+/// state whose cursors were saved mid-schedule and restored into a
+/// fresh state fires exactly the REMAINING triggers, at the same
+/// (rule, tag, matching-send) points as the uninterrupted schedule.
+#[test]
+fn fault_cursor_restore_replays_remaining_schedule() {
+    let plan =
+        FaultPlan::parse("drop:nth=3,count=4;corrupt:tag=9,nth=2,count=2").unwrap();
+    // a deterministic send sequence: tags alternating 3 / 9 from rank 0
+    let sends: Vec<(usize, u64)> =
+        (0..12).map(|i| (0usize, if i % 2 == 0 { 3 } else { 9 })).collect();
+
+    let mut full = plan.new_state();
+    for (seq, &(from, tag)) in sends.iter().enumerate() {
+        plan.message_action(&mut full, from, tag, seq as u64);
+    }
+    assert!(!full.fired().is_empty(), "plan never fired");
+
+    // interrupt after 5 sends; checkpoint the cursors
+    let mut part = plan.new_state();
+    for (seq, &(from, tag)) in sends[..5].iter().enumerate() {
+        plan.message_action(&mut part, from, tag, seq as u64);
+    }
+    let cursors = part.cursors();
+
+    // restart: a fresh state with restored cursors continues mid-plan
+    let mut resumed = plan.new_state();
+    resumed.restore_cursors(&cursors);
+    for (seq, &(from, tag)) in sends[5..].iter().enumerate() {
+        plan.message_action(&mut resumed, from, tag, (5 + seq) as u64);
+    }
+    let mut replay = part.fired().to_vec();
+    replay.extend_from_slice(resumed.fired());
+    assert_eq!(
+        replay,
+        full.fired(),
+        "resumed schedule diverged from the uninterrupted one"
+    );
+
+    // negative control: without the restore, the early triggers replay
+    // at the wrong sequence points
+    let mut cold = plan.new_state();
+    for (seq, &(from, tag)) in sends[5..].iter().enumerate() {
+        plan.message_action(&mut cold, from, tag, (5 + seq) as u64);
+    }
+    assert_ne!(
+        cold.fired(),
+        resumed.fired(),
+        "a cold state must not reproduce the mid-plan continuation"
+    );
+}
+
+/// End-to-end replay: a distributed solve under a seeded drop schedule,
+/// interrupted after a checkpoint and resumed in a NEW world with the
+/// same plan, restores the fault cursors with the rest of the solver
+/// state — the surviving triggers land at the same points and the
+/// final per-RHS histories stay bitwise identical to the uninterrupted
+/// faulted run.
+#[test]
+fn fault_plan_replays_across_checkpoint_restart() {
+    let dir = std::env::temp_dir()
+        .join(format!("lqcd-faults-replay-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let grid = ProcGrid([1, 1, 1, 2]);
+    let nrhs = 2;
+    let spec = "drop:seed=7,count=6";
+    let (global, tiling, u_global, bs_global) = problem(nrhs);
+    let ggeom = Geometry::single_rank(global, tiling).unwrap();
+    let run = |maxiter: usize, ckpt_on: bool, resume: bool| {
+        run_world_cfg(grid.size(), world_opts(spec, 300, 3), |rank, comm| {
+            let lgeom = Geometry::for_rank(global, grid, rank, tiling).unwrap();
+            let u = extract_gauge(&u_global, &lgeom);
+            let ghash = gauge_hash(&u);
+            let bs: Vec<FermionField> = bs_global
+                .iter()
+                .map(|b| extract_fermion(b, &ggeom, &lgeom))
+                .collect();
+            let b = MultiFermionField::from_rhs(&bs);
+            let dist = DistHopping::new(&lgeom, true, 1, Eo2Schedule::Uniform);
+            let mut team = Team::new(1, BarrierKind::Sleep);
+            let prof = Profiler::new(1);
+            let mut x = MultiFermionField::<f32>::zeros(&lgeom, nrhs);
+            let mut op =
+                DistMultiMeo::new(&lgeom, &dist, &u, KAPPA, nrhs, comm, &prof).unwrap();
+            let mut ckpt = ckpt_on.then(|| {
+                Checkpointer::new(
+                    CkptOpts {
+                        dir: dir.clone(),
+                        every_iters: 4,
+                        every_ms: 0,
+                        keep: 4,
+                        buddy: false,
+                    },
+                    rank,
+                    2,
+                    ghash,
+                )
+                .unwrap()
+            });
+            let st = resume
+                .then(|| load_latest(&dir, rank, 2, ghash).expect("resume state").0);
+            solver::block_bicgstab_generic_guarded_ckpt(
+                &mut op,
+                &mut team,
+                &mut x,
+                &b,
+                TOL,
+                maxiter,
+                &HealthConfig::default(),
+                None,
+                ckpt.as_mut(),
+                st.as_ref(),
+            )
+        })
+    };
+
+    let full = assert_all_ok(&run(MAXITER, false, false), "faulted reference");
+    assert!(full[0].converged, "reference must converge despite drops");
+
+    let part = assert_all_ok(&run(6, true, false), "interrupted");
+    assert!(!part[0].converged, "cap of 6 iterations must interrupt");
+
+    let resumed = assert_all_ok(&run(MAXITER, false, true), "resumed");
+    for (rank, (r, f)) in resumed.iter().zip(&full).enumerate() {
+        assert!(r.converged, "rank {rank}");
+        assert_eq!(r.iterations, f.iterations, "rank {rank}");
+        for i in 0..nrhs {
+            assert_eq!(
+                r.per_rhs[i].history, f.per_rhs[i].history,
+                "rank {rank} rhs {i}: resumed faulted solve diverged from \
+                 the uninterrupted faulted run"
+            );
+        }
+    }
 }
 
 /// The CG (normal-equations) distributed path is guarded too: clean runs
