@@ -1,0 +1,652 @@
+//! The invariant linter: a line/token-level scanner (no full parser)
+//! that walks `rust/src` and mechanically enforces the repo's hand-kept
+//! correctness invariants as named, individually-suppressable rules.
+//!
+//! | rule             | invariant                                                        |
+//! |------------------|------------------------------------------------------------------|
+//! | `safety-comment` | every `unsafe` block/fn/impl is justified by `// SAFETY:`        |
+//! | `raw-f64-accum`  | scalar partial sums use `field::blas::reduce_partials*`          |
+//! | `tag-registry`   | wire tags are minted only by `comm::tags`                        |
+//! | `config-doc`     | every key parsed in `config/run.rs` appears in `example.toml`    |
+//! | `adhoc-json`     | machine-readable output goes through `util::json`, not `format!` |
+//!
+//! Suppression: a trailing or immediately-preceding comment of the form
+//! `// lint: allow(rule-name)` (several rules comma-separated) silences
+//! that rule on that line. Suppressions are counted and reported, so a
+//! drive-by `allow` shows up in review and in the findings JSON.
+//!
+//! The scanner is deliberately token-level: it classifies each source
+//! line into code / comment / string regions (handling nested block
+//! comments, raw strings and char literals), then matches patterns in
+//! the right region. That bounds what it can see — a raw accumulation
+//! through a pointer with an innocent name will slip by — but it also
+//! means zero dependencies, microsecond scans, and no false positives
+//! from macro-expanded code it cannot resolve.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::JsonWriter;
+
+/// Every rule the scanner knows, with a one-line description (shown by
+/// `lqcd lint --rules` and in ARCHITECTURE.md's rule table).
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "safety-comment",
+        "every `unsafe` block/fn/impl carries a `// SAFETY:` (or `# Safety` doc) justification",
+    ),
+    (
+        "raw-f64-accum",
+        "scalar partial sums route through field::blas::reduce_partials* / the reduce_caps* family",
+    ),
+    (
+        "tag-registry",
+        "wire tags are minted only by comm::tags (no ad-hoc bit-63 namespaces or tag fns)",
+    ),
+    (
+        "config-doc",
+        "every config key parsed in config/run.rs is documented in configs/example.toml",
+    ),
+    (
+        "adhoc-json",
+        "machine-readable output goes through util::json, not hand-assembled format! strings",
+    ),
+];
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Result of a whole-tree scan.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable findings document (the CI artifact).
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.obj_begin();
+        w.key("files_scanned");
+        w.uint(self.files_scanned as u64);
+        w.key("suppressed");
+        w.uint(self.suppressed as u64);
+        w.key("count");
+        w.uint(self.findings.len() as u64);
+        w.key("findings");
+        w.arr_begin();
+        for f in &self.findings {
+            w.obj_begin();
+            w.key("rule");
+            w.str_val(f.rule);
+            w.key("file");
+            w.str_val(&f.file);
+            w.key("line");
+            w.uint(f.line as u64);
+            w.key("msg");
+            w.str_val(&f.msg);
+            w.obj_end();
+        }
+        w.arr_end();
+        w.obj_end();
+        w.finish()
+    }
+}
+
+// ---------------------------------------------------------------------
+// line classification
+// ---------------------------------------------------------------------
+
+/// One source line split into regions. `code` has comments removed and
+/// string/char-literal *contents* blanked (quotes kept), so token rules
+/// never fire on text inside literals. `code_strings` keeps literal
+/// contents (comments still removed) for rules that must inspect what a
+/// `format!` assembles. `comment` is everything inside `//`/`/* */`.
+#[derive(Debug, Default, Clone)]
+struct LineView {
+    code: String,
+    code_strings: String,
+    comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Ctx {
+    Code,
+    Str,
+    RawStr(u8),
+    BlockComment(u32),
+}
+
+/// Split a whole file; handles multi-line strings and nested block
+/// comments across line boundaries.
+fn classify(text: &str) -> Vec<LineView> {
+    let mut out = Vec::new();
+    let mut ctx = Ctx::Code;
+    for line in text.lines() {
+        let mut v = LineView::default();
+        let bytes: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        let n = bytes.len();
+        let mut line_comment = false;
+        while i < n {
+            let c = bytes[i];
+            let next = if i + 1 < n { bytes[i + 1] } else { '\0' };
+            match ctx {
+                Ctx::BlockComment(depth) => {
+                    if c == '*' && next == '/' {
+                        v.comment.push_str("*/");
+                        i += 2;
+                        ctx = if depth > 1 { Ctx::BlockComment(depth - 1) } else { Ctx::Code };
+                    } else if c == '/' && next == '*' {
+                        v.comment.push_str("/*");
+                        i += 2;
+                        ctx = Ctx::BlockComment(depth + 1);
+                    } else {
+                        v.comment.push(c);
+                        i += 1;
+                    }
+                }
+                Ctx::Str => {
+                    v.code_strings.push(c);
+                    if c == '\\' {
+                        if i + 1 < n {
+                            v.code_strings.push(next);
+                        }
+                        v.code.push(' ');
+                        v.code.push(' ');
+                        i += 2;
+                    } else if c == '"' {
+                        v.code.push('"');
+                        i += 1;
+                        ctx = Ctx::Code;
+                    } else {
+                        v.code.push(' ');
+                        i += 1;
+                    }
+                }
+                Ctx::RawStr(hashes) => {
+                    // a raw string ends at `"` followed by `hashes` #s
+                    if c == '"' {
+                        let mut k = 0usize;
+                        while k < hashes as usize && i + 1 + k < n && bytes[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes as usize {
+                            v.code_strings.push('"');
+                            v.code.push('"');
+                            for _ in 0..k {
+                                v.code_strings.push('#');
+                                v.code.push('#');
+                            }
+                            i += 1 + k;
+                            ctx = Ctx::Code;
+                            continue;
+                        }
+                    }
+                    v.code_strings.push(c);
+                    v.code.push(' ');
+                    i += 1;
+                }
+                Ctx::Code => {
+                    if line_comment {
+                        v.comment.push(c);
+                        i += 1;
+                    } else if c == '/' && next == '/' {
+                        line_comment = true;
+                        v.comment.push_str("//");
+                        i += 2;
+                    } else if c == '/' && next == '*' {
+                        ctx = Ctx::BlockComment(1);
+                        v.comment.push_str("/*");
+                        i += 2;
+                    } else if c == '"' {
+                        v.code.push('"');
+                        v.code_strings.push('"');
+                        ctx = Ctx::Str;
+                        i += 1;
+                    } else if c == 'r' && (next == '"' || next == '#') {
+                        // raw string r"..." / r#"..."# (or an identifier
+                        // like `r#foo`; the quote check below settles it)
+                        let mut k = 0usize;
+                        while i + 1 + k < n && bytes[i + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if i + 1 + k < n && bytes[i + 1 + k] == '"' {
+                            v.code.push('r');
+                            v.code_strings.push('r');
+                            for _ in 0..k {
+                                v.code.push('#');
+                                v.code_strings.push('#');
+                            }
+                            v.code.push('"');
+                            v.code_strings.push('"');
+                            ctx = Ctx::RawStr(k as u8);
+                            i += 2 + k;
+                        } else {
+                            v.code.push(c);
+                            v.code_strings.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        // char literal vs lifetime: a literal closes
+                        // within a few chars (`'x'`, `'\n'`, `'\\''`)
+                        let lit_len = if next == '\\' && i + 3 < n && bytes[i + 3] == '\'' {
+                            Some(4)
+                        } else if i + 2 < n && next != '\\' && bytes[i + 2] == '\'' {
+                            Some(3)
+                        } else {
+                            None
+                        };
+                        match lit_len {
+                            Some(l) => {
+                                v.code.push('\'');
+                                v.code_strings.push('\'');
+                                for _ in 1..l - 1 {
+                                    v.code.push(' ');
+                                    v.code_strings.push(' ');
+                                }
+                                v.code.push('\'');
+                                v.code_strings.push('\'');
+                                i += l;
+                            }
+                            None => {
+                                v.code.push(c);
+                                v.code_strings.push(c);
+                                i += 1;
+                            }
+                        }
+                    } else {
+                        v.code.push(c);
+                        v.code_strings.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(v);
+    }
+    out
+}
+
+/// Does `hay` contain `needle` as a standalone token (neighbours are not
+/// identifier chars)?
+fn has_token(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(pos) = hay[from..].find(needle) {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !hay[..at].chars().next_back().map_or(false, |c| c.is_alphanumeric() || c == '_');
+        let after = at + needle.len();
+        let after_ok = after >= hay.len()
+            || !hay[after..].chars().next().map_or(false, |c| c.is_alphanumeric() || c == '_');
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// suppression + scan state
+// ---------------------------------------------------------------------
+
+/// Rules a `// lint: allow(a, b)` comment names.
+fn parse_allows(comment: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = comment[from..].find("lint: allow(") {
+        let start = from + pos + "lint: allow(".len();
+        if let Some(end) = comment[start..].find(')') {
+            for rule in comment[start..start + end].split(',') {
+                out.push(rule.trim().to_string());
+            }
+            from = start + end;
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Scan one file's source text. `path` is the repo-relative path with
+/// `/` separators (used for allowlists). Returns findings plus how many
+/// would-be findings an inline `lint: allow` suppressed.
+pub fn lint_source(path: &str, text: &str) -> (Vec<Finding>, usize) {
+    let lines = classify(text);
+    let raw: Vec<&str> = text.lines().collect();
+
+    // suppressions: same line or the line immediately after the comment
+    let mut allowed: Vec<Vec<String>> = vec![Vec::new(); lines.len() + 1];
+    for (i, v) in lines.iter().enumerate() {
+        for rule in parse_allows(&v.comment) {
+            allowed[i].push(rule.clone());
+            if i + 1 < allowed.len() {
+                allowed[i + 1].push(rule);
+            }
+        }
+    }
+
+    let in_blas = path.ends_with("field/blas.rs");
+    let in_tags = path.ends_with("comm/tags.rs");
+    let in_json = path.ends_with("util/json.rs");
+
+    // the escaped-quote-colon JSON signature, built char-wise so this
+    // file's own source never matches it
+    let json_sig: String = ['\\', '"', ':'].iter().collect();
+
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    let mut emit = |rule: &'static str, line_ix: usize, msg: String, allowed: &[String]| {
+        if allowed.iter().any(|r| r == rule) {
+            suppressed += 1;
+        } else {
+            findings.push(Finding { rule, file: path.to_string(), line: line_ix + 1, msg });
+        }
+    };
+
+    let mut test_region = false;
+    let mut depth: i32 = 0;
+    // (enclosing-depth, name) of each fn we are inside
+    let mut fn_stack: Vec<(i32, String)> = Vec::new();
+
+    for (i, v) in lines.iter().enumerate() {
+        let code = v.code.as_str();
+        if code.contains("#[cfg(test)]") {
+            test_region = true;
+        }
+
+        // track the enclosing fn name (approximate: formatted code only)
+        if let Some(pos) = find_fn_decl(code) {
+            let name: String = code[pos..]
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                fn_stack.push((depth, name));
+            }
+        }
+
+        // rule: safety-comment
+        if has_token(code, "unsafe") {
+            let justified = v.comment.contains("SAFETY")
+                || v.comment.contains("# Safety")
+                || preceding_comment_has_safety(&lines, &raw, i);
+            if !justified {
+                emit(
+                    "safety-comment",
+                    i,
+                    "`unsafe` without an adjacent `// SAFETY:` justification".to_string(),
+                    &allowed[i],
+                );
+            }
+        }
+
+        // rule: raw-f64-accum
+        if !in_blas {
+            let fn_ok = fn_stack
+                .last()
+                .map_or(false, |(_, name)| name.starts_with("reduce_"));
+            let lower = code.to_ascii_lowercase();
+            let accum = code.contains("+=") || code.contains(".sum(") || code.contains(".sum::<");
+            if !fn_ok && accum && lower.contains("partial") {
+                emit(
+                    "raw-f64-accum",
+                    i,
+                    "raw accumulation over partials; use field::blas::reduce_partials* \
+                     or a reduce_caps* helper (canonical tile-order grouping)"
+                        .to_string(),
+                    &allowed[i],
+                );
+            }
+        }
+
+        // rule: tag-registry
+        if !in_tags && !test_region {
+            let despaced: String = code.chars().filter(|c| !c.is_whitespace()).collect();
+            let ck_shift = ["<<", "63"].concat();
+            if despaced.contains(&ck_shift) {
+                emit(
+                    "tag-registry",
+                    i,
+                    "bit-63 tag namespace minted outside comm::tags (use tags::ckpt_buddy)"
+                        .to_string(),
+                    &allowed[i],
+                );
+            }
+            let tag_fn = ["fn", "tag("].concat();
+            let tag_fn_multi = ["fn", "tag_multi("].concat();
+            if despaced.contains(&tag_fn) || despaced.contains(&tag_fn_multi) {
+                emit(
+                    "tag-registry",
+                    i,
+                    "tag-constructor fn declared outside comm::tags".to_string(),
+                    &allowed[i],
+                );
+            }
+        }
+
+        // rule: adhoc-json (string contents count, comments do not)
+        if !in_json && !test_region && v.code_strings.contains(&json_sig) {
+            emit(
+                "adhoc-json",
+                i,
+                "hand-assembled JSON string; emit through util::json::JsonWriter".to_string(),
+                &allowed[i],
+            );
+        }
+
+        // update depth last so a fn declared on this line scopes its body
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        while fn_stack.last().map_or(false, |(d, _)| depth <= *d) {
+            fn_stack.pop();
+        }
+    }
+
+    (findings, suppressed)
+}
+
+/// Position just past `fn ` in a declaration, if the line declares one.
+fn find_fn_decl(code: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("fn ") {
+        let at = from + pos;
+        let before_ok = at == 0
+            || !code[..at].chars().next_back().map_or(false, |c| c.is_alphanumeric() || c == '_');
+        if before_ok {
+            return Some(at + 3);
+        }
+        from = at + 3;
+    }
+    None
+}
+
+/// Walk upward over the contiguous comment/attribute block above line
+/// `i` looking for a SAFETY justification.
+fn preceding_comment_has_safety(lines: &[LineView], raw: &[&str], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let v = &lines[j];
+        let code_trim = v.code.trim();
+        let is_attr = code_trim.starts_with("#[") || code_trim.starts_with("#!");
+        let comment_only = code_trim.is_empty() && !v.comment.is_empty();
+        let blank = raw[j].trim().is_empty();
+        if v.comment.contains("SAFETY") || v.comment.contains("# Safety") {
+            return true;
+        }
+        if blank || (!comment_only && !is_attr) {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// config-doc (cross-file)
+// ---------------------------------------------------------------------
+
+/// Keys `config/run.rs` reads, with the line each first appears on.
+pub fn parsed_config_keys(run_rs: &str) -> Vec<(String, usize)> {
+    let lines = classify(run_rs);
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for (i, v) in lines.iter().enumerate() {
+        let s = &v.code_strings;
+        for pat in ["get(\"", "_or(\""] {
+            let mut from = 0;
+            while let Some(pos) = s[from..].find(pat) {
+                let start = from + pos + pat.len();
+                if let Some(end) = s[start..].find('"') {
+                    let key = &s[start..start + end];
+                    let valid = !key.is_empty()
+                        && key
+                            .chars()
+                            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_' || c == '.');
+                    if valid && !out.iter().any(|(k, _)| k == key) {
+                        out.push((key.to_string(), i + 1));
+                    }
+                    from = start + end;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Keys `configs/example.toml` documents: active *or* commented-out
+/// (`#key = ...` under a `[section]` / `#[section]` header counts —
+/// the doc requirement is that the key is discoverable, not enabled).
+pub fn documented_toml_keys(toml: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut section = String::new();
+    for line in toml.lines() {
+        let mut t = line.trim();
+        while let Some(rest) = t.strip_prefix('#') {
+            t = rest.trim();
+        }
+        if let Some(rest) = t.strip_prefix('[') {
+            if let Some(end) = rest.find(']') {
+                section = rest[..end].trim().to_string();
+            }
+            continue;
+        }
+        if let Some(eq) = t.find('=') {
+            let key: String = t[..eq].trim().to_string();
+            let valid = !key.is_empty()
+                && key
+                    .chars()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+            if valid {
+                let full = if section.is_empty() {
+                    key
+                } else {
+                    format!("{section}.{key}")
+                };
+                if !out.contains(&full) {
+                    out.push(full);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The `config-doc` rule: every parsed key must be documented.
+pub fn check_config_doc(run_rs_path: &str, run_rs: &str, example_toml: &str) -> Vec<Finding> {
+    let documented = documented_toml_keys(example_toml);
+    parsed_config_keys(run_rs)
+        .into_iter()
+        .filter(|(key, _)| !documented.iter().any(|d| d == key))
+        .map(|(key, line)| Finding {
+            rule: "config-doc",
+            file: run_rs_path.to_string(),
+            line,
+            msg: format!("config key {key:?} is parsed here but not documented in configs/example.toml"),
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// tree walk
+// ---------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("lint: cannot read {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("lint: walk error under {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map_or(false, |x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Scan the whole tree rooted at the repo checkout (`rust/src` sources
+/// plus the `config-doc` cross-check against `configs/example.toml`).
+pub fn lint_tree(repo_root: &Path) -> Result<LintReport, String> {
+    let src = repo_root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files)?;
+    files.sort();
+
+    let mut report = LintReport::default();
+    let mut run_rs: Option<(String, String)> = None;
+    for file in &files {
+        let rel = file
+            .strip_prefix(repo_root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(file)
+            .map_err(|e| format!("lint: cannot read {}: {e}", file.display()))?;
+        if rel.ends_with("config/run.rs") {
+            run_rs = Some((rel.clone(), text.clone()));
+        }
+        let (findings, suppressed) = lint_source(&rel, &text);
+        report.findings.extend(findings);
+        report.suppressed += suppressed;
+        report.files_scanned += 1;
+    }
+
+    if let Some((rel, text)) = run_rs {
+        let toml_path = repo_root.join("configs").join("example.toml");
+        let toml = fs::read_to_string(&toml_path)
+            .map_err(|e| format!("lint: cannot read {}: {e}", toml_path.display()))?;
+        report.findings.extend(check_config_doc(&rel, &text, &toml));
+    }
+
+    report
+        .findings
+        .sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}

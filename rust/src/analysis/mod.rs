@@ -1,0 +1,13 @@
+//! In-tree correctness tooling: a zero-dependency invariant linter for
+//! the source tree ([`lint`]) and a deterministic model checker for the
+//! team/comm/telemetry concurrency protocols ([`model`]).
+//!
+//! Both are wired into the `lqcd lint` subcommand and run as a CI gate;
+//! see ARCHITECTURE.md "Correctness tooling" for the rule table and the
+//! checker's scope and bounds.
+
+pub mod lint;
+pub mod model;
+
+pub use lint::{lint_tree, Finding, LintReport};
+pub use model::{check, run_suite, CheckOpts, CheckReport};

@@ -1,0 +1,882 @@
+//! A loom-style deterministic model checker: small explicit-state models
+//! of the tree's lock-free protocols, explored exhaustively by a DFS
+//! scheduler with a bounded number of preemptions.
+//!
+//! Each model is a hand-written state machine whose `step(tid)` performs
+//! exactly one shared-memory action (one atomic load, store or RMW of
+//! the real protocol), so every interleaving the hardware could produce
+//! at that granularity corresponds to one DFS schedule. The checker
+//! explores them all (deduplicating states by fingerprint), detecting
+//!
+//! * assertion violations inside a step (torn publish, early release),
+//! * lost signals: no thread runnable but the model is not finished
+//!   (this is exactly what a lost wakeup looks like — a waiter parked
+//!   on a condition nobody will ever flip again),
+//! * bad final states (`finale`).
+//!
+//! Modelled protocols (see the shipping code for the real thing):
+//!
+//! * [`BarrierModel`] — `coordinator::team::TeamBarrier`: sense-reversing
+//!   count/generation barrier, both barrier kinds, reused across
+//!   iterations. A seeded [`BarrierBug::LostWakeup`] mutant (sampling
+//!   the generation *after* registering arrival) must be caught.
+//! * [`RingModel`] — `perf::telemetry::Ring`: single-writer span buffer
+//!   with saturating drop-count, drained after quiesce. A seeded
+//!   [`RingVariant::TornPublish`] mutant (publishing the length before
+//!   the record, with an eager drain) must be caught.
+//! * [`RecvModel`] — `comm::world::Comm::recv`: per-(peer, tag) sequence
+//!   numbers, out-of-order pending stash, duplicate drop, and the
+//!   retransmit-store fetch on a gap — no loss, no reorder, no
+//!   duplication under any schedule.
+//!
+//! Scheduling bound: preemptions (switching away from a thread that
+//! could still run) are capped, as in CHESS-style checkers — every
+//! schedule with at most that many preemptions is covered. Voluntary
+//! switches (the running thread blocks or finishes) are free, so the
+//! bound never hides a deadlock.
+
+use std::collections::HashSet;
+
+/// A small concurrent protocol model. One `step` = one shared-memory
+/// action; `enabled` gates blocked threads (a parked waiter whose wake
+/// condition is false is simply not enabled).
+pub trait Model: Clone {
+    fn nthreads(&self) -> usize;
+    /// Thread finished its whole program.
+    fn done(&self, tid: usize) -> bool;
+    /// Thread could take a step right now (false = blocked).
+    fn enabled(&self, tid: usize) -> bool;
+    /// Perform thread `tid`'s next action. `Err` = invariant violated.
+    fn step(&mut self, tid: usize) -> Result<(), String>;
+    /// Check the final state once every thread is done.
+    fn finale(&self) -> Result<(), String>;
+    /// Serialize the complete state (for fingerprint deduplication).
+    fn encode(&self, out: &mut Vec<u64>);
+}
+
+/// Checker options. `max_preemptions` bounds forced context switches per
+/// schedule; 4 is exhaustive-in-practice for these model sizes while
+/// keeping the state space in the tens of thousands.
+#[derive(Clone, Copy, Debug)]
+pub struct CheckOpts {
+    pub max_preemptions: usize,
+}
+
+impl Default for CheckOpts {
+    fn default() -> CheckOpts {
+        CheckOpts { max_preemptions: 4 }
+    }
+}
+
+/// A violating schedule: which thread stepped, in order, plus what broke.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub message: String,
+    pub schedule: Vec<usize>,
+}
+
+/// What the exploration covered and whether anything broke.
+#[derive(Clone, Debug, Default)]
+pub struct CheckReport {
+    /// complete schedules that ran to a checked final state
+    pub schedules: u64,
+    /// distinct (state, scheduler) points visited
+    pub states: u64,
+    pub violation: Option<Violation>,
+}
+
+impl CheckReport {
+    pub fn passed(&self) -> bool {
+        self.violation.is_none()
+    }
+}
+
+fn fnv1a(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Exhaustively explore every schedule of `model` within the preemption
+/// bound. Stops at the first violation (its schedule is reported).
+pub fn check<M: Model>(model: &M, opts: &CheckOpts) -> CheckReport {
+    let mut report = CheckReport::default();
+    let mut memo: HashSet<u64> = HashSet::new();
+    let mut trace: Vec<usize> = Vec::new();
+    dfs(model, None, opts.max_preemptions, &mut memo, &mut trace, &mut report);
+    report
+}
+
+fn dfs<M: Model>(
+    m: &M,
+    cur: Option<usize>,
+    budget: usize,
+    memo: &mut HashSet<u64>,
+    trace: &mut Vec<usize>,
+    report: &mut CheckReport,
+) -> bool {
+    let n = m.nthreads();
+    if (0..n).all(|t| m.done(t)) {
+        report.schedules += 1;
+        if let Err(msg) = m.finale() {
+            report.violation = Some(Violation { message: format!("final state: {msg}"), schedule: trace.clone() });
+            return true;
+        }
+        return false;
+    }
+
+    let enabled: Vec<usize> = (0..n).filter(|&t| !m.done(t) && m.enabled(t)).collect();
+    if enabled.is_empty() {
+        let blocked: Vec<String> =
+            (0..n).filter(|&t| !m.done(t)).map(|t| format!("t{t}")).collect();
+        report.violation = Some(Violation {
+            message: format!("lost signal: {} blocked forever (deadlock)", blocked.join(", ")),
+            schedule: trace.clone(),
+        });
+        return true;
+    }
+
+    let mut key = Vec::with_capacity(16);
+    m.encode(&mut key);
+    key.push(cur.map_or(u64::MAX, |c| c as u64));
+    key.push(budget as u64);
+    if !memo.insert(fnv1a(&key)) {
+        return false;
+    }
+    report.states += 1;
+
+    for &t in &enabled {
+        // switching away from a thread that could still run costs one
+        // preemption; taking over from a blocked/done thread is free
+        let cost = match cur {
+            Some(c) if c != t && !m.done(c) && m.enabled(c) => 1,
+            _ => 0,
+        };
+        if cost > budget {
+            continue;
+        }
+        let mut next = m.clone();
+        trace.push(t);
+        if let Err(msg) = next.step(t) {
+            report.violation = Some(Violation { message: msg, schedule: trace.clone() });
+            return true;
+        }
+        if dfs(&next, Some(t), budget - cost, memo, trace, report) {
+            return true;
+        }
+        trace.pop();
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// TeamBarrier model
+// ---------------------------------------------------------------------
+
+/// Mirror of `coordinator::BarrierKind` (redeclared so the models stay
+/// a closed, dependency-free world).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BarrierKind {
+    /// waiters re-check the generation in a spin loop
+    Spin,
+    /// waiters check once, then park until the generation moves (the
+    /// condvar path; the check→park window is modelled as two steps)
+    Sleep,
+}
+
+/// Seeded barrier mutants the checker must provably catch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BarrierBug {
+    /// sample the generation *after* registering arrival — the classic
+    /// lost wakeup: the last arrival can bump the generation in the
+    /// window, and the waiter then waits for a change that already
+    /// happened
+    LostWakeup,
+}
+
+/// Per-thread program counter for [`BarrierModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BPc {
+    /// about to sample the generation (shipping order)
+    LoadGen,
+    /// sampled `gen`, about to `count.fetch_add`
+    Add { gen: u64 },
+    /// mutant order: about to `count.fetch_add` *first*
+    AddFirst,
+    /// mutant order: arrived, about to sample the generation — races
+    /// the last arrival's bump
+    LoadGenLate,
+    /// last arrival: about to reset the count
+    Reset,
+    /// last arrival: about to bump the generation
+    Bump,
+    /// spinning until `generation != gen`
+    SpinWait { gen: u64 },
+    /// sleep kind: about to test the condition before parking
+    SleepCheck { gen: u64 },
+    /// parked until `generation != gen`
+    Parked { gen: u64 },
+    /// all iterations complete
+    Finished,
+}
+
+/// Small model of `TeamBarrier::wait`, reused for `iters` iterations by
+/// `n` threads (sense reversal: the count resets, the generation is the
+/// sense).
+#[derive(Clone)]
+pub struct BarrierModel {
+    n: usize,
+    iters: u64,
+    kind: BarrierKind,
+    bug: Option<BarrierBug>,
+    count: u64,
+    generation: u64,
+    /// arrivals registered per iteration (checker bookkeeping)
+    arrivals: Vec<u64>,
+    pc: Vec<BPc>,
+    iter: Vec<u64>,
+}
+
+impl BarrierModel {
+    pub fn new(n: usize, iters: u64, kind: BarrierKind, bug: Option<BarrierBug>) -> BarrierModel {
+        BarrierModel {
+            n,
+            iters,
+            kind,
+            bug,
+            count: 0,
+            generation: 0,
+            arrivals: vec![0; iters as usize],
+            pc: vec![if bug.is_some() { BPc::AddFirst } else { BPc::LoadGen }; n],
+            iter: vec![0; n],
+        }
+    }
+
+    fn start_pc(&self) -> BPc {
+        match self.bug {
+            // the mutant arrives first and samples the generation late
+            Some(BarrierBug::LostWakeup) => BPc::AddFirst,
+            None => BPc::LoadGen,
+        }
+    }
+
+    /// Register the arrival; `Ok(true)` means this was the last one.
+    fn arrive(&mut self, tid: usize) -> Result<bool, String> {
+        self.count += 1;
+        let it = self.iter[tid] as usize;
+        self.arrivals[it] += 1;
+        if self.count > self.n as u64 {
+            return Err(format!(
+                "torn reuse: {} arrivals on a barrier of {} (count not reset before reuse)",
+                self.count, self.n
+            ));
+        }
+        Ok(self.count == self.n as u64)
+    }
+
+    fn release(&mut self, tid: usize) -> Result<(), String> {
+        let it = self.iter[tid] as usize;
+        if self.arrivals[it] != self.n as u64 {
+            return Err(format!(
+                "early release: thread {tid} passed barrier iteration {it} after only {}/{} arrivals",
+                self.arrivals[it], self.n
+            ));
+        }
+        self.iter[tid] += 1;
+        self.pc[tid] = if self.iter[tid] == self.iters { BPc::Finished } else { self.start_pc() };
+        Ok(())
+    }
+}
+
+impl BarrierModel {
+    fn wait_pc(&self, gen: u64) -> BPc {
+        match self.kind {
+            BarrierKind::Spin => BPc::SpinWait { gen },
+            BarrierKind::Sleep => BPc::SleepCheck { gen },
+        }
+    }
+}
+
+impl Model for BarrierModel {
+    fn nthreads(&self) -> usize {
+        self.n
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        self.pc[tid] == BPc::Finished
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        match self.pc[tid] {
+            BPc::SpinWait { gen } | BPc::Parked { gen } => self.generation != gen,
+            BPc::Finished => false,
+            _ => true,
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Result<(), String> {
+        match self.pc[tid] {
+            BPc::LoadGen => {
+                self.pc[tid] = BPc::Add { gen: self.generation };
+                Ok(())
+            }
+            BPc::Add { gen } => {
+                let last = self.arrive(tid)?;
+                self.pc[tid] = if last { BPc::Reset } else { self.wait_pc(gen) };
+                Ok(())
+            }
+            BPc::AddFirst => {
+                // mutant: register arrival first; the generation sample
+                // comes later, racing the last arrival's bump
+                let last = self.arrive(tid)?;
+                self.pc[tid] = if last { BPc::Reset } else { BPc::LoadGenLate };
+                Ok(())
+            }
+            BPc::LoadGenLate => {
+                let gen = self.generation;
+                self.pc[tid] = self.wait_pc(gen);
+                Ok(())
+            }
+            BPc::Reset => {
+                self.count = 0;
+                self.pc[tid] = BPc::Bump;
+                Ok(())
+            }
+            BPc::Bump => {
+                self.generation += 1;
+                self.release(tid)
+            }
+            BPc::SpinWait { gen } => {
+                debug_assert!(self.generation != gen, "stepped a blocked spinner");
+                self.release(tid)
+            }
+            BPc::SleepCheck { gen } => {
+                if self.generation != gen {
+                    self.release(tid)
+                } else {
+                    // condition still false: park (the lost-wakeup
+                    // window between the check and the park)
+                    self.pc[tid] = BPc::Parked { gen };
+                    Ok(())
+                }
+            }
+            BPc::Parked { gen } => {
+                debug_assert!(self.generation != gen, "woke a parked waiter early");
+                self.release(tid)
+            }
+            BPc::Finished => Err(format!("stepped finished thread {tid}")),
+        }
+    }
+
+    fn finale(&self) -> Result<(), String> {
+        if self.count != 0 {
+            return Err(format!("count {} left after final release (expected 0)", self.count));
+        }
+        if self.generation != self.iters {
+            return Err(format!(
+                "generation {} after {} iterations (one bump per iteration expected)",
+                self.generation, self.iters
+            ));
+        }
+        for (it, &a) in self.arrivals.iter().enumerate() {
+            if a != self.n as u64 {
+                return Err(format!("iteration {it} saw {a}/{} arrivals", self.n));
+            }
+        }
+        Ok(())
+    }
+
+    fn encode(&self, out: &mut Vec<u64>) {
+        out.push(self.count);
+        out.push(self.generation);
+        for &a in &self.arrivals {
+            out.push(a);
+        }
+        for (tid, pc) in self.pc.iter().enumerate() {
+            out.push(self.iter[tid]);
+            out.push(match *pc {
+                BPc::LoadGen => 1,
+                BPc::Add { gen } => 2 | (gen << 8),
+                BPc::AddFirst => 3,
+                BPc::LoadGenLate => 4,
+                BPc::Reset => 5,
+                BPc::Bump => 6,
+                BPc::SpinWait { gen } => 7 | (gen << 8),
+                BPc::SleepCheck { gen } => 8 | (gen << 8),
+                BPc::Parked { gen } => 9 | (gen << 8),
+                BPc::Finished => 10,
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// telemetry span-ring model
+// ---------------------------------------------------------------------
+
+/// Which ring protocol to model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RingVariant {
+    /// the shipping protocol: record fully written, then the length
+    /// published; the drain runs only after the writer quiesces
+    Shipping,
+    /// seeded mutant: length published *before* the record is written,
+    /// and the drain may run concurrently — the checker must observe a
+    /// torn (unwritten) record under some schedule
+    TornPublish,
+}
+
+/// Model of one `perf::telemetry::Ring` per writer: bounded span buffer
+/// with a saturating drop counter, drained once. Thread `nwriters` is
+/// the drainer.
+#[derive(Clone)]
+pub struct RingModel {
+    variant: RingVariant,
+    cap: usize,
+    to_write: Vec<usize>,
+    // per ring: published records, staged-but-unpublished value,
+    // published length, drop count, writer progress, quiesced flag
+    slots: Vec<Vec<u64>>,
+    staged: Vec<Option<u64>>,
+    len: Vec<usize>,
+    dropped: Vec<u64>,
+    written: Vec<usize>,
+    stage: Vec<u8>,
+    quiesced: Vec<bool>,
+    drained: bool,
+}
+
+impl RingModel {
+    /// `to_write[w]` spans pushed by writer `w` into its own ring of
+    /// capacity `cap` (values `1..=to_write[w]`, so a torn slot reads 0).
+    pub fn new(variant: RingVariant, cap: usize, to_write: &[usize]) -> RingModel {
+        let nw = to_write.len();
+        RingModel {
+            variant,
+            cap,
+            to_write: to_write.to_vec(),
+            slots: vec![vec![0; cap]; nw],
+            staged: vec![None; nw],
+            len: vec![0; nw],
+            dropped: vec![0; nw],
+            written: vec![0; nw],
+            stage: vec![0; nw],
+            quiesced: vec![false; nw],
+            drained: false,
+        }
+    }
+
+    fn nwriters(&self) -> usize {
+        self.to_write.len()
+    }
+}
+
+impl Model for RingModel {
+    fn nthreads(&self) -> usize {
+        self.nwriters() + 1
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        if tid < self.nwriters() {
+            self.quiesced[tid]
+        } else {
+            self.drained
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        if tid < self.nwriters() {
+            !self.quiesced[tid]
+        } else if self.drained {
+            false
+        } else {
+            match self.variant {
+                // the shipping drain quiesces the team first
+                RingVariant::Shipping => self.quiesced.iter().all(|&q| q),
+                RingVariant::TornPublish => true,
+            }
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Result<(), String> {
+        let w = tid;
+        if w < self.nwriters() {
+            if self.written[w] == self.to_write[w] {
+                self.quiesced[w] = true;
+                return Ok(());
+            }
+            let value = (self.written[w] + 1) as u64;
+            match (self.stage[w], self.variant) {
+                (0, _) if self.len[w] >= self.cap => {
+                    // over capacity: count the drop (single step — the
+                    // shipping code is one saturating fetch_add)
+                    self.dropped[w] += 1;
+                    self.written[w] += 1;
+                }
+                (0, RingVariant::Shipping) => {
+                    // write the record fully...
+                    self.staged[w] = Some(value);
+                    self.stage[w] = 1;
+                }
+                (1, RingVariant::Shipping) => {
+                    // ...then publish the length
+                    let v = self.staged[w].take().ok_or("publish with nothing staged")?;
+                    self.slots[w][self.len[w]] = v;
+                    self.len[w] += 1;
+                    self.written[w] += 1;
+                    self.stage[w] = 0;
+                }
+                (0, RingVariant::TornPublish) => {
+                    // mutant: bump the length first — the slot is
+                    // visible to a concurrent drain before it is written
+                    self.len[w] += 1;
+                    self.staged[w] = Some(value);
+                    self.stage[w] = 1;
+                }
+                (1, RingVariant::TornPublish) => {
+                    let v = self.staged[w].take().ok_or("publish with nothing staged")?;
+                    self.slots[w][self.len[w] - 1] = v;
+                    self.written[w] += 1;
+                    self.stage[w] = 0;
+                }
+                _ => return Err("writer in impossible stage".to_string()),
+            }
+            Ok(())
+        } else {
+            // drain: read every ring's published prefix + drop count
+            for r in 0..self.nwriters() {
+                let kept = self.len[r];
+                for (k, &v) in self.slots[r][..kept].iter().enumerate() {
+                    if v != (k + 1) as u64 {
+                        return Err(format!(
+                            "torn publish: ring {r} slot {k} drained as {v} (expected {})",
+                            k + 1
+                        ));
+                    }
+                }
+                let expect_kept = self.to_write[r].min(self.cap);
+                if self.quiesced[r]
+                    && (kept != expect_kept
+                        || self.dropped[r] != (self.to_write[r] - expect_kept) as u64)
+                {
+                    return Err(format!(
+                        "drop accounting: ring {r} drained {kept} records + {} drops (expected {expect_kept} + {})",
+                        self.dropped[r],
+                        self.to_write[r] - expect_kept
+                    ));
+                }
+            }
+            self.drained = true;
+            Ok(())
+        }
+    }
+
+    fn finale(&self) -> Result<(), String> {
+        if !self.drained {
+            return Err("nothing drained".to_string());
+        }
+        Ok(())
+    }
+
+    fn encode(&self, out: &mut Vec<u64>) {
+        out.push(u64::from(self.drained));
+        for w in 0..self.nwriters() {
+            out.push(self.written[w] as u64);
+            out.push(self.len[w] as u64);
+            out.push(self.dropped[w]);
+            out.push(u64::from(self.stage[w]));
+            out.push(self.staged[w].unwrap_or(0));
+            out.push(u64::from(self.quiesced[w]));
+            for &s in &self.slots[w] {
+                out.push(s);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// retransmit-store recv state machine
+// ---------------------------------------------------------------------
+
+/// Transport fault injected into [`RecvModel`]'s sender.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecvFault {
+    None,
+    /// message `i` reaches the retransmit store but never the channel
+    /// (the receiver must heal it via the deadline → store fetch path)
+    Drop(usize),
+    /// message `i` arrives twice (the second copy must be discarded by
+    /// the sequence check)
+    Duplicate(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum SendPc {
+    Store(usize),
+    Transmit(usize),
+    TransmitDup(usize),
+    MarkDone,
+    Done,
+}
+
+/// Model of the `Comm::recv` sequencing state machine against one
+/// sender: in-order channel with gaps/duplicates, per-pair expected
+/// sequence number, pending stash for early messages, duplicate drop,
+/// and the retransmit-store fetch once the channel is exhausted (the
+/// model's stand-in for the recv deadline expiring).
+#[derive(Clone)]
+pub struct RecvModel {
+    k: usize,
+    fault: RecvFault,
+    channel: Vec<u64>,
+    store: Vec<bool>,
+    sender: SendPc,
+    expect: u64,
+    pending: Vec<u64>,
+    got: Vec<u64>,
+    fetches: u64,
+    dup_drops: u64,
+}
+
+impl RecvModel {
+    /// `k` messages (seq `0..k`) from one sender under `fault`.
+    pub fn new(k: usize, fault: RecvFault) -> RecvModel {
+        RecvModel {
+            k,
+            fault,
+            channel: Vec::new(),
+            store: vec![false; k],
+            sender: if k == 0 { SendPc::MarkDone } else { SendPc::Store(0) },
+            expect: 0,
+            pending: Vec::new(),
+            got: Vec::new(),
+            fetches: 0,
+            dup_drops: 0,
+        }
+    }
+
+    fn sender_done(&self) -> bool {
+        self.sender == SendPc::Done
+    }
+
+    fn accept(&mut self, seq: u64) {
+        self.got.push(seq);
+        self.expect += 1;
+    }
+}
+
+impl Model for RecvModel {
+    fn nthreads(&self) -> usize {
+        2
+    }
+
+    fn done(&self, tid: usize) -> bool {
+        match tid {
+            0 => self.sender_done(),
+            // the receiver also drains trailing duplicates, so a late
+            // copy is visibly dropped rather than left in flight
+            _ => self.expect as usize >= self.k && self.channel.is_empty() && self.sender_done(),
+        }
+    }
+
+    fn enabled(&self, tid: usize) -> bool {
+        match tid {
+            0 => !self.sender_done(),
+            _ => {
+                if self.expect as usize >= self.k {
+                    // only leftover traffic remains
+                    return !self.channel.is_empty();
+                }
+                // runnable when something can make progress; otherwise
+                // the receiver is inside its recv deadline, blocked
+                self.pending.contains(&self.expect)
+                    || !self.channel.is_empty()
+                    || self.sender_done()
+            }
+        }
+    }
+
+    fn step(&mut self, tid: usize) -> Result<(), String> {
+        if tid == 0 {
+            self.sender = match self.sender {
+                // the shipping send records the payload in the
+                // retransmit store before transmitting
+                SendPc::Store(i) => {
+                    self.store[i] = true;
+                    match self.fault {
+                        RecvFault::Drop(d) if d == i => {
+                            if i + 1 < self.k {
+                                SendPc::Store(i + 1)
+                            } else {
+                                SendPc::MarkDone
+                            }
+                        }
+                        _ => SendPc::Transmit(i),
+                    }
+                }
+                SendPc::Transmit(i) => {
+                    self.channel.push(i as u64);
+                    match self.fault {
+                        RecvFault::Duplicate(d) if d == i => SendPc::TransmitDup(i),
+                        _ if i + 1 < self.k => SendPc::Store(i + 1),
+                        _ => SendPc::MarkDone,
+                    }
+                }
+                SendPc::TransmitDup(i) => {
+                    self.channel.push(i as u64);
+                    if i + 1 < self.k {
+                        SendPc::Store(i + 1)
+                    } else {
+                        SendPc::MarkDone
+                    }
+                }
+                SendPc::MarkDone => SendPc::Done,
+                SendPc::Done => return Err("stepped finished sender".to_string()),
+            };
+            return Ok(());
+        }
+
+        // receiver
+        if let Some(pos) = self.pending.iter().position(|&s| s == self.expect) {
+            let seq = self.pending.remove(pos);
+            self.accept(seq);
+            return Ok(());
+        }
+        if !self.channel.is_empty() {
+            let seq = self.channel.remove(0);
+            if seq < self.expect {
+                self.dup_drops += 1;
+            } else if seq == self.expect {
+                self.accept(seq);
+            } else {
+                if self.pending.contains(&seq) {
+                    return Err(format!("pending stash already holds seq {seq}"));
+                }
+                self.pending.push(seq);
+            }
+            return Ok(());
+        }
+        // channel empty and the sender is finished: the recv deadline
+        // expires and the transport falls back to the retransmit store
+        let want = self.expect as usize;
+        if !self.store[want] {
+            return Err(format!("lost message: seq {want} in neither channel nor store"));
+        }
+        self.fetches += 1;
+        self.accept(want as u64);
+        Ok(())
+    }
+
+    fn finale(&self) -> Result<(), String> {
+        let want: Vec<u64> = (0..self.k as u64).collect();
+        if self.got != want {
+            return Err(format!("delivered {:?}, expected {want:?} (loss or reorder)", self.got));
+        }
+        let expect_dups = u64::from(matches!(self.fault, RecvFault::Duplicate(_)));
+        if self.dup_drops != expect_dups {
+            return Err(format!("{} duplicate drops, expected {expect_dups}", self.dup_drops));
+        }
+        if !self.pending.is_empty() {
+            return Err(format!("{} messages stranded in the pending stash", self.pending.len()));
+        }
+        if matches!(self.fault, RecvFault::Drop(_)) && self.fetches == 0 {
+            return Err("dropped message was never healed from the store".to_string());
+        }
+        Ok(())
+    }
+
+    fn encode(&self, out: &mut Vec<u64>) {
+        out.push(self.expect);
+        out.push(self.fetches);
+        out.push(self.dup_drops);
+        out.push(match self.sender {
+            SendPc::Store(i) => 1 | ((i as u64) << 8),
+            SendPc::Transmit(i) => 2 | ((i as u64) << 8),
+            SendPc::TransmitDup(i) => 3 | ((i as u64) << 8),
+            SendPc::MarkDone => 4,
+            SendPc::Done => 5,
+        });
+        out.push(self.channel.len() as u64);
+        out.extend_from_slice(&self.channel);
+        out.push(self.pending.len() as u64);
+        out.extend_from_slice(&self.pending);
+        for &b in &self.store {
+            out.push(u64::from(b));
+        }
+        out.push(self.got.len() as u64);
+    }
+}
+
+// ---------------------------------------------------------------------
+// the standard suite
+// ---------------------------------------------------------------------
+
+/// One suite entry: model name, whether a violation is the *expected*
+/// outcome (seeded mutants), and what actually happened.
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub name: &'static str,
+    pub expect_violation: bool,
+    pub report: CheckReport,
+}
+
+impl SuiteResult {
+    pub fn ok(&self) -> bool {
+        self.report.passed() != self.expect_violation
+    }
+}
+
+/// The checked configurations `lqcd lint --model-check` runs: every
+/// shipping protocol at 2 and 3 threads must pass exhaustively, and
+/// every seeded mutant must be caught.
+pub fn run_suite(opts: &CheckOpts) -> Vec<SuiteResult> {
+    let mut out = Vec::new();
+    let mut push = |name, expect_violation, report| {
+        out.push(SuiteResult { name, expect_violation, report });
+    };
+
+    for &(n, iters) in &[(2usize, 3u64), (3, 2)] {
+        for &kind in &[BarrierKind::Spin, BarrierKind::Sleep] {
+            let name = match (n, kind) {
+                (2, BarrierKind::Spin) => "barrier/spin/2x3",
+                (2, BarrierKind::Sleep) => "barrier/sleep/2x3",
+                (3, BarrierKind::Spin) => "barrier/spin/3x2",
+                _ => "barrier/sleep/3x2",
+            };
+            push(name, false, check(&BarrierModel::new(n, iters, kind, None), opts));
+        }
+    }
+    push(
+        "barrier/mutant-lost-wakeup/2x1",
+        true,
+        check(&BarrierModel::new(2, 1, BarrierKind::Spin, Some(BarrierBug::LostWakeup)), opts),
+    );
+    push(
+        "barrier/mutant-lost-wakeup/sleep/3x1",
+        true,
+        check(&BarrierModel::new(3, 1, BarrierKind::Sleep, Some(BarrierBug::LostWakeup)), opts),
+    );
+
+    push("ring/1w+drain", false, check(&RingModel::new(RingVariant::Shipping, 2, &[4]), opts));
+    push(
+        "ring/2w+drain",
+        false,
+        check(&RingModel::new(RingVariant::Shipping, 2, &[3, 2]), opts),
+    );
+    push(
+        "ring/mutant-torn-publish",
+        true,
+        check(&RingModel::new(RingVariant::TornPublish, 2, &[2]), opts),
+    );
+
+    push("recv/clean", false, check(&RecvModel::new(3, RecvFault::None), opts));
+    push("recv/drop", false, check(&RecvModel::new(3, RecvFault::Drop(1)), opts));
+    push("recv/duplicate", false, check(&RecvModel::new(3, RecvFault::Duplicate(0)), opts));
+
+    out
+}

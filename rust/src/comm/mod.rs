@@ -8,6 +8,7 @@ pub mod faults;
 pub mod halo;
 pub mod netmodel;
 pub mod pack;
+pub mod tags;
 pub mod unpack;
 pub mod world;
 

@@ -1,0 +1,139 @@
+//! Central wire-tag registry: every `Comm::send`/`recv` tag in the tree
+//! is minted here, so the namespaces provably cannot collide.
+//!
+//! The 64-bit tag space is partitioned by bit range:
+//!
+//! | bits    | namespace       | constructor            | contents                          |
+//! |---------|-----------------|------------------------|-----------------------------------|
+//! | 0..9    | `Halo`          | [`halo`]               | `parity<<8 \| dir<<1 \| upward`   |
+//! | 9..57   | `HaloBatched`   | [`halo_batched`]       | halo bits + `wire_sig << 9`       |
+//! | 57..62  | (reserved)      | —                      | zero today; future `lqcd serve`   |
+//! | 62      | `Collective`    | [`collective`]         | reserved collective/barrier block |
+//! | 63      | `CkptBuddy`     | [`ckpt_buddy`]         | `1<<63 \| checkpoint generation`  |
+//!
+//! A single-RHS halo tag is also a valid batched tag with `sig == 0`
+//! (an empty signature never validates, so the two cannot be confused
+//! on the wire). The checkpoint-buddy namespace owns bit 63 alone:
+//! every halo/batched/collective tag keeps it clear, which is what lets
+//! buddy ring-copy traffic share the transport with live halo exchange
+//! during a restore. The invariant linter (`lqcd lint`, rule
+//! `tag-registry`) rejects tag construction anywhere else in the tree.
+
+use crate::lattice::Parity;
+
+/// Bits the single-RHS halo tag occupies: parity (1) + dir (3) + up (1),
+/// packed as `parity<<8 | dir<<1 | upward` (bit 0 = orientation, bits
+/// 1..4 = direction, bit 8 = output parity — the historical wire layout,
+/// frozen so old traces stay decodable).
+pub const HALO_BITS: u32 = 9;
+/// Where the batched halo signature lands.
+pub const SIG_SHIFT: u32 = HALO_BITS;
+/// Width of `wire_sig`: active mask (32) + nrhs (12) + precision id (4).
+pub const SIG_BITS: u32 = 48;
+/// Reserved block for collective/barrier traffic (future `lqcd serve`).
+pub const NS_COLLECTIVE: u64 = 1 << 62;
+/// Checkpoint buddy-exchange namespace flag: bit 63 set, generation in
+/// the low bits.
+pub const NS_CKPT_BUDDY: u64 = 1 << 63;
+
+// The partition is checked at compile time: the halo bits must fit
+// below the signature, the signature below the collective block, and
+// both namespace flags must be distinct single bits below nothing.
+const _: () = {
+    assert!((1u64 << HALO_BITS) - 1 < (1u64 << SIG_SHIFT));
+    assert!(SIG_SHIFT + SIG_BITS <= 62);
+    assert!(NS_COLLECTIVE < NS_CKPT_BUDDY);
+    assert!(NS_COLLECTIVE & NS_CKPT_BUDDY == 0);
+};
+
+/// Single-RHS halo-exchange tag: direction, orientation, output parity.
+#[inline]
+pub fn halo(dir: usize, upward: bool, p_out: Parity) -> u64 {
+    debug_assert!(dir < 8);
+    ((p_out.index() as u64) << 8) | ((dir as u64) << 1) | u64::from(upward)
+}
+
+/// Batched-message tag: the single-RHS halo tag plus the halo wire
+/// signature (precision, nrhs, active mask), so a rank that somehow got
+/// past the pre-send handshake with a diverged batch shape can never
+/// consume a mismatched payload — the tags simply don't match.
+#[inline]
+pub fn halo_batched(dir: usize, upward: bool, p_out: Parity, sig: u64) -> u64 {
+    debug_assert!(sig < (1u64 << SIG_BITS), "wire sig overflows tag space");
+    halo(dir, upward, p_out) | (sig << SIG_SHIFT)
+}
+
+/// Checkpoint buddy-exchange tag for one committed generation. Disjoint
+/// from every halo/handshake tag (bit 63), so ring-copy traffic can
+/// share the transport with live solves.
+#[inline]
+pub fn ckpt_buddy(gen: u64) -> u64 {
+    debug_assert!(gen & NS_CKPT_BUDDY == 0, "generation overflows tag space");
+    NS_CKPT_BUDDY | gen
+}
+
+/// Reserved collective tag block (barrier/reduce traffic for the
+/// long-lived `lqcd serve` on the roadmap). Nothing mints these yet;
+/// the block exists so the next subsystem extends the registry instead
+/// of squatting on free-looking bits.
+#[inline]
+pub fn collective(kind: u16) -> u64 {
+    NS_COLLECTIVE | u64::from(kind)
+}
+
+/// Which namespace a tag belongs to (diagnostics and the model checker).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TagNamespace {
+    Halo,
+    HaloBatched,
+    Collective,
+    CkptBuddy,
+}
+
+/// Classify a wire tag by namespace. Total: every u64 lands somewhere,
+/// and the partition ranges cannot overlap by construction.
+pub fn namespace(tag: u64) -> TagNamespace {
+    if tag & NS_CKPT_BUDDY != 0 {
+        TagNamespace::CkptBuddy
+    } else if tag & NS_COLLECTIVE != 0 {
+        TagNamespace::Collective
+    } else if tag >> SIG_SHIFT != 0 {
+        TagNamespace::HaloBatched
+    } else {
+        TagNamespace::Halo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn namespaces_are_disjoint() {
+        let h = halo(3, true, Parity::Even);
+        let hb = halo_batched(3, true, Parity::Even, 0xF0000_0000_0001);
+        let ck = ckpt_buddy(42);
+        let co = collective(7);
+        assert_eq!(namespace(h), TagNamespace::Halo);
+        assert_eq!(namespace(hb), TagNamespace::HaloBatched);
+        assert_eq!(namespace(ck), TagNamespace::CkptBuddy);
+        assert_eq!(namespace(co), TagNamespace::Collective);
+        // pairwise distinct even with colliding low bits
+        assert_ne!(h, hb);
+        assert_ne!(hb | NS_CKPT_BUDDY, hb);
+        assert_eq!(ck & ((1 << SIG_SHIFT) - 1), 42);
+    }
+
+    #[test]
+    fn halo_tags_injective_over_inputs() {
+        let mut seen = std::collections::HashSet::new();
+        for dir in 0..4 {
+            for &up in &[false, true] {
+                for &p in &[Parity::Even, Parity::Odd] {
+                    assert!(seen.insert(halo(dir, up, p)));
+                }
+            }
+        }
+        assert_eq!(seen.len(), 16);
+    }
+}

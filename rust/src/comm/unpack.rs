@@ -73,7 +73,8 @@ pub fn eo2_range<R: Real, U: LinkSource<R>>(
 ) {
     let l = out.layout;
     let ptr = crate::coordinator::team::SendPtr(out.data.as_mut_ptr());
-    // single-threaded call: trivially disjoint
+    // SAFETY: single-threaded call, so the range is trivially disjoint
+    // and `ptr` borrows the live `out` buffer of layout `l`.
     unsafe { eo2_range_raw(ptr, &l, plans, bufs, u, begin, end) }
 }
 

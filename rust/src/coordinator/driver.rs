@@ -5,7 +5,7 @@
 use crate::algebra::Real;
 use crate::comm::halo::HaloPlans;
 use crate::comm::unpack::{MultiEo2Tail, RecvBuffers};
-use crate::comm::{balance, pack, unpack, validate_wire_format, wire_sig, Comm, CommScalar};
+use crate::comm::{balance, pack, tags, unpack, validate_wire_format, wire_sig, Comm, CommScalar};
 use crate::dslash::{HoppingEo, LinkSource, MultiStoreTail, StoreTail, WrapMode};
 use crate::field::{FermionField, MultiFermionField};
 use crate::lattice::{Dir, Geometry, Parity};
@@ -42,19 +42,6 @@ impl std::fmt::Display for Eo2Schedule {
             Eo2Schedule::Balanced => "balanced",
         })
     }
-}
-
-/// Message tag: direction, orientation, output parity.
-fn tag(dir: usize, upward: bool, p_out: Parity) -> u64 {
-    ((p_out.index() as u64) << 8) | ((dir as u64) << 1) | u64::from(upward)
-}
-
-/// Batched-message tag: the single-RHS tag plus the halo wire signature
-/// (precision, nrhs, active mask), so a rank that somehow got past the
-/// pre-send handshake with a diverged batch shape can never consume a
-/// mismatched payload — the tags simply don't match.
-fn tag_multi(dir: usize, upward: bool, p_out: Parity, sig: u64) -> u64 {
-    tag(dir, upward, p_out) | (sig << 9)
 }
 
 /// Per-RHS fused tail of the batched distributed hopping: the analog of
@@ -254,6 +241,8 @@ impl DistHopping {
                         if b == e {
                             continue;
                         }
+                        // SAFETY: [b, e) is this thread's disjoint
+                        // face-range shard of the send buffer.
                         let up = unsafe {
                             up_ptrs[dir].slice_mut(
                                 b * pack::HALF_F32,
@@ -261,6 +250,8 @@ impl DistHopping {
                             )
                         };
                         pack_up_shifted(up, plans, dir, u, psi, b, e);
+                        // SAFETY: same disjoint [b, e) shard of the
+                        // down-face send buffer.
                         let down = unsafe {
                             down_ptrs[dir].slice_mut(
                                 b * pack::HALF_F32,
@@ -280,10 +271,10 @@ impl DistHopping {
             }
             let up_rank = grid.neighbor(rank, Dir::from_index(dir), 1);
             let down_rank = grid.neighbor(rank, Dir::from_index(dir), -1);
-            comm.send(up_rank, tag(dir, true, p_out), std::mem::take(&mut up_bufs[dir]));
+            comm.send(up_rank, tags::halo(dir, true, p_out), std::mem::take(&mut up_bufs[dir]));
             comm.send(
                 down_rank,
-                tag(dir, false, p_out),
+                tags::halo(dir, false, p_out),
                 std::mem::take(&mut down_bufs[dir]),
             );
         }
@@ -306,7 +297,7 @@ impl DistHopping {
                     if b == e {
                         return;
                     }
-                    // disjoint tile ranges per thread
+                    // SAFETY: disjoint tile ranges per thread.
                     let out_tiles = unsafe {
                         out_ptr.slice_mut(b * tile_f32, (e - b) * tile_f32)
                     };
@@ -342,10 +333,10 @@ impl DistHopping {
                 // health guard — the sweep itself must finish so peers
                 // aren't left hanging mid-exchange)
                 bufs.from_down[dir] =
-                    comm.recv_or_zero(down_rank, tag(dir, true, p_out), plans.buffer_len(dir));
+                    comm.recv_or_zero(down_rank, tags::halo(dir, true, p_out), plans.buffer_len(dir));
                 // my from_up buffer is the +d neighbor's downward export
                 bufs.from_up[dir] =
-                    comm.recv_or_zero(up_rank, tag(dir, false, p_out), plans.buffer_len(dir));
+                    comm.recv_or_zero(up_rank, tags::halo(dir, false, p_out), plans.buffer_len(dir));
             }
         });
 
@@ -368,6 +359,9 @@ impl DistHopping {
                         return;
                     }
                     match eo2_tail {
+                        // SAFETY: chunks[] partitions the boundary sites
+                        // disjointly per tid, and the recv buffers are
+                        // fully written before the merge region starts.
                         Some((a, bf)) => unsafe {
                             unpack::eo2_tail_range_raw(
                                 out_ptr,
@@ -381,6 +375,8 @@ impl DistHopping {
                                 bf.data.as_ptr(),
                             );
                         },
+                        // SAFETY: as above (disjoint boundary shard,
+                        // quiesced recv buffers).
                         None => unsafe {
                             unpack::eo2_range_raw(out_ptr, &layout, plans, bufs, u, b, e);
                         },
@@ -472,10 +468,14 @@ impl DistHopping {
                         if b == e {
                             continue;
                         }
+                        // SAFETY: [b, e) is this thread's disjoint
+                        // face-range shard of the batched send buffer.
                         let up = unsafe {
                             up_ptrs[dir].slice_mut(b * site_reals, (e - b) * site_reals)
                         };
                         pack::pack_up_multi_rel(up, plans, dir, u, psi, active, b, e);
+                        // SAFETY: same disjoint [b, e) shard of the
+                        // batched down-face send buffer.
                         let down = unsafe {
                             down_ptrs[dir]
                                 .slice_mut(b * site_reals, (e - b) * site_reals)
@@ -496,12 +496,12 @@ impl DistHopping {
             let down_rank = grid.neighbor(rank, Dir::from_index(dir), -1);
             comm.send(
                 up_rank,
-                tag_multi(dir, true, p_out, sig),
+                tags::halo_batched(dir, true, p_out, sig),
                 std::mem::take(&mut up_bufs[dir]),
             );
             comm.send(
                 down_rank,
-                tag_multi(dir, false, p_out, sig),
+                tags::halo_batched(dir, false, p_out, sig),
                 std::mem::take(&mut down_bufs[dir]),
             );
         }
@@ -518,6 +518,7 @@ impl DistHopping {
                     if b == e {
                         return;
                     }
+                    // SAFETY: disjoint tile ranges per thread.
                     let out_tiles = unsafe {
                         out_ptr.slice_mut(b * sub_reals, (e - b) * sub_reals)
                     };
@@ -559,12 +560,12 @@ impl DistHopping {
                 // health guard after the sweep completes
                 bufs.from_down[dir] = comm.recv_or_zero(
                     down_rank,
-                    tag_multi(dir, true, p_out, sig),
+                    tags::halo_batched(dir, true, p_out, sig),
                     plans.buffer_len_multi(dir, nact),
                 );
                 bufs.from_up[dir] = comm.recv_or_zero(
                     up_rank,
-                    tag_multi(dir, false, p_out, sig),
+                    tags::halo_batched(dir, false, p_out, sig),
                     plans.buffer_len_multi(dir, nact),
                 );
             }
@@ -600,6 +601,9 @@ impl DistHopping {
                     if b == e {
                         return;
                     }
+                    // SAFETY: chunks[] partitions the boundary sites
+                    // disjointly per tid, and the recv buffers are fully
+                    // written before the merge region starts.
                     unsafe {
                         unpack::eo2_multi_range_raw(
                             out_ptr, &layout, plans, bufs, u, nrhs, active, b, e,

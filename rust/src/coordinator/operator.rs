@@ -10,7 +10,7 @@
 //! precision (global reductions are always accumulated wide).
 
 use crate::algebra::Real;
-use crate::comm::{validate_wire_format, Comm, CommError, CommScalar};
+use crate::comm::{tags, validate_wire_format, Comm, CommError, CommScalar};
 use crate::dslash::{
     full, DotCapture, HoppingEo, LinkSource, Links, MultiDotCapture, MultiStoreTail,
     StoreTail,
@@ -708,9 +708,10 @@ fn apply_multi_via_view<R: Real>(
         debug_assert_eq!(p.len(), view.ntiles() * view.nrhs());
         (SendPtr(w.data.as_ptr() as *mut R), SendPtr(p.as_mut_ptr()))
     });
+    // SAFETY: out/psi are live fields of the view's layout; the view's
+    // scratch is exclusively borrowed through the operator, and every
+    // thread calls apply_team exactly once with identical arguments.
     team.run(|tid, bar| unsafe {
-        // SAFETY: out/psi are live fields of the view's layout; the
-        // view's scratch is exclusively borrowed through the operator.
         view.apply_team(
             tid,
             n,
@@ -1022,7 +1023,7 @@ fn ckpt_all_committed(comm: &mut Comm, ok: bool) -> bool {
 }
 
 /// Buddy-copy ring exchange: checkpoint payloads ride the ordinary
-/// transport (tag namespace `1<<63 | generation`, disjoint from every
+/// transport (the [`tags::ckpt_buddy`] namespace, disjoint from every
 /// halo/handshake tag) so they enjoy the same retransmit healing.
 fn ckpt_buddy_exchange(comm: &mut Comm, payload: &[f64], gen: u64) -> Option<Vec<f64>> {
     if comm.nranks < 2 || comm.comm_fault().is_some() {
@@ -1030,7 +1031,7 @@ fn ckpt_buddy_exchange(comm: &mut Comm, payload: &[f64], gen: u64) -> Option<Vec
     }
     let to = (comm.rank + 1) % comm.nranks;
     let from = (comm.rank + comm.nranks - 1) % comm.nranks;
-    let tag = (1u64 << 63) | gen;
+    let tag = tags::ckpt_buddy(gen);
     comm.send(to, tag, payload.to_vec());
     comm.recv::<f64>(from, tag).ok()
 }

@@ -102,10 +102,12 @@ impl Team {
             return;
         }
         self.epoch += 1;
-        // Erase the closure's lifetime: the completion wait below ensures
-        // no worker touches it after `parallel` returns, and the job slot
-        // is cleared before returning.
         let job: Arc<dyn Fn(usize) + Send + Sync + '_> = Arc::new(f);
+        // SAFETY: transmute only erases the closure's lifetime to 'static.
+        // The completion wait below blocks until all n-1 workers reported
+        // done with this epoch, and the job slot is cleared before
+        // `parallel` returns, so no worker can touch the closure (or the
+        // locals it borrows) after it goes out of scope.
         let job: Job = unsafe { std::mem::transmute(job) };
         {
             let mut slot = self.shared.job.lock().unwrap();
@@ -247,7 +249,11 @@ pub fn chunk_range(len: usize, tid: usize, n: usize) -> (usize, usize) {
 /// buffer from multiple threads. Callers must guarantee disjointness.
 #[derive(Clone, Copy)]
 pub struct SendPtr<T>(pub *mut T);
+// SAFETY: SendPtr carries a bare pointer; moving it to another thread is
+// sound because every dereference goes through `slice_mut`, whose contract
+// obliges the caller to access only disjoint regions concurrently.
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: sharing &SendPtr only copies the pointer value; see Send above.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
@@ -312,6 +318,7 @@ mod tests {
         let ptr = SendPtr(buf.as_mut_ptr());
         team.parallel(|tid| {
             let (b, e) = chunk_range(100, tid, 4);
+            // SAFETY: chunk_range partitions [0, 100) disjointly by tid.
             let slice = unsafe { ptr.slice_mut(b, e - b) };
             for (i, v) in slice.iter_mut().enumerate() {
                 *v = (b + i) as u32;
@@ -345,9 +352,11 @@ mod tests {
             let ptr = SendPtr(slots.as_mut_ptr());
             let sums = AtomicU64::new(0);
             team.run(|tid, bar| {
+                // SAFETY: slot `tid` is written by this thread only.
                 unsafe { ptr.slice_mut(tid, 1)[0] = (tid as u64) + 1 };
                 bar.wait();
-                // after the barrier every slot is published; read shared
+                // SAFETY: the barrier publishes every slot before any
+                // thread reads, and nobody writes after it.
                 let total: u64 = (0..n).map(|i| unsafe { *ptr.0.add(i) }).sum();
                 sums.fetch_add(total, Ordering::Relaxed);
             });

@@ -32,6 +32,27 @@ pub fn vals_per_tile(vlen: usize) -> usize {
     SC2 * vlen
 }
 
+/// Combine per-tile scalar partials in ascending tile order — the one
+/// canonical fold every reduction history in the stack uses (see the
+/// module doc). Call sites must route scalar partial sums through this
+/// (or the `reduce_caps*` family for `[f64; 3]` captures) rather than
+/// open-coding `+=`/`.sum()`; the invariant linter (`lqcd lint`, rule
+/// `raw-f64-accum`) enforces it.
+#[inline]
+pub fn reduce_partials(partials: &[f64]) -> f64 {
+    partials.iter().sum()
+}
+
+/// Column `i` of per-(site tile, RHS) scalar partials laid out
+/// `partials[t * nrhs + i]`, combined in ascending tile order — the
+/// strided sibling of [`reduce_partials`], bitwise identical to the
+/// single-RHS fold over that RHS's tile partials.
+#[inline]
+pub fn reduce_partials_col(partials: &[f64], nrhs: usize, i: usize) -> f64 {
+    debug_assert!(i < nrhs && partials.len() % nrhs == 0);
+    partials.iter().skip(i).step_by(nrhs).sum()
+}
+
 /// Per-tile |x|²: component-pair → lane order, f64 accumulation.
 #[inline]
 pub fn norm2_tile<R: Real>(x: &[R], vlen: usize) -> f64 {

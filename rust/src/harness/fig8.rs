@@ -56,8 +56,10 @@ pub fn run(opts: Opts) -> Fig8Result {
                     if b == e {
                         return;
                     }
-                    let out_tiles =
-                        unsafe { out_ptr.slice_mut(b * tile_f32, (e - b) * tile_f32) };
+                    // SAFETY: disjoint tile ranges per thread.
+                    let out_tiles = unsafe {
+                        out_ptr.slice_mut(b * tile_f32, (e - b) * tile_f32)
+                    };
                     if use_gather {
                         gather.apply_tiles(out_tiles, &u, &psi, Parity::Odd, b, e);
                     } else {

@@ -22,6 +22,7 @@
 //! `EXPERIMENTS.md` for measured results.
 
 pub mod algebra;
+pub mod analysis;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

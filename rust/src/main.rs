@@ -10,6 +10,7 @@
 //!   bench-fig10              Fig 10: weak scaling projection
 //!   bench-acle               §4.2: vectorized vs plain (~10x claim)
 //!   bench-barrier            FLIB_BARRIER ablation
+//!   lint                     invariant linter + concurrency model checker
 
 use std::process::ExitCode;
 use std::sync::Arc;
@@ -52,7 +53,7 @@ const VALUE_OPTS: &[&str] = &[
     "nrhs", "gauge-compression", "grid", "eo2-schedule", "eo2-granularity",
     "tune-cache", "budget-ms", "inject-faults", "comm-timeout-ms",
     "comm-max-retries", "max-restarts", "trace", "checkpoint-dir",
-    "checkpoint-every", "resume",
+    "checkpoint-every", "resume", "root", "json", "max-preemptions",
 ];
 
 fn main() -> ExitCode {
@@ -178,6 +179,13 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
         threads: args.get_parse("threads", cfg.parallel.threads_per_rank)?,
         quick: args.flag("quick"),
     };
+    let lint_opts = LintCmd {
+        root: args.get("root").map(Into::into),
+        json: args.get("json").map(Into::into),
+        rules: args.flag("rules"),
+        model_check: args.flag("model-check"),
+        max_preemptions: args.get_parse("max-preemptions", 4usize)?,
+    };
     args.finish()?;
 
     match cmd.as_str() {
@@ -209,11 +217,107 @@ fn run() -> Result<(), Box<dyn std::error::Error>> {
             println!("{}", harness::barrier::run(opts).report);
             Ok(())
         }
+        "lint" => lint(&lint_opts),
         _ => {
             println!("{HELP}");
             Ok(())
         }
     }
+}
+
+/// Options for the `lint` subcommand (parsed in [`run`] so the shared
+/// `finish` typo check accepts them).
+struct LintCmd {
+    root: Option<std::path::PathBuf>,
+    json: Option<std::path::PathBuf>,
+    rules: bool,
+    model_check: bool,
+    max_preemptions: usize,
+}
+
+/// `lqcd lint [--root DIR] [--json PATH] [--model-check] [--rules]`:
+/// run the in-tree invariant linter (and optionally the concurrency
+/// model-checker suite), printing findings as `file:line: [rule] msg`
+/// and exiting non-zero on any violation.
+fn lint(cmd: &LintCmd) -> Result<(), Box<dyn std::error::Error>> {
+    use lqcd::analysis::{lint as linter, model};
+
+    if cmd.rules {
+        for (name, desc) in linter::RULES {
+            println!("{name:<16} {desc}");
+        }
+        return Ok(());
+    }
+
+    let root = cmd.root.clone().unwrap_or_else(|| ".".into());
+    let report = linter::lint_tree(&root)?;
+    for f in &report.findings {
+        eprintln!("{f}");
+    }
+    println!(
+        "lint: {} files scanned, {} finding(s), {} suppressed",
+        report.files_scanned,
+        report.findings.len(),
+        report.suppressed
+    );
+
+    let mut suite = Vec::new();
+    if cmd.model_check {
+        let opts = model::CheckOpts { max_preemptions: cmd.max_preemptions };
+        suite = model::run_suite(&opts);
+        for r in &suite {
+            let status = if r.ok() { "ok" } else { "FAIL" };
+            let detail = match &r.report.violation {
+                Some(v) => format!("violation: {}", v.message),
+                None => format!(
+                    "{} schedules, {} states",
+                    r.report.schedules, r.report.states
+                ),
+            };
+            println!("model {status:4} {:<36} {detail}", r.name);
+        }
+    }
+
+    if let Some(path) = &cmd.json {
+        let mut w = JsonWriter::new();
+        w.obj_begin();
+        w.key("lint");
+        w.raw(&report.to_json());
+        w.key("model");
+        w.arr_begin();
+        for r in &suite {
+            w.obj_begin();
+            w.key("name");
+            w.str_val(r.name);
+            w.key("expect_violation");
+            w.boolean(r.expect_violation);
+            w.key("ok");
+            w.boolean(r.ok());
+            w.key("schedules");
+            w.uint(r.report.schedules);
+            w.key("states");
+            w.uint(r.report.states);
+            if let Some(v) = &r.report.violation {
+                w.key("violation");
+                w.str_val(&v.message);
+            }
+            w.obj_end();
+        }
+        w.arr_end();
+        w.obj_end();
+        std::fs::write(path, w.finish())?;
+    }
+
+    let model_failures = suite.iter().filter(|r| !r.ok()).count();
+    if !report.clean() || model_failures > 0 {
+        return Err(format!(
+            "lint failed: {} finding(s), {} model-check failure(s)",
+            report.findings.len(),
+            model_failures
+        )
+        .into());
+    }
+    Ok(())
 }
 
 fn info(cfg: &RunConfig) -> Result<(), Box<dyn std::error::Error>> {
@@ -1527,6 +1631,10 @@ COMMANDS:
   bench-fig10   Fig 10: weak scaling to 512 nodes (TofuD model)
   bench-acle    vectorized vs plain scalar kernel (~10x claim)
   bench-barrier FLIB_BARRIER ablation (spin vs sleep barrier)
+  lint          in-tree invariant linter (SAFETY comments, canonical f64
+                reductions, comm-tag registry, config-doc coverage,
+                util::json-only JSON) + deterministic concurrency
+                model checker; non-zero exit on any violation
 
 OPTIONS:
   --dims NXxNYxNZxNT   lattice (default 8x8x8x16)
@@ -1612,4 +1720,14 @@ OPTIONS:
                        generation in DIR (corrupt generations fall back
                        to older ones); the residual history continues
                        bitwise identically to the uninterrupted run
+  --root DIR           lint: repository root to scan (default .)
+  --json PATH          lint: write the findings + model-check report as
+                       JSON (util::json format) to PATH
+  --rules              lint: list the rule names and exit
+  --model-check        lint: also run the exhaustive concurrency
+                       model-checker suite (TeamBarrier both kinds,
+                       telemetry span ring, retransmit recv state
+                       machine, at 2-3 threads, plus seeded mutants
+                       that must be caught)
+  --max-preemptions N  lint: model-checker preemption bound (default 4)
 ";

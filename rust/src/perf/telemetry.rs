@@ -94,6 +94,10 @@ struct Ring {
     dropped: AtomicU64,
 }
 
+// SAFETY: the UnsafeCell buffer is written by exactly one thread (ring i
+// belongs to team tid i; comm events ride ring 0 under the FUNNELED
+// transport) and `drain` runs only after every recorder quiesced, so no
+// two threads ever access a buffer concurrently.
 unsafe impl Sync for Ring {}
 
 /// Lock-free span collector: one bounded ring per thread plus the
@@ -151,6 +155,7 @@ impl Tracer {
         flops: u64,
     ) {
         let ring = &self.rings[tid.min(self.rings.len() - 1)];
+        // SAFETY: ring `tid` is single-writer (this thread); see Ring.
         let buf = unsafe { &mut *ring.buf.get() };
         if buf.len() < self.cap {
             buf.push(SpanRecord {
@@ -181,6 +186,8 @@ impl Tracer {
         let mut spans = Vec::new();
         let mut dropped = 0u64;
         for ring in &self.rings {
+            // SAFETY: drain's contract: all recorders have quiesced,
+            // so the shared read cannot race a writer.
             spans.extend_from_slice(unsafe { &*ring.buf.get() });
             dropped += ring.dropped.load(Ordering::Relaxed);
         }

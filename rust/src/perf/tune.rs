@@ -41,7 +41,7 @@ use crate::lattice::{Geometry, LatticeDims, Parity, Tiling};
 use crate::perf::machine::HostCalibration;
 use crate::perf::roofline;
 use crate::solver::fused;
-use crate::util::json::{fnum, Json};
+use crate::util::json::{Json, JsonWriter};
 use crate::util::rng::Rng;
 
 /// Bump when the cache layout or the meaning of a knob changes: an old
@@ -246,73 +246,97 @@ impl TuneCache {
     }
 
     /// Serialize. Key order, float formatting and array order are all
-    /// fixed, and nothing time- or run-dependent is recorded: identical
-    /// measurements serialize to identical bytes (pinned by
-    /// `tests/tune.rs`).
+    /// fixed (the document streams through [`JsonWriter`] with the
+    /// repo-wide `fnum` float convention), and nothing time- or
+    /// run-dependent is recorded: identical measurements serialize to
+    /// identical bytes (pinned by `tests/tune.rs`).
     pub fn to_json(&self) -> String {
         let fp = &self.fingerprint;
         let c = &self.choice;
         let m = &self.measurements;
         let d = m.dims;
-        let mut s = String::from("{\n");
-        s.push_str(&format!("  \"version\": {},\n", self.version));
-        s.push_str(&format!(
-            "  \"fingerprint\": {{\"cores\": {}, \"bw_class\": {}, \"volume_class\": {}}},\n",
-            fp.cores, fp.bw_class, fp.volume_class
-        ));
-        s.push_str(&format!(
-            "  \"choice\": {{\"tiling\": \"{}\", \"threads\": {}, \"eo2_schedule\": \"{}\", \
-             \"eo2_granularity\": {}, \"roofline_gbs\": {}}},\n",
-            c.tiling,
-            c.threads,
-            c.eo2_schedule,
-            c.eo2_granularity,
-            fnum(c.roofline_gbs)
-        ));
-        s.push_str("  \"measurements\": {\n");
-        s.push_str(&format!(
-            "    \"dims\": [{}, {}, {}, {}],\n",
-            d.x, d.y, d.z, d.t
-        ));
-        s.push_str(&format!(
-            "    \"stream_1t_gbs\": {},\n    \"stream_sat_gbs\": {},\n",
-            fnum(m.stream_1t_gbs),
-            fnum(m.stream_sat_gbs)
-        ));
-        s.push_str("    \"tilings\": [\n");
-        for (i, t) in m.tilings.iter().enumerate() {
-            s.push_str(&format!(
-                "      {{\"tiling\": \"{}\", \"seconds_per_apply\": {}, \"gbs\": {}}}{}\n",
-                t.tiling,
-                fnum(t.seconds_per_apply),
-                fnum(t.gbs),
-                comma(i, m.tilings.len())
-            ));
+        let mut w = JsonWriter::new();
+        w.obj_begin();
+        w.key("version");
+        w.uint(self.version);
+        w.key("fingerprint");
+        w.obj_begin();
+        w.key("cores");
+        w.uint(fp.cores as u64);
+        w.key("bw_class");
+        w.int(fp.bw_class);
+        w.key("volume_class");
+        w.uint(u64::from(fp.volume_class));
+        w.obj_end();
+        w.key("choice");
+        w.obj_begin();
+        w.key("tiling");
+        w.str_val(&c.tiling.to_string());
+        w.key("threads");
+        w.uint(c.threads as u64);
+        w.key("eo2_schedule");
+        w.str_val(&c.eo2_schedule.to_string());
+        w.key("eo2_granularity");
+        w.uint(c.eo2_granularity as u64);
+        w.key("roofline_gbs");
+        w.num(c.roofline_gbs);
+        w.obj_end();
+        w.key("measurements");
+        w.obj_begin();
+        w.key("dims");
+        w.arr_begin();
+        for v in [d.x, d.y, d.z, d.t] {
+            w.uint(v as u64);
         }
-        s.push_str("    ],\n    \"threads\": [\n");
-        for (i, t) in m.threads.iter().enumerate() {
-            s.push_str(&format!(
-                "      {{\"threads\": {}, \"seconds_per_iter\": {}, \"gbs\": {}}}{}\n",
-                t.threads,
-                fnum(t.seconds_per_iter),
-                fnum(t.gbs),
-                comma(i, m.threads.len())
-            ));
+        w.arr_end();
+        w.key("stream_1t_gbs");
+        w.num(m.stream_1t_gbs);
+        w.key("stream_sat_gbs");
+        w.num(m.stream_sat_gbs);
+        w.key("tilings");
+        w.arr_begin();
+        for t in &m.tilings {
+            w.obj_begin();
+            w.key("tiling");
+            w.str_val(&t.tiling.to_string());
+            w.key("seconds_per_apply");
+            w.num(t.seconds_per_apply);
+            w.key("gbs");
+            w.num(t.gbs);
+            w.obj_end();
         }
-        s.push_str("    ],\n    \"chunks\": [\n");
-        for (i, t) in m.chunks.iter().enumerate() {
-            s.push_str(&format!(
-                "      {{\"schedule\": \"{}\", \"granularity\": {}, \
-                 \"seconds_per_apply\": {}, \"eo2_imbalance\": {}}}{}\n",
-                t.schedule,
-                t.granularity,
-                fnum(t.seconds_per_apply),
-                fnum(t.eo2_imbalance),
-                comma(i, m.chunks.len())
-            ));
+        w.arr_end();
+        w.key("threads");
+        w.arr_begin();
+        for t in &m.threads {
+            w.obj_begin();
+            w.key("threads");
+            w.uint(t.threads as u64);
+            w.key("seconds_per_iter");
+            w.num(t.seconds_per_iter);
+            w.key("gbs");
+            w.num(t.gbs);
+            w.obj_end();
         }
-        s.push_str("    ]\n  }\n}\n");
-        s
+        w.arr_end();
+        w.key("chunks");
+        w.arr_begin();
+        for t in &m.chunks {
+            w.obj_begin();
+            w.key("schedule");
+            w.str_val(&t.schedule.to_string());
+            w.key("granularity");
+            w.uint(t.granularity as u64);
+            w.key("seconds_per_apply");
+            w.num(t.seconds_per_apply);
+            w.key("eo2_imbalance");
+            w.num(t.eo2_imbalance);
+            w.obj_end();
+        }
+        w.arr_end();
+        w.obj_end();
+        w.obj_end();
+        w.finish()
     }
 
     /// Parse a cache document (strict: any missing or mistyped field is
@@ -473,13 +497,6 @@ impl TuneCache {
     }
 }
 
-fn comma(i: usize, len: usize) -> &'static str {
-    if i + 1 < len {
-        ","
-    } else {
-        ""
-    }
-}
 
 fn get_f64(j: &Json, key: &str) -> Result<f64, String> {
     j.get(key)

@@ -175,7 +175,7 @@ fn err_to_block(e: SolveError, nrhs: usize, sweeps: f64, threads: usize) -> Bloc
 /// RHS `i`, in site-tile order — the canonical reduction grouping that
 /// matches the single-RHS fused solver bitwise.
 #[inline]
-fn sum_cap(partials: &[[f64; 3]], ntiles: usize, nrhs: usize, i: usize, c: usize) -> f64 {
+fn reduce_cap_col(partials: &[[f64; 3]], ntiles: usize, nrhs: usize, i: usize, c: usize) -> f64 {
     (0..ntiles).map(|t| partials[t * nrhs + i][c]).sum()
 }
 
@@ -277,9 +277,15 @@ pub fn block_cg_profiled<R: Real, A: MultiFusedSolvable<R>>(
         let rr_iter = rr.clone();
         let mask = active.clone();
         // one region: operator phases + both BLAS sweeps, all sharded
+        // SAFETY: all raw access in this region is sharded per tid
+        // (chunk_range tile shards / apply_team); shared partial buffers
+        // are read only after a barrier publishes every thread's writes.
         team.run(|tid, bar| unsafe {
             // sweep 1: ap = A p, gauge streamed once for all active RHS,
             // per-(site tile, RHS) p·Ap capture fused into the store
+            // SAFETY: apply_team writes only this thread's output tile
+            // shard and its internal barriers order cross-thread halo
+            // reads; the input field is not written during the sweep.
             scoped(prof, tid, Phase::Bulk, || unsafe {
                 view.apply_team(
                     tid,
@@ -303,12 +309,15 @@ pub fn block_cg_profiled<R: Real, A: MultiFusedSolvable<R>>(
             let mut alphas = vec![R::ZERO; nrhs];
             for i in 0..nrhs {
                 if mask[i] {
-                    let pap = sum_cap(dp, ntiles, nrhs, i, 0);
+                    let pap = reduce_cap_col(dp, ntiles, nrhs, i, 0);
                     alphas[i] = R::from_f64(rr_iter[i] / pap);
                 }
             }
             let (tb, te) = chunk_range(ntiles, tid, n);
             // sweep 2: x += alpha p ; r -= alpha ap ; per-sub-tile |r|²
+            // SAFETY: every slice written here lies in this thread's [tb,
+            // te) tile shard; ro/ro_at operands are not written
+            // concurrently within this sweep.
             scoped(prof, tid, Phase::Blas, || unsafe {
                 for t in tb..te {
                     for i in 0..nrhs {
@@ -332,11 +341,14 @@ pub fn block_cg_profiled<R: Real, A: MultiFusedSolvable<R>>(
             let mut betas = vec![R::ZERO; nrhs];
             for i in 0..nrhs {
                 if mask[i] {
-                    let rr_new: f64 = (0..ntiles).map(|t| rrp[t * nrhs + i]).sum();
+                    let rr_new = blas::reduce_partials_col(rrp, nrhs, i);
                     betas[i] = R::from_f64(rr_new / rr_iter[i]);
                 }
             }
             // sweep 3: p = beta p + r
+            // SAFETY: every slice written here lies in this thread's [tb,
+            // te) tile shard; ro/ro_at operands are not written
+            // concurrently within this sweep.
             scoped(prof, tid, Phase::Blas, || unsafe {
                 for t in tb..te {
                     for i in 0..nrhs {
@@ -365,7 +377,7 @@ pub fn block_cg_profiled<R: Real, A: MultiFusedSolvable<R>>(
             if !active[i] {
                 continue;
             }
-            rr[i] = (0..ntiles).map(|t| rr_partials[t * nrhs + i]).sum();
+            rr[i] = blas::reduce_partials_col(&rr_partials, nrhs, i);
             stats[i].history.push((rr[i] / bnorm2[i]).sqrt());
             stats[i].iterations = iterations;
             if rr[i] <= limit[i] {
@@ -613,9 +625,15 @@ pub fn block_bicgstab_profiled<R: Real, A: MultiFusedSolvable<R>>(
         }
         let rho_iter = rho.clone();
         let mask = active.clone();
+        // SAFETY: all raw access in this region is sharded per tid
+        // (chunk_range tile shards / apply_team); shared partial buffers
+        // are read only after a barrier publishes every thread's writes.
         team.run(|tid, bar| unsafe {
             let (tb, te) = chunk_range(ntiles, tid, n);
             // sweep 1: v = A p with fused per-RHS <rhat, v> capture
+            // SAFETY: apply_team writes only this thread's output tile
+            // shard and its internal barriers order cross-thread halo
+            // reads; the input field is not written during the sweep.
             scoped(prof, tid, Phase::Bulk, || unsafe {
                 view.apply_team(
                     tid,
@@ -640,6 +658,9 @@ pub fn block_bicgstab_profiled<R: Real, A: MultiFusedSolvable<R>>(
             }
             // sweep 2: s = r - alpha v (in place in r) with per-sub-tile
             // |s|² capture
+            // SAFETY: every slice written here lies in this thread's [tb,
+            // te) tile shard; ro/ro_at operands are not written
+            // concurrently within this sweep.
             scoped(prof, tid, Phase::Blas, || unsafe {
                 for tl in tb..te {
                     for i in 0..nrhs {
@@ -667,6 +688,9 @@ pub fn block_bicgstab_profiled<R: Real, A: MultiFusedSolvable<R>>(
             let (mask_half, mask_c, _snorm) = stage_half(&mask_b, &sred, &limit, nrhs);
             if mask_half.iter().any(|&h| h) {
                 // converged at the half step: x += alpha p (own shard)
+                // SAFETY: every slice written here lies in this thread's
+                // [tb, te) tile shard; ro/ro_at operands are not written
+                // concurrently within this sweep.
                 scoped(prof, tid, Phase::Blas, || unsafe {
                     for tl in tb..te {
                         for i in 0..nrhs {
@@ -689,6 +713,9 @@ pub fn block_bicgstab_profiled<R: Real, A: MultiFusedSolvable<R>>(
                 return; // all live RHS done at the half step
             }
             // sweep 3: t = A s with fused per-RHS <s, t>, |t|² capture
+            // SAFETY: apply_team writes only this thread's output tile
+            // shard and its internal barriers order cross-thread halo
+            // reads; the input field is not written during the sweep.
             scoped(prof, tid, Phase::Bulk, || unsafe {
                 view.apply_team(
                     tid,
@@ -709,6 +736,9 @@ pub fn block_bicgstab_profiled<R: Real, A: MultiFusedSolvable<R>>(
             }
             // sweep 4: x += alpha p + omega s (s lives in r), and
             // sweep 5: r = s - omega t with <rhat, r> / |r|² capture
+            // SAFETY: every slice written here lies in this thread's [tb,
+            // te) tile shard; ro/ro_at operands are not written
+            // concurrently within this sweep.
             scoped(prof, tid, Phase::Blas, || unsafe {
                 for tl in tb..te {
                     for i in 0..nrhs {
@@ -752,6 +782,9 @@ pub fn block_bicgstab_profiled<R: Real, A: MultiFusedSolvable<R>>(
                 return;
             }
             // sweep 6: p = beta (p - omega v) + r
+            // SAFETY: every slice written here lies in this thread's [tb,
+            // te) tile shard; ro/ro_at operands are not written
+            // concurrently within this sweep.
             scoped(prof, tid, Phase::Blas, || unsafe {
                 for tl in tb..te {
                     for i in 0..nrhs {
@@ -1344,6 +1377,9 @@ fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
             let mask = &mask;
             let alphas = &alphas;
             team.parallel(|tid| {
+                // SAFETY: every slice written here lies in this thread's
+                // [tb, te) tile shard; ro/ro_at operands are not written
+                // concurrently within this sweep.
                 scoped(prof, tid, Phase::Blas, || unsafe {
                     let (tb, te) = chunk_range(ntiles, tid, n);
                     for t in tb..te {
@@ -1387,6 +1423,9 @@ fn block_cg_generic_attempt<R: Real, A: MultiOperator<R>>(
             let mask = &mask;
             let betas = &betas;
             team.parallel(|tid| {
+                // SAFETY: every slice written here lies in this thread's
+                // [tb, te) tile shard; ro/ro_at operands are not written
+                // concurrently within this sweep.
                 scoped(prof, tid, Phase::Blas, || unsafe {
                     let (tb, te) = chunk_range(ntiles, tid, n);
                     for t in tb..te {
@@ -1951,6 +1990,9 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
             let mask_b = &mask_b;
             let alpha = &alpha;
             team.parallel(|tid| {
+                // SAFETY: every slice written here lies in this thread's
+                // [tb, te) tile shard; ro/ro_at operands are not written
+                // concurrently within this sweep.
                 scoped(prof, tid, Phase::Blas, || unsafe {
                     let (tb, te) = chunk_range(ntiles, tid, n);
                     for tl in tb..te {
@@ -1991,6 +2033,9 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
             let mh = &mask_half;
             let alpha_ref = &alpha;
             team.parallel(|tid| {
+                // SAFETY: every slice written here lies in this thread's
+                // [tb, te) tile shard; ro/ro_at operands are not written
+                // concurrently within this sweep.
                 scoped(prof, tid, Phase::Blas, || unsafe {
                     let (tb, te) = chunk_range(ntiles, tid, n);
                     for tl in tb..te {
@@ -2059,6 +2104,9 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
                 let alpha_ref = &alpha;
                 let omega_ref = &omega;
                 team.parallel(|tid| {
+                    // SAFETY: every slice written here lies in this
+                    // thread's [tb, te) tile shard; ro/ro_at operands are
+                    // not written concurrently within this sweep.
                     scoped(prof, tid, Phase::Blas, || unsafe {
                         let (tb, te) = chunk_range(ntiles, tid, n);
                         for tl in tb..te {
@@ -2145,6 +2193,9 @@ fn block_bicgstab_generic_attempt<R: Real, A: MultiOperator<R>>(
                 let beta_ref = &beta;
                 let omega_ref = &omega;
                 team.parallel(|tid| {
+                    // SAFETY: every slice written here lies in this
+                    // thread's [tb, te) tile shard; ro/ro_at operands are
+                    // not written concurrently within this sweep.
                     scoped(prof, tid, Phase::Blas, || unsafe {
                         let (tb, te) = chunk_range(ntiles, tid, n);
                         for tl in tb..te {

@@ -371,6 +371,10 @@ fn cg_attempt<R: Real, A: FusedSolvable<R>>(
             let r_ptr = SendPtr(r.data.as_mut_ptr());
             let x_raw = SendPtr(x.data.as_mut_ptr());
             let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
+            // SAFETY: all raw access in this region is sharded per tid
+            // (chunk_range tile shards / apply_team); shared partials and the
+            // IterOut slot are read only after a barrier (or region end)
+            // publishes the writes.
             team.run(|tid, bar| unsafe {
                 scoped(prof, tid, Phase::Bulk, || {
                     view.apply_team(tid, n, bar, ap_ptr, x_raw.0 as *const R, None)
@@ -389,7 +393,7 @@ fn cg_attempt<R: Real, A: FusedSolvable<R>>(
                     )
                 });
             });
-            rr = rr_partials.iter().sum();
+            rr = blas::reduce_partials(&rr_partials);
             *flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
         }
         if !rr.is_finite() {
@@ -436,10 +440,15 @@ fn cg_attempt<R: Real, A: FusedSolvable<R>>(
             }
         }
         let rr_iter = rr;
+        // SAFETY: all raw access in this region is sharded per tid
+        // (chunk_range tile shards / apply_team); shared partials and the
+        // IterOut slot are read only after a barrier (or region end)
+        // publishes the writes.
         team.run(|tid, bar| unsafe {
             let record = |o: IterOut| {
                 if tid == 0 {
-                    // master-thread-only write; read after the region
+                    // SAFETY: master-thread-only write, no concurrent
+                    // access; the main loop reads it after the region.
                     unsafe { *out_ptr.0 = o };
                 }
             };
@@ -480,7 +489,7 @@ fn cg_attempt<R: Real, A: FusedSolvable<R>>(
                 )
             });
             scoped(prof, tid, Phase::Barrier, || bar.wait());
-            let rr_new: f64 = ro::<f64>(rr_ptr, ntiles).iter().sum();
+            let rr_new = blas::reduce_partials(ro::<f64>(rr_ptr, ntiles));
             let beta = R::from_f64(rr_new / rr_iter);
             // sweep 3: p = beta p + r
             scoped(prof, tid, Phase::Blas, || {
@@ -495,7 +504,7 @@ fn cg_attempt<R: Real, A: FusedSolvable<R>>(
         if out.kind == 5 {
             return Err(Interrupt::NonFinite { what: out.what, iteration });
         }
-        rr = rr_partials.iter().sum();
+        rr = blas::reduce_partials(&rr_partials);
         *flops += flops_apply
             + fl::dot_re_flops(nreal)
             + 2 * fl::axpy_flops(nreal)
@@ -763,6 +772,10 @@ fn bicgstab_attempt<R: Real, A: FusedSolvable<R>>(
             let r_ptr = SendPtr(r.data.as_mut_ptr());
             let x_raw = SendPtr(x.data.as_mut_ptr());
             let rr_ptr = SendPtr(rr_partials.as_mut_ptr());
+            // SAFETY: all raw access in this region is sharded per tid
+            // (chunk_range tile shards / apply_team); shared partials and the
+            // IterOut slot are read only after a barrier (or region end)
+            // publishes the writes.
             team.run(|tid, bar| unsafe {
                 scoped(prof, tid, Phase::Bulk, || {
                     view.apply_team(tid, n, bar, t_ptr, x_raw.0 as *const R, None)
@@ -779,7 +792,7 @@ fn bicgstab_attempt<R: Real, A: FusedSolvable<R>>(
                     )
                 });
             });
-            rr = rr_partials.iter().sum();
+            rr = blas::reduce_partials(&rr_partials);
             *flops += flops_apply + fl::axpy_flops(nreal) + fl::norm2_flops(nreal);
         }
         if !rr.is_finite() {
@@ -850,11 +863,16 @@ fn bicgstab_attempt<R: Real, A: FusedSolvable<R>>(
             }
         }
         let rho_c = rho;
+        // SAFETY: all raw access in this region is sharded per tid
+        // (chunk_range tile shards / apply_team); shared partials and the
+        // IterOut slot are read only after a barrier (or region end)
+        // publishes the writes.
         team.run(|tid, bar| unsafe {
             let (tb, te) = chunk_range(ntiles, tid, n);
             let record = |o: IterOut| {
                 if tid == 0 {
-                    // master-thread-only write; read after the region
+                    // SAFETY: master-thread-only write, no concurrent
+                    // access; the main loop reads it after the region.
                     unsafe { *out_ptr.0 = o };
                 }
             };

@@ -1,0 +1,367 @@
+//! Tier-2: the invariant linter (fixture snippets per rule: violation
+//! detected, suppression honored, clean code passes) and the
+//! concurrency model checker (shipping protocols pass exhaustively at
+//! 2-3 threads; seeded mutants are provably caught).
+
+use std::path::Path;
+
+use lqcd::analysis::lint::{
+    check_config_doc, documented_toml_keys, lint_source, lint_tree, parsed_config_keys,
+};
+use lqcd::analysis::model::{
+    check, run_suite, BarrierBug, BarrierKind, BarrierModel, CheckOpts, RecvFault,
+    RecvModel, RingModel, RingVariant,
+};
+
+fn rules_of(findings: &[lqcd::analysis::Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// -------------------------------------------------------------------
+// safety-comment
+// -------------------------------------------------------------------
+
+#[test]
+fn safety_comment_violation_detected() {
+    let src = "fn f(p: *mut u8) {\n    let v = unsafe { *p };\n    drop(v);\n}\n";
+    let (findings, _) = lint_source("x.rs", src);
+    assert_eq!(rules_of(&findings), ["safety-comment"]);
+    assert_eq!(findings[0].line, 2);
+}
+
+#[test]
+fn safety_comment_satisfied_by_preceding_comment() {
+    let src = "fn f(p: *mut u8) {\n    // SAFETY: p is valid for reads.\n    let v = unsafe { *p };\n    drop(v);\n}\n";
+    let (findings, _) = lint_source("x.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn safety_comment_satisfied_by_multiline_block_and_doc() {
+    // the SAFETY text may sit anywhere in the contiguous comment block,
+    // and `# Safety` doc sections count for `unsafe fn` declarations
+    let src = "\
+// SAFETY: the region is disjoint per thread\n// and the barrier orders the reads.\nfn g(p: *mut u8) { let _ = unsafe { *p }; }\n\n/// Reads a raw pointer.\n///\n/// # Safety\n/// `p` must be valid.\nunsafe fn h(p: *const u8) -> u8 {\n    *p\n}\n";
+    let (findings, _) = lint_source("x.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn safety_comment_blocked_by_blank_line() {
+    let src = "// SAFETY: stale justification.\n\nfn f(p: *mut u8) { let _ = unsafe { *p }; }\n";
+    let (findings, _) = lint_source("x.rs", src);
+    assert_eq!(rules_of(&findings), ["safety-comment"]);
+}
+
+#[test]
+fn safety_comment_ignores_string_and_comment_mentions() {
+    // the token inside a string or comment is not an unsafe block
+    let src = "fn f() {\n    let s = \"unsafe\";\n    // unsafe in prose only\n    drop(s);\n}\n";
+    let (findings, _) = lint_source("x.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+// -------------------------------------------------------------------
+// raw-f64-accum
+// -------------------------------------------------------------------
+
+#[test]
+fn raw_accum_violation_detected() {
+    let src = "fn combine(partials: &[f64]) -> f64 {\n    let mut acc = 0.0;\n    for p in partials {\n        acc += p;\n    }\n    acc\n}\n";
+    let (findings, _) = lint_source("x.rs", src);
+    // the `acc += p` line mentions neither "partial" nor sum(); the
+    // loop header does not accumulate. The .sum() form is the one that
+    // pairs the accumulation and the partials on one line:
+    let src2 = "fn combine(partials: &[f64]) -> f64 {\n    partials.iter().sum()\n}\n";
+    let (findings2, _) = lint_source("x.rs", src2);
+    let all: Vec<_> = rules_of(&findings).into_iter().chain(rules_of(&findings2)).collect();
+    assert!(all.contains(&"raw-f64-accum"), "{findings:?} / {findings2:?}");
+}
+
+#[test]
+fn raw_accum_inline_accumulation_detected() {
+    let src = "fn f(rr_partials: &[f64]) -> f64 {\n    let mut rr = 0.0;\n    for t in 0..rr_partials.len() {\n        rr += rr_partials[t];\n    }\n    rr\n}\n";
+    let (findings, _) = lint_source("x.rs", src);
+    assert_eq!(rules_of(&findings), ["raw-f64-accum"]);
+    assert_eq!(findings[0].line, 4);
+}
+
+#[test]
+fn raw_accum_allowed_in_reduce_fns_and_blas() {
+    // canonical-grouping helpers are exactly where raw sums belong
+    let src = "fn reduce_partials_local(partials: &[f64]) -> f64 {\n    partials.iter().sum()\n}\n";
+    let (findings, _) = lint_source("x.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+    // ...and the blas module is allowlisted wholesale
+    let src2 = "fn helper(partials: &[f64]) -> f64 {\n    partials.iter().sum()\n}\n";
+    let (findings2, _) = lint_source("rust/src/field/blas.rs", src2);
+    assert!(findings2.is_empty(), "{findings2:?}");
+}
+
+#[test]
+fn raw_accum_ignores_non_partial_sums() {
+    let src = "fn f(xs: &[u64]) -> u64 {\n    xs.iter().sum()\n}\n";
+    let (findings, _) = lint_source("x.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+// -------------------------------------------------------------------
+// tag-registry
+// -------------------------------------------------------------------
+
+#[test]
+fn tag_registry_violation_detected() {
+    let shift = ["1u64 <", "< 63"].concat(); // not a violation in THIS file
+    let src = format!("fn f(gen: u64) -> u64 {{\n    ({shift}) | gen\n}}\n");
+    let (findings, _) = lint_source("x.rs", &src);
+    assert_eq!(rules_of(&findings), ["tag-registry"]);
+}
+
+#[test]
+fn tag_registry_fn_decl_detected() {
+    let decl = ["fn t", "ag("].concat();
+    let src = format!("{decl}dir: usize) -> u64 {{\n    dir as u64\n}}\n");
+    let (findings, _) = lint_source("x.rs", &src);
+    assert_eq!(rules_of(&findings), ["tag-registry"]);
+}
+
+#[test]
+fn tag_registry_allowed_in_tags_module_and_tests() {
+    let shift = ["1u64 <", "< 63"].concat();
+    let src = format!("pub const NS: u64 = {shift};\n");
+    let (findings, _) = lint_source("rust/src/comm/tags.rs", &src);
+    assert!(findings.is_empty(), "{findings:?}");
+    let src2 = format!("#[cfg(test)]\nmod tests {{\n    const NS: u64 = {shift};\n}}\n");
+    let (findings2, _) = lint_source("x.rs", &src2);
+    assert!(findings2.is_empty(), "{findings2:?}");
+}
+
+// -------------------------------------------------------------------
+// adhoc-json
+// -------------------------------------------------------------------
+
+#[test]
+fn adhoc_json_violation_detected() {
+    let key = ["{{\\", "\"k\\", "\": {}}}"].concat();
+    let src = format!("fn f(v: u64) -> String {{\n    format!(\"{key}\", v)\n}}\n");
+    let (findings, _) = lint_source("x.rs", &src);
+    assert_eq!(rules_of(&findings), ["adhoc-json"]);
+}
+
+#[test]
+fn adhoc_json_allowed_in_util_json_and_tests() {
+    let key = ["{{\\", "\"k\\", "\": {}}}"].concat();
+    let src = format!("fn f(v: u64) -> String {{\n    format!(\"{key}\", v)\n}}\n");
+    let (findings, _) = lint_source("rust/src/util/json.rs", &src);
+    assert!(findings.is_empty(), "{findings:?}");
+    let src2 = format!("#[cfg(test)]\nmod tests {{\n    fn f(v: u64) -> String {{\n        format!(\"{key}\", v)\n    }}\n}}\n");
+    let (findings2, _) = lint_source("x.rs", &src2);
+    assert!(findings2.is_empty(), "{findings2:?}");
+}
+
+// -------------------------------------------------------------------
+// suppression
+// -------------------------------------------------------------------
+
+#[test]
+fn suppression_honored_and_counted() {
+    let src = "fn f(p: *mut u8) {\n    // lint: allow(safety-comment)\n    let v = unsafe { *p };\n    drop(v);\n}\n";
+    let (findings, suppressed) = lint_source("x.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(suppressed, 1);
+}
+
+#[test]
+fn suppression_same_line_and_lists() {
+    let src = "fn f(p: *mut u8) {\n    let v = unsafe { *p }; // lint: allow(raw-f64-accum, safety-comment)\n    drop(v);\n}\n";
+    let (findings, suppressed) = lint_source("x.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+    assert_eq!(suppressed, 1);
+}
+
+#[test]
+fn suppression_is_rule_specific() {
+    // allowing a different rule does not silence safety-comment
+    let src = "fn f(p: *mut u8) {\n    // lint: allow(adhoc-json)\n    let v = unsafe { *p };\n    drop(v);\n}\n";
+    let (findings, suppressed) = lint_source("x.rs", src);
+    assert_eq!(rules_of(&findings), ["safety-comment"]);
+    assert_eq!(suppressed, 0);
+}
+
+// -------------------------------------------------------------------
+// config-doc
+// -------------------------------------------------------------------
+
+#[test]
+fn config_doc_missing_key_detected() {
+    let run_rs = "fn load(doc: &Doc) {\n    let a = doc.float_or(\"solver.tol\", 1e-8);\n    let b = doc.int_or(\"solver.bogus_knob\", 3);\n    drop((a, b));\n}\n";
+    let toml = "[solver]\ntol = 1e-8\n";
+    let findings = check_config_doc("run.rs", run_rs, toml);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, "config-doc");
+    assert!(findings[0].msg.contains("solver.bogus_knob"), "{}", findings[0].msg);
+}
+
+#[test]
+fn config_doc_commented_out_key_counts() {
+    let run_rs = "fn load(doc: &Doc) {\n    let a = doc.bool_or(\"solver.use_x\", false);\n    drop(a);\n}\n";
+    let toml = "[solver]\n# optional knob, disabled by default:\n#use_x = true\n";
+    let findings = check_config_doc("run.rs", run_rs, toml);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn config_doc_key_extraction() {
+    let run_rs = "fn load(doc: &Doc) {\n    let a = doc.get(\"telemetry.dir\");\n    let b = doc.str_or(\"solver.algorithm\", \"cg\");\n    drop((a, b));\n}\n";
+    let keys: Vec<String> = parsed_config_keys(run_rs).into_iter().map(|(k, _)| k).collect();
+    assert_eq!(keys, ["telemetry.dir", "solver.algorithm"]);
+    let toml = "top = 1\n[solver]\nalgorithm = \"cg\"\n#[telemetry]\n#dir = \"t\"\n";
+    let docd = documented_toml_keys(toml);
+    assert!(docd.contains(&"top".to_string()), "{docd:?}");
+    assert!(docd.contains(&"solver.algorithm".to_string()), "{docd:?}");
+    assert!(docd.contains(&"telemetry.dir".to_string()), "{docd:?}");
+}
+
+// -------------------------------------------------------------------
+// the real tree
+// -------------------------------------------------------------------
+
+/// The shipping tree lints clean: zero findings, zero suppressions.
+/// (Cargo runs integration tests from the workspace root, where
+/// `rust/src` and `configs/` live.)
+#[test]
+fn shipping_tree_is_clean() {
+    let report = lint_tree(Path::new(".")).expect("tree scan");
+    assert!(report.files_scanned > 50, "scanned {}", report.files_scanned);
+    assert!(
+        report.findings.is_empty(),
+        "violations in tree:\n{}",
+        report
+            .findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+    assert_eq!(report.suppressed, 0, "no suppressions allowed in shipping code");
+}
+
+// -------------------------------------------------------------------
+// model checker: shipping protocols pass
+// -------------------------------------------------------------------
+
+fn opts() -> CheckOpts {
+    CheckOpts::default()
+}
+
+#[test]
+fn barrier_spin_passes_2_and_3_threads() {
+    for &(n, iters) in &[(2usize, 3u64), (3, 2)] {
+        let m = BarrierModel::new(n, iters, BarrierKind::Spin, None);
+        let rep = check(&m, &opts());
+        assert!(rep.passed(), "{n} threads: {:?}", rep.violation);
+        assert!(rep.schedules > 0);
+    }
+}
+
+#[test]
+fn barrier_sleep_passes_2_and_3_threads() {
+    for &(n, iters) in &[(2usize, 3u64), (3, 2)] {
+        let m = BarrierModel::new(n, iters, BarrierKind::Sleep, None);
+        let rep = check(&m, &opts());
+        assert!(rep.passed(), "{n} threads: {:?}", rep.violation);
+        assert!(rep.schedules > 0);
+    }
+}
+
+// -------------------------------------------------------------------
+// model checker: seeded mutants are caught
+// -------------------------------------------------------------------
+
+/// The classic lost wakeup (arrival registered before the generation is
+/// sampled) MUST be caught — this pins the checker's power: if this
+/// assertion ever fails, the checker can no longer see the bug class it
+/// exists for.
+#[test]
+fn barrier_lost_wakeup_mutant_caught() {
+    for kind in [BarrierKind::Spin, BarrierKind::Sleep] {
+        for n in [2usize, 3] {
+            let m = BarrierModel::new(n, 1, kind, Some(BarrierBug::LostWakeup));
+            let rep = check(&m, &opts());
+            let v = rep.violation.unwrap_or_else(|| {
+                panic!("mutant not caught at n={n} kind={kind:?}")
+            });
+            assert!(v.message.contains("lost signal"), "{}", v.message);
+            assert!(!v.schedule.is_empty());
+        }
+    }
+}
+
+#[test]
+fn ring_shipping_passes() {
+    // single writer within capacity, single writer overflowing (drop
+    // accounting), and two writers with distinct loads
+    for to_write in [vec![2usize], vec![4], vec![3, 2]] {
+        let m = RingModel::new(RingVariant::Shipping, 2, &to_write);
+        let rep = check(&m, &opts());
+        assert!(rep.passed(), "{to_write:?}: {:?}", rep.violation);
+    }
+}
+
+#[test]
+fn ring_torn_publish_mutant_caught() {
+    let m = RingModel::new(RingVariant::TornPublish, 2, &[2]);
+    let rep = check(&m, &opts());
+    let v = rep.violation.expect("torn publish not caught");
+    assert!(v.message.contains("torn publish"), "{}", v.message);
+}
+
+#[test]
+fn recv_state_machine_exactly_once() {
+    for fault in [
+        RecvFault::None,
+        RecvFault::Drop(0),
+        RecvFault::Drop(1),
+        RecvFault::Drop(2),
+        RecvFault::Duplicate(0),
+        RecvFault::Duplicate(2),
+    ] {
+        let m = RecvModel::new(3, fault);
+        let rep = check(&m, &opts());
+        assert!(rep.passed(), "{fault:?}: {:?}", rep.violation);
+        assert!(rep.schedules > 0, "{fault:?}");
+    }
+}
+
+/// Dropping the preemption budget to zero still covers the
+/// round-robin-free schedules; the mutant needs at least one preemption
+/// to manifest, so budget 0 must MISS it — pinning that the budget knob
+/// actually bounds the search.
+#[test]
+fn preemption_budget_bounds_the_search() {
+    let m = BarrierModel::new(2, 1, BarrierKind::Spin, Some(BarrierBug::LostWakeup));
+    let missed = check(&m, &CheckOpts { max_preemptions: 0 });
+    assert!(missed.passed(), "budget 0 should not reach the racy schedule");
+    let caught = check(&m, &CheckOpts { max_preemptions: 1 });
+    assert!(caught.violation.is_some(), "budget 1 must reach it");
+}
+
+/// The standard `lqcd lint --model-check` suite: every shipping entry
+/// passes, every mutant entry is caught.
+#[test]
+fn standard_suite_is_green() {
+    let results = run_suite(&opts());
+    assert!(results.len() >= 10);
+    for r in &results {
+        assert!(
+            r.ok(),
+            "{}: expect_violation={} got {:?}",
+            r.name,
+            r.expect_violation,
+            r.report.violation
+        );
+    }
+    // and the suite genuinely contains both polarities
+    assert!(results.iter().any(|r| r.expect_violation));
+    assert!(results.iter().any(|r| !r.expect_violation));
+}

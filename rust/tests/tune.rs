@@ -145,8 +145,8 @@ fn stale_version_and_fingerprint_are_refused() {
     let tampered = cache
         .to_json()
         .replace(
-            &format!("\"version\": {TUNE_CACHE_VERSION}"),
-            &format!("\"version\": {}", TUNE_CACHE_VERSION + 1),
+            &format!("\"version\":{TUNE_CACHE_VERSION}"),
+            &format!("\"version\":{}", TUNE_CACHE_VERSION + 1),
         );
     std::fs::write(&path, tampered).unwrap();
     match TuneCache::load_for(&dir, &cache.fingerprint) {
